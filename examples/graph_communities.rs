@@ -1,0 +1,62 @@
+//! Appendix C reproduction — PaLD on collaboration networks.
+//!
+//! The paper computes APSP distance matrices for three SNAP collaboration
+//! graphs (ca-GrQc n=5242, ca-HepPh n=12008, ca-CondMat n=23133) and
+//! reports sequential + p=32 runtimes.  Offline we generate synthetic
+//! collaboration networks of configurable size (default 1/8 scale; pass a
+//! scale divisor, or 1 under PALDX_FULL=1 for paper sizes — hours).
+//!
+//!     cargo run --release --example graph_communities [scale_div]
+
+use paldx::analysis;
+use paldx::data::graph;
+use paldx::pald::{compute_cohesion_timed, Algorithm, PaldConfig};
+use paldx::sim::machine::MachineParams;
+use paldx::sim::scaling;
+
+fn main() -> anyhow::Result<()> {
+    let scale: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if paldx::bench::full_scale() { 1 } else { 8 });
+    let datasets = [("ca-GrQc", 5242usize), ("ca-HepPh", 12008), ("ca-CondMat", 23133)];
+    let mp = MachineParams::xeon_6226r();
+
+    println!("Appendix C — collaboration networks at 1/{scale} scale\n");
+    println!(
+        "{:<12} {:>7} {:>7} {:>10} {:>10} {:>14} {:>12}",
+        "dataset", "n(lcc)", "edges", "apsp(s)", "pald(s)", "sim p=32", "communities"
+    );
+    for (name, full_n) in datasets {
+        let n = (full_n / scale).max(100);
+        let g = graph::collaboration_network(n, 0xC0FFEE ^ full_n as u64);
+        let (lcc, _) = g.largest_component();
+
+        let t0 = std::time::Instant::now();
+        let d = lcc.apsp(true);
+        let t_apsp = t0.elapsed().as_secs_f64();
+
+        let cfg = PaldConfig { algorithm: Algorithm::OptimizedPairwise, ..Default::default() };
+        let (c, t_pald) = compute_cohesion_timed(&d, &cfg)?;
+
+        let speedup = scaling::predicted_speedup(&mp, d.rows() as u64, 32, true, true);
+        let comms = analysis::communities(&c);
+        let ncomm = comms.iter().collect::<std::collections::HashSet<_>>().len();
+
+        println!(
+            "{:<12} {:>7} {:>7} {:>10.3} {:>10.3} {:>9.2}x/{:>6.3}s {:>8}",
+            name,
+            lcc.num_vertices(),
+            lcc.num_edges(),
+            t_apsp,
+            t_pald,
+            speedup,
+            t_pald / speedup,
+            ncomm
+        );
+    }
+    println!("\npaper (full scale, p=32): ca-GrQc 1.390s (15.6x), ca-HepPh 13.16s (19.7x),");
+    println!("ca-CondMat 91.89s (20.8x); simulated speedups above reproduce the trend that");
+    println!("larger problems scale better.");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Section 7 reproduction — text analysis at n = 2712.
+//!
+//! The paper embeds 2712 Shakespeare-sonnet words with fastText and shows
+//! that PaLD's parameter-free strong ties adapt to neighborhoods of very
+//! different density ("guilt": 20 strong ties, "halt": 5), while absolute
+//! distance cutoffs tuned for one word fail on the other.  Offline we use
+//! the synthetic embedding of `data::embeddings` with the same geometry
+//! (see DESIGN.md §2 for the substitution argument).
+//!
+//! This is also the repo's end-to-end driver: data generation → distance
+//! substrate → coordinator → cohesion → analysis → report, with wall-clock
+//! and throughput logged (EXPERIMENTS.md §Section-7).
+//!
+//!     cargo run --release --example text_analysis [n]
+
+use paldx::analysis::{self, CloudEntry};
+use paldx::coordinator::{Coordinator, Job};
+use paldx::data::embeddings;
+use paldx::pald::{Algorithm, PaldConfig};
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(2712);
+    let vocab = embeddings::sonnets_like(n, 64, 2022);
+    println!("vocabulary: {} synthetic words, 64-dim embeddings", vocab.len());
+
+    let t0 = std::time::Instant::now();
+    let d = vocab.distance_matrix();
+    println!("distance matrix: {:.2}s", t0.elapsed().as_secs_f64());
+
+    // The paper computes C with the OpenMP pairwise algorithm; on this
+    // 1-core box the same code path runs with the parallel runtime.
+    let mut coord = Coordinator::new();
+    let job = Job {
+        config: PaldConfig { algorithm: Algorithm::ParallelPairwise, ..Default::default() },
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let c = coord.run(&d, &job)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "cohesion: n={n} in {secs:.3}s ({:.1}M triplets/s)  [paper: 0.178s at p=32]",
+        (n * n * n) as f64 / 6.0 / secs / 1e6
+    );
+
+    let tau = analysis::universal_threshold(&c);
+    println!("universal threshold tau = {tau:.6}\n");
+
+    for probe in ["guilt", "halt"] {
+        let Some(p) = vocab.index_of(probe) else { continue };
+        // --- PaLD strong ties (parameter-free) ---
+        let mut pald_ties: Vec<CloudEntry> = (0..vocab.len())
+            .filter(|&i| i != p)
+            .filter(|&i| c[(p, i)].min(c[(i, p)]) > tau)
+            .map(|i| CloudEntry { word: vocab.words[i].clone(), weight: c[(p, i)].min(c[(i, p)]) })
+            .collect();
+        pald_ties.sort_by(|a, b| b.weight.partial_cmp(&a.weight).unwrap());
+        let k = pald_ties.len();
+        let shown: Vec<_> = pald_ties.iter().take(25).cloned().collect();
+        print!("{}", analysis::render_word_cloud(
+            &format!("PaLD strong ties for '{probe}' ({k} words, threshold-free; top 25 shown)"),
+            &shown,
+        ));
+
+        // --- distance-cutoff baseline: cutoff tuned to guilt's k ---
+        let k_guilt = {
+            let g = vocab.index_of("guilt").unwrap();
+            (0..vocab.len())
+                .filter(|&i| i != g && c[(g, i)].min(c[(i, g)]) > tau)
+                .count()
+                .max(1)
+        };
+        let g = vocab.index_of("guilt").unwrap();
+        let cutoff = analysis::cutoff_for_k(&d, g, k_guilt);
+        let within = analysis::distance_cutoff_neighbors(&d, p, cutoff);
+        let entries: Vec<CloudEntry> = within
+            .iter()
+            .take(25)
+            .map(|&i| CloudEntry { word: vocab.words[i].clone(), weight: 1.0 / d[(p, i)].max(1e-6) })
+            .collect();
+        print!("{}", analysis::render_word_cloud(
+            &format!(
+                "distance cutoff {cutoff:.3} (tuned for 'guilt') applied to '{probe}' ({} words)",
+                within.len()
+            ),
+            &entries,
+        ));
+        let truth = vocab.cluster[p];
+        let spurious = within.iter().filter(|&&i| vocab.cluster[i] != truth).count();
+        println!("   -> {spurious} of {} cutoff neighbors are unrelated words\n", within.len());
+    }
+
+    println!("{}", coord.metrics.summary());
+    Ok(())
+}

@@ -1,0 +1,92 @@
+"""AOT lowering: L2 model -> HLO text artifacts + manifest.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/load_hlo.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (n, block, tie_split) variants shipped as artifacts.  The Rust coordinator
+# pads any n' <= n problem to the nearest variant.
+VARIANTS = [
+    (128, 32, False),
+    (128, 32, True),
+    (256, 64, False),
+    (512, 64, False),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, block: int, tie_split: bool) -> str:
+    d = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    valid = jax.ShapeDtypeStruct((n,), jnp.float32)
+    n_valid = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def fn(d, valid, n_valid):
+        return (model.pald_cohesion(d, valid, n_valid, block=block,
+                                    tie_split=tie_split),)
+
+    return to_hlo_text(jax.jit(fn).lower(d, valid, n_valid))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for n, block, tie_split in VARIANTS:
+        mode = "split" if tie_split else "strict"
+        name = f"pald_{mode}_n{n}"
+        path = f"{name}.hlo.txt"
+        text = lower_variant(n, block, tie_split)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "path": path,
+                "n": n,
+                "block": block,
+                "tie_mode": mode,
+                "inputs": [
+                    {"name": "d", "shape": [n, n], "dtype": "f32"},
+                    {"name": "valid", "shape": [n], "dtype": "f32"},
+                    {"name": "n_valid", "shape": [], "dtype": "f32"},
+                ],
+                "outputs": [{"name": "c", "shape": [n, n], "dtype": "f32"}],
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"wrote {path}  ({len(text)} chars)")
+
+    manifest = {"format": "hlo-text", "version": 1, "executables": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(entries)} executables)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Pallas kernels for blocked, branch-free PaLD (paper Sections 3 and 5).
+
+The paper's two optimizations that matter most — cache blocking and branch
+avoidance via masked FMAs — map directly onto Pallas:
+
+* cache blocking   -> ``BlockSpec`` tiles: each grid step holds one D row
+  panel (bx, n), one transposed panel (bz, n), and one (bx, bz) output tile
+  in VMEM; the HBM<->VMEM schedule is exactly Figure 1's DRAM<->cache
+  schedule.
+* branch avoidance -> comparisons produce {0, 1} float masks and the
+  cohesion update is ``acc += focus * support * w`` — the paper's explicit
+  masked-FMA form.  (TPU vector cores have no branch unit at all, so this is
+  the only possible formulation; the paper's CPU insight is mandatory here.)
+
+Two kernels mirror the paper's two passes over the data:
+
+* ``focus_sizes``  — grid over (X, Y) block pairs, reduces over z chunks to
+  produce the local-focus size tile U[X, Y].
+* ``cohesion``     — grid over (X, Z) block pairs, reduces over y chunks to
+  produce the cohesion tile C[X, Z].  The z-minor tiling gives every grid
+  step exclusive ownership of its C tile: no scatter, no write conflicts by
+  construction (the paper's "stride-1 column updates" in Figure 6).
+
+Both kernels are compiled with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness is what the AOT path
+needs.  Real-TPU VMEM sizing is analyzed in DESIGN.md §Hardware-Adaptation.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["focus_sizes", "cohesion"]
+
+
+def _focus_kernel(dx_ref, dy_ref, u_ref, *, bx, by, bz, n, tie_split):
+    """U[X, Y] tile: count z with d_xz (<|<=) d_xy or d_yz (<|<=) d_xy."""
+    j = pl.program_id(1)
+    dx = dx_ref[...]  # (bx, n): distances from X-block points to all z
+    dy = dy_ref[...]  # (by, n): distances from Y-block points to all z
+    dxy = lax.dynamic_slice(dx, (0, j * by), (bx, by))  # (bx, by)
+
+    def body(k, acc):
+        dxz = lax.dynamic_slice(dx, (0, k * bz), (bx, bz))  # (bx, bz)
+        dyz = lax.dynamic_slice(dy, (0, k * bz), (by, bz))  # (by, bz)
+        if tie_split:
+            m = (dxz[:, None, :] <= dxy[:, :, None]) | (
+                dyz[None, :, :] <= dxy[:, :, None]
+            )
+        else:
+            m = (dxz[:, None, :] < dxy[:, :, None]) | (
+                dyz[None, :, :] < dxy[:, :, None]
+            )
+        return acc + jnp.sum(m.astype(jnp.float32), axis=2)
+
+    u_ref[...] = lax.fori_loop(0, n // bz, body, jnp.zeros((bx, by), jnp.float32))
+
+
+def _cohesion_kernel(dx_ref, dz_ref, w_ref, c_ref, *, bx, by, bz, n, tie_split):
+    """C[X, Z] tile (unnormalized): sum over y of focus * support * w[x, y]."""
+    j = pl.program_id(1)
+    dx = dx_ref[...]  # (bx, n): row panel for X-block
+    dz = dz_ref[...]  # (bz, n): row panel for Z-block (D symmetric: row z = col z)
+    w = w_ref[...]  # (bx, n): pair weights w[x, y] = valid/u_xy, 0 on diag
+    dxz = lax.dynamic_slice(dx, (0, j * bz), (bx, bz))  # (bx, bz)
+
+    def body(k, acc):
+        dxy = lax.dynamic_slice(dx, (0, k * by), (bx, by))  # (bx, by)
+        dzy = lax.dynamic_slice(dz, (0, k * by), (bz, by))  # (bz, by)
+        wxy = lax.dynamic_slice(w, (0, k * by), (bx, by))  # (bx, by)
+        dyz = dzy.T  # (by, bz)
+        a = dxz[:, None, :]  # (bx, 1, bz)
+        b = dxy[:, :, None]  # (bx, by, 1)
+        c = dyz[None, :, :]  # (1, by, bz)
+        if tie_split:
+            focus = ((a <= b) | (c <= b)).astype(jnp.float32)
+            support = (a < c).astype(jnp.float32) + 0.5 * (a == c).astype(
+                jnp.float32
+            )
+        else:
+            focus = ((a < b) | (c < b)).astype(jnp.float32)
+            support = (a < c).astype(jnp.float32)
+        return acc + jnp.einsum("xyz,xy->xz", focus * support, wxy)
+
+    c_ref[...] = lax.fori_loop(0, n // by, body, jnp.zeros((bx, bz), jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("block", "tie_split"))
+def focus_sizes(d, *, block=64, tie_split=False):
+    """Blocked Pallas computation of the local-focus size matrix U.
+
+    ``d`` must be (n, n) float32 with n divisible by ``block``.
+    """
+    n = d.shape[0]
+    b = min(block, n)
+    assert n % b == 0, f"n={n} must be divisible by block={b}"
+    kern = partial(_focus_kernel, bx=b, by=b, bz=b, n=n, tie_split=tie_split)
+    return pl.pallas_call(
+        kern,
+        grid=(n // b, n // b),
+        in_specs=[
+            pl.BlockSpec((b, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(d, d)
+
+
+@partial(jax.jit, static_argnames=("block", "tie_split"))
+def cohesion(d, w, *, block=64, tie_split=False):
+    """Blocked Pallas computation of the unnormalized cohesion matrix.
+
+    ``w`` is the precomputed pair-weight matrix (1/u_xy off-diagonal for
+    valid pairs, else 0) — the paper's "precompute reciprocals of U once"
+    optimization lifted out of the inner loop.
+    """
+    n = d.shape[0]
+    b = min(block, n)
+    assert n % b == 0, f"n={n} must be divisible by block={b}"
+    kern = partial(_cohesion_kernel, bx=b, by=b, bz=b, n=n, tie_split=tie_split)
+    return pl.pallas_call(
+        kern,
+        grid=(n // b, n // b),
+        in_specs=[
+            pl.BlockSpec((b, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((b, n), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(d, d, w)

@@ -1,0 +1,74 @@
+"""Pure-jnp PaLD oracle.
+
+This is the correctness reference for both the Pallas kernels (L1) and,
+via golden files, the Rust implementations (L3). It evaluates the ordered
+formulation of Eq. (3.3) in the paper directly with O(n^3) broadcasting:
+
+    C[x, z] = (1/(n-1)) * sum_{y != x}  focus(x, y, z) * support(x, y, z) / u_xy
+
+Two tie modes (paper Section 5):
+
+* ``strict``  — the optimized C code's semantics: focus membership uses
+  strict ``<`` comparisons, the supporter test is ``d_xz < d_yz``.  Only
+  well-defined on tie-free distance matrices (ties are measure zero for
+  continuous data, which is exactly the paper's argument for eliding them).
+* ``split``   — the theoretical formulation of Berenhaut et al. [2]: focus
+  membership uses ``<=`` and distance ties split support 0.5/0.5.  Fully
+  symmetric; used for exact cross-implementation equality tests.
+
+The diagonal is included: for the pair (x, y), the third point z = x always
+lies in the focus and supports x, so ``C[x, x]`` accumulates sum_y 1/u_xy.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["focus_sizes_ref", "cohesion_ref", "strong_tie_threshold"]
+
+
+@partial(jax.jit, static_argnames=("tie_split",))
+def focus_sizes_ref(d, tie_split=False):
+    """Local-focus sizes U[x, y] = |{z : d_xz (<|<=) d_xy or d_yz (<|<=) d_xy}|.
+
+    Returns an (n, n) float32 matrix; the diagonal is meaningless (a point
+    has no focus with itself) and is left as computed.
+    """
+    dxy = d[:, :, None]  # indexed [x, y, 1]
+    dxz = d[:, None, :]  # indexed [x, 1, z]
+    dyz = d[None, :, :]  # indexed [1, y, z]
+    if tie_split:
+        in_focus = (dxz <= dxy) | (dyz <= dxy)
+    else:
+        in_focus = (dxz < dxy) | (dyz < dxy)
+    return jnp.sum(in_focus.astype(jnp.float32), axis=2)
+
+
+@partial(jax.jit, static_argnames=("tie_split",))
+def cohesion_ref(d, tie_split=False):
+    """Full cohesion matrix C (normalized by 1/(n-1)) from distance matrix d."""
+    n = d.shape[0]
+    dxy = d[:, :, None]
+    dxz = d[:, None, :]
+    dyz = d[None, :, :]
+    if tie_split:
+        in_focus = (dxz <= dxy) | (dyz <= dxy)
+        support = (dxz < dyz).astype(jnp.float32) + 0.5 * (dxz == dyz).astype(
+            jnp.float32
+        )
+    else:
+        in_focus = (dxz < dxy) | (dyz < dxy)
+        support = (dxz < dyz).astype(jnp.float32)
+
+    u = jnp.sum(in_focus.astype(jnp.float32), axis=2)
+    # Pair weights: 1/u_xy for y != x, 0 on the diagonal (no self pair).
+    off_diag = 1.0 - jnp.eye(n, dtype=jnp.float32)
+    w = off_diag * (1.0 / jnp.maximum(u, 1.0))
+    g = in_focus.astype(jnp.float32) * support * w[:, :, None]
+    return jnp.sum(g, axis=1) / (n - 1)
+
+
+def strong_tie_threshold(c):
+    """Universal strong-tie threshold: half the mean of the diagonal of C."""
+    return 0.5 * jnp.mean(jnp.diag(c))

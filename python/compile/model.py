@@ -1,0 +1,50 @@
+"""L2 compute graph: full PaLD cohesion with padding semantics.
+
+``pald_cohesion(d, valid, n_valid)`` composes the two Pallas passes
+(focus sizes -> reciprocal weights -> cohesion) exactly like the paper's
+two-pass blocked algorithms, and adds the padding contract the Rust
+coordinator relies on:
+
+* the artifact is compiled for a fixed n (128/256/512); the coordinator
+  right-pads a smaller problem with dummy points;
+* ``valid`` is a {0,1} float mask over rows; for any pair involving a
+  padded point the effective distance is LARGE, so padded points never
+  enter any real pair's local focus, and the pair weight is forced to 0 so
+  padded pairs contribute no cohesion;
+* ``n_valid`` (scalar, float) is the true number of points, used for the
+  1/(n-1) normalization.
+
+Rows/columns of the result that correspond to padded points are garbage by
+contract and are sliced away by the caller.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pald_kernels
+
+__all__ = ["pald_cohesion"]
+
+# Any finite pairwise distance must be < LARGE for the padding contract.
+LARGE = 1e30
+
+
+@partial(jax.jit, static_argnames=("block", "tie_split"))
+def pald_cohesion(d, valid, n_valid, *, block=64, tie_split=False):
+    """Cohesion matrix C (n, n) from distance matrix d (n, n).
+
+    Returns C normalized by 1/(n_valid - 1).
+    """
+    n = d.shape[0]
+    vpair = valid[:, None] * valid[None, :]  # (n, n) {0,1}
+    d_eff = jnp.where(vpair > 0.5, d, LARGE)
+
+    u = pald_kernels.focus_sizes(d_eff, block=block, tie_split=tie_split)
+
+    off_diag = 1.0 - jnp.eye(n, dtype=jnp.float32)
+    w = vpair * off_diag / jnp.maximum(u, 1.0)
+
+    c = pald_kernels.cohesion(d_eff, w, block=block, tie_split=tie_split)
+    return c / jnp.maximum(n_valid - 1.0, 1.0)

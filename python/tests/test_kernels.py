@@ -1,0 +1,124 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the compiled artifacts: everything
+the Rust runtime executes lowers through these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pald_kernels, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_dist(n, seed=0, tie_free=True):
+    """Random symmetric distance matrix with zero diagonal.
+
+    With tie_free=True all off-diagonal values are distinct (strict-mode
+    semantics are only defined on tie-free inputs, mirroring the paper's
+    tie-elision argument).
+    """
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n, 1)
+    m = iu[0].size
+    if tie_free:
+        vals = (rng.permutation(m) + 1.0) / m + rng.uniform(0.1, 1.0)
+    else:
+        vals = rng.integers(1, 6, size=m).astype(np.float64)
+    d = np.zeros((n, n), dtype=np.float32)
+    d[iu] = vals
+    d += d.T
+    return jnp.asarray(d)
+
+
+@pytest.mark.parametrize("n,block", [(8, 4), (16, 4), (32, 8), (64, 16), (128, 32)])
+@pytest.mark.parametrize("tie_split", [False, True])
+def test_focus_sizes_matches_ref(n, block, tie_split):
+    d = rand_dist(n, seed=n, tie_free=not tie_split)
+    got = pald_kernels.focus_sizes(d, block=block, tie_split=tie_split)
+    want = ref.focus_sizes_ref(d, tie_split=tie_split)
+    # Off-diagonal entries must match exactly (integer-valued counts).
+    mask = ~np.eye(n, dtype=bool)
+    np.testing.assert_array_equal(np.asarray(got)[mask], np.asarray(want)[mask])
+
+
+@pytest.mark.parametrize("n,block", [(8, 4), (16, 8), (32, 8), (64, 32), (128, 32)])
+@pytest.mark.parametrize("tie_split", [False, True])
+def test_cohesion_matches_ref(n, block, tie_split):
+    d = rand_dist(n, seed=100 + n, tie_free=not tie_split)
+    u = ref.focus_sizes_ref(d, tie_split=tie_split)
+    w = (1.0 - jnp.eye(n)) / jnp.maximum(u, 1.0)
+    got = pald_kernels.cohesion(d, w, block=block, tie_split=tie_split) / (n - 1)
+    want = ref.cohesion_ref(d, tie_split=tie_split)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_focus_sizes_min_two():
+    """u_xy >= 2: x and y always belong to their own local focus."""
+    d = rand_dist(32, seed=7)
+    u = np.asarray(pald_kernels.focus_sizes(d, block=8))
+    mask = ~np.eye(32, dtype=bool)
+    assert (u[mask] >= 2).all()
+    assert (u[mask] <= 32).all()
+
+
+def test_cohesion_total_mass():
+    """sum(C) == n/2: each pair distributes exactly one unit of support."""
+    n = 64
+    d = rand_dist(n, seed=3)
+    u = ref.focus_sizes_ref(d)
+    w = (1.0 - jnp.eye(n)) / jnp.maximum(u, 1.0)
+    c = pald_kernels.cohesion(d, w, block=16) / (n - 1)
+    np.testing.assert_allclose(float(jnp.sum(c)), n / 2, rtol=1e-5)
+
+
+def test_scale_invariance():
+    """Cohesion depends only on relative distances (paper Section 2)."""
+    n = 32
+    d = rand_dist(n, seed=11)
+    u1 = ref.focus_sizes_ref(d)
+    w1 = (1.0 - jnp.eye(n)) / jnp.maximum(u1, 1.0)
+    c1 = pald_kernels.cohesion(d, w1, block=8)
+    d2 = d * 37.5
+    u2 = ref.focus_sizes_ref(d2)
+    w2 = (1.0 - jnp.eye(n)) / jnp.maximum(u2, 1.0)
+    c2 = pald_kernels.cohesion(d2, w2, block=8)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(2, 6),
+    block=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    tie_split=st.booleans(),
+)
+def test_kernel_vs_ref_hypothesis(n_blocks, block, seed, tie_split):
+    """Shape/blocking sweep: kernel == oracle for arbitrary divisible shapes."""
+    n = n_blocks * block
+    d = rand_dist(n, seed=seed, tie_free=True)
+    u_k = pald_kernels.focus_sizes(d, block=block, tie_split=tie_split)
+    u_r = ref.focus_sizes_ref(d, tie_split=tie_split)
+    mask = ~np.eye(n, dtype=bool)
+    np.testing.assert_array_equal(np.asarray(u_k)[mask], np.asarray(u_r)[mask])
+    w = (1.0 - jnp.eye(n)) / jnp.maximum(u_r, 1.0)
+    c_k = pald_kernels.cohesion(d, w, block=block, tie_split=tie_split) / (n - 1)
+    c_r = ref.cohesion_ref(d, tie_split=tie_split)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_split_mode_handles_ties_symmetrically():
+    """With integer (tied) distances, split mode is permutation-consistent."""
+    n = 16
+    d = rand_dist(n, seed=5, tie_free=False)
+    c = np.asarray(ref.cohesion_ref(d, tie_split=True))
+    perm = np.random.default_rng(0).permutation(n)
+    dp = jnp.asarray(np.asarray(d)[np.ix_(perm, perm)])
+    cp = np.asarray(ref.cohesion_ref(dp, tie_split=True))
+    np.testing.assert_allclose(cp, c[np.ix_(perm, perm)], rtol=1e-5, atol=1e-7)

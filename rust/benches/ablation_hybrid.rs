@@ -1,0 +1,4 @@
+//! Bench target: tie-mode cost + Appendix B hybrid ablation.
+fn main() -> anyhow::Result<()> {
+    paldx::cli::run(vec!["repro".into(), "--exp".into(), "ablation".into()])
+}

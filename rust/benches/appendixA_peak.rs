@@ -1,0 +1,5 @@
+//! Bench target regenerating the paper's peak (see DESIGN.md §5).
+//! Run: cargo bench --bench appendixA_peak   (PALDX_FULL=1 for paper sizes)
+fn main() -> anyhow::Result<()> {
+    paldx::cli::run(vec!["repro".into(), "--exp".into(), "peak".into()])
+}

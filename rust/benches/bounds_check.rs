@@ -1,0 +1,4 @@
+//! Bench target for the Section 4 communication-bound validation.
+fn main() -> anyhow::Result<()> {
+    paldx::cli::run(vec!["repro".into(), "--exp".into(), "bounds".into()])
+}

@@ -1,0 +1,5 @@
+//! Bench target regenerating the paper's fig11 (see DESIGN.md §5).
+//! Run: cargo bench --bench fig11_weak   (PALDX_FULL=1 for paper sizes)
+fn main() -> anyhow::Result<()> {
+    paldx::cli::run(vec!["repro".into(), "--exp".into(), "fig11".into()])
+}

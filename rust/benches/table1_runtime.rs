@@ -1,0 +1,5 @@
+//! Bench target regenerating the paper's table1 (see DESIGN.md §5).
+//! Run: cargo bench --bench table1_runtime   (PALDX_FULL=1 for paper sizes)
+fn main() -> anyhow::Result<()> {
+    paldx::cli::run(vec!["repro".into(), "--exp".into(), "table1".into()])
+}

@@ -1,0 +1,5 @@
+//! Bench target regenerating the paper's table2 (see DESIGN.md §5).
+//! Run: cargo bench --bench table2_snap   (PALDX_FULL=1 for paper sizes)
+fn main() -> anyhow::Result<()> {
+    paldx::cli::run(vec!["repro".into(), "--exp".into(), "table2".into()])
+}

@@ -1,0 +1,4 @@
+//! Bench target: native vs AOT-XLA backend cross-check + throughput.
+fn main() -> anyhow::Result<()> {
+    paldx::cli::run(vec!["repro".into(), "--exp".into(), "xla".into()])
+}

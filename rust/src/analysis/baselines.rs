@@ -1,0 +1,66 @@
+//! Distance-based baselines the paper contrasts PaLD with (Fig. 12):
+//! absolute distance cutoffs and k-nearest-neighbor lists, both of which
+//! need per-dataset (indeed per-word) tuning that PaLD avoids.
+
+use crate::core::Mat;
+
+/// Indices within `cutoff` of `probe` (excluding the probe), nearest first.
+pub fn distance_cutoff_neighbors(d: &Mat, probe: usize, cutoff: f32) -> Vec<usize> {
+    let n = d.rows();
+    let mut out: Vec<usize> =
+        (0..n).filter(|&i| i != probe && d[(probe, i)] <= cutoff).collect();
+    out.sort_by(|&a, &b| d[(probe, a)].partial_cmp(&d[(probe, b)]).unwrap());
+    out
+}
+
+/// The k nearest neighbors of `probe` by absolute distance.
+pub fn knn_neighbors(d: &Mat, probe: usize, k: usize) -> Vec<usize> {
+    let n = d.rows();
+    let mut idx: Vec<usize> = (0..n).filter(|&i| i != probe).collect();
+    idx.sort_by(|&a, &b| d[(probe, a)].partial_cmp(&d[(probe, b)]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Distance cutoff that captures exactly the k nearest neighbors —
+/// the "equivalent cutoff" used in the paper's Fig. 12 comparison.
+pub fn cutoff_for_k(d: &Mat, probe: usize, k: usize) -> f32 {
+    let nn = knn_neighbors(d, probe, k);
+    nn.last().map(|&i| d[(probe, i)]).unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+
+    #[test]
+    fn knn_returns_k_sorted() {
+        let d = distmat::random_tie_free(20, 3);
+        let nn = knn_neighbors(&d, 5, 7);
+        assert_eq!(nn.len(), 7);
+        for w in nn.windows(2) {
+            assert!(d[(5, w[0])] <= d[(5, w[1])]);
+        }
+        assert!(!nn.contains(&5));
+    }
+
+    #[test]
+    fn cutoff_matches_knn() {
+        let d = distmat::random_tie_free(30, 9);
+        let k = 10;
+        let cut = cutoff_for_k(&d, 2, k);
+        let within = distance_cutoff_neighbors(&d, 2, cut);
+        assert_eq!(within.len(), k);
+        assert_eq!(within, knn_neighbors(&d, 2, k));
+    }
+
+    #[test]
+    fn cutoff_neighbors_respects_bound() {
+        let d = distmat::random_tie_free(25, 4);
+        let within = distance_cutoff_neighbors(&d, 0, 0.9);
+        for &i in &within {
+            assert!(d[(0, i)] <= 0.9);
+        }
+    }
+}

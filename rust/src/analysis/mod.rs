@@ -1,0 +1,17 @@
+//! Community-structure analysis on cohesion matrices (paper Sections 2, 7).
+//!
+//! PaLD's selling point is that strong ties fall out of a *universal*
+//! threshold — half the average self-cohesion — instead of per-dataset
+//! tuning.  This module provides that threshold, the strong-tie graph and
+//! its communities, local depths, and the distance-threshold / k-nearest
+//! baselines the paper compares against in Figure 12.
+
+mod baselines;
+mod strongties;
+mod wordcloud;
+
+pub use baselines::{cutoff_for_k, distance_cutoff_neighbors, knn_neighbors};
+pub use strongties::{
+    communities, local_depths, strong_tie_graph, strong_ties, universal_threshold, StrongTie,
+};
+pub use wordcloud::{render_word_cloud, CloudEntry};

@@ -1,0 +1,170 @@
+//! Universal threshold, strong ties, local depths, communities.
+
+use crate::core::Mat;
+
+/// One strong tie: the symmetrized cohesion between two points exceeds the
+/// universal threshold.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StrongTie {
+    pub a: usize,
+    pub b: usize,
+    /// min(C[a][b], C[b][a]) — the symmetrized strength.
+    pub strength: f32,
+}
+
+/// The universal strong-tie threshold of Berenhaut et al. [2]:
+/// half the mean self-cohesion, `mean(diag(C)) / 2`.
+pub fn universal_threshold(c: &Mat) -> f32 {
+    let n = c.rows();
+    (c.trace() / n as f64 / 2.0) as f32
+}
+
+/// Local depth of every point: `ℓ_x = Σ_z C[x][z]` (row sums).
+pub fn local_depths(c: &Mat) -> Vec<f32> {
+    (0..c.rows())
+        .map(|x| c.row(x).iter().sum::<f32>())
+        .collect()
+}
+
+/// All strong ties under the universal threshold, sorted by decreasing
+/// strength.  Symmetrization uses the min of the two directed cohesions
+/// (a tie must be strong both ways).
+pub fn strong_ties(c: &Mat) -> Vec<StrongTie> {
+    let n = c.rows();
+    let tau = universal_threshold(c);
+    let mut ties = Vec::new();
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let s = c[(a, b)].min(c[(b, a)]);
+            if s > tau {
+                ties.push(StrongTie { a, b, strength: s });
+            }
+        }
+    }
+    ties.sort_by(|x, y| y.strength.partial_cmp(&x.strength).unwrap());
+    ties
+}
+
+/// Adjacency lists of the strong-tie graph.
+pub fn strong_tie_graph(c: &Mat) -> Vec<Vec<usize>> {
+    let n = c.rows();
+    let mut adj = vec![Vec::new(); n];
+    for tie in strong_ties(c) {
+        adj[tie.a].push(tie.b);
+        adj[tie.b].push(tie.a);
+    }
+    adj
+}
+
+/// Connected components of the strong-tie graph = PaLD communities.
+/// Returns a component id per point (singletons included).
+pub fn communities(c: &Mat) -> Vec<usize> {
+    let adj = strong_tie_graph(c);
+    let n = adj.len();
+    let mut comp = vec![usize::MAX; n];
+    let mut next = 0;
+    let mut stack = Vec::new();
+    for s in 0..n {
+        if comp[s] != usize::MAX {
+            continue;
+        }
+        comp[s] = next;
+        stack.push(s);
+        while let Some(v) = stack.pop() {
+            for &w in &adj[v] {
+                if comp[w] == usize::MAX {
+                    comp[w] = next;
+                    stack.push(w);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::{compute_cohesion, PaldConfig};
+
+    fn two_cluster_cohesion() -> (Mat, usize) {
+        // Two well-separated Gaussian blobs of 12 points each.
+        let pts = distmat::gaussian_clusters(8, &[12, 12], &[0.3, 0.3], 8.0, 13);
+        let d = distmat::euclidean(&pts);
+        let c = compute_cohesion(&d, &PaldConfig::default()).unwrap();
+        (c, 12)
+    }
+
+    #[test]
+    fn threshold_is_half_mean_diag() {
+        let (c, _) = two_cluster_cohesion();
+        let tau = universal_threshold(&c);
+        assert!((tau - (c.trace() / c.rows() as f64 / 2.0) as f32).abs() < 1e-9);
+        assert!(tau > 0.0);
+    }
+
+    #[test]
+    fn strong_ties_respect_cluster_structure() {
+        let (c, half) = two_cluster_cohesion();
+        let ties = strong_ties(&c);
+        assert!(!ties.is_empty());
+        // no strong tie should cross the two blobs
+        for t in &ties {
+            assert_eq!(
+                t.a < half,
+                t.b < half,
+                "cross-cluster strong tie {t:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn communities_recover_clusters() {
+        let (c, half) = two_cluster_cohesion();
+        let comp = communities(&c);
+        let n = comp.len();
+        // Components never span the two blobs (purity)...
+        let mut side_of_comp = std::collections::HashMap::new();
+        for i in 0..n {
+            let side = i < half;
+            if let Some(&s) = side_of_comp.get(&comp[i]) {
+                assert_eq!(s, side, "component {} spans blobs", comp[i]);
+            } else {
+                side_of_comp.insert(comp[i], side);
+            }
+        }
+        // ...and each blob is dominated by one community (>= half its points).
+        for side in [true, false] {
+            let mut counts = std::collections::HashMap::new();
+            for i in 0..n {
+                if (i < half) == side {
+                    *counts.entry(comp[i]).or_insert(0usize) += 1;
+                }
+            }
+            let max = counts.values().copied().max().unwrap();
+            assert!(max * 2 >= half, "blob fragmented: max comp {max}/{half}");
+        }
+    }
+
+    #[test]
+    fn local_depths_sum_to_half_n() {
+        let d = distmat::random_tie_free(30, 4);
+        let c = compute_cohesion(&d, &PaldConfig::default()).unwrap();
+        let ell = local_depths(&c);
+        let total: f32 = ell.iter().sum();
+        assert!((total - 15.0).abs() < 1e-3, "total={total}");
+        // every depth is positive and at most 1 (probability mass)
+        assert!(ell.iter().all(|&v| v > 0.0 && v <= 1.0 + 1e-5));
+    }
+
+    #[test]
+    fn ties_sorted_by_strength() {
+        let (c, _) = two_cluster_cohesion();
+        let ties = strong_ties(&c);
+        for w in ties.windows(2) {
+            assert!(w[0].strength >= w[1].strength);
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Terminal "word clouds" for the Section 7 text application: words ranked
+//! by cohesion (or inverse distance), font size replaced by a bar.
+
+/// One rendered entry.
+#[derive(Clone, Debug)]
+pub struct CloudEntry {
+    pub word: String,
+    /// Raw weight (cohesion value or inverse distance).
+    pub weight: f32,
+}
+
+/// Render entries as an aligned text column with weight bars, strongest
+/// first — the terminal stand-in for Figure 12's font-size encoding.
+pub fn render_word_cloud(title: &str, entries: &[CloudEntry]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("── {title} ──\n"));
+    if entries.is_empty() {
+        out.push_str("   (none)\n");
+        return out;
+    }
+    let mut sorted: Vec<&CloudEntry> = entries.iter().collect();
+    sorted.sort_by(|a, b| b.weight.partial_cmp(&a.weight).unwrap());
+    let max_w = sorted[0].weight.max(1e-12);
+    let width = sorted.iter().map(|e| e.word.len()).max().unwrap().max(8);
+    for e in sorted {
+        let bars = ((e.weight / max_w) * 24.0).round().max(1.0) as usize;
+        out.push_str(&format!(
+            "  {:width$}  {:<24}  {:.5}\n",
+            e.word,
+            "█".repeat(bars),
+            e.weight,
+            width = width
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_sorted_with_bars() {
+        let entries = vec![
+            CloudEntry { word: "low".into(), weight: 0.1 },
+            CloudEntry { word: "high".into(), weight: 1.0 },
+        ];
+        let s = render_word_cloud("test", &entries);
+        let hi = s.find("high").unwrap();
+        let lo = s.find("low").unwrap();
+        assert!(hi < lo, "strongest word first:\n{s}");
+        assert!(s.contains("█"));
+    }
+
+    #[test]
+    fn empty_cloud() {
+        let s = render_word_cloud("empty", &[]);
+        assert!(s.contains("(none)"));
+    }
+}

@@ -1,0 +1,217 @@
+//! Benchmark harness (criterion is unavailable offline): warmup, repeated
+//! trials, robust statistics, and Markdown/CSV table emitters shaped like
+//! the paper's tables.
+
+use std::time::Instant;
+
+/// Statistics over trial times (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    pub trials: usize,
+}
+
+impl Stats {
+    pub fn from_times(times: &[f64]) -> Stats {
+        let n = times.len().max(1) as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        Stats {
+            mean,
+            min: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: times.iter().cloned().fold(0.0, f64::max),
+            stddev: var.sqrt(),
+            trials: times.len(),
+        }
+    }
+}
+
+/// Benchmark options.  The paper uses 5 trials and reports means; we default
+/// to the same, with a wall-clock budget guard for the big sweeps.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub trials: usize,
+    /// Stop early once total measured time exceeds this many seconds.
+    pub budget_s: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup: 1, trials: 5, budget_s: 60.0 }
+    }
+}
+
+impl BenchOpts {
+    /// Honor `PALDX_TRIALS` / `PALDX_BUDGET_S` env overrides.
+    pub fn from_env() -> Self {
+        let mut o = Self::default();
+        if let Ok(v) = std::env::var("PALDX_TRIALS") {
+            if let Ok(t) = v.parse() {
+                o.trials = t;
+            }
+        }
+        if let Ok(v) = std::env::var("PALDX_BUDGET_S") {
+            if let Ok(b) = v.parse() {
+                o.budget_s = b;
+            }
+        }
+        o
+    }
+}
+
+/// Time `f` under the options; returns per-trial stats.
+pub fn bench<F: FnMut()>(opts: &BenchOpts, mut f: F) -> Stats {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(opts.trials);
+    let mut spent = 0.0;
+    for _ in 0..opts.trials {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        times.push(dt);
+        spent += dt;
+        if spent > opts.budget_s && !times.is_empty() {
+            break;
+        }
+    }
+    Stats::from_times(&times)
+}
+
+/// Is the full paper-scale suite requested? (`PALDX_FULL=1`)
+pub fn full_scale() -> bool {
+    std::env::var("PALDX_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// A printable results table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Markdown rendering (the format EXPERIMENTS.md embeds directly).
+    pub fn markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:width$}", c, width = widths[i]))
+                .collect();
+            format!("| {} |", cols.join(" | "))
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout (benches call this at the end).
+    pub fn print(&self) {
+        println!("{}", self.markdown());
+    }
+}
+
+/// Human formatting helpers used across benches.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_times(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.trials, 3);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut count = 0;
+        let opts = BenchOpts { warmup: 2, trials: 3, budget_s: 100.0 };
+        let s = bench(&opts, || count += 1);
+        assert_eq!(count, 5); // 2 warmup + 3 trials
+        assert_eq!(s.trials, 3);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let opts = BenchOpts { warmup: 0, trials: 100, budget_s: 0.02 };
+        let s = bench(&opts, || std::thread::sleep(std::time::Duration::from_millis(15)));
+        assert!(s.trials < 100);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("Table 1", &["n", "time"]);
+        t.row(vec!["128".into(), "0.001".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### Table 1"));
+        assert!(md.contains("| n   | time  |"));
+        assert!(md.lines().count() >= 5);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(0.5e-4), "50.0µs");
+        assert_eq!(fmt_secs(0.5), "500.00ms");
+        assert_eq!(fmt_secs(2.0), "2.000s");
+        assert_eq!(fmt_speedup(1.5), "1.50x");
+    }
+}

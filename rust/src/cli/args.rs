@@ -1,0 +1,111 @@
+//! Minimal argument parser (clap is unavailable offline): positional
+//! subcommand + `--key value` / `--flag` options, with typed getters.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `args` (without argv[0]).  `--key value` pairs become options
+    /// unless the value looks like another `--opt`, in which case the key
+    /// is a bare flag.
+    pub fn parse(args: &[String]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    out.opts.insert(key.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a.clone());
+            } else {
+                anyhow::bail!("unexpected positional argument: {a}");
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["compute", "--n", "512", "--alg", "opt-triplet", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("compute"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 512);
+        assert_eq!(a.get("alg"), Some("opt-triplet"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["repro", "--exp=fig3"]);
+        assert_eq!(a.get("exp"), Some("fig3"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_or("alg", "default"), "default");
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        let v: Vec<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
+        assert!(Args::parse(&v).is_err());
+    }
+}

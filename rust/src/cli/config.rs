@@ -1,0 +1,126 @@
+//! Minimal TOML-subset config loader (no serde/toml offline).
+//!
+//! Supports what `paldx.toml` needs: `[section]` headers, `key = value`
+//! with string / integer / float / bool values, `#` comments.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::pald::{Algorithm, PaldConfig, TieMode};
+
+/// Flat parsed config: `section.key -> raw string value`.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> anyhow::Result<Config> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: bad section header", lineno + 1))?;
+                section = name.trim().to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = if section.is_empty() {
+                    k.trim().to_string()
+                } else {
+                    format!("{section}.{}", k.trim())
+                };
+                let mut val = v.trim().to_string();
+                if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                values.insert(key, val);
+            } else {
+                anyhow::bail!("line {}: expected key = value", lineno + 1);
+            }
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("{key}: expected integer, got {v}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => anyhow::bail!("{key}: expected bool, got {v}"),
+        }
+    }
+
+    /// Materialize a [`PaldConfig`] from the `[pald]` section.
+    pub fn pald_config(&self) -> anyhow::Result<PaldConfig> {
+        let mut cfg = PaldConfig::default();
+        if let Some(alg) = self.get("pald.algorithm") {
+            cfg.algorithm =
+                Algorithm::parse(alg).ok_or_else(|| anyhow::anyhow!("unknown algorithm {alg}"))?;
+        }
+        if let Some(tie) = self.get("pald.tie_mode") {
+            cfg.tie_mode = match tie {
+                "strict" => TieMode::Strict,
+                "split" => TieMode::Split,
+                _ => anyhow::bail!("unknown tie_mode {tie}"),
+            };
+        }
+        cfg.block = self.get_usize("pald.block", cfg.block)?;
+        cfg.block2 = self.get_usize("pald.block2", cfg.block2)?;
+        cfg.threads = self.get_usize("pald.threads", cfg.threads)?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(
+            "# comment\ntop = 1\n[pald]\nalgorithm = \"opt-triplet\"\nblock = 256\nthreads = 8\n[bench]\nfull = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get("pald.algorithm"), Some("opt-triplet"));
+        assert_eq!(c.get_usize("pald.block", 0).unwrap(), 256);
+        assert!(c.get_bool("bench.full", false).unwrap());
+        let cfg = c.pald_config().unwrap();
+        assert_eq!(cfg.algorithm.name(), "opt-triplet");
+        assert_eq!(cfg.threads, 8);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[unclosed\n").is_err());
+        assert!(Config::parse("no equals here\n").is_err());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let c = Config::parse("[pald]\nalgorithm = \"bogus\"\n").unwrap();
+        assert!(c.pald_config().is_err());
+        let c = Config::parse("[pald]\nblock = xyz\n").unwrap();
+        assert!(c.pald_config().is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! Command-line interface: `paldx <command> [--options]`.
+//!
+//! Commands:
+//! * `compute`   — cohesion of a distance matrix (generated or from file)
+//! * `analyze`   — strong ties / communities of a computed cohesion matrix
+//! * `repro`     — regenerate a paper table/figure (`--exp fig3|...|all`)
+//! * `calibrate` — print this machine's calibrated model parameters
+//! * `info`      — artifact + backend inventory
+
+mod args;
+pub mod config;
+
+pub use args::Args;
+
+use std::path::{Path, PathBuf};
+
+use crate::analysis;
+use crate::bench::BenchOpts;
+use crate::coordinator::{Coordinator, Job};
+use crate::data::distmat;
+use crate::io;
+use crate::pald::{Algorithm, Backend, PaldConfig, TieMode};
+use crate::repro;
+
+const USAGE: &str = "\
+paldx — Partitioned Local Depths (PaLD) toolkit
+
+USAGE: paldx <command> [--options]
+
+COMMANDS:
+  compute    --n <int> | --input <path.{bin,csv}>   compute a cohesion matrix
+             [--alg <name>] [--tie strict|split] [--block B] [--block2 B]
+             [--threads P] [--backend native|xla] [--output <path>]
+  analyze    --input <cohesion.{bin,csv}> [--top K]  strong ties & communities
+  repro      --exp fig3|fig4|table1|fig9|fig10|fig11|fig13|table2|peak|bounds|ablation|xla|all
+  calibrate                                         measure machine constants
+  info       [--artifacts DIR]                      artifact inventory
+
+Algorithms: naive-pairwise naive-triplet blocked-pairwise blocked-triplet
+            branchfree-pairwise branchfree-triplet opt-pairwise opt-triplet
+            par-pairwise par-triplet hybrid par-hybrid
+Env: PALDX_FULL=1 (paper-scale sizes), PALDX_TRIALS, PALDX_BUDGET_S,
+     PALDX_CALIBRATE=1 (calibrate the scaling model against this machine)";
+
+/// CLI entry point.
+pub fn run(raw: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::parse(&raw)?;
+    match args.command.as_deref() {
+        Some("compute") => cmd_compute(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("calibrate") => cmd_calibrate(),
+        Some("info") => cmd_info(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn load_or_generate(args: &Args) -> anyhow::Result<crate::core::Mat> {
+    if let Some(path) = args.get("input") {
+        let p = Path::new(path);
+        let d = if path.ends_with(".csv") { io::load_csv(p)? } else { io::load_matrix(p)? };
+        distmat::validate(&d).map_err(|e| anyhow::anyhow!("invalid distance matrix: {e}"))?;
+        Ok(d)
+    } else {
+        let n = args.get_usize("n", 256)?;
+        let seed = args.get_u64("seed", 42)?;
+        Ok(distmat::random_tie_free(n, seed))
+    }
+}
+
+fn config_from(args: &Args) -> anyhow::Result<PaldConfig> {
+    let mut cfg = PaldConfig::default();
+    if let Some(alg) = args.get("alg") {
+        cfg.algorithm =
+            Algorithm::parse(alg).ok_or_else(|| anyhow::anyhow!("unknown algorithm '{alg}'"))?;
+    }
+    cfg.tie_mode = match args.get_or("tie", "strict") {
+        "strict" => TieMode::Strict,
+        "split" => TieMode::Split,
+        other => anyhow::bail!("unknown tie mode '{other}'"),
+    };
+    cfg.block = args.get_usize("block", 0)?;
+    cfg.block2 = args.get_usize("block2", 0)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.backend = match args.get_or("backend", "native") {
+        "native" => Backend::Native,
+        "xla" => Backend::Xla,
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    Ok(cfg)
+}
+
+fn cmd_compute(args: &Args) -> anyhow::Result<()> {
+    let d = load_or_generate(args)?;
+    let config = config_from(args)?;
+    let job = Job {
+        config,
+        artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
+    };
+    let mut coord = Coordinator::new();
+    println!("plan: {}", coord.plan(d.rows(), &job)?);
+    let c = coord.run(&d, &job)?;
+    println!("{}", coord.metrics.summary());
+    let tau = analysis::universal_threshold(&c);
+    println!("n={} universal threshold tau={tau:.6}", c.rows());
+    if let Some(out) = args.get("output") {
+        let p = Path::new(out);
+        if out.ends_with(".csv") {
+            io::save_csv(&c, p)?;
+        } else {
+            io::save_matrix(&c, p)?;
+        }
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("input")
+        .ok_or_else(|| anyhow::anyhow!("analyze requires --input <cohesion matrix>"))?;
+    let p = Path::new(path);
+    let c = if path.ends_with(".csv") { io::load_csv(p)? } else { io::load_matrix(p)? };
+    let top = args.get_usize("top", 20)?;
+    let tau = analysis::universal_threshold(&c);
+    let ties = analysis::strong_ties(&c);
+    let comms = analysis::communities(&c);
+    let ncomm = comms.iter().collect::<std::collections::HashSet<_>>().len();
+    println!("n={}  tau={tau:.6}  strong ties={}  communities={}", c.rows(), ties.len(), ncomm);
+    for t in ties.iter().take(top) {
+        println!("  {:>5} -- {:<5}  strength {:.6}", t.a, t.b, t.strength);
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    let exp = args.get_or("exp", "all").to_string();
+    let full = crate::bench::full_scale();
+    let opts = BenchOpts::from_env();
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    let n_fig = if full { 2048 } else { args.get_usize("n", 512)? };
+    let run = |name: &str| exp == "all" || exp == name;
+
+    if run("fig3") {
+        repro::fig3(n_fig, &opts).print();
+    }
+    if run("fig4") {
+        let (a, b) = repro::fig4(n_fig, &opts);
+        a.print();
+        b.print();
+    }
+    if run("table1") {
+        let sizes: Vec<usize> =
+            if full { vec![128, 256, 512, 1024, 2048, 4096] } else { vec![128, 256, 512, 1024] };
+        repro::table1(&sizes, &opts).print();
+    }
+    if run("fig9") {
+        repro::fig9(&[2048, 4096, 8192]).print();
+    }
+    if run("fig10") {
+        repro::fig10(&[2048, 4096, 8192], true).print();
+        repro::fig10(&[2048, 4096, 8192], false).print();
+    }
+    if run("fig11") {
+        repro::fig11(&[2048, 4096, 8192], true).print();
+        repro::fig11(&[2048, 4096, 8192], false).print();
+    }
+    if run("fig13") {
+        repro::fig13(2048).print();
+    }
+    if run("table2") {
+        let scale = if full { 1 } else { args.get_usize("scale-div", 8)? };
+        repro::table2(scale, &opts).print();
+    }
+    if run("peak") {
+        repro::appendix_peak(if full { 2048 } else { 512 }, &opts).print();
+    }
+    if run("ablation") {
+        repro::ablation(if full { 2048 } else { 512 }, &opts).print();
+    }
+    if run("bounds") {
+        repro::bounds().print();
+    }
+    if run("xla") {
+        match repro::xla_check(200, &artifacts) {
+            Ok(t) => t.print(),
+            Err(e) => println!("xla check skipped/failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate() -> anyhow::Result<()> {
+    use crate::sim::machine::MachineParams;
+    println!("calibrating against this machine (quick pass)...");
+    let m = MachineParams::calibrated(true);
+    println!("rate_pw_focus    = {:.3e} ops/s", m.rate_pw_focus);
+    println!("rate_pw_cohesion = {:.3e} ops/s", m.rate_pw_cohesion);
+    println!("rate_tr_focus    = {:.3e} ops/s", m.rate_tr_focus);
+    println!("rate_tr_cohesion = {:.3e} ops/s", m.rate_tr_cohesion);
+    println!("beta_local       = {:.3e} s/word", m.beta_local);
+    println!("calibrated peak  = {:.3e} ops/s", repro::calibrated_peak_ops_per_sec());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    println!("paldx {} — algorithms:", env!("CARGO_PKG_VERSION"));
+    for alg in Algorithm::ALL {
+        println!("  {}", alg.name());
+    }
+    match crate::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts in {}:", dir.display());
+            for e in &m.executables {
+                println!("  {} (n={}, block={}, tie={})", e.name, e.n, e.block, e.tie_mode);
+            }
+        }
+        Err(e) => println!("no artifacts at {} ({e}); run `make artifacts`", dir.display()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_runs() {
+        run(argv(&["help"])).unwrap();
+        run(vec![]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(argv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn compute_small_roundtrip() {
+        let out = std::env::temp_dir().join("paldx_cli_c.bin");
+        run(argv(&[
+            "compute",
+            "--n",
+            "48",
+            "--alg",
+            "opt-pairwise",
+            "--output",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let c = io::load_matrix(&out).unwrap();
+        assert_eq!(c.rows(), 48);
+        // analyze the result
+        run(argv(&["analyze", "--input", out.to_str().unwrap(), "--top", "3"])).unwrap();
+    }
+
+    #[test]
+    fn config_parsing_errors() {
+        let a = Args::parse(&argv(&["compute", "--alg", "bogus"])).unwrap();
+        assert!(config_from(&a).is_err());
+        let a = Args::parse(&argv(&["compute", "--tie", "bogus"])).unwrap();
+        assert!(config_from(&a).is_err());
+    }
+}

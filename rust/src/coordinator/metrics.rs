@@ -1,0 +1,76 @@
+//! Job metrics registry (throughput accounting for the e2e drivers).
+
+/// Metrics of one completed job.
+#[derive(Clone, Debug)]
+pub struct JobMetrics {
+    pub n: usize,
+    pub algorithm: String,
+    pub backend: String,
+    pub seconds: f64,
+}
+
+impl JobMetrics {
+    /// Triplet-comparisons per second (n^3/6 per job) — the domain
+    /// throughput metric the benches report.
+    pub fn triplets_per_sec(&self) -> f64 {
+        let n = self.n as f64;
+        n * n * n / 6.0 / self.seconds.max(1e-12)
+    }
+}
+
+/// Accumulating registry.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    jobs: Vec<JobMetrics>,
+}
+
+impl MetricsRegistry {
+    pub fn record(&mut self, m: JobMetrics) {
+        self.jobs.push(m);
+    }
+
+    pub fn jobs(&self) -> &[JobMetrics] {
+        &self.jobs
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.jobs.iter().map(|j| j.seconds).sum()
+    }
+
+    /// Render a short text summary.
+    pub fn summary(&self) -> String {
+        if self.jobs.is_empty() {
+            return "no jobs".into();
+        }
+        let total = self.total_seconds();
+        let mean_tput =
+            self.jobs.iter().map(|j| j.triplets_per_sec()).sum::<f64>() / self.jobs.len() as f64;
+        format!(
+            "{} job(s), {:.3}s total, mean throughput {:.2}M triplets/s",
+            self.jobs.len(),
+            total,
+            mean_tput / 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = JobMetrics { n: 600, algorithm: "x".into(), backend: "Native".into(), seconds: 2.0 };
+        let want = 600.0f64.powi(3) / 6.0 / 2.0;
+        assert!((m.triplets_per_sec() - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn registry_summary() {
+        let mut r = MetricsRegistry::default();
+        assert_eq!(r.summary(), "no jobs");
+        r.record(JobMetrics { n: 100, algorithm: "a".into(), backend: "Native".into(), seconds: 0.5 });
+        assert!(r.summary().contains("1 job(s)"));
+        assert!((r.total_seconds() - 0.5).abs() < 1e-12);
+    }
+}

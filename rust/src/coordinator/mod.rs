@@ -1,0 +1,152 @@
+//! L3 coordinator: the deployment-facing orchestration layer.
+//!
+//! For a *computation* request it plans the work (algorithm + backend +
+//! block sizes), dispatches to the native kernels or the XLA runtime
+//! (padding to the best-fitting AOT artifact), accumulates phase metrics,
+//! and post-processes (strong ties, communities) on demand.  The paper's
+//! contribution is the algorithm family itself, so L3 stays a thin,
+//! explicit driver (see DESIGN.md §1) — but it is the single entry point
+//! the CLI, examples, and benches all go through.
+
+mod metrics;
+
+pub use metrics::{JobMetrics, MetricsRegistry};
+
+use std::path::PathBuf;
+
+use crate::core::Mat;
+use crate::pald::{self, Algorithm, Backend, PaldConfig, TieMode};
+use crate::runtime::XlaRuntime;
+
+/// A cohesion-computation job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub config: PaldConfig,
+    /// Artifacts directory for the XLA backend.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for Job {
+    fn default() -> Self {
+        Job { config: PaldConfig::default(), artifacts_dir: PathBuf::from("artifacts") }
+    }
+}
+
+/// Coordinator owning the (lazily created) XLA runtime and metrics.
+pub struct Coordinator {
+    xla: Option<XlaRuntime>,
+    pub metrics: MetricsRegistry,
+}
+
+impl Coordinator {
+    pub fn new() -> Coordinator {
+        Coordinator { xla: None, metrics: MetricsRegistry::default() }
+    }
+
+    /// Compute cohesion for `d` under `job`, recording metrics.
+    pub fn run(&mut self, d: &Mat, job: &Job) -> anyhow::Result<Mat> {
+        let t0 = std::time::Instant::now();
+        let c = match job.config.backend {
+            Backend::Native => pald::compute_cohesion(d, &job.config)?,
+            Backend::Xla => self.run_xla(d, job)?,
+        };
+        self.metrics.record(JobMetrics {
+            n: d.rows(),
+            algorithm: job.config.algorithm.name().to_string(),
+            backend: format!("{:?}", job.config.backend),
+            seconds: t0.elapsed().as_secs_f64(),
+        });
+        Ok(c)
+    }
+
+    fn run_xla(&mut self, d: &Mat, job: &Job) -> anyhow::Result<Mat> {
+        if self.xla.is_none() {
+            self.xla = Some(XlaRuntime::new(&job.artifacts_dir)?);
+        }
+        let rt = self.xla.as_mut().expect("just initialized");
+        let tie = match job.config.tie_mode {
+            TieMode::Strict => "strict",
+            TieMode::Split => "split",
+        };
+        let exe = rt.executable_for(d.rows(), tie)?;
+        exe.run(d, tie == "strict")
+    }
+
+    /// Plan summary for logging: which backend/artifact a job would use.
+    pub fn plan(&mut self, n: usize, job: &Job) -> anyhow::Result<String> {
+        Ok(match job.config.backend {
+            Backend::Native => format!(
+                "native algorithm={} threads={} block={}",
+                job.config.algorithm.name(),
+                job.config.threads,
+                job.config.block
+            ),
+            Backend::Xla => {
+                if self.xla.is_none() {
+                    self.xla = Some(XlaRuntime::new(&job.artifacts_dir)?);
+                }
+                let rt = self.xla.as_mut().expect("just initialized");
+                let tie = match job.config.tie_mode {
+                    TieMode::Strict => "strict",
+                    TieMode::Split => "split",
+                };
+                let spec = rt
+                    .manifest()
+                    .best_fit(n, tie)
+                    .ok_or_else(|| anyhow::anyhow!("no artifact for n={n}"))?;
+                format!(
+                    "xla artifact={} (n={} block={}) pad {} -> {}",
+                    spec.name, spec.n, spec.block, n, spec.n
+                )
+            }
+        })
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Convenience: pick a sensible default algorithm for problem size/threads
+/// (the paper's guidance: triplet sequentially, pairwise in parallel).
+pub fn default_algorithm(n: usize, threads: usize) -> Algorithm {
+    if threads > 1 {
+        Algorithm::ParallelPairwise
+    } else if n >= 1024 {
+        Algorithm::OptimizedTriplet
+    } else {
+        Algorithm::OptimizedPairwise
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+
+    #[test]
+    fn native_run_records_metrics() {
+        let mut coord = Coordinator::new();
+        let d = distmat::random_tie_free(24, 3);
+        let c = coord.run(&d, &Job::default()).unwrap();
+        assert_eq!(c.rows(), 24);
+        assert_eq!(coord.metrics.jobs().len(), 1);
+        assert_eq!(coord.metrics.jobs()[0].n, 24);
+    }
+
+    #[test]
+    fn default_algorithm_policy() {
+        assert_eq!(default_algorithm(100, 8), Algorithm::ParallelPairwise);
+        assert_eq!(default_algorithm(2048, 1), Algorithm::OptimizedTriplet);
+        assert_eq!(default_algorithm(100, 1), Algorithm::OptimizedPairwise);
+    }
+
+    #[test]
+    fn plan_describes_native_jobs() {
+        let mut coord = Coordinator::new();
+        let plan = coord.plan(100, &Job::default()).unwrap();
+        assert!(plan.contains("native"));
+    }
+}

@@ -1,0 +1,295 @@
+//! Row-major dense `f32` matrix.
+//!
+//! Deliberately minimal: the PaLD kernels index raw rows for speed, and the
+//! rest of the crate only needs construction, transpose, and simple
+//! reductions.  Row-major layout is the crate-wide convention; the paper's
+//! "stride-1 column updates of C" correspond to our stride-1 *row* updates
+//! (their matrices are column-major).
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from a row-major vector (length must equal `rows * cols`).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build an `n x n` matrix from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Contiguous row slice.
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable contiguous row slice.
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Two disjoint mutable rows (`r1 != r2`), for the pairwise kernels that
+    /// update the cohesion rows of both endpoints of a pair in one pass.
+    pub fn two_rows_mut(&mut self, r1: usize, r2: usize) -> (&mut [f32], &mut [f32]) {
+        assert_ne!(r1, r2);
+        let c = self.cols;
+        if r1 < r2 {
+            let (a, b) = self.data.split_at_mut(r2 * c);
+            (&mut a[r1 * c..r1 * c + c], &mut b[..c])
+        } else {
+            let (a, b) = self.data.split_at_mut(r1 * c);
+            let (rb, ra) = (&mut a[r2 * c..r2 * c + c], &mut b[..c]);
+            (ra, rb)
+        }
+    }
+
+    /// Flat row-major data.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Raw mutable pointer (used by the task-graph executor, which guards
+    /// disjoint tile writes with tile locks).
+    pub fn as_mut_ptr(&mut self) -> *mut f32 {
+        self.data.as_mut_ptr()
+    }
+
+    /// Multiply every element by `s`.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Sum of all elements (f64 accumulator).
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Sum of the main diagonal (square matrices).
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self[(i, i)] as f64).sum()
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for j in 0..self.cols {
+                t[(j, i)] = r[j];
+            }
+        }
+        t
+    }
+
+    /// Maximum absolute elementwise difference against `other`.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// `true` if elementwise within `atol + rtol * |other|`.
+    pub fn allclose(&self, other: &Mat, rtol: f32, atol: f32) -> bool {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Copy `self` into the top-left corner of a larger zero matrix,
+    /// used by the coordinator's pad-to-artifact-size path.
+    pub fn pad_to(&self, rows: usize, cols: usize, fill: f32) -> Mat {
+        assert!(rows >= self.rows && cols >= self.cols);
+        let mut out = Mat::filled(rows, cols, fill);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Top-left `rows x cols` sub-matrix copy (inverse of [`Mat::pad_to`]).
+    pub fn slice_to(&self, rows: usize, cols: usize) -> Mat {
+        assert!(rows <= self.rows && cols <= self.cols);
+        let mut out = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..cols]);
+        }
+        out
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline(always)]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(6);
+        for i in 0..show {
+            let r = self.row(i);
+            let cols = r.iter().take(8).map(|v| format!("{v:10.5}")).collect::<Vec<_>>();
+            writeln!(f, "  [{}{}]", cols.join(", "), if self.cols > 8 { ", ..." } else { "" })?;
+        }
+        if self.rows > show {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_index() {
+        let mut m = Mat::zeros(3, 4);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 4);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1)[2], 5.0);
+    }
+
+    #[test]
+    fn from_fn_and_transpose() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert_eq!(m[(i, j)], t[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn two_rows_mut_disjoint() {
+        let mut m = Mat::from_fn(4, 3, |i, _| i as f32);
+        {
+            let (a, b) = m.two_rows_mut(3, 1);
+            a[0] = 30.0;
+            b[0] = 10.0;
+        }
+        assert_eq!(m[(3, 0)], 30.0);
+        assert_eq!(m[(1, 0)], 10.0);
+        let (a, b) = m.two_rows_mut(0, 2);
+        a[1] = 1.0;
+        b[1] = 2.0;
+        drop((a, b));
+        assert_eq!(m[(0, 1)], 1.0);
+        assert_eq!(m[(2, 1)], 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn two_rows_mut_same_row_panics() {
+        let mut m = Mat::zeros(2, 2);
+        let _ = m.two_rows_mut(1, 1);
+    }
+
+    #[test]
+    fn pad_and_slice_roundtrip() {
+        let m = Mat::from_fn(3, 3, |i, j| (i + j) as f32);
+        let p = m.pad_to(5, 5, 9.0);
+        assert_eq!(p[(4, 4)], 9.0);
+        assert_eq!(p[(2, 1)], 3.0);
+        let s = p.slice_to(3, 3);
+        assert_eq!(s, m);
+    }
+
+    #[test]
+    fn sums_and_scale() {
+        let mut m = Mat::filled(2, 2, 2.0);
+        assert_eq!(m.sum(), 8.0);
+        assert_eq!(m.trace(), 4.0);
+        m.scale(0.5);
+        assert_eq!(m.sum(), 4.0);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Mat::filled(2, 2, 1.0);
+        let mut b = a.clone();
+        b[(0, 0)] = 1.0 + 1e-6;
+        assert!(a.allclose(&b, 1e-5, 0.0));
+        assert!(!a.allclose(&b, 1e-8, 1e-9));
+    }
+}

@@ -1,0 +1,9 @@
+//! Core dense-matrix types shared by every layer of the stack.
+
+mod mat;
+
+pub use mat::Mat;
+
+/// Largest representable "infinite" distance used by the padding contract
+/// (must match `python/compile/model.py::LARGE`).
+pub const LARGE_DISTANCE: f32 = 1e30;

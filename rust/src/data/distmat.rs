@@ -1,0 +1,243 @@
+//! Distance-matrix generation.
+//!
+//! The paper's sequential/parallel studies run on "randomly generated dense
+//! distance matrices"; the applications derive distances from embeddings
+//! (Euclidean) or graphs (shortest paths).  All generators here produce
+//! symmetric matrices with zero diagonal, and the `*_tie_free` variants
+//! guarantee distinct off-diagonal values so that `TieMode::Strict` is
+//! well-defined (ties are measure-zero for continuous data — the paper's
+//! argument for eliding tie checks).
+
+use crate::core::Mat;
+use crate::data::prng::Rng;
+
+/// Random dense distance matrix with i.i.d. uniform(0.1, 1.1) entries.
+/// Not guaranteed tie-free (f32 collisions are possible, if unlikely).
+pub fn random_uniform(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut d = Mat::zeros(n, n);
+    for x in 0..n {
+        for y in (x + 1)..n {
+            let v = rng.uniform_in(0.1, 1.1);
+            d[(x, y)] = v;
+            d[(y, x)] = v;
+        }
+    }
+    d
+}
+
+/// Random distance matrix whose off-diagonal values are all distinct:
+/// a shuffled ladder `base + k*eps` — strict-mode semantics are exact.
+pub fn random_tie_free(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let m = n * (n - 1) / 2;
+    let mut vals: Vec<f32> = (0..m).map(|k| 0.5 + (k as f32 + 1.0) / m as f32).collect();
+    rng.shuffle(&mut vals);
+    let mut d = Mat::zeros(n, n);
+    let mut k = 0;
+    for x in 0..n {
+        for y in (x + 1)..n {
+            d[(x, y)] = vals[k];
+            d[(y, x)] = vals[k];
+            k += 1;
+        }
+    }
+    d
+}
+
+/// Random distance matrix with small-integer entries — guaranteed ties,
+/// used to exercise `TieMode::Split`.
+pub fn random_tied(n: usize, seed: u64, levels: u32) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut d = Mat::zeros(n, n);
+    for x in 0..n {
+        for y in (x + 1)..n {
+            let v = (rng.below(levels as usize) + 1) as f32;
+            d[(x, y)] = v;
+            d[(y, x)] = v;
+        }
+    }
+    d
+}
+
+/// Euclidean distance matrix from a point cloud (rows of `pts`).
+pub fn euclidean(pts: &Mat) -> Mat {
+    let n = pts.rows();
+    let mut d = Mat::zeros(n, n);
+    for x in 0..n {
+        let px = pts.row(x);
+        for y in (x + 1)..n {
+            let py = pts.row(y);
+            let mut s = 0.0f64;
+            for (a, b) in px.iter().zip(py) {
+                let diff = (a - b) as f64;
+                s += diff * diff;
+            }
+            let v = s.sqrt() as f32;
+            d[(x, y)] = v;
+            d[(y, x)] = v;
+        }
+    }
+    d
+}
+
+/// Gaussian-mixture point cloud: `sizes[i]` points around center i.
+///
+/// `spread[i]` controls the within-cluster standard deviation, letting
+/// tests build the paper's motivating geometry: communities of very
+/// different density that a single absolute distance threshold cannot
+/// capture.
+pub fn gaussian_clusters(
+    dim: usize,
+    sizes: &[usize],
+    spread: &[f32],
+    sep: f32,
+    seed: u64,
+) -> Mat {
+    assert_eq!(sizes.len(), spread.len());
+    let mut rng = Rng::new(seed);
+    let k = sizes.len();
+    // Random unit-ish directions for cluster centers, scaled by `sep`.
+    let mut centers = Mat::zeros(k, dim);
+    for c in 0..k {
+        let row = centers.row_mut(c);
+        let mut norm = 0.0f64;
+        for v in row.iter_mut() {
+            *v = rng.normal() as f32;
+            norm += (*v as f64) * (*v as f64);
+        }
+        let norm = norm.sqrt().max(1e-9) as f32;
+        for v in row.iter_mut() {
+            *v = *v / norm * sep;
+        }
+    }
+    let n: usize = sizes.iter().sum();
+    let mut pts = Mat::zeros(n, dim);
+    let mut row = 0;
+    for c in 0..k {
+        for _ in 0..sizes[c] {
+            for j in 0..dim {
+                pts[(row, j)] = centers[(c, j)] + spread[c] * rng.normal() as f32;
+            }
+            row += 1;
+        }
+    }
+    pts
+}
+
+/// Cluster labels corresponding to [`gaussian_clusters`] row order.
+pub fn cluster_labels(sizes: &[usize]) -> Vec<usize> {
+    let mut labels = Vec::with_capacity(sizes.iter().sum());
+    for (c, &s) in sizes.iter().enumerate() {
+        labels.extend(std::iter::repeat(c).take(s));
+    }
+    labels
+}
+
+/// Validate symmetry + zero diagonal (debug helper used by the CLI).
+pub fn validate(d: &Mat) -> Result<(), String> {
+    if d.rows() != d.cols() {
+        return Err(format!("not square: {}x{}", d.rows(), d.cols()));
+    }
+    let n = d.rows();
+    for x in 0..n {
+        if d[(x, x)] != 0.0 {
+            return Err(format!("nonzero diagonal at {x}"));
+        }
+        for y in (x + 1)..n {
+            if d[(x, y)] != d[(y, x)] {
+                return Err(format!("asymmetric at ({x},{y})"));
+            }
+            if !(d[(x, y)] > 0.0) {
+                return Err(format!("non-positive distance at ({x},{y})"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tie_free_has_distinct_values() {
+        let d = random_tie_free(24, 1);
+        validate(&d).unwrap();
+        let mut vals = Vec::new();
+        for x in 0..24 {
+            for y in (x + 1)..24 {
+                vals.push(d[(x, y)].to_bits());
+            }
+        }
+        let len = vals.len();
+        vals.sort_unstable();
+        vals.dedup();
+        assert_eq!(vals.len(), len, "found tied distances");
+    }
+
+    #[test]
+    fn tied_has_ties() {
+        let d = random_tied(16, 2, 4);
+        validate(&d).unwrap();
+        let mut vals = Vec::new();
+        for x in 0..16 {
+            for y in (x + 1)..16 {
+                vals.push(d[(x, y)].to_bits());
+            }
+        }
+        let len = vals.len();
+        vals.sort_unstable();
+        vals.dedup();
+        assert!(vals.len() < len);
+    }
+
+    #[test]
+    fn euclidean_triangle_inequality() {
+        let pts = gaussian_clusters(8, &[10, 10], &[0.5, 0.5], 5.0, 3);
+        let d = euclidean(&pts);
+        validate(&d).unwrap();
+        let n = d.rows();
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    if x != y && y != z && x != z {
+                        assert!(d[(x, z)] <= d[(x, y)] + d[(y, z)] + 1e-4);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        let pts = gaussian_clusters(16, &[20, 20], &[0.1, 0.1], 10.0, 7);
+        let d = euclidean(&pts);
+        // mean within-cluster distance << mean cross-cluster distance
+        let (mut win, mut wn, mut cross, mut cn) = (0.0f64, 0, 0.0f64, 0);
+        for x in 0..40 {
+            for y in (x + 1)..40 {
+                if (x < 20) == (y < 20) {
+                    win += d[(x, y)] as f64;
+                    wn += 1;
+                } else {
+                    cross += d[(x, y)] as f64;
+                    cn += 1;
+                }
+            }
+        }
+        assert!(win / wn as f64 * 5.0 < cross / cn as f64);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(
+            random_uniform(12, 5).as_slice(),
+            random_uniform(12, 5).as_slice()
+        );
+        assert_eq!(
+            random_tie_free(12, 5).as_slice(),
+            random_tie_free(12, 5).as_slice()
+        );
+    }
+}

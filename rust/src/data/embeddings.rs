@@ -1,0 +1,230 @@
+//! Synthetic word embeddings for the Section 7 text-analysis application.
+//!
+//! The paper embeds 2712 words from Shakespeare's sonnets with pre-trained
+//! fastText vectors.  Neither the corpus tooling nor the embedding model is
+//! available offline, so this module builds a deterministic synthetic
+//! embedding with the *geometry that Section 7 actually exercises*:
+//!
+//! * a vocabulary of pseudo-words with Zipfian frequency ranks;
+//! * semantic clusters of widely varying size, density, and radius —
+//!   including a dense, populous cluster around a probe word ("guilt": 20
+//!   strong ties in the paper) and a sparse, tight cluster around another
+//!   ("halt": 5 strong ties);
+//! * background words scattered broadly so that absolute-distance cutoffs
+//!   tuned for one neighborhood fail on the other — the paper's headline
+//!   qualitative result (Fig. 12).
+
+use crate::core::Mat;
+use crate::data::distmat;
+use crate::data::prng::Rng;
+
+/// A synthetic embedded vocabulary.
+pub struct EmbeddedVocab {
+    /// Word strings, index-aligned with embedding rows.
+    pub words: Vec<String>,
+    /// `n x dim` embedding matrix.
+    pub vectors: Mat,
+    /// Ground-truth cluster id per word (background = usize::MAX).
+    pub cluster: Vec<usize>,
+    /// Names of the probe clusters, index = cluster id.
+    pub cluster_names: Vec<String>,
+}
+
+/// Deterministic pseudo-word generator (CV syllables keyed on the rng).
+fn pseudo_word(rng: &mut Rng, syllables: usize) -> String {
+    const C: &[u8] = b"bcdfghklmnprstvw";
+    const V: &[u8] = b"aeiou";
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push(C[rng.below(C.len())] as char);
+        w.push(V[rng.below(V.len())] as char);
+    }
+    w
+}
+
+/// Cluster specification: (name, member count, radius around the center).
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub size: usize,
+    pub radius: f32,
+}
+
+/// The Section 7 configuration: n words total, dim-dimensional embeddings,
+/// a dense "guilt"-like cluster, a sparse "halt"-like cluster, several
+/// medium clusters, and Zipf-distributed background words.
+pub fn sonnets_like(n: usize, dim: usize, seed: u64) -> EmbeddedVocab {
+    let specs = vec![
+        ClusterSpec { name: "guilt", size: 21, radius: 0.55 },
+        ClusterSpec { name: "halt", size: 6, radius: 0.28 },
+        ClusterSpec { name: "love", size: 40, radius: 0.8 },
+        ClusterSpec { name: "time", size: 30, radius: 0.7 },
+        ClusterSpec { name: "beauty", size: 25, radius: 0.6 },
+    ];
+    build(n, dim, seed, specs)
+}
+
+/// Build a synthetic embedded vocabulary from cluster specs.
+pub fn build(n: usize, dim: usize, seed: u64, specs: Vec<ClusterSpec>) -> EmbeddedVocab {
+    let clustered: usize = specs.iter().map(|s| s.size).sum();
+    assert!(clustered < n, "cluster members must fit in the vocabulary");
+    let mut rng = Rng::new(seed);
+
+    let mut words = Vec::with_capacity(n);
+    let mut vectors = Mat::zeros(n, dim);
+    let mut cluster = vec![usize::MAX; n];
+    let mut cluster_names = Vec::new();
+
+    // Cluster centers: well-separated random directions far outside the
+    // background shell, so probe clusters are crisp (their within-cluster
+    // distances ≈ radius, cluster-to-background ≈ several units).
+    let sep = 9.0f32;
+    let mut row = 0usize;
+    for (cid, spec) in specs.iter().enumerate() {
+        cluster_names.push(spec.name.to_string());
+        let mut center = vec![0.0f32; dim];
+        let mut norm = 0.0f64;
+        for v in center.iter_mut() {
+            *v = rng.normal() as f32;
+            norm += (*v as f64).powi(2);
+        }
+        let norm = norm.sqrt().max(1e-9) as f32;
+        for v in center.iter_mut() {
+            *v = *v / norm * sep;
+        }
+        for k in 0..spec.size {
+            // First member carries the probe word itself.
+            words.push(if k == 0 {
+                spec.name.to_string()
+            } else {
+                format!("{}_{}", pseudo_word(&mut rng, 2), spec.name)
+            });
+            cluster[row] = cid;
+            // Scatter uniformly within the cluster radius (denser clusters
+            // come from bigger size at similar radius).
+            for j in 0..dim {
+                vectors[(row, j)] =
+                    center[j] + spec.radius * rng.normal() as f32 / (dim as f32).sqrt();
+            }
+            row += 1;
+        }
+        // Fringe: unrelated words orbiting just outside the cluster
+        // (2.5–4x its radius).  These are what an absolute-distance cutoff
+        // tuned on a *looser* cluster wrongly pulls in — the Figure 12
+        // pitfall — while staying outside PaLD's relative-distance ties.
+        let fringe = (spec.size).min(n - clustered - 1);
+        for _ in 0..fringe {
+            if row >= n {
+                break;
+            }
+            words.push(pseudo_word(&mut rng, 3));
+            let dist = spec.radius * rng.uniform_in(2.5, 4.0);
+            for j in 0..dim {
+                vectors[(row, j)] =
+                    center[j] + dist * rng.normal() as f32 / (dim as f32).sqrt();
+            }
+            row += 1;
+        }
+    }
+    // Background vocabulary: broad shell of words (norm ~ 2..6), inside
+    // the cluster orbit, so absolute-distance cutoffs tuned for one
+    // cluster leak into unrelated words while PaLD's relative-distance
+    // ties stay within clusters.
+    while row < n {
+        let syl = 1 + rng.below(3);
+        words.push(pseudo_word(&mut rng, syl + 1));
+        let mut norm = 0.0f64;
+        let mut v = vec![0.0f32; dim];
+        for x in v.iter_mut() {
+            *x = rng.normal() as f32;
+            norm += (*x as f64).powi(2);
+        }
+        let norm = norm.sqrt().max(1e-9) as f32;
+        let target = rng.uniform_in(2.0, 6.0);
+        for (j, x) in v.iter().enumerate() {
+            vectors[(row, j)] = x / norm * target;
+        }
+        row += 1;
+    }
+
+    EmbeddedVocab { words, vectors, cluster, cluster_names }
+}
+
+impl EmbeddedVocab {
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Index of an exact word, if present.
+    pub fn index_of(&self, word: &str) -> Option<usize> {
+        self.words.iter().position(|w| w == word)
+    }
+
+    /// Euclidean distance matrix over the vocabulary (the paper's choice).
+    pub fn distance_matrix(&self) -> Mat {
+        distmat::euclidean(&self.vectors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sonnets_like_shape_and_probes() {
+        let v = sonnets_like(500, 32, 42);
+        assert_eq!(v.len(), 500);
+        assert_eq!(v.vectors.rows(), 500);
+        assert!(v.index_of("guilt").is_some());
+        assert!(v.index_of("halt").is_some());
+        // cluster sizes as specified
+        assert_eq!(v.cluster.iter().filter(|&&c| c == 0).count(), 21);
+        assert_eq!(v.cluster.iter().filter(|&&c| c == 1).count(), 6);
+    }
+
+    #[test]
+    fn cluster_members_are_nearer_than_background() {
+        let v = sonnets_like(400, 32, 7);
+        let d = v.distance_matrix();
+        let g = v.index_of("guilt").unwrap();
+        let mut within = Vec::new();
+        let mut outside = Vec::new();
+        for i in 0..v.len() {
+            if i == g {
+                continue;
+            }
+            if v.cluster[i] == 0 {
+                within.push(d[(g, i)]);
+            } else if v.cluster[i] == usize::MAX {
+                outside.push(d[(g, i)]);
+            }
+        }
+        let max_within = within.iter().cloned().fold(0.0f32, f32::max);
+        let mut sorted = outside.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // the whole guilt cluster is closer than ~95% of background words
+        let p5 = sorted[sorted.len() / 20];
+        assert!(max_within < p5 * 2.0, "max_within={max_within} p5={p5}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = sonnets_like(300, 16, 3);
+        let b = sonnets_like(300, 16, 3);
+        assert_eq!(a.words, b.words);
+        assert_eq!(a.vectors.as_slice(), b.vectors.as_slice());
+    }
+
+    #[test]
+    fn words_unique_enough() {
+        let v = sonnets_like(800, 16, 5);
+        let mut w = v.words.clone();
+        w.sort();
+        w.dedup();
+        // pseudo-word collisions happen, but the vocabulary is mostly unique
+        assert!(w.len() > 700, "unique={}", w.len());
+    }
+}

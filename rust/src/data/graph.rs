@@ -1,0 +1,298 @@
+//! Sparse graphs and all-pairs shortest paths.
+//!
+//! Substrate for the paper's Appendix C (SNAP collaboration networks
+//! ca-GrQc / ca-HepPh / ca-CondMat).  The SNAP downloads are unavailable
+//! offline, so [`collaboration_network`] generates community-structured
+//! graphs with the same qualitative properties (heavy-tailed degrees from
+//! preferential attachment, dense triangle-rich communities, sparse
+//! inter-community bridges) at the same vertex counts, and [`Csr::apsp`]
+//! produces the distance matrix via per-source BFS exactly as the paper
+//! does ("distance matrices by computing all-pairs shortest path
+//! distances").
+
+use crate::core::Mat;
+use crate::data::prng::Rng;
+
+/// Compressed-sparse-row undirected graph.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    offsets: Vec<u32>,
+    neighbors: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an undirected edge list; duplicates and self-loops are
+    /// dropped.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            if a != b {
+                adj[a as usize].push(b);
+                adj[b as usize].push(a);
+            }
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut neighbors = Vec::new();
+        offsets.push(0);
+        for list in &mut adj {
+            list.sort_unstable();
+            list.dedup();
+            neighbors.extend_from_slice(list);
+            offsets.push(neighbors.len() as u32);
+        }
+        Csr { offsets, neighbors }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.neighbors(v).len()
+    }
+
+    /// Single-source BFS distances (u16::MAX = unreachable).
+    pub fn bfs(&self, src: usize, dist: &mut [u16], queue: &mut Vec<u32>) {
+        dist.fill(u16::MAX);
+        queue.clear();
+        dist[src] = 0;
+        queue.push(src as u32);
+        let mut head = 0;
+        while head < queue.len() {
+            let v = queue[head] as usize;
+            head += 1;
+            let dv = dist[v];
+            for &w in self.neighbors(v) {
+                let w = w as usize;
+                if dist[w] == u16::MAX {
+                    dist[w] = dv + 1;
+                    queue.push(w as u32);
+                }
+            }
+        }
+    }
+
+    /// Largest connected component, as (vertex-remapped graph, old ids).
+    pub fn largest_component(&self) -> (Csr, Vec<u32>) {
+        let n = self.num_vertices();
+        let mut comp = vec![u32::MAX; n];
+        let mut sizes: Vec<(u32, u32)> = Vec::new(); // (comp id, size)
+        let mut dist = vec![0u16; n];
+        let mut queue = Vec::new();
+        let mut cid = 0u32;
+        for s in 0..n {
+            if comp[s] == u32::MAX {
+                self.bfs(s, &mut dist, &mut queue);
+                let mut size = 0;
+                for &v in queue.iter() {
+                    comp[v as usize] = cid;
+                    size += 1;
+                }
+                sizes.push((cid, size));
+                cid += 1;
+            }
+        }
+        let best = sizes.iter().max_by_key(|&&(_, s)| s).unwrap().0;
+        let keep: Vec<u32> = (0..n as u32).filter(|&v| comp[v as usize] == best).collect();
+        let mut remap = vec![u32::MAX; n];
+        for (new, &old) in keep.iter().enumerate() {
+            remap[old as usize] = new as u32;
+        }
+        let mut edges = Vec::new();
+        for &old in &keep {
+            for &w in self.neighbors(old as usize) {
+                if old < w && remap[w as usize] != u32::MAX {
+                    edges.push((remap[old as usize], remap[w as usize]));
+                }
+            }
+        }
+        (Csr::from_edges(keep.len(), &edges), keep)
+    }
+
+    /// All-pairs shortest-path distance matrix via n BFS traversals.
+    ///
+    /// Unreachable pairs get `2 * diameter` (callers should normally pass
+    /// the largest connected component).  A tiny deterministic jitter
+    /// (`+ v * 1e-4` keyed on the pair) is added off-diagonal so the
+    /// resulting matrix is tie-free and strict-mode PaLD semantics apply —
+    /// hop-count APSP is otherwise massively tied.
+    pub fn apsp(&self, jitter: bool) -> Mat {
+        let n = self.num_vertices();
+        let mut d = Mat::zeros(n, n);
+        let mut dist = vec![0u16; n];
+        let mut queue = Vec::new();
+        let mut diam = 1u16;
+        for s in 0..n {
+            self.bfs(s, &mut dist, &mut queue);
+            for v in 0..n {
+                if dist[v] != u16::MAX && dist[v] > diam {
+                    diam = dist[v];
+                }
+                d[(s, v)] = if dist[v] == u16::MAX { -1.0 } else { dist[v] as f32 };
+            }
+        }
+        let unreachable = 2.0 * diam as f32;
+        let mut rng = Rng::new(0x9e37);
+        for x in 0..n {
+            for y in (x + 1)..n {
+                let mut v = d[(x, y)];
+                if v < 0.0 {
+                    v = unreachable;
+                }
+                if jitter {
+                    v += rng.uniform_in(0.0, 1e-3);
+                }
+                d[(x, y)] = v;
+                d[(y, x)] = v;
+            }
+            d[(x, x)] = 0.0;
+        }
+        d
+    }
+}
+
+/// Community-structured collaboration-network generator.
+///
+/// `n` vertices are split into communities with sizes drawn from a
+/// heavy-tailed distribution; inside a community, vertices attach
+/// preferentially (collaboration graphs are triangle-dense, so each new
+/// vertex links to a random clique of `m_intra` earlier members); a small
+/// fraction `p_bridge` of vertices also link to a member of another
+/// community.  This mirrors the degree/clustering structure of the SNAP
+/// ca-* graphs closely enough for Appendix C, whose runtime depends only on
+/// the APSP matrix size.
+pub fn collaboration_network(n: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    // Heavy-tailed community sizes: repeatedly carve off Pareto-ish chunks.
+    let mut sizes = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        let frac = (rng.uniform().powf(2.0) * 0.03 + 0.002).min(1.0);
+        let s = ((n as f64 * frac) as usize).max(3).min(left);
+        sizes.push(s);
+        left -= s;
+    }
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut base = 0usize;
+    let mut starts = Vec::new();
+    for &s in &sizes {
+        starts.push(base);
+        if s == 1 {
+            base += 1;
+            continue;
+        }
+        // Preferential attachment with clique joins (m = 2):
+        // vertex i joins by picking an anchor ~ degree-weighted, linking to
+        // the anchor and one of its neighbors (forming a triangle).
+        let mut endpoints: Vec<u32> = Vec::new(); // degree-weighted pool
+        edges.push((base as u32, (base + 1) as u32));
+        endpoints.extend([base as u32, (base + 1) as u32]);
+        if s > 2 {
+            edges.push((base as u32, (base + 2) as u32));
+            edges.push(((base + 1) as u32, (base + 2) as u32));
+            endpoints.extend([base as u32, (base + 2) as u32, (base + 1) as u32, (base + 2) as u32]);
+        }
+        for i in 3..s {
+            let v = (base + i) as u32;
+            let anchor = endpoints[rng.below(endpoints.len())];
+            edges.push((v, anchor));
+            endpoints.extend([v, anchor]);
+            // close a triangle through a second endpoint
+            let second = endpoints[rng.below(endpoints.len())];
+            if second != v && second != anchor {
+                edges.push((v, second));
+                endpoints.extend([v, second]);
+            }
+        }
+        base += s;
+    }
+    // Bridges: connect consecutive communities (guaranteeing one component)
+    // plus a few random long-range collaborations.
+    for w in 1..sizes.len() {
+        let a = starts[w - 1] + rng.below(sizes[w - 1]);
+        let b = starts[w] + rng.below(sizes[w]);
+        edges.push((a as u32, b as u32));
+    }
+    let extra = (n / 20).max(1);
+    for _ in 0..extra {
+        let a = rng.below(n) as u32;
+        let b = rng.below(n) as u32;
+        if a != b {
+            edges.push((a, b));
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat::validate;
+
+    #[test]
+    fn csr_from_edges_dedups() {
+        let g = Csr::from_edges(4, &[(0, 1), (1, 0), (1, 2), (2, 3), (3, 3)]);
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(3), 1);
+    }
+
+    #[test]
+    fn bfs_distances_on_path_graph() {
+        let g = Csr::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let mut dist = vec![0u16; 5];
+        let mut q = Vec::new();
+        g.bfs(0, &mut dist, &mut q);
+        assert_eq!(dist, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn apsp_is_valid_distance_matrix() {
+        let g = collaboration_network(120, 4);
+        let (lcc, _) = g.largest_component();
+        let d = lcc.apsp(true);
+        validate(&d).unwrap();
+    }
+
+    #[test]
+    fn largest_component_connects_everything() {
+        let g = collaboration_network(300, 9);
+        let (lcc, ids) = g.largest_component();
+        assert!(lcc.num_vertices() >= 290, "lcc={}", lcc.num_vertices());
+        assert_eq!(ids.len(), lcc.num_vertices());
+        let mut dist = vec![0u16; lcc.num_vertices()];
+        let mut q = Vec::new();
+        lcc.bfs(0, &mut dist, &mut q);
+        assert!(dist.iter().all(|&v| v != u16::MAX));
+    }
+
+    #[test]
+    fn collaboration_network_is_heavy_tailed_and_clustered() {
+        let g = collaboration_network(1000, 1);
+        let n = g.num_vertices();
+        let degs: Vec<usize> = (0..n).map(|v| g.degree(v)).collect();
+        let max = *degs.iter().max().unwrap();
+        let mean = degs.iter().sum::<usize>() as f64 / n as f64;
+        assert!(max as f64 > 5.0 * mean, "max={max} mean={mean}");
+        // Sparse, like collaboration nets.
+        assert!(g.num_edges() < 10 * n);
+    }
+
+    #[test]
+    fn generator_deterministic() {
+        let a = collaboration_network(200, 3);
+        let b = collaboration_network(200, 3);
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.neighbors(17), b.neighbors(17));
+    }
+}

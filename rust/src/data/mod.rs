@@ -1,0 +1,10 @@
+//! Data substrates: PRNG, distance-matrix generation, synthetic graphs with
+//! all-pairs shortest paths, and synthetic word embeddings.
+//!
+//! Everything here is built from scratch (the offline cargo cache has no
+//! `rand`), deterministic given a seed, and sized to the paper's workloads.
+
+pub mod distmat;
+pub mod embeddings;
+pub mod graph;
+pub mod prng;

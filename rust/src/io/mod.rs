@@ -1,0 +1,195 @@
+//! Matrix and results I/O: a simple binary matrix format, CSV export,
+//! edge-list loading, and a minimal JSON writer for results (no serde in
+//! the offline cache).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::core::Mat;
+
+const MAGIC: &[u8; 8] = b"PALDMAT1";
+
+/// Write a matrix in the paldx binary format (magic, dims, f32 LE data).
+pub fn save_matrix(m: &Mat, path: &Path) -> anyhow::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.cols() as u64).to_le_bytes())?;
+    for &v in m.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read a matrix written by [`save_matrix`].
+pub fn load_matrix(path: &Path) -> anyhow::Result<Mat> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {}", path.display());
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let rows = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let cols = u64::from_le_bytes(b8) as usize;
+    anyhow::ensure!(rows * cols < (1 << 32), "unreasonable matrix size");
+    let mut data = vec![0.0f32; rows * cols];
+    let mut b4 = [0u8; 4];
+    for v in &mut data {
+        r.read_exact(&mut b4)?;
+        *v = f32::from_le_bytes(b4);
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// CSV export (header-less, one row per line).
+pub fn save_csv(m: &Mat, path: &Path) -> anyhow::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for i in 0..m.rows() {
+        let row: Vec<String> = m.row(i).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Load a square matrix from header-less CSV.
+pub fn load_csv(path: &Path) -> anyhow::Result<Mat> {
+    let r = BufReader::new(File::open(path)?);
+    let mut data = Vec::new();
+    let mut cols = 0usize;
+    let mut rows = 0usize;
+    for line in r.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let vals: Vec<f32> = line
+            .split(',')
+            .map(|s| s.trim().parse::<f32>())
+            .collect::<Result<_, _>>()?;
+        if cols == 0 {
+            cols = vals.len();
+        }
+        anyhow::ensure!(vals.len() == cols, "ragged CSV at row {rows}");
+        data.extend(vals);
+        rows += 1;
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Load an undirected edge list: whitespace-separated `u v` per line,
+/// `#` comments allowed (the SNAP format).
+pub fn load_edge_list(path: &Path) -> anyhow::Result<(usize, Vec<(u32, u32)>)> {
+    let r = BufReader::new(File::open(path)?);
+    let mut edges = Vec::new();
+    let mut max_v = 0u32;
+    for line in r.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let a: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad edge line"))?.parse()?;
+        let b: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad edge line"))?.parse()?;
+        max_v = max_v.max(a).max(b);
+        edges.push((a, b));
+    }
+    Ok((max_v as usize + 1, edges))
+}
+
+/// Minimal JSON value writer for results/metrics files.
+pub enum Json {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        match self {
+            Json::Num(v) => {
+                if v.is_finite() {
+                    format!("{v}")
+                } else {
+                    "null".into()
+                }
+            }
+            Json::Bool(b) => format!("{b}"),
+            Json::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Json::Arr(a) => {
+                format!("[{}]", a.iter().map(Json::render).collect::<Vec<_>>().join(","))
+            }
+            Json::Obj(o) => format!(
+                "{{{}}}",
+                o.iter()
+                    .map(|(k, v)| format!("\"{k}\":{}", v.render()))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("paldx_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let m = distmat::random_tie_free(17, 3);
+        let p = tmp("m.bin");
+        save_matrix(&m, &p).unwrap();
+        let m2 = load_matrix(&p).unwrap();
+        assert_eq!(m.as_slice(), m2.as_slice());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = distmat::random_uniform(9, 5);
+        let p = tmp("m.csv");
+        save_csv(&m, &p).unwrap();
+        let m2 = load_csv(&p).unwrap();
+        assert!(m.allclose(&m2, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn edge_list_parsing() {
+        let p = tmp("g.txt");
+        std::fs::write(&p, "# comment\n0 1\n1 2\n\n2 3\n").unwrap();
+        let (n, edges) = load_edge_list(&p).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(edges, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("junk.bin");
+        std::fs::write(&p, b"NOTMAGIC________").unwrap();
+        assert!(load_matrix(&p).is_err());
+    }
+
+    #[test]
+    fn json_rendering() {
+        let j = Json::Obj(vec![
+            ("n".into(), Json::Num(2048.0)),
+            ("alg".into(), Json::Str("opt-triplet".into())),
+            ("ok".into(), Json::Bool(true)),
+            ("xs".into(), Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)])),
+        ]);
+        assert_eq!(
+            j.render(),
+            r#"{"n":2048,"alg":"opt-triplet","ok":true,"xs":[1,2.5]}"#
+        );
+    }
+}

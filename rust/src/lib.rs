@@ -1,0 +1,53 @@
+//! # paldx — Partitioned Local Depths at scale
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via XLA/PJRT) reproduction of
+//! *"Sequential and Shared-Memory Parallel Algorithms for Partitioned Local
+//! Depths"* (Devarakonda & Ballard, 2023).
+//!
+//! Given a pairwise distance matrix `D`, PaLD computes a *cohesion* matrix
+//! `C` measuring the strength of pairwise relationships from relative (not
+//! absolute) distances, via `O(n^3)` triplet comparisons.  This crate
+//! provides:
+//!
+//! * the paper's two algorithmic variants — **pairwise** and **triplet** —
+//!   at every rung of its optimization ladder (naive, blocked, branch-free,
+//!   fully optimized), see [`pald`];
+//! * shared-memory parallel runtimes mirroring the paper's OpenMP designs:
+//!   loop parallelism with reductions for pairwise, a task graph with
+//!   `depend(inout)` conflict resolution for triplet, see [`parallel`];
+//! * an XLA/PJRT backend executing the AOT-compiled JAX + Pallas kernels,
+//!   see [`runtime`] and [`coordinator`];
+//! * simulators used for the paper's analyses: an LRU cache simulator and
+//!   block-traffic counters validating the communication bounds of
+//!   Theorems 4.1/4.2, and a calibrated multicore machine model used to
+//!   reproduce the scaling studies on this single-core testbed, see [`sim`];
+//! * data substrates (synthetic distance matrices, collaboration-network
+//!   graphs with BFS APSP, fastText-like word embeddings) and community
+//!   analysis tools (universal strong-tie threshold, baselines), see
+//!   [`data`] and [`analysis`].
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use paldx::pald::{compute_cohesion, PaldConfig};
+//! use paldx::data::distmat;
+//!
+//! let d = distmat::random_tie_free(256, 42);
+//! let c = compute_cohesion(&d, &PaldConfig::default()).unwrap();
+//! let ties = paldx::analysis::strong_ties(&c);
+//! println!("strong ties: {}", ties.len());
+//! ```
+
+pub mod analysis;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod io;
+pub mod pald;
+pub mod parallel;
+pub mod repro;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;

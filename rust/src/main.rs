@@ -1,0 +1,4 @@
+//! paldx CLI entrypoint (full subcommand surface wired in cli/).
+fn main() -> anyhow::Result<()> {
+    paldx::cli::run(std::env::args().skip(1).collect())
+}

@@ -1,0 +1,212 @@
+//! Public configuration surface and the single `compute_cohesion` entry
+//! point dispatching across every algorithm variant and backend.
+
+use std::time::Instant;
+
+use crate::core::Mat;
+use crate::pald::{blocked, branchfree, hybrid, naive, optimized, parallel_pairwise, parallel_triplet, TieMode};
+
+/// Algorithm variant + optimization rung.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Algorithm 1, verbatim.
+    NaivePairwise,
+    /// Algorithm 2, verbatim.
+    NaiveTriplet,
+    /// Pairwise + one-level cache blocking (branching loops).
+    BlockedPairwise,
+    /// Triplet + blocking (branching loops).
+    BlockedTriplet,
+    /// Pairwise + branch avoidance only.
+    BranchFreePairwise,
+    /// Triplet + branch avoidance only.
+    BranchFreeTriplet,
+    /// Pairwise, fully optimized (blocked + branch-free + int U).
+    OptimizedPairwise,
+    /// Triplet, fully optimized.
+    OptimizedTriplet,
+    /// Parallel pairwise (loop parallelism + reductions).
+    ParallelPairwise,
+    /// Parallel triplet (task graph with tile locks).
+    ParallelTriplet,
+    /// Appendix B hybrid: triplet focus pass + pairwise cohesion pass.
+    Hybrid,
+    /// Parallel hybrid (column-partitioned cohesion pass).
+    ParallelHybrid,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 12] = [
+        Algorithm::NaivePairwise,
+        Algorithm::NaiveTriplet,
+        Algorithm::BlockedPairwise,
+        Algorithm::BlockedTriplet,
+        Algorithm::BranchFreePairwise,
+        Algorithm::BranchFreeTriplet,
+        Algorithm::OptimizedPairwise,
+        Algorithm::OptimizedTriplet,
+        Algorithm::ParallelPairwise,
+        Algorithm::ParallelTriplet,
+        Algorithm::Hybrid,
+        Algorithm::ParallelHybrid,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::NaivePairwise => "naive-pairwise",
+            Algorithm::NaiveTriplet => "naive-triplet",
+            Algorithm::BlockedPairwise => "blocked-pairwise",
+            Algorithm::BlockedTriplet => "blocked-triplet",
+            Algorithm::BranchFreePairwise => "branchfree-pairwise",
+            Algorithm::BranchFreeTriplet => "branchfree-triplet",
+            Algorithm::OptimizedPairwise => "opt-pairwise",
+            Algorithm::OptimizedTriplet => "opt-triplet",
+            Algorithm::ParallelPairwise => "par-pairwise",
+            Algorithm::ParallelTriplet => "par-triplet",
+            Algorithm::Hybrid => "hybrid",
+            Algorithm::ParallelHybrid => "par-hybrid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        Algorithm::ALL.iter().copied().find(|a| a.name() == s)
+    }
+}
+
+/// Execution backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Run the Rust kernels in-process.
+    #[default]
+    Native,
+    /// Execute the AOT-compiled JAX+Pallas artifact via PJRT
+    /// (see [`crate::coordinator`]).
+    Xla,
+}
+
+/// Full configuration for a cohesion computation.
+#[derive(Clone, Debug)]
+pub struct PaldConfig {
+    pub algorithm: Algorithm,
+    pub tie_mode: TieMode,
+    /// Pairwise block size / triplet focus-pass block size b̂ (0 = default).
+    pub block: usize,
+    /// Triplet cohesion-pass block size b̃ (0 = same as `block`).
+    pub block2: usize,
+    /// Worker threads for the parallel algorithms.
+    pub threads: usize,
+    pub backend: Backend,
+}
+
+impl Default for PaldConfig {
+    fn default() -> Self {
+        PaldConfig {
+            algorithm: Algorithm::OptimizedTriplet,
+            tie_mode: TieMode::Strict,
+            block: 0,
+            block2: 0,
+            threads: available_threads(),
+            backend: Backend::Native,
+        }
+    }
+}
+
+/// Threads available to the process (the paper's `p`).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Phase timing breakdown (paper Figure 13 / Appendix B).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub total_s: f64,
+}
+
+/// Compute the cohesion matrix for symmetric distance matrix `d`.
+///
+/// Errors on non-square or too-small inputs; backend `Xla` is dispatched
+/// by the coordinator (this function handles `Native`).
+pub fn compute_cohesion(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<Mat> {
+    if d.rows() != d.cols() {
+        anyhow::bail!("distance matrix must be square, got {}x{}", d.rows(), d.cols());
+    }
+    if d.rows() < 2 {
+        anyhow::bail!("need at least 2 points, got {}", d.rows());
+    }
+    if cfg.backend == Backend::Xla {
+        anyhow::bail!("Backend::Xla is served by coordinator::Coordinator, not compute_cohesion");
+    }
+    let b = cfg.block;
+    let b2 = if cfg.block2 == 0 { cfg.block } else { cfg.block2 };
+    let tie = cfg.tie_mode;
+    Ok(match cfg.algorithm {
+        Algorithm::NaivePairwise => naive::pairwise(d, tie),
+        Algorithm::NaiveTriplet => naive::triplet(d, tie),
+        Algorithm::BlockedPairwise => blocked::pairwise_blocked(d, tie, b),
+        Algorithm::BlockedTriplet => blocked::triplet_blocked(d, tie, b, b2),
+        Algorithm::BranchFreePairwise => branchfree::pairwise_branchfree(d, tie),
+        Algorithm::BranchFreeTriplet => branchfree::triplet_branchfree(d, tie),
+        Algorithm::OptimizedPairwise => optimized::pairwise_optimized(d, tie, b),
+        Algorithm::OptimizedTriplet => optimized::triplet_optimized(d, tie, b, b2),
+        Algorithm::ParallelPairwise => {
+            parallel_pairwise::pairwise_parallel(d, tie, b, cfg.threads)
+        }
+        Algorithm::ParallelTriplet => {
+            parallel_triplet::triplet_parallel(d, tie, b, b2, cfg.threads)
+        }
+        Algorithm::Hybrid => hybrid::hybrid_sequential(d, tie, b, b2),
+        Algorithm::ParallelHybrid => {
+            hybrid::hybrid_parallel(d, tie, b, b2, cfg.threads)
+        }
+    })
+}
+
+/// Compute and time; returns (C, seconds).
+pub fn compute_cohesion_timed(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<(Mat, f64)> {
+    let t0 = Instant::now();
+    let c = compute_cohesion(d, cfg)?;
+    Ok((c, t0.elapsed().as_secs_f64()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+
+    #[test]
+    fn all_algorithms_agree() {
+        let n = 40;
+        let d = distmat::random_tie_free(n, 404);
+        let reference = compute_cohesion(
+            &d,
+            &PaldConfig { algorithm: Algorithm::NaivePairwise, ..Default::default() },
+        )
+        .unwrap();
+        for alg in Algorithm::ALL {
+            let cfg = PaldConfig { algorithm: alg, block: 16, block2: 8, threads: 4, ..Default::default() };
+            let c = compute_cohesion(&d, &cfg).unwrap();
+            assert!(
+                c.allclose(&reference, 1e-4, 1e-5),
+                "{} maxdiff={}",
+                alg.name(),
+                c.max_abs_diff(&reference)
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let d = Mat::zeros(3, 4);
+        assert!(compute_cohesion(&d, &PaldConfig::default()).is_err());
+        let d = Mat::zeros(1, 1);
+        assert!(compute_cohesion(&d, &PaldConfig::default()).is_err());
+    }
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for alg in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(alg.name()), Some(alg));
+        }
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+}

@@ -1,0 +1,300 @@
+//! One-level cache blocking (paper Section 3.1/3.2, Figures 1 and 2).
+//!
+//! The blocked pairwise algorithm iterates pairs in `b x b` tiles so the
+//! distance rows of both blocks stay resident in cache across the tile
+//! (traffic `~4 n^3 / b`, Theorem 4.1); the blocked triplet algorithm
+//! iterates block triplets `X <= Y <= Z` so all touched U/C tiles stay
+//! resident (traffic `~n^3/b̂ + 2 n^3/b̃`, Theorem 4.2).
+//!
+//! These variants keep the *branching* inner loops of Algorithms 1/2 — the
+//! Figure 3 ladder measures blocking and branch avoidance separately.
+
+use crate::core::Mat;
+use crate::pald::{in_focus, normalize, TieMode};
+
+/// Default block size used when the caller passes `b = 0`.
+pub const DEFAULT_BLOCK: usize = 128;
+
+#[inline]
+pub(crate) fn resolve_block(b: usize, n: usize) -> usize {
+    let b = if b == 0 { DEFAULT_BLOCK } else { b };
+    b.min(n).max(1)
+}
+
+/// Blocked pairwise algorithm (branching inner loops).
+pub fn pairwise_blocked(d: &Mat, tie: TieMode, b: usize) -> Mat {
+    let n = d.rows();
+    let b = resolve_block(b, n);
+    let mut c = Mat::zeros(n, n);
+    let mut u_tile = vec![0u32; b * b];
+
+    let nb = n.div_ceil(b);
+    for xb in 0..nb {
+        let xs = xb * b;
+        let xe = (xs + b).min(n);
+        for yb in 0..=xb {
+            let ys = yb * b;
+            let ye = (ys + b).min(n);
+            // First pass over z: focus-size tile U[X, Y].
+            u_tile.iter_mut().for_each(|v| *v = 0);
+            for x in xs..xe {
+                let dx = d.row(x);
+                let y_lo = if xb == yb { x + 1 } else { ys };
+                for y in y_lo.max(ys)..ye {
+                    let dy = d.row(y);
+                    let dxy = dx[y];
+                    let mut cnt = 0u32;
+                    for z in 0..n {
+                        if in_focus(dx[z], dy[z], dxy, tie) {
+                            cnt += 1;
+                        }
+                    }
+                    u_tile[(x - xs) * b + (y - ys)] = cnt;
+                }
+            }
+            // Second pass over z: support awards using the resident tile.
+            for x in xs..xe {
+                let y_lo = if xb == yb { x + 1 } else { ys };
+                for y in y_lo.max(ys)..ye {
+                    let dxy = d[(x, y)];
+                    let w = 1.0 / u_tile[(x - xs) * b + (y - ys)] as f32;
+                    let (cx, cy) = c.two_rows_mut(x, y);
+                    let dx = d.row(x);
+                    let dy = d.row(y);
+                    for z in 0..n {
+                        let dxz = dx[z];
+                        let dyz = dy[z];
+                        if in_focus(dxz, dyz, dxy, tie) {
+                            match tie {
+                                TieMode::Strict => {
+                                    if dxz < dyz {
+                                        cx[z] += w;
+                                    } else {
+                                        cy[z] += w;
+                                    }
+                                }
+                                TieMode::Split => {
+                                    if dxz < dyz {
+                                        cx[z] += w;
+                                    } else if dyz < dxz {
+                                        cy[z] += w;
+                                    } else {
+                                        cx[z] += 0.5 * w;
+                                        cy[z] += 0.5 * w;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    normalize(&mut c);
+    c
+}
+
+/// Blocked triplet algorithm (branching inner loops).
+///
+/// `bhat` is the focus-pass block size (b̂), `btil` the cohesion-pass block
+/// size (b̃); pass 0 to use [`DEFAULT_BLOCK`].
+pub fn triplet_blocked(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat {
+    let n = d.rows();
+    let bh = resolve_block(bhat, n);
+    let bt = resolve_block(btil, n);
+
+    // ---- First pass: focus sizes over block triplets (block size b̂). ----
+    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
+    let nbh = n.div_ceil(bh);
+    for xb in 0..nbh {
+        for yb in xb..nbh {
+            for zb in yb..nbh {
+                triplet_focus_tile(d, &mut u, tie, xb * bh, yb * bh, zb * bh, bh, n);
+            }
+        }
+    }
+    for x in 0..n {
+        for y in (x + 1)..n {
+            u[(y, x)] = u[(x, y)];
+        }
+    }
+    let w = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 1.0 / u[(x, y)] });
+
+    // ---- Second pass: cohesion over block triplets (block size b̃). ----
+    let mut c = Mat::zeros(n, n);
+    let nbt = n.div_ceil(bt);
+    for xb in 0..nbt {
+        for yb in xb..nbt {
+            for zb in yb..nbt {
+                triplet_cohesion_tile(d, &w, &mut c, tie, xb * bt, yb * bt, zb * bt, bt, n);
+            }
+        }
+    }
+    super::add_diagonal_contributions(&mut c, &w);
+    normalize(&mut c);
+    c
+}
+
+/// Focus-size updates for one block triplet (shared with the task-parallel
+/// runtime, which is why block coordinates come in as raw starts).
+pub(crate) fn triplet_focus_tile(
+    d: &Mat,
+    u: &mut Mat,
+    tie: TieMode,
+    xs: usize,
+    ys: usize,
+    zs: usize,
+    b: usize,
+    n: usize,
+) {
+    let xe = (xs + b).min(n);
+    let ye = (ys + b).min(n);
+    let ze = (zs + b).min(n);
+    for x in xs..xe {
+        let y_lo = if ys == xs { x + 1 } else { ys };
+        for y in y_lo..ye {
+            let dxy = d[(x, y)];
+            let z_lo = if zs == ys { y + 1 } else { zs };
+            for z in z_lo..ze {
+                let dxz = d[(x, z)];
+                let dyz = d[(y, z)];
+                match tie {
+                    TieMode::Strict => {
+                        if dxy < dxz && dxy < dyz {
+                            u[(x, z)] += 1.0;
+                            u[(y, z)] += 1.0;
+                        } else if dxz < dyz {
+                            u[(x, y)] += 1.0;
+                            u[(y, z)] += 1.0;
+                        } else {
+                            u[(x, y)] += 1.0;
+                            u[(x, z)] += 1.0;
+                        }
+                    }
+                    TieMode::Split => {
+                        if dxz <= dxy || dyz <= dxy {
+                            u[(x, y)] += 1.0;
+                        }
+                        if dxy <= dxz || dyz <= dxz {
+                            u[(x, z)] += 1.0;
+                        }
+                        if dxy <= dyz || dxz <= dyz {
+                            u[(y, z)] += 1.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Cohesion updates for one block triplet.
+pub(crate) fn triplet_cohesion_tile(
+    d: &Mat,
+    w: &Mat,
+    c: &mut Mat,
+    tie: TieMode,
+    xs: usize,
+    ys: usize,
+    zs: usize,
+    b: usize,
+    n: usize,
+) {
+    let xe = (xs + b).min(n);
+    let ye = (ys + b).min(n);
+    let ze = (zs + b).min(n);
+    for x in xs..xe {
+        let y_lo = if ys == xs { x + 1 } else { ys };
+        for y in y_lo..ye {
+            let dxy = d[(x, y)];
+            let z_lo = if zs == ys { y + 1 } else { zs };
+            for z in z_lo..ze {
+                let dxz = d[(x, z)];
+                let dyz = d[(y, z)];
+                match tie {
+                    TieMode::Strict => {
+                        if dxy < dxz && dxy < dyz {
+                            c[(x, y)] += w[(x, z)];
+                            c[(y, x)] += w[(y, z)];
+                        } else if dxz < dyz {
+                            c[(x, z)] += w[(x, y)];
+                            c[(z, x)] += w[(y, z)];
+                        } else {
+                            c[(y, z)] += w[(x, y)];
+                            c[(z, y)] += w[(x, z)];
+                        }
+                    }
+                    TieMode::Split => {
+                        split3(c, x, y, z, dxz, dyz, dxy, w[(x, y)]);
+                        split3(c, x, z, y, dxy, dyz, dxz, w[(x, z)]);
+                        split3(c, y, z, x, dxy, dxz, dyz, w[(y, z)]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn split3(c: &mut Mat, a: usize, b: usize, t: usize, dat: f32, dbt: f32, dab: f32, w: f32) {
+    if dat <= dab || dbt <= dab {
+        if dat < dbt {
+            c[(a, t)] += w;
+        } else if dbt < dat {
+            c[(b, t)] += w;
+        } else {
+            c[(a, t)] += 0.5 * w;
+            c[(b, t)] += 0.5 * w;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::naive;
+
+    #[test]
+    fn blocked_pairwise_matches_naive_various_blocks() {
+        for &n in &[7usize, 16, 33, 64] {
+            let d = distmat::random_tie_free(n, n as u64 + 100);
+            let want = naive::pairwise(&d, TieMode::Strict);
+            for &b in &[1usize, 3, 8, 16, 200] {
+                let got = pairwise_blocked(&d, TieMode::Strict, b);
+                assert!(
+                    got.allclose(&want, 1e-5, 1e-6),
+                    "n={n} b={b} maxdiff={}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_triplet_matches_naive_various_blocks() {
+        for &n in &[6usize, 17, 32, 48] {
+            let d = distmat::random_tie_free(n, 3 * n as u64);
+            let want = naive::triplet(&d, TieMode::Strict);
+            for &(bh, bt) in &[(4usize, 4usize), (8, 16), (16, 8), (64, 64)] {
+                let got = triplet_blocked(&d, TieMode::Strict, bh, bt);
+                assert!(
+                    got.allclose(&want, 1e-5, 1e-6),
+                    "n={n} bh={bh} bt={bt} maxdiff={}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_split_mode_with_ties() {
+        let n = 20;
+        let d = distmat::random_tied(n, 77, 4);
+        let want = naive::pairwise(&d, TieMode::Split);
+        let got_p = pairwise_blocked(&d, TieMode::Split, 8);
+        let got_t = triplet_blocked(&d, TieMode::Split, 8, 4);
+        assert!(got_p.allclose(&want, 1e-5, 1e-6));
+        assert!(got_t.allclose(&want, 1e-5, 1e-6));
+    }
+}

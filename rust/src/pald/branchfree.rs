@@ -1,0 +1,447 @@
+//! Branch avoidance (paper Section 5): replace the data-dependent branches
+//! of the inner loops with {0, 1} float masks and unconditional FMAs.
+//!
+//! Pairwise masks (per pair (x, y), third point z):
+//! ```text
+//!   r = (d_xz < d_xy) | (d_yz < d_xy)      # z in local focus
+//!   s = (d_xz < d_yz)                      # z supports x
+//!   c_xz += r * s       * (1/u_xy)
+//!   c_yz += r * (1 - s) * (1/u_xy)
+//! ```
+//! Triplet masks (per triplet x < y < z):
+//! ```text
+//!   r = (d_xy < d_xz) & (d_xy < d_yz)      # (x, y) closest
+//!   s = (1 - r) * (d_xz < d_yz)            # (x, z) closest
+//!   t = (1 - r) * (1 - s)                  # (y, z) closest
+//! ```
+//! followed by six FMAs into C (or the u-counter equivalents).
+//!
+//! The cohesion rows `c_x[z]`/`c_y[z]` are contiguous in our row-major
+//! layout, so the z-inner loops auto-vectorize — this is the paper's
+//! "stride-1 column update" in its (column-major) convention, and the
+//! optimization that unlocks its 20x jump in Figure 3.
+//!
+//! These entry points are *unblocked* (the Fig. 3 "branch avoidance only"
+//! rung); [`crate::pald::optimized`] combines them with blocking.
+
+use crate::core::Mat;
+use crate::pald::{normalize, TieMode};
+
+/// Comparison result as a {0,1} float mask.  The `if`/`else` select form
+/// vectorizes (vcmpps + vblendps / mask moves); the seemingly equivalent
+/// `cond as u32 as f32` chain does NOT — LLVM leaves it scalar, costing
+/// ~2.7x on this AVX-512 core (§Perf iteration 3 in EXPERIMENTS.md).
+#[inline(always)]
+pub(crate) fn mask(cond: bool) -> f32 {
+    if cond {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+use mask as m;
+
+/// Branch-free focus-size count for one pair: `u_xy`.
+///
+/// Integer accumulation (the paper's "store U as an integer array"
+/// optimization) — the comparison masks are accumulated as `u32` without
+/// any int→float casts in the loop.
+#[inline(always)]
+pub(crate) fn count_focus_branchfree(dx: &[f32], dy: &[f32], dxy: f32, tie: TieMode) -> u32 {
+    let mut acc = 0u32;
+    match tie {
+        TieMode::Strict => {
+            for z in 0..dx.len() {
+                acc += ((dx[z] < dxy) | (dy[z] < dxy)) as u32;
+            }
+        }
+        TieMode::Split => {
+            for z in 0..dx.len() {
+                acc += ((dx[z] <= dxy) | (dy[z] <= dxy)) as u32;
+            }
+        }
+    }
+    acc
+}
+
+/// Branch-free cohesion update for one pair: two masked FMAs per z into the
+/// contiguous rows `cx` and `cy`.
+#[inline(always)]
+pub(crate) fn update_cohesion_branchfree(
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    w: f32,
+    cx: &mut [f32],
+    cy: &mut [f32],
+    tie: TieMode,
+) {
+    let n = dx.len();
+    match tie {
+        TieMode::Strict => {
+            for z in 0..n {
+                let dxz = dx[z];
+                let dyz = dy[z];
+                let r = m((dxz < dxy) | (dyz < dxy));
+                let s = m(dxz < dyz);
+                let rw = r * w;
+                cx[z] += rw * s;
+                cy[z] += rw * (1.0 - s);
+            }
+        }
+        TieMode::Split => {
+            for z in 0..n {
+                let dxz = dx[z];
+                let dyz = dy[z];
+                let r = m((dxz <= dxy) | (dyz <= dxy));
+                // Support share for x: 1 if closer, 0.5 on a tie.
+                let s = m(dxz < dyz) + 0.5 * (m(dxz == dyz));
+                let rw = r * w;
+                cx[z] += rw * s;
+                cy[z] += rw * (1.0 - s);
+            }
+        }
+    }
+}
+
+/// Pairwise with branch avoidance only (no blocking) — Figure 3's
+/// "branch avoid" rung (1.7x over naive on the paper's CPU).
+pub fn pairwise_branchfree(d: &Mat, tie: TieMode) -> Mat {
+    let n = d.rows();
+    let mut c = Mat::zeros(n, n);
+    for x in 0..(n - 1) {
+        for y in (x + 1)..n {
+            let dxy = d[(x, y)];
+            let dx = d.row(x);
+            let dy = d.row(y);
+            let u = count_focus_branchfree(dx, dy, dxy, tie);
+            let w = 1.0 / u as f32;
+            let (cx, cy) = c.two_rows_mut(x, y);
+            // Re-borrow rows (two_rows_mut holds the unique borrow of c).
+            let dx = d.row(x);
+            let dy = d.row(y);
+            update_cohesion_branchfree(dx, dy, dxy, w, cx, cy, tie);
+        }
+    }
+    normalize(&mut c);
+    c
+}
+
+/// Branch-free focus update for one triplet range, used by both the
+/// unblocked and blocked triplet variants.  Updates the upper-triangular
+/// `u` rows of x and y plus the scalar accumulator for `u_xy`.
+///
+/// Returns the `u_xy` increment accumulated over `z_lo..z_hi`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn triplet_focus_branchfree_row(
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    ux: &mut [f32],
+    uy: &mut [f32],
+    sa: &mut [f32], // mask scratch
+    ta: &mut [f32], // mask scratch
+    z_lo: usize,
+    z_hi: usize,
+    tie: TieMode,
+) -> f32 {
+    let mut uxy_acc = 0.0f32;
+    match tie {
+        TieMode::Strict => {
+            // Narrow vectorizable passes (see triplet_cohesion_branchfree_row).
+            // Identities: u_xy += s + t, u_xz += r + t = 1 - s,
+            // u_yz += r + s = 1 - t  (exactly one pair is closest).
+            let (dx, dy) = (&dx[z_lo..z_hi], &dy[z_lo..z_hi]);
+            let (ux, uy) = (&mut ux[z_lo..z_hi], &mut uy[z_lo..z_hi]);
+            let (sa, ta) = (&mut sa[..dx.len()], &mut ta[..dx.len()]);
+            for z in 0..dx.len() {
+                let dxz = dx[z];
+                let dyz = dy[z];
+                let r = m((dxy < dxz) & (dxy < dyz));
+                let sm = m(dxz < dyz);
+                sa[z] = (1.0 - r) * sm;
+                ta[z] = (1.0 - r) * (1.0 - sm);
+            }
+            for z in 0..dx.len() {
+                ux[z] += 1.0 - sa[z];
+            }
+            for z in 0..dx.len() {
+                uy[z] += 1.0 - ta[z];
+            }
+            for z in 0..dx.len() {
+                uxy_acc += sa[z] + ta[z];
+            }
+        }
+        TieMode::Split => {
+            for z in z_lo..z_hi {
+                let dxz = dx[z];
+                let dyz = dy[z];
+                uxy_acc += m((dxz <= dxy) | (dyz <= dxy));
+                ux[z] += m((dxy <= dxz) | (dyz <= dxz));
+                uy[z] += m((dxy <= dyz) | (dxz <= dyz));
+            }
+        }
+    }
+    uxy_acc
+}
+
+/// Branch-free cohesion update for one triplet range (six masked FMAs).
+///
+/// `cx`/`cy` are the cohesion rows of x and y (contiguous over z).  The
+/// stride-n column contributions `c[z][x]`, `c[z][y]` would each touch a
+/// separate cache line, so they are instead accumulated into rows of a
+/// *transposed* accumulator CT (`ctx`/`cty` = rows x and y of CT, unit
+/// stride), and the caller adds `CT^T` into C once at the end (O(n^2)).
+/// This is the paper's "blocking all three loops allowed unit-stride for
+/// all cohesion updates", pushed to its logical end — no scatter at all
+/// (§Perf iterations 2-4 in EXPERIMENTS.md).
+///
+/// `sa`/`ta` are caller-provided mask scratch rows (strict mode splits the
+/// fused loop into narrow passes so LLVM's alias checks succeed and the
+/// loops vectorize).
+///
+/// Returns the (c_xy, c_yx) increments.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+pub(crate) fn triplet_cohesion_branchfree_row(
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    wx: &[f32],
+    wy: &[f32],
+    wxy: f32,
+    cx: &mut [f32],
+    cy: &mut [f32],
+    ctx: &mut [f32], // row x of CT: ctx[z] accumulates c[z][x]
+    cty: &mut [f32], // row y of CT: cty[z] accumulates c[z][y]
+    sa: &mut [f32],  // mask scratch
+    ta: &mut [f32],  // mask scratch
+    z_lo: usize,
+    z_hi: usize,
+    tie: TieMode,
+) -> (f32, f32) {
+    let mut cxy = 0.0f32;
+    let mut cyx = 0.0f32;
+    match tie {
+        TieMode::Strict => {
+            // The fused form touches 10 distinct arrays, which defeats
+            // LLVM's runtime alias checks and leaves the loop scalar.
+            // Narrow passes (<= 4 arrays each) all vectorize (§Perf).
+            let (dx, dy) = (&dx[z_lo..z_hi], &dy[z_lo..z_hi]);
+            let (wx, wy) = (&wx[z_lo..z_hi], &wy[z_lo..z_hi]);
+            let (cx, cy) = (&mut cx[z_lo..z_hi], &mut cy[z_lo..z_hi]);
+            let (ctx, cty) = (&mut ctx[z_lo..z_hi], &mut cty[z_lo..z_hi]);
+            let (sa, ta) = (&mut sa[..dx.len()], &mut ta[..dx.len()]);
+            // Pass 1: s and t masks.
+            for z in 0..dx.len() {
+                let dxz = dx[z];
+                let dyz = dy[z];
+                let r = m((dxy < dxz) & (dxy < dyz));
+                let sm = m(dxz < dyz);
+                sa[z] = (1.0 - r) * sm; // s
+                ta[z] = (1.0 - r) * (1.0 - sm); // t
+            }
+            // Pass 2: reductions for c_xy / c_yx (r = 1 - s - t).
+            for z in 0..dx.len() {
+                let r = 1.0 - sa[z] - ta[z];
+                cxy += r * wx[z];
+                cyx += r * wy[z];
+            }
+            // Pass 3/4: row updates + transposed column accumulation.
+            for z in 0..dx.len() {
+                cx[z] += sa[z] * wxy;
+                ctx[z] += sa[z] * wy[z];
+            }
+            for z in 0..dx.len() {
+                cy[z] += ta[z] * wxy;
+                cty[z] += ta[z] * wx[z];
+            }
+        }
+        TieMode::Split => {
+            // Split mode evaluates each of the three pairs independently;
+            // masks generalize to half-weights on ties.
+            for z in z_lo..z_hi {
+                let dxz = dx[z];
+                let dyz = dy[z];
+                // pair (x, y), third z:
+                let f_xy = m((dxz <= dxy) | (dyz <= dxy));
+                let s_xy =
+                    m(dxz < dyz) + 0.5 * (m(dxz == dyz));
+                cx[z] += f_xy * s_xy * wxy;
+                cy[z] += f_xy * (1.0 - s_xy) * wxy;
+                // pair (x, z), third y:
+                let f_xz = m((dxy <= dxz) | (dyz <= dxz));
+                let s_xz =
+                    m(dxy < dyz) + 0.5 * (m(dxy == dyz));
+                // y supports x -> c[x][y]; y supports z -> c[z][y].
+                cxy += f_xz * s_xz * wx[z];
+                cty[z] += f_xz * (1.0 - s_xz) * wx[z];
+                // pair (y, z), third x:
+                let f_yz = m((dxy <= dyz) | (dxz <= dyz));
+                let s_yz =
+                    m(dxy < dxz) + 0.5 * (m(dxy == dxz));
+                // x supports y -> c[y][x]; x supports z -> c[z][x].
+                cyx += f_yz * s_yz * wy[z];
+                ctx[z] += f_yz * (1.0 - s_yz) * wy[z];
+            }
+        }
+    }
+    (cxy, cyx)
+}
+
+/// Triplet with branch avoidance only (no blocking) — Figure 3's triplet
+/// "branch avoid" rung (0.98x: the stride-n column updates hurt, exactly
+/// as the paper reports, until blocking shrinks their working set).
+pub fn triplet_branchfree(d: &Mat, tie: TieMode) -> Mat {
+    let n = d.rows();
+    // ---- First pass: focus sizes. ----
+    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
+    let mut fsa = vec![0.0f32; n];
+    let mut fta = vec![0.0f32; n];
+    for x in 0..n {
+        for y in (x + 1)..n {
+            let dxy = d[(x, y)];
+            // Split the mutable borrows of rows x and y of U.
+            let (ux, uy) = u.two_rows_mut(x, y);
+            let inc = triplet_focus_branchfree_row(
+                d.row(x),
+                d.row(y),
+                dxy,
+                ux,
+                uy,
+                &mut fsa,
+                &mut fta,
+                y + 1,
+                n,
+                tie,
+            );
+            ux[y] += inc;
+        }
+    }
+    for x in 0..n {
+        for y in (x + 1)..n {
+            u[(y, x)] = u[(x, y)];
+        }
+    }
+    let w = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 1.0 / u[(x, y)] });
+
+    // ---- Second pass: cohesion (CT = transposed column accumulator). ----
+    let mut c = Mat::zeros(n, n);
+    let mut ct = Mat::zeros(n, n);
+    let mut sa = vec![0.0f32; n];
+    let mut ta = vec![0.0f32; n];
+    for x in 0..n {
+        for y in (x + 1)..n {
+            let dxy = d[(x, y)];
+            let (cxy_inc, cyx_inc);
+            {
+                let (cx, cy) = c.two_rows_mut(x, y);
+                let (ctx, cty) = ct.two_rows_mut(x, y);
+                (cxy_inc, cyx_inc) = triplet_cohesion_branchfree_row(
+                    d.row(x),
+                    d.row(y),
+                    dxy,
+                    w.row(x),
+                    w.row(y),
+                    w[(x, y)],
+                    cx,
+                    cy,
+                    ctx,
+                    cty,
+                    &mut sa,
+                    &mut ta,
+                    y + 1,
+                    n,
+                    tie,
+                );
+            }
+            c[(x, y)] += cxy_inc;
+            c[(y, x)] += cyx_inc;
+        }
+    }
+    // Fold the transposed accumulator back: c[z][x] += ct[x][z].
+    add_transposed(&mut c, &ct);
+    super::add_diagonal_contributions(&mut c, &w);
+    normalize(&mut c);
+    c
+}
+
+/// `c += ct^T` — the O(n^2) fold that replaces all per-triplet scatters.
+pub(crate) fn add_transposed(c: &mut Mat, ct: &Mat) {
+    let n = c.rows();
+    for z in 0..n {
+        let crow = c.row_mut(z);
+        for x in 0..n {
+            crow[x] += ct[(x, z)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::naive;
+
+    #[test]
+    fn pairwise_branchfree_matches_naive() {
+        for &n in &[5usize, 16, 41, 64] {
+            let d = distmat::random_tie_free(n, n as u64);
+            let want = naive::pairwise(&d, TieMode::Strict);
+            let got = pairwise_branchfree(&d, TieMode::Strict);
+            assert!(
+                got.allclose(&want, 1e-5, 1e-6),
+                "n={n} maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn triplet_branchfree_matches_naive() {
+        for &n in &[5usize, 12, 33, 50] {
+            let d = distmat::random_tie_free(n, 2 * n as u64 + 5);
+            let want = naive::triplet(&d, TieMode::Strict);
+            let got = triplet_branchfree(&d, TieMode::Strict);
+            assert!(
+                got.allclose(&want, 1e-5, 1e-6),
+                "n={n} maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn split_mode_with_ties_matches_naive() {
+        let n = 18;
+        let d = distmat::random_tied(n, 42, 3);
+        let want = naive::pairwise(&d, TieMode::Split);
+        let got_p = pairwise_branchfree(&d, TieMode::Split);
+        assert!(
+            got_p.allclose(&want, 1e-5, 1e-6),
+            "pairwise maxdiff={}",
+            got_p.max_abs_diff(&want)
+        );
+        let got_t = triplet_branchfree(&d, TieMode::Split);
+        assert!(
+            got_t.allclose(&want, 1e-5, 1e-6),
+            "triplet maxdiff={}",
+            got_t.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn masked_focus_count_equals_branching_count() {
+        let n = 32;
+        let d = distmat::random_tie_free(n, 8);
+        let u_ref = naive::focus_sizes(&d, TieMode::Strict);
+        for x in 0..n {
+            for y in (x + 1)..n {
+                let u = count_focus_branchfree(d.row(x), d.row(y), d[(x, y)], TieMode::Strict);
+                assert_eq!(u as f32, u_ref[(x, y)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! PaLD algorithms: the paper's pairwise and triplet variants at every rung
+//! of its optimization ladder (Section 5, Figure 3).
+//!
+//! | rung | pairwise | triplet |
+//! |------|----------|---------|
+//! | naive (Algorithms 1/2, branching)      | [`naive::pairwise`]            | [`naive::triplet`] |
+//! | + one-level cache blocking             | [`blocked::pairwise_blocked`]  | [`blocked::triplet_blocked`] |
+//! | + branch avoidance (masked FMAs)       | [`branchfree::pairwise_branchfree`] | [`branchfree::triplet_branchfree`] |
+//! | + blocking + branch-free + integer U + precomputed reciprocals | [`optimized::pairwise_optimized`] | [`optimized::triplet_optimized`] |
+//! | shared-memory parallel                 | [`parallel_pairwise::pairwise_parallel`] | [`parallel_triplet::triplet_parallel`] |
+//!
+//! All variants produce the same cohesion matrix (exactly, in support
+//! units, for `TieMode::Split`; up to f32 summation order otherwise) and
+//! are cross-checked by the property tests in `rust/tests/`.
+
+pub mod api;
+pub mod blocked;
+pub mod hybrid;
+pub mod branchfree;
+pub mod naive;
+pub mod ops;
+pub mod optimized;
+pub mod parallel_pairwise;
+pub mod parallel_triplet;
+
+pub use api::{compute_cohesion, compute_cohesion_timed, Algorithm, Backend, PaldConfig};
+
+use crate::core::Mat;
+
+/// Distance-tie handling (paper Section 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TieMode {
+    /// Optimized-code semantics: strict `<` comparisons everywhere; on a
+    /// supporter tie the `else` branch awards the second point of the pair.
+    /// Only meaningful on tie-free inputs (ties are measure-zero for
+    /// continuous distances — the paper's argument for eliding the checks).
+    #[default]
+    Strict,
+    /// Theoretical semantics (Berenhaut et al.): focus membership via `<=`,
+    /// distance ties split support 0.5/0.5.  Symmetric and exact; ~2x the
+    /// comparisons.
+    Split,
+}
+
+/// Is `z` inside the local focus of the pair `(x, y)` with distance `dxy`?
+#[inline(always)]
+pub(crate) fn in_focus(dxz: f32, dyz: f32, dxy: f32, tie: TieMode) -> bool {
+    match tie {
+        TieMode::Strict => dxz < dxy || dyz < dxy,
+        TieMode::Split => dxz <= dxy || dyz <= dxy,
+    }
+}
+
+/// Scale the accumulated support matrix by `1/(n-1)` (Eq. 3.3).
+pub(crate) fn normalize(c: &mut Mat) {
+    let n = c.rows();
+    debug_assert!(n >= 2);
+    c.scale(1.0 / (n as f32 - 1.0));
+}
+
+/// Add the triplet algorithms' missing z ∈ {x, y} contributions.
+///
+/// Algorithm 2 iterates distinct triplets x < y < z only; the pairwise
+/// z-loop additionally visits z = x (always in focus, supports x) and
+/// z = y (always in focus, supports y).  Those land on the diagonal:
+/// `c_xx += 1/u_xy` and `c_yy += 1/u_xy` for every pair.  `w` is the
+/// reciprocal focus-size matrix (0 on the diagonal).
+pub(crate) fn add_diagonal_contributions(c: &mut Mat, w: &Mat) {
+    let n = c.rows();
+    for x in 0..n {
+        let wrow = w.row(x);
+        let mut acc = 0.0f32;
+        for y in 0..n {
+            acc += wrow[y];
+        }
+        c[(x, x)] += acc;
+    }
+}

@@ -1,0 +1,329 @@
+//! Naive sequential PaLD: Algorithms 1 and 2 of the paper, verbatim —
+//! branching inner loops, no blocking, f32 focus counters.
+//!
+//! These are the Figure 3 baselines (speedup = 1) and the semantic
+//! reference every optimized variant is tested against.
+
+use crate::core::Mat;
+use crate::pald::{in_focus, normalize, TieMode};
+
+/// Algorithm 1 (Pairwise Sequential): for every pair (x, y), one pass over
+/// all z to size the local focus, a second pass to award support.
+pub fn pairwise(d: &Mat, tie: TieMode) -> Mat {
+    let n = d.rows();
+    assert_eq!(n, d.cols());
+    let mut c = Mat::zeros(n, n);
+    for x in 0..(n - 1) {
+        for y in (x + 1)..n {
+            let dxy = d[(x, y)];
+            // First pass: u_xy = |U_xy|.
+            let mut u = 0u32;
+            for z in 0..n {
+                if in_focus(d[(x, z)], d[(y, z)], dxy, tie) {
+                    u += 1;
+                }
+            }
+            let w = 1.0 / u as f32;
+            // Second pass: award support within the focus.
+            for z in 0..n {
+                let dxz = d[(x, z)];
+                let dyz = d[(y, z)];
+                if in_focus(dxz, dyz, dxy, tie) {
+                    match tie {
+                        TieMode::Strict => {
+                            if dxz < dyz {
+                                c[(x, z)] += w;
+                            } else {
+                                c[(y, z)] += w;
+                            }
+                        }
+                        TieMode::Split => {
+                            if dxz < dyz {
+                                c[(x, z)] += w;
+                            } else if dyz < dxz {
+                                c[(y, z)] += w;
+                            } else {
+                                c[(x, z)] += 0.5 * w;
+                                c[(y, z)] += 0.5 * w;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    normalize(&mut c);
+    c
+}
+
+/// Local-focus size matrix U (both triplet passes need it in full).
+///
+/// U is symmetric; the diagonal is left 0 (a point has no focus with
+/// itself).  Strict mode counts `<`, split mode counts `<=`, matching
+/// [`in_focus`].
+pub fn focus_sizes(d: &Mat, tie: TieMode) -> Mat {
+    let n = d.rows();
+    let mut u = Mat::zeros(n, n);
+    for x in 0..(n - 1) {
+        for y in (x + 1)..n {
+            let dxy = d[(x, y)];
+            let mut cnt = 0u32;
+            for z in 0..n {
+                if in_focus(d[(x, z)], d[(y, z)], dxy, tie) {
+                    cnt += 1;
+                }
+            }
+            u[(x, y)] = cnt as f32;
+            u[(y, x)] = cnt as f32;
+        }
+    }
+    u
+}
+
+/// Algorithm 2 (Triplet Sequential): every unordered triplet x < y < z is
+/// visited once; the closest pair inside the triplet determines which two
+/// focus counters (first pass) and which two cohesion entries (second
+/// pass) it touches.
+///
+/// In strict mode this is the paper's pseudocode exactly (the `else if`
+/// chain mis-attributes ties, which the paper accepts — "pairwise is the
+/// better variant if ties must be handled correctly").  In split mode each
+/// of the three pairs is evaluated independently with `<=` semantics and
+/// 0.5/0.5 tie splitting, which is exact.
+pub fn triplet(d: &Mat, tie: TieMode) -> Mat {
+    let n = d.rows();
+    assert_eq!(n, d.cols());
+    // U initialized to 2 off-diagonal: x and y always belong to U_xy.
+    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
+
+    // First pass: focus sizes from distinct triplets.
+    for x in 0..n {
+        for y in (x + 1)..n {
+            let dxy = d[(x, y)];
+            for z in (y + 1)..n {
+                let dxz = d[(x, z)];
+                let dyz = d[(y, z)];
+                match tie {
+                    TieMode::Strict => {
+                        if dxy < dxz && dxy < dyz {
+                            // (x, y) closest: z outside U_xy; y in U_xz, x in U_yz.
+                            u[(x, z)] += 1.0;
+                            u[(y, z)] += 1.0;
+                        } else if dxz < dyz {
+                            // (x, z) closest.
+                            u[(x, y)] += 1.0;
+                            u[(y, z)] += 1.0;
+                        } else {
+                            // (y, z) closest.
+                            u[(x, y)] += 1.0;
+                            u[(x, z)] += 1.0;
+                        }
+                    }
+                    TieMode::Split => {
+                        // Evaluate each pair's focus membership independently.
+                        if dxz <= dxy || dyz <= dxy {
+                            u[(x, y)] += 1.0;
+                        }
+                        if dxy <= dxz || dyz <= dxz {
+                            u[(x, z)] += 1.0;
+                        }
+                        if dxy <= dyz || dxz <= dyz {
+                            u[(y, z)] += 1.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Mirror to the lower triangle so reciprocal lookups are unconditional.
+    for x in 0..n {
+        for y in (x + 1)..n {
+            u[(y, x)] = u[(x, y)];
+        }
+    }
+
+    let w = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 1.0 / u[(x, y)] });
+
+    // Second pass: cohesion updates from distinct triplets.
+    let mut c = Mat::zeros(n, n);
+    for x in 0..n {
+        for y in (x + 1)..n {
+            let dxy = d[(x, y)];
+            for z in (y + 1)..n {
+                let dxz = d[(x, z)];
+                let dyz = d[(y, z)];
+                match tie {
+                    TieMode::Strict => {
+                        if dxy < dxz && dxy < dyz {
+                            // (x, y) closest: y supports x in U_xz, x supports y in U_yz.
+                            c[(x, y)] += w[(x, z)];
+                            c[(y, x)] += w[(y, z)];
+                        } else if dxz < dyz {
+                            // (x, z) closest.
+                            c[(x, z)] += w[(x, y)];
+                            c[(z, x)] += w[(y, z)];
+                        } else {
+                            // (y, z) closest.
+                            c[(y, z)] += w[(x, y)];
+                            c[(z, y)] += w[(x, z)];
+                        }
+                    }
+                    TieMode::Split => {
+                        // Pair (x, y), third point z.
+                        split_update(&mut c, x, y, z, dxz, dyz, dxy, w[(x, y)]);
+                        // Pair (x, z), third point y.
+                        split_update(&mut c, x, z, y, dxy, dyz, dxz, w[(x, z)]);
+                        // Pair (y, z), third point x.
+                        split_update(&mut c, y, z, x, dxy, dxz, dyz, w[(y, z)]);
+                    }
+                }
+            }
+        }
+    }
+    // z ∈ {x, y} contributions (diagonal), which distinct-triplet
+    // iteration misses — see `add_diagonal_contributions`.
+    super::add_diagonal_contributions(&mut c, &w);
+    normalize(&mut c);
+    c
+}
+
+/// Split-mode support award for pair (a, b) and third point t, where
+/// `dat`/`dbt` are the distances from t to a/b and `dab` the pair distance.
+#[inline(always)]
+fn split_update(c: &mut Mat, a: usize, b: usize, t: usize, dat: f32, dbt: f32, dab: f32, w: f32) {
+    if dat <= dab || dbt <= dab {
+        if dat < dbt {
+            c[(a, t)] += w;
+        } else if dbt < dat {
+            c[(b, t)] += w;
+        } else {
+            c[(a, t)] += 0.5 * w;
+            c[(b, t)] += 0.5 * w;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+
+    /// Tiny hand-checkable instance: 3 points on a line at 0, 1, 3.
+    /// d01=1, d02=3, d12=2.
+    #[test]
+    fn three_points_by_hand() {
+        let d = Mat::from_vec(3, 3, vec![0.0, 1.0, 3.0, 1.0, 0.0, 2.0, 3.0, 2.0, 0.0]);
+        // Pair (0,1): dxy=1. focus: z=0 (d00=0<1 ✓), z=1 (d11=0<1 ✓), z=2
+        // (d02=3<1? d12=2<1? ✗) → u01=2.
+        // Pair (0,2): dxy=3. z=0 ✓, z=1 (d01=1<3 ✓), z=2 ✓ → u02=3.
+        // Pair (1,2): dxy=2. z=0 (d10=1<2 ✓), z=1 ✓, z=2 ✓ → u12=3.
+        let u = focus_sizes(&d, TieMode::Strict);
+        assert_eq!(u[(0, 1)], 2.0);
+        assert_eq!(u[(0, 2)], 3.0);
+        assert_eq!(u[(1, 2)], 3.0);
+
+        // Support (before the 1/(n-1) = 1/2 normalization):
+        // pair(0,1) u=2: z=0 → c00 += .5 ; z=1 → c11 += .5
+        // pair(0,2) u=3: z=0 → c00 += 1/3; z=1: d01=1 < d21=2 → c01 += 1/3;
+        //                z=2 → c22 += 1/3
+        // pair(1,2) u=3: z=0: d10=1 < d20=3 → c10 += 1/3; z=1 → c11 += 1/3;
+        //                z=2 → c22 += 1/3
+        let c = pairwise(&d, TieMode::Strict);
+        let h = 0.5f32;
+        assert!((c[(0, 0)] - h * (0.5 + 1.0 / 3.0)).abs() < 1e-6);
+        assert!((c[(0, 1)] - h * (1.0 / 3.0)).abs() < 1e-6);
+        assert!((c[(1, 0)] - h * (1.0 / 3.0)).abs() < 1e-6);
+        assert!((c[(1, 1)] - h * (0.5 + 1.0 / 3.0)).abs() < 1e-6);
+        assert!((c[(2, 2)] - h * (2.0 / 3.0)).abs() < 1e-6);
+        assert_eq!(c[(0, 2)], 0.0);
+        assert_eq!(c[(2, 0)], 0.0);
+    }
+
+    #[test]
+    fn pairwise_total_mass_is_half_n() {
+        for &n in &[3usize, 8, 17, 33] {
+            let d = distmat::random_tie_free(n, n as u64);
+            let c = pairwise(&d, TieMode::Strict);
+            let total = c.sum();
+            assert!(
+                (total - n as f64 / 2.0).abs() < 1e-3,
+                "n={n} total={total}"
+            );
+        }
+    }
+
+    #[test]
+    fn triplet_matches_pairwise_tie_free() {
+        for &n in &[4usize, 9, 16, 40] {
+            let d = distmat::random_tie_free(n, 7 * n as u64 + 1);
+            let cp = pairwise(&d, TieMode::Strict);
+            let ct = triplet(&d, TieMode::Strict);
+            assert!(
+                cp.allclose(&ct, 1e-5, 1e-6),
+                "n={n} maxdiff={}",
+                cp.max_abs_diff(&ct)
+            );
+        }
+    }
+
+    #[test]
+    fn triplet_matches_pairwise_split_mode_with_ties() {
+        for &n in &[4usize, 10, 24] {
+            let d = distmat::random_tied(n, n as u64, 4);
+            let cp = pairwise(&d, TieMode::Split);
+            let ct = triplet(&d, TieMode::Split);
+            assert!(
+                cp.allclose(&ct, 1e-5, 1e-6),
+                "n={n} maxdiff={}",
+                cp.max_abs_diff(&ct)
+            );
+        }
+    }
+
+    #[test]
+    fn split_mode_total_mass_with_ties() {
+        let n = 20;
+        let d = distmat::random_tied(n, 3, 3);
+        let c = pairwise(&d, TieMode::Split);
+        assert!((c.sum() - n as f64 / 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn focus_sizes_bounds() {
+        let n = 30;
+        let d = distmat::random_tie_free(n, 5);
+        let u = focus_sizes(&d, TieMode::Strict);
+        for x in 0..n {
+            for y in 0..n {
+                if x != y {
+                    assert!(u[(x, y)] >= 2.0 && u[(x, y)] <= n as f32);
+                    assert_eq!(u[(x, y)], u[(y, x)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_invariance() {
+        let n = 16;
+        let d = distmat::random_tie_free(n, 9);
+        let mut d2 = d.clone();
+        d2.scale(123.456);
+        let c1 = pairwise(&d, TieMode::Strict);
+        let c2 = pairwise(&d2, TieMode::Strict);
+        assert!(c1.allclose(&c2, 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn permutation_equivariance() {
+        let n = 12;
+        let d = distmat::random_tie_free(n, 13);
+        let mut rng = crate::data::prng::Rng::new(99);
+        let p = rng.permutation(n);
+        let dp = Mat::from_fn(n, n, |i, j| d[(p[i], p[j])]);
+        let c = pairwise(&d, TieMode::Strict);
+        let cp = pairwise(&dp, TieMode::Strict);
+        let want = Mat::from_fn(n, n, |i, j| c[(p[i], p[j])]);
+        assert!(cp.allclose(&want, 1e-5, 1e-6));
+    }
+}

@@ -1,0 +1,300 @@
+//! Fully optimized sequential variants (paper Section 5's final rung):
+//! cache blocking + branch avoidance + integer focus counters + precomputed
+//! reciprocals + tie elision (in `TieMode::Strict`).
+//!
+//! These are the sequential baselines from which the paper derives its
+//! parallel algorithms and against which parallel speedups are reported.
+
+use crate::core::Mat;
+use crate::pald::blocked::resolve_block;
+use crate::pald::branchfree::{
+    count_focus_branchfree, triplet_cohesion_branchfree_row, triplet_focus_branchfree_row,
+    update_cohesion_branchfree,
+};
+use crate::pald::{normalize, TieMode};
+
+/// Optimized pairwise: block-ordered pair iteration (D rows of both blocks
+/// stay cache resident), branch-free inner kernels, integer U tile,
+/// reciprocals computed once per tile.
+pub fn pairwise_optimized(d: &Mat, tie: TieMode, b: usize) -> Mat {
+    let n = d.rows();
+    let b = resolve_block(b, n);
+    let mut c = Mat::zeros(n, n);
+    let mut w_tile = vec![0.0f32; b * b];
+
+    let nb = n.div_ceil(b);
+    for xb in 0..nb {
+        let xs = xb * b;
+        let xe = (xs + b).min(n);
+        for yb in 0..=xb {
+            let ys = yb * b;
+            let ye = (ys + b).min(n);
+            // Pass 1: integer focus counts for the tile, then reciprocals
+            // (one int->float cast per pair, outside the z loop).
+            for x in xs..xe {
+                let dx = d.row(x);
+                let y_lo = if xb == yb { x + 1 } else { ys };
+                for y in y_lo.max(ys)..ye {
+                    let u = count_focus_branchfree(dx, d.row(y), dx[y], tie);
+                    w_tile[(x - xs) * b + (y - ys)] = 1.0 / u as f32;
+                }
+            }
+            // Pass 2: branch-free support awards.
+            for x in xs..xe {
+                let y_lo = if xb == yb { x + 1 } else { ys };
+                for y in y_lo.max(ys)..ye {
+                    let dxy = d[(x, y)];
+                    let w = w_tile[(x - xs) * b + (y - ys)];
+                    let (cx, cy) = c.two_rows_mut(x, y);
+                    update_cohesion_branchfree(d.row(x), d.row(y), dxy, w, cx, cy, tie);
+                }
+            }
+        }
+    }
+    normalize(&mut c);
+    c
+}
+
+/// Focus-size matrix via the optimized (blocked, branch-free) first pass of
+/// the triplet algorithm.  Exposed for the parallel runtime and the
+/// coordinator, which both need U separately.
+pub fn focus_sizes_optimized(d: &Mat, tie: TieMode, bhat: usize) -> Mat {
+    let n = d.rows();
+    let bh = resolve_block(bhat, n);
+    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
+    let mut fsa = vec![0.0f32; bh.min(n)];
+    let mut fta = vec![0.0f32; bh.min(n)];
+    let nbh = n.div_ceil(bh);
+    for xb in 0..nbh {
+        let xs = xb * bh;
+        let xe = (xs + bh).min(n);
+        for yb in xb..nbh {
+            let ys = yb * bh;
+            let ye = (ys + bh).min(n);
+            for zb in yb..nbh {
+                let zs = zb * bh;
+                let ze = (zs + bh).min(n);
+                for x in xs..xe {
+                    let y_lo = if ys == xs { x + 1 } else { ys };
+                    for y in y_lo..ye {
+                        let dxy = d[(x, y)];
+                        let z_lo = if zs == ys { y + 1 } else { zs };
+                        let (ux, uy) = u.two_rows_mut(x, y);
+                        let inc = triplet_focus_branchfree_row(
+                            d.row(x),
+                            d.row(y),
+                            dxy,
+                            ux,
+                            uy,
+                            &mut fsa,
+                            &mut fta,
+                            z_lo.max(zs),
+                            ze,
+                            tie,
+                        );
+                        ux[y] += inc;
+                    }
+                }
+            }
+        }
+    }
+    for x in 0..n {
+        for y in (x + 1)..n {
+            u[(y, x)] = u[(x, y)];
+        }
+    }
+    u
+}
+
+/// Reciprocal pair-weight matrix W = 1/U off-diagonal, 0 on the diagonal.
+pub fn reciprocal_weights(u: &Mat) -> Mat {
+    let n = u.rows();
+    Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 1.0 / u[(x, y)] })
+}
+
+/// Optimized triplet: blocked block-triplet iteration, branch-free masked
+/// FMAs, two independently tunable block sizes (b̂ for the focus pass, b̃
+/// for the cohesion pass — Figure 4 bottom).
+pub fn triplet_optimized(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat {
+    let n = d.rows();
+    let u = focus_sizes_optimized(d, tie, bhat);
+    let w = reciprocal_weights(&u);
+    let mut c = Mat::zeros(n, n);
+    let mut ct = Mat::zeros(n, n);
+    let bt = resolve_block(btil, n);
+    let nbt = n.div_ceil(bt);
+    for xb in 0..nbt {
+        for yb in xb..nbt {
+            for zb in yb..nbt {
+                triplet_cohesion_tile_optimized(
+                    d, &w, &mut c, &mut ct, tie, xb * bt, yb * bt, zb * bt, bt, n,
+                );
+            }
+        }
+    }
+    crate::pald::branchfree::add_transposed(&mut c, &ct);
+    super::add_diagonal_contributions(&mut c, &w);
+    normalize(&mut c);
+    c
+}
+
+/// Branch-free cohesion update for one block triplet, sequential entry
+/// point (takes the exclusive borrows and forwards to the raw kernel).
+/// `ct` is the transposed column accumulator (fold with `add_transposed`
+/// after the last tile).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn triplet_cohesion_tile_optimized(
+    d: &Mat,
+    w: &Mat,
+    c: &mut Mat,
+    ct: &mut Mat,
+    tie: TieMode,
+    xs: usize,
+    ys: usize,
+    zs: usize,
+    b: usize,
+    n: usize,
+) {
+    debug_assert_eq!(c.cols(), n);
+    // SAFETY: exclusive &mut borrows of c and ct.
+    unsafe {
+        triplet_cohesion_tile_raw(d, w, c.as_mut_ptr(), ct.as_mut_ptr(), tie, xs, ys, zs, b, n);
+    }
+}
+
+/// Branch-free cohesion update for one block triplet through a raw C
+/// pointer.  Used by the task-parallel runtime, where the executor holds
+/// the locks of all six C tiles the call writes.
+///
+/// # Safety
+/// `c_ptr` must point at an `n x n` row-major matrix, and no other thread
+/// may concurrently access the six tiles (xb,yb), (yb,xb), (xb,zb),
+/// (zb,xb), (yb,zb), (zb,yb) this call writes.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn triplet_cohesion_tile_raw(
+    d: &Mat,
+    w: &Mat,
+    c_ptr: *mut f32,
+    ct_ptr: *mut f32,
+    tie: TieMode,
+    xs: usize,
+    ys: usize,
+    zs: usize,
+    b: usize,
+    n: usize,
+) {
+    let xe = (xs + b).min(n);
+    let ye = (ys + b).min(n);
+    let ze = (zs + b).min(n);
+    // Per-tile mask scratch (see triplet_cohesion_branchfree_row).
+    let mut sa = vec![0.0f32; b.min(n)];
+    let mut ta = vec![0.0f32; b.min(n)];
+    for x in xs..xe {
+        let y_lo = if ys == xs { x + 1 } else { ys };
+        for y in y_lo..ye {
+            let dxy = d[(x, y)];
+            let z_lo = if zs == ys { y + 1 } else { zs };
+            if z_lo >= ze {
+                continue;
+            }
+            // Rows x and y of C and CT as raw slices.  CT rows x/y carry
+            // the transposed contributions for C rows z in (z_lo, ze) —
+            // all writes stay within this task's locked tiles.
+            let cx = unsafe { std::slice::from_raw_parts_mut(c_ptr.add(x * n), n) };
+            let cy = unsafe { std::slice::from_raw_parts_mut(c_ptr.add(y * n), n) };
+            let ctx = unsafe { std::slice::from_raw_parts_mut(ct_ptr.add(x * n), n) };
+            let cty = unsafe { std::slice::from_raw_parts_mut(ct_ptr.add(y * n), n) };
+            let (cxy_inc, cyx_inc) = triplet_cohesion_branchfree_row(
+                d.row(x),
+                d.row(y),
+                dxy,
+                w.row(x),
+                w.row(y),
+                w[(x, y)],
+                cx,
+                cy,
+                ctx,
+                cty,
+                &mut sa,
+                &mut ta,
+                z_lo,
+                ze,
+                tie,
+            );
+            unsafe {
+                *c_ptr.add(x * n + y) += cxy_inc;
+                *c_ptr.add(y * n + x) += cyx_inc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::naive;
+
+    #[test]
+    fn optimized_pairwise_matches_naive() {
+        for &(n, b) in &[(16usize, 4usize), (33, 8), (64, 16), (64, 64), (50, 7)] {
+            let d = distmat::random_tie_free(n, (n + b) as u64);
+            let want = naive::pairwise(&d, TieMode::Strict);
+            let got = pairwise_optimized(&d, TieMode::Strict, b);
+            assert!(
+                got.allclose(&want, 1e-5, 1e-6),
+                "n={n} b={b} maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn optimized_triplet_matches_naive() {
+        for &(n, bh, bt) in &[(16usize, 4usize, 8usize), (33, 8, 8), (48, 16, 4), (40, 64, 64)] {
+            let d = distmat::random_tie_free(n, (n * bh + bt) as u64);
+            let want = naive::triplet(&d, TieMode::Strict);
+            let got = triplet_optimized(&d, TieMode::Strict, bh, bt);
+            assert!(
+                got.allclose(&want, 1e-5, 1e-6),
+                "n={n} bh={bh} bt={bt} maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn optimized_split_mode_matches_naive_with_ties() {
+        let n = 22;
+        let d = distmat::random_tied(n, 5, 4);
+        let want = naive::pairwise(&d, TieMode::Split);
+        let gp = pairwise_optimized(&d, TieMode::Split, 8);
+        let gt = triplet_optimized(&d, TieMode::Split, 8, 8);
+        assert!(gp.allclose(&want, 1e-5, 1e-6), "pw {}", gp.max_abs_diff(&want));
+        assert!(gt.allclose(&want, 1e-5, 1e-6), "tr {}", gt.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn focus_sizes_optimized_matches_naive() {
+        let n = 40;
+        let d = distmat::random_tie_free(n, 19);
+        let want = naive::focus_sizes(&d, TieMode::Strict);
+        let got = focus_sizes_optimized(&d, TieMode::Strict, 8);
+        for x in 0..n {
+            for y in 0..n {
+                if x != y {
+                    assert_eq!(got[(x, y)], want[(x, y)], "at ({x},{y})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_and_triplet_agree_large() {
+        let n = 96;
+        let d = distmat::random_tie_free(n, 123);
+        let gp = pairwise_optimized(&d, TieMode::Strict, 32);
+        let gt = triplet_optimized(&d, TieMode::Strict, 32, 16);
+        assert!(gp.allclose(&gt, 1e-4, 1e-5), "maxdiff={}", gp.max_abs_diff(&gt));
+    }
+}

@@ -1,0 +1,172 @@
+//! Shared-memory parallel pairwise algorithm (paper Section 6, Figure 5).
+//!
+//! Structure per block pair (X, Y), exactly as the OpenMP code:
+//!
+//! 1. focus pass   — the z loop is split across threads; every thread
+//!    counts into a private U[X,Y] tile and the tiles are sum-reduced
+//!    (`reduction(+: U[X,Y])`);
+//! 2. reciprocal   — one parallel sweep turns counts into weights;
+//! 3. cohesion pass — the z loop is split across threads *without* write
+//!    conflicts: updates for third point z land in column z of C
+//!    (`c_xz`, `c_yz`), and each thread owns a contiguous z range
+//!    (Figure 6's column partition).  In our row-major layout "column z"
+//!    is index `[x][z]`, so threads write disjoint index sets of every
+//!    row — expressed through a `DisjointWriter`.
+
+use crate::core::Mat;
+use crate::pald::blocked::resolve_block;
+use crate::pald::branchfree::mask as m;
+use crate::pald::{normalize, TieMode};
+use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
+use crate::parallel::reduce::parallel_for_reduce_u32;
+
+/// Parallel pairwise PaLD on `threads` threads with block size `b`.
+pub fn pairwise_parallel(d: &Mat, tie: TieMode, b: usize, threads: usize) -> Mat {
+    let n = d.rows();
+    let b = resolve_block(b, n);
+    let threads = threads.max(1);
+    if threads == 1 {
+        // Degenerate to the optimized sequential kernel (what OpenMP with
+        // OMP_NUM_THREADS=1 effectively runs): the parallel inner loops
+        // trade vectorizability for conflict-freedom, which only pays off
+        // with real concurrency.
+        return crate::pald::optimized::pairwise_optimized(d, tie, b);
+    }
+    let mut c = Mat::zeros(n, n);
+    let nb = n.div_ceil(b);
+
+    for xb in 0..nb {
+        let xs = xb * b;
+        let xe = (xs + b).min(n);
+        for yb in 0..=xb {
+            let ys = yb * b;
+            let ye = (ys + b).min(n);
+
+            // ---- Pass 1: U[X,Y] with z-loop parallelism + reduction. ----
+            let u_tile = parallel_for_reduce_u32(
+                n,
+                b * b,
+                threads,
+                Schedule::Static,
+                |zrange, acc| {
+                    for x in xs..xe {
+                        let dx = d.row(x);
+                        let y_lo = if xb == yb { x + 1 } else { ys };
+                        for y in y_lo.max(ys)..ye {
+                            let dy = d.row(y);
+                            let dxy = dx[y];
+                            let mut cnt = 0u32;
+                            match tie {
+                                TieMode::Strict => {
+                                    for z in zrange.clone() {
+                                        cnt += ((dx[z] < dxy) | (dy[z] < dxy)) as u32;
+                                    }
+                                }
+                                TieMode::Split => {
+                                    for z in zrange.clone() {
+                                        cnt += ((dx[z] <= dxy) | (dy[z] <= dxy)) as u32;
+                                    }
+                                }
+                            }
+                            acc[(x - xs) * b + (y - ys)] += cnt;
+                        }
+                    }
+                },
+            );
+
+            // ---- Reciprocals (cheap; sequential over the b^2 tile). ----
+            let w_tile: Vec<f32> =
+                u_tile.iter().map(|&u| if u == 0 { 0.0 } else { 1.0 / u as f32 }).collect();
+
+            // ---- Pass 2: conflict-free column-partitioned cohesion. ----
+            let writer = DisjointWriter(c.as_mut_ptr());
+            let ncols = c.cols();
+            parallel_for_ranges(n, threads, Schedule::Static, |_, zrange| {
+                for x in xs..xe {
+                    let dx = d.row(x);
+                    let y_lo = if xb == yb { x + 1 } else { ys };
+                    for y in y_lo.max(ys)..ye {
+                        let dy = d.row(y);
+                        let dxy = dx[y];
+                        let w = w_tile[(x - xs) * b + (y - ys)];
+                        for z in zrange.clone() {
+                            let dxz = dx[z];
+                            let dyz = dy[z];
+                            let (r, s) = match tie {
+                                TieMode::Strict => (
+                                    m((dxz < dxy) | (dyz < dxy)),
+                                    m(dxz < dyz),
+                                ),
+                                TieMode::Split => (
+                                    m((dxz <= dxy) | (dyz <= dxy)),
+                                    m(dxz < dyz)
+                                        + 0.5 * (m(dxz == dyz)),
+                                ),
+                            };
+                            let rw = r * w;
+                            // SAFETY: this thread exclusively owns column
+                            // range `zrange` of every row of C for the
+                            // duration of the parallel region.
+                            unsafe {
+                                writer.add_at(x * ncols + z, rw * s);
+                                writer.add_at(y * ncols + z, rw * (1.0 - s));
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    }
+    normalize(&mut c);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::naive;
+
+    #[test]
+    fn parallel_matches_naive_across_thread_counts() {
+        let n = 64;
+        let d = distmat::random_tie_free(n, 21);
+        let want = naive::pairwise(&d, TieMode::Strict);
+        for &p in &[1usize, 2, 4, 8] {
+            let got = pairwise_parallel(&d, TieMode::Strict, 16, p);
+            assert!(
+                got.allclose(&want, 1e-5, 1e-6),
+                "p={p} maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_split_mode_with_ties() {
+        let n = 24;
+        let d = distmat::random_tied(n, 8, 4);
+        let want = naive::pairwise(&d, TieMode::Split);
+        let got = pairwise_parallel(&d, TieMode::Split, 8, 4);
+        assert!(got.allclose(&want, 1e-5, 1e-6), "maxdiff={}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn parallel_awkward_sizes() {
+        // n not divisible by block or threads
+        let n = 37;
+        let d = distmat::random_tie_free(n, 5);
+        let want = naive::pairwise(&d, TieMode::Strict);
+        let got = pairwise_parallel(&d, TieMode::Strict, 10, 3);
+        assert!(got.allclose(&want, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn deterministic_given_thread_count() {
+        let n = 48;
+        let d = distmat::random_tie_free(n, 77);
+        let a = pairwise_parallel(&d, TieMode::Strict, 16, 4);
+        let b = pairwise_parallel(&d, TieMode::Strict, 16, 4);
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+}

@@ -1,0 +1,205 @@
+//! Shared-memory parallel triplet algorithm (paper Section 6, Figure 7).
+//!
+//! Every block triplet X <= Y <= Z becomes a task.  Focus-pass tasks write
+//! the three U tiles (X,Y), (X,Z), (Y,Z); cohesion-pass tasks write six C
+//! tiles (the three pairs and their transposes).  Tasks declaring
+//! overlapping tiles conflict (Figure 8's dependence graph) and are
+//! serialized by the task-graph executor's tile locks — our rendering of
+//! `#pragma omp task untied depend(inout, ...)`.
+
+use crate::core::Mat;
+use crate::pald::blocked::resolve_block;
+use crate::pald::optimized::{reciprocal_weights, triplet_cohesion_tile_raw};
+use crate::pald::{normalize, TieMode};
+use crate::parallel::pool::DisjointWriter;
+use crate::parallel::taskgraph::{execute, tile_id, Task};
+
+/// Parallel triplet PaLD on `threads` threads; `bhat`/`btil` are the
+/// focus/cohesion block sizes (0 = default).
+pub fn triplet_parallel(
+    d: &Mat,
+    tie: TieMode,
+    bhat: usize,
+    btil: usize,
+    threads: usize,
+) -> Mat {
+    let n = d.rows();
+    let bh = resolve_block(bhat, n);
+    let bt = resolve_block(btil, n);
+    let threads = threads.max(1);
+    if threads == 1 {
+        // Degenerate to the optimized sequential kernel (see
+        // pairwise_parallel); the task-graph machinery has no value at p=1.
+        return crate::pald::optimized::triplet_optimized(d, tie, bhat, btil);
+    }
+
+    // ---- Pass 1: focus sizes via tile-locked tasks. ----
+    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
+    {
+        let nbh = n.div_ceil(bh);
+        let uw = DisjointWriter(u.as_mut_ptr());
+        let d_ref = d;
+        let mut tasks = Vec::new();
+        for xb in 0..nbh {
+            for yb in xb..nbh {
+                for zb in yb..nbh {
+                    let resources = vec![
+                        tile_id(0, nbh, xb, yb),
+                        tile_id(0, nbh, xb, zb),
+                        tile_id(0, nbh, yb, zb),
+                    ];
+                    let uw = &uw;
+                    tasks.push(Task::new(resources, move |_| {
+                        // SAFETY (inside focus_tile_raw): all writes land in
+                        // U tiles (xb,yb), (xb,zb), (yb,zb), whose locks the
+                        // executor holds for the task's duration.
+                        focus_tile_raw(
+                            d_ref, uw.0, n, tie, xb * bh, yb * bh, zb * bh, bh,
+                        );
+                    }));
+                }
+            }
+        }
+        execute(tasks, nbh * nbh, threads);
+    }
+    for x in 0..n {
+        for y in (x + 1)..n {
+            u[(y, x)] = u[(x, y)];
+        }
+    }
+    let w = reciprocal_weights(&u);
+
+    // ---- Pass 2: cohesion via tile-locked tasks. ----
+    let mut c = Mat::zeros(n, n);
+    let mut ct = Mat::zeros(n, n);
+    {
+        let nbt = n.div_ceil(bt);
+        let cw = DisjointWriter(c.as_mut_ptr());
+        let ctw = DisjointWriter(ct.as_mut_ptr());
+        let d_ref = d;
+        let w_ref = &w;
+        let mut tasks = Vec::new();
+        for xb in 0..nbt {
+            for yb in xb..nbt {
+                for zb in yb..nbt {
+                    // Six C tiles: pairs and transposes (C is unsymmetric).
+                    // This pass has its own lock table, so matrix id 0.
+                    let resources = vec![
+                        tile_id(0, nbt, xb, yb),
+                        tile_id(0, nbt, yb, xb),
+                        tile_id(0, nbt, xb, zb),
+                        tile_id(0, nbt, zb, xb),
+                        tile_id(0, nbt, yb, zb),
+                        tile_id(0, nbt, zb, yb),
+                    ];
+                    let cw = &cw;
+                    let ctw = &ctw;
+                    tasks.push(Task::new(resources, move |_| {
+                        // SAFETY: writes confined to the six locked tiles
+                        // (C rows x/y + scalars in (xb,yb)/(yb,xb); CT rows
+                        // x/y cover the C (zb,xb)/(zb,yb) contributions and
+                        // are guarded by the same tile ids).
+                        unsafe {
+                            triplet_cohesion_tile_raw(
+                                d_ref, w_ref, cw.0, ctw.0, tie, xb * bt, yb * bt, zb * bt, bt, n,
+                            );
+                        }
+                    }));
+                }
+            }
+        }
+        execute(tasks, nbt * nbt, threads);
+    }
+    crate::pald::branchfree::add_transposed(&mut c, &ct);
+    super::add_diagonal_contributions(&mut c, &w);
+    normalize(&mut c);
+    c
+}
+
+/// Focus-tile update through a raw pointer (tile locks held by caller).
+#[allow(clippy::too_many_arguments)]
+fn focus_tile_raw(
+    d: &Mat,
+    u_ptr: *mut f32,
+    n: usize,
+    tie: TieMode,
+    xs: usize,
+    ys: usize,
+    zs: usize,
+    b: usize,
+) {
+    let xe = (xs + b).min(n);
+    let ye = (ys + b).min(n);
+    let ze = (zs + b).min(n);
+    let mut fsa = vec![0.0f32; b.min(n)];
+    let mut fta = vec![0.0f32; b.min(n)];
+    for x in xs..xe {
+        let dx = d.row(x);
+        let y_lo = if ys == xs { x + 1 } else { ys };
+        for y in y_lo..ye {
+            let dy = d.row(y);
+            let dxy = dx[y];
+            let z_lo = if zs == ys { y + 1 } else { zs };
+            if z_lo >= ze && true {
+                continue;
+            }
+            // SAFETY: rows x and y of U (within the locked (xb,zb)/(yb,zb)
+            // tiles for the z range, plus the (xb,yb) tile for u_xy).
+            let ux = unsafe { std::slice::from_raw_parts_mut(u_ptr.add(x * n), n) };
+            let uy = unsafe { std::slice::from_raw_parts_mut(u_ptr.add(y * n), n) };
+            let inc = crate::pald::branchfree::triplet_focus_branchfree_row(
+                dx, dy, dxy, ux, uy, &mut fsa, &mut fta, z_lo, ze, tie,
+            );
+            unsafe { *u_ptr.add(x * n + y) += inc };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::naive;
+
+    #[test]
+    fn parallel_triplet_matches_naive() {
+        let n = 48;
+        let d = distmat::random_tie_free(n, 31);
+        let want = naive::triplet(&d, TieMode::Strict);
+        for &p in &[1usize, 2, 4, 8] {
+            let got = triplet_parallel(&d, TieMode::Strict, 16, 16, p);
+            assert!(
+                got.allclose(&want, 1e-5, 1e-6),
+                "p={p} maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_triplet_split_mode() {
+        let n = 20;
+        let d = distmat::random_tied(n, 12, 4);
+        let want = naive::pairwise(&d, TieMode::Split);
+        let got = triplet_parallel(&d, TieMode::Split, 8, 8, 4);
+        assert!(got.allclose(&want, 1e-5, 1e-6), "maxdiff={}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn parallel_triplet_awkward_sizes() {
+        let n = 29;
+        let d = distmat::random_tie_free(n, 6);
+        let want = naive::triplet(&d, TieMode::Strict);
+        let got = triplet_parallel(&d, TieMode::Strict, 7, 9, 3);
+        assert!(got.allclose(&want, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn different_block_sizes_per_pass() {
+        let n = 40;
+        let d = distmat::random_tie_free(n, 60);
+        let want = naive::triplet(&d, TieMode::Strict);
+        let got = triplet_parallel(&d, TieMode::Strict, 32, 8, 4);
+        assert!(got.allclose(&want, 1e-5, 1e-6));
+    }
+}

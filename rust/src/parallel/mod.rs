@@ -1,0 +1,16 @@
+//! Shared-memory parallel runtime, built from scratch on `std::thread`
+//! (the offline cache has no rayon/crossbeam), mirroring the OpenMP
+//! constructs the paper uses:
+//!
+//! * [`parallel_for`] / [`Pool`] — `#pragma omp parallel for` with static
+//!   or dynamic schedules;
+//! * [`reduce::parallel_for_reduce`] — `reduction(+: U[X,Y])`;
+//! * [`taskgraph`] — `#pragma omp task untied depend(inout, ...)`: tasks
+//!   declare the tiles they write, and the executor serializes conflicting
+//!   tasks exactly like the OpenMP dependence graph in Figure 8.
+
+pub mod pool;
+pub mod reduce;
+pub mod taskgraph;
+
+pub use pool::{parallel_for, Schedule};

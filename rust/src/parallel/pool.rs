@@ -1,0 +1,163 @@
+//! Scoped fork-join loop parallelism (`#pragma omp parallel for`).
+//!
+//! `std::thread::scope` gives us structured parallelism without 'static
+//! bounds; a static schedule hands thread `t` the `t`-th contiguous chunk
+//! (the paper's best schedule for pairwise, whose iterations are uniform),
+//! and the dynamic schedule hands out fixed-size chunks from an atomic
+//! counter (for irregular work).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Loop schedule, mirroring OpenMP's `schedule(static)` / `schedule(dynamic, k)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Contiguous per-thread chunks, decided up front.
+    Static,
+    /// Work-stealing from a shared counter in chunks of the given size.
+    Dynamic(usize),
+}
+
+/// Run `body(thread_id, range)` over a partition of `0..len` on `threads`
+/// threads.  `body` must be safe to run concurrently on disjoint ranges.
+pub fn parallel_for_ranges<F>(len: usize, threads: usize, schedule: Schedule, body: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || len <= 1 {
+        body(0, 0..len);
+        return;
+    }
+    match schedule {
+        Schedule::Static => {
+            let chunk = len.div_ceil(threads);
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    let lo = (t * chunk).min(len);
+                    let hi = ((t + 1) * chunk).min(len);
+                    let body = &body;
+                    s.spawn(move || body(t, lo..hi));
+                }
+            });
+        }
+        Schedule::Dynamic(chunk) => {
+            let chunk = chunk.max(1);
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    let next = &next;
+                    let body = &body;
+                    s.spawn(move || loop {
+                        let lo = next.fetch_add(chunk, Ordering::Relaxed);
+                        if lo >= len {
+                            break;
+                        }
+                        body(t, lo..(lo + chunk).min(len));
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Run `body(i)` for every `i in 0..len` in parallel.
+pub fn parallel_for<F>(len: usize, threads: usize, schedule: Schedule, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for_ranges(len, threads, schedule, |_, range| {
+        for i in range {
+            body(i);
+        }
+    });
+}
+
+/// Marker wrapper that promises the wrapped pointer is used for disjoint
+/// writes only (each index written by at most one thread), making it Sync.
+///
+/// The pairwise cohesion pass writes column-disjoint slices of C from
+/// different threads; Rust cannot prove that, so the kernels use this
+/// wrapper with an explicit safety argument at each use site.
+pub struct DisjointWriter<T>(pub *mut T);
+
+unsafe impl<T: Send> Sync for DisjointWriter<T> {}
+unsafe impl<T: Send> Send for DisjointWriter<T> {}
+
+impl<T> DisjointWriter<T> {
+    /// # Safety
+    /// Caller must guarantee `idx` is written by exactly one thread during
+    /// the parallel region and read by none.
+    #[inline(always)]
+    pub unsafe fn add_at(&self, idx: usize, v: T)
+    where
+        T: std::ops::AddAssign,
+    {
+        *self.0.add(idx) += v;
+    }
+
+    /// # Safety
+    /// As [`DisjointWriter::add_at`].
+    #[inline(always)]
+    pub unsafe fn write_at(&self, idx: usize, v: T) {
+        *self.0.add(idx) = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn static_schedule_covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1000, 4, Schedule::Static, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_schedule_covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..777).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(777, 8, Schedule::Dynamic(13), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let sum = AtomicU64::new(0);
+        parallel_for(100, 1, Schedule::Static, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn ranges_partition_is_disjoint_and_complete() {
+        for threads in [2usize, 3, 7] {
+            for len in [0usize, 1, 10, 97] {
+                let seen: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+                parallel_for_ranges(len, threads, Schedule::Static, |_, r| {
+                    for i in r {
+                        seen[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(seen.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_writer_sums() {
+        let mut data = vec![0.0f64; 64];
+        let w = DisjointWriter(data.as_mut_ptr());
+        parallel_for(64, 4, Schedule::Static, |i| unsafe {
+            w.add_at(i, i as f64);
+        });
+        assert_eq!(data[63], 63.0);
+        assert_eq!(data.iter().sum::<f64>(), 2016.0);
+    }
+}

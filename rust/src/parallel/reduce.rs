@@ -1,0 +1,111 @@
+//! Parallel-for with sum reduction (`#pragma omp parallel for reduction(+:...)`).
+//!
+//! Each thread accumulates into a private buffer; buffers are combined
+//! after the join.  This is exactly the synchronization the paper charges
+//! the parallel pairwise focus pass for ("all threads must write to
+//! U[X,Y], so a sum-reduction is required") and the reason that pass stops
+//! scaling in Figure 13.
+
+use crate::parallel::pool::{parallel_for_ranges, Schedule};
+use std::sync::Mutex;
+
+/// Run `body(range, &mut acc)` over a partition of `0..len`; each thread
+/// gets its own `f32` accumulator buffer of length `acc_len`, and the
+/// per-thread buffers are summed into the returned vector.
+pub fn parallel_for_reduce<F>(
+    len: usize,
+    acc_len: usize,
+    threads: usize,
+    schedule: Schedule,
+    body: F,
+) -> Vec<f32>
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 {
+        let mut acc = vec![0.0f32; acc_len];
+        body(0..len, &mut acc);
+        return acc;
+    }
+    let result = Mutex::new(vec![0.0f32; acc_len]);
+    parallel_for_ranges(len, threads, schedule, |_, range| {
+        let mut local = vec![0.0f32; acc_len];
+        body(range, &mut local);
+        let mut guard = result.lock().unwrap();
+        for (g, l) in guard.iter_mut().zip(&local) {
+            *g += l;
+        }
+    });
+    result.into_inner().unwrap()
+}
+
+/// Integer-accumulator variant (the optimized algorithms keep U integral).
+pub fn parallel_for_reduce_u32<F>(
+    len: usize,
+    acc_len: usize,
+    threads: usize,
+    schedule: Schedule,
+    body: F,
+) -> Vec<u32>
+where
+    F: Fn(std::ops::Range<usize>, &mut [u32]) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 {
+        let mut acc = vec![0u32; acc_len];
+        body(0..len, &mut acc);
+        return acc;
+    }
+    let result = Mutex::new(vec![0u32; acc_len]);
+    parallel_for_ranges(len, threads, schedule, |_, range| {
+        let mut local = vec![0u32; acc_len];
+        body(range, &mut local);
+        let mut guard = result.lock().unwrap();
+        for (g, l) in guard.iter_mut().zip(&local) {
+            *g += l;
+        }
+    });
+    result.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_sums_partials() {
+        // acc[j] += i for every i in 0..100, j = i % 4
+        let acc = parallel_for_reduce(100, 4, 4, Schedule::Static, |range, acc| {
+            for i in range {
+                acc[i % 4] += i as f32;
+            }
+        });
+        let want: Vec<f32> = (0..4)
+            .map(|j| (0..100).filter(|i| i % 4 == j).sum::<usize>() as f32)
+            .collect();
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn reduce_u32_matches_sequential() {
+        let par = parallel_for_reduce_u32(1000, 8, 8, Schedule::Dynamic(7), |range, acc| {
+            for i in range {
+                acc[i % 8] += 1;
+            }
+        });
+        let mut seq = vec![0u32; 8];
+        for i in 0..1000 {
+            seq[i % 8] += 1;
+        }
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn single_thread_shortcut() {
+        let acc = parallel_for_reduce(10, 1, 1, Schedule::Static, |range, acc| {
+            acc[0] += range.len() as f32;
+        });
+        assert_eq!(acc[0], 10.0);
+    }
+}

@@ -1,0 +1,456 @@
+//! Reproduction drivers: one function per paper table/figure, each
+//! returning a printable [`Table`] with the same rows/series the paper
+//! reports.  Shared by the CLI (`paldx repro --exp ...`) and the bench
+//! binaries (`cargo bench`).
+//!
+//! Default problem sizes are offline-friendly; set `PALDX_FULL=1` for the
+//! paper's sizes (n = 2048..8192 — hours of compute at paper scale).
+
+use crate::bench::{bench, fmt_secs, fmt_speedup, BenchOpts, Table};
+use crate::core::Mat;
+use crate::data::{distmat, graph};
+use crate::pald::{self, ops, Algorithm, PaldConfig, TieMode};
+use crate::sim::machine::MachineParams;
+use crate::sim::{cache, scaling, traffic};
+
+fn time_alg(d: &Mat, alg: Algorithm, block: usize, block2: usize, opts: &BenchOpts) -> f64 {
+    let cfg = PaldConfig { algorithm: alg, block, block2, threads: 1, ..Default::default() };
+    let stats = bench(opts, || {
+        let c = pald::compute_cohesion(d, &cfg).expect("compute");
+        std::hint::black_box(c.sum());
+    });
+    stats.mean
+}
+
+/// Figure 3: speedups of the optimization ladder, relative to the previous
+/// rung (paper convention) plus cumulative vs naive pairwise.
+pub fn fig3(n: usize, opts: &BenchOpts) -> Table {
+    let d = distmat::random_tie_free(n, 2023);
+    let b = 128.min(n);
+    let ladder: Vec<(&str, Algorithm, usize, usize)> = vec![
+        ("naive pairwise", Algorithm::NaivePairwise, 0, 0),
+        ("naive triplet", Algorithm::NaiveTriplet, 0, 0),
+        ("blocked pairwise", Algorithm::BlockedPairwise, b, 0),
+        ("blocked triplet", Algorithm::BlockedTriplet, b, b),
+        ("branch-avoid pairwise", Algorithm::BranchFreePairwise, 0, 0),
+        ("branch-avoid triplet", Algorithm::BranchFreeTriplet, 0, 0),
+        ("opt pairwise (blk+bf+intU)", Algorithm::OptimizedPairwise, b, 0),
+        ("opt triplet (blk+bf+intU)", Algorithm::OptimizedTriplet, b, b / 2),
+    ];
+    let mut table = Table::new(
+        &format!("Figure 3 — optimization ladder speedups (n={n})"),
+        &["variant", "time", "vs previous", "vs naive pairwise"],
+    );
+    let mut prev = f64::NAN;
+    let mut naive_pw = f64::NAN;
+    for (name, alg, blk, blk2) in ladder {
+        let t = time_alg(&d, alg, blk, blk2, opts);
+        if naive_pw.is_nan() {
+            naive_pw = t;
+        }
+        let vs_prev = if prev.is_nan() { 1.0 } else { prev / t };
+        table.row(vec![
+            name.into(),
+            fmt_secs(t),
+            fmt_speedup(vs_prev),
+            fmt_speedup(naive_pw / t),
+        ]);
+        prev = t;
+    }
+    table
+}
+
+/// Figure 4: block-size tuning sweeps for optimized pairwise and triplet.
+pub fn fig4(n: usize, opts: &BenchOpts) -> (Table, Table) {
+    let d = distmat::random_tie_free(n, 44);
+    let naive_pw = time_alg(&d, Algorithm::NaivePairwise, 0, 0, opts);
+    let naive_tr = time_alg(&d, Algorithm::NaiveTriplet, 0, 0, opts);
+
+    let mut pw = Table::new(
+        &format!("Figure 4 (top) — pairwise block-size tuning (n={n})"),
+        &["b", "time", "speedup vs naive pairwise"],
+    );
+    let mut b = 32usize;
+    while b <= n.min(1024) {
+        let t = time_alg(&d, Algorithm::OptimizedPairwise, b, 0, opts);
+        pw.row(vec![b.to_string(), fmt_secs(t), fmt_speedup(naive_pw / t)]);
+        b *= 2;
+    }
+
+    let mut tr = Table::new(
+        &format!("Figure 4 (bottom) — triplet block-size tuning (n={n})"),
+        &["b-hat", "b-tilde", "time", "speedup vs naive triplet"],
+    );
+    let mut bh = 32usize;
+    while bh <= n.min(512) {
+        let mut bt = 32usize;
+        while bt <= n.min(512) {
+            let t = time_alg(&d, Algorithm::OptimizedTriplet, bh, bt, opts);
+            tr.row(vec![
+                bh.to_string(),
+                bt.to_string(),
+                fmt_secs(t),
+                fmt_speedup(naive_tr / t),
+            ]);
+            bt *= 4;
+        }
+        bh *= 4;
+    }
+    (pw, tr)
+}
+
+/// Table 1: optimized pairwise vs optimized triplet across matrix sizes.
+pub fn table1(sizes: &[usize], opts: &BenchOpts) -> Table {
+    let mut table = Table::new(
+        "Table 1 — running time (s): optimized pairwise vs triplet",
+        &["n", "pairwise", "triplet", "winner (speedup)"],
+    );
+    for &n in sizes {
+        let d = distmat::random_tie_free(n, n as u64);
+        let tp = time_alg(&d, Algorithm::OptimizedPairwise, 128.min(n), 0, opts);
+        let tt = time_alg(&d, Algorithm::OptimizedTriplet, 256.min(n), 128.min(n), opts);
+        let winner = if tp < tt {
+            format!("pairwise ({})", fmt_speedup(tt / tp))
+        } else {
+            format!("triplet ({})", fmt_speedup(tp / tt))
+        };
+        table.row(vec![n.to_string(), format!("{tp:.5}"), format!("{tt:.5}"), winner]);
+    }
+    table
+}
+
+fn machine() -> MachineParams {
+    // Calibrated against this core when PALDX_CALIBRATE=1; otherwise the
+    // paper's Xeon constants (faster, and the paper's testbed).
+    if std::env::var("PALDX_CALIBRATE").map(|v| v == "1").unwrap_or(false) {
+        MachineParams::calibrated(true)
+    } else {
+        MachineParams::xeon_6226r()
+    }
+}
+
+/// Figure 9: NUMA speedups at p=32 (machine-model simulation).
+pub fn fig9(sizes: &[u64]) -> Table {
+    let mp = machine();
+    let mut table = Table::new(
+        "Figure 9 — NUMA speedup over unbound OpenMP pairwise (p=32, simulated)",
+        &["n", "thread binding", "thread+memory binding"],
+    );
+    for (n, tb, tmb) in scaling::fig9_numa_speedups(&mp, sizes, 32) {
+        table.row(vec![n.to_string(), fmt_speedup(tb), fmt_speedup(tmb)]);
+    }
+    table
+}
+
+/// Figure 10: strong-scaling efficiency (simulated).
+pub fn fig10(sizes: &[u64], pairwise: bool) -> Table {
+    let mp = machine();
+    let threads = [1usize, 2, 4, 8, 16, 32];
+    let name = if pairwise { "pairwise" } else { "triplet" };
+    let mut table = Table::new(
+        &format!("Figure 10 — {name} strong-scaling efficiency (simulated)"),
+        &["n", "p", "eff (no NUMA)", "eff (NUMA)"],
+    );
+    let no = scaling::fig10_strong_scaling(&mp, sizes, &threads, pairwise, false);
+    let yes = scaling::fig10_strong_scaling(&mp, sizes, &threads, pairwise, true);
+    for (sn, sy) in no.iter().zip(&yes) {
+        for (i, &p) in sn.threads.iter().enumerate() {
+            table.row(vec![
+                sn.n.to_string(),
+                p.to_string(),
+                format!("{:.1}%", 100.0 * sn.efficiency[i]),
+                format!("{:.1}%", 100.0 * sy.efficiency[i]),
+            ]);
+        }
+    }
+    table
+}
+
+/// Figure 11: weak-scaling efficiency (simulated).
+pub fn fig11(n1_sizes: &[u64], pairwise: bool) -> Table {
+    let mp = machine();
+    let threads = [1usize, 2, 4, 8, 16, 32];
+    let name = if pairwise { "pairwise" } else { "triplet" };
+    let mut table = Table::new(
+        &format!("Figure 11 — {name} weak-scaling efficiency (simulated, n^3/p fixed)"),
+        &["n1", "p", "eff (no NUMA)", "eff (NUMA)"],
+    );
+    let no = scaling::fig11_weak_scaling(&mp, n1_sizes, &threads, pairwise, false);
+    let yes = scaling::fig11_weak_scaling(&mp, n1_sizes, &threads, pairwise, true);
+    for (sn, sy) in no.iter().zip(&yes) {
+        for (i, &p) in sn.threads.iter().enumerate() {
+            table.row(vec![
+                sn.n.to_string(),
+                p.to_string(),
+                format!("{:.1}%", 100.0 * sn.efficiency[i]),
+                format!("{:.1}%", 100.0 * sy.efficiency[i]),
+            ]);
+        }
+    }
+    table
+}
+
+/// Figure 13: runtime breakdown by phase (p = 1 measured + p > 1 simulated).
+pub fn fig13(n: u64) -> Table {
+    let mp = machine();
+    let mut table = Table::new(
+        &format!("Figure 13 — runtime fraction by phase (n={n}, simulated)"),
+        &["algorithm", "p", "focus %", "cohesion %", "overhead %"],
+    );
+    for pairwise in [true, false] {
+        let name = if pairwise { "pairwise" } else { "triplet" };
+        for (p, bd) in scaling::fig13_breakdown(&mp, n, &[1, 2, 4, 8, 16, 32], pairwise) {
+            let tot = bd.total();
+            table.row(vec![
+                name.into(),
+                p.to_string(),
+                format!("{:.1}", 100.0 * bd.focus_s / tot),
+                format!("{:.1}", 100.0 * bd.cohesion_s / tot),
+                format!("{:.1}", 100.0 * bd.overhead_s / tot),
+            ]);
+        }
+    }
+    table
+}
+
+/// Table 2: SNAP-like collaboration networks — measured sequential time at
+/// a scale factor + simulated p=32 speedup (full sizes under PALDX_FULL=1).
+pub fn table2(scale_div: usize, opts: &BenchOpts) -> Table {
+    let mp = machine();
+    let datasets: [(&str, usize); 3] =
+        [("ca-GrQc", 5242), ("ca-HepPh", 12008), ("ca-CondMat", 23133)];
+    let mut table = Table::new(
+        &format!(
+            "Table 2 — collaboration networks (synthetic SNAP substitutes, 1/{scale_div} scale)"
+        ),
+        &["dataset", "n (run)", "seq time", "sim p=32 speedup", "sim p=32 time"],
+    );
+    for (name, full_n) in datasets {
+        let n = (full_n / scale_div).max(64);
+        let g = graph::collaboration_network(n, 0xC0FFEE);
+        let (lcc, _) = g.largest_component();
+        let d = lcc.apsp(true);
+        let n_run = d.rows();
+        let t_seq = time_alg(&d, Algorithm::OptimizedPairwise, 128.min(n_run), 0, opts);
+        let speedup = scaling::predicted_speedup(&mp, n_run as u64, 32, true, true);
+        table.row(vec![
+            name.into(),
+            n_run.to_string(),
+            format!("{t_seq:.4}"),
+            fmt_speedup(speedup),
+            format!("{:.4}", t_seq / speedup),
+        ]);
+    }
+    table
+}
+
+/// Appendix A: percentage of single-core peak for the optimized variants.
+pub fn appendix_peak(n: usize, opts: &BenchOpts) -> Table {
+    let d = distmat::random_tie_free(n, 99);
+    let mut table = Table::new(
+        &format!("Appendix A — %% of single-core peak (n={n})"),
+        &["algorithm", "normalized ops", "time", "Gops/s", "% of calibrated peak"],
+    );
+    // Calibrated peak: the branch-free cohesion kernel at L1-resident size
+    // approximates this core's achievable comparison/FMA throughput.
+    let peak = calibrated_peak_ops_per_sec();
+    for (name, alg, f) in [
+        (
+            "opt pairwise",
+            Algorithm::OptimizedPairwise,
+            ops::pairwise_ops(n as u64).normalized(),
+        ),
+        (
+            "opt triplet",
+            Algorithm::OptimizedTriplet,
+            ops::triplet_ops(n as u64).normalized(),
+        ),
+    ] {
+        let t = time_alg(&d, alg, 128.min(n), 128.min(n), opts);
+        let rate = f / t;
+        table.row(vec![
+            name.into(),
+            format!("{:.3e}", f),
+            fmt_secs(t),
+            format!("{:.2}", rate / 1e9),
+            format!("{:.1}%", 100.0 * rate / peak),
+        ]);
+    }
+    table
+}
+
+/// Micro-measured achievable op rate on this core (normalized ops/s): the
+/// pairwise branch-free kernels on an L1-resident problem.
+pub fn calibrated_peak_ops_per_sec() -> f64 {
+    use std::time::Instant;
+    let n = 128;
+    let d = distmat::random_tie_free(n, 1);
+    let cfg = PaldConfig { algorithm: Algorithm::OptimizedPairwise, block: n, ..Default::default() };
+    // warmup + best of 5
+    let mut best = f64::INFINITY;
+    for _ in 0..6 {
+        let t0 = Instant::now();
+        let c = pald::compute_cohesion(&d, &cfg).expect("peak calib");
+        std::hint::black_box(c.sum());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    ops::pairwise_ops(n as u64).normalized() / best
+}
+
+/// Section 4 validation: measured traffic vs Theorems 4.1/4.2 and the 3NL
+/// lower bound, plus an LRU-cache-simulation cross-check at small n.
+pub fn bounds() -> Table {
+    let mut table = Table::new(
+        "Section 4 — communication: measured words vs theory and lower bound",
+        &["quantity", "n", "M (words)", "words", "x over lower bound"],
+    );
+    let m = 1u64 << 14;
+    for &n in &[1024u64, 2048, 4096] {
+        let b = traffic::pairwise_opt_block(m);
+        let wp = traffic::pairwise_words_exact(n, b);
+        let (bh, bt) = traffic::triplet_opt_blocks(m);
+        let wt = traffic::triplet_words_exact(n, bh, bt);
+        table.row(vec![
+            "pairwise (block model)".into(),
+            n.to_string(),
+            m.to_string(),
+            format!("{wp:.3e}"),
+            format!("{:.2} (theory 5.66)", traffic::vs_lower_bound(wp, n, m)),
+        ]);
+        table.row(vec![
+            "triplet (block model)".into(),
+            n.to_string(),
+            m.to_string(),
+            format!("{wt:.3e}"),
+            format!("{:.2} (theory 9.38)", traffic::vs_lower_bound(wt, n, m)),
+        ]);
+    }
+    // Cache-simulation cross-check at small n.
+    let (n, cap) = (96u64, 4096usize);
+    let mut sim = cache::Cache::new(cap, 8, 8);
+    sim.run(cache::pairwise_trace(n as usize, 16));
+    table.row(vec![
+        "pairwise (LRU cache sim, b=16)".into(),
+        n.to_string(),
+        cap.to_string(),
+        format!("{:.3e}", sim.words_moved() as f64),
+        format!("{:.2}", traffic::vs_lower_bound(sim.words_moved(), n, cap as u64)),
+    ]);
+    table
+}
+
+/// Ablation (paper Appendix B + Section 5): tie handling cost and the
+/// hybrid (triplet-focus + pairwise-cohesion) variant the paper proposes
+/// as future work.
+pub fn ablation(n: usize, opts: &BenchOpts) -> Table {
+    let d = distmat::random_tie_free(n, 314);
+    let mut table = Table::new(
+        &format!("Ablation — tie modes and Appendix B hybrid (n={n})"),
+        &["variant", "strict", "split (exact ties)", "split cost"],
+    );
+    for (name, alg) in [
+        ("opt pairwise", Algorithm::OptimizedPairwise),
+        ("opt triplet", Algorithm::OptimizedTriplet),
+        ("hybrid (Appdx B)", Algorithm::Hybrid),
+    ] {
+        let cfg = |tie| PaldConfig {
+            algorithm: alg,
+            tie_mode: tie,
+            block: 128.min(n),
+            block2: 128.min(n),
+            threads: 1,
+            ..Default::default()
+        };
+        let t_strict = bench(opts, || {
+            std::hint::black_box(pald::compute_cohesion(&d, &cfg(TieMode::Strict)).unwrap().sum());
+        })
+        .mean;
+        let t_split = bench(opts, || {
+            std::hint::black_box(pald::compute_cohesion(&d, &cfg(TieMode::Split)).unwrap().sum());
+        })
+        .mean;
+        table.row(vec![
+            name.into(),
+            fmt_secs(t_strict),
+            fmt_secs(t_split),
+            fmt_speedup(t_split / t_strict),
+        ]);
+    }
+    table
+}
+
+/// Cross-backend validation: native vs XLA artifact, with throughput.
+pub fn xla_check(n: usize, artifacts: &std::path::Path) -> anyhow::Result<Table> {
+    use crate::coordinator::{Coordinator, Job};
+    use crate::pald::Backend;
+
+    let d = distmat::random_tie_free(n, 5);
+    let mut coord = Coordinator::new();
+    let native_job = Job {
+        config: PaldConfig { algorithm: Algorithm::OptimizedTriplet, ..Default::default() },
+        artifacts_dir: artifacts.to_path_buf(),
+    };
+    let xla_job = Job {
+        config: PaldConfig { backend: Backend::Xla, tie_mode: TieMode::Strict, ..Default::default() },
+        artifacts_dir: artifacts.to_path_buf(),
+    };
+    let t0 = std::time::Instant::now();
+    let c_native = coord.run(&d, &native_job)?;
+    let t_native = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let c_xla = coord.run(&d, &xla_job)?;
+    let t_xla_cold = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let _ = coord.run(&d, &xla_job)?;
+    let t_xla_warm = t0.elapsed().as_secs_f64();
+
+    let maxdiff = c_native.max_abs_diff(&c_xla);
+    anyhow::ensure!(
+        c_native.allclose(&c_xla, 1e-4, 1e-5),
+        "XLA and native disagree: maxdiff={maxdiff}"
+    );
+    let mut table = Table::new(
+        &format!("Cross-backend check (n={n}): native vs AOT XLA artifact"),
+        &["backend", "time", "max |Δ| vs native"],
+    );
+    table.row(vec!["native opt-triplet".into(), fmt_secs(t_native), "0".into()]);
+    table.row(vec!["xla (cold, incl. compile)".into(), fmt_secs(t_xla_cold), format!("{maxdiff:.2e}")]);
+    table.row(vec!["xla (warm)".into(), fmt_secs(t_xla_warm), format!("{maxdiff:.2e}")]);
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> BenchOpts {
+        BenchOpts { warmup: 0, trials: 1, budget_s: 30.0 }
+    }
+
+    #[test]
+    fn fig3_runs_small() {
+        let t = fig3(64, &quick_opts());
+        assert_eq!(t.rows.len(), 8);
+    }
+
+    #[test]
+    fn table1_runs_small() {
+        let t = table1(&[32, 64], &quick_opts());
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn sim_tables_have_rows() {
+        assert!(!fig9(&[2048]).rows.is_empty());
+        assert!(!fig10(&[2048], true).rows.is_empty());
+        assert!(!fig11(&[2048], false).rows.is_empty());
+        assert!(!fig13(2048).rows.is_empty());
+        assert!(!bounds().rows.is_empty());
+    }
+
+    #[test]
+    fn table2_tiny_scale() {
+        let t = table2(64, &quick_opts());
+        assert_eq!(t.rows.len(), 3);
+    }
+}

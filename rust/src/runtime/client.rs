@@ -1,0 +1,107 @@
+//! PJRT client wrapper: HLO text -> compiled executable -> execution with
+//! `Mat` inputs/outputs.  Pattern follows /opt/xla-example/load_hlo.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::core::Mat;
+use crate::runtime::manifest::{ExecutableSpec, Manifest};
+
+/// A compiled PaLD executable (one artifact variant).
+pub struct PaldExecutable {
+    pub spec: ExecutableSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PaldExecutable {
+    /// Execute on a padded `n_art x n_art` distance matrix.
+    ///
+    /// `d_pad` must already be padded to the artifact size; `n_valid` is
+    /// the true point count.  Returns the full padded cohesion matrix.
+    pub fn run_padded(&self, d_pad: &Mat, n_valid: usize) -> anyhow::Result<Mat> {
+        let n_art = self.spec.n;
+        anyhow::ensure!(
+            d_pad.rows() == n_art && d_pad.cols() == n_art,
+            "expected padded {n_art}x{n_art}, got {}x{}",
+            d_pad.rows(),
+            d_pad.cols()
+        );
+        let d_lit = xla::Literal::vec1(d_pad.as_slice()).reshape(&[n_art as i64, n_art as i64])?;
+        let mut valid = vec![0.0f32; n_art];
+        valid[..n_valid].fill(1.0);
+        let valid_lit = xla::Literal::vec1(&valid).reshape(&[n_art as i64])?;
+        let nvalid_lit = xla::Literal::scalar(n_valid as f32);
+
+        let result = self.exe.execute::<xla::Literal>(&[d_lit, valid_lit, nvalid_lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        anyhow::ensure!(values.len() == n_art * n_art, "unexpected output size");
+        Ok(Mat::from_vec(n_art, n_art, values))
+    }
+
+    /// Pad an arbitrary `n <= n_art` problem, execute, slice the result.
+    pub fn run(&self, d: &Mat, _tie_strict: bool) -> anyhow::Result<Mat> {
+        let n = d.rows();
+        let n_art = self.spec.n;
+        anyhow::ensure!(n <= n_art, "problem n={n} exceeds artifact n={n_art}");
+        // Padding contract (see python/compile/model.py): pad value is
+        // irrelevant because the valid mask forces padded distances to
+        // LARGE inside the graph; zeros keep literals compact.
+        let d_pad = if n == n_art { d.clone() } else { d.pad_to(n_art, n_art, 0.0) };
+        let c_pad = self.run_padded(&d_pad, n)?;
+        Ok(c_pad.slice_to(n, n))
+    }
+}
+
+/// PJRT CPU runtime holding the client and a compile cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, PaldExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU runtime from an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<XlaRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaRuntime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the best-fitting executable for `n`.
+    pub fn executable_for(
+        &mut self,
+        n: usize,
+        tie_mode: &str,
+    ) -> anyhow::Result<&PaldExecutable> {
+        let spec = self
+            .manifest
+            .best_fit(n, tie_mode)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact fits n={n} tie_mode={tie_mode}; rebuild with `make artifacts`"
+                )
+            })?
+            .clone();
+        if !self.cache.contains_key(&spec.name) {
+            let path = self.manifest.hlo_path(&spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(spec.name.clone(), PaldExecutable { spec: spec.clone(), exe });
+        }
+        Ok(&self.cache[&spec.name])
+    }
+}

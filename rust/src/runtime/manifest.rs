@@ -1,0 +1,348 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.json` is produced by `python -m compile.aot`.  Only
+//! the subset of JSON that file uses is parsed (flat objects, arrays,
+//! strings, numbers) — there is no serde in the offline cache, so a small
+//! recursive-descent parser lives here with its own tests.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled executable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecutableSpec {
+    pub name: String,
+    /// Path of the HLO text file, relative to the manifest.
+    pub path: String,
+    /// Matrix dimension the artifact was compiled for.
+    pub n: usize,
+    /// Pallas block size baked into the kernel.
+    pub block: usize,
+    /// "strict" or "split".
+    pub tie_mode: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub executables: Vec<ExecutableSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Manifest> {
+        let value = JsonParser::new(text).parse()?;
+        let execs = value
+            .get("executables")
+            .and_then(JsonValue::as_array)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing executables"))?;
+        let mut executables = Vec::new();
+        for e in execs {
+            let gets = |k: &str| -> anyhow::Result<String> {
+                e.get(k)
+                    .and_then(JsonValue::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("missing string field {k}"))
+            };
+            let getn = |k: &str| -> anyhow::Result<usize> {
+                e.get(k)
+                    .and_then(JsonValue::as_f64)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| anyhow::anyhow!("missing numeric field {k}"))
+            };
+            executables.push(ExecutableSpec {
+                name: gets("name")?,
+                path: gets("path")?,
+                n: getn("n")?,
+                block: getn("block")?,
+                tie_mode: gets("tie_mode")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), executables })
+    }
+
+    /// Smallest artifact (by n) that fits a problem of `n` points with the
+    /// given tie mode.
+    pub fn best_fit(&self, n: usize, tie_mode: &str) -> Option<&ExecutableSpec> {
+        self.executables
+            .iter()
+            .filter(|e| e.n >= n && e.tie_mode == tie_mode)
+            .min_by_key(|e| e.n)
+    }
+
+    pub fn hlo_path(&self, spec: &ExecutableSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON parser (objects, arrays, strings, numbers, bools, null).
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(HashMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+pub struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    pub fn new(text: &'a str) -> Self {
+        JsonParser { bytes: text.as_bytes(), pos: 0 }
+    }
+
+    pub fn parse(mut self) -> anyhow::Result<JsonValue> {
+        let v = self.value()?;
+        self.skip_ws();
+        anyhow::ensure!(self.pos == self.bytes.len(), "trailing garbage at {}", self.pos);
+        Ok(v)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> anyhow::Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))
+    }
+
+    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+        let got = self.peek()?;
+        anyhow::ensure!(got == c, "expected '{}' got '{}' at {}", c as char, got as char, self.pos);
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<JsonValue> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(JsonValue::Str(self.string()?)),
+            b't' => self.literal("true", JsonValue::Bool(true)),
+            b'f' => self.literal("false", JsonValue::Bool(false)),
+            b'n' => self.literal("null", JsonValue::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: JsonValue) -> anyhow::Result<JsonValue> {
+        anyhow::ensure!(
+            self.bytes[self.pos..].starts_with(lit.as_bytes()),
+            "bad literal at {}",
+            self.pos
+        );
+        self.pos += lit.len();
+        Ok(v)
+    }
+
+    fn object(&mut self) -> anyhow::Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut map = HashMap::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(map));
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(map));
+                }
+                c => anyhow::bail!("expected ',' or '}}' got '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut arr = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(arr));
+        }
+        loop {
+            arr.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(arr));
+                }
+                c => anyhow::bail!("expected ',' or ']' got '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        while self.pos < self.bytes.len() {
+            let c = self.bytes[self.pos];
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = self
+                        .bytes
+                        .get(self.pos)
+                        .copied()
+                        .ok_or_else(|| anyhow::anyhow!("bad escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'u' => {
+                            // \uXXXX (BMP only — enough for our manifests)
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.pos += 4;
+                            out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => anyhow::bail!("unsupported escape \\{}", esc as char),
+                    }
+                }
+                _ => out.push(c as char),
+            }
+        }
+        anyhow::bail!("unterminated string")
+    }
+
+    fn number(&mut self) -> anyhow::Result<JsonValue> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(JsonValue::Num(s.parse()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let text = r#"{
+            "format": "hlo-text", "version": 1,
+            "executables": [
+                {"name": "pald_strict_n128", "path": "pald_strict_n128.hlo.txt",
+                 "n": 128, "block": 32, "tie_mode": "strict",
+                 "inputs": [{"name": "d", "shape": [128, 128], "dtype": "f32"}],
+                 "outputs": [], "sha256": "ab"}
+            ]
+        }"#;
+        let m = Manifest::parse(Path::new("/tmp"), text).unwrap();
+        assert_eq!(m.executables.len(), 1);
+        let e = &m.executables[0];
+        assert_eq!(e.n, 128);
+        assert_eq!(e.block, 32);
+        assert_eq!(e.tie_mode, "strict");
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_sufficient() {
+        let mk = |n: usize, mode: &str| ExecutableSpec {
+            name: format!("pald_{mode}_n{n}"),
+            path: String::new(),
+            n,
+            block: 32,
+            tie_mode: mode.into(),
+        };
+        let m = Manifest {
+            dir: PathBuf::new(),
+            executables: vec![mk(128, "strict"), mk(512, "strict"), mk(256, "strict"), mk(128, "split")],
+        };
+        assert_eq!(m.best_fit(100, "strict").unwrap().n, 128);
+        assert_eq!(m.best_fit(129, "strict").unwrap().n, 256);
+        assert_eq!(m.best_fit(500, "strict").unwrap().n, 512);
+        assert!(m.best_fit(513, "strict").is_none());
+        assert_eq!(m.best_fit(10, "split").unwrap().n, 128);
+    }
+
+    #[test]
+    fn json_parser_handles_nesting_and_escapes() {
+        let v = JsonParser::new(r#"{"a": [1, 2.5, "x\"y"], "b": {"c": true, "d": null}}"#)
+            .parse()
+            .unwrap();
+        assert_eq!(v.get("a").unwrap().as_array().unwrap()[1].as_f64(), Some(2.5));
+        assert_eq!(v.get("a").unwrap().as_array().unwrap()[2].as_str(), Some("x\"y"));
+        assert_eq!(v.get("b").unwrap().get("c"), Some(&JsonValue::Bool(true)));
+    }
+
+    #[test]
+    fn json_parser_rejects_garbage() {
+        assert!(JsonParser::new("{").parse().is_err());
+        assert!(JsonParser::new("[1,]").parse().is_err());
+        assert!(JsonParser::new("{} extra").parse().is_err());
+    }
+
+    #[test]
+    fn parses_real_artifacts_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.executables.is_empty());
+            assert!(m.best_fit(100, "strict").is_some());
+        }
+    }
+}

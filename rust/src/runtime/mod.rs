@@ -1,0 +1,9 @@
+//! XLA/PJRT runtime: loads the AOT-compiled JAX+Pallas artifacts (HLO
+//! text, see `python/compile/aot.py`) and executes them on the PJRT CPU
+//! client.  Python never runs here — the artifacts are self-contained.
+
+mod client;
+mod manifest;
+
+pub use client::{PaldExecutable, XlaRuntime};
+pub use manifest::{ExecutableSpec, Manifest};

@@ -1,0 +1,221 @@
+//! Set-associative LRU cache simulator.
+//!
+//! Used to validate the communication analysis of Section 4 empirically:
+//! we replay the exact memory reference streams of the blocked algorithms
+//! (word-granularity addresses over D, U, C) and count cold+capacity
+//! misses, then compare the measured words-moved against the Theorem
+//! 4.1/4.2 predictions and the 3NL lower bound.
+
+/// Memory access kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Read(u64),
+    Write(u64),
+}
+
+impl Access {
+    pub fn addr(&self) -> u64 {
+        match *self {
+            Access::Read(a) | Access::Write(a) => a,
+        }
+    }
+}
+
+/// Set-associative LRU cache with write-back, write-allocate policy.
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    /// Words per cache line.
+    line_words: usize,
+    /// tags[set * ways + way]; u64::MAX = invalid.
+    tags: Vec<u64>,
+    /// LRU stamp per way.
+    stamp: Vec<u64>,
+    dirty: Vec<bool>,
+    clock: u64,
+    pub misses: u64,
+    pub hits: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    /// `capacity_words` total, `ways`-associative, `line_words` per line.
+    pub fn new(capacity_words: usize, ways: usize, line_words: usize) -> Self {
+        let lines = capacity_words / line_words;
+        let sets = (lines / ways).max(1);
+        Cache {
+            sets,
+            ways,
+            line_words,
+            tags: vec![u64::MAX; sets * ways],
+            stamp: vec![0; sets * ways],
+            dirty: vec![false; sets * ways],
+            clock: 0,
+            misses: 0,
+            hits: 0,
+            writebacks: 0,
+        }
+    }
+
+    pub fn capacity_words(&self) -> usize {
+        self.sets * self.ways * self.line_words
+    }
+
+    /// Simulate one word access.
+    pub fn access(&mut self, a: Access) {
+        self.clock += 1;
+        let line = a.addr() / self.line_words as u64;
+        let set = (line % self.sets as u64) as usize;
+        let base = set * self.ways;
+        let is_write = matches!(a, Access::Write(_));
+        // hit?
+        for w in 0..self.ways {
+            if self.tags[base + w] == line {
+                self.hits += 1;
+                self.stamp[base + w] = self.clock;
+                if is_write {
+                    self.dirty[base + w] = true;
+                }
+                return;
+            }
+        }
+        // miss: evict LRU way
+        self.misses += 1;
+        let mut victim = 0;
+        for w in 1..self.ways {
+            if self.stamp[base + w] < self.stamp[base + victim] {
+                victim = w;
+            }
+        }
+        if self.tags[base + victim] != u64::MAX && self.dirty[base + victim] {
+            self.writebacks += 1;
+        }
+        self.tags[base + victim] = line;
+        self.stamp[base + victim] = self.clock;
+        self.dirty[base + victim] = is_write;
+    }
+
+    pub fn run(&mut self, trace: impl IntoIterator<Item = Access>) {
+        for a in trace {
+            self.access(a);
+        }
+    }
+
+    /// Words moved between this cache and the next level (fills + writebacks).
+    pub fn words_moved(&self) -> u64 {
+        (self.misses + self.writebacks) * self.line_words as u64
+    }
+}
+
+/// Reference-stream generator for the *blocked pairwise* algorithm
+/// (word-granularity, matching Figure 1's access pattern).  Layout:
+/// D at offset 0, U tile ignored (stays in registers/L1 in the real code),
+/// C at offset n^2.
+pub fn pairwise_trace(n: usize, b: usize) -> Vec<Access> {
+    let nwords = (n * n) as u64;
+    let d = |x: usize, z: usize| Access::Read((x * n + z) as u64);
+    let c_r = |x: usize, z: usize| Access::Read(nwords + (x * n + z) as u64);
+    let c_w = |x: usize, z: usize| Access::Write(nwords + (x * n + z) as u64);
+    let mut t = Vec::new();
+    let nb = n.div_ceil(b);
+    for xb in 0..nb {
+        let xs = xb * b;
+        let xe = (xs + b).min(n);
+        for yb in 0..=xb {
+            let ys = yb * b;
+            let ye = (ys + b).min(n);
+            // pass 1: for each pair, scan rows x and y
+            for x in xs..xe {
+                let ylo = if xb == yb { x + 1 } else { ys };
+                for y in ylo.max(ys)..ye {
+                    t.push(d(x, y));
+                    for z in 0..n {
+                        t.push(d(x, z));
+                        t.push(d(y, z));
+                    }
+                }
+            }
+            // pass 2: same scans + C row updates
+            for x in xs..xe {
+                let ylo = if xb == yb { x + 1 } else { ys };
+                for y in ylo.max(ys)..ye {
+                    t.push(d(x, y));
+                    for z in 0..n {
+                        t.push(d(x, z));
+                        t.push(d(y, z));
+                        t.push(c_r(x, z));
+                        t.push(c_w(x, z));
+                        t.push(c_r(y, z));
+                        t.push(c_w(y, z));
+                    }
+                }
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_cache_basics() {
+        let mut c = Cache::new(8, 2, 2); // 4 lines, 2 sets x 2 ways
+        c.access(Access::Read(0)); // miss
+        c.access(Access::Read(1)); // hit (same line)
+        c.access(Access::Write(0)); // hit, dirty
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.writebacks, 0);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_writebacks_count() {
+        let mut c = Cache::new(4, 2, 1); // 4 lines of 1 word, 2 sets
+        // set 0 holds even addresses
+        c.access(Access::Write(0)); // miss, dirty
+        c.access(Access::Read(2)); // miss (set 0 way 2)
+        c.access(Access::Read(4)); // miss, evicts addr 0 (LRU, dirty) -> writeback
+        assert_eq!(c.writebacks, 1);
+        c.access(Access::Read(0)); // miss again (was evicted)
+        assert_eq!(c.misses, 4);
+    }
+
+    #[test]
+    fn repeated_working_set_hits_when_it_fits() {
+        let mut c = Cache::new(1024, 8, 8);
+        let trace: Vec<Access> = (0..512u64).map(Access::Read).collect();
+        c.run(trace.clone());
+        let cold = c.misses;
+        c.run(trace);
+        assert_eq!(c.misses, cold, "second pass must be all hits");
+    }
+
+    #[test]
+    fn blocking_reduces_pairwise_misses() {
+        // Same computation, two block sizes; cache fits a b=16 working set
+        // but not the unblocked one.
+        let n = 64;
+        let cap = 4096; // words
+        let mut small = Cache::new(cap, 8, 8);
+        small.run(pairwise_trace(n, 1));
+        let mut blocked = Cache::new(cap, 8, 8);
+        blocked.run(pairwise_trace(n, 16));
+        assert!(
+            blocked.words_moved() * 2 < small.words_moved(),
+            "blocked={} unblocked={}",
+            blocked.words_moved(),
+            small.words_moved()
+        );
+    }
+
+    #[test]
+    fn words_moved_at_least_compulsory() {
+        let n = 32;
+        let mut c = Cache::new(16384, 8, 8);
+        c.run(pairwise_trace(n, 8));
+        // at least the D matrix must be loaded once
+        assert!(c.words_moved() >= (n * n) as u64);
+    }
+}

@@ -1,0 +1,451 @@
+//! Calibrated multicore machine model.
+//!
+//! The container exposes one physical core, so the paper's scaling studies
+//! (Figs. 9–11, 13, Table 2) cannot be re-measured directly.  Instead we
+//! (a) run the *real* parallel algorithms for correctness, and (b) predict
+//! their timing on a p-core, two-socket machine with a cost model in the
+//! paper's own γF + βW framework (Section 4):
+//!
+//! * compute     — calibrated per-phase op throughput (ops/s measured on
+//!   this core, or the paper's Xeon constants);
+//! * memory      — Theorem 4.1/4.2 word counts × β, with β depending on
+//!   the NUMA placement mode and saturating with thread count;
+//! * reduction   — the pairwise focus pass merges p private U tiles per
+//!   block pair (serialized — the Figure 13 scalability barrier);
+//! * barriers    — 2 log₂(p)-cost joins per block pair;
+//! * task DAG    — the triplet passes are list-scheduled tasks with tile
+//!   conflicts (Figure 8), simulated by a discrete-event scheduler.
+
+use crate::pald::ops;
+use crate::sim::traffic;
+
+/// NUMA placement mode (paper Section 6.1 / Figure 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumaMode {
+    /// No binding: threads migrate (cache-affinity loss), pages wherever
+    /// first touch put them.
+    None,
+    /// OMP_PROC_BIND: threads pinned, all pages on socket 0.
+    ThreadBind,
+    /// Threads pinned + D/C partitioned across sockets (first-touch).
+    ThreadMemBind,
+}
+
+/// Machine constants.  All rates are single-core; parallel behaviour is
+/// derived, not assumed.
+#[derive(Clone, Debug)]
+pub struct MachineParams {
+    /// Pairwise focus-pass throughput, normalized ops/s.
+    pub rate_pw_focus: f64,
+    /// Pairwise cohesion-pass throughput, normalized ops/s.
+    pub rate_pw_cohesion: f64,
+    /// Triplet focus-pass throughput.
+    pub rate_tr_focus: f64,
+    /// Triplet cohesion-pass throughput.
+    pub rate_tr_cohesion: f64,
+    /// Seconds per word, local socket DRAM.
+    pub beta_local: f64,
+    /// Seconds per word, remote socket DRAM.
+    pub beta_remote: f64,
+    /// Seconds per word merged during a U-tile reduction.
+    pub reduce_per_word: f64,
+    /// Seconds per barrier participant-step (cost = alpha * log2 p).
+    pub barrier_alpha: f64,
+    /// Memory-bandwidth saturation: streams per socket before β stops
+    /// scaling with threads.
+    pub bw_streams_per_socket: f64,
+    pub sockets: usize,
+    pub cores_per_socket: usize,
+    /// Fast memory (words) used to pick optimal block sizes.
+    pub fast_mem_words: u64,
+}
+
+impl MachineParams {
+    /// Constants shaped after the paper's dual-socket Xeon Gold 6226R
+    /// (2 x 16 cores, single-core SP peak 249.6 Gflop/s, ~20 GB/s/core
+    /// stream bandwidth, ~2.2x remote:local latency ratio).
+    pub fn xeon_6226r() -> Self {
+        MachineParams {
+            // The paper reports ~28% of single-core peak for the optimized
+            // kernels: 0.28 * 249.6e9 ≈ 70 Gop/s normalized.
+            rate_pw_focus: 60.0e9,
+            rate_pw_cohesion: 70.0e9,
+            rate_tr_focus: 55.0e9,
+            rate_tr_cohesion: 65.0e9,
+            // Per-word cost of a *single* demand stream (~6 GB/s): random
+            // panel walks do not reach the 20 GB/s streaming peak.
+            beta_local: 4.0 / 6.0e9,
+            beta_remote: 3.0 * 4.0 / 6.0e9,
+            reduce_per_word: 1.0e-9,
+            barrier_alpha: 2.0e-6,
+            // ~4 concurrent demand streams saturate one socket's DRAM BW.
+            bw_streams_per_socket: 4.0,
+            sockets: 2,
+            cores_per_socket: 16,
+            fast_mem_words: (1024 * 1024) / 4, // per-core L2 (1 MiB) in words
+        }
+    }
+
+    /// Calibrate the compute rates against *this* machine by timing the
+    /// optimized kernels (quick: n=256; full: n=1024), keeping the Xeon
+    /// NUMA/bandwidth shape for the multi-socket terms.
+    pub fn calibrated(quick: bool) -> Self {
+        use crate::data::distmat;
+        use crate::pald::{optimized, TieMode};
+        use std::time::Instant;
+
+        let n = if quick { 256 } else { 1024 };
+        let d = distmat::random_tie_free(n, 7);
+        let mut p = Self::xeon_6226r();
+
+        // Pairwise (both phases fused in one timing; apportion by op share).
+        let t0 = Instant::now();
+        let _ = optimized::pairwise_optimized(&d, TieMode::Strict, 128);
+        let t_pw = t0.elapsed().as_secs_f64();
+        let pw_ops = ops::pairwise_ops(n as u64).normalized();
+        let rate_pw = pw_ops / t_pw;
+        // focus pass carries 2/5 of the comparisons and no FMAs: weight it
+        // at the same achieved rate (measured jointly).
+        p.rate_pw_focus = rate_pw;
+        p.rate_pw_cohesion = rate_pw;
+
+        let t0 = Instant::now();
+        let _ = optimized::triplet_optimized(&d, TieMode::Strict, 128, 128);
+        let t_tr = t0.elapsed().as_secs_f64();
+        let tr_ops = ops::triplet_ops(n as u64).normalized();
+        let rate_tr = tr_ops / t_tr;
+        p.rate_tr_focus = rate_tr;
+        p.rate_tr_cohesion = rate_tr;
+
+        // Memory: stream a large buffer to estimate β_local.
+        let words = 1 << 22;
+        let buf = vec![1.0f32; words];
+        let t0 = Instant::now();
+        let mut acc = 0.0f32;
+        for chunk in buf.chunks(64) {
+            acc += chunk.iter().sum::<f32>();
+        }
+        std::hint::black_box(acc);
+        let t_mem = t0.elapsed().as_secs_f64();
+        p.beta_local = t_mem / words as f64;
+        p.beta_remote = 2.2 * p.beta_local;
+        p
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Effective per-word cost for `p` threads under a NUMA mode: a
+    /// local/remote mix divided by the number of unsaturated streams.
+    pub fn beta_eff(&self, p: usize, numa: NumaMode) -> f64 {
+        let p = p.max(1);
+        let sockets_used = if p > self.cores_per_socket { 2.0 } else { 1.0 };
+        let (mix, affinity_penalty) = match numa {
+            // Unpinned threads lose cache affinity (extra refills) and see
+            // a random local/remote mix once both sockets are active.
+            NumaMode::None => {
+                let remote_frac = if sockets_used > 1.0 { 0.5 } else { 0.25 };
+                (
+                    (1.0 - remote_frac) * self.beta_local + remote_frac * self.beta_remote,
+                    1.4, // migrating threads keep refilling private caches
+                )
+            }
+            // Pinned threads, pages all on socket 0: socket-1 threads pay
+            // remote for everything.
+            NumaMode::ThreadBind => {
+                let remote_frac = if sockets_used > 1.0 { 0.5 } else { 0.0 };
+                (
+                    (1.0 - remote_frac) * self.beta_local + remote_frac * self.beta_remote,
+                    1.0,
+                )
+            }
+            // Pinned + partitioned pages: mostly local (cross-socket reads
+            // only for the shared D panels).
+            NumaMode::ThreadMemBind => (0.85 * self.beta_local + 0.15 * self.beta_remote, 1.0),
+        };
+        let streams = (p as f64).min(self.bw_streams_per_socket * sockets_used);
+        mix * affinity_penalty / streams
+    }
+}
+
+/// Phase timing breakdown (seconds) — the Figure 13 decomposition.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    pub focus_s: f64,
+    pub cohesion_s: f64,
+    pub overhead_s: f64, // reductions + barriers + memcpy
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.focus_s + self.cohesion_s + self.overhead_s
+    }
+}
+
+/// Predicted time of the parallel *pairwise* algorithm.
+pub fn pairwise_time(mp: &MachineParams, n: u64, b: u64, p: usize, numa: NumaMode) -> Breakdown {
+    let p = p.max(1);
+    let nb = n.div_ceil(b);
+    let n_pairs_blocks = (nb * (nb + 1) / 2) as f64;
+
+    let total_ops = ops::pairwise_ops(n).normalized();
+    // focus pass: 2 of the 5 comparisons; cohesion: the rest + FMAs/casts.
+    let iters = (n * ops::choose2(n)) as f64;
+    let focus_ops = 2.0 * 2.0 * iters; // 2 cmp, x2 normalization
+    let cohesion_ops = total_ops - focus_ops;
+
+    let words = traffic::pairwise_words_exact(n, b) as f64;
+    let beta = mp.beta_eff(p, numa);
+    // Apportion traffic between phases like the proof: pass1 moves
+    // ~2bn + b^2 per block pair; pass2 ~6bn per block pair.
+    let w_focus = words * 0.25;
+    let w_cohesion = words * 0.75;
+
+    let focus_s = focus_ops / (mp.rate_pw_focus * p as f64) + w_focus * beta;
+    let cohesion_s = cohesion_ops / (mp.rate_pw_cohesion * p as f64) + w_cohesion * beta;
+
+    // Reduction: p private b^2 tiles merged per block pair (serialized),
+    // plus 2 barriers per block pair.
+    let reduce_s = n_pairs_blocks * (p as f64) * (b * b) as f64 * mp.reduce_per_word;
+    let barrier_s = n_pairs_blocks * 2.0 * mp.barrier_alpha * (p as f64).log2().max(0.0);
+
+    Breakdown { focus_s, cohesion_s, overhead_s: reduce_s + barrier_s }
+}
+
+/// One scheduled task for the DAG simulation.
+struct SimTask {
+    dur: f64,
+    tiles: Vec<usize>,
+}
+
+/// Greedy list scheduling of tile-conflicting tasks on `p` workers —
+/// models the OpenMP `task depend(inout)` execution of the triplet passes.
+fn schedule(tasks: &[SimTask], p: usize) -> f64 {
+    let p = p.max(1);
+    // worker finish times
+    let mut workers = vec![0.0f64; p];
+    // tile -> release time
+    let mut tile_free: std::collections::HashMap<usize, f64> = std::collections::HashMap::new();
+    let mut makespan = 0.0f64;
+    for t in tasks {
+        // earliest time all tiles are free
+        let ready = t
+            .tiles
+            .iter()
+            .map(|k| tile_free.get(k).copied().unwrap_or(0.0))
+            .fold(0.0f64, f64::max);
+        // earliest available worker
+        let (wi, wt) = workers
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, &t)| (i, t))
+            .unwrap();
+        let start = ready.max(wt);
+        let finish = start + t.dur;
+        workers[wi] = finish;
+        for &k in &t.tiles {
+            tile_free.insert(k, finish);
+        }
+        makespan = makespan.max(finish);
+    }
+    makespan
+}
+
+/// Predicted time of the parallel *triplet* algorithm via DAG simulation.
+pub fn triplet_time(
+    mp: &MachineParams,
+    n: u64,
+    bh: u64,
+    bt: u64,
+    p: usize,
+    numa: NumaMode,
+) -> Breakdown {
+    let beta = mp.beta_eff(p, numa);
+    let tri_ops = ops::triplet_ops(n).normalized();
+    // Split ops between passes: focus pass is 6 cmp of 12 normalized-op
+    // share; cohesion has the FMAs/casts.
+    let focus_share = 12.0 / 27.0;
+    let ops_per_triplet_focus = tri_ops * focus_share / ops::choose3(n) as f64;
+    let ops_per_triplet_coh = tri_ops * (1.0 - focus_share) / ops::choose3(n) as f64;
+
+    let mk_tasks = |b: u64, per_triplet_ops: f64, words_per_tile: f64, ntiles_touched: f64| {
+        let nb = n.div_ceil(b) as usize;
+        let mut tasks = Vec::new();
+        for xb in 0..nb {
+            for yb in xb..nb {
+                for zb in yb..nb {
+                    // distinct (x<y<z) iterations inside the block triplet
+                    let cnt = block_triplet_iters(n, b, xb, yb, zb) as f64;
+                    let dur = cnt * per_triplet_ops / mp.rate_tr_focus
+                        + ntiles_touched * words_per_tile * beta;
+                    let tiles = vec![
+                        xb * nb + yb,
+                        xb * nb + zb,
+                        yb * nb + zb,
+                    ];
+                    tasks.push(SimTask { dur, tiles });
+                }
+            }
+        }
+        tasks
+    };
+
+    let focus_tasks = mk_tasks(bh, ops_per_triplet_focus, (bh * bh) as f64, 6.0);
+    let focus_s = schedule(&focus_tasks, p);
+    let coh_tasks = mk_tasks(bt, ops_per_triplet_coh, (bt * bt) as f64, 12.0);
+    let cohesion_s = schedule(&coh_tasks, p);
+    // reciprocal sweep + task spawn overhead
+    let overhead_s =
+        (n * n) as f64 / mp.rate_tr_cohesion + (focus_tasks.len() + coh_tasks.len()) as f64 * 1e-6;
+    Breakdown { focus_s, cohesion_s, overhead_s }
+}
+
+/// Number of x<y<z iterations inside block triplet (xb, yb, zb).
+fn block_triplet_iters(n: u64, b: u64, xb: usize, yb: usize, zb: usize) -> u64 {
+    let sz = |i: usize| -> u64 {
+        let s = (i as u64) * b;
+        (n - s).min(b)
+    };
+    let (bx, by, bz) = (sz(xb), sz(yb), sz(zb));
+    if xb == yb && yb == zb {
+        bx * (bx - 1) * (bx - 2) / 6
+    } else if xb == yb {
+        bx * (bx - 1) / 2 * bz
+    } else if yb == zb {
+        bx * (by * (by - 1) / 2)
+    } else {
+        bx * by * bz
+    }
+}
+
+/// Predicted sequential time (p = 1, no overheads) — the scaling baseline.
+pub fn sequential_time(mp: &MachineParams, n: u64, pairwise: bool) -> f64 {
+    if pairwise {
+        let b = traffic::pairwise_opt_block(mp.fast_mem_words);
+        let bd = pairwise_time(mp, n, b, 1, NumaMode::ThreadBind);
+        bd.focus_s + bd.cohesion_s
+    } else {
+        let (bh, bt) = traffic::triplet_opt_blocks(mp.fast_mem_words);
+        let bd = triplet_time(mp, n, bh, bt, 1, NumaMode::ThreadBind);
+        bd.focus_s + bd.cohesion_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mp() -> MachineParams {
+        MachineParams::xeon_6226r()
+    }
+
+    #[test]
+    fn pairwise_speedup_grows_then_saturates() {
+        let m = mp();
+        let t1 = pairwise_time(&m, 2048, 256, 1, NumaMode::ThreadMemBind).total();
+        let t8 = pairwise_time(&m, 2048, 256, 8, NumaMode::ThreadMemBind).total();
+        let t32 = pairwise_time(&m, 2048, 256, 32, NumaMode::ThreadMemBind).total();
+        assert!(t8 < t1 && t32 < t8);
+        let s32 = t1 / t32;
+        assert!(s32 > 5.0 && s32 < 32.0, "s32={s32}");
+    }
+
+    #[test]
+    fn numa_ordering_matches_figure9() {
+        let m = mp();
+        for n in [2048u64, 4096] {
+            let none = pairwise_time(&m, n, 256, 32, NumaMode::None).total();
+            let tb = pairwise_time(&m, n, 256, 32, NumaMode::ThreadBind).total();
+            let tmb = pairwise_time(&m, n, 256, 32, NumaMode::ThreadMemBind).total();
+            assert!(tb < none, "thread binding must help (n={n})");
+            assert!(tmb < tb, "memory binding must help further (n={n})");
+            let speedup_tmb = none / tmb;
+            assert!(
+                speedup_tmb > 1.05 && speedup_tmb < 2.5,
+                "n={n} numa speedup={speedup_tmb}"
+            );
+        }
+    }
+
+    #[test]
+    fn efficiency_increases_with_problem_size() {
+        // Figure 10: bigger n -> better strong-scaling efficiency.
+        let m = mp();
+        let eff = |n: u64| {
+            let t1 = sequential_time(&m, n, true);
+            let tp = pairwise_time(&m, n, 256, 32, NumaMode::ThreadMemBind).total();
+            t1 / (32.0 * tp)
+        };
+        let e2k = eff(2048);
+        let e8k = eff(8192);
+        assert!(e8k > e2k, "e2k={e2k} e8k={e8k}");
+        assert!(e2k > 0.1 && e8k < 1.0);
+    }
+
+    #[test]
+    fn triplet_dag_scales_but_below_pairwise_efficiency() {
+        // Figure 10 bottom: triplet efficiencies are lower.
+        let m = mp();
+        let n = 4096;
+        let tp1 = sequential_time(&m, n, true);
+        let tt1 = sequential_time(&m, n, false);
+        let tp32 = pairwise_time(&m, n, 256, 32, NumaMode::ThreadMemBind).total();
+        let tt32 = triplet_time(&m, n, 128, 128, 32, NumaMode::ThreadBind).total();
+        let ep = tp1 / (32.0 * tp32);
+        let et = tt1 / (32.0 * tt32);
+        assert!(et < ep, "triplet eff {et} should trail pairwise {ep}");
+        assert!(et > 0.05);
+    }
+
+    #[test]
+    fn triplet_seq_faster_than_pairwise_seq_large_n() {
+        // Table 1's crossover: triplet wins at large n (fewer ops).
+        let m = mp();
+        assert!(sequential_time(&m, 4096, false) < sequential_time(&m, 4096, true));
+    }
+
+    #[test]
+    fn scheduler_respects_conflicts() {
+        // Two conflicting unit tasks cannot overlap: makespan 2, not 1.
+        let tasks = vec![
+            SimTask { dur: 1.0, tiles: vec![0] },
+            SimTask { dur: 1.0, tiles: vec![0] },
+            SimTask { dur: 1.0, tiles: vec![1] },
+        ];
+        let ms = schedule(&tasks, 4);
+        assert!((ms - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scheduler_uses_workers() {
+        let tasks: Vec<SimTask> =
+            (0..8).map(|i| SimTask { dur: 1.0, tiles: vec![i] }).collect();
+        assert!((schedule(&tasks, 8) - 1.0).abs() < 1e-12);
+        assert!((schedule(&tasks, 2) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_triplet_iters_total_is_choose3() {
+        let (n, b) = (100u64, 16u64);
+        let nb = (n as usize).div_ceil(b as usize);
+        let mut total = 0u64;
+        for x in 0..nb {
+            for y in x..nb {
+                for z in y..nb {
+                    total += block_triplet_iters(n, b, x, y, z);
+                }
+            }
+        }
+        assert_eq!(total, ops::choose3(n));
+    }
+
+    #[test]
+    fn calibration_produces_positive_rates() {
+        let m = MachineParams::calibrated(true);
+        assert!(m.rate_pw_focus > 1e6);
+        assert!(m.rate_tr_focus > 1e6);
+        assert!(m.beta_local > 0.0 && m.beta_local < 1e-6);
+    }
+}

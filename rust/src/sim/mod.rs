@@ -1,0 +1,21 @@
+//! Simulators backing the paper's analyses on this single-core testbed.
+//!
+//! * [`cache`]   — set-associative LRU cache over address traces; validates
+//!   the blocked algorithms' miss behaviour empirically.
+//! * [`traffic`] — block-level word-traffic counters for the blocked
+//!   pairwise/triplet schedules; verifies Theorems 4.1/4.2 constants and
+//!   the 3NL lower bound of Section 4.1.
+//! * [`machine`] — calibrated multicore cost model (γ_cmp/γ_fma/β, NUMA
+//!   local/remote, reduction + barrier overheads) and a discrete-event
+//!   list scheduler for the triplet task DAG.
+//! * [`scaling`] — experiment drivers reproducing Figures 9–11/13 and
+//!   Table 2's parallel column.
+//!
+//! The container exposes a single physical core, so measured wall-clock
+//! parallel scaling is impossible; DESIGN.md §2 documents the substitution
+//! (real parallel *algorithms* + simulated *machine*).
+
+pub mod cache;
+pub mod machine;
+pub mod scaling;
+pub mod traffic;

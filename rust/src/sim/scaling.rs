@@ -1,0 +1,180 @@
+//! Scaling-study drivers: the rows/series behind Figures 9, 10, 11, 13 and
+//! Table 2's parallel column, produced from the machine model of
+//! [`crate::sim::machine`].
+
+use crate::sim::machine::{
+    pairwise_time, sequential_time, triplet_time, Breakdown, MachineParams, NumaMode,
+};
+use crate::sim::traffic;
+
+/// Strong-scaling efficiency series for one matrix size.
+#[derive(Clone, Debug)]
+pub struct ScalingSeries {
+    pub n: u64,
+    pub threads: Vec<usize>,
+    pub efficiency: Vec<f64>,
+}
+
+/// Figure 9: speedup of NUMA modes over the unbound baseline at p = 32.
+pub fn fig9_numa_speedups(mp: &MachineParams, sizes: &[u64], p: usize) -> Vec<(u64, f64, f64)> {
+    sizes
+        .iter()
+        .map(|&n| {
+            let b = traffic::pairwise_opt_block(mp.fast_mem_words);
+            let base = pairwise_time(mp, n, b, p, NumaMode::None).total();
+            let tb = pairwise_time(mp, n, b, p, NumaMode::ThreadBind).total();
+            let tmb = pairwise_time(mp, n, b, p, NumaMode::ThreadMemBind).total();
+            (n, base / tb, base / tmb)
+        })
+        .collect()
+}
+
+/// Figure 10: self-relative strong-scaling efficiency.
+pub fn fig10_strong_scaling(
+    mp: &MachineParams,
+    sizes: &[u64],
+    threads: &[usize],
+    pairwise: bool,
+    numa: bool,
+) -> Vec<ScalingSeries> {
+    sizes
+        .iter()
+        .map(|&n| {
+            let t1 = sequential_time(mp, n, pairwise);
+            let eff = threads
+                .iter()
+                .map(|&p| {
+                    let tp = scaled_time(mp, n, p, pairwise, numa);
+                    t1 / (p as f64 * tp)
+                })
+                .collect();
+            ScalingSeries { n, threads: threads.to_vec(), efficiency: eff }
+        })
+        .collect()
+}
+
+/// Figure 11: weak scaling — fix n^3 / p, n(p) = n1 * p^(1/3).
+pub fn fig11_weak_scaling(
+    mp: &MachineParams,
+    n1_sizes: &[u64],
+    threads: &[usize],
+    pairwise: bool,
+    numa: bool,
+) -> Vec<ScalingSeries> {
+    n1_sizes
+        .iter()
+        .map(|&n1| {
+            let t_ref = sequential_time(mp, n1, pairwise);
+            let eff = threads
+                .iter()
+                .map(|&p| {
+                    let n_p = ((n1 as f64) * (p as f64).powf(1.0 / 3.0)).round() as u64;
+                    let tp = scaled_time(mp, n_p, p, pairwise, numa);
+                    t_ref / tp
+                })
+                .collect();
+            ScalingSeries { n: n1, threads: threads.to_vec(), efficiency: eff }
+        })
+        .collect()
+}
+
+/// Figure 13: phase breakdown across thread counts.
+pub fn fig13_breakdown(
+    mp: &MachineParams,
+    n: u64,
+    threads: &[usize],
+    pairwise: bool,
+) -> Vec<(usize, Breakdown)> {
+    threads
+        .iter()
+        .map(|&p| {
+            let bd = if pairwise {
+                let b = traffic::pairwise_opt_block(mp.fast_mem_words);
+                pairwise_time(mp, n, b, p, NumaMode::ThreadMemBind)
+            } else {
+                let (bh, bt) = traffic::triplet_opt_blocks(mp.fast_mem_words);
+                triplet_time(mp, n, bh, bt, p, NumaMode::ThreadBind)
+            };
+            (p, bd)
+        })
+        .collect()
+}
+
+/// Predicted parallel speedup over the measured sequential time — used for
+/// Table 2 ("runtime at p=32") by scaling a *measured* single-thread run
+/// with the model's predicted efficiency at p.
+pub fn predicted_speedup(mp: &MachineParams, n: u64, p: usize, pairwise: bool, numa: bool) -> f64 {
+    let t1 = sequential_time(mp, n, pairwise);
+    let tp = scaled_time(mp, n, p, pairwise, numa);
+    t1 / tp
+}
+
+fn scaled_time(mp: &MachineParams, n: u64, p: usize, pairwise: bool, numa: bool) -> f64 {
+    if pairwise {
+        let b = traffic::pairwise_opt_block(mp.fast_mem_words);
+        let mode = if numa { NumaMode::ThreadMemBind } else { NumaMode::None };
+        pairwise_time(mp, n, b, p, mode).total()
+    } else {
+        let (bh, bt) = traffic::triplet_opt_blocks(mp.fast_mem_words);
+        let mode = if numa { NumaMode::ThreadBind } else { NumaMode::None };
+        triplet_time(mp, n, bh, bt, p, mode).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mp() -> MachineParams {
+        MachineParams::xeon_6226r()
+    }
+
+    #[test]
+    fn fig9_shapes() {
+        let rows = fig9_numa_speedups(&mp(), &[2048, 4096, 8192], 32);
+        for &(n, tb, tmb) in &rows {
+            assert!(tb > 1.0, "n={n} thread-bind speedup {tb}");
+            assert!(tmb >= tb, "n={n} mem-bind {tmb} < thread-bind {tb}");
+            assert!(tmb < 3.0);
+        }
+    }
+
+    #[test]
+    fn fig10_efficiency_in_unit_range_and_growing_with_n() {
+        let series = fig10_strong_scaling(&mp(), &[2048, 8192], &[1, 2, 4, 8, 16, 32], true, true);
+        for s in &series {
+            for &e in &s.efficiency {
+                assert!(e > 0.05 && e <= 1.35, "n={} eff={e}", s.n);
+            }
+        }
+        // larger problem scales better at p=32
+        let e_small = *series[0].efficiency.last().unwrap();
+        let e_large = *series[1].efficiency.last().unwrap();
+        assert!(e_large > e_small);
+    }
+
+    #[test]
+    fn fig11_weak_scaling_reasonable() {
+        let series = fig11_weak_scaling(&mp(), &[2048], &[1, 8, 32], true, true);
+        let eff = &series[0].efficiency;
+        assert!((eff[0] - 1.0).abs() < 0.05, "p=1 eff={}", eff[0]);
+        assert!(eff[2] > 0.2 && eff[2] < 1.0);
+    }
+
+    #[test]
+    fn fig13_overhead_grows_with_p_for_pairwise() {
+        let rows = fig13_breakdown(&mp(), 2048, &[1, 8, 32], true);
+        let frac = |bd: &Breakdown| bd.overhead_s / bd.total();
+        assert!(frac(&rows[2].1) > frac(&rows[0].1));
+    }
+
+    #[test]
+    fn table2_speedups_in_paper_ballpark() {
+        // Paper: 15.6x (n=5242), 19.7x (12008), 20.8x (23133) at p=32.
+        let m = mp();
+        let s1 = predicted_speedup(&m, 5242, 32, true, true);
+        let s3 = predicted_speedup(&m, 23133, 32, true, true);
+        assert!(s1 > 6.0 && s1 < 32.0, "s1={s1}");
+        assert!(s3 > s1, "bigger problems scale better: {s3} vs {s1}");
+    }
+}

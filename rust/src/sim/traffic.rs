@@ -1,0 +1,150 @@
+//! Block-level traffic accounting for the blocked schedules — the word
+//! counts of Theorems 4.1 and 4.2, computed by walking the block loop
+//! structure (not a per-access simulation, so it runs at any n).
+
+use crate::pald::ops;
+
+/// Words moved by the blocked pairwise schedule (Theorem 4.1 proof):
+/// per block pair: the `b x b` tile `D[X,Y]`; pass 1 reads the two `b`
+/// vectors `D[X,z]`, `D[Y,z]` per z; pass 2 reads them again plus
+/// reads+writes `C[X,z]`, `C[Y,z]`.
+pub fn pairwise_words_exact(n: u64, b: u64) -> u64 {
+    let nb = n.div_ceil(b);
+    let mut words = 0u64;
+    for xb in 0..nb {
+        let bx = (n - xb * b).min(b);
+        for yb in 0..=xb {
+            let by = (n - yb * b).min(b);
+            words += bx * by; // D[X,Y] tile
+            // pass 1: 2 b-vectors per z
+            words += n * (bx + by);
+            // pass 2: 2 b-vectors of D + read/write 2 b-vectors of C
+            words += n * (bx + by) + 2 * n * (bx + by);
+        }
+    }
+    words
+}
+
+/// Words moved by the blocked triplet schedule (Theorem 4.2 proof):
+/// focus pass (block size `bh`): per block triplet, 2 D tiles + 2 U tiles
+/// read + 2 U tiles written, with the (X,Y) tiles amortized over the Z
+/// loop; cohesion pass (block size `bt`): 2 D + 2 U tiles read, 4 C tiles
+/// read+written (with (X,Y) amortized).
+pub fn triplet_words_exact(n: u64, bh: u64, bt: u64) -> u64 {
+    let mut words = 0u64;
+    // ---- focus pass ----
+    let nbh = n.div_ceil(bh);
+    for xb in 0..nbh {
+        let bx = (n - xb * bh).min(bh);
+        for yb in xb..nbh {
+            let by = (n - yb * bh).min(bh);
+            // D[X,Y] read once; U[X,Y] read+written once for this (X,Y)
+            words += bx * by + 2 * bx * by;
+            for zb in yb..nbh {
+                let bz = (n - zb * bh).min(bh);
+                // D[X,Z], D[Y,Z] read; U[X,Z], U[Y,Z] read+written
+                words += bx * bz + by * bz + 2 * (bx * bz + by * bz);
+            }
+        }
+    }
+    // ---- cohesion pass ----
+    let nbt = n.div_ceil(bt);
+    for xb in 0..nbt {
+        let bx = (n - xb * bt).min(bt);
+        for yb in xb..nbt {
+            let by = (n - yb * bt).min(bt);
+            // D[X,Y], U[X,Y] read once; C[X,Y], C[Y,X] read+written once
+            words += 2 * bx * by + 4 * bx * by;
+            for zb in yb..nbt {
+                let bz = (n - zb * bt).min(bt);
+                // D/U tiles for (X,Z), (Y,Z)
+                words += 2 * (bx * bz + by * bz);
+                // C tiles (X,Z), (Z,X), (Y,Z), (Z,Y) read+written
+                words += 4 * (bx * bz + by * bz);
+            }
+        }
+    }
+    words
+}
+
+/// Optimal block size for pairwise under fast-memory `m` words
+/// (b ≈ sqrt(M/2), Theorem 4.1).
+pub fn pairwise_opt_block(m: u64) -> u64 {
+    (((m / 2) as f64).sqrt() as u64).max(1)
+}
+
+/// Optimal block sizes (b̂, b̃) for triplet (Theorem 4.2: sqrt(M/6), sqrt(M/12)).
+pub fn triplet_opt_blocks(m: u64) -> (u64, u64) {
+    (
+        (((m / 6) as f64).sqrt() as u64).max(1),
+        (((m / 12) as f64).sqrt() as u64).max(1),
+    )
+}
+
+/// Measured-to-lower-bound ratio for a given words count.
+pub fn vs_lower_bound(words: u64, n: u64, m: u64) -> f64 {
+    words as f64 / ops::lower_bound_words(n as f64, m as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairwise_matches_theorem_constant() {
+        // W -> 4 sqrt(2) n^3 / sqrt(M) for b = sqrt(M/2), large n/b.
+        let m = 1u64 << 14; // 16K words
+        let b = pairwise_opt_block(m);
+        let n = 64 * b;
+        let words = pairwise_words_exact(n, b);
+        let predicted = ops::pairwise_words(n as f64, m as f64);
+        let ratio = words as f64 / predicted;
+        assert!((ratio - 1.0).abs() < 0.15, "ratio={ratio}");
+    }
+
+    #[test]
+    fn triplet_matches_theorem_constant() {
+        let m = 1u64 << 14;
+        let (bh, bt) = triplet_opt_blocks(m);
+        let n = 24 * bh.max(bt);
+        let words = triplet_words_exact(n, bh, bt);
+        let predicted = ops::triplet_words(n as f64, m as f64);
+        let ratio = words as f64 / predicted;
+        assert!((ratio - 1.0).abs() < 0.25, "ratio={ratio}");
+    }
+
+    #[test]
+    fn both_respect_lower_bound() {
+        let m = 1u64 << 12;
+        let b = pairwise_opt_block(m);
+        let (bh, bt) = triplet_opt_blocks(m);
+        for &n in &[512u64, 1024, 2048] {
+            let wp = pairwise_words_exact(n, b);
+            let wt = triplet_words_exact(n, bh, bt);
+            assert!(vs_lower_bound(wp, n, m) >= 1.0, "pairwise below LB");
+            assert!(vs_lower_bound(wt, n, m) >= 1.0, "triplet below LB");
+            // constant-factor optimality: within ~12x of the bound
+            assert!(vs_lower_bound(wp, n, m) < 12.0);
+            assert!(vs_lower_bound(wt, n, m) < 14.0);
+        }
+    }
+
+    #[test]
+    fn pairwise_moves_less_than_triplet_at_optimal_blocks() {
+        // The paper's conclusion from Theorems 4.1/4.2.
+        let m = 1u64 << 14;
+        let n = 4096;
+        let wp = pairwise_words_exact(n, pairwise_opt_block(m));
+        let (bh, bt) = triplet_opt_blocks(m);
+        let wt = triplet_words_exact(n, bh, bt);
+        assert!(wp < wt, "wp={wp} wt={wt}");
+    }
+
+    #[test]
+    fn bigger_blocks_mean_less_traffic() {
+        let n = 2048;
+        let w64 = pairwise_words_exact(n, 64);
+        let w256 = pairwise_words_exact(n, 256);
+        assert!(w256 < w64);
+    }
+}

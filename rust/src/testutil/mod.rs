@@ -1,0 +1,71 @@
+//! Property-testing driver (proptest is unavailable offline): runs a
+//! property over many seeded random cases and reports the first failing
+//! seed so failures reproduce exactly.
+
+use crate::core::Mat;
+use crate::data::distmat;
+use crate::data::prng::Rng;
+
+/// Run `prop(seed, case_index)` for `cases` deterministic seeds derived
+/// from `master_seed`; panics with the failing seed on first error.
+pub fn check_cases(master_seed: u64, cases: usize, prop: impl Fn(u64, usize) -> Result<(), String>) {
+    let mut rng = Rng::new(master_seed);
+    for i in 0..cases {
+        let seed = rng.next_u64();
+        if let Err(msg) = prop(seed, i) {
+            panic!("property failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random problem size in `[lo, hi]` from a seed (log-uniform-ish).
+pub fn random_size(seed: u64, lo: usize, hi: usize) -> usize {
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Random tie-free distance matrix with size drawn from the seed.
+pub fn random_problem(seed: u64, lo: usize, hi: usize) -> Mat {
+    distmat::random_tie_free(random_size(seed, lo, hi), seed)
+}
+
+/// Assert helper returning Result for use in properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Relative-tolerance matrix comparison for properties.
+pub fn matrices_close(a: &Mat, b: &Mat, rtol: f32, atol: f32) -> Result<(), String> {
+    ensure(
+        a.allclose(b, rtol, atol),
+        format!("matrices differ: maxdiff={}", a.max_abs_diff(b)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_cases_passes_good_property() {
+        check_cases(1, 20, |_seed, _i| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_cases_reports_failing_seed() {
+        check_cases(1, 20, |seed, _| ensure(seed % 3 != 0, "divisible by 3"));
+    }
+
+    #[test]
+    fn random_sizes_within_bounds() {
+        for s in 0..100u64 {
+            let n = random_size(s, 4, 40);
+            assert!((4..=40).contains(&n));
+        }
+    }
+}

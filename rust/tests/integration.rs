@@ -1,0 +1,152 @@
+//! Cross-module integration tests: data substrates -> PaLD -> analysis,
+//! the coordinator's backend dispatch, and (when artifacts exist) the
+//! full three-layer XLA path.
+
+use std::path::{Path, PathBuf};
+
+use paldx::analysis;
+use paldx::coordinator::{Coordinator, Job};
+use paldx::data::{distmat, embeddings, graph};
+use paldx::pald::{self, Algorithm, Backend, PaldConfig, TieMode};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Graph -> APSP -> PaLD -> communities, end to end.
+#[test]
+fn graph_to_communities_pipeline() {
+    let g = graph::collaboration_network(240, 11);
+    let (lcc, _) = g.largest_component();
+    let d = lcc.apsp(true);
+    distmat::validate(&d).unwrap();
+    let c = pald::compute_cohesion(&d, &PaldConfig::default()).unwrap();
+    let ties = analysis::strong_ties(&c);
+    assert!(!ties.is_empty(), "collaboration network must have strong ties");
+    let comms = analysis::communities(&c);
+    let ncomm = comms.iter().collect::<std::collections::HashSet<_>>().len();
+    // Community-structured input should yield multiple communities.
+    assert!(ncomm > 1, "ncomm={ncomm}");
+}
+
+/// Embeddings -> PaLD: dense cluster gets more strong ties than sparse
+/// cluster (the Section 7 qualitative result at reduced scale).
+#[test]
+fn embeddings_density_adaptivity() {
+    let vocab = embeddings::sonnets_like(400, 32, 2022);
+    let d = vocab.distance_matrix();
+    let c = pald::compute_cohesion(&d, &PaldConfig::default()).unwrap();
+    let tau = analysis::universal_threshold(&c);
+    let ties_of = |probe: &str| {
+        let p = vocab.index_of(probe).unwrap();
+        (0..vocab.len())
+            .filter(|&i| i != p && c[(p, i)].min(c[(i, p)]) > tau)
+            .count()
+    };
+    let guilt = ties_of("guilt");
+    let halt = ties_of("halt");
+    assert!(guilt > halt, "dense cluster ({guilt}) must out-tie sparse ({halt})");
+    assert!(halt >= 1, "sparse cluster still has ties");
+}
+
+/// Coordinator native dispatch across algorithms.
+#[test]
+fn coordinator_native_backends_agree() {
+    let d = distmat::random_tie_free(60, 3);
+    let mut coord = Coordinator::new();
+    let mk = |alg| Job {
+        config: PaldConfig { algorithm: alg, threads: 3, block: 16, ..Default::default() },
+        artifacts_dir: artifacts_dir(),
+    };
+    let c1 = coord.run(&d, &mk(Algorithm::OptimizedPairwise)).unwrap();
+    let c2 = coord.run(&d, &mk(Algorithm::ParallelTriplet)).unwrap();
+    assert!(c1.allclose(&c2, 1e-4, 1e-5));
+    assert_eq!(coord.metrics.jobs().len(), 2);
+}
+
+/// The full three-layer path: AOT artifact via PJRT == native kernels.
+#[test]
+fn xla_backend_matches_native() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    for n in [60usize, 128, 200] {
+        let d = distmat::random_tie_free(n, n as u64);
+        let mut coord = Coordinator::new();
+        let xla = Job {
+            config: PaldConfig { backend: Backend::Xla, ..Default::default() },
+            artifacts_dir: artifacts_dir(),
+        };
+        let native = Job {
+            config: PaldConfig { algorithm: Algorithm::OptimizedTriplet, ..Default::default() },
+            artifacts_dir: artifacts_dir(),
+        };
+        let c_xla = coord.run(&d, &xla).unwrap();
+        let c_nat = coord.run(&d, &native).unwrap();
+        assert_eq!(c_xla.rows(), n);
+        assert!(
+            c_nat.allclose(&c_xla, 1e-4, 1e-5),
+            "n={n} maxdiff={}",
+            c_nat.max_abs_diff(&c_xla)
+        );
+    }
+}
+
+/// XLA split-mode artifact handles tied distances exactly.
+#[test]
+fn xla_split_mode_with_ties() {
+    if !have_artifacts() {
+        return;
+    }
+    let d = distmat::random_tied(40, 5, 4);
+    let mut coord = Coordinator::new();
+    let xla = Job {
+        config: PaldConfig {
+            backend: Backend::Xla,
+            tie_mode: TieMode::Split,
+            ..Default::default()
+        },
+        artifacts_dir: artifacts_dir(),
+    };
+    let c_xla = coord.run(&d, &xla).unwrap();
+    let native = pald::compute_cohesion(
+        &d,
+        &PaldConfig { tie_mode: TieMode::Split, ..Default::default() },
+    )
+    .unwrap();
+    assert!(
+        native.allclose(&c_xla, 1e-4, 1e-5),
+        "maxdiff={}",
+        native.max_abs_diff(&c_xla)
+    );
+}
+
+/// Padding contract: any n <= artifact size gives the exact n-point answer.
+#[test]
+fn xla_padding_across_sizes() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut coord = Coordinator::new();
+    for n in [17usize, 33, 100, 127, 128] {
+        let d = distmat::random_tie_free(n, 1000 + n as u64);
+        let xla = Job {
+            config: PaldConfig { backend: Backend::Xla, ..Default::default() },
+            artifacts_dir: artifacts_dir(),
+        };
+        let c = coord.run(&d, &xla).unwrap();
+        let want = pald::compute_cohesion(&d, &PaldConfig::default()).unwrap();
+        assert!(
+            want.allclose(&c, 1e-4, 1e-5),
+            "n={n} maxdiff={}",
+            want.max_abs_diff(&c)
+        );
+        // mass invariant survives the padded path
+        assert!((c.sum() - n as f64 / 2.0).abs() < 1e-3);
+    }
+}

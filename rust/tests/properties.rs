@@ -1,0 +1,177 @@
+//! Property-based integration tests: the PaLD invariants of DESIGN.md §3,
+//! checked across randomized sizes/seeds via the first-party
+//! property-test driver (`testutil`).
+
+use paldx::core::Mat;
+use paldx::data::{distmat, prng::Rng};
+use paldx::pald::{self, Algorithm, PaldConfig, TieMode};
+use paldx::testutil::{check_cases, ensure, matrices_close, random_problem, random_size};
+
+fn compute(d: &Mat, alg: Algorithm, tie: TieMode, block: usize, threads: usize) -> Mat {
+    let cfg = PaldConfig {
+        algorithm: alg,
+        tie_mode: tie,
+        block,
+        block2: block / 2,
+        threads,
+        ..Default::default()
+    };
+    pald::compute_cohesion(d, &cfg).expect("compute_cohesion")
+}
+
+/// Invariant 1: total cohesion mass is exactly n/2 (each pair distributes
+/// one unit of support, scaled by 1/(n-1)).
+#[test]
+fn prop_total_mass() {
+    check_cases(0xA11CE, 12, |seed, _| {
+        let d = random_problem(seed, 4, 60);
+        let n = d.rows() as f64;
+        for alg in [Algorithm::OptimizedPairwise, Algorithm::OptimizedTriplet] {
+            let c = compute(&d, alg, TieMode::Strict, 16, 1);
+            let total = c.sum();
+            ensure(
+                (total - n / 2.0).abs() < 1e-3,
+                format!("{}: total={total} want {}", alg.name(), n / 2.0),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 4: every rung of both algorithm families agrees with the
+/// naive pairwise reference (strict mode, tie-free inputs).
+#[test]
+fn prop_all_variants_agree() {
+    check_cases(0xBEEF, 8, |seed, _| {
+        let d = random_problem(seed, 8, 48);
+        let reference = compute(&d, Algorithm::NaivePairwise, TieMode::Strict, 0, 1);
+        for alg in Algorithm::ALL {
+            let c = compute(&d, alg, TieMode::Strict, 8, 4);
+            matrices_close(&c, &reference, 1e-4, 1e-5)
+                .map_err(|e| format!("{}: {e}", alg.name()))?;
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 4 (split): exact tie splitting agrees across variants on
+/// heavily tied inputs.
+#[test]
+fn prop_split_mode_agreement_with_ties() {
+    check_cases(0xD00D, 8, |seed, _| {
+        let n = random_size(seed, 6, 32);
+        let d = distmat::random_tied(n, seed, 5);
+        let reference = compute(&d, Algorithm::NaivePairwise, TieMode::Split, 0, 1);
+        for alg in [
+            Algorithm::NaiveTriplet,
+            Algorithm::BlockedPairwise,
+            Algorithm::BlockedTriplet,
+            Algorithm::BranchFreePairwise,
+            Algorithm::BranchFreeTriplet,
+            Algorithm::OptimizedPairwise,
+            Algorithm::OptimizedTriplet,
+            Algorithm::ParallelPairwise,
+            Algorithm::ParallelTriplet,
+        ] {
+            let c = compute(&d, alg, TieMode::Split, 8, 3);
+            matrices_close(&c, &reference, 1e-4, 1e-5)
+                .map_err(|e| format!("{}: {e}", alg.name()))?;
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 2: cohesion is invariant under uniform distance scaling.
+#[test]
+fn prop_scale_invariance() {
+    check_cases(0x5CA1E, 10, |seed, _| {
+        let d = random_problem(seed, 5, 40);
+        let mut rng = Rng::new(seed);
+        let factor = rng.uniform_in(0.01, 100.0);
+        let mut d2 = d.clone();
+        d2.scale(factor);
+        let c1 = compute(&d, Algorithm::OptimizedTriplet, TieMode::Strict, 16, 1);
+        let c2 = compute(&d2, Algorithm::OptimizedTriplet, TieMode::Strict, 16, 1);
+        matrices_close(&c1, &c2, 1e-5, 1e-6)
+    });
+}
+
+/// Invariant 3: relabeling points permutes C identically (split mode
+/// exact; strict mode needs tie-free input, which random_problem gives).
+#[test]
+fn prop_permutation_equivariance() {
+    check_cases(0x9E47, 10, |seed, _| {
+        let d = random_problem(seed, 5, 36);
+        let n = d.rows();
+        let mut rng = Rng::new(seed ^ 1);
+        let p = rng.permutation(n);
+        let dp = Mat::from_fn(n, n, |i, j| d[(p[i], p[j])]);
+        let c = compute(&d, Algorithm::OptimizedPairwise, TieMode::Strict, 8, 1);
+        let cp = compute(&dp, Algorithm::OptimizedPairwise, TieMode::Strict, 8, 1);
+        let want = Mat::from_fn(n, n, |i, j| c[(p[i], p[j])]);
+        matrices_close(&cp, &want, 1e-4, 1e-5)
+    });
+}
+
+/// Invariant 5: focus sizes in [2, n]; local depths in (0, 1]; C >= 0.
+#[test]
+fn prop_bounds() {
+    check_cases(0xB0B5, 10, |seed, _| {
+        let d = random_problem(seed, 4, 50);
+        let n = d.rows();
+        let c = compute(&d, Algorithm::OptimizedTriplet, TieMode::Strict, 16, 1);
+        for x in 0..n {
+            let mut depth = 0.0f32;
+            for z in 0..n {
+                ensure(c[(x, z)] >= 0.0, format!("negative cohesion at ({x},{z})"))?;
+                depth += c[(x, z)];
+            }
+            ensure(
+                depth > 0.0 && depth <= 1.0 + 1e-5,
+                format!("local depth out of range: {depth}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Parallel determinism.  The pairwise runtime is bitwise deterministic
+/// (disjoint column ownership + integer U reduction); the triplet task
+/// graph — like its OpenMP original — executes conflicting tasks in a
+/// run-dependent order, so floating-point summation order varies and only
+/// tolerance-level reproducibility is promised.
+#[test]
+fn prop_parallel_determinism() {
+    check_cases(0xDE7, 6, |seed, _| {
+        let d = random_problem(seed, 16, 48);
+        let a = compute(&d, Algorithm::ParallelPairwise, TieMode::Strict, 8, 4);
+        let b = compute(&d, Algorithm::ParallelPairwise, TieMode::Strict, 8, 4);
+        ensure(a.as_slice() == b.as_slice(), "par-pairwise must be bitwise deterministic")?;
+        let a = compute(&d, Algorithm::ParallelTriplet, TieMode::Strict, 8, 4);
+        let b = compute(&d, Algorithm::ParallelTriplet, TieMode::Strict, 8, 4);
+        matrices_close(&a, &b, 1e-5, 1e-6)
+    });
+}
+
+/// Degenerate and edge-case inputs.
+#[test]
+fn edge_cases() {
+    // n = 2: single pair; focus = {x, y}; u = 2; z=x supports x, z=y
+    // supports y: C = I * (0.5 / (n-1) = 0.5)... verify directly.
+    let d = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+    let c = compute(&d, Algorithm::NaivePairwise, TieMode::Strict, 0, 1);
+    assert!((c[(0, 0)] - 0.5).abs() < 1e-6);
+    assert!((c[(1, 1)] - 0.5).abs() < 1e-6);
+    assert_eq!(c[(0, 1)], 0.0);
+
+    // n = 3 equilateral (all ties): split mode stays symmetric.
+    let d = Mat::from_vec(3, 3, vec![0.0, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0]);
+    let c = compute(&d, Algorithm::NaivePairwise, TieMode::Split, 0, 1);
+    for i in 0..3 {
+        for j in 0..3 {
+            let (a, b) = (c[(i, j)], c[(j, i)]);
+            assert!((a - b).abs() < 1e-6, "asymmetric under full symmetry");
+        }
+    }
+    assert!((c.sum() - 1.5).abs() < 1e-5);
+}
