@@ -37,7 +37,8 @@ fn main() -> anyhow::Result<()> {
         let t_apsp = t0.elapsed().as_secs_f64();
 
         let cfg = PaldConfig { algorithm: Algorithm::OptimizedPairwise, ..Default::default() };
-        let (c, t_pald) = compute_cohesion_timed(&d, &cfg)?;
+        let (c, times) = compute_cohesion_timed(&d, &cfg)?;
+        let t_pald = times.total_s;
 
         let speedup = scaling::predicted_speedup(&mp, d.rows() as u64, 32, true, true);
         let comms = analysis::communities(&c);

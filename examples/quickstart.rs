@@ -18,11 +18,16 @@ fn main() -> anyhow::Result<()> {
     let n = d.rows();
     println!("dataset: n={n}, 3 clusters with spreads {spreads:?}");
 
-    // Compute cohesion with the paper's best sequential variant.
-    let cfg = PaldConfig { algorithm: Algorithm::OptimizedTriplet, ..Default::default() };
-    let (c, secs) = compute_cohesion_timed(&d, &cfg)?;
+    // Let the planner pick the kernel + block sizes for this shape
+    // (`Algorithm::Auto`); pin e.g. OptimizedTriplet to override.
+    let cfg = PaldConfig { algorithm: Algorithm::Auto, ..Default::default() };
+    println!("plan: {}", paldx::pald::plan_for(&cfg, n).describe());
+    let (c, times) = compute_cohesion_timed(&d, &cfg)?;
+    let secs = times.total_s;
     println!("cohesion: {} in {:.3}s ({:.1}M triplets/s)", cfg.algorithm.name(), secs,
              (n * n * n) as f64 / 6.0 / secs / 1e6);
+    println!("phases: focus {:.3}s, cohesion {:.3}s, normalize {:.3}s",
+             times.focus_s, times.cohesion_s, times.normalize_s);
 
     // The universal threshold needs no tuning.
     let tau = analysis::universal_threshold(&c);

@@ -88,11 +88,23 @@ pub fn full_scale() -> bool {
     std::env::var("PALDX_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
-/// A printable results table.
+/// A machine-readable measurement attached to a table: one benchmarked
+/// algorithm/configuration with its trial statistics.
+#[derive(Clone, Debug)]
+pub struct StatEntry {
+    /// Algorithm or configuration label (e.g. `opt-pairwise/n=512`).
+    pub label: String,
+    pub stats: Stats,
+}
+
+/// A printable results table, optionally carrying the raw [`Stats`]
+/// behind its formatted cells so the JSON report can be emitted alongside
+/// the Markdown.
 pub struct Table {
     pub title: String,
     pub headers: Vec<String>,
     pub rows: Vec<Vec<String>>,
+    pub stats: Vec<StatEntry>,
 }
 
 impl Table {
@@ -101,12 +113,18 @@ impl Table {
             title: title.into(),
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            stats: Vec::new(),
         }
     }
 
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells);
+    }
+
+    /// Record the raw statistics behind a formatted row.
+    pub fn stat(&mut self, label: impl Into<String>, stats: Stats) {
+        self.stats.push(StatEntry { label: label.into(), stats });
     }
 
     /// Markdown rendering (the format EXPERIMENTS.md embeds directly).
@@ -151,6 +169,72 @@ impl Table {
     pub fn print(&self) {
         println!("{}", self.markdown());
     }
+}
+
+/// Minimal JSON string escaping (labels/titles are plain ASCII-ish).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON document for one experiment's measured tables: per-algorithm
+/// mean/min/max/stddev (seconds) and trial counts, so the perf trajectory
+/// can be tracked across PRs (`BENCH_<exp>.json`).
+pub fn json_report(exp: &str, tables: &[&Table]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{{\n  \"experiment\": \"{}\",\n  \"tables\": [", json_escape(exp)));
+    let mut first_t = true;
+    for t in tables {
+        if !first_t {
+            out.push(',');
+        }
+        first_t = false;
+        out.push_str(&format!("\n    {{\n      \"title\": \"{}\",\n      \"entries\": [", json_escape(&t.title)));
+        let mut first_e = true;
+        for e in &t.stats {
+            if !first_e {
+                out.push(',');
+            }
+            first_e = false;
+            out.push_str(&format!(
+                "\n        {{\"label\": \"{}\", \"mean_s\": {:.9e}, \"min_s\": {:.9e}, \"max_s\": {:.9e}, \"stddev_s\": {:.9e}, \"trials\": {}}}",
+                json_escape(&e.label),
+                e.stats.mean,
+                e.stats.min,
+                e.stats.max,
+                e.stats.stddev,
+                e.stats.trials
+            ));
+        }
+        out.push_str("\n      ]\n    }");
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Write `BENCH_<exp>.json` for an experiment's tables if any of them
+/// carry raw stats; returns the path written.
+pub fn write_json_report(
+    dir: &std::path::Path,
+    exp: &str,
+    tables: &[&Table],
+) -> std::io::Result<Option<std::path::PathBuf>> {
+    if tables.iter().all(|t| t.stats.is_empty()) {
+        return Ok(None);
+    }
+    let path = dir.join(format!("BENCH_{exp}.json"));
+    std::fs::write(&path, json_report(exp, tables))?;
+    Ok(Some(path))
 }
 
 /// Human formatting helpers used across benches.
@@ -205,6 +289,38 @@ mod tests {
         assert!(md.contains("### Table 1"));
         assert!(md.contains("| n   | time  |"));
         assert!(md.lines().count() >= 5);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut t = Table::new("Figure 3 — ladder", &["variant", "time"]);
+        t.row(vec!["naive".into(), "1.0".into()]);
+        t.stat("naive-pairwise", Stats::from_times(&[1.0, 2.0]));
+        let js = json_report("fig3", &[&t]);
+        assert!(js.contains("\"experiment\": \"fig3\""));
+        assert!(js.contains("\"label\": \"naive-pairwise\""));
+        assert!(js.contains("\"trials\": 2"));
+        // escaping
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn json_report_skipped_without_stats() {
+        let t = Table::new("sim only", &["a"]);
+        let dir = std::env::temp_dir();
+        let wrote = write_json_report(&dir, "simexp", &[&t]).unwrap();
+        assert!(wrote.is_none());
+    }
+
+    #[test]
+    fn json_report_written_with_stats() {
+        let mut t = Table::new("measured", &["a"]);
+        t.stat("x", Stats::from_times(&[0.5]));
+        let dir = std::env::temp_dir();
+        let path = write_json_report(&dir, "paldx_test_exp", &[&t]).unwrap().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"experiment\": \"paldx_test_exp\""));
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -2,10 +2,11 @@
 //!
 //! Commands:
 //! * `compute`   — cohesion of a distance matrix (generated or from file)
+//! * `plan`      — print the planner's kernel/block/thread choice for a shape
 //! * `analyze`   — strong ties / communities of a computed cohesion matrix
 //! * `repro`     — regenerate a paper table/figure (`--exp fig3|...|all`)
 //! * `calibrate` — print this machine's calibrated model parameters
-//! * `info`      — artifact + backend inventory
+//! * `info`      — kernel registry + artifact inventory
 
 mod args;
 pub mod config;
@@ -19,7 +20,7 @@ use crate::bench::BenchOpts;
 use crate::coordinator::{Coordinator, Job};
 use crate::data::distmat;
 use crate::io;
-use crate::pald::{Algorithm, Backend, PaldConfig, TieMode};
+use crate::pald::{Algorithm, Backend, PaldConfig, Planner, TieMode, REGISTRY};
 use crate::repro;
 
 const USAGE: &str = "\
@@ -29,14 +30,17 @@ USAGE: paldx <command> [--options]
 
 COMMANDS:
   compute    --n <int> | --input <path.{bin,csv}>   compute a cohesion matrix
-             [--alg <name>] [--tie strict|split] [--block B] [--block2 B]
+             [--alg <name>|auto] [--tie strict|split] [--block B] [--block2 B]
              [--threads P] [--backend native|xla] [--output <path>]
+  plan       --n <int> [--threads P] [--tie strict|split] [--calibrate]
+             print the plan `--alg auto` would execute for this shape
   analyze    --input <cohesion.{bin,csv}> [--top K]  strong ties & communities
   repro      --exp fig3|fig4|table1|fig9|fig10|fig11|fig13|table2|peak|bounds|ablation|xla|all
+             [--bench-dir DIR]  (measured experiments also emit BENCH_<exp>.json)
   calibrate                                         measure machine constants
-  info       [--artifacts DIR]                      artifact inventory
+  info       [--artifacts DIR]                      kernel registry + artifacts
 
-Algorithms: naive-pairwise naive-triplet blocked-pairwise blocked-triplet
+Algorithms: auto + naive-pairwise naive-triplet blocked-pairwise blocked-triplet
             branchfree-pairwise branchfree-triplet opt-pairwise opt-triplet
             par-pairwise par-triplet hybrid par-hybrid
 Env: PALDX_FULL=1 (paper-scale sizes), PALDX_TRIALS, PALDX_BUDGET_S,
@@ -47,6 +51,7 @@ pub fn run(raw: Vec<String>) -> anyhow::Result<()> {
     let args = Args::parse(&raw)?;
     match args.command.as_deref() {
         Some("compute") => cmd_compute(&args),
+        Some("plan") => cmd_plan(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("repro") => cmd_repro(&args),
         Some("calibrate") => cmd_calibrate(),
@@ -119,6 +124,34 @@ fn cmd_compute(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `paldx plan --n N [--threads P] [--tie ...]`: print the plan the
+/// planner would execute for `--alg auto` on an `N x N` problem.
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 256)?;
+    if n < 2 {
+        anyhow::bail!("--n must be at least 2");
+    }
+    let mut cfg = config_from(args)?;
+    cfg.algorithm = Algorithm::Auto;
+    let planner = if args.flag("calibrate") { Planner::calibrated() } else { Planner::new() };
+    let plan = planner.resolve(&cfg, n);
+    println!("plan for n={n} threads={} tie={:?}:", cfg.threads, cfg.tie_mode);
+    println!("  {}", plan.describe());
+    // Show the planner's actual candidate set and predictions.
+    for (alg, params, cost) in
+        planner.scored_candidates(n, cfg.tie_mode, cfg.threads.max(1))
+    {
+        let marker = if alg == plan.algorithm { " <- selected" } else { "" };
+        println!(
+            "  candidate {:<16} block={:<4} block2={:<4} predicted={cost:.3e}s{marker}",
+            alg.name(),
+            params.block,
+            params.block2
+        );
+    }
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     let path = args
         .get("input")
@@ -142,53 +175,69 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     let full = crate::bench::full_scale();
     let opts = BenchOpts::from_env();
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let bench_dir = PathBuf::from(args.get_or("bench-dir", "."));
 
     let n_fig = if full { 2048 } else { args.get_usize("n", 512)? };
     let run = |name: &str| exp == "all" || exp == name;
+    // Print the Markdown tables and, for measured experiments, write the
+    // machine-readable BENCH_<exp>.json next to them.
+    let emit = |name: &str, tables: &[&crate::bench::Table]| {
+        for t in tables {
+            t.print();
+        }
+        match crate::bench::write_json_report(&bench_dir, name, tables) {
+            Ok(Some(path)) => println!("wrote {}", path.display()),
+            Ok(None) => {}
+            Err(e) => eprintln!("could not write BENCH_{name}.json: {e}"),
+        }
+    };
 
     if run("fig3") {
-        repro::fig3(n_fig, &opts).print();
+        emit("fig3", &[&repro::fig3(n_fig, &opts)]);
     }
     if run("fig4") {
         let (a, b) = repro::fig4(n_fig, &opts);
-        a.print();
-        b.print();
+        emit("fig4", &[&a, &b]);
     }
     if run("table1") {
         let sizes: Vec<usize> =
             if full { vec![128, 256, 512, 1024, 2048, 4096] } else { vec![128, 256, 512, 1024] };
-        repro::table1(&sizes, &opts).print();
+        emit("table1", &[&repro::table1(&sizes, &opts)]);
     }
     if run("fig9") {
-        repro::fig9(&[2048, 4096, 8192]).print();
+        emit("fig9", &[&repro::fig9(&[2048, 4096, 8192])]);
     }
     if run("fig10") {
-        repro::fig10(&[2048, 4096, 8192], true).print();
-        repro::fig10(&[2048, 4096, 8192], false).print();
+        emit(
+            "fig10",
+            &[&repro::fig10(&[2048, 4096, 8192], true), &repro::fig10(&[2048, 4096, 8192], false)],
+        );
     }
     if run("fig11") {
-        repro::fig11(&[2048, 4096, 8192], true).print();
-        repro::fig11(&[2048, 4096, 8192], false).print();
+        emit(
+            "fig11",
+            &[&repro::fig11(&[2048, 4096, 8192], true), &repro::fig11(&[2048, 4096, 8192], false)],
+        );
     }
     if run("fig13") {
-        repro::fig13(2048).print();
+        emit("fig13", &[&repro::fig13(2048)]);
     }
     if run("table2") {
         let scale = if full { 1 } else { args.get_usize("scale-div", 8)? };
-        repro::table2(scale, &opts).print();
+        emit("table2", &[&repro::table2(scale, &opts)]);
     }
     if run("peak") {
-        repro::appendix_peak(if full { 2048 } else { 512 }, &opts).print();
+        emit("peak", &[&repro::appendix_peak(if full { 2048 } else { 512 }, &opts)]);
     }
     if run("ablation") {
-        repro::ablation(if full { 2048 } else { 512 }, &opts).print();
+        emit("ablation", &[&repro::ablation(if full { 2048 } else { 512 }, &opts)]);
     }
     if run("bounds") {
-        repro::bounds().print();
+        emit("bounds", &[&repro::bounds()]);
     }
     if run("xla") {
         match repro::xla_check(200, &artifacts) {
-            Ok(t) => t.print(),
+            Ok(t) => emit("xla", &[&t]),
             Err(e) => println!("xla check skipped/failed: {e}"),
         }
     }
@@ -210,10 +259,19 @@ fn cmd_calibrate() -> anyhow::Result<()> {
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    println!("paldx {} — algorithms:", env!("CARGO_PKG_VERSION"));
-    for alg in Algorithm::ALL {
-        println!("  {}", alg.name());
+    println!("paldx {} — kernel registry:", env!("CARGO_PKG_VERSION"));
+    for k in REGISTRY {
+        let m = k.meta();
+        println!(
+            "  {:<20} family={:?} rung={:?} parallel={} block2={}",
+            k.name(),
+            m.family,
+            m.rung,
+            m.parallel,
+            m.uses_block2
+        );
     }
+    println!("  {:<20} planner-selected kernel + block sizes", Algorithm::Auto.name());
     match crate::runtime::Manifest::load(&dir) {
         Ok(m) => {
             println!("artifacts in {}:", dir.display());
@@ -262,6 +320,18 @@ mod tests {
         assert_eq!(c.rows(), 48);
         // analyze the result
         run(argv(&["analyze", "--input", out.to_str().unwrap(), "--top", "3"])).unwrap();
+    }
+
+    #[test]
+    fn plan_command_runs() {
+        run(argv(&["plan", "--n", "256"])).unwrap();
+        run(argv(&["plan", "--n", "512", "--threads", "8", "--tie", "split"])).unwrap();
+        assert!(run(argv(&["plan", "--n", "1"])).is_err());
+    }
+
+    #[test]
+    fn compute_with_auto_algorithm() {
+        run(argv(&["compute", "--n", "32", "--alg", "auto"])).unwrap();
     }
 
     #[test]

@@ -43,16 +43,26 @@ impl Coordinator {
         Coordinator { xla: None, metrics: MetricsRegistry::default() }
     }
 
-    /// Compute cohesion for `d` under `job`, recording metrics.
+    /// Compute cohesion for `d` under `job`, recording metrics.  Metrics
+    /// attribute the *resolved* kernel (never "auto"), so per-kernel
+    /// timings stay meaningful under planner-selected jobs.
     pub fn run(&mut self, d: &Mat, job: &Job) -> anyhow::Result<Mat> {
         let t0 = std::time::Instant::now();
+        let algorithm = match job.config.backend {
+            // Invalid shapes are rejected by compute_cohesion below; skip
+            // planning for them so the error path stays panic-free.
+            Backend::Native if d.rows() >= 2 && d.rows() == d.cols() => {
+                pald::plan_for(&job.config, d.rows()).algorithm.name()
+            }
+            _ => job.config.algorithm.name(),
+        };
         let c = match job.config.backend {
             Backend::Native => pald::compute_cohesion(d, &job.config)?,
             Backend::Xla => self.run_xla(d, job)?,
         };
         self.metrics.record(JobMetrics {
             n: d.rows(),
-            algorithm: job.config.algorithm.name().to_string(),
+            algorithm: algorithm.to_string(),
             backend: format!("{:?}", job.config.backend),
             seconds: t0.elapsed().as_secs_f64(),
         });
@@ -73,14 +83,14 @@ impl Coordinator {
     }
 
     /// Plan summary for logging: which backend/artifact a job would use.
+    /// `Algorithm::Auto` is resolved through the planner so the log shows
+    /// the concrete kernel + tuned block sizes that will execute.
     pub fn plan(&mut self, n: usize, job: &Job) -> anyhow::Result<String> {
         Ok(match job.config.backend {
-            Backend::Native => format!(
-                "native algorithm={} threads={} block={}",
-                job.config.algorithm.name(),
-                job.config.threads,
-                job.config.block
-            ),
+            Backend::Native => {
+                let plan = pald::plan_for(&job.config, n);
+                format!("native {}", plan.describe())
+            }
             Backend::Xla => {
                 if self.xla.is_none() {
                     self.xla = Some(XlaRuntime::new(&job.artifacts_dir)?);
@@ -148,5 +158,22 @@ mod tests {
         let mut coord = Coordinator::new();
         let plan = coord.plan(100, &Job::default()).unwrap();
         assert!(plan.contains("native"));
+        assert!(plan.contains("algorithm="));
+    }
+
+    #[test]
+    fn auto_jobs_resolve_and_run() {
+        let mut coord = Coordinator::new();
+        let d = distmat::random_tie_free(32, 5);
+        let job = Job {
+            config: PaldConfig { algorithm: Algorithm::Auto, ..Default::default() },
+            ..Default::default()
+        };
+        let plan = coord.plan(32, &job).unwrap();
+        assert!(!plan.contains("algorithm=auto"), "plan must name the concrete kernel: {plan}");
+        let c = coord.run(&d, &job).unwrap();
+        assert!((c.sum() - 16.0).abs() < 1e-3);
+        // Metrics attribute the resolved kernel, not the Auto directive.
+        assert_ne!(coord.metrics.jobs()[0].algorithm, "auto");
     }
 }

@@ -60,6 +60,20 @@ pub fn random_tied(n: usize, seed: u64, levels: u32) -> Mat {
     d
 }
 
+/// Distance matrix of `n` points drawn (with repetition) from `distinct`
+/// locations on a line: maximally tie-heavy, including exact zero
+/// distances between duplicated points.  This is the adversarial input
+/// for `TieMode::Split` (strict mode is undefined on it by design).
+pub fn random_duplicated(n: usize, seed: u64, distinct: usize) -> Mat {
+    assert!(distinct >= 2);
+    let mut rng = Rng::new(seed);
+    // Distinct locations spaced >= 1 apart so cross-location distances
+    // never collide with the zero self-distances.
+    let locs: Vec<f32> = (0..distinct).map(|k| 2.0 * k as f32 + 1.0).collect();
+    let assign: Vec<f32> = (0..n).map(|_| locs[rng.below(distinct)]).collect();
+    Mat::from_fn(n, n, |x, y| (assign[x] - assign[y]).abs())
+}
+
 /// Euclidean distance matrix from a point cloud (rows of `pts`).
 pub fn euclidean(pts: &Mat) -> Mat {
     let n = pts.rows();
@@ -190,6 +204,23 @@ mod tests {
         vals.sort_unstable();
         vals.dedup();
         assert!(vals.len() < len);
+    }
+
+    #[test]
+    fn duplicated_has_zero_distances_and_ties() {
+        let d = random_duplicated(20, 3, 3);
+        let n = d.rows();
+        let mut zeros = 0;
+        for x in 0..n {
+            assert_eq!(d[(x, x)], 0.0);
+            for y in (x + 1)..n {
+                assert_eq!(d[(x, y)], d[(y, x)]);
+                if d[(x, y)] == 0.0 {
+                    zeros += 1;
+                }
+            }
+        }
+        assert!(zeros > 0, "with 20 points over 3 locations duplicates are certain");
     }
 
     #[test]

@@ -177,7 +177,7 @@ pub fn collaboration_network(n: usize, seed: u64) -> Csr {
     let mut left = n;
     while left > 0 {
         let frac = (rng.uniform().powf(2.0) * 0.03 + 0.002).min(1.0);
-        let s = ((n as f64 * frac) as usize).max(3).min(left);
+        let s = std::cmp::min(((n as f64 * frac) as usize).max(3), left);
         sizes.push(s);
         left -= s;
     }

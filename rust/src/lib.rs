@@ -11,7 +11,9 @@
 //!
 //! * the paper's two algorithmic variants — **pairwise** and **triplet** —
 //!   at every rung of its optimization ladder (naive, blocked, branch-free,
-//!   fully optimized), see [`pald`];
+//!   fully optimized), unified behind a kernel registry with a
+//!   machine-model planner (`Algorithm::Auto`) and a workspace-reusing
+//!   [`pald::Session`] serving API, see [`pald`];
 //! * shared-memory parallel runtimes mirroring the paper's OpenMP designs:
 //!   loop parallelism with reductions for pairwise, a task graph with
 //!   `depend(inout)` conflict resolution for triplet, see [`parallel`];
@@ -29,13 +31,22 @@
 //! ## Quickstart
 //!
 //! ```no_run
-//! use paldx::pald::{compute_cohesion, PaldConfig};
+//! use paldx::pald::{compute_cohesion, Algorithm, PaldConfig, Session};
 //! use paldx::data::distmat;
 //!
 //! let d = distmat::random_tie_free(256, 42);
 //! let c = compute_cohesion(&d, &PaldConfig::default()).unwrap();
 //! let ties = paldx::analysis::strong_ties(&c);
 //! println!("strong ties: {}", ties.len());
+//!
+//! // Serving pattern: planner-selected kernel, zero steady-state allocation.
+//! let cfg = PaldConfig { algorithm: Algorithm::Auto, ..Default::default() };
+//! let mut session = Session::new(cfg).unwrap();
+//! for seed in 0..3 {
+//!     let d = distmat::random_tie_free(256, seed);
+//!     let c = session.compute(&d).unwrap();
+//!     println!("batch item: {} ties", paldx::analysis::strong_ties(&c).len());
+//! }
 //! ```
 
 pub mod analysis;

@@ -1,10 +1,20 @@
-//! Public configuration surface and the single `compute_cohesion` entry
-//! point dispatching across every algorithm variant and backend.
+//! Public configuration surface and the `compute_cohesion` entry points.
+//!
+//! Dispatch goes through the kernel registry (DESIGN.md §6): a config is
+//! resolved to a [`Plan`] (the planner picks kernel + block sizes for
+//! [`Algorithm::Auto`]), the registered [`CohesionKernel`] accumulates
+//! support through a [`Workspace`], and this layer applies the final
+//! `1/(n-1)` normalization and records [`PhaseTimes`].
 
 use std::time::Instant;
 
 use crate::core::Mat;
-use crate::pald::{blocked, branchfree, hybrid, naive, optimized, parallel_pairwise, parallel_triplet, TieMode};
+use crate::pald::kernel::{kernel_by_name, kernel_for, CohesionKernel};
+use crate::pald::planner::{Plan, Planner};
+use crate::pald::workspace::Workspace;
+use crate::pald::{normalize, TieMode};
+
+pub use crate::pald::workspace::PhaseTimes;
 
 /// Algorithm variant + optimization rung.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,9 +43,13 @@ pub enum Algorithm {
     Hybrid,
     /// Parallel hybrid (column-partitioned cohesion pass).
     ParallelHybrid,
+    /// Planner-selected kernel + block sizes from the machine profile.
+    Auto,
 }
 
 impl Algorithm {
+    /// The concrete kernels, in ladder order (excludes [`Algorithm::Auto`],
+    /// which is a planner directive, not a kernel).
     pub const ALL: [Algorithm; 12] = [
         Algorithm::NaivePairwise,
         Algorithm::NaiveTriplet,
@@ -65,11 +79,21 @@ impl Algorithm {
             Algorithm::ParallelTriplet => "par-triplet",
             Algorithm::Hybrid => "hybrid",
             Algorithm::ParallelHybrid => "par-hybrid",
+            Algorithm::Auto => "auto",
         }
     }
 
+    /// Name lookup through the kernel registry (plus the `auto` directive).
     pub fn parse(s: &str) -> Option<Algorithm> {
-        Algorithm::ALL.iter().copied().find(|a| a.name() == s)
+        if s == "auto" {
+            return Some(Algorithm::Auto);
+        }
+        kernel_by_name(s).map(|k| k.algorithm())
+    }
+
+    /// Registered kernel for this algorithm (`None` for `Auto`).
+    pub fn kernel(&self) -> Option<&'static dyn CohesionKernel> {
+        kernel_for(*self)
     }
 }
 
@@ -116,17 +140,7 @@ pub fn available_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Phase timing breakdown (paper Figure 13 / Appendix B).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct PhaseTimes {
-    pub total_s: f64,
-}
-
-/// Compute the cohesion matrix for symmetric distance matrix `d`.
-///
-/// Errors on non-square or too-small inputs; backend `Xla` is dispatched
-/// by the coordinator (this function handles `Native`).
-pub fn compute_cohesion(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<Mat> {
+fn validate_input(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<()> {
     if d.rows() != d.cols() {
         anyhow::bail!("distance matrix must be square, got {}x{}", d.rows(), d.cols());
     }
@@ -136,36 +150,68 @@ pub fn compute_cohesion(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<Mat> {
     if cfg.backend == Backend::Xla {
         anyhow::bail!("Backend::Xla is served by coordinator::Coordinator, not compute_cohesion");
     }
-    let b = cfg.block;
-    let b2 = if cfg.block2 == 0 { cfg.block } else { cfg.block2 };
-    let tie = cfg.tie_mode;
-    Ok(match cfg.algorithm {
-        Algorithm::NaivePairwise => naive::pairwise(d, tie),
-        Algorithm::NaiveTriplet => naive::triplet(d, tie),
-        Algorithm::BlockedPairwise => blocked::pairwise_blocked(d, tie, b),
-        Algorithm::BlockedTriplet => blocked::triplet_blocked(d, tie, b, b2),
-        Algorithm::BranchFreePairwise => branchfree::pairwise_branchfree(d, tie),
-        Algorithm::BranchFreeTriplet => branchfree::triplet_branchfree(d, tie),
-        Algorithm::OptimizedPairwise => optimized::pairwise_optimized(d, tie, b),
-        Algorithm::OptimizedTriplet => optimized::triplet_optimized(d, tie, b, b2),
-        Algorithm::ParallelPairwise => {
-            parallel_pairwise::pairwise_parallel(d, tie, b, cfg.threads)
-        }
-        Algorithm::ParallelTriplet => {
-            parallel_triplet::triplet_parallel(d, tie, b, b2, cfg.threads)
-        }
-        Algorithm::Hybrid => hybrid::hybrid_sequential(d, tie, b, b2),
-        Algorithm::ParallelHybrid => {
-            hybrid::hybrid_parallel(d, tie, b, b2, cfg.threads)
-        }
-    })
+    Ok(())
 }
 
-/// Compute and time; returns (C, seconds).
-pub fn compute_cohesion_timed(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<(Mat, f64)> {
+/// Resolve the plan for `cfg` on an `n x n` problem (`Auto` goes through
+/// the planner; pinned algorithms pass through unchanged).
+pub fn plan_for(cfg: &PaldConfig, n: usize) -> Plan {
+    Planner::new().resolve(cfg, n)
+}
+
+/// Compute the cohesion matrix for symmetric distance matrix `d`.
+///
+/// One-shot convenience over [`compute_cohesion_into`]: allocates a fresh
+/// workspace and output.  Use a [`crate::pald::Session`] to amortize the
+/// workspace across repeated calls.
+pub fn compute_cohesion(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<Mat> {
+    validate_input(d, cfg)?;
+    let mut ws = Workspace::new();
+    let mut out = Mat::zeros(d.rows(), d.rows());
+    compute_cohesion_into(d, cfg, &mut ws, &mut out)?;
+    Ok(out)
+}
+
+/// Registry-dispatched computation into caller-owned memory.
+///
+/// `out` must be `n x n`; intermediates (U, W, CT, tiles, reduction
+/// buffers) live in `ws` and are reused across calls.  Returns the phase
+/// timing breakdown (also left in `ws.phases`).
+pub fn compute_cohesion_into(
+    d: &Mat,
+    cfg: &PaldConfig,
+    ws: &mut Workspace,
+    out: &mut Mat,
+) -> anyhow::Result<PhaseTimes> {
+    validate_input(d, cfg)?;
+    let n = d.rows();
+    if out.rows() != n || out.cols() != n {
+        anyhow::bail!("output must be {n}x{n}, got {}x{}", out.rows(), out.cols());
+    }
+    let t_start = Instant::now();
+    // Pinned algorithms skip planner construction entirely; only Auto
+    // consults the machine profile.
+    let plan =
+        if cfg.algorithm == Algorithm::Auto { plan_for(cfg, n) } else { Plan::from_config(cfg) };
+    let kernel = kernel_for(plan.algorithm)
+        .ok_or_else(|| anyhow::anyhow!("no kernel registered for {}", plan.algorithm.name()))?;
+    ws.reset_phases();
+    kernel.compute_into(d, &plan.params, ws, out);
     let t0 = Instant::now();
-    let c = compute_cohesion(d, cfg)?;
-    Ok((c, t0.elapsed().as_secs_f64()))
+    normalize(out);
+    ws.phases.normalize_s = t0.elapsed().as_secs_f64();
+    ws.phases.total_s = t_start.elapsed().as_secs_f64();
+    Ok(ws.phases)
+}
+
+/// Compute and time; returns the cohesion matrix plus the Figure 13 phase
+/// breakdown (focus, cohesion, normalize, total).
+pub fn compute_cohesion_timed(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<(Mat, PhaseTimes)> {
+    validate_input(d, cfg)?;
+    let mut ws = Workspace::new();
+    let mut out = Mat::zeros(d.rows(), d.rows());
+    let times = compute_cohesion_into(d, cfg, &mut ws, &mut out)?;
+    Ok((out, times))
 }
 
 #[cfg(test)]
@@ -195,6 +241,26 @@ mod tests {
     }
 
     #[test]
+    fn auto_agrees_with_reference() {
+        let n = 48;
+        let d = distmat::random_tie_free(n, 808);
+        let reference = compute_cohesion(
+            &d,
+            &PaldConfig { algorithm: Algorithm::NaivePairwise, ..Default::default() },
+        )
+        .unwrap();
+        for threads in [1usize, 4] {
+            let cfg = PaldConfig { algorithm: Algorithm::Auto, threads, ..Default::default() };
+            let c = compute_cohesion(&d, &cfg).unwrap();
+            assert!(
+                c.allclose(&reference, 1e-4, 1e-5),
+                "auto(p={threads}) maxdiff={}",
+                c.max_abs_diff(&reference)
+            );
+        }
+    }
+
+    #[test]
     fn rejects_bad_input() {
         let d = Mat::zeros(3, 4);
         assert!(compute_cohesion(&d, &PaldConfig::default()).is_err());
@@ -203,10 +269,39 @@ mod tests {
     }
 
     #[test]
+    fn rejects_mis_shaped_output() {
+        let d = distmat::random_tie_free(8, 1);
+        let mut ws = Workspace::new();
+        let mut out = Mat::zeros(7, 7);
+        assert!(compute_cohesion_into(&d, &PaldConfig::default(), &mut ws, &mut out).is_err());
+    }
+
+    #[test]
     fn algorithm_names_roundtrip() {
         for alg in Algorithm::ALL {
             assert_eq!(Algorithm::parse(alg.name()), Some(alg));
+            assert!(alg.kernel().is_some());
         }
+        assert_eq!(Algorithm::parse("auto"), Some(Algorithm::Auto));
+        assert!(Algorithm::Auto.kernel().is_none());
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn timed_reports_phase_breakdown() {
+        let d = distmat::random_tie_free(48, 7);
+        let cfg = PaldConfig {
+            algorithm: Algorithm::OptimizedTriplet,
+            block: 16,
+            block2: 8,
+            threads: 1,
+            ..Default::default()
+        };
+        let (c, t) = compute_cohesion_timed(&d, &cfg).unwrap();
+        assert_eq!(c.rows(), 48);
+        assert!(t.total_s > 0.0);
+        assert!(t.focus_s > 0.0, "triplet kernels must attribute the focus pass");
+        assert!(t.cohesion_s > 0.0);
+        assert!(t.total_s + 1e-9 >= t.focus_s + t.cohesion_s + t.normalize_s);
     }
 }

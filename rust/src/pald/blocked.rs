@@ -9,7 +9,10 @@
 //! These variants keep the *branching* inner loops of Algorithms 1/2 — the
 //! Figure 3 ladder measures blocking and branch avoidance separately.
 
+use std::time::Instant;
+
 use crate::core::Mat;
+use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
 use crate::pald::{in_focus, normalize, TieMode};
 
 /// Default block size used when the caller passes `b = 0`.
@@ -18,15 +21,33 @@ pub const DEFAULT_BLOCK: usize = 128;
 #[inline]
 pub(crate) fn resolve_block(b: usize, n: usize) -> usize {
     let b = if b == 0 { DEFAULT_BLOCK } else { b };
-    b.min(n).max(1)
+    b.clamp(1, n.max(1))
 }
 
 /// Blocked pairwise algorithm (branching inner loops).
 pub fn pairwise_blocked(d: &Mat, tie: TieMode, b: usize) -> Mat {
     let n = d.rows();
-    let b = resolve_block(b, n);
+    let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    let mut u_tile = vec![0u32; b * b];
+    pairwise_blocked_into(d, tie, b, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized blocked pairwise accumulation into `out` (zeroed here);
+/// the `b x b` focus tile lives in the workspace.
+pub(crate) fn pairwise_blocked_into(
+    d: &Mat,
+    tie: TieMode,
+    b: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
+    let n = d.rows();
+    let b = resolve_block(b, n);
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_tiles(b);
+    let Workspace { u_tile, phases, .. } = ws;
 
     let nb = n.div_ceil(b);
     for xb in 0..nb {
@@ -36,6 +57,7 @@ pub fn pairwise_blocked(d: &Mat, tie: TieMode, b: usize) -> Mat {
             let ys = yb * b;
             let ye = (ys + b).min(n);
             // First pass over z: focus-size tile U[X, Y].
+            let t0 = Instant::now();
             u_tile.iter_mut().for_each(|v| *v = 0);
             for x in xs..xe {
                 let dx = d.row(x);
@@ -52,7 +74,9 @@ pub fn pairwise_blocked(d: &Mat, tie: TieMode, b: usize) -> Mat {
                     u_tile[(x - xs) * b + (y - ys)] = cnt;
                 }
             }
+            phases.focus_s += t0.elapsed().as_secs_f64();
             // Second pass over z: support awards using the resident tile.
+            let t0 = Instant::now();
             for x in xs..xe {
                 let y_lo = if xb == yb { x + 1 } else { ys };
                 for y in y_lo.max(ys)..ye {
@@ -88,10 +112,9 @@ pub fn pairwise_blocked(d: &Mat, tie: TieMode, b: usize) -> Mat {
                     }
                 }
             }
+            phases.cohesion_s += t0.elapsed().as_secs_f64();
         }
     }
-    normalize(&mut c);
-    c
 }
 
 /// Blocked triplet algorithm (branching inner loops).
@@ -100,16 +123,38 @@ pub fn pairwise_blocked(d: &Mat, tie: TieMode, b: usize) -> Mat {
 /// size (b̃); pass 0 to use [`DEFAULT_BLOCK`].
 pub fn triplet_blocked(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat {
     let n = d.rows();
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(n, n);
+    triplet_blocked_into(d, tie, bhat, btil, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized blocked triplet accumulation into `out` (zeroed here);
+/// U and W live in the workspace.  Records focus/cohesion phase times.
+pub(crate) fn triplet_blocked_into(
+    d: &Mat,
+    tie: TieMode,
+    bhat: usize,
+    btil: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
+    let n = d.rows();
     let bh = resolve_block(bhat, n);
     let bt = resolve_block(btil, n);
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_uw(n);
+    let Workspace { u, w, phases, .. } = ws;
 
     // ---- First pass: focus sizes over block triplets (block size b̂). ----
-    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
+    let t0 = Instant::now();
+    init_focus(u);
     let nbh = n.div_ceil(bh);
     for xb in 0..nbh {
         for yb in xb..nbh {
             for zb in yb..nbh {
-                triplet_focus_tile(d, &mut u, tie, xb * bh, yb * bh, zb * bh, bh, n);
+                triplet_focus_tile(d, u, tie, xb * bh, yb * bh, zb * bh, bh, n);
             }
         }
     }
@@ -118,21 +163,21 @@ pub fn triplet_blocked(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat {
             u[(y, x)] = u[(x, y)];
         }
     }
-    let w = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 1.0 / u[(x, y)] });
+    reciprocal_weights_into(u, w);
+    phases.focus_s += t0.elapsed().as_secs_f64();
 
     // ---- Second pass: cohesion over block triplets (block size b̃). ----
-    let mut c = Mat::zeros(n, n);
+    let t0 = Instant::now();
     let nbt = n.div_ceil(bt);
     for xb in 0..nbt {
         for yb in xb..nbt {
             for zb in yb..nbt {
-                triplet_cohesion_tile(d, &w, &mut c, tie, xb * bt, yb * bt, zb * bt, bt, n);
+                triplet_cohesion_tile(d, w, c, tie, xb * bt, yb * bt, zb * bt, bt, n);
             }
         }
     }
-    super::add_diagonal_contributions(&mut c, &w);
-    normalize(&mut c);
-    c
+    super::add_diagonal_contributions(c, w, d, tie);
+    phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
 /// Focus-size updates for one block triplet (shared with the task-parallel

@@ -24,7 +24,10 @@
 //! These entry points are *unblocked* (the Fig. 3 "branch avoidance only"
 //! rung); [`crate::pald::optimized`] combines them with blocking.
 
+use std::time::Instant;
+
 use crate::core::Mat;
+use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
 use crate::pald::{normalize, TieMode};
 
 /// Comparison result as a {0,1} float mask.  The `if`/`else` select form
@@ -110,6 +113,15 @@ pub(crate) fn update_cohesion_branchfree(
 pub fn pairwise_branchfree(d: &Mat, tie: TieMode) -> Mat {
     let n = d.rows();
     let mut c = Mat::zeros(n, n);
+    pairwise_branchfree_into(d, tie, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized branch-free pairwise accumulation into `out` (zeroed here).
+pub(crate) fn pairwise_branchfree_into(d: &Mat, tie: TieMode, c: &mut Mat) {
+    let n = d.rows();
+    c.as_mut_slice().fill(0.0);
     for x in 0..(n - 1) {
         for y in (x + 1)..n {
             let dxy = d[(x, y)];
@@ -124,8 +136,6 @@ pub fn pairwise_branchfree(d: &Mat, tie: TieMode) -> Mat {
             update_cohesion_branchfree(dx, dy, dxy, w, cx, cy, tie);
         }
     }
-    normalize(&mut c);
-    c
 }
 
 /// Branch-free focus update for one triplet range, used by both the
@@ -296,10 +306,27 @@ pub(crate) fn triplet_cohesion_branchfree_row(
 /// as the paper reports, until blocking shrinks their working set).
 pub fn triplet_branchfree(d: &Mat, tie: TieMode) -> Mat {
     let n = d.rows();
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(n, n);
+    triplet_branchfree_into(d, tie, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized branch-free triplet accumulation into `out` (zeroed here);
+/// U, W, CT, and the mask scratch rows live in the workspace.
+pub(crate) fn triplet_branchfree_into(d: &Mat, tie: TieMode, ws: &mut Workspace, c: &mut Mat) {
+    let n = d.rows();
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_uw(n);
+    ws.ensure_ct(n);
+    ws.ensure_mask_scratch(n);
+    ws.ensure_focus_scratch(n);
+    let Workspace { u, w, ct, sa, ta, fsa, fta, phases, .. } = ws;
+
     // ---- First pass: focus sizes. ----
-    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
-    let mut fsa = vec![0.0f32; n];
-    let mut fta = vec![0.0f32; n];
+    let t0 = Instant::now();
+    init_focus(u);
     for x in 0..n {
         for y in (x + 1)..n {
             let dxy = d[(x, y)];
@@ -311,8 +338,8 @@ pub fn triplet_branchfree(d: &Mat, tie: TieMode) -> Mat {
                 dxy,
                 ux,
                 uy,
-                &mut fsa,
-                &mut fta,
+                fsa,
+                fta,
                 y + 1,
                 n,
                 tie,
@@ -325,13 +352,11 @@ pub fn triplet_branchfree(d: &Mat, tie: TieMode) -> Mat {
             u[(y, x)] = u[(x, y)];
         }
     }
-    let w = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 1.0 / u[(x, y)] });
+    reciprocal_weights_into(u, w);
+    phases.focus_s += t0.elapsed().as_secs_f64();
 
     // ---- Second pass: cohesion (CT = transposed column accumulator). ----
-    let mut c = Mat::zeros(n, n);
-    let mut ct = Mat::zeros(n, n);
-    let mut sa = vec![0.0f32; n];
-    let mut ta = vec![0.0f32; n];
+    let t0 = Instant::now();
     for x in 0..n {
         for y in (x + 1)..n {
             let dxy = d[(x, y)];
@@ -350,8 +375,8 @@ pub fn triplet_branchfree(d: &Mat, tie: TieMode) -> Mat {
                     cy,
                     ctx,
                     cty,
-                    &mut sa,
-                    &mut ta,
+                    sa,
+                    ta,
                     y + 1,
                     n,
                     tie,
@@ -362,10 +387,9 @@ pub fn triplet_branchfree(d: &Mat, tie: TieMode) -> Mat {
         }
     }
     // Fold the transposed accumulator back: c[z][x] += ct[x][z].
-    add_transposed(&mut c, &ct);
-    super::add_diagonal_contributions(&mut c, &w);
-    normalize(&mut c);
-    c
+    add_transposed(c, ct);
+    super::add_diagonal_contributions(c, w, d, tie);
+    phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
 /// `c += ct^T` — the O(n^2) fold that replaces all per-triplet scatters.

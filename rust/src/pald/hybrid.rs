@@ -15,19 +15,50 @@
 //!   reciprocal weights (unit-stride masked FMAs), sequential or
 //!   column-partitioned parallel.
 
+use std::time::Instant;
+
 use crate::core::Mat;
 use crate::pald::blocked::resolve_block;
 use crate::pald::branchfree::{mask as m, update_cohesion_branchfree};
-use crate::pald::optimized::{focus_sizes_optimized, reciprocal_weights};
+use crate::pald::optimized::focus_sizes_optimized_into;
+use crate::pald::workspace::{reciprocal_weights_into, Workspace};
 use crate::pald::{normalize, TieMode};
 use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
 
 /// Sequential hybrid: triplet focus + pairwise cohesion.
 pub fn hybrid_sequential(d: &Mat, tie: TieMode, bhat: usize, b: usize) -> Mat {
     let n = d.rows();
-    let u = focus_sizes_optimized(d, tie, bhat);
-    let w = reciprocal_weights(&u);
+    let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
+    hybrid_sequential_into(d, tie, bhat, b, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized sequential hybrid accumulation into `out` (zeroed here);
+/// U, W, and the focus mask scratch live in the workspace.  Records the
+/// Figure 13 focus/cohesion phase split.
+pub(crate) fn hybrid_sequential_into(
+    d: &Mat,
+    tie: TieMode,
+    bhat: usize,
+    b: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
+    let n = d.rows();
+    let bh = resolve_block(bhat, n);
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_uw(n);
+    ws.ensure_focus_scratch(bh.min(n));
+    let Workspace { u, w, fsa, fta, phases, .. } = ws;
+
+    let t0 = Instant::now();
+    focus_sizes_optimized_into(d, tie, bhat, u, fsa, fta);
+    reciprocal_weights_into(u, w);
+    phases.focus_s += t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
     let b = resolve_block(b, n);
     let nb = n.div_ceil(b);
     for xb in 0..nb {
@@ -47,26 +78,54 @@ pub fn hybrid_sequential(d: &Mat, tie: TieMode, bhat: usize, b: usize) -> Mat {
             }
         }
     }
-    normalize(&mut c);
-    c
+    phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
 /// Parallel hybrid: task-parallel triplet focus (via the triplet parallel
 /// first pass) + conflict-free column-partitioned pairwise cohesion.
 pub fn hybrid_parallel(d: &Mat, tie: TieMode, bhat: usize, b: usize, threads: usize) -> Mat {
     let n = d.rows();
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(n, n);
+    hybrid_parallel_into(d, tie, bhat, b, threads, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized parallel hybrid accumulation into `out` (zeroed here).
+pub(crate) fn hybrid_parallel_into(
+    d: &Mat,
+    tie: TieMode,
+    bhat: usize,
+    b: usize,
+    threads: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
+    let n = d.rows();
     let threads = threads.max(1);
     if threads == 1 {
-        return hybrid_sequential(d, tie, bhat, b);
+        hybrid_sequential_into(d, tie, bhat, b, ws, c);
+        return;
     }
     // Focus pass: reuse the parallel triplet machinery's U computation by
     // running it through the sequential optimized pass per thread-free
     // semantics; the task-parallel focus is exercised via triplet_parallel.
     // Here U is computed with the blocked triplet pass (it is already the
     // fastest focus formulation), then the cohesion pass is parallelized.
-    let u = focus_sizes_optimized(d, tie, bhat);
-    let w = reciprocal_weights(&u);
-    let mut c = Mat::zeros(n, n);
+    let bh = resolve_block(bhat, n);
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_uw(n);
+    ws.ensure_focus_scratch(bh.min(n));
+    let Workspace { u, w, fsa, fta, phases, .. } = ws;
+
+    let t0 = Instant::now();
+    focus_sizes_optimized_into(d, tie, bhat, u, fsa, fta);
+    reciprocal_weights_into(u, w);
+    phases.focus_s += t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let w_ref: &Mat = w;
     let b = resolve_block(b, n);
     let nb = n.div_ceil(b);
     let ncols = n;
@@ -84,7 +143,7 @@ pub fn hybrid_parallel(d: &Mat, tie: TieMode, bhat: usize, b: usize, threads: us
                     for y in y_lo.max(ys)..ye {
                         let dy = d.row(y);
                         let dxy = dx[y];
-                        let wxy = w[(x, y)];
+                        let wxy = w_ref[(x, y)];
                         for z in zrange.clone() {
                             let dxz = dx[z];
                             let dyz = dy[z];
@@ -110,8 +169,7 @@ pub fn hybrid_parallel(d: &Mat, tie: TieMode, bhat: usize, b: usize, threads: us
             }
         }
     });
-    normalize(&mut c);
-    c
+    phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
 #[cfg(test)]
@@ -152,5 +210,16 @@ mod tests {
         let want = naive::pairwise(&d, TieMode::Split);
         let got = hybrid_sequential(&d, TieMode::Split, 8, 8);
         assert!(got.allclose(&want, 1e-5, 1e-6), "maxdiff={}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn hybrid_records_phase_times() {
+        let n = 40;
+        let d = distmat::random_tie_free(n, 11);
+        let mut ws = Workspace::new();
+        let mut c = Mat::zeros(n, n);
+        hybrid_sequential_into(&d, TieMode::Strict, 8, 8, &mut ws, &mut c);
+        assert!(ws.phases.focus_s > 0.0);
+        assert!(ws.phases.cohesion_s > 0.0);
     }
 }

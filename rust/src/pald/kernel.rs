@@ -1,0 +1,511 @@
+//! Kernel registry: every PaLD variant behind one trait (DESIGN.md §6).
+//!
+//! Each of the 12 variants of the paper's optimization ladder implements
+//! [`CohesionKernel`]: identity ([`Algorithm`]), capability metadata
+//! ([`KernelMeta`]), a machine-model cost estimate the [planner] uses to
+//! auto-select a variant, tuned default block sizes (Theorems 4.1/4.2),
+//! and a `compute_into` entry point that accumulates *unnormalized*
+//! support through a reusable [`Workspace`].  The [`REGISTRY`] replaces
+//! both the hard-coded 12-arm `match` that used to live in `api.rs` and
+//! the string-to-enum plumbing in the CLI.
+//!
+//! [planner]: crate::pald::planner::Planner
+
+use crate::core::Mat;
+use crate::pald::api::Algorithm;
+use crate::pald::workspace::Workspace;
+use crate::pald::{
+    blocked, branchfree, hybrid, naive, optimized, parallel_pairwise, parallel_triplet, TieMode,
+};
+use crate::sim::machine::{pairwise_time, triplet_time, MachineParams, NumaMode};
+use crate::sim::traffic;
+
+/// Algorithm family (which of the paper's two formulations, or Appendix
+/// B's combination of both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Pairwise,
+    Triplet,
+    Hybrid,
+}
+
+/// Optimization rung on the Figure 3 ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rung {
+    Naive,
+    Blocked,
+    BranchFree,
+    Optimized,
+    Parallel,
+}
+
+/// Static capability metadata for one kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelMeta {
+    pub family: Family,
+    pub rung: Rung,
+    /// Uses worker threads (`ExecParams::threads`).
+    pub parallel: bool,
+    /// Handles `TieMode::Split` exactly (every current kernel does; new
+    /// backends may not).
+    pub exact_ties: bool,
+    /// Consumes the second block size b̃ (`ExecParams::block2`).
+    pub uses_block2: bool,
+}
+
+/// Resolved execution parameters handed to a kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecParams {
+    pub tie: TieMode,
+    /// Pairwise block size / triplet focus-pass block size b̂ (0 = default).
+    pub block: usize,
+    /// Triplet cohesion-pass block size b̃ (0 = same as `block`).
+    pub block2: usize,
+    pub threads: usize,
+}
+
+impl ExecParams {
+    pub(crate) fn block2_or_block(&self) -> usize {
+        if self.block2 == 0 {
+            self.block
+        } else {
+            self.block2
+        }
+    }
+}
+
+/// One PaLD variant: identity, capabilities, cost model, and execution.
+pub trait CohesionKernel: Sync {
+    /// Registry identity.
+    fn algorithm(&self) -> Algorithm;
+
+    /// CLI/config name.
+    fn name(&self) -> &'static str {
+        self.algorithm().name()
+    }
+
+    /// Capability metadata.
+    fn meta(&self) -> KernelMeta;
+
+    /// Predicted runtime in seconds under the machine profile — the
+    /// planner's selection signal.  Sequential rungs below "optimized"
+    /// carry an empirical slowdown factor over the Figure 3 baseline.
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64;
+
+    /// Tuned default block sizes `(b, b̃)` for a fast memory of `m` words
+    /// (Theorems 4.1/4.2); `(0, 0)` for unblocked kernels.
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize);
+
+    /// Accumulate *unnormalized* support into `out` (the kernel zeroes it
+    /// first); intermediates live in `ws`.  The dispatch layer applies the
+    /// `1/(n-1)` normalization.
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat);
+}
+
+// ---- cost-model helpers -------------------------------------------------
+
+fn rb(b: usize, n: usize) -> u64 {
+    crate::pald::blocked::resolve_block(b, n) as u64
+}
+
+/// Sequential pairwise prediction (no parallel overhead terms).
+fn seq_pairwise_cost(n: usize, b: usize, mp: &MachineParams) -> f64 {
+    let bd = pairwise_time(mp, n as u64, rb(b, n), 1, NumaMode::ThreadBind);
+    bd.focus_s + bd.cohesion_s
+}
+
+/// Sequential triplet prediction.
+fn seq_triplet_cost(n: usize, bh: usize, bt: usize, mp: &MachineParams) -> f64 {
+    let bd = triplet_time(mp, n as u64, rb(bh, n), rb(bt, n), 1, NumaMode::ThreadBind);
+    bd.focus_s + bd.cohesion_s
+}
+
+fn pairwise_blocks(m: u64, n: usize) -> (usize, usize) {
+    ((traffic::pairwise_opt_block(m) as usize).clamp(1, n.max(1)), 0)
+}
+
+fn triplet_blocks(m: u64, n: usize) -> (usize, usize) {
+    let (bh, bt) = traffic::triplet_opt_blocks(m);
+    (
+        (bh as usize).clamp(1, n.max(1)),
+        (bt as usize).clamp(1, n.max(1)),
+    )
+}
+
+/// Empirical slowdown of the lower Figure 3 rungs relative to the
+/// optimized kernels (the paper's ladder: ~8x naive, ~4x blocking only,
+/// ~3x branch avoidance only).
+const NAIVE_PENALTY: f64 = 8.0;
+const BLOCKED_PENALTY: f64 = 4.0;
+const BRANCHFREE_PENALTY: f64 = 3.0;
+
+// ---- the 12 kernels -----------------------------------------------------
+
+macro_rules! meta {
+    ($family:ident, $rung:ident, par = $par:expr, b2 = $b2:expr) => {
+        KernelMeta {
+            family: Family::$family,
+            rung: Rung::$rung,
+            parallel: $par,
+            exact_ties: true,
+            uses_block2: $b2,
+        }
+    };
+}
+
+pub struct NaivePairwiseK;
+impl CohesionKernel for NaivePairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::NaivePairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, Naive, par = false, b2 = false)
+    }
+    fn cost(&self, n: usize, _p: &ExecParams, mp: &MachineParams) -> f64 {
+        NAIVE_PENALTY * seq_pairwise_cost(n, 0, mp)
+    }
+    fn default_blocks(&self, _n: usize, _m: u64) -> (usize, usize) {
+        (0, 0)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, _ws: &mut Workspace, out: &mut Mat) {
+        naive::pairwise_into(d, p.tie, out);
+    }
+}
+
+pub struct NaiveTripletK;
+impl CohesionKernel for NaiveTripletK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::NaiveTriplet
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Triplet, Naive, par = false, b2 = false)
+    }
+    fn cost(&self, n: usize, _p: &ExecParams, mp: &MachineParams) -> f64 {
+        NAIVE_PENALTY * seq_triplet_cost(n, 0, 0, mp)
+    }
+    fn default_blocks(&self, _n: usize, _m: u64) -> (usize, usize) {
+        (0, 0)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        naive::triplet_into(d, p.tie, ws, out);
+    }
+}
+
+pub struct BlockedPairwiseK;
+impl CohesionKernel for BlockedPairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::BlockedPairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, Blocked, par = false, b2 = false)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        BLOCKED_PENALTY * seq_pairwise_cost(n, p.block, mp)
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        pairwise_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        blocked::pairwise_blocked_into(d, p.tie, p.block, ws, out);
+    }
+}
+
+pub struct BlockedTripletK;
+impl CohesionKernel for BlockedTripletK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::BlockedTriplet
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Triplet, Blocked, par = false, b2 = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        BLOCKED_PENALTY * seq_triplet_cost(n, p.block, p.block2_or_block(), mp)
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        triplet_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        blocked::triplet_blocked_into(d, p.tie, p.block, p.block2_or_block(), ws, out);
+    }
+}
+
+pub struct BranchFreePairwiseK;
+impl CohesionKernel for BranchFreePairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::BranchFreePairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, BranchFree, par = false, b2 = false)
+    }
+    fn cost(&self, n: usize, _p: &ExecParams, mp: &MachineParams) -> f64 {
+        BRANCHFREE_PENALTY * seq_pairwise_cost(n, 0, mp)
+    }
+    fn default_blocks(&self, _n: usize, _m: u64) -> (usize, usize) {
+        (0, 0)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, _ws: &mut Workspace, out: &mut Mat) {
+        branchfree::pairwise_branchfree_into(d, p.tie, out);
+    }
+}
+
+pub struct BranchFreeTripletK;
+impl CohesionKernel for BranchFreeTripletK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::BranchFreeTriplet
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Triplet, BranchFree, par = false, b2 = false)
+    }
+    fn cost(&self, n: usize, _p: &ExecParams, mp: &MachineParams) -> f64 {
+        BRANCHFREE_PENALTY * seq_triplet_cost(n, 0, 0, mp)
+    }
+    fn default_blocks(&self, _n: usize, _m: u64) -> (usize, usize) {
+        (0, 0)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        branchfree::triplet_branchfree_into(d, p.tie, ws, out);
+    }
+}
+
+pub struct OptimizedPairwiseK;
+impl CohesionKernel for OptimizedPairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::OptimizedPairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, Optimized, par = false, b2 = false)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        seq_pairwise_cost(n, p.block, mp)
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        pairwise_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        optimized::pairwise_optimized_into(d, p.tie, p.block, ws, out);
+    }
+}
+
+pub struct OptimizedTripletK;
+impl CohesionKernel for OptimizedTripletK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::OptimizedTriplet
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Triplet, Optimized, par = false, b2 = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        seq_triplet_cost(n, p.block, p.block2_or_block(), mp)
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        triplet_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        optimized::triplet_optimized_into(d, p.tie, p.block, p.block2_or_block(), ws, out);
+    }
+}
+
+pub struct ParallelPairwiseK;
+impl CohesionKernel for ParallelPairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::ParallelPairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, Parallel, par = true, b2 = false)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        pairwise_time(mp, n as u64, rb(p.block, n), p.threads, NumaMode::ThreadMemBind).total()
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        pairwise_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        parallel_pairwise::pairwise_parallel_into(d, p.tie, p.block, p.threads, ws, out);
+    }
+}
+
+pub struct ParallelTripletK;
+impl CohesionKernel for ParallelTripletK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::ParallelTriplet
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Triplet, Parallel, par = true, b2 = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        triplet_time(
+            mp,
+            n as u64,
+            rb(p.block, n),
+            rb(p.block2_or_block(), n),
+            p.threads,
+            NumaMode::ThreadBind,
+        )
+        .total()
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        triplet_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        parallel_triplet::triplet_parallel_into(
+            d,
+            p.tie,
+            p.block,
+            p.block2_or_block(),
+            p.threads,
+            ws,
+            out,
+        );
+    }
+}
+
+pub struct HybridK;
+impl CohesionKernel for HybridK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Hybrid
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Hybrid, Optimized, par = false, b2 = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        // Triplet-style focus pass + pairwise-style cohesion pass.
+        let tf = triplet_time(mp, n as u64, rb(p.block, n), rb(p.block, n), 1, NumaMode::ThreadBind)
+            .focus_s;
+        let pc =
+            pairwise_time(mp, n as u64, rb(p.block2_or_block(), n), 1, NumaMode::ThreadBind)
+                .cohesion_s;
+        tf + pc
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        let (bh, _) = triplet_blocks(m, n);
+        let (b, _) = pairwise_blocks(m, n);
+        (bh, b)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        hybrid::hybrid_sequential_into(d, p.tie, p.block, p.block2_or_block(), ws, out);
+    }
+}
+
+pub struct ParallelHybridK;
+impl CohesionKernel for ParallelHybridK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::ParallelHybrid
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Hybrid, Parallel, par = true, b2 = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        // The focus pass runs sequentially in this implementation; only
+        // the column-partitioned cohesion pass scales with threads.
+        let tf = triplet_time(mp, n as u64, rb(p.block, n), rb(p.block, n), 1, NumaMode::ThreadBind)
+            .focus_s;
+        let pw = pairwise_time(
+            mp,
+            n as u64,
+            rb(p.block2_or_block(), n),
+            p.threads,
+            NumaMode::ThreadMemBind,
+        );
+        tf + pw.cohesion_s + pw.overhead_s
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        let (bh, _) = triplet_blocks(m, n);
+        let (b, _) = pairwise_blocks(m, n);
+        (bh, b)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        hybrid::hybrid_parallel_into(d, p.tie, p.block, p.block2_or_block(), p.threads, ws, out);
+    }
+}
+
+// ---- registry -----------------------------------------------------------
+
+/// All kernels, in optimization-ladder order (matches [`Algorithm::ALL`]).
+pub static REGISTRY: [&dyn CohesionKernel; 12] = [
+    &NaivePairwiseK,
+    &NaiveTripletK,
+    &BlockedPairwiseK,
+    &BlockedTripletK,
+    &BranchFreePairwiseK,
+    &BranchFreeTripletK,
+    &OptimizedPairwiseK,
+    &OptimizedTripletK,
+    &ParallelPairwiseK,
+    &ParallelTripletK,
+    &HybridK,
+    &ParallelHybridK,
+];
+
+/// Kernel registered for a concrete algorithm (`None` for
+/// [`Algorithm::Auto`], which the planner must resolve first).
+pub fn kernel_for(alg: Algorithm) -> Option<&'static dyn CohesionKernel> {
+    REGISTRY.iter().copied().find(|k| k.algorithm() == alg)
+}
+
+/// Kernel by CLI/config name.
+pub fn kernel_by_name(name: &str) -> Option<&'static dyn CohesionKernel> {
+    REGISTRY.iter().copied().find(|k| k.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::naive;
+
+    #[test]
+    fn registry_covers_all_algorithms_in_order() {
+        assert_eq!(REGISTRY.len(), Algorithm::ALL.len());
+        for (k, alg) in REGISTRY.iter().zip(Algorithm::ALL) {
+            assert_eq!(k.algorithm(), alg);
+            assert_eq!(k.name(), alg.name());
+        }
+        assert!(kernel_for(Algorithm::Auto).is_none());
+        assert!(kernel_by_name("opt-triplet").is_some());
+        assert!(kernel_by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn every_kernel_agrees_with_naive_via_trait_path() {
+        let n = 36;
+        let d = distmat::random_tie_free(n, 2024);
+        let want = naive::pairwise(&d, TieMode::Strict);
+        let p = ExecParams { tie: TieMode::Strict, block: 8, block2: 4, threads: 3 };
+        let mut ws = Workspace::new();
+        for k in REGISTRY {
+            let mut c = Mat::zeros(n, n);
+            k.compute_into(&d, &p, &mut ws, &mut c);
+            crate::pald::normalize(&mut c);
+            assert!(
+                c.allclose(&want, 1e-4, 1e-5),
+                "{} maxdiff={}",
+                k.name(),
+                c.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn costs_are_positive_and_ordered() {
+        let mp = MachineParams::xeon_6226r();
+        let p = ExecParams { tie: TieMode::Strict, block: 128, block2: 64, threads: 1 };
+        let naive_c = kernel_for(Algorithm::NaivePairwise).unwrap().cost(2048, &p, &mp);
+        let opt_c = kernel_for(Algorithm::OptimizedPairwise).unwrap().cost(2048, &p, &mp);
+        assert!(naive_c > opt_c, "naive={naive_c} opt={opt_c}");
+        assert!(opt_c > 0.0);
+        // Parallelism must predict a speedup at large n.
+        let p8 = ExecParams { threads: 8, ..p };
+        let par_c = kernel_for(Algorithm::ParallelPairwise).unwrap().cost(4096, &p8, &mp);
+        let seq_c = kernel_for(Algorithm::OptimizedPairwise).unwrap().cost(4096, &p, &mp);
+        assert!(par_c < seq_c, "par={par_c} seq={seq_c}");
+    }
+
+    #[test]
+    fn default_blocks_respect_problem_size() {
+        let m = (1024 * 1024) / 4;
+        for k in REGISTRY {
+            let (b, b2) = k.default_blocks(64, m);
+            assert!(b <= 64 && b2 <= 64, "{}", k.name());
+        }
+    }
+}

@@ -12,18 +12,37 @@
 //! All variants produce the same cohesion matrix (exactly, in support
 //! units, for `TieMode::Split`; up to f32 summation order otherwise) and
 //! are cross-checked by the property tests in `rust/tests/`.
+//!
+//! Execution goes through the kernel-registry engine (DESIGN.md §6):
+//! every variant implements [`CohesionKernel`] (capability metadata, cost
+//! estimate, tuned block sizes) and is registered in [`REGISTRY`]; the
+//! [`Planner`] resolves [`Algorithm::Auto`] against a machine profile;
+//! and all kernels accumulate through a reusable [`Workspace`], which
+//! [`Session`] exploits to serve repeated/batched matrices with zero
+//! steady-state allocation.
 
 pub mod api;
 pub mod blocked;
 pub mod hybrid;
 pub mod branchfree;
+pub mod kernel;
 pub mod naive;
 pub mod ops;
 pub mod optimized;
 pub mod parallel_pairwise;
 pub mod parallel_triplet;
+pub mod planner;
+pub mod session;
+pub mod workspace;
 
-pub use api::{compute_cohesion, compute_cohesion_timed, Algorithm, Backend, PaldConfig};
+pub use api::{
+    compute_cohesion, compute_cohesion_into, compute_cohesion_timed, plan_for, Algorithm,
+    Backend, PaldConfig, PhaseTimes,
+};
+pub use kernel::{kernel_by_name, kernel_for, CohesionKernel, ExecParams, KernelMeta, REGISTRY};
+pub use planner::{Plan, Planner};
+pub use session::Session;
+pub use workspace::Workspace;
 
 use crate::core::Mat;
 
@@ -65,14 +84,44 @@ pub(crate) fn normalize(c: &mut Mat) {
 /// z = y (always in focus, supports y).  Those land on the diagonal:
 /// `c_xx += 1/u_xy` and `c_yy += 1/u_xy` for every pair.  `w` is the
 /// reciprocal focus-size matrix (0 on the diagonal).
-pub(crate) fn add_diagonal_contributions(c: &mut Mat, w: &Mat) {
+///
+/// Split-mode subtlety: when two points coincide (`d_xy = 0`), the z = x
+/// visit ties — `d_xz = d_yz = 0` — and the pairwise reference splits the
+/// award 0.5/0.5 between `c_xx` and `c_yx`.  The split branch reproduces
+/// that exactly, so the triplet family agrees with pairwise even on
+/// duplicated-point inputs (strict mode is undefined on ties by design).
+pub(crate) fn add_diagonal_contributions(c: &mut Mat, w: &Mat, d: &Mat, tie: TieMode) {
     let n = c.rows();
-    for x in 0..n {
-        let wrow = w.row(x);
-        let mut acc = 0.0f32;
-        for y in 0..n {
-            acc += wrow[y];
+    match tie {
+        TieMode::Strict => {
+            for x in 0..n {
+                let wrow = w.row(x);
+                let mut acc = 0.0f32;
+                for y in 0..n {
+                    acc += wrow[y];
+                }
+                c[(x, x)] += acc;
+            }
         }
-        c[(x, x)] += acc;
+        TieMode::Split => {
+            for x in 0..n {
+                let wrow = w.row(x);
+                let drow = d.row(x);
+                let mut acc = 0.0f32;
+                for y in 0..n {
+                    if y == x {
+                        continue;
+                    }
+                    if drow[y] == 0.0 {
+                        // Duplicated pair: z = x ties between x and y.
+                        acc += 0.5 * wrow[y];
+                        c[(y, x)] += 0.5 * wrow[y];
+                    } else {
+                        acc += wrow[y];
+                    }
+                }
+                c[(x, x)] += acc;
+            }
+        }
     }
 }

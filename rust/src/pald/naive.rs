@@ -4,15 +4,28 @@
 //! These are the Figure 3 baselines (speedup = 1) and the semantic
 //! reference every optimized variant is tested against.
 
+use std::time::Instant;
+
 use crate::core::Mat;
+use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
 use crate::pald::{in_focus, normalize, TieMode};
 
 /// Algorithm 1 (Pairwise Sequential): for every pair (x, y), one pass over
 /// all z to size the local focus, a second pass to award support.
 pub fn pairwise(d: &Mat, tie: TieMode) -> Mat {
     let n = d.rows();
-    assert_eq!(n, d.cols());
     let mut c = Mat::zeros(n, n);
+    pairwise_into(d, tie, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized Algorithm 1 support accumulation into `out` (zeroed here),
+/// the workspace-reuse entry point behind [`pairwise`].
+pub(crate) fn pairwise_into(d: &Mat, tie: TieMode, c: &mut Mat) {
+    let n = d.rows();
+    assert_eq!(n, d.cols());
+    c.as_mut_slice().fill(0.0);
     for x in 0..(n - 1) {
         for y in (x + 1)..n {
             let dxy = d[(x, y)];
@@ -52,8 +65,6 @@ pub fn pairwise(d: &Mat, tie: TieMode) -> Mat {
             }
         }
     }
-    normalize(&mut c);
-    c
 }
 
 /// Local-focus size matrix U (both triplet passes need it in full).
@@ -92,9 +103,25 @@ pub fn focus_sizes(d: &Mat, tie: TieMode) -> Mat {
 /// 0.5/0.5 tie splitting, which is exact.
 pub fn triplet(d: &Mat, tie: TieMode) -> Mat {
     let n = d.rows();
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(n, n);
+    triplet_into(d, tie, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized Algorithm 2 support accumulation into `out` (zeroed here);
+/// U and W live in the workspace.  Records focus/cohesion phase times.
+pub(crate) fn triplet_into(d: &Mat, tie: TieMode, ws: &mut Workspace, c: &mut Mat) {
+    let n = d.rows();
     assert_eq!(n, d.cols());
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_uw(n);
+    let Workspace { u, w, phases, .. } = ws;
+
+    let t0 = Instant::now();
     // U initialized to 2 off-diagonal: x and y always belong to U_xy.
-    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
+    init_focus(u);
 
     // First pass: focus sizes from distinct triplets.
     for x in 0..n {
@@ -141,11 +168,11 @@ pub fn triplet(d: &Mat, tie: TieMode) -> Mat {
             u[(y, x)] = u[(x, y)];
         }
     }
-
-    let w = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 1.0 / u[(x, y)] });
+    reciprocal_weights_into(u, w);
+    phases.focus_s += t0.elapsed().as_secs_f64();
 
     // Second pass: cohesion updates from distinct triplets.
-    let mut c = Mat::zeros(n, n);
+    let t0 = Instant::now();
     for x in 0..n {
         for y in (x + 1)..n {
             let dxy = d[(x, y)];
@@ -170,11 +197,11 @@ pub fn triplet(d: &Mat, tie: TieMode) -> Mat {
                     }
                     TieMode::Split => {
                         // Pair (x, y), third point z.
-                        split_update(&mut c, x, y, z, dxz, dyz, dxy, w[(x, y)]);
+                        split_update(c, x, y, z, dxz, dyz, dxy, w[(x, y)]);
                         // Pair (x, z), third point y.
-                        split_update(&mut c, x, z, y, dxy, dyz, dxz, w[(x, z)]);
+                        split_update(c, x, z, y, dxy, dyz, dxz, w[(x, z)]);
                         // Pair (y, z), third point x.
-                        split_update(&mut c, y, z, x, dxy, dxz, dyz, w[(y, z)]);
+                        split_update(c, y, z, x, dxy, dxz, dyz, w[(y, z)]);
                     }
                 }
             }
@@ -182,9 +209,8 @@ pub fn triplet(d: &Mat, tie: TieMode) -> Mat {
     }
     // z ∈ {x, y} contributions (diagonal), which distinct-triplet
     // iteration misses — see `add_diagonal_contributions`.
-    super::add_diagonal_contributions(&mut c, &w);
-    normalize(&mut c);
-    c
+    super::add_diagonal_contributions(c, w, d, tie);
+    phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
 /// Split-mode support award for pair (a, b) and third point t, where

@@ -5,12 +5,15 @@
 //! These are the sequential baselines from which the paper derives its
 //! parallel algorithms and against which parallel speedups are reported.
 
+use std::time::Instant;
+
 use crate::core::Mat;
 use crate::pald::blocked::resolve_block;
 use crate::pald::branchfree::{
     count_focus_branchfree, triplet_cohesion_branchfree_row, triplet_focus_branchfree_row,
     update_cohesion_branchfree,
 };
+use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
 use crate::pald::{normalize, TieMode};
 
 /// Optimized pairwise: block-ordered pair iteration (D rows of both blocks
@@ -18,9 +21,27 @@ use crate::pald::{normalize, TieMode};
 /// reciprocals computed once per tile.
 pub fn pairwise_optimized(d: &Mat, tie: TieMode, b: usize) -> Mat {
     let n = d.rows();
-    let b = resolve_block(b, n);
+    let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    let mut w_tile = vec![0.0f32; b * b];
+    pairwise_optimized_into(d, tie, b, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized optimized pairwise accumulation into `out` (zeroed here);
+/// the reciprocal weight tile lives in the workspace.
+pub(crate) fn pairwise_optimized_into(
+    d: &Mat,
+    tie: TieMode,
+    b: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
+    let n = d.rows();
+    let b = resolve_block(b, n);
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_tiles(b);
+    let Workspace { w_tile, phases, .. } = ws;
 
     let nb = n.div_ceil(b);
     for xb in 0..nb {
@@ -31,6 +52,7 @@ pub fn pairwise_optimized(d: &Mat, tie: TieMode, b: usize) -> Mat {
             let ye = (ys + b).min(n);
             // Pass 1: integer focus counts for the tile, then reciprocals
             // (one int->float cast per pair, outside the z loop).
+            let t0 = Instant::now();
             for x in xs..xe {
                 let dx = d.row(x);
                 let y_lo = if xb == yb { x + 1 } else { ys };
@@ -39,7 +61,9 @@ pub fn pairwise_optimized(d: &Mat, tie: TieMode, b: usize) -> Mat {
                     w_tile[(x - xs) * b + (y - ys)] = 1.0 / u as f32;
                 }
             }
+            phases.focus_s += t0.elapsed().as_secs_f64();
             // Pass 2: branch-free support awards.
+            let t0 = Instant::now();
             for x in xs..xe {
                 let y_lo = if xb == yb { x + 1 } else { ys };
                 for y in y_lo.max(ys)..ye {
@@ -49,10 +73,9 @@ pub fn pairwise_optimized(d: &Mat, tie: TieMode, b: usize) -> Mat {
                     update_cohesion_branchfree(d.row(x), d.row(y), dxy, w, cx, cy, tie);
                 }
             }
+            phases.cohesion_s += t0.elapsed().as_secs_f64();
         }
     }
-    normalize(&mut c);
-    c
 }
 
 /// Focus-size matrix via the optimized (blocked, branch-free) first pass of
@@ -61,9 +84,27 @@ pub fn pairwise_optimized(d: &Mat, tie: TieMode, b: usize) -> Mat {
 pub fn focus_sizes_optimized(d: &Mat, tie: TieMode, bhat: usize) -> Mat {
     let n = d.rows();
     let bh = resolve_block(bhat, n);
-    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
+    let mut u = Mat::zeros(n, n);
     let mut fsa = vec![0.0f32; bh.min(n)];
     let mut fta = vec![0.0f32; bh.min(n)];
+    focus_sizes_optimized_into(d, tie, bhat, &mut u, &mut fsa, &mut fta);
+    u
+}
+
+/// [`focus_sizes_optimized`] writing into a caller-owned `u` (resized
+/// semantics: `u` must already be `n x n`; it is reinitialized here) with
+/// caller-owned mask scratch of at least `min(b̂, n)` elements.
+pub(crate) fn focus_sizes_optimized_into(
+    d: &Mat,
+    tie: TieMode,
+    bhat: usize,
+    u: &mut Mat,
+    fsa: &mut [f32],
+    fta: &mut [f32],
+) {
+    let n = d.rows();
+    let bh = resolve_block(bhat, n);
+    init_focus(u);
     let nbh = n.div_ceil(bh);
     for xb in 0..nbh {
         let xs = xb * bh;
@@ -86,8 +127,8 @@ pub fn focus_sizes_optimized(d: &Mat, tie: TieMode, bhat: usize) -> Mat {
                             dxy,
                             ux,
                             uy,
-                            &mut fsa,
-                            &mut fta,
+                            fsa,
+                            fta,
                             z_lo.max(zs),
                             ze,
                             tie,
@@ -103,13 +144,6 @@ pub fn focus_sizes_optimized(d: &Mat, tie: TieMode, bhat: usize) -> Mat {
             u[(y, x)] = u[(x, y)];
         }
     }
-    u
-}
-
-/// Reciprocal pair-weight matrix W = 1/U off-diagonal, 0 on the diagonal.
-pub fn reciprocal_weights(u: &Mat) -> Mat {
-    let n = u.rows();
-    Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 1.0 / u[(x, y)] })
 }
 
 /// Optimized triplet: blocked block-triplet iteration, branch-free masked
@@ -117,31 +151,58 @@ pub fn reciprocal_weights(u: &Mat) -> Mat {
 /// for the cohesion pass — Figure 4 bottom).
 pub fn triplet_optimized(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat {
     let n = d.rows();
-    let u = focus_sizes_optimized(d, tie, bhat);
-    let w = reciprocal_weights(&u);
+    let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    let mut ct = Mat::zeros(n, n);
+    triplet_optimized_into(d, tie, bhat, btil, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized optimized triplet accumulation into `out` (zeroed here);
+/// U, W, CT, and all mask scratch live in the workspace.
+pub(crate) fn triplet_optimized_into(
+    d: &Mat,
+    tie: TieMode,
+    bhat: usize,
+    btil: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
+    let n = d.rows();
+    let bh = resolve_block(bhat, n);
     let bt = resolve_block(btil, n);
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_uw(n);
+    ws.ensure_ct(n);
+    ws.ensure_focus_scratch(bh.min(n));
+    ws.ensure_mask_scratch(bt.min(n));
+    let Workspace { u, w, ct, sa, ta, fsa, fta, phases, .. } = ws;
+
+    let t0 = Instant::now();
+    focus_sizes_optimized_into(d, tie, bhat, u, fsa, fta);
+    reciprocal_weights_into(u, w);
+    phases.focus_s += t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
     let nbt = n.div_ceil(bt);
     for xb in 0..nbt {
         for yb in xb..nbt {
             for zb in yb..nbt {
                 triplet_cohesion_tile_optimized(
-                    d, &w, &mut c, &mut ct, tie, xb * bt, yb * bt, zb * bt, bt, n,
+                    d, w, c, ct, tie, xb * bt, yb * bt, zb * bt, bt, n, sa, ta,
                 );
             }
         }
     }
-    crate::pald::branchfree::add_transposed(&mut c, &ct);
-    super::add_diagonal_contributions(&mut c, &w);
-    normalize(&mut c);
-    c
+    crate::pald::branchfree::add_transposed(c, ct);
+    super::add_diagonal_contributions(c, w, d, tie);
+    phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
 /// Branch-free cohesion update for one block triplet, sequential entry
 /// point (takes the exclusive borrows and forwards to the raw kernel).
 /// `ct` is the transposed column accumulator (fold with `add_transposed`
-/// after the last tile).
+/// after the last tile); `sa`/`ta` are mask scratch of >= `min(b, n)`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn triplet_cohesion_tile_optimized(
     d: &Mat,
@@ -154,17 +215,33 @@ pub(crate) fn triplet_cohesion_tile_optimized(
     zs: usize,
     b: usize,
     n: usize,
+    sa: &mut [f32],
+    ta: &mut [f32],
 ) {
     debug_assert_eq!(c.cols(), n);
     // SAFETY: exclusive &mut borrows of c and ct.
     unsafe {
-        triplet_cohesion_tile_raw(d, w, c.as_mut_ptr(), ct.as_mut_ptr(), tie, xs, ys, zs, b, n);
+        triplet_cohesion_tile_raw(
+            d,
+            w,
+            c.as_mut_ptr(),
+            ct.as_mut_ptr(),
+            tie,
+            xs,
+            ys,
+            zs,
+            b,
+            n,
+            sa,
+            ta,
+        );
     }
 }
 
 /// Branch-free cohesion update for one block triplet through a raw C
 /// pointer.  Used by the task-parallel runtime, where the executor holds
-/// the locks of all six C tiles the call writes.
+/// the locks of all six C tiles the call writes.  `sa`/`ta` are mask
+/// scratch rows of at least `min(b, n)` elements.
 ///
 /// # Safety
 /// `c_ptr` must point at an `n x n` row-major matrix, and no other thread
@@ -182,13 +259,12 @@ pub(crate) unsafe fn triplet_cohesion_tile_raw(
     zs: usize,
     b: usize,
     n: usize,
+    sa: &mut [f32],
+    ta: &mut [f32],
 ) {
     let xe = (xs + b).min(n);
     let ye = (ys + b).min(n);
     let ze = (zs + b).min(n);
-    // Per-tile mask scratch (see triplet_cohesion_branchfree_row).
-    let mut sa = vec![0.0f32; b.min(n)];
-    let mut ta = vec![0.0f32; b.min(n)];
     for x in xs..xe {
         let y_lo = if ys == xs { x + 1 } else { ys };
         for y in y_lo..ye {
@@ -215,8 +291,8 @@ pub(crate) unsafe fn triplet_cohesion_tile_raw(
                 cy,
                 ctx,
                 cty,
-                &mut sa,
-                &mut ta,
+                sa,
+                ta,
                 z_lo,
                 ze,
                 tie,

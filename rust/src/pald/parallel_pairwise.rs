@@ -12,16 +12,41 @@
 //!    (Figure 6's column partition).  In our row-major layout "column z"
 //!    is index `[x][z]`, so threads write disjoint index sets of every
 //!    row — expressed through a `DisjointWriter`.
+//!
+//! The per-thread reduction buffers of pass 1 live in the
+//! [`Workspace`], so a serving [`crate::pald::Session`] pays no
+//! allocation for them after the first request.
+
+use std::time::Instant;
 
 use crate::core::Mat;
 use crate::pald::blocked::resolve_block;
 use crate::pald::branchfree::mask as m;
+use crate::pald::workspace::Workspace;
 use crate::pald::{normalize, TieMode};
 use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
-use crate::parallel::reduce::parallel_for_reduce_u32;
+use crate::parallel::reduce::parallel_for_reduce_u32_into;
 
 /// Parallel pairwise PaLD on `threads` threads with block size `b`.
 pub fn pairwise_parallel(d: &Mat, tie: TieMode, b: usize, threads: usize) -> Mat {
+    let n = d.rows();
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(n, n);
+    pairwise_parallel_into(d, tie, b, threads, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized parallel pairwise accumulation into `out` (zeroed here);
+/// the U/W tiles and per-thread reduction buffers live in the workspace.
+pub(crate) fn pairwise_parallel_into(
+    d: &Mat,
+    tie: TieMode,
+    b: usize,
+    threads: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
     let n = d.rows();
     let b = resolve_block(b, n);
     let threads = threads.max(1);
@@ -30,9 +55,12 @@ pub fn pairwise_parallel(d: &Mat, tie: TieMode, b: usize, threads: usize) -> Mat
         // OMP_NUM_THREADS=1 effectively runs): the parallel inner loops
         // trade vectorizability for conflict-freedom, which only pays off
         // with real concurrency.
-        return crate::pald::optimized::pairwise_optimized(d, tie, b);
+        crate::pald::optimized::pairwise_optimized_into(d, tie, b, ws, c);
+        return;
     }
-    let mut c = Mat::zeros(n, n);
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_tiles(b);
+    let Workspace { u_tile, w_tile, reduce, phases, .. } = ws;
     let nb = n.div_ceil(b);
 
     for xb in 0..nb {
@@ -43,44 +71,44 @@ pub fn pairwise_parallel(d: &Mat, tie: TieMode, b: usize, threads: usize) -> Mat
             let ye = (ys + b).min(n);
 
             // ---- Pass 1: U[X,Y] with z-loop parallelism + reduction. ----
-            let u_tile = parallel_for_reduce_u32(
-                n,
-                b * b,
-                threads,
-                Schedule::Static,
-                |zrange, acc| {
-                    for x in xs..xe {
-                        let dx = d.row(x);
-                        let y_lo = if xb == yb { x + 1 } else { ys };
-                        for y in y_lo.max(ys)..ye {
-                            let dy = d.row(y);
-                            let dxy = dx[y];
-                            let mut cnt = 0u32;
-                            match tie {
-                                TieMode::Strict => {
-                                    for z in zrange.clone() {
-                                        cnt += ((dx[z] < dxy) | (dy[z] < dxy)) as u32;
-                                    }
-                                }
-                                TieMode::Split => {
-                                    for z in zrange.clone() {
-                                        cnt += ((dx[z] <= dxy) | (dy[z] <= dxy)) as u32;
-                                    }
+            let t0 = Instant::now();
+            u_tile.fill(0);
+            parallel_for_reduce_u32_into(n, threads, reduce, u_tile, |zrange, acc| {
+                for x in xs..xe {
+                    let dx = d.row(x);
+                    let y_lo = if xb == yb { x + 1 } else { ys };
+                    for y in y_lo.max(ys)..ye {
+                        let dy = d.row(y);
+                        let dxy = dx[y];
+                        let mut cnt = 0u32;
+                        match tie {
+                            TieMode::Strict => {
+                                for z in zrange.clone() {
+                                    cnt += ((dx[z] < dxy) | (dy[z] < dxy)) as u32;
                                 }
                             }
-                            acc[(x - xs) * b + (y - ys)] += cnt;
+                            TieMode::Split => {
+                                for z in zrange.clone() {
+                                    cnt += ((dx[z] <= dxy) | (dy[z] <= dxy)) as u32;
+                                }
+                            }
                         }
+                        acc[(x - xs) * b + (y - ys)] += cnt;
                     }
-                },
-            );
+                }
+            });
 
             // ---- Reciprocals (cheap; sequential over the b^2 tile). ----
-            let w_tile: Vec<f32> =
-                u_tile.iter().map(|&u| if u == 0 { 0.0 } else { 1.0 / u as f32 }).collect();
+            for (w, &u) in w_tile.iter_mut().zip(u_tile.iter()) {
+                *w = if u == 0 { 0.0 } else { 1.0 / u as f32 };
+            }
+            phases.focus_s += t0.elapsed().as_secs_f64();
 
             // ---- Pass 2: conflict-free column-partitioned cohesion. ----
+            let t0 = Instant::now();
             let writer = DisjointWriter(c.as_mut_ptr());
             let ncols = c.cols();
+            let w_tile_ref: &[f32] = &w_tile[..];
             parallel_for_ranges(n, threads, Schedule::Static, |_, zrange| {
                 for x in xs..xe {
                     let dx = d.row(x);
@@ -88,7 +116,7 @@ pub fn pairwise_parallel(d: &Mat, tie: TieMode, b: usize, threads: usize) -> Mat
                     for y in y_lo.max(ys)..ye {
                         let dy = d.row(y);
                         let dxy = dx[y];
-                        let w = w_tile[(x - xs) * b + (y - ys)];
+                        let w = w_tile_ref[(x - xs) * b + (y - ys)];
                         for z in zrange.clone() {
                             let dxz = dx[z];
                             let dyz = dy[z];
@@ -115,10 +143,9 @@ pub fn pairwise_parallel(d: &Mat, tie: TieMode, b: usize, threads: usize) -> Mat
                     }
                 }
             });
+            phases.cohesion_s += t0.elapsed().as_secs_f64();
         }
     }
-    normalize(&mut c);
-    c
 }
 
 #[cfg(test)]
@@ -168,5 +195,17 @@ mod tests {
         let a = pairwise_parallel(&d, TieMode::Strict, 16, 4);
         let b = pairwise_parallel(&d, TieMode::Strict, 16, 4);
         assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn workspace_reuse_is_bitwise_stable() {
+        let n = 40;
+        let d = distmat::random_tie_free(n, 9);
+        let mut ws = Workspace::new();
+        let mut c1 = Mat::zeros(n, n);
+        let mut c2 = Mat::zeros(n, n);
+        pairwise_parallel_into(&d, TieMode::Strict, 8, 4, &mut ws, &mut c1);
+        pairwise_parallel_into(&d, TieMode::Strict, 8, 4, &mut ws, &mut c2);
+        assert_eq!(c1.as_slice(), c2.as_slice());
     }
 }

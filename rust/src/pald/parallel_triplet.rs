@@ -7,9 +7,12 @@
 //! serialized by the task-graph executor's tile locks — our rendering of
 //! `#pragma omp task untied depend(inout, ...)`.
 
+use std::time::Instant;
+
 use crate::core::Mat;
 use crate::pald::blocked::resolve_block;
-use crate::pald::optimized::{reciprocal_weights, triplet_cohesion_tile_raw};
+use crate::pald::optimized::triplet_cohesion_tile_raw;
+use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
 use crate::pald::{normalize, TieMode};
 use crate::parallel::pool::DisjointWriter;
 use crate::parallel::taskgraph::{execute, tile_id, Task};
@@ -24,17 +27,44 @@ pub fn triplet_parallel(
     threads: usize,
 ) -> Mat {
     let n = d.rows();
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(n, n);
+    triplet_parallel_into(d, tie, bhat, btil, threads, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized parallel triplet accumulation into `out` (zeroed here);
+/// U, W, and CT live in the workspace.  Task-local mask scratch is
+/// allocated per task (tasks run concurrently, so they cannot share the
+/// workspace rows).
+pub(crate) fn triplet_parallel_into(
+    d: &Mat,
+    tie: TieMode,
+    bhat: usize,
+    btil: usize,
+    threads: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
+    let n = d.rows();
     let bh = resolve_block(bhat, n);
     let bt = resolve_block(btil, n);
     let threads = threads.max(1);
     if threads == 1 {
         // Degenerate to the optimized sequential kernel (see
         // pairwise_parallel); the task-graph machinery has no value at p=1.
-        return crate::pald::optimized::triplet_optimized(d, tie, bhat, btil);
+        crate::pald::optimized::triplet_optimized_into(d, tie, bhat, btil, ws, c);
+        return;
     }
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_uw(n);
+    ws.ensure_ct(n);
+    let Workspace { u, w, ct, phases, .. } = ws;
 
     // ---- Pass 1: focus sizes via tile-locked tasks. ----
-    let mut u = Mat::from_fn(n, n, |x, y| if x == y { 0.0 } else { 2.0 });
+    let t0 = Instant::now();
+    init_focus(u);
     {
         let nbh = n.div_ceil(bh);
         let uw = DisjointWriter(u.as_mut_ptr());
@@ -67,17 +97,17 @@ pub fn triplet_parallel(
             u[(y, x)] = u[(x, y)];
         }
     }
-    let w = reciprocal_weights(&u);
+    reciprocal_weights_into(u, w);
+    phases.focus_s += t0.elapsed().as_secs_f64();
 
     // ---- Pass 2: cohesion via tile-locked tasks. ----
-    let mut c = Mat::zeros(n, n);
-    let mut ct = Mat::zeros(n, n);
+    let t0 = Instant::now();
     {
         let nbt = n.div_ceil(bt);
         let cw = DisjointWriter(c.as_mut_ptr());
         let ctw = DisjointWriter(ct.as_mut_ptr());
         let d_ref = d;
-        let w_ref = &w;
+        let w_ref: &Mat = w;
         let mut tasks = Vec::new();
         for xb in 0..nbt {
             for yb in xb..nbt {
@@ -95,13 +125,16 @@ pub fn triplet_parallel(
                     let cw = &cw;
                     let ctw = &ctw;
                     tasks.push(Task::new(resources, move |_| {
+                        let mut sa = vec![0.0f32; bt.min(n)];
+                        let mut ta = vec![0.0f32; bt.min(n)];
                         // SAFETY: writes confined to the six locked tiles
                         // (C rows x/y + scalars in (xb,yb)/(yb,xb); CT rows
                         // x/y cover the C (zb,xb)/(zb,yb) contributions and
                         // are guarded by the same tile ids).
                         unsafe {
                             triplet_cohesion_tile_raw(
-                                d_ref, w_ref, cw.0, ctw.0, tie, xb * bt, yb * bt, zb * bt, bt, n,
+                                d_ref, w_ref, cw.0, ctw.0, tie, xb * bt, yb * bt, zb * bt, bt,
+                                n, &mut sa, &mut ta,
                             );
                         }
                     }));
@@ -110,10 +143,9 @@ pub fn triplet_parallel(
         }
         execute(tasks, nbt * nbt, threads);
     }
-    crate::pald::branchfree::add_transposed(&mut c, &ct);
-    super::add_diagonal_contributions(&mut c, &w);
-    normalize(&mut c);
-    c
+    crate::pald::branchfree::add_transposed(c, ct);
+    super::add_diagonal_contributions(c, w, d, tie);
+    phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
 /// Focus-tile update through a raw pointer (tile locks held by caller).

@@ -1,0 +1,266 @@
+//! Planner: machine-profile-driven kernel selection (DESIGN.md §6).
+//!
+//! `Algorithm::Auto` is resolved here: the planner asks every candidate
+//! kernel in the [registry](crate::pald::kernel::REGISTRY) for its cost
+//! estimate under a [`MachineParams`] profile (the γF + βW models of
+//! `sim::machine`, previously dead weight unwired from execution) and its
+//! Theorem 4.1/4.2-tuned block sizes, then picks the cheapest.  This is
+//! how the paper's guidance — triplet sequentially at large n, pairwise
+//! in parallel — becomes an executable policy instead of a comment.
+
+use crate::pald::api::{Algorithm, PaldConfig};
+use crate::pald::kernel::{kernel_for, ExecParams};
+use crate::pald::TieMode;
+use crate::sim::machine::MachineParams;
+
+/// A resolved execution plan: concrete kernel + tuned parameters.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Concrete kernel (never [`Algorithm::Auto`]).
+    pub algorithm: Algorithm,
+    pub params: ExecParams,
+    /// Machine-model prediction in seconds (`None` when the user pinned
+    /// the algorithm and no estimate was computed).
+    pub predicted_s: Option<f64>,
+}
+
+impl Plan {
+    /// Pass-through plan for a user-pinned algorithm.
+    pub fn from_config(cfg: &PaldConfig) -> Plan {
+        Plan {
+            algorithm: cfg.algorithm,
+            params: ExecParams {
+                tie: cfg.tie_mode,
+                block: cfg.block,
+                block2: cfg.block2,
+                threads: cfg.threads.max(1),
+            },
+            predicted_s: None,
+        }
+    }
+
+    /// Apply explicit user overrides on top of the planner's tuning
+    /// (non-zero `block`/`block2` win over the planned values).
+    pub fn with_overrides(mut self, block: usize, block2: usize) -> Plan {
+        if block != 0 {
+            self.params.block = block;
+        }
+        if block2 != 0 {
+            self.params.block2 = block2;
+        }
+        self
+    }
+
+    /// One-line human-readable summary (the `paldx plan` output).
+    pub fn describe(&self) -> String {
+        let pred = match self.predicted_s {
+            Some(s) => format!(" predicted={s:.3e}s"),
+            None => String::new(),
+        };
+        format!(
+            "algorithm={} block={} block2={} threads={}{}",
+            self.algorithm.name(),
+            self.params.block,
+            self.params.block2,
+            self.params.threads,
+            pred
+        )
+    }
+}
+
+/// Kernel selector over a machine profile.
+pub struct Planner {
+    pub machine: MachineParams,
+}
+
+impl Planner {
+    /// Planner over this host's topology with the paper's per-core rates.
+    pub fn new() -> Planner {
+        Planner { machine: MachineParams::host() }
+    }
+
+    /// Planner over rates measured on this machine (slower to build: runs
+    /// the calibration kernels once).
+    pub fn calibrated() -> Planner {
+        Planner { machine: MachineParams::calibrated(true) }
+    }
+
+    pub fn with_machine(machine: MachineParams) -> Planner {
+        Planner { machine }
+    }
+
+    /// Candidate algorithms for a thread budget.  Only the top rungs are
+    /// ever optimal (the lower Figure 3 rungs exist for the ablation), so
+    /// the search space is the optimized/hybrid/parallel set.
+    fn candidates(threads: usize) -> &'static [Algorithm] {
+        if threads > 1 {
+            &[
+                Algorithm::OptimizedPairwise,
+                Algorithm::OptimizedTriplet,
+                Algorithm::Hybrid,
+                Algorithm::ParallelPairwise,
+                Algorithm::ParallelTriplet,
+                Algorithm::ParallelHybrid,
+            ]
+        } else {
+            &[Algorithm::OptimizedPairwise, Algorithm::OptimizedTriplet, Algorithm::Hybrid]
+        }
+    }
+
+    /// The cost-ranked candidate set the planner actually chooses from:
+    /// each entry is (algorithm, tuned params, predicted seconds).
+    /// Kernels whose metadata does not declare exact tie support are
+    /// excluded under `TieMode::Split`.
+    pub fn scored_candidates(
+        &self,
+        n: usize,
+        tie: TieMode,
+        threads: usize,
+    ) -> Vec<(Algorithm, ExecParams, f64)> {
+        let threads = threads.max(1);
+        Self::candidates(threads)
+            .iter()
+            .filter_map(|&alg| {
+                let kernel = kernel_for(alg).expect("candidate registered");
+                if tie == TieMode::Split && !kernel.meta().exact_ties {
+                    return None;
+                }
+                let (block, block2) = kernel.default_blocks(n, self.machine.fast_mem_words);
+                let params = ExecParams { tie, block, block2, threads };
+                let cost = kernel.cost(n, &params, &self.machine);
+                Some((alg, params, cost))
+            })
+            .collect()
+    }
+
+    /// Choose the cheapest kernel + tuned block sizes for an `n x n`
+    /// problem on `threads` threads.
+    pub fn plan(&self, n: usize, tie: TieMode, threads: usize) -> Plan {
+        let mut best: Option<Plan> = None;
+        let mut best_cost = f64::INFINITY;
+        for (alg, params, cost) in self.scored_candidates(n, tie, threads) {
+            if cost < best_cost || best.is_none() {
+                best_cost = cost;
+                best = Some(Plan { algorithm: alg, params, predicted_s: Some(cost) });
+            }
+        }
+        best.expect("candidate set is never empty")
+    }
+
+    /// Resolve a full config: `Auto` goes through [`Planner::plan`] (with
+    /// explicit block overrides honored — applied after kernel selection,
+    /// with the prediction recomputed for the final parameters); pinned
+    /// algorithms pass through.
+    pub fn resolve(&self, cfg: &PaldConfig, n: usize) -> Plan {
+        if cfg.algorithm == Algorithm::Auto {
+            let mut plan = self
+                .plan(n, cfg.tie_mode, cfg.threads.max(1))
+                .with_overrides(cfg.block, cfg.block2);
+            if cfg.block != 0 || cfg.block2 != 0 {
+                let kernel = kernel_for(plan.algorithm).expect("planned kernel registered");
+                plan.predicted_s = Some(kernel.cost(n, &plan.params, &self.machine));
+            }
+            plan
+        } else {
+            Plan::from_config(cfg)
+        }
+    }
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner() -> Planner {
+        Planner::with_machine(MachineParams::xeon_6226r())
+    }
+
+    #[test]
+    fn sequential_plan_is_a_sequential_kernel_with_blocks() {
+        let plan = planner().plan(1024, TieMode::Strict, 1);
+        assert!(
+            matches!(
+                plan.algorithm,
+                Algorithm::OptimizedPairwise | Algorithm::OptimizedTriplet | Algorithm::Hybrid
+            ),
+            "{:?}",
+            plan.algorithm
+        );
+        assert!(plan.params.block > 0);
+        assert!(plan.predicted_s.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn parallel_plan_uses_threads() {
+        let plan = planner().plan(4096, TieMode::Strict, 16);
+        let k = kernel_for(plan.algorithm).unwrap();
+        assert!(k.meta().parallel, "expected a parallel kernel, got {}", k.name());
+        assert_eq!(plan.params.threads, 16);
+    }
+
+    #[test]
+    fn overrides_win_over_tuning() {
+        let plan = planner().plan(512, TieMode::Strict, 1).with_overrides(33, 17);
+        assert_eq!(plan.params.block, 33);
+        assert_eq!(plan.params.block2, 17);
+    }
+
+    #[test]
+    fn resolve_passes_pinned_algorithms_through() {
+        let cfg = PaldConfig {
+            algorithm: Algorithm::BlockedTriplet,
+            block: 24,
+            ..Default::default()
+        };
+        let plan = planner().resolve(&cfg, 100);
+        assert_eq!(plan.algorithm, Algorithm::BlockedTriplet);
+        assert_eq!(plan.params.block, 24);
+        assert!(plan.predicted_s.is_none());
+    }
+
+    #[test]
+    fn resolve_auto_yields_concrete_kernel() {
+        let cfg = PaldConfig { algorithm: Algorithm::Auto, ..Default::default() };
+        let plan = planner().resolve(&cfg, 256);
+        assert_ne!(plan.algorithm, Algorithm::Auto);
+        assert!(plan.describe().contains("algorithm="));
+    }
+
+    #[test]
+    fn resolve_auto_recomputes_prediction_for_overridden_blocks() {
+        let p = planner();
+        let auto = PaldConfig { algorithm: Algorithm::Auto, threads: 1, ..Default::default() };
+        let tuned = p.resolve(&auto, 1024);
+        let pinned_blocks =
+            PaldConfig { block: 8, block2: 4, ..auto.clone() };
+        let overridden = p.resolve(&pinned_blocks, 1024);
+        assert_eq!(overridden.params.block, 8);
+        assert_eq!(overridden.params.block2, 4);
+        // The prediction must describe the overridden blocks, not the
+        // tuned ones (tiny blocks cost more under the traffic model).
+        assert!(
+            overridden.predicted_s.unwrap() > tuned.predicted_s.unwrap(),
+            "b=8 should predict slower than tuned b={}",
+            tuned.params.block
+        );
+    }
+
+    #[test]
+    fn scored_candidates_match_plan_selection() {
+        let p = planner();
+        let scored = p.scored_candidates(1024, TieMode::Strict, 4);
+        assert!(!scored.is_empty());
+        let plan = p.plan(1024, TieMode::Strict, 4);
+        let best = scored
+            .iter()
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        assert_eq!(plan.predicted_s.unwrap(), best.2);
+    }
+}

@@ -1,0 +1,104 @@
+//! Serving sessions: repeated and batched cohesion computations with
+//! zero steady-state allocation (DESIGN.md §6).
+//!
+//! A [`Session`] owns a [`Workspace`] and a configuration, so a service
+//! handling back-to-back distance matrices (the Online PaLD pattern)
+//! re-uses U/W/CT and the per-thread reduction buffers across requests
+//! instead of allocating and zeroing them every call.
+
+use crate::core::Mat;
+use crate::pald::api::{compute_cohesion_into, Backend, PaldConfig, PhaseTimes};
+use crate::pald::workspace::Workspace;
+
+/// A reusable computation context for repeated `compute` calls.
+pub struct Session {
+    cfg: PaldConfig,
+    ws: Workspace,
+}
+
+impl Session {
+    /// Build a session; the XLA backend is served by the coordinator, not
+    /// by native sessions.
+    pub fn new(cfg: PaldConfig) -> anyhow::Result<Session> {
+        if cfg.backend == Backend::Xla {
+            anyhow::bail!("Backend::Xla is served by coordinator::Coordinator, not Session");
+        }
+        Ok(Session { cfg, ws: Workspace::new() })
+    }
+
+    pub fn config(&self) -> &PaldConfig {
+        &self.cfg
+    }
+
+    /// Compute into a caller-owned output matrix (must be `n x n`);
+    /// returns the phase timing breakdown of this call.
+    pub fn compute_into(&mut self, d: &Mat, out: &mut Mat) -> anyhow::Result<PhaseTimes> {
+        compute_cohesion_into(d, &self.cfg, &mut self.ws, out)
+    }
+
+    /// Compute a fresh cohesion matrix (the only allocation on the steady
+    /// path is this output).
+    pub fn compute(&mut self, d: &Mat) -> anyhow::Result<Mat> {
+        let mut out = Mat::zeros(d.rows(), d.rows());
+        self.compute_into(d, &mut out)?;
+        Ok(out)
+    }
+
+    /// Compute a batch of distance matrices through the shared workspace.
+    pub fn compute_batch(&mut self, ds: &[Mat]) -> anyhow::Result<Vec<Mat>> {
+        ds.iter().map(|d| self.compute(d)).collect()
+    }
+
+    /// Phase timings recorded by the most recent computation.
+    pub fn last_times(&self) -> PhaseTimes {
+        self.ws.phases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::{compute_cohesion, Algorithm};
+
+    #[test]
+    fn session_matches_one_shot_api() {
+        let cfg = PaldConfig {
+            algorithm: Algorithm::OptimizedTriplet,
+            block: 16,
+            block2: 8,
+            threads: 1,
+            ..Default::default()
+        };
+        let mut s = Session::new(cfg.clone()).unwrap();
+        for seed in [1u64, 2, 3] {
+            let d = distmat::random_tie_free(32, seed);
+            let got = s.compute(&d).unwrap();
+            let want = compute_cohesion(&d, &cfg).unwrap();
+            assert_eq!(got.as_slice(), want.as_slice(), "seed={seed}");
+        }
+        assert!(s.last_times().total_s > 0.0);
+    }
+
+    #[test]
+    fn session_rejects_xla_backend() {
+        let cfg = PaldConfig { backend: Backend::Xla, ..Default::default() };
+        assert!(Session::new(cfg).is_err());
+    }
+
+    #[test]
+    fn session_handles_shape_changes() {
+        let mut s = Session::new(PaldConfig {
+            algorithm: Algorithm::OptimizedPairwise,
+            threads: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        for n in [24usize, 40, 16] {
+            let d = distmat::random_tie_free(n, n as u64);
+            let c = s.compute(&d).unwrap();
+            assert_eq!(c.rows(), n);
+            assert!((c.sum() - n as f64 / 2.0).abs() < 1e-3);
+        }
+    }
+}

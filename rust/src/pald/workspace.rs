@@ -1,0 +1,208 @@
+//! Reusable scratch memory for the PaLD kernels (DESIGN.md §6).
+//!
+//! Every kernel in the registry computes through a [`Workspace`]: the
+//! intermediate matrices (U, W, the transposed column accumulator CT),
+//! the per-tile and mask scratch vectors, and the per-thread reduction
+//! buffers all live here, so back-to-back calls on same-shaped inputs —
+//! the serving pattern motivated by Online PaLD — pay no allocation after
+//! the first request.  Buffers grow on demand and are retained; only the
+//! O(n^2) semantic initialization (e.g. U's off-diagonal 2s) is repeated
+//! per call, which is negligible against the O(n^3) kernels.
+
+use crate::core::Mat;
+use crate::parallel::reduce::ReduceWorkspace;
+
+/// Phase timing breakdown (paper Figure 13 / Appendix B).
+///
+/// The two-pass kernels (triplet family, hybrid, and the tiled pairwise
+/// variants) attribute their time to the focus and cohesion passes; the
+/// final `1/(n-1)` scaling is timed by the dispatch layer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    /// First pass: local-focus sizes U (plus the reciprocal sweep).
+    pub focus_s: f64,
+    /// Second pass: cohesion accumulation into C.
+    pub cohesion_s: f64,
+    /// Final `1/(n-1)` scaling (Eq. 3.3).
+    pub normalize_s: f64,
+    /// Wall-clock of the whole computation (>= the sum of the phases).
+    pub total_s: f64,
+}
+
+impl PhaseTimes {
+    /// Time not attributed to a phase (dispatch, workspace preparation).
+    pub fn overhead_s(&self) -> f64 {
+        (self.total_s - self.focus_s - self.cohesion_s - self.normalize_s).max(0.0)
+    }
+}
+
+/// Reusable arena threaded through every kernel's `*_into` entry point.
+pub struct Workspace {
+    /// Focus-size matrix U (triplet family, hybrid).
+    pub(crate) u: Mat,
+    /// Reciprocal weight matrix W = 1/U.
+    pub(crate) w: Mat,
+    /// Transposed column accumulator CT (branch-free triplet kernels).
+    pub(crate) ct: Mat,
+    /// Mask scratch rows for the branch-free cohesion kernels.
+    pub(crate) sa: Vec<f32>,
+    pub(crate) ta: Vec<f32>,
+    /// Mask scratch rows for the branch-free focus kernels.
+    pub(crate) fsa: Vec<f32>,
+    pub(crate) fta: Vec<f32>,
+    /// Integer focus-count tile (blocked/parallel pairwise).
+    pub(crate) u_tile: Vec<u32>,
+    /// Reciprocal weight tile (optimized/parallel pairwise).
+    pub(crate) w_tile: Vec<f32>,
+    /// Per-thread reduction buffers (parallel pairwise focus pass).
+    pub(crate) reduce: ReduceWorkspace,
+    /// Phase timings recorded by the last kernel run.
+    pub phases: PhaseTimes,
+}
+
+impl Workspace {
+    /// Empty workspace; buffers are sized lazily by the kernels.
+    pub fn new() -> Workspace {
+        Workspace {
+            u: Mat::zeros(0, 0),
+            w: Mat::zeros(0, 0),
+            ct: Mat::zeros(0, 0),
+            sa: Vec::new(),
+            ta: Vec::new(),
+            fsa: Vec::new(),
+            fta: Vec::new(),
+            u_tile: Vec::new(),
+            w_tile: Vec::new(),
+            reduce: ReduceWorkspace::default(),
+            phases: PhaseTimes::default(),
+        }
+    }
+
+    fn ensure_mat(m: &mut Mat, n: usize) {
+        if m.rows() != n || m.cols() != n {
+            *m = Mat::zeros(n, n);
+        }
+    }
+
+    /// U and W sized `n x n` (contents unspecified; kernels initialize).
+    pub(crate) fn ensure_uw(&mut self, n: usize) {
+        Self::ensure_mat(&mut self.u, n);
+        Self::ensure_mat(&mut self.w, n);
+    }
+
+    /// Transposed column accumulator sized `n x n` and zeroed.
+    pub(crate) fn ensure_ct(&mut self, n: usize) {
+        Self::ensure_mat(&mut self.ct, n);
+        self.ct.as_mut_slice().fill(0.0);
+    }
+
+    /// Mask scratch rows `sa`/`ta` of at least `len` elements.
+    pub(crate) fn ensure_mask_scratch(&mut self, len: usize) {
+        resize_zeroed(&mut self.sa, len);
+        resize_zeroed(&mut self.ta, len);
+    }
+
+    /// Focus-pass mask scratch rows `fsa`/`fta` of at least `len` elements.
+    pub(crate) fn ensure_focus_scratch(&mut self, len: usize) {
+        resize_zeroed(&mut self.fsa, len);
+        resize_zeroed(&mut self.fta, len);
+    }
+
+    /// Pairwise `b x b` tile buffers: integer counts (zeroed) + weights.
+    pub(crate) fn ensure_tiles(&mut self, b: usize) {
+        self.u_tile.clear();
+        self.u_tile.resize(b * b, 0);
+        self.w_tile.clear();
+        self.w_tile.resize(b * b, 0.0);
+    }
+
+    /// Clear the phase recorder before a fresh kernel run.
+    pub fn reset_phases(&mut self) {
+        self.phases = PhaseTimes::default();
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn resize_zeroed(v: &mut Vec<f32>, len: usize) {
+    v.clear();
+    v.resize(len, 0.0);
+}
+
+/// Initialize U for the triplet focus passes: 2 off-diagonal (x and y
+/// always belong to their own focus), 0 on the diagonal.
+pub(crate) fn init_focus(u: &mut Mat) {
+    u.as_mut_slice().fill(2.0);
+    let n = u.rows();
+    for i in 0..n {
+        u[(i, i)] = 0.0;
+    }
+}
+
+/// W = 1/U off-diagonal, 0 on the diagonal, written in place.
+pub(crate) fn reciprocal_weights_into(u: &Mat, w: &mut Mat) {
+    let n = u.rows();
+    for x in 0..n {
+        let ur = u.row(x);
+        let wr = w.row_mut(x);
+        for y in 0..n {
+            wr[y] = if x == y { 0.0 } else { 1.0 / ur[y] };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_retained_across_ensures() {
+        let mut ws = Workspace::new();
+        ws.ensure_uw(16);
+        ws.ensure_ct(16);
+        ws.ensure_tiles(8);
+        let up = ws.u.as_mut_ptr();
+        let tp = ws.u_tile.as_ptr();
+        ws.ensure_uw(16);
+        ws.ensure_ct(16);
+        ws.ensure_tiles(8);
+        assert_eq!(up, ws.u.as_mut_ptr(), "same-shape ensure must not realloc");
+        assert_eq!(tp, ws.u_tile.as_ptr());
+    }
+
+    #[test]
+    fn ensure_resizes_on_shape_change() {
+        let mut ws = Workspace::new();
+        ws.ensure_uw(8);
+        ws.ensure_uw(12);
+        assert_eq!(ws.u.rows(), 12);
+        ws.ensure_uw(6);
+        assert_eq!(ws.u.rows(), 6);
+    }
+
+    #[test]
+    fn init_focus_and_reciprocals() {
+        let mut u = Mat::zeros(4, 4);
+        init_focus(&mut u);
+        assert_eq!(u[(0, 0)], 0.0);
+        assert_eq!(u[(0, 1)], 2.0);
+        u[(1, 2)] = 4.0;
+        let mut w = Mat::zeros(4, 4);
+        reciprocal_weights_into(&u, &mut w);
+        assert_eq!(w[(1, 1)], 0.0);
+        assert_eq!(w[(1, 2)], 0.25);
+        assert_eq!(w[(0, 1)], 0.5);
+    }
+
+    #[test]
+    fn phase_overhead_never_negative() {
+        let p = PhaseTimes { focus_s: 1.0, cohesion_s: 1.0, normalize_s: 0.5, total_s: 2.0 };
+        assert_eq!(p.overhead_s(), 0.0);
+        let p = PhaseTimes { focus_s: 0.5, cohesion_s: 1.0, normalize_s: 0.1, total_s: 2.0 };
+        assert!((p.overhead_s() - 0.4).abs() < 1e-12);
+    }
+}

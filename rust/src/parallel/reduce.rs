@@ -69,9 +69,97 @@ where
     result.into_inner().unwrap()
 }
 
+/// Reusable per-thread accumulator buffers for repeated reductions.
+///
+/// [`parallel_for_reduce_u32`] allocates one private buffer per thread per
+/// call; in the serving path (a [`crate::pald::Session`] computing many
+/// matrices back to back) those allocations dominate the focus-pass
+/// overhead.  A `ReduceWorkspace` keeps the buffers alive across calls —
+/// steady state is allocation-free.
+#[derive(Default)]
+pub struct ReduceWorkspace {
+    bufs: Vec<Vec<u32>>,
+}
+
+impl ReduceWorkspace {
+    /// Size (and zero) `threads` buffers of `acc_len` words, reusing
+    /// existing capacity.
+    fn ensure(&mut self, threads: usize, acc_len: usize) {
+        if self.bufs.len() < threads {
+            self.bufs.resize_with(threads, Vec::new);
+        }
+        for b in self.bufs.iter_mut().take(threads) {
+            b.clear();
+            b.resize(acc_len, 0);
+        }
+    }
+}
+
+/// Like [`parallel_for_reduce_u32`], but accumulating into the caller's
+/// `out` (which must be zeroed) and reusing `ws`'s per-thread buffers
+/// across calls.  Static schedule (the pairwise focus pass is uniform).
+pub fn parallel_for_reduce_u32_into<F>(
+    len: usize,
+    threads: usize,
+    ws: &mut ReduceWorkspace,
+    out: &mut [u32],
+    body: F,
+) where
+    F: Fn(std::ops::Range<usize>, &mut [u32]) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 {
+        body(0..len, out);
+        return;
+    }
+    ws.ensure(threads, out.len());
+    let chunk = len.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, buf) in ws.bufs.iter_mut().enumerate().take(threads) {
+            let lo = (t * chunk).min(len);
+            let hi = ((t + 1) * chunk).min(len);
+            let body = &body;
+            s.spawn(move || body(lo..hi, &mut buf[..]));
+        }
+    });
+    for buf in ws.bufs.iter().take(threads) {
+        for (o, v) in out.iter_mut().zip(buf) {
+            *o += *v;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn reduce_into_matches_allocating_variant() {
+        let body = |range: std::ops::Range<usize>, acc: &mut [u32]| {
+            for i in range {
+                acc[i % 8] += (i as u32) % 5;
+            }
+        };
+        let want = parallel_for_reduce_u32(1000, 8, 4, Schedule::Static, body);
+        let mut ws = ReduceWorkspace::default();
+        let mut out = vec![0u32; 8];
+        parallel_for_reduce_u32_into(1000, 4, &mut ws, &mut out, body);
+        assert_eq!(out, want);
+        // Second call reuses buffers and still sums correctly.
+        out.fill(0);
+        parallel_for_reduce_u32_into(1000, 4, &mut ws, &mut out, body);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn reduce_into_single_thread() {
+        let mut ws = ReduceWorkspace::default();
+        let mut out = vec![0u32; 2];
+        parallel_for_reduce_u32_into(10, 1, &mut ws, &mut out, |range, acc| {
+            acc[0] += range.len() as u32;
+        });
+        assert_eq!(out[0], 10);
+    }
 
     #[test]
     fn reduce_sums_partials() {

@@ -6,20 +6,27 @@
 //! Default problem sizes are offline-friendly; set `PALDX_FULL=1` for the
 //! paper's sizes (n = 2048..8192 — hours of compute at paper scale).
 
-use crate::bench::{bench, fmt_secs, fmt_speedup, BenchOpts, Table};
+use crate::bench::{bench, fmt_secs, fmt_speedup, BenchOpts, Stats, Table};
 use crate::core::Mat;
 use crate::data::{distmat, graph};
 use crate::pald::{self, ops, Algorithm, PaldConfig, TieMode};
 use crate::sim::machine::MachineParams;
 use crate::sim::{cache, scaling, traffic};
 
-fn time_alg(d: &Mat, alg: Algorithm, block: usize, block2: usize, opts: &BenchOpts) -> f64 {
+fn stats_alg(d: &Mat, alg: Algorithm, block: usize, block2: usize, opts: &BenchOpts) -> Stats {
     let cfg = PaldConfig { algorithm: alg, block, block2, threads: 1, ..Default::default() };
-    let stats = bench(opts, || {
-        let c = pald::compute_cohesion(d, &cfg).expect("compute");
-        std::hint::black_box(c.sum());
-    });
-    stats.mean
+    // Workspace-reusing timing loop: steady-state serving cost, not
+    // first-call allocation cost.
+    let mut session = pald::Session::new(cfg).expect("session");
+    let mut out = Mat::zeros(d.rows(), d.rows());
+    bench(opts, || {
+        session.compute_into(d, &mut out).expect("compute");
+        std::hint::black_box(out.sum());
+    })
+}
+
+fn time_alg(d: &Mat, alg: Algorithm, block: usize, block2: usize, opts: &BenchOpts) -> f64 {
+    stats_alg(d, alg, block, block2, opts).mean
 }
 
 /// Figure 3: speedups of the optimization ladder, relative to the previous
@@ -44,7 +51,9 @@ pub fn fig3(n: usize, opts: &BenchOpts) -> Table {
     let mut prev = f64::NAN;
     let mut naive_pw = f64::NAN;
     for (name, alg, blk, blk2) in ladder {
-        let t = time_alg(&d, alg, blk, blk2, opts);
+        let st = stats_alg(&d, alg, blk, blk2, opts);
+        table.stat(alg.name(), st);
+        let t = st.mean;
         if naive_pw.is_nan() {
             naive_pw = t;
         }
@@ -72,7 +81,9 @@ pub fn fig4(n: usize, opts: &BenchOpts) -> (Table, Table) {
     );
     let mut b = 32usize;
     while b <= n.min(1024) {
-        let t = time_alg(&d, Algorithm::OptimizedPairwise, b, 0, opts);
+        let st = stats_alg(&d, Algorithm::OptimizedPairwise, b, 0, opts);
+        let t = st.mean;
+        pw.stat(format!("opt-pairwise/b={b}"), st);
         pw.row(vec![b.to_string(), fmt_secs(t), fmt_speedup(naive_pw / t)]);
         b *= 2;
     }
@@ -85,7 +96,9 @@ pub fn fig4(n: usize, opts: &BenchOpts) -> (Table, Table) {
     while bh <= n.min(512) {
         let mut bt = 32usize;
         while bt <= n.min(512) {
-            let t = time_alg(&d, Algorithm::OptimizedTriplet, bh, bt, opts);
+            let st = stats_alg(&d, Algorithm::OptimizedTriplet, bh, bt, opts);
+            let t = st.mean;
+            tr.stat(format!("opt-triplet/bh={bh},bt={bt}"), st);
             tr.row(vec![
                 bh.to_string(),
                 bt.to_string(),
@@ -107,8 +120,11 @@ pub fn table1(sizes: &[usize], opts: &BenchOpts) -> Table {
     );
     for &n in sizes {
         let d = distmat::random_tie_free(n, n as u64);
-        let tp = time_alg(&d, Algorithm::OptimizedPairwise, 128.min(n), 0, opts);
-        let tt = time_alg(&d, Algorithm::OptimizedTriplet, 256.min(n), 128.min(n), opts);
+        let sp = stats_alg(&d, Algorithm::OptimizedPairwise, 128.min(n), 0, opts);
+        let st = stats_alg(&d, Algorithm::OptimizedTriplet, 256.min(n), 128.min(n), opts);
+        table.stat(format!("opt-pairwise/n={n}"), sp);
+        table.stat(format!("opt-triplet/n={n}"), st);
+        let (tp, tt) = (sp.mean, st.mean);
         let winner = if tp < tt {
             format!("pairwise ({})", fmt_speedup(tt / tp))
         } else {
@@ -231,7 +247,9 @@ pub fn table2(scale_div: usize, opts: &BenchOpts) -> Table {
         let (lcc, _) = g.largest_component();
         let d = lcc.apsp(true);
         let n_run = d.rows();
-        let t_seq = time_alg(&d, Algorithm::OptimizedPairwise, 128.min(n_run), 0, opts);
+        let s_seq = stats_alg(&d, Algorithm::OptimizedPairwise, 128.min(n_run), 0, opts);
+        table.stat(format!("opt-pairwise/{name}"), s_seq);
+        let t_seq = s_seq.mean;
         let speedup = scaling::predicted_speedup(&mp, n_run as u64, 32, true, true);
         table.row(vec![
             name.into(),
@@ -266,7 +284,9 @@ pub fn appendix_peak(n: usize, opts: &BenchOpts) -> Table {
             ops::triplet_ops(n as u64).normalized(),
         ),
     ] {
-        let t = time_alg(&d, alg, 128.min(n), 128.min(n), opts);
+        let st = stats_alg(&d, alg, 128.min(n), 128.min(n), opts);
+        table.stat(alg.name(), st);
+        let t = st.mean;
         let rate = f / t;
         table.row(vec![
             name.into(),
@@ -361,14 +381,15 @@ pub fn ablation(n: usize, opts: &BenchOpts) -> Table {
             threads: 1,
             ..Default::default()
         };
-        let t_strict = bench(opts, || {
+        let s_strict = bench(opts, || {
             std::hint::black_box(pald::compute_cohesion(&d, &cfg(TieMode::Strict)).unwrap().sum());
-        })
-        .mean;
-        let t_split = bench(opts, || {
+        });
+        let s_split = bench(opts, || {
             std::hint::black_box(pald::compute_cohesion(&d, &cfg(TieMode::Split)).unwrap().sum());
-        })
-        .mean;
+        });
+        table.stat(format!("{}/strict", alg.name()), s_strict);
+        table.stat(format!("{}/split", alg.name()), s_split);
+        let (t_strict, t_split) = (s_strict.mean, s_split.mean);
         table.row(vec![
             name.into(),
             fmt_secs(t_strict),
@@ -431,6 +452,8 @@ mod tests {
     fn fig3_runs_small() {
         let t = fig3(64, &quick_opts());
         assert_eq!(t.rows.len(), 8);
+        assert_eq!(t.stats.len(), 8, "fig3 must carry raw stats for the JSON report");
+        assert!(t.stats.iter().all(|e| e.stats.mean > 0.0));
     }
 
     #[test]

@@ -86,6 +86,15 @@ impl MachineParams {
         }
     }
 
+    /// Profile shaped after *this* host's topology: one socket with
+    /// `available_parallelism` cores and the Xeon per-core rates.  This is
+    /// the planner's default profile (see `pald::planner`); use
+    /// [`MachineParams::calibrated`] to measure the rates for real.
+    pub fn host() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        MachineParams { sockets: 1, cores_per_socket: cores, ..Self::xeon_6226r() }
+    }
+
     /// Calibrate the compute rates against *this* machine by timing the
     /// optimized kernels (quick: n=256; full: n=1024), keeping the Xeon
     /// NUMA/bandwidth shape for the multi-socket terms.
@@ -439,6 +448,14 @@ mod tests {
             }
         }
         assert_eq!(total, ops::choose3(n));
+    }
+
+    #[test]
+    fn host_profile_is_single_socket() {
+        let m = MachineParams::host();
+        assert_eq!(m.sockets, 1);
+        assert!(m.cores_per_socket >= 1);
+        assert!(m.rate_pw_focus > 0.0);
     }
 
     #[test]

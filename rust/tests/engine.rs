@@ -1,0 +1,153 @@
+//! Execution-engine integration tests: planner-driven `Algorithm::Auto`,
+//! the kernel registry as the single dispatch path, and workspace reuse
+//! through `Session` (DESIGN.md §6).
+
+use paldx::core::Mat;
+use paldx::data::distmat;
+use paldx::pald::{
+    self, compute_cohesion, compute_cohesion_into, naive, Algorithm, PaldConfig, Planner,
+    Session, TieMode, Workspace, REGISTRY,
+};
+
+/// Acceptance: Auto resolves end-to-end and matches the naive reference
+/// on a random tie-free matrix.
+#[test]
+fn auto_matches_naive_reference() {
+    let n = 56;
+    let d = distmat::random_tie_free(n, 4242);
+    let want = naive::pairwise(&d, TieMode::Strict);
+    for threads in [1usize, 2, 6] {
+        let cfg = PaldConfig { algorithm: Algorithm::Auto, threads, ..Default::default() };
+        let c = compute_cohesion(&d, &cfg).unwrap();
+        assert!(
+            c.allclose(&want, 1e-4, 1e-5),
+            "auto(p={threads}) maxdiff={}",
+            c.max_abs_diff(&want)
+        );
+    }
+}
+
+/// The planner selects a concrete kernel with tuned block sizes from the
+/// registry, never echoing `Auto` back.
+#[test]
+fn planner_selects_concrete_kernel_with_blocks() {
+    let planner = Planner::new();
+    for (n, threads) in [(128usize, 1usize), (1024, 1), (2048, 8)] {
+        let plan = planner.plan(n, TieMode::Strict, threads);
+        assert_ne!(plan.algorithm, Algorithm::Auto);
+        let kernel = plan.algorithm.kernel().expect("planned kernel is registered");
+        assert!(plan.params.block > 0 && plan.params.block <= n, "{}", kernel.name());
+        assert!(plan.predicted_s.unwrap() > 0.0);
+        if threads > 1 {
+            assert_eq!(plan.params.threads, threads);
+        }
+    }
+}
+
+/// Acceptance: `Session::compute_batch` over >= 3 matrices produces the
+/// same cohesion matrices as independent `compute_cohesion` calls —
+/// workspace reuse does not leak state between requests.
+#[test]
+fn session_batch_matches_independent_calls() {
+    let cfg = PaldConfig {
+        algorithm: Algorithm::OptimizedTriplet,
+        block: 16,
+        block2: 8,
+        threads: 1,
+        ..Default::default()
+    };
+    // Mixed shapes and a repeated shape: exercises both buffer reuse and
+    // reshape paths.
+    let ds: Vec<Mat> = vec![
+        distmat::random_tie_free(40, 1),
+        distmat::random_tie_free(40, 2),
+        distmat::random_tie_free(28, 3),
+        distmat::random_tied(24, 4, 3),
+    ];
+    let mut session = Session::new(cfg.clone()).unwrap();
+    let batch = session.compute_batch(&ds).unwrap();
+    assert_eq!(batch.len(), ds.len());
+    for (i, (d, got)) in ds.iter().zip(&batch).enumerate() {
+        let want = compute_cohesion(d, &cfg).unwrap();
+        assert_eq!(
+            got.as_slice(),
+            want.as_slice(),
+            "batch[{i}] diverged from the one-shot API"
+        );
+    }
+}
+
+/// A session serving Auto re-plans when the shape changes and still
+/// matches the reference on every request.
+#[test]
+fn session_auto_serves_mixed_shapes() {
+    let cfg = PaldConfig { algorithm: Algorithm::Auto, threads: 2, ..Default::default() };
+    let mut session = Session::new(cfg).unwrap();
+    for (n, seed) in [(32usize, 7u64), (48, 8), (32, 9)] {
+        let d = distmat::random_tie_free(n, seed);
+        let c = session.compute(&d).unwrap();
+        let want = naive::pairwise(&d, TieMode::Strict);
+        assert!(c.allclose(&want, 1e-4, 1e-5), "n={n} seed={seed}");
+    }
+}
+
+/// All 12 variants agree with the naive reference through the public
+/// kernel-trait path (registry -> compute_into -> workspace).
+#[test]
+fn registry_trait_path_agrees_with_naive() {
+    let n = 44;
+    let d = distmat::random_tie_free(n, 555);
+    let want = naive::pairwise(&d, TieMode::Strict);
+    let mut ws = Workspace::new();
+    for k in REGISTRY {
+        let cfg = PaldConfig {
+            algorithm: k.algorithm(),
+            block: 12,
+            block2: 8,
+            threads: 3,
+            ..Default::default()
+        };
+        let mut out = Mat::zeros(n, n);
+        let times = compute_cohesion_into(&d, &cfg, &mut ws, &mut out).unwrap();
+        assert!(times.total_s > 0.0);
+        assert!(
+            out.allclose(&want, 1e-4, 1e-5),
+            "{} maxdiff={}",
+            k.name(),
+            out.max_abs_diff(&want)
+        );
+    }
+}
+
+/// Phase times from the triplet and hybrid kernels decompose the total
+/// (the Figure 13 breakdown satellite).
+#[test]
+fn phase_times_populated_for_two_pass_kernels() {
+    let d = distmat::random_tie_free(64, 99);
+    for alg in [
+        Algorithm::NaiveTriplet,
+        Algorithm::BlockedTriplet,
+        Algorithm::BranchFreeTriplet,
+        Algorithm::OptimizedTriplet,
+        Algorithm::ParallelTriplet,
+        Algorithm::Hybrid,
+        Algorithm::ParallelHybrid,
+    ] {
+        let cfg = PaldConfig {
+            algorithm: alg,
+            block: 16,
+            block2: 16,
+            threads: 2,
+            ..Default::default()
+        };
+        let (_, t) = pald::compute_cohesion_timed(&d, &cfg).unwrap();
+        assert!(t.focus_s > 0.0, "{}: focus_s not recorded", alg.name());
+        assert!(t.cohesion_s > 0.0, "{}: cohesion_s not recorded", alg.name());
+        assert!(
+            t.total_s + 1e-9 >= t.focus_s + t.cohesion_s + t.normalize_s,
+            "{}: phases exceed total",
+            alg.name()
+        );
+        assert!(t.overhead_s() >= 0.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Tie-handling property tests (DESIGN.md §3, invariant 4 sharpened).
+//!
+//! * On duplicated-point distance matrices — exact ties everywhere,
+//!   including zero distances between duplicates — every kernel under
+//!   `TieMode::Split` must agree with the `naive::pairwise` reference.
+//! * On tie-free inputs, `Strict` and `Split` are semantically identical,
+//!   so each kernel must agree with itself across the two modes.
+
+use paldx::data::distmat;
+use paldx::pald::{self, naive, Algorithm, PaldConfig, TieMode};
+use paldx::testutil::{check_cases, matrices_close, random_size};
+
+fn compute(d: &paldx::core::Mat, alg: Algorithm, tie: TieMode) -> paldx::core::Mat {
+    let cfg = PaldConfig {
+        algorithm: alg,
+        tie_mode: tie,
+        block: 8,
+        block2: 4,
+        threads: 3,
+        ..Default::default()
+    };
+    pald::compute_cohesion(d, &cfg).expect("compute_cohesion")
+}
+
+/// Split mode on duplicated-point matrices: all 12 kernels agree with the
+/// naive pairwise reference.
+#[test]
+fn prop_split_agrees_on_duplicated_points() {
+    check_cases(0x71E5, 8, |seed, _| {
+        let n = random_size(seed, 8, 32);
+        let distinct = 2 + (seed % 3) as usize;
+        let d = distmat::random_duplicated(n, seed, distinct);
+        let reference = naive::pairwise(&d, TieMode::Split);
+        for alg in Algorithm::ALL {
+            let c = compute(&d, alg, TieMode::Split);
+            matrices_close(&c, &reference, 1e-4, 1e-5)
+                .map_err(|e| format!("{} (n={n}, distinct={distinct}): {e}", alg.name()))?;
+        }
+        Ok(())
+    });
+}
+
+/// Split mode keeps the total-mass invariant even with zero distances.
+#[test]
+fn prop_split_mass_on_duplicated_points() {
+    check_cases(0x7A55, 8, |seed, _| {
+        let n = random_size(seed, 6, 40);
+        let d = distmat::random_duplicated(n, seed, 3);
+        let c = naive::pairwise(&d, TieMode::Split);
+        let total = c.sum();
+        if (total - n as f64 / 2.0).abs() > 1e-3 {
+            return Err(format!("total mass {total}, want {}", n as f64 / 2.0));
+        }
+        Ok(())
+    });
+}
+
+/// Strict vs Split on tie-free inputs: identical semantics, so every
+/// kernel must agree with itself across the two modes.
+#[test]
+fn prop_strict_equals_split_when_tie_free() {
+    check_cases(0x5EED, 6, |seed, _| {
+        let n = random_size(seed, 8, 36);
+        let d = distmat::random_tie_free(n, seed);
+        for alg in Algorithm::ALL {
+            let strict = compute(&d, alg, TieMode::Strict);
+            let split = compute(&d, alg, TieMode::Split);
+            matrices_close(&strict, &split, 1e-4, 1e-5)
+                .map_err(|e| format!("{} (n={n}): {e}", alg.name()))?;
+        }
+        Ok(())
+    });
+}
+
+/// Auto under Split also honors exact tie semantics (the planner only
+/// selects kernels whose metadata declares exact tie support).
+#[test]
+fn auto_split_on_duplicated_points() {
+    let d = distmat::random_duplicated(24, 77, 3);
+    let reference = naive::pairwise(&d, TieMode::Split);
+    for threads in [1usize, 4] {
+        let cfg = PaldConfig {
+            algorithm: Algorithm::Auto,
+            tie_mode: TieMode::Split,
+            threads,
+            ..Default::default()
+        };
+        let c = pald::compute_cohesion(&d, &cfg).unwrap();
+        assert!(
+            c.allclose(&reference, 1e-4, 1e-5),
+            "auto(p={threads}) maxdiff={}",
+            c.max_abs_diff(&reference)
+        );
+    }
+}
