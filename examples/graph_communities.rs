@@ -8,9 +8,8 @@
 //!
 //!     cargo run --release --example graph_communities [scale_div]
 
-use paldx::analysis;
 use paldx::data::graph;
-use paldx::pald::{compute_cohesion_timed, Algorithm, PaldConfig};
+use paldx::pald::{Algorithm, Pald};
 use paldx::sim::machine::MachineParams;
 use paldx::sim::scaling;
 
@@ -27,6 +26,9 @@ fn main() -> anyhow::Result<()> {
         "{:<12} {:>7} {:>7} {:>10} {:>10} {:>14} {:>12}",
         "dataset", "n(lcc)", "edges", "apsp(s)", "pald(s)", "sim p=32", "communities"
     );
+    // One facade serves all three datasets: the workspace and plan are
+    // reused, and APSP distances are strict-validated by default.
+    let mut pald = Pald::builder().algorithm(Algorithm::OptimizedPairwise).build()?;
     for (name, full_n) in datasets {
         let n = (full_n / scale).max(100);
         let g = graph::collaboration_network(n, 0xC0FFEE ^ full_n as u64);
@@ -36,13 +38,11 @@ fn main() -> anyhow::Result<()> {
         let d = lcc.apsp(true);
         let t_apsp = t0.elapsed().as_secs_f64();
 
-        let cfg = PaldConfig { algorithm: Algorithm::OptimizedPairwise, ..Default::default() };
-        let (c, times) = compute_cohesion_timed(&d, &cfg)?;
-        let t_pald = times.total_s;
+        let result = pald.compute(&d)?;
+        let t_pald = result.times().total_s;
 
         let speedup = scaling::predicted_speedup(&mp, d.rows() as u64, 32, true, true);
-        let comms = analysis::communities(&c);
-        let ncomm = comms.iter().collect::<std::collections::HashSet<_>>().len();
+        let ncomm = result.community_count();
 
         println!(
             "{:<12} {:>7} {:>7} {:>10.3} {:>10.3} {:>9.2}x/{:>6.3}s {:>8}",

@@ -1,11 +1,13 @@
-//! Quickstart: generate clustered data, compute cohesion, read off the
-//! community structure — the 60-second tour of the public API.
+//! Quickstart: generate clustered data, compute cohesion through the
+//! typed `Pald` facade, read off the community structure — the 60-second
+//! tour of the public API.
 //!
 //!     cargo run --release --example quickstart
 
-use paldx::analysis;
 use paldx::data::distmat;
-use paldx::pald::{compute_cohesion_timed, Algorithm, PaldConfig};
+use paldx::pald::{
+    Algorithm, ComputedDistances, CondensedMatrix, DistanceInput, Metric, Pald, Threads,
+};
 
 fn main() -> anyhow::Result<()> {
     // Three clusters of *very* different density — the geometry PaLD is
@@ -13,39 +15,62 @@ fn main() -> anyhow::Result<()> {
     let sizes = [40usize, 25, 15];
     let spreads = [0.2f32, 0.8, 2.0];
     let pts = distmat::gaussian_clusters(16, &sizes, &spreads, 12.0, 7);
-    let d = distmat::euclidean(&pts);
     let labels = distmat::cluster_labels(&sizes);
-    let n = d.rows();
+    let n = pts.rows();
     println!("dataset: n={n}, 3 clusters with spreads {spreads:?}");
 
-    // Let the planner pick the kernel + block sizes for this shape
-    // (`Algorithm::Auto`); pin e.g. OptimizedTriplet to override.
-    let cfg = PaldConfig { algorithm: Algorithm::Auto, ..Default::default() };
-    println!("plan: {}", paldx::pald::plan_for(&cfg, n).describe());
-    let (c, times) = compute_cohesion_timed(&d, &cfg)?;
-    let secs = times.total_s;
-    println!("cohesion: {} in {:.3}s ({:.1}M triplets/s)", cfg.algorithm.name(), secs,
-             (n * n * n) as f64 / 6.0 / secs / 1e6);
-    println!("phases: focus {:.3}s, cohesion {:.3}s, normalize {:.3}s",
-             times.focus_s, times.cohesion_s, times.normalize_s);
+    // Typed configuration, validated at build time; the planner picks
+    // the kernel + block sizes per shape (`Algorithm::Auto`).  One
+    // thread keeps the runs below bitwise-reproducible; drop the
+    // `threads` line to use every core.
+    let mut pald = Pald::builder()
+        .algorithm(Algorithm::Auto)
+        .threads(Threads::Fixed(1))
+        .build()?;
 
-    // The universal threshold needs no tuning.
-    let tau = analysis::universal_threshold(&c);
-    let ties = analysis::strong_ties(&c);
-    println!("universal threshold tau = {tau:.5}; {} strong ties", ties.len());
+    // On-the-fly input: the facade computes Euclidean distances straight
+    // from the points — no caller-side distance matrix at all.
+    let input = ComputedDistances::new(pts.clone(), Metric::Euclidean)?;
+    let result = pald.compute(&input)?;
+    let times = result.times();
+    println!("plan: {}", result.plan().describe());
+    println!(
+        "cohesion in {:.3}s ({:.1}M triplets/s)",
+        times.total_s,
+        (n * n * n) as f64 / 6.0 / times.total_s / 1e6
+    );
+    println!(
+        "phases: focus {:.3}s, cohesion {:.3}s, normalize {:.3}s",
+        times.focus_s, times.cohesion_s, times.normalize_s
+    );
 
-    // Strong ties should respect the ground-truth clusters.
-    let cross = ties.iter().filter(|t| labels[t.a] != labels[t.b]).count();
-    println!("cross-cluster strong ties: {cross} / {}", ties.len());
-
-    // Communities from the strong-tie graph.
-    let comm = analysis::communities(&c);
-    let ncomm = comm.iter().collect::<std::collections::HashSet<_>>().len();
-    println!("strong-tie communities (incl. singletons): {ncomm}");
-
-    // Local depths: denser-neighborhood points sit deeper.
-    let depths = analysis::local_depths(&c);
-    let mean: f32 = depths.iter().sum::<f32>() / n as f32;
+    // Everything downstream hangs off the result; each accessor is
+    // computed once and cached.
+    println!(
+        "universal threshold tau = {:.5}; {} strong ties",
+        result.universal_threshold(),
+        result.strong_ties().len()
+    );
+    let cross = result
+        .strong_ties()
+        .iter()
+        .filter(|t| labels[t.a] != labels[t.b])
+        .count();
+    println!("cross-cluster strong ties: {cross} / {}", result.strong_ties().len());
+    println!("strong-tie communities (incl. singletons): {}", result.community_count());
+    let mean: f32 = result.local_depths().iter().sum::<f32>() / n as f32;
     println!("mean local depth = {mean:.4} (sums to n/2 = {})", n / 2);
+
+    // Condensed input: half the input memory, bit-identical cohesion.
+    let d = distmat::euclidean(&pts);
+    let condensed = CondensedMatrix::from_dense(&d)?;
+    println!(
+        "condensed input: {} bytes vs dense {} bytes",
+        condensed.input_bytes(),
+        DistanceInput::input_bytes(&d)
+    );
+    let again = pald.compute(&condensed)?;
+    assert_eq!(again.cohesion().as_slice(), result.cohesion().as_slice());
+    println!("condensed result is bit-identical ✓");
     Ok(())
 }

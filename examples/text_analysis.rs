@@ -7,42 +7,42 @@
 //! the synthetic embedding of `data::embeddings` with the same geometry
 //! (see DESIGN.md §2 for the substitution argument).
 //!
-//! This is also the repo's end-to-end driver: data generation → distance
-//! substrate → coordinator → cohesion → analysis → report, with wall-clock
-//! and throughput logged (EXPERIMENTS.md §Section-7).
+//! This is also the repo's end-to-end driver: data generation →
+//! on-the-fly `ComputedDistances` input → typed `Pald` facade → cohesion
+//! → analysis → report, with wall-clock and throughput logged
+//! (EXPERIMENTS.md §Section-7).
 //!
 //!     cargo run --release --example text_analysis [n]
 
 use paldx::analysis::{self, CloudEntry};
-use paldx::coordinator::{Coordinator, Job};
 use paldx::data::embeddings;
-use paldx::pald::{Algorithm, PaldConfig};
+use paldx::pald::{Algorithm, ComputedDistances, Metric, Pald};
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(2712);
     let vocab = embeddings::sonnets_like(n, 64, 2022);
     println!("vocabulary: {} synthetic words, 64-dim embeddings", vocab.len());
 
+    // The distance-cutoff baseline below needs the dense matrix; the
+    // facade itself is fed the embedding points directly and computes
+    // the same Euclidean distances on the fly.
     let t0 = std::time::Instant::now();
     let d = vocab.distance_matrix();
-    println!("distance matrix: {:.2}s", t0.elapsed().as_secs_f64());
+    println!("distance matrix (baseline only): {:.2}s", t0.elapsed().as_secs_f64());
 
     // The paper computes C with the OpenMP pairwise algorithm; on this
     // 1-core box the same code path runs with the parallel runtime.
-    let mut coord = Coordinator::new();
-    let job = Job {
-        config: PaldConfig { algorithm: Algorithm::ParallelPairwise, ..Default::default() },
-        ..Default::default()
-    };
-    let t0 = std::time::Instant::now();
-    let c = coord.run(&d, &job)?;
-    let secs = t0.elapsed().as_secs_f64();
+    let mut pald = Pald::builder().algorithm(Algorithm::ParallelPairwise).build()?;
+    let input = ComputedDistances::new(vocab.vectors.clone(), Metric::Euclidean)?;
+    let result = pald.compute(&input)?;
+    let secs = result.times().total_s;
     println!(
         "cohesion: n={n} in {secs:.3}s ({:.1}M triplets/s)  [paper: 0.178s at p=32]",
         (n * n * n) as f64 / 6.0 / secs / 1e6
     );
+    let c = result.cohesion();
 
-    let tau = analysis::universal_threshold(&c);
+    let tau = result.universal_threshold();
     println!("universal threshold tau = {tau:.6}\n");
 
     for probe in ["guilt", "halt"] {
@@ -89,6 +89,13 @@ fn main() -> anyhow::Result<()> {
         println!("   -> {spurious} of {} cutoff neighbors are unrelated words\n", within.len());
     }
 
-    println!("{}", coord.metrics.summary());
+    let t = result.times();
+    println!(
+        "plan: {} | phases: focus {:.3}s, cohesion {:.3}s, normalize {:.3}s",
+        result.plan().describe(),
+        t.focus_s,
+        t.cohesion_s,
+        t.normalize_s
+    );
     Ok(())
 }

@@ -12,7 +12,7 @@ use std::path::PathBuf;
 
 use paldx::coordinator::{Coordinator, Job};
 use paldx::data::distmat;
-use paldx::pald::{Algorithm, Backend, PaldConfig};
+use paldx::pald::{Algorithm, Backend, Pald, PaldConfig};
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(300);
@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
 
     let xla_job = Job {
         config: PaldConfig { backend: Backend::Xla, ..Default::default() },
-        artifacts_dir: artifacts.clone(),
+        artifacts_dir: artifacts,
     };
     println!("plan: {}", coord.plan(n, &xla_job)?);
 
@@ -37,12 +37,11 @@ fn main() -> anyhow::Result<()> {
     let t_warm = t0.elapsed().as_secs_f64();
     assert_eq!(c_xla.as_slice(), c_xla2.as_slice(), "XLA execution must be deterministic");
 
-    let native_job = Job {
-        config: PaldConfig { algorithm: Algorithm::OptimizedTriplet, ..Default::default() },
-        artifacts_dir: artifacts,
-    };
+    // Native reference through the typed facade (the XLA side stays on
+    // the coordinator, which owns the artifact runtime).
+    let mut native = Pald::builder().algorithm(Algorithm::OptimizedTriplet).build()?;
     let t0 = std::time::Instant::now();
-    let c_native = coord.run(&d, &native_job)?;
+    let c_native = native.compute(&d)?.into_matrix();
     let t_native = t0.elapsed().as_secs_f64();
 
     let maxdiff = c_native.max_abs_diff(&c_xla);

@@ -84,6 +84,7 @@ pub fn communities(c: &Mat) -> Vec<usize> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the one-shot wrapper is the tersest test harness
 mod tests {
     use super::*;
     use crate::data::distmat;

@@ -70,19 +70,16 @@ impl Config {
         }
     }
 
-    /// Materialize a [`PaldConfig`] from the `[pald]` section.
+    /// Materialize a [`PaldConfig`] from the `[pald]` section (unknown
+    /// algorithm / tie-mode names surface as typed
+    /// [`PaldError`](crate::pald::PaldError) variants).
     pub fn pald_config(&self) -> anyhow::Result<PaldConfig> {
         let mut cfg = PaldConfig::default();
         if let Some(alg) = self.get("pald.algorithm") {
-            cfg.algorithm =
-                Algorithm::parse(alg).ok_or_else(|| anyhow::anyhow!("unknown algorithm {alg}"))?;
+            cfg.algorithm = Algorithm::from_name(alg)?;
         }
         if let Some(tie) = self.get("pald.tie_mode") {
-            cfg.tie_mode = match tie {
-                "strict" => TieMode::Strict,
-                "split" => TieMode::Split,
-                _ => anyhow::bail!("unknown tie_mode {tie}"),
-            };
+            cfg.tie_mode = TieMode::parse(tie)?;
         }
         cfg.block = self.get_usize("pald.block", cfg.block)?;
         cfg.block2 = self.get_usize("pald.block2", cfg.block2)?;

@@ -1,12 +1,18 @@
 //! Command-line interface: `paldx <command> [--options]`.
 //!
 //! Commands:
-//! * `compute`   — cohesion of a distance matrix (generated or from file)
+//! * `compute`   — cohesion of a distance input (generated or from file)
 //! * `plan`      — print the planner's kernel/block/thread choice for a shape
 //! * `analyze`   — strong ties / communities of a computed cohesion matrix
+//! * `convert`   — re-encode a distance input (dense ⟷ condensed)
 //! * `repro`     — regenerate a paper table/figure (`--exp fig3|...|all`)
 //! * `calibrate` — print this machine's calibrated model parameters
 //! * `info`      — kernel registry + artifact inventory
+//!
+//! `--input` accepts every [`DistanceInput`] representation: dense CSV
+//! (`.csv`), the dense or condensed paldx binary formats (dispatched by
+//! magic), and point clouds (`.vec`, distances computed on the fly under
+//! `--metric`).
 
 mod args;
 pub mod config;
@@ -20,7 +26,10 @@ use crate::bench::BenchOpts;
 use crate::coordinator::{Coordinator, Job};
 use crate::data::distmat;
 use crate::io;
-use crate::pald::{Algorithm, Backend, PaldConfig, Planner, TieMode, REGISTRY};
+use crate::pald::{
+    Algorithm, Backend, ComputedDistances, CondensedMatrix, DistanceInput, Metric, PaldBuilder,
+    PaldConfig, Planner, TieMode, Validation, REGISTRY,
+};
 use crate::repro;
 
 const USAGE: &str = "\
@@ -29,17 +38,22 @@ paldx — Partitioned Local Depths (PaLD) toolkit
 USAGE: paldx <command> [--options]
 
 COMMANDS:
-  compute    --n <int> | --input <path.{bin,csv}>   compute a cohesion matrix
+  compute    --n <int> | --input <path.{bin,csv,vec}>   compute a cohesion matrix
              [--alg <name>|auto] [--tie strict|split] [--block B] [--block2 B]
-             [--threads P] [--backend native|xla] [--output <path>]
+             [--threads P] [--backend native|xla] [--metric euclidean|manhattan|cosine]
+             [--no-validate] [--output <path>]
   plan       --n <int> [--threads P] [--tie strict|split] [--calibrate]
              print the plan `--alg auto` would execute for this shape
   analyze    --input <cohesion.{bin,csv}> [--top K]  strong ties & communities
+  convert    --input <path.{bin,csv,vec}> --output <path>  re-encode distances
+             (condensed binary by default — half the bytes; --dense for dense)
   repro      --exp fig3|fig4|table1|fig9|fig10|fig11|fig13|table2|peak|bounds|ablation|xla|all
              [--bench-dir DIR]  (measured experiments also emit BENCH_<exp>.json)
   calibrate                                         measure machine constants
   info       [--artifacts DIR]                      kernel registry + artifacts
 
+Inputs: .csv dense matrix | paldx .bin (dense PALDMAT1 or condensed PALDCND1,
+        auto-detected) | .vec point cloud (one point per line, optional label)
 Algorithms: auto + naive-pairwise naive-triplet blocked-pairwise blocked-triplet
             branchfree-pairwise branchfree-triplet opt-pairwise opt-triplet
             par-pairwise par-triplet hybrid par-hybrid
@@ -53,6 +67,7 @@ pub fn run(raw: Vec<String>) -> anyhow::Result<()> {
         Some("compute") => cmd_compute(&args),
         Some("plan") => cmd_plan(&args),
         Some("analyze") => cmd_analyze(&args),
+        Some("convert") => cmd_convert(&args),
         Some("repro") => cmd_repro(&args),
         Some("calibrate") => cmd_calibrate(),
         Some("info") => cmd_info(&args),
@@ -64,30 +79,35 @@ pub fn run(raw: Vec<String>) -> anyhow::Result<()> {
     }
 }
 
-fn load_or_generate(args: &Args) -> anyhow::Result<crate::core::Mat> {
+/// Load `--input` as a boxed [`DistanceInput`] (dense CSV, dense or
+/// condensed binary dispatched on magic, or a `.vec` point cloud), or
+/// generate a tie-free random matrix from `--n`/`--seed`.
+fn load_input(args: &Args) -> anyhow::Result<Box<dyn DistanceInput>> {
     if let Some(path) = args.get("input") {
         let p = Path::new(path);
-        let d = if path.ends_with(".csv") { io::load_csv(p)? } else { io::load_matrix(p)? };
-        distmat::validate(&d).map_err(|e| anyhow::anyhow!("invalid distance matrix: {e}"))?;
-        Ok(d)
+        if path.ends_with(".csv") {
+            Ok(Box::new(io::load_csv(p)?))
+        } else if path.ends_with(".vec") {
+            let metric = Metric::parse(args.get_or("metric", "euclidean"))?;
+            Ok(Box::new(ComputedDistances::new(io::load_points(p)?, metric)?))
+        } else if &io::peek_magic(p)? == io::MAGIC_CONDENSED {
+            Ok(Box::new(io::load_condensed(p)?))
+        } else {
+            Ok(Box::new(io::load_matrix(p)?))
+        }
     } else {
         let n = args.get_usize("n", 256)?;
         let seed = args.get_u64("seed", 42)?;
-        Ok(distmat::random_tie_free(n, seed))
+        Ok(Box::new(distmat::random_tie_free(n, seed)))
     }
 }
 
 fn config_from(args: &Args) -> anyhow::Result<PaldConfig> {
     let mut cfg = PaldConfig::default();
     if let Some(alg) = args.get("alg") {
-        cfg.algorithm =
-            Algorithm::parse(alg).ok_or_else(|| anyhow::anyhow!("unknown algorithm '{alg}'"))?;
+        cfg.algorithm = Algorithm::from_name(alg)?;
     }
-    cfg.tie_mode = match args.get_or("tie", "strict") {
-        "strict" => TieMode::Strict,
-        "split" => TieMode::Split,
-        other => anyhow::bail!("unknown tie mode '{other}'"),
-    };
+    cfg.tie_mode = TieMode::parse(args.get_or("tie", "strict"))?;
     cfg.block = args.get_usize("block", 0)?;
     cfg.block2 = args.get_usize("block2", 0)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
@@ -100,16 +120,46 @@ fn config_from(args: &Args) -> anyhow::Result<PaldConfig> {
 }
 
 fn cmd_compute(args: &Args) -> anyhow::Result<()> {
-    let d = load_or_generate(args)?;
+    let input = load_input(args)?;
     let config = config_from(args)?;
-    let job = Job {
-        config,
-        artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
+    let skip_validation = args.flag("no-validate");
+    let c = if config.backend == Backend::Xla {
+        // The XLA artifact path is served by the coordinator and needs a
+        // dense matrix; validation parity with the native default.
+        input.check_shape()?;
+        if !skip_validation {
+            input.validate_strict()?;
+        }
+        let materialized;
+        let d: &crate::core::Mat = match input.as_dense() {
+            Some(m) => m,
+            None => {
+                materialized = input.to_dense();
+                &materialized
+            }
+        };
+        let job =
+            Job { config, artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")) };
+        let mut coord = Coordinator::new();
+        println!("plan: {}", coord.plan(d.rows(), &job)?);
+        let c = coord.run(d, &job)?;
+        println!("{}", coord.metrics.summary());
+        c
+    } else {
+        let mut builder = PaldBuilder::from_config(&config);
+        if skip_validation {
+            builder = builder.validation(Validation::Skip);
+        }
+        let mut pald = builder.build()?;
+        let result = pald.compute(input.as_ref())?;
+        let t = result.times();
+        println!("plan: native {} [input {}]", result.plan().describe(), input.kind());
+        println!(
+            "computed in {:.3}s (focus {:.3}s, cohesion {:.3}s, normalize {:.3}s)",
+            t.total_s, t.focus_s, t.cohesion_s, t.normalize_s
+        );
+        result.into_matrix()
     };
-    let mut coord = Coordinator::new();
-    println!("plan: {}", coord.plan(d.rows(), &job)?);
-    let c = coord.run(&d, &job)?;
-    println!("{}", coord.metrics.summary());
     let tau = analysis::universal_threshold(&c);
     println!("n={} universal threshold tau={tau:.6}", c.rows());
     if let Some(out) = args.get("output") {
@@ -121,6 +171,41 @@ fn cmd_compute(args: &Args) -> anyhow::Result<()> {
         }
         println!("wrote {out}");
     }
+    Ok(())
+}
+
+/// `paldx convert --input X --output Y`: re-encode a distance input —
+/// condensed binary by default (half the bytes of dense), `--dense` or a
+/// `.csv` output for the dense encodings.
+fn cmd_convert(args: &Args) -> anyhow::Result<()> {
+    let input = load_input(args)?;
+    let out = args
+        .get("output")
+        .ok_or_else(|| anyhow::anyhow!("convert requires --output <path>"))?;
+    let p = Path::new(out);
+    input.check_shape()?;
+    let materialized;
+    let d: &crate::core::Mat = match input.as_dense() {
+        Some(m) => m,
+        None => {
+            materialized = input.to_dense();
+            &materialized
+        }
+    };
+    if out.ends_with(".csv") {
+        io::save_csv(d, p)?;
+    } else if args.flag("dense") {
+        io::save_matrix(d, p)?;
+    } else {
+        let c = CondensedMatrix::from_dense(d)?;
+        io::save_condensed(&c, p)?;
+    }
+    println!(
+        "wrote {out} ({} points, {} bytes in, {} bytes out)",
+        input.n(),
+        input.input_bytes(),
+        std::fs::metadata(p)?.len()
+    );
     Ok(())
 }
 
@@ -335,10 +420,118 @@ mod tests {
     }
 
     #[test]
-    fn config_parsing_errors() {
+    fn config_parsing_errors_are_typed() {
+        use crate::pald::PaldError;
         let a = Args::parse(&argv(&["compute", "--alg", "bogus"])).unwrap();
-        assert!(config_from(&a).is_err());
+        let err = config_from(&a).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<PaldError>(),
+            Some(PaldError::UnknownAlgorithm { .. })
+        ));
         let a = Args::parse(&argv(&["compute", "--tie", "bogus"])).unwrap();
-        assert!(config_from(&a).is_err());
+        let err = config_from(&a).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<PaldError>(),
+            Some(PaldError::UnknownTieMode { .. })
+        ));
+    }
+
+    fn tmp_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("paldx_cli_inputs");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn convert_then_compute_matches_dense_input() {
+        let dir = tmp_dir();
+        let d = distmat::random_tie_free(24, 9);
+        let dense_p = dir.join("d.bin");
+        io::save_matrix(&d, &dense_p).unwrap();
+        let cnd_p = dir.join("d.cnd");
+        run(argv(&[
+            "convert",
+            "--input",
+            dense_p.to_str().unwrap(),
+            "--output",
+            cnd_p.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(
+            std::fs::metadata(&cnd_p).unwrap().len() < std::fs::metadata(&dense_p).unwrap().len() / 2 + 64,
+            "condensed file must be about half the dense file"
+        );
+        let out_a = dir.join("c_dense.bin");
+        let out_b = dir.join("c_cnd.bin");
+        for (inp, out) in [(&dense_p, &out_a), (&cnd_p, &out_b)] {
+            run(argv(&[
+                "compute",
+                "--input",
+                inp.to_str().unwrap(),
+                "--alg",
+                "opt-triplet",
+                "--threads",
+                "1",
+                "--output",
+                out.to_str().unwrap(),
+            ]))
+            .unwrap();
+        }
+        let a = io::load_matrix(&out_a).unwrap();
+        let b = io::load_matrix(&out_b).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice(), "condensed input must match dense bit-for-bit");
+    }
+
+    #[test]
+    fn convert_rejects_non_square_csv_with_typed_error() {
+        let dir = tmp_dir();
+        let rect = dir.join("rect.csv");
+        std::fs::write(&rect, "0,1,2,3\n1,0,2,3\n2,2,0,3\n").unwrap();
+        let err = run(argv(&[
+            "convert",
+            "--input",
+            rect.to_str().unwrap(),
+            "--output",
+            dir.join("rect.cnd").to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<crate::pald::PaldError>(),
+            Some(crate::pald::PaldError::NonSquare { rows: 3, cols: 4 })
+        ));
+    }
+
+    #[test]
+    fn compute_from_point_cloud() {
+        let dir = tmp_dir();
+        let p = dir.join("pts.vec");
+        let mut text = String::new();
+        for i in 0..12 {
+            text.push_str(&format!("w{i} {} {} {}\n", i as f32 * 0.7, (i % 5) as f32, i as f32 * 0.13));
+        }
+        std::fs::write(&p, text).unwrap();
+        run(argv(&[
+            "compute",
+            "--input",
+            p.to_str().unwrap(),
+            "--alg",
+            "opt-pairwise",
+            "--threads",
+            "1",
+        ]))
+        .unwrap();
+        // Unknown metric is a typed error.
+        let err = run(argv(&[
+            "compute",
+            "--input",
+            p.to_str().unwrap(),
+            "--metric",
+            "hamming",
+        ]))
+        .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<crate::pald::PaldError>(),
+            Some(crate::pald::PaldError::UnknownMetric { .. })
+        ));
     }
 }

@@ -15,7 +15,7 @@ pub use metrics::{JobMetrics, MetricsRegistry};
 use std::path::PathBuf;
 
 use crate::core::Mat;
-use crate::pald::{self, Algorithm, Backend, PaldConfig, TieMode};
+use crate::pald::{self, Algorithm, Backend, PaldBuilder, PaldConfig, TieMode, Validation};
 use crate::runtime::XlaRuntime;
 
 /// A cohesion-computation job.
@@ -57,7 +57,14 @@ impl Coordinator {
             _ => job.config.algorithm.name(),
         };
         let c = match job.config.backend {
-            Backend::Native => pald::compute_cohesion(d, &job.config)?,
+            // Validation::Skip preserves this layer's contract: the
+            // coordinator serves pre-validated jobs; strict input checks
+            // belong to the caller-facing `Pald` facade.
+            Backend::Native => PaldBuilder::from_config(&job.config)
+                .validation(Validation::Skip)
+                .build()?
+                .compute(d)?
+                .into_matrix(),
             Backend::Xla => self.run_xla(d, job)?,
         };
         self.metrics.record(JobMetrics {

@@ -1,81 +1,207 @@
-//! Matrix and results I/O: a simple binary matrix format, CSV export,
-//! edge-list loading, and a minimal JSON writer for results (no serde in
-//! the offline cache).
+//! Matrix and results I/O: the paldx binary formats (dense + condensed),
+//! CSV export, point-cloud (`.vec`) and edge-list loading, and a minimal
+//! JSON writer for results (no serde in the offline cache).
+//!
+//! All distance-input loaders return typed [`PaldError`]s — callers can
+//! distinguish a missing file ([`PaldError::Io`]) from corrupt contents
+//! ([`PaldError::BadFormat`]) from a structurally impossible payload
+//! (e.g. [`PaldError::NotTriangular`]).  Binary payloads are read with a
+//! single `read_exact` into one buffer and decoded in bulk — not four
+//! bytes at a time.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use crate::core::Mat;
+use crate::pald::{CondensedMatrix, PaldError};
 
-const MAGIC: &[u8; 8] = b"PALDMAT1";
+/// Magic header of the dense binary matrix format.
+pub const MAGIC_DENSE: &[u8; 8] = b"PALDMAT1";
+/// Magic header of the condensed (upper-triangular) binary format.
+pub const MAGIC_CONDENSED: &[u8; 8] = b"PALDCND1";
 
-/// Write a matrix in the paldx binary format (magic, dims, f32 LE data).
-pub fn save_matrix(m: &Mat, path: &Path) -> anyhow::Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
-    w.write_all(&(m.rows() as u64).to_le_bytes())?;
-    w.write_all(&(m.cols() as u64).to_le_bytes())?;
-    for &v in m.as_slice() {
-        w.write_all(&v.to_le_bytes())?;
+fn ioerr(path: &Path) -> impl Fn(std::io::Error) -> PaldError + '_ {
+    move |e| PaldError::io(path, e)
+}
+
+/// Decode a little-endian `f32` payload in one pass.
+fn decode_f32(buf: &[u8]) -> Vec<f32> {
+    buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Encode an `f32` slice to little-endian bytes in one pass.
+fn encode_f32(vals: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
     }
+    buf
+}
+
+/// Read exactly `count` little-endian `f32`s through one `read_exact`.
+fn read_f32_bulk<R: Read>(r: &mut R, count: usize, path: &Path) -> Result<Vec<f32>, PaldError> {
+    let mut buf = vec![0u8; count * 4];
+    r.read_exact(&mut buf).map_err(ioerr(path))?;
+    Ok(decode_f32(&buf))
+}
+
+fn read_u64<R: Read>(r: &mut R, path: &Path) -> Result<u64, PaldError> {
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8).map_err(ioerr(path))?;
+    Ok(u64::from_le_bytes(b8))
+}
+
+/// Write a matrix in the paldx dense binary format (magic, dims, f32 LE
+/// data).
+pub fn save_matrix(m: &Mat, path: &Path) -> Result<(), PaldError> {
+    let mut w = BufWriter::new(File::create(path).map_err(ioerr(path))?);
+    w.write_all(MAGIC_DENSE).map_err(ioerr(path))?;
+    w.write_all(&(m.rows() as u64).to_le_bytes()).map_err(ioerr(path))?;
+    w.write_all(&(m.cols() as u64).to_le_bytes()).map_err(ioerr(path))?;
+    w.write_all(&encode_f32(m.as_slice())).map_err(ioerr(path))?;
     Ok(())
 }
 
-/// Read a matrix written by [`save_matrix`].
-pub fn load_matrix(path: &Path) -> anyhow::Result<Mat> {
-    let mut r = BufReader::new(File::open(path)?);
+/// Read a matrix written by [`save_matrix`].  The payload is read with a
+/// single `read_exact` into one byte buffer and decoded in bulk.
+pub fn load_matrix(path: &Path) -> Result<Mat, PaldError> {
+    let mut r = BufReader::new(File::open(path).map_err(ioerr(path))?);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "bad magic in {}", path.display());
-    let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    let rows = u64::from_le_bytes(b8) as usize;
-    r.read_exact(&mut b8)?;
-    let cols = u64::from_le_bytes(b8) as usize;
-    anyhow::ensure!(rows * cols < (1 << 32), "unreasonable matrix size");
-    let mut data = vec![0.0f32; rows * cols];
-    let mut b4 = [0u8; 4];
-    for v in &mut data {
-        r.read_exact(&mut b4)?;
-        *v = f32::from_le_bytes(b4);
+    r.read_exact(&mut magic).map_err(ioerr(path))?;
+    if &magic != MAGIC_DENSE {
+        return Err(PaldError::bad_format(path, "bad magic (not a paldx dense matrix)"));
     }
+    let rows = read_u64(&mut r, path)? as usize;
+    let cols = read_u64(&mut r, path)? as usize;
+    if rows.checked_mul(cols).map(|n| n >= (1 << 32)).unwrap_or(true) {
+        return Err(PaldError::bad_format(path, format!("unreasonable matrix size {rows}x{cols}")));
+    }
+    let data = read_f32_bulk(&mut r, rows * cols, path)?;
     Ok(Mat::from_vec(rows, cols, data))
 }
 
+/// Write a condensed distance matrix (magic, n, the `n(n-1)/2` upper-
+/// triangular f32 LE values) — half the bytes of the dense format.
+pub fn save_condensed(c: &CondensedMatrix, path: &Path) -> Result<(), PaldError> {
+    use crate::pald::DistanceInput;
+    let mut w = BufWriter::new(File::create(path).map_err(ioerr(path))?);
+    w.write_all(MAGIC_CONDENSED).map_err(ioerr(path))?;
+    w.write_all(&(c.n() as u64).to_le_bytes()).map_err(ioerr(path))?;
+    w.write_all(&encode_f32(c.as_slice())).map_err(ioerr(path))?;
+    Ok(())
+}
+
+/// Read a condensed distance matrix written by [`save_condensed`].
+pub fn load_condensed(path: &Path) -> Result<CondensedMatrix, PaldError> {
+    let mut r = BufReader::new(File::open(path).map_err(ioerr(path))?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).map_err(ioerr(path))?;
+    if &magic != MAGIC_CONDENSED {
+        return Err(PaldError::bad_format(path, "bad magic (not a paldx condensed matrix)"));
+    }
+    let n = read_u64(&mut r, path)? as usize;
+    if n < 2 || n >= (1 << 17) {
+        return Err(PaldError::bad_format(path, format!("unreasonable point count {n}")));
+    }
+    let data = read_f32_bulk(&mut r, n * (n - 1) / 2, path)?;
+    CondensedMatrix::new(n, data)
+}
+
+/// Peek the 8-byte magic of a paldx binary file (dispatching `--input`
+/// between the dense and condensed loaders).
+pub fn peek_magic(path: &Path) -> Result<[u8; 8], PaldError> {
+    let mut r = File::open(path).map_err(ioerr(path))?;
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).map_err(ioerr(path))?;
+    Ok(magic)
+}
+
 /// CSV export (header-less, one row per line).
-pub fn save_csv(m: &Mat, path: &Path) -> anyhow::Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
+pub fn save_csv(m: &Mat, path: &Path) -> Result<(), PaldError> {
+    let mut w = BufWriter::new(File::create(path).map_err(ioerr(path))?);
     for i in 0..m.rows() {
         let row: Vec<String> = m.row(i).iter().map(|v| format!("{v}")).collect();
-        writeln!(w, "{}", row.join(","))?;
+        writeln!(w, "{}", row.join(",")).map_err(ioerr(path))?;
     }
     Ok(())
 }
 
-/// Load a square matrix from header-less CSV.
-pub fn load_csv(path: &Path) -> anyhow::Result<Mat> {
-    let r = BufReader::new(File::open(path)?);
+/// Load a matrix from header-less CSV.
+pub fn load_csv(path: &Path) -> Result<Mat, PaldError> {
+    let r = BufReader::new(File::open(path).map_err(ioerr(path))?);
     let mut data = Vec::new();
     let mut cols = 0usize;
     let mut rows = 0usize;
     for line in r.lines() {
-        let line = line?;
+        let line = line.map_err(ioerr(path))?;
         if line.trim().is_empty() {
             continue;
         }
         let vals: Vec<f32> = line
             .split(',')
             .map(|s| s.trim().parse::<f32>())
-            .collect::<Result<_, _>>()?;
+            .collect::<Result<_, _>>()
+            .map_err(|e| PaldError::bad_format(path, format!("row {rows}: {e}")))?;
         if cols == 0 {
             cols = vals.len();
         }
-        anyhow::ensure!(vals.len() == cols, "ragged CSV at row {rows}");
+        if vals.len() != cols {
+            return Err(PaldError::bad_format(path, format!("ragged CSV at row {rows}")));
+        }
         data.extend(vals);
         rows += 1;
     }
     Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Load a point cloud from a `.vec` text file: one point per line,
+/// whitespace-separated coordinates, with an optional leading word label
+/// per line (the fastText convention) that is skipped when it does not
+/// parse as a number.
+///
+/// Caveat of the label heuristic: a file whose labels *all* happen to
+/// parse as numbers (`"1984 0.1 0.2"`) is indistinguishable from an
+/// unlabeled file with one more dimension and is ingested as such;
+/// `nan`/`inf` labels likewise become coordinates, where the facade's
+/// default strict validation rejects them at compute time.
+pub fn load_points(path: &Path) -> Result<Mat, PaldError> {
+    let r = BufReader::new(File::open(path).map_err(ioerr(path))?);
+    let mut data = Vec::new();
+    let mut dim = 0usize;
+    let mut rows = 0usize;
+    for line in r.lines() {
+        let line = line.map_err(ioerr(path))?;
+        let mut tokens = line.split_whitespace().peekable();
+        // Optional word label: skip the first token iff it is not numeric.
+        if let Some(first) = tokens.peek() {
+            if first.parse::<f32>().is_err() {
+                tokens.next();
+            }
+        }
+        let vals: Vec<f32> = tokens
+            .map(|s| s.parse::<f32>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| PaldError::bad_format(path, format!("point {rows}: {e}")))?;
+        if vals.is_empty() {
+            continue;
+        }
+        if dim == 0 {
+            dim = vals.len();
+        }
+        if vals.len() != dim {
+            return Err(PaldError::bad_format(
+                path,
+                format!("point {rows} has {} coordinates, expected {dim}", vals.len()),
+            ));
+        }
+        data.extend(vals);
+        rows += 1;
+    }
+    if rows == 0 {
+        return Err(PaldError::bad_format(path, "no points in file"));
+    }
+    Ok(Mat::from_vec(rows, dim, data))
 }
 
 /// Load an undirected edge list: whitespace-separated `u v` per line,
@@ -138,6 +264,7 @@ impl Json {
 mod tests {
     use super::*;
     use crate::data::distmat;
+    use crate::pald::DistanceInput;
 
     fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("paldx_io_tests");
@@ -155,12 +282,66 @@ mod tests {
     }
 
     #[test]
+    fn binary_roundtrip_1k() {
+        // ~1k x 1k: exercises the bulk read_exact path on a 4 MB payload.
+        let n = 1000;
+        let m = Mat::from_fn(n, n, |i, j| (i * 31 + j * 7) as f32 * 0.25);
+        let p = tmp("m1k.bin");
+        save_matrix(&m, &p).unwrap();
+        let m2 = load_matrix(&p).unwrap();
+        assert_eq!(m.as_slice(), m2.as_slice());
+        assert_eq!(m2.rows(), n);
+    }
+
+    #[test]
+    fn condensed_roundtrip_and_magic_dispatch() {
+        let d = distmat::random_tie_free(40, 8);
+        let c = CondensedMatrix::from_dense(&d).unwrap();
+        let p = tmp("m.cnd.bin");
+        save_condensed(&c, &p).unwrap();
+        assert_eq!(&peek_magic(&p).unwrap(), MAGIC_CONDENSED);
+        let c2 = load_condensed(&p).unwrap();
+        assert_eq!(c.as_slice(), c2.as_slice());
+        assert_eq!(c2.to_dense().as_slice(), d.as_slice());
+        // A condensed file is slightly under half the dense file's bytes.
+        let pd = tmp("m.dense.bin");
+        save_matrix(&d, &pd).unwrap();
+        let cnd_len = std::fs::metadata(&p).unwrap().len();
+        let dns_len = std::fs::metadata(&pd).unwrap().len();
+        assert!(cnd_len < dns_len / 2 + 64, "condensed {cnd_len} vs dense {dns_len}");
+    }
+
+    #[test]
+    fn wrong_magic_is_a_typed_error() {
+        let d = distmat::random_tie_free(6, 1);
+        let p = tmp("dense_as_condensed.bin");
+        save_matrix(&d, &p).unwrap();
+        assert!(matches!(load_condensed(&p), Err(PaldError::BadFormat { .. })));
+        let missing = tmp("does_not_exist.bin");
+        assert!(matches!(load_matrix(&missing), Err(PaldError::Io { .. })));
+    }
+
+    #[test]
     fn csv_roundtrip() {
         let m = distmat::random_uniform(9, 5);
         let p = tmp("m.csv");
         save_csv(&m, &p).unwrap();
         let m2 = load_csv(&p).unwrap();
         assert!(m.allclose(&m2, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn points_file_with_and_without_labels() {
+        let p = tmp("pts.vec");
+        std::fs::write(&p, "word1 0.5 1.0 -2.0\nword2 1.5 2.0 3.5\n0.0 0.0 1.0\n").unwrap();
+        let pts = load_points(&p).unwrap();
+        assert_eq!((pts.rows(), pts.cols()), (3, 3));
+        assert_eq!(pts[(0, 2)], -2.0);
+        assert_eq!(pts[(2, 2)], 1.0);
+
+        let ragged = tmp("ragged.vec");
+        std::fs::write(&ragged, "a 1.0 2.0\nb 1.0\n").unwrap();
+        assert!(matches!(load_points(&ragged), Err(PaldError::BadFormat { .. })));
     }
 
     #[test]

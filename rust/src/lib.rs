@@ -12,8 +12,11 @@
 //! * the paper's two algorithmic variants — **pairwise** and **triplet** —
 //!   at every rung of its optimization ladder (naive, blocked, branch-free,
 //!   fully optimized), unified behind a kernel registry with a
-//!   machine-model planner (`Algorithm::Auto`) and a workspace-reusing
-//!   [`pald::Session`] serving API, see [`pald`];
+//!   machine-model planner (`Algorithm::Auto`), a workspace-reusing
+//!   [`pald::Session`] serving engine, and the typed [`pald::Pald`]
+//!   facade (builder config, [`pald::DistanceInput`] inputs,
+//!   [`pald::CohesionResult`] outputs, [`pald::PaldError`] errors), see
+//!   [`pald`];
 //! * shared-memory parallel runtimes mirroring the paper's OpenMP designs:
 //!   loop parallelism with reductions for pairwise, a task graph with
 //!   `depend(inout)` conflict resolution for triplet, see [`parallel`];
@@ -30,24 +33,54 @@
 //!
 //! ## Quickstart
 //!
+//! The typed front door is the [`pald::Pald`] facade: a builder with
+//! typed options validated at build time, any [`pald::DistanceInput`]
+//! (dense, condensed, or computed on the fly from points), and a
+//! [`pald::CohesionResult`] carrying the resolved plan, phase times, and
+//! lazy analysis accessors.  Errors are [`pald::PaldError`] variants,
+//! not strings.
+//!
 //! ```no_run
-//! use paldx::pald::{compute_cohesion, Algorithm, PaldConfig, Session};
 //! use paldx::data::distmat;
+//! use paldx::pald::{
+//!     Algorithm, ComputedDistances, CondensedMatrix, Metric, Pald, PaldError, Threads,
+//! };
 //!
-//! let d = distmat::random_tie_free(256, 42);
-//! let c = compute_cohesion(&d, &PaldConfig::default()).unwrap();
-//! let ties = paldx::analysis::strong_ties(&c);
-//! println!("strong ties: {}", ties.len());
+//! fn main() -> Result<(), PaldError> {
+//!     // Typed configuration, validated at build time.
+//!     let mut pald = Pald::builder()
+//!         .algorithm(Algorithm::Auto)      // planner-selected kernel
+//!         .threads(Threads::Fixed(4))
+//!         .build()?;
 //!
-//! // Serving pattern: planner-selected kernel, zero steady-state allocation.
-//! let cfg = PaldConfig { algorithm: Algorithm::Auto, ..Default::default() };
-//! let mut session = Session::new(cfg).unwrap();
-//! for seed in 0..3 {
-//!     let d = distmat::random_tie_free(256, seed);
-//!     let c = session.compute(&d).unwrap();
-//!     println!("batch item: {} ties", paldx::analysis::strong_ties(&c).len());
+//!     // Dense input (strict O(n²) validation runs by default).
+//!     let d = distmat::random_tie_free(256, 42);
+//!     let result = pald.compute(&d)?;
+//!     println!("plan: {}", result.plan().describe());
+//!     println!(
+//!         "tau={:.5}, {} strong ties, {} communities, {:.3}s",
+//!         result.universal_threshold(),
+//!         result.strong_ties().len(),
+//!         result.community_count(),
+//!         result.times().total_s,
+//!     );
+//!
+//!     // Condensed input: half the input memory, bit-identical cohesion.
+//!     let condensed = CondensedMatrix::from_dense(&d)?;
+//!     let again = pald.compute(&condensed)?;
+//!     assert_eq!(again.cohesion().as_slice(), result.cohesion().as_slice());
+//!
+//!     // On-the-fly input: points + a metric, no stored distance matrix.
+//!     let pts = distmat::gaussian_clusters(16, &[40, 25], &[0.2, 0.8], 12.0, 7);
+//!     let computed = ComputedDistances::new(pts, Metric::Euclidean)?;
+//!     println!("{} ties", pald.compute(&computed)?.strong_ties().len());
+//!     Ok(())
 //! }
 //! ```
+//!
+//! The pre-0.3 free functions (`pald::compute_cohesion` & friends) still
+//! work but are `#[deprecated]`; each deprecation note names the typed
+//! replacement.
 
 pub mod analysis;
 pub mod bench;

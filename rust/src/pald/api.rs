@@ -1,14 +1,19 @@
-//! Public configuration surface and the `compute_cohesion` entry points.
+//! Configuration surface, typed validation, and the execution core the
+//! [`Pald`](crate::pald::Pald) facade and [`Session`](crate::pald::Session)
+//! dispatch through.
 //!
 //! Dispatch goes through the kernel registry (DESIGN.md §6): a config is
 //! resolved to a [`Plan`] (the planner picks kernel + block sizes for
 //! [`Algorithm::Auto`]), the registered [`CohesionKernel`] accumulates
 //! support through a [`Workspace`], and this layer applies the final
-//! `1/(n-1)` normalization and records [`PhaseTimes`].
+//! `1/(n-1)` normalization and records [`PhaseTimes`].  The historical
+//! `compute_cohesion*` free functions remain as deprecated one-shot
+//! wrappers over the same path.
 
 use std::time::Instant;
 
 use crate::core::Mat;
+use crate::pald::error::PaldError;
 use crate::pald::kernel::{kernel_by_name, kernel_for, CohesionKernel};
 use crate::pald::planner::{Plan, Planner};
 use crate::pald::workspace::Workspace;
@@ -91,6 +96,11 @@ impl Algorithm {
         kernel_by_name(s).map(|k| k.algorithm())
     }
 
+    /// [`Algorithm::parse`] with a typed error for unknown names.
+    pub fn from_name(s: &str) -> Result<Algorithm, PaldError> {
+        Algorithm::parse(s).ok_or_else(|| PaldError::UnknownAlgorithm { name: s.to_string() })
+    }
+
     /// Registered kernel for this algorithm (`None` for `Auto`).
     pub fn kernel(&self) -> Option<&'static dyn CohesionKernel> {
         kernel_for(*self)
@@ -140,15 +150,49 @@ pub fn available_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-fn validate_input(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<()> {
+/// Cheap structural check — square, at least 2 points; returns `n`.
+pub(crate) fn validate_shape(d: &Mat) -> Result<usize, PaldError> {
     if d.rows() != d.cols() {
-        anyhow::bail!("distance matrix must be square, got {}x{}", d.rows(), d.cols());
+        return Err(PaldError::NonSquare { rows: d.rows(), cols: d.cols() });
     }
     if d.rows() < 2 {
-        anyhow::bail!("need at least 2 points, got {}", d.rows());
+        return Err(PaldError::TooSmall { n: d.rows() });
     }
-    if cfg.backend == Backend::Xla {
-        anyhow::bail!("Backend::Xla is served by coordinator::Coordinator, not compute_cohesion");
+    Ok(d.rows())
+}
+
+/// Strict O(n²) content validation of a dense distance matrix: zero
+/// diagonal, finite entries, no negative distances, exact symmetry.
+///
+/// Asymmetric or garbage input does not crash the kernels — it silently
+/// produces nonsensical cohesion — so the [`Pald`](crate::pald::Pald)
+/// facade runs this by default ([`Validation::Strict`]); hot serving
+/// paths with upstream guarantees opt out via [`Validation::Skip`].
+/// Zero off-diagonal distances (duplicated points) are *valid* — they
+/// are exactly what `TieMode::Split` exists for.
+///
+/// [`Validation::Strict`]: crate::pald::Validation::Strict
+/// [`Validation::Skip`]: crate::pald::Validation::Skip
+pub fn validate_distances(d: &Mat) -> Result<(), PaldError> {
+    let n = validate_shape(d)?;
+    for i in 0..n {
+        let row = d.row(i);
+        if row[i] != 0.0 {
+            return Err(PaldError::NonZeroDiagonal { i, value: row[i] });
+        }
+        for j in (i + 1)..n {
+            let dij = row[j];
+            let dji = d[(j, i)];
+            if !dij.is_finite() || !dji.is_finite() {
+                return Err(PaldError::NotFinite { i, j });
+            }
+            if dij < 0.0 {
+                return Err(PaldError::NegativeDistance { i, j, value: dij });
+            }
+            if dij != dji {
+                return Err(PaldError::Asymmetric { i, j, dij, dji });
+            }
+        }
     }
     Ok(())
 }
@@ -156,45 +200,50 @@ fn validate_input(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<()> {
 /// Resolve the plan for `cfg` on an `n x n` problem (`Auto` goes through
 /// the planner; pinned algorithms pass through unchanged).
 pub fn plan_for(cfg: &PaldConfig, n: usize) -> Plan {
-    Planner::new().resolve(cfg, n)
-}
-
-/// Compute the cohesion matrix for symmetric distance matrix `d`.
-///
-/// One-shot convenience over [`compute_cohesion_into`]: allocates a fresh
-/// workspace and output.  Use a [`crate::pald::Session`] to amortize the
-/// workspace across repeated calls.
-pub fn compute_cohesion(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<Mat> {
-    validate_input(d, cfg)?;
-    let mut ws = Workspace::new();
-    let mut out = Mat::zeros(d.rows(), d.rows());
-    compute_cohesion_into(d, cfg, &mut ws, &mut out)?;
-    Ok(out)
-}
-
-/// Registry-dispatched computation into caller-owned memory.
-///
-/// `out` must be `n x n`; intermediates (U, W, CT, tiles, reduction
-/// buffers) live in `ws` and are reused across calls.  Returns the phase
-/// timing breakdown (also left in `ws.phases`).
-pub fn compute_cohesion_into(
-    d: &Mat,
-    cfg: &PaldConfig,
-    ws: &mut Workspace,
-    out: &mut Mat,
-) -> anyhow::Result<PhaseTimes> {
-    validate_input(d, cfg)?;
-    let n = d.rows();
-    if out.rows() != n || out.cols() != n {
-        anyhow::bail!("output must be {n}x{n}, got {}x{}", out.rows(), out.cols());
-    }
-    let t_start = Instant::now();
     // Pinned algorithms skip planner construction entirely; only Auto
     // consults the machine profile.
-    let plan =
-        if cfg.algorithm == Algorithm::Auto { plan_for(cfg, n) } else { Plan::from_config(cfg) };
-    let kernel = kernel_for(plan.algorithm)
-        .ok_or_else(|| anyhow::anyhow!("no kernel registered for {}", plan.algorithm.name()))?;
+    if cfg.algorithm == Algorithm::Auto {
+        Planner::new().resolve(cfg, n)
+    } else {
+        Plan::from_config(cfg)
+    }
+}
+
+/// Typed plan resolution: rejects the XLA backend (served by
+/// [`crate::coordinator::Coordinator`], not the native engine).
+pub(crate) fn resolve_plan(cfg: &PaldConfig, n: usize) -> Result<Plan, PaldError> {
+    if cfg.backend == Backend::Xla {
+        return Err(PaldError::UnsupportedBackend {
+            backend: "xla",
+            hint: "Backend::Xla is served by coordinator::Coordinator, not the native engine",
+        });
+    }
+    Ok(plan_for(cfg, n))
+}
+
+/// Execution core: run a resolved [`Plan`] on dense distances `d` into
+/// caller-owned `out` (`n x n`), intermediates in `ws`, normalization
+/// applied, phase times recorded.  Every public entry point — facade,
+/// session, and the deprecated wrappers — funnels through here.
+pub(crate) fn execute_plan(
+    d: &Mat,
+    plan: &Plan,
+    ws: &mut Workspace,
+    out: &mut Mat,
+) -> Result<PhaseTimes, PaldError> {
+    let n = d.rows();
+    if out.rows() != n || out.cols() != n {
+        return Err(PaldError::ShapeMismatch {
+            expected_rows: n,
+            expected_cols: n,
+            rows: out.rows(),
+            cols: out.cols(),
+        });
+    }
+    let kernel = kernel_for(plan.algorithm).ok_or_else(|| PaldError::UnknownAlgorithm {
+        name: plan.algorithm.name().to_string(),
+    })?;
+    let t_start = Instant::now();
     ws.reset_phases();
     kernel.compute_into(d, &plan.params, ws, out);
     let t0 = Instant::now();
@@ -204,20 +253,108 @@ pub fn compute_cohesion_into(
     Ok(ws.phases)
 }
 
+/// Compute the cohesion matrix for symmetric distance matrix `d`.
+#[deprecated(
+    since = "0.3.0",
+    note = "use the typed facade: `Pald::builder().build()?.compute(&d)` returns a \
+            `CohesionResult` with the plan, phase times, and analysis accessors"
+)]
+pub fn compute_cohesion(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<Mat> {
+    let n = validate_shape(d)?;
+    let plan = resolve_plan(cfg, n)?;
+    let mut ws = Workspace::new();
+    let mut out = Mat::zeros(n, n);
+    execute_plan(d, &plan, &mut ws, &mut out)?;
+    Ok(out)
+}
+
+/// Registry-dispatched computation into caller-owned memory.
+///
+/// `out` must be `n x n`; intermediates (U, W, CT, tiles, reduction
+/// buffers) live in `ws` and are reused across calls.  Returns the phase
+/// timing breakdown (also left in `ws.phases`).
+#[deprecated(
+    since = "0.3.0",
+    note = "use `Session::compute_into` (typed errors, cached plan resolution)"
+)]
+pub fn compute_cohesion_into(
+    d: &Mat,
+    cfg: &PaldConfig,
+    ws: &mut Workspace,
+    out: &mut Mat,
+) -> anyhow::Result<PhaseTimes> {
+    let n = validate_shape(d)?;
+    let plan = resolve_plan(cfg, n)?;
+    Ok(execute_plan(d, &plan, ws, out)?)
+}
+
 /// Compute and time; returns the cohesion matrix plus the Figure 13 phase
 /// breakdown (focus, cohesion, normalize, total).
+#[deprecated(
+    since = "0.3.0",
+    note = "use the typed facade: `CohesionResult::times()` carries the phase breakdown"
+)]
 pub fn compute_cohesion_timed(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<(Mat, PhaseTimes)> {
-    validate_input(d, cfg)?;
+    let n = validate_shape(d)?;
+    let plan = resolve_plan(cfg, n)?;
     let mut ws = Workspace::new();
-    let mut out = Mat::zeros(d.rows(), d.rows());
-    let times = compute_cohesion_into(d, cfg, &mut ws, &mut out)?;
+    let mut out = Mat::zeros(n, n);
+    let times = execute_plan(d, &plan, &mut ws, &mut out)?;
     Ok((out, times))
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy wrappers stay covered until removal
 mod tests {
     use super::*;
     use crate::data::distmat;
+
+    #[test]
+    fn strict_validation_pinpoints_the_defect() {
+        let good = distmat::random_tie_free(6, 1);
+        validate_distances(&good).unwrap();
+
+        let mut d = good.clone();
+        d[(2, 4)] = d[(4, 2)] + 1.0;
+        assert!(matches!(
+            validate_distances(&d),
+            Err(PaldError::Asymmetric { i: 2, j: 4, .. })
+        ));
+
+        let mut d = good.clone();
+        d[(3, 3)] = 0.5;
+        assert!(matches!(
+            validate_distances(&d),
+            Err(PaldError::NonZeroDiagonal { i: 3, .. })
+        ));
+
+        let mut d = good.clone();
+        d[(1, 2)] = -0.5;
+        d[(2, 1)] = -0.5;
+        assert!(matches!(
+            validate_distances(&d),
+            Err(PaldError::NegativeDistance { i: 1, j: 2, .. })
+        ));
+
+        let mut d = good.clone();
+        d[(0, 5)] = f32::NAN;
+        d[(5, 0)] = f32::NAN;
+        assert!(matches!(validate_distances(&d), Err(PaldError::NotFinite { i: 0, j: 5 })));
+
+        // Duplicated points (zero off-diagonal) are valid input.
+        let dup = distmat::random_duplicated(10, 3, 3);
+        validate_distances(&dup).unwrap();
+    }
+
+    #[test]
+    fn from_name_returns_typed_error() {
+        assert_eq!(Algorithm::from_name("opt-triplet").unwrap(), Algorithm::OptimizedTriplet);
+        assert_eq!(Algorithm::from_name("auto").unwrap(), Algorithm::Auto);
+        match Algorithm::from_name("bogus") {
+            Err(PaldError::UnknownAlgorithm { name }) => assert_eq!(name, "bogus"),
+            other => panic!("expected UnknownAlgorithm, got {other:?}"),
+        }
+    }
 
     #[test]
     fn all_algorithms_agree() {

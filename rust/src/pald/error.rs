@@ -1,0 +1,168 @@
+//! Typed error surface of the public API (DESIGN.md §7).
+//!
+//! Every failure the facade, sessions, and the binary I/O layer can
+//! produce is a [`PaldError`] variant carrying the offending indices and
+//! values, so callers can branch on the cause (serve a 400 vs retry vs
+//! page an operator) instead of substring-matching an `anyhow` string.
+//! `PaldError` implements [`std::error::Error`], so it still flows
+//! through `anyhow::Result` call sites via `?` unchanged.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Everything that can go wrong between "caller hands us distances" and
+/// "caller holds a [`CohesionResult`](crate::pald::CohesionResult)".
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum PaldError {
+    /// A dense distance matrix must be square.
+    NonSquare { rows: usize, cols: usize },
+    /// PaLD needs at least 2 points.
+    TooSmall { n: usize },
+    /// `d[i][j] != d[j][i]` — asymmetric input silently produces nonsense
+    /// cohesion, so strict validation rejects it up front.
+    Asymmetric { i: usize, j: usize, dij: f32, dji: f32 },
+    /// Distances must be non-negative.
+    NegativeDistance { i: usize, j: usize, value: f32 },
+    /// Self-distances must be exactly zero.
+    NonZeroDiagonal { i: usize, value: f32 },
+    /// NaN or infinite entry (for [`ComputedDistances`] the indices are
+    /// the offending point/coordinate).
+    ///
+    /// [`ComputedDistances`]: crate::pald::ComputedDistances
+    NotFinite { i: usize, j: usize },
+    /// A caller-owned output buffer has the wrong shape.
+    ShapeMismatch { expected_rows: usize, expected_cols: usize, rows: usize, cols: usize },
+    /// A condensed vector's length is not a triangular number `n(n-1)/2`.
+    NotTriangular { len: usize },
+    /// Algorithm name not present in the kernel registry.
+    UnknownAlgorithm { name: String },
+    /// Tie-mode name other than `strict` / `split`.
+    UnknownTieMode { name: String },
+    /// Metric name not supported by [`ComputedDistances`].
+    ///
+    /// [`ComputedDistances`]: crate::pald::ComputedDistances
+    UnknownMetric { name: String },
+    /// `BlockSize::Fixed(0)` — use `BlockSize::Auto` for planner defaults.
+    InvalidBlock { value: usize },
+    /// `Threads::Fixed(0)` — use `Threads::Auto` for the host parallelism.
+    InvalidThreads { value: usize },
+    /// The requested backend is not served by this entry point.
+    UnsupportedBackend { backend: &'static str, hint: &'static str },
+    /// Underlying filesystem failure while reading/writing a paldx file.
+    Io { path: PathBuf, source: std::io::Error },
+    /// Structurally invalid file contents (bad magic, ragged CSV, …).
+    BadFormat { path: PathBuf, detail: String },
+}
+
+impl PaldError {
+    /// Attach a path to an I/O failure.
+    pub(crate) fn io(path: &Path, source: std::io::Error) -> PaldError {
+        PaldError::Io { path: path.to_path_buf(), source }
+    }
+
+    /// Structurally invalid file contents at `path`.
+    pub(crate) fn bad_format(path: &Path, detail: impl Into<String>) -> PaldError {
+        PaldError::BadFormat { path: path.to_path_buf(), detail: detail.into() }
+    }
+}
+
+impl fmt::Display for PaldError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PaldError::NonSquare { rows, cols } => {
+                write!(f, "distance matrix must be square, got {rows}x{cols}")
+            }
+            PaldError::TooSmall { n } => write!(f, "need at least 2 points, got {n}"),
+            PaldError::Asymmetric { i, j, dij, dji } => write!(
+                f,
+                "asymmetric distances: d[{i}][{j}] = {dij} but d[{j}][{i}] = {dji}"
+            ),
+            PaldError::NegativeDistance { i, j, value } => {
+                write!(f, "negative distance d[{i}][{j}] = {value}")
+            }
+            PaldError::NonZeroDiagonal { i, value } => {
+                write!(f, "nonzero self-distance d[{i}][{i}] = {value}")
+            }
+            PaldError::NotFinite { i, j } => {
+                write!(f, "non-finite entry at ({i}, {j})")
+            }
+            PaldError::ShapeMismatch { expected_rows, expected_cols, rows, cols } => write!(
+                f,
+                "output must be {expected_rows}x{expected_cols}, got {rows}x{cols}"
+            ),
+            PaldError::NotTriangular { len } => write!(
+                f,
+                "condensed length {len} is not a triangular number n(n-1)/2"
+            ),
+            PaldError::UnknownAlgorithm { name } => {
+                write!(f, "unknown algorithm '{name}' (see `paldx info` for the registry)")
+            }
+            PaldError::UnknownTieMode { name } => {
+                write!(f, "unknown tie mode '{name}' (expected 'strict' or 'split')")
+            }
+            PaldError::UnknownMetric { name } => {
+                write!(f, "unknown metric '{name}' (expected euclidean, manhattan, or cosine)")
+            }
+            PaldError::InvalidBlock { value } => {
+                write!(f, "block size {value} is invalid; use BlockSize::Auto for tuned defaults")
+            }
+            PaldError::InvalidThreads { value } => {
+                write!(f, "thread count {value} is invalid; use Threads::Auto for the host count")
+            }
+            PaldError::UnsupportedBackend { backend, hint } => {
+                write!(f, "backend '{backend}' is not served here: {hint}")
+            }
+            PaldError::Io { path, source } => {
+                write!(f, "io error on {}: {source}", path.display())
+            }
+            PaldError::BadFormat { path, detail } => {
+                write!(f, "bad file format in {}: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for PaldError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PaldError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_indices_and_values() {
+        let e = PaldError::Asymmetric { i: 3, j: 7, dij: 1.5, dji: 2.5 };
+        let s = e.to_string();
+        assert!(s.contains("d[3][7] = 1.5") && s.contains("d[7][3] = 2.5"), "{s}");
+        let s = PaldError::NotTriangular { len: 7 }.to_string();
+        assert!(s.contains('7'), "{s}");
+    }
+
+    #[test]
+    fn io_variant_exposes_source() {
+        use std::error::Error;
+        let e = PaldError::io(
+            Path::new("/nope"),
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("/nope"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(PaldError::TooSmall { n: 1 })?;
+            Ok(())
+        }
+        let err = fails().unwrap_err();
+        assert!(err.downcast_ref::<PaldError>().is_some());
+    }
+}

@@ -1,0 +1,339 @@
+//! The `Pald` facade: one typed front door for every cohesion
+//! computation (DESIGN.md §7).
+//!
+//! [`PaldBuilder`] replaces the magic-zero fields of [`PaldConfig`]
+//! (`block: 0` meaning "auto") with typed options — [`BlockSize`],
+//! [`Threads`], [`Validation`] — validated at *build* time with
+//! [`PaldError`] variants, so a misconfigured service fails at startup,
+//! not mid-request.  The built [`Pald`] owns a [`Session`] (reusable
+//! workspace + plan cache + dense materialization buffer) and accepts
+//! any [`DistanceInput`] — dense, condensed, or computed on the fly —
+//! returning a [`CohesionResult`] that carries the plan, phase times,
+//! and lazy analysis accessors.
+
+use crate::core::Mat;
+use crate::pald::api::{available_threads, Algorithm, Backend, PaldConfig};
+use crate::pald::error::PaldError;
+use crate::pald::input::DistanceInput;
+use crate::pald::result::CohesionResult;
+use crate::pald::session::Session;
+use crate::pald::TieMode;
+
+/// Cache-block size: planner/theorem-tuned, or pinned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BlockSize {
+    /// Let the kernel/planner pick (Theorem 4.1/4.2 tuning).
+    #[default]
+    Auto,
+    /// Pin an explicit block edge (must be non-zero).
+    Fixed(usize),
+}
+
+/// Worker-thread budget for the parallel kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Threads {
+    /// Use every hardware thread the host exposes.
+    #[default]
+    Auto,
+    /// Pin an explicit count (must be non-zero).
+    Fixed(usize),
+}
+
+/// Input-validation policy for [`Pald::compute`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Validation {
+    /// O(n²) strict content checks (symmetry, zero diagonal, no negative
+    /// or non-finite values) before every computation — the default:
+    /// negligible against the O(n³) kernels, and the only thing standing
+    /// between an asymmetric input and silently nonsensical cohesion.
+    #[default]
+    Strict,
+    /// Shape checks only — for hot serving paths whose inputs are
+    /// validated upstream (or symmetric by construction).
+    Skip,
+}
+
+/// Typed, build-time-validated configuration for a [`Pald`] facade.
+#[derive(Clone, Debug)]
+pub struct PaldBuilder {
+    algorithm: Algorithm,
+    algorithm_name: Option<String>,
+    tie_mode: TieMode,
+    block: BlockSize,
+    block2: BlockSize,
+    threads: Threads,
+    validation: Validation,
+    backend: Backend,
+}
+
+impl Default for PaldBuilder {
+    fn default() -> Self {
+        PaldBuilder {
+            algorithm: Algorithm::Auto,
+            algorithm_name: None,
+            tie_mode: TieMode::Strict,
+            block: BlockSize::Auto,
+            block2: BlockSize::Auto,
+            threads: Threads::Auto,
+            validation: Validation::Strict,
+            backend: Backend::Native,
+        }
+    }
+}
+
+impl PaldBuilder {
+    /// Planner-selected kernel, strict ties, auto blocks/threads, strict
+    /// validation.
+    pub fn new() -> PaldBuilder {
+        PaldBuilder::default()
+    }
+
+    /// Seed the builder from a legacy [`PaldConfig`] (`0` block/thread
+    /// sentinels map back to `Auto`).  The backend is carried through:
+    /// an XLA config fails [`PaldBuilder::build`] with
+    /// [`PaldError::UnsupportedBackend`] — it is never silently served
+    /// by the native engine.
+    pub fn from_config(cfg: &PaldConfig) -> PaldBuilder {
+        PaldBuilder {
+            algorithm: cfg.algorithm,
+            algorithm_name: None,
+            tie_mode: cfg.tie_mode,
+            block: if cfg.block == 0 { BlockSize::Auto } else { BlockSize::Fixed(cfg.block) },
+            block2: if cfg.block2 == 0 { BlockSize::Auto } else { BlockSize::Fixed(cfg.block2) },
+            threads: if cfg.threads == 0 {
+                Threads::Auto
+            } else {
+                Threads::Fixed(cfg.threads)
+            },
+            validation: Validation::Strict,
+            backend: cfg.backend,
+        }
+    }
+
+    /// Pin an algorithm (or `Algorithm::Auto` for the planner).
+    pub fn algorithm(mut self, algorithm: Algorithm) -> PaldBuilder {
+        self.algorithm = algorithm;
+        self.algorithm_name = None;
+        self
+    }
+
+    /// Select the algorithm by registry name (`"opt-triplet"`, `"auto"`,
+    /// …); resolution happens at [`PaldBuilder::build`], returning
+    /// [`PaldError::UnknownAlgorithm`] for names outside the registry.
+    pub fn algorithm_name(mut self, name: impl Into<String>) -> PaldBuilder {
+        self.algorithm_name = Some(name.into());
+        self
+    }
+
+    /// Distance-tie handling (paper Section 5).
+    pub fn tie_mode(mut self, tie_mode: TieMode) -> PaldBuilder {
+        self.tie_mode = tie_mode;
+        self
+    }
+
+    /// Pairwise block / triplet focus-pass block b̂.
+    pub fn block(mut self, block: BlockSize) -> PaldBuilder {
+        self.block = block;
+        self
+    }
+
+    /// Triplet cohesion-pass block b̃.
+    pub fn block2(mut self, block2: BlockSize) -> PaldBuilder {
+        self.block2 = block2;
+        self
+    }
+
+    /// Worker threads for the parallel kernels.
+    pub fn threads(mut self, threads: Threads) -> PaldBuilder {
+        self.threads = threads;
+        self
+    }
+
+    /// Input-validation policy (strict by default).
+    pub fn validation(mut self, validation: Validation) -> PaldBuilder {
+        self.validation = validation;
+        self
+    }
+
+    /// Validate the configuration and build the facade.
+    pub fn build(self) -> Result<Pald, PaldError> {
+        let algorithm = match &self.algorithm_name {
+            Some(name) => Algorithm::from_name(name)?,
+            None => self.algorithm,
+        };
+        let block = match self.block {
+            BlockSize::Auto => 0,
+            BlockSize::Fixed(0) => return Err(PaldError::InvalidBlock { value: 0 }),
+            BlockSize::Fixed(b) => b,
+        };
+        let block2 = match self.block2 {
+            BlockSize::Auto => 0,
+            BlockSize::Fixed(0) => return Err(PaldError::InvalidBlock { value: 0 }),
+            BlockSize::Fixed(b) => b,
+        };
+        let threads = match self.threads {
+            Threads::Auto => available_threads(),
+            Threads::Fixed(0) => return Err(PaldError::InvalidThreads { value: 0 }),
+            Threads::Fixed(t) => t,
+        };
+        let cfg = PaldConfig {
+            algorithm,
+            tie_mode: self.tie_mode,
+            block,
+            block2,
+            threads,
+            // Session::new rejects Backend::Xla with UnsupportedBackend.
+            backend: self.backend,
+        };
+        Ok(Pald { session: Session::new(cfg)?, validation: self.validation })
+    }
+}
+
+/// The typed facade: validated configuration + reusable execution state.
+///
+/// ```no_run
+/// use paldx::data::distmat;
+/// use paldx::pald::{Pald, PaldError};
+///
+/// fn main() -> Result<(), PaldError> {
+///     let mut pald = Pald::builder().build()?;
+///     let d = distmat::random_tie_free(128, 1);
+///     let result = pald.compute(&d)?;
+///     println!("{} strong ties", result.strong_ties().len());
+///     Ok(())
+/// }
+/// ```
+pub struct Pald {
+    session: Session,
+    validation: Validation,
+}
+
+impl Pald {
+    /// Start a typed configuration.
+    pub fn builder() -> PaldBuilder {
+        PaldBuilder::new()
+    }
+
+    /// Compute cohesion for any distance input (dense [`Mat`],
+    /// [`CondensedMatrix`], [`ComputedDistances`], or a boxed
+    /// `dyn DistanceInput`).
+    ///
+    /// Non-dense inputs are materialized once into a buffer reused
+    /// across calls; repeated same-shape requests replan nothing and
+    /// allocate only the output.
+    ///
+    /// [`CondensedMatrix`]: crate::pald::CondensedMatrix
+    /// [`ComputedDistances`]: crate::pald::ComputedDistances
+    pub fn compute<D: DistanceInput + ?Sized>(
+        &mut self,
+        input: &D,
+    ) -> Result<CohesionResult, PaldError> {
+        let n = input.check_shape()?;
+        if self.validation == Validation::Strict {
+            input.validate_strict()?;
+        }
+        let plan = self.session.plan_for(n);
+        let mut out = Mat::zeros(n, n);
+        let times = self.session.compute_into(input, &mut out)?;
+        Ok(CohesionResult::new(out, times, plan))
+    }
+
+    /// The resolved configuration this facade executes.
+    pub fn config(&self) -> &PaldConfig {
+        self.session.config()
+    }
+
+    /// The input-validation policy.
+    pub fn validation(&self) -> Validation {
+        self.validation
+    }
+
+    /// Bytes currently held by the reusable workspace (scratch matrices,
+    /// tiles, reduction buffers, and the dense materialization buffer).
+    pub fn workspace_bytes(&self) -> usize {
+        self.session.workspace_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+
+    #[test]
+    fn builder_validates_at_build_time() {
+        assert!(matches!(
+            Pald::builder().block(BlockSize::Fixed(0)).build(),
+            Err(PaldError::InvalidBlock { value: 0 })
+        ));
+        assert!(matches!(
+            Pald::builder().block2(BlockSize::Fixed(0)).build(),
+            Err(PaldError::InvalidBlock { value: 0 })
+        ));
+        assert!(matches!(
+            Pald::builder().threads(Threads::Fixed(0)).build(),
+            Err(PaldError::InvalidThreads { value: 0 })
+        ));
+        assert!(matches!(
+            Pald::builder().algorithm_name("frobnicate").build(),
+            Err(PaldError::UnknownAlgorithm { .. })
+        ));
+        let p = Pald::builder().algorithm_name("opt-pairwise").build().unwrap();
+        assert_eq!(p.config().algorithm, Algorithm::OptimizedPairwise);
+        assert!(p.config().threads >= 1);
+    }
+
+    #[test]
+    fn facade_matches_legacy_entry_point() {
+        let d = distmat::random_tie_free(36, 11);
+        let cfg = PaldConfig {
+            algorithm: Algorithm::OptimizedTriplet,
+            block: 16,
+            block2: 8,
+            threads: 1,
+            ..Default::default()
+        };
+        #[allow(deprecated)]
+        let want = crate::pald::api::compute_cohesion(&d, &cfg).unwrap();
+        let mut pald = PaldBuilder::from_config(&cfg).build().unwrap();
+        let got = pald.compute(&d).unwrap();
+        assert_eq!(got.cohesion().as_slice(), want.as_slice());
+        assert_eq!(got.plan().algorithm, Algorithm::OptimizedTriplet);
+        assert!(got.times().total_s > 0.0);
+    }
+
+    #[test]
+    fn strict_validation_rejects_asymmetry_by_default() {
+        let mut d = distmat::random_tie_free(8, 2);
+        d[(0, 1)] += 0.25;
+        let mut pald = Pald::builder().threads(Threads::Fixed(1)).build().unwrap();
+        assert!(matches!(
+            pald.compute(&d),
+            Err(PaldError::Asymmetric { i: 0, j: 1, .. })
+        ));
+        // ... and Skip lets pre-validated serving paths opt out.
+        let mut fast = Pald::builder()
+            .threads(Threads::Fixed(1))
+            .validation(Validation::Skip)
+            .build()
+            .unwrap();
+        assert!(fast.compute(&d).is_ok());
+    }
+
+    #[test]
+    fn from_config_maps_zero_sentinels_to_auto() {
+        let b = PaldBuilder::from_config(&PaldConfig { block: 0, block2: 64, ..Default::default() });
+        assert_eq!(b.block, BlockSize::Auto);
+        assert_eq!(b.block2, BlockSize::Fixed(64));
+        assert!(b.build().is_ok());
+    }
+
+    #[test]
+    fn from_config_rejects_xla_instead_of_silently_going_native() {
+        let cfg = PaldConfig { backend: Backend::Xla, ..Default::default() };
+        assert!(matches!(
+            PaldBuilder::from_config(&cfg).build(),
+            Err(PaldError::UnsupportedBackend { backend: "xla", .. })
+        ));
+    }
+}

@@ -1,0 +1,489 @@
+//! Distance-input abstraction: one typed front door for every way a
+//! caller can hand us pairwise distances (DESIGN.md §7).
+//!
+//! The kernels consume a dense row-major [`Mat`], but forcing every
+//! caller to *store* one wastes memory (a symmetric matrix holds each
+//! distance twice — against the spirit of the paper's §4 communication
+//! analysis) and shuts out sources that never had a matrix in the first
+//! place (embedding services, comparison oracles).  [`DistanceInput`]
+//! decouples the two: the facade asks the input for a cheap shape check,
+//! an optional strict content validation, and — only when the input is
+//! not already dense — a one-time materialization into a reusable
+//! workspace buffer, so the kernel inner loops stay dense and fast.
+//!
+//! Shipped implementations:
+//!
+//! * [`Mat`] / [`DenseMatrix`] — today's representation, zero-copy;
+//! * [`CondensedMatrix`] — upper-triangular `n(n-1)/2` storage, halving
+//!   input memory (the SciPy `pdist` / R `dist` convention);
+//! * [`ComputedDistances`] — points from [`crate::data::embeddings`] (or
+//!   any point cloud) plus a [`Metric`], built on demand.
+
+use crate::core::Mat;
+use crate::pald::api;
+use crate::pald::error::PaldError;
+
+/// A source of pairwise distances over `n` points.
+///
+/// Object-safe: the CLI and serving layers pass `Box<dyn DistanceInput>`
+/// through the same [`Pald::compute`](crate::pald::Pald::compute) front
+/// door as concrete inputs.
+pub trait DistanceInput {
+    /// Number of points.
+    fn n(&self) -> usize;
+
+    /// Cheap structural check (squareness, minimum size); returns `n`.
+    fn check_shape(&self) -> Result<usize, PaldError>;
+
+    /// Bytes held by this input representation — the accessor the
+    /// condensed-vs-dense memory assertions read.
+    fn input_bytes(&self) -> usize;
+
+    /// Borrow the dense matrix when this representation already is one,
+    /// letting the facade skip materialization entirely.
+    fn as_dense(&self) -> Option<&Mat> {
+        None
+    }
+
+    /// Write the full symmetric `n x n` matrix into `out` (pre-sized
+    /// `n x n`; every entry including the diagonal is overwritten).
+    fn materialize_into(&self, out: &mut Mat);
+
+    /// O(n²) strict content validation: symmetry, zero diagonal, no
+    /// negative or non-finite values — whichever of those the
+    /// representation does not already guarantee by construction.
+    fn validate_strict(&self) -> Result<(), PaldError>;
+
+    /// Representation name for plan logs and diagnostics.
+    fn kind(&self) -> &'static str;
+
+    /// Materialize a fresh dense matrix (convenience over
+    /// [`DistanceInput::materialize_into`]).
+    fn to_dense(&self) -> Mat {
+        let n = self.n();
+        let mut out = Mat::zeros(n, n);
+        self.materialize_into(&mut out);
+        out
+    }
+}
+
+impl DistanceInput for Mat {
+    fn n(&self) -> usize {
+        self.rows()
+    }
+
+    fn check_shape(&self) -> Result<usize, PaldError> {
+        if self.rows() != self.cols() {
+            return Err(PaldError::NonSquare { rows: self.rows(), cols: self.cols() });
+        }
+        if self.rows() < 2 {
+            return Err(PaldError::TooSmall { n: self.rows() });
+        }
+        Ok(self.rows())
+    }
+
+    fn input_bytes(&self) -> usize {
+        self.len() * std::mem::size_of::<f32>()
+    }
+
+    fn as_dense(&self) -> Option<&Mat> {
+        Some(self)
+    }
+
+    fn materialize_into(&self, out: &mut Mat) {
+        out.as_mut_slice().copy_from_slice(self.as_slice());
+    }
+
+    fn validate_strict(&self) -> Result<(), PaldError> {
+        api::validate_distances(self)
+    }
+
+    fn kind(&self) -> &'static str {
+        "dense"
+    }
+}
+
+/// Owned dense distance matrix, shape-checked at construction.
+pub struct DenseMatrix(Mat);
+
+impl DenseMatrix {
+    /// Wrap a square `n x n` matrix (`n >= 2`).
+    pub fn new(m: Mat) -> Result<DenseMatrix, PaldError> {
+        DistanceInput::check_shape(&m)?;
+        Ok(DenseMatrix(m))
+    }
+
+    pub fn matrix(&self) -> &Mat {
+        &self.0
+    }
+
+    pub fn into_matrix(self) -> Mat {
+        self.0
+    }
+}
+
+impl DistanceInput for DenseMatrix {
+    fn n(&self) -> usize {
+        self.0.rows()
+    }
+
+    fn check_shape(&self) -> Result<usize, PaldError> {
+        Ok(self.0.rows())
+    }
+
+    fn input_bytes(&self) -> usize {
+        DistanceInput::input_bytes(&self.0)
+    }
+
+    fn as_dense(&self) -> Option<&Mat> {
+        Some(&self.0)
+    }
+
+    fn materialize_into(&self, out: &mut Mat) {
+        DistanceInput::materialize_into(&self.0, out);
+    }
+
+    fn validate_strict(&self) -> Result<(), PaldError> {
+        api::validate_distances(&self.0)
+    }
+
+    fn kind(&self) -> &'static str {
+        "dense"
+    }
+}
+
+/// Upper-triangular condensed storage: `data[k]` holds `d(i, j)` for
+/// `i < j` in row-major pair order, `k = i(2n - i - 1)/2 + (j - i - 1)`.
+///
+/// Symmetry and the zero diagonal hold *by construction* — the two
+/// properties strict validation spends O(n²) comparisons on for dense
+/// input — and the representation stores each distance once, so input
+/// memory is slightly under half the dense equivalent.
+pub struct CondensedMatrix {
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl CondensedMatrix {
+    /// Build from a known point count; `data` must have `n(n-1)/2`
+    /// entries.
+    pub fn new(n: usize, data: Vec<f32>) -> Result<CondensedMatrix, PaldError> {
+        if n < 2 {
+            return Err(PaldError::TooSmall { n });
+        }
+        if data.len() != n * (n - 1) / 2 {
+            return Err(PaldError::NotTriangular { len: data.len() });
+        }
+        Ok(CondensedMatrix { n, data })
+    }
+
+    /// Infer `n` from the vector length; errors with
+    /// [`PaldError::NotTriangular`] unless `len = n(n-1)/2` exactly.
+    pub fn from_vec(data: Vec<f32>) -> Result<CondensedMatrix, PaldError> {
+        let m = data.len();
+        let n = ((1.0 + (1.0 + 8.0 * m as f64).sqrt()) / 2.0).round() as usize;
+        if n < 2 || n * (n - 1) / 2 != m {
+            return Err(PaldError::NotTriangular { len: m });
+        }
+        CondensedMatrix::new(n, data)
+    }
+
+    /// Condense a square dense matrix (upper triangle is kept; the lower
+    /// triangle and diagonal are dropped unchecked — run strict
+    /// validation on the dense input first if symmetry is in doubt).
+    pub fn from_dense(d: &Mat) -> Result<CondensedMatrix, PaldError> {
+        let n = DistanceInput::check_shape(d)?;
+        let mut data = Vec::with_capacity(n * (n - 1) / 2);
+        for i in 0..n {
+            data.extend_from_slice(&d.row(i)[i + 1..]);
+        }
+        Ok(CondensedMatrix { n, data })
+    }
+
+    /// Distance between `i` and `j` through the inlined triangular
+    /// accessor (0 on the diagonal).
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        if i == j {
+            return 0.0;
+        }
+        let (i, j) = if i < j { (i, j) } else { (j, i) };
+        self.data[i * (2 * self.n - i - 1) / 2 + (j - i - 1)]
+    }
+
+    /// The condensed upper-triangular values in pair order.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl DistanceInput for CondensedMatrix {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn check_shape(&self) -> Result<usize, PaldError> {
+        Ok(self.n)
+    }
+
+    fn input_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    fn materialize_into(&self, out: &mut Mat) {
+        let n = self.n;
+        let mut k = 0;
+        for i in 0..n {
+            out[(i, i)] = 0.0;
+            for j in (i + 1)..n {
+                let v = self.data[k];
+                out[(i, j)] = v;
+                out[(j, i)] = v;
+                k += 1;
+            }
+        }
+    }
+
+    fn validate_strict(&self) -> Result<(), PaldError> {
+        // Symmetry and the diagonal hold by construction; only the
+        // value range needs checking.
+        let mut k = 0;
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let v = self.data[k];
+                if !v.is_finite() {
+                    return Err(PaldError::NotFinite { i, j });
+                }
+                if v < 0.0 {
+                    return Err(PaldError::NegativeDistance { i, j, value: v });
+                }
+                k += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn kind(&self) -> &'static str {
+        "condensed"
+    }
+}
+
+/// Point-cloud metric for [`ComputedDistances`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Metric {
+    /// L2 — the paper's choice for embeddings (Section 7); matches
+    /// [`crate::data::distmat::euclidean`] bit for bit.
+    #[default]
+    Euclidean,
+    /// L1 / city-block.
+    Manhattan,
+    /// `1 - cos(a, b)`, clamped at 0 against rounding.
+    Cosine,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Euclidean => "euclidean",
+            Metric::Manhattan => "manhattan",
+            Metric::Cosine => "cosine",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Metric, PaldError> {
+        match s {
+            "euclidean" | "l2" => Ok(Metric::Euclidean),
+            "manhattan" | "l1" => Ok(Metric::Manhattan),
+            "cosine" => Ok(Metric::Cosine),
+            other => Err(PaldError::UnknownMetric { name: other.to_string() }),
+        }
+    }
+}
+
+/// Distances computed on the fly from an `n x dim` point cloud — no
+/// distance matrix is ever stored by the caller; the facade materializes
+/// one straight into its reusable workspace buffer.
+pub struct ComputedDistances {
+    points: Mat,
+    metric: Metric,
+}
+
+impl ComputedDistances {
+    /// Wrap a point cloud (`n >= 2` rows of coordinates).
+    pub fn new(points: Mat, metric: Metric) -> Result<ComputedDistances, PaldError> {
+        if points.rows() < 2 {
+            return Err(PaldError::TooSmall { n: points.rows() });
+        }
+        Ok(ComputedDistances { points, metric })
+    }
+
+    pub fn points(&self) -> &Mat {
+        &self.points
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn pair(&self, x: usize, y: usize) -> f32 {
+        let px = self.points.row(x);
+        let py = self.points.row(y);
+        match self.metric {
+            // Same accumulation order as `distmat::euclidean`, so a
+            // ComputedDistances input is bit-identical to the dense
+            // matrix that function would build.
+            Metric::Euclidean => {
+                let mut s = 0.0f64;
+                for (a, b) in px.iter().zip(py) {
+                    let diff = (a - b) as f64;
+                    s += diff * diff;
+                }
+                s.sqrt() as f32
+            }
+            Metric::Manhattan => {
+                let mut s = 0.0f64;
+                for (a, b) in px.iter().zip(py) {
+                    s += (a - b).abs() as f64;
+                }
+                s as f32
+            }
+            Metric::Cosine => {
+                let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+                for (a, b) in px.iter().zip(py) {
+                    dot += (*a as f64) * (*b as f64);
+                    na += (*a as f64) * (*a as f64);
+                    nb += (*b as f64) * (*b as f64);
+                }
+                let denom = (na.sqrt() * nb.sqrt()).max(1e-30);
+                ((1.0 - dot / denom).max(0.0)) as f32
+            }
+        }
+    }
+}
+
+impl DistanceInput for ComputedDistances {
+    fn n(&self) -> usize {
+        self.points.rows()
+    }
+
+    fn check_shape(&self) -> Result<usize, PaldError> {
+        Ok(self.points.rows())
+    }
+
+    fn input_bytes(&self) -> usize {
+        self.points.len() * std::mem::size_of::<f32>()
+    }
+
+    fn materialize_into(&self, out: &mut Mat) {
+        let n = self.points.rows();
+        for x in 0..n {
+            out[(x, x)] = 0.0;
+            for y in (x + 1)..n {
+                let v = self.pair(x, y);
+                out[(x, y)] = v;
+                out[(y, x)] = v;
+            }
+        }
+    }
+
+    fn validate_strict(&self) -> Result<(), PaldError> {
+        // Symmetry, the zero diagonal, and non-negativity hold by
+        // construction for every shipped metric; only the coordinates
+        // themselves can poison the result.
+        for i in 0..self.points.rows() {
+            for (j, v) in self.points.row(i).iter().enumerate() {
+                if !v.is_finite() {
+                    return Err(PaldError::NotFinite { i, j });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn kind(&self) -> &'static str {
+        match self.metric {
+            Metric::Euclidean => "computed-euclidean",
+            Metric::Manhattan => "computed-manhattan",
+            Metric::Cosine => "computed-cosine",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+
+    #[test]
+    fn condensed_roundtrips_dense() {
+        let d = distmat::random_tie_free(13, 5);
+        let c = CondensedMatrix::from_dense(&d).unwrap();
+        assert_eq!(c.as_slice().len(), 13 * 12 / 2);
+        let back = c.to_dense();
+        assert_eq!(back.as_slice(), d.as_slice());
+        for i in 0..13 {
+            for j in 0..13 {
+                assert_eq!(c.at(i, j), d[(i, j)], "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn condensed_is_half_the_bytes() {
+        let d = distmat::random_tie_free(64, 1);
+        let c = CondensedMatrix::from_dense(&d).unwrap();
+        let dense_bytes = DistanceInput::input_bytes(&d);
+        assert!(c.input_bytes() * 2 <= dense_bytes);
+        assert!(c.input_bytes() * 2 >= dense_bytes - 64 * 4 * 2, "only the diagonal + one triangle saved");
+    }
+
+    #[test]
+    fn condensed_length_must_be_triangular() {
+        assert!(matches!(
+            CondensedMatrix::from_vec(vec![0.0; 4]),
+            Err(PaldError::NotTriangular { len: 4 })
+        ));
+        assert!(matches!(
+            CondensedMatrix::new(5, vec![0.0; 9]),
+            Err(PaldError::NotTriangular { len: 9 })
+        ));
+        assert!(CondensedMatrix::from_vec(vec![1.0; 10]).is_ok()); // n = 5
+    }
+
+    #[test]
+    fn computed_euclidean_matches_distmat() {
+        let pts = distmat::gaussian_clusters(6, &[8, 8], &[0.4, 0.4], 4.0, 9);
+        let want = distmat::euclidean(&pts);
+        let cd = ComputedDistances::new(pts, Metric::Euclidean).unwrap();
+        assert_eq!(cd.to_dense().as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn metric_parsing() {
+        assert_eq!(Metric::parse("euclidean").unwrap(), Metric::Euclidean);
+        assert_eq!(Metric::parse("l1").unwrap(), Metric::Manhattan);
+        assert_eq!(Metric::parse("cosine").unwrap(), Metric::Cosine);
+        assert!(Metric::parse("hamming").is_err());
+    }
+
+    #[test]
+    fn cosine_is_a_valid_distance_input() {
+        let pts = distmat::gaussian_clusters(5, &[6, 6], &[0.2, 0.2], 3.0, 2);
+        let cd = ComputedDistances::new(pts, Metric::Cosine).unwrap();
+        cd.validate_strict().unwrap();
+        let d = cd.to_dense();
+        crate::pald::api::validate_distances(&d).unwrap();
+    }
+
+    #[test]
+    fn mat_shape_checks() {
+        let m = crate::core::Mat::zeros(3, 4);
+        assert!(matches!(
+            DistanceInput::check_shape(&m),
+            Err(PaldError::NonSquare { rows: 3, cols: 4 })
+        ));
+        let m = crate::core::Mat::zeros(1, 1);
+        assert!(matches!(DistanceInput::check_shape(&m), Err(PaldError::TooSmall { n: 1 })));
+        assert!(DenseMatrix::new(crate::core::Mat::zeros(1, 1)).is_err());
+    }
+}

@@ -20,11 +20,21 @@
 //! and all kernels accumulate through a reusable [`Workspace`], which
 //! [`Session`] exploits to serve repeated/batched matrices with zero
 //! steady-state allocation.
+//!
+//! The public front door is the typed [`Pald`] facade (DESIGN.md §7):
+//! a [`PaldBuilder`] validated at build time, [`DistanceInput`] inputs
+//! (dense, condensed, or computed on the fly from points), a
+//! [`CohesionResult`] carrying the plan / phase times / lazy analysis
+//! accessors, and [`PaldError`] everywhere a string error used to be.
+//! The free functions `compute_cohesion*` remain as deprecated wrappers.
 
 pub mod api;
 pub mod blocked;
 pub mod hybrid;
 pub mod branchfree;
+pub mod error;
+pub mod facade;
+pub mod input;
 pub mod kernel;
 pub mod naive;
 pub mod ops;
@@ -32,15 +42,19 @@ pub mod optimized;
 pub mod parallel_pairwise;
 pub mod parallel_triplet;
 pub mod planner;
+pub mod result;
 pub mod session;
 pub mod workspace;
 
-pub use api::{
-    compute_cohesion, compute_cohesion_into, compute_cohesion_timed, plan_for, Algorithm,
-    Backend, PaldConfig, PhaseTimes,
-};
+#[allow(deprecated)] // legacy one-shot wrappers, kept for migration
+pub use api::{compute_cohesion, compute_cohesion_into, compute_cohesion_timed};
+pub use api::{plan_for, validate_distances, Algorithm, Backend, PaldConfig, PhaseTimes};
+pub use error::PaldError;
+pub use facade::{BlockSize, Pald, PaldBuilder, Threads, Validation};
+pub use input::{ComputedDistances, CondensedMatrix, DenseMatrix, DistanceInput, Metric};
 pub use kernel::{kernel_by_name, kernel_for, CohesionKernel, ExecParams, KernelMeta, REGISTRY};
 pub use planner::{Plan, Planner};
+pub use result::CohesionResult;
 pub use session::Session;
 pub use workspace::Workspace;
 
@@ -59,6 +73,24 @@ pub enum TieMode {
     /// distance ties split support 0.5/0.5.  Symmetric and exact; ~2x the
     /// comparisons.
     Split,
+}
+
+impl TieMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TieMode::Strict => "strict",
+            TieMode::Split => "split",
+        }
+    }
+
+    /// Parse a CLI/config tie-mode name with a typed error.
+    pub fn parse(s: &str) -> Result<TieMode, PaldError> {
+        match s {
+            "strict" => Ok(TieMode::Strict),
+            "split" => Ok(TieMode::Split),
+            other => Err(PaldError::UnknownTieMode { name: other.to_string() }),
+        }
+    }
 }
 
 /// Is `z` inside the local focus of the pair `(x, y)` with distance `dxy`?

@@ -1,0 +1,140 @@
+//! Typed computation result: the cohesion matrix plus everything a
+//! caller asks next (DESIGN.md §7).
+//!
+//! Instead of returning a bare [`Mat`] and leaving callers to hunt down
+//! the free functions in [`crate::analysis`], a [`CohesionResult`] owns
+//! the cohesion matrix, the [`PhaseTimes`] breakdown, and the [`Plan`]
+//! that produced it, and lazily caches the standard derived quantities —
+//! the universal strong-tie threshold, the strong ties themselves, local
+//! depths, and communities — so repeated accessor calls cost one
+//! computation total.
+
+use std::sync::OnceLock;
+
+use crate::analysis;
+use crate::analysis::StrongTie;
+use crate::core::Mat;
+use crate::pald::planner::Plan;
+use crate::pald::workspace::PhaseTimes;
+
+/// The outcome of one cohesion computation.
+pub struct CohesionResult {
+    cohesion: Mat,
+    times: PhaseTimes,
+    plan: Plan,
+    tau: OnceLock<f32>,
+    ties: OnceLock<Vec<StrongTie>>,
+    depths: OnceLock<Vec<f32>>,
+    comms: OnceLock<Vec<usize>>,
+}
+
+impl CohesionResult {
+    pub(crate) fn new(cohesion: Mat, times: PhaseTimes, plan: Plan) -> CohesionResult {
+        CohesionResult {
+            cohesion,
+            times,
+            plan,
+            tau: OnceLock::new(),
+            ties: OnceLock::new(),
+            depths: OnceLock::new(),
+            comms: OnceLock::new(),
+        }
+    }
+
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        self.cohesion.rows()
+    }
+
+    /// The cohesion matrix `C` (row `x` holds the support `x` lends each
+    /// other point, Eq. 3.3-normalized).
+    pub fn cohesion(&self) -> &Mat {
+        &self.cohesion
+    }
+
+    /// Unwrap the cohesion matrix, dropping the caches.
+    pub fn into_matrix(self) -> Mat {
+        self.cohesion
+    }
+
+    /// Phase timing breakdown of the computation that produced this
+    /// result (focus / cohesion / normalize / total).
+    pub fn times(&self) -> PhaseTimes {
+        self.times
+    }
+
+    /// The resolved execution plan (concrete kernel, block sizes,
+    /// threads — never `Algorithm::Auto`).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// The universal strong-tie threshold `mean(diag(C)) / 2` of
+    /// Berenhaut et al. — computed once, cached.
+    pub fn universal_threshold(&self) -> f32 {
+        *self.tau.get_or_init(|| analysis::universal_threshold(&self.cohesion))
+    }
+
+    /// Strong ties under the universal threshold, sorted by decreasing
+    /// symmetrized strength — computed once, cached.
+    pub fn strong_ties(&self) -> &[StrongTie] {
+        self.ties.get_or_init(|| analysis::strong_ties(&self.cohesion))
+    }
+
+    /// Local depth `ℓ_x = Σ_z C[x][z]` per point — computed once, cached.
+    pub fn local_depths(&self) -> &[f32] {
+        self.depths.get_or_init(|| analysis::local_depths(&self.cohesion))
+    }
+
+    /// Community id per point (connected components of the strong-tie
+    /// graph, singletons included) — computed once, cached.
+    pub fn communities(&self) -> &[usize] {
+        self.comms.get_or_init(|| analysis::communities(&self.cohesion))
+    }
+
+    /// Number of distinct communities.
+    pub fn community_count(&self) -> usize {
+        self.communities().iter().max().map(|m| m + 1).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::planner::Plan;
+    use crate::pald::{Algorithm, PaldConfig};
+
+    fn result_for(n: usize, seed: u64) -> CohesionResult {
+        let d = distmat::random_tie_free(n, seed);
+        let cfg = PaldConfig { algorithm: Algorithm::OptimizedPairwise, threads: 1, ..Default::default() };
+        let plan = Plan::from_config(&cfg);
+        let mut ws = crate::pald::Workspace::new();
+        let mut out = Mat::zeros(n, n);
+        let times = crate::pald::api::execute_plan(&d, &plan, &mut ws, &mut out).unwrap();
+        CohesionResult::new(out, times, plan)
+    }
+
+    #[test]
+    fn accessors_agree_with_free_functions() {
+        let r = result_for(30, 7);
+        assert_eq!(r.n(), 30);
+        assert_eq!(r.universal_threshold(), analysis::universal_threshold(r.cohesion()));
+        assert_eq!(r.strong_ties(), &analysis::strong_ties(r.cohesion())[..]);
+        assert_eq!(r.local_depths(), &analysis::local_depths(r.cohesion())[..]);
+        assert_eq!(r.communities(), &analysis::communities(r.cohesion())[..]);
+        assert!(r.community_count() >= 1);
+        assert!(r.times().total_s > 0.0);
+        assert_ne!(r.plan().algorithm, Algorithm::Auto);
+    }
+
+    #[test]
+    fn accessors_are_cached_pointers() {
+        let r = result_for(24, 3);
+        let a = r.strong_ties().as_ptr();
+        let b = r.strong_ties().as_ptr();
+        assert_eq!(a, b, "second call must return the cached slice");
+        let c = r.into_matrix();
+        assert_eq!(c.rows(), 24);
+    }
+}

@@ -1,57 +1,112 @@
 //! Serving sessions: repeated and batched cohesion computations with
-//! zero steady-state allocation (DESIGN.md §6).
+//! zero steady-state allocation (DESIGN.md §6, §7).
 //!
-//! A [`Session`] owns a [`Workspace`] and a configuration, so a service
-//! handling back-to-back distance matrices (the Online PaLD pattern)
-//! re-uses U/W/CT and the per-thread reduction buffers across requests
-//! instead of allocating and zeroing them every call.
+//! A [`Session`] owns a [`Workspace`], a configuration validated once at
+//! construction, a cached [`Plan`] keyed by problem shape, and a dense
+//! materialization buffer for non-dense [`DistanceInput`]s — so a
+//! service handling back-to-back requests (the Online PaLD pattern)
+//! re-plans only on shape changes and allocates nothing after the first
+//! request except each call's output matrix.
 
 use crate::core::Mat;
-use crate::pald::api::{compute_cohesion_into, Backend, PaldConfig, PhaseTimes};
+use crate::pald::api::{self, Backend, PaldConfig, PhaseTimes};
+use crate::pald::error::PaldError;
+use crate::pald::input::DistanceInput;
+use crate::pald::planner::Plan;
 use crate::pald::workspace::Workspace;
 
 /// A reusable computation context for repeated `compute` calls.
 pub struct Session {
     cfg: PaldConfig,
     ws: Workspace,
+    /// Plan for the most recent problem size — hoisted across same-shape
+    /// requests and batches instead of re-resolved per item.
+    plan: Option<(usize, Plan)>,
+    /// Dense materialization buffer for condensed / computed inputs.
+    dense: Mat,
 }
 
 impl Session {
-    /// Build a session; the XLA backend is served by the coordinator, not
-    /// by native sessions.
-    pub fn new(cfg: PaldConfig) -> anyhow::Result<Session> {
+    /// Build a session.  The configuration is validated here, once — per
+    /// request there is nothing left to re-check.  The XLA backend is
+    /// served by the coordinator, not by native sessions.
+    pub fn new(cfg: PaldConfig) -> Result<Session, PaldError> {
         if cfg.backend == Backend::Xla {
-            anyhow::bail!("Backend::Xla is served by coordinator::Coordinator, not Session");
+            return Err(PaldError::UnsupportedBackend {
+                backend: "xla",
+                hint: "Backend::Xla is served by coordinator::Coordinator, not Session",
+            });
         }
-        Ok(Session { cfg, ws: Workspace::new() })
+        Ok(Session { cfg, ws: Workspace::new(), plan: None, dense: Mat::zeros(0, 0) })
     }
 
     pub fn config(&self) -> &PaldConfig {
         &self.cfg
     }
 
+    /// Resolved plan for an `n x n` problem, cached across same-shape
+    /// calls (`Algorithm::Auto` consults the planner only when the shape
+    /// changes).
+    pub fn plan_for(&mut self, n: usize) -> Plan {
+        if let Some((cached_n, plan)) = &self.plan {
+            if *cached_n == n {
+                return plan.clone();
+            }
+        }
+        let plan = api::plan_for(&self.cfg, n);
+        self.plan = Some((n, plan.clone()));
+        plan
+    }
+
     /// Compute into a caller-owned output matrix (must be `n x n`);
     /// returns the phase timing breakdown of this call.
-    pub fn compute_into(&mut self, d: &Mat, out: &mut Mat) -> anyhow::Result<PhaseTimes> {
-        compute_cohesion_into(d, &self.cfg, &mut self.ws, out)
+    pub fn compute_into<D: DistanceInput + ?Sized>(
+        &mut self,
+        input: &D,
+        out: &mut Mat,
+    ) -> Result<PhaseTimes, PaldError> {
+        let n = input.check_shape()?;
+        let plan = self.plan_for(n);
+        match input.as_dense() {
+            Some(d) => api::execute_plan(d, &plan, &mut self.ws, out),
+            None => {
+                if self.dense.rows() != n || self.dense.cols() != n {
+                    self.dense = Mat::zeros(n, n);
+                }
+                input.materialize_into(&mut self.dense);
+                api::execute_plan(&self.dense, &plan, &mut self.ws, out)
+            }
+        }
     }
 
     /// Compute a fresh cohesion matrix (the only allocation on the steady
     /// path is this output).
-    pub fn compute(&mut self, d: &Mat) -> anyhow::Result<Mat> {
-        let mut out = Mat::zeros(d.rows(), d.rows());
-        self.compute_into(d, &mut out)?;
+    pub fn compute<D: DistanceInput + ?Sized>(&mut self, input: &D) -> Result<Mat, PaldError> {
+        let n = input.check_shape()?;
+        let mut out = Mat::zeros(n, n);
+        self.compute_into(input, &mut out)?;
         Ok(out)
     }
 
-    /// Compute a batch of distance matrices through the shared workspace.
-    pub fn compute_batch(&mut self, ds: &[Mat]) -> anyhow::Result<Vec<Mat>> {
-        ds.iter().map(|d| self.compute(d)).collect()
+    /// Compute a batch of distance inputs through the shared workspace.
+    ///
+    /// Plan resolution is hoisted: same-shape items share one resolved
+    /// plan (mixed-shape batches re-plan only at shape boundaries), and
+    /// the configuration — validated at [`Session::new`] — is never
+    /// re-checked per item.
+    pub fn compute_batch<D: DistanceInput>(&mut self, inputs: &[D]) -> Result<Vec<Mat>, PaldError> {
+        inputs.iter().map(|d| self.compute(d)).collect()
     }
 
     /// Phase timings recorded by the most recent computation.
     pub fn last_times(&self) -> PhaseTimes {
         self.ws.phases
+    }
+
+    /// Bytes currently held by the reusable workspace, including the
+    /// dense materialization buffer.
+    pub fn workspace_bytes(&self) -> usize {
+        self.ws.allocated_bytes() + self.dense.len() * std::mem::size_of::<f32>()
     }
 }
 
@@ -59,22 +114,28 @@ impl Session {
 mod tests {
     use super::*;
     use crate::data::distmat;
-    use crate::pald::{compute_cohesion, Algorithm};
+    use crate::pald::input::CondensedMatrix;
+    use crate::pald::Algorithm;
 
-    #[test]
-    fn session_matches_one_shot_api() {
-        let cfg = PaldConfig {
+    fn pinned_cfg() -> PaldConfig {
+        PaldConfig {
             algorithm: Algorithm::OptimizedTriplet,
             block: 16,
             block2: 8,
             threads: 1,
             ..Default::default()
-        };
+        }
+    }
+
+    #[test]
+    fn session_matches_one_shot_api() {
+        let cfg = pinned_cfg();
         let mut s = Session::new(cfg.clone()).unwrap();
         for seed in [1u64, 2, 3] {
             let d = distmat::random_tie_free(32, seed);
             let got = s.compute(&d).unwrap();
-            let want = compute_cohesion(&d, &cfg).unwrap();
+            #[allow(deprecated)]
+            let want = crate::pald::api::compute_cohesion(&d, &cfg).unwrap();
             assert_eq!(got.as_slice(), want.as_slice(), "seed={seed}");
         }
         assert!(s.last_times().total_s > 0.0);
@@ -83,7 +144,10 @@ mod tests {
     #[test]
     fn session_rejects_xla_backend() {
         let cfg = PaldConfig { backend: Backend::Xla, ..Default::default() };
-        assert!(Session::new(cfg).is_err());
+        assert!(matches!(
+            Session::new(cfg),
+            Err(PaldError::UnsupportedBackend { backend: "xla", .. })
+        ));
     }
 
     #[test]
@@ -100,5 +164,59 @@ mod tests {
             assert_eq!(c.rows(), n);
             assert!((c.sum() - n as f64 / 2.0).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn batch_of_three_matches_three_one_shot_calls_exactly() {
+        // threads = 1 keeps the planner on the bitwise-deterministic
+        // sequential kernels, so exact equality is sound.
+        let cfg = PaldConfig { algorithm: Algorithm::Auto, threads: 1, ..Default::default() };
+        let ds: Vec<Mat> = (0..3).map(|s| distmat::random_tie_free(36, 100 + s)).collect();
+        let mut batch_session = Session::new(cfg.clone()).unwrap();
+        let batch = batch_session.compute_batch(&ds).unwrap();
+        assert_eq!(batch.len(), 3);
+        for (i, (d, got)) in ds.iter().zip(&batch).enumerate() {
+            let mut fresh = Session::new(cfg.clone()).unwrap();
+            let want = fresh.compute(d).unwrap();
+            assert_eq!(got.as_slice(), want.as_slice(), "batch[{i}]");
+        }
+    }
+
+    #[test]
+    fn same_shape_batch_resolves_one_plan() {
+        let cfg = PaldConfig { algorithm: Algorithm::Auto, threads: 1, ..Default::default() };
+        let mut s = Session::new(cfg).unwrap();
+        let p1 = s.plan_for(64);
+        let p2 = s.plan_for(64);
+        assert_eq!(p1.algorithm, p2.algorithm);
+        assert_eq!(p1.params.block, p2.params.block);
+        // Shape change triggers a re-plan (possibly the same kernel).
+        let p3 = s.plan_for(48);
+        assert_ne!(p3.algorithm, Algorithm::Auto);
+    }
+
+    #[test]
+    fn shape_mismatch_is_typed() {
+        let mut s = Session::new(pinned_cfg()).unwrap();
+        let d = distmat::random_tie_free(8, 1);
+        let mut out = Mat::zeros(7, 7);
+        assert!(matches!(
+            s.compute_into(&d, &mut out),
+            Err(PaldError::ShapeMismatch { expected_rows: 8, expected_cols: 8, rows: 7, cols: 7 })
+        ));
+    }
+
+    #[test]
+    fn condensed_input_reuses_materialization_buffer() {
+        let mut s = Session::new(pinned_cfg()).unwrap();
+        let d = distmat::random_tie_free(24, 9);
+        let condensed = CondensedMatrix::from_dense(&d).unwrap();
+        let a = s.compute(&condensed).unwrap();
+        let before = s.workspace_bytes();
+        let b = s.compute(&condensed).unwrap();
+        assert_eq!(s.workspace_bytes(), before, "steady state must not grow the workspace");
+        assert_eq!(a.as_slice(), b.as_slice());
+        let dense_result = s.compute(&d).unwrap();
+        assert_eq!(a.as_slice(), dense_result.as_slice());
     }
 }

@@ -120,6 +120,24 @@ impl Workspace {
     pub fn reset_phases(&mut self) {
         self.phases = PhaseTimes::default();
     }
+
+    /// Bytes currently held by the arena (scratch matrices, mask rows,
+    /// tiles, and per-thread reduction buffers) — the workspace half of
+    /// the memory-accounting surface next to
+    /// [`DistanceInput::input_bytes`](crate::pald::DistanceInput::input_bytes).
+    pub fn allocated_bytes(&self) -> usize {
+        let f32s = self.u.len()
+            + self.w.len()
+            + self.ct.len()
+            + self.sa.capacity()
+            + self.ta.capacity()
+            + self.fsa.capacity()
+            + self.fta.capacity()
+            + self.w_tile.capacity();
+        f32s * std::mem::size_of::<f32>()
+            + self.u_tile.capacity() * std::mem::size_of::<u32>()
+            + self.reduce.allocated_bytes()
+    }
 }
 
 impl Default for Workspace {

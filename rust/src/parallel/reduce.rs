@@ -82,6 +82,11 @@ pub struct ReduceWorkspace {
 }
 
 impl ReduceWorkspace {
+    /// Bytes currently held by the per-thread buffers.
+    pub fn allocated_bytes(&self) -> usize {
+        self.bufs.iter().map(|b| b.capacity() * std::mem::size_of::<u32>()).sum()
+    }
+
     /// Size (and zero) `threads` buffers of `acc_len` words, reusing
     /// existing capacity.
     fn ensure(&mut self, threads: usize, acc_len: usize) {

@@ -306,12 +306,14 @@ pub fn calibrated_peak_ops_per_sec() -> f64 {
     let n = 128;
     let d = distmat::random_tie_free(n, 1);
     let cfg = PaldConfig { algorithm: Algorithm::OptimizedPairwise, block: n, ..Default::default() };
+    let mut session = pald::Session::new(cfg).expect("peak calib session");
+    let mut out = Mat::zeros(n, n);
     // warmup + best of 5
     let mut best = f64::INFINITY;
     for _ in 0..6 {
         let t0 = Instant::now();
-        let c = pald::compute_cohesion(&d, &cfg).expect("peak calib");
-        std::hint::black_box(c.sum());
+        session.compute_into(&d, &mut out).expect("peak calib");
+        std::hint::black_box(out.sum());
         best = best.min(t0.elapsed().as_secs_f64());
     }
     ops::pairwise_ops(n as u64).normalized() / best
@@ -381,11 +383,16 @@ pub fn ablation(n: usize, opts: &BenchOpts) -> Table {
             threads: 1,
             ..Default::default()
         };
+        let mut out = Mat::zeros(n, n);
+        let mut sess_strict = pald::Session::new(cfg(TieMode::Strict)).expect("session");
         let s_strict = bench(opts, || {
-            std::hint::black_box(pald::compute_cohesion(&d, &cfg(TieMode::Strict)).unwrap().sum());
+            sess_strict.compute_into(&d, &mut out).expect("compute");
+            std::hint::black_box(out.sum());
         });
+        let mut sess_split = pald::Session::new(cfg(TieMode::Split)).expect("session");
         let s_split = bench(opts, || {
-            std::hint::black_box(pald::compute_cohesion(&d, &cfg(TieMode::Split)).unwrap().sum());
+            sess_split.compute_into(&d, &mut out).expect("compute");
+            std::hint::black_box(out.sum());
         });
         table.stat(format!("{}/strict", alg.name()), s_strict);
         table.stat(format!("{}/split", alg.name()), s_split);

@@ -1,0 +1,253 @@
+//! Acceptance tests for the typed public API (DESIGN.md §7): the `Pald`
+//! facade, the three `DistanceInput` representations, `CohesionResult`,
+//! and every `PaldError` variant.
+
+use paldx::core::Mat;
+use paldx::data::distmat;
+use paldx::pald::{
+    self, Algorithm, BlockSize, ComputedDistances, CondensedMatrix, DenseMatrix, DistanceInput,
+    Metric, Pald, PaldBuilder, PaldConfig, PaldError, Session, Threads, TieMode, Validation,
+};
+
+fn pinned(alg: Algorithm, threads: usize) -> Pald {
+    Pald::builder()
+        .algorithm(alg)
+        .block(BlockSize::Fixed(8))
+        .block2(BlockSize::Fixed(4))
+        .threads(Threads::Fixed(threads))
+        .build()
+        .unwrap()
+}
+
+/// Acceptance: `CondensedMatrix` and `DenseMatrix` inputs produce
+/// bit-identical cohesion for all 12 kernels (single-threaded — the
+/// triplet task graph is only tolerance-reproducible across runs at
+/// p > 1), and tolerance-identical at p = 3.
+#[test]
+fn condensed_matches_dense_bit_identical_for_all_kernels() {
+    let n = 28;
+    let d = distmat::random_tie_free(n, 4321);
+    let dense = DenseMatrix::new(d.clone()).unwrap();
+    let condensed = CondensedMatrix::from_dense(&d).unwrap();
+    for alg in Algorithm::ALL {
+        let mut p = pinned(alg, 1);
+        let a = p.compute(&dense).unwrap();
+        let b = p.compute(&condensed).unwrap();
+        assert_eq!(
+            a.cohesion().as_slice(),
+            b.cohesion().as_slice(),
+            "{}: condensed input must be bit-identical to dense",
+            alg.name()
+        );
+        let mut p3 = pinned(alg, 3);
+        let c = p3.compute(&condensed).unwrap();
+        assert!(
+            c.cohesion().allclose(a.cohesion(), 1e-4, 1e-5),
+            "{}: parallel condensed run diverged",
+            alg.name()
+        );
+    }
+}
+
+/// Acceptance: `Pald::compute` agrees exactly with the deprecated
+/// `compute_cohesion` on dense input.
+#[test]
+#[allow(deprecated)]
+fn facade_agrees_with_legacy_compute_cohesion() {
+    let d = distmat::random_tie_free(40, 11);
+    for alg in [Algorithm::OptimizedPairwise, Algorithm::OptimizedTriplet, Algorithm::Hybrid] {
+        let cfg = PaldConfig { algorithm: alg, block: 16, block2: 8, threads: 1, ..Default::default() };
+        let want = pald::compute_cohesion(&d, &cfg).unwrap();
+        let got = PaldBuilder::from_config(&cfg).build().unwrap().compute(&d).unwrap();
+        assert_eq!(got.cohesion().as_slice(), want.as_slice(), "{}", alg.name());
+    }
+}
+
+/// Acceptance: condensed input uses ~half the input memory of dense,
+/// read through the `input_bytes` accessor.
+#[test]
+fn condensed_halves_input_memory_end_to_end() {
+    let n = 96;
+    let d = distmat::random_tie_free(n, 5);
+    let condensed = CondensedMatrix::from_dense(&d).unwrap();
+    let dense_bytes = DistanceInput::input_bytes(&d);
+    assert_eq!(dense_bytes, n * n * 4);
+    assert_eq!(condensed.input_bytes(), n * (n - 1) / 2 * 4);
+    assert!(condensed.input_bytes() * 2 <= dense_bytes);
+    // ... and the end-to-end computation still works off that half-size
+    // representation, with the workspace reporting its own bytes.
+    let mut p = pinned(Algorithm::OptimizedTriplet, 1);
+    let r = p.compute(&condensed).unwrap();
+    assert_eq!(r.n(), n);
+    assert!(p.workspace_bytes() > 0);
+}
+
+/// On-the-fly input from points matches the dense Euclidean matrix
+/// bit for bit.
+#[test]
+fn computed_distances_match_dense_euclidean() {
+    let pts = distmat::gaussian_clusters(12, &[10, 14], &[0.3, 0.9], 6.0, 17);
+    let d = distmat::euclidean(&pts);
+    let cd = ComputedDistances::new(pts, Metric::Euclidean).unwrap();
+    let mut p = pinned(Algorithm::OptimizedPairwise, 1);
+    let a = p.compute(&cd).unwrap();
+    let b = p.compute(&d).unwrap();
+    assert_eq!(a.cohesion().as_slice(), b.cohesion().as_slice());
+}
+
+/// The result object: lazy accessors agree with the free functions and
+/// the plan names a concrete kernel.
+#[test]
+fn cohesion_result_carries_plan_times_and_analysis() {
+    let d = distmat::random_tie_free(48, 99);
+    let mut p = Pald::builder()
+        .algorithm(Algorithm::Auto)
+        .threads(Threads::Fixed(2))
+        .build()
+        .unwrap();
+    let r = p.compute(&d).unwrap();
+    assert_ne!(r.plan().algorithm, Algorithm::Auto);
+    assert!(r.times().total_s > 0.0);
+    assert_eq!(r.universal_threshold(), paldx::analysis::universal_threshold(r.cohesion()));
+    assert_eq!(r.strong_ties(), &paldx::analysis::strong_ties(r.cohesion())[..]);
+    assert_eq!(r.local_depths(), &paldx::analysis::local_depths(r.cohesion())[..]);
+    assert_eq!(r.communities(), &paldx::analysis::communities(r.cohesion())[..]);
+    let total: f32 = r.local_depths().iter().sum();
+    assert!((total - 24.0).abs() < 1e-3);
+}
+
+/// A 3-item same-shape batch matches three one-shot calls exactly
+/// (plan resolution is hoisted, state does not leak).
+#[test]
+fn batch_matches_one_shot_exactly() {
+    // threads = 1: the planner's sequential candidates are all bitwise
+    // deterministic, so exact equality is the right assertion.
+    let cfg = PaldConfig { algorithm: Algorithm::Auto, threads: 1, ..Default::default() };
+    let ds: Vec<Mat> = (0..3).map(|s| distmat::random_tie_free(32, 500 + s)).collect();
+    let mut session = Session::new(cfg.clone()).unwrap();
+    let batch = session.compute_batch(&ds).unwrap();
+    for (i, (d, got)) in ds.iter().zip(&batch).enumerate() {
+        let want = Session::new(cfg.clone()).unwrap().compute(d).unwrap();
+        assert_eq!(got.as_slice(), want.as_slice(), "batch[{i}]");
+    }
+}
+
+// ---- every PaldError variant, constructed from the public surface ----
+
+#[test]
+fn error_non_square_and_too_small() {
+    let mut p = pinned(Algorithm::OptimizedPairwise, 1);
+    assert!(matches!(
+        p.compute(&Mat::zeros(3, 4)),
+        Err(PaldError::NonSquare { rows: 3, cols: 4 })
+    ));
+    assert!(matches!(p.compute(&Mat::zeros(1, 1)), Err(PaldError::TooSmall { n: 1 })));
+}
+
+#[test]
+fn error_asymmetric_negative_diagonal_nonfinite() {
+    let base = distmat::random_tie_free(10, 1);
+    let mut p = pinned(Algorithm::OptimizedPairwise, 1);
+
+    let mut d = base.clone();
+    d[(1, 3)] += 0.5;
+    assert!(matches!(p.compute(&d), Err(PaldError::Asymmetric { i: 1, j: 3, .. })));
+
+    let mut d = base.clone();
+    d[(2, 5)] = -1.0;
+    d[(5, 2)] = -1.0;
+    assert!(matches!(p.compute(&d), Err(PaldError::NegativeDistance { i: 2, j: 5, .. })));
+
+    let mut d = base.clone();
+    d[(4, 4)] = 1e-3;
+    assert!(matches!(p.compute(&d), Err(PaldError::NonZeroDiagonal { i: 4, .. })));
+
+    let mut d = base.clone();
+    d[(0, 9)] = f32::INFINITY;
+    d[(9, 0)] = f32::INFINITY;
+    assert!(matches!(p.compute(&d), Err(PaldError::NotFinite { i: 0, j: 9 })));
+
+    // Validation::Skip turns all of those into accepted inputs.
+    let mut skip = Pald::builder()
+        .threads(Threads::Fixed(1))
+        .validation(Validation::Skip)
+        .build()
+        .unwrap();
+    let mut d = base.clone();
+    d[(1, 3)] += 0.5;
+    assert!(skip.compute(&d).is_ok());
+}
+
+#[test]
+fn error_not_triangular() {
+    assert!(matches!(
+        CondensedMatrix::from_vec(vec![1.0; 7]),
+        Err(PaldError::NotTriangular { len: 7 })
+    ));
+    assert!(matches!(
+        CondensedMatrix::new(6, vec![1.0; 10]),
+        Err(PaldError::NotTriangular { len: 10 })
+    ));
+}
+
+#[test]
+fn error_unknown_algorithm_and_tie_mode_and_metric() {
+    assert!(matches!(
+        Pald::builder().algorithm_name("quantum-pald").build(),
+        Err(PaldError::UnknownAlgorithm { .. })
+    ));
+    assert!(matches!(Algorithm::from_name("nope"), Err(PaldError::UnknownAlgorithm { .. })));
+    assert!(matches!(TieMode::parse("fuzzy"), Err(PaldError::UnknownTieMode { .. })));
+    assert!(matches!(Metric::parse("hamming"), Err(PaldError::UnknownMetric { .. })));
+}
+
+#[test]
+fn error_invalid_block_threads_backend_shape() {
+    assert!(matches!(
+        Pald::builder().block(BlockSize::Fixed(0)).build(),
+        Err(PaldError::InvalidBlock { value: 0 })
+    ));
+    assert!(matches!(
+        Pald::builder().threads(Threads::Fixed(0)).build(),
+        Err(PaldError::InvalidThreads { value: 0 })
+    ));
+    let xla = PaldConfig { backend: pald::Backend::Xla, ..Default::default() };
+    assert!(matches!(Session::new(xla), Err(PaldError::UnsupportedBackend { .. })));
+
+    let mut s = Session::new(PaldConfig { threads: 1, ..Default::default() }).unwrap();
+    let d = distmat::random_tie_free(6, 2);
+    let mut out = Mat::zeros(5, 5);
+    assert!(matches!(
+        s.compute_into(&d, &mut out),
+        Err(PaldError::ShapeMismatch { expected_rows: 6, .. })
+    ));
+}
+
+#[test]
+fn error_io_and_bad_format() {
+    let missing = std::env::temp_dir().join("paldx_facade_missing.bin");
+    let _ = std::fs::remove_file(&missing);
+    assert!(matches!(paldx::io::load_matrix(&missing), Err(PaldError::Io { .. })));
+
+    let junk = std::env::temp_dir().join("paldx_facade_junk.bin");
+    std::fs::write(&junk, b"NOTMAGIC________________").unwrap();
+    assert!(matches!(paldx::io::load_matrix(&junk), Err(PaldError::BadFormat { .. })));
+    assert!(matches!(paldx::io::load_condensed(&junk), Err(PaldError::BadFormat { .. })));
+}
+
+/// Deprecated wrappers still compile, run, and agree — the migration
+/// story for pre-0.3 callers.
+#[test]
+#[allow(deprecated)]
+fn legacy_wrappers_still_serve() {
+    let d = distmat::random_tie_free(24, 77);
+    let cfg = PaldConfig { algorithm: Algorithm::OptimizedTriplet, threads: 1, ..Default::default() };
+    let a = pald::compute_cohesion(&d, &cfg).unwrap();
+    let (b, times) = pald::compute_cohesion_timed(&d, &cfg).unwrap();
+    assert_eq!(a.as_slice(), b.as_slice());
+    assert!(times.total_s > 0.0);
+    let mut ws = pald::Workspace::new();
+    let mut out = Mat::zeros(24, 24);
+    pald::compute_cohesion_into(&d, &cfg, &mut ws, &mut out).unwrap();
+    assert_eq!(out.as_slice(), a.as_slice());
+}
