@@ -1,0 +1,15 @@
+//! Bench target measuring per-update latency of the incremental PaLD
+//! engine: seeds on half the points, streams in the rest with periodic
+//! removals, and emits `BENCH_stream.json` (see DESIGN.md §5, §8).
+//! Run: cargo bench --bench stream_latency   (PALDX_FULL=1 for paper sizes)
+fn main() -> anyhow::Result<()> {
+    let n = if paldx::bench::full_scale() { "2048" } else { "256" };
+    paldx::cli::run(vec![
+        "stream".into(),
+        "--n".into(),
+        n.into(),
+        "--churn".into(),
+        "8".into(),
+        "--check".into(),
+    ])
+}

@@ -6,7 +6,9 @@ use crate::core::Mat;
 /// universal threshold.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StrongTie {
+    /// First endpoint (point index).
     pub a: usize,
+    /// Second endpoint (point index).
     pub b: usize,
     /// min(C[a][b], C[b][a]) — the symmetrized strength.
     pub strength: f32,

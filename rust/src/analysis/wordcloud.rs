@@ -4,6 +4,7 @@
 /// One rendered entry.
 #[derive(Clone, Debug)]
 pub struct CloudEntry {
+    /// The word itself.
     pub word: String,
     /// Raw weight (cohesion value or inverse distance).
     pub weight: f32,

@@ -7,14 +7,20 @@ use std::time::Instant;
 /// Statistics over trial times (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct Stats {
+    /// Mean trial time (seconds).
     pub mean: f64,
+    /// Fastest trial (seconds).
     pub min: f64,
+    /// Slowest trial (seconds).
     pub max: f64,
+    /// Population standard deviation (seconds).
     pub stddev: f64,
+    /// Number of trials measured.
     pub trials: usize,
 }
 
 impl Stats {
+    /// Summarize a slice of trial times (seconds).
     pub fn from_times(times: &[f64]) -> Stats {
         let n = times.len().max(1) as f64;
         let mean = times.iter().sum::<f64>() / n;
@@ -33,7 +39,9 @@ impl Stats {
 /// to the same, with a wall-clock budget guard for the big sweeps.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchOpts {
+    /// Untimed warmup iterations before measuring.
     pub warmup: usize,
+    /// Timed trials.
     pub trials: usize,
     /// Stop early once total measured time exceeds this many seconds.
     pub budget_s: f64,
@@ -94,6 +102,7 @@ pub fn full_scale() -> bool {
 pub struct StatEntry {
     /// Algorithm or configuration label (e.g. `opt-pairwise/n=512`).
     pub label: String,
+    /// The measured trial statistics.
     pub stats: Stats,
 }
 
@@ -101,13 +110,19 @@ pub struct StatEntry {
 /// behind its formatted cells so the JSON report can be emitted alongside
 /// the Markdown.
 pub struct Table {
+    /// Table caption (becomes the Markdown `###` heading).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Formatted cell rows (each the same length as `headers`).
     pub rows: Vec<Vec<String>>,
+    /// Raw statistics backing the formatted rows (may be empty for
+    /// simulation-only tables).
     pub stats: Vec<StatEntry>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.into(),
@@ -117,6 +132,7 @@ impl Table {
         }
     }
 
+    /// Append one formatted row (must match the header count).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells);
@@ -155,6 +171,7 @@ impl Table {
         out
     }
 
+    /// CSV rendering (headers + rows).
     pub fn csv(&self) -> String {
         let mut out = self.headers.join(",");
         out.push('\n');
@@ -248,6 +265,7 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
+/// Format a speedup ratio (`1.50x`).
 pub fn fmt_speedup(x: f64) -> String {
     format!("{x:.2}x")
 }

@@ -6,6 +6,7 @@ use std::collections::HashMap;
 /// Parsed command line.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// The positional subcommand, if any.
     pub command: Option<String>,
     opts: HashMap<String, String>,
     flags: Vec<String>,
@@ -39,18 +40,22 @@ impl Args {
         Ok(out)
     }
 
+    /// Was `--name` passed as a bare flag?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name <value>`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(String::as_str)
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as `usize`, or `default` when absent.
     pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -58,6 +63,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as `u64`, or `default` when absent.
     pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
         match self.get(name) {
             None => Ok(default),

@@ -15,6 +15,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse INI-style text (`[section]` headers, `key = value` lines).
     pub fn parse(text: &str) -> anyhow::Result<Config> {
         let mut values = HashMap::new();
         let mut section = String::new();
@@ -46,14 +47,17 @@ impl Config {
         Ok(Config { values })
     }
 
+    /// Parse a config file from disk.
     pub fn load(path: &Path) -> anyhow::Result<Config> {
         Self::parse(&std::fs::read_to_string(path)?)
     }
 
+    /// Raw value of `section.key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(String::as_str)
     }
 
+    /// `section.key` parsed as `usize`, or `default` when absent.
     pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -61,6 +65,7 @@ impl Config {
         }
     }
 
+    /// `section.key` parsed as `true`/`false`, or `default` when absent.
     pub fn get_bool(&self, key: &str, default: bool) -> anyhow::Result<bool> {
         match self.get(key) {
             None => Ok(default),

@@ -5,6 +5,8 @@
 //! * `plan`      — print the planner's kernel/block/thread choice for a shape
 //! * `analyze`   — strong ties / communities of a computed cohesion matrix
 //! * `convert`   — re-encode a distance input (dense ⟷ condensed)
+//! * `stream`    — replay a point stream through the incremental engine,
+//!   reporting per-update latency (`BENCH_stream.json`)
 //! * `repro`     — regenerate a paper table/figure (`--exp fig3|...|all`)
 //! * `calibrate` — print this machine's calibrated model parameters
 //! * `info`      — kernel registry + artifact inventory
@@ -27,8 +29,8 @@ use crate::coordinator::{Coordinator, Job};
 use crate::data::distmat;
 use crate::io;
 use crate::pald::{
-    Algorithm, Backend, ComputedDistances, CondensedMatrix, DistanceInput, Metric, PaldBuilder,
-    PaldConfig, Planner, TieMode, Validation, REGISTRY,
+    Algorithm, Backend, ComputedDistances, CondensedMatrix, DistanceInput, LatencyTrace, Metric,
+    PaldBuilder, PaldConfig, Planner, TieMode, Validation, REGISTRY,
 };
 use crate::repro;
 
@@ -47,6 +49,10 @@ COMMANDS:
   analyze    --input <cohesion.{bin,csv}> [--top K]  strong ties & communities
   convert    --input <path.{bin,csv,vec}> --output <path>  re-encode distances
              (condensed binary by default — half the bytes; --dense for dense)
+  stream     --n <int> | --input <path.{bin,csv,vec}>   replay a point stream
+             through the incremental engine; per-update latency + BENCH_stream.json
+             [--warm K] [--churn R] [--check] [--bench-dir DIR] [--alg ...]
+             [--tie ...] [--threads P] [--metric ...] [--no-validate]
   repro      --exp fig3|fig4|table1|fig9|fig10|fig11|fig13|table2|peak|bounds|ablation|xla|all
              [--bench-dir DIR]  (measured experiments also emit BENCH_<exp>.json)
   calibrate                                         measure machine constants
@@ -68,6 +74,7 @@ pub fn run(raw: Vec<String>) -> anyhow::Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("convert") => cmd_convert(&args),
+        Some("stream") => cmd_stream(&args),
         Some("repro") => cmd_repro(&args),
         Some("calibrate") => cmd_calibrate(),
         Some("info") => cmd_info(&args),
@@ -206,6 +213,149 @@ fn cmd_convert(args: &Args) -> anyhow::Result<()> {
         input.input_bytes(),
         std::fs::metadata(p)?.len()
     );
+    Ok(())
+}
+
+/// `paldx stream`: replay a point stream through the incremental engine
+/// — seed on the first `--warm` points, insert the rest one at a time
+/// (optionally removing one point every `--churn` inserts), report
+/// per-update latency, and write `BENCH_stream.json`.
+///
+/// A `.vec` input streams raw coordinates through
+/// [`IncrementalPald::insert_point`]; every other input (or a generated
+/// `--n` matrix) streams distance rows of the materialized matrix
+/// through [`IncrementalPald::insert_row`].  `--check` cross-verifies
+/// the final incremental state against a batch recompute.
+///
+/// [`IncrementalPald::insert_point`]: crate::pald::IncrementalPald::insert_point
+/// [`IncrementalPald::insert_row`]: crate::pald::IncrementalPald::insert_row
+fn cmd_stream(args: &Args) -> anyhow::Result<()> {
+    use std::time::Instant;
+
+    let config = config_from(args)?;
+    anyhow::ensure!(
+        config.backend == Backend::Native,
+        "stream is served by the native engine (--backend native)"
+    );
+    let churn = args.get_usize("churn", 0)?;
+    let bench_dir = PathBuf::from(args.get_or("bench-dir", "."));
+    let check = args.flag("check");
+    let mut builder = PaldBuilder::from_config(&config);
+    if args.flag("no-validate") {
+        builder = builder.validation(Validation::Skip);
+    }
+    let pald = builder.build()?;
+    let mut trace = LatencyTrace::new();
+
+    let points_mode = args.get("input").map(|p| p.ends_with(".vec")).unwrap_or(false);
+    let mut eng = if points_mode {
+        // Coordinate stream: retain points, compute rows under --metric.
+        let pts = io::load_points(Path::new(args.get("input").unwrap()))?;
+        let metric = Metric::parse(args.get_or("metric", "euclidean"))?;
+        let total = pts.rows();
+        let warm = args.get_usize("warm", (total / 2).max(2))?;
+        anyhow::ensure!((2..=total).contains(&warm), "--warm must be in 2..={total}");
+        let seed = ComputedDistances::new(pts.slice_to(warm, pts.cols()), metric)?;
+        let mut eng = pald.into_incremental_points_with_capacity(seed, total)?;
+        let mut step = 0usize;
+        for q in warm..total {
+            let t0 = Instant::now();
+            eng.insert_point(pts.row(q))?;
+            trace.record_insert(t0.elapsed().as_secs_f64());
+            step += 1;
+            if churn > 0 && step % churn == 0 && eng.n() > 2 {
+                let victim = (step * 7 + 3) % eng.n();
+                let t0 = Instant::now();
+                eng.remove(victim)?;
+                trace.record_remove(t0.elapsed().as_secs_f64());
+            }
+        }
+        eng
+    } else {
+        // Distance-row stream: replay rows of the materialized matrix,
+        // tracking which master indices the engine currently holds so
+        // churned removals keep the rows consistent.
+        let input = load_input(args)?;
+        input.check_shape()?;
+        let d = input.to_dense();
+        let total = d.rows();
+        let warm = args.get_usize("warm", (total / 2).max(2))?;
+        anyhow::ensure!((2..=total).contains(&warm), "--warm must be in 2..={total}");
+        let mut eng = pald.into_incremental_with_capacity(&d.slice_to(warm, warm), total)?;
+        let mut ids: Vec<usize> = (0..warm).collect();
+        let mut row = vec![0.0f32; total];
+        let mut step = 0usize;
+        for q in warm..total {
+            let n = eng.n();
+            for (k, &id) in ids.iter().enumerate() {
+                row[k] = d[(q, id)];
+            }
+            let t0 = Instant::now();
+            eng.insert_row(&row[..n])?;
+            trace.record_insert(t0.elapsed().as_secs_f64());
+            ids.push(q);
+            step += 1;
+            if churn > 0 && step % churn == 0 && eng.n() > 2 {
+                let victim = (step * 7 + 3) % eng.n();
+                let t0 = Instant::now();
+                eng.remove(victim)?;
+                trace.record_remove(t0.elapsed().as_secs_f64());
+                ids.remove(victim);
+            }
+        }
+        eng
+    };
+
+    let stats = eng.stats();
+    println!(
+        "stream: n={} after {} inserts / {} removes (update kernel {}, {} reweighted pairs, {} grow events)",
+        eng.n(),
+        stats.inserts,
+        stats.removes,
+        eng.update_kernel(),
+        stats.reweighted_pairs,
+        stats.grow_events
+    );
+    let mut table = crate::bench::Table::new(
+        "stream — per-update latency",
+        &["op", "count", "mean", "min", "max"],
+    );
+    if let Some(s) = trace.insert_stats() {
+        table.row(vec![
+            "insert".into(),
+            s.trials.to_string(),
+            crate::bench::fmt_secs(s.mean),
+            crate::bench::fmt_secs(s.min),
+            crate::bench::fmt_secs(s.max),
+        ]);
+        table.stat(format!("insert/n={}", eng.n()), s);
+    }
+    if let Some(s) = trace.remove_stats() {
+        table.row(vec![
+            "remove".into(),
+            s.trials.to_string(),
+            crate::bench::fmt_secs(s.mean),
+            crate::bench::fmt_secs(s.min),
+            crate::bench::fmt_secs(s.max),
+        ]);
+        table.stat(format!("remove/n={}", eng.n()), s);
+    }
+    table.print();
+    match crate::bench::write_json_report(&bench_dir, "stream", &[&table]) {
+        Ok(Some(path)) => println!("wrote {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("could not write BENCH_stream.json: {e}"),
+    }
+    if check {
+        let inc = eng.cohesion();
+        let batch = eng.batch_recompute()?;
+        let maxdiff = inc.max_abs_diff(&batch);
+        println!("oracle check: max |C_inc - C_batch| = {maxdiff:.3e}");
+        anyhow::ensure!(
+            inc.allclose(&batch, 1e-4, 1e-5),
+            "incremental state diverged from batch recompute (maxdiff {maxdiff})"
+        );
+    }
     Ok(())
 }
 
@@ -499,6 +649,70 @@ mod tests {
             err.downcast_ref::<crate::pald::PaldError>(),
             Some(crate::pald::PaldError::NonSquare { rows: 3, cols: 4 })
         ));
+    }
+
+    #[test]
+    fn stream_generated_matrix_with_churn_passes_oracle_check() {
+        let dir = tmp_dir();
+        run(argv(&[
+            "stream",
+            "--n",
+            "40",
+            "--warm",
+            "24",
+            "--churn",
+            "4",
+            "--alg",
+            "opt-pairwise",
+            "--threads",
+            "1",
+            "--check",
+            "--bench-dir",
+            dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let report = dir.join("BENCH_stream.json");
+        let text = std::fs::read_to_string(&report).unwrap();
+        assert!(text.contains("\"experiment\": \"stream\""), "{text}");
+        assert!(text.contains("insert/n="), "{text}");
+        assert!(text.contains("remove/n="), "{text}");
+        std::fs::remove_file(report).ok();
+    }
+
+    #[test]
+    fn stream_point_cloud_passes_oracle_check() {
+        let dir = tmp_dir();
+        let p = dir.join("stream_pts.vec");
+        let mut text = String::new();
+        for i in 0..20 {
+            text.push_str(&format!(
+                "w{i} {} {} {}\n",
+                i as f32 * 0.31,
+                (i % 7) as f32 * 1.1,
+                i as f32 * 0.05
+            ));
+        }
+        std::fs::write(&p, text).unwrap();
+        run(argv(&[
+            "stream",
+            "--input",
+            p.to_str().unwrap(),
+            "--warm",
+            "10",
+            "--alg",
+            "opt-triplet",
+            // The lattice-like points produce exact distance ties; split
+            // mode is the tie-exact semantics every kernel agrees on.
+            "--tie",
+            "split",
+            "--threads",
+            "1",
+            "--check",
+            "--bench-dir",
+            dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(run(argv(&["stream", "--n", "8", "--warm", "1"])).is_err(), "--warm below 2");
     }
 
     #[test]

@@ -3,9 +3,13 @@
 /// Metrics of one completed job.
 #[derive(Clone, Debug)]
 pub struct JobMetrics {
+    /// Problem size (points).
     pub n: usize,
+    /// Algorithm name that served the job.
     pub algorithm: String,
+    /// Backend name (`native` / `xla`).
     pub backend: String,
+    /// Wall-clock seconds.
     pub seconds: f64,
 }
 
@@ -25,14 +29,17 @@ pub struct MetricsRegistry {
 }
 
 impl MetricsRegistry {
+    /// Record one completed job.
     pub fn record(&mut self, m: JobMetrics) {
         self.jobs.push(m);
     }
 
+    /// All recorded jobs, in completion order.
     pub fn jobs(&self) -> &[JobMetrics] {
         &self.jobs
     }
 
+    /// Total wall-clock seconds across recorded jobs.
     pub fn total_seconds(&self) -> f64 {
         self.jobs.iter().map(|j| j.seconds).sum()
     }

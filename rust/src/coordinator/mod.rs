@@ -21,6 +21,7 @@ use crate::runtime::XlaRuntime;
 /// A cohesion-computation job.
 #[derive(Clone, Debug)]
 pub struct Job {
+    /// Full computation configuration (algorithm, ties, blocks, backend).
     pub config: PaldConfig,
     /// Artifacts directory for the XLA backend.
     pub artifacts_dir: PathBuf,
@@ -35,10 +36,12 @@ impl Default for Job {
 /// Coordinator owning the (lazily created) XLA runtime and metrics.
 pub struct Coordinator {
     xla: Option<XlaRuntime>,
+    /// Accumulated per-job metrics.
     pub metrics: MetricsRegistry,
 }
 
 impl Coordinator {
+    /// Coordinator with no runtime loaded yet (XLA is created lazily).
     pub fn new() -> Coordinator {
         Coordinator { xla: None, metrics: MetricsRegistry::default() }
     }

@@ -45,11 +45,13 @@ impl Mat {
         m
     }
 
+    /// Number of rows.
     #[inline(always)]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     #[inline(always)]
     pub fn cols(&self) -> usize {
         self.cols
@@ -60,6 +62,7 @@ impl Mat {
         self.data.len()
     }
 
+    /// `true` when the matrix holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -99,6 +102,7 @@ impl Mat {
         &self.data
     }
 
+    /// Mutable flat row-major data.
     #[inline(always)]
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
         &mut self.data

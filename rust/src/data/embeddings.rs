@@ -44,8 +44,11 @@ fn pseudo_word(rng: &mut Rng, syllables: usize) -> String {
 
 /// Cluster specification: (name, member count, radius around the center).
 pub struct ClusterSpec {
+    /// Cluster (seed word) name.
     pub name: &'static str,
+    /// Member count.
     pub size: usize,
+    /// Radius around the cluster center.
     pub radius: f32,
 }
 
@@ -150,10 +153,12 @@ pub fn build(n: usize, dim: usize, seed: u64, specs: Vec<ClusterSpec>) -> Embedd
 }
 
 impl EmbeddedVocab {
+    /// Number of embedded words.
     pub fn len(&self) -> usize {
         self.words.len()
     }
 
+    /// `true` when the vocabulary is empty.
     pub fn is_empty(&self) -> bool {
         self.words.is_empty()
     }

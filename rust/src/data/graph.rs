@@ -43,19 +43,23 @@ impl Csr {
         Csr { offsets, neighbors }
     }
 
+    /// Number of vertices.
     pub fn num_vertices(&self) -> usize {
         self.offsets.len() - 1
     }
 
+    /// Number of undirected edges.
     pub fn num_edges(&self) -> usize {
         self.neighbors.len() / 2
     }
 
+    /// Adjacency list of vertex `v`.
     #[inline]
     pub fn neighbors(&self, v: usize) -> &[u32] {
         &self.neighbors[self.offsets[v] as usize..self.offsets[v + 1] as usize]
     }
 
+    /// Degree of vertex `v`.
     pub fn degree(&self, v: usize) -> usize {
         self.neighbors(v).len()
     }

@@ -11,10 +11,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Generator starting from `seed`.
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
     }
 
+    /// Next 64 pseudo-random bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -37,6 +39,7 @@ impl Rng {
         Rng { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
     }
 
+    /// Next 64 pseudo-random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]

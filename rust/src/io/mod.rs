@@ -227,14 +227,20 @@ pub fn load_edge_list(path: &Path) -> anyhow::Result<(usize, Vec<(u32, u32)>)> {
 
 /// Minimal JSON value writer for results/metrics files.
 pub enum Json {
+    /// A number (non-finite renders as `null`).
     Num(f64),
+    /// A string (escaped on render).
     Str(String),
+    /// A boolean.
     Bool(bool),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with insertion-ordered keys.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// Serialize to JSON text.
     pub fn render(&self) -> String {
         match self {
             Json::Num(v) => {

@@ -22,6 +22,10 @@
 //!   `depend(inout)` conflict resolution for triplet, see [`parallel`];
 //! * an XLA/PJRT backend executing the AOT-compiled JAX + Pallas kernels,
 //!   see [`runtime`] and [`coordinator`];
+//! * an **incremental engine** ([`pald::IncrementalPald`]) maintaining
+//!   cohesion across online point insertions and removals without the
+//!   Θ(n³) batch recompute, with allocation-free steady-state updates
+//!   (DESIGN.md §8), see [`pald::incremental`] and `paldx stream`;
 //! * simulators used for the paper's analyses: an LRU cache simulator and
 //!   block-traffic counters validating the communication bounds of
 //!   Theorems 4.1/4.2, and a calibrated multicore machine model used to
@@ -38,9 +42,9 @@
 //! (dense, condensed, or computed on the fly from points), and a
 //! [`pald::CohesionResult`] carrying the resolved plan, phase times, and
 //! lazy analysis accessors.  Errors are [`pald::PaldError`] variants,
-//! not strings.
+//! not strings.  (This example runs as a doctest: `cargo test --doc`.)
 //!
-//! ```no_run
+//! ```
 //! use paldx::data::distmat;
 //! use paldx::pald::{
 //!     Algorithm, ComputedDistances, CondensedMatrix, Metric, Pald, PaldError, Threads,
@@ -54,7 +58,7 @@
 //!         .build()?;
 //!
 //!     // Dense input (strict O(n²) validation runs by default).
-//!     let d = distmat::random_tie_free(256, 42);
+//!     let d = distmat::random_tie_free(128, 42);
 //!     let result = pald.compute(&d)?;
 //!     println!("plan: {}", result.plan().describe());
 //!     println!(
@@ -78,9 +82,36 @@
 //! }
 //! ```
 //!
+//! ## Online serving
+//!
+//! When points arrive and leave continuously, convert the facade into an
+//! incremental engine: each update costs the O(n²) triplets touching the
+//! changed point (plus a data-dependent reweight sweep) instead of a
+//! full recompute, and steady-state updates allocate nothing.
+//!
+//! ```
+//! use paldx::data::distmat;
+//! use paldx::pald::{Pald, PaldError};
+//!
+//! fn main() -> Result<(), PaldError> {
+//!     let master = distmat::random_tie_free(64, 9);
+//!     let mut eng = Pald::builder().build()?.into_incremental(&master.slice_to(60, 60))?;
+//!     for q in 60..64 {
+//!         eng.insert_row(&master.row(q)[..q])?; // distances to current points
+//!     }
+//!     eng.remove(0)?;
+//!     let c = eng.cohesion(); // matches a batch recompute (oracle-tested)
+//!     assert_eq!(c.rows(), 63);
+//!     assert_eq!(eng.stats().grow_events, 0); // no per-update allocation
+//!     Ok(())
+//! }
+//! ```
+//!
 //! The pre-0.3 free functions (`pald::compute_cohesion` & friends) still
 //! work but are `#[deprecated]`; each deprecation note names the typed
 //! replacement.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod bench;

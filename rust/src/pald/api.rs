@@ -70,6 +70,7 @@ impl Algorithm {
         Algorithm::ParallelHybrid,
     ];
 
+    /// Registry/CLI name of the variant.
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::NaivePairwise => "naive-pairwise",
@@ -121,7 +122,9 @@ pub enum Backend {
 /// Full configuration for a cohesion computation.
 #[derive(Clone, Debug)]
 pub struct PaldConfig {
+    /// Which kernel to run (or [`Algorithm::Auto`] for the planner).
     pub algorithm: Algorithm,
+    /// Distance-tie handling (paper Section 5).
     pub tie_mode: TieMode,
     /// Pairwise block size / triplet focus-pass block size b̂ (0 = default).
     pub block: usize,
@@ -129,6 +132,7 @@ pub struct PaldConfig {
     pub block2: usize,
     /// Worker threads for the parallel algorithms.
     pub threads: usize,
+    /// Execution backend (native kernels or the XLA artifact path).
     pub backend: Backend,
 }
 
@@ -256,8 +260,9 @@ pub(crate) fn execute_plan(
 /// Compute the cohesion matrix for symmetric distance matrix `d`.
 #[deprecated(
     since = "0.3.0",
-    note = "use the typed facade: `Pald::builder().build()?.compute(&d)` returns a \
-            `CohesionResult` with the plan, phase times, and analysis accessors"
+    note = "call `PaldBuilder::from_config(cfg).build()?.compute(d)?.into_matrix()` — \
+            the facade validates at build time, returns typed `PaldError`s, and its \
+            `CohesionResult` also carries the plan, phase times, and analysis accessors"
 )]
 pub fn compute_cohesion(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<Mat> {
     let n = validate_shape(d)?;
@@ -275,7 +280,8 @@ pub fn compute_cohesion(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<Mat> {
 /// timing breakdown (also left in `ws.phases`).
 #[deprecated(
     since = "0.3.0",
-    note = "use `Session::compute_into` (typed errors, cached plan resolution)"
+    note = "call `Session::new(cfg.clone())?.compute_into(d, out)` — typed errors, \
+            and the session caches plan resolution plus the workspace across calls"
 )]
 pub fn compute_cohesion_into(
     d: &Mat,
@@ -292,7 +298,9 @@ pub fn compute_cohesion_into(
 /// breakdown (focus, cohesion, normalize, total).
 #[deprecated(
     since = "0.3.0",
-    note = "use the typed facade: `CohesionResult::times()` carries the phase breakdown"
+    note = "call `PaldBuilder::from_config(cfg).build()?.compute(d)` — the returned \
+            `CohesionResult` carries the matrix (`into_matrix()`) and the Figure 13 \
+            phase breakdown (`times()`)"
 )]
 pub fn compute_cohesion_timed(d: &Mat, cfg: &PaldConfig) -> anyhow::Result<(Mat, PhaseTimes)> {
     let n = validate_shape(d)?;

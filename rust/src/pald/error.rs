@@ -49,6 +49,27 @@ pub enum PaldError {
     InvalidThreads { value: usize },
     /// The requested backend is not served by this entry point.
     UnsupportedBackend { backend: &'static str, hint: &'static str },
+    /// Coordinate ingestion on an incremental engine that was not
+    /// seeded with points (see
+    /// [`Pald::into_incremental_points`](crate::pald::Pald::into_incremental_points)).
+    NoPointStore {
+        /// How to construct an engine that accepts coordinates.
+        hint: &'static str,
+    },
+    /// Distance-row ingestion on a points-seeded incremental engine —
+    /// the retained coordinates would desynchronize from the distance
+    /// state (later `insert_point`/`remove` calls would be wrong).
+    PointStoreMismatch {
+        /// How to keep the coordinates and distances aligned.
+        hint: &'static str,
+    },
+    /// A point index outside the `n` points currently held.
+    IndexOutOfBounds {
+        /// The offending index.
+        index: usize,
+        /// Points currently held.
+        n: usize,
+    },
     /// Underlying filesystem failure while reading/writing a paldx file.
     Io { path: PathBuf, source: std::io::Error },
     /// Structurally invalid file contents (bad magic, ragged CSV, …).
@@ -112,6 +133,15 @@ impl fmt::Display for PaldError {
             }
             PaldError::UnsupportedBackend { backend, hint } => {
                 write!(f, "backend '{backend}' is not served here: {hint}")
+            }
+            PaldError::NoPointStore { hint } => {
+                write!(f, "engine holds no point coordinates: {hint}")
+            }
+            PaldError::PointStoreMismatch { hint } => {
+                write!(f, "engine retains point coordinates: {hint}")
+            }
+            PaldError::IndexOutOfBounds { index, n } => {
+                write!(f, "point index {index} out of bounds for {n} points")
             }
             PaldError::Io { path, source } => {
                 write!(f, "io error on {}: {source}", path.display())

@@ -14,9 +14,11 @@
 use crate::core::Mat;
 use crate::pald::api::{available_threads, Algorithm, Backend, PaldConfig};
 use crate::pald::error::PaldError;
-use crate::pald::input::DistanceInput;
+use crate::pald::incremental::IncrementalPald;
+use crate::pald::input::{ComputedDistances, DistanceInput};
 use crate::pald::result::CohesionResult;
 use crate::pald::session::Session;
+use crate::pald::stream::PointStore;
 use crate::pald::TieMode;
 
 /// Cache-block size: planner/theorem-tuned, or pinned.
@@ -203,6 +205,9 @@ impl PaldBuilder {
 ///     Ok(())
 /// }
 /// ```
+#[doc(alias = "pald")]
+#[doc(alias = "PaLD")]
+#[doc(alias = "cohesion")]
 pub struct Pald {
     session: Session,
     validation: Validation,
@@ -246,6 +251,80 @@ impl Pald {
     /// The input-validation policy.
     pub fn validation(&self) -> Validation {
         self.validation
+    }
+
+    /// Convert this facade into an [`IncrementalPald`] engine seeded
+    /// with `input`, with capacity for roughly twice the seed size
+    /// before the first reallocation (use
+    /// [`Pald::into_incremental_with_capacity`] to pick the headroom).
+    ///
+    /// The engine inherits this facade's configuration, validation
+    /// policy, and session (plan cache + workspace); after seeding,
+    /// each [`insert`](IncrementalPald::insert) /
+    /// [`remove`](IncrementalPald::remove) maintains the cohesion state
+    /// without an O(n³) batch recompute (DESIGN.md §8).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use paldx::data::distmat;
+    /// use paldx::pald::{Pald, PaldError};
+    ///
+    /// fn main() -> Result<(), PaldError> {
+    ///     let master = distmat::random_tie_free(12, 4);
+    ///     let mut eng = Pald::builder().build()?.into_incremental(&master.slice_to(10, 10))?;
+    ///     eng.insert_row(&master.row(10)[..10])?;
+    ///     assert_eq!(eng.n(), 11);
+    ///     Ok(())
+    /// }
+    /// ```
+    #[doc(alias = "online")]
+    #[doc(alias = "streaming")]
+    pub fn into_incremental<D: DistanceInput + ?Sized>(
+        self,
+        input: &D,
+    ) -> Result<IncrementalPald, PaldError> {
+        let cap = input.n().saturating_mul(2).max(4);
+        self.into_incremental_with_capacity(input, cap)
+    }
+
+    /// [`Pald::into_incremental`] with an explicit point capacity:
+    /// updates are allocation-free until the engine outgrows it.
+    pub fn into_incremental_with_capacity<D: DistanceInput + ?Sized>(
+        self,
+        input: &D,
+        capacity: usize,
+    ) -> Result<IncrementalPald, PaldError> {
+        IncrementalPald::from_session(self.session, self.validation, input, capacity, None)
+    }
+
+    /// Convert into an incremental engine seeded from a point cloud,
+    /// retaining the coordinates so new points can arrive as raw
+    /// coordinates ([`IncrementalPald::insert_point`]) and be turned
+    /// into distance rows under the seed's metric — bit-identical to a
+    /// batch [`ComputedDistances`] over the full point set.
+    pub fn into_incremental_points(
+        self,
+        points: ComputedDistances,
+    ) -> Result<IncrementalPald, PaldError> {
+        let cap = points.n().saturating_mul(2).max(4);
+        self.into_incremental_points_with_capacity(points, cap)
+    }
+
+    /// [`Pald::into_incremental_points`] with an explicit point
+    /// capacity.
+    pub fn into_incremental_points_with_capacity(
+        self,
+        points: ComputedDistances,
+        capacity: usize,
+    ) -> Result<IncrementalPald, PaldError> {
+        let store = PointStore::new(
+            points.metric(),
+            points.points().cols(),
+            points.points().as_slice(),
+            capacity,
+        );
+        IncrementalPald::from_session(self.session, self.validation, &points, capacity, Some(store))
     }
 
     /// Bytes currently held by the reusable workspace (scratch matrices,

@@ -1,0 +1,921 @@
+//! Incremental PaLD engine: online point insertion and removal with
+//! per-update work far below a batch recompute (DESIGN.md §8).
+//!
+//! The batch kernels pay Θ(n³) triplet comparisons per cohesion matrix.
+//! A serving system whose points arrive and leave one at a time can do
+//! much better, because a single point perturbs the computation in a
+//! structured way:
+//!
+//! * **Focus sizes.**  `u_xy` counts the points inside the local focus
+//!   of pair `(x, y)`.  Inserting `q` changes `u_xy` by exactly
+//!   `[min(d_xq, d_yq) < d_xy]` (`<=` in split mode) — an O(1) test per
+//!   pair, O(n²) total, and *integer-exact* regardless of update order.
+//! * **New support.**  The only new pairs are `(x, q)`; each awards
+//!   support `1/u_xq` across all n+1 points.  These are precisely the
+//!   O(n²) triplets that contain `q`.
+//! * **Reweighted support.**  A pair whose focus gained `q` has its
+//!   weight change from `1/u` to `1/(u+1)`; its previous awards are
+//!   rescaled in place by adding `Δw = 1/(u+1) − 1/u` along the same
+//!   award pattern (the pattern itself depends only on distances among
+//!   the old points, which did not change).
+//!
+//! Removal is the mirror image: retire the `(x, i)` pairs outright,
+//! rescale pairs whose focus loses `i` by `Δw = 1/(u−1) − 1/u`, and
+//! shift the state matrices in place.  Support lives in an f64
+//! accumulator matrix `S` so rescaling is numerically benign; the
+//! ULP-exactness policy — which quantities are bit-exact and which are
+//! tolerance-bounded against batch recompute — is spelled out in
+//! DESIGN.md §8 and enforced by the oracle tests in
+//! `rust/tests/incremental.rs` across all 12 registered kernels.
+//!
+//! The inner update loops are dispatched through [`UpdateKernel`]s that
+//! mirror the batch registry's optimization rungs — a branchy
+//! [`ReferenceUpdate`] and a masked, cache-tiled
+//! [`BlockedBranchFreeUpdate`] — selected from the session plan's
+//! registered kernel metadata, and all scratch state lives in
+//! capacity-padded [`PaddedSquare`] buffers so steady-state updates
+//! perform no heap allocation (counted by [`UpdateStats::grow_events`]).
+
+// The update primitives mirror the batch kernels' wide signatures
+// (distance rows, weight, two support rows, a z-range, tiling, ties).
+#![allow(clippy::too_many_arguments)]
+
+use std::time::Instant;
+
+use crate::core::Mat;
+use crate::pald::api::PaldConfig;
+use crate::pald::blocked::resolve_block;
+use crate::pald::branchfree::count_focus_branchfree;
+use crate::pald::error::PaldError;
+use crate::pald::facade::Validation;
+use crate::pald::input::{metric_pair, DistanceInput};
+use crate::pald::kernel::{kernel_for, Rung};
+use crate::pald::planner::Plan;
+use crate::pald::session::Session;
+use crate::pald::stream::{InsertRow, PaddedSquare, PointStore, UpdateStats};
+use crate::pald::{in_focus, TieMode};
+
+/// Comparison result as a {0, 1} f64 mask (the f64 twin of the batch
+/// kernels' f32 `mask`).
+#[inline(always)]
+fn fm(cond: bool) -> f64 {
+    if cond {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// One flavor of the incremental inner loops: count a pair's focus and
+/// add `w` (which may be a rescaling delta, or negative on removal)
+/// along the pair's support-award pattern.
+///
+/// Both registered flavors produce **bit-identical** f64 sums: every
+/// masked product multiplies `w` by exactly 0, 0.5, or 1, all of which
+/// are exact in floating point, so the engine's result does not depend
+/// on which flavor the plan selects — only its speed does.
+pub trait UpdateKernel: Sync {
+    /// Registry name (`paldx stream` prints it).
+    fn name(&self) -> &'static str;
+
+    /// Focus size `u_xy` of the pair with rows `dx`/`dy` and distance
+    /// `dxy`, counted over all `dx.len()` points.
+    fn count_focus(&self, dx: &[f32], dy: &[f32], dxy: f32, tie: TieMode) -> u32 {
+        count_focus_branchfree(dx, dy, dxy, tie)
+    }
+
+    /// Add `w` into `sx[z]` / `sy[z]` for every `z` in `z_lo..z_hi`
+    /// that the pair `(x, y)` awards support to, following the batch
+    /// pairwise semantics exactly (strict: the closer endpoint wins,
+    /// ties to `y`; split: distance ties split 0.5/0.5).
+    #[allow(clippy::too_many_arguments)]
+    fn award(
+        &self,
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        w: f64,
+        sx: &mut [f64],
+        sy: &mut [f64],
+        z_lo: usize,
+        z_hi: usize,
+        block: usize,
+        tie: TieMode,
+    );
+}
+
+/// Branchy reference update loop — mirrors `naive::pairwise` line for
+/// line, including its strict-mode tie attribution.  The only flavor
+/// defined on strict-mode duplicate points (the masked flavor inherits
+/// the batch branch-free kernels' `0 · ∞` behavior there; see
+/// DESIGN.md §8).
+pub struct ReferenceUpdate;
+
+impl UpdateKernel for ReferenceUpdate {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn award(
+        &self,
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        w: f64,
+        sx: &mut [f64],
+        sy: &mut [f64],
+        z_lo: usize,
+        z_hi: usize,
+        _block: usize,
+        tie: TieMode,
+    ) {
+        for z in z_lo..z_hi {
+            let dxz = dx[z];
+            let dyz = dy[z];
+            if !in_focus(dxz, dyz, dxy, tie) {
+                continue;
+            }
+            match tie {
+                TieMode::Strict => {
+                    if dxz < dyz {
+                        sx[z] += w;
+                    } else {
+                        sy[z] += w;
+                    }
+                }
+                TieMode::Split => {
+                    if dxz < dyz {
+                        sx[z] += w;
+                    } else if dyz < dxz {
+                        sy[z] += w;
+                    } else {
+                        sx[z] += 0.5 * w;
+                        sy[z] += 0.5 * w;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Masked, cache-tiled update loop — the incremental twin of the batch
+/// branch-free/blocked kernels: the z-loop runs in `block`-sized tiles
+/// of two unconditional FMAs, with {0, 0.5, 1} masks replacing the
+/// data-dependent branches.
+pub struct BlockedBranchFreeUpdate;
+
+impl UpdateKernel for BlockedBranchFreeUpdate {
+    fn name(&self) -> &'static str {
+        "blocked-branchfree"
+    }
+
+    fn award(
+        &self,
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        w: f64,
+        sx: &mut [f64],
+        sy: &mut [f64],
+        z_lo: usize,
+        z_hi: usize,
+        block: usize,
+        tie: TieMode,
+    ) {
+        let b = block.max(1);
+        let mut lo = z_lo;
+        while lo < z_hi {
+            let hi = (lo + b).min(z_hi);
+            match tie {
+                TieMode::Strict => {
+                    for z in lo..hi {
+                        let dxz = dx[z];
+                        let dyz = dy[z];
+                        let r = fm((dxz < dxy) | (dyz < dxy));
+                        let s = fm(dxz < dyz);
+                        let rw = r * w;
+                        sx[z] += rw * s;
+                        sy[z] += rw * (1.0 - s);
+                    }
+                }
+                TieMode::Split => {
+                    for z in lo..hi {
+                        let dxz = dx[z];
+                        let dyz = dy[z];
+                        let r = fm((dxz <= dxy) | (dyz <= dxy));
+                        let s = fm(dxz < dyz) + 0.5 * fm(dxz == dyz);
+                        let rw = r * w;
+                        sx[z] += rw * s;
+                        sy[z] += rw * (1.0 - s);
+                    }
+                }
+            }
+            lo = hi;
+        }
+    }
+}
+
+/// The registered update-loop flavors, in rung order.
+pub static UPDATE_KERNELS: [&dyn UpdateKernel; 2] = [&ReferenceUpdate, &BlockedBranchFreeUpdate];
+
+/// Update-loop flavor for a batch kernel's optimization rung: the naive
+/// rung keeps the branchy reference semantics; every higher rung gets
+/// the masked, tiled loop.
+pub fn update_kernel_for(rung: Rung) -> &'static dyn UpdateKernel {
+    match rung {
+        Rung::Naive => &ReferenceUpdate,
+        _ => &BlockedBranchFreeUpdate,
+    }
+}
+
+/// Award `w` for a single known focus member `z` of a pair (the newly
+/// inserted point, which joins at the pair's *new* weight while the old
+/// members are rescaled).  Must agree exactly with [`UpdateKernel::award`].
+#[inline(always)]
+fn award_one(dxz: f32, dyz: f32, w: f64, sx_z: &mut f64, sy_z: &mut f64, tie: TieMode) {
+    match tie {
+        TieMode::Strict => {
+            if dxz < dyz {
+                *sx_z += w;
+            } else {
+                *sy_z += w;
+            }
+        }
+        TieMode::Split => {
+            if dxz < dyz {
+                *sx_z += w;
+            } else if dyz < dxz {
+                *sy_z += w;
+            } else {
+                *sx_z += 0.5 * w;
+                *sy_z += 0.5 * w;
+            }
+        }
+    }
+}
+
+/// Online PaLD engine: maintains the cohesion computation across point
+/// insertions and removals at a small fraction of a batch recompute.
+///
+/// Built from a configured [`Pald`] facade via
+/// [`Pald::into_incremental`] (distance-row ingestion) or
+/// [`Pald::into_incremental_points`] (coordinate ingestion under the
+/// seed input's metric).  The engine owns the facade's [`Session`], so
+/// [`IncrementalPald::batch_recompute`] dispatches the same registered
+/// kernel the facade would have used — that is the oracle the
+/// incremental path is tested against.
+///
+/// State: distances `D` (f32), integer focus sizes `U` (u32, exact),
+/// and unnormalized support `S` (f64), all in capacity-padded buffers
+/// that make steady-state updates allocation-free
+/// ([`UpdateStats::grow_events`] counts the exceptions).
+///
+/// [`Pald`]: crate::pald::Pald
+/// [`Pald::into_incremental`]: crate::pald::Pald::into_incremental
+/// [`Pald::into_incremental_points`]: crate::pald::Pald::into_incremental_points
+///
+/// # Examples
+///
+/// ```
+/// use paldx::data::distmat;
+/// use paldx::pald::{Pald, Threads};
+///
+/// let master = distmat::random_tie_free(20, 7);
+/// let seed = master.slice_to(16, 16);
+/// let mut eng = Pald::builder()
+///     .threads(Threads::Fixed(1))
+///     .build().unwrap()
+///     .into_incremental(&seed).unwrap();
+///
+/// // Stream in the remaining points: O(n²)-style updates, no O(n³) recompute.
+/// for q in 16..20 {
+///     eng.insert_row(&master.row(q)[..q]).unwrap();
+/// }
+/// eng.remove(3).unwrap();
+///
+/// // The incremental state matches a full batch recompute.
+/// let inc = eng.cohesion();
+/// let batch = eng.batch_recompute().unwrap();
+/// assert!(inc.allclose(&batch, 1e-4, 1e-5));
+/// ```
+pub struct IncrementalPald {
+    session: Session,
+    validation: Validation,
+    tie: TieMode,
+    n: usize,
+    d: PaddedSquare<f32>,
+    u: PaddedSquare<u32>,
+    s: PaddedSquare<f64>,
+    points: Option<PointStore>,
+    kern: &'static dyn UpdateKernel,
+    block_cfg: usize,
+    stats: UpdateStats,
+}
+
+impl IncrementalPald {
+    /// Seed an engine from a facade's session + validation policy and an
+    /// initial distance input (the facade methods wrap this).
+    pub(crate) fn from_session<D: DistanceInput + ?Sized>(
+        mut session: Session,
+        validation: Validation,
+        input: &D,
+        capacity: usize,
+        points: Option<PointStore>,
+    ) -> Result<IncrementalPald, PaldError> {
+        let n = input.check_shape()?;
+        if validation == Validation::Strict {
+            input.validate_strict()?;
+        }
+        let cap = capacity.max(n);
+        let mut d = PaddedSquare::with_capacity(cap);
+        d.set_n(n);
+        {
+            let tmp;
+            let dense = match input.as_dense() {
+                Some(m) => m,
+                None => {
+                    tmp = input.to_dense();
+                    &tmp
+                }
+            };
+            for r in 0..n {
+                d.row_mut(r).copy_from_slice(dense.row(r));
+            }
+        }
+        let mut u = PaddedSquare::with_capacity(cap);
+        u.set_n(n);
+        let mut s = PaddedSquare::with_capacity(cap);
+        s.set_n(n);
+        let plan = session.plan_for(n);
+        let kernel = kernel_for(plan.algorithm).ok_or_else(|| PaldError::UnknownAlgorithm {
+            name: plan.algorithm.name().to_string(),
+        })?;
+        let kern = update_kernel_for(kernel.meta().rung);
+        let tie = session.config().tie_mode;
+        let block_cfg = plan.params.block;
+        let mut eng = IncrementalPald {
+            session,
+            validation,
+            tie,
+            n,
+            d,
+            u,
+            s,
+            points,
+            kern,
+            block_cfg,
+            stats: UpdateStats::default(),
+        };
+        eng.seed();
+        Ok(eng)
+    }
+
+    /// One-time O(n³) batch seeding of `U` and `S` through the update
+    /// kernel (the same primitives every later update reuses).
+    fn seed(&mut self) {
+        let n = self.n;
+        let tie = self.tie;
+        let kern = self.kern;
+        let block = resolve_block(self.block_cfg, n);
+        let IncrementalPald { d, u, s, .. } = self;
+        for x in 0..(n - 1) {
+            for y in (x + 1)..n {
+                let dxy = d.at(x, y);
+                let uf = kern.count_focus(d.row(x), d.row(y), dxy, tie);
+                u.set_sym(x, y, uf);
+                let w = 1.0 / f64::from(uf);
+                let (sx, sy) = s.two_rows_mut(x, y);
+                kern.award(d.row(x), d.row(y), dxy, w, sx, sy, 0, n, block, tie);
+            }
+        }
+    }
+
+    /// Points currently held.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Points the engine can hold before its next update must allocate.
+    pub fn capacity(&self) -> usize {
+        self.d.capacity()
+    }
+
+    /// The configuration the owning facade was built with.
+    pub fn config(&self) -> &PaldConfig {
+        self.session.config()
+    }
+
+    /// Distance-tie handling the engine maintains.
+    pub fn tie_mode(&self) -> TieMode {
+        self.tie
+    }
+
+    /// Name of the update-loop flavor the plan selected.
+    pub fn update_kernel(&self) -> &'static str {
+        self.kern.name()
+    }
+
+    /// The session plan for the current problem size (the batch kernel
+    /// [`IncrementalPald::batch_recompute`] dispatches).
+    pub fn plan(&mut self) -> Plan {
+        self.session.plan_for(self.n)
+    }
+
+    /// Update accounting (inserts, removes, reweighted pairs, growth
+    /// events, timings).
+    pub fn stats(&self) -> UpdateStats {
+        self.stats
+    }
+
+    /// Bytes held by the engine's incremental state (`D`, `U`, `S`, and
+    /// any retained points) — constant across steady-state updates.
+    pub fn state_bytes(&self) -> usize {
+        self.d.allocated_bytes()
+            + self.u.allocated_bytes()
+            + self.s.allocated_bytes()
+            + self.points.as_ref().map_or(0, |p| p.allocated_bytes())
+    }
+
+    /// [`IncrementalPald::state_bytes`] plus the owned session's
+    /// reusable workspace.
+    pub fn workspace_bytes(&self) -> usize {
+        self.state_bytes() + self.session.workspace_bytes()
+    }
+
+    /// Grow capacity ahead of time so the next `additional` insertions
+    /// stay allocation-free (not counted as a growth event).
+    pub fn reserve(&mut self, additional: usize) {
+        let want = self.n + additional;
+        self.d.ensure_capacity(want);
+        self.u.ensure_capacity(want);
+        self.s.ensure_capacity(want);
+        if let Some(ps) = &mut self.points {
+            ps.reserve(want);
+        }
+    }
+
+    /// Insert a point given its distances to the points currently held
+    /// (`row.len() == self.n()`, index order) — equivalently, the tail a
+    /// condensed matrix grows by.  Returns the new point's index.
+    ///
+    /// Points-seeded engines
+    /// ([`Pald::into_incremental_points`](crate::pald::Pald::into_incremental_points))
+    /// reject raw rows with [`PaldError::PointStoreMismatch`] — use
+    /// [`IncrementalPald::insert_point`] there, so the retained
+    /// coordinates stay aligned with the distance state.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use paldx::data::distmat;
+    /// use paldx::pald::Pald;
+    ///
+    /// let master = distmat::random_tie_free(9, 3);
+    /// let mut eng = Pald::builder().build().unwrap()
+    ///     .into_incremental(&master.slice_to(8, 8)).unwrap();
+    /// let idx = eng.insert_row(&master.row(8)[..8]).unwrap();
+    /// assert_eq!(idx, 8);
+    /// assert_eq!(eng.n(), 9);
+    /// ```
+    pub fn insert_row(&mut self, row: &[f32]) -> Result<usize, PaldError> {
+        self.insert(InsertRow::Distances(row))
+    }
+
+    /// Insert a point given its coordinates; requires the engine to
+    /// have been seeded with points
+    /// ([`Pald::into_incremental_points`](crate::pald::Pald::into_incremental_points)),
+    /// whose metric turns the coordinates into a distance row
+    /// bit-identical to the batch input's.  Returns the new index.
+    pub fn insert_point(&mut self, point: &[f32]) -> Result<usize, PaldError> {
+        self.insert(InsertRow::Point(point))
+    }
+
+    /// Insert one point in either [`InsertRow`] form.
+    ///
+    /// Cost: O(n) focus-membership tests per existing pair plus O(n)
+    /// support awards per new pair — the O(n²) triplets containing the
+    /// new point — plus one O(n) reweight sweep per existing pair whose
+    /// focus the point joins (see DESIGN.md §8).  A failed insertion
+    /// (bad shape, non-finite entry under strict validation) leaves the
+    /// engine untouched.
+    pub fn insert(&mut self, row: InsertRow<'_>) -> Result<usize, PaldError> {
+        let t0 = Instant::now();
+        let m = self.n;
+        let strict = self.validation == Validation::Strict;
+
+        // ---- Validate before touching any state. ----
+        match row {
+            InsertRow::Distances(r) => {
+                if self.points.is_some() {
+                    // A raw row would desynchronize the retained
+                    // coordinates from the distance state.
+                    return Err(PaldError::PointStoreMismatch {
+                        hint: "this engine was seeded with points; use insert_point so the \
+                               retained coordinates stay aligned with the distances",
+                    });
+                }
+                if r.len() != m {
+                    return Err(PaldError::ShapeMismatch {
+                        expected_rows: 1,
+                        expected_cols: m,
+                        rows: 1,
+                        cols: r.len(),
+                    });
+                }
+                if strict {
+                    for (j, &v) in r.iter().enumerate() {
+                        if !v.is_finite() {
+                            return Err(PaldError::NotFinite { i: m, j });
+                        }
+                        if v < 0.0 {
+                            return Err(PaldError::NegativeDistance { i: m, j, value: v });
+                        }
+                    }
+                }
+            }
+            InsertRow::Point(p) => {
+                let ps = self.points.as_ref().ok_or(PaldError::NoPointStore {
+                    hint: "seed with Pald::into_incremental_points to enable coordinate rows",
+                })?;
+                if p.len() != ps.dim() {
+                    return Err(PaldError::ShapeMismatch {
+                        expected_rows: 1,
+                        expected_cols: ps.dim(),
+                        rows: 1,
+                        cols: p.len(),
+                    });
+                }
+                if strict {
+                    for (j, &v) in p.iter().enumerate() {
+                        if !v.is_finite() {
+                            return Err(PaldError::NotFinite { i: m, j });
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- Grow storage if needed (steady state: never). ----
+        let want = m + 1;
+        let mut grew = self.d.ensure_capacity(want)
+            | self.u.ensure_capacity(want)
+            | self.s.ensure_capacity(want);
+        self.d.expand();
+        self.u.expand();
+        self.s.expand();
+
+        // ---- Ingest the new distance row + mirrored column. ----
+        match row {
+            InsertRow::Distances(r) => {
+                for (x, &v) in r.iter().enumerate() {
+                    self.d.set(m, x, v);
+                    self.d.set(x, m, v);
+                }
+            }
+            InsertRow::Point(p) => {
+                let ps = self.points.as_mut().expect("checked above");
+                for x in 0..m {
+                    let v = metric_pair(ps.point(x), p, ps.metric());
+                    self.d.set(m, x, v);
+                    self.d.set(x, m, v);
+                }
+                grew |= ps.push(p);
+            }
+        }
+        self.d.set(m, m, 0.0);
+        if grew {
+            self.stats.grow_events += 1;
+        }
+
+        // ---- Incremental update of U and S. ----
+        let tie = self.tie;
+        let kern = self.kern;
+        let nn = m + 1;
+        let block = resolve_block(self.block_cfg, nn);
+        let mut reweighted = 0u64;
+        {
+            let IncrementalPald { d, u, s, .. } = self;
+            // Existing pairs whose focus gains q: bump u, rescale the
+            // old members by Δw, and award q at the new weight.
+            for x in 0..m {
+                for y in (x + 1)..m {
+                    let dxy = d.at(x, y);
+                    let (dxq, dyq) = (d.at(x, m), d.at(y, m));
+                    if !in_focus(dxq, dyq, dxy, tie) {
+                        continue;
+                    }
+                    let u_old = u.at(x, y);
+                    let u_new = u_old + 1;
+                    u.set_sym(x, y, u_new);
+                    let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
+                    let (sx, sy) = s.two_rows_mut(x, y);
+                    kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, m, block, tie);
+                    award_one(dxq, dyq, 1.0 / f64::from(u_new), &mut sx[m], &mut sy[m], tie);
+                    reweighted += 1;
+                }
+            }
+            // New pairs (x, q): full focus count + award over all nn
+            // points — the O(n²) triplets containing q.
+            for x in 0..m {
+                let dxy = d.at(x, m);
+                let uf = kern.count_focus(d.row(x), d.row(m), dxy, tie);
+                u.set_sym(x, m, uf);
+                let w = 1.0 / f64::from(uf);
+                let (sx, sq) = s.two_rows_mut(x, m);
+                kern.award(d.row(x), d.row(m), dxy, w, sx, sq, 0, nn, block, tie);
+            }
+        }
+        self.n = nn;
+        self.stats.inserts += 1;
+        self.stats.reweighted_pairs += reweighted;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.last_update_s = dt;
+        self.stats.total_update_s += dt;
+        Ok(m)
+    }
+
+    /// Remove the point at `index`, shifting later indices down by one
+    /// (order-preserving).  Errors with [`PaldError::TooSmall`] when the
+    /// removal would leave fewer than 2 points.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use paldx::data::distmat;
+    /// use paldx::pald::{Pald, PaldError};
+    ///
+    /// let d = distmat::random_tie_free(6, 5);
+    /// let mut eng = Pald::builder().build().unwrap().into_incremental(&d).unwrap();
+    /// eng.remove(2).unwrap();
+    /// assert_eq!(eng.n(), 5);
+    /// assert!(matches!(eng.remove(5), Err(PaldError::IndexOutOfBounds { .. })));
+    /// ```
+    pub fn remove(&mut self, index: usize) -> Result<(), PaldError> {
+        let t0 = Instant::now();
+        let n = self.n;
+        let i = index;
+        if i >= n {
+            return Err(PaldError::IndexOutOfBounds { index: i, n });
+        }
+        if n == 2 {
+            return Err(PaldError::TooSmall { n: n - 1 });
+        }
+        let tie = self.tie;
+        let kern = self.kern;
+        let block = resolve_block(self.block_cfg, n);
+        let mut reweighted = 0u64;
+        {
+            let IncrementalPald { d, u, s, .. } = self;
+            // Retire every pair (x, i) outright: subtract its awards at
+            // the weight it currently holds.
+            for x in 0..n {
+                if x == i {
+                    continue;
+                }
+                let dxy = d.at(x, i);
+                let w = -(1.0 / f64::from(u.at(x, i)));
+                let (sx, si) = s.two_rows_mut(x, i);
+                kern.award(d.row(x), d.row(i), dxy, w, sx, si, 0, n, block, tie);
+            }
+            // Pairs whose focus loses i: bump u down and rescale the
+            // surviving members (i's own column is about to vanish, so
+            // its award needs no correction).
+            for x in 0..n {
+                if x == i {
+                    continue;
+                }
+                for y in (x + 1)..n {
+                    if y == i {
+                        continue;
+                    }
+                    let dxy = d.at(x, y);
+                    if !in_focus(d.at(x, i), d.at(y, i), dxy, tie) {
+                        continue;
+                    }
+                    let u_old = u.at(x, y);
+                    let u_new = u_old - 1;
+                    u.set_sym(x, y, u_new);
+                    let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
+                    let (sx, sy) = s.two_rows_mut(x, y);
+                    kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, i, block, tie);
+                    kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, i + 1, n, block, tie);
+                    reweighted += 1;
+                }
+            }
+            d.remove_shift(i);
+            u.remove_shift(i);
+            s.remove_shift(i);
+        }
+        if let Some(ps) = &mut self.points {
+            ps.remove_shift(i);
+        }
+        self.n = n - 1;
+        self.stats.removes += 1;
+        self.stats.reweighted_pairs += reweighted;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.last_update_s = dt;
+        self.stats.total_update_s += dt;
+        Ok(())
+    }
+
+    /// The current cohesion matrix (Eq. 3.3-normalized), freshly
+    /// allocated — use [`IncrementalPald::cohesion_into`] on hot paths.
+    pub fn cohesion(&self) -> Mat {
+        let mut out = Mat::zeros(self.n, self.n);
+        self.cohesion_into(&mut out).expect("freshly sized output");
+        out
+    }
+
+    /// Write the current cohesion matrix into a caller-owned `n x n`
+    /// buffer without allocating: `C = S / (n − 1)` cast to f32.
+    pub fn cohesion_into(&self, out: &mut Mat) -> Result<(), PaldError> {
+        let n = self.n;
+        if out.rows() != n || out.cols() != n {
+            return Err(PaldError::ShapeMismatch {
+                expected_rows: n,
+                expected_cols: n,
+                rows: out.rows(),
+                cols: out.cols(),
+            });
+        }
+        let scale = 1.0 / (n as f64 - 1.0);
+        for x in 0..n {
+            let srow = self.s.row(x);
+            let orow = out.row_mut(x);
+            for z in 0..n {
+                orow[z] = (srow[z] * scale) as f32;
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy of the maintained distance matrix.
+    pub fn distances(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n, n);
+        for r in 0..n {
+            out.row_mut(r).copy_from_slice(self.d.row(r));
+        }
+        out
+    }
+
+    /// Copy of the maintained focus-size matrix `U` (integer-exact
+    /// against batch, asserted by the oracle tests; diagonal 0).
+    pub fn focus_sizes(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n, n);
+        for r in 0..n {
+            let urow = self.u.row(r);
+            let orow = out.row_mut(r);
+            for c in 0..n {
+                orow[c] = urow[c] as f32;
+            }
+        }
+        out
+    }
+
+    /// Full batch recompute of the current points through the owned
+    /// session's registered kernel — the oracle the incremental path is
+    /// verified against (and an escape hatch to re-anchor `S` if a
+    /// caller ever wants to shed accumulated f64 rounding).
+    pub fn batch_recompute(&mut self) -> Result<Mat, PaldError> {
+        let d = self.distances();
+        self.session.compute(&d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::api::Algorithm;
+    use crate::pald::naive;
+
+    fn session(alg: Algorithm) -> Session {
+        Session::new(PaldConfig { algorithm: alg, threads: 1, ..Default::default() }).unwrap()
+    }
+
+    fn seeded(alg: Algorithm, d: &Mat, cap: usize) -> IncrementalPald {
+        IncrementalPald::from_session(session(alg), Validation::Strict, d, cap, None).unwrap()
+    }
+
+    #[test]
+    fn update_kernels_award_bit_identically() {
+        let n = 33;
+        let d = distmat::random_tie_free(n, 77);
+        let dtied = distmat::random_tied(n, 78, 4);
+        for (dist, tie) in [(&d, TieMode::Strict), (&dtied, TieMode::Split)] {
+            for x in 0..4 {
+                for y in (x + 1)..6 {
+                    let dxy = dist[(x, y)];
+                    let mut ra = vec![0.0f64; n];
+                    let mut rb = vec![0.0f64; n];
+                    let mut ba = vec![0.0f64; n];
+                    let mut bb = vec![0.0f64; n];
+                    let w = 1.0 / 7.0;
+                    ReferenceUpdate.award(
+                        dist.row(x), dist.row(y), dxy, w, &mut ra, &mut rb, 0, n, 8, tie,
+                    );
+                    BlockedBranchFreeUpdate.award(
+                        dist.row(x), dist.row(y), dxy, w, &mut ba, &mut bb, 0, n, 8, tie,
+                    );
+                    assert_eq!(ra, ba, "({x},{y}) {tie:?}");
+                    assert_eq!(rb, bb, "({x},{y}) {tie:?}");
+                    assert_eq!(
+                        ReferenceUpdate.count_focus(dist.row(x), dist.row(y), dxy, tie),
+                        BlockedBranchFreeUpdate.count_focus(dist.row(x), dist.row(y), dxy, tie),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seed_matches_naive_pairwise() {
+        for tie in [TieMode::Strict, TieMode::Split] {
+            let n = 21;
+            let d = distmat::random_tie_free(n, 5);
+            let cfg = PaldConfig {
+                algorithm: Algorithm::OptimizedPairwise,
+                tie_mode: tie,
+                threads: 1,
+                ..Default::default()
+            };
+            let eng = IncrementalPald::from_session(
+                Session::new(cfg).unwrap(),
+                Validation::Strict,
+                &d,
+                n,
+                None,
+            )
+            .unwrap();
+            let want = naive::pairwise(&d, tie);
+            let got = eng.cohesion();
+            assert!(got.allclose(&want, 1e-5, 1e-6), "maxdiff={}", got.max_abs_diff(&want));
+            let u_want = naive::focus_sizes(&d, tie);
+            assert_eq!(eng.focus_sizes().as_slice(), u_want.as_slice(), "U must be exact");
+        }
+    }
+
+    #[test]
+    fn single_insert_matches_batch() {
+        let master = distmat::random_tie_free(18, 42);
+        let mut eng = seeded(Algorithm::OptimizedTriplet, &master.slice_to(17, 17), 20);
+        let idx = eng.insert_row(&master.row(17)[..17]).unwrap();
+        assert_eq!(idx, 17);
+        assert_eq!(eng.n(), 18);
+        let want = naive::pairwise(&master, TieMode::Strict);
+        let got = eng.cohesion();
+        assert!(got.allclose(&want, 1e-4, 1e-5), "maxdiff={}", got.max_abs_diff(&want));
+        let u_want = naive::focus_sizes(&master, TieMode::Strict);
+        assert_eq!(eng.focus_sizes().as_slice(), u_want.as_slice());
+    }
+
+    #[test]
+    fn single_remove_matches_batch_of_survivors() {
+        let master = distmat::random_tie_free(16, 9);
+        let mut eng = seeded(Algorithm::OptimizedPairwise, &master, 16);
+        eng.remove(4).unwrap();
+        assert_eq!(eng.n(), 15);
+        // Survivors keep their order: old indices 0..16 minus 4.
+        let keep: Vec<usize> = (0..16).filter(|&k| k != 4).collect();
+        let reduced = Mat::from_fn(15, 15, |a, b| master[(keep[a], keep[b])]);
+        let want = naive::pairwise(&reduced, TieMode::Strict);
+        let got = eng.cohesion();
+        assert!(got.allclose(&want, 1e-4, 1e-5), "maxdiff={}", got.max_abs_diff(&want));
+        let u_want = naive::focus_sizes(&reduced, TieMode::Strict);
+        assert_eq!(eng.focus_sizes().as_slice(), u_want.as_slice());
+    }
+
+    #[test]
+    fn failed_insert_leaves_engine_untouched() {
+        let d = distmat::random_tie_free(8, 1);
+        let mut eng = seeded(Algorithm::OptimizedPairwise, &d, 10);
+        let before = eng.cohesion();
+        assert!(matches!(
+            eng.insert_row(&[1.0; 5]),
+            Err(PaldError::ShapeMismatch { expected_cols: 8, cols: 5, .. })
+        ));
+        let mut bad = vec![1.0f32; 8];
+        bad[3] = f32::NAN;
+        assert!(matches!(eng.insert_row(&bad), Err(PaldError::NotFinite { i: 8, j: 3 })));
+        bad[3] = -2.0;
+        assert!(matches!(
+            eng.insert_row(&bad),
+            Err(PaldError::NegativeDistance { i: 8, j: 3, .. })
+        ));
+        assert_eq!(eng.n(), 8);
+        assert_eq!(eng.cohesion().as_slice(), before.as_slice());
+        assert_eq!(eng.stats().inserts, 0);
+    }
+
+    #[test]
+    fn insert_point_requires_a_point_store() {
+        let d = distmat::random_tie_free(6, 2);
+        let mut eng = seeded(Algorithm::OptimizedPairwise, &d, 8);
+        assert!(matches!(
+            eng.insert_point(&[0.0, 1.0]),
+            Err(PaldError::NoPointStore { .. })
+        ));
+    }
+}

@@ -113,10 +113,12 @@ impl DenseMatrix {
         Ok(DenseMatrix(m))
     }
 
+    /// Borrow the wrapped matrix.
     pub fn matrix(&self) -> &Mat {
         &self.0
     }
 
+    /// Unwrap the matrix.
     pub fn into_matrix(self) -> Mat {
         self.0
     }
@@ -282,6 +284,7 @@ pub enum Metric {
 }
 
 impl Metric {
+    /// CLI/config name of the metric.
     pub fn name(&self) -> &'static str {
         match self {
             Metric::Euclidean => "euclidean",
@@ -290,6 +293,8 @@ impl Metric {
         }
     }
 
+    /// Parse a CLI/config metric name (`l1`/`l2` aliases included) with
+    /// a typed error.
     pub fn parse(s: &str) -> Result<Metric, PaldError> {
         match s {
             "euclidean" | "l2" => Ok(Metric::Euclidean),
@@ -317,46 +322,54 @@ impl ComputedDistances {
         Ok(ComputedDistances { points, metric })
     }
 
+    /// The wrapped `n x dim` point cloud.
     pub fn points(&self) -> &Mat {
         &self.points
     }
 
+    /// The metric distances are computed under.
     pub fn metric(&self) -> Metric {
         self.metric
     }
 
     fn pair(&self, x: usize, y: usize) -> f32 {
-        let px = self.points.row(x);
-        let py = self.points.row(y);
-        match self.metric {
-            // Same accumulation order as `distmat::euclidean`, so a
-            // ComputedDistances input is bit-identical to the dense
-            // matrix that function would build.
-            Metric::Euclidean => {
-                let mut s = 0.0f64;
-                for (a, b) in px.iter().zip(py) {
-                    let diff = (a - b) as f64;
-                    s += diff * diff;
-                }
-                s.sqrt() as f32
+        metric_pair(self.points.row(x), self.points.row(y), self.metric)
+    }
+}
+
+/// Distance between two coordinate slices under `metric` — the one
+/// arithmetic shared by [`ComputedDistances`] and the incremental
+/// engine's point ingestion, so streamed and batch distances are
+/// bit-identical.
+pub(crate) fn metric_pair(px: &[f32], py: &[f32], metric: Metric) -> f32 {
+    match metric {
+        // Same accumulation order as `distmat::euclidean`, so a
+        // ComputedDistances input is bit-identical to the dense
+        // matrix that function would build.
+        Metric::Euclidean => {
+            let mut s = 0.0f64;
+            for (a, b) in px.iter().zip(py) {
+                let diff = (a - b) as f64;
+                s += diff * diff;
             }
-            Metric::Manhattan => {
-                let mut s = 0.0f64;
-                for (a, b) in px.iter().zip(py) {
-                    s += (a - b).abs() as f64;
-                }
-                s as f32
+            s.sqrt() as f32
+        }
+        Metric::Manhattan => {
+            let mut s = 0.0f64;
+            for (a, b) in px.iter().zip(py) {
+                s += (a - b).abs() as f64;
             }
-            Metric::Cosine => {
-                let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
-                for (a, b) in px.iter().zip(py) {
-                    dot += (*a as f64) * (*b as f64);
-                    na += (*a as f64) * (*a as f64);
-                    nb += (*b as f64) * (*b as f64);
-                }
-                let denom = (na.sqrt() * nb.sqrt()).max(1e-30);
-                ((1.0 - dot / denom).max(0.0)) as f32
+            s as f32
+        }
+        Metric::Cosine => {
+            let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+            for (a, b) in px.iter().zip(py) {
+                dot += (*a as f64) * (*b as f64);
+                na += (*a as f64) * (*a as f64);
+                nb += (*b as f64) * (*b as f64);
             }
+            let denom = (na.sqrt() * nb.sqrt()).max(1e-30);
+            ((1.0 - dot / denom).max(0.0)) as f32
         }
     }
 }

@@ -24,25 +24,35 @@ use crate::sim::traffic;
 /// B's combination of both).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Family {
+    /// Algorithm 1: per-pair focus count + support pass.
     Pairwise,
+    /// Algorithm 2: distinct-triplet iteration in two passes.
     Triplet,
+    /// Appendix B: triplet focus pass + pairwise cohesion pass.
     Hybrid,
 }
 
 /// Optimization rung on the Figure 3 ladder.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Rung {
+    /// Paper pseudocode verbatim (Figure 3 baseline).
     Naive,
+    /// One-level cache blocking only.
     Blocked,
+    /// Branch avoidance (masked FMAs) only.
     BranchFree,
+    /// Blocking + branch-free + integer U + reciprocals.
     Optimized,
+    /// Shared-memory parallel on top of the optimized rung.
     Parallel,
 }
 
 /// Static capability metadata for one kernel.
 #[derive(Clone, Copy, Debug)]
 pub struct KernelMeta {
+    /// Which of the paper's formulations the kernel implements.
     pub family: Family,
+    /// Optimization rung on the Figure 3 ladder.
     pub rung: Rung,
     /// Uses worker threads (`ExecParams::threads`).
     pub parallel: bool,
@@ -56,11 +66,13 @@ pub struct KernelMeta {
 /// Resolved execution parameters handed to a kernel.
 #[derive(Clone, Copy, Debug)]
 pub struct ExecParams {
+    /// Distance-tie handling.
     pub tie: TieMode,
     /// Pairwise block size / triplet focus-pass block size b̂ (0 = default).
     pub block: usize,
     /// Triplet cohesion-pass block size b̃ (0 = same as `block`).
     pub block2: usize,
+    /// Worker threads for the parallel kernels.
     pub threads: usize,
 }
 
@@ -153,6 +165,7 @@ macro_rules! meta {
     };
 }
 
+/// Algorithm 1 verbatim (Figure 3 baseline).
 pub struct NaivePairwiseK;
 impl CohesionKernel for NaivePairwiseK {
     fn algorithm(&self) -> Algorithm {
@@ -172,6 +185,7 @@ impl CohesionKernel for NaivePairwiseK {
     }
 }
 
+/// Algorithm 2 verbatim (Figure 3 baseline).
 pub struct NaiveTripletK;
 impl CohesionKernel for NaiveTripletK {
     fn algorithm(&self) -> Algorithm {
@@ -191,6 +205,7 @@ impl CohesionKernel for NaiveTripletK {
     }
 }
 
+/// Pairwise + one-level cache blocking.
 pub struct BlockedPairwiseK;
 impl CohesionKernel for BlockedPairwiseK {
     fn algorithm(&self) -> Algorithm {
@@ -210,6 +225,7 @@ impl CohesionKernel for BlockedPairwiseK {
     }
 }
 
+/// Triplet + two-level cache blocking (b̂, b̃).
 pub struct BlockedTripletK;
 impl CohesionKernel for BlockedTripletK {
     fn algorithm(&self) -> Algorithm {
@@ -229,6 +245,7 @@ impl CohesionKernel for BlockedTripletK {
     }
 }
 
+/// Pairwise + branch avoidance (masked FMAs).
 pub struct BranchFreePairwiseK;
 impl CohesionKernel for BranchFreePairwiseK {
     fn algorithm(&self) -> Algorithm {
@@ -248,6 +265,7 @@ impl CohesionKernel for BranchFreePairwiseK {
     }
 }
 
+/// Triplet + branch avoidance (masked FMAs).
 pub struct BranchFreeTripletK;
 impl CohesionKernel for BranchFreeTripletK {
     fn algorithm(&self) -> Algorithm {
@@ -267,6 +285,7 @@ impl CohesionKernel for BranchFreeTripletK {
     }
 }
 
+/// Pairwise, fully optimized (blocked + branch-free + integer U).
 pub struct OptimizedPairwiseK;
 impl CohesionKernel for OptimizedPairwiseK {
     fn algorithm(&self) -> Algorithm {
@@ -286,6 +305,7 @@ impl CohesionKernel for OptimizedPairwiseK {
     }
 }
 
+/// Triplet, fully optimized (blocked + branch-free + reciprocals).
 pub struct OptimizedTripletK;
 impl CohesionKernel for OptimizedTripletK {
     fn algorithm(&self) -> Algorithm {
@@ -305,6 +325,7 @@ impl CohesionKernel for OptimizedTripletK {
     }
 }
 
+/// Parallel pairwise (loop parallelism + reductions).
 pub struct ParallelPairwiseK;
 impl CohesionKernel for ParallelPairwiseK {
     fn algorithm(&self) -> Algorithm {
@@ -324,6 +345,7 @@ impl CohesionKernel for ParallelPairwiseK {
     }
 }
 
+/// Parallel triplet (task graph with tile locks).
 pub struct ParallelTripletK;
 impl CohesionKernel for ParallelTripletK {
     fn algorithm(&self) -> Algorithm {
@@ -359,6 +381,7 @@ impl CohesionKernel for ParallelTripletK {
     }
 }
 
+/// Appendix B hybrid: triplet focus pass + pairwise cohesion pass.
 pub struct HybridK;
 impl CohesionKernel for HybridK {
     fn algorithm(&self) -> Algorithm {
@@ -386,6 +409,7 @@ impl CohesionKernel for HybridK {
     }
 }
 
+/// Parallel hybrid (column-partitioned cohesion pass).
 pub struct ParallelHybridK;
 impl CohesionKernel for ParallelHybridK {
     fn algorithm(&self) -> Algorithm {

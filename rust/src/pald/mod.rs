@@ -27,6 +27,15 @@
 //! [`CohesionResult`] carrying the plan / phase times / lazy analysis
 //! accessors, and [`PaldError`] everywhere a string error used to be.
 //! The free functions `compute_cohesion*` remain as deprecated wrappers.
+//!
+//! For serving workloads whose points arrive and leave one at a time,
+//! [`Pald::into_incremental`] converts the facade into an
+//! [`IncrementalPald`] engine (DESIGN.md §8): `insert`/`remove` maintain
+//! the focus sizes and cohesion contributions in place — the O(n²)
+//! triplets touching the changed point plus a data-dependent reweight
+//! sweep — instead of re-running an O(n³) batch kernel, with
+//! allocation-free steady-state updates ([`stream`] holds the support
+//! types) and a batch-recompute oracle (`paldx stream --check`).
 
 pub mod api;
 pub mod blocked;
@@ -34,6 +43,7 @@ pub mod hybrid;
 pub mod branchfree;
 pub mod error;
 pub mod facade;
+pub mod incremental;
 pub mod input;
 pub mod kernel;
 pub mod naive;
@@ -44,6 +54,7 @@ pub mod parallel_triplet;
 pub mod planner;
 pub mod result;
 pub mod session;
+pub mod stream;
 pub mod workspace;
 
 #[allow(deprecated)] // legacy one-shot wrappers, kept for migration
@@ -51,11 +62,13 @@ pub use api::{compute_cohesion, compute_cohesion_into, compute_cohesion_timed};
 pub use api::{plan_for, validate_distances, Algorithm, Backend, PaldConfig, PhaseTimes};
 pub use error::PaldError;
 pub use facade::{BlockSize, Pald, PaldBuilder, Threads, Validation};
+pub use incremental::{update_kernel_for, IncrementalPald, UpdateKernel, UPDATE_KERNELS};
 pub use input::{ComputedDistances, CondensedMatrix, DenseMatrix, DistanceInput, Metric};
 pub use kernel::{kernel_by_name, kernel_for, CohesionKernel, ExecParams, KernelMeta, REGISTRY};
 pub use planner::{Plan, Planner};
 pub use result::CohesionResult;
 pub use session::Session;
+pub use stream::{InsertRow, LatencyTrace, UpdateStats};
 pub use workspace::Workspace;
 
 use crate::core::Mat;
@@ -76,6 +89,7 @@ pub enum TieMode {
 }
 
 impl TieMode {
+    /// CLI/config name of the mode.
     pub fn name(&self) -> &'static str {
         match self {
             TieMode::Strict => "strict",

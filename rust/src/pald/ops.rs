@@ -69,6 +69,7 @@ pub fn pairwise_flops_leading(n: f64) -> f64 {
     3.0 * n * n * n
 }
 
+/// Leading-order triplet flop estimate (Theorem 4.2): ≈ 4/3 n³.
 pub fn triplet_flops_leading(n: f64) -> f64 {
     4.0 / 3.0 * n * n * n
 }

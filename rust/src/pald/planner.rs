@@ -18,6 +18,7 @@ use crate::sim::machine::MachineParams;
 pub struct Plan {
     /// Concrete kernel (never [`Algorithm::Auto`]).
     pub algorithm: Algorithm,
+    /// Resolved execution parameters (ties, blocks, threads).
     pub params: ExecParams,
     /// Machine-model prediction in seconds (`None` when the user pinned
     /// the algorithm and no estimate was computed).
@@ -70,6 +71,7 @@ impl Plan {
 
 /// Kernel selector over a machine profile.
 pub struct Planner {
+    /// The machine profile costs are predicted under.
     pub machine: MachineParams,
 }
 
@@ -85,6 +87,7 @@ impl Planner {
         Planner { machine: MachineParams::calibrated(true) }
     }
 
+    /// Planner over an explicit machine profile.
     pub fn with_machine(machine: MachineParams) -> Planner {
         Planner { machine }
     }

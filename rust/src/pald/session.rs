@@ -40,6 +40,7 @@ impl Session {
         Ok(Session { cfg, ws: Workspace::new(), plan: None, dense: Mat::zeros(0, 0) })
     }
 
+    /// The configuration this session was built with.
     pub fn config(&self) -> &PaldConfig {
         &self.cfg
     }

@@ -1,0 +1,487 @@
+//! Support types for the incremental (streaming) PaLD engine
+//! (DESIGN.md §8).
+//!
+//! [`IncrementalPald`](crate::pald::IncrementalPald) maintains three
+//! square state matrices — distances `D` (f32), integer focus sizes `U`
+//! (u32), and unnormalized support `S` (f64) — across point insertions
+//! and removals.  A plain [`Mat`](crate::core::Mat) would force a full
+//! reallocation-and-copy on every size change, so the state lives in
+//! [`PaddedSquare`] buffers: capacity-padded row-major storage with a
+//! fixed row stride, where growing by one point only exposes (and
+//! zeroes) one new row and column, and removing a point shifts rows and
+//! columns in place.  Neither operation allocates while `n` stays within
+//! capacity, which is what makes the engine's zero-allocation
+//! steady-state claim checkable: every buffer growth increments
+//! [`UpdateStats::grow_events`], and the oracle tests assert the counter
+//! stays at zero once capacity is reserved.
+//!
+//! The other types here are the ingestion and accounting surface:
+//! [`InsertRow`] (the two ways a new point can arrive), [`PointStore`]
+//! (retained coordinates for metric-based ingestion), [`UpdateStats`]
+//! (per-engine counters), and [`LatencyTrace`] (per-update timings for
+//! `paldx stream` and the `BENCH_stream.json` report).
+
+use crate::bench::Stats;
+use crate::pald::input::Metric;
+
+/// Capacity-padded square matrix with a fixed row stride.
+///
+/// Rows are stored at stride `cap` (not `n`), so growing the logical
+/// size by one point touches only the newly exposed row and column, and
+/// removing a point is an in-place `copy_within` shuffle — no
+/// reallocation happens until `n` would exceed `cap`.
+///
+/// # Examples
+///
+/// ```
+/// use paldx::pald::stream::PaddedSquare;
+///
+/// let mut m: PaddedSquare<f64> = PaddedSquare::with_capacity(4);
+/// m.set_n(2);
+/// m.set_sym(0, 1, 2.5);
+/// m.expand(); // n = 3, new row/column zeroed, no reallocation
+/// assert_eq!(m.n(), 3);
+/// assert_eq!(m.at(1, 0), 2.5);
+/// assert_eq!(m.at(2, 1), 0.0);
+/// m.remove_shift(0); // drop point 0, shifting 1..n up/left
+/// assert_eq!(m.n(), 2);
+/// assert_eq!(m.at(1, 0), 0.0);
+/// ```
+pub struct PaddedSquare<T> {
+    n: usize,
+    cap: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> PaddedSquare<T> {
+    /// Zeroed buffer able to hold up to `cap x cap` without reallocating.
+    pub fn with_capacity(cap: usize) -> PaddedSquare<T> {
+        PaddedSquare { n: 0, cap, data: vec![T::default(); cap * cap] }
+    }
+
+    /// Current logical size (points held).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Points the buffer can hold before reallocating.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Set the logical size directly (seeding only — assumes the exposed
+    /// region is about to be overwritten or was never dirtied).
+    pub fn set_n(&mut self, n: usize) {
+        assert!(n <= self.cap, "set_n({n}) beyond capacity {}", self.cap);
+        self.n = n;
+    }
+
+    /// Element at `(i, j)`.
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.n && j < self.n);
+        self.data[i * self.cap + j]
+    }
+
+    /// Write element `(i, j)`.
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.n && j < self.n);
+        self.data[i * self.cap + j] = v;
+    }
+
+    /// Write `(i, j)` and `(j, i)` (the state matrices are symmetric).
+    #[inline(always)]
+    pub fn set_sym(&mut self, i: usize, j: usize, v: T) {
+        self.set(i, j, v);
+        self.set(j, i, v);
+    }
+
+    /// Row `i` as a slice of the current logical length `n`.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[T] {
+        debug_assert!(i < self.n);
+        &self.data[i * self.cap..i * self.cap + self.n]
+    }
+
+    /// Mutable row `i` of logical length `n`.
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        debug_assert!(i < self.n);
+        &mut self.data[i * self.cap..i * self.cap + self.n]
+    }
+
+    /// Two disjoint mutable rows (`a != b`) — the incremental update
+    /// loops write the support rows of both pair endpoints in one pass,
+    /// mirroring [`Mat::two_rows_mut`](crate::core::Mat::two_rows_mut).
+    pub fn two_rows_mut(&mut self, a: usize, b: usize) -> (&mut [T], &mut [T]) {
+        assert_ne!(a, b);
+        let (c, n) = (self.cap, self.n);
+        if a < b {
+            let (lo, hi) = self.data.split_at_mut(b * c);
+            (&mut lo[a * c..a * c + n], &mut hi[..n])
+        } else {
+            let (lo, hi) = self.data.split_at_mut(a * c);
+            let (rb, ra) = (&mut lo[b * c..b * c + n], &mut hi[..n]);
+            (ra, rb)
+        }
+    }
+
+    /// Grow the backing storage so at least `want` points fit; returns
+    /// `true` if a reallocation happened (a steady-state violation the
+    /// engine counts in [`UpdateStats::grow_events`]).
+    pub fn ensure_capacity(&mut self, want: usize) -> bool {
+        if want <= self.cap {
+            return false;
+        }
+        let new_cap = (self.cap * 2).max(want);
+        let mut data = vec![T::default(); new_cap * new_cap];
+        for r in 0..self.n {
+            let (src, dst) = (r * self.cap, r * new_cap);
+            data[dst..dst + self.n].copy_from_slice(&self.data[src..src + self.n]);
+        }
+        self.data = data;
+        self.cap = new_cap;
+        true
+    }
+
+    /// Expose one more row and column, both zeroed (`n` must be below
+    /// capacity — call [`PaddedSquare::ensure_capacity`] first).
+    pub fn expand(&mut self) {
+        assert!(self.n < self.cap, "expand() beyond capacity {}", self.cap);
+        let (n, c) = (self.n, self.cap);
+        for r in 0..n {
+            self.data[r * c + n] = T::default();
+        }
+        let base = n * c;
+        for v in &mut self.data[base..base + n + 1] {
+            *v = T::default();
+        }
+        self.n = n + 1;
+    }
+
+    /// Delete row and column `i`, shifting the tail up/left in place
+    /// (order-preserving, no allocation).
+    pub fn remove_shift(&mut self, i: usize) {
+        let (n, c) = (self.n, self.cap);
+        assert!(i < n);
+        for r in 0..n {
+            let base = r * c;
+            self.data.copy_within(base + i + 1..base + n, base + i);
+        }
+        for r in i..n - 1 {
+            let src = (r + 1) * c;
+            self.data.copy_within(src..src + n - 1, r * c);
+        }
+        self.n = n - 1;
+    }
+
+    /// Bytes held by the backing storage.
+    pub fn allocated_bytes(&self) -> usize {
+        self.data.capacity() * std::mem::size_of::<T>()
+    }
+}
+
+/// One new point, in either of the forms the engine ingests.
+///
+/// Both forms carry the same information — the distances from the new
+/// point to the `n` points currently held, in index order.  A
+/// `Distances` slice is exactly the tail a [`CondensedMatrix`] grows by
+/// when a point is appended (and equally a dense row restricted to the
+/// existing points); a `Point` is raw coordinates, turned into that row
+/// via the engine's retained [`PointStore`] and [`Metric`] — the
+/// streaming analogue of [`ComputedDistances`].
+///
+/// The forms are not mixable on one engine: a row-seeded engine rejects
+/// `Point` (no coordinates retained), and a points-seeded engine
+/// rejects `Distances` (a raw row would desynchronize the retained
+/// coordinates from the distance state) — each with a typed error.
+///
+/// [`CondensedMatrix`]: crate::pald::CondensedMatrix
+/// [`ComputedDistances`]: crate::pald::ComputedDistances
+#[derive(Clone, Copy, Debug)]
+pub enum InsertRow<'a> {
+    /// Distances to the points currently held, in index order
+    /// (`len == n`).
+    Distances(&'a [f32]),
+    /// Coordinates of the new point (`len == dim`); requires the engine
+    /// to have been seeded with points via
+    /// [`Pald::into_incremental_points`](crate::pald::Pald::into_incremental_points).
+    Point(&'a [f32]),
+}
+
+/// Retained point coordinates for metric-based row ingestion.
+///
+/// Held by engines seeded from [`ComputedDistances`]: each
+/// [`InsertRow::Point`] is turned into a distance row against these
+/// coordinates with the same metric arithmetic the batch input uses, so
+/// the streamed engine sees bit-identical distances to a batch over the
+/// full point set.
+///
+/// [`ComputedDistances`]: crate::pald::ComputedDistances
+pub struct PointStore {
+    pub(crate) metric: Metric,
+    pub(crate) dim: usize,
+    n: usize,
+    coords: Vec<f32>,
+}
+
+impl PointStore {
+    /// Store `n` points of dimension `dim` (row-major `coords`), with
+    /// room for `cap` points before reallocating.
+    pub(crate) fn new(metric: Metric, dim: usize, coords: &[f32], cap: usize) -> PointStore {
+        debug_assert_eq!(coords.len() % dim.max(1), 0);
+        let n = if dim == 0 { 0 } else { coords.len() / dim };
+        let mut v = Vec::with_capacity(cap.max(n) * dim);
+        v.extend_from_slice(coords);
+        PointStore { metric, dim, n, coords: v }
+    }
+
+    /// Number of points currently stored.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Coordinate dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The metric new rows are computed under.
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Coordinates of point `i`.
+    #[inline(always)]
+    pub fn point(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.n);
+        &self.coords[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Append a point; returns `true` if the backing storage grew.
+    pub(crate) fn push(&mut self, p: &[f32]) -> bool {
+        debug_assert_eq!(p.len(), self.dim);
+        let grew = self.coords.capacity() < self.coords.len() + self.dim;
+        self.coords.extend_from_slice(p);
+        self.n += 1;
+        grew
+    }
+
+    /// Grow the coordinate storage so at least `cap_points` fit.
+    pub(crate) fn reserve(&mut self, cap_points: usize) {
+        let want = cap_points * self.dim;
+        if want > self.coords.capacity() {
+            self.coords.reserve(want - self.coords.len());
+        }
+    }
+
+    /// Delete point `i`, shifting the tail up (order-preserving).
+    pub(crate) fn remove_shift(&mut self, i: usize) {
+        debug_assert!(i < self.n);
+        let d = self.dim;
+        self.coords.copy_within((i + 1) * d..self.n * d, i * d);
+        self.coords.truncate((self.n - 1) * d);
+        self.n -= 1;
+    }
+
+    /// Bytes held by the coordinate storage.
+    pub fn allocated_bytes(&self) -> usize {
+        self.coords.capacity() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Per-engine update accounting: how many updates ran, how long they
+/// took, and — the steady-state allocation assertion surface — how many
+/// buffer growths they forced.
+///
+/// # Examples
+///
+/// ```
+/// use paldx::data::distmat;
+/// use paldx::pald::Pald;
+///
+/// let d = distmat::random_tie_free(16, 1);
+/// // Capacity 32 leaves headroom: the inserts below must not allocate.
+/// let mut eng = Pald::builder().build().unwrap()
+///     .into_incremental_with_capacity(&d, 32).unwrap();
+/// let big = distmat::random_tie_free(20, 1);
+/// for q in 16..20 {
+///     eng.insert_row(&big.row(q)[..q]).unwrap();
+/// }
+/// assert_eq!(eng.stats().inserts, 4);
+/// assert_eq!(eng.stats().grow_events, 0, "steady state must not allocate");
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateStats {
+    /// Successful `insert` calls.
+    pub inserts: u64,
+    /// Successful `remove` calls.
+    pub removes: u64,
+    /// Buffer reallocations forced by updates (0 in steady state —
+    /// reserve capacity up front to keep it there).
+    pub grow_events: u64,
+    /// Existing pairs whose focus gained/lost a point and had their
+    /// support contributions reweighted (the data-dependent part of the
+    /// per-update cost; see DESIGN.md §8).
+    pub reweighted_pairs: u64,
+    /// Wall-clock seconds of the most recent update.
+    pub last_update_s: f64,
+    /// Cumulative wall-clock seconds across all updates.
+    pub total_update_s: f64,
+}
+
+/// Per-update latency log for the `paldx stream` replay loop and the
+/// `BENCH_stream.json` report.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyTrace {
+    /// Seconds per insert, in arrival order.
+    pub insert_s: Vec<f64>,
+    /// Seconds per remove, in arrival order.
+    pub remove_s: Vec<f64>,
+}
+
+impl LatencyTrace {
+    /// Empty trace.
+    pub fn new() -> LatencyTrace {
+        LatencyTrace::default()
+    }
+
+    /// Record one insert latency.
+    pub fn record_insert(&mut self, seconds: f64) {
+        self.insert_s.push(seconds);
+    }
+
+    /// Record one remove latency.
+    pub fn record_remove(&mut self, seconds: f64) {
+        self.remove_s.push(seconds);
+    }
+
+    /// Trial statistics over the recorded insert latencies.
+    pub fn insert_stats(&self) -> Option<Stats> {
+        if self.insert_s.is_empty() {
+            None
+        } else {
+            Some(Stats::from_times(&self.insert_s))
+        }
+    }
+
+    /// Trial statistics over the recorded remove latencies.
+    pub fn remove_stats(&self) -> Option<Stats> {
+        if self.remove_s.is_empty() {
+            None
+        } else {
+            Some(Stats::from_times(&self.remove_s))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_square_expand_and_index() {
+        let mut m: PaddedSquare<f32> = PaddedSquare::with_capacity(4);
+        m.set_n(2);
+        m.set_sym(0, 1, 3.0);
+        assert_eq!(m.at(1, 0), 3.0);
+        m.expand();
+        assert_eq!(m.n(), 3);
+        for j in 0..3 {
+            assert_eq!(m.at(2, j), 0.0);
+            assert_eq!(m.at(j, 2), 0.0);
+        }
+        assert_eq!(m.at(0, 1), 3.0, "expand must preserve existing entries");
+    }
+
+    #[test]
+    fn expand_zeroes_stale_data_from_removed_points() {
+        let mut m: PaddedSquare<f64> = PaddedSquare::with_capacity(3);
+        m.set_n(3);
+        m.set(2, 2, 7.0);
+        m.set(0, 2, 5.0);
+        m.remove_shift(1);
+        assert_eq!(m.n(), 2);
+        assert_eq!(m.at(1, 1), 7.0);
+        assert_eq!(m.at(0, 1), 5.0);
+        // Row/col 2 held stale values; expand must re-zero them.
+        m.expand();
+        for j in 0..3 {
+            assert_eq!(m.at(2, j), 0.0);
+            assert_eq!(m.at(j, 2), 0.0);
+        }
+    }
+
+    #[test]
+    fn remove_shift_preserves_order() {
+        let mut m: PaddedSquare<f32> = PaddedSquare::with_capacity(5);
+        m.set_n(4);
+        for i in 0..4 {
+            for j in 0..4 {
+                m.set(i, j, (10 * i + j) as f32);
+            }
+        }
+        m.remove_shift(1);
+        assert_eq!(m.n(), 3);
+        // Survivors are old indices 0, 2, 3 in order.
+        let old = [0usize, 2, 3];
+        for (i, &oi) in old.iter().enumerate() {
+            for (j, &oj) in old.iter().enumerate() {
+                assert_eq!(m.at(i, j), (10 * oi + oj) as f32, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn ensure_capacity_grows_once_and_reports() {
+        let mut m: PaddedSquare<u32> = PaddedSquare::with_capacity(2);
+        m.set_n(2);
+        m.set(1, 1, 9);
+        assert!(!m.ensure_capacity(2));
+        assert!(m.ensure_capacity(3));
+        assert!(m.capacity() >= 3);
+        assert_eq!(m.at(1, 1), 9, "growth must preserve contents");
+        assert!(!m.ensure_capacity(m.capacity()));
+    }
+
+    #[test]
+    fn two_rows_mut_are_disjoint_views() {
+        let mut m: PaddedSquare<f64> = PaddedSquare::with_capacity(4);
+        m.set_n(3);
+        {
+            let (a, b) = m.two_rows_mut(2, 0);
+            a[1] = 21.0;
+            b[1] = 1.0;
+            assert_eq!(a.len(), 3);
+            assert_eq!(b.len(), 3);
+        }
+        assert_eq!(m.at(2, 1), 21.0);
+        assert_eq!(m.at(0, 1), 1.0);
+    }
+
+    #[test]
+    fn point_store_push_and_remove() {
+        let mut ps = PointStore::new(Metric::Euclidean, 2, &[0.0, 0.0, 1.0, 1.0], 4);
+        assert_eq!(ps.n(), 2);
+        assert!(!ps.push(&[2.0, 2.0]), "within capacity: no growth");
+        assert_eq!(ps.n(), 3);
+        assert_eq!(ps.point(2), &[2.0, 2.0]);
+        ps.remove_shift(0);
+        assert_eq!(ps.n(), 2);
+        assert_eq!(ps.point(0), &[1.0, 1.0]);
+        assert_eq!(ps.point(1), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn latency_trace_stats() {
+        let mut t = LatencyTrace::new();
+        assert!(t.insert_stats().is_none());
+        t.record_insert(1.0);
+        t.record_insert(3.0);
+        t.record_remove(2.0);
+        let s = t.insert_stats().unwrap();
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(t.remove_stats().unwrap().trials, 1);
+    }
+}

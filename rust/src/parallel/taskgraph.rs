@@ -23,6 +23,7 @@ pub struct Task<'a> {
 }
 
 impl<'a> Task<'a> {
+    /// A task over a (deduplicated, sorted) resource set.
     pub fn new(mut resources: Vec<usize>, run: impl Fn(usize) + Send + Sync + 'a) -> Self {
         resources.sort_unstable();
         resources.dedup();

@@ -9,6 +9,7 @@ use crate::runtime::manifest::{ExecutableSpec, Manifest};
 
 /// A compiled PaLD executable (one artifact variant).
 pub struct PaldExecutable {
+    /// The manifest entry this executable was compiled from.
     pub spec: ExecutableSpec,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -70,10 +71,12 @@ impl XlaRuntime {
         Ok(XlaRuntime { client, manifest, cache: HashMap::new() })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

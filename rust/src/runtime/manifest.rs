@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 /// One AOT-compiled executable.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecutableSpec {
+    /// Artifact name (manifest key).
     pub name: String,
     /// Path of the HLO text file, relative to the manifest.
     pub path: String,
@@ -25,7 +26,9 @@ pub struct ExecutableSpec {
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// All AOT-compiled executables listed in the manifest.
     pub executables: Vec<ExecutableSpec>,
 }
 
@@ -36,6 +39,7 @@ impl Manifest {
         Self::parse(dir, &text)
     }
 
+    /// Parse manifest JSON text rooted at `dir`.
     pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Manifest> {
         let value = JsonParser::new(text).parse()?;
         let execs = value
@@ -76,6 +80,7 @@ impl Manifest {
             .min_by_key(|e| e.n)
     }
 
+    /// Absolute path of an executable's HLO text file.
     pub fn hlo_path(&self, spec: &ExecutableSpec) -> PathBuf {
         self.dir.join(&spec.path)
     }
@@ -85,35 +90,46 @@ impl Manifest {
 // Minimal JSON parser (objects, arrays, strings, numbers, bools, null).
 // ---------------------------------------------------------------------
 
+/// Parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum JsonValue {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<JsonValue>),
+    /// An object.
     Obj(HashMap<String, JsonValue>),
 }
 
 impl JsonValue {
+    /// Object field lookup (`None` for non-objects).
     pub fn get(&self, key: &str) -> Option<&JsonValue> {
         match self {
             JsonValue::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// The array elements, if this is an array.
     pub fn as_array(&self) -> Option<&[JsonValue]> {
         match self {
             JsonValue::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             JsonValue::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             JsonValue::Num(v) => Some(*v),
@@ -122,16 +138,19 @@ impl JsonValue {
     }
 }
 
+/// Recursive-descent parser over the manifest subset of JSON.
 pub struct JsonParser<'a> {
     bytes: &'a [u8],
     pos: usize,
 }
 
 impl<'a> JsonParser<'a> {
+    /// Parser over `text`.
     pub fn new(text: &'a str) -> Self {
         JsonParser { bytes: text.as_bytes(), pos: 0 }
     }
 
+    /// Parse the whole input as one JSON value (no trailing garbage).
     pub fn parse(mut self) -> anyhow::Result<JsonValue> {
         let v = self.value()?;
         self.skip_ws();

@@ -9,11 +9,14 @@
 /// Memory access kind.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Access {
+    /// Read of a word address.
     Read(u64),
+    /// Write of a word address.
     Write(u64),
 }
 
 impl Access {
+    /// The accessed word address, for either kind.
     pub fn addr(&self) -> u64 {
         match *self {
             Access::Read(a) | Access::Write(a) => a,
@@ -33,8 +36,11 @@ pub struct Cache {
     stamp: Vec<u64>,
     dirty: Vec<bool>,
     clock: u64,
+    /// Lines fetched from memory (cold + capacity + conflict).
     pub misses: u64,
+    /// Accesses served from the cache.
     pub hits: u64,
+    /// Dirty lines evicted back to memory.
     pub writebacks: u64,
 }
 
@@ -57,6 +63,7 @@ impl Cache {
         }
     }
 
+    /// Total capacity in words.
     pub fn capacity_words(&self) -> usize {
         self.sets * self.ways * self.line_words
     }
@@ -95,6 +102,7 @@ impl Cache {
         self.dirty[base + victim] = is_write;
     }
 
+    /// Replay a full access trace through the cache.
     pub fn run(&mut self, trace: impl IntoIterator<Item = Access>) {
         for a in trace {
             self.access(a);

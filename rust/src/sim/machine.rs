@@ -54,7 +54,9 @@ pub struct MachineParams {
     /// Memory-bandwidth saturation: streams per socket before β stops
     /// scaling with threads.
     pub bw_streams_per_socket: f64,
+    /// CPU sockets in the machine profile.
     pub sockets: usize,
+    /// Physical cores per socket.
     pub cores_per_socket: usize,
     /// Fast memory (words) used to pick optimal block sizes.
     pub fast_mem_words: u64,
@@ -141,6 +143,7 @@ impl MachineParams {
         p
     }
 
+    /// Cores across all sockets.
     pub fn total_cores(&self) -> usize {
         self.sockets * self.cores_per_socket
     }
@@ -181,12 +184,16 @@ impl MachineParams {
 /// Phase timing breakdown (seconds) — the Figure 13 decomposition.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Breakdown {
+    /// Predicted focus-pass seconds.
     pub focus_s: f64,
+    /// Predicted cohesion-pass seconds.
     pub cohesion_s: f64,
-    pub overhead_s: f64, // reductions + barriers + memcpy
+    /// Predicted parallel overhead (reductions + barriers + memcpy).
+    pub overhead_s: f64,
 }
 
 impl Breakdown {
+    /// Sum of all predicted phases.
     pub fn total(&self) -> f64 {
         self.focus_s + self.cohesion_s + self.overhead_s
     }

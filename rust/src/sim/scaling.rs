@@ -10,8 +10,11 @@ use crate::sim::traffic;
 /// Strong-scaling efficiency series for one matrix size.
 #[derive(Clone, Debug)]
 pub struct ScalingSeries {
+    /// Matrix dimension of the series.
     pub n: u64,
+    /// Thread counts sampled.
     pub threads: Vec<usize>,
+    /// Parallel efficiency at each thread count.
     pub efficiency: Vec<f64>,
 }
 

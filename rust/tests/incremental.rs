@@ -1,0 +1,419 @@
+//! Oracle tests for the incremental PaLD engine (DESIGN.md §8): every
+//! insert/remove sequence must land on the same cohesion state a batch
+//! recompute produces, for all 12 registered kernels, within the
+//! documented ULP policy (focus sizes integer-exact; support within
+//! f32 summation-order tolerance), and steady-state updates must not
+//! allocate (asserted via the engine's growth counters).
+
+use paldx::core::Mat;
+use paldx::data::distmat;
+use paldx::pald::{
+    Algorithm, ComputedDistances, Metric, Pald, PaldBuilder, PaldConfig, PaldError, TieMode,
+    Validation,
+};
+
+/// Tolerances of the existing cross-kernel agreement tests — the
+/// incremental-vs-batch bound documented in DESIGN.md §8.
+const RTOL: f32 = 1e-4;
+const ATOL: f32 = 1e-5;
+
+fn submatrix(master: &Mat, ids: &[usize]) -> Mat {
+    Mat::from_fn(ids.len(), ids.len(), |a, b| master[(ids[a], ids[b])])
+}
+
+fn pald_for(alg: Algorithm, tie: TieMode) -> Pald {
+    PaldBuilder::from_config(&PaldConfig {
+        algorithm: alg,
+        tie_mode: tie,
+        block: 16,
+        block2: 8,
+        threads: 4,
+        ..Default::default()
+    })
+    .build()
+    .unwrap()
+}
+
+/// Insert a row of `master` distances for original point `q`, restricted
+/// to the original points listed in `ids`.
+fn row_for(master: &Mat, ids: &[usize], q: usize) -> Vec<f32> {
+    ids.iter().map(|&id| master[(q, id)]).collect()
+}
+
+/// The tentpole acceptance criterion: for every registered kernel, a
+/// mixed insert/remove stream lands bit-close (documented ULP bound) to
+/// the kernel's own batch recompute, with integer-exact focus sizes.
+#[test]
+fn oracle_all_registered_kernels_strict() {
+    let master = distmat::random_tie_free(34, 2026);
+    for alg in Algorithm::ALL {
+        let seed = master.slice_to(26, 26);
+        let mut eng = pald_for(alg, TieMode::Strict)
+            .into_incremental_with_capacity(&seed, 34)
+            .unwrap();
+        let mut ids: Vec<usize> = (0..26).collect();
+        for q in 26..34 {
+            eng.insert_row(&row_for(&master, &ids, q)).unwrap();
+            ids.push(q);
+        }
+        for victim in [3usize, 19, 0, 7] {
+            eng.remove(victim).unwrap();
+            ids.remove(victim);
+        }
+        assert_eq!(eng.n(), 30);
+        let inc = eng.cohesion();
+        let batch = eng.batch_recompute().unwrap();
+        assert!(
+            inc.allclose(&batch, RTOL, ATOL),
+            "{}: maxdiff={}",
+            alg.name(),
+            inc.max_abs_diff(&batch)
+        );
+        // Focus sizes are maintained in integer arithmetic: exact.
+        let u_want = paldx::pald::naive::focus_sizes(&submatrix(&master, &ids), TieMode::Strict);
+        assert_eq!(eng.focus_sizes().as_slice(), u_want.as_slice(), "{}: U drifted", alg.name());
+    }
+}
+
+/// Same oracle under split-tie semantics on input with real distance
+/// ties — the mode whose exactness the paper's pairwise variant defines.
+#[test]
+fn oracle_all_registered_kernels_split_with_ties() {
+    let master = distmat::random_tied(28, 99, 4);
+    for alg in Algorithm::ALL {
+        let seed = master.slice_to(22, 22);
+        let mut eng = pald_for(alg, TieMode::Split)
+            .into_incremental_with_capacity(&seed, 28)
+            .unwrap();
+        let mut ids: Vec<usize> = (0..22).collect();
+        for q in 22..28 {
+            eng.insert_row(&row_for(&master, &ids, q)).unwrap();
+            ids.push(q);
+        }
+        eng.remove(11).unwrap();
+        ids.remove(11);
+        let inc = eng.cohesion();
+        let batch = eng.batch_recompute().unwrap();
+        assert!(
+            inc.allclose(&batch, RTOL, ATOL),
+            "{}: maxdiff={}",
+            alg.name(),
+            inc.max_abs_diff(&batch)
+        );
+        let u_want = paldx::pald::naive::focus_sizes(&submatrix(&master, &ids), TieMode::Split);
+        assert_eq!(eng.focus_sizes().as_slice(), u_want.as_slice(), "{}: U drifted", alg.name());
+    }
+}
+
+/// insert ∘ remove round-trips: the focus sizes return bit-identically,
+/// the cohesion within f64-rounding (far inside the documented bound).
+#[test]
+fn insert_remove_roundtrip_is_exact() {
+    let master = distmat::random_tie_free(25, 7);
+    let seed = master.slice_to(24, 24);
+    let mut eng = pald_for(Algorithm::OptimizedTriplet, TieMode::Strict)
+        .into_incremental_with_capacity(&seed, 25)
+        .unwrap();
+    let before_c = eng.cohesion();
+    let before_u = eng.focus_sizes();
+    let idx = eng.insert_row(&master.row(24)[..24]).unwrap();
+    eng.remove(idx).unwrap();
+    assert_eq!(eng.n(), 24);
+    assert_eq!(
+        eng.focus_sizes().as_slice(),
+        before_u.as_slice(),
+        "U must round-trip bit-identically"
+    );
+    let after_c = eng.cohesion();
+    assert!(
+        after_c.allclose(&before_c, 1e-6, 1e-7),
+        "maxdiff={}",
+        after_c.max_abs_diff(&before_c)
+    );
+}
+
+/// Inserting a duplicate (zero-distance) point under split ties matches
+/// batch for a triplet-family kernel (the mode duplicates are defined
+/// in); removing it round-trips.
+#[test]
+fn duplicate_point_split_mode() {
+    let master = distmat::random_tie_free(14, 3);
+    let mut eng = pald_for(Algorithm::OptimizedTriplet, TieMode::Split)
+        .into_incremental_with_capacity(&master, 15)
+        .unwrap();
+    let before = eng.cohesion();
+    // Duplicate of point 3: d(q, x) = d(3, x), d(q, 3) = 0.
+    let dup: Vec<f32> = (0..14).map(|x| master[(3, x)]).collect();
+    let idx = eng.insert_row(&dup).unwrap();
+    assert_eq!(idx, 14);
+    let inc = eng.cohesion();
+    let batch = eng.batch_recompute().unwrap();
+    assert!(inc.allclose(&batch, RTOL, ATOL), "maxdiff={}", inc.max_abs_diff(&batch));
+    // And against the semantic reference on the extended matrix.
+    let mut ext = Mat::zeros(15, 15);
+    for i in 0..14 {
+        for j in 0..14 {
+            ext[(i, j)] = master[(i, j)];
+        }
+        ext[(14, i)] = master[(3, i)];
+        ext[(i, 14)] = master[(i, 3)];
+    }
+    let want = paldx::pald::naive::pairwise(&ext, TieMode::Split);
+    assert!(inc.allclose(&want, RTOL, ATOL), "maxdiff={}", inc.max_abs_diff(&want));
+    eng.remove(14).unwrap();
+    let after = eng.cohesion();
+    assert!(after.allclose(&before, 1e-6, 1e-7));
+}
+
+/// Strict mode is only tie-defined on the pairwise reference semantics
+/// (the crate-wide stance); with a naive-pairwise engine a duplicate
+/// insert matches the batch reference bit-close, zero-size foci and all.
+#[test]
+fn duplicate_point_strict_mode_reference_kernel() {
+    let master = distmat::random_tie_free(12, 8);
+    let mut eng = pald_for(Algorithm::NaivePairwise, TieMode::Strict)
+        .into_incremental_with_capacity(&master, 13)
+        .unwrap();
+    let dup: Vec<f32> = (0..12).map(|x| master[(5, x)]).collect();
+    eng.insert_row(&dup).unwrap();
+    let inc = eng.cohesion();
+    assert!(inc.as_slice().iter().all(|v| v.is_finite()), "no NaN from the u=0 pair");
+    let batch = eng.batch_recompute().unwrap();
+    assert!(inc.allclose(&batch, RTOL, ATOL), "maxdiff={}", inc.max_abs_diff(&batch));
+}
+
+/// Removing down to n = 2 stays correct; removing further is a typed
+/// error and leaves the engine serving.
+#[test]
+fn remove_down_to_two_points() {
+    let master = distmat::random_tie_free(5, 21);
+    let mut eng = pald_for(Algorithm::OptimizedPairwise, TieMode::Strict)
+        .into_incremental(&master)
+        .unwrap();
+    for _ in 0..3 {
+        eng.remove(0).unwrap();
+    }
+    assert_eq!(eng.n(), 2);
+    let inc = eng.cohesion();
+    let batch = eng.batch_recompute().unwrap();
+    assert!(inc.allclose(&batch, RTOL, ATOL));
+    // Cohesion of any 2-point instance: each point fully supports itself.
+    assert!((inc[(0, 0)] - 0.5).abs() < 1e-6);
+    assert!((inc[(1, 1)] - 0.5).abs() < 1e-6);
+    assert!(matches!(eng.remove(0), Err(PaldError::TooSmall { n: 1 })));
+    assert_eq!(eng.n(), 2, "failed removal must leave the engine intact");
+    assert_eq!(eng.cohesion().as_slice(), inc.as_slice());
+}
+
+/// Interleaved insert/remove batches track batch recompute at every
+/// checkpoint (the serving pattern: churn, then query).
+#[test]
+fn interleaved_churn_matches_batch_at_every_checkpoint() {
+    let master = distmat::random_tie_free(36, 606);
+    let mut eng = pald_for(Algorithm::Hybrid, TieMode::Strict)
+        .into_incremental_with_capacity(&master.slice_to(20, 20), 36)
+        .unwrap();
+    let mut ids: Vec<usize> = (0..20).collect();
+    // (insert next master point | remove current index)
+    enum Op {
+        Ins,
+        Rem(usize),
+    }
+    let script = [
+        Op::Ins,
+        Op::Ins,
+        Op::Rem(5),
+        Op::Ins,
+        Op::Rem(0),
+        Op::Ins,
+        Op::Ins,
+        Op::Rem(17),
+        Op::Ins,
+        Op::Ins,
+        Op::Rem(2),
+        Op::Ins,
+    ];
+    let mut next = 20;
+    for (step, op) in script.iter().enumerate() {
+        match op {
+            Op::Ins => {
+                eng.insert_row(&row_for(&master, &ids, next)).unwrap();
+                ids.push(next);
+                next += 1;
+            }
+            Op::Rem(i) => {
+                eng.remove(*i).unwrap();
+                ids.remove(*i);
+            }
+        }
+        let inc = eng.cohesion();
+        let want = paldx::pald::naive::pairwise(&submatrix(&master, &ids), TieMode::Strict);
+        assert!(
+            inc.allclose(&want, RTOL, ATOL),
+            "step {step}: maxdiff={}",
+            inc.max_abs_diff(&want)
+        );
+    }
+    assert_eq!(eng.stats().inserts, 8);
+    assert_eq!(eng.stats().removes, 4);
+}
+
+/// The acceptance criterion's allocation clause: with capacity reserved,
+/// a churn workload performs no per-update heap allocation — the growth
+/// counter stays at zero and the state footprint is constant.
+#[test]
+fn steady_state_updates_do_not_allocate() {
+    let master = distmat::random_tie_free(32, 12);
+    let mut eng = pald_for(Algorithm::OptimizedPairwise, TieMode::Strict)
+        .into_incremental_with_capacity(&master.slice_to(16, 16), 32)
+        .unwrap();
+    let mut ids: Vec<usize> = (0..16).collect();
+    eng.insert_row(&row_for(&master, &ids, 16)).unwrap();
+    ids.push(16);
+    let bytes_after_first = eng.state_bytes();
+    for q in 17..28 {
+        eng.insert_row(&row_for(&master, &ids, q)).unwrap();
+        ids.push(q);
+        if q % 3 == 0 {
+            eng.remove(1).unwrap();
+            ids.remove(1);
+        }
+    }
+    assert_eq!(eng.stats().grow_events, 0, "churn within capacity must not allocate");
+    assert_eq!(eng.state_bytes(), bytes_after_first, "state footprint must be constant");
+    assert!(eng.stats().reweighted_pairs > 0, "reweight sweeps must be exercised");
+
+    // Outgrowing the capacity is allowed but counted.
+    let mut tight = pald_for(Algorithm::OptimizedPairwise, TieMode::Strict)
+        .into_incremental_with_capacity(&master.slice_to(8, 8), 8)
+        .unwrap();
+    let ids8: Vec<usize> = (0..8).collect();
+    tight.insert_row(&row_for(&master, &ids8, 8)).unwrap();
+    assert_eq!(tight.stats().grow_events, 1);
+    let inc = tight.cohesion();
+    let batch = tight.batch_recompute().unwrap();
+    assert!(inc.allclose(&batch, RTOL, ATOL), "growth must not corrupt state");
+
+    // reserve() pre-grows without counting a growth event.
+    let mut reserved = pald_for(Algorithm::OptimizedPairwise, TieMode::Strict)
+        .into_incremental_with_capacity(&master.slice_to(8, 8), 8)
+        .unwrap();
+    reserved.reserve(4);
+    reserved.insert_row(&row_for(&master, &ids8, 8)).unwrap();
+    assert_eq!(reserved.stats().grow_events, 0);
+}
+
+/// Coordinate ingestion: a points-seeded engine matches a batch
+/// `ComputedDistances` over the full point set (shared metric
+/// arithmetic, so the distance matrices are bit-identical).
+#[test]
+fn point_ingestion_matches_batch_computed_distances() {
+    let pts = distmat::gaussian_clusters(5, &[8, 8], &[0.3, 0.3], 6.0, 11);
+    let total = pts.rows();
+    let head = pts.slice_to(12, pts.cols());
+    let seed = ComputedDistances::new(head, Metric::Euclidean).unwrap();
+    let mut eng = pald_for(Algorithm::OptimizedTriplet, TieMode::Strict)
+        .into_incremental_points_with_capacity(seed, total)
+        .unwrap();
+    for q in 12..total {
+        eng.insert_point(pts.row(q)).unwrap();
+    }
+    assert_eq!(eng.n(), total);
+    // The maintained distances equal the batch metric's, bit for bit.
+    let want_d = distmat::euclidean(&pts);
+    assert_eq!(eng.distances().as_slice(), want_d.as_slice());
+    let inc = eng.cohesion();
+    let mut fresh = pald_for(Algorithm::OptimizedTriplet, TieMode::Strict);
+    let full = ComputedDistances::new(pts.clone(), Metric::Euclidean).unwrap();
+    let want = fresh.compute(&full).unwrap();
+    assert!(
+        inc.allclose(want.cohesion(), RTOL, ATOL),
+        "maxdiff={}",
+        inc.max_abs_diff(want.cohesion())
+    );
+    // Removal keeps the point store aligned with the distance state.
+    eng.remove(2).unwrap();
+    let inc = eng.cohesion();
+    let batch = eng.batch_recompute().unwrap();
+    assert!(inc.allclose(&batch, RTOL, ATOL));
+    // A raw distance row would desynchronize the retained coordinates;
+    // points-seeded engines reject it with a typed error.
+    let n = eng.n();
+    assert!(matches!(
+        eng.insert_row(&vec![1.0; n]),
+        Err(PaldError::PointStoreMismatch { .. })
+    ));
+    assert_eq!(eng.n(), n, "rejected row must leave the engine intact");
+}
+
+/// Typed error surface of the engine.
+#[test]
+fn engine_error_paths_are_typed() {
+    let d = distmat::random_tie_free(8, 4);
+    let mut eng = pald_for(Algorithm::OptimizedPairwise, TieMode::Strict)
+        .into_incremental(&d)
+        .unwrap();
+    assert!(matches!(
+        eng.insert_row(&[0.5; 3]),
+        Err(PaldError::ShapeMismatch { expected_cols: 8, cols: 3, .. })
+    ));
+    assert!(matches!(
+        eng.insert_point(&[0.0, 0.0]),
+        Err(PaldError::NoPointStore { .. })
+    ));
+    assert!(matches!(
+        eng.remove(8),
+        Err(PaldError::IndexOutOfBounds { index: 8, n: 8 })
+    ));
+    let mut out = Mat::zeros(7, 7);
+    assert!(matches!(
+        eng.cohesion_into(&mut out),
+        Err(PaldError::ShapeMismatch { expected_rows: 8, .. })
+    ));
+    // Skip-validation engines accept rows that strict ones reject.
+    let mut skip = Pald::builder()
+        .algorithm(Algorithm::OptimizedPairwise)
+        .validation(Validation::Skip)
+        .build()
+        .unwrap()
+        .into_incremental(&d)
+        .unwrap();
+    let mut odd = vec![0.5f32; 8];
+    odd[2] = -1.0;
+    assert!(matches!(
+        eng.insert_row(&odd),
+        Err(PaldError::NegativeDistance { i: 8, j: 2, .. })
+    ));
+    assert!(skip.insert_row(&odd).is_ok());
+}
+
+/// The session plan drives the update-loop flavor: naive rung keeps the
+/// branchy reference loop, optimized rungs the masked tiled loop — and
+/// both land on the same state.
+#[test]
+fn update_kernel_follows_plan_rung() {
+    let d = distmat::random_tie_free(18, 15);
+    let naive = pald_for(Algorithm::NaivePairwise, TieMode::Strict)
+        .into_incremental(&d)
+        .unwrap();
+    assert_eq!(naive.update_kernel(), "reference");
+    let opt = pald_for(Algorithm::OptimizedTriplet, TieMode::Strict)
+        .into_incremental(&d)
+        .unwrap();
+    assert_eq!(opt.update_kernel(), "blocked-branchfree");
+
+    let master = distmat::random_tie_free(20, 16);
+    let mut a = pald_for(Algorithm::NaivePairwise, TieMode::Strict)
+        .into_incremental(&master.slice_to(18, 18))
+        .unwrap();
+    let mut b = pald_for(Algorithm::OptimizedTriplet, TieMode::Strict)
+        .into_incremental(&master.slice_to(18, 18))
+        .unwrap();
+    for q in 18..20 {
+        a.insert_row(&master.row(q)[..q]).unwrap();
+        b.insert_row(&master.row(q)[..q]).unwrap();
+    }
+    // Bit-identical across flavors: masked products are exact.
+    assert_eq!(a.cohesion().as_slice(), b.cohesion().as_slice());
+    assert_eq!(a.focus_sizes().as_slice(), b.focus_sizes().as_slice());
+}
