@@ -1,0 +1,84 @@
+//! Bench target for the sparse PKNN engine (DESIGN.md §5, §9): an
+//! n-vs-k sweep of the truncated kernels against the dense optimized
+//! pairwise baseline, with the exactness anchor (k = n-1 bit-identical
+//! to dense naive pairwise) asserted before anything is timed.  Emits
+//! `BENCH_knn.json` next to `BENCH_stream.json`.
+//! Run: cargo bench --bench knn_scaling   (PALDX_FULL=1 for larger sizes)
+
+use paldx::bench::{bench, fmt_secs, fmt_speedup, write_json_report, BenchOpts, Table};
+use paldx::data::distmat;
+use paldx::pald::{Algorithm, Neighborhood, Pald, Threads};
+
+fn pald(alg: Algorithm, k: usize) -> Pald {
+    let mut b = Pald::builder().algorithm(alg).threads(Threads::Fixed(1));
+    if k > 0 {
+        b = b.neighborhood(Neighborhood::Knn(k));
+    }
+    b.build().expect("valid bench configuration")
+}
+
+fn main() -> anyhow::Result<()> {
+    let full = paldx::bench::full_scale();
+    let ns: &[usize] = if full { &[512, 1024, 2048] } else { &[128, 256] };
+    let opts = BenchOpts::from_env();
+
+    // Exactness anchor first: k = n-1 must be bit-identical to the
+    // dense naive pairwise reference.
+    {
+        let n = 96;
+        let d = distmat::random_tie_free(n, 2027);
+        let want = paldx::pald::naive::pairwise(&d, paldx::pald::TieMode::Strict);
+        for alg in [Algorithm::KnnPairwise, Algorithm::KnnOptTriplet] {
+            let got = pald(alg, n - 1).compute(&d)?;
+            anyhow::ensure!(
+                got.cohesion().as_slice() == want.as_slice(),
+                "{}: k=n-1 must be bit-identical to dense",
+                alg.name()
+            );
+        }
+        println!("exactness anchor ok: knn kernels at k=n-1 are bit-identical to dense");
+    }
+
+    let mut table = Table::new(
+        "knn — truncated vs dense cohesion, n-vs-k sweep (1 thread)",
+        &["n", "k", "coverage", "time", "dense time", "speedup"],
+    );
+    for &n in ns {
+        let d = distmat::random_tie_free(n, n as u64 + 9);
+        let mut dense = pald(Algorithm::OptimizedPairwise, 0);
+        let dense_stats = bench(&opts, || {
+            dense.compute(&d).expect("dense compute");
+        });
+        table.stat(format!("dense/n={n}"), dense_stats);
+        let ks: Vec<usize> = [8usize, 16, 32, 64]
+            .iter()
+            .copied()
+            .filter(|&k| k < n - 1)
+            .chain(std::iter::once(n - 1))
+            .collect();
+        for k in ks {
+            let mut sparse = pald(Algorithm::KnnOptPairwise, k);
+            let mut coverage = 0.0f64;
+            let stats = bench(&opts, || {
+                let r = sparse.compute(&d).expect("sparse compute");
+                coverage = 1.0 - r.truncation_error_bound().unwrap_or(0.0);
+            });
+            table.stat(format!("knn/n={n}/k={k}"), stats);
+            table.row(vec![
+                n.to_string(),
+                k.to_string(),
+                format!("{coverage:.4}"),
+                fmt_secs(stats.mean),
+                fmt_secs(dense_stats.mean),
+                fmt_speedup(dense_stats.mean / stats.mean.max(1e-12)),
+            ]);
+        }
+    }
+    table.print();
+    match write_json_report(std::path::Path::new("."), "knn", &[&table]) {
+        Ok(Some(path)) => println!("wrote {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("could not write BENCH_knn.json: {e}"),
+    }
+    Ok(())
+}

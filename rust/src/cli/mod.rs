@@ -3,6 +3,8 @@
 //! Commands:
 //! * `compute`   — cohesion of a distance input (generated or from file)
 //! * `plan`      — print the planner's kernel/block/thread choice for a shape
+//! * `knn`       — truncated-neighborhood (PKNN) tooling: build/inspect a
+//!   kNN graph, or compare sparse vs dense cohesion (DESIGN.md §9)
 //! * `analyze`   — strong ties / communities of a computed cohesion matrix
 //! * `convert`   — re-encode a distance input (dense ⟷ condensed)
 //! * `stream`    — replay a point stream through the incremental engine,
@@ -42,10 +44,14 @@ USAGE: paldx <command> [--options]
 COMMANDS:
   compute    --n <int> | --input <path.{bin,csv,vec}>   compute a cohesion matrix
              [--alg <name>|auto] [--tie strict|split] [--block B] [--block2 B]
-             [--threads P] [--backend native|xla] [--metric euclidean|manhattan|cosine]
-             [--no-validate] [--output <path>]
-  plan       --n <int> [--threads P] [--tie strict|split] [--calibrate]
+             [--threads P] [--k K] [--backend native|xla]
+             [--metric euclidean|manhattan|cosine] [--no-validate] [--output <path>]
+  plan       --n <int> [--threads P] [--tie strict|split] [--k K] [--calibrate]
              print the plan `--alg auto` would execute for this shape
+  knn        --n <int> | --input <path.{bin,csv,vec}>   PKNN truncation tooling
+             --k K [--mode build|inspect|compare] [--alg ...] [--tie ...]
+             [--threads P] [--metric ...] (compare: sparse-vs-dense max diff,
+             mass bound, timings; DESIGN.md §9)
   analyze    --input <cohesion.{bin,csv}> [--top K]  strong ties & communities
   convert    --input <path.{bin,csv,vec}> --output <path>  re-encode distances
              (condensed binary by default — half the bytes; --dense for dense)
@@ -63,6 +69,8 @@ Inputs: .csv dense matrix | paldx .bin (dense PALDMAT1 or condensed PALDCND1,
 Algorithms: auto + naive-pairwise naive-triplet blocked-pairwise blocked-triplet
             branchfree-pairwise branchfree-triplet opt-pairwise opt-triplet
             par-pairwise par-triplet hybrid par-hybrid
+            knn-pairwise knn-triplet knn-opt-pairwise knn-opt-triplet (sparse,
+            O(n*k^2); with --k and --alg auto the planner picks dense vs sparse)
 Env: PALDX_FULL=1 (paper-scale sizes), PALDX_TRIALS, PALDX_BUDGET_S,
      PALDX_CALIBRATE=1 (calibrate the scaling model against this machine)";
 
@@ -72,6 +80,7 @@ pub fn run(raw: Vec<String>) -> anyhow::Result<()> {
     match args.command.as_deref() {
         Some("compute") => cmd_compute(&args),
         Some("plan") => cmd_plan(&args),
+        Some("knn") => cmd_knn(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("convert") => cmd_convert(&args),
         Some("stream") => cmd_stream(&args),
@@ -118,6 +127,7 @@ fn config_from(args: &Args) -> anyhow::Result<PaldConfig> {
     cfg.block = args.get_usize("block", 0)?;
     cfg.block2 = args.get_usize("block2", 0)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.k = args.get_usize("k", 0)?;
     cfg.backend = match args.get_or("backend", "native") {
         "native" => Backend::Native,
         "xla" => Backend::Xla,
@@ -165,6 +175,15 @@ fn cmd_compute(args: &Args) -> anyhow::Result<()> {
             "computed in {:.3}s (focus {:.3}s, cohesion {:.3}s, normalize {:.3}s)",
             t.total_s, t.focus_s, t.cohesion_s, t.normalize_s
         );
+        if let Some(r) = result.knn_report() {
+            println!(
+                "truncated: effective k={} pairs {}/{} (mass bound {:.4})",
+                r.effective_k,
+                r.edges,
+                r.total_pairs,
+                r.mass_bound()
+            );
+        }
         result.into_matrix()
     };
     let tau = analysis::universal_threshold(&c);
@@ -348,7 +367,17 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
     }
     if check {
         let inc = eng.cohesion();
-        let batch = eng.batch_recompute()?;
+        // Graph-capped engines are exact over their own online graph
+        // (the rebuilt-from-scratch batch graph can legitimately differ
+        // after churn), so the oracle evaluates the truncated batch
+        // semantics over exactly that graph; dense engines check
+        // against a full batch recompute as before.
+        let batch = match eng.neighbor_graph() {
+            Some(g) => {
+                crate::pald::knn::cohesion_over_graph(&eng.distances(), &g, config.tie_mode)
+            }
+            None => eng.batch_recompute()?,
+        };
         let maxdiff = inc.max_abs_diff(&batch);
         println!("oracle check: max |C_inc - C_batch| = {maxdiff:.3e}");
         anyhow::ensure!(
@@ -370,11 +399,14 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     cfg.algorithm = Algorithm::Auto;
     let planner = if args.flag("calibrate") { Planner::calibrated() } else { Planner::new() };
     let plan = planner.resolve(&cfg, n);
-    println!("plan for n={n} threads={} tie={:?}:", cfg.threads, cfg.tie_mode);
+    println!(
+        "plan for n={n} threads={} tie={:?} k={}:",
+        cfg.threads, cfg.tie_mode, cfg.k
+    );
     println!("  {}", plan.describe());
     // Show the planner's actual candidate set and predictions.
     for (alg, params, cost) in
-        planner.scored_candidates(n, cfg.tie_mode, cfg.threads.max(1))
+        planner.scored_candidates(n, cfg.tie_mode, cfg.threads.max(1), cfg.k)
     {
         let marker = if alg == plan.algorithm { " <- selected" } else { "" };
         println!(
@@ -383,6 +415,117 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
             params.block,
             params.block2
         );
+    }
+    Ok(())
+}
+
+/// `paldx knn --k K [--mode build|inspect|compare]`: PKNN truncation
+/// tooling (DESIGN.md §9).
+///
+/// * `build` — construct the exact symmetrized kNN graph and print its
+///   shape (edges, degrees, coverage, bytes);
+/// * `inspect` — `build` plus a degree histogram and sample neighbor
+///   lists;
+/// * `compare` — run the truncated and dense computations side by side
+///   and report the max cohesion deviation, the reported mass bound,
+///   and both runtimes.
+fn cmd_knn(args: &Args) -> anyhow::Result<()> {
+    use std::time::Instant;
+
+    let input = load_input(args)?;
+    let n = input.check_shape()?;
+    let k = args.get_usize("k", 16)?;
+    let mode = args.get_or("mode", "build");
+    let t0 = Instant::now();
+    let graph = crate::pald::NeighborGraph::from_input(input.as_ref(), k)?;
+    let build_s = t0.elapsed().as_secs_f64();
+    let (dmin, dmax) = (0..n).fold((usize::MAX, 0usize), |(lo, hi), i| {
+        (lo.min(graph.degree(i)), hi.max(graph.degree(i)))
+    });
+    println!(
+        "knn graph: n={n} k={} (requested {k}) edges={} coverage={:.4} \
+         degree min/mean/max = {dmin}/{:.1}/{dmax} bytes={} built in {}",
+        graph.k(),
+        graph.edge_count(),
+        graph.coverage(),
+        graph.mean_degree(),
+        graph.allocated_bytes(),
+        crate::bench::fmt_secs(build_s)
+    );
+    match mode {
+        "build" => {}
+        "inspect" => {
+            // Degree histogram in 8 buckets between min and max.
+            let buckets = 8usize;
+            let span = (dmax - dmin).max(1);
+            let mut hist = vec![0usize; buckets];
+            for i in 0..n {
+                let b = ((graph.degree(i) - dmin) * (buckets - 1)) / span;
+                hist[b] += 1;
+            }
+            println!("degree histogram ({buckets} buckets over {dmin}..={dmax}):");
+            for (b, count) in hist.iter().enumerate() {
+                let lo = dmin + b * span / (buckets - 1).max(1);
+                let bar = "#".repeat((count * 40 / n.max(1)).min(40));
+                println!("  >= {lo:<6} {count:>6}  {bar}");
+            }
+            for i in 0..n.min(4) {
+                let row = graph.neighbors(i);
+                let shown: Vec<String> =
+                    row.iter().take(12).map(|v| v.to_string()).collect();
+                let ell = if row.len() > 12 { ", ..." } else { "" };
+                println!("  N({i}) = [{}{}] (degree {})", shown.join(", "), ell, row.len());
+            }
+        }
+        "compare" => {
+            let config = config_from(args)?;
+            anyhow::ensure!(
+                config.backend == Backend::Native,
+                "knn compare is served by the native engine (--backend native)"
+            );
+            // Truncated run: pinned sparse kernel unless --alg given.
+            let mut sparse_cfg = config.clone();
+            sparse_cfg.k = graph.k();
+            if args.get("alg").is_none() {
+                sparse_cfg.algorithm = Algorithm::KnnOptPairwise;
+            }
+            let mut sparse = PaldBuilder::from_config(&sparse_cfg).build()?;
+            let t0 = Instant::now();
+            let rs = sparse.compute(input.as_ref())?;
+            let sparse_s = t0.elapsed().as_secs_f64();
+            // Dense reference run.
+            let mut dense_cfg = config;
+            dense_cfg.k = 0;
+            if args.get("alg").is_none() {
+                dense_cfg.algorithm = Algorithm::OptimizedPairwise;
+            }
+            let mut dense = PaldBuilder::from_config(&dense_cfg).build()?;
+            let t0 = Instant::now();
+            let rd = dense.compute(input.as_ref())?;
+            let dense_s = t0.elapsed().as_secs_f64();
+            let maxdiff = rs.cohesion().max_abs_diff(rd.cohesion());
+            println!(
+                "compare: sparse {} in {} vs dense {} in {} ({})",
+                rs.plan().describe(),
+                crate::bench::fmt_secs(sparse_s),
+                rd.plan().describe(),
+                crate::bench::fmt_secs(dense_s),
+                crate::bench::fmt_speedup(dense_s / sparse_s.max(1e-12))
+            );
+            println!(
+                "  max |C_knn - C_dense| = {maxdiff:.3e}  effective_k={:?}  mass bound={:.4}",
+                rs.effective_k(),
+                rs.truncation_error_bound().unwrap_or(0.0)
+            );
+            if graph.is_full() {
+                anyhow::ensure!(
+                    rs.cohesion().as_slice() == rd.cohesion().as_slice()
+                        || rs.cohesion().allclose(rd.cohesion(), 1e-4, 1e-5),
+                    "complete graph must reproduce dense cohesion"
+                );
+            }
+        }
+        other => anyhow::bail!("unknown knn mode '{other}' (build|inspect|compare)"),
     }
     Ok(())
 }
@@ -561,7 +704,57 @@ mod tests {
     fn plan_command_runs() {
         run(argv(&["plan", "--n", "256"])).unwrap();
         run(argv(&["plan", "--n", "512", "--threads", "8", "--tie", "split"])).unwrap();
+        run(argv(&["plan", "--n", "2048", "--threads", "1", "--k", "16"])).unwrap();
         assert!(run(argv(&["plan", "--n", "1"])).is_err());
+    }
+
+    #[test]
+    fn knn_command_modes() {
+        run(argv(&["knn", "--n", "48", "--k", "6"])).unwrap();
+        run(argv(&["knn", "--n", "48", "--k", "6", "--mode", "inspect"])).unwrap();
+        run(argv(&[
+            "knn", "--n", "48", "--k", "6", "--mode", "compare", "--threads", "1",
+        ]))
+        .unwrap();
+        // Complete graph (k >= n-1) passes the compare exactness gate.
+        run(argv(&[
+            "knn", "--n", "24", "--k", "23", "--mode", "compare", "--threads", "1",
+        ]))
+        .unwrap();
+        assert!(run(argv(&["knn", "--n", "16", "--k", "0"])).is_err(), "k=0 is invalid");
+        assert!(run(argv(&["knn", "--n", "16", "--k", "3", "--mode", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn compute_with_neighborhood_reports_truncation() {
+        run(argv(&[
+            "compute", "--n", "64", "--alg", "knn-opt-triplet", "--k", "8", "--threads", "1",
+        ]))
+        .unwrap();
+        run(argv(&["compute", "--n", "512", "--alg", "auto", "--k", "8", "--threads", "1"]))
+            .unwrap();
+    }
+
+    #[test]
+    fn stream_with_neighborhood_passes_graph_oracle() {
+        let dir = tmp_dir();
+        run(argv(&[
+            "stream",
+            "--n",
+            "36",
+            "--warm",
+            "24",
+            "--churn",
+            "5",
+            "--k",
+            "6",
+            "--threads",
+            "1",
+            "--check",
+            "--bench-dir",
+            dir.to_str().unwrap(),
+        ]))
+        .unwrap();
     }
 
     #[test]

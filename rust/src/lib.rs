@@ -24,8 +24,15 @@
 //!   see [`runtime`] and [`coordinator`];
 //! * an **incremental engine** ([`pald::IncrementalPald`]) maintaining
 //!   cohesion across online point insertions and removals without the
-//!   Θ(n³) batch recompute, with allocation-free steady-state updates
-//!   (DESIGN.md §8), see [`pald::incremental`] and `paldx stream`;
+//!   Θ(n³) batch recompute, with allocation-free steady-state updates,
+//!   batched inserts sharing one membership scan, and re-anchor
+//!   policies for long streams (DESIGN.md §8), see [`pald::incremental`]
+//!   and `paldx stream`;
+//! * a **sparse PKNN engine** truncating the conflict pairs to an exact
+//!   symmetrized k-nearest-neighbor graph at O(n·k²) — four `knn-*`
+//!   kernels in the same registry, planner-costed against the dense
+//!   ladder, bit-identical to dense at `k = n-1` (DESIGN.md §9), see
+//!   [`pald::knn`] and `paldx knn`;
 //! * simulators used for the paper's analyses: an LRU cache simulator and
 //!   block-traffic counters validating the communication bounds of
 //!   Theorems 4.1/4.2, and a calibrated multicore machine model used to

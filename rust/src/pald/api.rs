@@ -48,6 +48,14 @@ pub enum Algorithm {
     Hybrid,
     /// Parallel hybrid (column-partitioned cohesion pass).
     ParallelHybrid,
+    /// Truncated PKNN pairwise, branchy reference rung (DESIGN.md §9).
+    KnnPairwise,
+    /// Truncated PKNN triplet ordering, branchy reference rung.
+    KnnTriplet,
+    /// Truncated PKNN pairwise, blocked + branch-free rung.
+    KnnOptPairwise,
+    /// Truncated PKNN triplet ordering, blocked + branch-free rung.
+    KnnOptTriplet,
     /// Planner-selected kernel + block sizes from the machine profile.
     Auto,
 }
@@ -55,7 +63,7 @@ pub enum Algorithm {
 impl Algorithm {
     /// The concrete kernels, in ladder order (excludes [`Algorithm::Auto`],
     /// which is a planner directive, not a kernel).
-    pub const ALL: [Algorithm; 12] = [
+    pub const ALL: [Algorithm; 16] = [
         Algorithm::NaivePairwise,
         Algorithm::NaiveTriplet,
         Algorithm::BlockedPairwise,
@@ -68,6 +76,10 @@ impl Algorithm {
         Algorithm::ParallelTriplet,
         Algorithm::Hybrid,
         Algorithm::ParallelHybrid,
+        Algorithm::KnnPairwise,
+        Algorithm::KnnTriplet,
+        Algorithm::KnnOptPairwise,
+        Algorithm::KnnOptTriplet,
     ];
 
     /// Registry/CLI name of the variant.
@@ -85,6 +97,10 @@ impl Algorithm {
             Algorithm::ParallelTriplet => "par-triplet",
             Algorithm::Hybrid => "hybrid",
             Algorithm::ParallelHybrid => "par-hybrid",
+            Algorithm::KnnPairwise => "knn-pairwise",
+            Algorithm::KnnTriplet => "knn-triplet",
+            Algorithm::KnnOptPairwise => "knn-opt-pairwise",
+            Algorithm::KnnOptTriplet => "knn-opt-triplet",
             Algorithm::Auto => "auto",
         }
     }
@@ -105,6 +121,33 @@ impl Algorithm {
     /// Registered kernel for this algorithm (`None` for `Auto`).
     pub fn kernel(&self) -> Option<&'static dyn CohesionKernel> {
         kernel_for(*self)
+    }
+
+    /// The sparse PKNN counterpart that honors a truncated-neighborhood
+    /// request (`PaldConfig::k > 0`) for a pinned dense kernel: the
+    /// naive rung keeps the branchy reference semantics, every higher
+    /// rung maps to the optimized sparse rung, and the ordering is
+    /// preserved (pairwise → pairwise; triplet and hybrid → the
+    /// two-pass triplet ordering).  Sparse kernels and [`Algorithm::Auto`]
+    /// map to themselves.  This is how `k > 0` in a resolved [`Plan`]
+    /// always means "this run truncates" — a dense pin never silently
+    /// drops the neighborhood request.
+    pub fn truncated(&self) -> Algorithm {
+        match self {
+            Algorithm::NaivePairwise => Algorithm::KnnPairwise,
+            Algorithm::NaiveTriplet => Algorithm::KnnTriplet,
+            Algorithm::BlockedPairwise
+            | Algorithm::BranchFreePairwise
+            | Algorithm::OptimizedPairwise
+            | Algorithm::ParallelPairwise => Algorithm::KnnOptPairwise,
+            Algorithm::BlockedTriplet
+            | Algorithm::BranchFreeTriplet
+            | Algorithm::OptimizedTriplet
+            | Algorithm::ParallelTriplet
+            | Algorithm::Hybrid
+            | Algorithm::ParallelHybrid => Algorithm::KnnOptTriplet,
+            other => *other,
+        }
     }
 }
 
@@ -132,6 +175,13 @@ pub struct PaldConfig {
     pub block2: usize,
     /// Worker threads for the parallel algorithms.
     pub threads: usize,
+    /// Truncated-neighborhood size for the sparse PKNN kernels: only
+    /// conflict pairs inside the symmetrized k-nearest-neighbor graph
+    /// are evaluated, at O(n·k²) cost (0 = full, the dense Θ(n³)
+    /// semantics; DESIGN.md §9).  With `Algorithm::Auto` the planner
+    /// costs truncation against the dense kernels and picks it when it
+    /// wins.
+    pub k: usize,
     /// Execution backend (native kernels or the XLA artifact path).
     pub backend: Backend,
 }
@@ -144,6 +194,7 @@ impl Default for PaldConfig {
             block: 0,
             block2: 0,
             threads: available_threads(),
+            k: 0,
             backend: Backend::Native,
         }
     }
@@ -419,6 +470,21 @@ mod tests {
         let mut ws = Workspace::new();
         let mut out = Mat::zeros(7, 7);
         assert!(compute_cohesion_into(&d, &PaldConfig::default(), &mut ws, &mut out).is_err());
+    }
+
+    #[test]
+    fn truncated_counterparts_preserve_ordering_and_rung() {
+        use crate::pald::kernel::kernel_for;
+        assert_eq!(Algorithm::NaivePairwise.truncated(), Algorithm::KnnPairwise);
+        assert_eq!(Algorithm::NaiveTriplet.truncated(), Algorithm::KnnTriplet);
+        assert_eq!(Algorithm::OptimizedPairwise.truncated(), Algorithm::KnnOptPairwise);
+        assert_eq!(Algorithm::ParallelHybrid.truncated(), Algorithm::KnnOptTriplet);
+        assert_eq!(Algorithm::Auto.truncated(), Algorithm::Auto);
+        for alg in Algorithm::ALL {
+            let t = alg.truncated();
+            assert!(kernel_for(t).unwrap().meta().sparse, "{}", alg.name());
+            assert_eq!(t.truncated(), t, "sparse kernels are fixed points");
+        }
     }
 
     #[test]

@@ -43,6 +43,14 @@ pub enum PaldError {
     ///
     /// [`ComputedDistances`]: crate::pald::ComputedDistances
     UnknownMetric { name: String },
+    /// `Neighborhood::Knn(0)` (or a zero `k` handed to the graph
+    /// builder) — a truncated neighborhood needs at least one neighbor;
+    /// use [`Neighborhood::Full`](crate::pald::Neighborhood::Full) for
+    /// the dense semantics.
+    InvalidNeighborhood {
+        /// The rejected neighborhood size.
+        k: usize,
+    },
     /// `BlockSize::Fixed(0)` — use `BlockSize::Auto` for planner defaults.
     InvalidBlock { value: usize },
     /// `Threads::Fixed(0)` — use `Threads::Auto` for the host parallelism.
@@ -124,6 +132,13 @@ impl fmt::Display for PaldError {
             }
             PaldError::UnknownMetric { name } => {
                 write!(f, "unknown metric '{name}' (expected euclidean, manhattan, or cosine)")
+            }
+            PaldError::InvalidNeighborhood { k } => {
+                write!(
+                    f,
+                    "neighborhood size {k} is invalid; need k >= 1 \
+                     (Neighborhood::Full for the dense semantics)"
+                )
             }
             PaldError::InvalidBlock { value } => {
                 write!(f, "block size {value} is invalid; use BlockSize::Auto for tuned defaults")

@@ -41,6 +41,27 @@ pub enum Threads {
     Fixed(usize),
 }
 
+/// Conflict-pair scope: every pair (dense, the paper's semantics), or
+/// only pairs inside the symmetrized k-nearest-neighbor graph (the PKNN
+/// truncation, O(n·k²) instead of Θ(n³); DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Neighborhood {
+    /// Evaluate every conflict pair — the exact dense semantics.
+    #[default]
+    Full,
+    /// Evaluate only pairs inside the symmetrized k-nearest-neighbor
+    /// graph (`k >= 1`; clamped to `n - 1` per problem, where the
+    /// computation is bit-identical to dense).  With `Algorithm::Auto`
+    /// the planner costs truncation against the dense kernels and picks
+    /// whichever is predicted faster (declining it when `k` is too
+    /// close to `n` to win — observable as
+    /// [`CohesionResult::effective_k`](crate::pald::CohesionResult::effective_k)
+    /// `== None`); a pinned dense algorithm maps to its sparse
+    /// counterpart ([`Algorithm::truncated`]) so the request is never
+    /// silently dropped.
+    Knn(usize),
+}
+
 /// Input-validation policy for [`Pald::compute`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Validation {
@@ -64,6 +85,7 @@ pub struct PaldBuilder {
     block: BlockSize,
     block2: BlockSize,
     threads: Threads,
+    neighborhood: Neighborhood,
     validation: Validation,
     backend: Backend,
 }
@@ -77,6 +99,7 @@ impl Default for PaldBuilder {
             block: BlockSize::Auto,
             block2: BlockSize::Auto,
             threads: Threads::Auto,
+            neighborhood: Neighborhood::Full,
             validation: Validation::Strict,
             backend: Backend::Native,
         }
@@ -107,6 +130,7 @@ impl PaldBuilder {
             } else {
                 Threads::Fixed(cfg.threads)
             },
+            neighborhood: if cfg.k == 0 { Neighborhood::Full } else { Neighborhood::Knn(cfg.k) },
             validation: Validation::Strict,
             backend: cfg.backend,
         }
@@ -151,6 +175,17 @@ impl PaldBuilder {
         self
     }
 
+    /// Conflict-pair scope: [`Neighborhood::Knn(k)`] restricts the
+    /// computation to the symmetrized k-nearest-neighbor graph at
+    /// O(n·k²) cost (DESIGN.md §9); validated at [`PaldBuilder::build`]
+    /// with [`PaldError::InvalidNeighborhood`] for `Knn(0)`.
+    ///
+    /// [`Neighborhood::Knn(k)`]: Neighborhood::Knn
+    pub fn neighborhood(mut self, neighborhood: Neighborhood) -> PaldBuilder {
+        self.neighborhood = neighborhood;
+        self
+    }
+
     /// Input-validation policy (strict by default).
     pub fn validation(mut self, validation: Validation) -> PaldBuilder {
         self.validation = validation;
@@ -178,12 +213,18 @@ impl PaldBuilder {
             Threads::Fixed(0) => return Err(PaldError::InvalidThreads { value: 0 }),
             Threads::Fixed(t) => t,
         };
+        let k = match self.neighborhood {
+            Neighborhood::Full => 0,
+            Neighborhood::Knn(0) => return Err(PaldError::InvalidNeighborhood { k: 0 }),
+            Neighborhood::Knn(k) => k,
+        };
         let cfg = PaldConfig {
             algorithm,
             tie_mode: self.tie_mode,
             block,
             block2,
             threads,
+            k,
             // Session::new rejects Backend::Xla with UnsupportedBackend.
             backend: self.backend,
         };
@@ -240,7 +281,8 @@ impl Pald {
         let plan = self.session.plan_for(n);
         let mut out = Mat::zeros(n, n);
         let times = self.session.compute_into(input, &mut out)?;
-        Ok(CohesionResult::new(out, times, plan))
+        let knn = self.session.last_knn_report();
+        Ok(CohesionResult::with_truncation(out, times, plan, knn))
     }
 
     /// The resolved configuration this facade executes.
@@ -404,7 +446,45 @@ mod tests {
         let b = PaldBuilder::from_config(&PaldConfig { block: 0, block2: 64, ..Default::default() });
         assert_eq!(b.block, BlockSize::Auto);
         assert_eq!(b.block2, BlockSize::Fixed(64));
+        assert_eq!(b.neighborhood, Neighborhood::Full);
         assert!(b.build().is_ok());
+        let b = PaldBuilder::from_config(&PaldConfig { k: 9, ..Default::default() });
+        assert_eq!(b.neighborhood, Neighborhood::Knn(9));
+    }
+
+    #[test]
+    fn neighborhood_is_validated_and_reported() {
+        assert!(matches!(
+            Pald::builder().neighborhood(Neighborhood::Knn(0)).build(),
+            Err(PaldError::InvalidNeighborhood { k: 0 })
+        ));
+        // A truncated computation reports its effective k and a zero
+        // error bound exactly when the graph is complete.
+        let d = distmat::random_tie_free(24, 8);
+        let mut p = Pald::builder()
+            .neighborhood(Neighborhood::Knn(5))
+            .algorithm(Algorithm::KnnOptPairwise)
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        assert_eq!(p.config().k, 5);
+        let r = p.compute(&d).unwrap();
+        assert_eq!(r.effective_k(), Some(5));
+        assert!(r.truncation_error_bound().unwrap() > 0.0);
+        let mut full = Pald::builder()
+            .neighborhood(Neighborhood::Knn(23))
+            .algorithm(Algorithm::KnnPairwise)
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        let rf = full.compute(&d).unwrap();
+        assert_eq!(rf.effective_k(), Some(23));
+        assert_eq!(rf.truncation_error_bound(), Some(0.0));
+        // Dense runs report no truncation at all.
+        let mut dense = Pald::builder().threads(Threads::Fixed(1)).build().unwrap();
+        let rd = dense.compute(&d).unwrap();
+        assert_eq!(rd.effective_k(), None);
+        assert_eq!(rd.truncation_error_bound(), None);
     }
 
     #[test]

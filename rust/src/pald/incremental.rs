@@ -35,6 +35,31 @@
 //! registered kernel metadata, and all scratch state lives in
 //! capacity-padded [`PaddedSquare`] buffers so steady-state updates
 //! perform no heap allocation (counted by [`UpdateStats::grow_events`]).
+//!
+//! Three serving extensions ride on the same state (DESIGN.md §9):
+//!
+//! * **Graph-capped updates.**  When a truncated neighborhood is
+//!   requested (`PaldConfig::k > 0` /
+//!   [`PaldBuilder::neighborhood`](crate::pald::PaldBuilder::neighborhood))
+//!   *and* the resolved plan is a sparse kernel (always, for pinned
+//!   algorithms — dense pins map to their sparse counterpart; the
+//!   planner's verdict under `Auto`), the engine maintains the PKNN
+//!   semantics over an online symmetrized kNN graph: only graph edges
+//!   exist as conflict pairs, candidate sweeps span O(k) merged
+//!   neighbor sets, and an insert touches O(k·degree) pairs instead of
+//!   O(n²) — the ROADMAP's "cap the reweight sweep" follow-up.  The
+//!   state is exact over the engine's own graph (oracle:
+//!   [`knn::cohesion_over_graph`](crate::pald::knn::cohesion_over_graph));
+//!   the graph itself is an online approximation of the batch kNN graph
+//!   (append-only inserts never displace edges) until a re-anchor
+//!   rebuilds it exactly.
+//! * **Batched inserts.**  [`IncrementalPald::insert_batch`] lands a
+//!   whole batch with one shared membership scan and a single
+//!   rescale-to-final-weight per affected pair.
+//! * **Re-anchoring.**  [`ReanchorPolicy`] triggers an in-place batch
+//!   recompute of `U`/`S` (and the graph) to bound f64 drift on very
+//!   long update streams; [`IncrementalPald::drift_estimate`] is the
+//!   policy's conservative rounding proxy.
 
 // The update primitives mirror the batch kernels' wide signatures
 // (distance rows, weight, two support rows, a z-range, tiling, ties).
@@ -50,6 +75,7 @@ use crate::pald::error::PaldError;
 use crate::pald::facade::Validation;
 use crate::pald::input::{metric_pair, DistanceInput};
 use crate::pald::kernel::{kernel_for, Rung};
+use crate::pald::knn::{merge_sorted, NeighborGraph};
 use crate::pald::planner::Plan;
 use crate::pald::session::Session;
 use crate::pald::stream::{InsertRow, PaddedSquare, PointStore, UpdateStats};
@@ -228,6 +254,122 @@ pub fn update_kernel_for(rung: Rung) -> &'static dyn UpdateKernel {
     }
 }
 
+/// When a long update stream should re-anchor: run an in-place batch
+/// recompute of the maintained support state (and, on graph-capped
+/// engines, rebuild the neighbor graph to the exact batch graph) to
+/// bound accumulated float drift and graph staleness.
+///
+/// Set via [`IncrementalPald::set_reanchor_policy`]; every re-anchor is
+/// counted in [`UpdateStats::reanchors`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ReanchorPolicy {
+    /// Never re-anchor automatically (callers can still invoke
+    /// [`IncrementalPald::reanchor_now`]).
+    #[default]
+    Never,
+    /// Re-anchor after every `N` successful updates (`N = 0` is inert,
+    /// equivalent to [`ReanchorPolicy::Never`]).
+    EveryN(u64),
+    /// Re-anchor once [`IncrementalPald::drift_estimate`] — a
+    /// conservative `EPSILON × rescale-ops` proxy for accumulated f64
+    /// rounding — reaches this threshold.  `DriftThreshold(0.0)`
+    /// re-anchors after every update.
+    DriftThreshold(f64),
+}
+
+/// Truncated-neighborhood state of a graph-capped engine (DESIGN.md §9):
+/// the configured `k`, the online symmetrized adjacency (each row
+/// ascending-sorted), and reusable update scratch.
+///
+/// The adjacency grows append-only on insert (the new point adopts its
+/// `k` nearest, which adopt it back — existing edges are never
+/// displaced) and shrinks exactly on remove, so after churn it is an
+/// online approximation of the batch kNN graph; a re-anchor
+/// ([`ReanchorPolicy`]) rebuilds it to the exact batch graph.  Updates
+/// are verified against the batch oracle *over this same graph*
+/// ([`crate::pald::knn::cohesion_over_graph`]).
+struct KnnState {
+    /// Configured base-neighborhood size.
+    k: usize,
+    /// Symmetrized adjacency lists, ascending-sorted, self-free.
+    adj: Vec<Vec<u32>>,
+    /// Selection scratch for the new point's k nearest.
+    sel: Vec<(f32, u32)>,
+    /// The new point's base list, ascending.
+    bq: Vec<u32>,
+    /// Candidate-merge buffer.
+    cand: Vec<u32>,
+    /// Membership scratch (dedup of pair visits).
+    mark: Vec<bool>,
+}
+
+impl KnnState {
+    fn new(k: usize) -> KnnState {
+        KnnState {
+            k,
+            adj: Vec::new(),
+            sel: Vec::new(),
+            bq: Vec::new(),
+            cand: Vec::new(),
+            mark: Vec::new(),
+        }
+    }
+
+    fn allocated_bytes(&self) -> usize {
+        self.adj.iter().map(|r| r.capacity() * std::mem::size_of::<u32>()).sum::<usize>()
+            + self.adj.capacity() * std::mem::size_of::<Vec<u32>>()
+            + self.sel.capacity() * std::mem::size_of::<(f32, u32)>()
+            + (self.bq.capacity() + self.cand.capacity()) * std::mem::size_of::<u32>()
+            + self.mark.capacity()
+    }
+}
+
+/// Focus size over an explicit candidate list (`skip` = index to treat
+/// as already gone, `u32::MAX` for none) — the f64-path twin of the
+/// sparse batch kernels' candidate count.
+fn count_cands(dx: &[f32], dy: &[f32], dxy: f32, cand: &[u32], skip: u32, tie: TieMode) -> u32 {
+    let mut cnt = 0u32;
+    for &zu in cand {
+        if zu == skip {
+            continue;
+        }
+        let z = zu as usize;
+        if in_focus(dx[z], dy[z], dxy, tie) {
+            cnt += 1;
+        }
+    }
+    cnt
+}
+
+/// Add `w` along the pair's award pattern over an explicit candidate
+/// list (`skip` as in [`count_cands`]) — candidate-order ascending, so
+/// with a complete graph this is bit-identical to the dense
+/// [`ReferenceUpdate`] sweep.
+fn award_cands(
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    w: f64,
+    sx: &mut [f64],
+    sy: &mut [f64],
+    cand: &[u32],
+    skip: u32,
+    tie: TieMode,
+) {
+    for &zu in cand {
+        if zu == skip {
+            continue;
+        }
+        let z = zu as usize;
+        let dxz = dx[z];
+        let dyz = dy[z];
+        if !in_focus(dxz, dyz, dxy, tie) {
+            continue;
+        }
+        award_one(dxz, dyz, w, &mut sx[z], &mut sy[z], tie);
+    }
+}
+
 /// Award `w` for a single known focus member `z` of a pair (the newly
 /// inserted point, which joins at the pair's *new* weight while the old
 /// members are rescaled).  Must agree exactly with [`UpdateKernel::award`].
@@ -309,6 +451,12 @@ pub struct IncrementalPald {
     points: Option<PointStore>,
     kern: &'static dyn UpdateKernel,
     block_cfg: usize,
+    /// Truncated-neighborhood state when the configuration requests a
+    /// kNN cap (`PaldConfig::k > 0`); `None` = exact dense semantics.
+    knn: Option<KnnState>,
+    policy: ReanchorPolicy,
+    updates_since_anchor: u64,
+    drift_ops: u64,
     stats: UpdateStats,
 }
 
@@ -353,6 +501,19 @@ impl IncrementalPald {
         let kern = update_kernel_for(kernel.meta().rung);
         let tie = session.config().tie_mode;
         let block_cfg = plan.params.block;
+        // The engine truncates exactly when its resolved plan is a
+        // sparse kernel, so `batch_recompute` (which dispatches that
+        // plan) always agrees in kind with the maintained state: pinned
+        // algorithms with `k > 0` resolve to a sparse kernel via
+        // `Algorithm::truncated`, and under `Algorithm::Auto` the
+        // planner's verdict decides — a declined truncation (k too
+        // close to n to win) yields an exact dense engine.
+        let k_cfg = session.config().k;
+        let knn = if kernel.meta().sparse && k_cfg > 0 {
+            Some(KnnState::new(k_cfg))
+        } else {
+            None
+        };
         let mut eng = IncrementalPald {
             session,
             validation,
@@ -364,20 +525,38 @@ impl IncrementalPald {
             points,
             kern,
             block_cfg,
+            knn,
+            policy: ReanchorPolicy::Never,
+            updates_since_anchor: 0,
+            drift_ops: 0,
             stats: UpdateStats::default(),
         };
         eng.seed();
         Ok(eng)
     }
 
-    /// One-time O(n³) batch seeding of `U` and `S` through the update
-    /// kernel (the same primitives every later update reuses).
+    /// Batch seeding of `U` and `S` from the current distances through
+    /// the same primitives every later update reuses — O(n³) dense,
+    /// O(n·k²) graph-capped.  Also what [`IncrementalPald::reanchor_now`]
+    /// re-runs in place, so the logical state region is zeroed first.
     fn seed(&mut self) {
+        if self.knn.is_some() {
+            self.seed_knn();
+        } else {
+            self.seed_dense();
+        }
+    }
+
+    fn seed_dense(&mut self) {
         let n = self.n;
         let tie = self.tie;
         let kern = self.kern;
         let block = resolve_block(self.block_cfg, n);
         let IncrementalPald { d, u, s, .. } = self;
+        for x in 0..n {
+            u.row_mut(x).fill(0);
+            s.row_mut(x).fill(0.0);
+        }
         for x in 0..(n - 1) {
             for y in (x + 1)..n {
                 let dxy = d.at(x, y);
@@ -386,6 +565,46 @@ impl IncrementalPald {
                 let w = 1.0 / f64::from(uf);
                 let (sx, sy) = s.two_rows_mut(x, y);
                 kern.award(d.row(x), d.row(y), dxy, w, sx, sy, 0, n, block, tie);
+            }
+        }
+    }
+
+    /// Graph-capped seeding: build the exact batch kNN graph of the
+    /// current points, then count + award every edge over its merged
+    /// candidate set — identical semantics to the batch sparse kernels
+    /// over the same graph.
+    fn seed_knn(&mut self) {
+        let n = self.n;
+        let tie = self.tie;
+        let dm = self.distances();
+        {
+            let ks = self.knn.as_mut().expect("knn seed on a graph-capped engine");
+            let g = NeighborGraph::build(&dm, ks.k).expect("validated distances and k >= 1");
+            ks.adj.clear();
+            for x in 0..n {
+                ks.adj.push(g.neighbors(x).to_vec());
+            }
+        }
+        let IncrementalPald { d, u, s, knn, .. } = self;
+        let ks = knn.as_mut().expect("checked above");
+        let KnnState { adj, cand, .. } = ks;
+        for x in 0..n {
+            u.row_mut(x).fill(0);
+            s.row_mut(x).fill(0.0);
+        }
+        for x in 0..n {
+            for &yu in adj[x].iter() {
+                let y = yu as usize;
+                if y <= x {
+                    continue;
+                }
+                let dxy = d.at(x, y);
+                merge_sorted(&adj[x], &adj[y], cand);
+                let uf = count_cands(d.row(x), d.row(y), dxy, cand, u32::MAX, tie);
+                u.set_sym(x, y, uf);
+                let w = 1.0 / f64::from(uf);
+                let (sx, sy) = s.two_rows_mut(x, y);
+                award_cands(d.row(x), d.row(y), dxy, w, sx, sy, cand, u32::MAX, tie);
             }
         }
     }
@@ -422,17 +641,83 @@ impl IncrementalPald {
     }
 
     /// Update accounting (inserts, removes, reweighted pairs, growth
-    /// events, timings).
+    /// events, re-anchors, timings).
     pub fn stats(&self) -> UpdateStats {
         self.stats
     }
 
-    /// Bytes held by the engine's incremental state (`D`, `U`, `S`, and
-    /// any retained points) — constant across steady-state updates.
+    /// The configured truncated-neighborhood size, `None` on dense
+    /// engines (DESIGN.md §9).
+    pub fn neighborhood(&self) -> Option<usize> {
+        self.knn.as_ref().map(|ks| ks.k)
+    }
+
+    /// CSR snapshot of the engine's current neighbor graph (`None` on
+    /// dense engines) — the graph the truncated state is exact over,
+    /// verifiable with
+    /// [`knn::cohesion_over_graph`](crate::pald::knn::cohesion_over_graph).
+    pub fn neighbor_graph(&self) -> Option<NeighborGraph> {
+        self.knn.as_ref().map(|ks| NeighborGraph::from_adjacency(ks.k, &ks.adj))
+    }
+
+    /// The automatic re-anchor policy (default
+    /// [`ReanchorPolicy::Never`]).
+    pub fn reanchor_policy(&self) -> ReanchorPolicy {
+        self.policy
+    }
+
+    /// Set the automatic re-anchor policy for long update streams.
+    pub fn set_reanchor_policy(&mut self, policy: ReanchorPolicy) {
+        self.policy = policy;
+    }
+
+    /// Successful updates since the last re-anchor (or since seeding).
+    pub fn updates_since_reanchor(&self) -> u64 {
+        self.updates_since_anchor
+    }
+
+    /// Conservative accumulated-rounding proxy driving
+    /// [`ReanchorPolicy::DriftThreshold`]: `f64::EPSILON` times the
+    /// support-rescale operations performed since the last anchor.
+    /// Linear in update volume — an upper-bound-shaped model, not a
+    /// measured error (the oracle tests bound the real deviation).
+    pub fn drift_estimate(&self) -> f64 {
+        f64::EPSILON * self.drift_ops as f64
+    }
+
+    /// Re-anchor immediately: re-run the batch seeding of `U` and `S`
+    /// in place from the maintained distances (for graph-capped engines
+    /// this also rebuilds the neighbor graph to the exact batch graph),
+    /// shedding all accumulated f64 rescale rounding.  Counted in
+    /// [`UpdateStats::reanchors`].
+    pub fn reanchor_now(&mut self) {
+        self.seed();
+        self.stats.reanchors += 1;
+        self.updates_since_anchor = 0;
+        self.drift_ops = 0;
+    }
+
+    /// Apply the policy after a successful update.
+    fn maybe_reanchor(&mut self) {
+        let due = match self.policy {
+            ReanchorPolicy::Never => false,
+            ReanchorPolicy::EveryN(c) => c > 0 && self.updates_since_anchor >= c,
+            ReanchorPolicy::DriftThreshold(t) => self.drift_estimate() >= t,
+        };
+        if due {
+            self.reanchor_now();
+        }
+    }
+
+    /// Bytes held by the engine's incremental state (`D`, `U`, `S`, the
+    /// neighbor graph on graph-capped engines, and any retained points)
+    /// — constant across steady-state updates on the dense path (the
+    /// graph adjacency grows by O(k) per inserted point).
     pub fn state_bytes(&self) -> usize {
         self.d.allocated_bytes()
             + self.u.allocated_bytes()
             + self.s.allocated_bytes()
+            + self.knn.as_ref().map_or(0, |k| k.allocated_bytes())
             + self.points.as_ref().map_or(0, |p| p.allocated_bytes())
     }
 
@@ -588,49 +873,315 @@ impl IncrementalPald {
         }
 
         // ---- Incremental update of U and S. ----
+        let nn = m + 1;
+        let reweighted =
+            if self.knn.is_some() { self.insert_knn(m) } else { self.insert_dense(m) };
+        self.n = nn;
+        self.stats.inserts += 1;
+        self.stats.reweighted_pairs += reweighted;
+        self.updates_since_anchor += 1;
+        self.drift_ops += reweighted * nn as u64;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.last_update_s = dt;
+        self.stats.total_update_s += dt;
+        self.maybe_reanchor();
+        Ok(m)
+    }
+
+    /// Dense insert update: the O(n²) triplets containing the new point
+    /// plus the data-dependent reweight sweep.  Returns the reweighted
+    /// pair count.
+    fn insert_dense(&mut self, m: usize) -> u64 {
         let tie = self.tie;
         let kern = self.kern;
         let nn = m + 1;
         let block = resolve_block(self.block_cfg, nn);
         let mut reweighted = 0u64;
+        let IncrementalPald { d, u, s, .. } = self;
+        // Existing pairs whose focus gains q: bump u, rescale the
+        // old members by Δw, and award q at the new weight.
+        for x in 0..m {
+            for y in (x + 1)..m {
+                let dxy = d.at(x, y);
+                let (dxq, dyq) = (d.at(x, m), d.at(y, m));
+                if !in_focus(dxq, dyq, dxy, tie) {
+                    continue;
+                }
+                let u_old = u.at(x, y);
+                let u_new = u_old + 1;
+                u.set_sym(x, y, u_new);
+                let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
+                let (sx, sy) = s.two_rows_mut(x, y);
+                kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, m, block, tie);
+                award_one(dxq, dyq, 1.0 / f64::from(u_new), &mut sx[m], &mut sy[m], tie);
+                reweighted += 1;
+            }
+        }
+        // New pairs (x, q): full focus count + award over all nn
+        // points — the O(n²) triplets containing q.
+        for x in 0..m {
+            let dxy = d.at(x, m);
+            let uf = kern.count_focus(d.row(x), d.row(m), dxy, tie);
+            u.set_sym(x, m, uf);
+            let w = 1.0 / f64::from(uf);
+            let (sx, sq) = s.two_rows_mut(x, m);
+            kern.award(d.row(x), d.row(m), dxy, w, sx, sq, 0, nn, block, tie);
+        }
+        reweighted
+    }
+
+    /// Graph-capped insert update (the PKNN cap on the reweight sweep,
+    /// DESIGN.md §9): the new point adopts its `k` nearest current
+    /// points (append-only — existing edges are never displaced), only
+    /// the O(k · degree) existing edges adjacent to that base list can
+    /// gain `q` as a focus candidate, and each award sweeps the O(k)
+    /// merged candidate set instead of all n points.  Exactly the
+    /// truncated batch semantics over the engine's own graph.
+    fn insert_knn(&mut self, m: usize) -> u64 {
+        let tie = self.tie;
+        let mut reweighted = 0u64;
+        let IncrementalPald { d, u, s, knn, .. } = self;
+        let ks = knn.as_mut().expect("insert_knn on a graph-capped engine");
+        let KnnState { k, adj, sel, bq, cand, mark } = ks;
+
+        // B(q): the k nearest existing points under the deterministic
+        // (distance, index) order.
+        sel.clear();
+        for x in 0..m {
+            sel.push((d.at(m, x), x as u32));
+        }
+        let ke = (*k).min(m);
+        if ke < sel.len() {
+            sel.select_nth_unstable_by(ke - 1, |a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            sel.truncate(ke);
+        }
+        bq.clear();
+        bq.extend(sel.iter().map(|&(_, j)| j));
+        bq.sort_unstable();
+        if mark.len() < m + 1 {
+            mark.resize(m + 1, false);
+        }
+        for &x in bq.iter() {
+            mark[x as usize] = true;
+        }
+
+        // Existing edges whose candidate set gains q — exactly those
+        // with an endpoint in B(q).  Rescale old candidates by Δw when
+        // q joins the focus, and award q at the new weight.
+        for &xu in bq.iter() {
+            let x = xu as usize;
+            for &yu in adj[x].iter() {
+                let y = yu as usize;
+                if mark[y] && y < x {
+                    continue; // both endpoints in B(q): visit once
+                }
+                let (a, b) = if x < y { (x, y) } else { (y, x) };
+                let dab = d.at(a, b);
+                let (daq, dbq) = (d.at(a, m), d.at(b, m));
+                if !in_focus(daq, dbq, dab, tie) {
+                    continue;
+                }
+                let u_old = u.at(a, b);
+                let u_new = u_old + 1;
+                u.set_sym(a, b, u_new);
+                let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
+                merge_sorted(&adj[a], &adj[b], cand); // pre-q candidates
+                let (sa, sb) = s.two_rows_mut(a, b);
+                award_cands(d.row(a), d.row(b), dab, dw, sa, sb, cand, u32::MAX, tie);
+                award_one(daq, dbq, 1.0 / f64::from(u_new), &mut sa[m], &mut sb[m], tie);
+                reweighted += 1;
+            }
+        }
+        for &x in bq.iter() {
+            mark[x as usize] = false;
+        }
+
+        // Graph update: q adopts B(q), B(q) adopts q back (appending m
+        // keeps every list ascending — m is the largest index).
+        for &xu in bq.iter() {
+            adj[xu as usize].push(m as u32);
+        }
+        adj.push(bq.clone());
+
+        // New edges (x, q): full truncated count + award over the
+        // merged candidate set, at the final adjacency.
+        for &xu in adj[m].iter() {
+            let x = xu as usize;
+            let dxq = d.at(x, m);
+            merge_sorted(&adj[x], &adj[m], cand);
+            let uf = count_cands(d.row(x), d.row(m), dxq, cand, u32::MAX, tie);
+            u.set_sym(x, m, uf);
+            let w = 1.0 / f64::from(uf);
+            let (sx, sq) = s.two_rows_mut(x, m);
+            award_cands(d.row(x), d.row(m), dxq, w, sx, sq, cand, u32::MAX, tie);
+        }
+        reweighted
+    }
+
+    /// Insert a batch of points in one update, sharing a single
+    /// membership scan across the batch: each existing pair is tested
+    /// against *all* new points in one pass, its focus size jumps by
+    /// the joiner count, and its old members are rescaled **once** to
+    /// the final weight — instead of one O(n²)-pair sweep-and-rescale
+    /// per inserted point.  Focus sizes land bit-identical to
+    /// sequential single inserts; support differs only in f64 rounding
+    /// (one rescale instead of up to `rows.len()`), comfortably inside
+    /// the documented incremental-vs-batch bound.
+    ///
+    /// `rows[j]` holds the new point's distances to the points present
+    /// when it lands: the `n + j` current points followed by the `j`
+    /// earlier batch points, in index order — exactly the rows a
+    /// sequence of [`IncrementalPald::insert_row`] calls would take.
+    /// All rows are validated before any state changes; returns the
+    /// index of the first inserted point.
+    ///
+    /// Graph-capped engines ingest the batch as sequential truncated
+    /// inserts (each is already O(k·degree); the shared scan targets
+    /// the dense engine's O(n²) pair sweep).  Points-seeded engines
+    /// reject distance rows with [`PaldError::PointStoreMismatch`],
+    /// like [`IncrementalPald::insert_row`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use paldx::data::distmat;
+    /// use paldx::pald::Pald;
+    ///
+    /// let master = distmat::random_tie_free(10, 3);
+    /// let mut eng = Pald::builder().build().unwrap()
+    ///     .into_incremental(&master.slice_to(8, 8)).unwrap();
+    /// let rows: Vec<&[f32]> = vec![&master.row(8)[..8], &master.row(9)[..9]];
+    /// assert_eq!(eng.insert_batch(&rows).unwrap(), 8);
+    /// assert_eq!(eng.n(), 10);
+    /// ```
+    pub fn insert_batch(&mut self, rows: &[&[f32]]) -> Result<usize, PaldError> {
+        let t0 = Instant::now();
+        let m = self.n;
+        if self.points.is_some() {
+            return Err(PaldError::PointStoreMismatch {
+                hint: "this engine was seeded with points; insert coordinates one at a time \
+                       via insert_point so the retained coordinates stay aligned",
+            });
+        }
+        // ---- Validate the whole batch before touching any state. ----
+        let strict = self.validation == Validation::Strict;
+        for (j, row) in rows.iter().enumerate() {
+            let expect = m + j;
+            if row.len() != expect {
+                return Err(PaldError::ShapeMismatch {
+                    expected_rows: 1,
+                    expected_cols: expect,
+                    rows: 1,
+                    cols: row.len(),
+                });
+            }
+            if strict {
+                for (jj, &v) in row.iter().enumerate() {
+                    if !v.is_finite() {
+                        return Err(PaldError::NotFinite { i: expect, j: jj });
+                    }
+                    if v < 0.0 {
+                        return Err(PaldError::NegativeDistance { i: expect, j: jj, value: v });
+                    }
+                }
+            }
+        }
+        let bsz = rows.len();
+        if bsz == 0 {
+            return Ok(m);
+        }
+        if self.knn.is_some() {
+            // Graph-capped path: sequential truncated inserts (already
+            // validated above, so the batch cannot fail midway).
+            for &row in rows {
+                self.insert(InsertRow::Distances(row))?;
+            }
+            self.stats.last_update_s = t0.elapsed().as_secs_f64();
+            return Ok(m);
+        }
+
+        // ---- Grow storage once and ingest every row + column. ----
+        let nn = m + bsz;
+        let grew = self.d.ensure_capacity(nn)
+            | self.u.ensure_capacity(nn)
+            | self.s.ensure_capacity(nn);
+        for _ in 0..bsz {
+            self.d.expand();
+            self.u.expand();
+            self.s.expand();
+        }
+        for (j, row) in rows.iter().enumerate() {
+            let q = m + j;
+            for (x, &v) in row.iter().enumerate() {
+                self.d.set(q, x, v);
+                self.d.set(x, q, v);
+            }
+            self.d.set(q, q, 0.0);
+        }
+        if grew {
+            self.stats.grow_events += 1;
+        }
+
+        let tie = self.tie;
+        let kern = self.kern;
+        let block = resolve_block(self.block_cfg, nn);
+        let mut reweighted = 0u64;
         {
             let IncrementalPald { d, u, s, .. } = self;
-            // Existing pairs whose focus gains q: bump u, rescale the
-            // old members by Δw, and award q at the new weight.
-            for x in 0..m {
+            // One membership scan shared across the batch: count every
+            // joiner, rescale the old members straight to the final
+            // weight, then award each joiner at that weight.
+            for x in 0..(m - 1) {
                 for y in (x + 1)..m {
                     let dxy = d.at(x, y);
-                    let (dxq, dyq) = (d.at(x, m), d.at(y, m));
-                    if !in_focus(dxq, dyq, dxy, tie) {
+                    let mut du = 0u32;
+                    for q in m..nn {
+                        if in_focus(d.at(x, q), d.at(y, q), dxy, tie) {
+                            du += 1;
+                        }
+                    }
+                    if du == 0 {
                         continue;
                     }
                     let u_old = u.at(x, y);
-                    let u_new = u_old + 1;
+                    let u_new = u_old + du;
                     u.set_sym(x, y, u_new);
-                    let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
+                    let wf = 1.0 / f64::from(u_new);
+                    let dw = wf - 1.0 / f64::from(u_old);
                     let (sx, sy) = s.two_rows_mut(x, y);
                     kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, m, block, tie);
-                    award_one(dxq, dyq, 1.0 / f64::from(u_new), &mut sx[m], &mut sy[m], tie);
+                    for q in m..nn {
+                        let (dxq, dyq) = (d.at(x, q), d.at(y, q));
+                        if in_focus(dxq, dyq, dxy, tie) {
+                            award_one(dxq, dyq, wf, &mut sx[q], &mut sy[q], tie);
+                        }
+                    }
                     reweighted += 1;
                 }
             }
-            // New pairs (x, q): full focus count + award over all nn
-            // points — the O(n²) triplets containing q.
-            for x in 0..m {
-                let dxy = d.at(x, m);
-                let uf = kern.count_focus(d.row(x), d.row(m), dxy, tie);
-                u.set_sym(x, m, uf);
-                let w = 1.0 / f64::from(uf);
-                let (sx, sq) = s.two_rows_mut(x, m);
-                kern.award(d.row(x), d.row(m), dxy, w, sx, sq, 0, nn, block, tie);
+            // New pairs (x, q) — including batch-internal pairs — at
+            // the final point count, directly at their final weight.
+            for j in 0..bsz {
+                let q = m + j;
+                for x in 0..q {
+                    let dxq = d.at(x, q);
+                    let uf = kern.count_focus(d.row(x), d.row(q), dxq, tie);
+                    u.set_sym(x, q, uf);
+                    let w = 1.0 / f64::from(uf);
+                    let (sx, sq) = s.two_rows_mut(x, q);
+                    kern.award(d.row(x), d.row(q), dxq, w, sx, sq, 0, nn, block, tie);
+                }
             }
         }
         self.n = nn;
-        self.stats.inserts += 1;
+        self.stats.inserts += bsz as u64;
         self.stats.reweighted_pairs += reweighted;
+        self.updates_since_anchor += bsz as u64;
+        self.drift_ops += reweighted * nn as u64;
         let dt = t0.elapsed().as_secs_f64();
         self.stats.last_update_s = dt;
         self.stats.total_update_s += dt;
+        self.maybe_reanchor();
         Ok(m)
     }
 
@@ -660,62 +1211,155 @@ impl IncrementalPald {
         if n == 2 {
             return Err(PaldError::TooSmall { n: n - 1 });
         }
-        let tie = self.tie;
-        let kern = self.kern;
-        let block = resolve_block(self.block_cfg, n);
-        let mut reweighted = 0u64;
-        {
-            let IncrementalPald { d, u, s, .. } = self;
-            // Retire every pair (x, i) outright: subtract its awards at
-            // the weight it currently holds.
-            for x in 0..n {
-                if x == i {
-                    continue;
-                }
-                let dxy = d.at(x, i);
-                let w = -(1.0 / f64::from(u.at(x, i)));
-                let (sx, si) = s.two_rows_mut(x, i);
-                kern.award(d.row(x), d.row(i), dxy, w, sx, si, 0, n, block, tie);
-            }
-            // Pairs whose focus loses i: bump u down and rescale the
-            // surviving members (i's own column is about to vanish, so
-            // its award needs no correction).
-            for x in 0..n {
-                if x == i {
-                    continue;
-                }
-                for y in (x + 1)..n {
-                    if y == i {
-                        continue;
-                    }
-                    let dxy = d.at(x, y);
-                    if !in_focus(d.at(x, i), d.at(y, i), dxy, tie) {
-                        continue;
-                    }
-                    let u_old = u.at(x, y);
-                    let u_new = u_old - 1;
-                    u.set_sym(x, y, u_new);
-                    let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
-                    let (sx, sy) = s.two_rows_mut(x, y);
-                    kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, i, block, tie);
-                    kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, i + 1, n, block, tie);
-                    reweighted += 1;
-                }
-            }
-            d.remove_shift(i);
-            u.remove_shift(i);
-            s.remove_shift(i);
-        }
+        let reweighted =
+            if self.knn.is_some() { self.remove_knn(i) } else { self.remove_dense(i) };
+        self.d.remove_shift(i);
+        self.u.remove_shift(i);
+        self.s.remove_shift(i);
         if let Some(ps) = &mut self.points {
             ps.remove_shift(i);
         }
         self.n = n - 1;
         self.stats.removes += 1;
         self.stats.reweighted_pairs += reweighted;
+        self.updates_since_anchor += 1;
+        self.drift_ops += reweighted * n as u64;
         let dt = t0.elapsed().as_secs_f64();
         self.stats.last_update_s = dt;
         self.stats.total_update_s += dt;
+        self.maybe_reanchor();
         Ok(())
+    }
+
+    /// Dense remove update: retire the `(x, i)` pairs, rescale pairs
+    /// whose focus loses `i`.  Returns the reweighted pair count; the
+    /// caller shifts the state matrices.
+    fn remove_dense(&mut self, i: usize) -> u64 {
+        let n = self.n;
+        let tie = self.tie;
+        let kern = self.kern;
+        let block = resolve_block(self.block_cfg, n);
+        let mut reweighted = 0u64;
+        let IncrementalPald { d, u, s, .. } = self;
+        // Retire every pair (x, i) outright: subtract its awards at
+        // the weight it currently holds.
+        for x in 0..n {
+            if x == i {
+                continue;
+            }
+            let dxy = d.at(x, i);
+            let w = -(1.0 / f64::from(u.at(x, i)));
+            let (sx, si) = s.two_rows_mut(x, i);
+            kern.award(d.row(x), d.row(i), dxy, w, sx, si, 0, n, block, tie);
+        }
+        // Pairs whose focus loses i: bump u down and rescale the
+        // surviving members (i's own column is about to vanish, so
+        // its award needs no correction).
+        for x in 0..n {
+            if x == i {
+                continue;
+            }
+            for y in (x + 1)..n {
+                if y == i {
+                    continue;
+                }
+                let dxy = d.at(x, y);
+                if !in_focus(d.at(x, i), d.at(y, i), dxy, tie) {
+                    continue;
+                }
+                let u_old = u.at(x, y);
+                let u_new = u_old - 1;
+                u.set_sym(x, y, u_new);
+                let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
+                let (sx, sy) = s.two_rows_mut(x, y);
+                kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, i, block, tie);
+                kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, i + 1, n, block, tie);
+                reweighted += 1;
+            }
+        }
+        reweighted
+    }
+
+    /// Graph-capped remove update: retire the `(x, i)` edges, rescale
+    /// only edges that held `i` as a focus candidate (an endpoint
+    /// adjacent to `i`), then delete `i` from the adjacency with the
+    /// index shift the state matrices are about to mirror.  Exactly the
+    /// truncated batch semantics over the post-removal graph (points
+    /// that held `i` in their base list keep a one-smaller list until
+    /// the next re-anchor rebuilds the exact batch graph).
+    fn remove_knn(&mut self, i: usize) -> u64 {
+        let tie = self.tie;
+        let mut reweighted = 0u64;
+        let IncrementalPald { d, u, s, knn, .. } = self;
+        let ks = knn.as_mut().expect("remove_knn on a graph-capped engine");
+        let KnnState { adj, cand, mark, .. } = ks;
+        let n = adj.len();
+        if mark.len() < n {
+            mark.resize(n, false);
+        }
+        for &xu in adj[i].iter() {
+            mark[xu as usize] = true;
+        }
+
+        // Retire every edge (x, i) outright.
+        for &xu in adj[i].iter() {
+            let x = xu as usize;
+            let dxi = d.at(x, i);
+            let w = -(1.0 / f64::from(u.at(x, i)));
+            merge_sorted(&adj[x], &adj[i], cand);
+            let (sx, si) = s.two_rows_mut(x, i);
+            award_cands(d.row(x), d.row(i), dxi, w, sx, si, cand, u32::MAX, tie);
+        }
+
+        // Edges losing candidate i — exactly those with an endpoint
+        // adjacent to i.  Where i was in the focus, bump u down and
+        // rescale the surviving candidates (skipping i, whose column
+        // vanishes with the shift).
+        for &xu in adj[i].iter() {
+            let x = xu as usize;
+            for &yu in adj[x].iter() {
+                let y = yu as usize;
+                if y == i {
+                    continue;
+                }
+                if mark[y] && y < x {
+                    continue; // both endpoints adjacent to i: visit once
+                }
+                let (a, b) = if x < y { (x, y) } else { (y, x) };
+                let dab = d.at(a, b);
+                if !in_focus(d.at(a, i), d.at(b, i), dab, tie) {
+                    continue;
+                }
+                let u_old = u.at(a, b);
+                let u_new = u_old - 1;
+                u.set_sym(a, b, u_new);
+                let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
+                merge_sorted(&adj[a], &adj[b], cand);
+                let (sa, sb) = s.two_rows_mut(a, b);
+                award_cands(d.row(a), d.row(b), dab, dw, sa, sb, cand, i as u32, tie);
+                reweighted += 1;
+            }
+        }
+        for &xu in adj[i].iter() {
+            mark[xu as usize] = false;
+        }
+
+        // Adjacency surgery mirroring the state-matrix shift: drop i
+        // from every list, decrement indices above it (order is
+        // preserved), then drop row i.
+        let iu = i as u32;
+        for row in adj.iter_mut() {
+            if let Ok(pos) = row.binary_search(&iu) {
+                row.remove(pos);
+            }
+            for v in row.iter_mut() {
+                if *v > iu {
+                    *v -= 1;
+                }
+            }
+        }
+        adj.remove(i);
+        reweighted
     }
 
     /// The current cohesion matrix (Eq. 3.3-normalized), freshly
@@ -775,9 +1419,14 @@ impl IncrementalPald {
     }
 
     /// Full batch recompute of the current points through the owned
-    /// session's registered kernel — the oracle the incremental path is
-    /// verified against (and an escape hatch to re-anchor `S` if a
-    /// caller ever wants to shed accumulated f64 rounding).
+    /// session's registered kernel — the oracle the dense incremental
+    /// path is verified against.  On graph-capped engines the dispatched
+    /// sparse kernel rebuilds the kNN graph from scratch, so this is the
+    /// *re-anchored* truncated result: it can differ from the online
+    /// state wherever churn left the online graph short of the batch
+    /// graph (the online state's own oracle is
+    /// [`knn::cohesion_over_graph`](crate::pald::knn::cohesion_over_graph)
+    /// over [`IncrementalPald::neighbor_graph`]).
     pub fn batch_recompute(&mut self) -> Result<Mat, PaldError> {
         let d = self.distances();
         self.session.compute(&d)
@@ -917,5 +1566,150 @@ mod tests {
             eng.insert_point(&[0.0, 1.0]),
             Err(PaldError::NoPointStore { .. })
         ));
+    }
+
+    fn knn_seeded(k: usize, d: &Mat, cap: usize) -> IncrementalPald {
+        let cfg = PaldConfig {
+            algorithm: Algorithm::KnnOptPairwise,
+            threads: 1,
+            k,
+            ..Default::default()
+        };
+        IncrementalPald::from_session(
+            Session::new(cfg).unwrap(),
+            Validation::Strict,
+            d,
+            cap,
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn knn_seed_matches_graph_oracle() {
+        use crate::pald::knn;
+        let d = distmat::random_tie_free(20, 44);
+        let eng = knn_seeded(4, &d, 24);
+        assert_eq!(eng.neighborhood(), Some(4));
+        let g = eng.neighbor_graph().unwrap();
+        let want = knn::cohesion_over_graph(&d, &g, TieMode::Strict);
+        let got = eng.cohesion();
+        assert!(got.allclose(&want, 1e-5, 1e-6), "maxdiff={}", got.max_abs_diff(&want));
+        let u_want = knn::focus_sizes_over_graph(&d, &g, TieMode::Strict);
+        assert_eq!(eng.focus_sizes().as_slice(), u_want.as_slice(), "U must be exact");
+    }
+
+    #[test]
+    fn knn_full_neighborhood_is_bit_identical_to_dense_engine() {
+        let master = distmat::random_tie_free(15, 12);
+        let seed = master.slice_to(12, 12);
+        let mut dense = IncrementalPald::from_session(
+            session(Algorithm::NaivePairwise),
+            Validation::Strict,
+            &seed,
+            16,
+            None,
+        )
+        .unwrap();
+        let mut capped = knn_seeded(14, &seed, 16);
+        for q in 12..15 {
+            dense.insert_row(&master.row(q)[..q]).unwrap();
+            capped.insert_row(&master.row(q)[..q]).unwrap();
+        }
+        dense.remove(5).unwrap();
+        capped.remove(5).unwrap();
+        assert_eq!(
+            capped.cohesion().as_slice(),
+            dense.cohesion().as_slice(),
+            "k >= n-1 must reproduce the dense engine bit for bit"
+        );
+        assert_eq!(capped.focus_sizes().as_slice(), dense.focus_sizes().as_slice());
+    }
+
+    #[test]
+    fn insert_batch_matches_sequential_inserts() {
+        let master = distmat::random_tie_free(22, 50);
+        let seed = master.slice_to(16, 16);
+        let rows: Vec<&[f32]> = (16..22).map(|q| &master.row(q)[..q]).collect();
+        let mut batch_eng = seeded(Algorithm::OptimizedTriplet, &seed, 22);
+        let first = batch_eng.insert_batch(&rows).unwrap();
+        assert_eq!(first, 16);
+        assert_eq!(batch_eng.n(), 22);
+        assert_eq!(batch_eng.stats().inserts, 6);
+        let mut seq_eng = seeded(Algorithm::OptimizedTriplet, &seed, 22);
+        for row in &rows {
+            seq_eng.insert_row(row).unwrap();
+        }
+        // Focus sizes: integer-exact agreement.  Support: one shared
+        // rescale vs several — f64-rounding-close only.
+        assert_eq!(batch_eng.focus_sizes().as_slice(), seq_eng.focus_sizes().as_slice());
+        let (bc, sc) = (batch_eng.cohesion(), seq_eng.cohesion());
+        assert!(bc.allclose(&sc, 1e-5, 1e-6), "maxdiff={}", bc.max_abs_diff(&sc));
+        let oracle = naive::pairwise(&master, TieMode::Strict);
+        assert!(bc.allclose(&oracle, 1e-4, 1e-5), "maxdiff={}", bc.max_abs_diff(&oracle));
+    }
+
+    #[test]
+    fn insert_batch_validates_before_mutating() {
+        let d = distmat::random_tie_free(8, 3);
+        let mut eng = seeded(Algorithm::OptimizedPairwise, &d, 12);
+        let before = eng.cohesion();
+        let good = vec![1.0f32; 8];
+        let short = vec![1.0f32; 5];
+        let rows: Vec<&[f32]> = vec![&good, &short];
+        assert!(matches!(
+            eng.insert_batch(&rows),
+            Err(PaldError::ShapeMismatch { expected_cols: 9, cols: 5, .. })
+        ));
+        let mut bad = vec![1.0f32; 9];
+        bad[2] = f32::NAN;
+        let rows: Vec<&[f32]> = vec![&good, &bad];
+        assert!(matches!(eng.insert_batch(&rows), Err(PaldError::NotFinite { i: 9, j: 2 })));
+        assert_eq!(eng.n(), 8);
+        assert_eq!(eng.cohesion().as_slice(), before.as_slice());
+        assert_eq!(eng.stats().inserts, 0);
+        // The empty batch is a no-op.
+        assert_eq!(eng.insert_batch(&[]).unwrap(), 8);
+        assert_eq!(eng.n(), 8);
+    }
+
+    #[test]
+    fn reanchor_policies_trigger_and_preserve_state() {
+        let master = distmat::random_tie_free(20, 66);
+        let seed = master.slice_to(14, 14);
+        // EveryN(3): two re-anchors across 6 inserts.
+        let mut eng = seeded(Algorithm::OptimizedPairwise, &seed, 20);
+        eng.set_reanchor_policy(ReanchorPolicy::EveryN(3));
+        assert_eq!(eng.reanchor_policy(), ReanchorPolicy::EveryN(3));
+        for q in 14..20 {
+            eng.insert_row(&master.row(q)[..q]).unwrap();
+        }
+        assert_eq!(eng.stats().reanchors, 2);
+        assert_eq!(eng.updates_since_reanchor(), 0);
+        // Re-anchored state is bit-identical to a freshly seeded engine
+        // over the same distances (seed order is deterministic).
+        let fresh = seeded(Algorithm::OptimizedPairwise, &master, 20);
+        assert_eq!(eng.cohesion().as_slice(), fresh.cohesion().as_slice());
+        assert_eq!(eng.focus_sizes().as_slice(), fresh.focus_sizes().as_slice());
+
+        // DriftThreshold(0.0) re-anchors after every update.
+        let mut eager = seeded(Algorithm::OptimizedPairwise, &seed, 20);
+        eager.set_reanchor_policy(ReanchorPolicy::DriftThreshold(0.0));
+        for q in 14..17 {
+            eager.insert_row(&master.row(q)[..q]).unwrap();
+        }
+        assert_eq!(eager.stats().reanchors, 3);
+
+        // Never (the default) performs none, but drift accrues.
+        let mut never = seeded(Algorithm::OptimizedPairwise, &seed, 20);
+        for q in 14..17 {
+            never.insert_row(&master.row(q)[..q]).unwrap();
+        }
+        assert_eq!(never.stats().reanchors, 0);
+        assert!(never.drift_estimate() >= 0.0);
+        assert_eq!(never.updates_since_reanchor(), 3);
+        never.reanchor_now();
+        assert_eq!(never.stats().reanchors, 1);
+        assert_eq!(never.updates_since_reanchor(), 0);
     }
 }

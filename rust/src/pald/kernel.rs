@@ -13,6 +13,7 @@
 
 use crate::core::Mat;
 use crate::pald::api::Algorithm;
+use crate::pald::knn;
 use crate::pald::workspace::Workspace;
 use crate::pald::{
     blocked, branchfree, hybrid, naive, optimized, parallel_pairwise, parallel_triplet, TieMode,
@@ -61,6 +62,10 @@ pub struct KernelMeta {
     pub exact_ties: bool,
     /// Consumes the second block size b̃ (`ExecParams::block2`).
     pub uses_block2: bool,
+    /// Truncated-neighborhood (PKNN) kernel: consumes `ExecParams::k`
+    /// and runs at O(n·k²) over the symmetrized kNN graph instead of
+    /// Θ(n³) over every pair (DESIGN.md §9).
+    pub sparse: bool,
 }
 
 /// Resolved execution parameters handed to a kernel.
@@ -74,6 +79,9 @@ pub struct ExecParams {
     pub block2: usize,
     /// Worker threads for the parallel kernels.
     pub threads: usize,
+    /// Neighborhood size for the sparse PKNN kernels (0 = complete
+    /// graph, i.e. the dense-exact semantics); dense kernels ignore it.
+    pub k: usize,
 }
 
 impl ExecParams {
@@ -155,12 +163,16 @@ const BRANCHFREE_PENALTY: f64 = 3.0;
 
 macro_rules! meta {
     ($family:ident, $rung:ident, par = $par:expr, b2 = $b2:expr) => {
+        meta!($family, $rung, par = $par, b2 = $b2, sparse = false)
+    };
+    ($family:ident, $rung:ident, par = $par:expr, b2 = $b2:expr, sparse = $sp:expr) => {
         KernelMeta {
             family: Family::$family,
             rung: Rung::$rung,
             parallel: $par,
             exact_ties: true,
             uses_block2: $b2,
+            sparse: $sp,
         }
     };
 }
@@ -442,10 +454,111 @@ impl CohesionKernel for ParallelHybridK {
     }
 }
 
+// ---- sparse PKNN kernels (DESIGN.md §9) ---------------------------------
+
+/// Predicted runtime of a truncated kernel: the dense per-pair work
+/// shrunk by the O(n·k²)/Θ(n³) ratio (candidate sets span at most ~2k
+/// points, edges at most n·k) plus one O(n²) selection pass for the
+/// graph build.
+fn knn_cost(n: usize, p: &ExecParams, mp: &MachineParams, penalty: f64) -> f64 {
+    let ke = knn::effective_k(p.k, n.max(2)) as f64;
+    let nn = n as f64;
+    let ratio = (4.0 * ke * ke / (nn * nn)).min(1.0);
+    let build_s = nn * nn / mp.rate_pw_focus;
+    penalty * seq_pairwise_cost(n, p.block, mp) * ratio + build_s
+}
+
+/// Truncated pairwise, branchy reference rung (fused count + award).
+pub struct KnnPairwiseK;
+impl CohesionKernel for KnnPairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::KnnPairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, Naive, par = false, b2 = false, sparse = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        knn_cost(n, p, mp, NAIVE_PENALTY)
+    }
+    fn default_blocks(&self, _n: usize, _m: u64) -> (usize, usize) {
+        (0, 0)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        let Workspace { knn: scratch, phases, .. } = ws;
+        knn::sparse_support_into(scratch, d, p.tie, p.k, false, false, p.block, out, phases);
+    }
+}
+
+/// Truncated triplet ordering, branchy reference rung (focus pass over
+/// every edge, then the cohesion pass).
+pub struct KnnTripletK;
+impl CohesionKernel for KnnTripletK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::KnnTriplet
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Triplet, Naive, par = false, b2 = false, sparse = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        knn_cost(n, p, mp, NAIVE_PENALTY)
+    }
+    fn default_blocks(&self, _n: usize, _m: u64) -> (usize, usize) {
+        (0, 0)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        let Workspace { knn: scratch, phases, .. } = ws;
+        knn::sparse_support_into(scratch, d, p.tie, p.k, false, true, p.block, out, phases);
+    }
+}
+
+/// Truncated pairwise, blocked + branch-free rung (masked FMAs, tiled
+/// candidate sweep).
+pub struct KnnOptPairwiseK;
+impl CohesionKernel for KnnOptPairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::KnnOptPairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, Optimized, par = false, b2 = false, sparse = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        knn_cost(n, p, mp, 1.0)
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        pairwise_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        let Workspace { knn: scratch, phases, .. } = ws;
+        knn::sparse_support_into(scratch, d, p.tie, p.k, true, false, p.block, out, phases);
+    }
+}
+
+/// Truncated triplet ordering, blocked + branch-free rung.
+pub struct KnnOptTripletK;
+impl CohesionKernel for KnnOptTripletK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::KnnOptTriplet
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Triplet, Optimized, par = false, b2 = false, sparse = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        knn_cost(n, p, mp, 1.0)
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        pairwise_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        let Workspace { knn: scratch, phases, .. } = ws;
+        knn::sparse_support_into(scratch, d, p.tie, p.k, true, true, p.block, out, phases);
+    }
+}
+
 // ---- registry -----------------------------------------------------------
 
-/// All kernels, in optimization-ladder order (matches [`Algorithm::ALL`]).
-pub static REGISTRY: [&dyn CohesionKernel; 12] = [
+/// All kernels, in optimization-ladder order (matches [`Algorithm::ALL`]):
+/// the 12 dense variants followed by the 4 truncated PKNN variants.
+pub static REGISTRY: [&dyn CohesionKernel; 16] = [
     &NaivePairwiseK,
     &NaiveTripletK,
     &BlockedPairwiseK,
@@ -458,6 +571,10 @@ pub static REGISTRY: [&dyn CohesionKernel; 12] = [
     &ParallelTripletK,
     &HybridK,
     &ParallelHybridK,
+    &KnnPairwiseK,
+    &KnnTripletK,
+    &KnnOptPairwiseK,
+    &KnnOptTripletK,
 ];
 
 /// Kernel registered for a concrete algorithm (`None` for
@@ -494,7 +611,7 @@ mod tests {
         let n = 36;
         let d = distmat::random_tie_free(n, 2024);
         let want = naive::pairwise(&d, TieMode::Strict);
-        let p = ExecParams { tie: TieMode::Strict, block: 8, block2: 4, threads: 3 };
+        let p = ExecParams { tie: TieMode::Strict, block: 8, block2: 4, threads: 3, k: 0 };
         let mut ws = Workspace::new();
         for k in REGISTRY {
             let mut c = Mat::zeros(n, n);
@@ -512,7 +629,7 @@ mod tests {
     #[test]
     fn costs_are_positive_and_ordered() {
         let mp = MachineParams::xeon_6226r();
-        let p = ExecParams { tie: TieMode::Strict, block: 128, block2: 64, threads: 1 };
+        let p = ExecParams { tie: TieMode::Strict, block: 128, block2: 64, threads: 1, k: 0 };
         let naive_c = kernel_for(Algorithm::NaivePairwise).unwrap().cost(2048, &p, &mp);
         let opt_c = kernel_for(Algorithm::OptimizedPairwise).unwrap().cost(2048, &p, &mp);
         assert!(naive_c > opt_c, "naive={naive_c} opt={opt_c}");
@@ -522,6 +639,52 @@ mod tests {
         let par_c = kernel_for(Algorithm::ParallelPairwise).unwrap().cost(4096, &p8, &mp);
         let seq_c = kernel_for(Algorithm::OptimizedPairwise).unwrap().cost(4096, &p, &mp);
         assert!(par_c < seq_c, "par={par_c} seq={seq_c}");
+        // Truncation must predict a large win at k << n, and no win at
+        // the complete graph (where the build pass is pure overhead).
+        let psparse = ExecParams { k: 16, ..p };
+        let knn_c = kernel_for(Algorithm::KnnOptPairwise).unwrap().cost(4096, &psparse, &mp);
+        let dense_c = kernel_for(Algorithm::OptimizedPairwise).unwrap().cost(4096, &psparse, &mp);
+        assert!(knn_c < dense_c, "knn={knn_c} dense={dense_c}");
+        let pfull = ExecParams { k: 4095, ..p };
+        let knn_full = kernel_for(Algorithm::KnnOptPairwise).unwrap().cost(4096, &pfull, &mp);
+        assert!(knn_full > dense_c, "full-graph knn must not undercut dense");
+    }
+
+    #[test]
+    fn sparse_kernels_declare_their_capability() {
+        for k in REGISTRY {
+            let m = k.meta();
+            let is_knn = k.name().starts_with("knn-");
+            assert_eq!(m.sparse, is_knn, "{}", k.name());
+            if m.sparse {
+                assert!(!m.parallel, "{}: sparse kernels are sequential", k.name());
+                assert!(m.exact_ties, "{}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_kernels_match_dense_reference_at_small_k_coverage() {
+        // Semantic smoke test through the trait path: at k = n - 1 the
+        // sparse kernels are bit-identical to the naive pairwise
+        // reference (the full property suite lives in tests/knn.rs).
+        let n = 24;
+        let d = distmat::random_tie_free(n, 31);
+        let want = naive::pairwise(&d, TieMode::Strict);
+        let p = ExecParams { tie: TieMode::Strict, block: 8, block2: 0, threads: 1, k: n - 1 };
+        let mut ws = Workspace::new();
+        for alg in [
+            Algorithm::KnnPairwise,
+            Algorithm::KnnTriplet,
+            Algorithm::KnnOptPairwise,
+            Algorithm::KnnOptTriplet,
+        ] {
+            let kern = kernel_for(alg).unwrap();
+            let mut c = Mat::zeros(n, n);
+            kern.compute_into(&d, &p, &mut ws, &mut c);
+            crate::pald::normalize(&mut c);
+            assert_eq!(c.as_slice(), want.as_slice(), "{}", kern.name());
+        }
     }
 
     #[test]

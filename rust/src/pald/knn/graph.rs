@@ -1,0 +1,394 @@
+//! Exact k-nearest-neighbor graph construction (DESIGN.md §9).
+//!
+//! The PKNN truncation restricts PaLD's conflict-focus comparisons to
+//! pairs inside a symmetrized k-nearest-neighbor graph.  This module
+//! builds that graph *exactly* (full selection over each distance row —
+//! no approximate index) from any distance source, into a CSR layout the
+//! sparse kernels iterate:
+//!
+//! * per-row **base lists**: the `k` nearest neighbors of each point
+//!   under a deterministic total order (distance, then index — ties at
+//!   the selection boundary always resolve the same way);
+//! * **symmetrization**: the undirected edge set `{x, y}` with
+//!   `y ∈ base(x)` or `x ∈ base(y)` — every conflict pair the truncated
+//!   kernels will evaluate, so per-row degrees can exceed `k` (the
+//!   per-row focus cap is the *degree*, not `k`);
+//! * **CSR storage**: `offsets` + ascending-sorted neighbor lists, which
+//!   is what makes the kernels' candidate-set merges O(degree).
+//!
+//! With `k = n - 1` the graph is complete and the sparse kernels
+//! reproduce the dense kernels bit for bit — the exactness anchor the
+//! property tests in `rust/tests/knn.rs` enforce.
+
+use crate::core::Mat;
+use crate::pald::error::PaldError;
+use crate::pald::input::DistanceInput;
+
+/// Reusable scratch for [`NeighborGraph`] construction: the per-row
+/// selection buffer and the packed undirected edge list.  Holding it in
+/// the kernel [`Workspace`](crate::pald::Workspace) makes repeated
+/// same-shape builds allocation-free.
+#[derive(Default)]
+pub(crate) struct GraphScratch {
+    /// Per-row (distance, index) selection buffer.
+    sel: Vec<(f32, u32)>,
+    /// Packed undirected edges `(min << 32) | max`, sorted + deduped.
+    edges: Vec<u64>,
+    /// Per-row CSR fill cursors.
+    cursors: Vec<usize>,
+}
+
+impl GraphScratch {
+    /// Bytes currently held by the scratch buffers.
+    pub(crate) fn allocated_bytes(&self) -> usize {
+        self.sel.capacity() * std::mem::size_of::<(f32, u32)>()
+            + self.edges.capacity() * std::mem::size_of::<u64>()
+            + self.cursors.capacity() * std::mem::size_of::<usize>()
+    }
+}
+
+/// Symmetrized exact k-nearest-neighbor graph in CSR form.
+///
+/// Row `i`'s neighbor list is ascending-sorted and never contains `i`;
+/// the graph is symmetric (`y ∈ N(x)` iff `x ∈ N(y)`), so for every
+/// edge the pair's own endpoints are always inside the merged candidate
+/// set the sparse kernels sweep.
+///
+/// # Examples
+///
+/// ```
+/// use paldx::data::distmat;
+/// use paldx::pald::knn::NeighborGraph;
+///
+/// let d = distmat::random_tie_free(32, 7);
+/// let g = NeighborGraph::build(&d, 4).unwrap();
+/// assert_eq!(g.n(), 32);
+/// // Symmetrization can raise a row's degree above k, never below.
+/// assert!(g.degree(0) >= 4);
+/// // k = n - 1 is the exactness anchor: the graph is complete.
+/// let full = NeighborGraph::build(&d, 31).unwrap();
+/// assert!(full.is_full());
+/// ```
+pub struct NeighborGraph {
+    n: usize,
+    k: usize,
+    offsets: Vec<usize>,
+    nbrs: Vec<u32>,
+}
+
+impl NeighborGraph {
+    /// Empty graph (rebuilt in place by the kernels' workspace).
+    pub(crate) fn empty() -> NeighborGraph {
+        NeighborGraph { n: 0, k: 0, offsets: Vec::new(), nbrs: Vec::new() }
+    }
+
+    /// Build the exact symmetrized kNN graph of a dense distance matrix.
+    ///
+    /// `k` is clamped to `n - 1` (the complete graph); `k = 0` is
+    /// rejected with [`PaldError::InvalidNeighborhood`].
+    pub fn build(d: &Mat, k: usize) -> Result<NeighborGraph, PaldError> {
+        DistanceInput::check_shape(d)?;
+        if k == 0 {
+            return Err(PaldError::InvalidNeighborhood { k });
+        }
+        let mut g = NeighborGraph::empty();
+        let mut scratch = GraphScratch::default();
+        g.rebuild(d, k, &mut scratch);
+        Ok(g)
+    }
+
+    /// Build from any [`DistanceInput`] — dense inputs are used in
+    /// place, condensed / on-the-fly inputs are materialized once.
+    pub fn from_input(input: &dyn DistanceInput, k: usize) -> Result<NeighborGraph, PaldError> {
+        input.check_shape()?;
+        match input.as_dense() {
+            Some(d) => NeighborGraph::build(d, k),
+            None => NeighborGraph::build(&input.to_dense(), k),
+        }
+    }
+
+    /// CSR snapshot of explicit adjacency lists (each ascending-sorted,
+    /// self-free, and symmetric) — how the incremental engine exposes
+    /// its online graph to the batch oracle.
+    pub(crate) fn from_adjacency(k: usize, adj: &[Vec<u32>]) -> NeighborGraph {
+        let n = adj.len();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        for row in adj {
+            let last = *offsets.last().expect("offsets starts non-empty");
+            offsets.push(last + row.len());
+        }
+        let mut nbrs = Vec::with_capacity(offsets[n]);
+        for row in adj {
+            nbrs.extend_from_slice(row);
+        }
+        NeighborGraph { n, k, offsets, nbrs }
+    }
+
+    /// Rebuild in place from a dense matrix, reusing this graph's and
+    /// the scratch's allocations (`k` pre-clamped to `1..=n-1` by the
+    /// caller or clamped here).
+    pub(crate) fn rebuild(&mut self, d: &Mat, k: usize, scratch: &mut GraphScratch) {
+        let n = d.rows();
+        debug_assert!(n >= 2);
+        let ke = k.clamp(1, n - 1);
+        self.n = n;
+        self.k = ke;
+        let GraphScratch { sel, edges, cursors } = scratch;
+
+        // Base lists: the ke nearest of each row under the deterministic
+        // (distance, index) total order.
+        edges.clear();
+        for i in 0..n {
+            let row = d.row(i);
+            sel.clear();
+            for (j, &v) in row.iter().enumerate() {
+                if j != i {
+                    sel.push((v, j as u32));
+                }
+            }
+            if ke < sel.len() {
+                sel.select_nth_unstable_by(ke - 1, |a, b| {
+                    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+                });
+                sel.truncate(ke);
+            }
+            let a = i as u32;
+            for &(_, b) in sel.iter() {
+                let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+                edges.push((u64::from(lo) << 32) | u64::from(hi));
+            }
+        }
+
+        // Symmetrize: the undirected edge set, each edge once.
+        edges.sort_unstable();
+        edges.dedup();
+
+        // CSR: degree count, prefix sum, then a fill pass.  Processing
+        // edges in (lo, hi) sorted order writes every row's neighbor
+        // list in ascending order, so no per-row sort is needed.
+        self.offsets.clear();
+        self.offsets.resize(n + 1, 0);
+        for &e in edges.iter() {
+            let a = (e >> 32) as usize;
+            let b = (e & 0xffff_ffff) as usize;
+            self.offsets[a + 1] += 1;
+            self.offsets[b + 1] += 1;
+        }
+        for i in 0..n {
+            self.offsets[i + 1] += self.offsets[i];
+        }
+        cursors.clear();
+        cursors.extend_from_slice(&self.offsets[..n]);
+        self.nbrs.clear();
+        self.nbrs.resize(self.offsets[n], 0);
+        for &e in edges.iter() {
+            let a = (e >> 32) as usize;
+            let b = (e & 0xffff_ffff) as usize;
+            self.nbrs[cursors[a]] = b as u32;
+            cursors[a] += 1;
+            self.nbrs[cursors[b]] = a as u32;
+            cursors[b] += 1;
+        }
+    }
+
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The (clamped) neighborhood size the base lists were selected at.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Ascending-sorted neighbor list of point `i`.
+    #[inline(always)]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.nbrs[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Degree of point `i` — its per-row focus cap after symmetrization
+    /// (at least `k`, at most `n - 1`).
+    pub fn degree(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Largest per-row degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    /// Mean per-row degree.
+    pub fn mean_degree(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.nbrs.len() as f64 / self.n as f64
+    }
+
+    /// Number of undirected edges — the conflict pairs the truncated
+    /// kernels evaluate.
+    pub fn edge_count(&self) -> usize {
+        self.nbrs.len() / 2
+    }
+
+    /// Fraction of all `n(n-1)/2` conflict pairs the graph retains
+    /// (1.0 at `k = n - 1`).
+    pub fn coverage(&self) -> f64 {
+        let total = self.n * (self.n.saturating_sub(1)) / 2;
+        if total == 0 {
+            return 1.0;
+        }
+        self.edge_count() as f64 / total as f64
+    }
+
+    /// Is the graph complete (`k` reached `n - 1`)?
+    pub fn is_full(&self) -> bool {
+        self.n >= 2 && self.edge_count() == self.n * (self.n - 1) / 2
+    }
+
+    /// Is `{x, y}` an edge?  Binary search over the sorted row.
+    pub fn contains(&self, x: usize, y: usize) -> bool {
+        x != y && self.neighbors(x).binary_search(&(y as u32)).is_ok()
+    }
+
+    /// Bytes held by the CSR storage.
+    pub fn allocated_bytes(&self) -> usize {
+        self.offsets.capacity() * std::mem::size_of::<usize>()
+            + self.nbrs.capacity() * std::mem::size_of::<u32>()
+    }
+}
+
+/// Merge two ascending-sorted index lists into `out` (deduplicated) —
+/// the candidate set `N(x) ∪ N(y)` of one conflict pair.  Symmetrization
+/// guarantees `x ∈ N(y)` and `y ∈ N(x)`, so the merged set always
+/// contains both endpoints.
+pub(crate) fn merge_sorted(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+
+    #[test]
+    fn graph_is_symmetric_sorted_and_self_free() {
+        let d = distmat::random_tie_free(40, 11);
+        let g = NeighborGraph::build(&d, 5).unwrap();
+        for x in 0..40 {
+            let row = g.neighbors(x);
+            assert!(g.degree(x) >= 5, "symmetrization never shrinks a row");
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "row {x} not strictly ascending");
+            }
+            for &yu in row {
+                let y = yu as usize;
+                assert_ne!(y, x);
+                assert!(g.contains(y, x), "edge ({x},{y}) not mirrored");
+            }
+        }
+        assert_eq!(g.nbrs.len(), 2 * g.edge_count());
+    }
+
+    #[test]
+    fn full_k_is_the_complete_graph() {
+        let n = 17;
+        let d = distmat::random_tie_free(n, 3);
+        let g = NeighborGraph::build(&d, n - 1).unwrap();
+        assert!(g.is_full());
+        assert_eq!(g.edge_count(), n * (n - 1) / 2);
+        assert!((g.coverage() - 1.0).abs() < 1e-12);
+        for x in 0..n {
+            assert_eq!(g.degree(x), n - 1);
+            let want: Vec<u32> = (0..n as u32).filter(|&j| j != x as u32).collect();
+            assert_eq!(g.neighbors(x), &want[..]);
+        }
+        // Oversized k clamps to n - 1.
+        let clamped = NeighborGraph::build(&d, 10 * n).unwrap();
+        assert_eq!(clamped.k(), n - 1);
+        assert!(clamped.is_full());
+    }
+
+    #[test]
+    fn base_lists_hold_the_true_nearest_neighbors() {
+        let d = distmat::random_tie_free(24, 9);
+        let k = 4;
+        let g = NeighborGraph::build(&d, k).unwrap();
+        for x in 0..24 {
+            // The k smallest distances from x must all be graph edges.
+            let mut dists: Vec<(f32, usize)> =
+                (0..24).filter(|&j| j != x).map(|j| (d[(x, j)], j)).collect();
+            dists.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for &(_, j) in dists.iter().take(k) {
+                assert!(g.contains(x, j), "missing nearest neighbor ({x},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_set_is_monotone_in_k() {
+        let d = distmat::random_tie_free(30, 21);
+        let mut prev = 0usize;
+        for k in [1usize, 2, 4, 8, 16, 29] {
+            let g = NeighborGraph::build(&d, k).unwrap();
+            assert!(
+                g.edge_count() >= prev,
+                "edges dropped from {prev} at k={k}: {}",
+                g.edge_count()
+            );
+            prev = g.edge_count();
+        }
+        assert_eq!(prev, 30 * 29 / 2);
+    }
+
+    #[test]
+    fn duplicate_points_break_ties_deterministically() {
+        let d = distmat::random_duplicated(20, 5, 3);
+        let a = NeighborGraph::build(&d, 3).unwrap();
+        let b = NeighborGraph::build(&d, 3).unwrap();
+        assert_eq!(a.nbrs, b.nbrs, "tied selection must be deterministic");
+        assert_eq!(a.offsets, b.offsets);
+    }
+
+    #[test]
+    fn rejects_invalid_inputs() {
+        let d = distmat::random_tie_free(8, 1);
+        assert!(matches!(
+            NeighborGraph::build(&d, 0),
+            Err(PaldError::InvalidNeighborhood { k: 0 })
+        ));
+        let rect = Mat::zeros(3, 4);
+        assert!(matches!(NeighborGraph::build(&rect, 2), Err(PaldError::NonSquare { .. })));
+    }
+
+    #[test]
+    fn merge_sorted_unions_with_dedup() {
+        let mut out = Vec::new();
+        merge_sorted(&[1, 3, 5, 9], &[0, 3, 4, 9, 12], &mut out);
+        assert_eq!(out, vec![0, 1, 3, 4, 5, 9, 12]);
+        merge_sorted(&[], &[2, 7], &mut out);
+        assert_eq!(out, vec![2, 7]);
+    }
+}

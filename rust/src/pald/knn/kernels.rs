@@ -1,0 +1,534 @@
+//! Sparse PKNN focus/cohesion kernels over a [`NeighborGraph`]
+//! (DESIGN.md §9).
+//!
+//! Semantics: only conflict pairs `(x, y)` that are graph edges are
+//! evaluated, and each pair's local focus is counted and awarded over
+//! the merged candidate set `N(x) ∪ N(y)` (which always contains `x`
+//! and `y` — the graph is symmetrized).  Per-pair cost is O(degree), so
+//! the whole computation is O(n·k²) instead of Θ(n³).
+//!
+//! Two rungs mirror the dense ladder, each in both orderings:
+//!
+//! * **reference** — branchy inner loops, the sparse twin of
+//!   [`naive::pairwise`](crate::pald::naive::pairwise);
+//! * **opt** — masked {0, ½, 1} arithmetic with the candidate sweep
+//!   tiled in `block`-sized chunks, the sparse twin of the
+//!   blocked/branch-free rung.
+//!
+//! The *pairwise* ordering fuses count + award per pair; the *triplet*
+//! ordering runs a full focus pass (all edge weights first) then a
+//! cohesion pass, attributing [`PhaseTimes`] like the dense two-pass
+//! kernels.  All four variants award in the identical pair-and-candidate
+//! order, so they are **bit-identical to each other**, and with
+//! `k = n - 1` (candidate set = everything, edge set = every pair) they
+//! are bit-identical to the dense pairwise reference in support units —
+//! the exactness anchor `rust/tests/knn.rs` enforces.
+
+use std::time::Instant;
+
+use crate::core::Mat;
+use crate::pald::blocked::resolve_block;
+use crate::pald::knn::graph::{merge_sorted, GraphScratch, NeighborGraph};
+use crate::pald::workspace::PhaseTimes;
+use crate::pald::{in_focus, normalize, TieMode};
+
+/// What one truncated computation actually did: the clamped `k`, the
+/// conflict pairs retained, and the dense pair total — the raw numbers
+/// behind [`CohesionResult::truncation_error_bound`].
+///
+/// [`CohesionResult::truncation_error_bound`]:
+///     crate::pald::CohesionResult::truncation_error_bound
+#[derive(Clone, Copy, Debug)]
+pub struct KnnReport {
+    /// The neighborhood size actually used (`min(k, n - 1)`).
+    pub effective_k: usize,
+    /// Conflict pairs evaluated (edges of the symmetrized graph).
+    pub edges: usize,
+    /// Conflict pairs a dense computation evaluates: `n(n-1)/2`.
+    pub total_pairs: usize,
+}
+
+impl KnnReport {
+    /// Upper bound on the truncation-induced support-mass deficit:
+    /// every evaluated pair distributes exactly one support unit (same
+    /// as dense), so the *total* cohesion mass a truncated run is
+    /// missing relative to dense is exactly `1 - edges/total_pairs` of
+    /// the dense mass.  Individual entries can additionally shift
+    /// because undercounted foci inflate the surviving weights; this
+    /// bound is `0` exactly when the graph is complete, where the
+    /// computation is bit-identical to dense.
+    pub fn mass_bound(&self) -> f64 {
+        1.0 - self.edges as f64 / self.total_pairs.max(1) as f64
+    }
+
+    /// Did the computation cover every conflict pair (no truncation)?
+    pub fn is_exact(&self) -> bool {
+        self.edges == self.total_pairs
+    }
+}
+
+/// Reusable sparse-kernel state held in the
+/// [`Workspace`](crate::pald::Workspace): the neighbor graph and its
+/// build scratch, the candidate-merge buffer, the triplet ordering's
+/// edge-weight array, and the report of the last truncated run.
+/// Same-shape repeated computations allocate nothing.
+pub(crate) struct KnnScratch {
+    graph: NeighborGraph,
+    gscratch: GraphScratch,
+    cand: Vec<u32>,
+    w_edges: Vec<f32>,
+    /// Report of the most recent sparse run (`None` after dense runs).
+    pub(crate) report: Option<KnnReport>,
+}
+
+impl KnnScratch {
+    pub(crate) fn new() -> KnnScratch {
+        KnnScratch {
+            graph: NeighborGraph::empty(),
+            gscratch: GraphScratch::default(),
+            cand: Vec::new(),
+            w_edges: Vec::new(),
+            report: None,
+        }
+    }
+
+    /// Bytes currently held by the sparse-kernel state.
+    pub(crate) fn allocated_bytes(&self) -> usize {
+        self.graph.allocated_bytes()
+            + self.gscratch.allocated_bytes()
+            + self.cand.capacity() * std::mem::size_of::<u32>()
+            + self.w_edges.capacity() * std::mem::size_of::<f32>()
+    }
+}
+
+/// The neighborhood size a kernel actually runs at: `0` (unset) and
+/// anything `>= n - 1` mean the complete graph — the dense-exact path.
+pub(crate) fn effective_k(k: usize, n: usize) -> usize {
+    debug_assert!(n >= 2);
+    if k == 0 {
+        n - 1
+    } else {
+        k.min(n - 1)
+    }
+}
+
+/// Focus size of pair rows `dx`/`dy` over the candidate list — branchy,
+/// mirroring [`naive::pairwise`](crate::pald::naive::pairwise)'s count.
+#[inline(always)]
+fn count_cands_reference(dx: &[f32], dy: &[f32], dxy: f32, cand: &[u32], tie: TieMode) -> u32 {
+    let mut u = 0u32;
+    for &zu in cand {
+        let z = zu as usize;
+        if in_focus(dx[z], dy[z], dxy, tie) {
+            u += 1;
+        }
+    }
+    u
+}
+
+/// Focus size over the candidate list — masked integer accumulation
+/// (the branch-free rung); same integer as the reference count.
+#[inline(always)]
+fn count_cands_masked(dx: &[f32], dy: &[f32], dxy: f32, cand: &[u32], tie: TieMode) -> u32 {
+    let mut u = 0u32;
+    match tie {
+        TieMode::Strict => {
+            for &zu in cand {
+                let z = zu as usize;
+                u += ((dx[z] < dxy) | (dy[z] < dxy)) as u32;
+            }
+        }
+        TieMode::Split => {
+            for &zu in cand {
+                let z = zu as usize;
+                u += ((dx[z] <= dxy) | (dy[z] <= dxy)) as u32;
+            }
+        }
+    }
+    u
+}
+
+/// Branchy support award over the candidate list — the exact expression
+/// sequence of [`naive::pairwise`](crate::pald::naive::pairwise)'s
+/// inner z-loop, restricted to candidates.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn award_cands_reference(
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    w: f32,
+    cx: &mut [f32],
+    cy: &mut [f32],
+    cand: &[u32],
+    tie: TieMode,
+) {
+    for &zu in cand {
+        let z = zu as usize;
+        let dxz = dx[z];
+        let dyz = dy[z];
+        if !in_focus(dxz, dyz, dxy, tie) {
+            continue;
+        }
+        match tie {
+            TieMode::Strict => {
+                if dxz < dyz {
+                    cx[z] += w;
+                } else {
+                    cy[z] += w;
+                }
+            }
+            TieMode::Split => {
+                if dxz < dyz {
+                    cx[z] += w;
+                } else if dyz < dxz {
+                    cy[z] += w;
+                } else {
+                    cx[z] += 0.5 * w;
+                    cy[z] += 0.5 * w;
+                }
+            }
+        }
+    }
+}
+
+/// Comparison result as a {0, 1} float mask (see
+/// [`crate::pald::branchfree`] for why the select form matters).
+#[inline(always)]
+fn m(cond: bool) -> f32 {
+    if cond {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Masked, tiled support award over the candidate list: two
+/// unconditional FMAs per candidate, the sweep chunked in `block`-sized
+/// tiles.  Every masked product multiplies `w` by exactly 0, 0.5, or 1,
+/// so the sums are bit-identical to [`award_cands_reference`].
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn award_cands_masked(
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    w: f32,
+    cx: &mut [f32],
+    cy: &mut [f32],
+    cand: &[u32],
+    block: usize,
+    tie: TieMode,
+) {
+    for chunk in cand.chunks(block.max(1)) {
+        match tie {
+            TieMode::Strict => {
+                for &zu in chunk {
+                    let z = zu as usize;
+                    let dxz = dx[z];
+                    let dyz = dy[z];
+                    let r = m((dxz < dxy) | (dyz < dxy));
+                    let s = m(dxz < dyz);
+                    let rw = r * w;
+                    cx[z] += rw * s;
+                    cy[z] += rw * (1.0 - s);
+                }
+            }
+            TieMode::Split => {
+                for &zu in chunk {
+                    let z = zu as usize;
+                    let dxz = dx[z];
+                    let dyz = dy[z];
+                    let r = m((dxz <= dxy) | (dyz <= dxy));
+                    let s = m(dxz < dyz) + 0.5 * m(dxz == dyz);
+                    let rw = r * w;
+                    cx[z] += rw * s;
+                    cy[z] += rw * (1.0 - s);
+                }
+            }
+        }
+    }
+}
+
+/// Unnormalized truncated support accumulation into `out` (zeroed
+/// here); the graph is rebuilt from `d` at `effective_k(k, n)` into the
+/// scratch's reused buffers.  `branchfree` selects the rung,
+/// `two_pass` the ordering (fused pairwise vs focus-then-cohesion
+/// triplet), and the report of what was covered lands in
+/// `scratch.report`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sparse_support_into(
+    scratch: &mut KnnScratch,
+    d: &Mat,
+    tie: TieMode,
+    k: usize,
+    branchfree: bool,
+    two_pass: bool,
+    block: usize,
+    out: &mut Mat,
+    phases: &mut PhaseTimes,
+) {
+    let n = d.rows();
+    assert_eq!(n, d.cols());
+    out.as_mut_slice().fill(0.0);
+    let ke = effective_k(k, n);
+    let b = resolve_block(block, n);
+
+    let t0 = Instant::now();
+    scratch.graph.rebuild(d, ke, &mut scratch.gscratch);
+    let KnnScratch { graph, cand, w_edges, .. } = scratch;
+
+    if two_pass {
+        // Focus pass: every edge's weight, in edge order.
+        w_edges.clear();
+        for x in 0..n {
+            for &yu in graph.neighbors(x) {
+                let y = yu as usize;
+                if y <= x {
+                    continue;
+                }
+                let dxy = d[(x, y)];
+                merge_sorted(graph.neighbors(x), graph.neighbors(y), cand);
+                let u = if branchfree {
+                    count_cands_masked(d.row(x), d.row(y), dxy, cand, tie)
+                } else {
+                    count_cands_reference(d.row(x), d.row(y), dxy, cand, tie)
+                };
+                w_edges.push(1.0 / u as f32);
+            }
+        }
+        phases.focus_s += t0.elapsed().as_secs_f64();
+
+        // Cohesion pass: award every edge at its stored weight, in the
+        // same edge order.
+        let t1 = Instant::now();
+        let mut e = 0usize;
+        for x in 0..n {
+            for &yu in graph.neighbors(x) {
+                let y = yu as usize;
+                if y <= x {
+                    continue;
+                }
+                let dxy = d[(x, y)];
+                merge_sorted(graph.neighbors(x), graph.neighbors(y), cand);
+                let w = w_edges[e];
+                e += 1;
+                let (cx, cy) = out.two_rows_mut(x, y);
+                if branchfree {
+                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie);
+                } else {
+                    award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, cand, tie);
+                }
+            }
+        }
+        phases.cohesion_s += t1.elapsed().as_secs_f64();
+    } else {
+        // Fused pairwise ordering: count + award per edge.  The graph
+        // build is the closest analogue of a focus-phase cost here.
+        phases.focus_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        for x in 0..n {
+            for &yu in graph.neighbors(x) {
+                let y = yu as usize;
+                if y <= x {
+                    continue;
+                }
+                let dxy = d[(x, y)];
+                merge_sorted(graph.neighbors(x), graph.neighbors(y), cand);
+                let u = if branchfree {
+                    count_cands_masked(d.row(x), d.row(y), dxy, cand, tie)
+                } else {
+                    count_cands_reference(d.row(x), d.row(y), dxy, cand, tie)
+                };
+                let w = 1.0 / u as f32;
+                let (cx, cy) = out.two_rows_mut(x, y);
+                if branchfree {
+                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie);
+                } else {
+                    award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, cand, tie);
+                }
+            }
+        }
+        phases.cohesion_s += t1.elapsed().as_secs_f64();
+    }
+
+    let edges = graph.edge_count();
+    scratch.report = Some(KnnReport { effective_k: ke, edges, total_pairs: n * (n - 1) / 2 });
+}
+
+/// Unnormalized truncated support over an *explicit* graph — the batch
+/// oracle the incremental engine's truncated updates are verified
+/// against (same pair order and candidate semantics as the registered
+/// sparse kernels, reference rung).
+pub fn support_over_graph(d: &Mat, g: &NeighborGraph, tie: TieMode) -> Mat {
+    let n = d.rows();
+    assert_eq!(n, g.n(), "graph/matrix size mismatch");
+    let mut out = Mat::zeros(n, n);
+    let mut cand = Vec::new();
+    for x in 0..n {
+        for &yu in g.neighbors(x) {
+            let y = yu as usize;
+            if y <= x {
+                continue;
+            }
+            let dxy = d[(x, y)];
+            merge_sorted(g.neighbors(x), g.neighbors(y), &mut cand);
+            let u = count_cands_reference(d.row(x), d.row(y), dxy, &cand, tie);
+            let w = 1.0 / u as f32;
+            let (cx, cy) = out.two_rows_mut(x, y);
+            award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, &cand, tie);
+        }
+    }
+    out
+}
+
+/// [`support_over_graph`] with the `1/(n-1)` normalization applied —
+/// directly comparable to the dense kernels' cohesion matrices.
+pub fn cohesion_over_graph(d: &Mat, g: &NeighborGraph, tie: TieMode) -> Mat {
+    let mut c = support_over_graph(d, g, tie);
+    normalize(&mut c);
+    c
+}
+
+/// Truncated focus-size matrix over an explicit graph: `U[x][y]` for
+/// every edge (0 elsewhere, including the diagonal) — integer-exact,
+/// the oracle for the incremental engine's maintained `U`.
+pub fn focus_sizes_over_graph(d: &Mat, g: &NeighborGraph, tie: TieMode) -> Mat {
+    let n = d.rows();
+    assert_eq!(n, g.n(), "graph/matrix size mismatch");
+    let mut u = Mat::zeros(n, n);
+    let mut cand = Vec::new();
+    for x in 0..n {
+        for &yu in g.neighbors(x) {
+            let y = yu as usize;
+            if y <= x {
+                continue;
+            }
+            let dxy = d[(x, y)];
+            merge_sorted(g.neighbors(x), g.neighbors(y), &mut cand);
+            let cnt = count_cands_reference(d.row(x), d.row(y), dxy, &cand, tie) as f32;
+            u[(x, y)] = cnt;
+            u[(y, x)] = cnt;
+        }
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::naive;
+
+    fn run(d: &Mat, tie: TieMode, k: usize, branchfree: bool, two_pass: bool) -> Mat {
+        let n = d.rows();
+        let mut scratch = KnnScratch::new();
+        let mut out = Mat::zeros(n, n);
+        let mut phases = PhaseTimes::default();
+        sparse_support_into(
+            &mut scratch, d, tie, k, branchfree, two_pass, 8, &mut out, &mut phases,
+        );
+        normalize(&mut out);
+        out
+    }
+
+    #[test]
+    fn full_k_is_bit_identical_to_naive_pairwise_all_variants() {
+        let n = 26;
+        for (d, tie) in [
+            (distmat::random_tie_free(n, 77), TieMode::Strict),
+            (distmat::random_duplicated(n, 78, 3), TieMode::Split),
+        ] {
+            let want = naive::pairwise(&d, tie);
+            for branchfree in [false, true] {
+                for two_pass in [false, true] {
+                    for k in [0usize, n - 1, 5 * n] {
+                        let got = run(&d, tie, k, branchfree, two_pass);
+                        assert_eq!(
+                            got.as_slice(),
+                            want.as_slice(),
+                            "bf={branchfree} tp={two_pass} k={k} {tie:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_variants_are_bit_identical_at_small_k() {
+        let n = 30;
+        let d = distmat::random_tie_free(n, 5);
+        let reference = run(&d, TieMode::Strict, 4, false, false);
+        for branchfree in [false, true] {
+            for two_pass in [false, true] {
+                let got = run(&d, TieMode::Strict, 4, branchfree, two_pass);
+                assert_eq!(got.as_slice(), reference.as_slice(), "bf={branchfree} tp={two_pass}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_mass_equals_edge_count() {
+        let n = 32;
+        let d = distmat::random_tie_free(n, 9);
+        for k in [2usize, 6, 12] {
+            let g = NeighborGraph::build(&d, k).unwrap();
+            let c = run(&d, TieMode::Strict, k, true, true);
+            // Each evaluated pair distributes exactly one unnormalized
+            // support unit; normalized: edges / (n - 1).
+            let want = g.edge_count() as f64 / (n as f64 - 1.0);
+            assert!(
+                (c.sum() - want).abs() < 1e-3,
+                "k={k}: mass {} want {want}",
+                c.sum()
+            );
+        }
+    }
+
+    #[test]
+    fn report_records_coverage() {
+        let n = 20;
+        let d = distmat::random_tie_free(n, 4);
+        let mut scratch = KnnScratch::new();
+        let mut out = Mat::zeros(n, n);
+        let mut phases = PhaseTimes::default();
+        sparse_support_into(
+            &mut scratch, &d, TieMode::Strict, 3, true, false, 0, &mut out, &mut phases,
+        );
+        let r = scratch.report.unwrap();
+        assert_eq!(r.effective_k, 3);
+        assert_eq!(r.total_pairs, n * (n - 1) / 2);
+        assert!(r.edges < r.total_pairs && r.edges >= n * 3 / 2);
+        assert!(r.mass_bound() > 0.0 && r.mass_bound() < 1.0);
+        assert!(!r.is_exact());
+        sparse_support_into(
+            &mut scratch, &d, TieMode::Strict, n - 1, true, false, 0, &mut out, &mut phases,
+        );
+        let r = scratch.report.unwrap();
+        assert!(r.is_exact());
+        assert_eq!(r.mass_bound(), 0.0);
+    }
+
+    #[test]
+    fn oracle_helpers_match_registered_path() {
+        let n = 24;
+        let d = distmat::random_tie_free(n, 13);
+        let g = NeighborGraph::build(&d, 5).unwrap();
+        let mut via_graph = support_over_graph(&d, &g, TieMode::Strict);
+        normalize(&mut via_graph);
+        let via_kernel = run(&d, TieMode::Strict, 5, false, false);
+        assert_eq!(via_graph.as_slice(), via_kernel.as_slice());
+        let u = focus_sizes_over_graph(&d, &g, TieMode::Strict);
+        for x in 0..n {
+            for y in 0..n {
+                if g.contains(x, y) {
+                    assert!(u[(x, y)] >= 2.0, "edge ({x},{y}) focus too small");
+                    assert_eq!(u[(x, y)], u[(y, x)]);
+                } else {
+                    assert_eq!(u[(x, y)], 0.0);
+                }
+            }
+        }
+    }
+}

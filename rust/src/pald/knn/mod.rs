@@ -1,0 +1,39 @@
+//! Sparse PKNN engine: truncated-neighborhood PaLD at O(n·k²)
+//! (DESIGN.md §9).
+//!
+//! Every dense kernel pays Θ(n³) triplet comparisons, which caps the
+//! system at a few tens of thousands of points regardless of how well
+//! the Section-5 ladder is tuned.  The PKNN observation (Baron et al.;
+//! relied on by Online PaLD for bounded streaming updates) is that
+//! PaLD's conflict-focus comparisons restricted to k-nearest-neighbor
+//! sets preserve the community structure at O(n·k²) cost:
+//!
+//! * [`graph`] builds the exact symmetrized kNN graph
+//!   ([`NeighborGraph`], CSR) from any
+//!   [`DistanceInput`](crate::pald::DistanceInput);
+//! * [`kernels`] holds the truncated focus/cohesion computations at two
+//!   rungs of the optimization ladder (branchy reference and
+//!   blocked/branch-free), each in both pairwise (fused) and triplet
+//!   (two-pass) orderings — registered in the kernel
+//!   [`REGISTRY`](crate::pald::REGISTRY) as `knn-pairwise`,
+//!   `knn-triplet`, `knn-opt-pairwise`, `knn-opt-triplet`, with
+//!   capability metadata the [`Planner`](crate::pald::Planner) costs
+//!   against the dense kernels to pick truncation automatically when
+//!   [`neighborhood`](crate::pald::PaldBuilder::neighborhood) is set.
+//!
+//! **Exactness anchor:** with `k = n - 1` the graph is complete and
+//! every sparse kernel reproduces the dense pairwise reference bit for
+//! bit in support units; the truncation metadata a sparse run reports
+//! ([`KnnReport`]) then shows zero error bound.  The oracle functions
+//! ([`support_over_graph`], [`cohesion_over_graph`],
+//! [`focus_sizes_over_graph`]) evaluate the truncated semantics over an
+//! explicit graph — how the incremental engine's graph-capped updates
+//! are verified.
+
+pub mod graph;
+pub mod kernels;
+
+pub(crate) use graph::merge_sorted;
+pub use graph::NeighborGraph;
+pub(crate) use kernels::{effective_k, sparse_support_into, KnnScratch};
+pub use kernels::{cohesion_over_graph, focus_sizes_over_graph, support_over_graph, KnnReport};

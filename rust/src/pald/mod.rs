@@ -36,6 +36,16 @@
 //! sweep — instead of re-running an O(n³) batch kernel, with
 //! allocation-free steady-state updates ([`stream`] holds the support
 //! types) and a batch-recompute oracle (`paldx stream --check`).
+//!
+//! Beyond the dense Θ(n³) semantics, the [`knn`] subsystem (DESIGN.md
+//! §9) truncates the conflict pairs to a symmetrized k-nearest-neighbor
+//! graph at O(n·k²) cost: four sparse kernels (`knn-*`) in the same
+//! registry, [`PaldBuilder::neighborhood`] to request truncation (the
+//! planner costs it against the dense kernels under `Algorithm::Auto`),
+//! [`CohesionResult::effective_k`] /
+//! [`CohesionResult::truncation_error_bound`] to see what a run covered,
+//! a graph-capped incremental mode, and `paldx knn` on the CLI.  With
+//! `k = n - 1` the sparse kernels are bit-identical to dense.
 
 pub mod api;
 pub mod blocked;
@@ -46,6 +56,7 @@ pub mod facade;
 pub mod incremental;
 pub mod input;
 pub mod kernel;
+pub mod knn;
 pub mod naive;
 pub mod ops;
 pub mod optimized;
@@ -61,10 +72,13 @@ pub mod workspace;
 pub use api::{compute_cohesion, compute_cohesion_into, compute_cohesion_timed};
 pub use api::{plan_for, validate_distances, Algorithm, Backend, PaldConfig, PhaseTimes};
 pub use error::PaldError;
-pub use facade::{BlockSize, Pald, PaldBuilder, Threads, Validation};
-pub use incremental::{update_kernel_for, IncrementalPald, UpdateKernel, UPDATE_KERNELS};
+pub use facade::{BlockSize, Neighborhood, Pald, PaldBuilder, Threads, Validation};
+pub use incremental::{
+    update_kernel_for, IncrementalPald, ReanchorPolicy, UpdateKernel, UPDATE_KERNELS,
+};
 pub use input::{ComputedDistances, CondensedMatrix, DenseMatrix, DistanceInput, Metric};
 pub use kernel::{kernel_by_name, kernel_for, CohesionKernel, ExecParams, KernelMeta, REGISTRY};
+pub use knn::{KnnReport, NeighborGraph};
 pub use planner::{Plan, Planner};
 pub use result::CohesionResult;
 pub use session::Session;

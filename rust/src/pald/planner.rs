@@ -27,14 +27,23 @@ pub struct Plan {
 
 impl Plan {
     /// Pass-through plan for a user-pinned algorithm.
+    ///
+    /// A truncation request travels only with a kernel that consumes
+    /// it: when `cfg.k > 0`, a pinned dense algorithm maps to its
+    /// sparse counterpart ([`Algorithm::truncated`]), so `k > 0` in a
+    /// resolved plan always means "this run truncates" — the same
+    /// convention [`Planner::scored_candidates`] applies by zeroing `k`
+    /// on dense candidates.
     pub fn from_config(cfg: &PaldConfig) -> Plan {
+        let algorithm = if cfg.k > 0 { cfg.algorithm.truncated() } else { cfg.algorithm };
         Plan {
-            algorithm: cfg.algorithm,
+            algorithm,
             params: ExecParams {
                 tie: cfg.tie_mode,
                 block: cfg.block,
                 block2: cfg.block2,
                 threads: cfg.threads.max(1),
+                k: cfg.k,
             },
             predicted_s: None,
         }
@@ -58,8 +67,9 @@ impl Plan {
             Some(s) => format!(" predicted={s:.3e}s"),
             None => String::new(),
         };
+        let k = if self.params.k > 0 { format!(" k={}", self.params.k) } else { String::new() };
         format!(
-            "algorithm={} block={} block2={} threads={}{}",
+            "algorithm={} block={} block2={} threads={}{k}{}",
             self.algorithm.name(),
             self.params.block,
             self.params.block2,
@@ -110,26 +120,45 @@ impl Planner {
         }
     }
 
+    /// Sparse PKNN candidates, considered only when a truncated
+    /// neighborhood is requested (`k > 0`) and actually truncates
+    /// (`k < n - 1`); only the optimized sparse rung competes (the
+    /// reference rung exists for the ablation, like the dense ladder).
+    fn knn_candidates(n: usize, k: usize) -> &'static [Algorithm] {
+        if k > 0 && k < n.saturating_sub(1) {
+            &[Algorithm::KnnOptPairwise, Algorithm::KnnOptTriplet]
+        } else {
+            &[]
+        }
+    }
+
     /// The cost-ranked candidate set the planner actually chooses from:
     /// each entry is (algorithm, tuned params, predicted seconds).
     /// Kernels whose metadata does not declare exact tie support are
-    /// excluded under `TieMode::Split`.
+    /// excluded under `TieMode::Split`; `k > 0` adds the sparse PKNN
+    /// kernels, costed at O(n·k²) against the dense Θ(n³) models —
+    /// dense candidates keep `k = 0` in their params so a dense
+    /// selection explicitly means "no truncation".
     pub fn scored_candidates(
         &self,
         n: usize,
         tie: TieMode,
         threads: usize,
+        k: usize,
     ) -> Vec<(Algorithm, ExecParams, f64)> {
         let threads = threads.max(1);
         Self::candidates(threads)
             .iter()
+            .chain(Self::knn_candidates(n, k).iter())
             .filter_map(|&alg| {
                 let kernel = kernel_for(alg).expect("candidate registered");
-                if tie == TieMode::Split && !kernel.meta().exact_ties {
+                let meta = kernel.meta();
+                if tie == TieMode::Split && !meta.exact_ties {
                     return None;
                 }
                 let (block, block2) = kernel.default_blocks(n, self.machine.fast_mem_words);
-                let params = ExecParams { tie, block, block2, threads };
+                let kk = if meta.sparse { k } else { 0 };
+                let params = ExecParams { tie, block, block2, threads, k: kk };
                 let cost = kernel.cost(n, &params, &self.machine);
                 Some((alg, params, cost))
             })
@@ -137,11 +166,12 @@ impl Planner {
     }
 
     /// Choose the cheapest kernel + tuned block sizes for an `n x n`
-    /// problem on `threads` threads.
-    pub fn plan(&self, n: usize, tie: TieMode, threads: usize) -> Plan {
+    /// problem on `threads` threads, with truncation (`k > 0`) costed
+    /// in as a candidate.
+    pub fn plan(&self, n: usize, tie: TieMode, threads: usize, k: usize) -> Plan {
         let mut best: Option<Plan> = None;
         let mut best_cost = f64::INFINITY;
-        for (alg, params, cost) in self.scored_candidates(n, tie, threads) {
+        for (alg, params, cost) in self.scored_candidates(n, tie, threads, k) {
             if cost < best_cost || best.is_none() {
                 best_cost = cost;
                 best = Some(Plan { algorithm: alg, params, predicted_s: Some(cost) });
@@ -157,7 +187,7 @@ impl Planner {
     pub fn resolve(&self, cfg: &PaldConfig, n: usize) -> Plan {
         if cfg.algorithm == Algorithm::Auto {
             let mut plan = self
-                .plan(n, cfg.tie_mode, cfg.threads.max(1))
+                .plan(n, cfg.tie_mode, cfg.threads.max(1), cfg.k)
                 .with_overrides(cfg.block, cfg.block2);
             if cfg.block != 0 || cfg.block2 != 0 {
                 let kernel = kernel_for(plan.algorithm).expect("planned kernel registered");
@@ -186,7 +216,7 @@ mod tests {
 
     #[test]
     fn sequential_plan_is_a_sequential_kernel_with_blocks() {
-        let plan = planner().plan(1024, TieMode::Strict, 1);
+        let plan = planner().plan(1024, TieMode::Strict, 1, 0);
         assert!(
             matches!(
                 plan.algorithm,
@@ -201,7 +231,7 @@ mod tests {
 
     #[test]
     fn parallel_plan_uses_threads() {
-        let plan = planner().plan(4096, TieMode::Strict, 16);
+        let plan = planner().plan(4096, TieMode::Strict, 16, 0);
         let k = kernel_for(plan.algorithm).unwrap();
         assert!(k.meta().parallel, "expected a parallel kernel, got {}", k.name());
         assert_eq!(plan.params.threads, 16);
@@ -209,9 +239,64 @@ mod tests {
 
     #[test]
     fn overrides_win_over_tuning() {
-        let plan = planner().plan(512, TieMode::Strict, 1).with_overrides(33, 17);
+        let plan = planner().plan(512, TieMode::Strict, 1, 0).with_overrides(33, 17);
         assert_eq!(plan.params.block, 33);
         assert_eq!(plan.params.block2, 17);
+    }
+
+    #[test]
+    fn small_neighborhood_selects_a_sparse_kernel() {
+        let p = planner();
+        // k << n: the O(n·k²) prediction must beat every dense Θ(n³)
+        // candidate, sequentially and in parallel.
+        for threads in [1usize, 8] {
+            let plan = p.plan(4096, TieMode::Strict, threads, 16);
+            let kernel = kernel_for(plan.algorithm).unwrap();
+            assert!(kernel.meta().sparse, "threads={threads}: got {}", kernel.name());
+            assert_eq!(plan.params.k, 16);
+        }
+        // k >= n - 1 truncates nothing: the sparse kernels are not even
+        // candidates, and the plan carries k = 0 (no truncation).
+        let plan = p.plan(256, TieMode::Strict, 1, 255);
+        assert!(!kernel_for(plan.algorithm).unwrap().meta().sparse);
+        assert_eq!(plan.params.k, 0);
+        // Split ties stay supported on the sparse path.
+        let plan = p.plan(4096, TieMode::Split, 1, 8);
+        assert!(kernel_for(plan.algorithm).unwrap().meta().sparse);
+    }
+
+    #[test]
+    fn resolve_carries_the_configured_neighborhood() {
+        let p = planner();
+        let cfg =
+            PaldConfig { algorithm: Algorithm::Auto, threads: 1, k: 12, ..Default::default() };
+        let plan = p.resolve(&cfg, 2048);
+        assert!(kernel_for(plan.algorithm).unwrap().meta().sparse);
+        assert_eq!(plan.params.k, 12);
+        assert!(plan.describe().contains("k=12"), "{}", plan.describe());
+        // Pinned sparse algorithms pass the neighborhood through too.
+        let pinned = PaldConfig {
+            algorithm: Algorithm::KnnOptTriplet,
+            k: 7,
+            ..Default::default()
+        };
+        let plan = p.resolve(&pinned, 100);
+        assert_eq!(plan.algorithm, Algorithm::KnnOptTriplet);
+        assert_eq!(plan.params.k, 7);
+        // ... and a pinned *dense* algorithm with a neighborhood maps
+        // to its sparse counterpart instead of silently running dense
+        // while describing "k=7".
+        let dense_pin = PaldConfig {
+            algorithm: Algorithm::OptimizedPairwise,
+            k: 7,
+            ..Default::default()
+        };
+        let plan = p.resolve(&dense_pin, 100);
+        assert_eq!(plan.algorithm, Algorithm::KnnOptPairwise);
+        assert_eq!(plan.params.k, 7);
+        // Without a neighborhood the pin is untouched.
+        let no_k = PaldConfig { algorithm: Algorithm::OptimizedPairwise, ..Default::default() };
+        assert_eq!(p.resolve(&no_k, 100).algorithm, Algorithm::OptimizedPairwise);
     }
 
     #[test]
@@ -257,9 +342,9 @@ mod tests {
     #[test]
     fn scored_candidates_match_plan_selection() {
         let p = planner();
-        let scored = p.scored_candidates(1024, TieMode::Strict, 4);
+        let scored = p.scored_candidates(1024, TieMode::Strict, 4, 0);
         assert!(!scored.is_empty());
-        let plan = p.plan(1024, TieMode::Strict, 4);
+        let plan = p.plan(1024, TieMode::Strict, 4, 0);
         let best = scored
             .iter()
             .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())

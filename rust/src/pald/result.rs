@@ -14,6 +14,7 @@ use std::sync::OnceLock;
 use crate::analysis;
 use crate::analysis::StrongTie;
 use crate::core::Mat;
+use crate::pald::knn::KnnReport;
 use crate::pald::planner::Plan;
 use crate::pald::workspace::PhaseTimes;
 
@@ -22,6 +23,7 @@ pub struct CohesionResult {
     cohesion: Mat,
     times: PhaseTimes,
     plan: Plan,
+    knn: Option<KnnReport>,
     tau: OnceLock<f32>,
     ties: OnceLock<Vec<StrongTie>>,
     depths: OnceLock<Vec<f32>>,
@@ -29,11 +31,19 @@ pub struct CohesionResult {
 }
 
 impl CohesionResult {
-    pub(crate) fn new(cohesion: Mat, times: PhaseTimes, plan: Plan) -> CohesionResult {
+    /// Result with the truncation report of a sparse PKNN run attached
+    /// (`None` for dense runs).
+    pub(crate) fn with_truncation(
+        cohesion: Mat,
+        times: PhaseTimes,
+        plan: Plan,
+        knn: Option<KnnReport>,
+    ) -> CohesionResult {
         CohesionResult {
             cohesion,
             times,
             plan,
+            knn,
             tau: OnceLock::new(),
             ties: OnceLock::new(),
             depths: OnceLock::new(),
@@ -67,6 +77,29 @@ impl CohesionResult {
     /// threads — never `Algorithm::Auto`).
     pub fn plan(&self) -> &Plan {
         &self.plan
+    }
+
+    /// The neighborhood size a truncated (PKNN) computation actually
+    /// ran at — `min(k, n-1)` — or `None` when a dense kernel produced
+    /// this result (DESIGN.md §9).
+    pub fn effective_k(&self) -> Option<usize> {
+        self.knn.map(|r| r.effective_k)
+    }
+
+    /// Upper bound on the truncation-induced support-mass deficit
+    /// relative to the dense computation: `1 - edges/total_pairs`,
+    /// exactly `0.0` when the graph was complete (`k >= n - 1`, where
+    /// the result is bit-identical to dense) and `None` for dense runs.
+    /// See [`KnnReport::mass_bound`](crate::pald::KnnReport::mass_bound)
+    /// for what the bound does and does not cover.
+    pub fn truncation_error_bound(&self) -> Option<f64> {
+        self.knn.map(|r| r.mass_bound())
+    }
+
+    /// Full truncation report of a sparse run (effective k, conflict
+    /// pairs covered, dense pair total), `None` for dense runs.
+    pub fn knn_report(&self) -> Option<KnnReport> {
+        self.knn
     }
 
     /// The universal strong-tie threshold `mean(diag(C)) / 2` of
@@ -112,7 +145,7 @@ mod tests {
         let mut ws = crate::pald::Workspace::new();
         let mut out = Mat::zeros(n, n);
         let times = crate::pald::api::execute_plan(&d, &plan, &mut ws, &mut out).unwrap();
-        CohesionResult::new(out, times, plan)
+        CohesionResult::with_truncation(out, times, plan, None)
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::core::Mat;
 use crate::pald::api::{self, Backend, PaldConfig, PhaseTimes};
 use crate::pald::error::PaldError;
 use crate::pald::input::DistanceInput;
+use crate::pald::knn::KnnReport;
 use crate::pald::planner::Plan;
 use crate::pald::workspace::Workspace;
 
@@ -102,6 +103,14 @@ impl Session {
     /// Phase timings recorded by the most recent computation.
     pub fn last_times(&self) -> PhaseTimes {
         self.ws.phases
+    }
+
+    /// Truncation report of the most recent computation — `Some` only
+    /// when a sparse PKNN kernel ran (DESIGN.md §9): the effective `k`,
+    /// the conflict pairs covered, and the dense pair total behind the
+    /// [`CohesionResult`](crate::pald::CohesionResult) error bound.
+    pub fn last_knn_report(&self) -> Option<KnnReport> {
+        self.ws.knn.report
     }
 
     /// Bytes currently held by the reusable workspace, including the

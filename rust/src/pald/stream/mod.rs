@@ -321,6 +321,10 @@ pub struct UpdateStats {
     /// Buffer reallocations forced by updates (0 in steady state —
     /// reserve capacity up front to keep it there).
     pub grow_events: u64,
+    /// In-place batch recomputes triggered by
+    /// [`ReanchorPolicy`](crate::pald::ReanchorPolicy) (or
+    /// [`reanchor_now`](crate::pald::IncrementalPald::reanchor_now)).
+    pub reanchors: u64,
     /// Existing pairs whose focus gained/lost a point and had their
     /// support contributions reweighted (the data-dependent part of the
     /// per-update cost; see DESIGN.md §8).

@@ -11,6 +11,7 @@
 
 use crate::core::Mat;
 use crate::parallel::reduce::ReduceWorkspace;
+use crate::pald::knn::KnnScratch;
 
 /// Phase timing breakdown (paper Figure 13 / Appendix B).
 ///
@@ -56,6 +57,10 @@ pub struct Workspace {
     pub(crate) w_tile: Vec<f32>,
     /// Per-thread reduction buffers (parallel pairwise focus pass).
     pub(crate) reduce: ReduceWorkspace,
+    /// Sparse PKNN state: the neighbor graph, its build scratch, the
+    /// candidate-merge buffer, and the last truncation report
+    /// (DESIGN.md §9).
+    pub(crate) knn: KnnScratch,
     /// Phase timings recorded by the last kernel run.
     pub phases: PhaseTimes,
 }
@@ -74,6 +79,7 @@ impl Workspace {
             u_tile: Vec::new(),
             w_tile: Vec::new(),
             reduce: ReduceWorkspace::default(),
+            knn: KnnScratch::new(),
             phases: PhaseTimes::default(),
         }
     }
@@ -116,9 +122,12 @@ impl Workspace {
         self.w_tile.resize(b * b, 0.0);
     }
 
-    /// Clear the phase recorder before a fresh kernel run.
+    /// Clear the phase recorder and the truncation report before a
+    /// fresh kernel run (sparse kernels re-fill the report; a dense run
+    /// leaves it `None`).
     pub fn reset_phases(&mut self) {
         self.phases = PhaseTimes::default();
+        self.knn.report = None;
     }
 
     /// Bytes currently held by the arena (scratch matrices, mask rows,
@@ -137,6 +146,7 @@ impl Workspace {
         f32s * std::mem::size_of::<f32>()
             + self.u_tile.capacity() * std::mem::size_of::<u32>()
             + self.reduce.allocated_bytes()
+            + self.knn.allocated_bytes()
     }
 }
 

@@ -33,7 +33,7 @@ fn auto_matches_naive_reference() {
 fn planner_selects_concrete_kernel_with_blocks() {
     let planner = Planner::new();
     for (n, threads) in [(128usize, 1usize), (1024, 1), (2048, 8)] {
-        let plan = planner.plan(n, TieMode::Strict, threads);
+        let plan = planner.plan(n, TieMode::Strict, threads, 0);
         assert_ne!(plan.algorithm, Algorithm::Auto);
         let kernel = plan.algorithm.kernel().expect("planned kernel is registered");
         assert!(plan.params.block > 0 && plan.params.block <= n, "{}", kernel.name());
@@ -91,8 +91,9 @@ fn session_auto_serves_mixed_shapes() {
     }
 }
 
-/// All 12 variants agree with the naive reference through the public
-/// kernel-trait path (registry -> compute_into -> workspace).
+/// All 16 variants (12 dense + 4 sparse at the full-graph fallback)
+/// agree with the naive reference through the public kernel-trait path
+/// (registry -> compute_into -> workspace).
 #[test]
 fn registry_trait_path_agrees_with_naive() {
     let n = 44;

@@ -1,0 +1,460 @@
+//! Acceptance and property tests for the sparse PKNN engine
+//! (DESIGN.md §9): the exactness anchor (k = n-1 bit-identical to the
+//! dense kernels in support units), planner selection of truncation,
+//! monotone coverage/error in k, duplicate-point ties on the sparse
+//! path, and the graph-capped incremental engine against its batch
+//! oracle.
+
+use paldx::core::Mat;
+use paldx::data::distmat;
+use paldx::pald::{
+    knn, naive, Algorithm, IncrementalPald, Neighborhood, NeighborGraph, Pald, PaldConfig,
+    PaldError, Planner, ReanchorPolicy, Session, Threads, TieMode, Validation,
+};
+
+const SPARSE: [Algorithm; 4] = [
+    Algorithm::KnnPairwise,
+    Algorithm::KnnTriplet,
+    Algorithm::KnnOptPairwise,
+    Algorithm::KnnOptTriplet,
+];
+
+fn sparse_pald(alg: Algorithm, k: usize) -> Pald {
+    Pald::builder()
+        .algorithm(alg)
+        .neighborhood(Neighborhood::Knn(k))
+        .threads(Threads::Fixed(1))
+        .build()
+        .unwrap()
+}
+
+/// The tentpole acceptance criterion, half one: with `k = n - 1` every
+/// sparse kernel reproduces the dense kernels' cohesion bit-for-bit in
+/// support units — asserted as bit-identity against the naive pairwise
+/// reference (the dense semantic anchor every dense kernel is tested
+/// against) and tolerance-identity against all 16 registered kernels.
+#[test]
+fn full_neighborhood_is_bit_identical_to_dense() {
+    let n = 34;
+    for (d, tie) in [
+        (distmat::random_tie_free(n, 2027), TieMode::Strict),
+        (distmat::random_tied(n, 2028, 4), TieMode::Split),
+    ] {
+        let want = naive::pairwise(&d, tie);
+        for alg in SPARSE {
+            let mut p = Pald::builder()
+                .algorithm(alg)
+                .neighborhood(Neighborhood::Knn(n - 1))
+                .tie_mode(tie)
+                .threads(Threads::Fixed(1))
+                .build()
+                .unwrap();
+            let r = p.compute(&d).unwrap();
+            assert_eq!(
+                r.cohesion().as_slice(),
+                want.as_slice(),
+                "{} ({tie:?}): k=n-1 must be bit-identical to the dense reference",
+                alg.name()
+            );
+            assert_eq!(r.effective_k(), Some(n - 1));
+            assert_eq!(r.truncation_error_bound(), Some(0.0));
+            assert!(r.knn_report().unwrap().is_exact());
+        }
+        // ... and within the cross-kernel tolerance of every dense
+        // registered variant.
+        let sparse = sparse_pald(Algorithm::KnnOptPairwise, n - 1)
+            .compute(&d)
+            .unwrap()
+            .into_matrix();
+        for alg in Algorithm::ALL {
+            let cfg = PaldConfig {
+                algorithm: alg,
+                tie_mode: tie,
+                block: 16,
+                block2: 8,
+                threads: 2,
+                ..Default::default()
+            };
+            let c = Session::new(cfg).unwrap().compute(&d).unwrap();
+            assert!(
+                sparse.allclose(&c, 1e-4, 1e-5),
+                "{} vs sparse full-k: maxdiff={}",
+                alg.name(),
+                sparse.max_abs_diff(&c)
+            );
+        }
+    }
+}
+
+/// The tentpole acceptance criterion, half two: with `neighborhood(k)`
+/// set and `k << n`, `Algorithm::Auto` resolves to a sparse kernel —
+/// end-to-end through the facade, and the result reports its truncation.
+#[test]
+fn auto_selects_truncation_for_small_k() {
+    let planner = Planner::new();
+    let plan = planner.plan(4096, TieMode::Strict, 1, 16);
+    assert!(
+        plan.algorithm.kernel().unwrap().meta().sparse,
+        "expected a knn kernel, got {}",
+        plan.algorithm.name()
+    );
+    // Facade path on a real (smaller) problem: planner-selected sparse
+    // kernel, truncation reported, agreement with dense within the
+    // mass bound's reach on clustered data.
+    let pts = distmat::gaussian_clusters(6, &[40, 40, 40], &[0.2, 0.2, 0.2], 30.0, 5);
+    let d = distmat::euclidean(&pts);
+    let n = d.rows();
+    let mut auto = Pald::builder()
+        .neighborhood(Neighborhood::Knn(12))
+        .threads(Threads::Fixed(1))
+        .build()
+        .unwrap();
+    let r = auto.compute(&d).unwrap();
+    assert!(
+        r.plan().algorithm.kernel().unwrap().meta().sparse,
+        "auto with k=12 at n={n} should truncate, picked {}",
+        r.plan().algorithm.name()
+    );
+    assert_eq!(r.effective_k(), Some(12));
+    let bound = r.truncation_error_bound().unwrap();
+    assert!(bound > 0.0 && bound < 1.0, "bound={bound}");
+}
+
+/// A neighborhood request is never silently dropped, and never lies:
+/// a pinned dense algorithm maps to its sparse counterpart, and when
+/// the planner declines truncation (k too close to n to win) both the
+/// result and the incremental engine are plainly dense.
+#[test]
+fn neighborhood_semantics_are_coherent_across_the_stack() {
+    let d = distmat::random_tie_free(60, 8);
+    // Pinned dense + Knn(6): truncates via the sparse counterpart.
+    let mut pinned = Pald::builder()
+        .algorithm(Algorithm::OptimizedPairwise)
+        .neighborhood(Neighborhood::Knn(6))
+        .threads(Threads::Fixed(1))
+        .build()
+        .unwrap();
+    let r = pinned.compute(&d).unwrap();
+    assert_eq!(r.plan().algorithm, Algorithm::KnnOptPairwise);
+    assert_eq!(r.effective_k(), Some(6));
+    // Auto + Knn(40) at n=60: 4k² >= n², so truncation cannot win and
+    // the planner declines — the run is exactly dense and says so.
+    let mut declined = Pald::builder()
+        .neighborhood(Neighborhood::Knn(40))
+        .threads(Threads::Fixed(1))
+        .build()
+        .unwrap();
+    let r = declined.compute(&d).unwrap();
+    assert!(!r.plan().algorithm.kernel().unwrap().meta().sparse);
+    assert_eq!(r.effective_k(), None);
+    // The incremental engine follows the same verdict, so its state and
+    // batch_recompute always agree in kind.
+    let mut eng = Pald::builder()
+        .neighborhood(Neighborhood::Knn(40))
+        .threads(Threads::Fixed(1))
+        .build()
+        .unwrap()
+        .into_incremental(&d)
+        .unwrap();
+    assert_eq!(eng.neighborhood(), None, "declined truncation = exact dense engine");
+    let inc = eng.cohesion();
+    let batch = eng.batch_recompute().unwrap();
+    assert!(inc.allclose(&batch, 1e-4, 1e-5));
+    // ... and a pinned-dense truncated engine is graph-capped, with the
+    // batch recompute dispatching the matching sparse kernel.
+    let mut capped = Pald::builder()
+        .algorithm(Algorithm::OptimizedTriplet)
+        .neighborhood(Neighborhood::Knn(6))
+        .threads(Threads::Fixed(1))
+        .build()
+        .unwrap()
+        .into_incremental(&d)
+        .unwrap();
+    assert_eq!(capped.neighborhood(), Some(6));
+    assert_eq!(capped.plan().algorithm, Algorithm::KnnOptTriplet);
+}
+
+/// Coverage (and therefore the reported error bound) is monotone in k
+/// by construction: base lists only grow, so the symmetrized edge set
+/// only grows.
+#[test]
+fn error_bound_is_monotone_non_increasing_in_k() {
+    let d = distmat::random_tie_free(48, 77);
+    let mut prev_bound = f64::INFINITY;
+    for k in [2usize, 4, 8, 16, 32, 47] {
+        let r = sparse_pald(Algorithm::KnnOptTriplet, k).compute(&d).unwrap();
+        let bound = r.truncation_error_bound().unwrap();
+        assert!(
+            bound <= prev_bound,
+            "bound rose from {prev_bound} to {bound} at k={k}"
+        );
+        prev_bound = bound;
+    }
+    assert_eq!(prev_bound, 0.0, "k = n-1 must report a zero bound");
+}
+
+/// On well-separated clustered embeddings, the actual cohesion error
+/// against dense is (within float noise) monotone non-increasing in k,
+/// and exactly zero at k = n-1.
+#[test]
+fn approximation_error_decreases_with_k_on_clusters() {
+    // 3 tight, far-apart clusters of 8: truncation inside a cluster
+    // loses little, tiny k loses a lot.
+    let pts = distmat::gaussian_clusters(5, &[8, 8, 8], &[0.05, 0.05, 0.05], 100.0, 11);
+    let d = distmat::euclidean(&pts);
+    let n = d.rows();
+    let dense = naive::pairwise(&d, TieMode::Strict);
+    let mean_abs_err = |c: &Mat| -> f64 {
+        c.as_slice()
+            .iter()
+            .zip(dense.as_slice())
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / (n * n) as f64
+    };
+    let ks = [3usize, 7, 15, n - 1];
+    let errs: Vec<f64> = ks
+        .iter()
+        .map(|&k| {
+            let c = sparse_pald(Algorithm::KnnOptPairwise, k).compute(&d).unwrap();
+            mean_abs_err(c.cohesion())
+        })
+        .collect();
+    for (i, w) in errs.windows(2).enumerate() {
+        assert!(
+            w[1] <= w[0] + 1e-6,
+            "error rose from {} (k={}) to {} (k={})",
+            w[0],
+            ks[i],
+            w[1],
+            ks[i + 1]
+        );
+    }
+    assert_eq!(*errs.last().unwrap(), 0.0, "k=n-1 must be exact");
+    assert!(
+        errs[0] > *errs.last().unwrap(),
+        "tiny k should actually lose something on this geometry: {errs:?}"
+    );
+}
+
+/// Duplicate-point ties on the sparse path: split mode at the complete
+/// graph matches the dense reference bit-for-bit, at small k all four
+/// sparse kernels stay bit-identical to each other and conserve the
+/// per-edge support mass; strict mode's deterministic tie-breaking
+/// keeps the kernels mutually bit-identical too.
+#[test]
+fn duplicate_ties_on_the_sparse_path() {
+    let n = 30;
+    let d = distmat::random_duplicated(n, 13, 3);
+    // Split, complete graph: exact.
+    let want = naive::pairwise(&d, TieMode::Split);
+    for alg in SPARSE {
+        let mut p = Pald::builder()
+            .algorithm(alg)
+            .neighborhood(Neighborhood::Knn(n - 1))
+            .tie_mode(TieMode::Split)
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        let got = p.compute(&d).unwrap();
+        assert_eq!(got.cohesion().as_slice(), want.as_slice(), "{} split", alg.name());
+    }
+    // Small k, split mode: all four sparse kernels stay bit-identical
+    // to each other, and every evaluated edge still distributes exactly
+    // one support unit (the mass-conservation invariant under ties).
+    let k = 5;
+    let mut reference: Option<Mat> = None;
+    for alg in SPARSE {
+        let mut p = Pald::builder()
+            .algorithm(alg)
+            .neighborhood(Neighborhood::Knn(k))
+            .tie_mode(TieMode::Split)
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        let got = p.compute(&d).unwrap().into_matrix();
+        match &reference {
+            None => reference = Some(got),
+            Some(r) => assert_eq!(
+                got.as_slice(),
+                r.as_slice(),
+                "{} (split) diverged from its sparse siblings",
+                alg.name()
+            ),
+        }
+    }
+    let g = NeighborGraph::build(&d, k).unwrap();
+    let total = reference.unwrap().sum();
+    let want_mass = g.edge_count() as f64 / (n as f64 - 1.0);
+    assert!(
+        (total - want_mass).abs() < 1e-3,
+        "split mass {total} want {want_mass}"
+    );
+    // Strict mode is undefined on exact ties for the masked rung (the
+    // dense branch-free kernels' documented 0·∞ caveat carries over);
+    // the two branchy reference orderings must still agree bit-for-bit.
+    let mut a = Pald::builder()
+        .algorithm(Algorithm::KnnPairwise)
+        .neighborhood(Neighborhood::Knn(k))
+        .threads(Threads::Fixed(1))
+        .build()
+        .unwrap();
+    let mut b = Pald::builder()
+        .algorithm(Algorithm::KnnTriplet)
+        .neighborhood(Neighborhood::Knn(k))
+        .threads(Threads::Fixed(1))
+        .build()
+        .unwrap();
+    let (ca, cb) = (a.compute(&d).unwrap(), b.compute(&d).unwrap());
+    assert_eq!(ca.cohesion().as_slice(), cb.cohesion().as_slice());
+}
+
+/// Graph-capped incremental engine vs the batch oracle over the
+/// engine's own graph: a churned insert/remove stream stays exact
+/// (U bit-identical, C within the documented incremental tolerance).
+#[test]
+fn truncated_incremental_matches_graph_oracle_through_churn() {
+    for (tie, master) in [
+        (TieMode::Strict, distmat::random_tie_free(30, 404)),
+        (TieMode::Split, distmat::random_tied(30, 405, 4)),
+    ] {
+        let seed = master.slice_to(22, 22);
+        let mut eng = Pald::builder()
+            .algorithm(Algorithm::KnnOptPairwise)
+            .neighborhood(Neighborhood::Knn(6))
+            .tie_mode(tie)
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap()
+            .into_incremental_with_capacity(&seed, 30)
+            .unwrap();
+        assert_eq!(eng.neighborhood(), Some(6));
+        let mut ids: Vec<usize> = (0..22).collect();
+        for q in 22..30 {
+            let row: Vec<f32> = ids.iter().map(|&id| master[(q, id)]).collect();
+            eng.insert_row(&row).unwrap();
+            ids.push(q);
+        }
+        for victim in [5usize, 17, 2] {
+            eng.remove(victim).unwrap();
+            ids.remove(victim);
+        }
+        assert_eq!(eng.n(), 27);
+        let g = eng.neighbor_graph().expect("graph-capped engine");
+        let d_now = eng.distances();
+        let want_c = knn::cohesion_over_graph(&d_now, &g, tie);
+        let got_c = eng.cohesion();
+        assert!(
+            got_c.allclose(&want_c, 1e-4, 1e-5),
+            "{tie:?}: maxdiff={}",
+            got_c.max_abs_diff(&want_c)
+        );
+        let want_u = knn::focus_sizes_over_graph(&d_now, &g, tie);
+        assert_eq!(
+            eng.focus_sizes().as_slice(),
+            want_u.as_slice(),
+            "{tie:?}: U must stay integer-exact over the engine graph"
+        );
+        // Re-anchoring rebuilds the exact batch graph; afterwards the
+        // state matches the batch sparse kernel end to end.
+        eng.reanchor_now();
+        let batch = eng.batch_recompute().unwrap();
+        let inc = eng.cohesion();
+        assert!(
+            inc.allclose(&batch, 1e-4, 1e-5),
+            "{tie:?} after reanchor: maxdiff={}",
+            inc.max_abs_diff(&batch)
+        );
+        assert_eq!(eng.stats().reanchors, 1);
+    }
+}
+
+/// Re-anchor policy on a graph-capped engine: EveryN keeps the online
+/// graph glued to the exact batch graph across a long stream.
+#[test]
+fn truncated_stream_with_periodic_reanchor_tracks_batch() {
+    let master = distmat::random_tie_free(26, 99);
+    let seed = master.slice_to(18, 18);
+    let mut eng = Pald::builder()
+        .neighborhood(Neighborhood::Knn(5))
+        .algorithm(Algorithm::KnnPairwise)
+        .threads(Threads::Fixed(1))
+        .build()
+        .unwrap()
+        .into_incremental_with_capacity(&seed, 26)
+        .unwrap();
+    eng.set_reanchor_policy(ReanchorPolicy::EveryN(4));
+    for q in 18..26 {
+        eng.insert_row(&master.row(q)[..q]).unwrap();
+    }
+    assert_eq!(eng.stats().reanchors, 2);
+    // The last update was a re-anchor, so the online state IS the
+    // batch truncated state.
+    let batch = eng.batch_recompute().unwrap();
+    let inc = eng.cohesion();
+    assert!(inc.allclose(&batch, 1e-4, 1e-5), "maxdiff={}", inc.max_abs_diff(&batch));
+}
+
+/// Typed validation end to end: the builder rejects k = 0, the graph
+/// builder rejects bad shapes, and the error displays its payload.
+#[test]
+fn invalid_neighborhood_is_typed() {
+    assert!(matches!(
+        Pald::builder().neighborhood(Neighborhood::Knn(0)).build(),
+        Err(PaldError::InvalidNeighborhood { k: 0 })
+    ));
+    let e = PaldError::InvalidNeighborhood { k: 0 };
+    assert!(e.to_string().contains("neighborhood size 0"), "{e}");
+    let d = distmat::random_tie_free(8, 1);
+    assert!(NeighborGraph::build(&d, 0).is_err());
+    assert!(NeighborGraph::build(&d, 3).is_ok());
+}
+
+/// The sparse workspace is steady-state allocation-free: repeated
+/// same-shape truncated computations do not grow the facade workspace.
+#[test]
+fn sparse_workspace_reuse_is_allocation_free() {
+    let d = distmat::random_tie_free(40, 3);
+    let mut p = sparse_pald(Algorithm::KnnOptTriplet, 7);
+    let first = p.compute(&d).unwrap().into_matrix();
+    let bytes = p.workspace_bytes();
+    for _ in 0..3 {
+        let again = p.compute(&d).unwrap();
+        assert_eq!(again.cohesion().as_slice(), first.as_slice());
+        assert_eq!(p.workspace_bytes(), bytes, "steady state must not grow the workspace");
+    }
+}
+
+/// Condensed and computed inputs reach the sparse kernels bit-identically
+/// to dense input (the materialization path feeds the same graph build).
+#[test]
+fn sparse_kernels_accept_every_input_representation() {
+    use paldx::pald::{ComputedDistances, CondensedMatrix, Metric};
+    let pts = distmat::gaussian_clusters(4, &[10, 10], &[0.3, 0.3], 8.0, 21);
+    let d = distmat::euclidean(&pts);
+    let mut p = sparse_pald(Algorithm::KnnOptPairwise, 6);
+    let via_dense = p.compute(&d).unwrap().into_matrix();
+    let condensed = CondensedMatrix::from_dense(&d).unwrap();
+    let via_condensed = p.compute(&condensed).unwrap();
+    assert_eq!(via_condensed.cohesion().as_slice(), via_dense.as_slice());
+    let computed = ComputedDistances::new(pts, Metric::Euclidean).unwrap();
+    let via_points = p.compute(&computed).unwrap();
+    assert_eq!(via_points.cohesion().as_slice(), via_dense.as_slice());
+}
+
+/// The dense incremental engine is untouched by the new machinery:
+/// validation-first batch insert + graph accessors stay `None`.
+#[test]
+fn dense_engine_reports_no_truncation() {
+    let d = distmat::random_tie_free(12, 7);
+    let eng: IncrementalPald = Pald::builder()
+        .threads(Threads::Fixed(1))
+        .validation(Validation::Strict)
+        .build()
+        .unwrap()
+        .into_incremental(&d)
+        .unwrap();
+    assert_eq!(eng.neighborhood(), None);
+    assert!(eng.neighbor_graph().is_none());
+    assert_eq!(eng.reanchor_policy(), ReanchorPolicy::Never);
+}
