@@ -1,8 +1,10 @@
-//! Bench target for the sparse PKNN engine (DESIGN.md §5, §9): an
+//! Bench target for the sparse PKNN engine (DESIGN.md §5, §9–§10): an
 //! n-vs-k sweep of the truncated kernels against the dense optimized
-//! pairwise baseline, with the exactness anchor (k = n-1 bit-identical
-//! to dense naive pairwise) asserted before anything is timed.  Emits
-//! `BENCH_knn.json` next to `BENCH_stream.json`.
+//! pairwise baseline, plus a thread sweep of the `knn-par-*` kernels,
+//! with the exactness anchors (k = n-1 bit-identical to dense naive
+//! pairwise; knn-par bit-identical to the sequential sparse run at
+//! every thread count) asserted before anything is reported.  Emits
+//! `BENCH_knn.json` (both tables) next to `BENCH_stream.json`.
 //! Run: cargo bench --bench knn_scaling   (PALDX_FULL=1 for larger sizes)
 
 use paldx::bench::{bench, fmt_secs, fmt_speedup, write_json_report, BenchOpts, Table};
@@ -10,7 +12,11 @@ use paldx::data::distmat;
 use paldx::pald::{Algorithm, Neighborhood, Pald, Threads};
 
 fn pald(alg: Algorithm, k: usize) -> Pald {
-    let mut b = Pald::builder().algorithm(alg).threads(Threads::Fixed(1));
+    pald_threaded(alg, k, 1)
+}
+
+fn pald_threaded(alg: Algorithm, k: usize, threads: usize) -> Pald {
+    let mut b = Pald::builder().algorithm(alg).threads(Threads::Fixed(threads));
     if k > 0 {
         b = b.neighborhood(Neighborhood::Knn(k));
     }
@@ -28,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         let n = 96;
         let d = distmat::random_tie_free(n, 2027);
         let want = paldx::pald::naive::pairwise(&d, paldx::pald::TieMode::Strict);
-        for alg in [Algorithm::KnnPairwise, Algorithm::KnnOptTriplet] {
+        for alg in [Algorithm::KnnPairwise, Algorithm::KnnOptTriplet, Algorithm::KnnParPairwise] {
             let got = pald(alg, n - 1).compute(&d)?;
             anyhow::ensure!(
                 got.cohesion().as_slice() == want.as_slice(),
@@ -75,7 +81,48 @@ fn main() -> anyhow::Result<()> {
         }
     }
     table.print();
-    match write_json_report(std::path::Path::new("."), "knn", &[&table]) {
+
+    // Thread sweep (ISSUE 5): the knn-par kernels across thread counts,
+    // exactness-anchored against the sequential sparse run at every
+    // (n, k, p) — published as a second table of BENCH_knn.json.
+    let mut sweep = Table::new(
+        "knn — thread sweep of the parallel sparse kernels",
+        &["n", "k", "threads", "time", "seq time", "speedup"],
+    );
+    for &n in ns {
+        let k = 16.min(n - 1);
+        let d = distmat::random_tie_free(n, n as u64 + 31);
+        let mut seq = pald(Algorithm::KnnOptPairwise, k);
+        let mut want = None;
+        let seq_stats = bench(&opts, || {
+            want = Some(seq.compute(&d).expect("sequential sparse").into_matrix());
+        });
+        sweep.stat(format!("knn-seq/n={n}/k={k}"), seq_stats);
+        let want = want.expect("bench ran at least once");
+        for threads in [1usize, 2, 4, 8] {
+            let mut par = pald_threaded(Algorithm::KnnParPairwise, k, threads);
+            let mut got = None;
+            let stats = bench(&opts, || {
+                got = Some(par.compute(&d).expect("parallel sparse").into_matrix());
+            });
+            anyhow::ensure!(
+                got.expect("bench ran at least once").as_slice() == want.as_slice(),
+                "n={n} k={k} p={threads}: knn-par diverged from the sequential sparse run"
+            );
+            sweep.stat(format!("knn-par/n={n}/k={k}/p={threads}"), stats);
+            sweep.row(vec![
+                n.to_string(),
+                k.to_string(),
+                threads.to_string(),
+                fmt_secs(stats.mean),
+                fmt_secs(seq_stats.mean),
+                fmt_speedup(seq_stats.mean / stats.mean.max(1e-12)),
+            ]);
+        }
+    }
+    sweep.print();
+
+    match write_json_report(std::path::Path::new("."), "knn", &[&table, &sweep]) {
         Ok(Some(path)) => println!("wrote {}", path.display()),
         Ok(None) => {}
         Err(e) => eprintln!("could not write BENCH_knn.json: {e}"),

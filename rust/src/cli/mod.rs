@@ -49,9 +49,11 @@ COMMANDS:
   plan       --n <int> [--threads P] [--tie strict|split] [--k K] [--calibrate]
              print the plan `--alg auto` would execute for this shape
   knn        --n <int> | --input <path.{bin,csv,vec}>   PKNN truncation tooling
-             --k K [--mode build|inspect|compare] [--alg ...] [--tie ...]
-             [--threads P] [--metric ...] (compare: sparse-vs-dense max diff,
-             mass bound, timings; DESIGN.md §9)
+             --k K [--mode build|inspect|compare|threads] [--alg ...] [--tie ...]
+             [--threads P] [--metric ...] [--bench-dir DIR] (compare:
+             sparse-vs-dense max diff, mass bound, timings; threads: sweep
+             1..P over the knn-par kernels, bit-identity asserted against
+             the sequential sparse run; DESIGN.md §9-§10)
   analyze    --input <cohesion.{bin,csv}> [--top K]  strong ties & communities
   convert    --input <path.{bin,csv,vec}> --output <path>  re-encode distances
              (condensed binary by default — half the bytes; --dense for dense)
@@ -69,8 +71,10 @@ Inputs: .csv dense matrix | paldx .bin (dense PALDMAT1 or condensed PALDCND1,
 Algorithms: auto + naive-pairwise naive-triplet blocked-pairwise blocked-triplet
             branchfree-pairwise branchfree-triplet opt-pairwise opt-triplet
             par-pairwise par-triplet hybrid par-hybrid
-            knn-pairwise knn-triplet knn-opt-pairwise knn-opt-triplet (sparse,
-            O(n*k^2); with --k and --alg auto the planner picks dense vs sparse)
+            knn-pairwise knn-triplet knn-opt-pairwise knn-opt-triplet
+            knn-par-pairwise knn-par-triplet (sparse, O(n*k^2), the par pair
+            O(n*k^2/p); a truncating --k with --alg auto always resolves to a
+            sparse kernel — the par pair competes when --threads > 1)
 Env: PALDX_FULL=1 (paper-scale sizes), PALDX_TRIALS, PALDX_BUDGET_S,
      PALDX_CALIBRATE=1 (calibrate the scaling model against this machine)";
 
@@ -483,11 +487,16 @@ fn cmd_knn(args: &Args) -> anyhow::Result<()> {
                 config.backend == Backend::Native,
                 "knn compare is served by the native engine (--backend native)"
             );
-            // Truncated run: pinned sparse kernel unless --alg given.
+            // Truncated run: pinned sparse kernel unless --alg given
+            // (the threaded rung when a thread budget is set).
             let mut sparse_cfg = config.clone();
             sparse_cfg.k = graph.k();
             if args.get("alg").is_none() {
-                sparse_cfg.algorithm = Algorithm::KnnOptPairwise;
+                sparse_cfg.algorithm = if sparse_cfg.threads > 1 {
+                    Algorithm::KnnParPairwise
+                } else {
+                    Algorithm::KnnOptPairwise
+                };
             }
             let mut sparse = PaldBuilder::from_config(&sparse_cfg).build()?;
             let t0 = Instant::now();
@@ -525,7 +534,84 @@ fn cmd_knn(args: &Args) -> anyhow::Result<()> {
                 );
             }
         }
-        other => anyhow::bail!("unknown knn mode '{other}' (build|inspect|compare)"),
+        "threads" => {
+            // Thread sweep over the parallel sparse kernels: powers of
+            // two up to --threads plus the requested budget itself (so
+            // a non-power-of-two budget is still measured),
+            // exactness-anchored against the sequential sparse run,
+            // published as BENCH_knn_threads.json next to the bench
+            // artifacts when --bench-dir is given.
+            let config = config_from(args)?;
+            anyhow::ensure!(
+                config.backend == Backend::Native,
+                "knn threads is served by the native engine (--backend native)"
+            );
+            let max_p = config.threads.max(1);
+            let opts = BenchOpts::from_env();
+            let mut seq_cfg = config.clone();
+            seq_cfg.k = graph.k();
+            seq_cfg.threads = 1;
+            if args.get("alg").is_none() {
+                seq_cfg.algorithm = Algorithm::KnnOptPairwise;
+            }
+            let mut seq = PaldBuilder::from_config(&seq_cfg).build()?;
+            let want = seq.compute(input.as_ref())?.into_matrix();
+            let mut table = crate::bench::Table::new(
+                &format!("knn — thread sweep (n={n}, k={})", graph.k()),
+                &["threads", "algorithm", "time", "speedup", "bit-identical"],
+            );
+            let mut budgets = Vec::new();
+            let mut next = 1usize;
+            while next < max_p {
+                budgets.push(next);
+                next *= 2;
+            }
+            budgets.push(max_p);
+            let mut t1 = 0.0f64;
+            for p in budgets {
+                let mut cfg = config.clone();
+                cfg.k = graph.k();
+                cfg.threads = p;
+                if args.get("alg").is_none() {
+                    cfg.algorithm = if p > 1 {
+                        Algorithm::KnnParPairwise
+                    } else {
+                        Algorithm::KnnOptPairwise
+                    };
+                }
+                let mut pald = PaldBuilder::from_config(&cfg).build()?;
+                let mut last: Option<crate::core::Mat> = None;
+                let stats = crate::bench::bench(&opts, || {
+                    last = Some(pald.compute(input.as_ref()).expect("sweep compute").into_matrix());
+                });
+                let c = last.expect("bench ran at least once");
+                let identical = c.as_slice() == want.as_slice();
+                anyhow::ensure!(
+                    identical,
+                    "p={p}: parallel sparse result diverged from the sequential run"
+                );
+                if p == 1 {
+                    t1 = stats.mean;
+                }
+                table.stat(format!("knn-threads/n={n}/k={}/p={p}", graph.k()), stats);
+                table.row(vec![
+                    p.to_string(),
+                    cfg.algorithm.name().to_string(),
+                    crate::bench::fmt_secs(stats.mean),
+                    crate::bench::fmt_speedup(t1 / stats.mean.max(1e-12)),
+                    "yes".into(),
+                ]);
+            }
+            table.print();
+            if let Some(dir) = args.get("bench-dir") {
+                match crate::bench::write_json_report(Path::new(dir), "knn_threads", &[&table]) {
+                    Ok(Some(path)) => println!("wrote {}", path.display()),
+                    Ok(None) => {}
+                    Err(e) => eprintln!("could not write BENCH_knn_threads.json: {e}"),
+                }
+            }
+        }
+        other => anyhow::bail!("unknown knn mode '{other}' (build|inspect|compare|threads)"),
     }
     Ok(())
 }
@@ -723,6 +809,37 @@ mod tests {
         .unwrap();
         assert!(run(argv(&["knn", "--n", "16", "--k", "0"])).is_err(), "k=0 is invalid");
         assert!(run(argv(&["knn", "--n", "16", "--k", "3", "--mode", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn knn_threads_mode_sweeps_and_writes_report() {
+        let dir = tmp_dir();
+        run(argv(&[
+            "knn",
+            "--n",
+            "40",
+            "--k",
+            "5",
+            "--mode",
+            "threads",
+            "--threads",
+            "4",
+            "--bench-dir",
+            dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let report = dir.join("BENCH_knn_threads.json");
+        assert!(report.exists(), "thread sweep must publish {}", report.display());
+        let body = std::fs::read_to_string(&report).unwrap();
+        assert!(body.contains("knn-threads/n=40/k=5/p=1"), "{body}");
+        assert!(body.contains("knn-threads/n=40/k=5/p=4"), "{body}");
+        // A pinned algorithm sweeps too (parallel sparse at every p),
+        // and a non-power-of-two budget is still measured: 1, 2, 3.
+        run(argv(&[
+            "knn", "--n", "32", "--k", "4", "--mode", "threads", "--threads", "3", "--alg",
+            "knn-par-triplet",
+        ]))
+        .unwrap();
     }
 
     #[test]

@@ -29,10 +29,13 @@
 //!   policies for long streams (DESIGN.md §8), see [`pald::incremental`]
 //!   and `paldx stream`;
 //! * a **sparse PKNN engine** truncating the conflict pairs to an exact
-//!   symmetrized k-nearest-neighbor graph at O(n·k²) — four `knn-*`
-//!   kernels in the same registry, planner-costed against the dense
-//!   ladder, bit-identical to dense at `k = n-1` (DESIGN.md §9), see
-//!   [`pald::knn`] and `paldx knn`;
+//!   symmetrized k-nearest-neighbor graph at O(n·k²) — six `knn-*`
+//!   kernels in the same registry (reference, optimized, and
+//!   shared-memory parallel rungs; the `knn-par-*` pair partitions the
+//!   CSR edge range across threads at O(n·k²/p) while staying
+//!   bit-identical to the sequential sparse kernels at every thread
+//!   count), bit-identical to dense at `k = n-1` (DESIGN.md §9–§10),
+//!   see [`pald::knn`] and `paldx knn`;
 //! * simulators used for the paper's analyses: an LRU cache simulator and
 //!   block-traffic counters validating the communication bounds of
 //!   Theorems 4.1/4.2, and a calibrated multicore machine model used to

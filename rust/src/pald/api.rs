@@ -56,6 +56,13 @@ pub enum Algorithm {
     KnnOptPairwise,
     /// Truncated PKNN triplet ordering, blocked + branch-free rung.
     KnnOptTriplet,
+    /// Truncated PKNN pairwise, shared-memory parallel rung: edge-range
+    /// partitioned counts + column-ownership awards, bit-identical to
+    /// the sequential sparse kernels at every thread count
+    /// (DESIGN.md §10).
+    KnnParPairwise,
+    /// Truncated PKNN triplet ordering, shared-memory parallel rung.
+    KnnParTriplet,
     /// Planner-selected kernel + block sizes from the machine profile.
     Auto,
 }
@@ -63,7 +70,7 @@ pub enum Algorithm {
 impl Algorithm {
     /// The concrete kernels, in ladder order (excludes [`Algorithm::Auto`],
     /// which is a planner directive, not a kernel).
-    pub const ALL: [Algorithm; 16] = [
+    pub const ALL: [Algorithm; 18] = [
         Algorithm::NaivePairwise,
         Algorithm::NaiveTriplet,
         Algorithm::BlockedPairwise,
@@ -80,6 +87,8 @@ impl Algorithm {
         Algorithm::KnnTriplet,
         Algorithm::KnnOptPairwise,
         Algorithm::KnnOptTriplet,
+        Algorithm::KnnParPairwise,
+        Algorithm::KnnParTriplet,
     ];
 
     /// Registry/CLI name of the variant.
@@ -101,6 +110,8 @@ impl Algorithm {
             Algorithm::KnnTriplet => "knn-triplet",
             Algorithm::KnnOptPairwise => "knn-opt-pairwise",
             Algorithm::KnnOptTriplet => "knn-opt-triplet",
+            Algorithm::KnnParPairwise => "knn-par-pairwise",
+            Algorithm::KnnParTriplet => "knn-par-triplet",
             Algorithm::Auto => "auto",
         }
     }
@@ -125,27 +136,28 @@ impl Algorithm {
 
     /// The sparse PKNN counterpart that honors a truncated-neighborhood
     /// request (`PaldConfig::k > 0`) for a pinned dense kernel: the
-    /// naive rung keeps the branchy reference semantics, every higher
-    /// rung maps to the optimized sparse rung, and the ordering is
+    /// naive rung keeps the branchy reference semantics, the sequential
+    /// rungs above it map to the optimized sparse rung, the parallel
+    /// rungs map to the parallel sparse rung, and the ordering is
     /// preserved (pairwise → pairwise; triplet and hybrid → the
     /// two-pass triplet ordering).  Sparse kernels and [`Algorithm::Auto`]
     /// map to themselves.  This is how `k > 0` in a resolved [`Plan`]
     /// always means "this run truncates" — a dense pin never silently
-    /// drops the neighborhood request.
+    /// drops the neighborhood request (and a parallel pin never
+    /// silently serializes it).
     pub fn truncated(&self) -> Algorithm {
         match self {
             Algorithm::NaivePairwise => Algorithm::KnnPairwise,
             Algorithm::NaiveTriplet => Algorithm::KnnTriplet,
             Algorithm::BlockedPairwise
             | Algorithm::BranchFreePairwise
-            | Algorithm::OptimizedPairwise
-            | Algorithm::ParallelPairwise => Algorithm::KnnOptPairwise,
+            | Algorithm::OptimizedPairwise => Algorithm::KnnOptPairwise,
             Algorithm::BlockedTriplet
             | Algorithm::BranchFreeTriplet
             | Algorithm::OptimizedTriplet
-            | Algorithm::ParallelTriplet
-            | Algorithm::Hybrid
-            | Algorithm::ParallelHybrid => Algorithm::KnnOptTriplet,
+            | Algorithm::Hybrid => Algorithm::KnnOptTriplet,
+            Algorithm::ParallelPairwise => Algorithm::KnnParPairwise,
+            Algorithm::ParallelTriplet | Algorithm::ParallelHybrid => Algorithm::KnnParTriplet,
             other => *other,
         }
     }
@@ -478,7 +490,9 @@ mod tests {
         assert_eq!(Algorithm::NaivePairwise.truncated(), Algorithm::KnnPairwise);
         assert_eq!(Algorithm::NaiveTriplet.truncated(), Algorithm::KnnTriplet);
         assert_eq!(Algorithm::OptimizedPairwise.truncated(), Algorithm::KnnOptPairwise);
-        assert_eq!(Algorithm::ParallelHybrid.truncated(), Algorithm::KnnOptTriplet);
+        assert_eq!(Algorithm::ParallelPairwise.truncated(), Algorithm::KnnParPairwise);
+        assert_eq!(Algorithm::ParallelTriplet.truncated(), Algorithm::KnnParTriplet);
+        assert_eq!(Algorithm::ParallelHybrid.truncated(), Algorithm::KnnParTriplet);
         assert_eq!(Algorithm::Auto.truncated(), Algorithm::Auto);
         for alg in Algorithm::ALL {
             let t = alg.truncated();

@@ -51,14 +51,17 @@ pub enum Neighborhood {
     Full,
     /// Evaluate only pairs inside the symmetrized k-nearest-neighbor
     /// graph (`k >= 1`; clamped to `n - 1` per problem, where the
-    /// computation is bit-identical to dense).  With `Algorithm::Auto`
-    /// the planner costs truncation against the dense kernels and picks
-    /// whichever is predicted faster (declining it when `k` is too
-    /// close to `n` to win — observable as
+    /// computation is bit-identical to dense).  A truncating request is
+    /// never resolved to a dense kernel: with `Algorithm::Auto` the
+    /// planner picks the cheapest *sparse* kernel — a thread budget
+    /// adds the threaded `knn-par-*` rung to the candidates, chosen
+    /// when the work term is predicted to beat the spawn charge
+    /// (DESIGN.md §10) — and a pinned dense algorithm maps to its
+    /// sparse counterpart ([`Algorithm::truncated`]).  Only `k >= n - 1`
+    /// (the complete graph, bit-identical to dense) runs on the dense
+    /// kernels, observable as
     /// [`CohesionResult::effective_k`](crate::pald::CohesionResult::effective_k)
-    /// `== None`); a pinned dense algorithm maps to its sparse
-    /// counterpart ([`Algorithm::truncated`]) so the request is never
-    /// silently dropped.
+    /// `== None`.
     Knn(usize),
 }
 
@@ -485,6 +488,51 @@ mod tests {
         let rd = dense.compute(&d).unwrap();
         assert_eq!(rd.effective_k(), None);
         assert_eq!(rd.truncation_error_bound(), None);
+    }
+
+    #[test]
+    fn threads_and_neighborhood_compose_instead_of_serializing() {
+        // A thread budget combined with a truncated neighborhood must
+        // reach a sparse kernel (never silently plan dense), and the
+        // threaded facade result is bit-identical to the sequential
+        // sparse one — the parallel-rung exactness contract.
+        let d = distmat::random_tie_free(48, 19);
+        let mut seq = Pald::builder()
+            .algorithm(Algorithm::KnnOptPairwise)
+            .neighborhood(Neighborhood::Knn(7))
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        let want = seq.compute(&d).unwrap().into_matrix();
+        for threads in [2usize, 4] {
+            let mut par = Pald::builder()
+                .algorithm(Algorithm::KnnParPairwise)
+                .neighborhood(Neighborhood::Knn(7))
+                .threads(Threads::Fixed(threads))
+                .build()
+                .unwrap();
+            let r = par.compute(&d).unwrap();
+            assert_eq!(r.plan().params.threads, threads);
+            assert_eq!(r.effective_k(), Some(7));
+            assert_eq!(
+                r.cohesion().as_slice(),
+                want.as_slice(),
+                "threads={threads}: parallel sparse must be bit-identical to sequential"
+            );
+        }
+        // Auto + Knn + threads resolves to a sparse plan too.
+        let mut auto = Pald::builder()
+            .neighborhood(Neighborhood::Knn(7))
+            .threads(Threads::Fixed(4))
+            .build()
+            .unwrap();
+        let r = auto.compute(&d).unwrap();
+        assert!(
+            r.plan().algorithm.kernel().unwrap().meta().sparse,
+            "auto with k=7, threads=4 planned {}",
+            r.plan().algorithm.name()
+        );
+        assert_eq!(r.cohesion().as_slice(), want.as_slice());
     }
 
     #[test]

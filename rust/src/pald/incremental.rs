@@ -41,9 +41,11 @@
 //! * **Graph-capped updates.**  When a truncated neighborhood is
 //!   requested (`PaldConfig::k > 0` /
 //!   [`PaldBuilder::neighborhood`](crate::pald::PaldBuilder::neighborhood))
-//!   *and* the resolved plan is a sparse kernel (always, for pinned
-//!   algorithms — dense pins map to their sparse counterpart; the
-//!   planner's verdict under `Auto`), the engine maintains the PKNN
+//!   *and* the resolved plan is a sparse kernel (always, when `k`
+//!   actually truncates: dense pins map to their sparse counterpart and
+//!   the planner resolves `Auto` among the sparse kernels only; a
+//!   complete-graph request `k >= n - 1` yields an exact dense
+//!   engine), the engine maintains the PKNN
 //!   semantics over an online symmetrized kNN graph: only graph edges
 //!   exist as conflict pairs, candidate sweeps span O(k) merged
 //!   neighbor sets, and an insert touches O(k·degree) pairs instead of
@@ -505,9 +507,10 @@ impl IncrementalPald {
         // sparse kernel, so `batch_recompute` (which dispatches that
         // plan) always agrees in kind with the maintained state: pinned
         // algorithms with `k > 0` resolve to a sparse kernel via
-        // `Algorithm::truncated`, and under `Algorithm::Auto` the
-        // planner's verdict decides — a declined truncation (k too
-        // close to n to win) yields an exact dense engine.
+        // `Algorithm::truncated`, and `Algorithm::Auto` with a
+        // truncating `k` resolves among the sparse kernels only — only
+        // a complete-graph request (`k >= n - 1`, bit-identical to
+        // dense) yields an exact dense engine.
         let k_cfg = session.config().k;
         let knn = if kernel.meta().sparse && k_cfg > 0 {
             Some(KnnState::new(k_cfg))

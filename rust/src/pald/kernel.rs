@@ -1,6 +1,7 @@
 //! Kernel registry: every PaLD variant behind one trait (DESIGN.md §6).
 //!
-//! Each of the 12 variants of the paper's optimization ladder implements
+//! Each of the 18 variants — the paper's 12-rung dense optimization
+//! ladder plus the 6 sparse PKNN rungs (DESIGN.md §9–§10) — implements
 //! [`CohesionKernel`]: identity ([`Algorithm`]), capability metadata
 //! ([`KernelMeta`]), a machine-model cost estimate the [planner] uses to
 //! auto-select a variant, tuned default block sizes (Theorems 4.1/4.2),
@@ -554,11 +555,85 @@ impl CohesionKernel for KnnOptTripletK {
     }
 }
 
+/// Predicted runtime of a *threaded* truncated kernel: the sequential
+/// sparse work term split across `p` threads, plus the parts that do
+/// not scale — the sequential O(n²) graph build, a per-thread spawn
+/// charge for the scoped fork-joins (three parallel regions of
+/// `std::thread::scope` per run), and the award pass's full-edge scan
+/// floor (every thread walks all ~n·k edges and pays the
+/// column-restriction binary searches regardless of how little of each
+/// edge's candidate set it owns — so predicted speedup saturates once
+/// k/p is small).
+fn knn_par_cost(n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+    let ke = knn::effective_k(p.k, n.max(2)) as f64;
+    let nn = n as f64;
+    let ratio = (4.0 * ke * ke / (nn * nn)).min(1.0);
+    let build_s = nn * nn / mp.rate_pw_focus;
+    let threads = p.threads.max(1) as f64;
+    let work_s = seq_pairwise_cost(n, p.block, mp) * ratio;
+    let scan_s = if threads > 1.0 {
+        // ~4 binary searches of log2(k) steps plus the unpack per edge.
+        nn * ke * (4.0 * ke.log2().max(0.0) + 4.0) / mp.rate_pw_cohesion
+    } else {
+        0.0
+    };
+    const SPAWN_S: f64 = 1.0e-6;
+    work_s / threads + scan_s + build_s + SPAWN_S * threads
+}
+
+/// Truncated pairwise, shared-memory parallel rung (DESIGN.md §10):
+/// edge-range-partitioned integer counts fused with the reciprocal,
+/// column-ownership awards — bit-identical to the sequential sparse
+/// kernels at every thread count.
+pub struct KnnParPairwiseK;
+impl CohesionKernel for KnnParPairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::KnnParPairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, Parallel, par = true, b2 = false, sparse = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        knn_par_cost(n, p, mp)
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        pairwise_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        let Workspace { knn: scratch, phases, .. } = ws;
+        knn::sparse_support_parallel_into(scratch, d, p.tie, p.k, false, p.threads, out, phases);
+    }
+}
+
+/// Truncated triplet ordering, shared-memory parallel rung: a separate
+/// edge-indexed integer focus pass and reciprocal sweep, then the
+/// column-ownership cohesion pass.
+pub struct KnnParTripletK;
+impl CohesionKernel for KnnParTripletK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::KnnParTriplet
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Triplet, Parallel, par = true, b2 = false, sparse = true)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        knn_par_cost(n, p, mp)
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        pairwise_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        let Workspace { knn: scratch, phases, .. } = ws;
+        knn::sparse_support_parallel_into(scratch, d, p.tie, p.k, true, p.threads, out, phases);
+    }
+}
+
 // ---- registry -----------------------------------------------------------
 
 /// All kernels, in optimization-ladder order (matches [`Algorithm::ALL`]):
-/// the 12 dense variants followed by the 4 truncated PKNN variants.
-pub static REGISTRY: [&dyn CohesionKernel; 16] = [
+/// the 12 dense variants followed by the 6 truncated PKNN variants
+/// (reference, optimized, and parallel rungs, each in both orderings).
+pub static REGISTRY: [&dyn CohesionKernel; 18] = [
     &NaivePairwiseK,
     &NaiveTripletK,
     &BlockedPairwiseK,
@@ -575,6 +650,8 @@ pub static REGISTRY: [&dyn CohesionKernel; 16] = [
     &KnnTripletK,
     &KnnOptPairwiseK,
     &KnnOptTripletK,
+    &KnnParPairwiseK,
+    &KnnParTripletK,
 ];
 
 /// Kernel registered for a concrete algorithm (`None` for
@@ -648,6 +725,16 @@ mod tests {
         let pfull = ExecParams { k: 4095, ..p };
         let knn_full = kernel_for(Algorithm::KnnOptPairwise).unwrap().cost(4096, &pfull, &mp);
         assert!(knn_full > dense_c, "full-graph knn must not undercut dense");
+        // The threaded sparse rung must predict a win over the
+        // sequential sparse rung once the work term dominates the spawn
+        // charge (large n, k << n, a real thread budget) ...
+        let pk16 = ExecParams { k: 16, threads: 16, ..p };
+        let par_knn = kernel_for(Algorithm::KnnParPairwise).unwrap().cost(8192, &pk16, &mp);
+        let seq_knn = kernel_for(Algorithm::KnnOptPairwise).unwrap().cost(8192, &pk16, &mp);
+        assert!(par_knn < seq_knn, "par_knn={par_knn} seq_knn={seq_knn}");
+        // ... and both orderings share the cost model.
+        let par_knn_t = kernel_for(Algorithm::KnnParTriplet).unwrap().cost(8192, &pk16, &mp);
+        assert_eq!(par_knn, par_knn_t);
     }
 
     #[test]
@@ -657,7 +744,12 @@ mod tests {
             let is_knn = k.name().starts_with("knn-");
             assert_eq!(m.sparse, is_knn, "{}", k.name());
             if m.sparse {
-                assert!(!m.parallel, "{}: sparse kernels are sequential", k.name());
+                assert_eq!(
+                    m.parallel,
+                    k.name().starts_with("knn-par-"),
+                    "{}: only the knn-par rung consumes threads",
+                    k.name()
+                );
                 assert!(m.exact_ties, "{}", k.name());
             }
         }
@@ -671,19 +763,23 @@ mod tests {
         let n = 24;
         let d = distmat::random_tie_free(n, 31);
         let want = naive::pairwise(&d, TieMode::Strict);
-        let p = ExecParams { tie: TieMode::Strict, block: 8, block2: 0, threads: 1, k: n - 1 };
         let mut ws = Workspace::new();
-        for alg in [
-            Algorithm::KnnPairwise,
-            Algorithm::KnnTriplet,
-            Algorithm::KnnOptPairwise,
-            Algorithm::KnnOptTriplet,
-        ] {
-            let kern = kernel_for(alg).unwrap();
-            let mut c = Mat::zeros(n, n);
-            kern.compute_into(&d, &p, &mut ws, &mut c);
-            crate::pald::normalize(&mut c);
-            assert_eq!(c.as_slice(), want.as_slice(), "{}", kern.name());
+        for threads in [1usize, 4] {
+            let p = ExecParams { tie: TieMode::Strict, block: 8, block2: 0, threads, k: n - 1 };
+            for alg in [
+                Algorithm::KnnPairwise,
+                Algorithm::KnnTriplet,
+                Algorithm::KnnOptPairwise,
+                Algorithm::KnnOptTriplet,
+                Algorithm::KnnParPairwise,
+                Algorithm::KnnParTriplet,
+            ] {
+                let kern = kernel_for(alg).unwrap();
+                let mut c = Mat::zeros(n, n);
+                kern.compute_into(&d, &p, &mut ws, &mut c);
+                crate::pald::normalize(&mut c);
+                assert_eq!(c.as_slice(), want.as_slice(), "{} p={threads}", kern.name());
+            }
         }
     }
 

@@ -45,6 +45,21 @@ impl GraphScratch {
             + self.edges.capacity() * std::mem::size_of::<u64>()
             + self.cursors.capacity() * std::mem::size_of::<usize>()
     }
+
+    /// The packed undirected edge list `(lo << 32) | hi` of the most
+    /// recent [`NeighborGraph::rebuild`], sorted ascending — exactly the
+    /// canonical `(x, y)`-with-`y > x` order the sequential sparse
+    /// kernels iterate, which is what lets the parallel sparse kernels
+    /// partition the edge range across threads by index.
+    pub(crate) fn edge_list(&self) -> &[u64] {
+        &self.edges
+    }
+}
+
+/// Unpack one packed edge into `(lo, hi)` point indices.
+#[inline(always)]
+pub(crate) fn unpack_edge(e: u64) -> (usize, usize) {
+    ((e >> 32) as usize, (e & 0xffff_ffff) as usize)
 }
 
 /// Symmetrized exact k-nearest-neighbor graph in CSR form.
@@ -381,6 +396,28 @@ mod tests {
         ));
         let rect = Mat::zeros(3, 4);
         assert!(matches!(NeighborGraph::build(&rect, 2), Err(PaldError::NonSquare { .. })));
+    }
+
+    #[test]
+    fn scratch_edge_list_is_canonical_pair_order() {
+        let d = distmat::random_tie_free(12, 7);
+        let mut g = NeighborGraph::empty();
+        let mut s = GraphScratch::default();
+        g.rebuild(&d, 3, &mut s);
+        // The packed list enumerates exactly the graph's upper-triangle
+        // edges in the kernels' canonical (x asc, then y asc) order.
+        let mut want = Vec::new();
+        for x in 0..12 {
+            for &yu in g.neighbors(x) {
+                let y = yu as usize;
+                if y > x {
+                    want.push(((x as u64) << 32) | y as u64);
+                }
+            }
+        }
+        assert_eq!(s.edge_list(), &want[..]);
+        let (a, b) = unpack_edge(s.edge_list()[0]);
+        assert!(a < b);
     }
 
     #[test]

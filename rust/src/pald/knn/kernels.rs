@@ -13,24 +13,30 @@
 //!   [`naive::pairwise`](crate::pald::naive::pairwise);
 //! * **opt** — masked {0, ½, 1} arithmetic with the candidate sweep
 //!   tiled in `block`-sized chunks, the sparse twin of the
-//!   blocked/branch-free rung.
+//!   blocked/branch-free rung;
+//! * **par** — shared-memory parallel on top of the opt rung
+//!   ([`sparse_support_parallel_into`], DESIGN.md §10): the CSR edge
+//!   range partitioned across threads for the integer count pass,
+//!   conflict-free column ownership for the award pass.
 //!
 //! The *pairwise* ordering fuses count + award per pair; the *triplet*
 //! ordering runs a full focus pass (all edge weights first) then a
 //! cohesion pass, attributing [`PhaseTimes`] like the dense two-pass
-//! kernels.  All four variants award in the identical pair-and-candidate
-//! order, so they are **bit-identical to each other**, and with
-//! `k = n - 1` (candidate set = everything, edge set = every pair) they
-//! are bit-identical to the dense pairwise reference in support units —
-//! the exactness anchor `rust/tests/knn.rs` enforces.
+//! kernels.  All six variants award in the identical pair-and-candidate
+//! order per cell of C, so they are **bit-identical to each other** (the
+//! parallel pair at every thread count), and with `k = n - 1` (candidate
+//! set = everything, edge set = every pair) they are bit-identical to
+//! the dense pairwise reference in support units — the exactness anchor
+//! `rust/tests/knn.rs` and the conformance harness enforce.
 
 use std::time::Instant;
 
 use crate::core::Mat;
 use crate::pald::blocked::resolve_block;
-use crate::pald::knn::graph::{merge_sorted, GraphScratch, NeighborGraph};
+use crate::pald::knn::graph::{merge_sorted, unpack_edge, GraphScratch, NeighborGraph};
 use crate::pald::workspace::PhaseTimes;
 use crate::pald::{in_focus, normalize, TieMode};
+use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
 
 /// What one truncated computation actually did: the clamped `k`, the
 /// conflict pairs retained, and the dense pair total — the raw numbers
@@ -77,6 +83,13 @@ pub(crate) struct KnnScratch {
     gscratch: GraphScratch,
     cand: Vec<u32>,
     w_edges: Vec<f32>,
+    /// Edge-indexed integer focus counts (the parallel triplet
+    /// ordering's focus pass; disjoint per-edge writes, so exact).
+    u_edges: Vec<u32>,
+    /// Per-thread candidate-merge lanes for the parallel sparse kernels
+    /// — grown once per thread budget and retained, so repeated
+    /// same-shape threaded runs allocate nothing.
+    lanes: Vec<Vec<u32>>,
     /// Report of the most recent sparse run (`None` after dense runs).
     pub(crate) report: Option<KnnReport>,
 }
@@ -88,6 +101,8 @@ impl KnnScratch {
             gscratch: GraphScratch::default(),
             cand: Vec::new(),
             w_edges: Vec::new(),
+            u_edges: Vec::new(),
+            lanes: Vec::new(),
             report: None,
         }
     }
@@ -98,6 +113,12 @@ impl KnnScratch {
             + self.gscratch.allocated_bytes()
             + self.cand.capacity() * std::mem::size_of::<u32>()
             + self.w_edges.capacity() * std::mem::size_of::<f32>()
+            + self.u_edges.capacity() * std::mem::size_of::<u32>()
+            + self
+                .lanes
+                .iter()
+                .map(|l| l.capacity() * std::mem::size_of::<u32>())
+                .sum::<usize>()
     }
 }
 
@@ -356,6 +377,176 @@ pub(crate) fn sparse_support_into(
     scratch.report = Some(KnnReport { effective_k: ke, edges, total_pairs: n * (n - 1) / 2 });
 }
 
+/// Shared-memory parallel truncated support accumulation into `out`
+/// (zeroed here) — the engine of the `knn-par-pairwise` /
+/// `knn-par-triplet` kernels (DESIGN.md §10), **bit-identical to the
+/// sequential sparse kernels at every thread count**:
+///
+/// * **count pass** — the CSR edge range is partitioned across threads
+///   ([`parallel_for_ranges`], static schedule); each edge's focus size
+///   is an integer computed wholly by one thread over the full merged
+///   candidate set and written to its own edge-indexed slot, so the
+///   counts (and the reciprocal weights derived from them) cannot
+///   depend on the partition;
+/// * **award pass** — conflict-free *column ownership* (the sparse
+///   carry-over of the dense Figure 6 column partition): every thread
+///   sweeps the full edge list in the canonical sequential order but
+///   awards only candidates inside its own column range, so each cell
+///   of C receives exactly the sequential contributions in exactly the
+///   sequential order.  A per-thread sum-reduction merge would *not*
+///   give this (f32 partial sums round differently than one running
+///   sum — see DESIGN.md §10), which is why the per-thread state here
+///   is candidate lanes, not support buffers.
+///
+/// `two_pass = false` is the pairwise ordering (count fused with the
+/// reciprocal), `two_pass = true` the triplet ordering (integer focus
+/// pass into `u_edges`, then a separate reciprocal sweep), matching the
+/// phase attribution of their sequential namesakes.  With `threads <=
+/// 1` this degenerates to [`sparse_support_into`] on the optimized
+/// rung, exactly like the dense parallel kernels at p = 1.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sparse_support_parallel_into(
+    scratch: &mut KnnScratch,
+    d: &Mat,
+    tie: TieMode,
+    k: usize,
+    two_pass: bool,
+    threads: usize,
+    out: &mut Mat,
+    phases: &mut PhaseTimes,
+) {
+    let threads = threads.max(1);
+    if threads == 1 {
+        // Every sparse rung is bit-identical, so the sequential
+        // fallback changes nothing but the schedule.
+        sparse_support_into(scratch, d, tie, k, true, two_pass, 0, out, phases);
+        return;
+    }
+    let n = d.rows();
+    assert_eq!(n, d.cols());
+    out.as_mut_slice().fill(0.0);
+    let ke = effective_k(k, n);
+
+    let t0 = Instant::now();
+    scratch.graph.rebuild(d, ke, &mut scratch.gscratch);
+    let KnnScratch { graph, gscratch, w_edges, u_edges, lanes, .. } = scratch;
+    let edges = gscratch.edge_list();
+    let ne = edges.len();
+    if lanes.len() < threads {
+        lanes.resize_with(threads, Vec::new);
+    }
+    w_edges.clear();
+    w_edges.resize(ne, 0.0);
+    let w_writer = DisjointWriter(w_edges.as_mut_ptr());
+    let lane_ptr = DisjointWriter(lanes.as_mut_ptr());
+
+    if two_pass {
+        // ---- Focus pass: integer counts, edge-range partitioned. ----
+        u_edges.clear();
+        u_edges.resize(ne, 0);
+        let u_writer = DisjointWriter(u_edges.as_mut_ptr());
+        parallel_for_ranges(ne, threads, Schedule::Static, |t, range| {
+            // SAFETY: the static schedule spawns each thread id once,
+            // so lanes[t] has exactly one user, and each edge index
+            // belongs to exactly one range.
+            let cand = unsafe { &mut *lane_ptr.0.add(t) };
+            for e in range {
+                let (x, y) = unpack_edge(edges[e]);
+                let dxy = d[(x, y)];
+                merge_sorted(graph.neighbors(x), graph.neighbors(y), cand);
+                let u = count_cands_masked(d.row(x), d.row(y), dxy, cand, tie);
+                // SAFETY: slot e is written by this thread only.
+                unsafe { u_writer.write_at(e, u) };
+            }
+        });
+        // Reciprocal sweep — the triplet family's separate W pass.
+        let ur: &[u32] = u_edges;
+        parallel_for_ranges(ne, threads, Schedule::Static, |_, range| {
+            for e in range {
+                // SAFETY: slot e is written by this thread only.
+                unsafe { w_writer.write_at(e, 1.0 / ur[e] as f32) };
+            }
+        });
+        phases.focus_s += t0.elapsed().as_secs_f64();
+    } else {
+        // ---- Fused pairwise ordering: count + reciprocal per edge;
+        // the graph build is the focus-phase analogue, as in the
+        // sequential fused kernel. ----
+        phases.focus_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        parallel_for_ranges(ne, threads, Schedule::Static, |t, range| {
+            // SAFETY: as above — lanes[t] and each edge slot have
+            // exactly one writing thread.
+            let cand = unsafe { &mut *lane_ptr.0.add(t) };
+            for e in range {
+                let (x, y) = unpack_edge(edges[e]);
+                let dxy = d[(x, y)];
+                merge_sorted(graph.neighbors(x), graph.neighbors(y), cand);
+                let u = count_cands_masked(d.row(x), d.row(y), dxy, cand, tie);
+                // SAFETY: slot e is written by this thread only.
+                unsafe { w_writer.write_at(e, 1.0 / u as f32) };
+            }
+        });
+        phases.cohesion_s += t1.elapsed().as_secs_f64();
+    }
+
+    // ---- Award pass: column-ownership partition. ----
+    let t1 = Instant::now();
+    let writer = DisjointWriter(out.as_mut_ptr());
+    let wr: &[f32] = w_edges;
+    parallel_for_ranges(n, threads, Schedule::Static, |t, zrange| {
+        if zrange.is_empty() {
+            return;
+        }
+        let (zlo, zhi) = (zrange.start as u32, zrange.end as u32);
+        // SAFETY: lanes[t] has exactly one user (static schedule).
+        let cand = unsafe { &mut *lane_ptr.0.add(t) };
+        for (e, &packed) in edges.iter().enumerate() {
+            let (x, y) = unpack_edge(packed);
+            let nx = graph.neighbors(x);
+            let ny = graph.neighbors(y);
+            // Restrict both sorted lists to this thread's columns
+            // before merging: the union of the restrictions is exactly
+            // the candidate set ∩ [zlo, zhi).
+            let xa = nx.partition_point(|&z| z < zlo);
+            let xb = nx.partition_point(|&z| z < zhi);
+            let ya = ny.partition_point(|&z| z < zlo);
+            let yb = ny.partition_point(|&z| z < zhi);
+            if xa == xb && ya == yb {
+                continue;
+            }
+            merge_sorted(&nx[xa..xb], &ny[ya..yb], cand);
+            let dxy = d[(x, y)];
+            let w = wr[e];
+            let (dx, dy) = (d.row(x), d.row(y));
+            for &zu in cand.iter() {
+                let z = zu as usize;
+                let dxz = dx[z];
+                let dyz = dy[z];
+                let (r, s) = match tie {
+                    TieMode::Strict => (m((dxz < dxy) | (dyz < dxy)), m(dxz < dyz)),
+                    TieMode::Split => (
+                        m((dxz <= dxy) | (dyz <= dxy)),
+                        m(dxz < dyz) + 0.5 * m(dxz == dyz),
+                    ),
+                };
+                let rw = r * w;
+                // SAFETY: columns [zlo, zhi) of every row of C belong
+                // to this thread for the whole parallel region.
+                unsafe {
+                    writer.add_at(x * n + z, rw * s);
+                    writer.add_at(y * n + z, rw * (1.0 - s));
+                }
+            }
+        }
+    });
+    phases.cohesion_s += t1.elapsed().as_secs_f64();
+
+    let edge_count = graph.edge_count();
+    scratch.report =
+        Some(KnnReport { effective_k: ke, edges: edge_count, total_pairs: n * (n - 1) / 2 });
+}
+
 /// Unnormalized truncated support over an *explicit* graph — the batch
 /// oracle the incremental engine's truncated updates are verified
 /// against (same pair order and candidate semantics as the registered
@@ -466,6 +657,69 @@ mod tests {
                 assert_eq!(got.as_slice(), reference.as_slice(), "bf={branchfree} tp={two_pass}");
             }
         }
+    }
+
+    fn run_par(d: &Mat, tie: TieMode, k: usize, two_pass: bool, threads: usize) -> Mat {
+        let n = d.rows();
+        let mut scratch = KnnScratch::new();
+        let mut out = Mat::zeros(n, n);
+        let mut phases = PhaseTimes::default();
+        sparse_support_parallel_into(&mut scratch, d, tie, k, two_pass, threads, &mut out, &mut phases);
+        normalize(&mut out);
+        out
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_sequential_at_every_thread_count() {
+        let n = 33;
+        for (d, tie) in [
+            (distmat::random_tie_free(n, 12), TieMode::Strict),
+            (distmat::random_duplicated(n, 13, 3), TieMode::Split),
+        ] {
+            for k in [1usize, 4, 16, n - 1] {
+                // The sequential branchy reference — every sparse rung
+                // is bit-identical to it, so it anchors all of them.
+                let want = run(&d, tie, k, false, false);
+                for two_pass in [false, true] {
+                    for threads in [1usize, 2, 3, 4, 8] {
+                        let got = run_par(&d, tie, k, two_pass, threads);
+                        assert_eq!(
+                            got.as_slice(),
+                            want.as_slice(),
+                            "tp={two_pass} p={threads} k={k} {tie:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_workspace_reuse_is_stable_and_allocation_free() {
+        let n = 40;
+        let d = distmat::random_tie_free(n, 9);
+        let mut scratch = KnnScratch::new();
+        let mut out = Mat::zeros(n, n);
+        let mut phases = PhaseTimes::default();
+        sparse_support_parallel_into(
+            &mut scratch, &d, TieMode::Strict, 6, true, 4, &mut out, &mut phases,
+        );
+        let first = out.clone();
+        let bytes = scratch.allocated_bytes();
+        for _ in 0..3 {
+            sparse_support_parallel_into(
+                &mut scratch, &d, TieMode::Strict, 6, true, 4, &mut out, &mut phases,
+            );
+            assert_eq!(out.as_slice(), first.as_slice(), "repeat run must be bitwise stable");
+            assert_eq!(
+                scratch.allocated_bytes(),
+                bytes,
+                "steady state must not grow the sparse scratch"
+            );
+        }
+        let r = scratch.report.unwrap();
+        assert_eq!(r.effective_k, 6);
+        assert!(!r.is_exact());
     }
 
     #[test]

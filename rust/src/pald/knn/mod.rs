@@ -11,15 +11,17 @@
 //! * [`graph`] builds the exact symmetrized kNN graph
 //!   ([`NeighborGraph`], CSR) from any
 //!   [`DistanceInput`](crate::pald::DistanceInput);
-//! * [`kernels`] holds the truncated focus/cohesion computations at two
-//!   rungs of the optimization ladder (branchy reference and
-//!   blocked/branch-free), each in both pairwise (fused) and triplet
-//!   (two-pass) orderings — registered in the kernel
-//!   [`REGISTRY`](crate::pald::REGISTRY) as `knn-pairwise`,
-//!   `knn-triplet`, `knn-opt-pairwise`, `knn-opt-triplet`, with
-//!   capability metadata the [`Planner`](crate::pald::Planner) costs
-//!   against the dense kernels to pick truncation automatically when
-//!   [`neighborhood`](crate::pald::PaldBuilder::neighborhood) is set.
+//! * [`kernels`] holds the truncated focus/cohesion computations at
+//!   three rungs of the optimization ladder (branchy reference,
+//!   blocked/branch-free, and shared-memory parallel — DESIGN.md §10),
+//!   each in both pairwise (fused) and triplet (two-pass) orderings —
+//!   registered in the kernel [`REGISTRY`](crate::pald::REGISTRY) as
+//!   `knn-pairwise`, `knn-triplet`, `knn-opt-pairwise`,
+//!   `knn-opt-triplet`, `knn-par-pairwise`, `knn-par-triplet`, with
+//!   capability metadata the [`Planner`](crate::pald::Planner) uses to
+//!   resolve a truncated request to the cheapest sparse kernel when
+//!   [`neighborhood`](crate::pald::PaldBuilder::neighborhood) is set
+//!   (threaded plans land on the `knn-par-*` pair).
 //!
 //! **Exactness anchor:** with `k = n - 1` the graph is complete and
 //! every sparse kernel reproduces the dense pairwise reference bit for
@@ -35,5 +37,7 @@ pub mod kernels;
 
 pub(crate) use graph::merge_sorted;
 pub use graph::NeighborGraph;
-pub(crate) use kernels::{effective_k, sparse_support_into, KnnScratch};
+pub(crate) use kernels::{
+    effective_k, sparse_support_into, sparse_support_parallel_into, KnnScratch,
+};
 pub use kernels::{cohesion_over_graph, focus_sizes_over_graph, support_over_graph, KnnReport};

@@ -38,10 +38,16 @@
 //! types) and a batch-recompute oracle (`paldx stream --check`).
 //!
 //! Beyond the dense Θ(n³) semantics, the [`knn`] subsystem (DESIGN.md
-//! §9) truncates the conflict pairs to a symmetrized k-nearest-neighbor
-//! graph at O(n·k²) cost: four sparse kernels (`knn-*`) in the same
-//! registry, [`PaldBuilder::neighborhood`] to request truncation (the
-//! planner costs it against the dense kernels under `Algorithm::Auto`),
+//! §9–§10) truncates the conflict pairs to a symmetrized
+//! k-nearest-neighbor graph at O(n·k²) cost: six sparse kernels
+//! (`knn-*`) in the same registry — reference, optimized, and
+//! shared-memory parallel rungs, the `knn-par-*` pair partitioning the
+//! CSR edge range across threads while staying bit-identical to the
+//! sequential sparse kernels at every thread count —
+//! [`PaldBuilder::neighborhood`] to request truncation (under
+//! `Algorithm::Auto` a truncating request resolves among the sparse
+//! kernels only — a thread budget adds the `knn-par-*` pair to the
+//! candidates),
 //! [`CohesionResult::effective_k`] /
 //! [`CohesionResult::truncation_error_bound`] to see what a run covered,
 //! a graph-capped incremental mode, and `paldx knn` on the CLI.  With

@@ -102,43 +102,54 @@ impl Planner {
         Planner { machine }
     }
 
-    /// Candidate algorithms for a thread budget.  Only the top rungs are
-    /// ever optimal (the lower Figure 3 rungs exist for the ablation), so
-    /// the search space is the optimized/hybrid/parallel set.
-    fn candidates(threads: usize) -> &'static [Algorithm] {
-        if threads > 1 {
-            &[
+    /// Candidate algorithms for a thread budget and neighborhood
+    /// verdict.  Only the top rungs are ever optimal (the lower Figure 3
+    /// rungs exist for the ablation), so the search space is the
+    /// optimized/hybrid/parallel set — and when the request truncates
+    /// (`truncating`), *only* sparse kernels compete: a truncated
+    /// neighborhood is a semantics request, not a cost hint, so the
+    /// planner must never resolve it to a dense kernel.  Before the
+    /// `knn-par-*` rung existed, a thread budget `> 1` could make a
+    /// dense parallel kernel out-predict the (then sequential-only)
+    /// sparse candidates, silently planning dense for `Auto` with
+    /// `k > 0` — the regression pinned by
+    /// `auto_with_threads_resolves_the_truncated_request`.
+    fn candidates(threads: usize, truncating: bool) -> &'static [Algorithm] {
+        match (truncating, threads > 1) {
+            (false, false) => {
+                &[Algorithm::OptimizedPairwise, Algorithm::OptimizedTriplet, Algorithm::Hybrid]
+            }
+            (false, true) => &[
                 Algorithm::OptimizedPairwise,
                 Algorithm::OptimizedTriplet,
                 Algorithm::Hybrid,
                 Algorithm::ParallelPairwise,
                 Algorithm::ParallelTriplet,
                 Algorithm::ParallelHybrid,
-            ]
-        } else {
-            &[Algorithm::OptimizedPairwise, Algorithm::OptimizedTriplet, Algorithm::Hybrid]
-        }
-    }
-
-    /// Sparse PKNN candidates, considered only when a truncated
-    /// neighborhood is requested (`k > 0`) and actually truncates
-    /// (`k < n - 1`); only the optimized sparse rung competes (the
-    /// reference rung exists for the ablation, like the dense ladder).
-    fn knn_candidates(n: usize, k: usize) -> &'static [Algorithm] {
-        if k > 0 && k < n.saturating_sub(1) {
-            &[Algorithm::KnnOptPairwise, Algorithm::KnnOptTriplet]
-        } else {
-            &[]
+            ],
+            // Only the optimized/parallel sparse rungs compete (the
+            // reference rung exists for the ablation, like the dense
+            // ladder); the sequential pair stays in the threaded set
+            // because the spawn charge can beat p at small n.
+            (true, false) => &[Algorithm::KnnOptPairwise, Algorithm::KnnOptTriplet],
+            (true, true) => &[
+                Algorithm::KnnOptPairwise,
+                Algorithm::KnnOptTriplet,
+                Algorithm::KnnParPairwise,
+                Algorithm::KnnParTriplet,
+            ],
         }
     }
 
     /// The cost-ranked candidate set the planner actually chooses from:
     /// each entry is (algorithm, tuned params, predicted seconds).
     /// Kernels whose metadata does not declare exact tie support are
-    /// excluded under `TieMode::Split`; `k > 0` adds the sparse PKNN
-    /// kernels, costed at O(n·k²) against the dense Θ(n³) models —
-    /// dense candidates keep `k = 0` in their params so a dense
-    /// selection explicitly means "no truncation".
+    /// excluded under `TieMode::Split`.  A request that actually
+    /// truncates (`0 < k < n - 1`) is resolved among the sparse PKNN
+    /// kernels only (sequential vs threaded, costed at O(n·k²) and
+    /// O(n·k²/p)); `k >= n - 1` is the complete graph — where the dense
+    /// kernels are bit-identical and strictly cheaper — so those
+    /// requests run dense with `k = 0` in their params.
     pub fn scored_candidates(
         &self,
         n: usize,
@@ -147,9 +158,9 @@ impl Planner {
         k: usize,
     ) -> Vec<(Algorithm, ExecParams, f64)> {
         let threads = threads.max(1);
-        Self::candidates(threads)
+        let truncating = k > 0 && k < n.saturating_sub(1);
+        Self::candidates(threads, truncating)
             .iter()
-            .chain(Self::knn_candidates(n, k).iter())
             .filter_map(|&alg| {
                 let kernel = kernel_for(alg).expect("candidate registered");
                 let meta = kernel.meta();
@@ -256,13 +267,61 @@ mod tests {
             assert_eq!(plan.params.k, 16);
         }
         // k >= n - 1 truncates nothing: the sparse kernels are not even
-        // candidates, and the plan carries k = 0 (no truncation).
+        // candidates, and the plan carries k = 0 (no truncation —
+        // semantically exact, since the complete graph is bit-identical
+        // to dense).
         let plan = p.plan(256, TieMode::Strict, 1, 255);
         assert!(!kernel_for(plan.algorithm).unwrap().meta().sparse);
         assert_eq!(plan.params.k, 0);
         // Split ties stay supported on the sparse path.
         let plan = p.plan(4096, TieMode::Split, 1, 8);
         assert!(kernel_for(plan.algorithm).unwrap().meta().sparse);
+    }
+
+    /// Regression (ISSUE 5 bugfix): `Auto` with a truncating `k` and a
+    /// thread budget used to let a dense *parallel* kernel out-predict
+    /// the then sequential-only sparse candidates — silently planning
+    /// dense and dropping the truncation semantics.  A truncating
+    /// request must resolve to a sparse kernel at every thread count,
+    /// and to the threaded sparse rung once the work term dominates the
+    /// spawn charge.
+    #[test]
+    fn auto_with_threads_resolves_the_truncated_request() {
+        let p = planner();
+        for threads in [2usize, 8, 32] {
+            let plan = p.plan(2048, TieMode::Strict, threads, 12);
+            let kernel = kernel_for(plan.algorithm).unwrap();
+            assert!(
+                kernel.meta().sparse,
+                "threads={threads}: truncated request planned dense {}",
+                kernel.name()
+            );
+            assert_eq!(plan.params.k, 12, "threads={threads}");
+            assert_eq!(plan.params.threads, threads);
+            // Every scored candidate honors the request.
+            for (alg, params, _) in p.scored_candidates(2048, TieMode::Strict, threads, 12) {
+                assert!(kernel_for(alg).unwrap().meta().sparse, "{}", alg.name());
+                assert_eq!(params.k, 12, "{}", alg.name());
+            }
+        }
+        // Large n, generous thread budget: the knn-par rung wins.
+        let plan = p.plan(8192, TieMode::Strict, 16, 16);
+        let kernel = kernel_for(plan.algorithm).unwrap();
+        assert!(
+            kernel.meta().sparse && kernel.meta().parallel,
+            "expected a threaded sparse plan, got {}",
+            kernel.name()
+        );
+        // Resolve() carries the same verdict end to end.
+        let cfg = PaldConfig {
+            algorithm: Algorithm::Auto,
+            threads: 16,
+            k: 16,
+            ..Default::default()
+        };
+        let resolved = p.resolve(&cfg, 8192);
+        assert!(kernel_for(resolved.algorithm).unwrap().meta().sparse);
+        assert_eq!(resolved.params.k, 16);
     }
 
     #[test]

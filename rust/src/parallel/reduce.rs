@@ -79,12 +79,18 @@ where
 #[derive(Default)]
 pub struct ReduceWorkspace {
     bufs: Vec<Vec<u32>>,
+    bufs_f64: Vec<Vec<f64>>,
 }
 
 impl ReduceWorkspace {
     /// Bytes currently held by the per-thread buffers.
     pub fn allocated_bytes(&self) -> usize {
-        self.bufs.iter().map(|b| b.capacity() * std::mem::size_of::<u32>()).sum()
+        self.bufs.iter().map(|b| b.capacity() * std::mem::size_of::<u32>()).sum::<usize>()
+            + self
+                .bufs_f64
+                .iter()
+                .map(|b| b.capacity() * std::mem::size_of::<f64>())
+                .sum::<usize>()
     }
 
     /// Size (and zero) `threads` buffers of `acc_len` words, reusing
@@ -96,6 +102,17 @@ impl ReduceWorkspace {
         for b in self.bufs.iter_mut().take(threads) {
             b.clear();
             b.resize(acc_len, 0);
+        }
+    }
+
+    /// Size (and zero) `threads` f64 buffers of `acc_len` words.
+    fn ensure_f64(&mut self, threads: usize, acc_len: usize) {
+        if self.bufs_f64.len() < threads {
+            self.bufs_f64.resize_with(threads, Vec::new);
+        }
+        for b in self.bufs_f64.iter_mut().take(threads) {
+            b.clear();
+            b.resize(acc_len, 0.0);
         }
     }
 }
@@ -128,6 +145,52 @@ pub fn parallel_for_reduce_u32_into<F>(
         }
     });
     for buf in ws.bufs.iter().take(threads) {
+        for (o, v) in out.iter_mut().zip(buf) {
+            *o += *v;
+        }
+    }
+}
+
+/// Float sum-reduction over an index range (e.g. a CSR edge range) into
+/// the caller's zeroed `out`, with reused per-thread f64 buffers and a
+/// **fixed merge order** (per-thread partials combined in ascending
+/// thread id after the join).
+///
+/// Determinism contract: repeated runs at the *same* thread count are
+/// bit-identical (static schedule + fixed merge order), but runs at
+/// *different* thread counts are only tolerance-level reproducible —
+/// float partial sums round differently than one running sum.  This is
+/// why the sparse parallel kernels do **not** merge per-thread support
+/// buffers: their bit-identity anchor against the sequential kernels
+/// requires conflict-free column ownership instead (DESIGN.md §10).
+/// Use this reduction where a cross-thread sum is the right tool and
+/// run-to-run reproducibility at a fixed budget is enough.  The f64
+/// accumulator keeps the partials exact far beyond f32 edge weights.
+pub fn parallel_for_reduce_f64_into<F>(
+    len: usize,
+    threads: usize,
+    ws: &mut ReduceWorkspace,
+    out: &mut [f64],
+    body: F,
+) where
+    F: Fn(std::ops::Range<usize>, &mut [f64]) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 {
+        body(0..len, out);
+        return;
+    }
+    ws.ensure_f64(threads, out.len());
+    let chunk = len.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, buf) in ws.bufs_f64.iter_mut().enumerate().take(threads) {
+            let lo = (t * chunk).min(len);
+            let hi = ((t + 1) * chunk).min(len);
+            let body = &body;
+            s.spawn(move || body(lo..hi, &mut buf[..]));
+        }
+    });
+    for buf in ws.bufs_f64.iter().take(threads) {
         for (o, v) in out.iter_mut().zip(buf) {
             *o += *v;
         }
@@ -192,6 +255,30 @@ mod tests {
             seq[i % 8] += 1;
         }
         assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn reduce_f64_is_repeatable_at_fixed_thread_count() {
+        let body = |range: std::ops::Range<usize>, acc: &mut [f64]| {
+            for i in range {
+                acc[i % 16] += 1.0 / (i + 1) as f64;
+            }
+        };
+        let mut ws = ReduceWorkspace::default();
+        let mut a = vec![0.0f64; 16];
+        parallel_for_reduce_f64_into(5000, 4, &mut ws, &mut a, body);
+        let bytes = ws.allocated_bytes();
+        let mut b = vec![0.0f64; 16];
+        parallel_for_reduce_f64_into(5000, 4, &mut ws, &mut b, body);
+        assert_eq!(a, b, "fixed thread count must be bitwise repeatable");
+        assert_eq!(ws.allocated_bytes(), bytes, "steady state must not grow");
+        // ... and single-thread agrees within tolerance (not bitwise:
+        // partial sums round differently than one running sum).
+        let mut seq = vec![0.0f64; 16];
+        parallel_for_reduce_f64_into(5000, 1, &mut ws, &mut seq, body);
+        for (x, y) in a.iter().zip(&seq) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
     }
 
     #[test]

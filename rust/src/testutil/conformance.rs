@@ -1,0 +1,459 @@
+//! Registry-wide kernel-conformance harness (DESIGN.md §10).
+//!
+//! One data-driven battery replaces the per-suite comparison loops that
+//! used to be copy-pasted across `tests/engine.rs` / `tests/knn.rs` /
+//! `tests/ties.rs`: every kernel in the
+//! [`REGISTRY`](crate::pald::REGISTRY) runs against the naive-pairwise
+//! reference over a matrix battery (random tie-free, duplicated points
+//! under both [`TieMode`]s, clustered embeddings; n ∈ {2, 3, 5, 17,
+//! 64}), sparse-capable kernels additionally at k ∈ {1, n/4, n−1},
+//! asserting
+//!
+//! * **C** within the crate's documented cross-kernel tolerance
+//!   ([`RTOL`]/[`ATOL`]) of the dense reference for dense kernels, and
+//!   **bit-identical** to the graph oracle
+//!   ([`cohesion_over_graph`](crate::pald::knn::cohesion_over_graph))
+//!   for every sparse kernel at every k (bit-identical to the dense
+//!   reference at k = n−1 — the exactness anchor);
+//! * **U bit-exact**: integer focus sizes recomputed by an independent
+//!   O(n³) sweep match the sparse oracle on every graph edge.
+//!
+//! Duplicated points under `TieMode::Strict` are *undefined* semantics
+//! by design (the masked rungs hit the 0·∞ caveat), so those battery
+//! cases assert run-to-run bit-stability and the mutual agreement of
+//! the branchy sparse orderings instead of reference agreement.
+//!
+//! The thread budgets the battery runs at come from the
+//! `PALD_TEST_THREADS` environment variable (comma-separated, e.g.
+//! `PALD_TEST_THREADS=1,2,4,8` — the CI thread-matrix job), defaulting
+//! to `1,2,4`.
+
+use crate::core::Mat;
+use crate::data::distmat;
+use crate::pald::knn::{cohesion_over_graph, focus_sizes_over_graph, NeighborGraph};
+use crate::pald::{
+    in_focus, naive, normalize, Algorithm, CohesionKernel, ExecParams, TieMode, Workspace,
+    REGISTRY,
+};
+
+/// Documented cross-kernel relative cohesion tolerance (f32 summation
+/// order differs between kernels; support units themselves are exact).
+pub const RTOL: f32 = 1e-4;
+/// Documented cross-kernel absolute cohesion tolerance.
+pub const ATOL: f32 = 1e-5;
+
+/// How a battery case may be checked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaseMode {
+    /// Well-defined semantics: every kernel must agree with the
+    /// reference (tolerance for dense, bit-exact for sparse-vs-oracle).
+    Full,
+    /// Exact ties under `TieMode::Strict` — undefined semantics: assert
+    /// run-to-run bit-stability and branchy-sparse mutual agreement
+    /// only.
+    TieUndefined,
+}
+
+/// One battery entry: a distance matrix, the tie mode to run it under,
+/// and how strictly it can be checked.
+pub struct Case {
+    /// Human-readable label used in assertion messages.
+    pub name: String,
+    /// The distance matrix.
+    pub d: Mat,
+    /// Tie handling for this case.
+    pub tie: TieMode,
+    /// Checking mode.
+    pub mode: CaseMode,
+}
+
+/// The conformance battery: random tie-free matrices under both tie
+/// modes, duplicated points under both tie modes (strict is the
+/// undefined-semantics case), and clustered Euclidean embeddings, at
+/// n ∈ {2, 3, 5, 17, 64}.
+pub fn battery() -> Vec<Case> {
+    let mut cases = Vec::new();
+    for (i, &n) in [2usize, 3, 5, 17, 64].iter().enumerate() {
+        let seed = 9000 + i as u64;
+        cases.push(Case {
+            name: format!("tie-free/strict/n={n}"),
+            d: distmat::random_tie_free(n, seed),
+            tie: TieMode::Strict,
+            mode: CaseMode::Full,
+        });
+        cases.push(Case {
+            name: format!("tie-free/split/n={n}"),
+            d: distmat::random_tie_free(n, seed + 100),
+            tie: TieMode::Split,
+            mode: CaseMode::Full,
+        });
+        let distinct = if n < 5 { 2 } else { 3 };
+        cases.push(Case {
+            name: format!("duplicated/split/n={n}"),
+            d: distmat::random_duplicated(n, seed + 200, distinct),
+            tie: TieMode::Split,
+            mode: CaseMode::Full,
+        });
+        cases.push(Case {
+            name: format!("duplicated/strict/n={n}"),
+            d: distmat::random_duplicated(n, seed + 300, distinct),
+            tie: TieMode::Strict,
+            mode: CaseMode::TieUndefined,
+        });
+    }
+    for (sizes, seed) in [(&[5usize, 6, 6][..], 77u64), (&[21usize, 21, 22][..], 78)] {
+        let n: usize = sizes.iter().sum();
+        let pts = distmat::gaussian_clusters(4, sizes, &[0.3, 0.3, 0.3], 8.0, seed);
+        cases.push(Case {
+            name: format!("clustered/strict/n={n}"),
+            d: distmat::euclidean(&pts),
+            tie: TieMode::Strict,
+            mode: CaseMode::Full,
+        });
+    }
+    cases
+}
+
+/// Neighborhood sizes a sparse-capable kernel is checked at for an
+/// `n`-point case: {1, n/4, n−1}, clamped and deduplicated.
+pub fn sparse_ks(n: usize) -> Vec<usize> {
+    let mut ks: Vec<usize> =
+        [1usize, n / 4, n - 1].iter().map(|&k| k.clamp(1, n - 1)).collect();
+    ks.sort_unstable();
+    ks.dedup();
+    ks
+}
+
+/// Thread budgets for the conformance/determinism suites: the
+/// comma-separated `PALD_TEST_THREADS` environment variable (the CI
+/// thread-matrix job sets it), defaulting to `1,2,4` when unset.
+///
+/// A set-but-invalid variable **panics** instead of silently falling
+/// back — a misconfigured matrix must not go green while claiming
+/// coverage it never ran.
+pub fn test_threads() -> Vec<usize> {
+    let Ok(spec) = std::env::var("PALD_TEST_THREADS") else {
+        return vec![1, 2, 4];
+    };
+    spec.split(',')
+        .map(|entry| match entry.trim().parse::<usize>() {
+            Ok(t) if (1..=64).contains(&t) => t,
+            _ => panic!(
+                "PALD_TEST_THREADS: bad entry {entry:?} in {spec:?} \
+                 (want comma-separated thread counts in 1..=64)"
+            ),
+        })
+        .collect()
+}
+
+/// Run one registered kernel through the trait path (compute_into +
+/// normalization) with the battery's block sizes.
+fn run_kernel(
+    kernel: &dyn CohesionKernel,
+    d: &Mat,
+    tie: TieMode,
+    threads: usize,
+    k: usize,
+    ws: &mut Workspace,
+) -> Mat {
+    let n = d.rows();
+    let p = ExecParams { tie, block: 8, block2: 4, threads, k };
+    let mut c = Mat::zeros(n, n);
+    kernel.compute_into(d, &p, ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Bit-level matrix equality (NaN-safe: compares the f32 bit patterns,
+/// so deterministic NaNs from the strict-tie 0·∞ caveat still compare
+/// equal across runs).
+fn assert_bits_eq(a: &Mat, b: &Mat, ctx: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{ctx}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{ctx}: bit mismatch at flat index {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// Independent O(n³) dense focus-size reference: `U[x][y]` counts every
+/// z with `in_focus` over the complete candidate set.
+fn naive_focus_sizes(d: &Mat, tie: TieMode) -> Mat {
+    let n = d.rows();
+    let mut u = Mat::zeros(n, n);
+    for x in 0..n {
+        for y in (x + 1)..n {
+            let dxy = d[(x, y)];
+            let cnt = (0..n)
+                .filter(|&z| in_focus(d[(x, z)], d[(y, z)], dxy, tie))
+                .count() as f32;
+            u[(x, y)] = cnt;
+            u[(y, x)] = cnt;
+        }
+    }
+    u
+}
+
+/// Independent truncated focus-size reference: counts candidates via
+/// per-z graph membership (`z ∈ N(x) ∪ N(y)` iff `contains(x,z) ||
+/// contains(y,z)`; symmetrization puts x and y themselves in the set) —
+/// a different formulation than the kernels' sorted-list merges, so a
+/// bit-exact match is a real cross-check.
+fn truncated_focus_reference(d: &Mat, g: &NeighborGraph, tie: TieMode) -> Mat {
+    let n = d.rows();
+    let mut u = Mat::zeros(n, n);
+    for x in 0..n {
+        for y in (x + 1)..n {
+            if !g.contains(x, y) {
+                continue;
+            }
+            let dxy = d[(x, y)];
+            let cnt = (0..n)
+                .filter(|&z| {
+                    (g.contains(x, z) || g.contains(y, z))
+                        && in_focus(d[(x, z)], d[(y, z)], dxy, tie)
+                })
+                .count() as f32;
+            u[(x, y)] = cnt;
+            u[(y, x)] = cnt;
+        }
+    }
+    u
+}
+
+/// Every registered kernel agrees with the naive-pairwise reference on
+/// one matrix within the documented tolerance (sparse kernels run at
+/// the complete-graph fallback `k = 0`).  The shared inner loop of the
+/// seeded property suites in `tests/ties.rs` / `tests/properties.rs`;
+/// `ctx` (e.g. the case seed) is prepended to assertion messages so
+/// seeded failures stay reproducible.
+pub fn assert_registry_matches_reference(d: &Mat, tie: TieMode, threads: usize, ctx: &str) {
+    let reference = naive::pairwise(d, tie);
+    let mut ws = Workspace::new();
+    for kernel in REGISTRY {
+        let c = run_kernel(kernel, d, tie, threads, 0, &mut ws);
+        assert!(
+            c.allclose(&reference, RTOL, ATOL),
+            "{ctx}: {} (n={}, {tie:?}, p={threads}): maxdiff={}",
+            kernel.name(),
+            d.rows(),
+            c.max_abs_diff(&reference)
+        );
+    }
+}
+
+/// The full conformance pass at one thread budget: every battery case ×
+/// every registry kernel (× every `sparse_ks` size for sparse kernels),
+/// with the C and U assertions described in the module docs.
+pub fn check_kernel_conformance(threads: usize) {
+    let mut ws = Workspace::new();
+    for case in battery() {
+        let d = &case.d;
+        let n = d.rows();
+        let ctx_base = format!("{} p={threads}", case.name);
+        if case.mode == CaseMode::TieUndefined {
+            // Undefined semantics: every kernel must still be
+            // run-to-run bit-stable (except the dense parallel triplet,
+            // whose task order is documented as run-dependent), and the
+            // two branchy sparse orderings must agree bit-for-bit.
+            for kernel in REGISTRY {
+                if kernel.algorithm() == Algorithm::ParallelTriplet {
+                    continue;
+                }
+                let k = if kernel.meta().sparse { n - 1 } else { 0 };
+                let a = run_kernel(kernel, d, case.tie, threads, k, &mut ws);
+                let b = run_kernel(kernel, d, case.tie, threads, k, &mut ws);
+                assert_bits_eq(&a, &b, &format!("{ctx_base} {} repeat", kernel.name()));
+            }
+            for k in sparse_ks(n) {
+                let a = run_kernel(
+                    Algorithm::KnnPairwise.kernel().unwrap(),
+                    d,
+                    case.tie,
+                    threads,
+                    k,
+                    &mut ws,
+                );
+                let b = run_kernel(
+                    Algorithm::KnnTriplet.kernel().unwrap(),
+                    d,
+                    case.tie,
+                    threads,
+                    k,
+                    &mut ws,
+                );
+                assert_bits_eq(&a, &b, &format!("{ctx_base} knn reference orderings k={k}"));
+            }
+            continue;
+        }
+
+        let cref = naive::pairwise(d, case.tie);
+        let uref = naive_focus_sizes(d, case.tie);
+        // Dense kernels: tolerance agreement with the reference.
+        for kernel in REGISTRY.iter().filter(|k| !k.meta().sparse) {
+            let c = run_kernel(*kernel, d, case.tie, threads, 0, &mut ws);
+            assert!(
+                c.allclose(&cref, RTOL, ATOL),
+                "{ctx_base} {}: maxdiff={}",
+                kernel.name(),
+                c.max_abs_diff(&cref)
+            );
+        }
+        // Sparse kernels: bit-exact against the graph oracle at every
+        // k, bit-exact against the dense reference at k = n-1; focus
+        // sizes integer-exact against an independent reference.
+        for k in sparse_ks(n) {
+            let g = NeighborGraph::build(d, k).expect("battery k is valid");
+            let oracle = cohesion_over_graph(d, &g, case.tie);
+            let ug = focus_sizes_over_graph(d, &g, case.tie);
+            let uind = truncated_focus_reference(d, &g, case.tie);
+            assert_eq!(
+                ug.as_slice(),
+                uind.as_slice(),
+                "{ctx_base} k={k}: truncated U not integer-exact"
+            );
+            if k == n - 1 {
+                assert_eq!(
+                    ug.as_slice(),
+                    uref.as_slice(),
+                    "{ctx_base}: complete-graph U must equal the dense U"
+                );
+            }
+            for kernel in REGISTRY.iter().filter(|k| k.meta().sparse) {
+                let c = run_kernel(*kernel, d, case.tie, threads, k, &mut ws);
+                assert_eq!(
+                    c.as_slice(),
+                    oracle.as_slice(),
+                    "{ctx_base} {} k={k}: sparse kernel diverged from the graph oracle",
+                    kernel.name()
+                );
+                if k == n - 1 {
+                    assert_eq!(
+                        c.as_slice(),
+                        cref.as_slice(),
+                        "{ctx_base} {}: k=n-1 must be bit-identical to dense",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Determinism pins for the parallel kernels (DESIGN.md §10):
+///
+/// * the sparse `knn-par-*` pair is bit-identical to the sequential
+///   sparse reference at **every** thread count in `threads_list`, and
+///   bitwise repeatable on a reused workspace;
+/// * dense `par-pairwise` and `par-hybrid` are bitwise repeatable and
+///   bit-identical **across** thread counts ≥ 2 (integer focus
+///   reduction + column-ownership cohesion: per-cell summation order is
+///   partition-independent);
+/// * dense `par-triplet` promises tolerance-level reproducibility only
+///   (its task graph executes conflicting tasks in a run-dependent
+///   order, like the OpenMP original).
+pub fn check_parallel_determinism(threads_list: &[usize]) {
+    let mut ws = Workspace::new();
+    for (d, tie) in [
+        (distmat::random_tie_free(41, 2029), TieMode::Strict),
+        (distmat::random_duplicated(34, 2030, 3), TieMode::Split),
+    ] {
+        let n = d.rows();
+        // Sparse parallel pair vs the sequential branchy reference.
+        for alg in [Algorithm::KnnParPairwise, Algorithm::KnnParTriplet] {
+            let kernel = alg.kernel().unwrap();
+            for k in [3usize, 9, n - 1] {
+                let want = run_kernel(
+                    Algorithm::KnnPairwise.kernel().unwrap(),
+                    &d,
+                    tie,
+                    1,
+                    k,
+                    &mut ws,
+                );
+                for &p in threads_list {
+                    let got = run_kernel(kernel, &d, tie, p, k, &mut ws);
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "{} k={k} p={p} ({tie:?}): not bit-identical to sequential",
+                        kernel.name()
+                    );
+                    let again = run_kernel(kernel, &d, tie, p, k, &mut ws);
+                    assert_eq!(
+                        again.as_slice(),
+                        want.as_slice(),
+                        "{} k={k} p={p} ({tie:?}): workspace reuse not bitwise stable",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+        // Dense parallel pairwise + hybrid: fixed-order reduction and
+        // column ownership make them bit-identical across real thread
+        // counts (p = 1 delegates to a different sequential kernel, so
+        // it is excluded from the cross-count pin).
+        for alg in [Algorithm::ParallelPairwise, Algorithm::ParallelHybrid] {
+            let kernel = alg.kernel().unwrap();
+            let mut baseline: Option<Mat> = None;
+            for &p in threads_list.iter().filter(|&&p| p >= 2) {
+                let a = run_kernel(kernel, &d, tie, p, 0, &mut ws);
+                let b = run_kernel(kernel, &d, tie, p, 0, &mut ws);
+                assert_eq!(
+                    a.as_slice(),
+                    b.as_slice(),
+                    "{} p={p} ({tie:?}): repeat run not bitwise stable",
+                    kernel.name()
+                );
+                match &baseline {
+                    None => baseline = Some(a),
+                    Some(base) => assert_eq!(
+                        a.as_slice(),
+                        base.as_slice(),
+                        "{} p={p} ({tie:?}): thread count changed the bits",
+                        kernel.name()
+                    ),
+                }
+            }
+        }
+        // Dense parallel triplet: tolerance-level reproducibility only.
+        let kernel = Algorithm::ParallelTriplet.kernel().unwrap();
+        for &p in threads_list.iter().filter(|&&p| p >= 2) {
+            let a = run_kernel(kernel, &d, tie, p, 0, &mut ws);
+            let b = run_kernel(kernel, &d, tie, p, 0, &mut ws);
+            assert!(
+                a.allclose(&b, 1e-5, 1e-6),
+                "par-triplet p={p} ({tie:?}): runs differ beyond tolerance: {}",
+                a.max_abs_diff(&b)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn battery_shapes_and_ks() {
+        let cases = battery();
+        assert!(cases.len() >= 20);
+        assert!(cases.iter().any(|c| c.d.rows() == 2));
+        assert!(cases.iter().any(|c| c.d.rows() == 64));
+        assert!(cases.iter().any(|c| c.mode == CaseMode::TieUndefined));
+        assert_eq!(sparse_ks(2), vec![1]);
+        assert_eq!(sparse_ks(3), vec![1, 2]);
+        assert_eq!(sparse_ks(17), vec![1, 4, 16]);
+        assert_eq!(sparse_ks(64), vec![1, 16, 63]);
+    }
+
+    #[test]
+    fn env_thread_list_parses() {
+        // Not set in unit tests by default: the fallback applies.  (The
+        // CI thread-matrix job exercises the env path end to end.)
+        let v = test_threads();
+        assert!(!v.is_empty());
+        assert!(v.iter().all(|&t| t >= 1));
+    }
+}

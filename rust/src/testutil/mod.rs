@@ -1,6 +1,9 @@
 //! Property-testing driver (proptest is unavailable offline): runs a
 //! property over many seeded random cases and reports the first failing
-//! seed so failures reproduce exactly.
+//! seed so failures reproduce exactly.  The registry-wide
+//! kernel-conformance battery lives in [`conformance`].
+
+pub mod conformance;
 
 use crate::core::Mat;
 use crate::data::distmat;

@@ -1,0 +1,54 @@
+//! Registry-wide kernel conformance + parallel determinism
+//! (DESIGN.md §10): one data-driven suite drives every `REGISTRY`
+//! kernel over the `testutil::conformance` battery — random, duplicated
+//! points under both tie modes, clustered, n ∈ {2, 3, 5, 17, 64}, and
+//! k ∈ {1, n/4, n−1} for the sparse-capable kernels — replacing the
+//! comparison loops formerly copy-pasted across engine/knn/ties suites.
+//!
+//! Thread budgets come from `PALD_TEST_THREADS` (comma-separated; the
+//! CI thread-matrix job runs this suite at 1, 2, 4, and 8 threads).
+
+use paldx::testutil::conformance::{
+    battery, check_kernel_conformance, check_parallel_determinism, sparse_ks, test_threads,
+};
+
+/// Acceptance (ISSUE 5): all 18 registry kernels conform, from a single
+/// parameterized battery, at every configured thread budget — C within
+/// the documented tolerance of the dense reference (bit-exact on the
+/// sparse path against the graph oracle, and against dense at k = n−1),
+/// U integer-exact.
+#[test]
+fn registry_conformance_across_thread_matrix() {
+    let threads = test_threads();
+    assert!(!threads.is_empty());
+    for t in threads {
+        check_kernel_conformance(t);
+    }
+}
+
+/// Determinism pins: the `knn-par-*` kernels are bit-identical to the
+/// sequential sparse kernels at every configured thread count and
+/// bitwise repeatable on a reused workspace; dense `par-pairwise` /
+/// `par-hybrid` are bitwise repeatable and thread-count-invariant;
+/// `par-triplet` reproduces within tolerance (run-dependent task
+/// order, as documented).
+#[test]
+fn parallel_kernels_pin_their_determinism_contract() {
+    check_parallel_determinism(&test_threads());
+}
+
+/// The battery itself covers the sizes and neighborhood grid the issue
+/// demands — a meta-test so a future edit cannot quietly shrink it.
+#[test]
+fn battery_covers_the_required_grid() {
+    let cases = battery();
+    for n in [2usize, 3, 5, 17, 64] {
+        assert!(
+            cases.iter().any(|c| c.d.rows() == n),
+            "battery lost the n={n} cases"
+        );
+    }
+    let dup = cases.iter().filter(|c| c.name.starts_with("duplicated/")).count();
+    assert!(dup >= 10, "duplicated-point coverage shrank: {dup}");
+    assert_eq!(sparse_ks(64), vec![1, 16, 63]);
+}

@@ -91,9 +91,11 @@ fn session_auto_serves_mixed_shapes() {
     }
 }
 
-/// All 16 variants (12 dense + 4 sparse at the full-graph fallback)
-/// agree with the naive reference through the public kernel-trait path
-/// (registry -> compute_into -> workspace).
+/// All 18 variants (12 dense + 6 sparse at the full-graph fallback)
+/// agree with the naive reference through the *deprecated*
+/// `compute_cohesion_into` entry point with a shared workspace — the
+/// legacy-API twin of the registry-wide conformance battery
+/// (`tests/conformance.rs`), kept until the wrappers are removed.
 #[test]
 fn registry_trait_path_agrees_with_naive() {
     let n = 44;

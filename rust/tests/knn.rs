@@ -8,15 +8,17 @@
 use paldx::core::Mat;
 use paldx::data::distmat;
 use paldx::pald::{
-    knn, naive, Algorithm, IncrementalPald, Neighborhood, NeighborGraph, Pald, PaldConfig,
-    PaldError, Planner, ReanchorPolicy, Session, Threads, TieMode, Validation,
+    knn, naive, Algorithm, IncrementalPald, Neighborhood, NeighborGraph, Pald, PaldError,
+    Planner, ReanchorPolicy, Threads, TieMode, Validation,
 };
 
-const SPARSE: [Algorithm; 4] = [
+const SPARSE: [Algorithm; 6] = [
     Algorithm::KnnPairwise,
     Algorithm::KnnTriplet,
     Algorithm::KnnOptPairwise,
     Algorithm::KnnOptTriplet,
+    Algorithm::KnnParPairwise,
+    Algorithm::KnnParTriplet,
 ];
 
 fn sparse_pald(alg: Algorithm, k: usize) -> Pald {
@@ -29,10 +31,11 @@ fn sparse_pald(alg: Algorithm, k: usize) -> Pald {
 }
 
 /// The tentpole acceptance criterion, half one: with `k = n - 1` every
-/// sparse kernel reproduces the dense kernels' cohesion bit-for-bit in
-/// support units — asserted as bit-identity against the naive pairwise
-/// reference (the dense semantic anchor every dense kernel is tested
-/// against) and tolerance-identity against all 16 registered kernels.
+/// sparse kernel — the parallel pair at several thread counts —
+/// reproduces the dense kernels' cohesion bit-for-bit in support units,
+/// asserted against the naive pairwise reference (the dense semantic
+/// anchor).  Tolerance-identity against every registered kernel is the
+/// conformance battery's job (`tests/conformance.rs`).
 #[test]
 fn full_neighborhood_is_bit_identical_to_dense() {
     let n = 34;
@@ -42,46 +45,27 @@ fn full_neighborhood_is_bit_identical_to_dense() {
     ] {
         let want = naive::pairwise(&d, tie);
         for alg in SPARSE {
-            let mut p = Pald::builder()
-                .algorithm(alg)
-                .neighborhood(Neighborhood::Knn(n - 1))
-                .tie_mode(tie)
-                .threads(Threads::Fixed(1))
-                .build()
-                .unwrap();
-            let r = p.compute(&d).unwrap();
-            assert_eq!(
-                r.cohesion().as_slice(),
-                want.as_slice(),
-                "{} ({tie:?}): k=n-1 must be bit-identical to the dense reference",
-                alg.name()
-            );
-            assert_eq!(r.effective_k(), Some(n - 1));
-            assert_eq!(r.truncation_error_bound(), Some(0.0));
-            assert!(r.knn_report().unwrap().is_exact());
-        }
-        // ... and within the cross-kernel tolerance of every dense
-        // registered variant.
-        let sparse = sparse_pald(Algorithm::KnnOptPairwise, n - 1)
-            .compute(&d)
-            .unwrap()
-            .into_matrix();
-        for alg in Algorithm::ALL {
-            let cfg = PaldConfig {
-                algorithm: alg,
-                tie_mode: tie,
-                block: 16,
-                block2: 8,
-                threads: 2,
-                ..Default::default()
-            };
-            let c = Session::new(cfg).unwrap().compute(&d).unwrap();
-            assert!(
-                sparse.allclose(&c, 1e-4, 1e-5),
-                "{} vs sparse full-k: maxdiff={}",
-                alg.name(),
-                sparse.max_abs_diff(&c)
-            );
+            let threads: &[usize] =
+                if alg.kernel().unwrap().meta().parallel { &[1, 2, 4] } else { &[1] };
+            for &p in threads {
+                let mut pald = Pald::builder()
+                    .algorithm(alg)
+                    .neighborhood(Neighborhood::Knn(n - 1))
+                    .tie_mode(tie)
+                    .threads(Threads::Fixed(p))
+                    .build()
+                    .unwrap();
+                let r = pald.compute(&d).unwrap();
+                assert_eq!(
+                    r.cohesion().as_slice(),
+                    want.as_slice(),
+                    "{} ({tie:?}, p={p}): k=n-1 must be bit-identical to the dense reference",
+                    alg.name()
+                );
+                assert_eq!(r.effective_k(), Some(n - 1));
+                assert_eq!(r.truncation_error_bound(), Some(0.0));
+                assert!(r.knn_report().unwrap().is_exact());
+            }
         }
     }
 }
@@ -121,9 +105,11 @@ fn auto_selects_truncation_for_small_k() {
 }
 
 /// A neighborhood request is never silently dropped, and never lies:
-/// a pinned dense algorithm maps to its sparse counterpart, and when
-/// the planner declines truncation (k too close to n to win) both the
-/// result and the incremental engine are plainly dense.
+/// a pinned dense algorithm maps to its sparse counterpart (parallel
+/// pins to the parallel sparse rung), `Auto` resolves a truncating
+/// request among the sparse kernels only — even with a thread budget,
+/// the ISSUE 5 regression — and only a complete-graph request
+/// (`k >= n - 1`, bit-identical to dense) runs plainly dense.
 #[test]
 fn neighborhood_semantics_are_coherent_across_the_stack() {
     let d = distmat::random_tie_free(60, 8);
@@ -137,29 +123,69 @@ fn neighborhood_semantics_are_coherent_across_the_stack() {
     let r = pinned.compute(&d).unwrap();
     assert_eq!(r.plan().algorithm, Algorithm::KnnOptPairwise);
     assert_eq!(r.effective_k(), Some(6));
-    // Auto + Knn(40) at n=60: 4k² >= n², so truncation cannot win and
-    // the planner declines — the run is exactly dense and says so.
-    let mut declined = Pald::builder()
-        .neighborhood(Neighborhood::Knn(40))
+    // Pinned *parallel* dense + Knn(6): the parallel sparse rung — a
+    // thread budget composes with truncation instead of serializing.
+    let mut par_pinned = Pald::builder()
+        .algorithm(Algorithm::ParallelPairwise)
+        .neighborhood(Neighborhood::Knn(6))
+        .threads(Threads::Fixed(4))
+        .build()
+        .unwrap();
+    let rp = par_pinned.compute(&d).unwrap();
+    assert_eq!(rp.plan().algorithm, Algorithm::KnnParPairwise);
+    assert_eq!(rp.effective_k(), Some(6));
+    assert_eq!(
+        rp.cohesion().as_slice(),
+        r.cohesion().as_slice(),
+        "parallel sparse must be bit-identical to sequential sparse"
+    );
+    // Auto + a truncating Knn(40) at n=60, with and without threads:
+    // the plan is sparse and the truncation is reported (regression:
+    // threads > 1 used to silently plan dense here).
+    for threads in [1usize, 4] {
+        let mut auto = Pald::builder()
+            .neighborhood(Neighborhood::Knn(40))
+            .threads(Threads::Fixed(threads))
+            .build()
+            .unwrap();
+        let r = auto.compute(&d).unwrap();
+        assert!(
+            r.plan().algorithm.kernel().unwrap().meta().sparse,
+            "threads={threads}: truncating request planned dense {}",
+            r.plan().algorithm.name()
+        );
+        assert_eq!(r.effective_k(), Some(40), "threads={threads}");
+        // The incremental engine follows the same verdict: graph-capped.
+        let mut eng = Pald::builder()
+            .neighborhood(Neighborhood::Knn(40))
+            .threads(Threads::Fixed(threads))
+            .build()
+            .unwrap()
+            .into_incremental(&d)
+            .unwrap();
+        assert_eq!(eng.neighborhood(), Some(40), "threads={threads}");
+        let inc = eng.cohesion();
+        let batch = eng.batch_recompute().unwrap();
+        assert!(inc.allclose(&batch, 1e-4, 1e-5), "threads={threads}");
+    }
+    // Auto + Knn(59) = Knn(n-1): the complete graph truncates nothing,
+    // so the run is exactly dense and says so.
+    let mut complete = Pald::builder()
+        .neighborhood(Neighborhood::Knn(59))
         .threads(Threads::Fixed(1))
         .build()
         .unwrap();
-    let r = declined.compute(&d).unwrap();
+    let r = complete.compute(&d).unwrap();
     assert!(!r.plan().algorithm.kernel().unwrap().meta().sparse);
     assert_eq!(r.effective_k(), None);
-    // The incremental engine follows the same verdict, so its state and
-    // batch_recompute always agree in kind.
-    let mut eng = Pald::builder()
-        .neighborhood(Neighborhood::Knn(40))
+    let mut dense_eng = Pald::builder()
+        .neighborhood(Neighborhood::Knn(59))
         .threads(Threads::Fixed(1))
         .build()
         .unwrap()
         .into_incremental(&d)
         .unwrap();
-    assert_eq!(eng.neighborhood(), None, "declined truncation = exact dense engine");
-    let inc = eng.cohesion();
-    let batch = eng.batch_recompute().unwrap();
-    assert!(inc.allclose(&batch, 1e-4, 1e-5));
+    assert_eq!(dense_eng.neighborhood(), None, "complete graph = exact dense engine");
     // ... and a pinned-dense truncated engine is graph-capped, with the
     // batch recompute dispatching the matching sparse kernel.
     let mut capped = Pald::builder()
@@ -172,6 +198,50 @@ fn neighborhood_semantics_are_coherent_across_the_stack() {
         .unwrap();
     assert_eq!(capped.neighborhood(), Some(6));
     assert_eq!(capped.plan().algorithm, Algorithm::KnnOptTriplet);
+}
+
+/// Tentpole acceptance: the parallel sparse kernels are bit-identical
+/// to their sequential counterparts through the facade at every tested
+/// (k, thread count) — both orderings, both tie modes.
+#[test]
+fn parallel_sparse_kernels_are_bit_identical_through_the_facade() {
+    let n = 44;
+    for (d, tie) in [
+        (distmat::random_tie_free(n, 2031), TieMode::Strict),
+        (distmat::random_tied(n, 2032, 5), TieMode::Split),
+    ] {
+        for k in [2usize, 9, n - 1] {
+            let want = Pald::builder()
+                .algorithm(Algorithm::KnnPairwise)
+                .neighborhood(Neighborhood::Knn(k))
+                .tie_mode(tie)
+                .threads(Threads::Fixed(1))
+                .build()
+                .unwrap()
+                .compute(&d)
+                .unwrap()
+                .into_matrix();
+            for alg in [Algorithm::KnnParPairwise, Algorithm::KnnParTriplet] {
+                for threads in [1usize, 2, 4, 8] {
+                    let mut p = Pald::builder()
+                        .algorithm(alg)
+                        .neighborhood(Neighborhood::Knn(k))
+                        .tie_mode(tie)
+                        .threads(Threads::Fixed(threads))
+                        .build()
+                        .unwrap();
+                    let got = p.compute(&d).unwrap();
+                    assert_eq!(
+                        got.cohesion().as_slice(),
+                        want.as_slice(),
+                        "{} k={k} p={threads} ({tie:?})",
+                        alg.name()
+                    );
+                    assert_eq!(got.plan().params.threads, threads);
+                }
+            }
+        }
+    }
 }
 
 /// Coverage (and therefore the reported error bound) is monotone in k
@@ -259,7 +329,7 @@ fn duplicate_ties_on_the_sparse_path() {
         let got = p.compute(&d).unwrap();
         assert_eq!(got.cohesion().as_slice(), want.as_slice(), "{} split", alg.name());
     }
-    // Small k, split mode: all four sparse kernels stay bit-identical
+    // Small k, split mode: all six sparse kernels stay bit-identical
     // to each other, and every evaluated edge still distributes exactly
     // one support unit (the mass-conservation invariant under ties).
     let k = 5;

@@ -4,7 +4,10 @@
 
 use paldx::core::Mat;
 use paldx::data::{distmat, prng::Rng};
-use paldx::pald::{self, Algorithm, PaldConfig, TieMode};
+use paldx::pald::{
+    self, Algorithm, Neighborhood, NeighborGraph, Pald, PaldConfig, Threads, TieMode,
+};
+use paldx::testutil::conformance::assert_registry_matches_reference;
 use paldx::testutil::{check_cases, ensure, matrices_close, random_problem, random_size};
 
 fn compute(d: &Mat, alg: Algorithm, tie: TieMode, block: usize, threads: usize) -> Mat {
@@ -39,17 +42,14 @@ fn prop_total_mass() {
 }
 
 /// Invariant 4: every rung of both algorithm families agrees with the
-/// naive pairwise reference (strict mode, tie-free inputs).
+/// naive pairwise reference (strict mode, tie-free inputs) — via the
+/// shared conformance loop (`tests/conformance.rs` runs the fixed
+/// battery; this seeds random cases through the same helper).
 #[test]
 fn prop_all_variants_agree() {
     check_cases(0xBEEF, 8, |seed, _| {
         let d = random_problem(seed, 8, 48);
-        let reference = compute(&d, Algorithm::NaivePairwise, TieMode::Strict, 0, 1);
-        for alg in Algorithm::ALL {
-            let c = compute(&d, alg, TieMode::Strict, 8, 4);
-            matrices_close(&c, &reference, 1e-4, 1e-5)
-                .map_err(|e| format!("{}: {e}", alg.name()))?;
-        }
+        assert_registry_matches_reference(&d, TieMode::Strict, 4, &format!("seed={seed:#x}"));
         Ok(())
     });
 }
@@ -150,6 +150,135 @@ fn prop_parallel_determinism() {
         let a = compute(&d, Algorithm::ParallelTriplet, TieMode::Strict, 8, 4);
         let b = compute(&d, Algorithm::ParallelTriplet, TieMode::Strict, 8, 4);
         matrices_close(&a, &b, 1e-5, 1e-6)
+    });
+}
+
+/// PKNN invariants (DESIGN.md §9–§10): the reported coverage bound is
+/// monotone non-increasing in k and consistent with the graph's edge
+/// count, and the effective neighborhood never exceeds the request.
+#[test]
+fn prop_knn_mass_bound_monotone_and_effective_k() {
+    check_cases(0x5AFE, 6, |seed, _| {
+        let n = random_size(seed, 12, 40);
+        let d = distmat::random_tie_free(n, seed);
+        let mut prev = f64::INFINITY;
+        let mut k = 2usize;
+        while k < 2 * n {
+            let kk = k.min(n - 1);
+            let mut p = Pald::builder()
+                .algorithm(Algorithm::KnnOptPairwise)
+                .neighborhood(Neighborhood::Knn(k))
+                .threads(Threads::Fixed(1))
+                .build()
+                .map_err(|e| e.to_string())?;
+            let r = p.compute(&d).map_err(|e| e.to_string())?;
+            let eff = r.effective_k().expect("sparse run reports effective_k");
+            ensure(eff == kk && eff <= k, format!("effective_k {eff} for k={k} (n={n})"))?;
+            let bound = r.truncation_error_bound().unwrap();
+            ensure(
+                bound <= prev + 1e-12,
+                format!("mass bound rose from {prev} to {bound} at k={k} (n={n})"),
+            )?;
+            let g = NeighborGraph::build(&d, kk).map_err(|e| e.to_string())?;
+            let want = 1.0 - g.edge_count() as f64 / (n * (n - 1) / 2) as f64;
+            ensure(
+                (bound - want).abs() < 1e-12,
+                format!("bound {bound} != 1 - coverage {want} at k={k}"),
+            )?;
+            prev = bound;
+            k *= 2;
+        }
+        ensure(prev == 0.0, format!("k >= n-1 must report a zero bound, got {prev}"))
+    });
+}
+
+/// Row-sum conservation of truncated support: every evaluated edge
+/// distributes exactly one support unit between its two rows, so the
+/// normalized total is edges/(n-1) and each row is bounded by its
+/// degree.
+#[test]
+fn prop_knn_row_sum_conservation() {
+    check_cases(0xC0DA, 6, |seed, _| {
+        let n = random_size(seed, 10, 36);
+        let d = distmat::random_tie_free(n, seed ^ 7);
+        let k = 2 + (seed % 5) as usize;
+        let kk = k.min(n - 1);
+        let mut p = Pald::builder()
+            .algorithm(Algorithm::KnnParPairwise)
+            .neighborhood(Neighborhood::Knn(kk))
+            .threads(Threads::Fixed(4))
+            .build()
+            .map_err(|e| e.to_string())?;
+        let r = p.compute(&d).map_err(|e| e.to_string())?;
+        let g = NeighborGraph::build(&d, kk).map_err(|e| e.to_string())?;
+        let c = r.cohesion();
+        let want = g.edge_count() as f64 / (n as f64 - 1.0);
+        ensure(
+            (c.sum() - want).abs() < 1e-3,
+            format!("total mass {} want {want} (n={n}, k={kk})", c.sum()),
+        )?;
+        for x in 0..n {
+            let row: f64 = c.row(x).iter().map(|&v| v as f64).sum();
+            let cap = g.degree(x) as f64 / (n as f64 - 1.0);
+            ensure(
+                row >= 0.0 && row <= cap + 1e-4,
+                format!("row {x} sum {row} exceeds degree cap {cap}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Insert∘remove round-trip on a *truncated* incremental engine under
+/// concurrent-plan configs (Auto and a pinned parallel sparse kernel,
+/// threads > 1): U returns bit-identically, C within the documented
+/// incremental tolerance.
+#[test]
+fn prop_truncated_incremental_roundtrip_under_parallel_plans() {
+    check_cases(0x0DD5, 5, |seed, _| {
+        let n = random_size(seed, 14, 26);
+        let master = distmat::random_tie_free(n + 1, seed ^ 0x515);
+        let seed_mat = master.slice_to(n, n);
+        let k = 3 + (seed % 3) as usize;
+        for (label, builder) in [
+            (
+                "auto",
+                Pald::builder()
+                    .neighborhood(Neighborhood::Knn(k))
+                    .threads(Threads::Fixed(4)),
+            ),
+            (
+                "pinned-par",
+                Pald::builder()
+                    .algorithm(Algorithm::KnnParPairwise)
+                    .neighborhood(Neighborhood::Knn(k))
+                    .threads(Threads::Fixed(2)),
+            ),
+        ] {
+            let mut eng = builder
+                .build()
+                .map_err(|e| e.to_string())?
+                .into_incremental(&seed_mat)
+                .map_err(|e| e.to_string())?;
+            ensure(
+                eng.neighborhood() == Some(k),
+                format!("{label}: engine must be graph-capped at k={k}"),
+            )?;
+            let u_before = eng.focus_sizes();
+            let c_before = eng.cohesion();
+            let row: Vec<f32> = (0..n).map(|j| master[(n, j)]).collect();
+            eng.insert_row(&row).map_err(|e| e.to_string())?;
+            eng.remove(n).map_err(|e| e.to_string())?;
+            ensure(eng.n() == n, format!("{label}: size after round trip"))?;
+            let u_after = eng.focus_sizes();
+            ensure(
+                u_after.as_slice() == u_before.as_slice(),
+                format!("{label} (n={n}, k={k}): U did not round-trip bit-identically"),
+            )?;
+            matrices_close(&eng.cohesion(), &c_before, 1e-4, 1e-5)
+                .map_err(|e| format!("{label} (n={n}, k={k}): C diverged: {e}"))?;
+        }
+        Ok(())
     });
 }
 

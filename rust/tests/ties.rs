@@ -8,6 +8,7 @@
 
 use paldx::data::distmat;
 use paldx::pald::{self, naive, Algorithm, PaldConfig, TieMode};
+use paldx::testutil::conformance::assert_registry_matches_reference;
 use paldx::testutil::{check_cases, matrices_close, random_size};
 
 fn compute(d: &paldx::core::Mat, alg: Algorithm, tie: TieMode) -> paldx::core::Mat {
@@ -22,20 +23,22 @@ fn compute(d: &paldx::core::Mat, alg: Algorithm, tie: TieMode) -> paldx::core::M
     pald::compute_cohesion(d, &cfg).expect("compute_cohesion")
 }
 
-/// Split mode on duplicated-point matrices: all 12 kernels agree with the
-/// naive pairwise reference.
+/// Split mode on duplicated-point matrices: every registered kernel
+/// agrees with the naive pairwise reference (the shared conformance
+/// loop — `tests/conformance.rs` runs the fixed battery; this seeds
+/// random cases through the same helper).
 #[test]
 fn prop_split_agrees_on_duplicated_points() {
     check_cases(0x71E5, 8, |seed, _| {
         let n = random_size(seed, 8, 32);
         let distinct = 2 + (seed % 3) as usize;
         let d = distmat::random_duplicated(n, seed, distinct);
-        let reference = naive::pairwise(&d, TieMode::Split);
-        for alg in Algorithm::ALL {
-            let c = compute(&d, alg, TieMode::Split);
-            matrices_close(&c, &reference, 1e-4, 1e-5)
-                .map_err(|e| format!("{} (n={n}, distinct={distinct}): {e}", alg.name()))?;
-        }
+        assert_registry_matches_reference(
+            &d,
+            TieMode::Split,
+            3,
+            &format!("seed={seed:#x} distinct={distinct}"),
+        );
         Ok(())
     });
 }
