@@ -1,15 +1,25 @@
-//! Bench target for the sparse PKNN engine (DESIGN.md §5, §9–§10): an
+//! Bench target for the sparse PKNN engine (DESIGN.md §5, §9–§11): an
 //! n-vs-k sweep of the truncated kernels against the dense optimized
-//! pairwise baseline, plus a thread sweep of the `knn-par-*` kernels,
-//! with the exactness anchors (k = n-1 bit-identical to dense naive
+//! pairwise baseline, a thread sweep of the `knn-par-*` kernels, and an
+//! exact-vs-approx graph-builder sweep (build time + measured recall,
+//! with an n = 50k approximate-build CI smoke row and, under
+//! `PALDX_FULL=1`, a million-point end-to-end approx + CSR cohesion
+//! row reporting the measured recall alongside the truncation bound).
+//! The exactness anchors (k = n-1 bit-identical to dense naive
 //! pairwise; knn-par bit-identical to the sequential sparse run at
-//! every thread count) asserted before anything is reported.  Emits
-//! `BENCH_knn.json` (both tables) next to `BENCH_stream.json`.
+//! every thread count) are asserted before anything is reported.
+//! Emits `BENCH_knn.json` (all three tables) next to
+//! `BENCH_stream.json`.
 //! Run: cargo bench --bench knn_scaling   (PALDX_FULL=1 for larger sizes)
 
-use paldx::bench::{bench, fmt_secs, fmt_speedup, write_json_report, BenchOpts, Table};
+use std::time::Instant;
+
+use paldx::bench::{bench, fmt_secs, fmt_speedup, write_json_report, BenchOpts, Stats, Table};
 use paldx::data::distmat;
-use paldx::pald::{Algorithm, Neighborhood, Pald, Threads};
+use paldx::pald::{
+    build_graph_from_points, Algorithm, AnnParams, ComputedDistances, GraphBuild, Metric,
+    Neighborhood, Pald, Storage, Threads,
+};
 
 fn pald(alg: Algorithm, k: usize) -> Pald {
     pald_threaded(alg, k, 1)
@@ -122,7 +132,123 @@ fn main() -> anyhow::Result<()> {
     }
     sweep.print();
 
-    match write_json_report(std::path::Path::new("."), "knn", &[&table, &sweep]) {
+    // Graph-builder sweep (DESIGN.md §11): exact Θ(n²) selection vs the
+    // sub-quadratic RP-forest + NN-descent build, with the measured
+    // recall of the approximate builder's sampled exact-kNN audit.  The
+    // n = 50k approximate-only row is the CI smoke gate; PALDX_FULL=1
+    // additionally runs the million-point end-to-end approx + CSR
+    // cohesion row (measured recall alongside the truncation bound).
+    let mut builders = Table::new(
+        "knn — graph builders: exact vs approx (k = 8, dim 8)",
+        &["n", "builder", "time", "recall", "mass bound", "notes"],
+    );
+    let k = 8usize;
+    let params = AnnParams::default();
+    let cloud = |n: usize| {
+        distmat::gaussian_clusters(8, &[n / 2, n - n / 2], &[0.5, 0.5], 6.0, n as u64 + 5)
+    };
+    let build_ns: &[usize] = if full { &[16384, 65536] } else { &[2048, 8192] };
+    let exact_cap = if full { 16384 } else { 8192 };
+    for &n in build_ns {
+        let pts = cloud(n);
+        if n <= exact_cap {
+            let stats = bench(&opts, || {
+                build_graph_from_points(&pts, Metric::Euclidean, k, &GraphBuild::Exact, 4)
+                    .expect("exact build");
+            });
+            builders.stat(format!("build-exact/n={n}"), stats);
+            builders.row(vec![
+                n.to_string(),
+                "exact".into(),
+                fmt_secs(stats.mean),
+                "1.0000".into(),
+                "-".into(),
+                "graph build".into(),
+            ]);
+        }
+        let mut recall = 0.0f64;
+        let stats = bench(&opts, || {
+            let (_, r) = build_graph_from_points(
+                &pts,
+                Metric::Euclidean,
+                k,
+                &GraphBuild::Approx(params),
+                4,
+            )
+            .expect("approx build");
+            recall = r.expect("approx builds audit");
+        });
+        builders.stat(format!("build-approx/n={n}"), stats);
+        builders.row(vec![
+            n.to_string(),
+            "approx".into(),
+            fmt_secs(stats.mean),
+            format!("{recall:.4}"),
+            "-".into(),
+            "graph build".into(),
+        ]);
+    }
+
+    // CI smoke row: a 50k-point approximate build must finish in one
+    // shot and report its audited recall even in the default (non-full)
+    // configuration.
+    {
+        let n = 50_000usize;
+        let pts = cloud(n);
+        let t0 = Instant::now();
+        let (g, recall) =
+            build_graph_from_points(&pts, Metric::Euclidean, k, &GraphBuild::Approx(params), 4)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let recall = recall.expect("approx builds audit");
+        anyhow::ensure!(g.n() == n, "smoke build lost points");
+        builders.stat(format!("build-approx/n={n}"), Stats::from_times(&[dt]));
+        builders.row(vec![
+            n.to_string(),
+            "approx".into(),
+            fmt_secs(dt),
+            format!("{recall:.4}"),
+            "-".into(),
+            "graph build (CI smoke)".into(),
+        ]);
+        println!("smoke: n={n} approx build in {} (recall {recall:.4})", fmt_secs(dt));
+    }
+
+    // Million-point end-to-end row (PALDX_FULL=1): approximate build +
+    // CSR cohesion through the facade — no Θ(n²) buffer anywhere — with
+    // the measured recall reported alongside the truncation bound.
+    if full {
+        let n = 1_000_000usize;
+        let pts = cloud(n);
+        let input = ComputedDistances::new(pts, Metric::Euclidean)?;
+        let mut pald = Pald::builder()
+            .neighborhood(Neighborhood::Knn(k))
+            .graph_build(GraphBuild::Approx(params))
+            .storage(Storage::Csr)
+            .threads(Threads::Fixed(8))
+            .build()?;
+        let t0 = Instant::now();
+        let r = pald.compute(&input)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let recall = r.graph_recall().expect("approx builds audit");
+        let bound = r.truncation_error_bound().expect("sparse runs report a bound");
+        anyhow::ensure!(r.is_sparse(), "million-point row must stay in CSR");
+        builders.stat(format!("end-to-end-approx-csr/n={n}"), Stats::from_times(&[dt]));
+        builders.row(vec![
+            n.to_string(),
+            "approx+csr".into(),
+            fmt_secs(dt),
+            format!("{recall:.4}"),
+            format!("{bound:.4}"),
+            format!("end-to-end cohesion, csr {} bytes", r.cohesion_bytes()),
+        ]);
+        println!(
+            "million-point row: {} end-to-end (recall {recall:.4}, bound {bound:.4})",
+            fmt_secs(dt)
+        );
+    }
+    builders.print();
+
+    match write_json_report(std::path::Path::new("."), "knn", &[&table, &sweep, &builders]) {
         Ok(Some(path)) => println!("wrote {}", path.display()),
         Ok(None) => {}
         Err(e) => eprintln!("could not write BENCH_knn.json: {e}"),

@@ -31,8 +31,9 @@ use crate::coordinator::{Coordinator, Job};
 use crate::data::distmat;
 use crate::io;
 use crate::pald::{
-    Algorithm, Backend, ComputedDistances, CondensedMatrix, DistanceInput, LatencyTrace, Metric,
-    PaldBuilder, PaldConfig, Planner, TieMode, Validation, REGISTRY,
+    build_graph_from_points, Algorithm, AnnParams, Backend, ComputedDistances, CondensedMatrix,
+    DistanceInput, GraphBuild, LatencyTrace, Metric, PaldBuilder, PaldConfig, Planner, Storage,
+    TieMode, Validation, REGISTRY,
 };
 use crate::repro;
 
@@ -46,6 +47,10 @@ COMMANDS:
              [--alg <name>|auto] [--tie strict|split] [--block B] [--block2 B]
              [--threads P] [--k K] [--backend native|xla]
              [--metric euclidean|manhattan|cosine] [--no-validate] [--output <path>]
+             [--build exact|approx] [--storage dense|csr]  sub-quadratic pipeline
+             (approx: RP-forest + NN-descent graph from .vec points, measured
+             recall folded into the mass bound; csr: O(n*k^2) cohesion store,
+             analyses run sparse; both need --k; see `knn` for the --ann-* knobs)
   plan       --n <int> [--threads P] [--tie strict|split] [--k K] [--calibrate]
              print the plan `--alg auto` would execute for this shape
   knn        --n <int> | --input <path.{bin,csv,vec}>   PKNN truncation tooling
@@ -54,6 +59,11 @@ COMMANDS:
              sparse-vs-dense max diff, mass bound, timings; threads: sweep
              1..P over the knn-par kernels, bit-identity asserted against
              the sequential sparse run; DESIGN.md §9-§10)
+             [--build exact|approx] [--storage dense|csr]  approx builder knobs:
+             [--ann-seed S] [--ann-trees T] [--ann-rounds R] [--ann-leaf L]
+             [--audit A]  (seeded RP-forest + NN-descent, deterministic at any
+             thread count; A rows exactly audited -> measured recall; L >= n
+             degenerates to the exact selection; DESIGN.md §11)
   analyze    --input <cohesion.{bin,csv}> [--top K]  strong ties & communities
   convert    --input <path.{bin,csv,vec}> --output <path>  re-encode distances
              (condensed binary by default — half the bytes; --dense for dense)
@@ -122,6 +132,38 @@ fn load_input(args: &Args) -> anyhow::Result<Box<dyn DistanceInput>> {
     }
 }
 
+/// Parse the `--build exact|approx` selector plus the `--ann-*` /
+/// `--audit` tuning knobs of the approximate builder (DESIGN.md §11).
+fn graph_build_from(args: &Args) -> anyhow::Result<GraphBuild> {
+    match args.get_or("build", "exact") {
+        "exact" => Ok(GraphBuild::Exact),
+        "approx" => {
+            let d = AnnParams::default();
+            let knob = |name: &str, default: u32| -> anyhow::Result<u32> {
+                let v = args.get_usize(name, default as usize)?;
+                u32::try_from(v).map_err(|_| anyhow::anyhow!("--{name} {v} is out of range"))
+            };
+            Ok(GraphBuild::Approx(AnnParams {
+                seed: args.get_u64("ann-seed", d.seed)?,
+                trees: knob("ann-trees", d.trees)?,
+                rounds: knob("ann-rounds", d.rounds)?,
+                leaf: knob("ann-leaf", d.leaf)?,
+                audit: knob("audit", d.audit)?,
+            }))
+        }
+        other => anyhow::bail!("unknown graph builder '{other}' (exact|approx)"),
+    }
+}
+
+/// Parse the `--storage dense|csr` cohesion-store selector.
+fn storage_from(args: &Args) -> anyhow::Result<Storage> {
+    match args.get_or("storage", "dense") {
+        "dense" => Ok(Storage::Dense),
+        "csr" => Ok(Storage::Csr),
+        other => anyhow::bail!("unknown storage mode '{other}' (dense|csr)"),
+    }
+}
+
 fn config_from(args: &Args) -> anyhow::Result<PaldConfig> {
     let mut cfg = PaldConfig::default();
     if let Some(alg) = args.get("alg") {
@@ -132,6 +174,8 @@ fn config_from(args: &Args) -> anyhow::Result<PaldConfig> {
     cfg.block2 = args.get_usize("block2", 0)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.k = args.get_usize("k", 0)?;
+    cfg.graph_build = graph_build_from(args)?;
+    cfg.storage = storage_from(args)?;
     cfg.backend = match args.get_or("backend", "native") {
         "native" => Backend::Native,
         "xla" => Backend::Xla,
@@ -187,6 +231,20 @@ fn cmd_compute(args: &Args) -> anyhow::Result<()> {
                 r.total_pairs,
                 r.mass_bound()
             );
+            if let Some(recall) = r.recall {
+                println!("approx build: measured recall {recall:.4}");
+            }
+        }
+        if result.is_sparse() && args.get("output").is_none() {
+            // CSR storage with no file to write: analyses run directly
+            // over the sparse pattern — never densify (DESIGN.md §11).
+            println!(
+                "n={} universal threshold tau={:.6} (csr store, {} bytes)",
+                result.n(),
+                result.universal_threshold(),
+                result.cohesion_bytes()
+            );
+            return Ok(());
         }
         result.into_matrix()
     };
@@ -440,22 +498,37 @@ fn cmd_knn(args: &Args) -> anyhow::Result<()> {
     let n = input.check_shape()?;
     let k = args.get_usize("k", 16)?;
     let mode = args.get_or("mode", "build");
+    let build = graph_build_from(args)?;
     let t0 = Instant::now();
-    let graph = crate::pald::NeighborGraph::from_input(input.as_ref(), k)?;
+    let (graph, recall) = match (build, input.as_points()) {
+        (GraphBuild::Exact, _) => (crate::pald::NeighborGraph::from_input(input.as_ref(), k)?, None),
+        (GraphBuild::Approx(_), Some((pts, metric))) => {
+            let threads = args.get_usize("threads", 1)?.max(1);
+            build_graph_from_points(pts, metric, k, &build, threads)?
+        }
+        (GraphBuild::Approx(_), None) => anyhow::bail!(
+            "--build approx needs point input (.vec, distances computed under --metric); \
+             precomputed distance matrices use --build exact"
+        ),
+    };
     let build_s = t0.elapsed().as_secs_f64();
     let (dmin, dmax) = (0..n).fold((usize::MAX, 0usize), |(lo, hi), i| {
         (lo.min(graph.degree(i)), hi.max(graph.degree(i)))
     });
     println!(
         "knn graph: n={n} k={} (requested {k}) edges={} coverage={:.4} \
-         degree min/mean/max = {dmin}/{:.1}/{dmax} bytes={} built in {}",
+         degree min/mean/max = {dmin}/{:.1}/{dmax} bytes={} built in {} ({})",
         graph.k(),
         graph.edge_count(),
         graph.coverage(),
         graph.mean_degree(),
         graph.allocated_bytes(),
-        crate::bench::fmt_secs(build_s)
+        crate::bench::fmt_secs(build_s),
+        build.name()
     );
+    if let Some(recall) = recall {
+        println!("approx build: measured recall {recall:.4} (sampled exact-kNN audit)");
+    }
     match mode {
         "build" => {}
         "inspect" => {
@@ -502,9 +575,12 @@ fn cmd_knn(args: &Args) -> anyhow::Result<()> {
             let t0 = Instant::now();
             let rs = sparse.compute(input.as_ref())?;
             let sparse_s = t0.elapsed().as_secs_f64();
-            // Dense reference run.
+            // Dense reference run (always the exact dense pipeline —
+            // that is the baseline the truncation is compared against).
             let mut dense_cfg = config;
             dense_cfg.k = 0;
+            dense_cfg.graph_build = GraphBuild::Exact;
+            dense_cfg.storage = Storage::Dense;
             if args.get("alg").is_none() {
                 dense_cfg.algorithm = Algorithm::OptimizedPairwise;
             }
@@ -526,7 +602,10 @@ fn cmd_knn(args: &Args) -> anyhow::Result<()> {
                 rs.effective_k(),
                 rs.truncation_error_bound().unwrap_or(0.0)
             );
-            if graph.is_full() {
+            if let Some(recall) = rs.graph_recall() {
+                println!("  approx build: measured recall {recall:.4}");
+            }
+            if graph.is_full() && build == GraphBuild::Exact {
                 anyhow::ensure!(
                     rs.cohesion().as_slice() == rd.cohesion().as_slice()
                         || rs.cohesion().allclose(rd.cohesion(), 1e-4, 1e-5),
@@ -877,6 +956,63 @@ mod tests {
     #[test]
     fn compute_with_auto_algorithm() {
         run(argv(&["compute", "--n", "32", "--alg", "auto"])).unwrap();
+    }
+
+    /// Write a small clustered `.vec` point cloud for the approx tests.
+    fn write_vec(path: &std::path::Path, n: usize) {
+        let pts = distmat::gaussian_clusters(4, &[n / 2, n - n / 2], &[0.4, 0.4], 6.0, 33);
+        let mut text = String::new();
+        for i in 0..pts.rows() {
+            text.push_str(&format!("w{i}"));
+            for v in pts.row(i) {
+                text.push_str(&format!(" {v}"));
+            }
+            text.push('\n');
+        }
+        std::fs::write(path, text).unwrap();
+    }
+
+    #[test]
+    fn compute_approx_csr_pipeline_from_points() {
+        let dir = tmp_dir();
+        let p = dir.join("approx_pts.vec");
+        write_vec(&p, 60);
+        // End-to-end sub-quadratic pipeline: approx build + CSR store.
+        run(argv(&[
+            "compute", "--input", p.to_str().unwrap(), "--k", "6", "--threads", "2", "--build",
+            "approx", "--ann-seed", "7", "--ann-rounds", "1", "--storage", "csr",
+        ]))
+        .unwrap();
+        // CSR storage alone (exact build) works on any input kind.
+        run(argv(&[
+            "compute", "--input", p.to_str().unwrap(), "--k", "6", "--storage", "csr",
+        ]))
+        .unwrap();
+        // Typed failures: approx needs point input; both need --k.
+        assert!(run(argv(&["compute", "--n", "24", "--k", "4", "--build", "approx"])).is_err());
+        assert!(run(argv(&["compute", "--n", "24", "--storage", "csr"])).is_err());
+        assert!(run(argv(&["compute", "--n", "24", "--storage", "bogus"])).is_err());
+        assert!(run(argv(&["compute", "--n", "24", "--build", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn knn_approx_build_reports_recall() {
+        let dir = tmp_dir();
+        let p = dir.join("knn_approx_pts.vec");
+        write_vec(&p, 48);
+        // leaf >= n brute-forces one leaf: the exact selection, recall 1.
+        run(argv(&[
+            "knn", "--input", p.to_str().unwrap(), "--k", "5", "--build", "approx",
+            "--ann-leaf", "48", "--mode", "compare", "--threads", "1",
+        ]))
+        .unwrap();
+        run(argv(&[
+            "knn", "--input", p.to_str().unwrap(), "--k", "5", "--build", "approx",
+            "--ann-rounds", "2", "--audit", "16",
+        ]))
+        .unwrap();
+        // Approx from a precomputed matrix is a typed refusal.
+        assert!(run(argv(&["knn", "--n", "32", "--k", "4", "--build", "approx"])).is_err());
     }
 
     #[test]

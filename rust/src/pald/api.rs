@@ -174,6 +174,31 @@ pub enum Backend {
     Xla,
 }
 
+/// Where a truncated run keeps its distance and cohesion state
+/// (DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Storage {
+    /// Dense `n × n` matrices end to end — the classic Θ(n²)-memory
+    /// pipeline every dense kernel uses.
+    #[default]
+    Dense,
+    /// CSR sparse state: per-edge distances and a 2-hop-pattern
+    /// cohesion matrix, no Θ(n²) buffer anywhere.  Requires a truncated
+    /// neighborhood (`k > 0`); rejected otherwise with
+    /// [`PaldError::SparseNeedsKnn`].
+    Csr,
+}
+
+impl Storage {
+    /// CLI/plan name of the storage mode.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Storage::Dense => "dense",
+            Storage::Csr => "csr",
+        }
+    }
+}
+
 /// Full configuration for a cohesion computation.
 #[derive(Clone, Debug)]
 pub struct PaldConfig {
@@ -196,6 +221,14 @@ pub struct PaldConfig {
     pub k: usize,
     /// Execution backend (native kernels or the XLA artifact path).
     pub backend: Backend,
+    /// How a truncated run builds its neighbor graph: exact selection,
+    /// or the seeded sub-quadratic approximate builder with a measured
+    /// recall audit (DESIGN.md §11).  `Approx` requires point
+    /// coordinates as input ([`PaldError::ApproxNeedsPoints`]) and a
+    /// truncated neighborhood (`k > 0`).
+    pub graph_build: crate::pald::knn::GraphBuild,
+    /// Distance/cohesion storage of a truncated run (dense or CSR).
+    pub storage: Storage,
 }
 
 impl Default for PaldConfig {
@@ -208,6 +241,8 @@ impl Default for PaldConfig {
             threads: available_threads(),
             k: 0,
             backend: Backend::Native,
+            graph_build: crate::pald::knn::GraphBuild::Exact,
+            storage: Storage::Dense,
         }
     }
 }

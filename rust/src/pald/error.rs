@@ -71,6 +71,18 @@ pub enum PaldError {
         /// How to keep the coordinates and distances aligned.
         hint: &'static str,
     },
+    /// CSR storage or an approximate graph build was requested without
+    /// a truncated neighborhood — the sparse pipeline's state is sized
+    /// by `k`, so `k = 0` (dense semantics) has no sparse equivalent.
+    SparseNeedsKnn,
+    /// An approximate graph build was requested on an input that
+    /// carries no point coordinates (a precomputed distance matrix):
+    /// the RP-forest/NN-descent builder routes points geometrically,
+    /// which a dense matrix cannot support sub-quadratically.
+    ApproxNeedsPoints {
+        /// How to feed the builder coordinates.
+        hint: &'static str,
+    },
     /// A point index outside the `n` points currently held.
     IndexOutOfBounds {
         /// The offending index.
@@ -154,6 +166,16 @@ impl fmt::Display for PaldError {
             }
             PaldError::PointStoreMismatch { hint } => {
                 write!(f, "engine retains point coordinates: {hint}")
+            }
+            PaldError::SparseNeedsKnn => {
+                write!(
+                    f,
+                    "CSR storage / approximate graph builds require a truncated \
+                     neighborhood; set Neighborhood::Knn(k) with k >= 1"
+                )
+            }
+            PaldError::ApproxNeedsPoints { hint } => {
+                write!(f, "approximate graph build needs point coordinates: {hint}")
             }
             PaldError::IndexOutOfBounds { index, n } => {
                 write!(f, "point index {index} out of bounds for {n} points")

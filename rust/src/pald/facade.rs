@@ -12,10 +12,11 @@
 //! and lazy analysis accessors.
 
 use crate::core::Mat;
-use crate::pald::api::{available_threads, Algorithm, Backend, PaldConfig};
+use crate::pald::api::{available_threads, Algorithm, Backend, PaldConfig, Storage};
 use crate::pald::error::PaldError;
 use crate::pald::incremental::IncrementalPald;
 use crate::pald::input::{ComputedDistances, DistanceInput};
+use crate::pald::knn::GraphBuild;
 use crate::pald::result::CohesionResult;
 use crate::pald::session::Session;
 use crate::pald::stream::PointStore;
@@ -89,6 +90,8 @@ pub struct PaldBuilder {
     block2: BlockSize,
     threads: Threads,
     neighborhood: Neighborhood,
+    graph_build: GraphBuild,
+    storage: Storage,
     validation: Validation,
     backend: Backend,
 }
@@ -103,6 +106,8 @@ impl Default for PaldBuilder {
             block2: BlockSize::Auto,
             threads: Threads::Auto,
             neighborhood: Neighborhood::Full,
+            graph_build: GraphBuild::Exact,
+            storage: Storage::Dense,
             validation: Validation::Strict,
             backend: Backend::Native,
         }
@@ -134,6 +139,8 @@ impl PaldBuilder {
                 Threads::Fixed(cfg.threads)
             },
             neighborhood: if cfg.k == 0 { Neighborhood::Full } else { Neighborhood::Knn(cfg.k) },
+            graph_build: cfg.graph_build,
+            storage: cfg.storage,
             validation: Validation::Strict,
             backend: cfg.backend,
         }
@@ -189,6 +196,31 @@ impl PaldBuilder {
         self
     }
 
+    /// How the kNN graph of a truncated run is built:
+    /// [`GraphBuild::Exact`] (Θ(n²) selection, the default) or
+    /// [`GraphBuild::Approx`] (seeded RP-forest + NN-descent with a
+    /// sampled recall audit, sub-quadratic; DESIGN.md §11).  An
+    /// approximate build requires a truncated
+    /// [`neighborhood`](PaldBuilder::neighborhood) (checked at
+    /// [`PaldBuilder::build`]) and point-coordinate input
+    /// ([`ComputedDistances`]; checked per compute with
+    /// [`PaldError::ApproxNeedsPoints`]).
+    pub fn graph_build(mut self, graph_build: GraphBuild) -> PaldBuilder {
+        self.graph_build = graph_build;
+        self
+    }
+
+    /// Where cohesion lands: a dense `n x n` matrix ([`Storage::Dense`],
+    /// the default) or CSR over the truncated pattern ([`Storage::Csr`],
+    /// O(n·k²) worst-case memory instead of Θ(n²); DESIGN.md §11).
+    /// CSR requires a truncated
+    /// [`neighborhood`](PaldBuilder::neighborhood) (checked at
+    /// [`PaldBuilder::build`]).
+    pub fn storage(mut self, storage: Storage) -> PaldBuilder {
+        self.storage = storage;
+        self
+    }
+
     /// Input-validation policy (strict by default).
     pub fn validation(mut self, validation: Validation) -> PaldBuilder {
         self.validation = validation;
@@ -221,6 +253,11 @@ impl PaldBuilder {
             Neighborhood::Knn(0) => return Err(PaldError::InvalidNeighborhood { k: 0 }),
             Neighborhood::Knn(k) => k,
         };
+        // The sparse pipeline's state is sized by k: CSR storage and the
+        // approximate builder both need a truncated neighborhood.
+        if k == 0 && (self.storage == Storage::Csr || self.graph_build != GraphBuild::Exact) {
+            return Err(PaldError::SparseNeedsKnn);
+        }
         let cfg = PaldConfig {
             algorithm,
             tie_mode: self.tie_mode,
@@ -228,6 +265,8 @@ impl PaldBuilder {
             block2,
             threads,
             k,
+            graph_build: self.graph_build,
+            storage: self.storage,
             // Session::new rejects Backend::Xla with UnsupportedBackend.
             backend: self.backend,
         };
@@ -271,6 +310,17 @@ impl Pald {
     /// across calls; repeated same-shape requests replan nothing and
     /// allocate only the output.
     ///
+    /// A facade configured for the sparse pipeline — CSR
+    /// [`storage`](PaldBuilder::storage) and/or an approximate
+    /// [`graph_build`](PaldBuilder::graph_build) — routes through
+    /// [`Session::compute_csr`] instead of a registry kernel: the
+    /// truncated cohesion is evaluated directly over the CSR pattern
+    /// (bit-identical to the dense-output sparse kernels on the same
+    /// graph), and with `Storage::Csr` no Θ(n²) buffer is allocated
+    /// anywhere when the input provides point coordinates.  An
+    /// approximate build with `Storage::Dense` densifies the CSR result
+    /// at the end.
+    ///
     /// [`CondensedMatrix`]: crate::pald::CondensedMatrix
     /// [`ComputedDistances`]: crate::pald::ComputedDistances
     pub fn compute<D: DistanceInput + ?Sized>(
@@ -280,6 +330,21 @@ impl Pald {
         let n = input.check_shape()?;
         if self.validation == Validation::Strict {
             input.validate_strict()?;
+        }
+        let cfg = self.session.config();
+        let (storage, sparse_path) = (
+            cfg.storage,
+            cfg.storage == Storage::Csr || cfg.graph_build != GraphBuild::Exact,
+        );
+        if sparse_path {
+            let plan = self.session.plan_for(n);
+            let (csr, times, report) = self.session.compute_csr(input)?;
+            return Ok(match storage {
+                Storage::Csr => CohesionResult::with_sparse(csr, times, plan, Some(report)),
+                Storage::Dense => {
+                    CohesionResult::with_truncation(csr.to_dense(), times, plan, Some(report))
+                }
+            });
         }
         let plan = self.session.plan_for(n);
         let mut out = Mat::zeros(n, n);
@@ -533,6 +598,62 @@ mod tests {
             r.plan().algorithm.name()
         );
         assert_eq!(r.cohesion().as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn sparse_pipeline_requests_are_validated() {
+        // CSR storage / approximate builds are meaningless without a
+        // truncated neighborhood — rejected at build time.
+        assert!(matches!(
+            Pald::builder().storage(Storage::Csr).build(),
+            Err(PaldError::SparseNeedsKnn)
+        ));
+        assert!(matches!(
+            Pald::builder().graph_build(GraphBuild::Approx(Default::default())).build(),
+            Err(PaldError::SparseNeedsKnn)
+        ));
+        // An approximate build on a precomputed matrix fails per compute
+        // with a typed hint (the RP-forest needs coordinates).
+        let d = distmat::random_tie_free(20, 5);
+        let mut p = Pald::builder()
+            .neighborhood(Neighborhood::Knn(4))
+            .graph_build(GraphBuild::Approx(Default::default()))
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        assert!(matches!(p.compute(&d), Err(PaldError::ApproxNeedsPoints { .. })));
+    }
+
+    #[test]
+    fn csr_storage_matches_the_dense_sparse_result() {
+        let d = distmat::random_tie_free(40, 13);
+        let mut dense = Pald::builder()
+            .algorithm(Algorithm::KnnOptPairwise)
+            .neighborhood(Neighborhood::Knn(6))
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        let want = dense.compute(&d).unwrap();
+        assert!(!want.is_sparse());
+        for threads in [1usize, 3] {
+            let mut sparse = Pald::builder()
+                .neighborhood(Neighborhood::Knn(6))
+                .storage(Storage::Csr)
+                .threads(Threads::Fixed(threads))
+                .build()
+                .unwrap();
+            let r = sparse.compute(&d).unwrap();
+            assert!(r.is_sparse());
+            assert_eq!(r.effective_k(), Some(6));
+            assert_eq!(r.plan().storage, Storage::Csr);
+            assert_eq!(
+                r.cohesion().as_slice(),
+                want.cohesion().as_slice(),
+                "threads={threads}: CSR engine must be bit-identical to the dense sparse kernel"
+            );
+            assert_eq!(r.strong_ties(), want.strong_ties());
+            assert_eq!(r.communities(), want.communities());
+        }
     }
 
     #[test]

@@ -45,6 +45,15 @@ pub trait DistanceInput {
         None
     }
 
+    /// Borrow the underlying point coordinates (and metric) when this
+    /// input has them — what the approximate graph builder and the
+    /// streaming exact builder need to run without ever materializing a
+    /// distance matrix (DESIGN.md §11).  Inputs that only know pairwise
+    /// distances return `None`.
+    fn as_points(&self) -> Option<(&Mat, Metric)> {
+        None
+    }
+
     /// Write the full symmetric `n x n` matrix into `out` (pre-sized
     /// `n x n`; every entry including the diagonal is overwritten).
     fn materialize_into(&self, out: &mut Mat);
@@ -385,6 +394,10 @@ impl DistanceInput for ComputedDistances {
 
     fn input_bytes(&self) -> usize {
         self.points.len() * std::mem::size_of::<f32>()
+    }
+
+    fn as_points(&self) -> Option<(&Mat, Metric)> {
+        Some((&self.points, self.metric))
     }
 
     fn materialize_into(&self, out: &mut Mat) {

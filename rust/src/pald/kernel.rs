@@ -466,7 +466,20 @@ fn knn_cost(n: usize, p: &ExecParams, mp: &MachineParams, penalty: f64) -> f64 {
     let nn = n as f64;
     let ratio = (4.0 * ke * ke / (nn * nn)).min(1.0);
     let build_s = nn * nn / mp.rate_pw_focus;
-    penalty * seq_pairwise_cost(n, p.block, mp) * ratio + build_s
+    let touch_s = knn_touch_cost(nn, ke, 1, NumaMode::ThreadBind, mp);
+    penalty * seq_pairwise_cost(n, p.block, mp) * ratio + build_s + touch_s
+}
+
+/// Streaming charge for the edge-indexed sparse state (~4 words per
+/// edge: the packed edge list plus the `w`/`U` arrays and their awards
+/// traffic), two passes, at the effective per-word DRAM cost of the
+/// NUMA placement the plan records.  Sequentially every page is local
+/// to the one allocating thread (`ThreadBind`); the threaded count
+/// pass first-touches each thread's static edge range, so its pages
+/// follow the `ThreadMemBind` local/remote mix and the per-word cost
+/// drops with the extra bandwidth streams.
+fn knn_touch_cost(n: f64, ke: f64, threads: usize, numa: NumaMode, mp: &MachineParams) -> f64 {
+    2.0 * n * ke * 4.0 * mp.beta_eff(threads, numa)
 }
 
 /// Truncated pairwise, branchy reference rung (fused count + award).
@@ -563,7 +576,11 @@ impl CohesionKernel for KnnOptTripletK {
 /// floor (every thread walks all ~n·k edges and pays the
 /// column-restriction binary searches regardless of how little of each
 /// edge's candidate set it owns — so predicted speedup saturates once
-/// k/p is small).
+/// k/p is small).  The edge-indexed state is streamed under the
+/// `ThreadMemBind` placement the plan records ([`knn_touch_cost`]):
+/// the count pass first-touches each thread's static edge range, so
+/// the per-word cost follows the partitioned local/remote mix rather
+/// than the all-on-socket-0 `ThreadBind` penalty.
 fn knn_par_cost(n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
     let ke = knn::effective_k(p.k, n.max(2)) as f64;
     let nn = n as f64;
@@ -577,8 +594,9 @@ fn knn_par_cost(n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
     } else {
         0.0
     };
+    let touch_s = knn_touch_cost(nn, ke, p.threads.max(1), NumaMode::ThreadMemBind, mp);
     const SPAWN_S: f64 = 1.0e-6;
-    work_s / threads + scan_s + build_s + SPAWN_S * threads
+    work_s / threads + scan_s + build_s + touch_s + SPAWN_S * threads
 }
 
 /// Truncated pairwise, shared-memory parallel rung (DESIGN.md §10):

@@ -1,0 +1,561 @@
+//! CSR sparse storage and the sub-quadratic cohesion engine
+//! (DESIGN.md §11).
+//!
+//! The sparse PKNN kernels in [`kernels`](super::kernels) compute
+//! O(n·k²) *work* but still read a dense Θ(n²) distance matrix and
+//! write a dense Θ(n²) cohesion matrix.  This module removes both:
+//!
+//! * distances live per *conflict edge* (`d_edges`, one f32 per
+//!   symmetrized-graph edge, O(n·k)), recomputed on demand for
+//!   candidates through a [`DistOracle`] — bit-identical to the dense
+//!   read because both go through the same [`metric_pair`];
+//! * support/cohesion live in a [`CsrMatrix`] whose row pattern is the
+//!   closed 2-hop neighborhood `{x} ∪ N(x) ∪ ⋃_{y∈N(x)} N(y)` — every
+//!   cell a sparse award can touch, ≤ `1 + k + k²` per row (the honest
+//!   bound; the "O(n·k)" slogan holds only for the graph, distance,
+//!   and focus stores — the cohesion pattern is O(n·k²) worst case,
+//!   still far below Θ(n²) for k ≪ √n).
+//!
+//! **Bit-identity.**  The award pass is row-parallel: row `x` walks its
+//! graph partners `p` in ascending order and accumulates the row-`x`
+//! side of each edge's award into a per-thread dense scatter buffer,
+//! then gathers the buffer into the CSR row.  In the canonical edge
+//! order (edges sorted by packed `(lo, hi)`), the edges touching row
+//! `x` appear exactly in ascending partner order — all `(p, x)` with
+//! `p < x` first (ascending `p`, since their packed key leads with
+//! `p`), then all `(x, y)` with `y > x` (ascending `y`) — so each cell
+//! receives its f32 contributions in the same order as the sequential
+//! sparse kernels, at any thread count.  The per-candidate arithmetic
+//! replicates the masked kernel formula verbatim, which the kernel
+//! conformance battery pins bit-equal to the branchy reference.
+//!
+//! [`metric_pair`]: crate::pald::input::metric_pair
+
+use std::time::Instant;
+
+use crate::analysis::StrongTie;
+use crate::core::Mat;
+use crate::pald::input::{metric_pair, Metric};
+use crate::pald::knn::graph::NeighborGraph;
+use crate::pald::knn::merge_sorted;
+use crate::pald::workspace::PhaseTimes;
+use crate::pald::{in_focus, TieMode};
+use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
+
+/// Compressed-sparse-row f32 matrix with a symmetric pattern: row `x`
+/// stores its nonzero column indices (ascending) and values.  Cells
+/// outside the pattern are exactly `0.0`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    n: usize,
+    offsets: Vec<usize>,
+    cols: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub(crate) fn new(n: usize, offsets: Vec<usize>, cols: Vec<u32>, vals: Vec<f32>) -> CsrMatrix {
+        debug_assert_eq!(offsets.len(), n + 1);
+        debug_assert_eq!(cols.len(), vals.len());
+        debug_assert_eq!(*offsets.last().unwrap_or(&0), cols.len());
+        CsrMatrix { n, offsets, cols, vals }
+    }
+
+    /// Number of rows (= columns).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Column indices of row `x`, ascending.
+    pub fn row_cols(&self, x: usize) -> &[u32] {
+        &self.cols[self.offsets[x]..self.offsets[x + 1]]
+    }
+
+    /// Values of row `x`, aligned with [`CsrMatrix::row_cols`].
+    pub fn row_vals(&self, x: usize) -> &[f32] {
+        &self.vals[self.offsets[x]..self.offsets[x + 1]]
+    }
+
+    /// Entry `(x, z)`; `0.0` outside the stored pattern.
+    pub fn get(&self, x: usize, z: usize) -> f32 {
+        let cols = self.row_cols(x);
+        match cols.binary_search(&(z as u32)) {
+            Ok(i) => self.row_vals(x)[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Densify (tests, interop, and the dense-compat accessor path —
+    /// this is the one Θ(n²) allocation the sparse pipeline never makes
+    /// on its own).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.n, self.n);
+        for x in 0..self.n {
+            let (cs, vs) = (self.row_cols(x), self.row_vals(x));
+            for (&z, &v) in cs.iter().zip(vs) {
+                m[(x, z as usize)] = v;
+            }
+        }
+        m
+    }
+
+    /// Heap bytes held by the three CSR arrays.
+    pub fn allocated_bytes(&self) -> usize {
+        self.offsets.capacity() * std::mem::size_of::<usize>()
+            + self.cols.capacity() * std::mem::size_of::<u32>()
+            + self.vals.capacity() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Where candidate distances come from on the sparse path.  Both arms
+/// are bit-compatible with the dense pipeline: `Dense` reads the same
+/// matrix cells, `Points` calls the same [`metric_pair`] that
+/// `ComputedDistances::materialize_into` uses to fill that matrix.
+pub(crate) enum DistOracle<'a> {
+    /// Precomputed dense distance matrix (already O(n²) — the CSR value
+    /// here is avoiding a second Θ(n²) output buffer).
+    Dense(&'a Mat),
+    /// Point coordinates + metric; distances computed on demand, so no
+    /// Θ(n²) buffer ever exists.
+    Points(&'a Mat, Metric),
+}
+
+impl DistOracle<'_> {
+    /// Number of points.
+    pub(crate) fn n(&self) -> usize {
+        match self {
+            DistOracle::Dense(d) => d.rows(),
+            DistOracle::Points(p, _) => p.rows(),
+        }
+    }
+
+    #[inline(always)]
+    fn dist(&self, x: usize, y: usize) -> f32 {
+        match self {
+            DistOracle::Dense(d) => d[(x, y)],
+            DistOracle::Points(p, m) => metric_pair(p.row(x), p.row(y), *m),
+        }
+    }
+}
+
+#[inline(always)]
+fn m(cond: bool) -> f32 {
+    if cond {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Closed 2-hop neighborhood of `x` — the exact set of columns the
+/// sparse award pass can touch in row `x`.
+fn build_pattern(g: &NeighborGraph, x: usize, pat: &mut Vec<u32>) {
+    pat.clear();
+    pat.push(x as u32);
+    let nx = g.neighbors(x);
+    pat.extend_from_slice(nx);
+    for &y in nx {
+        pat.extend_from_slice(g.neighbors(y as usize));
+    }
+    pat.sort_unstable();
+    pat.dedup();
+}
+
+/// Sparse PKNN cohesion over `g`, stored CSR end-to-end: per-edge focus
+/// sizes and distances in O(n·k) arrays, support awarded row-parallel
+/// into the 2-hop CSR pattern, then `1/(n-1)` normalization.  Returns
+/// the normalized cohesion; bit-identical to densifying the dense
+/// sparse-kernel output restricted to the pattern (and the off-pattern
+/// cells of that output are exactly `0.0`).
+pub(crate) fn sparse_cohesion_csr(
+    oracle: &DistOracle<'_>,
+    g: &NeighborGraph,
+    tie: TieMode,
+    threads: usize,
+    phases: &mut PhaseTimes,
+) -> CsrMatrix {
+    let n = g.n();
+    debug_assert_eq!(oracle.n(), n);
+    debug_assert!(n >= 2);
+    let threads = threads.max(1);
+    let t0 = Instant::now();
+
+    // Canonical upper-edge CSR: up_off[x] indexes the edges (x, y>x) in
+    // the same (lo, hi)-sorted order the sequential kernels sweep.
+    let mut up_off = vec![0usize; n + 1];
+    for x in 0..n {
+        let nx = g.neighbors(x);
+        let above = nx.len() - nx.partition_point(|&z| (z as usize) < x);
+        up_off[x + 1] = up_off[x] + above;
+    }
+    let ne = up_off[n];
+
+    // Focus (count) pass + per-edge distance store, parallel over rows:
+    // each row owns its upper-edge slots, and focus sizes are integers,
+    // so the result is schedule-independent.
+    let mut d_edges = vec![0.0f32; ne];
+    let mut u_edges = vec![0u32; ne];
+    {
+        let dw = DisjointWriter(d_edges.as_mut_ptr());
+        let uw = DisjointWriter(u_edges.as_mut_ptr());
+        let off: &[usize] = &up_off;
+        parallel_for_ranges(n, threads, Schedule::Static, |_, rows| {
+            let mut cand: Vec<u32> = Vec::new();
+            for x in rows {
+                let nx = g.neighbors(x);
+                let base = off[x];
+                let lo_cnt = nx.len() - (off[x + 1] - off[x]);
+                for (j, &yu) in nx[lo_cnt..].iter().enumerate() {
+                    let y = yu as usize;
+                    let dxy = oracle.dist(x, y);
+                    merge_sorted(nx, g.neighbors(y), &mut cand);
+                    let mut u = 0u32;
+                    for &zu in &cand {
+                        let z = zu as usize;
+                        if in_focus(oracle.dist(x, z), oracle.dist(y, z), dxy, tie) {
+                            u += 1;
+                        }
+                    }
+                    // SAFETY: edge slots [off[x], off[x+1]) belong to
+                    // row x, which this thread alone iterates.
+                    unsafe {
+                        dw.write_at(base + j, dxy);
+                        uw.write_at(base + j, u);
+                    }
+                }
+            }
+        });
+    }
+    phases.focus_s += t0.elapsed().as_secs_f64();
+
+    // Pattern construction: sizes, prefix-sum, fill.  The per-row merge
+    // runs twice (count + fill) to stay allocation-flat and parallel.
+    let t1 = Instant::now();
+    let mut offsets = vec![0usize; n + 1];
+    {
+        let ow = DisjointWriter(offsets.as_mut_ptr());
+        parallel_for_ranges(n, threads, Schedule::Static, |_, rows| {
+            let mut pat: Vec<u32> = Vec::new();
+            for x in rows {
+                build_pattern(g, x, &mut pat);
+                // SAFETY: slot x+1 is written by row x's thread only.
+                unsafe { ow.write_at(x + 1, pat.len()) };
+            }
+        });
+    }
+    for x in 0..n {
+        offsets[x + 1] += offsets[x];
+    }
+    let nnz = offsets[n];
+    let mut cols = vec![0u32; nnz];
+    {
+        let cw = DisjointWriter(cols.as_mut_ptr());
+        let off: &[usize] = &offsets;
+        parallel_for_ranges(n, threads, Schedule::Static, |_, rows| {
+            let mut pat: Vec<u32> = Vec::new();
+            for x in rows {
+                build_pattern(g, x, &mut pat);
+                // SAFETY: cols[off[x]..off[x+1]] belongs to row x.
+                unsafe {
+                    for (j, &z) in pat.iter().enumerate() {
+                        cw.write_at(off[x] + j, z);
+                    }
+                }
+            }
+        });
+    }
+
+    // Award pass, row-parallel with a per-thread dense scatter buffer
+    // (O(n·threads) transient memory — the sub-quadratic replacement
+    // for the dense output matrix).  See the module docs for why the
+    // per-cell accumulation order matches the sequential kernels.
+    let mut vals = vec![0.0f32; nnz];
+    {
+        let vw = DisjointWriter(vals.as_mut_ptr());
+        let off: &[usize] = &offsets;
+        let uoff: &[usize] = &up_off;
+        let cols_ref: &[u32] = &cols;
+        let de: &[f32] = &d_edges;
+        let ue: &[u32] = &u_edges;
+        parallel_for_ranges(n, threads, Schedule::Static, |_, rows| {
+            let mut scatter = vec![0.0f32; n];
+            let mut cand: Vec<u32> = Vec::new();
+            for x in rows {
+                let nx = g.neighbors(x);
+                let lo_cnt = nx.len() - (uoff[x + 1] - uoff[x]);
+                for (pj, &pu) in nx.iter().enumerate() {
+                    let p = pu as usize;
+                    // Canonical id of edge (min, max): for p > x it is
+                    // the (pj - lo_cnt)-th upper edge of x; for p < x,
+                    // find x's rank among p's upper neighbors.
+                    let e = if x < p {
+                        uoff[x] + (pj - lo_cnt)
+                    } else {
+                        let np = g.neighbors(p);
+                        let p_lo = np.len() - (uoff[p + 1] - uoff[p]);
+                        let pos = np.partition_point(|&z| (z as usize) < x);
+                        uoff[p] + (pos - p_lo)
+                    };
+                    let dxy = de[e];
+                    let w = 1.0f32 / ue[e] as f32;
+                    merge_sorted(nx, g.neighbors(p), &mut cand);
+                    // Row x's side of the masked award: x plays `lo`
+                    // (+= rw·s) when x < p, else `hi` (+= rw·(1-s)).
+                    match tie {
+                        TieMode::Strict => {
+                            for &zu in &cand {
+                                let z = zu as usize;
+                                let dxz = oracle.dist(x, z);
+                                let dpz = oracle.dist(p, z);
+                                let (dl, dh) =
+                                    if x < p { (dxz, dpz) } else { (dpz, dxz) };
+                                let r = m(dl < dxy || dh < dxy);
+                                let s = m(dl < dh);
+                                let rw = r * w;
+                                scatter[z] += if x < p { rw * s } else { rw * (1.0 - s) };
+                            }
+                        }
+                        TieMode::Split => {
+                            for &zu in &cand {
+                                let z = zu as usize;
+                                let dxz = oracle.dist(x, z);
+                                let dpz = oracle.dist(p, z);
+                                let (dl, dh) =
+                                    if x < p { (dxz, dpz) } else { (dpz, dxz) };
+                                let r = m(dl <= dxy || dh <= dxy);
+                                let s = m(dl < dh) + 0.5 * m(dl == dh);
+                                let rw = r * w;
+                                scatter[z] += if x < p { rw * s } else { rw * (1.0 - s) };
+                            }
+                        }
+                    }
+                }
+                // Gather the row and re-zero exactly the touched cells.
+                // SAFETY: vals[off[x]..off[x+1]] belongs to row x.
+                unsafe {
+                    for i in off[x]..off[x + 1] {
+                        let z = cols_ref[i] as usize;
+                        vw.write_at(i, scatter[z]);
+                        scatter[z] = 0.0;
+                    }
+                }
+            }
+        });
+    }
+    phases.cohesion_s += t1.elapsed().as_secs_f64();
+
+    // Eq. 3.3 normalization — the same f32 multiply `normalize` applies
+    // to the dense output (off-pattern cells are 0 either way).
+    let t2 = Instant::now();
+    let s = 1.0 / (n as f32 - 1.0);
+    for v in vals.iter_mut() {
+        *v *= s;
+    }
+    phases.normalize_s += t2.elapsed().as_secs_f64();
+    phases.total_s += t0.elapsed().as_secs_f64();
+
+    CsrMatrix::new(n, offsets, cols, vals)
+}
+
+// ---------------------------------------------------------------------
+// Analysis twins over CSR — same definitions as `crate::analysis`, same
+// iteration order, no densification.  Each is bit-identical to calling
+// the dense twin on `to_dense()` (row sums skip only exact zeros, and
+// f32 `x + 0.0 == x` bitwise for the non-negative sums involved).
+// ---------------------------------------------------------------------
+
+/// Universal strong-tie threshold `mean(diag(C)) / 2` over CSR.
+pub fn universal_threshold_csr(c: &CsrMatrix) -> f32 {
+    let n = c.n();
+    let trace: f64 = (0..n).map(|i| f64::from(c.get(i, i))).sum();
+    (trace / n as f64 / 2.0) as f32
+}
+
+/// Local depth `ℓ_x = Σ_z C[x][z]` per point, over CSR rows.
+pub fn local_depths_csr(c: &CsrMatrix) -> Vec<f32> {
+    (0..c.n()).map(|x| c.row_vals(x).iter().sum::<f32>()).collect()
+}
+
+/// Strong ties under the universal threshold, sorted by decreasing
+/// symmetrized strength — only stored (pattern) pairs can exceed the
+/// positive threshold, so the scan is O(nnz·log k).
+pub fn strong_ties_csr(c: &CsrMatrix) -> Vec<StrongTie> {
+    let tau = universal_threshold_csr(c);
+    let mut ties = Vec::new();
+    for a in 0..c.n() {
+        let (cs, vs) = (c.row_cols(a), c.row_vals(a));
+        for (&zu, &cab) in cs.iter().zip(vs) {
+            let b = zu as usize;
+            if b <= a {
+                continue;
+            }
+            let s = cab.min(c.get(b, a));
+            if s > tau {
+                ties.push(StrongTie { a, b, strength: s });
+            }
+        }
+    }
+    ties.sort_by(|x, y| y.strength.partial_cmp(&x.strength).unwrap());
+    ties
+}
+
+/// Community id per point: connected components of the strong-tie
+/// graph, singletons included — same traversal as the dense twin, so
+/// identical ids for an identical tie set.
+pub fn communities_csr(c: &CsrMatrix) -> Vec<usize> {
+    let n = c.n();
+    let mut adj = vec![Vec::new(); n];
+    for tie in strong_ties_csr(c) {
+        adj[tie.a].push(tie.b);
+        adj[tie.b].push(tie.a);
+    }
+    let mut comp = vec![usize::MAX; n];
+    let mut next = 0;
+    let mut stack = Vec::new();
+    for s in 0..n {
+        if comp[s] != usize::MAX {
+            continue;
+        }
+        comp[s] = next;
+        stack.push(s);
+        while let Some(v) = stack.pop() {
+            for &w in &adj[v] {
+                if comp[w] == usize::MAX {
+                    comp[w] = next;
+                    stack.push(w);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::data::distmat;
+    use crate::pald::knn::kernels::sparse_support_parallel_into;
+    use crate::pald::knn::KnnScratch;
+    use crate::pald::normalize;
+
+    /// Dense reference: run the pinned sparse kernels over the same
+    /// graph and normalize, so CSR-vs-dense agreement is exact.
+    fn dense_sparse_reference(d: &Mat, k: usize, tie: TieMode, threads: usize) -> Mat {
+        let n = d.rows();
+        let mut scratch = KnnScratch::new();
+        let mut out = Mat::zeros(n, n);
+        let mut phases = PhaseTimes::default();
+        sparse_support_parallel_into(&mut scratch, d, tie, k, false, threads, &mut out, &mut phases);
+        normalize(&mut out);
+        out
+    }
+
+    fn check_case(n: usize, k: usize, tie: TieMode, seed: u64) {
+        let pts = distmat::gaussian_clusters(5, &[n / 2, n - n / 2], &[0.6, 0.6], 3.0, seed);
+        let d = distmat::euclidean(&pts);
+        let dense = dense_sparse_reference(&d, k, tie, 1);
+        let g = NeighborGraph::build(&d, k).unwrap();
+        for threads in [1usize, 2, 4, 7] {
+            let mut phases = PhaseTimes::default();
+            let csr = sparse_cohesion_csr(
+                &DistOracle::Dense(&d),
+                &g,
+                tie,
+                threads,
+                &mut phases,
+            );
+            let got = csr.to_dense();
+            for x in 0..n {
+                for z in 0..n {
+                    assert!(
+                        got[(x, z)].to_bits() == dense[(x, z)].to_bits(),
+                        "n={n} k={k} tie={tie:?} p={threads} cell ({x},{z}): \
+                         csr={} dense={}",
+                        got[(x, z)],
+                        dense[(x, z)]
+                    );
+                }
+            }
+            // the points oracle must agree bit-for-bit with the dense one
+            let csr_pts = sparse_cohesion_csr(
+                &DistOracle::Points(&pts, Metric::Euclidean),
+                &g,
+                tie,
+                threads,
+                &mut PhaseTimes::default(),
+            );
+            assert_eq!(csr, csr_pts, "points oracle diverged (n={n} k={k} p={threads})");
+        }
+    }
+
+    #[test]
+    fn csr_engine_matches_dense_sparse_kernels_bitwise() {
+        for &(n, k) in &[(12usize, 3usize), (33, 5), (64, 9)] {
+            check_case(n, k, TieMode::Strict, n as u64);
+            check_case(n, k, TieMode::Split, n as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn full_k_csr_pattern_is_dense_and_exact() {
+        // k = n-1: graph complete, pattern dense, values must equal the
+        // dense kernels' (which are themselves pinned to naive dense).
+        check_case(14, 13, TieMode::Split, 99);
+    }
+
+    #[test]
+    fn analysis_twins_match_dense_analysis() {
+        let pts = distmat::gaussian_clusters(6, &[16, 16], &[0.3, 0.3], 7.0, 41);
+        let d = distmat::euclidean(&pts);
+        let g = NeighborGraph::build(&d, 6).unwrap();
+        let csr = sparse_cohesion_csr(
+            &DistOracle::Dense(&d),
+            &g,
+            TieMode::Strict,
+            3,
+            &mut PhaseTimes::default(),
+        );
+        let dense = csr.to_dense();
+        assert_eq!(universal_threshold_csr(&csr), analysis::universal_threshold(&dense));
+        assert_eq!(local_depths_csr(&csr), analysis::local_depths(&dense));
+        assert_eq!(strong_ties_csr(&csr), analysis::strong_ties(&dense));
+        assert_eq!(communities_csr(&csr), analysis::communities(&dense));
+    }
+
+    #[test]
+    fn csr_accessors_and_pattern_shape() {
+        let pts = distmat::gaussian_clusters(4, &[10, 10], &[0.5, 0.5], 4.0, 5);
+        let d = distmat::euclidean(&pts);
+        let g = NeighborGraph::build(&d, 4).unwrap();
+        let csr = sparse_cohesion_csr(
+            &DistOracle::Dense(&d),
+            &g,
+            TieMode::Split,
+            2,
+            &mut PhaseTimes::default(),
+        );
+        assert_eq!(csr.n(), 20);
+        assert!(csr.nnz() < 20 * 20, "pattern should be sparse at k=4");
+        for x in 0..csr.n() {
+            let cols = csr.row_cols(x);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {x} not sorted");
+            assert!(cols.binary_search(&(x as u32)).is_ok(), "diagonal missing in row {x}");
+            assert_eq!(csr.get(x, x), csr.row_vals(x)[cols.binary_search(&(x as u32)).unwrap()]);
+        }
+        assert!(csr.allocated_bytes() > 0);
+        // row sums over CSR match dense row sums (pattern is complete)
+        let dense = csr.to_dense();
+        for x in 0..csr.n() {
+            let s: f32 = csr.row_vals(x).iter().sum();
+            let sd: f32 = dense.row(x).iter().sum();
+            assert_eq!(s.to_bits(), sd.to_bits());
+        }
+    }
+}

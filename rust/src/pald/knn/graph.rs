@@ -175,6 +175,40 @@ impl NeighborGraph {
             }
         }
 
+        self.symmetrize_and_fill(n, edges, cursors);
+    }
+
+    /// Rebuild in place from per-row base lists produced by one of the
+    /// streaming builders in [`ann`](super::ann) (exact-from-points or
+    /// approximate) — the same symmetrize + CSR tail as
+    /// [`NeighborGraph::rebuild`], just fed from lists instead of a
+    /// dense matrix row scan.
+    pub(crate) fn rebuild_from_lists(
+        &mut self,
+        n: usize,
+        lists: &super::ann::BaseLists,
+        scratch: &mut GraphScratch,
+    ) {
+        debug_assert!(n >= 2);
+        self.n = n;
+        self.k = lists.ke;
+        let GraphScratch { sel: _, edges, cursors } = scratch;
+        edges.clear();
+        for i in 0..n {
+            let a = i as u32;
+            for &(_, b) in lists.row(i) {
+                debug_assert!(b != a && (b as usize) < n);
+                let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+                edges.push((u64::from(lo) << 32) | u64::from(hi));
+            }
+        }
+        self.symmetrize_and_fill(n, edges, cursors);
+    }
+
+    /// Shared tail of every builder: sort + dedup the packed edge list
+    /// (leaving it in the canonical order [`GraphScratch::edge_list`]
+    /// documents) and fill the CSR arrays.
+    fn symmetrize_and_fill(&mut self, n: usize, edges: &mut Vec<u64>, cursors: &mut Vec<usize>) {
         // Symmetrize: the undirected edge set, each edge once.
         edges.sort_unstable();
         edges.dedup();

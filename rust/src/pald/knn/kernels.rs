@@ -52,6 +52,9 @@ pub struct KnnReport {
     pub edges: usize,
     /// Conflict pairs a dense computation evaluates: `n(n-1)/2`.
     pub total_pairs: usize,
+    /// Measured recall of the approximate graph build's sampled
+    /// exact-kNN audit (DESIGN.md §11), `None` for exact builds.
+    pub recall: Option<f64>,
 }
 
 impl KnnReport {
@@ -63,13 +66,27 @@ impl KnnReport {
     /// because undercounted foci inflate the surviving weights; this
     /// bound is `0` exactly when the graph is complete, where the
     /// computation is bit-identical to dense.
+    ///
+    /// An approximate build (`recall = Some(r)`) retains the same
+    /// edge-count accounting for the pairs it *did* keep, but its graph
+    /// may have kept the *wrong* pairs: up to a `1 - r` fraction of the
+    /// covered mass could differ from the exact-graph run, so the bound
+    /// widens to `min(1, (1 - covered) + (1 - r)·covered)` — collapsing
+    /// back to the exact bound at measured recall 1.0.
     pub fn mass_bound(&self) -> f64 {
-        1.0 - self.edges as f64 / self.total_pairs.max(1) as f64
+        let covered = self.edges as f64 / self.total_pairs.max(1) as f64;
+        let base = 1.0 - covered;
+        match self.recall {
+            Some(r) => (base + (1.0 - r) * covered).min(1.0),
+            None => base,
+        }
     }
 
     /// Did the computation cover every conflict pair (no truncation)?
+    /// An approximate build is only exact if its audit measured full
+    /// recall.
     pub fn is_exact(&self) -> bool {
-        self.edges == self.total_pairs
+        self.edges == self.total_pairs && self.recall.unwrap_or(1.0) >= 1.0
     }
 }
 
@@ -79,8 +96,11 @@ impl KnnReport {
 /// edge-weight array, and the report of the last truncated run.
 /// Same-shape repeated computations allocate nothing.
 pub(crate) struct KnnScratch {
-    graph: NeighborGraph,
-    gscratch: GraphScratch,
+    /// Symmetrized kNN graph of the current problem — also rebuilt
+    /// directly by the session layer's CSR pipeline (DESIGN.md §11).
+    pub(crate) graph: NeighborGraph,
+    /// Graph-build scratch (selection buffer, packed edges, cursors).
+    pub(crate) gscratch: GraphScratch,
     cand: Vec<u32>,
     w_edges: Vec<f32>,
     /// Edge-indexed integer focus counts (the parallel triplet
@@ -374,7 +394,35 @@ pub(crate) fn sparse_support_into(
     }
 
     let edges = graph.edge_count();
-    scratch.report = Some(KnnReport { effective_k: ke, edges, total_pairs: n * (n - 1) / 2 });
+    scratch.report =
+        Some(KnnReport { effective_k: ke, edges, total_pairs: n * (n - 1) / 2, recall: None });
+}
+
+/// First-touch initialize an edge-indexed buffer in parallel, using the
+/// same static range partition the count pass will sweep (the fig9
+/// NUMA policy carried to the sparse path): under a first-touch OS
+/// policy each thread's edge slots land on its own node, instead of the
+/// whole array faulting on the thread that called `resize`.  Reuses
+/// existing capacity, so steady-state runs keep their placement and
+/// allocate nothing.
+fn first_touch_edges<T: Copy + Send + Sync>(
+    buf: &mut Vec<T>,
+    ne: usize,
+    threads: usize,
+    zero: T,
+) {
+    buf.clear();
+    buf.reserve(ne);
+    let ptr = DisjointWriter(buf.spare_capacity_mut().as_mut_ptr() as *mut T);
+    parallel_for_ranges(ne, threads, Schedule::Static, |_, range| {
+        for e in range {
+            // SAFETY: slot e lies inside the reserved capacity and each
+            // index belongs to exactly one thread's range.
+            unsafe { ptr.write_at(e, zero) };
+        }
+    });
+    // SAFETY: every slot in 0..ne was initialized by the loop above.
+    unsafe { buf.set_len(ne) };
 }
 
 /// Shared-memory parallel truncated support accumulation into `out`
@@ -435,15 +483,13 @@ pub(crate) fn sparse_support_parallel_into(
     if lanes.len() < threads {
         lanes.resize_with(threads, Vec::new);
     }
-    w_edges.clear();
-    w_edges.resize(ne, 0.0);
+    first_touch_edges(w_edges, ne, threads, 0.0f32);
     let w_writer = DisjointWriter(w_edges.as_mut_ptr());
     let lane_ptr = DisjointWriter(lanes.as_mut_ptr());
 
     if two_pass {
         // ---- Focus pass: integer counts, edge-range partitioned. ----
-        u_edges.clear();
-        u_edges.resize(ne, 0);
+        first_touch_edges(u_edges, ne, threads, 0u32);
         let u_writer = DisjointWriter(u_edges.as_mut_ptr());
         parallel_for_ranges(ne, threads, Schedule::Static, |t, range| {
             // SAFETY: the static schedule spawns each thread id once,
@@ -543,8 +589,12 @@ pub(crate) fn sparse_support_parallel_into(
     phases.cohesion_s += t1.elapsed().as_secs_f64();
 
     let edge_count = graph.edge_count();
-    scratch.report =
-        Some(KnnReport { effective_k: ke, edges: edge_count, total_pairs: n * (n - 1) / 2 });
+    scratch.report = Some(KnnReport {
+        effective_k: ke,
+        edges: edge_count,
+        total_pairs: n * (n - 1) / 2,
+        recall: None,
+    });
 }
 
 /// Unnormalized truncated support over an *explicit* graph — the batch
@@ -762,6 +812,20 @@ mod tests {
         let r = scratch.report.unwrap();
         assert!(r.is_exact());
         assert_eq!(r.mass_bound(), 0.0);
+    }
+
+    #[test]
+    fn recall_widens_the_mass_bound() {
+        let r = KnnReport { effective_k: 5, edges: 75, total_pairs: 100, recall: None };
+        assert_eq!(r.mass_bound(), 0.25);
+        let ra = KnnReport { recall: Some(0.9), ..r };
+        assert!((ra.mass_bound() - (0.25 + 0.1 * 0.75)).abs() < 1e-12);
+        assert!(!ra.is_exact());
+        let full = KnnReport { effective_k: 5, edges: 100, total_pairs: 100, recall: Some(1.0) };
+        assert!(full.is_exact());
+        assert_eq!(full.mass_bound(), 0.0);
+        let exact = KnnReport { recall: None, ..full };
+        assert!(exact.is_exact());
     }
 
     #[test]

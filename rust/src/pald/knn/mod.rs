@@ -32,9 +32,27 @@
 //! explicit graph — how the incremental engine's graph-capped updates
 //! are verified.
 
+//! The sub-quadratic extensions (DESIGN.md §11) live alongside:
+//!
+//! * [`ann`] builds the graph *approximately* straight from point
+//!   coordinates (seeded RP-forest + NN-descent, deterministic at any
+//!   thread count) with a measured-recall audit, plus a streaming
+//!   row-parallel exact builder that never materializes a distance
+//!   matrix;
+//! * [`csr`] stores distances per edge and support/cohesion in CSR
+//!   ([`CsrMatrix`]) and runs the whole truncated computation without
+//!   any Θ(n²) buffer, bit-identical to the dense-output sparse
+//!   kernels.
+
+pub mod ann;
+pub mod csr;
 pub mod graph;
 pub mod kernels;
 
+pub use ann::{build_graph_from_points, AnnParams, GraphBuild};
+pub use csr::{
+    communities_csr, local_depths_csr, strong_ties_csr, universal_threshold_csr, CsrMatrix,
+};
 pub(crate) use graph::merge_sorted;
 pub use graph::NeighborGraph;
 pub(crate) use kernels::{

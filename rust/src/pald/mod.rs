@@ -52,6 +52,16 @@
 //! [`CohesionResult::truncation_error_bound`] to see what a run covered,
 //! a graph-capped incremental mode, and `paldx knn` on the CLI.  With
 //! `k = n - 1` the sparse kernels are bit-identical to dense.
+//!
+//! DESIGN.md §11 removes the remaining Θ(n²) terms end to end:
+//! [`PaldBuilder::graph_build`] selects the seeded sub-quadratic
+//! RP-forest + NN-descent builder ([`GraphBuild::Approx`], with a
+//! sampled exact-kNN recall audit feeding
+//! [`CohesionResult::truncation_error_bound`]) and
+//! [`PaldBuilder::storage`] keeps cohesion in CSR ([`Storage::Csr`],
+//! O(n·k²) worst-case memory, analyses evaluated directly over the
+//! sparse pattern) — so a million-point run fits where a dense n²
+//! matrix cannot.
 
 pub mod api;
 pub mod blocked;
@@ -76,7 +86,7 @@ pub mod workspace;
 
 #[allow(deprecated)] // legacy one-shot wrappers, kept for migration
 pub use api::{compute_cohesion, compute_cohesion_into, compute_cohesion_timed};
-pub use api::{plan_for, validate_distances, Algorithm, Backend, PaldConfig, PhaseTimes};
+pub use api::{plan_for, validate_distances, Algorithm, Backend, PaldConfig, PhaseTimes, Storage};
 pub use error::PaldError;
 pub use facade::{BlockSize, Neighborhood, Pald, PaldBuilder, Threads, Validation};
 pub use incremental::{
@@ -84,7 +94,9 @@ pub use incremental::{
 };
 pub use input::{ComputedDistances, CondensedMatrix, DenseMatrix, DistanceInput, Metric};
 pub use kernel::{kernel_by_name, kernel_for, CohesionKernel, ExecParams, KernelMeta, REGISTRY};
-pub use knn::{KnnReport, NeighborGraph};
+pub use knn::{
+    build_graph_from_points, AnnParams, CsrMatrix, GraphBuild, KnnReport, NeighborGraph,
+};
 pub use planner::{Plan, Planner};
 pub use result::CohesionResult;
 pub use session::Session;

@@ -8,10 +8,11 @@
 //! how the paper's guidance — triplet sequentially at large n, pairwise
 //! in parallel — becomes an executable policy instead of a comment.
 
-use crate::pald::api::{Algorithm, PaldConfig};
+use crate::pald::api::{Algorithm, PaldConfig, Storage};
 use crate::pald::kernel::{kernel_for, ExecParams};
+use crate::pald::knn::GraphBuild;
 use crate::pald::TieMode;
-use crate::sim::machine::MachineParams;
+use crate::sim::machine::{MachineParams, NumaMode};
 
 /// A resolved execution plan: concrete kernel + tuned parameters.
 #[derive(Clone, Debug)]
@@ -23,6 +24,30 @@ pub struct Plan {
     /// Machine-model prediction in seconds (`None` when the user pinned
     /// the algorithm and no estimate was computed).
     pub predicted_s: Option<f64>,
+    /// How the neighbor graph is built (exact selection vs the seeded
+    /// RP-forest/NN-descent builder of DESIGN.md §11).
+    pub graph_build: GraphBuild,
+    /// Where cohesion lands: a dense `n x n` matrix or CSR over the
+    /// closed 2-hop pattern (DESIGN.md §11).
+    pub storage: Storage,
+    /// NUMA placement the execution follows.  The threaded kernels that
+    /// range-partition their state first-touch each thread's slice
+    /// (dense D/C panels in the parallel pairwise/hybrid rungs; the
+    /// edge-indexed `w`/`U` arrays in the `knn-par-*` count pass), so
+    /// those plans record `ThreadMemBind`; every other plan's pages land
+    /// wherever the allocating thread sits (`ThreadBind`).
+    pub numa: NumaMode,
+}
+
+/// Placement a resolved (algorithm, threads) pair executes under; see
+/// [`Plan::numa`].
+fn placement(algorithm: Algorithm, threads: usize) -> NumaMode {
+    let parallel = kernel_for(algorithm).map(|k| k.meta().parallel).unwrap_or(false);
+    if threads > 1 && parallel && algorithm != Algorithm::ParallelTriplet {
+        NumaMode::ThreadMemBind
+    } else {
+        NumaMode::ThreadBind
+    }
 }
 
 impl Plan {
@@ -36,16 +61,20 @@ impl Plan {
     /// on dense candidates.
     pub fn from_config(cfg: &PaldConfig) -> Plan {
         let algorithm = if cfg.k > 0 { cfg.algorithm.truncated() } else { cfg.algorithm };
+        let threads = cfg.threads.max(1);
         Plan {
             algorithm,
             params: ExecParams {
                 tie: cfg.tie_mode,
                 block: cfg.block,
                 block2: cfg.block2,
-                threads: cfg.threads.max(1),
+                threads,
                 k: cfg.k,
             },
             predicted_s: None,
+            graph_build: cfg.graph_build,
+            storage: cfg.storage,
+            numa: placement(algorithm, threads),
         }
     }
 
@@ -68,8 +97,19 @@ impl Plan {
             None => String::new(),
         };
         let k = if self.params.k > 0 { format!(" k={}", self.params.k) } else { String::new() };
+        let sparse_state =
+            if self.graph_build != GraphBuild::Exact || self.storage != Storage::Dense {
+                format!(" build={} storage={}", self.graph_build.name(), self.storage.name())
+            } else {
+                String::new()
+            };
+        let numa = if self.params.threads > 1 {
+            format!(" numa={}", self.numa.name())
+        } else {
+            String::new()
+        };
         format!(
-            "algorithm={} block={} block2={} threads={}{k}{}",
+            "algorithm={} block={} block2={} threads={}{k}{sparse_state}{numa}{}",
             self.algorithm.name(),
             self.params.block,
             self.params.block2,
@@ -185,7 +225,14 @@ impl Planner {
         for (alg, params, cost) in self.scored_candidates(n, tie, threads, k) {
             if cost < best_cost || best.is_none() {
                 best_cost = cost;
-                best = Some(Plan { algorithm: alg, params, predicted_s: Some(cost) });
+                best = Some(Plan {
+                    algorithm: alg,
+                    params,
+                    predicted_s: Some(cost),
+                    graph_build: GraphBuild::Exact,
+                    storage: Storage::Dense,
+                    numa: placement(alg, params.threads),
+                });
             }
         }
         best.expect("candidate set is never empty")
@@ -204,6 +251,8 @@ impl Planner {
                 let kernel = kernel_for(plan.algorithm).expect("planned kernel registered");
                 plan.predicted_s = Some(kernel.cost(n, &plan.params, &self.machine));
             }
+            plan.graph_build = cfg.graph_build;
+            plan.storage = cfg.storage;
             plan
         } else {
             Plan::from_config(cfg)
@@ -396,6 +445,40 @@ mod tests {
             "b=8 should predict slower than tuned b={}",
             tuned.params.block
         );
+    }
+
+    #[test]
+    fn plans_record_numa_placement_and_sparse_state() {
+        let p = planner();
+        // Threaded sparse plan: the knn-par count pass first-touches its
+        // edge range partition, so the plan records ThreadMemBind.
+        let plan = p.plan(8192, TieMode::Strict, 16, 16);
+        assert!(kernel_for(plan.algorithm).unwrap().meta().parallel);
+        assert_eq!(plan.numa, NumaMode::ThreadMemBind);
+        assert!(plan.describe().contains("numa=threadmembind"), "{}", plan.describe());
+        // Sequential plans have nothing to partition.
+        let seq = p.plan(1024, TieMode::Strict, 1, 0);
+        assert_eq!(seq.numa, NumaMode::ThreadBind);
+        assert!(!seq.describe().contains("numa="), "{}", seq.describe());
+        // Build/storage requests ride through resolve() and describe().
+        let cfg = PaldConfig {
+            algorithm: Algorithm::Auto,
+            threads: 4,
+            k: 12,
+            graph_build: GraphBuild::Approx(crate::pald::knn::AnnParams::default()),
+            storage: Storage::Csr,
+            ..Default::default()
+        };
+        let resolved = p.resolve(&cfg, 4096);
+        assert_eq!(resolved.storage, Storage::Csr);
+        assert!(matches!(resolved.graph_build, GraphBuild::Approx(_)));
+        let d = resolved.describe();
+        assert!(d.contains("build=approx") && d.contains("storage=csr"), "{d}");
+        // Defaults stay silent.
+        let quiet = Plan::from_config(&PaldConfig::default());
+        assert_eq!(quiet.graph_build, GraphBuild::Exact);
+        assert_eq!(quiet.storage, Storage::Dense);
+        assert!(!quiet.describe().contains("build="), "{}", quiet.describe());
     }
 
     #[test]

@@ -3,24 +3,50 @@
 //!
 //! Instead of returning a bare [`Mat`] and leaving callers to hunt down
 //! the free functions in [`crate::analysis`], a [`CohesionResult`] owns
-//! the cohesion matrix, the [`PhaseTimes`] breakdown, and the [`Plan`]
+//! the cohesion state, the [`PhaseTimes`] breakdown, and the [`Plan`]
 //! that produced it, and lazily caches the standard derived quantities —
 //! the universal strong-tie threshold, the strong ties themselves, local
 //! depths, and communities — so repeated accessor calls cost one
 //! computation total.
+//!
+//! The cohesion state itself has two shapes (DESIGN.md §11): the dense
+//! `n x n` [`Mat`] every Θ(n²)-storage run produces, and the CSR
+//! [`CsrMatrix`] of a `Storage::Csr` run, which holds only the closed
+//! 2-hop pattern of the truncated computation at O(n·k²) worst-case
+//! memory.  Derived analyses run *directly over CSR* — out-of-pattern
+//! cells are exact zeros, which can never be strong ties (`tau > 0`)
+//! and contribute nothing to depth sums — so a sparse result never
+//! densifies unless the caller explicitly asks for the matrix via
+//! [`CohesionResult::cohesion`] / [`CohesionResult::into_matrix`]
+//! (which materialize lazily, once).
 
 use std::sync::OnceLock;
 
 use crate::analysis;
 use crate::analysis::StrongTie;
 use crate::core::Mat;
-use crate::pald::knn::KnnReport;
+use crate::pald::knn::{
+    communities_csr, local_depths_csr, strong_ties_csr, universal_threshold_csr, CsrMatrix,
+    KnnReport,
+};
 use crate::pald::planner::Plan;
 use crate::pald::workspace::PhaseTimes;
 
+/// Where the cohesion values of one result actually live.
+enum Store {
+    /// Dense row-major `n x n` matrix.
+    Dense(Mat),
+    /// CSR over the closed 2-hop neighborhood pattern; every cell
+    /// outside the pattern is an exact `+0.0`.
+    Csr(CsrMatrix),
+}
+
 /// The outcome of one cohesion computation.
 pub struct CohesionResult {
-    cohesion: Mat,
+    store: Store,
+    /// Lazily materialized dense view of a CSR store (unused for dense
+    /// stores).
+    dense_cache: OnceLock<Mat>,
     times: PhaseTimes,
     plan: Plan,
     knn: Option<KnnReport>,
@@ -31,16 +57,15 @@ pub struct CohesionResult {
 }
 
 impl CohesionResult {
-    /// Result with the truncation report of a sparse PKNN run attached
-    /// (`None` for dense runs).
-    pub(crate) fn with_truncation(
-        cohesion: Mat,
+    fn from_store(
+        store: Store,
         times: PhaseTimes,
         plan: Plan,
         knn: Option<KnnReport>,
     ) -> CohesionResult {
         CohesionResult {
-            cohesion,
+            store,
+            dense_cache: OnceLock::new(),
             times,
             plan,
             knn,
@@ -51,20 +76,83 @@ impl CohesionResult {
         }
     }
 
+    /// Result with the truncation report of a sparse PKNN run attached
+    /// (`None` for dense runs).
+    pub(crate) fn with_truncation(
+        cohesion: Mat,
+        times: PhaseTimes,
+        plan: Plan,
+        knn: Option<KnnReport>,
+    ) -> CohesionResult {
+        Self::from_store(Store::Dense(cohesion), times, plan, knn)
+    }
+
+    /// Result whose cohesion lives in CSR (a `Storage::Csr` run).
+    pub(crate) fn with_sparse(
+        cohesion: CsrMatrix,
+        times: PhaseTimes,
+        plan: Plan,
+        knn: Option<KnnReport>,
+    ) -> CohesionResult {
+        Self::from_store(Store::Csr(cohesion), times, plan, knn)
+    }
+
     /// Number of points.
     pub fn n(&self) -> usize {
-        self.cohesion.rows()
+        match &self.store {
+            Store::Dense(m) => m.rows(),
+            Store::Csr(c) => c.n(),
+        }
     }
 
     /// The cohesion matrix `C` (row `x` holds the support `x` lends each
     /// other point, Eq. 3.3-normalized).
+    ///
+    /// For a CSR result this *materializes* the dense `n x n` view on
+    /// first call (cached afterwards) — an O(n²) allocation the sparse
+    /// pipeline otherwise avoids; prefer
+    /// [`sparse_cohesion`](CohesionResult::sparse_cohesion) and the
+    /// derived accessors, which stay within the CSR pattern.
     pub fn cohesion(&self) -> &Mat {
-        &self.cohesion
+        match &self.store {
+            Store::Dense(m) => m,
+            Store::Csr(c) => self.dense_cache.get_or_init(|| c.to_dense()),
+        }
     }
 
-    /// Unwrap the cohesion matrix, dropping the caches.
+    /// The CSR cohesion of a `Storage::Csr` run (`None` for dense
+    /// results).
+    pub fn sparse_cohesion(&self) -> Option<&CsrMatrix> {
+        match &self.store {
+            Store::Dense(_) => None,
+            Store::Csr(c) => Some(c),
+        }
+    }
+
+    /// `true` when the cohesion is stored in CSR.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.store, Store::Csr(_))
+    }
+
+    /// Bytes held by the cohesion store itself (the CSR arrays, or the
+    /// dense matrix) — excludes any lazily materialized dense view.
+    pub fn cohesion_bytes(&self) -> usize {
+        match &self.store {
+            Store::Dense(m) => m.len() * std::mem::size_of::<f32>(),
+            Store::Csr(c) => c.allocated_bytes(),
+        }
+    }
+
+    /// Unwrap the cohesion matrix, dropping the caches (densifies a CSR
+    /// result).
     pub fn into_matrix(self) -> Mat {
-        self.cohesion
+        match self.store {
+            Store::Dense(m) => m,
+            Store::Csr(c) => match self.dense_cache.into_inner() {
+                Some(m) => m,
+                None => c.to_dense(),
+            },
+        }
     }
 
     /// Phase timing breakdown of the computation that produced this
@@ -87,17 +175,25 @@ impl CohesionResult {
     }
 
     /// Upper bound on the truncation-induced support-mass deficit
-    /// relative to the dense computation: `1 - edges/total_pairs`,
-    /// exactly `0.0` when the graph was complete (`k >= n - 1`, where
-    /// the result is bit-identical to dense) and `None` for dense runs.
-    /// See [`KnnReport::mass_bound`](crate::pald::KnnReport::mass_bound)
+    /// relative to the dense computation: `1 - edges/total_pairs` plus
+    /// the measured-recall correction of an approximate build (DESIGN.md
+    /// §11); exactly `0.0` when the graph was complete and exact
+    /// (`k >= n - 1`, recall 1), `None` for dense runs.  See
+    /// [`KnnReport::mass_bound`](crate::pald::KnnReport::mass_bound)
     /// for what the bound does and does not cover.
     pub fn truncation_error_bound(&self) -> Option<f64> {
         self.knn.map(|r| r.mass_bound())
     }
 
+    /// Measured recall of the approximate graph build's sampled
+    /// exact-kNN audit (`None` for exact builds and dense runs).
+    pub fn graph_recall(&self) -> Option<f64> {
+        self.knn.and_then(|r| r.recall)
+    }
+
     /// Full truncation report of a sparse run (effective k, conflict
-    /// pairs covered, dense pair total), `None` for dense runs.
+    /// pairs covered, dense pair total, measured recall), `None` for
+    /// dense runs.
     pub fn knn_report(&self) -> Option<KnnReport> {
         self.knn
     }
@@ -105,24 +201,36 @@ impl CohesionResult {
     /// The universal strong-tie threshold `mean(diag(C)) / 2` of
     /// Berenhaut et al. — computed once, cached.
     pub fn universal_threshold(&self) -> f32 {
-        *self.tau.get_or_init(|| analysis::universal_threshold(&self.cohesion))
+        *self.tau.get_or_init(|| match &self.store {
+            Store::Dense(m) => analysis::universal_threshold(m),
+            Store::Csr(c) => universal_threshold_csr(c),
+        })
     }
 
     /// Strong ties under the universal threshold, sorted by decreasing
     /// symmetrized strength — computed once, cached.
     pub fn strong_ties(&self) -> &[StrongTie] {
-        self.ties.get_or_init(|| analysis::strong_ties(&self.cohesion))
+        self.ties.get_or_init(|| match &self.store {
+            Store::Dense(m) => analysis::strong_ties(m),
+            Store::Csr(c) => strong_ties_csr(c),
+        })
     }
 
     /// Local depth `ℓ_x = Σ_z C[x][z]` per point — computed once, cached.
     pub fn local_depths(&self) -> &[f32] {
-        self.depths.get_or_init(|| analysis::local_depths(&self.cohesion))
+        self.depths.get_or_init(|| match &self.store {
+            Store::Dense(m) => analysis::local_depths(m),
+            Store::Csr(c) => local_depths_csr(c),
+        })
     }
 
     /// Community id per point (connected components of the strong-tie
     /// graph, singletons included) — computed once, cached.
     pub fn communities(&self) -> &[usize] {
-        self.comms.get_or_init(|| analysis::communities(&self.cohesion))
+        self.comms.get_or_init(|| match &self.store {
+            Store::Dense(m) => analysis::communities(m),
+            Store::Csr(c) => communities_csr(c),
+        })
     }
 
     /// Number of distinct communities.
@@ -152,6 +260,8 @@ mod tests {
     fn accessors_agree_with_free_functions() {
         let r = result_for(30, 7);
         assert_eq!(r.n(), 30);
+        assert!(!r.is_sparse());
+        assert!(r.sparse_cohesion().is_none());
         assert_eq!(r.universal_threshold(), analysis::universal_threshold(r.cohesion()));
         assert_eq!(r.strong_ties(), &analysis::strong_ties(r.cohesion())[..]);
         assert_eq!(r.local_depths(), &analysis::local_depths(r.cohesion())[..]);
@@ -169,5 +279,38 @@ mod tests {
         assert_eq!(a, b, "second call must return the cached slice");
         let c = r.into_matrix();
         assert_eq!(c.rows(), 24);
+    }
+
+    #[test]
+    fn sparse_store_densifies_lazily_and_consistently() {
+        use crate::pald::knn::csr::{sparse_cohesion_csr, DistOracle};
+        use crate::pald::knn::NeighborGraph;
+        use crate::pald::workspace::PhaseTimes;
+
+        let n = 40;
+        let d = distmat::random_tie_free(n, 11);
+        let mut g = NeighborGraph::empty();
+        let mut gs = crate::pald::knn::graph::GraphScratch::default();
+        g.rebuild(&d, 6, &mut gs);
+        let mut phases = PhaseTimes::default();
+        let csr =
+            sparse_cohesion_csr(&DistOracle::Dense(&d), &g, crate::pald::TieMode::Strict, 1, &mut phases);
+        let cfg = PaldConfig { algorithm: Algorithm::KnnOptPairwise, threads: 1, k: 6, ..Default::default() };
+        let r = CohesionResult::with_sparse(csr.clone(), phases, Plan::from_config(&cfg), None);
+        assert!(r.is_sparse());
+        assert_eq!(r.n(), n);
+        assert_eq!(r.sparse_cohesion().unwrap().nnz(), csr.nnz());
+        assert!(r.cohesion_bytes() < n * n * std::mem::size_of::<f32>());
+        // Derived analyses over CSR match the densified view exactly.
+        let dense = csr.to_dense();
+        assert_eq!(r.universal_threshold(), analysis::universal_threshold(&dense));
+        assert_eq!(r.strong_ties(), &analysis::strong_ties(&dense)[..]);
+        assert_eq!(r.local_depths(), &analysis::local_depths(&dense)[..]);
+        assert_eq!(r.communities(), &analysis::communities(&dense)[..]);
+        // cohesion() materializes the same dense view, once.
+        assert_eq!(r.cohesion().as_slice(), dense.as_slice());
+        let p1 = r.cohesion().as_slice().as_ptr();
+        assert_eq!(p1, r.cohesion().as_slice().as_ptr());
+        assert_eq!(r.into_matrix().as_slice(), dense.as_slice());
     }
 }

@@ -8,11 +8,14 @@
 //! re-plans only on shape changes and allocates nothing after the first
 //! request except each call's output matrix.
 
+use std::time::Instant;
+
 use crate::core::Mat;
 use crate::pald::api::{self, Backend, PaldConfig, PhaseTimes};
 use crate::pald::error::PaldError;
 use crate::pald::input::DistanceInput;
-use crate::pald::knn::KnnReport;
+use crate::pald::knn::csr::{sparse_cohesion_csr, DistOracle};
+use crate::pald::knn::{ann, CsrMatrix, GraphBuild, KnnReport};
 use crate::pald::planner::Plan;
 use crate::pald::workspace::Workspace;
 
@@ -98,6 +101,102 @@ impl Session {
     /// re-checked per item.
     pub fn compute_batch<D: DistanceInput>(&mut self, inputs: &[D]) -> Result<Vec<Mat>, PaldError> {
         inputs.iter().map(|d| self.compute(d)).collect()
+    }
+
+    /// Run the end-to-end sparse pipeline (DESIGN.md §11): build the
+    /// neighbor graph per the configured
+    /// [`GraphBuild`](crate::pald::GraphBuild) (reusing the session's
+    /// graph + scratch across same-shape calls), evaluate the truncated
+    /// cohesion *directly in CSR*, and return it with the phase times
+    /// and the truncation report (measured recall attached for
+    /// approximate builds).
+    ///
+    /// With point-coordinate input ([`ComputedDistances`]) no Θ(n²)
+    /// buffer is touched anywhere on this path: the graph build streams
+    /// row neighborhoods, the oracle recomputes distances per pair, and
+    /// the output pattern is the closed 2-hop neighborhood (O(n·k²)
+    /// worst case).  Dense and condensed inputs are themselves Θ(n²),
+    /// so the exact build just reads them (condensed inputs are
+    /// materialized once into the session buffer).
+    ///
+    /// [`ComputedDistances`]: crate::pald::ComputedDistances
+    pub fn compute_csr<D: DistanceInput + ?Sized>(
+        &mut self,
+        input: &D,
+    ) -> Result<(CsrMatrix, PhaseTimes, KnnReport), PaldError> {
+        let n = input.check_shape()?;
+        if n < 2 {
+            return Err(PaldError::TooSmall { n });
+        }
+        if self.cfg.k == 0 {
+            return Err(PaldError::SparseNeedsKnn);
+        }
+        let plan = self.plan_for(n);
+        let threads = plan.params.threads.max(1);
+        let tie = plan.params.tie;
+        let t_start = Instant::now();
+        self.ws.reset_phases();
+
+        // Graph build (+ measured-recall audit for approximate builds).
+        let points = input.as_points();
+        let mut recall = None;
+        match (self.cfg.graph_build, points) {
+            (GraphBuild::Approx(params), Some((pts, metric))) => {
+                let (lists, r) = ann::build_ann_lists(pts, metric, self.cfg.k, &params, threads);
+                let ks = &mut self.ws.knn;
+                ks.graph.rebuild_from_lists(n, &lists, &mut ks.gscratch);
+                recall = Some(r);
+            }
+            (GraphBuild::Approx(_), None) => {
+                return Err(PaldError::ApproxNeedsPoints {
+                    hint: "feed ComputedDistances (points + metric), or use GraphBuild::Exact \
+                           for precomputed distance matrices",
+                });
+            }
+            (GraphBuild::Exact, Some((pts, metric))) => {
+                // Streaming exact build: row-parallel selection straight
+                // from coordinates, no distance matrix.
+                let lists = ann::exact_lists_from_points(pts, metric, self.cfg.k, threads);
+                let ks = &mut self.ws.knn;
+                ks.graph.rebuild_from_lists(n, &lists, &mut ks.gscratch);
+            }
+            (GraphBuild::Exact, None) => {
+                if input.as_dense().is_none()
+                    && (self.dense.rows() != n || self.dense.cols() != n)
+                {
+                    self.dense = Mat::zeros(n, n);
+                }
+                if input.as_dense().is_none() {
+                    input.materialize_into(&mut self.dense);
+                }
+                let d = match input.as_dense() {
+                    Some(d) => d,
+                    None => &self.dense,
+                };
+                let ks = &mut self.ws.knn;
+                ks.graph.rebuild(d, self.cfg.k, &mut ks.gscratch);
+            }
+        }
+
+        // Truncated cohesion straight into CSR (bit-identical to the
+        // dense-output sparse kernels over the same graph).
+        let dense_input = input.as_dense();
+        let Workspace { knn: ks, phases, .. } = &mut self.ws;
+        let oracle = match points {
+            Some((pts, metric)) => DistOracle::Points(pts, metric),
+            None => DistOracle::Dense(dense_input.unwrap_or(&self.dense)),
+        };
+        let csr = sparse_cohesion_csr(&oracle, &ks.graph, tie, threads, phases);
+
+        let report = KnnReport {
+            effective_k: ks.graph.k(),
+            edges: ks.graph.edge_count(),
+            total_pairs: n * (n - 1) / 2,
+            recall,
+        };
+        ks.report = Some(report);
+        phases.total_s = t_start.elapsed().as_secs_f64();
+        Ok((csr, *phases, report))
     }
 
     /// Phase timings recorded by the most recent computation.

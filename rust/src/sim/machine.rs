@@ -31,6 +31,17 @@ pub enum NumaMode {
     ThreadMemBind,
 }
 
+impl NumaMode {
+    /// Short lowercase name (plan descriptions, bench reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NumaMode::None => "none",
+            NumaMode::ThreadBind => "threadbind",
+            NumaMode::ThreadMemBind => "threadmembind",
+        }
+    }
+}
+
 /// Machine constants.  All rates are single-core; parallel behaviour is
 /// derived, not assumed.
 #[derive(Clone, Debug)]

@@ -23,6 +23,14 @@
 //! cases assert run-to-run bit-stability and the mutual agreement of
 //! the branchy sparse orderings instead of reference agreement.
 //!
+//! The same battery also drives the incremental engine's update-kernel
+//! registry ([`UPDATE_KERNELS`](crate::pald::UPDATE_KERNELS)) via
+//! [`check_update_kernel_conformance`]: per-pair focus counts bit-exact
+//! against an independent O(n) sweep, per-pair award sums bit-identical
+//! across flavors, tilings, and range splits wherever the pair weight
+//! is finite (the strict-mode duplicate-pair `w = ∞` caveat mirrors the
+//! batch kernels' undefined case and is pinned to bit-stability only).
+//!
 //! The thread budgets the battery runs at come from the
 //! `PALD_TEST_THREADS` environment variable (comma-separated, e.g.
 //! `PALD_TEST_THREADS=1,2,4,8` — the CI thread-matrix job), defaulting
@@ -32,8 +40,8 @@ use crate::core::Mat;
 use crate::data::distmat;
 use crate::pald::knn::{cohesion_over_graph, focus_sizes_over_graph, NeighborGraph};
 use crate::pald::{
-    in_focus, naive, normalize, Algorithm, CohesionKernel, ExecParams, TieMode, Workspace,
-    REGISTRY,
+    in_focus, naive, normalize, Algorithm, CohesionKernel, ExecParams, TieMode, UpdateKernel,
+    Workspace, REGISTRY, UPDATE_KERNELS,
 };
 
 /// Documented cross-kernel relative cohesion tolerance (f32 summation
@@ -174,6 +182,14 @@ fn assert_bits_eq(a: &Mat, b: &Mat, ctx: &str) {
             x.to_bits() == y.to_bits(),
             "{ctx}: bit mismatch at flat index {i}: {x} vs {y}"
         );
+    }
+}
+
+/// Bit-level f64 slice equality (NaN-safe, like [`assert_bits_eq`]).
+fn assert_f64_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{ctx}: bit mismatch at index {i}: {x} vs {y}");
     }
 }
 
@@ -335,6 +351,106 @@ pub fn check_kernel_conformance(threads: usize) {
                         "{ctx_base} {}: k=n-1 must be bit-identical to dense",
                         kernel.name()
                     );
+                }
+            }
+        }
+    }
+}
+
+/// Run one update-kernel flavor over a pair's full z-range with the
+/// given tiling and return the two award-sum vectors.
+#[allow(clippy::too_many_arguments)]
+fn run_update_kernel(
+    kernel: &dyn UpdateKernel,
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    w: f64,
+    block: usize,
+    split: Option<usize>,
+    tie: TieMode,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = dx.len();
+    let mut sx = vec![0.0f64; n];
+    let mut sy = vec![0.0f64; n];
+    match split {
+        None => kernel.award(dx, dy, dxy, w, &mut sx, &mut sy, 0, n, block, tie),
+        Some(mid) => {
+            kernel.award(dx, dy, dxy, w, &mut sx, &mut sy, 0, mid, block, tie);
+            kernel.award(dx, dy, dxy, w, &mut sx, &mut sy, mid, n, block, tie);
+        }
+    }
+    (sx, sy)
+}
+
+/// Conformance battery for the incremental update-kernel registry
+/// (DESIGN.md §8): both registered flavors (`reference`,
+/// `blocked-branchfree`) run over every pair of every batch-battery
+/// case, asserting
+///
+/// * **focus counts bit-exact**: every flavor's `count_focus` matches
+///   the independent O(n³) dense sweep ([`naive_focus_sizes`]) on every
+///   pair — including the strict-mode duplicate cases, where the count
+///   itself stays well-defined;
+/// * **award sums bit-identical across flavors** wherever the pair
+///   weight `w = 1/u_xy` is finite (the trait's documented contract:
+///   masks multiply `w` by exactly 0, 0.5, or 1), and invariant under
+///   tiling (`block` ∈ {1, 3, 8, n}) and z-range splitting;
+/// * the strict-mode duplicate pairs with `u_xy = 0` (so `w = ∞`) are
+///   the update twin of the batch kernels' 0·∞ caveat: the branchy
+///   reference must leave the sums untouched and the masked flavor must
+///   be run-to-run bit-stable (its NaNs are deterministic).
+pub fn check_update_kernel_conformance() {
+    for case in battery() {
+        let d = &case.d;
+        let n = d.rows();
+        let uref = naive_focus_sizes(d, case.tie);
+        for x in 0..n {
+            for y in (x + 1)..n {
+                let (dx, dy) = (d.row(x), d.row(y));
+                let dxy = d[(x, y)];
+                let u = uref[(x, y)] as u32;
+                let ctx = format!("{} pair=({x},{y})", case.name);
+                for kernel in UPDATE_KERNELS {
+                    assert_eq!(
+                        kernel.count_focus(dx, dy, dxy, case.tie),
+                        u,
+                        "{ctx} {}: count_focus diverged from the independent sweep",
+                        kernel.name()
+                    );
+                }
+                let w = if u > 0 { 1.0 / f64::from(u) } else { f64::INFINITY };
+                if u == 0 {
+                    // Strict-mode duplicate pair: w = ∞, undefined for
+                    // the masked flavor (0 · ∞ = NaN).  Reference must
+                    // award nothing; masked must be bit-stable.
+                    let (sx, sy) =
+                        run_update_kernel(UPDATE_KERNELS[0], dx, dy, dxy, w, 8, None, case.tie);
+                    assert!(
+                        sx.iter().chain(&sy).all(|&v| v == 0.0),
+                        "{ctx}: reference awarded support outside an empty focus"
+                    );
+                    let masked = UPDATE_KERNELS[1];
+                    let a = run_update_kernel(masked, dx, dy, dxy, w, 8, None, case.tie);
+                    let b = run_update_kernel(masked, dx, dy, dxy, w, 8, None, case.tie);
+                    assert_f64_bits_eq(&a.0, &b.0, &format!("{ctx} masked repeat sx"));
+                    assert_f64_bits_eq(&a.1, &b.1, &format!("{ctx} masked repeat sy"));
+                    continue;
+                }
+                let want = run_update_kernel(UPDATE_KERNELS[0], dx, dy, dxy, w, 8, None, case.tie);
+                for kernel in UPDATE_KERNELS {
+                    for block in [1usize, 3, 8, n] {
+                        for split in [None, Some(n / 2)] {
+                            let got =
+                                run_update_kernel(kernel, dx, dy, dxy, w, block, split, case.tie);
+                            let kctx = format!(
+                                "{ctx} {} block={block} split={split:?}",
+                                kernel.name()
+                            );
+                            assert_f64_bits_eq(&got.0, &want.0, &format!("{kctx} sx"));
+                            assert_f64_bits_eq(&got.1, &want.1, &format!("{kctx} sy"));
+                        }
+                    }
                 }
             }
         }

@@ -1,0 +1,144 @@
+//! ANN graph-builder acceptance (ISSUE 6, DESIGN.md §11): seeded
+//! determinism of the RP-forest + NN-descent build, monotonicity of the
+//! measured recall in the search budget, and the exactness anchor —
+//! a full-recall approximate build is bit-identical, end to end, to the
+//! exact builder.
+
+use paldx::data::distmat;
+use paldx::pald::{
+    build_graph_from_points, AnnParams, ComputedDistances, GraphBuild, Metric, Neighborhood,
+    Pald, PaldBuilder, Storage, Threads,
+};
+
+/// Two well-separated Gaussian clusters (`n1 + n2` points, dim 6).
+fn clustered(n1: usize, n2: usize, seed: u64) -> paldx::core::Mat {
+    distmat::gaussian_clusters(6, &[n1, n2], &[0.3, 0.3], 8.0, seed)
+}
+
+fn sparse_builder(k: usize, build: GraphBuild, storage: Storage, threads: usize) -> PaldBuilder {
+    Pald::builder()
+        .neighborhood(Neighborhood::Knn(k))
+        .graph_build(build)
+        .storage(storage)
+        .threads(Threads::Fixed(threads))
+}
+
+/// Same seed ⇒ the same graph and the same audit, bit for bit, at any
+/// thread count — and the same cohesion through the full Approx + CSR
+/// facade pipeline.
+#[test]
+fn seeded_ann_pipeline_is_deterministic_across_thread_counts() {
+    let pts = clustered(70, 66, 41);
+    let params = AnnParams { seed: 9, trees: 3, rounds: 2, leaf: 24, audit: 32 };
+    let build = GraphBuild::Approx(params);
+
+    let (g1, r1) = build_graph_from_points(&pts, Metric::Euclidean, 8, &build, 1).unwrap();
+    let rows1: Vec<Vec<u32>> = (0..g1.n()).map(|i| g1.neighbors(i).to_vec()).collect();
+    for threads in [2usize, 4] {
+        let (g2, r2) =
+            build_graph_from_points(&pts, Metric::Euclidean, 8, &build, threads).unwrap();
+        let rows2: Vec<Vec<u32>> = (0..g2.n()).map(|i| g2.neighbors(i).to_vec()).collect();
+        assert_eq!(rows1, rows2, "graph changed at p={threads}");
+        assert_eq!(r1, r2, "audit changed at p={threads}");
+    }
+
+    let input = ComputedDistances::new(pts, Metric::Euclidean).unwrap();
+    let mut want: Option<Vec<u32>> = None;
+    for threads in [1usize, 3] {
+        let mut pald = sparse_builder(8, build, Storage::Csr, threads).build().unwrap();
+        let r = pald.compute(&input).unwrap();
+        assert!(r.is_sparse(), "CSR storage was requested");
+        assert_eq!(r.graph_recall(), r1, "facade must surface the audit recall");
+        let bits: Vec<u32> = r.cohesion().as_slice().iter().map(|v| v.to_bits()).collect();
+        match &want {
+            None => want = Some(bits),
+            Some(w) => assert_eq!(&bits, w, "cohesion bits changed at p={threads}"),
+        }
+    }
+}
+
+/// The measured recall is monotone in the NN-descent search budget
+/// (`rounds`), and a single-leaf forest (`leaf >= n`) audits at exactly
+/// recall 1.0.
+#[test]
+fn measured_recall_is_monotone_in_search_budget() {
+    let pts = clustered(90, 90, 17);
+    let n = pts.rows();
+    let mut last = -1.0f64;
+    for rounds in [0u32, 1, 2, 4] {
+        let params = AnnParams { seed: 5, trees: 2, rounds, leaf: 16, audit: 96 };
+        let (_, recall) =
+            build_graph_from_points(&pts, Metric::Euclidean, 8, &GraphBuild::Approx(params), 2)
+                .unwrap();
+        let recall = recall.expect("approximate builds always audit");
+        assert!((0.0..=1.0).contains(&recall), "recall {recall} out of range");
+        assert!(
+            recall >= last,
+            "recall regressed when the budget grew: rounds={rounds}: {recall} < {last}"
+        );
+        last = recall;
+    }
+    let exact_params = AnnParams { seed: 5, trees: 1, rounds: 0, leaf: n as u32, audit: 0 };
+    let (_, recall) =
+        build_graph_from_points(&pts, Metric::Euclidean, 8, &GraphBuild::Approx(exact_params), 2)
+            .unwrap();
+    assert_eq!(recall, Some(1.0), "a single brute-forced leaf is the exact selection");
+}
+
+/// Exactness anchor: when the audit measures recall 1.0 (single-leaf
+/// forest), the approximate pipeline is bit-identical to the exact
+/// builder through the facade — same cohesion, same analyses, and the
+/// truncation bound collapses to the pure coverage term.
+#[test]
+fn full_recall_approx_build_matches_exact_bit_for_bit() {
+    let pts = clustered(40, 38, 23);
+    let n = pts.rows();
+    let k = 7;
+    let input = ComputedDistances::new(pts, Metric::Euclidean).unwrap();
+
+    let mut exact = sparse_builder(k, GraphBuild::Exact, Storage::Csr, 2).build().unwrap();
+    let want = exact.compute(&input).unwrap();
+
+    let params = AnnParams { seed: 1, trees: 1, rounds: 0, leaf: n as u32, audit: 0 };
+    let mut approx =
+        sparse_builder(k, GraphBuild::Approx(params), Storage::Csr, 2).build().unwrap();
+    let got = approx.compute(&input).unwrap();
+
+    assert_eq!(got.graph_recall(), Some(1.0));
+    assert_eq!(want.graph_recall(), None, "exact builds do not audit");
+    let wb: Vec<u32> = want.cohesion().as_slice().iter().map(|v| v.to_bits()).collect();
+    let gb: Vec<u32> = got.cohesion().as_slice().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gb, wb, "recall 1.0 must reproduce the exact build bit for bit");
+    assert_eq!(got.effective_k(), want.effective_k());
+    assert_eq!(got.local_depths(), want.local_depths());
+    assert_eq!(got.communities(), want.communities());
+    // recall = 1 ⇒ the (1 - recall)·covered correction vanishes and the
+    // bound equals the exact builder's pure coverage deficit.
+    assert_eq!(got.truncation_error_bound(), want.truncation_error_bound());
+}
+
+/// End-to-end sanity on clustered data: the default approximate build
+/// with CSR storage still recovers the cluster structure — every
+/// strong-tie community is cluster-pure and both clusters appear.
+#[test]
+fn approx_csr_pipeline_recovers_clusters_end_to_end() {
+    let (n1, n2) = (60usize, 56usize);
+    let pts = clustered(n1, n2, 77);
+    let input = ComputedDistances::new(pts, Metric::Euclidean).unwrap();
+    let mut pald = sparse_builder(10, GraphBuild::Approx(AnnParams::default()), Storage::Csr, 2)
+        .build()
+        .unwrap();
+    let r = pald.compute(&input).unwrap();
+    assert!(r.is_sparse());
+    assert!(r.graph_recall().is_some());
+    let comms = r.communities();
+    assert_eq!(comms.len(), n1 + n2);
+    let first = &comms[..n1];
+    let second = &comms[n1..];
+    for (i, c) in first.iter().enumerate() {
+        assert!(!second.contains(c), "point {i}: community {c} spans both clusters");
+    }
+    assert!(r.community_count() >= 2, "both clusters must survive the strong-tie cut");
+    let bound = r.truncation_error_bound().expect("sparse runs report a bound");
+    assert!((0.0..=1.0).contains(&bound));
+}

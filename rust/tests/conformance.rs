@@ -9,7 +9,8 @@
 //! CI thread-matrix job runs this suite at 1, 2, 4, and 8 threads).
 
 use paldx::testutil::conformance::{
-    battery, check_kernel_conformance, check_parallel_determinism, sparse_ks, test_threads,
+    battery, check_kernel_conformance, check_parallel_determinism,
+    check_update_kernel_conformance, sparse_ks, test_threads,
 };
 
 /// Acceptance (ISSUE 5): all 18 registry kernels conform, from a single
@@ -35,6 +36,17 @@ fn registry_conformance_across_thread_matrix() {
 #[test]
 fn parallel_kernels_pin_their_determinism_contract() {
     check_parallel_determinism(&test_threads());
+}
+
+/// The incremental engine's 2-entry update-kernel registry
+/// (`reference` / `blocked-branchfree`) conforms over the same battery:
+/// per-pair focus counts bit-exact against an independent sweep, award
+/// sums bit-identical across flavors / tilings / range splits wherever
+/// the pair weight is finite, and the strict-mode duplicate (`w = ∞`)
+/// caveat pinned to no-award (reference) and bit-stability (masked).
+#[test]
+fn update_kernel_registry_conforms_over_the_battery() {
+    check_update_kernel_conformance();
 }
 
 /// The battery itself covers the sizes and neighborhood grid the issue

@@ -1,0 +1,127 @@
+//! Θ(n²)-free acceptance (ISSUE 6, DESIGN.md §11): an end-to-end
+//! `GraphBuild::Approx` + `Storage::Csr` run over point input must not
+//! allocate any Θ(n²) buffer.  A counting global allocator tracks the
+//! live-byte peak across the whole pipeline (ANN build, recall audit,
+//! CSR cohesion, result); at n = 4096 one dense n² f32 matrix alone is
+//! 64 MiB, and the dense pipeline holds two (distances + cohesion) —
+//! the asserted ceiling is a quarter of a single one.
+//!
+//! This suite lives in its own integration binary so no other test's
+//! allocations pollute the peak.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use paldx::data::distmat;
+use paldx::pald::{
+    AnnParams, ComputedDistances, GraphBuild, Metric, Neighborhood, Pald, Storage, Threads,
+};
+
+/// Live and peak heap bytes, maintained by [`CountingAlloc`].
+static CURRENT: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// `System` wrapper counting live bytes and their high-water mark.
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn add(size: usize) {
+        let cur = CURRENT.fetch_add(size, Ordering::Relaxed) + size;
+        PEAK.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    fn sub(size: usize) {
+        CURRENT.fetch_sub(size, Ordering::Relaxed);
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            Self::add(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            Self::add(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        Self::sub(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            Self::sub(layout.size());
+            Self::add(new_size);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// The full approximate + CSR pipeline at n = 4096 stays under a
+/// quarter of one dense n² matrix — so it cannot be hiding a dense
+/// distance matrix (64 MiB), a dense cohesion accumulator (64 MiB), or
+/// any other Θ(n²) scratch.
+#[test]
+fn approx_csr_pipeline_allocates_no_quadratic_buffer() {
+    let n = 4096usize;
+    let dense_bytes = n * n * std::mem::size_of::<f32>(); // 64 MiB
+    let pts = distmat::gaussian_clusters(8, &[n / 2, n - n / 2], &[0.5, 0.5], 6.0, 97);
+    let input = ComputedDistances::new(pts, Metric::Euclidean).unwrap();
+
+    let mut pald = Pald::builder()
+        .neighborhood(Neighborhood::Knn(8))
+        .graph_build(GraphBuild::Approx(AnnParams::default()))
+        .storage(Storage::Csr)
+        .threads(Threads::Fixed(4))
+        .build()
+        .unwrap();
+
+    // Baseline after the input exists; everything the pipeline adds on
+    // top of it counts against the ceiling.
+    let before = CURRENT.load(Ordering::Relaxed);
+    PEAK.store(before, Ordering::Relaxed);
+
+    let r = pald.compute(&input).unwrap();
+
+    let peak_delta = PEAK.load(Ordering::Relaxed).saturating_sub(before);
+    assert!(
+        peak_delta < dense_bytes / 4,
+        "pipeline peak {peak_delta} bytes >= {} (a quarter of one dense n² matrix)",
+        dense_bytes / 4
+    );
+
+    // The result itself is sparse: CSR store well under dense size, and
+    // the sparse analyses run without densifying (r.cohesion() is the
+    // one accessor that would, so it is deliberately never called).
+    assert!(r.is_sparse());
+    assert!(
+        r.cohesion_bytes() < dense_bytes / 4,
+        "CSR store {} bytes is not sparse at n={n}",
+        r.cohesion_bytes()
+    );
+    assert_eq!(r.effective_k(), Some(8));
+    assert!(r.graph_recall().is_some(), "approximate builds must audit");
+    let bound = r.truncation_error_bound().unwrap();
+    assert!((0.0..=1.0).contains(&bound));
+    assert!(r.universal_threshold() > 0.0);
+    assert!(r.community_count() >= 1);
+
+    let after_peak = PEAK.load(Ordering::Relaxed).saturating_sub(before);
+    assert!(
+        after_peak < dense_bytes / 4,
+        "sparse analyses re-densified the result: peak {after_peak} bytes"
+    );
+}
