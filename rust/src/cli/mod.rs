@@ -9,6 +9,11 @@
 //! * `convert`   — re-encode a distance input (dense ⟷ condensed)
 //! * `stream`    — replay a point stream through the incremental engine,
 //!   reporting per-update latency (`BENCH_stream.json`)
+//! * `serve`     — run the `pald-serve` TCP server: admission control,
+//!   shape-coalesced batching, streaming sessions, graceful drain on
+//!   SIGINT/SIGTERM (DESIGN.md §12)
+//! * `loadgen`   — drive a running server with a mixed-shape workload and
+//!   report p50/p95/p99 latency (`BENCH_serve.json`)
 //! * `repro`     — regenerate a paper table/figure (`--exp fig3|...|all`)
 //! * `calibrate` — print this machine's calibrated model parameters
 //! * `info`      — kernel registry + artifact inventory
@@ -71,6 +76,17 @@ COMMANDS:
              through the incremental engine; per-update latency + BENCH_stream.json
              [--warm K] [--churn R] [--check] [--bench-dir DIR] [--alg ...]
              [--tie ...] [--threads P] [--metric ...] [--no-validate]
+  serve      [--addr HOST:PORT] [--queue-cap Q] [--deadline-ms D] [--mem-cap-mb M]
+             [--idle-ms I] [--window-ms W] [--threads P] [--workers W]
+             [--reanchor N] [--no-validate]   run the pald-serve TCP server
+             (length-prefixed frames; same-shape one-shots arriving within the
+             batch window are coalesced — bit-identical to serving them alone;
+             GET /metrics on the same port scrapes plaintext metrics;
+             SIGINT/SIGTERM or an in-band SHUTDOWN frame drains gracefully)
+  loadgen    [--addr HOST:PORT] [--duration-ms T] [--concurrency C] [--rate R]
+             [--mix name:n:k:w,...] [--alg A] [--deadline-ms D] [--seed S]
+             [--bench-dir DIR]   drive a running server: closed loop (default)
+             or open loop at R req/s; per-mix p50/p95/p99 -> BENCH_serve.json
   repro      --exp fig3|fig4|table1|fig9|fig10|fig11|fig13|table2|peak|bounds|ablation|xla|all
              [--bench-dir DIR]  (measured experiments also emit BENCH_<exp>.json)
   calibrate                                         measure machine constants
@@ -98,6 +114,8 @@ pub fn run(raw: Vec<String>) -> anyhow::Result<()> {
         Some("analyze") => cmd_analyze(&args),
         Some("convert") => cmd_convert(&args),
         Some("stream") => cmd_stream(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("repro") => cmd_repro(&args),
         Some("calibrate") => cmd_calibrate(),
         Some("info") => cmd_info(&args),
@@ -327,6 +345,10 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
     }
     let pald = builder.build()?;
     let mut trace = LatencyTrace::new();
+    // SIGINT/SIGTERM stops the replay early but still reports and writes
+    // BENCH_stream.json — the stream analogue of the server's drain.
+    crate::serve::install_signal_handlers();
+    let mut interrupted = false;
 
     let points_mode = args.get("input").map(|p| p.ends_with(".vec")).unwrap_or(false);
     let mut eng = if points_mode {
@@ -340,6 +362,10 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
         let mut eng = pald.into_incremental_points_with_capacity(seed, total)?;
         let mut step = 0usize;
         for q in warm..total {
+            if crate::serve::shutdown_requested() {
+                interrupted = true;
+                break;
+            }
             let t0 = Instant::now();
             eng.insert_point(pts.row(q))?;
             trace.record_insert(t0.elapsed().as_secs_f64());
@@ -367,6 +393,10 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
         let mut row = vec![0.0f32; total];
         let mut step = 0usize;
         for q in warm..total {
+            if crate::serve::shutdown_requested() {
+                interrupted = true;
+                break;
+            }
             let n = eng.n();
             for (k, &id) in ids.iter().enumerate() {
                 row[k] = d[(q, id)];
@@ -387,6 +417,9 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
         eng
     };
 
+    if interrupted {
+        eprintln!("stream: interrupted by signal — reporting the partial replay");
+    }
     let stats = eng.stats();
     println!(
         "stream: n={} after {} inserts / {} removes (update kernel {}, {} reweighted pairs, {} grow events)",
@@ -447,6 +480,105 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
             "incremental state diverged from batch recompute (maxdiff {maxdiff})"
         );
     }
+    Ok(())
+}
+
+/// `paldx serve`: run the `pald-serve` TCP server until a drain is
+/// triggered (SIGINT/SIGTERM or an in-band `SHUTDOWN` frame), then flush
+/// the final metrics scrape and exit 0 (DESIGN.md §12).
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use crate::serve::{install_signal_handlers, ServeConfig, Server};
+
+    let d = ServeConfig::default();
+    let cfg = ServeConfig {
+        addr: args.get_or("addr", &d.addr).to_string(),
+        queue_cap: args.get_usize("queue-cap", d.queue_cap)?,
+        default_deadline_ms: args.get_u64("deadline-ms", d.default_deadline_ms)?,
+        mem_cap_bytes: args.get_usize("mem-cap-mb", d.mem_cap_bytes >> 20)? << 20,
+        idle_timeout_ms: args.get_u64("idle-ms", d.idle_timeout_ms)?,
+        batch_window_ms: args.get_u64("window-ms", d.batch_window_ms)?,
+        threads_per_job: args.get_usize("threads", d.threads_per_job)?,
+        workers: args.get_usize("workers", d.workers)?,
+        reanchor_every: args.get_u64("reanchor", d.reanchor_every)?,
+        validate: !args.flag("no-validate"),
+        max_frame: d.max_frame,
+    };
+    install_signal_handlers();
+    let handle = Server::start(cfg)?;
+    println!(
+        "pald-serve listening on {} (frames + GET /metrics; SIGINT/SIGTERM drains)",
+        handle.addr()
+    );
+    // Block until something triggers the drain (signal, SHUTDOWN frame,
+    // or the handle); the dispatcher folds the signal flag into the
+    // admission drain state within one tick.
+    while !handle.is_draining() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    eprintln!("pald-serve: draining (in-flight work completes, new work is shed retriable)");
+    let scrape = handle.join();
+    println!("{scrape}");
+    println!("pald-serve: drained cleanly");
+    Ok(())
+}
+
+/// `paldx loadgen`: drive a running server with a mixed-shape workload —
+/// closed loop by default, open loop at `--rate` req/s — and publish
+/// per-mix p50/p95/p99 latency as `BENCH_serve.json`.
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    use crate::serve::loadgen;
+
+    let d = loadgen::LoadgenOpts::default();
+    let opts = loadgen::LoadgenOpts {
+        addr: args.get_or("addr", &d.addr).to_string(),
+        duration: std::time::Duration::from_millis(args.get_u64("duration-ms", 2_000)?),
+        concurrency: args.get_usize("concurrency", d.concurrency)?,
+        rate: args.get_u64("rate", 0)? as f64,
+        mixes: match args.get("mix") {
+            Some(spec) => loadgen::parse_mixes(spec)?,
+            None => loadgen::default_mixes(),
+        },
+        algorithm: args.get_or("alg", "auto").to_string(),
+        deadline_ms: u32::try_from(args.get_u64("deadline-ms", 0)?)?,
+        seed: args.get_u64("seed", 42)?,
+    };
+    let report = loadgen::run(&opts)?;
+    let (sent, ok, shed, timeouts, errors) = report.totals();
+    println!(
+        "loadgen [{}]: {sent} sent in {:.2}s — {ok} ok ({:.1} rps), {shed} shed, \
+         {timeouts} timed out, {errors} errors, {} protocol errors",
+        report.mode, report.elapsed_s, report.rps, report.protocol_errors
+    );
+    let mut table = crate::bench::Table::new(
+        "loadgen — per-mix latency",
+        &["mix", "n", "k", "sent", "ok", "shed", "p50", "p95", "p99", "max"],
+    );
+    for m in &report.mixes {
+        table.row(vec![
+            m.name.clone(),
+            m.n.to_string(),
+            m.k.to_string(),
+            m.sent.to_string(),
+            m.ok.to_string(),
+            m.shed.to_string(),
+            crate::bench::fmt_secs(m.latency.p50),
+            crate::bench::fmt_secs(m.latency.p95),
+            crate::bench::fmt_secs(m.latency.p99),
+            crate::bench::fmt_secs(m.latency.max),
+        ]);
+    }
+    table.print();
+    let bench_dir = PathBuf::from(args.get_or("bench-dir", "."));
+    let path = bench_dir.join("BENCH_serve.json");
+    match std::fs::write(&path, report.to_json().render() + "\n") {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    anyhow::ensure!(
+        report.protocol_errors == 0,
+        "{} wire-protocol errors during the run",
+        report.protocol_errors
+    );
     Ok(())
 }
 
@@ -1159,6 +1291,41 @@ mod tests {
         ]))
         .unwrap();
         assert!(run(argv(&["stream", "--n", "8", "--warm", "1"])).is_err(), "--warm below 2");
+    }
+
+    #[test]
+    fn loadgen_drives_a_live_server_and_writes_report() {
+        let dir = tmp_dir();
+        let handle = crate::serve::Server::start(crate::serve::ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            batch_window_ms: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = handle.addr().to_string();
+        run(argv(&[
+            "loadgen",
+            "--addr",
+            &addr,
+            "--duration-ms",
+            "250",
+            "--concurrency",
+            "2",
+            "--mix",
+            "tiny:24:0:1",
+            "--bench-dir",
+            dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let report = dir.join("BENCH_serve.json");
+        let text = std::fs::read_to_string(&report).unwrap();
+        assert!(text.contains("\"experiment\": \"serve\""), "{text}");
+        assert!(text.contains("\"p50_s\""), "{text}");
+        std::fs::remove_file(report).ok();
+        // Bad mix specs are typed CLI errors before any connection.
+        assert!(run(argv(&["loadgen", "--addr", &addr, "--mix", "nope"])).is_err());
+        handle.shutdown();
+        handle.join();
     }
 
     #[test]

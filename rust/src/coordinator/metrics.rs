@@ -1,10 +1,34 @@
-//! Job metrics registry (throughput accounting for the e2e drivers).
+//! Job metrics registry: the throughput-accounting spine shared by the
+//! e2e drivers and the serving layer (`paldx serve` exposes it via the
+//! `STATS` frame and the plaintext scrape endpoint; DESIGN.md §12).
+//!
+//! Two properties matter here:
+//!
+//! * **Work-aware throughput.**  [`JobMetrics::work_units`] charges each
+//!   job the comparisons it actually performed — `n³/6` triplets for a
+//!   dense job, `n·k²` for a truncated PKNN job (DESIGN.md §9) — so the
+//!   domain metric no longer overstates sparse throughput by pretending
+//!   every job swept the full triplet space.
+//! * **Thread-safe recording with snapshot semantics.**  The registry is
+//!   sharded: each recording thread is pinned (round-robin, cached in a
+//!   thread-local) to one shard guarded by its own `Mutex`, so worker
+//!   threads on the serving hot path never contend on a global lock.
+//!   Readers call [`MetricsRegistry::snapshot`], which locks shards one
+//!   at a time and merges by a global sequence number — a consistent
+//!   completion-ordered view without stopping writers.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Metrics of one completed job.
 #[derive(Clone, Debug)]
 pub struct JobMetrics {
     /// Problem size (points).
     pub n: usize,
+    /// Truncated-neighborhood size of the job (`0` = dense semantics:
+    /// every conflict pair was evaluated).  Determines which work
+    /// formula [`JobMetrics::work_units`] applies.
+    pub k: usize,
     /// Algorithm name that served the job.
     pub algorithm: String,
     /// Backend name (`native` / `xla`).
@@ -14,50 +38,168 @@ pub struct JobMetrics {
 }
 
 impl JobMetrics {
-    /// Triplet-comparisons per second (n^3/6 per job) — the domain
-    /// throughput metric the benches report.
-    pub fn triplets_per_sec(&self) -> f64 {
+    /// Triplet comparisons this job actually performed: `n³/6` for a
+    /// dense job (`k == 0`), `n·k²` for a truncated PKNN job — the
+    /// O(n·k²) cost model of DESIGN.md §9.  Charging sparse jobs the
+    /// dense formula would overstate their throughput by `Θ(n²/k²)`.
+    pub fn work_units(&self) -> f64 {
         let n = self.n as f64;
-        n * n * n / 6.0 / self.seconds.max(1e-12)
+        if self.k == 0 {
+            n * n * n / 6.0
+        } else {
+            let k = self.k as f64;
+            n * k * k
+        }
+    }
+
+    /// Domain throughput: [`JobMetrics::work_units`] per second.
+    pub fn triplets_per_sec(&self) -> f64 {
+        self.work_units() / self.seconds.max(1e-12)
     }
 }
 
-/// Accumulating registry.
-#[derive(Default)]
+/// How many shards the registry spreads recording threads across.
+const SHARDS: usize = 16;
+
+thread_local! {
+    /// This thread's shard index (assigned once, round-robin).
+    static MY_SHARD: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+
+/// Accumulating registry with lock-sharded, `&self` recording and
+/// sequence-ordered snapshots (safe to share behind an `Arc` across the
+/// serving layer's worker threads).
 pub struct MetricsRegistry {
-    jobs: Vec<JobMetrics>,
+    shards: Vec<Mutex<Vec<(u64, JobMetrics)>>>,
+    /// Global completion-order stamp.
+    seq: AtomicU64,
+    /// Round-robin assignment of threads to shards.
+    next_shard: AtomicUsize,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry {
+            shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+            seq: AtomicU64::new(0),
+            next_shard: AtomicUsize::new(0),
+        }
+    }
 }
 
 impl MetricsRegistry {
-    /// Record one completed job.
-    pub fn record(&mut self, m: JobMetrics) {
-        self.jobs.push(m);
+    /// Empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
     }
 
-    /// All recorded jobs, in completion order.
-    pub fn jobs(&self) -> &[JobMetrics] {
-        &self.jobs
+    /// Record one completed job.  Takes `&self`: the calling thread
+    /// locks only its own shard (assigned round-robin on first use), so
+    /// concurrent workers recording different jobs do not serialize.
+    pub fn record(&self, m: JobMetrics) {
+        let shard = MY_SHARD.with(|s| {
+            if s.get() == usize::MAX {
+                s.set(self.next_shard.fetch_add(1, Ordering::Relaxed) % self.shards.len());
+            }
+            s.get()
+        });
+        let stamp = self.seq.fetch_add(1, Ordering::Relaxed);
+        // A poisoned shard (a panic while holding the lock) only loses
+        // that shard's history; recording must not propagate the panic.
+        if let Ok(mut jobs) = self.shards[shard].lock() {
+            jobs.push((stamp, m));
+        }
+    }
+
+    /// Consistent view of every recorded job in completion order
+    /// (sequence-stamped at [`MetricsRegistry::record`] time).  Shards
+    /// are locked one at a time, so writers are never globally stalled.
+    pub fn snapshot(&self) -> Vec<JobMetrics> {
+        let mut stamped: Vec<(u64, JobMetrics)> = Vec::new();
+        for shard in &self.shards {
+            if let Ok(jobs) = shard.lock() {
+                stamped.extend(jobs.iter().cloned());
+            }
+        }
+        stamped.sort_by_key(|(stamp, _)| *stamp);
+        stamped.into_iter().map(|(_, m)| m).collect()
+    }
+
+    /// All recorded jobs, in completion order (alias of
+    /// [`MetricsRegistry::snapshot`], kept for the pre-serve call sites).
+    pub fn jobs(&self) -> Vec<JobMetrics> {
+        self.snapshot()
+    }
+
+    /// Number of jobs recorded so far.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().map(|j| j.len()).unwrap_or(0)).sum()
+    }
+
+    /// Has nothing been recorded yet?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// Total wall-clock seconds across recorded jobs.
     pub fn total_seconds(&self) -> f64 {
-        self.jobs.iter().map(|j| j.seconds).sum()
+        self.shards
+            .iter()
+            .map(|s| s.lock().map(|j| j.iter().map(|(_, m)| m.seconds).sum::<f64>()).unwrap_or(0.0))
+            .sum()
     }
 
     /// Render a short text summary.
     pub fn summary(&self) -> String {
-        if self.jobs.is_empty() {
+        let jobs = self.snapshot();
+        if jobs.is_empty() {
             return "no jobs".into();
         }
-        let total = self.total_seconds();
+        let total: f64 = jobs.iter().map(|j| j.seconds).sum();
         let mean_tput =
-            self.jobs.iter().map(|j| j.triplets_per_sec()).sum::<f64>() / self.jobs.len() as f64;
+            jobs.iter().map(|j| j.triplets_per_sec()).sum::<f64>() / jobs.len() as f64;
         format!(
             "{} job(s), {:.3}s total, mean throughput {:.2}M triplets/s",
-            self.jobs.len(),
+            jobs.len(),
             total,
             mean_tput / 1e6
         )
+    }
+
+    /// Plaintext scrape rendering (Prometheus text exposition style):
+    /// job totals plus per-algorithm counts/seconds/work, served by the
+    /// `STATS` frame and the HTTP scrape path of `paldx serve`.
+    pub fn scrape(&self) -> String {
+        let jobs = self.snapshot();
+        let mut out = String::new();
+        out.push_str("# TYPE paldx_jobs_total counter\n");
+        out.push_str(&format!("paldx_jobs_total {}\n", jobs.len()));
+        out.push_str("# TYPE paldx_job_seconds_total counter\n");
+        out.push_str(&format!(
+            "paldx_job_seconds_total {:.6}\n",
+            jobs.iter().map(|j| j.seconds).sum::<f64>()
+        ));
+        out.push_str("# TYPE paldx_work_units_total counter\n");
+        out.push_str(&format!(
+            "paldx_work_units_total {:.3e}\n",
+            jobs.iter().map(|j| j.work_units()).sum::<f64>()
+        ));
+        // Per-algorithm breakdown, insertion-ordered by first appearance.
+        let mut algs: Vec<(&str, usize, f64)> = Vec::new();
+        for j in &jobs {
+            match algs.iter_mut().find(|(a, _, _)| *a == j.algorithm) {
+                Some((_, count, secs)) => {
+                    *count += 1;
+                    *secs += j.seconds;
+                }
+                None => algs.push((&j.algorithm, 1, j.seconds)),
+            }
+        }
+        for (alg, count, secs) in algs {
+            out.push_str(&format!("paldx_jobs_total{{algorithm=\"{alg}\"}} {count}\n"));
+            out.push_str(&format!("paldx_job_seconds_total{{algorithm=\"{alg}\"}} {secs:.6}\n"));
+        }
+        out
     }
 }
 
@@ -65,19 +207,93 @@ impl MetricsRegistry {
 mod tests {
     use super::*;
 
+    fn job(n: usize, k: usize, seconds: f64) -> JobMetrics {
+        JobMetrics { n, k, algorithm: "x".into(), backend: "Native".into(), seconds }
+    }
+
     #[test]
-    fn throughput_math() {
-        let m = JobMetrics { n: 600, algorithm: "x".into(), backend: "Native".into(), seconds: 2.0 };
-        let want = 600.0f64.powi(3) / 6.0 / 2.0;
-        assert!((m.triplets_per_sec() - want).abs() < 1.0);
+    fn throughput_math_pins_both_formulas() {
+        // Dense (k = 0): the classic n³/6 triplet count.
+        let dense = job(600, 0, 2.0);
+        let want_dense = 600.0f64.powi(3) / 6.0 / 2.0;
+        assert!((dense.triplets_per_sec() - want_dense).abs() < 1.0);
+        // Truncated (k > 0): O(n·k²) actual work — NOT n³/6.  At
+        // n = 600, k = 10 the dense formula would overstate the work
+        // (and hence throughput) by a factor of 600.
+        let sparse = job(600, 10, 2.0);
+        let want_sparse = 600.0 * 10.0 * 10.0 / 2.0;
+        assert!((sparse.triplets_per_sec() - want_sparse).abs() < 1e-6);
+        assert!((dense.work_units() / sparse.work_units() - 600.0).abs() < 1e-9);
     }
 
     #[test]
     fn registry_summary() {
-        let mut r = MetricsRegistry::default();
+        let r = MetricsRegistry::default();
         assert_eq!(r.summary(), "no jobs");
-        r.record(JobMetrics { n: 100, algorithm: "a".into(), backend: "Native".into(), seconds: 0.5 });
+        assert!(r.is_empty());
+        r.record(job(100, 0, 0.5));
         assert!(r.summary().contains("1 job(s)"));
         assert!((r.total_seconds() - 0.5).abs() < 1e-12);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn snapshot_preserves_completion_order() {
+        let r = MetricsRegistry::new();
+        for n in [10usize, 20, 30, 40] {
+            r.record(job(n, 0, 0.1));
+        }
+        let ns: Vec<usize> = r.snapshot().iter().map(|j| j.n).collect();
+        assert_eq!(ns, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let r = MetricsRegistry::new();
+        const THREADS: usize = 8;
+        const PER: usize = 500;
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let r = &r;
+                scope.spawn(move || {
+                    for i in 0..PER {
+                        r.record(job(t * PER + i + 2, (t + i) % 3, 1e-4));
+                    }
+                });
+            }
+        });
+        let jobs = r.snapshot();
+        assert_eq!(jobs.len(), THREADS * PER);
+        assert_eq!(r.len(), THREADS * PER);
+        // Every (thread, i) slot arrived exactly once.
+        let mut ns: Vec<usize> = jobs.iter().map(|j| j.n).collect();
+        ns.sort_unstable();
+        ns.dedup();
+        assert_eq!(ns.len(), THREADS * PER);
+        assert!((r.total_seconds() - THREADS as f64 * PER as f64 * 1e-4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scrape_renders_totals_and_per_algorithm_lines() {
+        let r = MetricsRegistry::new();
+        r.record(JobMetrics {
+            n: 64,
+            k: 0,
+            algorithm: "opt-pairwise".into(),
+            backend: "Native".into(),
+            seconds: 0.25,
+        });
+        r.record(JobMetrics {
+            n: 64,
+            k: 8,
+            algorithm: "knn-opt-pairwise".into(),
+            backend: "Native".into(),
+            seconds: 0.05,
+        });
+        let text = r.scrape();
+        assert!(text.contains("paldx_jobs_total 2"), "{text}");
+        assert!(text.contains("paldx_jobs_total{algorithm=\"opt-pairwise\"} 1"), "{text}");
+        assert!(text.contains("paldx_jobs_total{algorithm=\"knn-opt-pairwise\"} 1"), "{text}");
+        assert!(text.contains("paldx_work_units_total"), "{text}");
     }
 }

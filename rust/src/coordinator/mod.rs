@@ -72,6 +72,9 @@ impl Coordinator {
         };
         self.metrics.record(JobMetrics {
             n: d.rows(),
+            // Truncated jobs are charged their actual O(n·k²) work by
+            // JobMetrics::work_units, not the dense n³/6.
+            k: job.config.k,
             algorithm: algorithm.to_string(),
             backend: format!("{:?}", job.config.backend),
             seconds: t0.elapsed().as_secs_f64(),

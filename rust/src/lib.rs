@@ -43,7 +43,15 @@
 //! * data substrates (synthetic distance matrices, collaboration-network
 //!   graphs with BFS APSP, fastText-like word embeddings) and community
 //!   analysis tools (universal strong-tie threshold, baselines), see
-//!   [`data`] and [`analysis`].
+//!   [`data`] and [`analysis`];
+//! * a **serving layer** (`paldx serve`): a length-prefixed TCP protocol
+//!   with admission control (bounded queue, deadlines, retriable
+//!   load-shedding), a shape-keyed warm-session pool that coalesces
+//!   same-shape one-shots into batched computes (bit-identical to
+//!   serving them individually), wire-addressable streaming incremental
+//!   sessions, graceful drain on SIGINT/SIGTERM, and a load generator
+//!   (`paldx loadgen`) reporting p50/p95/p99 latency (DESIGN.md §12),
+//!   see [`serve`].
 //!
 //! ## Quickstart
 //!
@@ -134,5 +142,6 @@ pub mod pald;
 pub mod parallel;
 pub mod repro;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testutil;

@@ -94,6 +94,40 @@ pub enum PaldError {
     Io { path: PathBuf, source: std::io::Error },
     /// Structurally invalid file contents (bad magic, ragged CSV, …).
     BadFormat { path: PathBuf, detail: String },
+    /// A wire-protocol violation on the serving layer (DESIGN.md §12):
+    /// truncated, oversized, mis-versioned, or structurally malformed
+    /// frames — on either side of the connection.  Never a panic.
+    Protocol {
+        /// What was malformed.
+        detail: String,
+    },
+    /// A request exceeded its deadline before (or while) being served —
+    /// the admission controller's per-request deadline, or a client
+    /// giving up on a response.
+    Timeout {
+        /// The deadline that was exceeded, in milliseconds.
+        deadline_ms: u64,
+    },
+    /// Load shed: the server's bounded admission queue was full.  This
+    /// is the *retriable* reject — the request was never started, so
+    /// clients should back off and retry
+    /// ([`PaldError::is_retriable`] returns `true`).
+    Overloaded {
+        /// Requests queued when this one was rejected.
+        queued: usize,
+        /// The queue bound.
+        cap: usize,
+    },
+    /// The server is draining for graceful shutdown and admits no new
+    /// work; in-flight requests still complete.  Retriable — another
+    /// replica (or the restarted server) can serve the retry.
+    Draining,
+    /// A non-retriable application error relayed from the server (e.g.
+    /// the server-side validation text of a bad distance matrix).
+    Remote {
+        /// The server's rendering of the underlying error.
+        detail: String,
+    },
 }
 
 impl PaldError {
@@ -105,6 +139,19 @@ impl PaldError {
     /// Structurally invalid file contents at `path`.
     pub(crate) fn bad_format(path: &Path, detail: impl Into<String>) -> PaldError {
         PaldError::BadFormat { path: path.to_path_buf(), detail: detail.into() }
+    }
+
+    /// A wire-protocol violation with a human-readable detail.
+    pub fn protocol(detail: impl Into<String>) -> PaldError {
+        PaldError::Protocol { detail: detail.into() }
+    }
+
+    /// Is this a load-shedding rejection the caller should retry
+    /// (possibly after backoff / against another replica)?  `true` for
+    /// [`PaldError::Overloaded`] and [`PaldError::Draining`] — the
+    /// request was never started, so retrying cannot double-apply it.
+    pub fn is_retriable(&self) -> bool {
+        matches!(self, PaldError::Overloaded { .. } | PaldError::Draining)
     }
 }
 
@@ -186,6 +233,24 @@ impl fmt::Display for PaldError {
             PaldError::BadFormat { path, detail } => {
                 write!(f, "bad file format in {}: {detail}", path.display())
             }
+            PaldError::Protocol { detail } => {
+                write!(f, "wire protocol violation: {detail}")
+            }
+            PaldError::Timeout { deadline_ms } => {
+                write!(f, "request exceeded its {deadline_ms}ms deadline")
+            }
+            PaldError::Overloaded { queued, cap } => {
+                write!(
+                    f,
+                    "server overloaded: admission queue full ({queued}/{cap}); retriable"
+                )
+            }
+            PaldError::Draining => {
+                write!(f, "server is draining for shutdown; retriable against a live replica")
+            }
+            PaldError::Remote { detail } => {
+                write!(f, "server rejected the request: {detail}")
+            }
         }
     }
 }
@@ -221,6 +286,18 @@ mod tests {
         );
         assert!(e.source().is_some());
         assert!(e.to_string().contains("/nope"));
+    }
+
+    #[test]
+    fn retriability_is_typed() {
+        assert!(PaldError::Overloaded { queued: 8, cap: 8 }.is_retriable());
+        assert!(PaldError::Draining.is_retriable());
+        assert!(!PaldError::Timeout { deadline_ms: 250 }.is_retriable());
+        assert!(!PaldError::protocol("bad frame").is_retriable());
+        assert!(!PaldError::Remote { detail: "asymmetric".into() }.is_retriable());
+        let s = PaldError::Overloaded { queued: 8, cap: 8 }.to_string();
+        assert!(s.contains("8/8") && s.contains("retriable"), "{s}");
+        assert!(PaldError::protocol("oversized frame").to_string().contains("oversized"));
     }
 
     #[test]

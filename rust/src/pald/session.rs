@@ -103,6 +103,19 @@ impl Session {
         inputs.iter().map(|d| self.compute(d)).collect()
     }
 
+    /// [`Session::compute_batch`] over *borrowed* inputs — the serving
+    /// layer's coalescing path (DESIGN.md §12), where the items of one
+    /// shape-coalesced dispatch group are owned by different in-flight
+    /// requests.  Identical semantics: each input runs through
+    /// [`Session::compute`] in order, so a coalesced batch is
+    /// bit-identical to the same calls made one at a time.
+    pub fn compute_batch_refs<D: DistanceInput + ?Sized>(
+        &mut self,
+        inputs: &[&D],
+    ) -> Result<Vec<Mat>, PaldError> {
+        inputs.iter().map(|d| self.compute(*d)).collect()
+    }
+
     /// Run the end-to-end sparse pipeline (DESIGN.md §11): build the
     /// neighbor graph per the configured
     /// [`GraphBuild`](crate::pald::GraphBuild) (reusing the session's
@@ -288,6 +301,18 @@ mod tests {
             let mut fresh = Session::new(cfg.clone()).unwrap();
             let want = fresh.compute(d).unwrap();
             assert_eq!(got.as_slice(), want.as_slice(), "batch[{i}]");
+        }
+    }
+
+    #[test]
+    fn batch_refs_matches_owned_batch_bitwise() {
+        let cfg = PaldConfig { algorithm: Algorithm::Auto, threads: 1, ..Default::default() };
+        let ds: Vec<Mat> = (0..3).map(|s| distmat::random_tie_free(28, 200 + s)).collect();
+        let refs: Vec<&Mat> = ds.iter().collect();
+        let owned = Session::new(cfg.clone()).unwrap().compute_batch(&ds).unwrap();
+        let borrowed = Session::new(cfg).unwrap().compute_batch_refs(&refs).unwrap();
+        for (a, b) in owned.iter().zip(&borrowed) {
+            assert_eq!(a.as_slice(), b.as_slice());
         }
     }
 

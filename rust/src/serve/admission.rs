@@ -1,0 +1,236 @@
+//! Admission control for `pald-serve`: bounded queueing, per-request
+//! deadlines, and load shedding (DESIGN.md §12).
+//!
+//! The controller is deliberately tiny — three atomics and a clock — so
+//! every decision it makes is explainable:
+//!
+//! * **Bounded queue.**  [`Admission::try_admit`] reserves a slot with a
+//!   lock-free `fetch_update` (no overshoot under contention); when the
+//!   queue is full the request is rejected with
+//!   [`PaldError::Overloaded`], a *retriable* code, instead of growing
+//!   an unbounded backlog whose tail latency nobody asked for.
+//! * **Per-request deadlines.**  Each admitted request carries a
+//!   [`Deadline`]; the dispatcher drops requests whose deadline lapsed
+//!   while queued (answering [`PaldError::Timeout`]) rather than burning
+//!   worker time on an answer the client has stopped waiting for.
+//! * **Draining.**  Once [`Admission::start_drain`] is called (SIGTERM /
+//!   SIGINT / in-band `SHUTDOWN` frame), new work is rejected with
+//!   [`PaldError::Draining`] — also retriable, so well-behaved clients
+//!   fail over — while already-admitted work runs to completion.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::pald::error::PaldError;
+
+/// Absolute per-request deadline, resolved at admission time.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    at: Option<Instant>,
+    /// The millisecond budget the deadline was built from (carried so
+    /// timeout errors can report it).
+    pub budget_ms: u64,
+}
+
+impl Deadline {
+    /// Deadline `ms` milliseconds from now; `ms == 0` means no deadline.
+    pub fn in_ms(ms: u64) -> Deadline {
+        Deadline {
+            at: (ms > 0).then(|| Instant::now() + Duration::from_millis(ms)),
+            budget_ms: ms,
+        }
+    }
+
+    /// Has the deadline lapsed?
+    pub fn expired(&self) -> bool {
+        self.at.is_some_and(|at| Instant::now() >= at)
+    }
+
+    /// The typed error a lapsed deadline maps to.
+    pub fn timeout_error(&self) -> PaldError {
+        PaldError::Timeout { deadline_ms: self.budget_ms }
+    }
+}
+
+/// A queue slot held by an admitted request; must be handed back via
+/// [`Admission::release`] exactly once (the serving layer releases when
+/// the response — success or typed error — is queued to the writer).
+#[derive(Debug)]
+#[must_use = "an admitted slot must be released or the queue leaks capacity"]
+pub struct Ticket {
+    /// Deadline resolved at admission.
+    pub deadline: Deadline,
+}
+
+/// Shared admission state (one per server, behind an `Arc`).
+pub struct Admission {
+    queued: AtomicUsize,
+    queue_cap: usize,
+    draining: AtomicBool,
+    shed: AtomicU64,
+    timed_out: AtomicU64,
+    admitted: AtomicU64,
+}
+
+impl Admission {
+    /// Controller admitting at most `queue_cap` concurrently-held
+    /// tickets.
+    pub fn new(queue_cap: usize) -> Admission {
+        Admission {
+            queued: AtomicUsize::new(0),
+            queue_cap: queue_cap.max(1),
+            draining: AtomicBool::new(false),
+            shed: AtomicU64::new(0),
+            timed_out: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+        }
+    }
+
+    /// Try to admit a request with a `deadline_ms` budget (`0` = use
+    /// `default_deadline_ms`).  Rejections are typed and retriable:
+    /// [`PaldError::Draining`] while shutting down,
+    /// [`PaldError::Overloaded`] when the queue is full.
+    pub fn try_admit(&self, deadline_ms: u64, default_deadline_ms: u64) -> Result<Ticket, PaldError> {
+        if self.draining.load(Ordering::Acquire) {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(PaldError::Draining);
+        }
+        // fetch_update never overshoots the cap, unlike a blind
+        // fetch_add/check/undo, which can transiently reject admissible
+        // requests under contention.
+        let reserved = self
+            .queued
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |q| {
+                (q < self.queue_cap).then_some(q + 1)
+            });
+        if reserved.is_err() {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(PaldError::Overloaded { queued: self.queue_cap, cap: self.queue_cap });
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        let ms = if deadline_ms == 0 { default_deadline_ms } else { deadline_ms };
+        Ok(Ticket { deadline: Deadline::in_ms(ms) })
+    }
+
+    /// Hand a ticket's queue slot back.
+    pub fn release(&self, ticket: Ticket) {
+        drop(ticket);
+        self.queued.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Record a queued-past-deadline drop (metrics only; the slot is
+    /// released separately).
+    pub fn note_timeout(&self) {
+        self.timed_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Enter drain mode: all future [`Admission::try_admit`] calls are
+    /// rejected with [`PaldError::Draining`].  Idempotent.
+    pub fn start_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    /// Is the server draining?
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Tickets currently held.
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Queue capacity.
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Counters for the scrape endpoint: `(admitted, shed, timed_out)`.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.admitted.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.timed_out.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Concurrency limit for compute dispatch, derived from the planner's
+/// thread budget: with `threads_per_job` threads handed to each job's
+/// parallel kernels, running more than `host_threads / threads_per_job`
+/// jobs at once oversubscribes cores and inflates every job's latency.
+pub fn inflight_limit(host_threads: usize, threads_per_job: usize) -> usize {
+    (host_threads / threads_per_job.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_until_cap_then_sheds_retriable() {
+        let a = Admission::new(2);
+        let t1 = a.try_admit(0, 100).unwrap();
+        let _t2 = a.try_admit(0, 100).unwrap();
+        let err = a.try_admit(0, 100).unwrap_err();
+        assert!(err.is_retriable(), "{err}");
+        assert!(matches!(err, PaldError::Overloaded { cap: 2, .. }));
+        a.release(t1);
+        assert_eq!(a.queued(), 1);
+        let _t3 = a.try_admit(0, 100).unwrap();
+        let (admitted, shed, _) = a.counters();
+        assert_eq!((admitted, shed), (3, 1));
+    }
+
+    #[test]
+    fn draining_rejects_with_retriable_code() {
+        let a = Admission::new(8);
+        a.start_drain();
+        let err = a.try_admit(0, 100).unwrap_err();
+        assert!(matches!(err, PaldError::Draining));
+        assert!(err.is_retriable());
+    }
+
+    #[test]
+    fn deadlines_resolve_defaults_and_expire() {
+        let a = Admission::new(8);
+        let t = a.try_admit(0, 1).unwrap();
+        assert_eq!(t.deadline.budget_ms, 1);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.deadline.expired());
+        assert!(matches!(t.deadline.timeout_error(), PaldError::Timeout { deadline_ms: 1 }));
+        let t2 = a.try_admit(0, 0).unwrap();
+        assert!(!t2.deadline.expired(), "no deadline never expires");
+        a.release(t);
+        a.release(t2);
+    }
+
+    #[test]
+    fn concurrent_admission_never_overshoots_cap() {
+        let a = Admission::new(16);
+        let peak = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..200 {
+                        if let Ok(t) = a.try_admit(0, 0) {
+                            let q = a.queued();
+                            peak.fetch_max(q, Ordering::Relaxed);
+                            assert!(q <= 16, "queue overshot: {q}");
+                            a.release(t);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(a.queued(), 0);
+        assert!(peak.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn inflight_limit_tracks_thread_budget() {
+        assert_eq!(inflight_limit(8, 2), 4);
+        assert_eq!(inflight_limit(8, 16), 1);
+        assert_eq!(inflight_limit(8, 0), 8);
+    }
+}

@@ -1,0 +1,160 @@
+//! Blocking client for the `pald-serve` wire protocol — the library
+//! surface `paldx loadgen` and the loopback end-to-end tests drive.
+//!
+//! One request is in flight per client at a time, so responses are
+//! matched by request id on a plain blocking socket; error frames come
+//! back as typed [`PaldError`] values ([`wire_error_to_pald`]) with
+//! retriability preserved — callers distinguish a load-shed reject
+//! (back off and retry) from a hard failure exactly as local callers
+//! do.
+
+use std::io::Write;
+use std::net::TcpStream;
+
+use crate::core::Mat;
+use crate::pald::error::PaldError;
+
+use super::proto::{
+    decode_response, encode_request, read_frame, wire_error_to_pald, FrameRead, Request,
+    Response, WireConfig, DEFAULT_MAX_FRAME,
+};
+
+/// A blocking `pald-serve` connection.
+pub struct ServeClient {
+    stream: TcpStream,
+    next_id: u64,
+    max_frame: usize,
+}
+
+impl ServeClient {
+    /// Connect to a server.
+    pub fn connect(addr: &str) -> std::io::Result<ServeClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(ServeClient { stream, next_id: 1, max_frame: DEFAULT_MAX_FRAME })
+    }
+
+    /// Send one request and block for its response frame.  Server-side
+    /// failures come back as [`Response::Error`]; use the typed
+    /// wrappers ([`ServeClient::compute`] etc.) to surface them as
+    /// [`PaldError`].
+    pub fn request(&mut self, req: &Request) -> Result<Response, PaldError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream
+            .write_all(&encode_request(id, req))
+            .map_err(|e| PaldError::protocol(format!("send failed: {e}")))?;
+        loop {
+            match read_frame(&mut self.stream, self.max_frame)? {
+                FrameRead::Frame(raw) => {
+                    if raw.request_id != id {
+                        // A stale frame from an earlier abandoned
+                        // request; skip it.
+                        continue;
+                    }
+                    return decode_response(&raw);
+                }
+                FrameRead::Eof => {
+                    return Err(PaldError::protocol("server closed the connection"))
+                }
+                FrameRead::Idle => continue,
+            }
+        }
+    }
+
+    fn expect_err(resp: Response) -> PaldError {
+        match resp {
+            Response::Error { code, info, detail } => wire_error_to_pald(code, info, detail),
+            other => PaldError::protocol(format!("unexpected response frame {other:?}")),
+        }
+    }
+
+    /// One-shot cohesion compute.
+    pub fn compute(&mut self, cfg: &WireConfig, matrix: &Mat) -> Result<Mat, PaldError> {
+        let resp =
+            self.request(&Request::Compute { cfg: cfg.clone(), matrix: matrix.clone() })?;
+        match resp {
+            Response::Cohesion { matrix } => Ok(matrix),
+            other => Err(Self::expect_err(other)),
+        }
+    }
+
+    /// Explicit batch compute; outputs are in input order.
+    pub fn compute_batch(
+        &mut self,
+        cfg: &WireConfig,
+        matrices: Vec<Mat>,
+    ) -> Result<Vec<Mat>, PaldError> {
+        let resp = self.request(&Request::ComputeBatch { cfg: cfg.clone(), matrices })?;
+        match resp {
+            Response::Batch { matrices } => Ok(matrices),
+            other => Err(Self::expect_err(other)),
+        }
+    }
+
+    /// Open a streaming session; returns `(session_id, n)`.
+    pub fn session_open(&mut self, cfg: &WireConfig, seed: &Mat) -> Result<(u64, u32), PaldError> {
+        let resp =
+            self.request(&Request::SessionOpen { cfg: cfg.clone(), seed: seed.clone() })?;
+        match resp {
+            Response::SessionOpened { session, n } => Ok((session, n)),
+            other => Err(Self::expect_err(other)),
+        }
+    }
+
+    /// Insert a point into a streaming session; returns
+    /// `(n_after, index)`.
+    pub fn session_insert(&mut self, session: u64, row: &[f32]) -> Result<(u32, u32), PaldError> {
+        let resp = self.request(&Request::SessionInsert { session, row: row.to_vec() })?;
+        match resp {
+            Response::Updated { n, index } => Ok((n, index)),
+            other => Err(Self::expect_err(other)),
+        }
+    }
+
+    /// Remove a point from a streaming session; returns
+    /// `(n_after, index)`.
+    pub fn session_remove(&mut self, session: u64, index: u32) -> Result<(u32, u32), PaldError> {
+        let resp = self.request(&Request::SessionRemove { session, index })?;
+        match resp {
+            Response::Updated { n, index } => Ok((n, index)),
+            other => Err(Self::expect_err(other)),
+        }
+    }
+
+    /// The session's current cohesion matrix.
+    pub fn session_query(&mut self, session: u64) -> Result<Mat, PaldError> {
+        let resp = self.request(&Request::SessionQuery { session })?;
+        match resp {
+            Response::Cohesion { matrix } => Ok(matrix),
+            other => Err(Self::expect_err(other)),
+        }
+    }
+
+    /// Close a streaming session.
+    pub fn session_close(&mut self, session: u64) -> Result<(), PaldError> {
+        let resp = self.request(&Request::SessionClose { session })?;
+        match resp {
+            Response::Closed => Ok(()),
+            other => Err(Self::expect_err(other)),
+        }
+    }
+
+    /// Fetch the plaintext metrics scrape.
+    pub fn stats(&mut self) -> Result<String, PaldError> {
+        let resp = self.request(&Request::Stats)?;
+        match resp {
+            Response::Stats { text } => Ok(text),
+            other => Err(Self::expect_err(other)),
+        }
+    }
+
+    /// Ask the server to drain (graceful shutdown).
+    pub fn shutdown(&mut self) -> Result<(), PaldError> {
+        let resp = self.request(&Request::Shutdown)?;
+        match resp {
+            Response::ShuttingDown => Ok(()),
+            other => Err(Self::expect_err(other)),
+        }
+    }
+}

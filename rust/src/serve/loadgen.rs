@@ -1,0 +1,451 @@
+//! Load generator for `pald-serve`: closed-loop and open-loop request
+//! streams over a mixed-shape workload, with per-mix latency quantiles
+//! (p50/p95/p99) and throughput — the measurement half of DESIGN.md
+//! §12, published as `BENCH_serve.json` by `paldx loadgen`.
+//!
+//! * **Closed loop** (`rate == 0`): each of `concurrency` connections
+//!   issues requests back-to-back — measures the server's saturated
+//!   throughput and its latency under self-limiting load.
+//! * **Open loop** (`rate > 0`): arrivals are scheduled on a global
+//!   clock at `rate` requests/second and handed to whichever connection
+//!   is free — measures latency at a fixed offered load, where queueing
+//!   (and load shedding) actually shows.  Retriable rejects
+//!   ([`PaldError::is_retriable`]) are counted as sheds, not failures:
+//!   an overloaded server refusing work politely is the designed
+//!   behavior, while any protocol error fails the run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::data::distmat;
+use crate::io::Json;
+use crate::pald::error::PaldError;
+
+use super::client::ServeClient;
+use super::proto::WireConfig;
+
+/// One shape in the workload mix.
+#[derive(Clone, Debug)]
+pub struct MixSpec {
+    /// Label in reports.
+    pub name: String,
+    /// Problem size.
+    pub n: usize,
+    /// Truncated-neighborhood size (`0` = dense).
+    pub k: u32,
+    /// Relative weight in the mix (picked proportionally).
+    pub weight: u32,
+}
+
+/// Load-generation options.
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    /// Server address.
+    pub addr: String,
+    /// How long to generate load.
+    pub duration: Duration,
+    /// Concurrent connections.
+    pub concurrency: usize,
+    /// Offered load in requests/second (`0` = closed loop).
+    pub rate: f64,
+    /// The shape mix (must be non-empty).
+    pub mixes: Vec<MixSpec>,
+    /// Algorithm requested (`"auto"` for the planner).
+    pub algorithm: String,
+    /// Per-request deadline in ms (`0` = server default).
+    pub deadline_ms: u32,
+    /// RNG seed for mix picking and input generation.
+    pub seed: u64,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        LoadgenOpts {
+            addr: "127.0.0.1:7465".into(),
+            duration: Duration::from_secs(2),
+            concurrency: 4,
+            rate: 0.0,
+            mixes: default_mixes(),
+            algorithm: "auto".into(),
+            deadline_ms: 0,
+            seed: 42,
+        }
+    }
+}
+
+/// The default two-shape mix: small dense one-shots (coalescing fodder)
+/// and a larger truncated shape (the sparse serving path).
+pub fn default_mixes() -> Vec<MixSpec> {
+    vec![
+        MixSpec { name: "dense-small".into(), n: 64, k: 0, weight: 3 },
+        MixSpec { name: "sparse-mid".into(), n: 192, k: 12, weight: 1 },
+    ]
+}
+
+/// Latency quantiles over one mix (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Quantiles {
+    /// Median.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Worst observed.
+    pub max: f64,
+}
+
+/// Per-mix results.
+#[derive(Clone, Debug)]
+pub struct MixReport {
+    /// Mix label.
+    pub name: String,
+    /// Problem size.
+    pub n: usize,
+    /// Truncated-neighborhood size.
+    pub k: u32,
+    /// Requests sent.
+    pub sent: u64,
+    /// Successful responses.
+    pub ok: u64,
+    /// Retriable rejects (overload / draining sheds).
+    pub shed: u64,
+    /// Deadline timeouts.
+    pub timeouts: u64,
+    /// Non-retriable failures.
+    pub errors: u64,
+    /// Latency quantiles over successful requests.
+    pub latency: Quantiles,
+}
+
+/// Whole-run results.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// `"closed-loop"` or `"open-loop"`.
+    pub mode: &'static str,
+    /// Wall-clock seconds the run took.
+    pub elapsed_s: f64,
+    /// Successful responses/second over the run.
+    pub rps: f64,
+    /// Per-mix breakdowns.
+    pub mixes: Vec<MixReport>,
+    /// Wire-protocol errors (any is a failed run).
+    pub protocol_errors: u64,
+}
+
+impl LoadgenReport {
+    /// Totals across mixes: `(sent, ok, shed, timeouts, errors)`.
+    pub fn totals(&self) -> (u64, u64, u64, u64, u64) {
+        self.mixes.iter().fold((0, 0, 0, 0, 0), |acc, m| {
+            (acc.0 + m.sent, acc.1 + m.ok, acc.2 + m.shed, acc.3 + m.timeouts, acc.4 + m.errors)
+        })
+    }
+
+    /// Render as the `BENCH_serve.json` payload.
+    pub fn to_json(&self) -> Json {
+        let (sent, ok, shed, timeouts, errors) = self.totals();
+        Json::Obj(vec![
+            ("experiment".into(), Json::Str("serve".into())),
+            ("mode".into(), Json::Str(self.mode.into())),
+            ("elapsed_s".into(), Json::Num(self.elapsed_s)),
+            ("rps".into(), Json::Num(self.rps)),
+            ("sent".into(), Json::Num(sent as f64)),
+            ("ok".into(), Json::Num(ok as f64)),
+            ("shed".into(), Json::Num(shed as f64)),
+            ("timeouts".into(), Json::Num(timeouts as f64)),
+            ("errors".into(), Json::Num(errors as f64)),
+            ("protocol_errors".into(), Json::Num(self.protocol_errors as f64)),
+            (
+                "mixes".into(),
+                Json::Arr(
+                    self.mixes
+                        .iter()
+                        .map(|m| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::Str(m.name.clone())),
+                                ("n".into(), Json::Num(m.n as f64)),
+                                ("k".into(), Json::Num(m.k as f64)),
+                                ("sent".into(), Json::Num(m.sent as f64)),
+                                ("ok".into(), Json::Num(m.ok as f64)),
+                                ("shed".into(), Json::Num(m.shed as f64)),
+                                ("timeouts".into(), Json::Num(m.timeouts as f64)),
+                                ("errors".into(), Json::Num(m.errors as f64)),
+                                ("p50_s".into(), Json::Num(m.latency.p50)),
+                                ("p95_s".into(), Json::Num(m.latency.p95)),
+                                ("p99_s".into(), Json::Num(m.latency.p99)),
+                                ("max_s".into(), Json::Num(m.latency.max)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn xorshift(s: &mut u64) -> u64 {
+    *s ^= *s << 13;
+    *s ^= *s >> 7;
+    *s ^= *s << 17;
+    *s
+}
+
+/// Quantile over sorted latencies: the ceil-rank convention.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Compute quantiles from an unsorted latency sample.
+pub fn quantiles(mut latencies: Vec<f64>) -> Quantiles {
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    Quantiles {
+        p50: quantile(&latencies, 0.50),
+        p95: quantile(&latencies, 0.95),
+        p99: quantile(&latencies, 0.99),
+        max: latencies.last().copied().unwrap_or(0.0),
+    }
+}
+
+enum Outcome {
+    Ok(f64),
+    Shed,
+    Timeout,
+    Error,
+    Protocol,
+}
+
+/// Run the load generator against a live server.
+pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport, PaldError> {
+    if opts.mixes.is_empty() {
+        return Err(PaldError::protocol("loadgen needs at least one mix"));
+    }
+    if opts.concurrency == 0 {
+        return Err(PaldError::protocol("loadgen needs at least one connection"));
+    }
+    // One input matrix per mix, generated once and shared read-only.
+    let inputs: Vec<crate::core::Mat> = opts
+        .mixes
+        .iter()
+        .enumerate()
+        .map(|(i, m)| distmat::random_tie_free(m.n, opts.seed.wrapping_add(i as u64)))
+        .collect();
+    let weight_total: u64 = opts.mixes.iter().map(|m| m.weight.max(1) as u64).sum();
+
+    let start = Instant::now();
+    let deadline = start + opts.duration;
+    // Open-loop arrival schedule: request i departs at start + i/rate.
+    let arrivals = AtomicU64::new(0);
+    let open_loop = opts.rate > 0.0;
+
+    let worker = |widx: usize| -> Vec<(usize, Outcome)> {
+        let mut out = Vec::new();
+        let mut rng = (opts.seed ^ 0x9e3779b97f4a7c15u64.wrapping_mul(widx as u64 + 1)) | 1;
+        let mut client = match ServeClient::connect(&opts.addr) {
+            Ok(c) => c,
+            Err(_) => {
+                out.push((0, Outcome::Protocol));
+                return out;
+            }
+        };
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            if open_loop {
+                // Claim the next scheduled arrival; sleep until it.
+                let i = arrivals.fetch_add(1, Ordering::Relaxed);
+                let at = start + Duration::from_secs_f64(i as f64 / opts.rate);
+                if at >= deadline {
+                    break;
+                }
+                if at > now {
+                    std::thread::sleep(at - now);
+                }
+            }
+            // Weighted mix pick.
+            let mut roll = xorshift(&mut rng) % weight_total;
+            let mut mix_idx = 0;
+            for (i, m) in opts.mixes.iter().enumerate() {
+                let w = m.weight.max(1) as u64;
+                if roll < w {
+                    mix_idx = i;
+                    break;
+                }
+                roll -= w;
+            }
+            let mix = &opts.mixes[mix_idx];
+            let cfg = WireConfig {
+                algorithm: opts.algorithm.clone(),
+                tie: crate::pald::TieMode::Strict,
+                k: mix.k,
+                deadline_ms: opts.deadline_ms,
+            };
+            let t0 = Instant::now();
+            let outcome = match client.compute(&cfg, &inputs[mix_idx]) {
+                Ok(c) => {
+                    debug_assert_eq!(c.rows(), mix.n);
+                    Outcome::Ok(t0.elapsed().as_secs_f64())
+                }
+                Err(e) if e.is_retriable() => Outcome::Shed,
+                Err(PaldError::Timeout { .. }) => Outcome::Timeout,
+                Err(PaldError::Protocol { .. }) => {
+                    // Protocol errors close the connection server-side;
+                    // reconnect before the next request.
+                    match ServeClient::connect(&opts.addr) {
+                        Ok(c) => client = c,
+                        Err(_) => {
+                            out.push((mix_idx, Outcome::Protocol));
+                            break;
+                        }
+                    }
+                    Outcome::Protocol
+                }
+                Err(_) => Outcome::Error,
+            };
+            out.push((mix_idx, outcome));
+        }
+        out
+    };
+
+    let worker = &worker;
+    let all: Vec<(usize, Outcome)> = std::thread::scope(|scope| {
+        let handles: Vec<_> =
+            (0..opts.concurrency).map(|w| scope.spawn(move || worker(w))).collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap_or_default()).collect()
+    });
+    let elapsed_s = start.elapsed().as_secs_f64();
+
+    let mut protocol_errors = 0u64;
+    let mut per_mix: Vec<(u64, u64, u64, u64, u64, Vec<f64>)> =
+        vec![(0, 0, 0, 0, 0, Vec::new()); opts.mixes.len()];
+    for (mix_idx, outcome) in all {
+        let slot = &mut per_mix[mix_idx];
+        slot.0 += 1;
+        match outcome {
+            Outcome::Ok(lat) => {
+                slot.1 += 1;
+                slot.5.push(lat);
+            }
+            Outcome::Shed => slot.2 += 1,
+            Outcome::Timeout => slot.3 += 1,
+            Outcome::Error => slot.4 += 1,
+            Outcome::Protocol => {
+                slot.4 += 1;
+                protocol_errors += 1;
+            }
+        }
+    }
+    let mixes: Vec<MixReport> = opts
+        .mixes
+        .iter()
+        .zip(per_mix)
+        .map(|(m, (sent, ok, shed, timeouts, errors, lats))| MixReport {
+            name: m.name.clone(),
+            n: m.n,
+            k: m.k,
+            sent,
+            ok,
+            shed,
+            timeouts,
+            errors,
+            latency: quantiles(lats),
+        })
+        .collect();
+    let ok_total: u64 = mixes.iter().map(|m| m.ok).sum();
+    Ok(LoadgenReport {
+        mode: if open_loop { "open-loop" } else { "closed-loop" },
+        elapsed_s,
+        rps: ok_total as f64 / elapsed_s.max(1e-9),
+        mixes,
+        protocol_errors,
+    })
+}
+
+/// Parse a `--mix` spec: comma-separated `name:n:k:weight` entries,
+/// e.g. `dense:64:0:3,sparse:256:16:1`.
+pub fn parse_mixes(spec: &str) -> Result<Vec<MixSpec>, PaldError> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() != 4 {
+            return Err(PaldError::protocol(format!(
+                "bad mix entry '{part}' (want name:n:k:weight)"
+            )));
+        }
+        let parse = |s: &str, what: &str| -> Result<u64, PaldError> {
+            s.parse::<u64>()
+                .map_err(|_| PaldError::protocol(format!("bad mix {what} '{s}' in '{part}'")))
+        };
+        out.push(MixSpec {
+            name: fields[0].to_string(),
+            n: parse(fields[1], "n")? as usize,
+            k: parse(fields[2], "k")? as u32,
+            weight: parse(fields[3], "weight")? as u32,
+        });
+    }
+    if out.is_empty() {
+        return Err(PaldError::protocol("empty --mix spec"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_follow_ceil_rank_convention() {
+        let lats: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let q = quantiles(lats);
+        assert_eq!(q.p50, 50.0);
+        assert_eq!(q.p95, 95.0);
+        assert_eq!(q.p99, 99.0);
+        assert_eq!(q.max, 100.0);
+        let one = quantiles(vec![7.0]);
+        assert_eq!((one.p50, one.p99, one.max), (7.0, 7.0, 7.0));
+        let none = quantiles(vec![]);
+        assert_eq!(none.max, 0.0);
+    }
+
+    #[test]
+    fn mix_spec_parses_and_rejects() {
+        let mixes = parse_mixes("dense:64:0:3,sparse:256:16:1").unwrap();
+        assert_eq!(mixes.len(), 2);
+        assert_eq!(mixes[0].name, "dense");
+        assert_eq!((mixes[1].n, mixes[1].k, mixes[1].weight), (256, 16, 1));
+        assert!(parse_mixes("").is_err());
+        assert!(parse_mixes("only:three:fields").is_err());
+        assert!(parse_mixes("bad:n?:0:1").is_err());
+    }
+
+    #[test]
+    fn report_json_has_the_quantile_fields() {
+        let report = LoadgenReport {
+            mode: "closed-loop",
+            elapsed_s: 1.5,
+            rps: 100.0,
+            mixes: vec![MixReport {
+                name: "dense-small".into(),
+                n: 64,
+                k: 0,
+                sent: 150,
+                ok: 148,
+                shed: 2,
+                timeouts: 0,
+                errors: 0,
+                latency: Quantiles { p50: 0.01, p95: 0.02, p99: 0.03, max: 0.05 },
+            }],
+            protocol_errors: 0,
+        };
+        let text = report.to_json().render();
+        for key in ["\"p50_s\"", "\"p95_s\"", "\"p99_s\"", "\"rps\"", "\"protocol_errors\""] {
+            assert!(text.contains(key), "{key} missing from {text}");
+        }
+        assert_eq!(report.totals().0, 150);
+    }
+}

@@ -1,0 +1,49 @@
+//! `pald-serve`: an async serving layer for PaLD cohesion over a
+//! length-prefixed TCP wire protocol (DESIGN.md §12).
+//!
+//! The serving layer turns the library's amortized machinery —
+//! [`Session`](crate::pald::Session) plan/workspace reuse and
+//! [`IncrementalPald`](crate::pald::IncrementalPald) online updates —
+//! into a long-running process with explicit overload behavior:
+//!
+//! * [`proto`] — the framed wire protocol: versioned header, typed
+//!   request/response frames, and total decoding (malformed input is a
+//!   typed error, never a panic).
+//! * [`admission`] — bounded-queue admission control: per-request
+//!   deadlines, retriable load-shedding when the queue is full, and a
+//!   drain mode for graceful shutdown.
+//! * [`pool`] — the warm-pool scheduler: sessions keyed by
+//!   `(n, k, algorithm, tie)` shape, reused across requests, LRU-evicted
+//!   under a memory cap.  Same-shape one-shots arriving within the batch
+//!   window are coalesced into a single batched compute — bit-identical
+//!   to serving them one at a time.
+//! * [`stream`] — streaming sessions: wire-addressable incremental
+//!   engines with insert/remove/query and idle reaping.
+//! * [`server`] — the server itself: acceptor, per-connection
+//!   reader/writer threads, the coalescing dispatcher, a worker pool,
+//!   signal-driven graceful drain, and a plaintext metrics scrape
+//!   (in-band `STATS` frame or `GET /metrics` on the same port).
+//! * [`client`] — a blocking client used by `paldx loadgen` and the
+//!   end-to-end tests.
+//! * [`loadgen`] — closed-loop and open-loop load generation with
+//!   per-mix latency quantiles, publishing `BENCH_serve.json`.
+//!
+//! Everything is std-only: threads and channels, no async runtime.
+
+pub mod admission;
+pub mod client;
+pub mod loadgen;
+pub mod pool;
+pub mod proto;
+pub mod server;
+pub mod stream;
+
+pub use admission::{Admission, Deadline, Ticket};
+pub use client::ServeClient;
+pub use loadgen::{LoadgenOpts, LoadgenReport, MixSpec};
+pub use pool::{ShapeKey, WarmPool};
+pub use proto::{ErrorCode, Request, Response, WireConfig};
+pub use server::{
+    install_signal_handlers, shutdown_requested, ServeConfig, Server, ServerHandle,
+};
+pub use stream::StreamSessions;

@@ -1,0 +1,274 @@
+//! Warm-pool scheduler for `pald-serve`: shape-keyed [`Session`] reuse
+//! with LRU eviction under a memory cap (DESIGN.md §12).
+//!
+//! A [`Session`] amortizes planning and workspace allocation across
+//! computes of the same shape — exactly the steady-state the serving
+//! layer lives in.  The pool keys warm sessions by
+//! [`ShapeKey`]` = (n, k, algorithm, tie)`; the dispatcher coalesces
+//! same-key one-shots arriving within a batch window into a single
+//! `compute_batch_refs` call on one checked-out session, which is
+//! bit-identical to serving them one at a time (the batch path maps
+//! sequential [`Session::compute`] over the inputs — proved end-to-end
+//! by `tests/serve.rs`).
+//!
+//! Memory is bounded: each warm session is charged its
+//! `workspace_bytes()` plus one cohesion matrix (`n² × 4` — the
+//! `cohesion_bytes` a checkin produces), and when the pool's total
+//! crosses the cap, least-recently-used sessions are dropped until it
+//! fits.  A session larger than the whole cap is simply never retained.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::pald::error::PaldError;
+use crate::pald::{Algorithm, PaldConfig, Session, TieMode};
+
+use super::proto::WireConfig;
+
+/// Identity of a warm session: two requests with the same key are
+/// served bit-identically by the same session, so they may share one.
+/// Algorithm and tie ride as `&'static str` registry names (the enums
+/// interned them; neither derives `Hash`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ShapeKey {
+    /// Problem size.
+    pub n: usize,
+    /// Truncated-neighborhood size (`0` = dense).
+    pub k: usize,
+    /// Registry algorithm name (possibly `"auto"`; the session's
+    /// planner resolves it per compute, deterministically for fixed
+    /// `(n, k)`).
+    pub algorithm: &'static str,
+    /// Tie-mode name.
+    pub tie: &'static str,
+}
+
+impl ShapeKey {
+    /// Key for a request: `n` from the input matrix, the rest from its
+    /// wire options.  Unknown algorithm names are a typed error (the
+    /// request is rejected before any session is built).
+    pub fn for_request(cfg: &WireConfig, n: usize) -> Result<ShapeKey, PaldError> {
+        let algorithm = Algorithm::from_name(&cfg.algorithm)?;
+        Ok(ShapeKey { n, k: cfg.k as usize, algorithm: algorithm.name(), tie: cfg.tie.name() })
+    }
+}
+
+/// Build the [`PaldConfig`] a key's sessions run under.  `threads` is
+/// server policy (`threads_per_job`), not client-controlled.
+pub fn config_for(key: &ShapeKey, threads: usize) -> Result<PaldConfig, PaldError> {
+    Ok(PaldConfig {
+        algorithm: Algorithm::from_name(key.algorithm)?,
+        tie_mode: TieMode::parse(key.tie)?,
+        k: key.k,
+        threads,
+        ..PaldConfig::default()
+    })
+}
+
+struct Warm {
+    session: Session,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    /// Warm sessions by shape; more than one per key can exist when
+    /// same-shape requests overlap.
+    warm: HashMap<ShapeKey, Vec<Warm>>,
+    total_bytes: usize,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Shape-keyed warm-session pool with LRU eviction under `mem_cap`
+/// bytes.  Checkout/checkin are short critical sections; computes run
+/// on checked-out sessions outside the lock.
+pub struct WarmPool {
+    inner: Mutex<Inner>,
+    mem_cap: usize,
+}
+
+impl WarmPool {
+    /// Pool retaining at most `mem_cap` bytes of warm state.
+    pub fn new(mem_cap: usize) -> WarmPool {
+        WarmPool {
+            inner: Mutex::new(Inner {
+                warm: HashMap::new(),
+                total_bytes: 0,
+                clock: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            mem_cap,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // A panic inside these short critical sections is a bug, but a
+        // poisoned pool must not take the whole server down with it.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Check out a session for `key`, reusing a warm one when present
+    /// (its planning and workspaces are already shaped) or building a
+    /// fresh one.  The caller runs the compute, then returns the
+    /// session via [`WarmPool::checkin`].
+    pub fn checkout(&self, key: &ShapeKey, threads: usize) -> Result<Session, PaldError> {
+        {
+            let mut inner = self.lock();
+            if let Some(list) = inner.warm.get_mut(key) {
+                if let Some(w) = list.pop() {
+                    if list.is_empty() {
+                        inner.warm.remove(key);
+                    }
+                    inner.total_bytes -= w.bytes;
+                    inner.hits += 1;
+                    return Ok(w.session);
+                }
+            }
+            inner.misses += 1;
+        }
+        Session::new(config_for(key, threads)?)
+    }
+
+    /// Return a session to the pool.  It is charged its workspace bytes
+    /// plus one `n² × 4` cohesion matrix, then LRU eviction runs until
+    /// the pool fits its cap again.
+    pub fn checkin(&self, key: ShapeKey, session: Session) {
+        let bytes = session.workspace_bytes() + cohesion_bytes(key.n);
+        let mut inner = self.lock();
+        if bytes > self.mem_cap {
+            // Larger than the whole budget: never retained.
+            inner.evictions += 1;
+            return;
+        }
+        inner.clock += 1;
+        let last_used = inner.clock;
+        inner.warm.entry(key).or_default().push(Warm { session, bytes, last_used });
+        inner.total_bytes += bytes;
+        while inner.total_bytes > self.mem_cap {
+            // Find the least-recently-used warm session across shapes.
+            let lru = inner
+                .warm
+                .iter()
+                .filter_map(|(k, list)| {
+                    list.iter().map(|w| (w.last_used, *k)).min_by_key(|(t, _)| *t)
+                })
+                .min_by_key(|(t, _)| *t);
+            let Some((stamp, k)) = lru else { break };
+            if let Some(list) = inner.warm.get_mut(&k) {
+                if let Some(at) = list.iter().position(|w| w.last_used == stamp) {
+                    let w = list.remove(at);
+                    inner.total_bytes -= w.bytes;
+                    inner.evictions += 1;
+                }
+                if list.is_empty() {
+                    inner.warm.remove(&k);
+                }
+            }
+        }
+    }
+
+    /// Bytes of warm state currently retained.
+    pub fn bytes(&self) -> usize {
+        self.lock().total_bytes
+    }
+
+    /// Warm sessions currently retained.
+    pub fn len(&self) -> usize {
+        self.lock().warm.values().map(Vec::len).sum()
+    }
+
+    /// Is the pool empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counters for the scrape endpoint: `(hits, misses, evictions)`.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        let inner = self.lock();
+        (inner.hits, inner.misses, inner.evictions)
+    }
+}
+
+/// Bytes of one dense `n × n` cohesion matrix — the result each warm
+/// session's next compute will materialize.
+pub fn cohesion_bytes(n: usize) -> usize {
+    n * n * std::mem::size_of::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+
+    fn key(n: usize) -> ShapeKey {
+        ShapeKey { n, k: 0, algorithm: "auto", tie: "strict" }
+    }
+
+    #[test]
+    fn shape_key_resolves_wire_options() {
+        let cfg = WireConfig { algorithm: "opt-pairwise".into(), tie: TieMode::Split, k: 8, deadline_ms: 0 };
+        let k = ShapeKey::for_request(&cfg, 64).unwrap();
+        assert_eq!(k, ShapeKey { n: 64, k: 8, algorithm: "opt-pairwise", tie: "split" });
+        let bad = WireConfig { algorithm: "no-such-kernel".into(), ..WireConfig::default() };
+        assert!(ShapeKey::for_request(&bad, 64).is_err());
+    }
+
+    #[test]
+    fn checkout_reuses_warm_sessions() {
+        let pool = WarmPool::new(64 << 20);
+        let k = key(24);
+        let d = distmat::random_tie_free(24, 3);
+        let mut s = pool.checkout(&k, 1).unwrap();
+        let c1 = s.compute(&d).unwrap();
+        pool.checkin(k, s);
+        assert_eq!(pool.len(), 1);
+        let mut s2 = pool.checkout(&k, 1).unwrap();
+        let c2 = s2.compute(&d).unwrap();
+        assert_eq!(c1, c2, "warm session must be bit-identical");
+        pool.checkin(k, s2);
+        let (hits, misses, _) = pool.counters();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn lru_eviction_respects_memory_cap() {
+        // Workspaces are sized by the first compute, so measure a warmed
+        // n=24 session and cap the pool at exactly that footprint.
+        let k16 = key(16);
+        let k24 = key(24);
+        let mut s24 = Session::new(config_for(&k24, 1).unwrap()).unwrap();
+        s24.compute(&distmat::random_tie_free(24, 3)).unwrap();
+        let one = s24.workspace_bytes() + cohesion_bytes(24);
+        let pool = WarmPool::new(one);
+        let mut s16 = Session::new(config_for(&k16, 1).unwrap()).unwrap();
+        s16.compute(&distmat::random_tie_free(16, 3)).unwrap();
+        pool.checkin(k16, s16);
+        assert_eq!(pool.len(), 1);
+        // The bigger checkin pushes the total over cap; the older (LRU)
+        // n=16 session goes first.
+        pool.checkin(k24, s24);
+        assert!(pool.bytes() <= one, "cap respected: {} > {one}", pool.bytes());
+        let (_, _, evictions) = pool.counters();
+        assert!(evictions >= 1);
+        // The survivor is the newer key.
+        let (hits_before, _, _) = pool.counters();
+        let _s = pool.checkout(&k24, 1).unwrap();
+        let (hits_after, _, _) = pool.counters();
+        assert_eq!(hits_after, hits_before + 1, "n=24 stayed warm");
+    }
+
+    #[test]
+    fn oversized_sessions_are_never_retained() {
+        let pool = WarmPool::new(8); // 8 bytes: nothing fits
+        let k = key(16);
+        let s = Session::new(config_for(&k, 1).unwrap()).unwrap();
+        pool.checkin(k, s);
+        assert!(pool.is_empty());
+        assert_eq!(pool.bytes(), 0);
+    }
+}

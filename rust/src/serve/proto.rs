@@ -1,0 +1,856 @@
+//! `pald-serve` wire protocol: versioned, length-prefixed binary frames
+//! over TCP (DESIGN.md §12).
+//!
+//! Every frame is `[len: u32 LE][version: u8][opcode: u8][request_id:
+//! u64 LE][body…]` where `len` counts everything after the 4-byte
+//! prefix.  Decoding is total: truncated, oversized, mis-versioned, or
+//! structurally malformed frames produce [`PaldError::Protocol`] — never
+//! a panic, never an unbounded allocation (the length prefix is checked
+//! against the frame cap *before* the payload buffer is sized).
+//!
+//! Requests cover one-shot compute, explicit batch compute, the
+//! streaming-session lifecycle (open / insert / remove / query / close),
+//! a `STATS` scrape, and an in-band `SHUTDOWN` drain trigger; responses
+//! mirror them plus a typed error frame whose codes map onto
+//! [`PaldError`] variants on the client side
+//! ([`wire_error_to_pald`]), with retriability carried explicitly so
+//! load-shed rejects ([`ErrorCode::Overloaded`], [`ErrorCode::Draining`])
+//! are distinguishable from hard failures.
+
+use std::io::Read;
+
+use crate::core::Mat;
+use crate::pald::error::PaldError;
+use crate::pald::TieMode;
+
+/// Wire protocol version carried in every frame header.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Default cap on one frame's payload (256 MiB — a dense `n = 8192`
+/// matrix); larger frames are rejected as [`PaldError::Protocol`]
+/// before any allocation.
+pub const DEFAULT_MAX_FRAME: usize = 1 << 28;
+
+/// Bytes of header inside the length-prefixed region.
+const HEADER_LEN: usize = 1 + 1 + 8;
+
+/// How many consecutive read timeouts mid-frame before the peer is
+/// declared stalled (at the serving layer's 250 ms poll this is ~30 s).
+const MID_FRAME_RETRIES: usize = 120;
+
+// ---------------------------------------------------------------------
+// Opcodes
+// ---------------------------------------------------------------------
+
+const OP_COMPUTE: u8 = 0x01;
+const OP_COMPUTE_BATCH: u8 = 0x02;
+const OP_SESSION_OPEN: u8 = 0x10;
+const OP_SESSION_INSERT: u8 = 0x11;
+const OP_SESSION_REMOVE: u8 = 0x12;
+const OP_SESSION_QUERY: u8 = 0x13;
+const OP_SESSION_CLOSE: u8 = 0x14;
+const OP_STATS: u8 = 0x20;
+const OP_SHUTDOWN: u8 = 0x21;
+
+const OP_R_COHESION: u8 = 0x81;
+const OP_R_BATCH: u8 = 0x82;
+const OP_R_SESSION_OPENED: u8 = 0x90;
+const OP_R_UPDATED: u8 = 0x91;
+const OP_R_CLOSED: u8 = 0x92;
+const OP_R_STATS: u8 = 0xA0;
+const OP_R_SHUTTING_DOWN: u8 = 0xA1;
+const OP_R_ERROR: u8 = 0xE0;
+
+// ---------------------------------------------------------------------
+// Typed frames
+// ---------------------------------------------------------------------
+
+/// Per-request execution options carried on compute and session-open
+/// frames — the wire subset of `PaldConfig` (thread budget and block
+/// sizes stay server-side policy).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireConfig {
+    /// Registry algorithm name (`"auto"` for the planner).
+    pub algorithm: String,
+    /// Distance-tie handling.
+    pub tie: TieMode,
+    /// Truncated-neighborhood size (`0` = dense semantics).
+    pub k: u32,
+    /// Per-request deadline in milliseconds (`0` = server default).  A
+    /// request still queued when its deadline lapses is answered with
+    /// [`ErrorCode::Timeout`] instead of being started late.
+    pub deadline_ms: u32,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig { algorithm: "auto".into(), tie: TieMode::Strict, k: 0, deadline_ms: 0 }
+    }
+}
+
+/// A client request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// One-shot cohesion over a dense distance matrix.  Same-shape
+    /// one-shots are coalesced server-side into a single
+    /// `compute_batch` dispatch (bit-identical results; DESIGN.md §12).
+    Compute {
+        /// Execution options.
+        cfg: WireConfig,
+        /// Dense symmetric distance matrix.
+        matrix: Mat,
+    },
+    /// Explicit batch: every matrix runs under the same options, one
+    /// response frame carries all outputs in order.
+    ComputeBatch {
+        /// Execution options shared by the whole batch.
+        cfg: WireConfig,
+        /// The batch, in response order.
+        matrices: Vec<Mat>,
+    },
+    /// Open a streaming session: a long-lived `IncrementalPald` seeded
+    /// with `seed`, addressed by the returned session id.
+    SessionOpen {
+        /// Execution options for the session's engine.
+        cfg: WireConfig,
+        /// Seed distance matrix.
+        seed: Mat,
+    },
+    /// Insert one point (its distance row to the current points) into a
+    /// streaming session.
+    SessionInsert {
+        /// Session id from [`Response::SessionOpened`].
+        session: u64,
+        /// Distances from the new point to the session's current points.
+        row: Vec<f32>,
+    },
+    /// Remove a point from a streaming session.
+    SessionRemove {
+        /// Session id.
+        session: u64,
+        /// Index of the point to remove.
+        index: u32,
+    },
+    /// Fetch the session's current cohesion matrix.
+    SessionQuery {
+        /// Session id.
+        session: u64,
+    },
+    /// Close a streaming session and free its state.
+    SessionClose {
+        /// Session id.
+        session: u64,
+    },
+    /// Metrics scrape: the same plaintext the HTTP endpoint serves.
+    Stats,
+    /// Begin a graceful drain (equivalent to SIGTERM): in-flight work
+    /// completes, new work is rejected with [`ErrorCode::Draining`].
+    Shutdown,
+}
+
+/// A server response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Cohesion matrix for a one-shot compute or a session query.
+    Cohesion {
+        /// The cohesion matrix.
+        matrix: Mat,
+    },
+    /// Outputs of an explicit batch, in request order.
+    Batch {
+        /// The cohesion matrices.
+        matrices: Vec<Mat>,
+    },
+    /// A streaming session was opened.
+    SessionOpened {
+        /// Id addressing the session in later frames.
+        session: u64,
+        /// Points currently held.
+        n: u32,
+    },
+    /// A session insert/remove was applied.
+    Updated {
+        /// Points held after the update.
+        n: u32,
+        /// Index the update touched (the inserted point's index, or the
+        /// removed index).
+        index: u32,
+    },
+    /// A session was closed.
+    Closed,
+    /// Plaintext metrics scrape.
+    Stats {
+        /// The scrape body.
+        text: String,
+    },
+    /// Drain acknowledged.
+    ShuttingDown,
+    /// Typed failure.
+    Error {
+        /// Machine-readable cause.
+        code: ErrorCode,
+        /// Structured detail for the codes that carry a number
+        /// (deadline for timeouts, queue cap for overload); `0`
+        /// otherwise.
+        info: u64,
+        /// Human-readable detail.
+        detail: String,
+    },
+}
+
+/// Machine-readable error causes on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Malformed or mis-versioned frame; the server closes the
+    /// connection after sending this.
+    Protocol = 1,
+    /// The request's deadline lapsed before (or while) it was served.
+    Timeout = 2,
+    /// Load shed: the bounded admission queue was full.  **Retriable.**
+    Overloaded = 3,
+    /// The server is draining for shutdown.  **Retriable.**
+    Draining = 4,
+    /// The request was understood but invalid (e.g. an asymmetric
+    /// matrix under strict validation, an unknown algorithm name).
+    BadRequest = 5,
+    /// No streaming session with the given id.
+    NoSuchSession = 6,
+    /// Unexpected server-side failure.
+    Internal = 7,
+}
+
+impl ErrorCode {
+    /// Decode from the wire byte.
+    pub fn from_u8(v: u8) -> Option<ErrorCode> {
+        Some(match v {
+            1 => ErrorCode::Protocol,
+            2 => ErrorCode::Timeout,
+            3 => ErrorCode::Overloaded,
+            4 => ErrorCode::Draining,
+            5 => ErrorCode::BadRequest,
+            6 => ErrorCode::NoSuchSession,
+            7 => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    /// Should the client back off and retry?  `true` exactly for the
+    /// load-shedding rejects: the request was never started.
+    pub fn retriable(self) -> bool {
+        matches!(self, ErrorCode::Overloaded | ErrorCode::Draining)
+    }
+}
+
+/// Map a server-side failure onto its wire representation.
+pub fn pald_error_to_wire(e: &PaldError) -> (ErrorCode, u64, String) {
+    match e {
+        PaldError::Protocol { detail } => (ErrorCode::Protocol, 0, detail.clone()),
+        PaldError::Timeout { deadline_ms } => {
+            (ErrorCode::Timeout, *deadline_ms, e.to_string())
+        }
+        PaldError::Overloaded { cap, .. } => (ErrorCode::Overloaded, *cap as u64, e.to_string()),
+        PaldError::Draining => (ErrorCode::Draining, 0, e.to_string()),
+        other => (ErrorCode::BadRequest, 0, other.to_string()),
+    }
+}
+
+/// Map a wire error back onto the typed [`PaldError`] surface — the
+/// client-side inverse of [`pald_error_to_wire`].  Retriable codes stay
+/// retriable ([`PaldError::is_retriable`]).
+pub fn wire_error_to_pald(code: ErrorCode, info: u64, detail: String) -> PaldError {
+    match code {
+        ErrorCode::Protocol => PaldError::Protocol { detail },
+        ErrorCode::Timeout => PaldError::Timeout { deadline_ms: info },
+        // The queue was full at rejection time, so queued == cap.
+        ErrorCode::Overloaded => {
+            PaldError::Overloaded { queued: info as usize, cap: info as usize }
+        }
+        ErrorCode::Draining => PaldError::Draining,
+        ErrorCode::BadRequest | ErrorCode::NoSuchSession | ErrorCode::Internal => {
+            PaldError::Remote { detail }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Primitive encoding
+// ---------------------------------------------------------------------
+
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn new(opcode: u8, request_id: u64) -> Writer {
+        let mut w = Writer(Vec::with_capacity(64));
+        // Placeholder length patched by finish().
+        w.0.extend_from_slice(&[0; 4]);
+        w.0.push(PROTO_VERSION);
+        w.0.push(opcode);
+        w.u64(request_id);
+        w
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+
+    fn f32s(&mut self, vs: &[f32]) {
+        self.0.reserve(vs.len() * 4);
+        for v in vs {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn mat(&mut self, m: &Mat) {
+        self.u32(m.rows() as u32);
+        self.f32s(m.as_slice());
+    }
+
+    fn cfg(&mut self, c: &WireConfig) {
+        self.str(&c.algorithm);
+        self.u8(match c.tie {
+            TieMode::Strict => 0,
+            TieMode::Split => 1,
+        });
+        self.u32(c.k);
+        self.u32(c.deadline_ms);
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        let len = (self.0.len() - 4) as u32;
+        self.0[..4].copy_from_slice(&len.to_le_bytes());
+        self.0
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn need(&self, bytes: usize) -> Result<(), PaldError> {
+        if self.buf.len() - self.pos < bytes {
+            return Err(PaldError::protocol(format!(
+                "frame body truncated: wanted {bytes} more byte(s), have {}",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8, PaldError> {
+        self.need(1)?;
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32, PaldError> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64, PaldError> {
+        self.need(8)?;
+        let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+
+    fn str(&mut self) -> Result<String, PaldError> {
+        let len = self.u32()? as usize;
+        self.need(len)?;
+        let s = std::str::from_utf8(&self.buf[self.pos..self.pos + len])
+            .map_err(|_| PaldError::protocol("string field is not valid UTF-8"))?
+            .to_string();
+        self.pos += len;
+        Ok(s)
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>, PaldError> {
+        let bytes = count
+            .checked_mul(4)
+            .ok_or_else(|| PaldError::protocol("f32 slice length overflows"))?;
+        self.need(bytes)?;
+        let mut out = Vec::with_capacity(count);
+        for i in 0..count {
+            let at = self.pos + i * 4;
+            out.push(f32::from_le_bytes(self.buf[at..at + 4].try_into().unwrap()));
+        }
+        self.pos += bytes;
+        Ok(out)
+    }
+
+    fn mat(&mut self) -> Result<Mat, PaldError> {
+        let n = self.u32()? as usize;
+        let cells = n
+            .checked_mul(n)
+            .ok_or_else(|| PaldError::protocol(format!("matrix size n={n} overflows")))?;
+        let data = self.f32s(cells)?;
+        Ok(Mat::from_vec(n, n, data))
+    }
+
+    fn cfg(&mut self) -> Result<WireConfig, PaldError> {
+        let algorithm = self.str()?;
+        let tie = match self.u8()? {
+            0 => TieMode::Strict,
+            1 => TieMode::Split,
+            other => {
+                return Err(PaldError::protocol(format!("unknown tie-mode byte {other}")))
+            }
+        };
+        Ok(WireConfig { algorithm, tie, k: self.u32()?, deadline_ms: self.u32()? })
+    }
+
+    fn done(&self) -> Result<(), PaldError> {
+        if self.pos != self.buf.len() {
+            return Err(PaldError::protocol(format!(
+                "{} trailing byte(s) after frame body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame encode / decode
+// ---------------------------------------------------------------------
+
+/// Encode one request frame (length prefix included).
+pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
+    let mut w;
+    match req {
+        Request::Compute { cfg, matrix } => {
+            w = Writer::new(OP_COMPUTE, request_id);
+            w.cfg(cfg);
+            w.mat(matrix);
+        }
+        Request::ComputeBatch { cfg, matrices } => {
+            w = Writer::new(OP_COMPUTE_BATCH, request_id);
+            w.cfg(cfg);
+            w.u32(matrices.len() as u32);
+            for m in matrices {
+                w.mat(m);
+            }
+        }
+        Request::SessionOpen { cfg, seed } => {
+            w = Writer::new(OP_SESSION_OPEN, request_id);
+            w.cfg(cfg);
+            w.mat(seed);
+        }
+        Request::SessionInsert { session, row } => {
+            w = Writer::new(OP_SESSION_INSERT, request_id);
+            w.u64(*session);
+            w.u32(row.len() as u32);
+            w.f32s(row);
+        }
+        Request::SessionRemove { session, index } => {
+            w = Writer::new(OP_SESSION_REMOVE, request_id);
+            w.u64(*session);
+            w.u32(*index);
+        }
+        Request::SessionQuery { session } => {
+            w = Writer::new(OP_SESSION_QUERY, request_id);
+            w.u64(*session);
+        }
+        Request::SessionClose { session } => {
+            w = Writer::new(OP_SESSION_CLOSE, request_id);
+            w.u64(*session);
+        }
+        Request::Stats => w = Writer::new(OP_STATS, request_id),
+        Request::Shutdown => w = Writer::new(OP_SHUTDOWN, request_id),
+    }
+    w.finish()
+}
+
+/// Encode one response frame (length prefix included).
+pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
+    let mut w;
+    match resp {
+        Response::Cohesion { matrix } => {
+            w = Writer::new(OP_R_COHESION, request_id);
+            w.mat(matrix);
+        }
+        Response::Batch { matrices } => {
+            w = Writer::new(OP_R_BATCH, request_id);
+            w.u32(matrices.len() as u32);
+            for m in matrices {
+                w.mat(m);
+            }
+        }
+        Response::SessionOpened { session, n } => {
+            w = Writer::new(OP_R_SESSION_OPENED, request_id);
+            w.u64(*session);
+            w.u32(*n);
+        }
+        Response::Updated { n, index } => {
+            w = Writer::new(OP_R_UPDATED, request_id);
+            w.u32(*n);
+            w.u32(*index);
+        }
+        Response::Closed => w = Writer::new(OP_R_CLOSED, request_id),
+        Response::Stats { text } => {
+            w = Writer::new(OP_R_STATS, request_id);
+            w.str(text);
+        }
+        Response::ShuttingDown => w = Writer::new(OP_R_SHUTTING_DOWN, request_id),
+        Response::Error { code, info, detail } => {
+            w = Writer::new(OP_R_ERROR, request_id);
+            w.u8(*code as u8);
+            w.u8(code.retriable() as u8);
+            w.u64(*info);
+            w.str(detail);
+        }
+    }
+    w.finish()
+}
+
+/// A frame as read off the wire, before typed decoding.
+#[derive(Clone, Debug)]
+pub struct RawFrame {
+    /// Protocol version from the header (always [`PROTO_VERSION`] after
+    /// a successful read).
+    pub version: u8,
+    /// Frame opcode.
+    pub opcode: u8,
+    /// Request correlation id.
+    pub request_id: u64,
+    /// Opcode-specific body.
+    pub payload: Vec<u8>,
+}
+
+/// Outcome of one [`read_frame`] attempt on a (possibly timeout-polled)
+/// stream.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete frame arrived.
+    Frame(RawFrame),
+    /// The peer closed the connection at a clean frame boundary.
+    Eof,
+    /// A read timeout fired before any byte of a new frame arrived —
+    /// the connection is idle (lets pollers check a drain flag).
+    Idle,
+}
+
+enum Fill {
+    Done,
+    CleanEof,
+    Idle,
+    TruncatedEof,
+}
+
+/// Fill `buf`, tolerating read-timeout polls.  `retries` bounds how many
+/// consecutive timeouts are allowed once the first byte has arrived.
+fn fill(r: &mut impl Read, buf: &mut [u8], mut retries: usize) -> std::io::Result<Fill> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Ok(if got == 0 { Fill::CleanEof } else { Fill::TruncatedEof });
+            }
+            Ok(m) => got += m,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if got == 0 {
+                    return Ok(Fill::Idle);
+                }
+                if retries == 0 {
+                    return Ok(Fill::TruncatedEof);
+                }
+                retries -= 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Fill::Done)
+}
+
+/// Read one frame, treating a read-timeout before any byte as
+/// [`FrameRead::Idle`].  Oversized (`len > max_frame`), truncated, and
+/// mis-versioned frames are [`PaldError::Protocol`].
+pub fn read_frame(r: &mut impl Read, max_frame: usize) -> Result<FrameRead, PaldError> {
+    let mut len4 = [0u8; 4];
+    match fill(r, &mut len4, MID_FRAME_RETRIES).map_err(io_protocol)? {
+        Fill::Done => {}
+        Fill::CleanEof => return Ok(FrameRead::Eof),
+        Fill::Idle => return Ok(FrameRead::Idle),
+        Fill::TruncatedEof => return Err(PaldError::protocol("truncated frame header")),
+    }
+    read_frame_after_len(r, len4, max_frame)
+}
+
+/// [`read_frame`] when the 4-byte length prefix was already consumed
+/// (the serving layer sniffs those bytes to multiplex HTTP scrapes onto
+/// the same port).
+pub fn read_frame_after_len(
+    r: &mut impl Read,
+    len4: [u8; 4],
+    max_frame: usize,
+) -> Result<FrameRead, PaldError> {
+    let len = u32::from_le_bytes(len4) as usize;
+    if len < HEADER_LEN {
+        return Err(PaldError::protocol(format!(
+            "frame length {len} is shorter than the {HEADER_LEN}-byte header"
+        )));
+    }
+    if len > max_frame {
+        return Err(PaldError::protocol(format!(
+            "oversized frame: {len} bytes exceeds the {max_frame}-byte cap"
+        )));
+    }
+    let mut buf = vec![0u8; len];
+    match fill(r, &mut buf, MID_FRAME_RETRIES).map_err(io_protocol)? {
+        Fill::Done => {}
+        Fill::CleanEof | Fill::Idle | Fill::TruncatedEof => {
+            return Err(PaldError::protocol("frame truncated mid-body"));
+        }
+    }
+    let version = buf[0];
+    if version != PROTO_VERSION {
+        return Err(PaldError::protocol(format!(
+            "unsupported protocol version {version} (this build speaks {PROTO_VERSION})"
+        )));
+    }
+    let opcode = buf[1];
+    let request_id = u64::from_le_bytes(buf[2..10].try_into().unwrap());
+    Ok(FrameRead::Frame(RawFrame { version, opcode, request_id, payload: buf[10..].to_vec() }))
+}
+
+fn io_protocol(e: std::io::Error) -> PaldError {
+    PaldError::protocol(format!("io error mid-frame: {e}"))
+}
+
+/// Decode a raw frame as a request (server side).
+pub fn decode_request(frame: &RawFrame) -> Result<Request, PaldError> {
+    let mut r = Reader::new(&frame.payload);
+    let req = match frame.opcode {
+        OP_COMPUTE => Request::Compute { cfg: r.cfg()?, matrix: r.mat()? },
+        OP_COMPUTE_BATCH => {
+            let cfg = r.cfg()?;
+            let count = r.u32()? as usize;
+            let mut matrices = Vec::new();
+            for _ in 0..count {
+                matrices.push(r.mat()?);
+            }
+            Request::ComputeBatch { cfg, matrices }
+        }
+        OP_SESSION_OPEN => Request::SessionOpen { cfg: r.cfg()?, seed: r.mat()? },
+        OP_SESSION_INSERT => {
+            let session = r.u64()?;
+            let len = r.u32()? as usize;
+            Request::SessionInsert { session, row: r.f32s(len)? }
+        }
+        OP_SESSION_REMOVE => Request::SessionRemove { session: r.u64()?, index: r.u32()? },
+        OP_SESSION_QUERY => Request::SessionQuery { session: r.u64()? },
+        OP_SESSION_CLOSE => Request::SessionClose { session: r.u64()? },
+        OP_STATS => Request::Stats,
+        OP_SHUTDOWN => Request::Shutdown,
+        other => {
+            return Err(PaldError::protocol(format!("unknown request opcode 0x{other:02x}")))
+        }
+    };
+    r.done()?;
+    Ok(req)
+}
+
+/// Decode a raw frame as a response (client side).
+pub fn decode_response(frame: &RawFrame) -> Result<Response, PaldError> {
+    let mut r = Reader::new(&frame.payload);
+    let resp = match frame.opcode {
+        OP_R_COHESION => Response::Cohesion { matrix: r.mat()? },
+        OP_R_BATCH => {
+            let count = r.u32()? as usize;
+            let mut matrices = Vec::new();
+            for _ in 0..count {
+                matrices.push(r.mat()?);
+            }
+            Response::Batch { matrices }
+        }
+        OP_R_SESSION_OPENED => Response::SessionOpened { session: r.u64()?, n: r.u32()? },
+        OP_R_UPDATED => Response::Updated { n: r.u32()?, index: r.u32()? },
+        OP_R_CLOSED => Response::Closed,
+        OP_R_STATS => Response::Stats { text: r.str()? },
+        OP_R_SHUTTING_DOWN => Response::ShuttingDown,
+        OP_R_ERROR => {
+            let code_byte = r.u8()?;
+            let code = ErrorCode::from_u8(code_byte).ok_or_else(|| {
+                PaldError::protocol(format!("unknown error code {code_byte}"))
+            })?;
+            let _retriable = r.u8()?; // carried for non-Rust clients
+            Response::Error { code, info: r.u64()?, detail: r.str()? }
+        }
+        other => {
+            return Err(PaldError::protocol(format!("unknown response opcode 0x{other:02x}")))
+        }
+    };
+    r.done()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read_one(bytes: &[u8]) -> Result<RawFrame, PaldError> {
+        match read_frame(&mut Cursor::new(bytes), DEFAULT_MAX_FRAME)? {
+            FrameRead::Frame(f) => Ok(f),
+            other => Err(PaldError::protocol(format!("expected frame, got {other:?}"))),
+        }
+    }
+
+    #[test]
+    fn request_round_trip() {
+        let m = Mat::from_fn(3, 3, |i, j| (i + j) as f32);
+        let cfg = WireConfig { algorithm: "opt-pairwise".into(), tie: TieMode::Split, k: 4, deadline_ms: 250 };
+        let reqs = vec![
+            Request::Compute { cfg: cfg.clone(), matrix: m.clone() },
+            Request::ComputeBatch { cfg: cfg.clone(), matrices: vec![m.clone(), m.clone()] },
+            Request::SessionOpen { cfg, seed: m.clone() },
+            Request::SessionInsert { session: 7, row: vec![0.5, 1.5, 2.5] },
+            Request::SessionRemove { session: 7, index: 2 },
+            Request::SessionQuery { session: 7 },
+            Request::SessionClose { session: 7 },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for (i, req) in reqs.iter().enumerate() {
+            let bytes = encode_request(i as u64, req);
+            let frame = read_one(&bytes).unwrap();
+            assert_eq!(frame.request_id, i as u64);
+            assert_eq!(&decode_request(&frame).unwrap(), req, "frame {i}");
+        }
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let m = Mat::from_fn(2, 2, |i, j| (i * 2 + j) as f32);
+        let resps = vec![
+            Response::Cohesion { matrix: m.clone() },
+            Response::Batch { matrices: vec![m.clone(), m] },
+            Response::SessionOpened { session: 11, n: 20 },
+            Response::Updated { n: 21, index: 20 },
+            Response::Closed,
+            Response::Stats { text: "paldx_jobs_total 3\n".into() },
+            Response::ShuttingDown,
+            Response::Error {
+                code: ErrorCode::Overloaded,
+                info: 64,
+                detail: "queue full".into(),
+            },
+        ];
+        for (i, resp) in resps.iter().enumerate() {
+            let bytes = encode_response(1000 + i as u64, resp);
+            let frame = read_one(&bytes).unwrap();
+            assert_eq!(frame.request_id, 1000 + i as u64);
+            assert_eq!(&decode_response(&frame).unwrap(), resp, "frame {i}");
+        }
+    }
+
+    #[test]
+    fn error_mapping_round_trips_retriability() {
+        for e in [
+            PaldError::protocol("x"),
+            PaldError::Timeout { deadline_ms: 99 },
+            PaldError::Overloaded { queued: 8, cap: 8 },
+            PaldError::Draining,
+            PaldError::TooSmall { n: 1 },
+        ] {
+            let (code, info, detail) = pald_error_to_wire(&e);
+            let back = wire_error_to_pald(code, info, detail);
+            assert_eq!(e.is_retriable(), back.is_retriable(), "{e}");
+            assert_eq!(e.is_retriable(), code.retriable(), "{e}");
+        }
+        // Structured payloads survive.
+        let (c, info, d) = pald_error_to_wire(&PaldError::Timeout { deadline_ms: 250 });
+        assert!(matches!(wire_error_to_pald(c, info, d), PaldError::Timeout { deadline_ms: 250 }));
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_before_allocation() {
+        let mut bytes = encode_request(1, &Request::Stats);
+        bytes[..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&bytes), 1 << 20).unwrap_err();
+        assert!(matches!(err, PaldError::Protocol { .. }), "{err}");
+        assert!(err.to_string().contains("oversized"), "{err}");
+    }
+
+    #[test]
+    fn bad_version_and_undersized_header_are_typed() {
+        let mut bytes = encode_request(1, &Request::Stats);
+        bytes[4] = 9; // version
+        assert!(matches!(read_one(&bytes), Err(PaldError::Protocol { .. })));
+        let short = 3u32.to_le_bytes();
+        let mut buf = short.to_vec();
+        buf.extend_from_slice(&[0, 0, 0]);
+        assert!(matches!(read_one(&buf), Err(PaldError::Protocol { .. })));
+    }
+
+    #[test]
+    fn every_truncation_is_an_error_never_a_panic() {
+        let m = Mat::from_fn(3, 3, |i, j| (i + j) as f32);
+        let bytes = encode_request(
+            5,
+            &Request::Compute { cfg: WireConfig::default(), matrix: m },
+        );
+        for cut in 0..bytes.len() {
+            let r = read_frame(&mut Cursor::new(&bytes[..cut]), DEFAULT_MAX_FRAME);
+            match r {
+                Ok(FrameRead::Eof) => assert_eq!(cut, 0),
+                Ok(other) => panic!("cut {cut}: unexpected {other:?}"),
+                Err(e) => assert!(matches!(e, PaldError::Protocol { .. }), "cut {cut}: {e}"),
+            }
+        }
+        // Garbage bodies decode to typed errors too.
+        let garbage = RawFrame { version: 1, opcode: 0x01, request_id: 0, payload: vec![0xff; 7] };
+        assert!(matches!(decode_request(&garbage), Err(PaldError::Protocol { .. })));
+        let unknown = RawFrame { version: 1, opcode: 0x7f, request_id: 0, payload: vec![] };
+        assert!(matches!(decode_request(&unknown), Err(PaldError::Protocol { .. })));
+        let trailing = {
+            let mut bytes = encode_request(1, &Request::SessionQuery { session: 3 });
+            bytes.extend_from_slice(&[1, 2, 3]);
+            let len = (bytes.len() - 4) as u32;
+            bytes[..4].copy_from_slice(&len.to_le_bytes());
+            bytes
+        };
+        let frame = read_one(&trailing).unwrap();
+        assert!(matches!(decode_request(&frame), Err(PaldError::Protocol { .. })));
+    }
+
+    #[test]
+    fn matrix_size_overflow_is_guarded() {
+        // A frame claiming an n whose n² overflows usize must fail
+        // cleanly in the size check, not allocate.
+        let mut w = Writer::new(OP_SESSION_QUERY, 0);
+        w.u64(1);
+        let mut bytes = w.finish();
+        // Rewrite as a Compute frame with a huge matrix n and no data.
+        bytes[5] = OP_COMPUTE;
+        let frame = read_one(&bytes).unwrap();
+        assert!(decode_request(&frame).is_err());
+    }
+}

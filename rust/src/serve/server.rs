@@ -1,0 +1,1015 @@
+//! The `pald-serve` TCP server: std-only threads + channels, no async
+//! runtime (DESIGN.md §12).
+//!
+//! Thread topology:
+//!
+//! ```text
+//! acceptor ──► per-connection reader ──► dispatcher ──► worker pool
+//!                    │    ▲                                  │
+//!                    ▼    │ (typed error / inline replies)   │
+//!              per-connection writer ◄───────────────────────┘
+//! ```
+//!
+//! * The **acceptor** polls a non-blocking listener; each connection
+//!   gets a reader thread and a writer thread (responses funnel through
+//!   one mpsc channel per connection, so frames never interleave).
+//!   The first 4 bytes of a connection are sniffed: `b"GET "` serves a
+//!   plaintext metrics scrape over HTTP and closes; anything else is a
+//!   frame length prefix.
+//! * **Readers** decode frames.  Cheap requests (stats, shutdown,
+//!   session ops) run inline under an admission ticket; compute
+//!   requests are admitted ([`Admission`]) and forwarded to the
+//!   dispatcher.  Malformed frames get a typed
+//!   [`ErrorCode::Protocol`](super::proto::ErrorCode) reply and the
+//!   connection closes.
+//! * The **dispatcher** stages one-shot computes by [`ShapeKey`],
+//!   coalescing same-shape requests that arrive within the batch
+//!   window into a single group, expires queued-past-deadline requests
+//!   with typed timeouts, reaps idle streaming sessions, and feeds the
+//!   worker pool while respecting the inflight limit derived from the
+//!   thread budget ([`inflight_limit`]).
+//! * **Workers** check a warm [`Session`] out of the [`WarmPool`], run
+//!   the group through one `compute_batch_refs` call (bit-identical to
+//!   serving the requests one at a time), record work-aware
+//!   [`JobMetrics`], and check the session back in.
+//!
+//! Graceful shutdown: SIGINT/SIGTERM (via [`install_signal_handlers`]),
+//! an in-band `SHUTDOWN` frame, or [`ServerHandle::shutdown`] all start
+//! a drain — new work is rejected with the retriable
+//! [`PaldError::Draining`], staged and in-flight work completes, then
+//! every thread exits and [`ServerHandle::join`] returns the final
+//! metrics scrape.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{JobMetrics, MetricsRegistry};
+use crate::core::Mat;
+use crate::pald::api::available_threads;
+use crate::pald::error::PaldError;
+use crate::pald::input::DistanceInput;
+use crate::pald::Session;
+
+use super::admission::{inflight_limit, Admission, Ticket};
+use super::pool::{ShapeKey, WarmPool};
+use super::proto::{
+    decode_request, encode_response, pald_error_to_wire, read_frame_after_len, FrameRead,
+    RawFrame, Request, Response, DEFAULT_MAX_FRAME,
+};
+use super::stream::StreamSessions;
+
+// ---------------------------------------------------------------------
+// Signals
+// ---------------------------------------------------------------------
+
+/// Process-wide shutdown flag set by SIGINT/SIGTERM (and nothing else).
+static SIGNAL_SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_signal(_sig: i32) {
+    // Only async-signal-safe work here: one atomic store.
+    SIGNAL_SHUTDOWN.store(true, Ordering::Release);
+}
+
+/// Install SIGINT/SIGTERM handlers that flip the process-wide shutdown
+/// flag ([`shutdown_requested`]) — `paldx serve` drains and exits 0,
+/// `paldx stream` stops replaying and still writes its report.  No-op
+/// off Unix.  Idempotent.
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    {
+        // libstd already links libc; declare `signal` directly instead
+        // of growing a dependency for two signal numbers.
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal as usize);
+            signal(SIGTERM, on_signal as usize);
+        }
+    }
+}
+
+/// Has SIGINT/SIGTERM been received since
+/// [`install_signal_handlers`]?
+pub fn shutdown_requested() -> bool {
+    SIGNAL_SHUTDOWN.load(Ordering::Acquire)
+}
+
+// ---------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------
+
+/// `pald-serve` server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address (`"host:0"` picks an ephemeral port — see
+    /// [`ServerHandle::addr`]).
+    pub addr: String,
+    /// Admission queue capacity: requests concurrently held anywhere in
+    /// the server (staged, inflight, or inline).  Beyond it, requests
+    /// are shed with the retriable [`PaldError::Overloaded`].
+    pub queue_cap: usize,
+    /// Deadline applied to requests that don't carry their own (`0` =
+    /// no deadline).
+    pub default_deadline_ms: u64,
+    /// Warm-pool memory cap in bytes ([`WarmPool`] LRU-evicts past it).
+    pub mem_cap_bytes: usize,
+    /// Streaming sessions idle longer than this are reaped.
+    pub idle_timeout_ms: u64,
+    /// How long the dispatcher holds a one-shot open for same-shape
+    /// coalescing (`0` = dispatch on the next tick).
+    pub batch_window_ms: u64,
+    /// Worker threads handed to each job's parallel kernels.
+    pub threads_per_job: usize,
+    /// Compute workers (`0` = derive from the host thread budget:
+    /// [`inflight_limit`]`(available_threads(), threads_per_job)`).
+    pub workers: usize,
+    /// Re-anchor cadence for streaming sessions
+    /// ([`ReanchorPolicy::EveryN`](crate::pald::ReanchorPolicy); `0` =
+    /// never).
+    pub reanchor_every: u64,
+    /// Strict per-item input validation before compute (symmetry, zero
+    /// diagonal, value range) — one bad matrix in a coalesced group
+    /// fails alone, not the group.
+    pub validate: bool,
+    /// Frame size cap (bytes).
+    pub max_frame: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7465".into(),
+            queue_cap: 256,
+            default_deadline_ms: 2_000,
+            mem_cap_bytes: 256 << 20,
+            idle_timeout_ms: 30_000,
+            batch_window_ms: 2,
+            threads_per_job: 1,
+            workers: 0,
+            reanchor_every: 1_024,
+            validate: true,
+            max_frame: DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared state
+// ---------------------------------------------------------------------
+
+struct Shared {
+    cfg: ServeConfig,
+    admission: Admission,
+    pool: WarmPool,
+    streams: StreamSessions,
+    metrics: MetricsRegistry,
+    /// Drain requested (signal, `SHUTDOWN` frame, or handle).
+    drain: AtomicBool,
+    /// Everything winds down: acceptor and readers exit.
+    stop: AtomicBool,
+    /// Compute groups currently running on workers.
+    inflight: AtomicUsize,
+    /// Connections accepted over the server's lifetime.
+    conns: AtomicU64,
+}
+
+impl Shared {
+    fn drain_requested(&self) -> bool {
+        self.drain.load(Ordering::Acquire) || shutdown_requested()
+    }
+
+    fn request_drain(&self) {
+        self.drain.store(true, Ordering::Release);
+        self.admission.start_drain();
+    }
+
+    /// The full plaintext scrape: job metrics plus serving counters.
+    fn scrape(&self) -> String {
+        let mut out = self.metrics.scrape();
+        let (admitted, shed, timed_out) = self.admission.counters();
+        let (hits, misses, evictions) = self.pool.counters();
+        let (opened, closed, updates, reaped) = self.streams.counters();
+        out.push_str(&format!("paldx_serve_admitted_total {admitted}\n"));
+        out.push_str(&format!("paldx_serve_shed_total {shed}\n"));
+        out.push_str(&format!("paldx_serve_timeout_total {timed_out}\n"));
+        out.push_str(&format!("paldx_serve_queue_depth {}\n", self.admission.queued()));
+        out.push_str(&format!("paldx_serve_draining {}\n", u8::from(self.admission.is_draining())));
+        out.push_str(&format!("paldx_serve_connections_total {}\n", self.conns.load(Ordering::Relaxed)));
+        out.push_str(&format!("paldx_pool_hits_total {hits}\n"));
+        out.push_str(&format!("paldx_pool_misses_total {misses}\n"));
+        out.push_str(&format!("paldx_pool_evictions_total {evictions}\n"));
+        out.push_str(&format!("paldx_pool_bytes {}\n", self.pool.bytes()));
+        out.push_str(&format!("paldx_sessions_opened_total {opened}\n"));
+        out.push_str(&format!("paldx_sessions_closed_total {closed}\n"));
+        out.push_str(&format!("paldx_sessions_updates_total {updates}\n"));
+        out.push_str(&format!("paldx_sessions_reaped_total {reaped}\n"));
+        out.push_str(&format!("paldx_sessions_live {}\n", self.streams.len()));
+        out
+    }
+}
+
+/// A one-shot compute staged for coalescing.
+struct OneItem {
+    matrix: Mat,
+    request_id: u64,
+    reply: Sender<Vec<u8>>,
+    ticket: Ticket,
+    enqueued: Instant,
+}
+
+/// Work forwarded from readers to the dispatcher.
+enum Work {
+    One { key: ShapeKey, item: OneItem },
+    Batch { key: ShapeKey, matrices: Vec<Mat>, request_id: u64, reply: Sender<Vec<u8>>, ticket: Ticket },
+}
+
+/// A dispatch group handed to the worker pool.
+enum GroupJob {
+    /// Same-shape one-shots coalesced into one `compute_batch_refs`.
+    Coalesced { key: ShapeKey, items: Vec<OneItem> },
+    /// An explicit `COMPUTE_BATCH` frame (never merged with others).
+    Explicit { key: ShapeKey, matrices: Vec<Mat>, request_id: u64, reply: Sender<Vec<u8>>, ticket: Ticket },
+}
+
+fn error_bytes(request_id: u64, e: &PaldError) -> Vec<u8> {
+    let (code, info, detail) = pald_error_to_wire(e);
+    encode_response(request_id, &Response::Error { code, info, detail })
+}
+
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
+
+/// The running server.  Construct with [`Server::start`]; interact via
+/// the returned [`ServerHandle`].
+pub struct Server;
+
+/// Handle to a running server: its bound address, a drain trigger, and
+/// a join that returns once shutdown completes.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The address the server actually bound (resolves `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Trigger a graceful drain (same path as SIGTERM / the in-band
+    /// `SHUTDOWN` frame): new work is rejected with the retriable
+    /// [`PaldError::Draining`], in-flight work completes.
+    pub fn shutdown(&self) {
+        self.shared.request_drain();
+    }
+
+    /// Is the server draining?
+    pub fn is_draining(&self) -> bool {
+        self.shared.admission.is_draining()
+    }
+
+    /// Current plaintext metrics scrape.
+    pub fn scrape(&self) -> String {
+        self.shared.scrape()
+    }
+
+    /// Wait for the server to finish draining and every thread to exit;
+    /// returns the final metrics scrape (the "flush" of a graceful
+    /// shutdown).  Blocks until a drain is triggered by a signal, a
+    /// `SHUTDOWN` frame, or [`ServerHandle::shutdown`].
+    pub fn join(self) -> String {
+        for t in self.threads {
+            let _ = t.join();
+        }
+        self.shared.scrape()
+    }
+}
+
+impl Server {
+    /// Bind `cfg.addr` and spawn the serving threads.
+    pub fn start(cfg: ServeConfig) -> std::io::Result<ServerHandle> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let workers = if cfg.workers > 0 {
+            cfg.workers
+        } else {
+            inflight_limit(available_threads(), cfg.threads_per_job)
+        };
+        let shared = Arc::new(Shared {
+            admission: Admission::new(cfg.queue_cap),
+            pool: WarmPool::new(cfg.mem_cap_bytes),
+            streams: StreamSessions::new(
+                Duration::from_millis(cfg.idle_timeout_ms),
+                cfg.reanchor_every,
+            ),
+            metrics: MetricsRegistry::new(),
+            drain: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            conns: AtomicU64::new(0),
+            cfg,
+        });
+
+        let (work_tx, work_rx) = mpsc::channel::<Work>();
+        let (job_tx, job_rx) = mpsc::channel::<GroupJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+
+        let mut threads = Vec::new();
+        for w in 0..workers {
+            let sh = Arc::clone(&shared);
+            let rx = Arc::clone(&job_rx);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pald-worker-{w}"))
+                    .spawn(move || worker_loop(&sh, &rx))?,
+            );
+        }
+        {
+            let sh = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("pald-dispatch".into())
+                    .spawn(move || dispatcher_loop(&sh, work_rx, job_tx, workers))?,
+            );
+        }
+        {
+            let sh = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("pald-accept".into())
+                    .spawn(move || acceptor_loop(&sh, listener, work_tx))?,
+            );
+        }
+        Ok(ServerHandle { addr, shared, threads })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptor + connections
+// ---------------------------------------------------------------------
+
+fn acceptor_loop(sh: &Arc<Shared>, listener: TcpListener, work_tx: Sender<Work>) {
+    while !sh.stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                sh.conns.fetch_add(1, Ordering::Relaxed);
+                let sh = Arc::clone(sh);
+                let tx = work_tx.clone();
+                // Connection threads are detached: they exit on EOF, on
+                // protocol error, or when `stop` flips (their 250 ms
+                // read poll observes it).
+                let _ = std::thread::Builder::new()
+                    .name("pald-conn".into())
+                    .spawn(move || connection_loop(&sh, stream, tx));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    // Dropping work_tx here (with every connection eventually closing)
+    // lets the dispatcher observe disconnect after the readers exit.
+}
+
+enum Prefix {
+    Bytes([u8; 4]),
+    Eof,
+    Idle,
+    Dead,
+}
+
+/// Read a connection's next 4-byte frame prefix, tolerating read-timeout
+/// polls (bounded once the first byte has arrived).
+fn read_prefix(r: &mut TcpStream) -> Prefix {
+    let mut buf = [0u8; 4];
+    let mut got = 0;
+    let mut retries = 120usize;
+    loop {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return if got == 0 { Prefix::Eof } else { Prefix::Dead },
+            Ok(m) => {
+                got += m;
+                if got == 4 {
+                    return Prefix::Bytes(buf);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if got == 0 {
+                    return Prefix::Idle;
+                }
+                if retries == 0 {
+                    return Prefix::Dead;
+                }
+                retries -= 1;
+            }
+            Err(_) => return Prefix::Dead,
+        }
+    }
+}
+
+fn connection_loop(sh: &Arc<Shared>, mut stream: TcpStream, work_tx: Sender<Work>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let (reply_tx, reply_rx) = mpsc::channel::<Vec<u8>>();
+    let writer = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let writer_thread = std::thread::Builder::new()
+        .name("pald-conn-w".into())
+        .spawn(move || writer_loop(writer, reply_rx));
+
+    let mut first = true;
+    loop {
+        if sh.stop.load(Ordering::Acquire) {
+            break;
+        }
+        match read_prefix(&mut stream) {
+            Prefix::Idle => continue,
+            Prefix::Eof | Prefix::Dead => break,
+            Prefix::Bytes(len4) => {
+                if first && &len4 == b"GET " {
+                    serve_http_scrape(sh, &mut stream);
+                    break;
+                }
+                first = false;
+                match read_frame_after_len(&mut stream, len4, sh.cfg.max_frame) {
+                    Ok(FrameRead::Frame(raw)) => {
+                        if !handle_frame(sh, &raw, &reply_tx, &work_tx) {
+                            break;
+                        }
+                    }
+                    // After-len reads never report Eof/Idle; truncation
+                    // is an error.
+                    Ok(_) => break,
+                    Err(e) => {
+                        let _ = reply_tx.send(error_bytes(0, &e));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    // Dropping reply_tx ends the writer after it flushes queued frames.
+    drop(reply_tx);
+    if let Ok(t) = writer_thread {
+        let _ = t.join();
+    }
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) {
+    for bytes in rx {
+        if stream.write_all(&bytes).is_err() {
+            break;
+        }
+    }
+    let _ = stream.flush();
+}
+
+/// Minimal HTTP/1.0 response for scrape GETs sharing the frame port
+/// (the first 4 bytes, `b"GET "`, were already consumed by the sniff).
+fn serve_http_scrape(sh: &Shared, stream: &mut TcpStream) {
+    // Drain the request head (bounded) so the peer's send completes.
+    let mut buf = [0u8; 1024];
+    let mut total = 0;
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(m) => {
+                total += m;
+                if buf[..m].windows(4).any(|w| w == b"\r\n\r\n") || total > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let body = sh.scrape();
+    let head = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Handle one decoded frame on the reader thread.  Returns `false` when
+/// the connection must close (protocol error).
+fn handle_frame(
+    sh: &Arc<Shared>,
+    raw: &RawFrame,
+    reply_tx: &Sender<Vec<u8>>,
+    work_tx: &Sender<Work>,
+) -> bool {
+    let id = raw.request_id;
+    let req = match decode_request(raw) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = reply_tx.send(error_bytes(id, &e));
+            return false;
+        }
+    };
+    match req {
+        Request::Stats => {
+            let _ = reply_tx.send(encode_response(id, &Response::Stats { text: sh.scrape() }));
+        }
+        Request::Shutdown => {
+            sh.request_drain();
+            let _ = reply_tx.send(encode_response(id, &Response::ShuttingDown));
+        }
+        // Closing frees memory — allowed even while draining.
+        Request::SessionClose { session } => {
+            let resp = match sh.streams.close(session) {
+                Ok(()) => Response::Closed,
+                Err(e) => {
+                    let (code, info, detail) = e.to_wire();
+                    Response::Error { code, info, detail }
+                }
+            };
+            let _ = reply_tx.send(encode_response(id, &resp));
+        }
+        Request::Compute { cfg, matrix } => {
+            let ticket = match sh
+                .admission
+                .try_admit(cfg.deadline_ms as u64, sh.cfg.default_deadline_ms)
+            {
+                Ok(t) => t,
+                Err(e) => {
+                    let _ = reply_tx.send(error_bytes(id, &e));
+                    return true;
+                }
+            };
+            match ShapeKey::for_request(&cfg, matrix.rows()) {
+                Ok(key) => {
+                    let item = OneItem {
+                        matrix,
+                        request_id: id,
+                        reply: reply_tx.clone(),
+                        ticket,
+                        enqueued: Instant::now(),
+                    };
+                    if work_tx.send(Work::One { key, item }).is_err() {
+                        // Dispatcher is gone (shutdown race): shed.
+                        let _ = reply_tx.send(error_bytes(id, &PaldError::Draining));
+                    }
+                }
+                Err(e) => {
+                    let _ = reply_tx.send(error_bytes(id, &e));
+                    sh.admission.release(ticket);
+                }
+            }
+        }
+        Request::ComputeBatch { cfg, matrices } => {
+            let ticket = match sh
+                .admission
+                .try_admit(cfg.deadline_ms as u64, sh.cfg.default_deadline_ms)
+            {
+                Ok(t) => t,
+                Err(e) => {
+                    let _ = reply_tx.send(error_bytes(id, &e));
+                    return true;
+                }
+            };
+            if matrices.is_empty() {
+                let _ = reply_tx.send(encode_response(id, &Response::Batch { matrices: vec![] }));
+                sh.admission.release(ticket);
+                return true;
+            }
+            match ShapeKey::for_request(&cfg, matrices[0].rows()) {
+                Ok(key) => {
+                    let work = Work::Batch {
+                        key,
+                        matrices,
+                        request_id: id,
+                        reply: reply_tx.clone(),
+                        ticket,
+                    };
+                    if work_tx.send(work).is_err() {
+                        let _ = reply_tx.send(error_bytes(id, &PaldError::Draining));
+                    }
+                }
+                Err(e) => {
+                    let _ = reply_tx.send(error_bytes(id, &e));
+                    sh.admission.release(ticket);
+                }
+            }
+        }
+        Request::SessionOpen { cfg, seed } => {
+            with_ticket(sh, reply_tx, id, cfg.deadline_ms as u64, |sh| {
+                let t0 = Instant::now();
+                let r = sh.streams.open(&cfg, &seed, sh.cfg.threads_per_job, sh.cfg.validate);
+                match r {
+                    Ok((session, n)) => {
+                        sh.metrics.record(JobMetrics {
+                            n: n as usize,
+                            k: cfg.k as usize,
+                            algorithm: "incremental".into(),
+                            backend: "Native".into(),
+                            seconds: t0.elapsed().as_secs_f64(),
+                        });
+                        Response::SessionOpened { session, n }
+                    }
+                    Err(e) => {
+                        let (code, info, detail) = e.to_wire();
+                        Response::Error { code, info, detail }
+                    }
+                }
+            });
+        }
+        Request::SessionInsert { session, row } => {
+            with_ticket(sh, reply_tx, id, 0, |sh| match sh.streams.insert(session, &row) {
+                Ok((n, index)) => Response::Updated { n, index },
+                Err(e) => {
+                    let (code, info, detail) = e.to_wire();
+                    Response::Error { code, info, detail }
+                }
+            });
+        }
+        Request::SessionRemove { session, index } => {
+            with_ticket(sh, reply_tx, id, 0, |sh| match sh.streams.remove(session, index) {
+                Ok((n, index)) => Response::Updated { n, index },
+                Err(e) => {
+                    let (code, info, detail) = e.to_wire();
+                    Response::Error { code, info, detail }
+                }
+            });
+        }
+        Request::SessionQuery { session } => {
+            with_ticket(sh, reply_tx, id, 0, |sh| {
+                let t0 = Instant::now();
+                match sh.streams.query(session) {
+                    Ok(matrix) => {
+                        sh.metrics.record(JobMetrics {
+                            n: matrix.rows(),
+                            k: 0,
+                            algorithm: "incremental".into(),
+                            backend: "Native".into(),
+                            seconds: t0.elapsed().as_secs_f64(),
+                        });
+                        Response::Cohesion { matrix }
+                    }
+                    Err(e) => {
+                        let (code, info, detail) = e.to_wire();
+                        Response::Error { code, info, detail }
+                    }
+                }
+            });
+        }
+    }
+    true
+}
+
+/// Run an inline (reader-thread) operation under an admission ticket.
+fn with_ticket(
+    sh: &Shared,
+    reply_tx: &Sender<Vec<u8>>,
+    id: u64,
+    deadline_ms: u64,
+    op: impl FnOnce(&Shared) -> Response,
+) {
+    match sh.admission.try_admit(deadline_ms, sh.cfg.default_deadline_ms) {
+        Ok(ticket) => {
+            let resp = op(sh);
+            let _ = reply_tx.send(encode_response(id, &resp));
+            sh.admission.release(ticket);
+        }
+        Err(e) => {
+            let _ = reply_tx.send(error_bytes(id, &e));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------
+
+fn dispatcher_loop(
+    sh: &Arc<Shared>,
+    work_rx: Receiver<Work>,
+    job_tx: Sender<GroupJob>,
+    inflight_cap: usize,
+) {
+    let window = Duration::from_millis(sh.cfg.batch_window_ms);
+    let tick = Duration::from_millis(sh.cfg.batch_window_ms.clamp(1, 10));
+    let mut staged: HashMap<ShapeKey, Vec<OneItem>> = HashMap::new();
+    let mut staged_batches: Vec<(ShapeKey, Vec<Mat>, u64, Sender<Vec<u8>>, Ticket)> = Vec::new();
+    let mut last_reap = Instant::now();
+    let mut disconnected = false;
+
+    loop {
+        match work_rx.recv_timeout(tick) {
+            Ok(w) => stage(&mut staged, &mut staged_batches, w),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => disconnected = true,
+        }
+        // Pull everything already queued so one tick sees the whole
+        // burst (this is what makes same-shape coalescing effective).
+        while let Ok(w) = work_rx.try_recv() {
+            stage(&mut staged, &mut staged_batches, w);
+        }
+
+        if sh.drain_requested() {
+            // Signal-triggered drains funnel through the same path as
+            // the in-band SHUTDOWN frame.
+            sh.request_drain();
+        }
+        let draining = sh.admission.is_draining();
+        let now = Instant::now();
+
+        // Expire one-shots whose deadline lapsed while staged.
+        staged.retain(|_, items| {
+            items.retain_mut(|item| {
+                if item.ticket.deadline.expired() {
+                    let e = item.ticket.deadline.timeout_error();
+                    let _ = item.reply.send(error_bytes(item.request_id, &e));
+                    sh.admission.note_timeout();
+                    // retain_mut cannot move the ticket out; release by
+                    // value via a swapped placeholder.
+                    let ticket = std::mem::replace(&mut item.ticket, dead_ticket());
+                    sh.admission.release(ticket);
+                    false
+                } else {
+                    true
+                }
+            });
+            !items.is_empty()
+        });
+
+        // Reap idle streaming sessions about once a second.
+        if now.duration_since(last_reap) >= Duration::from_secs(1) {
+            sh.streams.reap_idle();
+            last_reap = now;
+        }
+
+        // Dispatch explicit batches first (no coalescing window).
+        while !staged_batches.is_empty() {
+            if sh.inflight.load(Ordering::Acquire) >= inflight_cap {
+                break;
+            }
+            let (key, matrices, request_id, reply, ticket) = staged_batches.remove(0);
+            sh.inflight.fetch_add(1, Ordering::AcqRel);
+            if job_tx
+                .send(GroupJob::Explicit { key, matrices, request_id, reply, ticket })
+                .is_err()
+            {
+                sh.inflight.fetch_sub(1, Ordering::AcqRel);
+                break;
+            }
+        }
+
+        // Dispatch coalesced groups whose window has elapsed (or
+        // immediately when draining — nothing more will join them).
+        let ready: Vec<ShapeKey> = staged
+            .iter()
+            .filter(|(_, items)| {
+                draining
+                    || items
+                        .first()
+                        .is_some_and(|it| now.duration_since(it.enqueued) >= window)
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        for key in ready {
+            if sh.inflight.load(Ordering::Acquire) >= inflight_cap {
+                break;
+            }
+            if let Some(items) = staged.remove(&key) {
+                sh.inflight.fetch_add(1, Ordering::AcqRel);
+                if job_tx.send(GroupJob::Coalesced { key, items }).is_err() {
+                    sh.inflight.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+        }
+
+        // Drain complete: nothing staged, nothing inflight, no admitted
+        // request anywhere (inline ops hold tickets too), and the work
+        // channel was empty this tick.
+        if (draining || disconnected)
+            && staged.is_empty()
+            && staged_batches.is_empty()
+            && sh.inflight.load(Ordering::Acquire) == 0
+            && sh.admission.queued() == 0
+        {
+            break;
+        }
+    }
+    sh.stop.store(true, Ordering::Release);
+    // Dropping job_tx ends the workers once their queues drain.
+}
+
+/// A placeholder ticket for `retain_mut` extraction (its slot is the
+/// real ticket's, released immediately after the swap).
+fn dead_ticket() -> Ticket {
+    Ticket { deadline: super::admission::Deadline::in_ms(0) }
+}
+
+fn stage(
+    staged: &mut HashMap<ShapeKey, Vec<OneItem>>,
+    staged_batches: &mut Vec<(ShapeKey, Vec<Mat>, u64, Sender<Vec<u8>>, Ticket)>,
+    w: Work,
+) {
+    match w {
+        Work::One { key, item } => staged.entry(key).or_default().push(item),
+        Work::Batch { key, matrices, request_id, reply, ticket } => {
+            staged_batches.push((key, matrices, request_id, reply, ticket));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------
+
+fn worker_loop(sh: &Arc<Shared>, job_rx: &Arc<Mutex<Receiver<GroupJob>>>) {
+    loop {
+        // Holding the lock across recv serializes only the *dequeue*:
+        // the waiting worker owns the lock, peers block on the mutex,
+        // and computes run with the lock released.
+        let job = {
+            let rx = match job_rx.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            rx.recv()
+        };
+        let Ok(job) = job else { break };
+        match job {
+            GroupJob::Coalesced { key, items } => run_coalesced(sh, key, items),
+            GroupJob::Explicit { key, matrices, request_id, reply, ticket } => {
+                run_explicit(sh, key, matrices, request_id, reply, ticket)
+            }
+        }
+        sh.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn run_coalesced(sh: &Shared, key: ShapeKey, items: Vec<OneItem>) {
+    let mut session = match sh.pool.checkout(&key, sh.cfg.threads_per_job) {
+        Ok(s) => s,
+        Err(e) => {
+            for item in items {
+                let _ = item.reply.send(error_bytes(item.request_id, &e));
+                sh.admission.release(item.ticket);
+            }
+            return;
+        }
+    };
+    // Per-item validation before the batch: one bad matrix fails alone.
+    let mut survivors: Vec<OneItem> = Vec::with_capacity(items.len());
+    for item in items {
+        let verdict = if item.ticket.deadline.expired() {
+            sh.admission.note_timeout();
+            Err(item.ticket.deadline.timeout_error())
+        } else if sh.cfg.validate {
+            item.matrix.validate_strict()
+        } else {
+            item.matrix.check_shape().map(|_| ())
+        };
+        match verdict {
+            Ok(()) => survivors.push(item),
+            Err(e) => {
+                let _ = item.reply.send(error_bytes(item.request_id, &e));
+                sh.admission.release(item.ticket);
+            }
+        }
+    }
+    if !survivors.is_empty() {
+        let refs: Vec<&Mat> = survivors.iter().map(|it| &it.matrix).collect();
+        let resolved = session.plan_for(key.n).algorithm.name();
+        let t0 = Instant::now();
+        match session.compute_batch_refs(&refs) {
+            Ok(results) => {
+                let per_item = t0.elapsed().as_secs_f64() / results.len().max(1) as f64;
+                for (item, matrix) in survivors.into_iter().zip(results) {
+                    let _ = item
+                        .reply
+                        .send(encode_response(item.request_id, &Response::Cohesion { matrix }));
+                    sh.admission.release(item.ticket);
+                    sh.metrics.record(JobMetrics {
+                        n: key.n,
+                        k: key.k,
+                        algorithm: resolved.to_string(),
+                        backend: "Native".into(),
+                        seconds: per_item,
+                    });
+                }
+            }
+            Err(e) => {
+                for item in survivors {
+                    let _ = item.reply.send(error_bytes(item.request_id, &e));
+                    sh.admission.release(item.ticket);
+                }
+            }
+        }
+    }
+    sh.pool.checkin(key, session);
+}
+
+fn run_explicit(
+    sh: &Shared,
+    key: ShapeKey,
+    matrices: Vec<Mat>,
+    request_id: u64,
+    reply: Sender<Vec<u8>>,
+    ticket: Ticket,
+) {
+    let mut session = match sh.pool.checkout(&key, sh.cfg.threads_per_job) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = reply.send(error_bytes(request_id, &e));
+            sh.admission.release(ticket);
+            return;
+        }
+    };
+    // A single response frame answers the whole batch, so any failing
+    // item (validation or compute) fails the batch with a typed error.
+    let outcome = (|| {
+        if ticket.deadline.expired() {
+            sh.admission.note_timeout();
+            return Err(ticket.deadline.timeout_error());
+        }
+        if sh.cfg.validate {
+            for m in &matrices {
+                m.validate_strict()?;
+            }
+        }
+        let refs: Vec<&Mat> = matrices.iter().collect();
+        let t0 = Instant::now();
+        let results = session.compute_batch_refs(&refs)?;
+        let per_item = t0.elapsed().as_secs_f64() / results.len().max(1) as f64;
+        let resolved = session.plan_for(key.n).algorithm.name();
+        for m in &matrices {
+            sh.metrics.record(JobMetrics {
+                n: m.rows(),
+                k: key.k,
+                algorithm: resolved.to_string(),
+                backend: "Native".into(),
+                seconds: per_item,
+            });
+        }
+        Ok(results)
+    })();
+    match outcome {
+        Ok(results) => {
+            let _ = reply.send(encode_response(request_id, &Response::Batch { matrices: results }));
+        }
+        Err(e) => {
+            let _ = reply.send(error_bytes(request_id, &e));
+        }
+    }
+    sh.admission.release(ticket);
+    sh.pool.checkin(key, session);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_defaults_are_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.queue_cap >= 1);
+        assert!(cfg.max_frame >= 1 << 20);
+        assert!(cfg.validate);
+    }
+
+    #[test]
+    fn start_and_graceful_shutdown_via_handle() {
+        let handle = Server::start(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        assert!(handle.addr().port() != 0);
+        assert!(!handle.is_draining());
+        handle.shutdown();
+        assert!(handle.is_draining());
+        let scrape = handle.join();
+        assert!(scrape.contains("paldx_serve_draining 1"), "{scrape}");
+        assert!(scrape.contains("paldx_jobs_total"), "{scrape}");
+    }
+
+    #[test]
+    fn signal_flag_roundtrip() {
+        install_signal_handlers();
+        assert!(!shutdown_requested() || SIGNAL_SHUTDOWN.load(Ordering::Acquire));
+    }
+}

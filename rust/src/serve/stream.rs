@@ -1,0 +1,310 @@
+//! Streaming sessions for `pald-serve`: wire-addressable
+//! [`IncrementalPald`] engines (DESIGN.md §12).
+//!
+//! A `SESSION_OPEN` frame seeds an online engine; subsequent
+//! `SESSION_INSERT` / `SESSION_REMOVE` / `SESSION_QUERY` frames address
+//! it by id, paying the engine's O(n·k) (truncated) or O(n²) (dense)
+//! per-update cost instead of recomputing from scratch — the Online
+//! PaLD pattern served over TCP.  Engines run under
+//! [`ReanchorPolicy::EveryN`] (server policy) so long-lived sessions
+//! periodically re-anchor accumulated floating-point drift.
+//!
+//! The registry holds each engine behind its own `Mutex` so a slow
+//! query on one session never blocks updates to another; the map lock
+//! is only ever held for id lookup.  Sessions idle past the server's
+//! timeout are reaped by the dispatcher tick.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::core::Mat;
+use crate::pald::error::PaldError;
+use crate::pald::{
+    IncrementalPald, Neighborhood, PaldBuilder, ReanchorPolicy, Threads, Validation,
+};
+
+use super::proto::{ErrorCode, WireConfig};
+
+/// A failed streaming-session operation, carrying enough to build the
+/// wire error frame.
+#[derive(Debug)]
+pub enum StreamError {
+    /// No session with this id (never opened, closed, or idle-reaped).
+    NoSuchSession(u64),
+    /// The engine rejected the operation.
+    Pald(PaldError),
+}
+
+impl StreamError {
+    /// Wire representation: `(code, info, detail)`.
+    pub fn to_wire(&self) -> (ErrorCode, u64, String) {
+        match self {
+            StreamError::NoSuchSession(id) => {
+                (ErrorCode::NoSuchSession, *id, format!("no such session {id}"))
+            }
+            StreamError::Pald(e) => super::proto::pald_error_to_wire(e),
+        }
+    }
+}
+
+impl From<PaldError> for StreamError {
+    fn from(e: PaldError) -> StreamError {
+        StreamError::Pald(e)
+    }
+}
+
+struct Entry {
+    engine: IncrementalPald,
+    last_touch: Instant,
+}
+
+/// Registry of live streaming sessions.
+pub struct StreamSessions {
+    sessions: Mutex<HashMap<u64, Arc<Mutex<Entry>>>>,
+    next_id: AtomicU64,
+    idle_timeout: Duration,
+    /// Server-policy re-anchor cadence for opened engines.
+    reanchor_every: u64,
+    opened: AtomicU64,
+    closed: AtomicU64,
+    updates: AtomicU64,
+    reaped: AtomicU64,
+}
+
+impl StreamSessions {
+    /// Registry whose sessions are reaped after `idle_timeout` without
+    /// traffic and re-anchor every `reanchor_every` updates.
+    pub fn new(idle_timeout: Duration, reanchor_every: u64) -> StreamSessions {
+        StreamSessions {
+            sessions: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            idle_timeout,
+            reanchor_every,
+            opened: AtomicU64::new(0),
+            closed: AtomicU64::new(0),
+            updates: AtomicU64::new(0),
+            reaped: AtomicU64::new(0),
+        }
+    }
+
+    fn map(&self) -> std::sync::MutexGuard<'_, HashMap<u64, Arc<Mutex<Entry>>>> {
+        self.sessions.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn entry(&self, id: u64) -> Result<Arc<Mutex<Entry>>, StreamError> {
+        self.map().get(&id).cloned().ok_or(StreamError::NoSuchSession(id))
+    }
+
+    /// Open a session seeded with `seed` under the request's options;
+    /// `threads` and `validate` are server policy.  Returns
+    /// `(session_id, n)`.
+    pub fn open(
+        &self,
+        cfg: &WireConfig,
+        seed: &Mat,
+        threads: usize,
+        validate: bool,
+    ) -> Result<(u64, u32), StreamError> {
+        let mut b = PaldBuilder::new()
+            .algorithm_name(&cfg.algorithm)
+            .tie_mode(cfg.tie)
+            .threads(Threads::Fixed(threads.max(1)))
+            .validation(if validate { Validation::Strict } else { Validation::Skip });
+        if cfg.k > 0 {
+            b = b.neighborhood(Neighborhood::Knn(cfg.k as usize));
+        }
+        let mut engine = b.build()?.into_incremental(seed)?;
+        if self.reanchor_every > 0 {
+            engine.set_reanchor_policy(ReanchorPolicy::EveryN(self.reanchor_every));
+        }
+        let n = engine.n() as u32;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.map()
+            .insert(id, Arc::new(Mutex::new(Entry { engine, last_touch: Instant::now() })));
+        self.opened.fetch_add(1, Ordering::Relaxed);
+        Ok((id, n))
+    }
+
+    fn with_entry<T>(
+        &self,
+        id: u64,
+        f: impl FnOnce(&mut IncrementalPald) -> Result<T, PaldError>,
+    ) -> Result<T, StreamError> {
+        let entry = self.entry(id)?;
+        let mut guard = entry.lock().unwrap_or_else(|p| p.into_inner());
+        guard.last_touch = Instant::now();
+        f(&mut guard.engine).map_err(StreamError::Pald)
+    }
+
+    /// Insert a point (its distances to the session's current points);
+    /// returns `(n_after, inserted_index)`.
+    pub fn insert(&self, id: u64, row: &[f32]) -> Result<(u32, u32), StreamError> {
+        let r = self.with_entry(id, |e| {
+            let idx = e.insert_row(row)?;
+            Ok((e.n() as u32, idx as u32))
+        });
+        if r.is_ok() {
+            self.updates.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    /// Remove a point; returns `(n_after, removed_index)`.
+    pub fn remove(&self, id: u64, index: u32) -> Result<(u32, u32), StreamError> {
+        let r = self.with_entry(id, |e| {
+            e.remove(index as usize)?;
+            Ok((e.n() as u32, index))
+        });
+        if r.is_ok() {
+            self.updates.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    /// The session's current cohesion matrix.
+    pub fn query(&self, id: u64) -> Result<Mat, StreamError> {
+        self.with_entry(id, |e| Ok(e.cohesion()))
+    }
+
+    /// Close a session, freeing its engine.
+    pub fn close(&self, id: u64) -> Result<(), StreamError> {
+        match self.map().remove(&id) {
+            Some(_) => {
+                self.closed.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            None => Err(StreamError::NoSuchSession(id)),
+        }
+    }
+
+    /// Drop sessions idle past the registry's timeout; returns how many
+    /// were reaped.  Called from the dispatcher tick.
+    pub fn reap_idle(&self) -> usize {
+        let now = Instant::now();
+        let mut map = self.map();
+        let stale: Vec<u64> = map
+            .iter()
+            .filter(|(_, entry)| {
+                entry
+                    .lock()
+                    .map(|g| now.duration_since(g.last_touch) >= self.idle_timeout)
+                    .unwrap_or(true)
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &stale {
+            map.remove(id);
+        }
+        self.reaped.fetch_add(stale.len() as u64, Ordering::Relaxed);
+        stale.len()
+    }
+
+    /// Live session count.
+    pub fn len(&self) -> usize {
+        self.map().len()
+    }
+
+    /// Are no sessions live?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counters for the scrape endpoint:
+    /// `(opened, closed, updates, reaped)`.
+    pub fn counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.opened.load(Ordering::Relaxed),
+            self.closed.load(Ordering::Relaxed),
+            self.updates.load(Ordering::Relaxed),
+            self.reaped.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::Pald;
+
+    fn registry() -> StreamSessions {
+        StreamSessions::new(Duration::from_secs(3600), 0)
+    }
+
+    #[test]
+    fn session_lifecycle_matches_local_engine() {
+        let reg = registry();
+        let master = distmat::random_tie_free(12, 9);
+        let seed = master.slice_to(10, 10);
+        let (id, n) = reg.open(&WireConfig::default(), &seed, 1, true).unwrap();
+        assert_eq!(n, 10);
+
+        // Local oracle: the same engine driven directly.
+        let mut oracle = Pald::builder().build().unwrap().into_incremental(&seed).unwrap();
+
+        let row10: Vec<f32> = master.row(10)[..10].to_vec();
+        let (n1, idx1) = reg.insert(id, &row10).unwrap();
+        let oidx1 = oracle.insert_row(&row10).unwrap();
+        assert_eq!((n1, idx1 as usize), (11, oidx1));
+
+        let (n2, _) = reg.remove(id, 3).unwrap();
+        oracle.remove(3).unwrap();
+        assert_eq!(n2, 10);
+
+        let served = reg.query(id).unwrap();
+        assert_eq!(served, oracle.cohesion(), "served cohesion must be bit-identical");
+
+        reg.close(id).unwrap();
+        assert!(reg.is_empty());
+        assert!(matches!(reg.query(id), Err(StreamError::NoSuchSession(_))));
+        let (opened, closed, updates, _) = reg.counters();
+        assert_eq!((opened, closed, updates), (1, 1, 2));
+    }
+
+    #[test]
+    fn unknown_ids_and_bad_ops_are_typed() {
+        let reg = registry();
+        assert!(matches!(reg.insert(99, &[0.0]), Err(StreamError::NoSuchSession(99))));
+        assert!(matches!(reg.close(99), Err(StreamError::NoSuchSession(99))));
+        let seed = distmat::random_tie_free(8, 2);
+        let (id, _) = reg.open(&WireConfig::default(), &seed, 1, true).unwrap();
+        // Wrong-length insert row is a PaldError, not a panic.
+        assert!(matches!(reg.insert(id, &[1.0, 2.0]), Err(StreamError::Pald(_))));
+        // Out-of-range remove likewise.
+        assert!(matches!(reg.remove(id, 1000), Err(StreamError::Pald(_))));
+        let (code, info, _) = StreamError::NoSuchSession(7).to_wire();
+        assert_eq!((code, info), (ErrorCode::NoSuchSession, 7));
+    }
+
+    #[test]
+    fn idle_sessions_are_reaped() {
+        let reg = StreamSessions::new(Duration::from_millis(1), 0);
+        let seed = distmat::random_tie_free(8, 2);
+        let (id, _) = reg.open(&WireConfig::default(), &seed, 1, true).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(reg.reap_idle(), 1);
+        assert!(matches!(reg.query(id), Err(StreamError::NoSuchSession(_))));
+        let (.., reaped) = reg.counters();
+        assert_eq!(reaped, 1);
+    }
+
+    #[test]
+    fn truncated_sessions_carry_their_neighborhood() {
+        let reg = registry();
+        let seed = distmat::random_tie_free(16, 4);
+        let cfg = WireConfig { k: 4, ..WireConfig::default() };
+        let (id, _) = reg.open(&cfg, &seed, 1, true).unwrap();
+        let c = reg.query(id).unwrap();
+        assert_eq!(c.rows(), 16);
+        // Oracle: same truncated engine locally.
+        let oracle = Pald::builder()
+            .neighborhood(Neighborhood::Knn(4))
+            .build()
+            .unwrap()
+            .into_incremental(&seed)
+            .unwrap();
+        assert_eq!(c, oracle.cohesion());
+    }
+}

@@ -1,0 +1,391 @@
+//! End-to-end acceptance for the `pald-serve` serving layer (ISSUE 7,
+//! DESIGN.md §12), over real loopback TCP:
+//!
+//! * coalesced same-shape one-shots are **bit-identical** to direct
+//!   [`Session::compute`] calls, and provably ran as one batched group;
+//! * explicit `COMPUTE_BATCH` frames match direct computes;
+//! * streaming sessions over the wire match a local
+//!   [`IncrementalPald`](paldx::pald::IncrementalPald) oracle;
+//! * overload sheds with the retriable `Overloaded`, draining rejects
+//!   with the retriable `Draining`, queued-past-deadline requests get
+//!   typed `Timeout`s;
+//! * malformed, truncated, and oversized frames produce typed protocol
+//!   errors and a closed connection — never a panic;
+//! * `GET /metrics` on the frame port serves a plaintext scrape.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use paldx::data::distmat;
+use paldx::pald::{PaldError, Session};
+use paldx::serve::pool::config_for;
+use paldx::serve::{ServeClient, ServeConfig, Server, ServerHandle, ShapeKey, WireConfig};
+
+/// Start a server on an ephemeral loopback port.
+fn start(cfg: ServeConfig) -> ServerHandle {
+    Server::start(ServeConfig { addr: "127.0.0.1:0".into(), ..cfg }).expect("server start")
+}
+
+/// Pull a counter value out of a plaintext scrape.
+fn scrape_counter(scrape: &str, name: &str) -> u64 {
+    scrape
+        .lines()
+        .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+        .and_then(|l| l[name.len() + 1..].trim().parse().ok())
+        .unwrap_or_else(|| panic!("{name} missing from scrape:\n{scrape}"))
+}
+
+/// Three one-shots of the same shape, fired concurrently into a generous
+/// batch window, come back bit-identical to three direct
+/// `Session::compute` calls — and the pool counters prove they ran as a
+/// single coalesced group (one checkout for three jobs).
+#[test]
+fn coalesced_one_shots_are_bit_identical_to_direct_computes() {
+    let handle = start(ServeConfig {
+        batch_window_ms: 400,
+        default_deadline_ms: 30_000,
+        ..ServeConfig::default()
+    });
+    let addr = handle.addr().to_string();
+    let inputs: Vec<_> = (0..3).map(|s| distmat::random_tie_free(48, 100 + s)).collect();
+
+    let served: Vec<paldx::core::Mat> = std::thread::scope(|scope| {
+        let handles: Vec<_> = inputs
+            .iter()
+            .map(|d| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut c = ServeClient::connect(&addr).unwrap();
+                    c.compute(&WireConfig::default(), d).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Direct oracle: the same session config, computed locally.
+    let key = ShapeKey::for_request(&WireConfig::default(), 48).unwrap();
+    let mut session = Session::new(config_for(&key, 1).unwrap()).unwrap();
+    for (d, got) in inputs.iter().zip(&served) {
+        let want = session.compute(d).unwrap();
+        assert_eq!(
+            want.as_slice(),
+            got.as_slice(),
+            "served cohesion must be bit-identical to a direct compute"
+        );
+    }
+
+    let scrape = handle.scrape();
+    assert_eq!(scrape_counter(&scrape, "paldx_jobs_total"), 3, "one job metric per request");
+    let groups = scrape_counter(&scrape, "paldx_pool_hits_total")
+        + scrape_counter(&scrape, "paldx_pool_misses_total");
+    assert_eq!(groups, 1, "three one-shots must have coalesced into one checkout");
+
+    handle.shutdown();
+    let last = handle.join();
+    assert!(last.contains("paldx_serve_draining 1"), "{last}");
+}
+
+/// An explicit `COMPUTE_BATCH` frame returns outputs in input order,
+/// each bit-identical to a direct compute; stats arrive over the wire.
+#[test]
+fn explicit_batch_matches_direct_computes() {
+    let handle = start(ServeConfig { batch_window_ms: 1, ..ServeConfig::default() });
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+    let inputs: Vec<_> = (0..3).map(|s| distmat::random_tie_free(32, 7 + s)).collect();
+
+    let outs = client.compute_batch(&WireConfig::default(), inputs.clone()).unwrap();
+    assert_eq!(outs.len(), 3);
+    let key = ShapeKey::for_request(&WireConfig::default(), 32).unwrap();
+    let mut session = Session::new(config_for(&key, 1).unwrap()).unwrap();
+    for (d, got) in inputs.iter().zip(&outs) {
+        assert_eq!(session.compute(d).unwrap().as_slice(), got.as_slice());
+    }
+
+    // Truncated computes ride the same wire: k on the wire config.
+    let d = distmat::random_tie_free(40, 77);
+    let sparse_cfg = WireConfig { k: 6, ..WireConfig::default() };
+    let got = client.compute(&sparse_cfg, &d).unwrap();
+    let skey = ShapeKey::for_request(&sparse_cfg, 40).unwrap();
+    let mut sparse = Session::new(config_for(&skey, 1).unwrap()).unwrap();
+    assert_eq!(sparse.compute(&d).unwrap().as_slice(), got.as_slice());
+
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("paldx_jobs_total"), "{stats}");
+    assert_eq!(scrape_counter(&stats, "paldx_serve_connections_total"), 1);
+
+    handle.shutdown();
+    handle.join();
+}
+
+/// A streaming session over the wire (open → insert → remove → query →
+/// close) matches a local incremental-engine oracle bit for bit.
+#[test]
+fn streaming_session_matches_local_incremental_oracle() {
+    let handle = start(ServeConfig { reanchor_every: 0, ..ServeConfig::default() });
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+
+    let master = distmat::random_tie_free(14, 5);
+    let seed = master.slice_to(12, 12);
+    let (sid, n) = client.session_open(&WireConfig::default(), &seed).unwrap();
+    assert_eq!(n, 12);
+
+    let mut oracle = paldx::pald::Pald::builder()
+        .build()
+        .unwrap()
+        .into_incremental(&seed)
+        .unwrap();
+
+    let row: Vec<f32> = master.row(12)[..12].to_vec();
+    let (n1, idx) = client.session_insert(sid, &row).unwrap();
+    let oidx = oracle.insert_row(&row).unwrap();
+    assert_eq!((n1, idx as usize), (13, oidx));
+
+    let (n2, _) = client.session_remove(sid, 4).unwrap();
+    oracle.remove(4).unwrap();
+    assert_eq!(n2, 12);
+
+    let served = client.session_query(sid).unwrap();
+    assert_eq!(
+        served.as_slice(),
+        oracle.cohesion().as_slice(),
+        "served incremental cohesion must be bit-identical to the local engine"
+    );
+
+    client.session_close(sid).unwrap();
+    // Closed sessions are gone: a typed error, not a hang or a panic.
+    let err = client.session_query(sid).unwrap_err();
+    assert!(matches!(err, PaldError::Remote { .. }), "{err:?}");
+    // A bad insert row on a fresh session is typed too.
+    let (sid2, _) = client.session_open(&WireConfig::default(), &seed).unwrap();
+    assert!(client.session_insert(sid2, &[1.0, 2.0]).is_err());
+
+    handle.shutdown();
+    handle.join();
+}
+
+/// With the queue capacity at 2 and a long batch window holding the
+/// first two requests staged, a third concurrent request is shed with
+/// the retriable `Overloaded` — load-shedding, not queue collapse.
+#[test]
+fn overload_sheds_with_retriable_error() {
+    let handle = start(ServeConfig {
+        queue_cap: 2,
+        batch_window_ms: 800,
+        default_deadline_ms: 30_000,
+        ..ServeConfig::default()
+    });
+    let addr = handle.addr().to_string();
+
+    std::thread::scope(|scope| {
+        // Two requests admitted and staged behind the window.
+        let staged: Vec<_> = (0..2)
+            .map(|s| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let d = distmat::random_tie_free(24, 50 + s);
+                    ServeClient::connect(&addr).unwrap().compute(&WireConfig::default(), &d)
+                })
+            })
+            .collect();
+        // Give them time to occupy both queue slots.
+        std::thread::sleep(Duration::from_millis(250));
+        let d = distmat::random_tie_free(24, 99);
+        let err = ServeClient::connect(&addr)
+            .unwrap()
+            .compute(&WireConfig::default(), &d)
+            .expect_err("third request must be shed");
+        assert!(err.is_retriable(), "shed must be retriable: {err:?}");
+        assert!(matches!(err, PaldError::Overloaded { .. }), "{err:?}");
+        for h in staged {
+            h.join().unwrap().expect("staged requests still complete");
+        }
+    });
+
+    let scrape = handle.scrape();
+    assert_eq!(scrape_counter(&scrape, "paldx_serve_shed_total"), 1);
+    handle.shutdown();
+    handle.join();
+}
+
+/// While a drain is in progress (in-band `SHUTDOWN` with a slow compute
+/// still in flight), new work is rejected with the retriable `Draining`,
+/// the in-flight work completes, and `join` returns the final scrape.
+#[test]
+fn draining_rejects_new_work_retriable_and_completes_inflight() {
+    let handle = start(ServeConfig {
+        batch_window_ms: 1,
+        default_deadline_ms: 0, // the slow compute must not time out
+        ..ServeConfig::default()
+    });
+    let addr = handle.addr().to_string();
+
+    std::thread::scope(|scope| {
+        // A deliberately slow compute (naive kernel, big n) keeps the
+        // server in-flight while we drain around it.
+        let slow = scope.spawn({
+            let addr = addr.clone();
+            move || {
+                let d = distmat::random_tie_free(1024, 3);
+                let cfg = WireConfig { algorithm: "naive-triplet".into(), ..WireConfig::default() };
+                ServeClient::connect(&addr).unwrap().compute(&cfg, &d)
+            }
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut b = ServeClient::connect(&addr).unwrap();
+        b.shutdown().unwrap();
+        let d = distmat::random_tie_free(24, 8);
+        let err = b
+            .compute(&WireConfig::default(), &d)
+            .expect_err("new work during drain must be rejected");
+        assert!(err.is_retriable(), "drain reject must be retriable: {err:?}");
+        assert!(matches!(err, PaldError::Draining), "{err:?}");
+
+        let c = slow.join().unwrap().expect("in-flight work completes through the drain");
+        assert_eq!(c.rows(), 1024);
+    });
+
+    let last = handle.join();
+    assert!(last.contains("paldx_serve_draining 1"), "{last}");
+    assert_eq!(scrape_counter(&last, "paldx_jobs_total"), 1);
+}
+
+/// A request whose deadline lapses while staged behind the batch window
+/// gets a typed `Timeout`, and the timeout counter ticks.
+#[test]
+fn queued_past_deadline_requests_time_out_typed() {
+    let handle = start(ServeConfig { batch_window_ms: 400, ..ServeConfig::default() });
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+    let d = distmat::random_tie_free(24, 4);
+    let cfg = WireConfig { deadline_ms: 1, ..WireConfig::default() };
+    let err = client.compute(&cfg, &d).expect_err("1ms deadline must lapse in a 400ms window");
+    assert!(matches!(err, PaldError::Timeout { deadline_ms: 1 }), "{err:?}");
+    assert!(!err.is_retriable());
+    assert_eq!(scrape_counter(&handle.scrape(), "paldx_serve_timeout_total"), 1);
+    handle.shutdown();
+    handle.join();
+}
+
+/// Raw garbage after the length prefix produces a typed protocol error
+/// frame and a closed connection — the server never panics and keeps
+/// serving other connections.
+#[test]
+fn garbage_and_oversized_frames_get_typed_errors_and_close() {
+    let handle = start(ServeConfig { max_frame: 1 << 20, ..ServeConfig::default() });
+    let addr = handle.addr();
+
+    // Garbage: plausible length, bad version byte.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut frame = vec![0u8; 4 + 12];
+        frame[..4].copy_from_slice(&12u32.to_le_bytes());
+        frame[4] = 0xFF; // bad version
+        s.write_all(&frame).unwrap();
+        let reply = read_error_frame(&mut s);
+        assert!(reply.contains("version"), "{reply}");
+        assert_closed(&mut s);
+    }
+
+    // Oversized: a length prefix beyond max_frame is rejected before
+    // any allocation.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let reply = read_error_frame(&mut s);
+        assert!(reply.contains("oversized"), "{reply}");
+        assert_closed(&mut s);
+    }
+
+    // Truncated: a frame that promises more bytes than ever arrive.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&64u32.to_le_bytes()).unwrap();
+        s.write_all(&[paldx::serve::proto::PROTO_VERSION, 0x01]).unwrap();
+        drop(s); // close mid-frame; the server must not hang or panic
+    }
+
+    // The server still serves computes afterwards.
+    let mut client = ServeClient::connect(&addr.to_string()).unwrap();
+    let d = distmat::random_tie_free(16, 2);
+    assert_eq!(client.compute(&WireConfig::default(), &d).unwrap().rows(), 16);
+
+    handle.shutdown();
+    handle.join();
+}
+
+/// Read one response frame off a raw socket and render its error detail.
+fn read_error_frame(s: &mut TcpStream) -> String {
+    use paldx::serve::proto::{read_frame, FrameRead, Response};
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    loop {
+        match read_frame(s, paldx::serve::proto::DEFAULT_MAX_FRAME).expect("typed frame back") {
+            FrameRead::Frame(raw) => {
+                let resp = paldx::serve::proto::decode_response(&raw).unwrap();
+                match resp {
+                    Response::Error { detail, .. } => return detail,
+                    other => panic!("expected an error frame, got {other:?}"),
+                }
+            }
+            FrameRead::Idle => continue,
+            FrameRead::Eof => panic!("connection closed before the error frame"),
+        }
+    }
+}
+
+/// Assert the server closed the connection (EOF on the next read).
+fn assert_closed(s: &mut TcpStream) {
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = [0u8; 1];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => panic!("unexpected bytes after a protocol error"),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return, // reset also counts as closed
+        }
+    }
+}
+
+/// `GET /metrics` on the frame port serves the plaintext scrape over
+/// HTTP and closes.
+#[test]
+fn http_get_on_frame_port_serves_metrics_scrape() {
+    let handle = start(ServeConfig::default());
+    // Generate one job so the scrape is non-trivial.
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+    let d = distmat::random_tie_free(16, 11);
+    client.compute(&WireConfig::default(), &d).unwrap();
+
+    let mut s = TcpStream::connect(handle.addr()).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut body = String::new();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = [0u8; 4096];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => break,
+            Ok(m) => body.push_str(&String::from_utf8_lossy(&buf[..m])),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+    }
+    assert!(body.starts_with("HTTP/1.0 200 OK"), "{body}");
+    assert!(body.contains("Content-Type: text/plain"), "{body}");
+    assert!(body.contains("paldx_jobs_total"), "{body}");
+    assert!(body.contains("paldx_serve_admitted_total"), "{body}");
+
+    handle.shutdown();
+    handle.join();
+}
