@@ -1,0 +1,109 @@
+//! Bench target for the SIMD backend (DESIGN.md §13): every simd-*
+//! rung against its scalar twin at a fixed single-thread budget —
+//! dense pairwise (with an n = 2048 headline row), dense triplet, and
+//! the truncated `knn-simd-pairwise` path — with the measured speedup
+//! recorded, not gated (the ≥1.5× expectation only holds on AVX2
+//! hosts; the portable fallback is allowed to be ~1×).  Exactness
+//! anchors run first: dense SIMD within the documented tolerance of
+//! its scalar twin, `knn-simd-pairwise` bit-identical to
+//! `knn-opt-pairwise`.  Emits `BENCH_simd.json` next to
+//! `BENCH_knn.json`.
+//! Run: cargo bench --bench simd_backend   (PALDX_FULL=1 for larger sizes)
+
+use paldx::bench::{bench, fmt_secs, fmt_speedup, write_json_report, BenchOpts, Table};
+use paldx::data::distmat;
+use paldx::pald::{simd, Algorithm, Backend, Neighborhood, Pald, Threads};
+
+fn pald(alg: Algorithm, backend: Backend, k: usize) -> Pald {
+    let mut b = Pald::builder()
+        .algorithm(alg)
+        .backend(backend)
+        .threads(Threads::Fixed(1));
+    if k > 0 {
+        b = b.neighborhood(Neighborhood::Knn(k));
+    }
+    b.build().expect("valid bench configuration")
+}
+
+fn main() -> anyhow::Result<()> {
+    let full = paldx::bench::full_scale();
+    let opts = BenchOpts::from_env();
+    let host = if simd::simd_available() { "AVX2 (runtime-detected)" } else { "portable fallback" };
+    println!("simd backend on this host: {host}");
+
+    // Exactness anchors first: nothing is timed until the SIMD rungs
+    // agree with their scalar twins on this host.
+    {
+        let n = 96;
+        let k = 16;
+        let d = distmat::random_tie_free(n, 2027);
+        for alg in [Algorithm::OptimizedPairwise, Algorithm::OptimizedTriplet] {
+            let want = pald(alg, Backend::CpuScalar, 0).compute(&d)?;
+            let got = pald(alg, Backend::CpuSimd, 0).compute(&d)?;
+            anyhow::ensure!(
+                got.cohesion().allclose(want.cohesion(), 1e-4, 1e-5),
+                "{}: simd twin diverged from scalar beyond tolerance",
+                alg.name()
+            );
+        }
+        let want = pald(Algorithm::KnnOptPairwise, Backend::CpuScalar, k).compute(&d)?;
+        let got = pald(Algorithm::KnnOptPairwise, Backend::CpuSimd, k).compute(&d)?;
+        anyhow::ensure!(
+            got.cohesion().as_slice() == want.cohesion().as_slice(),
+            "knn-simd-pairwise must be bit-identical to knn-opt-pairwise"
+        );
+        println!("exactness anchors ok: simd rungs agree with their scalar twins");
+    }
+
+    let mut table = Table::new(
+        "simd — scalar vs SIMD backend, single thread",
+        &["kernel", "n", "k", "scalar time", "simd time", "speedup"],
+    );
+    let mut sweep = |alg: Algorithm, n: usize, k: usize| -> anyhow::Result<()> {
+        let d = distmat::random_tie_free(n, n as u64 + 13);
+        let mut scalar = pald(alg, Backend::CpuScalar, k);
+        let scalar_stats = bench(&opts, || {
+            scalar.compute(&d).expect("scalar compute");
+        });
+        let mut vector = pald(alg, Backend::CpuSimd, k);
+        let simd_stats = bench(&opts, || {
+            vector.compute(&d).expect("simd compute");
+        });
+        table.stat(format!("scalar/{}/n={n}/k={k}", alg.name()), scalar_stats);
+        table.stat(format!("simd/{}/n={n}/k={k}", alg.name()), simd_stats);
+        table.row(vec![
+            alg.name().to_string(),
+            n.to_string(),
+            if k == 0 { "-".into() } else { k.to_string() },
+            fmt_secs(scalar_stats.mean),
+            fmt_secs(simd_stats.mean),
+            fmt_speedup(scalar_stats.mean / simd_stats.mean.max(1e-12)),
+        ]);
+        Ok(())
+    };
+
+    // Dense pairwise: the n = 2048 headline row always runs; full mode
+    // widens the sweep.
+    let pairwise_ns: &[usize] = if full { &[256, 512, 1024, 2048, 4096] } else { &[256, 512, 2048] };
+    for &n in pairwise_ns {
+        sweep(Algorithm::OptimizedPairwise, n, 0)?;
+    }
+    // Dense triplet is a heavier O(n³) constant — smaller sizes.
+    let triplet_ns: &[usize] = if full { &[256, 512] } else { &[128, 256] };
+    for &n in triplet_ns {
+        sweep(Algorithm::OptimizedTriplet, n, 0)?;
+    }
+    // Truncated path: O(n·k²), so large n is cheap.
+    let knn_ns: &[usize] = if full { &[2048, 8192] } else { &[512, 2048] };
+    for &n in knn_ns {
+        sweep(Algorithm::KnnOptPairwise, n, 16)?;
+    }
+    table.print();
+
+    match write_json_report(std::path::Path::new("."), "simd", &[&table]) {
+        Ok(Some(path)) => println!("wrote {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("could not write BENCH_simd.json: {e}"),
+    }
+    Ok(())
+}

@@ -50,13 +50,14 @@ USAGE: paldx <command> [--options]
 COMMANDS:
   compute    --n <int> | --input <path.{bin,csv,vec}>   compute a cohesion matrix
              [--alg <name>|auto] [--tie strict|split] [--block B] [--block2 B]
-             [--threads P] [--k K] [--backend native|xla]
+             [--threads P] [--k K] [--backend auto|scalar|simd|xla]
              [--metric euclidean|manhattan|cosine] [--no-validate] [--output <path>]
              [--build exact|approx] [--storage dense|csr]  sub-quadratic pipeline
              (approx: RP-forest + NN-descent graph from .vec points, measured
              recall folded into the mass bound; csr: O(n*k^2) cohesion store,
              analyses run sparse; both need --k; see `knn` for the --ann-* knobs)
   plan       --n <int> [--threads P] [--tie strict|split] [--k K] [--calibrate]
+             [--backend auto|scalar|simd|xla]
              print the plan `--alg auto` would execute for this shape
   knn        --n <int> | --input <path.{bin,csv,vec}>   PKNN truncation tooling
              --k K [--mode build|inspect|compare|threads] [--alg ...] [--tie ...]
@@ -96,11 +97,13 @@ Inputs: .csv dense matrix | paldx .bin (dense PALDMAT1 or condensed PALDCND1,
         auto-detected) | .vec point cloud (one point per line, optional label)
 Algorithms: auto + naive-pairwise naive-triplet blocked-pairwise blocked-triplet
             branchfree-pairwise branchfree-triplet opt-pairwise opt-triplet
-            par-pairwise par-triplet hybrid par-hybrid
+            simd-pairwise simd-triplet par-pairwise par-triplet hybrid par-hybrid
             knn-pairwise knn-triplet knn-opt-pairwise knn-opt-triplet
-            knn-par-pairwise knn-par-triplet (sparse, O(n*k^2), the par pair
-            O(n*k^2/p); a truncating --k with --alg auto always resolves to a
-            sparse kernel — the par pair competes when --threads > 1)
+            knn-simd-pairwise knn-par-pairwise knn-par-triplet (sparse,
+            O(n*k^2), the par pair O(n*k^2/p); a truncating --k with --alg auto
+            always resolves to a sparse kernel — the par pair competes when
+            --threads > 1; the simd-* rungs are the AVX2 backend, runtime
+            feature-detected with a portable fallback — DESIGN.md §13)
 Env: PALDX_FULL=1 (paper-scale sizes), PALDX_TRIALS, PALDX_BUDGET_S,
      PALDX_CALIBRATE=1 (calibrate the scaling model against this machine)";
 
@@ -194,11 +197,9 @@ fn config_from(args: &Args) -> anyhow::Result<PaldConfig> {
     cfg.k = args.get_usize("k", 0)?;
     cfg.graph_build = graph_build_from(args)?;
     cfg.storage = storage_from(args)?;
-    cfg.backend = match args.get_or("backend", "native") {
-        "native" => Backend::Native,
-        "xla" => Backend::Xla,
-        other => anyhow::bail!("unknown backend '{other}'"),
-    };
+    let backend = args.get_or("backend", "auto");
+    cfg.backend = Backend::parse(backend)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend '{backend}' (auto|scalar|simd|xla)"))?;
     Ok(cfg)
 }
 
@@ -333,8 +334,8 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
 
     let config = config_from(args)?;
     anyhow::ensure!(
-        config.backend == Backend::Native,
-        "stream is served by the native engine (--backend native)"
+        config.backend != Backend::Xla,
+        "stream is served by the native engine (--backend auto|scalar|simd)"
     );
     let churn = args.get_usize("churn", 0)?;
     let bench_dir = PathBuf::from(args.get_or("bench-dir", "."));
@@ -594,17 +595,20 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let planner = if args.flag("calibrate") { Planner::calibrated() } else { Planner::new() };
     let plan = planner.resolve(&cfg, n);
     println!(
-        "plan for n={n} threads={} tie={:?} k={}:",
-        cfg.threads, cfg.tie_mode, cfg.k
+        "plan for n={n} threads={} tie={:?} k={} backend={}:",
+        cfg.threads,
+        cfg.tie_mode,
+        cfg.k,
+        cfg.backend.name()
     );
     println!("  {}", plan.describe());
     // Show the planner's actual candidate set and predictions.
     for (alg, params, cost) in
-        planner.scored_candidates(n, cfg.tie_mode, cfg.threads.max(1), cfg.k)
+        planner.scored_candidates(n, cfg.tie_mode, cfg.threads.max(1), cfg.k, cfg.backend)
     {
         let marker = if alg == plan.algorithm { " <- selected" } else { "" };
         println!(
-            "  candidate {:<16} block={:<4} block2={:<4} predicted={cost:.3e}s{marker}",
+            "  candidate {:<18} block={:<4} block2={:<4} predicted={cost:.3e}s{marker}",
             alg.name(),
             params.block,
             params.block2
@@ -689,8 +693,8 @@ fn cmd_knn(args: &Args) -> anyhow::Result<()> {
         "compare" => {
             let config = config_from(args)?;
             anyhow::ensure!(
-                config.backend == Backend::Native,
-                "knn compare is served by the native engine (--backend native)"
+                config.backend != Backend::Xla,
+                "knn compare is served by the native engine (--backend auto|scalar|simd)"
             );
             // Truncated run: pinned sparse kernel unless --alg given
             // (the threaded rung when a thread budget is set).
@@ -754,8 +758,8 @@ fn cmd_knn(args: &Args) -> anyhow::Result<()> {
             // artifacts when --bench-dir is given.
             let config = config_from(args)?;
             anyhow::ensure!(
-                config.backend == Backend::Native,
-                "knn threads is served by the native engine (--backend native)"
+                config.backend != Backend::Xla,
+                "knn threads is served by the native engine (--backend auto|scalar|simd)"
             );
             let max_p = config.threads.max(1);
             let opts = BenchOpts::from_env();
@@ -938,14 +942,20 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     for k in REGISTRY {
         let m = k.meta();
         println!(
-            "  {:<20} family={:?} rung={:?} parallel={} block2={}",
+            "  {:<20} family={:?} rung={:?} backend={} parallel={} block2={}",
             k.name(),
             m.family,
             m.rung,
+            m.backend.name(),
             m.parallel,
             m.uses_block2
         );
     }
+    println!(
+        "simd backend: {} on this host (runtime feature detection; \
+         explicit --backend simd always valid via the portable fallback)",
+        if crate::pald::simd::simd_available() { "AVX2" } else { "portable fallback" }
+    );
     println!("  {:<20} planner-selected kernel + block sizes", Algorithm::Auto.name());
     match crate::runtime::Manifest::load(&dir) {
         Ok(m) => {
@@ -1088,6 +1098,18 @@ mod tests {
     #[test]
     fn compute_with_auto_algorithm() {
         run(argv(&["compute", "--n", "32", "--alg", "auto"])).unwrap();
+    }
+
+    #[test]
+    fn backend_flag_parses_and_pins() {
+        // Explicit pins are valid on every host (the simd backend falls
+        // back to the portable 8-lane kernels without AVX2).
+        run(argv(&["compute", "--n", "32", "--backend", "simd", "--threads", "1"])).unwrap();
+        run(argv(&["compute", "--n", "32", "--backend", "scalar"])).unwrap();
+        run(argv(&["compute", "--n", "32", "--backend", "native"])).unwrap(); // alias
+        run(argv(&["plan", "--n", "256", "--backend", "simd"])).unwrap();
+        run(argv(&["info"])).unwrap();
+        assert!(run(argv(&["compute", "--n", "16", "--backend", "bogus"])).is_err());
     }
 
     /// Write a small clustered `.vec` point cloud for the approx tests.

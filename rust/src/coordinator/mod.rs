@@ -51,24 +51,27 @@ impl Coordinator {
     /// timings stay meaningful under planner-selected jobs.
     pub fn run(&mut self, d: &Mat, job: &Job) -> anyhow::Result<Mat> {
         let t0 = std::time::Instant::now();
-        let algorithm = match job.config.backend {
-            // Invalid shapes are rejected by compute_cohesion below; skip
-            // planning for them so the error path stays panic-free.
-            Backend::Native if d.rows() >= 2 && d.rows() == d.cols() => {
-                pald::plan_for(&job.config, d.rows()).algorithm.name()
+        let (algorithm, backend) = match job.config.backend {
+            Backend::Xla => (job.config.algorithm.name(), Backend::Xla.name()),
+            // Invalid shapes are rejected by the native compute path
+            // below; skip planning for them so the error path stays
+            // panic-free.
+            _ if d.rows() >= 2 && d.rows() == d.cols() => {
+                let plan = pald::plan_for(&job.config, d.rows());
+                (plan.algorithm.name(), plan.backend.name())
             }
-            _ => job.config.algorithm.name(),
+            _ => (job.config.algorithm.name(), job.config.backend.name()),
         };
         let c = match job.config.backend {
+            Backend::Xla => self.run_xla(d, job)?,
             // Validation::Skip preserves this layer's contract: the
             // coordinator serves pre-validated jobs; strict input checks
             // belong to the caller-facing `Pald` facade.
-            Backend::Native => PaldBuilder::from_config(&job.config)
+            _ => PaldBuilder::from_config(&job.config)
                 .validation(Validation::Skip)
                 .build()?
                 .compute(d)?
                 .into_matrix(),
-            Backend::Xla => self.run_xla(d, job)?,
         };
         self.metrics.record(JobMetrics {
             n: d.rows(),
@@ -76,7 +79,7 @@ impl Coordinator {
             // JobMetrics::work_units, not the dense n³/6.
             k: job.config.k,
             algorithm: algorithm.to_string(),
-            backend: format!("{:?}", job.config.backend),
+            backend: backend.to_string(),
             seconds: t0.elapsed().as_secs_f64(),
         });
         Ok(c)
@@ -100,10 +103,6 @@ impl Coordinator {
     /// the concrete kernel + tuned block sizes that will execute.
     pub fn plan(&mut self, n: usize, job: &Job) -> anyhow::Result<String> {
         Ok(match job.config.backend {
-            Backend::Native => {
-                let plan = pald::plan_for(&job.config, n);
-                format!("native {}", plan.describe())
-            }
             Backend::Xla => {
                 if self.xla.is_none() {
                     self.xla = Some(XlaRuntime::new(&job.artifacts_dir)?);
@@ -121,6 +120,10 @@ impl Coordinator {
                     "xla artifact={} (n={} block={}) pad {} -> {}",
                     spec.name, spec.n, spec.block, n, spec.n
                 )
+            }
+            _ => {
+                let plan = pald::plan_for(&job.config, n);
+                format!("native {}", plan.describe())
             }
         })
     }
@@ -157,6 +160,10 @@ mod tests {
         assert_eq!(c.rows(), 24);
         assert_eq!(coord.metrics.jobs().len(), 1);
         assert_eq!(coord.metrics.jobs()[0].n, 24);
+        // Metrics attribute the *resolved* backend of the planned kernel
+        // (the default Backend::Auto never appears).
+        let b = coord.metrics.jobs()[0].backend.as_str();
+        assert!(b == "scalar" || b == "simd", "unresolved backend in metrics: {b}");
     }
 
     #[test]

@@ -40,6 +40,12 @@ pub enum Algorithm {
     OptimizedPairwise,
     /// Triplet, fully optimized.
     OptimizedTriplet,
+    /// Pairwise on the explicit SIMD backend: runtime-detected AVX2
+    /// intrinsics (portable 8-lane fallback elsewhere) with a fixed,
+    /// documented lane-reduction order (`Backend::CpuSimd`).
+    SimdPairwise,
+    /// Triplet on the explicit SIMD backend.
+    SimdTriplet,
     /// Parallel pairwise (loop parallelism + reductions).
     ParallelPairwise,
     /// Parallel triplet (task graph with tile locks).
@@ -56,6 +62,11 @@ pub enum Algorithm {
     KnnOptPairwise,
     /// Truncated PKNN triplet ordering, blocked + branch-free rung.
     KnnOptTriplet,
+    /// Truncated PKNN pairwise on the explicit SIMD backend: the focus
+    /// counts run through gathered AVX2 integer lanes, the award pass
+    /// keeps the scalar masked form — bit-identical to the other sparse
+    /// rungs at every (n, k).
+    KnnSimdPairwise,
     /// Truncated PKNN pairwise, shared-memory parallel rung: edge-range
     /// partitioned counts + column-ownership awards, bit-identical to
     /// the sequential sparse kernels at every thread count
@@ -70,7 +81,7 @@ pub enum Algorithm {
 impl Algorithm {
     /// The concrete kernels, in ladder order (excludes [`Algorithm::Auto`],
     /// which is a planner directive, not a kernel).
-    pub const ALL: [Algorithm; 18] = [
+    pub const ALL: [Algorithm; 21] = [
         Algorithm::NaivePairwise,
         Algorithm::NaiveTriplet,
         Algorithm::BlockedPairwise,
@@ -79,6 +90,8 @@ impl Algorithm {
         Algorithm::BranchFreeTriplet,
         Algorithm::OptimizedPairwise,
         Algorithm::OptimizedTriplet,
+        Algorithm::SimdPairwise,
+        Algorithm::SimdTriplet,
         Algorithm::ParallelPairwise,
         Algorithm::ParallelTriplet,
         Algorithm::Hybrid,
@@ -87,6 +100,7 @@ impl Algorithm {
         Algorithm::KnnTriplet,
         Algorithm::KnnOptPairwise,
         Algorithm::KnnOptTriplet,
+        Algorithm::KnnSimdPairwise,
         Algorithm::KnnParPairwise,
         Algorithm::KnnParTriplet,
     ];
@@ -102,6 +116,8 @@ impl Algorithm {
             Algorithm::BranchFreeTriplet => "branchfree-triplet",
             Algorithm::OptimizedPairwise => "opt-pairwise",
             Algorithm::OptimizedTriplet => "opt-triplet",
+            Algorithm::SimdPairwise => "simd-pairwise",
+            Algorithm::SimdTriplet => "simd-triplet",
             Algorithm::ParallelPairwise => "par-pairwise",
             Algorithm::ParallelTriplet => "par-triplet",
             Algorithm::Hybrid => "hybrid",
@@ -110,6 +126,7 @@ impl Algorithm {
             Algorithm::KnnTriplet => "knn-triplet",
             Algorithm::KnnOptPairwise => "knn-opt-pairwise",
             Algorithm::KnnOptTriplet => "knn-opt-triplet",
+            Algorithm::KnnSimdPairwise => "knn-simd-pairwise",
             Algorithm::KnnParPairwise => "knn-par-pairwise",
             Algorithm::KnnParTriplet => "knn-par-triplet",
             Algorithm::Auto => "auto",
@@ -156,22 +173,102 @@ impl Algorithm {
             | Algorithm::BranchFreeTriplet
             | Algorithm::OptimizedTriplet
             | Algorithm::Hybrid => Algorithm::KnnOptTriplet,
+            Algorithm::SimdPairwise | Algorithm::SimdTriplet => Algorithm::KnnSimdPairwise,
             Algorithm::ParallelPairwise => Algorithm::KnnParPairwise,
             Algorithm::ParallelTriplet | Algorithm::ParallelHybrid => Algorithm::KnnParTriplet,
             other => *other,
         }
     }
+
+    /// The counterpart of this algorithm on `backend`, mirroring
+    /// [`Algorithm::truncated`]: a [`Backend::CpuSimd`] request maps the
+    /// sequential dense rungs to the SIMD rung of the same ordering and
+    /// the sequential sparse rungs to `knn-simd-pairwise` (the sparse
+    /// rungs are bit-identical to each other, so only throughput
+    /// changes); a [`Backend::CpuScalar`] request maps the SIMD rungs
+    /// back to their fully-optimized scalar counterparts.  Parallel
+    /// rungs stay scalar (the SIMD backend is sequential for now) and
+    /// [`Backend::Auto`] / [`Backend::Xla`] change nothing — Auto keeps
+    /// a pinned kernel pinned, and XLA is resolved by the coordinator,
+    /// not by kernel remapping.
+    pub fn with_backend(&self, backend: Backend) -> Algorithm {
+        match backend {
+            Backend::CpuSimd => match self {
+                Algorithm::NaivePairwise
+                | Algorithm::BlockedPairwise
+                | Algorithm::BranchFreePairwise
+                | Algorithm::OptimizedPairwise => Algorithm::SimdPairwise,
+                Algorithm::NaiveTriplet
+                | Algorithm::BlockedTriplet
+                | Algorithm::BranchFreeTriplet
+                | Algorithm::OptimizedTriplet
+                | Algorithm::Hybrid => Algorithm::SimdTriplet,
+                Algorithm::KnnPairwise
+                | Algorithm::KnnTriplet
+                | Algorithm::KnnOptPairwise
+                | Algorithm::KnnOptTriplet => Algorithm::KnnSimdPairwise,
+                other => *other,
+            },
+            Backend::CpuScalar => match self {
+                Algorithm::SimdPairwise => Algorithm::OptimizedPairwise,
+                Algorithm::SimdTriplet => Algorithm::OptimizedTriplet,
+                Algorithm::KnnSimdPairwise => Algorithm::KnnOptPairwise,
+                other => *other,
+            },
+            Backend::Auto | Backend::Xla => *self,
+        }
+    }
 }
 
-/// Execution backend.
+/// Execution backend (the registry's backend axis, DESIGN.md §13).
+///
+/// Kernels advertise a *concrete* backend in their
+/// [`KernelMeta`](crate::pald::KernelMeta); requests may additionally
+/// say [`Backend::Auto`] to let the planner cost across the available
+/// backends (the SIMD rungs enter the candidate set only when
+/// [`simd_available`](crate::pald::simd::simd_available) holds — the
+/// feature-detection gate).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Backend {
-    /// Run the Rust kernels in-process.
+    /// Resolve per run: SIMD where the host supports it and the cost
+    /// model favors it, portable scalar otherwise.  A pinned (non-Auto)
+    /// algorithm stays pinned.
     #[default]
-    Native,
+    Auto,
+    /// Portable scalar Rust kernels in-process (the autovectorized
+    /// rungs — every kernel that existed before the backend axis).
+    CpuScalar,
+    /// Explicit SIMD kernels in-process: runtime-detected AVX2
+    /// intrinsics with a bit-identical portable 8-lane fallback, so the
+    /// request is valid on every host.
+    CpuSimd,
     /// Execute the AOT-compiled JAX+Pallas artifact via PJRT
     /// (see [`crate::coordinator`]).
     Xla,
+}
+
+impl Backend {
+    /// CLI/plan name of the backend.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::CpuScalar => "scalar",
+            Backend::CpuSimd => "simd",
+            Backend::Xla => "xla",
+        }
+    }
+
+    /// Parse a CLI backend name (`native` is accepted as the historical
+    /// alias of `scalar`).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "auto" => Some(Backend::Auto),
+            "scalar" | "native" => Some(Backend::CpuScalar),
+            "simd" => Some(Backend::CpuSimd),
+            "xla" => Some(Backend::Xla),
+            _ => None,
+        }
+    }
 }
 
 /// Where a truncated run keeps its distance and cohesion state
@@ -219,7 +316,9 @@ pub struct PaldConfig {
     /// costs truncation against the dense kernels and picks it when it
     /// wins.
     pub k: usize,
-    /// Execution backend (native kernels or the XLA artifact path).
+    /// Execution backend: [`Backend::Auto`] resolves scalar-vs-SIMD per
+    /// run; a concrete CPU backend pins it; [`Backend::Xla`] routes the
+    /// request to the coordinator's artifact path.
     pub backend: Backend,
     /// How a truncated run builds its neighbor graph: exact selection,
     /// or the seeded sub-quadratic approximate builder with a measured
@@ -240,7 +339,7 @@ impl Default for PaldConfig {
             block2: 0,
             threads: available_threads(),
             k: 0,
-            backend: Backend::Native,
+            backend: Backend::Auto,
             graph_build: crate::pald::knn::GraphBuild::Exact,
             storage: Storage::Dense,
         }
@@ -528,6 +627,8 @@ mod tests {
         assert_eq!(Algorithm::ParallelPairwise.truncated(), Algorithm::KnnParPairwise);
         assert_eq!(Algorithm::ParallelTriplet.truncated(), Algorithm::KnnParTriplet);
         assert_eq!(Algorithm::ParallelHybrid.truncated(), Algorithm::KnnParTriplet);
+        assert_eq!(Algorithm::SimdPairwise.truncated(), Algorithm::KnnSimdPairwise);
+        assert_eq!(Algorithm::SimdTriplet.truncated(), Algorithm::KnnSimdPairwise);
         assert_eq!(Algorithm::Auto.truncated(), Algorithm::Auto);
         for alg in Algorithm::ALL {
             let t = alg.truncated();
@@ -545,6 +646,53 @@ mod tests {
         assert_eq!(Algorithm::parse("auto"), Some(Algorithm::Auto));
         assert!(Algorithm::Auto.kernel().is_none());
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn backend_names_roundtrip_with_native_alias() {
+        for b in [Backend::Auto, Backend::CpuScalar, Backend::CpuSimd, Backend::Xla] {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("native"), Some(Backend::CpuScalar));
+        assert_eq!(Backend::parse("avx"), None);
+        assert_eq!(Backend::default(), Backend::Auto);
+    }
+
+    #[test]
+    fn with_backend_maps_rungs_both_ways() {
+        use crate::pald::kernel::kernel_for;
+        assert_eq!(
+            Algorithm::OptimizedPairwise.with_backend(Backend::CpuSimd),
+            Algorithm::SimdPairwise
+        );
+        assert_eq!(
+            Algorithm::OptimizedTriplet.with_backend(Backend::CpuSimd),
+            Algorithm::SimdTriplet
+        );
+        assert_eq!(Algorithm::Hybrid.with_backend(Backend::CpuSimd), Algorithm::SimdTriplet);
+        assert_eq!(
+            Algorithm::KnnOptTriplet.with_backend(Backend::CpuSimd),
+            Algorithm::KnnSimdPairwise
+        );
+        assert_eq!(
+            Algorithm::SimdTriplet.with_backend(Backend::CpuScalar),
+            Algorithm::OptimizedTriplet
+        );
+        assert_eq!(
+            Algorithm::KnnSimdPairwise.with_backend(Backend::CpuScalar),
+            Algorithm::KnnOptPairwise
+        );
+        for alg in Algorithm::ALL {
+            // Auto and Xla never remap; parallel rungs stay scalar.
+            assert_eq!(alg.with_backend(Backend::Auto), alg);
+            assert_eq!(alg.with_backend(Backend::Xla), alg);
+            let simd = alg.with_backend(Backend::CpuSimd);
+            if kernel_for(alg).unwrap().meta().parallel {
+                assert_eq!(simd, alg, "{} must stay scalar", alg.name());
+            }
+            // A simd remap round-trips onto a scalar kernel, never Auto.
+            assert!(kernel_for(simd.with_backend(Backend::CpuScalar)).is_some());
+        }
     }
 
     #[test]

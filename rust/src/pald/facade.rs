@@ -109,7 +109,7 @@ impl Default for PaldBuilder {
             graph_build: GraphBuild::Exact,
             storage: Storage::Dense,
             validation: Validation::Strict,
-            backend: Backend::Native,
+            backend: Backend::Auto,
         }
     }
 }
@@ -218,6 +218,20 @@ impl PaldBuilder {
     /// [`PaldBuilder::build`]).
     pub fn storage(mut self, storage: Storage) -> PaldBuilder {
         self.storage = storage;
+        self
+    }
+
+    /// Execution backend (DESIGN.md §13): [`Backend::Auto`] (default)
+    /// lets the planner cost scalar against SIMD kernels — the SIMD
+    /// rungs compete only when runtime feature detection finds AVX2, so
+    /// Auto never regresses on other hosts; [`Backend::CpuScalar`] /
+    /// [`Backend::CpuSimd`] pin the backend (a pinned algorithm is
+    /// re-mapped to its twin on that backend,
+    /// [`Algorithm::with_backend`]); [`Backend::Xla`] fails
+    /// [`PaldBuilder::build`] with [`PaldError::UnsupportedBackend`] —
+    /// it is served by the coordinator, not the native engine.
+    pub fn backend(mut self, backend: Backend) -> PaldBuilder {
+        self.backend = backend;
         self
     }
 
@@ -654,6 +668,48 @@ mod tests {
             assert_eq!(r.strong_ties(), want.strong_ties());
             assert_eq!(r.communities(), want.communities());
         }
+    }
+
+    #[test]
+    fn backend_pin_reaches_the_simd_kernels_and_agrees_with_scalar() {
+        let d = distmat::random_tie_free(32, 21);
+        let mut scalar = Pald::builder()
+            .backend(Backend::CpuScalar)
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        let want = scalar.compute(&d).unwrap();
+        assert_eq!(want.plan().backend, Backend::CpuScalar);
+        let mut simd = Pald::builder()
+            .backend(Backend::CpuSimd)
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        let r = simd.compute(&d).unwrap();
+        assert_eq!(r.plan().backend, Backend::CpuSimd);
+        assert_eq!(r.backend(), Backend::CpuSimd);
+        assert!(
+            r.plan().algorithm.name().starts_with("simd-"),
+            "{}",
+            r.plan().algorithm.name()
+        );
+        assert!(
+            r.cohesion().allclose(want.cohesion(), 1e-4, 1e-5),
+            "simd backend diverged from scalar: maxdiff={}",
+            r.cohesion().max_abs_diff(want.cohesion())
+        );
+        // The pin composes with a by-name algorithm and a truncated
+        // neighborhood: scalar names map to their SIMD twins.
+        let mut knn = Pald::builder()
+            .algorithm(Algorithm::OptimizedPairwise)
+            .backend(Backend::CpuSimd)
+            .neighborhood(Neighborhood::Knn(6))
+            .threads(Threads::Fixed(1))
+            .build()
+            .unwrap();
+        let rk = knn.compute(&d).unwrap();
+        assert_eq!(rk.plan().algorithm, Algorithm::KnnSimdPairwise);
+        assert_eq!(rk.effective_k(), Some(6));
     }
 
     #[test]

@@ -1,23 +1,26 @@
 //! Kernel registry: every PaLD variant behind one trait (DESIGN.md §6).
 //!
-//! Each of the 18 variants — the paper's 12-rung dense optimization
-//! ladder plus the 6 sparse PKNN rungs (DESIGN.md §9–§10) — implements
-//! [`CohesionKernel`]: identity ([`Algorithm`]), capability metadata
-//! ([`KernelMeta`]), a machine-model cost estimate the [planner] uses to
-//! auto-select a variant, tuned default block sizes (Theorems 4.1/4.2),
-//! and a `compute_into` entry point that accumulates *unnormalized*
-//! support through a reusable [`Workspace`].  The [`REGISTRY`] replaces
-//! both the hard-coded 12-arm `match` that used to live in `api.rs` and
-//! the string-to-enum plumbing in the CLI.
+//! Each of the 21 variants — the paper's 12-rung dense optimization
+//! ladder, the explicit-SIMD rungs (DESIGN.md §13), plus the 7 sparse
+//! PKNN rungs (DESIGN.md §9–§10) — implements [`CohesionKernel`]:
+//! identity ([`Algorithm`]), capability metadata ([`KernelMeta`],
+//! including the [`Backend`] axis), a machine-model cost estimate the
+//! [planner] uses to auto-select a variant, tuned default block sizes
+//! (Theorems 4.1/4.2), and a `compute_into` entry point that accumulates
+//! *unnormalized* support through a reusable [`Workspace`].  The
+//! [`REGISTRY`] replaces both the hard-coded 12-arm `match` that used to
+//! live in `api.rs` and the string-to-enum plumbing in the CLI.
 //!
 //! [planner]: crate::pald::planner::Planner
 
 use crate::core::Mat;
-use crate::pald::api::Algorithm;
+use crate::pald::api::{Algorithm, Backend};
 use crate::pald::knn;
+use crate::pald::knn::SparseRung;
 use crate::pald::workspace::Workspace;
 use crate::pald::{
-    blocked, branchfree, hybrid, naive, optimized, parallel_pairwise, parallel_triplet, TieMode,
+    blocked, branchfree, hybrid, naive, optimized, parallel_pairwise, parallel_triplet, simd,
+    TieMode,
 };
 use crate::sim::machine::{pairwise_time, triplet_time, MachineParams, NumaMode};
 use crate::sim::traffic;
@@ -45,6 +48,9 @@ pub enum Rung {
     BranchFree,
     /// Blocking + branch-free + integer U + reciprocals.
     Optimized,
+    /// Explicit SIMD on top of the optimized rung (runtime-dispatched
+    /// AVX2 with a portable lane-model fallback, DESIGN.md §13).
+    Simd,
     /// Shared-memory parallel on top of the optimized rung.
     Parallel,
 }
@@ -67,6 +73,11 @@ pub struct KernelMeta {
     /// and runs at O(n·k²) over the symmetrized kNN graph instead of
     /// Θ(n³) over every pair (DESIGN.md §9).
     pub sparse: bool,
+    /// Concrete backend the kernel executes on — always a resolved
+    /// variant ([`Backend::CpuScalar`] or [`Backend::CpuSimd`]), never
+    /// [`Backend::Auto`].  The planner's backend filter and the
+    /// result/plan surfaces read this field (DESIGN.md §13).
+    pub backend: Backend,
 }
 
 /// Resolved execution parameters handed to a kernel.
@@ -83,6 +94,10 @@ pub struct ExecParams {
     /// Neighborhood size for the sparse PKNN kernels (0 = complete
     /// graph, i.e. the dense-exact semantics); dense kernels ignore it.
     pub k: usize,
+    /// Backend the plan requested (informational: each kernel is pinned
+    /// to the backend in its [`KernelMeta`]; this records what the
+    /// caller asked for, e.g. [`Backend::Auto`] vs an explicit pin).
+    pub backend: Backend,
 }
 
 impl ExecParams {
@@ -160,13 +175,30 @@ const NAIVE_PENALTY: f64 = 8.0;
 const BLOCKED_PENALTY: f64 = 4.0;
 const BRANCHFREE_PENALTY: f64 = 3.0;
 
-// ---- the 12 kernels -----------------------------------------------------
+/// Throughput factor of the SIMD backend in the cost model: ~2x over
+/// the autovectorized optimized rung when the host dispatches to AVX2,
+/// 1.0 elsewhere (the portable lane model is no faster than the scalar
+/// kernels).  This is the planner's feature-detection gate: on a
+/// non-AVX2 host the SIMD rungs never undercut their scalar twins.
+pub(crate) fn simd_cost_factor() -> f64 {
+    if simd::simd_available() {
+        2.0
+    } else {
+        1.0
+    }
+}
+
+// ---- the dense kernels --------------------------------------------------
 
 macro_rules! meta {
     ($family:ident, $rung:ident, par = $par:expr, b2 = $b2:expr) => {
-        meta!($family, $rung, par = $par, b2 = $b2, sparse = false)
+        meta!($family, $rung, par = $par, b2 = $b2, sparse = false, backend = CpuScalar)
     };
     ($family:ident, $rung:ident, par = $par:expr, b2 = $b2:expr, sparse = $sp:expr) => {
+        meta!($family, $rung, par = $par, b2 = $b2, sparse = $sp, backend = CpuScalar)
+    };
+    ($family:ident, $rung:ident, par = $par:expr, b2 = $b2:expr, sparse = $sp:expr,
+     backend = $be:ident) => {
         KernelMeta {
             family: Family::$family,
             rung: Rung::$rung,
@@ -174,6 +206,7 @@ macro_rules! meta {
             exact_ties: true,
             uses_block2: $b2,
             sparse: $sp,
+            backend: Backend::$be,
         }
     };
 }
@@ -338,6 +371,50 @@ impl CohesionKernel for OptimizedTripletK {
     }
 }
 
+/// Pairwise on the explicit SIMD backend: the optimized rung's tiling
+/// with the count/update inner loops hand-vectorized (runtime AVX2,
+/// portable 8-lane fallback; fixed lane-reduction order — DESIGN.md
+/// §13).
+pub struct SimdPairwiseK;
+impl CohesionKernel for SimdPairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::SimdPairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, Simd, par = false, b2 = false, sparse = false, backend = CpuSimd)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        seq_pairwise_cost(n, p.block, mp) / simd_cost_factor()
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        pairwise_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        simd::pairwise_simd_into(d, p.tie, p.block, ws, out);
+    }
+}
+
+/// Triplet ordering on the explicit SIMD backend: vectorized focus and
+/// cohesion row kernels with the fixed lane-fold order (DESIGN.md §13).
+pub struct SimdTripletK;
+impl CohesionKernel for SimdTripletK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::SimdTriplet
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Triplet, Simd, par = false, b2 = true, sparse = false, backend = CpuSimd)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        seq_triplet_cost(n, p.block, p.block2_or_block(), mp) / simd_cost_factor()
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        triplet_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        simd::triplet_simd_into(d, p.tie, p.block, p.block2_or_block(), ws, out);
+    }
+}
+
 /// Parallel pairwise (loop parallelism + reductions).
 pub struct ParallelPairwiseK;
 impl CohesionKernel for ParallelPairwiseK {
@@ -499,7 +576,17 @@ impl CohesionKernel for KnnPairwiseK {
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
         let Workspace { knn: scratch, phases, .. } = ws;
-        knn::sparse_support_into(scratch, d, p.tie, p.k, false, false, p.block, out, phases);
+        knn::sparse_support_into(
+            scratch,
+            d,
+            p.tie,
+            p.k,
+            SparseRung::Reference,
+            false,
+            p.block,
+            out,
+            phases,
+        );
     }
 }
 
@@ -521,7 +608,17 @@ impl CohesionKernel for KnnTripletK {
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
         let Workspace { knn: scratch, phases, .. } = ws;
-        knn::sparse_support_into(scratch, d, p.tie, p.k, false, true, p.block, out, phases);
+        knn::sparse_support_into(
+            scratch,
+            d,
+            p.tie,
+            p.k,
+            SparseRung::Reference,
+            true,
+            p.block,
+            out,
+            phases,
+        );
     }
 }
 
@@ -543,7 +640,17 @@ impl CohesionKernel for KnnOptPairwiseK {
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
         let Workspace { knn: scratch, phases, .. } = ws;
-        knn::sparse_support_into(scratch, d, p.tie, p.k, true, false, p.block, out, phases);
+        knn::sparse_support_into(
+            scratch,
+            d,
+            p.tie,
+            p.k,
+            SparseRung::Masked,
+            false,
+            p.block,
+            out,
+            phases,
+        );
     }
 }
 
@@ -564,7 +671,54 @@ impl CohesionKernel for KnnOptTripletK {
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
         let Workspace { knn: scratch, phases, .. } = ws;
-        knn::sparse_support_into(scratch, d, p.tie, p.k, true, true, p.block, out, phases);
+        knn::sparse_support_into(
+            scratch,
+            d,
+            p.tie,
+            p.k,
+            SparseRung::Masked,
+            true,
+            p.block,
+            out,
+            phases,
+        );
+    }
+}
+
+/// Truncated pairwise on the SIMD backend: the integer candidate count
+/// runs through gathered AVX2 lanes (portable fallback elsewhere) while
+/// the award pass stays on the masked scalar path — so the support it
+/// accumulates is bit-identical to every other sparse rung (U is exact
+/// in any summation order; DESIGN.md §13).
+pub struct KnnSimdPairwiseK;
+impl CohesionKernel for KnnSimdPairwiseK {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::KnnSimdPairwise
+    }
+    fn meta(&self) -> KernelMeta {
+        meta!(Pairwise, Simd, par = false, b2 = false, sparse = true, backend = CpuSimd)
+    }
+    fn cost(&self, n: usize, p: &ExecParams, mp: &MachineParams) -> f64 {
+        // Only the count half of the pair work vectorizes; model that as
+        // half the SIMD speedup on the truncated pair-work term.
+        knn_cost(n, p, mp, 1.0 / (0.5 * (1.0 + simd_cost_factor())))
+    }
+    fn default_blocks(&self, n: usize, m: u64) -> (usize, usize) {
+        pairwise_blocks(m, n)
+    }
+    fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
+        let Workspace { knn: scratch, phases, .. } = ws;
+        knn::sparse_support_into(
+            scratch,
+            d,
+            p.tie,
+            p.k,
+            SparseRung::Simd,
+            false,
+            p.block,
+            out,
+            phases,
+        );
     }
 }
 
@@ -649,9 +803,10 @@ impl CohesionKernel for KnnParTripletK {
 // ---- registry -----------------------------------------------------------
 
 /// All kernels, in optimization-ladder order (matches [`Algorithm::ALL`]):
-/// the 12 dense variants followed by the 6 truncated PKNN variants
-/// (reference, optimized, and parallel rungs, each in both orderings).
-pub static REGISTRY: [&dyn CohesionKernel; 18] = [
+/// the 14 dense variants (the 12 scalar rungs plus the two SIMD-backend
+/// rungs) followed by the 7 truncated PKNN variants (reference,
+/// optimized, SIMD, and parallel rungs).
+pub static REGISTRY: [&dyn CohesionKernel; 21] = [
     &NaivePairwiseK,
     &NaiveTripletK,
     &BlockedPairwiseK,
@@ -660,6 +815,8 @@ pub static REGISTRY: [&dyn CohesionKernel; 18] = [
     &BranchFreeTripletK,
     &OptimizedPairwiseK,
     &OptimizedTripletK,
+    &SimdPairwiseK,
+    &SimdTripletK,
     &ParallelPairwiseK,
     &ParallelTripletK,
     &HybridK,
@@ -668,6 +825,7 @@ pub static REGISTRY: [&dyn CohesionKernel; 18] = [
     &KnnTripletK,
     &KnnOptPairwiseK,
     &KnnOptTripletK,
+    &KnnSimdPairwiseK,
     &KnnParPairwiseK,
     &KnnParTripletK,
 ];
@@ -706,7 +864,14 @@ mod tests {
         let n = 36;
         let d = distmat::random_tie_free(n, 2024);
         let want = naive::pairwise(&d, TieMode::Strict);
-        let p = ExecParams { tie: TieMode::Strict, block: 8, block2: 4, threads: 3, k: 0 };
+        let p = ExecParams {
+            tie: TieMode::Strict,
+            block: 8,
+            block2: 4,
+            threads: 3,
+            k: 0,
+            backend: Backend::Auto,
+        };
         let mut ws = Workspace::new();
         for k in REGISTRY {
             let mut c = Mat::zeros(n, n);
@@ -724,7 +889,14 @@ mod tests {
     #[test]
     fn costs_are_positive_and_ordered() {
         let mp = MachineParams::xeon_6226r();
-        let p = ExecParams { tie: TieMode::Strict, block: 128, block2: 64, threads: 1, k: 0 };
+        let p = ExecParams {
+            tie: TieMode::Strict,
+            block: 128,
+            block2: 64,
+            threads: 1,
+            k: 0,
+            backend: Backend::Auto,
+        };
         let naive_c = kernel_for(Algorithm::NaivePairwise).unwrap().cost(2048, &p, &mp);
         let opt_c = kernel_for(Algorithm::OptimizedPairwise).unwrap().cost(2048, &p, &mp);
         assert!(naive_c > opt_c, "naive={naive_c} opt={opt_c}");
@@ -783,12 +955,20 @@ mod tests {
         let want = naive::pairwise(&d, TieMode::Strict);
         let mut ws = Workspace::new();
         for threads in [1usize, 4] {
-            let p = ExecParams { tie: TieMode::Strict, block: 8, block2: 0, threads, k: n - 1 };
+            let p = ExecParams {
+                tie: TieMode::Strict,
+                block: 8,
+                block2: 0,
+                threads,
+                k: n - 1,
+                backend: Backend::Auto,
+            };
             for alg in [
                 Algorithm::KnnPairwise,
                 Algorithm::KnnTriplet,
                 Algorithm::KnnOptPairwise,
                 Algorithm::KnnOptTriplet,
+                Algorithm::KnnSimdPairwise,
                 Algorithm::KnnParPairwise,
                 Algorithm::KnnParTriplet,
             ] {
@@ -799,6 +979,56 @@ mod tests {
                 assert_eq!(c.as_slice(), want.as_slice(), "{} p={threads}", kern.name());
             }
         }
+    }
+
+    #[test]
+    fn backend_metadata_is_resolved_and_matches_names() {
+        for k in REGISTRY {
+            let m = k.meta();
+            let simd_named = k.name().starts_with("simd-") || k.name().starts_with("knn-simd-");
+            let want = if simd_named { Backend::CpuSimd } else { Backend::CpuScalar };
+            assert_eq!(m.backend, want, "{}", k.name());
+            assert!(
+                m.backend != Backend::Auto && m.backend != Backend::Xla,
+                "{}: KernelMeta::backend must be a resolved variant",
+                k.name()
+            );
+        }
+    }
+
+    #[test]
+    fn simd_cost_never_undercuts_scalar_without_avx2_nor_exceeds_it_with() {
+        // The feature-detection gate: factor >= 1 always, so the SIMD
+        // rungs cost at most their scalar twins — and exactly the same
+        // on hosts without AVX2 (where dispatch falls back to the
+        // portable lane model and there is no speedup to predict).
+        let mp = MachineParams::xeon_6226r();
+        let p = ExecParams {
+            tie: TieMode::Strict,
+            block: 128,
+            block2: 64,
+            threads: 1,
+            k: 0,
+            backend: Backend::Auto,
+        };
+        let opt_p = kernel_for(Algorithm::OptimizedPairwise).unwrap().cost(2048, &p, &mp);
+        let simd_p = kernel_for(Algorithm::SimdPairwise).unwrap().cost(2048, &p, &mp);
+        let opt_t = kernel_for(Algorithm::OptimizedTriplet).unwrap().cost(2048, &p, &mp);
+        let simd_t = kernel_for(Algorithm::SimdTriplet).unwrap().cost(2048, &p, &mp);
+        assert!(simd_p > 0.0 && simd_t > 0.0);
+        assert!(simd_p <= opt_p, "simd={simd_p} opt={opt_p}");
+        assert!(simd_t <= opt_t, "simd={simd_t} opt={opt_t}");
+        if simd::simd_available() {
+            assert!(simd_p < opt_p, "AVX2 host must predict a dense SIMD win");
+        } else {
+            assert_eq!(simd_p, opt_p, "no-AVX2 host must predict no win");
+        }
+        // Sparse: the SIMD count rung sits between the masked rung and
+        // an (unmodeled) full-SIMD bound.
+        let pk = ExecParams { k: 16, ..p };
+        let knn_opt = kernel_for(Algorithm::KnnOptPairwise).unwrap().cost(4096, &pk, &mp);
+        let knn_simd = kernel_for(Algorithm::KnnSimdPairwise).unwrap().cost(4096, &pk, &mp);
+        assert!(knn_simd <= knn_opt, "knn_simd={knn_simd} knn_opt={knn_opt}");
     }
 
     #[test]

@@ -7,13 +7,19 @@
 //! and `y` — the graph is symmetrized).  Per-pair cost is O(degree), so
 //! the whole computation is O(n·k²) instead of Θ(n³).
 //!
-//! Two rungs mirror the dense ladder, each in both orderings:
+//! Three sequential rungs mirror the dense ladder ([`SparseRung`]),
+//! plus the threaded rung:
 //!
 //! * **reference** — branchy inner loops, the sparse twin of
 //!   [`naive::pairwise`](crate::pald::naive::pairwise);
 //! * **opt** — masked {0, ½, 1} arithmetic with the candidate sweep
 //!   tiled in `block`-sized chunks, the sparse twin of the
 //!   blocked/branch-free rung;
+//! * **simd** — the integer candidate count through the runtime-
+//!   dispatched SIMD backend
+//!   ([`count_cands_simd`](crate::pald::simd::count_cands_simd),
+//!   DESIGN.md §13) while the award pass stays on the masked scalar
+//!   path;
 //! * **par** — shared-memory parallel on top of the opt rung
 //!   ([`sparse_support_parallel_into`], DESIGN.md §10): the CSR edge
 //!   range partitioned across threads for the integer count pass,
@@ -22,11 +28,13 @@
 //! The *pairwise* ordering fuses count + award per pair; the *triplet*
 //! ordering runs a full focus pass (all edge weights first) then a
 //! cohesion pass, attributing [`PhaseTimes`] like the dense two-pass
-//! kernels.  All six variants award in the identical pair-and-candidate
-//! order per cell of C, so they are **bit-identical to each other** (the
-//! parallel pair at every thread count), and with `k = n - 1` (candidate
-//! set = everything, edge set = every pair) they are bit-identical to
-//! the dense pairwise reference in support units — the exactness anchor
+//! kernels.  All seven variants award in the identical
+//! pair-and-candidate order per cell of C (the SIMD rung only changes
+//! *how the integer U is counted*, which is exact in any order), so
+//! they are **bit-identical to each other** (the parallel pair at every
+//! thread count), and with `k = n - 1` (candidate set = everything,
+//! edge set = every pair) they are bit-identical to the dense pairwise
+//! reference in support units — the exactness anchor
 //! `rust/tests/knn.rs` and the conformance harness enforce.
 
 use std::time::Instant;
@@ -34,6 +42,7 @@ use std::time::Instant;
 use crate::core::Mat;
 use crate::pald::blocked::resolve_block;
 use crate::pald::knn::graph::{merge_sorted, unpack_edge, GraphScratch, NeighborGraph};
+use crate::pald::simd;
 use crate::pald::workspace::PhaseTimes;
 use crate::pald::{in_focus, normalize, TieMode};
 use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
@@ -139,6 +148,33 @@ impl KnnScratch {
                 .iter()
                 .map(|l| l.capacity() * std::mem::size_of::<u32>())
                 .sum::<usize>()
+    }
+}
+
+/// Inner-loop flavor of the sequential sparse rungs — which count and
+/// award implementations [`sparse_support_into`] dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum SparseRung {
+    /// Branchy reference loops (the `knn-pairwise`/`knn-triplet` pair).
+    Reference,
+    /// Masked {0, ½, 1} count + award (the `knn-opt-*` pair).
+    Masked,
+    /// SIMD-backend integer count (gathered AVX2 lanes, portable
+    /// fallback); the award stays on the masked scalar path, so the
+    /// accumulated support is bit-identical to [`SparseRung::Masked`].
+    Simd,
+}
+
+impl SparseRung {
+    /// Focus size of pair rows `dx`/`dy` over the candidate list, on
+    /// this rung's count path.  All three produce the same integer.
+    #[inline(always)]
+    fn count(self, dx: &[f32], dy: &[f32], dxy: f32, cand: &[u32], tie: TieMode) -> u32 {
+        match self {
+            SparseRung::Reference => count_cands_reference(dx, dy, dxy, cand, tie),
+            SparseRung::Masked => count_cands_masked(dx, dy, dxy, cand, tie),
+            SparseRung::Simd => simd::count_cands_simd(dx, dy, dxy, cand, tie),
+        }
     }
 }
 
@@ -293,17 +329,17 @@ fn award_cands_masked(
 
 /// Unnormalized truncated support accumulation into `out` (zeroed
 /// here); the graph is rebuilt from `d` at `effective_k(k, n)` into the
-/// scratch's reused buffers.  `branchfree` selects the rung,
-/// `two_pass` the ordering (fused pairwise vs focus-then-cohesion
-/// triplet), and the report of what was covered lands in
-/// `scratch.report`.
+/// scratch's reused buffers.  `rung` selects the inner-loop flavor
+/// ([`SparseRung`]), `two_pass` the ordering (fused pairwise vs
+/// focus-then-cohesion triplet), and the report of what was covered
+/// lands in `scratch.report`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn sparse_support_into(
     scratch: &mut KnnScratch,
     d: &Mat,
     tie: TieMode,
     k: usize,
-    branchfree: bool,
+    rung: SparseRung,
     two_pass: bool,
     block: usize,
     out: &mut Mat,
@@ -330,11 +366,7 @@ pub(crate) fn sparse_support_into(
                 }
                 let dxy = d[(x, y)];
                 merge_sorted(graph.neighbors(x), graph.neighbors(y), cand);
-                let u = if branchfree {
-                    count_cands_masked(d.row(x), d.row(y), dxy, cand, tie)
-                } else {
-                    count_cands_reference(d.row(x), d.row(y), dxy, cand, tie)
-                };
+                let u = rung.count(d.row(x), d.row(y), dxy, cand, tie);
                 w_edges.push(1.0 / u as f32);
             }
         }
@@ -355,10 +387,10 @@ pub(crate) fn sparse_support_into(
                 let w = w_edges[e];
                 e += 1;
                 let (cx, cy) = out.two_rows_mut(x, y);
-                if branchfree {
-                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie);
-                } else {
+                if rung == SparseRung::Reference {
                     award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, cand, tie);
+                } else {
+                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie);
                 }
             }
         }
@@ -376,17 +408,13 @@ pub(crate) fn sparse_support_into(
                 }
                 let dxy = d[(x, y)];
                 merge_sorted(graph.neighbors(x), graph.neighbors(y), cand);
-                let u = if branchfree {
-                    count_cands_masked(d.row(x), d.row(y), dxy, cand, tie)
-                } else {
-                    count_cands_reference(d.row(x), d.row(y), dxy, cand, tie)
-                };
+                let u = rung.count(d.row(x), d.row(y), dxy, cand, tie);
                 let w = 1.0 / u as f32;
                 let (cx, cy) = out.two_rows_mut(x, y);
-                if branchfree {
-                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie);
-                } else {
+                if rung == SparseRung::Reference {
                     award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, cand, tie);
+                } else {
+                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie);
                 }
             }
         }
@@ -467,7 +495,7 @@ pub(crate) fn sparse_support_parallel_into(
     if threads == 1 {
         // Every sparse rung is bit-identical, so the sequential
         // fallback changes nothing but the schedule.
-        sparse_support_into(scratch, d, tie, k, true, two_pass, 0, out, phases);
+        sparse_support_into(scratch, d, tie, k, SparseRung::Masked, two_pass, 0, out, phases);
         return;
     }
     let n = d.rows();
@@ -661,14 +689,14 @@ mod tests {
     use crate::data::distmat;
     use crate::pald::naive;
 
-    fn run(d: &Mat, tie: TieMode, k: usize, branchfree: bool, two_pass: bool) -> Mat {
+    const RUNGS: [SparseRung; 3] = [SparseRung::Reference, SparseRung::Masked, SparseRung::Simd];
+
+    fn run(d: &Mat, tie: TieMode, k: usize, rung: SparseRung, two_pass: bool) -> Mat {
         let n = d.rows();
         let mut scratch = KnnScratch::new();
         let mut out = Mat::zeros(n, n);
         let mut phases = PhaseTimes::default();
-        sparse_support_into(
-            &mut scratch, d, tie, k, branchfree, two_pass, 8, &mut out, &mut phases,
-        );
+        sparse_support_into(&mut scratch, d, tie, k, rung, two_pass, 8, &mut out, &mut phases);
         normalize(&mut out);
         out
     }
@@ -681,14 +709,14 @@ mod tests {
             (distmat::random_duplicated(n, 78, 3), TieMode::Split),
         ] {
             let want = naive::pairwise(&d, tie);
-            for branchfree in [false, true] {
+            for rung in RUNGS {
                 for two_pass in [false, true] {
                     for k in [0usize, n - 1, 5 * n] {
-                        let got = run(&d, tie, k, branchfree, two_pass);
+                        let got = run(&d, tie, k, rung, two_pass);
                         assert_eq!(
                             got.as_slice(),
                             want.as_slice(),
-                            "bf={branchfree} tp={two_pass} k={k} {tie:?}"
+                            "rung={rung:?} tp={two_pass} k={k} {tie:?}"
                         );
                     }
                 }
@@ -700,11 +728,11 @@ mod tests {
     fn all_variants_are_bit_identical_at_small_k() {
         let n = 30;
         let d = distmat::random_tie_free(n, 5);
-        let reference = run(&d, TieMode::Strict, 4, false, false);
-        for branchfree in [false, true] {
+        let reference = run(&d, TieMode::Strict, 4, SparseRung::Reference, false);
+        for rung in RUNGS {
             for two_pass in [false, true] {
-                let got = run(&d, TieMode::Strict, 4, branchfree, two_pass);
-                assert_eq!(got.as_slice(), reference.as_slice(), "bf={branchfree} tp={two_pass}");
+                let got = run(&d, TieMode::Strict, 4, rung, two_pass);
+                assert_eq!(got.as_slice(), reference.as_slice(), "rung={rung:?} tp={two_pass}");
             }
         }
     }
@@ -729,7 +757,7 @@ mod tests {
             for k in [1usize, 4, 16, n - 1] {
                 // The sequential branchy reference — every sparse rung
                 // is bit-identical to it, so it anchors all of them.
-                let want = run(&d, tie, k, false, false);
+                let want = run(&d, tie, k, SparseRung::Reference, false);
                 for two_pass in [false, true] {
                     for threads in [1usize, 2, 3, 4, 8] {
                         let got = run_par(&d, tie, k, two_pass, threads);
@@ -778,7 +806,7 @@ mod tests {
         let d = distmat::random_tie_free(n, 9);
         for k in [2usize, 6, 12] {
             let g = NeighborGraph::build(&d, k).unwrap();
-            let c = run(&d, TieMode::Strict, k, true, true);
+            let c = run(&d, TieMode::Strict, k, SparseRung::Masked, true);
             // Each evaluated pair distributes exactly one unnormalized
             // support unit; normalized: edges / (n - 1).
             let want = g.edge_count() as f64 / (n as f64 - 1.0);
@@ -798,7 +826,15 @@ mod tests {
         let mut out = Mat::zeros(n, n);
         let mut phases = PhaseTimes::default();
         sparse_support_into(
-            &mut scratch, &d, TieMode::Strict, 3, true, false, 0, &mut out, &mut phases,
+            &mut scratch,
+            &d,
+            TieMode::Strict,
+            3,
+            SparseRung::Masked,
+            false,
+            0,
+            &mut out,
+            &mut phases,
         );
         let r = scratch.report.unwrap();
         assert_eq!(r.effective_k, 3);
@@ -807,7 +843,15 @@ mod tests {
         assert!(r.mass_bound() > 0.0 && r.mass_bound() < 1.0);
         assert!(!r.is_exact());
         sparse_support_into(
-            &mut scratch, &d, TieMode::Strict, n - 1, true, false, 0, &mut out, &mut phases,
+            &mut scratch,
+            &d,
+            TieMode::Strict,
+            n - 1,
+            SparseRung::Masked,
+            false,
+            0,
+            &mut out,
+            &mut phases,
         );
         let r = scratch.report.unwrap();
         assert!(r.is_exact());
@@ -835,7 +879,7 @@ mod tests {
         let g = NeighborGraph::build(&d, 5).unwrap();
         let mut via_graph = support_over_graph(&d, &g, TieMode::Strict);
         normalize(&mut via_graph);
-        let via_kernel = run(&d, TieMode::Strict, 5, false, false);
+        let via_kernel = run(&d, TieMode::Strict, 5, SparseRung::Reference, false);
         assert_eq!(via_graph.as_slice(), via_kernel.as_slice());
         let u = focus_sizes_over_graph(&d, &g, TieMode::Strict);
         for x in 0..n {

@@ -12,14 +12,16 @@
 //!   ([`NeighborGraph`], CSR) from any
 //!   [`DistanceInput`](crate::pald::DistanceInput);
 //! * [`kernels`] holds the truncated focus/cohesion computations at
-//!   three rungs of the optimization ladder (branchy reference,
-//!   blocked/branch-free, and shared-memory parallel — DESIGN.md §10),
-//!   each in both pairwise (fused) and triplet (two-pass) orderings —
+//!   four rungs of the optimization ladder (branchy reference,
+//!   blocked/branch-free, SIMD-backend count — DESIGN.md §13 — and
+//!   shared-memory parallel — DESIGN.md §10), the sequential rungs in
+//!   both pairwise (fused) and triplet (two-pass) orderings —
 //!   registered in the kernel [`REGISTRY`](crate::pald::REGISTRY) as
 //!   `knn-pairwise`, `knn-triplet`, `knn-opt-pairwise`,
-//!   `knn-opt-triplet`, `knn-par-pairwise`, `knn-par-triplet`, with
-//!   capability metadata the [`Planner`](crate::pald::Planner) uses to
-//!   resolve a truncated request to the cheapest sparse kernel when
+//!   `knn-opt-triplet`, `knn-simd-pairwise`, `knn-par-pairwise`,
+//!   `knn-par-triplet`, with capability metadata the
+//!   [`Planner`](crate::pald::Planner) uses to resolve a truncated
+//!   request to the cheapest sparse kernel when
 //!   [`neighborhood`](crate::pald::PaldBuilder::neighborhood) is set
 //!   (threaded plans land on the `knn-par-*` pair).
 //!
@@ -56,6 +58,6 @@ pub use csr::{
 pub(crate) use graph::merge_sorted;
 pub use graph::NeighborGraph;
 pub(crate) use kernels::{
-    effective_k, sparse_support_into, sparse_support_parallel_into, KnnScratch,
+    effective_k, sparse_support_into, sparse_support_parallel_into, KnnScratch, SparseRung,
 };
 pub use kernels::{cohesion_over_graph, focus_sizes_over_graph, support_over_graph, KnnReport};

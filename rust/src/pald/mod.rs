@@ -7,6 +7,7 @@
 //! | + one-level cache blocking             | [`blocked::pairwise_blocked`]  | [`blocked::triplet_blocked`] |
 //! | + branch avoidance (masked FMAs)       | [`branchfree::pairwise_branchfree`] | [`branchfree::triplet_branchfree`] |
 //! | + blocking + branch-free + integer U + precomputed reciprocals | [`optimized::pairwise_optimized`] | [`optimized::triplet_optimized`] |
+//! | + explicit SIMD (runtime AVX2, portable fallback) | [`simd::pairwise_simd`] | [`simd::triplet_simd`] |
 //! | shared-memory parallel                 | [`parallel_pairwise::pairwise_parallel`] | [`parallel_triplet::triplet_parallel`] |
 //!
 //! All variants produce the same cohesion matrix (exactly, in support
@@ -81,6 +82,7 @@ pub mod parallel_triplet;
 pub mod planner;
 pub mod result;
 pub mod session;
+pub mod simd;
 pub mod stream;
 pub mod workspace;
 

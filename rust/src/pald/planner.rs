@@ -8,10 +8,10 @@
 //! how the paper's guidance — triplet sequentially at large n, pairwise
 //! in parallel — becomes an executable policy instead of a comment.
 
-use crate::pald::api::{Algorithm, PaldConfig, Storage};
+use crate::pald::api::{Algorithm, Backend, PaldConfig, Storage};
 use crate::pald::kernel::{kernel_for, ExecParams};
 use crate::pald::knn::GraphBuild;
-use crate::pald::TieMode;
+use crate::pald::{simd, TieMode};
 use crate::sim::machine::{MachineParams, NumaMode};
 
 /// A resolved execution plan: concrete kernel + tuned parameters.
@@ -19,6 +19,11 @@ use crate::sim::machine::{MachineParams, NumaMode};
 pub struct Plan {
     /// Concrete kernel (never [`Algorithm::Auto`]).
     pub algorithm: Algorithm,
+    /// Backend the chosen kernel executes on — always resolved
+    /// ([`Backend::CpuScalar`] or [`Backend::CpuSimd`]), read off the
+    /// kernel's [`KernelMeta`](crate::pald::KernelMeta); the requested
+    /// backend (possibly [`Backend::Auto`]) stays in `params.backend`.
+    pub backend: Backend,
     /// Resolved execution parameters (ties, blocks, threads).
     pub params: ExecParams,
     /// Machine-model prediction in seconds (`None` when the user pinned
@@ -37,6 +42,12 @@ pub struct Plan {
     /// those plans record `ThreadMemBind`; every other plan's pages land
     /// wherever the allocating thread sits (`ThreadBind`).
     pub numa: NumaMode,
+}
+
+/// Concrete backend of a registered algorithm ([`Plan::backend`]);
+/// scalar for anything unregistered (e.g. a not-yet-resolved `Auto`).
+fn resolved_backend(algorithm: Algorithm) -> Backend {
+    kernel_for(algorithm).map(|k| k.meta().backend).unwrap_or(Backend::CpuScalar)
 }
 
 /// Placement a resolved (algorithm, threads) pair executes under; see
@@ -61,15 +72,22 @@ impl Plan {
     /// on dense candidates.
     pub fn from_config(cfg: &PaldConfig) -> Plan {
         let algorithm = if cfg.k > 0 { cfg.algorithm.truncated() } else { cfg.algorithm };
+        // An explicit backend pin re-maps the pinned algorithm to its
+        // twin on that backend ([`Algorithm::with_backend`]); `Auto`
+        // leaves the pin untouched — a user who pinned `simd-pairwise`
+        // by name gets exactly that kernel.
+        let algorithm = algorithm.with_backend(cfg.backend);
         let threads = cfg.threads.max(1);
         Plan {
             algorithm,
+            backend: resolved_backend(algorithm),
             params: ExecParams {
                 tie: cfg.tie_mode,
                 block: cfg.block,
                 block2: cfg.block2,
                 threads,
                 k: cfg.k,
+                backend: cfg.backend,
             },
             predicted_s: None,
             graph_build: cfg.graph_build,
@@ -109,8 +127,9 @@ impl Plan {
             String::new()
         };
         format!(
-            "algorithm={} block={} block2={} threads={}{k}{sparse_state}{numa}{}",
+            "algorithm={} backend={} block={} block2={} threads={}{k}{sparse_state}{numa}{}",
             self.algorithm.name(),
+            self.backend.name(),
             self.params.block,
             self.params.block2,
             self.params.threads,
@@ -142,43 +161,73 @@ impl Planner {
         Planner { machine }
     }
 
-    /// Candidate algorithms for a thread budget and neighborhood
-    /// verdict.  Only the top rungs are ever optimal (the lower Figure 3
-    /// rungs exist for the ablation), so the search space is the
-    /// optimized/hybrid/parallel set — and when the request truncates
-    /// (`truncating`), *only* sparse kernels compete: a truncated
-    /// neighborhood is a semantics request, not a cost hint, so the
-    /// planner must never resolve it to a dense kernel.  Before the
-    /// `knn-par-*` rung existed, a thread budget `> 1` could make a
+    /// Candidate algorithms for a thread budget, neighborhood verdict,
+    /// and backend request.  Only the top rungs are ever optimal (the
+    /// lower Figure 3 rungs exist for the ablation), so the search space
+    /// is the optimized/simd/hybrid/parallel set — and when the request
+    /// truncates (`truncating`), *only* sparse kernels compete: a
+    /// truncated neighborhood is a semantics request, not a cost hint,
+    /// so the planner must never resolve it to a dense kernel.  Before
+    /// the `knn-par-*` rung existed, a thread budget `> 1` could make a
     /// dense parallel kernel out-predict the (then sequential-only)
     /// sparse candidates, silently planning dense for `Auto` with
     /// `k > 0` — the regression pinned by
     /// `auto_with_threads_resolves_the_truncated_request`.
-    fn candidates(threads: usize, truncating: bool) -> &'static [Algorithm] {
-        match (truncating, threads > 1) {
-            (false, false) => {
-                &[Algorithm::OptimizedPairwise, Algorithm::OptimizedTriplet, Algorithm::Hybrid]
+    ///
+    /// The backend axis (DESIGN.md §13): an explicit
+    /// [`Backend::CpuScalar`] pin keeps the historical scalar sets; an
+    /// explicit [`Backend::CpuSimd`] pin restricts to the SIMD-backend
+    /// kernels (which dispatch to the portable lane model on non-AVX2
+    /// hosts — an explicit pin is honored, just not accelerated);
+    /// [`Backend::Auto`] costs the scalar sets *plus* the SIMD kernels,
+    /// but only when runtime feature detection finds AVX2
+    /// ([`simd::simd_available`]) — on other hosts `Auto` degenerates
+    /// to exactly the scalar competition, so plans never regress.
+    fn candidates(threads: usize, truncating: bool, backend: Backend) -> Vec<Algorithm> {
+        const DENSE_SEQ: &[Algorithm] =
+            &[Algorithm::OptimizedPairwise, Algorithm::OptimizedTriplet, Algorithm::Hybrid];
+        const DENSE_PAR: &[Algorithm] = &[
+            Algorithm::ParallelPairwise,
+            Algorithm::ParallelTriplet,
+            Algorithm::ParallelHybrid,
+        ];
+        const DENSE_SIMD: &[Algorithm] = &[Algorithm::SimdPairwise, Algorithm::SimdTriplet];
+        // Only the optimized/simd/parallel sparse rungs compete (the
+        // reference rung exists for the ablation, like the dense
+        // ladder); the sequential pair stays in the threaded set
+        // because the spawn charge can beat p at small n.
+        const SPARSE_SEQ: &[Algorithm] = &[Algorithm::KnnOptPairwise, Algorithm::KnnOptTriplet];
+        const SPARSE_PAR: &[Algorithm] = &[Algorithm::KnnParPairwise, Algorithm::KnnParTriplet];
+        const SPARSE_SIMD: &[Algorithm] = &[Algorithm::KnnSimdPairwise];
+
+        // `Xla` never reaches the native planner (`resolve_plan` rejects
+        // it first); treat it like scalar so the set is never empty.
+        let scalar = backend != Backend::CpuSimd;
+        let simd_rungs =
+            backend == Backend::CpuSimd || (backend == Backend::Auto && simd::simd_available());
+        let mut set = Vec::new();
+        if truncating {
+            if scalar {
+                set.extend_from_slice(SPARSE_SEQ);
+                if threads > 1 {
+                    set.extend_from_slice(SPARSE_PAR);
+                }
             }
-            (false, true) => &[
-                Algorithm::OptimizedPairwise,
-                Algorithm::OptimizedTriplet,
-                Algorithm::Hybrid,
-                Algorithm::ParallelPairwise,
-                Algorithm::ParallelTriplet,
-                Algorithm::ParallelHybrid,
-            ],
-            // Only the optimized/parallel sparse rungs compete (the
-            // reference rung exists for the ablation, like the dense
-            // ladder); the sequential pair stays in the threaded set
-            // because the spawn charge can beat p at small n.
-            (true, false) => &[Algorithm::KnnOptPairwise, Algorithm::KnnOptTriplet],
-            (true, true) => &[
-                Algorithm::KnnOptPairwise,
-                Algorithm::KnnOptTriplet,
-                Algorithm::KnnParPairwise,
-                Algorithm::KnnParTriplet,
-            ],
+            if simd_rungs {
+                set.extend_from_slice(SPARSE_SIMD);
+            }
+        } else {
+            if scalar {
+                set.extend_from_slice(DENSE_SEQ);
+                if threads > 1 {
+                    set.extend_from_slice(DENSE_PAR);
+                }
+            }
+            if simd_rungs {
+                set.extend_from_slice(DENSE_SIMD);
+            }
         }
+        set
     }
 
     /// The cost-ranked candidate set the planner actually chooses from:
@@ -196,10 +245,11 @@ impl Planner {
         tie: TieMode,
         threads: usize,
         k: usize,
+        backend: Backend,
     ) -> Vec<(Algorithm, ExecParams, f64)> {
         let threads = threads.max(1);
         let truncating = k > 0 && k < n.saturating_sub(1);
-        Self::candidates(threads, truncating)
+        Self::candidates(threads, truncating, backend)
             .iter()
             .filter_map(|&alg| {
                 let kernel = kernel_for(alg).expect("candidate registered");
@@ -209,7 +259,7 @@ impl Planner {
                 }
                 let (block, block2) = kernel.default_blocks(n, self.machine.fast_mem_words);
                 let kk = if meta.sparse { k } else { 0 };
-                let params = ExecParams { tie, block, block2, threads, k: kk };
+                let params = ExecParams { tie, block, block2, threads, k: kk, backend };
                 let cost = kernel.cost(n, &params, &self.machine);
                 Some((alg, params, cost))
             })
@@ -218,15 +268,17 @@ impl Planner {
 
     /// Choose the cheapest kernel + tuned block sizes for an `n x n`
     /// problem on `threads` threads, with truncation (`k > 0`) costed
-    /// in as a candidate.
-    pub fn plan(&self, n: usize, tie: TieMode, threads: usize, k: usize) -> Plan {
+    /// in as a candidate and the candidate set filtered by the backend
+    /// request (DESIGN.md §13).
+    pub fn plan(&self, n: usize, tie: TieMode, threads: usize, k: usize, backend: Backend) -> Plan {
         let mut best: Option<Plan> = None;
         let mut best_cost = f64::INFINITY;
-        for (alg, params, cost) in self.scored_candidates(n, tie, threads, k) {
+        for (alg, params, cost) in self.scored_candidates(n, tie, threads, k, backend) {
             if cost < best_cost || best.is_none() {
                 best_cost = cost;
                 best = Some(Plan {
                     algorithm: alg,
+                    backend: resolved_backend(alg),
                     params,
                     predicted_s: Some(cost),
                     graph_build: GraphBuild::Exact,
@@ -245,7 +297,7 @@ impl Planner {
     pub fn resolve(&self, cfg: &PaldConfig, n: usize) -> Plan {
         if cfg.algorithm == Algorithm::Auto {
             let mut plan = self
-                .plan(n, cfg.tie_mode, cfg.threads.max(1), cfg.k)
+                .plan(n, cfg.tie_mode, cfg.threads.max(1), cfg.k, cfg.backend)
                 .with_overrides(cfg.block, cfg.block2);
             if cfg.block != 0 || cfg.block2 != 0 {
                 let kernel = kernel_for(plan.algorithm).expect("planned kernel registered");
@@ -276,7 +328,7 @@ mod tests {
 
     #[test]
     fn sequential_plan_is_a_sequential_kernel_with_blocks() {
-        let plan = planner().plan(1024, TieMode::Strict, 1, 0);
+        let plan = planner().plan(1024, TieMode::Strict, 1, 0, Backend::CpuScalar);
         assert!(
             matches!(
                 plan.algorithm,
@@ -291,7 +343,7 @@ mod tests {
 
     #[test]
     fn parallel_plan_uses_threads() {
-        let plan = planner().plan(4096, TieMode::Strict, 16, 0);
+        let plan = planner().plan(4096, TieMode::Strict, 16, 0, Backend::CpuScalar);
         let k = kernel_for(plan.algorithm).unwrap();
         assert!(k.meta().parallel, "expected a parallel kernel, got {}", k.name());
         assert_eq!(plan.params.threads, 16);
@@ -299,7 +351,8 @@ mod tests {
 
     #[test]
     fn overrides_win_over_tuning() {
-        let plan = planner().plan(512, TieMode::Strict, 1, 0).with_overrides(33, 17);
+        let plan =
+            planner().plan(512, TieMode::Strict, 1, 0, Backend::CpuScalar).with_overrides(33, 17);
         assert_eq!(plan.params.block, 33);
         assert_eq!(plan.params.block2, 17);
     }
@@ -310,7 +363,7 @@ mod tests {
         // k << n: the O(n·k²) prediction must beat every dense Θ(n³)
         // candidate, sequentially and in parallel.
         for threads in [1usize, 8] {
-            let plan = p.plan(4096, TieMode::Strict, threads, 16);
+            let plan = p.plan(4096, TieMode::Strict, threads, 16, Backend::CpuScalar);
             let kernel = kernel_for(plan.algorithm).unwrap();
             assert!(kernel.meta().sparse, "threads={threads}: got {}", kernel.name());
             assert_eq!(plan.params.k, 16);
@@ -319,11 +372,11 @@ mod tests {
         // candidates, and the plan carries k = 0 (no truncation —
         // semantically exact, since the complete graph is bit-identical
         // to dense).
-        let plan = p.plan(256, TieMode::Strict, 1, 255);
+        let plan = p.plan(256, TieMode::Strict, 1, 255, Backend::CpuScalar);
         assert!(!kernel_for(plan.algorithm).unwrap().meta().sparse);
         assert_eq!(plan.params.k, 0);
         // Split ties stay supported on the sparse path.
-        let plan = p.plan(4096, TieMode::Split, 1, 8);
+        let plan = p.plan(4096, TieMode::Split, 1, 8, Backend::CpuScalar);
         assert!(kernel_for(plan.algorithm).unwrap().meta().sparse);
     }
 
@@ -338,7 +391,7 @@ mod tests {
     fn auto_with_threads_resolves_the_truncated_request() {
         let p = planner();
         for threads in [2usize, 8, 32] {
-            let plan = p.plan(2048, TieMode::Strict, threads, 12);
+            let plan = p.plan(2048, TieMode::Strict, threads, 12, Backend::CpuScalar);
             let kernel = kernel_for(plan.algorithm).unwrap();
             assert!(
                 kernel.meta().sparse,
@@ -348,13 +401,15 @@ mod tests {
             assert_eq!(plan.params.k, 12, "threads={threads}");
             assert_eq!(plan.params.threads, threads);
             // Every scored candidate honors the request.
-            for (alg, params, _) in p.scored_candidates(2048, TieMode::Strict, threads, 12) {
+            for (alg, params, _) in
+                p.scored_candidates(2048, TieMode::Strict, threads, 12, Backend::CpuScalar)
+            {
                 assert!(kernel_for(alg).unwrap().meta().sparse, "{}", alg.name());
                 assert_eq!(params.k, 12, "{}", alg.name());
             }
         }
         // Large n, generous thread budget: the knn-par rung wins.
-        let plan = p.plan(8192, TieMode::Strict, 16, 16);
+        let plan = p.plan(8192, TieMode::Strict, 16, 16, Backend::CpuScalar);
         let kernel = kernel_for(plan.algorithm).unwrap();
         assert!(
             kernel.meta().sparse && kernel.meta().parallel,
@@ -452,12 +507,12 @@ mod tests {
         let p = planner();
         // Threaded sparse plan: the knn-par count pass first-touches its
         // edge range partition, so the plan records ThreadMemBind.
-        let plan = p.plan(8192, TieMode::Strict, 16, 16);
+        let plan = p.plan(8192, TieMode::Strict, 16, 16, Backend::CpuScalar);
         assert!(kernel_for(plan.algorithm).unwrap().meta().parallel);
         assert_eq!(plan.numa, NumaMode::ThreadMemBind);
         assert!(plan.describe().contains("numa=threadmembind"), "{}", plan.describe());
         // Sequential plans have nothing to partition.
-        let seq = p.plan(1024, TieMode::Strict, 1, 0);
+        let seq = p.plan(1024, TieMode::Strict, 1, 0, Backend::CpuScalar);
         assert_eq!(seq.numa, NumaMode::ThreadBind);
         assert!(!seq.describe().contains("numa="), "{}", seq.describe());
         // Build/storage requests ride through resolve() and describe().
@@ -484,13 +539,118 @@ mod tests {
     #[test]
     fn scored_candidates_match_plan_selection() {
         let p = planner();
-        let scored = p.scored_candidates(1024, TieMode::Strict, 4, 0);
+        let scored = p.scored_candidates(1024, TieMode::Strict, 4, 0, Backend::Auto);
         assert!(!scored.is_empty());
-        let plan = p.plan(1024, TieMode::Strict, 4, 0);
+        let plan = p.plan(1024, TieMode::Strict, 4, 0, Backend::Auto);
         let best = scored
             .iter()
             .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
             .unwrap();
         assert_eq!(plan.predicted_s.unwrap(), best.2);
+    }
+
+    #[test]
+    fn backend_pin_restricts_the_candidate_set() {
+        let p = planner();
+        // Explicit simd pin: only SIMD-backend kernels compete — dense
+        // (an explicit pin is honored even on non-AVX2 hosts, where the
+        // kernels dispatch to the portable lane model) ...
+        let plan = p.plan(1024, TieMode::Strict, 1, 0, Backend::CpuSimd);
+        assert!(
+            matches!(plan.algorithm, Algorithm::SimdPairwise | Algorithm::SimdTriplet),
+            "{:?}",
+            plan.algorithm
+        );
+        assert_eq!(plan.backend, Backend::CpuSimd);
+        assert_eq!(plan.params.backend, Backend::CpuSimd);
+        assert!(plan.describe().contains("backend=simd"), "{}", plan.describe());
+        // ... and truncating.
+        let plan = p.plan(4096, TieMode::Strict, 1, 16, Backend::CpuSimd);
+        assert_eq!(plan.algorithm, Algorithm::KnnSimdPairwise);
+        assert_eq!(plan.params.k, 16);
+        assert_eq!(plan.backend, Backend::CpuSimd);
+        // An explicit scalar pin never plans a SIMD kernel.
+        for threads in [1usize, 8] {
+            for k in [0usize, 16] {
+                for (alg, ..) in
+                    p.scored_candidates(2048, TieMode::Strict, threads, k, Backend::CpuScalar)
+                {
+                    assert_eq!(
+                        kernel_for(alg).unwrap().meta().backend,
+                        Backend::CpuScalar,
+                        "{}",
+                        alg.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_backend_gates_simd_on_feature_detection() {
+        let p = planner();
+        let scored = p.scored_candidates(1024, TieMode::Strict, 1, 0, Backend::Auto);
+        let simd_candidates: Vec<_> = scored
+            .iter()
+            .filter(|(alg, ..)| kernel_for(*alg).unwrap().meta().backend == Backend::CpuSimd)
+            .collect();
+        // The SIMD rungs compete exactly when runtime detection finds
+        // AVX2; the scalar set is always present, so Auto on a non-AVX2
+        // host is exactly the scalar competition — no skips, no gaps.
+        assert_eq!(!simd_candidates.is_empty(), simd::simd_available());
+        assert!(scored.iter().any(|(alg, ..)| *alg == Algorithm::OptimizedPairwise));
+        if simd::simd_available() {
+            // The feature-gated cost factor makes each SIMD rung
+            // strictly undercut its scalar twin.
+            let cost_of = |want: Algorithm| {
+                scored.iter().find(|(alg, ..)| *alg == want).map(|(_, _, c)| *c).unwrap()
+            };
+            assert!(cost_of(Algorithm::SimdPairwise) < cost_of(Algorithm::OptimizedPairwise));
+            assert!(cost_of(Algorithm::SimdTriplet) < cost_of(Algorithm::OptimizedTriplet));
+        }
+        // Either way the plan carries a resolved backend and records
+        // the requested one.
+        let plan = p.plan(1024, TieMode::Strict, 1, 0, Backend::Auto);
+        assert!(plan.backend == Backend::CpuScalar || plan.backend == Backend::CpuSimd);
+        assert_eq!(plan.params.backend, Backend::Auto);
+        if !simd::simd_available() {
+            assert_eq!(plan.backend, Backend::CpuScalar);
+        }
+    }
+
+    #[test]
+    fn from_config_applies_backend_pins_to_pinned_algorithms() {
+        // A pinned scalar algorithm + an explicit simd backend re-maps
+        // to the SIMD twin ...
+        let cfg = PaldConfig {
+            algorithm: Algorithm::OptimizedPairwise,
+            backend: Backend::CpuSimd,
+            ..Default::default()
+        };
+        let plan = Plan::from_config(&cfg);
+        assert_eq!(plan.algorithm, Algorithm::SimdPairwise);
+        assert_eq!(plan.backend, Backend::CpuSimd);
+        // ... the truncation mapping composes with it ...
+        let cfg = PaldConfig {
+            algorithm: Algorithm::OptimizedPairwise,
+            backend: Backend::CpuSimd,
+            k: 8,
+            ..Default::default()
+        };
+        assert_eq!(Plan::from_config(&cfg).algorithm, Algorithm::KnnSimdPairwise);
+        // ... a scalar pin maps a SIMD name back ...
+        let cfg = PaldConfig {
+            algorithm: Algorithm::SimdTriplet,
+            backend: Backend::CpuScalar,
+            ..Default::default()
+        };
+        let plan = Plan::from_config(&cfg);
+        assert_eq!(plan.algorithm, Algorithm::OptimizedTriplet);
+        assert_eq!(plan.backend, Backend::CpuScalar);
+        // ... and the default Auto leaves a by-name pin untouched.
+        let cfg = PaldConfig { algorithm: Algorithm::SimdPairwise, ..Default::default() };
+        let plan = Plan::from_config(&cfg);
+        assert_eq!(plan.algorithm, Algorithm::SimdPairwise);
+        assert_eq!(plan.backend, Backend::CpuSimd);
     }
 }

@@ -25,6 +25,7 @@ use std::sync::OnceLock;
 use crate::analysis;
 use crate::analysis::StrongTie;
 use crate::core::Mat;
+use crate::pald::api::Backend;
 use crate::pald::knn::{
     communities_csr, local_depths_csr, strong_ties_csr, universal_threshold_csr, CsrMatrix,
     KnnReport,
@@ -167,6 +168,13 @@ impl CohesionResult {
         &self.plan
     }
 
+    /// The backend the chosen kernel actually ran on (DESIGN.md §13) —
+    /// always a resolved variant ([`Backend::CpuScalar`] or
+    /// [`Backend::CpuSimd`]), never [`Backend::Auto`].
+    pub fn backend(&self) -> Backend {
+        self.plan.backend
+    }
+
     /// The neighborhood size a truncated (PKNN) computation actually
     /// ran at — `min(k, n-1)` — or `None` when a dense kernel produced
     /// this result (DESIGN.md §9).
@@ -269,6 +277,7 @@ mod tests {
         assert!(r.community_count() >= 1);
         assert!(r.times().total_s > 0.0);
         assert_ne!(r.plan().algorithm, Algorithm::Auto);
+        assert_eq!(r.backend(), Backend::CpuScalar);
     }
 
     #[test]

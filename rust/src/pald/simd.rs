@@ -1,0 +1,1318 @@
+//! Explicit SIMD backend (`Backend::CpuSimd`): runtime-detected AVX2
+//! realizations of the branch-free masked kernels, with a portable 8-lane
+//! scalar fallback that reproduces the vector semantics bit-for-bit.
+//!
+//! The autovectorized kernels in [`crate::pald::branchfree`] already carry
+//! the paper's Section 5 structure; this module pins the vector shape down
+//! explicitly so it no longer depends on what LLVM happens to emit, and so
+//! the registry can cost the rung as a distinct backend.
+//!
+//! # Dispatch
+//!
+//! Every public helper dispatches per call: on `x86_64` with AVX2 detected
+//! at runtime (`is_x86_feature_detected!`, cached by std) the
+//! `#[target_feature(enable = "avx2")]` intrinsic path runs behind a safe
+//! wrapper; everywhere else the portable path runs. Both paths implement
+//! the identical arithmetic, so `Backend::Auto` never has to skip — a
+//! non-AVX2 host silently computes the same answer through the fallback.
+//!
+//! # Determinism contract: fixed lane-reduction order
+//!
+//! Floating-point reductions (the per-pair `c_xy`/`c_yx` scalars of the
+//! triplet cohesion pass) are the only place vector math could reorder
+//! additions. Both paths commit to one order:
+//!
+//! 1. lane `l` (0..8) accumulates the elements whose local index is
+//!    `≡ l (mod 8)`, in increasing index order, over the full 8-wide chunks;
+//! 2. lanes fold 8→4 as `l[i] + l[i+4]` (i < 4), then 4→2 as
+//!    `s4[0]+s4[2]` / `s4[1]+s4[3]`, then 2→1 as `s2[0]+s2[1]`;
+//! 3. the `len % 8` remainder elements are added sequentially *after* the
+//!    fold.
+//!
+//! The AVX2 path realizes step 2 with `extractf128`/`movehl`/`shuffle`
+//! adds; the portable path keeps eight scalar accumulators and folds them
+//! the same way, so the two paths are bit-identical on finite inputs and
+//! every run of either path reproduces the same bits.
+//!
+//! # Why U stays integer-exact
+//!
+//! Pairwise focus sizes accumulate comparison masks into *integer* lanes
+//! (`_mm256_sub_epi32` of the all-ones mask), so the count is exact in any
+//! summation order. The triplet focus pass accumulates {0, 1}-valued
+//! floats, which are exact in `f32` far beyond any feasible `n`. No
+//! tolerance is ever needed on U — the conformance battery pins it with
+//! `assert_eq!`.
+
+use std::time::Instant;
+
+use crate::core::Mat;
+use crate::pald::blocked::resolve_block;
+use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
+use crate::pald::{normalize, TieMode};
+
+/// Vector width of the SIMD rung: 8 × f32 (one AVX2 register). The
+/// portable fallback models the same eight lanes in scalar code.
+pub const SIMD_LANES: usize = 8;
+
+/// True when the accelerated (AVX2) path will be taken at runtime.
+///
+/// When false, the SIMD kernels still run — through the portable 8-lane
+/// fallback — and produce the same results; only the speedup is absent.
+/// The planner uses this as its feature-detection gate when costing
+/// [`Backend::CpuSimd`](crate::pald::Backend::CpuSimd) candidates.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Pairwise focus-size count |U_xy| over all points `z`, SIMD rung.
+///
+/// Exactly [`count_focus_branchfree`](crate::pald::branchfree)'s count:
+/// the number of `z` with `d_xz ⋖ d_xy or d_yz ⋖ d_xy` (`⋖` is `<` under
+/// [`TieMode::Strict`], `<=` under [`TieMode::Split`]), including `x` and
+/// `y` themselves. Integer-exact in any lane order; bit-for-bit equal to
+/// the scalar rung.
+pub fn count_focus_simd(dx: &[f32], dy: &[f32], dxy: f32, tie: TieMode) -> u32 {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 support was just verified at runtime.
+        return unsafe { avx2::count_focus(dx, dy, dxy, tie) };
+    }
+    portable::count_focus(dx, dy, dxy, tie)
+}
+
+/// Pairwise masked support award for one pair `(x, y)`, SIMD rung.
+///
+/// Adds `w` to `cx[z]` when `z` is in the pair's focus and supports `x`,
+/// to `cy[z]` when it supports `y` (half each on a [`TieMode::Split`]
+/// tie). Purely elementwise — no reduction — so the result is
+/// bit-identical to the scalar rung for every finite `w`.
+pub fn update_cohesion_simd(
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    w: f32,
+    cx: &mut [f32],
+    cy: &mut [f32],
+    tie: TieMode,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 support was just verified at runtime.
+        unsafe { avx2::update_cohesion(dx, dy, dxy, w, cx, cy, tie) };
+        return;
+    }
+    portable::update_cohesion(dx, dy, dxy, w, cx, cy, tie)
+}
+
+/// Sparse (PKNN) candidate-restricted focus count, SIMD rung: the number
+/// of candidates `z` in `cand` with `dx[z] ⋖ dxy or dy[z] ⋖ dxy`.
+///
+/// The AVX2 path gathers `dx[z]`/`dy[z]` with `vgatherdps` and counts in
+/// integer lanes, so the count is exact in any order and bit-identical to
+/// the scalar sparse rungs.
+///
+/// # Panics
+/// Panics if any index in `cand` is out of bounds for `dx`/`dy` (the
+/// scalar rung panics on the same inputs via slice indexing).
+pub fn count_cands_simd(dx: &[f32], dy: &[f32], dxy: f32, cand: &[u32], tie: TieMode) -> u32 {
+    let bound = dx.len().min(dy.len());
+    assert!(
+        cand.iter().all(|&z| (z as usize) < bound),
+        "candidate index out of bounds for distance rows of len {bound}"
+    );
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 verified at runtime; all gather indices verified
+        // in bounds just above.
+        return unsafe { avx2::count_cands(dx, dy, dxy, cand, tie) };
+    }
+    portable::count_cands(dx, dy, dxy, cand, tie)
+}
+
+/// One row segment of the SIMD triplet focus pass: for `z` in
+/// `z_lo..z_hi`, accumulate the focus-membership masks into `ux[z]` /
+/// `uy[z]` and return the pair's own `u_xy` increment.
+///
+/// Same contract as `triplet_focus_branchfree_row`, minus the mask
+/// scratch (the vector form fuses the passes). All accumulated values are
+/// {0, 1}-valued, so every sum is exact regardless of lane order.
+pub(crate) fn triplet_focus_simd_row(
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    ux: &mut [f32],
+    uy: &mut [f32],
+    z_lo: usize,
+    z_hi: usize,
+    tie: TieMode,
+) -> f32 {
+    let (dx, dy) = (&dx[z_lo..z_hi], &dy[z_lo..z_hi]);
+    let (ux, uy) = (&mut ux[z_lo..z_hi], &mut uy[z_lo..z_hi]);
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 support was just verified at runtime.
+        return unsafe { avx2::triplet_focus_row(dx, dy, dxy, ux, uy, tie) };
+    }
+    portable::triplet_focus_row(dx, dy, dxy, ux, uy, tie)
+}
+
+/// One row segment of the SIMD triplet cohesion pass: for `z` in
+/// `z_lo..z_hi`, award masked contributions into `cx`/`cy` (rows x, y of
+/// C) and `ctx`/`cty` (rows x, y of the transposed accumulator CT), and
+/// return the `(c_xy, c_yx)` increments for the pair itself.
+///
+/// The returned pair is the one genuinely reduced quantity — it follows
+/// the module's fixed lane-reduction order (see the module docs), making
+/// it deterministic run-to-run and bit-identical between the AVX2 and
+/// portable paths; against the scalar rung it agrees to rounding only.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn triplet_cohesion_simd_row(
+    dx: &[f32],
+    dy: &[f32],
+    dxy: f32,
+    wx: &[f32],
+    wy: &[f32],
+    wxy: f32,
+    cx: &mut [f32],
+    cy: &mut [f32],
+    ctx: &mut [f32],
+    cty: &mut [f32],
+    z_lo: usize,
+    z_hi: usize,
+    tie: TieMode,
+) -> (f32, f32) {
+    let (dx, dy) = (&dx[z_lo..z_hi], &dy[z_lo..z_hi]);
+    let (wx, wy) = (&wx[z_lo..z_hi], &wy[z_lo..z_hi]);
+    let (cx, cy) = (&mut cx[z_lo..z_hi], &mut cy[z_lo..z_hi]);
+    let (ctx, cty) = (&mut ctx[z_lo..z_hi], &mut cty[z_lo..z_hi]);
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 support was just verified at runtime.
+        return unsafe { avx2::triplet_cohesion_row(dx, dy, dxy, wx, wy, wxy, cx, cy, ctx, cty, tie) };
+    }
+    portable::triplet_cohesion_row(dx, dy, dxy, wx, wy, wxy, cx, cy, ctx, cty, tie)
+}
+
+/// SIMD pairwise PaLD (normalized). `simd-pairwise` registry entry point.
+pub fn pairwise_simd(d: &Mat, tie: TieMode, b: usize) -> Mat {
+    let n = d.rows();
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(n, n);
+    pairwise_simd_into(d, tie, b, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Unnormalized SIMD pairwise accumulation into `c` (zeroed here); the
+/// reciprocal weight tile lives in the workspace's aligned SIMD scratch.
+/// Mirrors `pairwise_optimized_into`'s tiling exactly — only the inner
+/// kernels change.
+pub(crate) fn pairwise_simd_into(d: &Mat, tie: TieMode, b: usize, ws: &mut Workspace, c: &mut Mat) {
+    let n = d.rows();
+    let b = resolve_block(b, n);
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_simd_tile(b * b);
+    let Workspace { simd_tile, phases, .. } = ws;
+    let w_tile = simd_tile.as_mut_slice();
+
+    let nb = n.div_ceil(b);
+    for xb in 0..nb {
+        let xs = xb * b;
+        let xe = (xs + b).min(n);
+        for yb in 0..=xb {
+            let ys = yb * b;
+            let ye = (ys + b).min(n);
+            let t0 = Instant::now();
+            for x in xs..xe {
+                let dx = d.row(x);
+                let y_lo = if xb == yb { x + 1 } else { ys };
+                for y in y_lo.max(ys)..ye {
+                    let u = count_focus_simd(dx, d.row(y), dx[y], tie);
+                    w_tile[(x - xs) * b + (y - ys)] = 1.0 / u as f32;
+                }
+            }
+            phases.focus_s += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            for x in xs..xe {
+                let y_lo = if xb == yb { x + 1 } else { ys };
+                for y in y_lo.max(ys)..ye {
+                    let dxy = d[(x, y)];
+                    let w = w_tile[(x - xs) * b + (y - ys)];
+                    let (cx, cy) = c.two_rows_mut(x, y);
+                    update_cohesion_simd(d.row(x), d.row(y), dxy, w, cx, cy, tie);
+                }
+            }
+            phases.cohesion_s += t0.elapsed().as_secs_f64();
+        }
+    }
+}
+
+/// SIMD triplet PaLD (normalized). `simd-triplet` registry entry point.
+pub fn triplet_simd(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat {
+    let n = d.rows();
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(n, n);
+    triplet_simd_into(d, tie, bhat, btil, &mut ws, &mut c);
+    normalize(&mut c);
+    c
+}
+
+/// Focus-size pass of the SIMD triplet kernel: blocked block-triplet
+/// iteration over the fused vector row kernel. `u` must be `n x n`.
+pub(crate) fn focus_sizes_simd_into(d: &Mat, tie: TieMode, bhat: usize, u: &mut Mat) {
+    let n = d.rows();
+    let bh = resolve_block(bhat, n);
+    init_focus(u);
+    let nbh = n.div_ceil(bh);
+    for xb in 0..nbh {
+        let xs = xb * bh;
+        let xe = (xs + bh).min(n);
+        for yb in xb..nbh {
+            let ys = yb * bh;
+            let ye = (ys + bh).min(n);
+            for zb in yb..nbh {
+                let zs = zb * bh;
+                let ze = (zs + bh).min(n);
+                for x in xs..xe {
+                    let y_lo = if ys == xs { x + 1 } else { ys };
+                    for y in y_lo..ye {
+                        let dxy = d[(x, y)];
+                        let z_lo = if zs == ys { y + 1 } else { zs };
+                        let (ux, uy) = u.two_rows_mut(x, y);
+                        let inc = triplet_focus_simd_row(
+                            d.row(x),
+                            d.row(y),
+                            dxy,
+                            ux,
+                            uy,
+                            z_lo.max(zs),
+                            ze,
+                            tie,
+                        );
+                        ux[y] += inc;
+                    }
+                }
+            }
+        }
+    }
+    for x in 0..n {
+        for y in (x + 1)..n {
+            u[(y, x)] = u[(x, y)];
+        }
+    }
+}
+
+/// Unnormalized SIMD triplet accumulation into `c` (zeroed here); U, W,
+/// and CT live in the workspace. Mirrors `triplet_optimized_into` with
+/// the fused vector row kernels (which need no mask scratch).
+pub(crate) fn triplet_simd_into(
+    d: &Mat,
+    tie: TieMode,
+    bhat: usize,
+    btil: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
+    let n = d.rows();
+    let bt = resolve_block(btil, n);
+    c.as_mut_slice().fill(0.0);
+    ws.ensure_uw(n);
+    ws.ensure_ct(n);
+    let Workspace { u, w, ct, phases, .. } = ws;
+
+    let t0 = Instant::now();
+    focus_sizes_simd_into(d, tie, bhat, u);
+    reciprocal_weights_into(u, w);
+    phases.focus_s += t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let nbt = n.div_ceil(bt);
+    for xb in 0..nbt {
+        for yb in xb..nbt {
+            for zb in yb..nbt {
+                triplet_cohesion_tile_simd(d, w, c, ct, tie, xb * bt, yb * bt, zb * bt, bt, n);
+            }
+        }
+    }
+    crate::pald::branchfree::add_transposed(c, ct);
+    super::add_diagonal_contributions(c, w, d, tie);
+    phases.cohesion_s += t0.elapsed().as_secs_f64();
+}
+
+/// SIMD cohesion update for one block triplet (sequential entry point).
+#[allow(clippy::too_many_arguments)]
+fn triplet_cohesion_tile_simd(
+    d: &Mat,
+    w: &Mat,
+    c: &mut Mat,
+    ct: &mut Mat,
+    tie: TieMode,
+    xs: usize,
+    ys: usize,
+    zs: usize,
+    b: usize,
+    n: usize,
+) {
+    let xe = (xs + b).min(n);
+    let ye = (ys + b).min(n);
+    let ze = (zs + b).min(n);
+    for x in xs..xe {
+        let y_lo = if ys == xs { x + 1 } else { ys };
+        for y in y_lo..ye {
+            let dxy = d[(x, y)];
+            let z_lo = if zs == ys { y + 1 } else { zs };
+            if z_lo >= ze {
+                continue;
+            }
+            let (cx, cy) = c.two_rows_mut(x, y);
+            let (ctx, cty) = ct.two_rows_mut(x, y);
+            let (cxy_inc, cyx_inc) = triplet_cohesion_simd_row(
+                d.row(x),
+                d.row(y),
+                dxy,
+                w.row(x),
+                w.row(y),
+                w[(x, y)],
+                cx,
+                cy,
+                ctx,
+                cty,
+                z_lo,
+                ze,
+                tie,
+            );
+            c[(x, y)] += cxy_inc;
+            c[(y, x)] += cyx_inc;
+        }
+    }
+}
+
+/// Portable 8-lane realization of the vector kernels. Scalar code, but
+/// written against the same lane structure and the same select-form mask
+/// arithmetic as the AVX2 path, so both produce identical bits.
+mod portable {
+    use crate::pald::TieMode;
+
+    /// The documented 8→4→2→1 lane fold (module docs, step 2).
+    #[inline(always)]
+    pub(super) fn fold_lanes(l: [f32; 8]) -> f32 {
+        let s4 = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+        let s2 = [s4[0] + s4[2], s4[1] + s4[3]];
+        s2[0] + s2[1]
+    }
+
+    #[inline(always)]
+    fn closer(a: f32, b: f32, tie: TieMode) -> bool {
+        match tie {
+            TieMode::Strict => a < b,
+            TieMode::Split => a <= b,
+        }
+    }
+
+    pub(super) fn count_focus(dx: &[f32], dy: &[f32], dxy: f32, tie: TieMode) -> u32 {
+        let mut acc = 0u32;
+        for z in 0..dx.len() {
+            acc += (closer(dx[z], dxy, tie) | closer(dy[z], dxy, tie)) as u32;
+        }
+        acc
+    }
+
+    pub(super) fn count_cands(
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        cand: &[u32],
+        tie: TieMode,
+    ) -> u32 {
+        let mut acc = 0u32;
+        for &zu in cand {
+            let z = zu as usize;
+            acc += (closer(dx[z], dxy, tie) | closer(dy[z], dxy, tie)) as u32;
+        }
+        acc
+    }
+
+    pub(super) fn update_cohesion(
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        w: f32,
+        cx: &mut [f32],
+        cy: &mut [f32],
+        tie: TieMode,
+    ) {
+        match tie {
+            TieMode::Strict => {
+                for z in 0..dx.len() {
+                    // Select form (not `r * w`): matches the vector
+                    // `and(mask, w)`, which stays +0.0 even for w = inf.
+                    let rw = if (dx[z] < dxy) | (dy[z] < dxy) { w } else { 0.0 };
+                    if dx[z] < dy[z] {
+                        cx[z] += rw;
+                    } else {
+                        cy[z] += rw;
+                    }
+                }
+            }
+            TieMode::Split => {
+                for z in 0..dx.len() {
+                    let rw = if (dx[z] <= dxy) | (dy[z] <= dxy) { w } else { 0.0 };
+                    let s = share(dx[z], dy[z]);
+                    cx[z] += rw * s;
+                    cy[z] += rw * (1.0 - s);
+                }
+            }
+        }
+    }
+
+    /// Split-mode support share of x: 1, 0.5 on a tie, or 0.
+    #[inline(always)]
+    fn share(a: f32, b: f32) -> f32 {
+        if a < b {
+            1.0
+        } else if a == b {
+            0.5
+        } else {
+            0.0
+        }
+    }
+
+    pub(super) fn triplet_focus_row(
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        ux: &mut [f32],
+        uy: &mut [f32],
+        tie: TieMode,
+    ) -> f32 {
+        let m = dx.len();
+        let chunks = (m / 8) * 8;
+        let mut lanes = [0.0f32; 8];
+        match tie {
+            TieMode::Strict => {
+                for z in 0..chunks {
+                    let r = (dxy < dx[z]) & (dxy < dy[z]);
+                    let sa = if !r & (dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    let ta = if !r & !(dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    ux[z] += 1.0 - sa;
+                    uy[z] += 1.0 - ta;
+                    lanes[z % 8] += sa + ta;
+                }
+                let mut inc = fold_lanes(lanes);
+                for z in chunks..m {
+                    let r = (dxy < dx[z]) & (dxy < dy[z]);
+                    let sa = if !r & (dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    let ta = if !r & !(dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    ux[z] += 1.0 - sa;
+                    uy[z] += 1.0 - ta;
+                    inc += sa + ta;
+                }
+                inc
+            }
+            TieMode::Split => {
+                for z in 0..chunks {
+                    let f_xy = if (dx[z] <= dxy) | (dy[z] <= dxy) { 1.0 } else { 0.0 };
+                    let f_x = if (dxy <= dx[z]) | (dy[z] <= dx[z]) { 1.0 } else { 0.0 };
+                    let f_y = if (dxy <= dy[z]) | (dx[z] <= dy[z]) { 1.0 } else { 0.0 };
+                    ux[z] += f_x;
+                    uy[z] += f_y;
+                    lanes[z % 8] += f_xy;
+                }
+                let mut inc = fold_lanes(lanes);
+                for z in chunks..m {
+                    let f_xy = if (dx[z] <= dxy) | (dy[z] <= dxy) { 1.0 } else { 0.0 };
+                    let f_x = if (dxy <= dx[z]) | (dy[z] <= dx[z]) { 1.0 } else { 0.0 };
+                    let f_y = if (dxy <= dy[z]) | (dx[z] <= dy[z]) { 1.0 } else { 0.0 };
+                    ux[z] += f_x;
+                    uy[z] += f_y;
+                    inc += f_xy;
+                }
+                inc
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn triplet_cohesion_row(
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        wx: &[f32],
+        wy: &[f32],
+        wxy: f32,
+        cx: &mut [f32],
+        cy: &mut [f32],
+        ctx: &mut [f32],
+        cty: &mut [f32],
+        tie: TieMode,
+    ) -> (f32, f32) {
+        let m = dx.len();
+        let chunks = (m / 8) * 8;
+        let mut lx = [0.0f32; 8];
+        let mut ly = [0.0f32; 8];
+        match tie {
+            TieMode::Strict => {
+                let mut body = |z: usize, accx: &mut f32, accy: &mut f32| {
+                    let r = (dxy < dx[z]) & (dxy < dy[z]);
+                    let sa = if !r & (dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    let ta = if !r & !(dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    let r2 = if r { 1.0 } else { 0.0 };
+                    *accx += r2 * wx[z];
+                    *accy += r2 * wy[z];
+                    cx[z] += sa * wxy;
+                    ctx[z] += sa * wy[z];
+                    cy[z] += ta * wxy;
+                    cty[z] += ta * wx[z];
+                };
+                for z in 0..chunks {
+                    let l = z % 8;
+                    let (mut ax, mut ay) = (lx[l], ly[l]);
+                    body(z, &mut ax, &mut ay);
+                    lx[l] = ax;
+                    ly[l] = ay;
+                }
+                let mut cxy = fold_lanes(lx);
+                let mut cyx = fold_lanes(ly);
+                for z in chunks..m {
+                    body(z, &mut cxy, &mut cyx);
+                }
+                (cxy, cyx)
+            }
+            TieMode::Split => {
+                let mut body = |z: usize, accx: &mut f32, accy: &mut f32| {
+                    let f_xy = if (dx[z] <= dxy) | (dy[z] <= dxy) { 1.0 } else { 0.0 };
+                    let s_xy = share(dx[z], dy[z]);
+                    cx[z] += (f_xy * s_xy) * wxy;
+                    cy[z] += (f_xy * (1.0 - s_xy)) * wxy;
+                    let f_xz = if (dxy <= dx[z]) | (dy[z] <= dx[z]) { 1.0 } else { 0.0 };
+                    let s_xz = share(dxy, dy[z]);
+                    *accx += (f_xz * s_xz) * wx[z];
+                    cty[z] += (f_xz * (1.0 - s_xz)) * wx[z];
+                    let f_yz = if (dxy <= dy[z]) | (dx[z] <= dy[z]) { 1.0 } else { 0.0 };
+                    let s_yz = share(dxy, dx[z]);
+                    *accy += (f_yz * s_yz) * wy[z];
+                    ctx[z] += (f_yz * (1.0 - s_yz)) * wy[z];
+                };
+                for z in 0..chunks {
+                    let l = z % 8;
+                    let (mut ax, mut ay) = (lx[l], ly[l]);
+                    body(z, &mut ax, &mut ay);
+                    lx[l] = ax;
+                    ly[l] = ay;
+                }
+                let mut cxy = fold_lanes(lx);
+                let mut cyx = fold_lanes(ly);
+                for z in chunks..m {
+                    body(z, &mut cxy, &mut cyx);
+                }
+                (cxy, cyx)
+            }
+        }
+    }
+}
+
+/// AVX2 intrinsic realizations. Every function is `#[target_feature]` and
+/// therefore unsafe to call; the module-level wrappers gate every call on
+/// `is_x86_feature_detected!("avx2")`.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use crate::pald::TieMode;
+
+    /// Tail comparison matching the vector predicate (`CMP` is one of the
+    /// `_CMP_{LT,LE}_OQ` immediates used in the chunked loop).
+    #[inline(always)]
+    fn tail_closer<const CMP: i32>(a: f32, b: f32) -> bool {
+        if CMP == _CMP_LT_OQ {
+            a < b
+        } else {
+            a <= b
+        }
+    }
+
+    /// Horizontal sum of 8 i32 lanes (exact in any order).
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// The documented 8→4→2→1 lane fold (module docs, step 2):
+    /// `l[i]+l[i+4]`, then `s4[0]+s4[2]` / `s4[1]+s4[3]`, then the final
+    /// pair — bitwise the same tree as `portable::fold_lanes`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold_lanes_ps(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s4 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2));
+        _mm_cvtss_f32(s1)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn count_focus(dx: &[f32], dy: &[f32], dxy: f32, tie: TieMode) -> u32 {
+        match tie {
+            TieMode::Strict => unsafe { count_focus_cmp::<{ _CMP_LT_OQ }>(dx, dy, dxy) },
+            TieMode::Split => unsafe { count_focus_cmp::<{ _CMP_LE_OQ }>(dx, dy, dxy) },
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn count_focus_cmp<const CMP: i32>(dx: &[f32], dy: &[f32], dxy: f32) -> u32 {
+        let n = dx.len();
+        let chunks = (n / 8) * 8;
+        let px = dx.as_ptr();
+        let py = dy.as_ptr();
+        let t = _mm256_set1_ps(dxy);
+        let mut acc = _mm256_setzero_si256();
+        let mut z = 0;
+        while z < chunks {
+            let a = _mm256_loadu_ps(px.add(z));
+            let b = _mm256_loadu_ps(py.add(z));
+            let m = _mm256_or_ps(_mm256_cmp_ps::<CMP>(a, t), _mm256_cmp_ps::<CMP>(b, t));
+            // Mask lanes are all-ones (-1 as i32); subtracting counts.
+            acc = _mm256_sub_epi32(acc, _mm256_castps_si256(m));
+            z += 8;
+        }
+        let mut u = hsum_epi32(acc) as u32;
+        for z in chunks..n {
+            u += (tail_closer::<CMP>(dx[z], dxy) | tail_closer::<CMP>(dy[z], dxy)) as u32;
+        }
+        u
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn count_cands(
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        cand: &[u32],
+        tie: TieMode,
+    ) -> u32 {
+        match tie {
+            TieMode::Strict => unsafe { count_cands_cmp::<{ _CMP_LT_OQ }>(dx, dy, dxy, cand) },
+            TieMode::Split => unsafe { count_cands_cmp::<{ _CMP_LE_OQ }>(dx, dy, dxy, cand) },
+        }
+    }
+
+    /// # Safety
+    /// Every index in `cand` must be in bounds for both `dx` and `dy`
+    /// (checked by the public wrapper before dispatch).
+    #[target_feature(enable = "avx2")]
+    unsafe fn count_cands_cmp<const CMP: i32>(
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        cand: &[u32],
+    ) -> u32 {
+        let k = cand.len();
+        let chunks = (k / 8) * 8;
+        let px = dx.as_ptr();
+        let py = dy.as_ptr();
+        let pc = cand.as_ptr();
+        let t = _mm256_set1_ps(dxy);
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i < chunks {
+            let idx = _mm256_loadu_si256(pc.add(i) as *const __m256i);
+            let a = _mm256_i32gather_ps::<4>(px, idx);
+            let b = _mm256_i32gather_ps::<4>(py, idx);
+            let m = _mm256_or_ps(_mm256_cmp_ps::<CMP>(a, t), _mm256_cmp_ps::<CMP>(b, t));
+            acc = _mm256_sub_epi32(acc, _mm256_castps_si256(m));
+            i += 8;
+        }
+        let mut u = hsum_epi32(acc) as u32;
+        for &zu in &cand[chunks..] {
+            let z = zu as usize;
+            u += (tail_closer::<CMP>(dx[z], dxy) | tail_closer::<CMP>(dy[z], dxy)) as u32;
+        }
+        u
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn update_cohesion(
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        w: f32,
+        cx: &mut [f32],
+        cy: &mut [f32],
+        tie: TieMode,
+    ) {
+        let n = dx.len();
+        let chunks = (n / 8) * 8;
+        let px = dx.as_ptr();
+        let py = dy.as_ptr();
+        let pcx = cx.as_mut_ptr();
+        let pcy = cy.as_mut_ptr();
+        let t = _mm256_set1_ps(dxy);
+        let wv = _mm256_set1_ps(w);
+        match tie {
+            TieMode::Strict => {
+                let mut z = 0;
+                while z < chunks {
+                    let a = _mm256_loadu_ps(px.add(z));
+                    let b = _mm256_loadu_ps(py.add(z));
+                    let r = _mm256_or_ps(
+                        _mm256_cmp_ps::<{ _CMP_LT_OQ }>(a, t),
+                        _mm256_cmp_ps::<{ _CMP_LT_OQ }>(b, t),
+                    );
+                    let rw = _mm256_and_ps(r, wv);
+                    let s = _mm256_cmp_ps::<{ _CMP_LT_OQ }>(a, b);
+                    let cxv = _mm256_loadu_ps(pcx.add(z));
+                    _mm256_storeu_ps(pcx.add(z), _mm256_add_ps(cxv, _mm256_and_ps(s, rw)));
+                    let cyv = _mm256_loadu_ps(pcy.add(z));
+                    _mm256_storeu_ps(pcy.add(z), _mm256_add_ps(cyv, _mm256_andnot_ps(s, rw)));
+                    z += 8;
+                }
+                for z in chunks..n {
+                    let rw = if (dx[z] < dxy) | (dy[z] < dxy) { w } else { 0.0 };
+                    if dx[z] < dy[z] {
+                        cx[z] += rw;
+                    } else {
+                        cy[z] += rw;
+                    }
+                }
+            }
+            TieMode::Split => {
+                let ones = _mm256_set1_ps(1.0);
+                let halves = _mm256_set1_ps(0.5);
+                let mut z = 0;
+                while z < chunks {
+                    let a = _mm256_loadu_ps(px.add(z));
+                    let b = _mm256_loadu_ps(py.add(z));
+                    let r = _mm256_or_ps(
+                        _mm256_cmp_ps::<{ _CMP_LE_OQ }>(a, t),
+                        _mm256_cmp_ps::<{ _CMP_LE_OQ }>(b, t),
+                    );
+                    let rw = _mm256_and_ps(r, wv);
+                    let s = _mm256_add_ps(
+                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(a, b), ones),
+                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_EQ_OQ }>(a, b), halves),
+                    );
+                    let cxv = _mm256_loadu_ps(pcx.add(z));
+                    _mm256_storeu_ps(pcx.add(z), _mm256_add_ps(cxv, _mm256_mul_ps(rw, s)));
+                    let cyv = _mm256_loadu_ps(pcy.add(z));
+                    _mm256_storeu_ps(
+                        pcy.add(z),
+                        _mm256_add_ps(cyv, _mm256_mul_ps(rw, _mm256_sub_ps(ones, s))),
+                    );
+                    z += 8;
+                }
+                for z in chunks..n {
+                    let rw = if (dx[z] <= dxy) | (dy[z] <= dxy) { w } else { 0.0 };
+                    let s = if dx[z] < dy[z] {
+                        1.0
+                    } else if dx[z] == dy[z] {
+                        0.5
+                    } else {
+                        0.0
+                    };
+                    cx[z] += rw * s;
+                    cy[z] += rw * (1.0 - s);
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn triplet_focus_row(
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        ux: &mut [f32],
+        uy: &mut [f32],
+        tie: TieMode,
+    ) -> f32 {
+        let m = dx.len();
+        let chunks = (m / 8) * 8;
+        let px = dx.as_ptr();
+        let py = dy.as_ptr();
+        let pux = ux.as_mut_ptr();
+        let puy = uy.as_mut_ptr();
+        let t = _mm256_set1_ps(dxy);
+        let ones = _mm256_set1_ps(1.0);
+        let mut acc = _mm256_setzero_ps();
+        match tie {
+            TieMode::Strict => {
+                let mut z = 0;
+                while z < chunks {
+                    let a = _mm256_loadu_ps(px.add(z));
+                    let b = _mm256_loadu_ps(py.add(z));
+                    let r = _mm256_and_ps(
+                        _mm256_cmp_ps::<{ _CMP_LT_OQ }>(t, a),
+                        _mm256_cmp_ps::<{ _CMP_LT_OQ }>(t, b),
+                    );
+                    let s = _mm256_cmp_ps::<{ _CMP_LT_OQ }>(a, b);
+                    let sa = _mm256_andnot_ps(r, _mm256_and_ps(s, ones));
+                    let ta = _mm256_andnot_ps(r, _mm256_andnot_ps(s, ones));
+                    let uxv = _mm256_loadu_ps(pux.add(z));
+                    _mm256_storeu_ps(pux.add(z), _mm256_add_ps(uxv, _mm256_sub_ps(ones, sa)));
+                    let uyv = _mm256_loadu_ps(puy.add(z));
+                    _mm256_storeu_ps(puy.add(z), _mm256_add_ps(uyv, _mm256_sub_ps(ones, ta)));
+                    acc = _mm256_add_ps(acc, _mm256_add_ps(sa, ta));
+                    z += 8;
+                }
+                let mut inc = fold_lanes_ps(acc);
+                for z in chunks..m {
+                    let r = (dxy < dx[z]) & (dxy < dy[z]);
+                    let sa = if !r & (dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    let ta = if !r & !(dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    ux[z] += 1.0 - sa;
+                    uy[z] += 1.0 - ta;
+                    inc += sa + ta;
+                }
+                inc
+            }
+            TieMode::Split => {
+                let mut z = 0;
+                while z < chunks {
+                    let a = _mm256_loadu_ps(px.add(z));
+                    let b = _mm256_loadu_ps(py.add(z));
+                    let f_xy = _mm256_and_ps(
+                        _mm256_or_ps(
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(a, t),
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(b, t),
+                        ),
+                        ones,
+                    );
+                    let f_x = _mm256_and_ps(
+                        _mm256_or_ps(
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(t, a),
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(b, a),
+                        ),
+                        ones,
+                    );
+                    let f_y = _mm256_and_ps(
+                        _mm256_or_ps(
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(t, b),
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(a, b),
+                        ),
+                        ones,
+                    );
+                    let uxv = _mm256_loadu_ps(pux.add(z));
+                    _mm256_storeu_ps(pux.add(z), _mm256_add_ps(uxv, f_x));
+                    let uyv = _mm256_loadu_ps(puy.add(z));
+                    _mm256_storeu_ps(puy.add(z), _mm256_add_ps(uyv, f_y));
+                    acc = _mm256_add_ps(acc, f_xy);
+                    z += 8;
+                }
+                let mut inc = fold_lanes_ps(acc);
+                for z in chunks..m {
+                    let f_xy = if (dx[z] <= dxy) | (dy[z] <= dxy) { 1.0 } else { 0.0 };
+                    let f_x = if (dxy <= dx[z]) | (dy[z] <= dx[z]) { 1.0 } else { 0.0 };
+                    let f_y = if (dxy <= dy[z]) | (dx[z] <= dy[z]) { 1.0 } else { 0.0 };
+                    ux[z] += f_x;
+                    uy[z] += f_y;
+                    inc += f_xy;
+                }
+                inc
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn triplet_cohesion_row(
+        dx: &[f32],
+        dy: &[f32],
+        dxy: f32,
+        wx: &[f32],
+        wy: &[f32],
+        wxy: f32,
+        cx: &mut [f32],
+        cy: &mut [f32],
+        ctx: &mut [f32],
+        cty: &mut [f32],
+        tie: TieMode,
+    ) -> (f32, f32) {
+        let m = dx.len();
+        let chunks = (m / 8) * 8;
+        let px = dx.as_ptr();
+        let py = dy.as_ptr();
+        let pwx = wx.as_ptr();
+        let pwy = wy.as_ptr();
+        let pcx = cx.as_mut_ptr();
+        let pcy = cy.as_mut_ptr();
+        let pctx = ctx.as_mut_ptr();
+        let pcty = cty.as_mut_ptr();
+        let t = _mm256_set1_ps(dxy);
+        let ones = _mm256_set1_ps(1.0);
+        let wxyv = _mm256_set1_ps(wxy);
+        let mut lx = _mm256_setzero_ps();
+        let mut ly = _mm256_setzero_ps();
+        match tie {
+            TieMode::Strict => {
+                let mut z = 0;
+                while z < chunks {
+                    let a = _mm256_loadu_ps(px.add(z));
+                    let b = _mm256_loadu_ps(py.add(z));
+                    let wxv = _mm256_loadu_ps(pwx.add(z));
+                    let wyv = _mm256_loadu_ps(pwy.add(z));
+                    let r = _mm256_and_ps(
+                        _mm256_cmp_ps::<{ _CMP_LT_OQ }>(t, a),
+                        _mm256_cmp_ps::<{ _CMP_LT_OQ }>(t, b),
+                    );
+                    let s = _mm256_cmp_ps::<{ _CMP_LT_OQ }>(a, b);
+                    let sa = _mm256_andnot_ps(r, _mm256_and_ps(s, ones));
+                    let ta = _mm256_andnot_ps(r, _mm256_andnot_ps(s, ones));
+                    let r2 = _mm256_and_ps(r, ones);
+                    lx = _mm256_add_ps(lx, _mm256_mul_ps(r2, wxv));
+                    ly = _mm256_add_ps(ly, _mm256_mul_ps(r2, wyv));
+                    let cxv = _mm256_loadu_ps(pcx.add(z));
+                    _mm256_storeu_ps(pcx.add(z), _mm256_add_ps(cxv, _mm256_mul_ps(sa, wxyv)));
+                    let ctxv = _mm256_loadu_ps(pctx.add(z));
+                    _mm256_storeu_ps(pctx.add(z), _mm256_add_ps(ctxv, _mm256_mul_ps(sa, wyv)));
+                    let cyv = _mm256_loadu_ps(pcy.add(z));
+                    _mm256_storeu_ps(pcy.add(z), _mm256_add_ps(cyv, _mm256_mul_ps(ta, wxyv)));
+                    let ctyv = _mm256_loadu_ps(pcty.add(z));
+                    _mm256_storeu_ps(pcty.add(z), _mm256_add_ps(ctyv, _mm256_mul_ps(ta, wxv)));
+                    z += 8;
+                }
+                let mut cxy = fold_lanes_ps(lx);
+                let mut cyx = fold_lanes_ps(ly);
+                for z in chunks..m {
+                    let r = (dxy < dx[z]) & (dxy < dy[z]);
+                    let sa = if !r & (dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    let ta = if !r & !(dx[z] < dy[z]) { 1.0 } else { 0.0 };
+                    let r2 = if r { 1.0 } else { 0.0 };
+                    cxy += r2 * wx[z];
+                    cyx += r2 * wy[z];
+                    cx[z] += sa * wxy;
+                    ctx[z] += sa * wy[z];
+                    cy[z] += ta * wxy;
+                    cty[z] += ta * wx[z];
+                }
+                (cxy, cyx)
+            }
+            TieMode::Split => {
+                let halves = _mm256_set1_ps(0.5);
+                let mut z = 0;
+                while z < chunks {
+                    let a = _mm256_loadu_ps(px.add(z));
+                    let b = _mm256_loadu_ps(py.add(z));
+                    let wxv = _mm256_loadu_ps(pwx.add(z));
+                    let wyv = _mm256_loadu_ps(pwy.add(z));
+                    let f_xy = _mm256_and_ps(
+                        _mm256_or_ps(
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(a, t),
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(b, t),
+                        ),
+                        ones,
+                    );
+                    let s_xy = _mm256_add_ps(
+                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(a, b), ones),
+                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_EQ_OQ }>(a, b), halves),
+                    );
+                    let cxv = _mm256_loadu_ps(pcx.add(z));
+                    _mm256_storeu_ps(
+                        pcx.add(z),
+                        _mm256_add_ps(cxv, _mm256_mul_ps(_mm256_mul_ps(f_xy, s_xy), wxyv)),
+                    );
+                    let cyv = _mm256_loadu_ps(pcy.add(z));
+                    _mm256_storeu_ps(
+                        pcy.add(z),
+                        _mm256_add_ps(
+                            cyv,
+                            _mm256_mul_ps(_mm256_mul_ps(f_xy, _mm256_sub_ps(ones, s_xy)), wxyv),
+                        ),
+                    );
+                    let f_xz = _mm256_and_ps(
+                        _mm256_or_ps(
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(t, a),
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(b, a),
+                        ),
+                        ones,
+                    );
+                    let s_xz = _mm256_add_ps(
+                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(t, b), ones),
+                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_EQ_OQ }>(t, b), halves),
+                    );
+                    lx = _mm256_add_ps(lx, _mm256_mul_ps(_mm256_mul_ps(f_xz, s_xz), wxv));
+                    let ctyv = _mm256_loadu_ps(pcty.add(z));
+                    _mm256_storeu_ps(
+                        pcty.add(z),
+                        _mm256_add_ps(
+                            ctyv,
+                            _mm256_mul_ps(_mm256_mul_ps(f_xz, _mm256_sub_ps(ones, s_xz)), wxv),
+                        ),
+                    );
+                    let f_yz = _mm256_and_ps(
+                        _mm256_or_ps(
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(t, b),
+                            _mm256_cmp_ps::<{ _CMP_LE_OQ }>(a, b),
+                        ),
+                        ones,
+                    );
+                    let s_yz = _mm256_add_ps(
+                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(t, a), ones),
+                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_EQ_OQ }>(t, a), halves),
+                    );
+                    ly = _mm256_add_ps(ly, _mm256_mul_ps(_mm256_mul_ps(f_yz, s_yz), wyv));
+                    let ctxv = _mm256_loadu_ps(pctx.add(z));
+                    _mm256_storeu_ps(
+                        pctx.add(z),
+                        _mm256_add_ps(
+                            ctxv,
+                            _mm256_mul_ps(_mm256_mul_ps(f_yz, _mm256_sub_ps(ones, s_yz)), wyv),
+                        ),
+                    );
+                    z += 8;
+                }
+                let mut cxy = fold_lanes_ps(lx);
+                let mut cyx = fold_lanes_ps(ly);
+                for z in chunks..m {
+                    let f_xy = if (dx[z] <= dxy) | (dy[z] <= dxy) { 1.0 } else { 0.0 };
+                    let s_xy = split_share(dx[z], dy[z]);
+                    cx[z] += (f_xy * s_xy) * wxy;
+                    cy[z] += (f_xy * (1.0 - s_xy)) * wxy;
+                    let f_xz = if (dxy <= dx[z]) | (dy[z] <= dx[z]) { 1.0 } else { 0.0 };
+                    let s_xz = split_share(dxy, dy[z]);
+                    cxy += (f_xz * s_xz) * wx[z];
+                    cty[z] += (f_xz * (1.0 - s_xz)) * wx[z];
+                    let f_yz = if (dxy <= dy[z]) | (dx[z] <= dy[z]) { 1.0 } else { 0.0 };
+                    let s_yz = split_share(dxy, dx[z]);
+                    cyx += (f_yz * s_yz) * wy[z];
+                    ctx[z] += (f_yz * (1.0 - s_yz)) * wy[z];
+                }
+                (cxy, cyx)
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn split_share(a: f32, b: f32) -> f32 {
+        if a < b {
+            1.0
+        } else if a == b {
+            0.5
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distmat;
+    use crate::pald::branchfree::{count_focus_branchfree, update_cohesion_branchfree};
+    use crate::pald::naive;
+
+    fn splitmix(state: &mut u64) -> u64 {
+        *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = *state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn rand_row(state: &mut u64, n: usize, levels: u32) -> Vec<f32> {
+        (0..n).map(|_| (splitmix(state) % levels as u64) as f32 * 0.25 + 0.25).collect()
+    }
+
+    #[test]
+    fn count_matches_scalar_exactly_at_all_remainders() {
+        let mut st = 0x1234_5678u64;
+        for n in [0usize, 1, 5, 7, 8, 9, 15, 16, 17, 31, 64, 100] {
+            for tie in [TieMode::Strict, TieMode::Split] {
+                for levels in [3u32, 64] {
+                    let dx = rand_row(&mut st, n, levels);
+                    let dy = rand_row(&mut st, n, levels);
+                    let dxy = (splitmix(&mut st) % levels as u64) as f32 * 0.25 + 0.25;
+                    let want = count_focus_branchfree(&dx, &dy, dxy, tie);
+                    assert_eq!(count_focus_simd(&dx, &dy, dxy, tie), want, "n={n} {tie:?}");
+                    assert_eq!(portable::count_focus(&dx, &dy, dxy, tie), want, "n={n} {tie:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_count_matches_dense_count_on_gathered_candidates() {
+        let mut st = 99u64;
+        for k in [0usize, 1, 7, 8, 9, 23, 40] {
+            let n = 64;
+            let dx = rand_row(&mut st, n, 16);
+            let dy = rand_row(&mut st, n, 16);
+            let cand: Vec<u32> = (0..k).map(|_| (splitmix(&mut st) % n as u64) as u32).collect();
+            for tie in [TieMode::Strict, TieMode::Split] {
+                let dxy = 0.75;
+                let want: u32 = cand
+                    .iter()
+                    .map(|&z| {
+                        let z = z as usize;
+                        let c = |a: f32, b: f32| match tie {
+                            TieMode::Strict => a < b,
+                            TieMode::Split => a <= b,
+                        };
+                        (c(dx[z], dxy) | c(dy[z], dxy)) as u32
+                    })
+                    .sum();
+                assert_eq!(count_cands_simd(&dx, &dy, dxy, &cand, tie), want, "k={k} {tie:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn sparse_count_rejects_out_of_bounds_candidates() {
+        let dx = vec![1.0f32; 8];
+        let dy = vec![1.0f32; 8];
+        count_cands_simd(&dx, &dy, 0.5, &[3, 8], TieMode::Strict);
+    }
+
+    #[test]
+    fn update_matches_scalar_bitwise_for_finite_weights() {
+        let mut st = 0xABCDu64;
+        for n in [1usize, 6, 8, 13, 16, 33, 80] {
+            for tie in [TieMode::Strict, TieMode::Split] {
+                let dx = rand_row(&mut st, n, 8);
+                let dy = rand_row(&mut st, n, 8);
+                let dxy = 1.0;
+                let w = 0.125;
+                let mut cx_s = rand_row(&mut st, n, 4);
+                let mut cy_s = rand_row(&mut st, n, 4);
+                let mut cx_v = cx_s.clone();
+                let mut cy_v = cy_s.clone();
+                update_cohesion_branchfree(&dx, &dy, dxy, w, &mut cx_s, &mut cy_s, tie);
+                update_cohesion_simd(&dx, &dy, dxy, w, &mut cx_v, &mut cy_v, tie);
+                assert_eq!(cx_s, cx_v, "cx n={n} {tie:?}");
+                assert_eq!(cy_s, cy_v, "cy n={n} {tie:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_path_is_bit_identical_to_portable_lane_model() {
+        // On an AVX2 host this pins vector vs portable; elsewhere it is
+        // trivially true — either way the documented fold order is what
+        // both paths produce.
+        let mut st = 7u64;
+        for m in [0usize, 3, 8, 11, 16, 29, 64] {
+            for tie in [TieMode::Strict, TieMode::Split] {
+                let dx = rand_row(&mut st, m, 6);
+                let dy = rand_row(&mut st, m, 6);
+                let wx = rand_row(&mut st, m, 6);
+                let wy = rand_row(&mut st, m, 6);
+                let dxy = 0.75;
+                let wxy = 0.5;
+                let mut ux_a = vec![2.0f32; m];
+                let mut uy_a = vec![2.0f32; m];
+                let mut ux_b = ux_a.clone();
+                let mut uy_b = uy_a.clone();
+                let inc_a = triplet_focus_simd_row(&dx, &dy, dxy, &mut ux_a, &mut uy_a, 0, m, tie);
+                let inc_b = portable::triplet_focus_row(&dx, &dy, dxy, &mut ux_b, &mut uy_b, tie);
+                assert_eq!(inc_a.to_bits(), inc_b.to_bits(), "focus inc m={m} {tie:?}");
+                assert_eq!(ux_a, ux_b);
+                assert_eq!(uy_a, uy_b);
+
+                let mut cx_a = vec![0.0f32; m];
+                let mut cy_a = vec![0.0f32; m];
+                let mut ctx_a = vec![0.0f32; m];
+                let mut cty_a = vec![0.0f32; m];
+                let (mut cx_b, mut cy_b) = (cx_a.clone(), cy_a.clone());
+                let (mut ctx_b, mut cty_b) = (ctx_a.clone(), cty_a.clone());
+                let got = triplet_cohesion_simd_row(
+                    &dx, &dy, dxy, &wx, &wy, wxy, &mut cx_a, &mut cy_a, &mut ctx_a, &mut cty_a,
+                    0, m, tie,
+                );
+                let want = portable::triplet_cohesion_row(
+                    &dx, &dy, dxy, &wx, &wy, wxy, &mut cx_b, &mut cy_b, &mut ctx_b, &mut cty_b,
+                    tie,
+                );
+                assert_eq!(got.0.to_bits(), want.0.to_bits(), "cxy m={m} {tie:?}");
+                assert_eq!(got.1.to_bits(), want.1.to_bits(), "cyx m={m} {tie:?}");
+                assert_eq!(cx_a, cx_b);
+                assert_eq!(cy_a, cy_b);
+                assert_eq!(ctx_a, ctx_b);
+                assert_eq!(cty_a, cty_b);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_pairwise_matches_naive() {
+        for &(n, b) in &[(16usize, 4usize), (33, 8), (64, 16), (50, 7)] {
+            let d = distmat::random_tie_free(n, (n + b) as u64);
+            let want = naive::pairwise(&d, TieMode::Strict);
+            let got = pairwise_simd(&d, TieMode::Strict, b);
+            assert!(
+                got.allclose(&want, 1e-5, 1e-6),
+                "n={n} b={b} maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn simd_triplet_matches_naive() {
+        for &(n, bh, bt) in &[(16usize, 4usize, 8usize), (33, 8, 8), (48, 16, 4)] {
+            let d = distmat::random_tie_free(n, (n * bh + bt) as u64);
+            let want = naive::triplet(&d, TieMode::Strict);
+            let got = triplet_simd(&d, TieMode::Strict, bh, bt);
+            assert!(
+                got.allclose(&want, 1e-5, 1e-6),
+                "n={n} bh={bh} bt={bt} maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn simd_split_mode_matches_naive_with_ties() {
+        let n = 22;
+        let d = distmat::random_tied(n, 5, 4);
+        let want = naive::pairwise(&d, TieMode::Split);
+        let gp = pairwise_simd(&d, TieMode::Split, 8);
+        let gt = triplet_simd(&d, TieMode::Split, 8, 8);
+        assert!(gp.allclose(&want, 1e-5, 1e-6), "pw {}", gp.max_abs_diff(&want));
+        assert!(gt.allclose(&want, 1e-5, 1e-6), "tr {}", gt.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn simd_focus_sizes_match_scalar_exactly() {
+        let n = 40;
+        let d = distmat::random_tied(n, 19, 6);
+        for tie in [TieMode::Strict, TieMode::Split] {
+            let want = naive::focus_sizes(&d, tie);
+            let mut u = Mat::zeros(n, n);
+            focus_sizes_simd_into(&d, tie, 8, &mut u);
+            for x in 0..n {
+                for y in 0..n {
+                    if x != y {
+                        assert_eq!(u[(x, y)], want[(x, y)], "U at ({x},{y}) {tie:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_runs_on_a_reused_workspace_are_bit_identical() {
+        let n = 37;
+        let d = distmat::random_tie_free(n, 11);
+        let mut ws = Workspace::new();
+        let mut c1 = Mat::zeros(n, n);
+        let mut c2 = Mat::zeros(n, n);
+        triplet_simd_into(&d, TieMode::Strict, 8, 8, &mut ws, &mut c1);
+        triplet_simd_into(&d, TieMode::Strict, 8, 8, &mut ws, &mut c2);
+        assert_eq!(c1.as_slice(), c2.as_slice(), "triplet run-to-run");
+        pairwise_simd_into(&d, TieMode::Strict, 8, &mut ws, &mut c1);
+        pairwise_simd_into(&d, TieMode::Strict, 8, &mut ws, &mut c2);
+        assert_eq!(c1.as_slice(), c2.as_slice(), "pairwise run-to-run");
+    }
+}

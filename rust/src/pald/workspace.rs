@@ -57,6 +57,8 @@ pub struct Workspace {
     pub(crate) w_tile: Vec<f32>,
     /// Per-thread reduction buffers (parallel pairwise focus pass).
     pub(crate) reduce: ReduceWorkspace,
+    /// 64-byte-aligned weight tile for the SIMD backend's pairwise pass.
+    pub(crate) simd_tile: AlignedBuf,
     /// Sparse PKNN state: the neighbor graph, its build scratch, the
     /// candidate-merge buffer, and the last truncation report
     /// (DESIGN.md §9).
@@ -79,6 +81,7 @@ impl Workspace {
             u_tile: Vec::new(),
             w_tile: Vec::new(),
             reduce: ReduceWorkspace::default(),
+            simd_tile: AlignedBuf::new(),
             knn: KnnScratch::new(),
             phases: PhaseTimes::default(),
         }
@@ -122,6 +125,11 @@ impl Workspace {
         self.w_tile.resize(b * b, 0.0);
     }
 
+    /// Aligned SIMD weight-tile scratch of at least `len` f32s (zeroed).
+    pub(crate) fn ensure_simd_tile(&mut self, len: usize) {
+        self.simd_tile.ensure(len);
+    }
+
     /// Clear the phase recorder and the truncation report before a
     /// fresh kernel run (sparse kernels re-fill the report; a dense run
     /// leaves it `None`).
@@ -146,7 +154,46 @@ impl Workspace {
         f32s * std::mem::size_of::<f32>()
             + self.u_tile.capacity() * std::mem::size_of::<u32>()
             + self.reduce.allocated_bytes()
+            + self.simd_tile.allocated_bytes()
             + self.knn.allocated_bytes()
+    }
+}
+
+/// One cache line of f32s; the allocation unit of [`AlignedBuf`].
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct Align64([f32; 16]);
+
+/// Growable f32 scratch whose backing store is 64-byte aligned, so the
+/// SIMD backend's tile loads land on full cache lines (and full AVX2
+/// registers) regardless of where the allocator put the buffer.
+pub(crate) struct AlignedBuf {
+    raw: Vec<Align64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    pub(crate) fn new() -> AlignedBuf {
+        AlignedBuf { raw: Vec::new(), len: 0 }
+    }
+
+    /// Resize to at least `len` f32s, zero-filled.
+    pub(crate) fn ensure(&mut self, len: usize) {
+        let blocks = len.div_ceil(16);
+        self.raw.clear();
+        self.raw.resize(blocks, Align64([0.0; 16]));
+        self.len = len;
+    }
+
+    /// The buffer as a plain f32 slice.
+    pub(crate) fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: Align64 is repr(C) over [f32; 16], so the Vec's backing
+        // store is a contiguous run of raw.len() * 16 >= self.len f32s.
+        unsafe { std::slice::from_raw_parts_mut(self.raw.as_mut_ptr() as *mut f32, self.len) }
+    }
+
+    pub(crate) fn allocated_bytes(&self) -> usize {
+        self.raw.capacity() * std::mem::size_of::<Align64>()
     }
 }
 

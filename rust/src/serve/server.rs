@@ -213,6 +213,12 @@ impl Shared {
         out.push_str(&format!("paldx_sessions_updates_total {updates}\n"));
         out.push_str(&format!("paldx_sessions_reaped_total {reaped}\n"));
         out.push_str(&format!("paldx_sessions_live {}\n", self.streams.len()));
+        // Backend availability (DESIGN.md §13): whether the SIMD rungs
+        // run on AVX2 here or fall back to the portable lanes.
+        out.push_str(&format!(
+            "paldx_simd_available {}\n",
+            u8::from(crate::pald::simd::simd_available())
+        ));
         out
     }
 }
@@ -622,7 +628,7 @@ fn handle_frame(
                             n: n as usize,
                             k: cfg.k as usize,
                             algorithm: "incremental".into(),
-                            backend: "Native".into(),
+                            backend: "scalar".into(),
                             seconds: t0.elapsed().as_secs_f64(),
                         });
                         Response::SessionOpened { session, n }
@@ -661,7 +667,7 @@ fn handle_frame(
                             n: matrix.rows(),
                             k: 0,
                             algorithm: "incremental".into(),
-                            backend: "Native".into(),
+                            backend: "scalar".into(),
                             seconds: t0.elapsed().as_secs_f64(),
                         });
                         Response::Cohesion { matrix }
@@ -893,7 +899,8 @@ fn run_coalesced(sh: &Shared, key: ShapeKey, items: Vec<OneItem>) {
     }
     if !survivors.is_empty() {
         let refs: Vec<&Mat> = survivors.iter().map(|it| &it.matrix).collect();
-        let resolved = session.plan_for(key.n).algorithm.name();
+        let plan = session.plan_for(key.n);
+        let (resolved, backend) = (plan.algorithm.name(), plan.backend.name());
         let t0 = Instant::now();
         match session.compute_batch_refs(&refs) {
             Ok(results) => {
@@ -907,7 +914,7 @@ fn run_coalesced(sh: &Shared, key: ShapeKey, items: Vec<OneItem>) {
                         n: key.n,
                         k: key.k,
                         algorithm: resolved.to_string(),
-                        backend: "Native".into(),
+                        backend: backend.to_string(),
                         seconds: per_item,
                     });
                 }
@@ -955,13 +962,14 @@ fn run_explicit(
         let t0 = Instant::now();
         let results = session.compute_batch_refs(&refs)?;
         let per_item = t0.elapsed().as_secs_f64() / results.len().max(1) as f64;
-        let resolved = session.plan_for(key.n).algorithm.name();
+        let plan = session.plan_for(key.n);
+        let (resolved, backend) = (plan.algorithm.name(), plan.backend.name());
         for m in &matrices {
             sh.metrics.record(JobMetrics {
                 n: m.rows(),
                 k: key.k,
                 algorithm: resolved.to_string(),
-                backend: "Native".into(),
+                backend: backend.to_string(),
                 seconds: per_item,
             });
         }
@@ -1005,6 +1013,7 @@ mod tests {
         let scrape = handle.join();
         assert!(scrape.contains("paldx_serve_draining 1"), "{scrape}");
         assert!(scrape.contains("paldx_jobs_total"), "{scrape}");
+        assert!(scrape.contains("paldx_simd_available"), "{scrape}");
     }
 
     #[test]

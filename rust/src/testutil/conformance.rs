@@ -34,14 +34,22 @@
 //! The thread budgets the battery runs at come from the
 //! `PALD_TEST_THREADS` environment variable (comma-separated, e.g.
 //! `PALD_TEST_THREADS=1,2,4,8` — the CI thread-matrix job), defaulting
-//! to `1,2,4`.
+//! to `1,2,4`.  The backend axis (DESIGN.md §13) is checked by
+//! [`check_backend_conformance`]: the explicit-SIMD rungs against their
+//! scalar twins (U integer-exact, C within [`RTOL`]/[`ATOL`],
+//! bit-identical across repeats on a reused workspace — the fixed
+//! lane-reduction contract), plus the planner's resolution for every
+//! backend in the `PALD_TEST_BACKEND` environment variable (the CI
+//! backend-matrix job; default `auto,scalar,simd`, and an explicit
+//! `simd` entry is valid on every host via the portable fallback, so
+//! there are no skips anywhere).
 
 use crate::core::Mat;
 use crate::data::distmat;
 use crate::pald::knn::{cohesion_over_graph, focus_sizes_over_graph, NeighborGraph};
 use crate::pald::{
-    in_focus, naive, normalize, Algorithm, CohesionKernel, ExecParams, TieMode, UpdateKernel,
-    Workspace, REGISTRY, UPDATE_KERNELS,
+    in_focus, naive, normalize, simd, Algorithm, Backend, CohesionKernel, ExecParams, PaldConfig,
+    Planner, TieMode, UpdateKernel, Workspace, REGISTRY, UPDATE_KERNELS,
 };
 
 /// Documented cross-kernel relative cohesion tolerance (f32 summation
@@ -154,6 +162,32 @@ pub fn test_threads() -> Vec<usize> {
         .collect()
 }
 
+/// Backends the conformance battery resolves plans under: the
+/// comma-separated `PALD_TEST_BACKEND` environment variable (the CI
+/// backend-matrix job sets it, mirroring `PALD_TEST_THREADS`),
+/// defaulting to `auto,scalar,simd` when unset — every native backend,
+/// on every host: an explicit `simd` pin runs the portable 8-lane
+/// fallback where AVX2 is missing, and `auto` resolves to scalar there,
+/// so no entry is ever skipped.
+///
+/// Like [`test_threads`], a set-but-invalid variable **panics** (`xla`
+/// is also rejected: the coordinator backend has no in-process kernels
+/// for the battery to run).
+pub fn test_backends() -> Vec<Backend> {
+    let Ok(spec) = std::env::var("PALD_TEST_BACKEND") else {
+        return vec![Backend::Auto, Backend::CpuScalar, Backend::CpuSimd];
+    };
+    spec.split(',')
+        .map(|entry| match Backend::parse(entry.trim()) {
+            Some(Backend::Xla) | None => panic!(
+                "PALD_TEST_BACKEND: bad entry {entry:?} in {spec:?} \
+                 (want comma-separated names from auto|scalar|simd)"
+            ),
+            Some(b) => b,
+        })
+        .collect()
+}
+
 /// Run one registered kernel through the trait path (compute_into +
 /// normalization) with the battery's block sizes.
 fn run_kernel(
@@ -165,7 +199,7 @@ fn run_kernel(
     ws: &mut Workspace,
 ) -> Mat {
     let n = d.rows();
-    let p = ExecParams { tie, block: 8, block2: 4, threads, k };
+    let p = ExecParams { tie, block: 8, block2: 4, threads, k, backend: Backend::Auto };
     let mut c = Mat::zeros(n, n);
     kernel.compute_into(d, &p, ws, &mut c);
     normalize(&mut c);
@@ -353,6 +387,160 @@ pub fn check_kernel_conformance(threads: usize) {
                     );
                 }
             }
+        }
+    }
+}
+
+/// The cross-backend oracle (DESIGN.md §13): the explicit-SIMD rungs
+/// checked against their scalar twins on every battery case, plus the
+/// planner's backend resolution for every backend in [`test_backends`].
+///
+/// * **U integer-exact**: the SIMD focus-size pass and the per-pair
+///   SIMD focus counter reproduce the independent O(n³) dense sweep
+///   bit-for-bit — focus sizes are small integer counts, so the fixed
+///   lane-reduction order cannot change them in *any* order;
+/// * **C within the documented tolerance** ([`RTOL`]/[`ATOL`]) of the
+///   scalar twin for the dense SIMD rungs (f32 summation order differs
+///   by lane grouping, like any other rung pair), and **bit-identical**
+///   for `knn-simd-pairwise` at every battery k — only the integer
+///   count path vectorizes; the sparse award order is shared with the
+///   masked scalar rung;
+/// * **bit-identical across repeats on a reused [`Workspace`]** — the
+///   fixed lane-reduction determinism contract, on AVX2 and portable
+///   hosts alike;
+/// * for every backend in `PALD_TEST_BACKEND`, the planner resolves
+///   `Algorithm::Auto` to a kernel *on that backend* (`auto` resolves
+///   to scalar on non-AVX2 hosts — checked, never skipped) and the
+///   resolved plan reproduces the naive reference within tolerance.
+pub fn check_backend_conformance(threads: usize) {
+    let mut ws = Workspace::new();
+    let backends = test_backends();
+    let simd_algs =
+        [Algorithm::SimdPairwise, Algorithm::SimdTriplet, Algorithm::KnnSimdPairwise];
+    for case in battery() {
+        let d = &case.d;
+        let n = d.rows();
+        let ctx = format!("{} p={threads}", case.name);
+        if case.mode == CaseMode::TieUndefined {
+            // Undefined semantics: the SIMD rungs must still be
+            // run-to-run bit-stable on the reused workspace.
+            for alg in simd_algs {
+                let kernel = alg.kernel().unwrap();
+                let k = if kernel.meta().sparse { n - 1 } else { 0 };
+                let a = run_kernel(kernel, d, case.tie, threads, k, &mut ws);
+                let b = run_kernel(kernel, d, case.tie, threads, k, &mut ws);
+                assert_bits_eq(&a, &b, &format!("{ctx} {} repeat", kernel.name()));
+            }
+            continue;
+        }
+
+        // U: the SIMD focus-size pass and the per-pair counter are
+        // integer-exact against the independent dense sweep.
+        let uref = naive_focus_sizes(d, case.tie);
+        let mut u = Mat::zeros(n, n);
+        simd::focus_sizes_simd_into(d, case.tie, 8, &mut u);
+        assert_eq!(
+            u.as_slice(),
+            uref.as_slice(),
+            "{ctx}: simd focus sizes not integer-exact"
+        );
+        for x in 0..n {
+            for y in (x + 1)..n {
+                assert_eq!(
+                    simd::count_focus_simd(d.row(x), d.row(y), d[(x, y)], case.tie),
+                    uref[(x, y)] as u32,
+                    "{ctx}: count_focus_simd({x},{y}) diverged from the sweep"
+                );
+            }
+        }
+
+        // Dense SIMD rungs vs their scalar twins: tolerance C, bitwise
+        // repeatability.
+        for (scalar, vec_alg) in [
+            (Algorithm::OptimizedPairwise, Algorithm::SimdPairwise),
+            (Algorithm::OptimizedTriplet, Algorithm::SimdTriplet),
+        ] {
+            let want = run_kernel(scalar.kernel().unwrap(), d, case.tie, threads, 0, &mut ws);
+            let kernel = vec_alg.kernel().unwrap();
+            let a = run_kernel(kernel, d, case.tie, threads, 0, &mut ws);
+            assert!(
+                a.allclose(&want, RTOL, ATOL),
+                "{ctx} {} vs {}: maxdiff={}",
+                kernel.name(),
+                scalar.name(),
+                a.max_abs_diff(&want)
+            );
+            let b = run_kernel(kernel, d, case.tie, threads, 0, &mut ws);
+            assert_bits_eq(&a, &b, &format!("{ctx} {} repeat", kernel.name()));
+        }
+
+        // Sparse SIMD rung: bit-identical to the masked scalar rung at
+        // every battery k.
+        for k in sparse_ks(n) {
+            let want = run_kernel(
+                Algorithm::KnnOptPairwise.kernel().unwrap(),
+                d,
+                case.tie,
+                threads,
+                k,
+                &mut ws,
+            );
+            let a = run_kernel(
+                Algorithm::KnnSimdPairwise.kernel().unwrap(),
+                d,
+                case.tie,
+                threads,
+                k,
+                &mut ws,
+            );
+            assert_eq!(
+                a.as_slice(),
+                want.as_slice(),
+                "{ctx} k={k}: knn-simd-pairwise not bit-identical to knn-opt-pairwise"
+            );
+        }
+
+        // Planner resolution per requested backend.
+        let cref = naive::pairwise(d, case.tie);
+        for &backend in &backends {
+            let cfg = PaldConfig {
+                algorithm: Algorithm::Auto,
+                tie_mode: case.tie,
+                threads,
+                backend,
+                ..Default::default()
+            };
+            let plan = Planner::new().resolve(&cfg, n);
+            match backend {
+                Backend::CpuScalar => assert_eq!(
+                    plan.backend,
+                    Backend::CpuScalar,
+                    "{ctx}: scalar pin leaked off-backend: {}",
+                    plan.describe()
+                ),
+                Backend::CpuSimd => assert_eq!(
+                    plan.backend,
+                    Backend::CpuSimd,
+                    "{ctx}: simd pin leaked off-backend: {}",
+                    plan.describe()
+                ),
+                Backend::Auto => assert!(
+                    plan.backend == Backend::CpuScalar || plan.backend == Backend::CpuSimd,
+                    "{ctx}: auto resolved to an unresolved backend: {}",
+                    plan.describe()
+                ),
+                Backend::Xla => unreachable!("test_backends never yields xla"),
+            }
+            let kernel = plan.algorithm.kernel().unwrap();
+            let c =
+                run_kernel(kernel, d, case.tie, plan.params.threads, plan.params.k, &mut ws);
+            assert!(
+                c.allclose(&cref, RTOL, ATOL),
+                "{ctx} backend={} resolved {}: maxdiff={}",
+                backend.name(),
+                plan.algorithm.name(),
+                c.max_abs_diff(&cref)
+            );
         }
     }
 }
@@ -571,5 +759,18 @@ mod tests {
         let v = test_threads();
         assert!(!v.is_empty());
         assert!(v.iter().all(|&t| t >= 1));
+    }
+
+    #[test]
+    fn env_backend_list_parses() {
+        // Unset (the usual unit-test case): every native backend, so a
+        // default run covers scalar, simd, and the auto resolution with
+        // no skips on any host.  (The CI backend-matrix job exercises
+        // the env path end to end.)
+        let v = test_backends();
+        assert!(v.contains(&Backend::Auto));
+        assert!(v.contains(&Backend::CpuScalar));
+        assert!(v.contains(&Backend::CpuSimd));
+        assert!(!v.contains(&Backend::Xla));
     }
 }

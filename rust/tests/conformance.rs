@@ -7,13 +7,15 @@
 //!
 //! Thread budgets come from `PALD_TEST_THREADS` (comma-separated; the
 //! CI thread-matrix job runs this suite at 1, 2, 4, and 8 threads).
+//! Backends come from `PALD_TEST_BACKEND` (comma-separated; the CI
+//! backend-matrix job forces `scalar` and `auto` legs — DESIGN.md §13).
 
 use paldx::testutil::conformance::{
-    battery, check_kernel_conformance, check_parallel_determinism,
-    check_update_kernel_conformance, sparse_ks, test_threads,
+    battery, check_backend_conformance, check_kernel_conformance, check_parallel_determinism,
+    check_update_kernel_conformance, sparse_ks, test_backends, test_threads,
 };
 
-/// Acceptance (ISSUE 5): all 18 registry kernels conform, from a single
+/// Acceptance (ISSUE 5): all 21 registry kernels conform, from a single
 /// parameterized battery, at every configured thread budget — C within
 /// the documented tolerance of the dense reference (bit-exact on the
 /// sparse path against the graph oracle, and against dense at k = n−1),
@@ -24,6 +26,22 @@ fn registry_conformance_across_thread_matrix() {
     assert!(!threads.is_empty());
     for t in threads {
         check_kernel_conformance(t);
+    }
+}
+
+/// Acceptance (ISSUE 8): the cross-backend oracle — SIMD rungs against
+/// their scalar twins (U integer-exact, C within the documented
+/// tolerance, `knn-simd-pairwise` bit-identical to the masked scalar
+/// rung, everything bit-identical across repeats on a reused workspace)
+/// and the planner's resolution for every backend in
+/// `PALD_TEST_BACKEND` (default auto,scalar,simd — an explicit simd pin
+/// runs the portable fallback on non-AVX2 hosts, and auto falls back to
+/// scalar there, so nothing is ever skipped).
+#[test]
+fn backend_conformance_across_the_backend_matrix() {
+    assert!(!test_backends().is_empty());
+    for t in test_threads() {
+        check_backend_conformance(t);
     }
 }
 

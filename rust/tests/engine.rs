@@ -91,8 +91,8 @@ fn session_auto_serves_mixed_shapes() {
     }
 }
 
-/// All 18 variants (12 dense + 6 sparse at the full-graph fallback)
-/// agree with the naive reference through the *deprecated*
+/// All 21 variants (12 dense + 6 sparse at the full-graph fallback +
+/// 3 simd) agree with the naive reference through the *deprecated*
 /// `compute_cohesion_into` entry point with a shared workspace — the
 /// legacy-API twin of the registry-wide conformance battery
 /// (`tests/conformance.rs`), kept until the wrappers are removed.

@@ -282,6 +282,161 @@ fn prop_truncated_incremental_roundtrip_under_parallel_plans() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// SIMD mask-helper properties (DESIGN.md §13): the runtime-dispatched
+// lane kernels against an independently written scalar reference —
+// randomized slices from a hand-rolled SplitMix64 (no external
+// dependency), remainder lengths (n % 8 ≠ 0), duplicated-point ties,
+// both tie modes.
+
+use paldx::pald::simd::{count_cands_simd, count_focus_simd, update_cohesion_simd};
+
+/// SplitMix64 — deterministic, seedable, three lines.
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Distances on a coarse grid, so exact ties (the duplicated-point
+/// regime) occur constantly at small `levels` and rarely at large ones.
+fn grid_row(state: &mut u64, n: usize, levels: u64) -> Vec<f32> {
+    (0..n).map(|_| (splitmix(state) % levels) as f32 * 0.5 + 0.5).collect()
+}
+
+/// Independent focus-membership reference (re-stated here rather than
+/// imported, so the test checks the semantics and not the shared code).
+fn in_focus_ref(dxz: f32, dyz: f32, dxy: f32, tie: TieMode) -> bool {
+    match tie {
+        TieMode::Strict => dxz < dxy || dyz < dxy,
+        TieMode::Split => dxz <= dxy || dyz <= dxy,
+    }
+}
+
+/// ULP distance between two same-sign finite f32s.
+fn ulp_diff(a: f32, b: f32) -> u64 {
+    (i64::from(a.to_bits() as i32) - i64::from(b.to_bits() as i32)).unsigned_abs()
+}
+
+/// `count_focus_simd` is integer-exact against the scalar definition at
+/// every remainder length and under heavy ties: the lane reduction sums
+/// {0,1} masks, which no reduction order can change.
+#[test]
+fn prop_simd_count_focus_exact_on_remainders_and_ties() {
+    let mut st = 0x51D_C0DEu64;
+    for trial in 0..300u32 {
+        // 0..=66 sweeps every n % 8 residue, vector bodies + remainders.
+        let n = (splitmix(&mut st) % 67) as usize;
+        let levels = if trial % 2 == 0 { 4 } else { 1 << 20 };
+        for tie in [TieMode::Strict, TieMode::Split] {
+            let dx = grid_row(&mut st, n, levels);
+            let dy = grid_row(&mut st, n, levels);
+            let dxy = (splitmix(&mut st) % levels) as f32 * 0.5 + 0.5;
+            let want =
+                (0..n).filter(|&z| in_focus_ref(dx[z], dy[z], dxy, tie)).count() as u32;
+            assert_eq!(
+                count_focus_simd(&dx, &dy, dxy, tie),
+                want,
+                "trial={trial} n={n} levels={levels} {tie:?}"
+            );
+        }
+    }
+}
+
+/// `update_cohesion_simd` agrees with a branch-by-branch scalar
+/// re-implementation of the award rule within 1 ULP per element (it is
+/// elementwise — no reduction — so in practice the match is bitwise;
+/// the 1-ULP budget only allows for a mask-blended multiply rounding
+/// differently than the branchy add).
+#[test]
+fn prop_simd_update_cohesion_within_one_ulp_of_scalar() {
+    let mut st = 0xAB5_7ACEu64;
+    for trial in 0..300u32 {
+        let n = (splitmix(&mut st) % 67) as usize;
+        let levels = if trial % 2 == 0 { 3 } else { 1 << 16 };
+        for tie in [TieMode::Strict, TieMode::Split] {
+            let dx = grid_row(&mut st, n, levels);
+            let dy = grid_row(&mut st, n, levels);
+            let dxy = (splitmix(&mut st) % levels) as f32 * 0.5 + 0.5;
+            // Non-dyadic weight: 1/u for a plausible focus size.
+            let w = 1.0f32 / (1 + splitmix(&mut st) % 19) as f32;
+            let mut cx_ref = grid_row(&mut st, n, 8);
+            let mut cy_ref = grid_row(&mut st, n, 8);
+            let mut cx_simd = cx_ref.clone();
+            let mut cy_simd = cy_ref.clone();
+            for z in 0..n {
+                if !in_focus_ref(dx[z], dy[z], dxy, tie) {
+                    continue;
+                }
+                match tie {
+                    TieMode::Strict => {
+                        if dx[z] < dy[z] {
+                            cx_ref[z] += w;
+                        } else {
+                            cy_ref[z] += w;
+                        }
+                    }
+                    TieMode::Split => {
+                        if dx[z] < dy[z] {
+                            cx_ref[z] += w;
+                        } else if dy[z] < dx[z] {
+                            cy_ref[z] += w;
+                        } else {
+                            cx_ref[z] += 0.5 * w;
+                            cy_ref[z] += 0.5 * w;
+                        }
+                    }
+                }
+            }
+            update_cohesion_simd(&dx, &dy, dxy, w, &mut cx_simd, &mut cy_simd, tie);
+            for z in 0..n {
+                assert!(
+                    ulp_diff(cx_simd[z], cx_ref[z]) <= 1,
+                    "trial={trial} n={n} {tie:?} cx[{z}]: {} vs {}",
+                    cx_simd[z],
+                    cx_ref[z]
+                );
+                assert!(
+                    ulp_diff(cy_simd[z], cy_ref[z]) <= 1,
+                    "trial={trial} n={n} {tie:?} cy[{z}]: {} vs {}",
+                    cy_simd[z],
+                    cy_ref[z]
+                );
+            }
+        }
+    }
+}
+
+/// `count_cands_simd` (the gathered sparse counter) is integer-exact on
+/// arbitrary candidate subsets — duplicates allowed, every subset size
+/// residue mod 8, heavy ties, both tie modes.
+#[test]
+fn prop_simd_candidate_count_exact_on_subsets() {
+    let mut st = 0xCA4D_1DA7Eu64;
+    for trial in 0..300u32 {
+        let n = 1 + (splitmix(&mut st) % 80) as usize;
+        let k = (splitmix(&mut st) % 35) as usize;
+        let levels = if trial % 2 == 0 { 4 } else { 1 << 18 };
+        let dx = grid_row(&mut st, n, levels);
+        let dy = grid_row(&mut st, n, levels);
+        let cand: Vec<u32> = (0..k).map(|_| (splitmix(&mut st) % n as u64) as u32).collect();
+        for tie in [TieMode::Strict, TieMode::Split] {
+            let dxy = (splitmix(&mut st) % levels) as f32 * 0.5 + 0.5;
+            let want = cand
+                .iter()
+                .filter(|&&z| in_focus_ref(dx[z as usize], dy[z as usize], dxy, tie))
+                .count() as u32;
+            assert_eq!(
+                count_cands_simd(&dx, &dy, dxy, &cand, tie),
+                want,
+                "trial={trial} n={n} k={k} {tie:?}"
+            );
+        }
+    }
+}
+
 /// Degenerate and edge-case inputs.
 #[test]
 fn edge_cases() {

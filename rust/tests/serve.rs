@@ -315,6 +315,121 @@ fn garbage_and_oversized_frames_get_typed_errors_and_close() {
     handle.join();
 }
 
+/// Fuzz-shaped negative battery (ISSUE 8): ~1000 seeded byte-level
+/// mutation ways per valid frame — bit flips, byte overwrites,
+/// truncations, extensions (the length-prefix bytes are in range, so
+/// oversize/undersize rewrites happen constantly) — and the decoder
+/// must never panic: every outcome is a cleanly decoded frame, a clean
+/// EOF, or a typed [`PaldError::Protocol`].  This is the deterministic,
+/// always-on stand-in for a coverage-guided fuzzer (no external fuzz
+/// dependency; SplitMix64 seeds make any failure replayable).
+#[test]
+fn mutated_frames_never_panic_the_decoder() {
+    use paldx::core::Mat;
+    use paldx::serve::proto::{
+        decode_request, decode_response, encode_request, encode_response, read_frame,
+        ErrorCode, FrameRead, Request, Response,
+    };
+    use std::io::Cursor;
+
+    fn splitmix(state: &mut u64) -> u64 {
+        *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = *state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    let m = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+    let cfg = WireConfig { algorithm: "auto".into(), k: 3, ..WireConfig::default() };
+    // One exemplar per opcode, both directions of the wire.
+    let requests = vec![
+        encode_request(1, &Request::Compute { cfg: cfg.clone(), matrix: m.clone() }),
+        encode_request(
+            2,
+            &Request::ComputeBatch { cfg: cfg.clone(), matrices: vec![m.clone(), m.clone()] },
+        ),
+        encode_request(3, &Request::SessionOpen { cfg, seed: m.clone() }),
+        encode_request(4, &Request::SessionInsert { session: 9, row: vec![1.0, 2.0, 3.0] }),
+        encode_request(5, &Request::SessionRemove { session: 9, index: 1 }),
+        encode_request(6, &Request::SessionQuery { session: 9 }),
+        encode_request(7, &Request::SessionClose { session: 9 }),
+        encode_request(8, &Request::Stats),
+        encode_request(9, &Request::Shutdown),
+    ];
+    let responses = vec![
+        encode_response(1, &Response::Cohesion { matrix: m.clone() }),
+        encode_response(2, &Response::Batch { matrices: vec![m] }),
+        encode_response(3, &Response::SessionOpened { session: 5, n: 4 }),
+        encode_response(4, &Response::Updated { n: 5, index: 4 }),
+        encode_response(5, &Response::Closed),
+        encode_response(6, &Response::Stats { text: "paldx_jobs_total 1\n".into() }),
+        encode_response(7, &Response::ShuttingDown),
+        encode_response(
+            8,
+            &Response::Error { code: ErrorCode::Timeout, info: 9, detail: "late".into() },
+        ),
+    ];
+
+    // A small cap keeps mutated length prefixes from asking for big
+    // buffers; the oversize branch itself is exercised whenever the
+    // mutated prefix exceeds it.
+    const MAX_FRAME: usize = 1 << 16;
+    let mut st = 0x0F05_5E3Du64;
+    let (mut decoded, mut rejected) = (0u64, 0u64);
+    for (corpus, is_request) in [(&requests, true), (&responses, false)] {
+        for frame in corpus {
+            for way in 0..1000u32 {
+                let mut bytes = frame.clone();
+                for _ in 0..=(splitmix(&mut st) % 3) {
+                    match splitmix(&mut st) % 4 {
+                        0 if !bytes.is_empty() => {
+                            let at = (splitmix(&mut st) % bytes.len() as u64) as usize;
+                            bytes[at] ^= 1 << (splitmix(&mut st) % 8);
+                        }
+                        1 if !bytes.is_empty() => {
+                            let at = (splitmix(&mut st) % bytes.len() as u64) as usize;
+                            bytes[at] = splitmix(&mut st) as u8;
+                        }
+                        2 => {
+                            let keep = (splitmix(&mut st) % (bytes.len() as u64 + 1)) as usize;
+                            bytes.truncate(keep);
+                        }
+                        _ => {
+                            for _ in 0..=(splitmix(&mut st) % 16) {
+                                bytes.push(splitmix(&mut st) as u8);
+                            }
+                        }
+                    }
+                }
+                match read_frame(&mut Cursor::new(&bytes), MAX_FRAME) {
+                    Ok(FrameRead::Frame(raw)) => {
+                        let out = if is_request {
+                            decode_request(&raw).map(|_| ())
+                        } else {
+                            decode_response(&raw).map(|_| ())
+                        };
+                        match out {
+                            Ok(()) => decoded += 1,
+                            Err(PaldError::Protocol { .. }) => rejected += 1,
+                            Err(other) => {
+                                panic!("way {way}: non-protocol decode error {other:?}")
+                            }
+                        }
+                    }
+                    Ok(FrameRead::Eof) | Ok(FrameRead::Idle) => {}
+                    Err(PaldError::Protocol { .. }) => rejected += 1,
+                    Err(other) => panic!("way {way}: non-protocol read error {other:?}"),
+                }
+            }
+        }
+    }
+    // The battery must land on both sides of the contract, or the
+    // mutator has silently degenerated.
+    assert!(decoded > 0, "no mutation ever decoded cleanly — mutator too destructive");
+    assert!(rejected > 0, "no mutation was ever rejected — mutator too gentle");
+}
+
 /// Read one response frame off a raw socket and render its error detail.
 fn read_error_frame(s: &mut TcpStream) -> String {
     use paldx::serve::proto::{read_frame, FrameRead, Response};
