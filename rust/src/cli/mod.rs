@@ -12,8 +12,13 @@
 //! * `serve`     — run the `pald-serve` TCP server: admission control,
 //!   shape-coalesced batching, streaming sessions, graceful drain on
 //!   SIGINT/SIGTERM (DESIGN.md §12)
-//! * `loadgen`   — drive a running server with a mixed-shape workload and
-//!   report p50/p95/p99 latency (`BENCH_serve.json`)
+//! * `router`    — run the `pald-router` scale-out front-tier: shards
+//!   traffic across `pald-serve` backends with least-inflight balancing,
+//!   session affinity, circuit breakers, and an aggregated fleet scrape
+//!   (DESIGN.md §14)
+//! * `loadgen`   — drive a running server (or router) with a mixed-shape
+//!   workload and report p50/p95/p99 latency (`BENCH_serve.json`; with
+//!   `--report-distribution`, the per-backend split → `BENCH_router.json`)
 //! * `repro`     — regenerate a paper table/figure (`--exp fig3|...|all`)
 //! * `calibrate` — print this machine's calibrated model parameters
 //! * `info`      — kernel registry + artifact inventory
@@ -84,10 +89,24 @@ COMMANDS:
              batch window are coalesced — bit-identical to serving them alone;
              GET /metrics on the same port scrapes plaintext metrics;
              SIGINT/SIGTERM or an in-band SHUTDOWN frame drains gracefully)
+  router     --backends HOST:PORT,HOST:PORT,...   run the pald-router front-tier
+             [--addr HOST:PORT] [--probe-ms P] [--probe-timeout-ms T]
+             [--breaker-failures F] [--breaker-cooldown-ms C] [--retries R]
+             [--deadline-ms D]   speaks the same wire protocol as serve:
+             one-shots balance by least-inflight with transparent retries,
+             streaming sessions pin to one backend (a dead backend surfaces
+             as the typed BackendLost, never a silent replay); STATS-probe
+             health checks drive per-backend circuit breakers; GET /metrics
+             merges router counters with a relabeled per-backend fleet scrape
   loadgen    [--addr HOST:PORT] [--duration-ms T] [--concurrency C] [--rate R]
              [--mix name:n:k:w,...] [--alg A] [--deadline-ms D] [--seed S]
-             [--bench-dir DIR]   drive a running server: closed loop (default)
-             or open loop at R req/s; per-mix p50/p95/p99 -> BENCH_serve.json
+             [--retries R] [--report-distribution] [--bench-dir DIR]
+             drive a running server or router: closed loop (default) or open
+             loop at R req/s; per-mix p50/p95/p99 -> BENCH_serve.json
+             (--retries resubmits retriable sheds through the reconnecting
+             client and reports retried-then-succeeded separately;
+             --report-distribution scrapes the router's per-backend forwarded
+             counters before/after the run -> BENCH_router.json)
   repro      --exp fig3|fig4|table1|fig9|fig10|fig11|fig13|table2|peak|bounds|ablation|xla|all
              [--bench-dir DIR]  (measured experiments also emit BENCH_<exp>.json)
   calibrate                                         measure machine constants
@@ -118,6 +137,7 @@ pub fn run(raw: Vec<String>) -> anyhow::Result<()> {
         Some("convert") => cmd_convert(&args),
         Some("stream") => cmd_stream(&args),
         Some("serve") => cmd_serve(&args),
+        Some("router") => cmd_router(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("repro") => cmd_repro(&args),
         Some("calibrate") => cmd_calibrate(),
@@ -523,9 +543,56 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `paldx loadgen`: drive a running server with a mixed-shape workload —
-/// closed loop by default, open loop at `--rate` req/s — and publish
-/// per-mix p50/p95/p99 latency as `BENCH_serve.json`.
+/// `paldx router`: run the `pald-router` scale-out front-tier over a
+/// fleet of `pald-serve` backends until a drain is triggered
+/// (SIGINT/SIGTERM or an in-band `SHUTDOWN` frame), then flush the
+/// final merged scrape and exit 0 (DESIGN.md §14).
+fn cmd_router(args: &Args) -> anyhow::Result<()> {
+    use crate::router::{server::parse_backends, Router, RouterConfig};
+    use crate::serve::install_signal_handlers;
+
+    let spec = args
+        .get("backends")
+        .ok_or_else(|| anyhow::anyhow!("router requires --backends HOST:PORT,HOST:PORT,..."))?;
+    let d = RouterConfig::default();
+    let breaker_failures = args.get_u64("breaker-failures", d.breaker_failures as u64)?;
+    let cfg = RouterConfig {
+        addr: args.get_or("addr", &d.addr).to_string(),
+        backends: parse_backends(spec)?,
+        probe_interval_ms: args.get_u64("probe-ms", d.probe_interval_ms)?,
+        probe_timeout_ms: args.get_u64("probe-timeout-ms", d.probe_timeout_ms)?,
+        breaker_failures: u32::try_from(breaker_failures)?,
+        breaker_cooldown_ms: args.get_u64("breaker-cooldown-ms", d.breaker_cooldown_ms)?,
+        max_retries: u32::try_from(args.get_u64("retries", d.max_retries as u64)?)?,
+        default_deadline_ms: args.get_u64("deadline-ms", d.default_deadline_ms)?,
+        max_frame: d.max_frame,
+    };
+    let fleet = cfg.backends.join(", ");
+    install_signal_handlers();
+    let handle = Router::start(cfg)?;
+    println!(
+        "pald-router listening on {} -> [{fleet}] (frames + GET /metrics; \
+         SIGINT/SIGTERM drains)",
+        handle.addr()
+    );
+    // Block until something triggers the drain (signal, SHUTDOWN frame,
+    // or the handle); the acceptor folds the signal flag into the drain
+    // state within one tick.
+    while !handle.is_draining() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    eprintln!("pald-router: draining (in-flight relays complete, new work is shed retriable)");
+    let scrape = handle.join();
+    println!("{scrape}");
+    println!("pald-router: drained cleanly");
+    Ok(())
+}
+
+/// `paldx loadgen`: drive a running server (or router) with a
+/// mixed-shape workload — closed loop by default, open loop at
+/// `--rate` req/s — and publish per-mix p50/p95/p99 latency as
+/// `BENCH_serve.json` (`BENCH_router.json` with the per-backend
+/// distribution when `--report-distribution` is on).
 fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     use crate::serve::loadgen;
 
@@ -542,14 +609,33 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         algorithm: args.get_or("alg", "auto").to_string(),
         deadline_ms: u32::try_from(args.get_u64("deadline-ms", 0)?)?,
         seed: args.get_u64("seed", 42)?,
+        retries: u32::try_from(args.get_u64("retries", 0)?)?,
+        report_distribution: args.flag("report-distribution"),
     };
     let report = loadgen::run(&opts)?;
     let (sent, ok, shed, timeouts, errors) = report.totals();
     println!(
-        "loadgen [{}]: {sent} sent in {:.2}s — {ok} ok ({:.1} rps), {shed} shed, \
-         {timeouts} timed out, {errors} errors, {} protocol errors",
-        report.mode, report.elapsed_s, report.rps, report.protocol_errors
+        "loadgen [{}]: {sent} sent in {:.2}s — {ok} ok ({:.1} rps, {} retried then \
+         succeeded), {shed} shed, {timeouts} timed out, {errors} errors, {} protocol errors",
+        report.mode,
+        report.elapsed_s,
+        report.rps,
+        report.retried_ok_total(),
+        report.protocol_errors
     );
+    if opts.report_distribution {
+        if report.backends.is_empty() {
+            eprintln!(
+                "loadgen: --report-distribution saw no paldx_router_backend_forwarded_total \
+                 series — is {} a pald-router?",
+                opts.addr
+            );
+        } else {
+            for (addr, forwarded) in &report.backends {
+                println!("  backend {addr}: {forwarded} forwarded");
+            }
+        }
+    }
     let mut table = crate::bench::Table::new(
         "loadgen — per-mix latency",
         &["mix", "n", "k", "sent", "ok", "shed", "p50", "p95", "p99", "max"],
@@ -570,7 +656,9 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     }
     table.print();
     let bench_dir = PathBuf::from(args.get_or("bench-dir", "."));
-    let path = bench_dir.join("BENCH_serve.json");
+    let bench_name =
+        if opts.report_distribution { "BENCH_router.json" } else { "BENCH_serve.json" };
+    let path = bench_dir.join(bench_name);
     match std::fs::write(&path, report.to_json().render() + "\n") {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),

@@ -203,6 +203,51 @@ impl MetricsRegistry {
     }
 }
 
+/// Inject a `{key="value"}` label pair into every sample line of a
+/// plaintext scrape, merging with labels already present — how the
+/// router's aggregated fleet scrape attributes each backend's metrics
+/// to its shard (DESIGN.md §14).  Comment lines (`# TYPE …`) and lines
+/// that don't parse as `name[{labels}] value` pass through unchanged;
+/// `value` is escaped per the Prometheus text exposition rules.
+pub fn relabel_scrape(scrape: &str, key: &str, value: &str) -> String {
+    let escaped: String = value
+        .chars()
+        .flat_map(|c| match c {
+            '\\' => vec!['\\', '\\'],
+            '"' => vec!['\\', '"'],
+            '\n' => vec!['\\', 'n'],
+            c => vec![c],
+        })
+        .collect();
+    let pair = format!("{key}=\"{escaped}\"");
+    let mut out = String::with_capacity(scrape.len() + scrape.lines().count() * pair.len());
+    for line in scrape.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            out.push_str(line);
+            out.push('\n');
+            continue;
+        }
+        // `name{a="b"} v` → splice into the existing label set;
+        // `name v`       → insert a fresh one before the space.
+        if let Some(brace) = line.find('{') {
+            out.push_str(&line[..brace + 1]);
+            out.push_str(&pair);
+            out.push(',');
+            out.push_str(&line[brace + 1..]);
+        } else if let Some(space) = line.find(' ') {
+            out.push_str(&line[..space]);
+            out.push('{');
+            out.push_str(&pair);
+            out.push('}');
+            out.push_str(&line[space..]);
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,5 +340,34 @@ mod tests {
         assert!(text.contains("paldx_jobs_total{algorithm=\"opt-pairwise\"} 1"), "{text}");
         assert!(text.contains("paldx_jobs_total{algorithm=\"knn-opt-pairwise\"} 1"), "{text}");
         assert!(text.contains("paldx_work_units_total"), "{text}");
+    }
+
+    #[test]
+    fn relabel_injects_and_merges_labels() {
+        let scrape = "# TYPE paldx_jobs_total counter\n\
+                      paldx_jobs_total 3\n\
+                      paldx_jobs_total{algorithm=\"hybrid\"} 2\n\
+                      \n\
+                      paldx_pool_bytes 4096\n";
+        let out = relabel_scrape(scrape, "backend", "127.0.0.1:7465");
+        assert!(out.contains("# TYPE paldx_jobs_total counter\n"), "{out}");
+        assert!(out.contains("paldx_jobs_total{backend=\"127.0.0.1:7465\"} 3\n"), "{out}");
+        assert!(
+            out.contains("paldx_jobs_total{backend=\"127.0.0.1:7465\",algorithm=\"hybrid\"} 2\n"),
+            "{out}"
+        );
+        assert!(out.contains("paldx_pool_bytes{backend=\"127.0.0.1:7465\"} 4096\n"), "{out}");
+        // Label values are escaped per the exposition format.
+        let out = relabel_scrape("m 1\n", "b", "quo\"te\\x");
+        assert!(out.contains("m{b=\"quo\\\"te\\\\x\"} 1\n"), "{out}");
+        // Relabeling a real registry scrape keeps every sample line.
+        let r = MetricsRegistry::new();
+        r.record(job(64, 0, 0.1));
+        let plain = r.scrape();
+        let tagged = relabel_scrape(&plain, "backend", "a:1");
+        assert_eq!(plain.lines().count(), tagged.lines().count());
+        for line in tagged.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.contains("backend=\"a:1\""), "{line}");
+        }
     }
 }

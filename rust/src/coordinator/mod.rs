@@ -10,7 +10,7 @@
 
 mod metrics;
 
-pub use metrics::{JobMetrics, MetricsRegistry};
+pub use metrics::{relabel_scrape, JobMetrics, MetricsRegistry};
 
 use std::path::PathBuf;
 

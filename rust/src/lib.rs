@@ -51,7 +51,17 @@
 //!   serving them individually), wire-addressable streaming incremental
 //!   sessions, graceful drain on SIGINT/SIGTERM, and a load generator
 //!   (`paldx loadgen`) reporting p50/p95/p99 latency (DESIGN.md §12),
-//!   see [`serve`].
+//!   see [`serve`];
+//! * a **scale-out front-tier** (`paldx router`): shards traffic across
+//!   `pald-serve` backends over the same wire protocol — least-inflight
+//!   balancing for idempotent one-shots with transparent cross-backend
+//!   retries, session-id affinity pinning each streaming session to
+//!   exactly one shard (a dead shard surfaces as the typed
+//!   `BackendLost`, never a silent replay), STATS-probe health checks
+//!   driving a consecutive-failure circuit breaker with half-open
+//!   recovery, and a `GET /metrics` scrape merging router counters with
+//!   a relabeled per-backend fleet scrape (DESIGN.md §14), see
+//!   [`router`].
 //!
 //! ## Quickstart
 //!
@@ -141,6 +151,7 @@ pub mod io;
 pub mod pald;
 pub mod parallel;
 pub mod repro;
+pub mod router;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

@@ -128,6 +128,26 @@ pub enum PaldError {
         /// The server's rendering of the underlying error.
         detail: String,
     },
+    /// The backend holding a streaming session died (or its circuit
+    /// breaker opened) — the session's `IncrementalPald` state lived on
+    /// exactly one shard and is gone.  **Non-retriable**: replaying
+    /// stream updates elsewhere would silently diverge from the state
+    /// the client believes it built, so the router surfaces the loss
+    /// instead (DESIGN.md §14).
+    BackendLost {
+        /// Address of the shard that was lost.
+        backend: String,
+    },
+    /// A reconnecting client (or the router's relay) exhausted its
+    /// retry budget without a success — every attempt ended in a
+    /// retriable shed or a transport failure.  Non-retriable by
+    /// construction: the budget *was* the retry policy.
+    RetriesExhausted {
+        /// Attempts made (first try included).
+        attempts: u32,
+        /// Rendering of the last failure observed.
+        last: String,
+    },
 }
 
 impl PaldError {
@@ -251,6 +271,16 @@ impl fmt::Display for PaldError {
             PaldError::Remote { detail } => {
                 write!(f, "server rejected the request: {detail}")
             }
+            PaldError::BackendLost { backend } => {
+                write!(
+                    f,
+                    "backend {backend} holding this streaming session was lost; \
+                     the session state is gone (re-open on a healthy shard)"
+                )
+            }
+            PaldError::RetriesExhausted { attempts, last } => {
+                write!(f, "retry budget exhausted after {attempts} attempt(s); last: {last}")
+            }
         }
     }
 }
@@ -293,6 +323,14 @@ mod tests {
         assert!(PaldError::Overloaded { queued: 8, cap: 8 }.is_retriable());
         assert!(PaldError::Draining.is_retriable());
         assert!(!PaldError::Timeout { deadline_ms: 250 }.is_retriable());
+        assert!(!PaldError::BackendLost { backend: "127.0.0.1:7465".into() }.is_retriable());
+        assert!(
+            !PaldError::RetriesExhausted { attempts: 4, last: "draining".into() }.is_retriable()
+        );
+        let s = PaldError::BackendLost { backend: "10.0.0.2:7465".into() }.to_string();
+        assert!(s.contains("10.0.0.2:7465") && s.contains("session"), "{s}");
+        let s = PaldError::RetriesExhausted { attempts: 4, last: "overloaded".into() }.to_string();
+        assert!(s.contains('4') && s.contains("overloaded"), "{s}");
         assert!(!PaldError::protocol("bad frame").is_retriable());
         assert!(!PaldError::Remote { detail: "asymmetric".into() }.is_retriable());
         let s = PaldError::Overloaded { queued: 8, cap: 8 }.to_string();

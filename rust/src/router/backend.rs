@@ -1,0 +1,410 @@
+//! Per-backend state for the router: a circuit breaker, a pooled set of
+//! reconnecting connections, liveness, and per-shard counters.
+//!
+//! The breaker is the router's failure detector: `F` *consecutive*
+//! failures (transport errors or failed health probes) open it, a
+//! cooldown later it admits exactly one half-open trial, and the
+//! trial's outcome decides between closing again and re-opening.  Sheds
+//! (`Overloaded`/`Draining` error frames) are **successes** to the
+//! breaker — the backend answered, it is alive, it is merely busy — so
+//! overload never masquerades as death and never strands streaming
+//! sessions with a spurious `BackendLost`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::serve::client::{ReconnectClient, RetryPolicy};
+
+/// Idle connections kept per backend; extras are dropped at check-in.
+const POOL_CAP: usize = 16;
+
+/// Circuit-breaker phase (DESIGN.md §14).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: requests flow freely.
+    Closed,
+    /// Tripped: requests are refused until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: exactly one trial request is admitted; its
+    /// outcome decides between `Closed` and `Open`.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Numeric encoding for the metrics scrape (0 closed, 1 open,
+    /// 2 half-open).
+    pub fn as_gauge(self) -> u8 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at: Option<Instant>,
+    /// The single half-open trial currently outstanding, if any.
+    trial_inflight: bool,
+}
+
+/// Consecutive-failure circuit breaker with half-open recovery.
+///
+/// `Closed --(threshold consecutive failures)--> Open --(cooldown)-->
+/// HalfOpen --(trial ok)--> Closed | --(trial fails)--> Open`.
+pub struct Breaker {
+    inner: Mutex<BreakerInner>,
+    threshold: u32,
+    cooldown: Duration,
+    transitions: AtomicU64,
+}
+
+impl Breaker {
+    /// Breaker opening after `threshold` consecutive failures, with
+    /// `cooldown` between `Open` and the half-open trial.
+    pub fn new(threshold: u32, cooldown: Duration) -> Breaker {
+        Breaker {
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at: None,
+                trial_inflight: false,
+            }),
+            threshold: threshold.max(1),
+            cooldown,
+        transitions: AtomicU64::new(0),
+        }
+    }
+
+    /// Current phase (for the scrape and for session-op gating).
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().expect("breaker lock").state
+    }
+
+    /// Total state transitions (a cheap "how flappy is this shard"
+    /// signal on the scrape).
+    pub fn transitions(&self) -> u64 {
+        self.transitions.load(Ordering::Relaxed)
+    }
+
+    /// Non-consuming peek: would [`Breaker::try_begin`] admit a request
+    /// right now?  The balancer uses this to shortlist candidates
+    /// without burning the half-open trial slot on backends it will not
+    /// pick.
+    pub fn can_accept(&self) -> bool {
+        let g = self.inner.lock().expect("breaker lock");
+        match g.state {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => !g.trial_inflight,
+            BreakerState::Open => {
+                g.opened_at.is_none_or(|t| t.elapsed() >= self.cooldown)
+            }
+        }
+    }
+
+    /// Try to begin a request (or health probe) against this backend.
+    /// In `Open` state the cooldown gate doubles as the `Open ->
+    /// HalfOpen` transition; in `HalfOpen` only one trial is admitted
+    /// at a time.  Every `true` must be paired with exactly one
+    /// [`Breaker::note_success`] or [`Breaker::note_failure`].
+    pub fn try_begin(&self) -> bool {
+        let mut g = self.inner.lock().expect("breaker lock");
+        match g.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                let cooled = g.opened_at.is_none_or(|t| t.elapsed() >= self.cooldown);
+                if cooled {
+                    g.state = BreakerState::HalfOpen;
+                    g.trial_inflight = true;
+                    self.transitions.fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                if g.trial_inflight {
+                    false
+                } else {
+                    g.trial_inflight = true;
+                    true
+                }
+            }
+        }
+    }
+
+    /// The attempt reached the backend and got an answer (any answer —
+    /// including a retriable shed: a shedding backend is alive).
+    pub fn note_success(&self) {
+        let mut g = self.inner.lock().expect("breaker lock");
+        g.consecutive_failures = 0;
+        g.trial_inflight = false;
+        if g.state != BreakerState::Closed {
+            g.state = BreakerState::Closed;
+            g.opened_at = None;
+            self.transitions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The attempt's outcome says nothing about shard health (the
+    /// *client's* deadline lapsed while waiting — an alive-but-busy
+    /// shard would look the same).  Releases the half-open trial slot
+    /// without moving the failure count in either direction, so client
+    /// deadlines can never trip a breaker and strand streaming sessions
+    /// on a healthy shard.
+    pub fn note_neutral(&self) {
+        self.inner.lock().expect("breaker lock").trial_inflight = false;
+    }
+
+    /// The attempt failed at the transport layer (dial refused,
+    /// connection died, frame truncated).
+    pub fn note_failure(&self) {
+        let mut g = self.inner.lock().expect("breaker lock");
+        g.consecutive_failures = g.consecutive_failures.saturating_add(1);
+        g.trial_inflight = false;
+        let trip = match g.state {
+            // A failed half-open trial re-opens immediately.
+            BreakerState::HalfOpen => true,
+            BreakerState::Closed => g.consecutive_failures >= self.threshold,
+            BreakerState::Open => false,
+        };
+        if trip {
+            g.state = BreakerState::Open;
+            g.opened_at = Some(Instant::now());
+            self.transitions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One `pald-serve` shard as the router sees it.
+pub struct Backend {
+    /// `host:port` — the `backend="…"` label on every per-shard metric.
+    pub name: String,
+    /// The shard's failure detector.
+    pub breaker: Breaker,
+    /// Idle pooled connections (checked out per relay attempt).
+    idle: Mutex<Vec<ReconnectClient>>,
+    /// Relay attempts currently outstanding against this shard.
+    inflight: AtomicUsize,
+    /// Relay attempts dispatched here (the loadgen distribution signal).
+    forwarded: AtomicU64,
+    /// Dispatches that were retries of a request first tried elsewhere.
+    retries: AtomicU64,
+    /// Transport-level failures observed (relay + probes).
+    failures: AtomicU64,
+    /// Streaming sessions currently pinned to this shard.
+    sessions: AtomicUsize,
+    /// Probe-driven liveness (also set by relay successes).
+    up: AtomicBool,
+    /// The shard's most recent metrics scrape, cached by the health
+    /// loop for fleet aggregation.
+    last_scrape: Mutex<Option<String>>,
+}
+
+impl Backend {
+    /// Backend for `addr` with a breaker tripping after `threshold`
+    /// consecutive failures and cooling down for `cooldown`.
+    pub fn new(addr: impl Into<String>, threshold: u32, cooldown: Duration) -> Backend {
+        Backend {
+            name: addr.into(),
+            breaker: Breaker::new(threshold, cooldown),
+            idle: Mutex::new(Vec::new()),
+            inflight: AtomicUsize::new(0),
+            forwarded: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            sessions: AtomicUsize::new(0),
+            up: AtomicBool::new(false),
+            last_scrape: Mutex::new(None),
+        }
+    }
+
+    /// Check out a connection (pooled, or a fresh lazy one).  The relay
+    /// performs its own cross-backend retries, so pooled clients carry
+    /// a zero-retry policy — [`ReconnectClient::request_once`] is the
+    /// only call made on them.
+    pub fn checkout(&self) -> ReconnectClient {
+        if let Some(c) = self.idle.lock().expect("pool lock").pop() {
+            return c;
+        }
+        ReconnectClient::new(&self.name, RetryPolicy { max_retries: 0, ..Default::default() })
+    }
+
+    /// Return a connection to the pool.  Disconnected clients are
+    /// dropped (the next checkout re-dials lazily); beyond
+    /// [`POOL_CAP`] idle connections the extra is closed.
+    pub fn checkin(&self, c: ReconnectClient) {
+        if !c.is_connected() {
+            return;
+        }
+        let mut pool = self.idle.lock().expect("pool lock");
+        if pool.len() < POOL_CAP {
+            pool.push(c);
+        }
+    }
+
+    /// Drop every idle pooled connection (called when the breaker
+    /// opens: they all point at a dead shard).
+    pub fn drain_pool(&self) {
+        self.idle.lock().expect("pool lock").clear();
+    }
+
+    /// Relay attempts currently outstanding (the balancer's
+    /// least-inflight key).
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Begin a relay attempt (pairs with [`Backend::end_attempt`]).
+    /// `retry` marks a dispatch that is a retry of a request first
+    /// tried on another shard.
+    pub fn begin_attempt(&self, retry: bool) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        self.forwarded.fetch_add(1, Ordering::Relaxed);
+        if retry {
+            self.retries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// End a relay attempt started by [`Backend::begin_attempt`].
+    pub fn end_attempt(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// The attempt got an answer: breaker success + liveness.
+    pub fn note_success(&self) {
+        self.breaker.note_success();
+        self.up.store(true, Ordering::Relaxed);
+    }
+
+    /// The attempt failed at the transport layer: breaker failure,
+    /// failure counter, liveness down, and the idle pool flushed (its
+    /// connections point at the same dead socket).
+    pub fn note_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        self.breaker.note_failure();
+        self.up.store(false, Ordering::Relaxed);
+        self.drain_pool();
+    }
+
+    /// Probe-driven liveness.
+    pub fn is_up(&self) -> bool {
+        self.up.load(Ordering::Relaxed)
+    }
+
+    /// Cache the shard's scrape (health loop, on every successful
+    /// probe).
+    pub fn set_scrape(&self, text: String) {
+        *self.last_scrape.lock().expect("scrape lock") = Some(text);
+    }
+
+    /// The most recent cached scrape, if any probe has succeeded yet.
+    pub fn last_scrape(&self) -> Option<String> {
+        self.last_scrape.lock().expect("scrape lock").clone()
+    }
+
+    /// Sessions pinned here (the session balancer's key).
+    pub fn sessions(&self) -> usize {
+        self.sessions.load(Ordering::Relaxed)
+    }
+
+    /// A session was pinned to this shard.
+    pub fn session_opened(&self) {
+        self.sessions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A session pinned here ended (closed, lost, or reaped).
+    pub fn session_closed(&self) {
+        // Saturating: a concurrent loss + close must not underflow.
+        let _ = self.sessions.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(1))
+        });
+    }
+
+    /// Counter snapshot for the scrape:
+    /// `(forwarded, retries, failures)`.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.forwarded.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.failures.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breaker_walks_the_state_machine() {
+        let b = Breaker::new(3, Duration::from_millis(30));
+        assert_eq!(b.state(), BreakerState::Closed);
+        // Two failures stay under the threshold.
+        b.note_failure();
+        b.note_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.try_begin());
+        // A success resets the consecutive count.
+        b.note_success();
+        b.note_failure();
+        b.note_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // The third consecutive failure trips it.
+        b.note_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.try_begin(), "open breaker must refuse before cooldown");
+        // After the cooldown exactly one trial is admitted.
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(b.can_accept());
+        assert!(b.try_begin());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.try_begin(), "only one half-open trial at a time");
+        // Failed trial: straight back to Open.
+        b.note_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        // Recovered trial: closed again.
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(b.try_begin());
+        b.note_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.transitions() >= 4);
+    }
+
+    #[test]
+    fn backend_counters_and_session_gauge() {
+        let b = Backend::new("127.0.0.1:9", 3, Duration::from_millis(10));
+        assert!(!b.is_up());
+        b.begin_attempt(false);
+        assert_eq!(b.inflight(), 1);
+        b.note_success();
+        b.end_attempt();
+        assert!(b.is_up());
+        b.begin_attempt(true);
+        b.note_failure();
+        b.end_attempt();
+        assert!(!b.is_up());
+        assert_eq!(b.counters(), (2, 1, 1));
+        b.session_opened();
+        b.session_opened();
+        b.session_closed();
+        assert_eq!(b.sessions(), 1);
+        // Underflow-proof: a double close stays at zero.
+        b.session_closed();
+        b.session_closed();
+        assert_eq!(b.sessions(), 0);
+    }
+
+    #[test]
+    fn pool_drops_disconnected_and_caps_idle() {
+        let b = Backend::new("127.0.0.1:9", 3, Duration::from_millis(10));
+        // A never-connected client is not pooled.
+        let c = b.checkout();
+        assert!(!c.is_connected());
+        b.checkin(c);
+        assert!(b.idle.lock().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,203 @@
+//! Placement decisions: which backend gets a request.
+//!
+//! One-shot computes are stateless and idempotent, so they go wherever
+//! the load is lightest: the admitting backend with the fewest relay
+//! attempts in flight (ties broken by index, so placement is
+//! deterministic under equal load).  Streaming sessions are the
+//! opposite — an `IncrementalPald` lives on exactly one shard — so a
+//! session is *pinned* at open time (to the backend with the fewest
+//! sessions) and every later frame for it follows the pin via
+//! [`Affinity`], which also owns the router-side session-id namespace.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::backend::Backend;
+
+/// Pick the backend for a one-shot compute: least-inflight among those
+/// whose breaker admits traffic, skipping `exclude` (the shard a
+/// previous attempt just failed on) unless it is the only candidate.
+/// Consumes the winner's breaker admission
+/// ([`super::backend::Breaker::try_begin`]) — the caller must pair the
+/// pick with a success/failure note.  `None` when no backend admits.
+pub fn pick_for_compute(backends: &[Arc<Backend>], exclude: Option<usize>) -> Option<usize> {
+    let ranked = |skip: Option<usize>| {
+        let mut c: Vec<usize> = (0..backends.len())
+            .filter(|&i| Some(i) != skip && backends[i].breaker.can_accept())
+            .collect();
+        c.sort_by_key(|&i| (backends[i].inflight(), i));
+        c
+    };
+    let mut candidates = ranked(exclude);
+    if candidates.is_empty() {
+        // Every other shard refuses; the just-failed one may admit
+        // (e.g. its breaker allows a half-open trial) — better one
+        // long-shot attempt than none.
+        candidates = ranked(None);
+    }
+    // can_accept is a peek: another thread may burn the half-open
+    // trial slot between the peek and the claim, so walk the ranking
+    // until a claim sticks.
+    candidates.into_iter().find(|&i| backends[i].breaker.try_begin())
+}
+
+/// Pick the backend to pin a new streaming session to: fewest pinned
+/// sessions among admitting backends (sessions are long-lived, so
+/// instantaneous inflight is the wrong key).  Consumes the winner's
+/// breaker admission, like [`pick_for_compute`].
+pub fn pick_for_session(backends: &[Arc<Backend>], exclude: Option<usize>) -> Option<usize> {
+    let mut c: Vec<usize> = (0..backends.len())
+        .filter(|&i| Some(i) != exclude && backends[i].breaker.can_accept())
+        .collect();
+    if c.is_empty() && exclude.is_some() {
+        c = (0..backends.len()).filter(|&i| backends[i].breaker.can_accept()).collect();
+    }
+    c.sort_by_key(|&i| (backends[i].sessions(), i));
+    c.into_iter().find(|&i| backends[i].breaker.try_begin())
+}
+
+/// Where a router session id points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pin {
+    /// Index into the router's backend list.
+    pub backend: usize,
+    /// The session id *on that backend* (backends number their own
+    /// sessions; the router translates on every frame).
+    pub backend_session: u64,
+}
+
+/// The session-affinity table: router session id → [`Pin`].
+///
+/// The router hands clients ids from its own namespace so ids stay
+/// unique across the fleet (two backends will both hand out session 1).
+#[derive(Default)]
+pub struct Affinity {
+    map: Mutex<HashMap<u64, Pin>>,
+    next: AtomicU64,
+}
+
+impl Affinity {
+    /// Empty table.
+    pub fn new() -> Affinity {
+        Affinity { map: Mutex::new(HashMap::new()), next: AtomicU64::new(1) }
+    }
+
+    /// Pin a freshly opened backend session; returns the router-side id
+    /// to hand to the client.
+    pub fn pin(&self, backend: usize, backend_session: u64) -> u64 {
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.map
+            .lock()
+            .expect("affinity lock")
+            .insert(id, Pin { backend, backend_session });
+        id
+    }
+
+    /// Look up a router session id.
+    pub fn get(&self, id: u64) -> Option<Pin> {
+        self.map.lock().expect("affinity lock").get(&id).copied()
+    }
+
+    /// Drop a pin (session closed, or its backend died).  Returns the
+    /// pin if it was still present — the single point that makes
+    /// loss/close races idempotent: whoever removes it does the
+    /// bookkeeping, everyone else sees `None`.
+    pub fn unpin(&self, id: u64) -> Option<Pin> {
+        self.map.lock().expect("affinity lock").remove(&id)
+    }
+
+    /// Live pinned sessions.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("affinity lock").len()
+    }
+
+    /// Is the table empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every pin pointing at `backend`, returning how many were
+    /// dropped (used when a shard is declared dead: its sessions are
+    /// gone with it).
+    pub fn unpin_backend(&self, backend: usize) -> usize {
+        let mut map = self.map.lock().expect("affinity lock");
+        let before = map.len();
+        map.retain(|_, pin| pin.backend != backend);
+        before - map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn fleet(n: usize) -> Vec<Arc<Backend>> {
+        (0..n)
+            .map(|i| Arc::new(Backend::new(format!("b{i}:1"), 3, Duration::from_millis(10_000))))
+            .collect()
+    }
+
+    #[test]
+    fn compute_pick_prefers_least_inflight_and_skips_open_breakers() {
+        let b = fleet(3);
+        b[0].begin_attempt(false);
+        b[0].begin_attempt(false);
+        b[1].begin_attempt(false);
+        // Least inflight is b[2].
+        assert_eq!(pick_for_compute(&b, None), Some(2));
+        // Trip b[2]'s breaker: the pick falls to b[1].
+        for _ in 0..3 {
+            b[2].note_failure();
+        }
+        assert_eq!(pick_for_compute(&b, None), Some(1));
+        // Excluding b[1] (a failed attempt there) falls to b[0].
+        assert_eq!(pick_for_compute(&b, Some(1)), Some(0));
+        // All breakers open: no pick.
+        for i in 0..2 {
+            for _ in 0..3 {
+                b[i].note_failure();
+            }
+        }
+        assert_eq!(pick_for_compute(&b, None), None);
+    }
+
+    #[test]
+    fn excluded_backend_is_last_resort_not_never() {
+        let b = fleet(1);
+        assert_eq!(pick_for_compute(&b, Some(0)), Some(0));
+    }
+
+    #[test]
+    fn session_pick_balances_by_pinned_sessions() {
+        let b = fleet(2);
+        b[0].session_opened();
+        b[0].session_opened();
+        b[1].session_opened();
+        // Inflight load must not sway session placement.
+        b[1].begin_attempt(false);
+        b[1].begin_attempt(false);
+        b[1].begin_attempt(false);
+        assert_eq!(pick_for_session(&b, None), Some(1));
+    }
+
+    #[test]
+    fn affinity_pins_resolve_and_unpin_idempotently() {
+        let a = Affinity::new();
+        let r1 = a.pin(0, 77);
+        let r2 = a.pin(1, 77);
+        assert_ne!(r1, r2, "router ids are unique even when backend ids collide");
+        assert_eq!(a.get(r1), Some(Pin { backend: 0, backend_session: 77 }));
+        assert_eq!(a.len(), 2);
+        assert!(a.unpin(r1).is_some());
+        assert!(a.unpin(r1).is_none(), "second unpin sees the pin already gone");
+        assert_eq!(a.get(r1), None);
+        // Backend-wide drop.
+        let r3 = a.pin(1, 78);
+        assert_eq!(a.unpin_backend(1), 2);
+        assert_eq!(a.get(r2), None);
+        assert_eq!(a.get(r3), None);
+        assert!(a.is_empty());
+    }
+}

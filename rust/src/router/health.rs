@@ -1,0 +1,105 @@
+//! The router's health loop: periodic STATS probes against every
+//! backend.
+//!
+//! Each probe is a cheap `STATS` request on a dedicated probe
+//! connection, bounded by its own deadline so a hung shard cannot stall
+//! the loop.  Probes feed the breaker exactly like relay attempts do —
+//! which is what makes recovery *probe-driven*: once an open breaker's
+//! cooldown elapses, the next probe is admitted as the half-open trial
+//! and a restarted backend closes the breaker again without waiting for
+//! client traffic to risk itself.  Successful probes also cache the
+//! shard's scrape text for the router's aggregated fleet scrape.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::serve::admission::Deadline;
+use crate::serve::client::{ReconnectClient, RetryPolicy};
+use crate::serve::proto::{Request, Response};
+
+use super::backend::Backend;
+
+/// Probe cadence and patience.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// Sleep between probe rounds.
+    pub interval: Duration,
+    /// Per-probe deadline in milliseconds.
+    pub timeout_ms: u64,
+}
+
+/// Probe every backend once.  Split out of [`health_loop`] so tests can
+/// drive rounds deterministically.
+pub fn probe_round(backends: &[Arc<Backend>], probes: &mut [ReconnectClient], timeout_ms: u64) {
+    for (b, probe) in backends.iter().zip(probes.iter_mut()) {
+        // The try_begin gate makes the probe the half-open trial when
+        // the breaker is recovering, and skips shards still cooling
+        // down.
+        if !b.breaker.try_begin() {
+            continue;
+        }
+        let deadline = Deadline::in_ms(timeout_ms.max(1));
+        match probe.request_once(&Request::Stats, Some(&deadline)) {
+            Ok(Response::Stats { text }) => {
+                b.set_scrape(text);
+                b.note_success();
+            }
+            // Any error frame still proves the shard is alive and
+            // speaking the protocol (e.g. Draining while it shuts
+            // down); liveness follows the breaker's view.
+            Ok(_) => b.note_success(),
+            Err(_) => b.note_failure(),
+        }
+    }
+}
+
+/// Run probe rounds until `stop` is set.  Each backend gets its own
+/// probe connection, kept apart from the relay pool so probes never
+/// compete with client traffic for a pooled socket.
+pub fn health_loop(backends: Vec<Arc<Backend>>, stop: Arc<AtomicBool>, cfg: HealthConfig) {
+    let mut probes: Vec<ReconnectClient> = backends
+        .iter()
+        .map(|b| {
+            ReconnectClient::new(&b.name, RetryPolicy { max_retries: 0, ..Default::default() })
+        })
+        .collect();
+    while !stop.load(Ordering::Relaxed) {
+        probe_round(&backends, &mut probes, cfg.timeout_ms);
+        // Sleep in small slices so shutdown stays prompt even with a
+        // long probe interval.
+        let mut left = cfg.interval;
+        while !left.is_zero() && !stop.load(Ordering::Relaxed) {
+            let step = left.min(Duration::from_millis(50));
+            std::thread::sleep(step);
+            left -= step;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::backend::BreakerState;
+
+    #[test]
+    fn failed_probes_trip_the_breaker_and_mark_down() {
+        // Nothing listens on port 1: every probe is a transport failure.
+        let backends =
+            vec![Arc::new(Backend::new("127.0.0.1:1", 2, Duration::from_millis(10_000)))];
+        let mut probes = vec![ReconnectClient::new(
+            "127.0.0.1:1",
+            RetryPolicy { max_retries: 0, ..Default::default() },
+        )];
+        probe_round(&backends, &mut probes, 200);
+        assert!(!backends[0].is_up());
+        assert_eq!(backends[0].breaker.state(), BreakerState::Closed);
+        probe_round(&backends, &mut probes, 200);
+        // Threshold 2: the breaker is open and further rounds are
+        // skipped while it cools down (counters stop moving).
+        assert_eq!(backends[0].breaker.state(), BreakerState::Open);
+        let before = backends[0].counters();
+        probe_round(&backends, &mut probes, 200);
+        assert_eq!(backends[0].counters(), before);
+    }
+}

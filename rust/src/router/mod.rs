@@ -1,0 +1,49 @@
+//! `pald-router`: the scale-out front-tier that shards traffic across
+//! `pald-serve` backends (DESIGN.md §14).
+//!
+//! The paper's shared-memory speedups stop at one process; PaLD's
+//! communication-free decomposition means independent computations need
+//! no cross-shard traffic, so a thin routing tier scales throughput
+//! near-linearly across processes.  The wire protocol was built for
+//! this (`request_id` correlation, retriable `Overloaded`/`Draining`
+//! sheds) — the router speaks it **unchanged** to clients, so every
+//! existing client works against a fleet without modification.
+//!
+//! * [`backend`] — per-backend state: a pooled reconnecting connection
+//!   set, a consecutive-failure circuit breaker with half-open
+//!   recovery ([`Breaker`]), liveness, and per-shard counters.
+//! * [`health`] — the STATS-probe health loop: periodic probes drive
+//!   the breaker (open on repeated failure, half-open trial after the
+//!   cooldown, close on success) and cache each backend's scrape for
+//!   fleet aggregation.
+//! * [`balancer`] — placement: one-shot computes go to the
+//!   least-inflight admitting backend (so shape-coalescing backends
+//!   still fill batches); streaming sessions are pinned to one backend
+//!   by session-id affinity ([`Affinity`]) — an `IncrementalPald`
+//!   lives on exactly one shard.
+//! * [`relay`] — the relay layer: remaps request and session ids,
+//!   propagates the *remaining* deadline budget to each attempt, and
+//!   on retriable sheds or backend death transparently retries
+//!   idempotent one-shots on another healthy backend.  Streams are
+//!   never replayed: a dead shard surfaces as the typed, non-retriable
+//!   [`PaldError::BackendLost`](crate::pald::error::PaldError) instead
+//!   of silent corruption.
+//! * [`server`] — the acceptor: framed requests plus `GET /metrics`
+//!   on the same port, serving router counters (per-backend inflight,
+//!   retries, breaker state, shed/forwarded/failed) merged with an
+//!   aggregated fleet scrape relabeled per backend, and a graceful
+//!   drain mirroring `pald-serve`'s.
+//!
+//! Std-only, like the rest of the serving stack: threads, channels,
+//! atomics — no async runtime, no new dependencies.
+
+pub mod backend;
+pub mod balancer;
+pub mod health;
+pub mod relay;
+pub mod server;
+
+pub use backend::{Backend, Breaker, BreakerState};
+pub use balancer::{Affinity, Pin};
+pub use relay::Relay;
+pub use server::{Router, RouterConfig, RouterHandle};

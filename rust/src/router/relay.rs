@@ -1,0 +1,454 @@
+//! The relay: forwards decoded client requests to backends, remapping
+//! ids and enforcing deadlines end to end.
+//!
+//! The retry asymmetry is the heart of the design (DESIGN.md §14):
+//!
+//! * **One-shot computes are idempotent** — pure functions of the
+//!   request payload — so on a retriable shed or a dead backend the
+//!   relay transparently retries them on another healthy shard, as
+//!   long as the request's own deadline budget allows.  Each attempt
+//!   forwards only the *remaining* budget, so a request can never
+//!   consume more wall-clock than its client asked for just because
+//!   the router tried twice.
+//! * **Streaming sessions are stateful** — the `IncrementalPald`
+//!   engine lives on exactly one shard — so session frames follow
+//!   their pin and are *never* replayed elsewhere.  When the pinned
+//!   shard dies the client gets the typed, non-retriable
+//!   [`PaldError::BackendLost`] exactly once (the pin is dropped;
+//!   later frames see `NoSuchSession`).  Replaying updates against a
+//!   fresh engine would silently diverge from the state the client
+//!   thinks it has; a loud loss is the correct contract.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::pald::error::PaldError;
+use crate::serve::admission::Deadline;
+use crate::serve::proto::{pald_error_to_wire, ErrorCode, Request, Response};
+
+use super::backend::{Backend, BreakerState};
+use super::balancer::{pick_for_compute, pick_for_session, Affinity, Pin};
+
+/// Render a typed error as its wire response frame.
+pub fn error_response(e: &PaldError) -> Response {
+    let (code, info, detail) = pald_error_to_wire(e);
+    Response::Error { code, info, detail }
+}
+
+/// The relay layer: owns the backend fleet, the session-affinity
+/// table, and the router-level counters.
+pub struct Relay {
+    /// The backend fleet, in `--backends` order.
+    pub backends: Vec<Arc<Backend>>,
+    /// Router session id → pinned backend.
+    pub affinity: Affinity,
+    /// Cross-backend retries per one-shot request.
+    max_retries: u32,
+    /// Deadline applied when the client did not set one, in
+    /// milliseconds (`0` = unbounded).
+    default_deadline_ms: u64,
+    /// Requests answered through a backend.
+    forwarded: AtomicU64,
+    /// Cross-backend retry attempts performed.
+    retried: AtomicU64,
+    /// Requests answered with a relayed retriable shed (every healthy
+    /// backend was shedding).
+    shed: AtomicU64,
+    /// Requests answered with a router-generated failure
+    /// (`RetriesExhausted`, `BackendLost`, relay timeouts).
+    failed: AtomicU64,
+}
+
+impl Relay {
+    /// Relay over `backends` with `max_retries` cross-backend retries
+    /// per one-shot.
+    pub fn new(backends: Vec<Arc<Backend>>, max_retries: u32, default_deadline_ms: u64) -> Relay {
+        Relay {
+            backends,
+            affinity: Affinity::new(),
+            max_retries,
+            default_deadline_ms,
+            forwarded: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        }
+    }
+
+    /// Router-level counter snapshot:
+    /// `(forwarded, retried, shed, failed)`.
+    pub fn counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.forwarded.load(Ordering::Relaxed),
+            self.retried.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Route one decoded request.  `Stats` and `Shutdown` are the
+    /// router's own business and are answered by the server layer
+    /// before relaying; reaching here with one is a routing bug.
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Compute { .. } | Request::ComputeBatch { .. } => self.oneshot(req),
+            Request::SessionOpen { .. } => self.session_open(req),
+            Request::SessionInsert { session, row } => self.session_op(
+                session,
+                |sid| Request::SessionInsert { session: sid, row: row.clone() },
+                false,
+            ),
+            Request::SessionRemove { session, index } => self.session_op(
+                session,
+                |sid| Request::SessionRemove { session: sid, index },
+                false,
+            ),
+            Request::SessionQuery { session } => {
+                self.session_op(session, |sid| Request::SessionQuery { session: sid }, false)
+            }
+            Request::SessionClose { session } => {
+                self.session_op(session, |sid| Request::SessionClose { session: sid }, true)
+            }
+            Request::Stats | Request::Shutdown => error_response(&PaldError::Remote {
+                detail: "stats/shutdown are answered by the router itself".into(),
+            }),
+        }
+    }
+
+    /// The client's deadline budget for a request carrying a
+    /// [`WireConfig`](crate::serve::proto::WireConfig), falling back to
+    /// the router default.  `0` = unbounded.
+    fn budget_ms(&self, req: &Request) -> u64 {
+        let cfg_ms = match req {
+            Request::Compute { cfg, .. }
+            | Request::ComputeBatch { cfg, .. }
+            | Request::SessionOpen { cfg, .. } => cfg.deadline_ms as u64,
+            _ => 0,
+        };
+        if cfg_ms != 0 { cfg_ms } else { self.default_deadline_ms }
+    }
+
+    /// Rewrite the forwarded config's deadline to the remaining budget
+    /// so retries never extend the client's total wait.
+    fn forward_remaining(req: &mut Request, budget_ms: u64, started: Instant) {
+        if budget_ms == 0 {
+            return;
+        }
+        let remaining =
+            budget_ms.saturating_sub(started.elapsed().as_millis() as u64).max(1);
+        match req {
+            Request::Compute { cfg, .. }
+            | Request::ComputeBatch { cfg, .. }
+            | Request::SessionOpen { cfg, .. } => {
+                cfg.deadline_ms = remaining.min(u32::MAX as u64) as u32;
+            }
+            _ => {}
+        }
+    }
+
+    /// Relay an idempotent one-shot with cross-backend retries.
+    fn oneshot(&self, mut req: Request) -> Response {
+        let budget = self.budget_ms(&req);
+        let started = Instant::now();
+        let deadline = Deadline::in_ms(budget);
+        let mut last_shed: Option<Response> = None;
+        let mut last_failure: Option<String> = None;
+        let mut exclude: Option<usize> = None;
+        let mut attempts: u32 = 0;
+        for attempt in 0..=self.max_retries {
+            if deadline.expired() {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+                return error_response(&PaldError::Timeout { deadline_ms: budget });
+            }
+            let Some(idx) = pick_for_compute(&self.backends, exclude) else { break };
+            attempts += 1;
+            if attempt > 0 {
+                self.retried.fetch_add(1, Ordering::Relaxed);
+            }
+            Self::forward_remaining(&mut req, budget, started);
+            let b = &self.backends[idx];
+            b.begin_attempt(attempt > 0);
+            let mut conn = b.checkout();
+            let r = conn.request_once(&req, Some(&deadline));
+            b.end_attempt();
+            match r {
+                Ok(Response::Error { code, info, detail }) if code.retriable() => {
+                    // A shed proves the shard alive; try a sibling.
+                    b.note_success();
+                    b.checkin(conn);
+                    last_shed = Some(Response::Error { code, info, detail });
+                    exclude = Some(idx);
+                }
+                Ok(resp) => {
+                    // Success or a non-retriable error frame — either
+                    // way the backend answered the request.
+                    b.note_success();
+                    b.checkin(conn);
+                    self.forwarded.fetch_add(1, Ordering::Relaxed);
+                    return resp;
+                }
+                Err(PaldError::Timeout { .. }) => {
+                    // The *client's* budget lapsed mid-wait: no time
+                    // left to retry, and no verdict on shard health.
+                    // The connection may still receive the late frame,
+                    // so it is dropped rather than pooled.
+                    b.breaker.note_neutral();
+                    self.failed.fetch_add(1, Ordering::Relaxed);
+                    return error_response(&PaldError::Timeout { deadline_ms: budget });
+                }
+                Err(e) => {
+                    // Transport failure: shard presumed dead; the
+                    // request never completed there, so replaying it
+                    // elsewhere is safe (one-shots are idempotent).
+                    b.note_failure();
+                    last_failure = Some(e.to_string());
+                    exclude = Some(idx);
+                }
+            }
+        }
+        if let Some(shed) = last_shed {
+            // Every attempt was shed: relay the retriable reject so the
+            // client backs off exactly as against a single server.
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return shed;
+        }
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        error_response(&PaldError::RetriesExhausted {
+            attempts,
+            last: last_failure.unwrap_or_else(|| "no healthy backend admitted the request".into()),
+        })
+    }
+
+    /// Open a streaming session: pick the least-loaded shard, open
+    /// there, pin the returned backend session id under a fresh
+    /// router-side id.  Retriable until a session exists (opening
+    /// creates no state on failure).
+    fn session_open(&self, mut req: Request) -> Response {
+        let budget = self.budget_ms(&req);
+        let started = Instant::now();
+        let deadline = Deadline::in_ms(budget);
+        let mut last_shed: Option<Response> = None;
+        let mut last_failure: Option<String> = None;
+        let mut exclude: Option<usize> = None;
+        let mut attempts: u32 = 0;
+        for attempt in 0..=self.max_retries {
+            if deadline.expired() {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+                return error_response(&PaldError::Timeout { deadline_ms: budget });
+            }
+            let Some(idx) = pick_for_session(&self.backends, exclude) else { break };
+            attempts += 1;
+            if attempt > 0 {
+                self.retried.fetch_add(1, Ordering::Relaxed);
+            }
+            Self::forward_remaining(&mut req, budget, started);
+            let b = &self.backends[idx];
+            b.begin_attempt(attempt > 0);
+            let mut conn = b.checkout();
+            let r = conn.request_once(&req, Some(&deadline));
+            b.end_attempt();
+            match r {
+                Ok(Response::SessionOpened { session, n }) => {
+                    b.note_success();
+                    b.checkin(conn);
+                    b.session_opened();
+                    let router_sid = self.affinity.pin(idx, session);
+                    self.forwarded.fetch_add(1, Ordering::Relaxed);
+                    return Response::SessionOpened { session: router_sid, n };
+                }
+                Ok(Response::Error { code, info, detail }) if code.retriable() => {
+                    b.note_success();
+                    b.checkin(conn);
+                    last_shed = Some(Response::Error { code, info, detail });
+                    exclude = Some(idx);
+                }
+                Ok(resp) => {
+                    b.note_success();
+                    b.checkin(conn);
+                    self.forwarded.fetch_add(1, Ordering::Relaxed);
+                    return resp;
+                }
+                Err(PaldError::Timeout { .. }) => {
+                    b.breaker.note_neutral();
+                    self.failed.fetch_add(1, Ordering::Relaxed);
+                    return error_response(&PaldError::Timeout { deadline_ms: budget });
+                }
+                Err(e) => {
+                    b.note_failure();
+                    last_failure = Some(e.to_string());
+                    exclude = Some(idx);
+                }
+            }
+        }
+        if let Some(shed) = last_shed {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return shed;
+        }
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        error_response(&PaldError::RetriesExhausted {
+            attempts,
+            last: last_failure.unwrap_or_else(|| "no healthy backend admitted the session".into()),
+        })
+    }
+
+    /// Relay one frame of a pinned streaming session.  No retries, no
+    /// failover: the session exists on exactly one shard.
+    fn session_op(
+        &self,
+        router_sid: u64,
+        make_req: impl Fn(u64) -> Request,
+        closes: bool,
+    ) -> Response {
+        let Some(pin) = self.affinity.get(router_sid) else {
+            return Response::Error {
+                code: ErrorCode::NoSuchSession,
+                info: 0,
+                detail: format!("no streaming session {router_sid}"),
+            };
+        };
+        let b = &self.backends[pin.backend];
+        if b.breaker.state() == BreakerState::Open {
+            // The shard is already declared dead; do not queue behind a
+            // doomed dial.
+            return self.lose_session(router_sid, pin);
+        }
+        let deadline = Deadline::in_ms(self.default_deadline_ms);
+        b.begin_attempt(false);
+        let mut conn = b.checkout();
+        let r = conn.request_once(&make_req(pin.backend_session), Some(&deadline));
+        b.end_attempt();
+        match r {
+            Ok(resp @ Response::Error { code, .. }) => {
+                // Any error frame — retriable sheds included — leaves
+                // the session intact on its shard; relay it verbatim.
+                b.note_success();
+                b.checkin(conn);
+                if code == ErrorCode::NoSuchSession {
+                    // The backend reaped it (idle timeout); drop the
+                    // stale pin so the gauge tracks reality.
+                    if self.affinity.unpin(router_sid).is_some() {
+                        b.session_closed();
+                    }
+                }
+                resp
+            }
+            Ok(resp) => {
+                b.note_success();
+                b.checkin(conn);
+                self.forwarded.fetch_add(1, Ordering::Relaxed);
+                if closes && self.affinity.unpin(router_sid).is_some() {
+                    b.session_closed();
+                }
+                resp
+            }
+            Err(PaldError::Timeout { .. }) => {
+                // Slow is not dead: the session stays pinned, the
+                // breaker is untouched, only this frame times out.
+                b.breaker.note_neutral();
+                self.failed.fetch_add(1, Ordering::Relaxed);
+                error_response(&PaldError::Timeout { deadline_ms: self.default_deadline_ms })
+            }
+            Err(_) => {
+                b.note_failure();
+                self.lose_session(router_sid, pin)
+            }
+        }
+    }
+
+    /// Declare a pinned session lost with its shard: unpin (first
+    /// caller wins — the loss is reported exactly once per session) and
+    /// answer with the typed, non-retriable `BackendLost`.
+    fn lose_session(&self, router_sid: u64, pin: Pin) -> Response {
+        if self.affinity.unpin(router_sid).is_some() {
+            self.backends[pin.backend].session_closed();
+        }
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        error_response(&PaldError::BackendLost {
+            backend: self.backends[pin.backend].name.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    use crate::core::Mat;
+    use crate::serve::proto::WireConfig;
+
+    /// A relay over shards that do not exist (port 1 is never bound).
+    fn dead_relay(n: usize, max_retries: u32) -> Relay {
+        let backends = (0..n)
+            .map(|i| {
+                Arc::new(Backend::new(format!("127.0.0.1:{}", i + 1), 3, Duration::from_secs(10)))
+            })
+            .collect();
+        Relay::new(backends, max_retries, 2_000)
+    }
+
+    fn tiny_compute() -> Request {
+        Request::Compute {
+            cfg: WireConfig::default(),
+            matrix: Mat::from_fn(3, 3, |i, j| if i == j { 0.0 } else { 1.0 + (i + j) as f32 }),
+        }
+    }
+
+    #[test]
+    fn oneshot_exhausts_across_dead_backends_into_typed_error() {
+        let relay = dead_relay(2, 1);
+        match relay.handle(tiny_compute()) {
+            Response::Error { code, info, detail } => {
+                assert_eq!(code, ErrorCode::RetriesExhausted);
+                assert_eq!(info, 2, "two attempts: original + one retry");
+                assert!(detail.contains("connect"), "{detail}");
+            }
+            other => panic!("expected error frame, got {other:?}"),
+        }
+        let (forwarded, retried, shed, failed) = relay.counters();
+        assert_eq!((forwarded, retried, shed, failed), (0, 1, 0, 1));
+        // The retry landed on the *other* shard.
+        assert_eq!(relay.backends[0].counters().0 + relay.backends[1].counters().0, 2);
+        assert!(relay.backends[0].counters().0 <= 1);
+    }
+
+    #[test]
+    fn session_ops_report_loss_exactly_once_then_no_such_session() {
+        let relay = dead_relay(1, 0);
+        // Pretend a session was pinned to the (dead) shard.
+        let sid = relay.affinity.pin(0, 42);
+        relay.backends[0].session_opened();
+        match relay.handle(Request::SessionQuery { session: sid }) {
+            Response::Error { code, detail, .. } => {
+                assert_eq!(code, ErrorCode::BackendLost);
+                assert!(detail.contains("127.0.0.1:1"), "{detail}");
+            }
+            other => panic!("expected BackendLost, got {other:?}"),
+        }
+        assert_eq!(relay.backends[0].sessions(), 0, "loss unpins");
+        // The loss is reported once; afterwards the id is simply gone.
+        match relay.handle(Request::SessionInsert { session: sid, row: vec![1.0] }) {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::NoSuchSession),
+            other => panic!("expected NoSuchSession, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_session_is_typed_not_a_relay() {
+        let relay = dead_relay(1, 0);
+        match relay.handle(Request::SessionClose { session: 999 }) {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::NoSuchSession),
+            other => panic!("expected NoSuchSession, got {other:?}"),
+        }
+        // Nothing was dispatched at a backend.
+        assert_eq!(relay.backends[0].counters().0, 0);
+    }
+
+    #[test]
+    fn stats_and_shutdown_never_reach_the_relay() {
+        let relay = dead_relay(1, 0);
+        assert!(matches!(relay.handle(Request::Stats), Response::Error { .. }));
+        assert!(matches!(relay.handle(Request::Shutdown), Response::Error { .. }));
+    }
+}

@@ -1,5 +1,6 @@
-//! Blocking client for the `pald-serve` wire protocol — the library
-//! surface `paldx loadgen` and the loopback end-to-end tests drive.
+//! Blocking clients for the `pald-serve` wire protocol — the library
+//! surface `paldx loadgen`, the router's backend pool, and the loopback
+//! end-to-end tests drive.
 //!
 //! One request is in flight per client at a time, so responses are
 //! matched by request id on a plain blocking socket; error frames come
@@ -7,17 +8,31 @@
 //! retriability preserved — callers distinguish a load-shed reject
 //! (back off and retry) from a hard failure exactly as local callers
 //! do.
+//!
+//! [`ReconnectClient`] wraps [`ServeClient`] with the retry loop the
+//! protocol was designed for: exponential backoff with deterministic
+//! seeded jitter ([`RetryPolicy`]), driven by
+//! [`ErrorCode::retriable`](super::proto::ErrorCode::retriable) on
+//! error frames and by transport failures (it re-dials the same
+//! address), under a capped budget that exhausts into the typed
+//! [`PaldError::RetriesExhausted`].
 
 use std::io::Write;
 use std::net::TcpStream;
+use std::time::Duration;
 
 use crate::core::Mat;
 use crate::pald::error::PaldError;
 
+use super::admission::Deadline;
 use super::proto::{
     decode_response, encode_request, read_frame, wire_error_to_pald, FrameRead, Request,
     Response, WireConfig, DEFAULT_MAX_FRAME,
 };
+
+/// Read-poll granularity for deadline-bounded requests
+/// ([`ServeClient::request_before`]).
+const POLL: Duration = Duration::from_millis(250);
 
 /// A blocking `pald-serve` connection.
 pub struct ServeClient {
@@ -31,6 +46,11 @@ impl ServeClient {
     pub fn connect(addr: &str) -> std::io::Result<ServeClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
+        // Reads poll at a fixed cadence so deadline-bounded requests
+        // ([`ServeClient::request_before`]) can observe their deadline;
+        // plain `request` treats the poll as an idle tick and keeps
+        // waiting, so blocking callers see no behavior change.
+        stream.set_read_timeout(Some(POLL))?;
         Ok(ServeClient { stream, next_id: 1, max_frame: DEFAULT_MAX_FRAME })
     }
 
@@ -39,6 +59,19 @@ impl ServeClient {
     /// wrappers ([`ServeClient::compute`] etc.) to surface them as
     /// [`PaldError`].
     pub fn request(&mut self, req: &Request) -> Result<Response, PaldError> {
+        self.request_before(req, None)
+    }
+
+    /// [`ServeClient::request`] bounded by a deadline: if no response
+    /// frame has *started* arriving when `deadline` lapses, gives up
+    /// with the deadline's typed [`PaldError::Timeout`].  `None` waits
+    /// indefinitely.  The router's relay and health probes use this so
+    /// a hung backend cannot absorb a caller forever.
+    pub fn request_before(
+        &mut self,
+        req: &Request,
+        deadline: Option<&Deadline>,
+    ) -> Result<Response, PaldError> {
         let id = self.next_id;
         self.next_id += 1;
         self.stream
@@ -57,7 +90,13 @@ impl ServeClient {
                 FrameRead::Eof => {
                     return Err(PaldError::protocol("server closed the connection"))
                 }
-                FrameRead::Idle => continue,
+                FrameRead::Idle => {
+                    if let Some(d) = deadline {
+                        if d.expired() {
+                            return Err(d.timeout_error());
+                        }
+                    }
+                }
             }
         }
     }
@@ -156,5 +195,251 @@ impl ServeClient {
             Response::ShuttingDown => Ok(()),
             other => Err(Self::expect_err(other)),
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reconnecting client (retry with backoff)
+// ---------------------------------------------------------------------
+
+/// SplitMix64: the jitter source for [`RetryPolicy::backoff_ms`] —
+/// deterministic per `(seed, attempt)`, so retry schedules are
+/// reproducible in tests while still decorrelating across clients.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Retry schedule for [`ReconnectClient`]: capped exponential backoff
+/// with deterministic seeded jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries beyond the first attempt (`0` = single attempt).
+    pub max_retries: u32,
+    /// Backoff before the first retry, in milliseconds (doubles per
+    /// retry).
+    pub base_ms: u64,
+    /// Backoff ceiling in milliseconds.
+    pub cap_ms: u64,
+    /// Jitter seed: two policies with the same seed sleep identically.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, base_ms: 10, cap_ms: 1_000, seed: 0x5eed }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry number `attempt` (0-based): exponential
+    /// `base_ms << attempt` capped at `cap_ms`, jittered into
+    /// `[half, full]` by a SplitMix64 draw on `(seed, attempt)` — a
+    /// pure function, so the schedule is reproducible.
+    pub fn backoff_ms(&self, attempt: u32) -> u64 {
+        let full = self
+            .base_ms
+            .max(1)
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(self.cap_ms.max(1));
+        let half = full / 2;
+        let span = full - half + 1;
+        half + splitmix64(self.seed ^ ((attempt as u64) << 32)) % span
+    }
+}
+
+/// A [`ServeClient`] that re-dials its address and retries under a
+/// [`RetryPolicy`] — the ROADMAP-named reconnecting client.
+///
+/// Two failure classes drive a retry:
+///
+/// * a **retriable error frame** (`Overloaded` / `Draining`, per
+///   [`ErrorCode::retriable`](super::proto::ErrorCode::retriable)) —
+///   the connection is healthy, so only the backoff sleep applies;
+/// * a **transport failure** (dial refused, connection died, frame
+///   truncated mid-body) — the connection is dropped and re-dialed
+///   before the next attempt.
+///
+/// Non-retriable error frames are returned immediately: they answer
+/// the request.  When the budget runs out the typed
+/// [`PaldError::RetriesExhausted`] reports the attempt count and the
+/// last failure.  Connections are dialed lazily, so constructing one
+/// of these never blocks.
+pub struct ReconnectClient {
+    addr: String,
+    policy: RetryPolicy,
+    inner: Option<ServeClient>,
+    dials: u64,
+    retries_total: u64,
+    last_call_retries: u32,
+}
+
+impl ReconnectClient {
+    /// Client for `addr` under `policy`; does not connect yet.
+    pub fn new(addr: impl Into<String>, policy: RetryPolicy) -> ReconnectClient {
+        ReconnectClient {
+            addr: addr.into(),
+            policy,
+            inner: None,
+            dials: 0,
+            retries_total: 0,
+            last_call_retries: 0,
+        }
+    }
+
+    /// The address this client (re-)dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Is a connection currently established?
+    pub fn is_connected(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Times this client has dialed (first connect included).
+    pub fn dials(&self) -> u64 {
+        self.dials
+    }
+
+    /// Retries performed over this client's lifetime.
+    pub fn retries_total(&self) -> u64 {
+        self.retries_total
+    }
+
+    /// Retries the most recent `*_with_retry` call needed (`0` = it
+    /// succeeded first try).  Loadgen uses this to count
+    /// retried-then-succeeded requests separately from sheds.
+    pub fn last_call_retries(&self) -> u32 {
+        self.last_call_retries
+    }
+
+    fn ensure(&mut self) -> Result<&mut ServeClient, PaldError> {
+        if self.inner.is_none() {
+            let c = ServeClient::connect(&self.addr)
+                .map_err(|e| PaldError::protocol(format!("connect {} failed: {e}", self.addr)))?;
+            self.dials += 1;
+            self.inner = Some(c);
+        }
+        Ok(self.inner.as_mut().expect("just ensured"))
+    }
+
+    /// One attempt, no retries: dial if disconnected, send, wait
+    /// (bounded by `deadline` when given).  Transport failures drop the
+    /// connection so the next attempt re-dials.  The router's relay
+    /// uses this and performs its *own* retries across backends.
+    pub fn request_once(
+        &mut self,
+        req: &Request,
+        deadline: Option<&Deadline>,
+    ) -> Result<Response, PaldError> {
+        let r = self.ensure().and_then(|c| c.request_before(req, deadline));
+        if matches!(r, Err(PaldError::Protocol { .. })) {
+            self.inner = None;
+        }
+        r
+    }
+
+    /// Send under the retry policy: backoff-and-retry on retriable
+    /// error frames and transport failures, give up with
+    /// [`PaldError::RetriesExhausted`] when the budget is spent.  Any
+    /// other response (success or non-retriable error frame) is
+    /// returned as-is.
+    pub fn request_with_retry(&mut self, req: &Request) -> Result<Response, PaldError> {
+        self.last_call_retries = 0;
+        let mut last: Option<String> = None;
+        for attempt in 0..=self.policy.max_retries {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(self.policy.backoff_ms(attempt - 1)));
+                self.retries_total += 1;
+                self.last_call_retries += 1;
+            }
+            match self.request_once(req, None) {
+                Ok(Response::Error { code, info, detail }) if code.retriable() => {
+                    last = Some(wire_error_to_pald(code, info, detail).to_string());
+                }
+                Ok(resp) => return Ok(resp),
+                Err(e @ PaldError::Protocol { .. }) => last = Some(e.to_string()),
+                Err(other) => return Err(other),
+            }
+        }
+        Err(PaldError::RetriesExhausted {
+            attempts: self.policy.max_retries + 1,
+            last: last.unwrap_or_else(|| "no attempt recorded".into()),
+        })
+    }
+
+    /// One-shot cohesion compute under the retry policy.
+    pub fn compute_with_retry(
+        &mut self,
+        cfg: &WireConfig,
+        matrix: &Mat,
+    ) -> Result<Mat, PaldError> {
+        let resp = self
+            .request_with_retry(&Request::Compute { cfg: cfg.clone(), matrix: matrix.clone() })?;
+        match resp {
+            Response::Cohesion { matrix } => Ok(matrix),
+            other => Err(ServeClient::expect_err(other)),
+        }
+    }
+
+    /// Metrics scrape under the retry policy.
+    pub fn stats_with_retry(&mut self) -> Result<String, PaldError> {
+        let resp = self.request_with_retry(&Request::Stats)?;
+        match resp {
+            Response::Stats { text } => Ok(text),
+            other => Err(ServeClient::expect_err(other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially_caps_and_is_deterministic() {
+        let p = RetryPolicy { max_retries: 8, base_ms: 10, cap_ms: 200, seed: 7 };
+        let q = RetryPolicy { max_retries: 8, base_ms: 10, cap_ms: 200, seed: 7 };
+        for a in 0..8 {
+            // Deterministic per (seed, attempt).
+            assert_eq!(p.backoff_ms(a), q.backoff_ms(a), "attempt {a}");
+            // Jitter stays inside [full/2, full] where full = min(base << a, cap).
+            let full = (10u64 << a).min(200);
+            let b = p.backoff_ms(a);
+            assert!(b >= full / 2 && b <= full, "attempt {a}: {b} not in [{}, {full}]", full / 2);
+        }
+        // Attempts past the cap all land in the cap's jitter band.
+        assert!(p.backoff_ms(30) >= 100 && p.backoff_ms(30) <= 200);
+        // Different seeds decorrelate (with overwhelming probability
+        // some attempt differs).
+        let r = RetryPolicy { seed: 8, ..p };
+        assert!((0..8).any(|a| r.backoff_ms(a) != p.backoff_ms(a)));
+    }
+
+    #[test]
+    fn reconnect_client_is_lazy_and_exhausts_into_typed_error() {
+        // Nothing listens on this address (port 1 is never bound in CI);
+        // construction must not dial, and the retry loop must exhaust
+        // into RetriesExhausted carrying the attempt count.
+        let mut c = ReconnectClient::new(
+            "127.0.0.1:1",
+            RetryPolicy { max_retries: 2, base_ms: 1, cap_ms: 2, seed: 1 },
+        );
+        assert!(!c.is_connected());
+        assert_eq!(c.dials(), 0);
+        let err = c.request_with_retry(&Request::Stats).unwrap_err();
+        match err {
+            PaldError::RetriesExhausted { attempts, ref last } => {
+                assert_eq!(attempts, 3);
+                assert!(last.contains("connect"), "{last}");
+            }
+            other => panic!("expected RetriesExhausted, got {other}"),
+        }
+        assert_eq!(c.retries_total(), 2);
+        assert_eq!(c.last_call_retries(), 2);
     }
 }

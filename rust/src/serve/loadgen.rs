@@ -13,6 +13,14 @@
 //!   ([`PaldError::is_retriable`]) are counted as sheds, not failures:
 //!   an overloaded server refusing work politely is the designed
 //!   behavior, while any protocol error fails the run.
+//!
+//! The target may equally be a `paldx router` front-tier — the wire
+//! protocol is identical.  With `retries > 0` each connection drives a
+//! [`ReconnectClient`] and requests that succeeded only after a retry
+//! are counted (`retried_ok`) separately from sheds; with
+//! `report_distribution` the target's scrape is diffed across the run
+//! to report how the router spread requests over its backends
+//! (`paldx loadgen --report-distribution` → `BENCH_router.json`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -21,7 +29,7 @@ use crate::data::distmat;
 use crate::io::Json;
 use crate::pald::error::PaldError;
 
-use super::client::ServeClient;
+use super::client::{ReconnectClient, RetryPolicy, ServeClient};
 use super::proto::WireConfig;
 
 /// One shape in the workload mix.
@@ -56,6 +64,14 @@ pub struct LoadgenOpts {
     pub deadline_ms: u32,
     /// RNG seed for mix picking and input generation.
     pub seed: u64,
+    /// Client-side retries per request (`0` = none).  When set, each
+    /// connection is a [`ReconnectClient`] retrying sheds and transport
+    /// failures under seeded-jitter backoff.
+    pub retries: u32,
+    /// Diff the target's scrape across the run and report per-backend
+    /// request distribution (meaningful against a `paldx router`
+    /// target; empty against a plain server).
+    pub report_distribution: bool,
 }
 
 impl Default for LoadgenOpts {
@@ -69,6 +85,8 @@ impl Default for LoadgenOpts {
             algorithm: "auto".into(),
             deadline_ms: 0,
             seed: 42,
+            retries: 0,
+            report_distribution: false,
         }
     }
 }
@@ -108,6 +126,11 @@ pub struct MixReport {
     pub sent: u64,
     /// Successful responses.
     pub ok: u64,
+    /// Of `ok`, responses that needed at least one client-side retry —
+    /// requests the fleet initially shed (or dropped) but ultimately
+    /// answered.  Counted separately from `shed`, which is requests
+    /// that *stayed* rejected.
+    pub retried_ok: u64,
     /// Retriable rejects (overload / draining sheds).
     pub shed: u64,
     /// Deadline timeouts.
@@ -131,6 +154,10 @@ pub struct LoadgenReport {
     pub mixes: Vec<MixReport>,
     /// Wire-protocol errors (any is a failed run).
     pub protocol_errors: u64,
+    /// Per-backend request distribution over the run (router targets):
+    /// `(backend_addr, requests_dispatched)`.  Empty when the target is
+    /// a plain server or distribution reporting was off.
+    pub backends: Vec<(String, u64)>,
 }
 
 impl LoadgenReport {
@@ -141,20 +168,42 @@ impl LoadgenReport {
         })
     }
 
-    /// Render as the `BENCH_serve.json` payload.
+    /// Requests that succeeded only after at least one retry, across
+    /// mixes.
+    pub fn retried_ok_total(&self) -> u64 {
+        self.mixes.iter().map(|m| m.retried_ok).sum()
+    }
+
+    /// Render as the `BENCH_serve.json` / `BENCH_router.json` payload.
     pub fn to_json(&self) -> Json {
         let (sent, ok, shed, timeouts, errors) = self.totals();
+        let experiment = if self.backends.is_empty() { "serve" } else { "router" };
         Json::Obj(vec![
-            ("experiment".into(), Json::Str("serve".into())),
+            ("experiment".into(), Json::Str(experiment.into())),
             ("mode".into(), Json::Str(self.mode.into())),
             ("elapsed_s".into(), Json::Num(self.elapsed_s)),
             ("rps".into(), Json::Num(self.rps)),
             ("sent".into(), Json::Num(sent as f64)),
             ("ok".into(), Json::Num(ok as f64)),
+            ("retried_ok".into(), Json::Num(self.retried_ok_total() as f64)),
             ("shed".into(), Json::Num(shed as f64)),
             ("timeouts".into(), Json::Num(timeouts as f64)),
             ("errors".into(), Json::Num(errors as f64)),
             ("protocol_errors".into(), Json::Num(self.protocol_errors as f64)),
+            (
+                "backends".into(),
+                Json::Arr(
+                    self.backends
+                        .iter()
+                        .map(|(addr, n)| {
+                            Json::Obj(vec![
+                                ("addr".into(), Json::Str(addr.clone())),
+                                ("forwarded".into(), Json::Num(*n as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "mixes".into(),
                 Json::Arr(
@@ -167,6 +216,7 @@ impl LoadgenReport {
                                 ("k".into(), Json::Num(m.k as f64)),
                                 ("sent".into(), Json::Num(m.sent as f64)),
                                 ("ok".into(), Json::Num(m.ok as f64)),
+                                ("retried_ok".into(), Json::Num(m.retried_ok as f64)),
                                 ("shed".into(), Json::Num(m.shed as f64)),
                                 ("timeouts".into(), Json::Num(m.timeouts as f64)),
                                 ("errors".into(), Json::Num(m.errors as f64)),
@@ -211,11 +261,47 @@ pub fn quantiles(mut latencies: Vec<f64>) -> Quantiles {
 }
 
 enum Outcome {
-    Ok(f64),
+    /// Latency (seconds) and client-side retries the request needed.
+    Ok(f64, u32),
     Shed,
     Timeout,
     Error,
     Protocol,
+}
+
+/// Fetch the target's per-backend dispatch counters
+/// (`paldx_router_backend_forwarded_total{backend="…"}`) via an in-band
+/// `STATS` frame.  Empty against a plain `pald-serve` target (it has no
+/// such series) or when the scrape cannot be fetched.
+fn scrape_distribution(addr: &str) -> Vec<(String, u64)> {
+    const SERIES: &str = "paldx_router_backend_forwarded_total{backend=\"";
+    let Ok(mut client) = ServeClient::connect(addr) else { return Vec::new() };
+    let Ok(text) = client.stats() else { return Vec::new() };
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let Some(rest) = line.strip_prefix(SERIES) else { continue };
+        let Some((name, value)) = rest.split_once("\"}") else { continue };
+        if let Ok(v) = value.trim().parse::<u64>() {
+            out.push((name.to_string(), v));
+        }
+    }
+    out
+}
+
+/// Per-backend deltas across the run (`after - before`; backends that
+/// appeared mid-run count from zero).
+fn distribution_delta(
+    before: &[(String, u64)],
+    after: Vec<(String, u64)>,
+) -> Vec<(String, u64)> {
+    after
+        .into_iter()
+        .map(|(name, v)| {
+            let base =
+                before.iter().find(|(n, _)| *n == name).map(|(_, b)| *b).unwrap_or(0);
+            (name, v.saturating_sub(base))
+        })
+        .collect()
 }
 
 /// Run the load generator against a live server.
@@ -235,6 +321,8 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport, PaldError> {
         .collect();
     let weight_total: u64 = opts.mixes.iter().map(|m| m.weight.max(1) as u64).sum();
 
+    let distribution_before =
+        if opts.report_distribution { scrape_distribution(&opts.addr) } else { Vec::new() };
     let start = Instant::now();
     let deadline = start + opts.duration;
     // Open-loop arrival schedule: request i departs at start + i/rate.
@@ -244,12 +332,32 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport, PaldError> {
     let worker = |widx: usize| -> Vec<(usize, Outcome)> {
         let mut out = Vec::new();
         let mut rng = (opts.seed ^ 0x9e3779b97f4a7c15u64.wrapping_mul(widx as u64 + 1)) | 1;
-        let mut client = match ServeClient::connect(&opts.addr) {
-            Ok(c) => c,
-            Err(_) => {
-                out.push((0, Outcome::Protocol));
-                return out;
-            }
+        // With a retry budget the connection is a ReconnectClient:
+        // sheds and transport failures retry with backoff, and dials
+        // are lazy so a not-yet-listening target is a retried failure
+        // rather than an immediate protocol error.
+        let mut retry_client = if opts.retries > 0 {
+            Some(ReconnectClient::new(
+                &opts.addr,
+                RetryPolicy {
+                    max_retries: opts.retries,
+                    base_ms: 5,
+                    cap_ms: 250,
+                    seed: opts.seed ^ (widx as u64) << 17,
+                },
+            ))
+        } else {
+            None
+        };
+        let mut client = match retry_client {
+            Some(_) => None,
+            None => match ServeClient::connect(&opts.addr) {
+                Ok(c) => Some(c),
+                Err(_) => {
+                    out.push((0, Outcome::Protocol));
+                    return out;
+                }
+            },
         };
         loop {
             let now = Instant::now();
@@ -286,26 +394,43 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport, PaldError> {
                 deadline_ms: opts.deadline_ms,
             };
             let t0 = Instant::now();
-            let outcome = match client.compute(&cfg, &inputs[mix_idx]) {
-                Ok(c) => {
-                    debug_assert_eq!(c.rows(), mix.n);
-                    Outcome::Ok(t0.elapsed().as_secs_f64())
-                }
-                Err(e) if e.is_retriable() => Outcome::Shed,
-                Err(PaldError::Timeout { .. }) => Outcome::Timeout,
-                Err(PaldError::Protocol { .. }) => {
-                    // Protocol errors close the connection server-side;
-                    // reconnect before the next request.
-                    match ServeClient::connect(&opts.addr) {
-                        Ok(c) => client = c,
-                        Err(_) => {
-                            out.push((mix_idx, Outcome::Protocol));
-                            break;
-                        }
+            let outcome = if let Some(rc) = retry_client.as_mut() {
+                match rc.compute_with_retry(&cfg, &inputs[mix_idx]) {
+                    Ok(c) => {
+                        debug_assert_eq!(c.rows(), mix.n);
+                        Outcome::Ok(t0.elapsed().as_secs_f64(), rc.last_call_retries())
                     }
-                    Outcome::Protocol
+                    Err(PaldError::Timeout { .. }) => Outcome::Timeout,
+                    Err(e) if e.is_retriable() => Outcome::Shed,
+                    // RetriesExhausted (budget spent on sheds or dead
+                    // connections) and other hard failures; the client
+                    // re-dials lazily, so the loop continues.
+                    Err(_) => Outcome::Error,
                 }
-                Err(_) => Outcome::Error,
+            } else {
+                let c = client.as_mut().expect("plain client when retries == 0");
+                match c.compute(&cfg, &inputs[mix_idx]) {
+                    Ok(c) => {
+                        debug_assert_eq!(c.rows(), mix.n);
+                        Outcome::Ok(t0.elapsed().as_secs_f64(), 0)
+                    }
+                    Err(e) if e.is_retriable() => Outcome::Shed,
+                    Err(PaldError::Timeout { .. }) => Outcome::Timeout,
+                    Err(PaldError::Protocol { .. }) => {
+                        // Protocol errors close the connection
+                        // server-side; reconnect before the next
+                        // request.
+                        match ServeClient::connect(&opts.addr) {
+                            Ok(fresh) => client = Some(fresh),
+                            Err(_) => {
+                                out.push((mix_idx, Outcome::Protocol));
+                                break;
+                            }
+                        }
+                        Outcome::Protocol
+                    }
+                    Err(_) => Outcome::Error,
+                }
             };
             out.push((mix_idx, outcome));
         }
@@ -321,21 +446,33 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport, PaldError> {
     let elapsed_s = start.elapsed().as_secs_f64();
 
     let mut protocol_errors = 0u64;
-    let mut per_mix: Vec<(u64, u64, u64, u64, u64, Vec<f64>)> =
-        vec![(0, 0, 0, 0, 0, Vec::new()); opts.mixes.len()];
+    #[derive(Clone, Default)]
+    struct Acc {
+        sent: u64,
+        ok: u64,
+        retried_ok: u64,
+        shed: u64,
+        timeouts: u64,
+        errors: u64,
+        lats: Vec<f64>,
+    }
+    let mut per_mix: Vec<Acc> = vec![Acc::default(); opts.mixes.len()];
     for (mix_idx, outcome) in all {
         let slot = &mut per_mix[mix_idx];
-        slot.0 += 1;
+        slot.sent += 1;
         match outcome {
-            Outcome::Ok(lat) => {
-                slot.1 += 1;
-                slot.5.push(lat);
+            Outcome::Ok(lat, retries) => {
+                slot.ok += 1;
+                if retries > 0 {
+                    slot.retried_ok += 1;
+                }
+                slot.lats.push(lat);
             }
-            Outcome::Shed => slot.2 += 1,
-            Outcome::Timeout => slot.3 += 1,
-            Outcome::Error => slot.4 += 1,
+            Outcome::Shed => slot.shed += 1,
+            Outcome::Timeout => slot.timeouts += 1,
+            Outcome::Error => slot.errors += 1,
             Outcome::Protocol => {
-                slot.4 += 1;
+                slot.errors += 1;
                 protocol_errors += 1;
             }
         }
@@ -344,18 +481,24 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport, PaldError> {
         .mixes
         .iter()
         .zip(per_mix)
-        .map(|(m, (sent, ok, shed, timeouts, errors, lats))| MixReport {
+        .map(|(m, acc)| MixReport {
             name: m.name.clone(),
             n: m.n,
             k: m.k,
-            sent,
-            ok,
-            shed,
-            timeouts,
-            errors,
-            latency: quantiles(lats),
+            sent: acc.sent,
+            ok: acc.ok,
+            retried_ok: acc.retried_ok,
+            shed: acc.shed,
+            timeouts: acc.timeouts,
+            errors: acc.errors,
+            latency: quantiles(acc.lats),
         })
         .collect();
+    let backends = if opts.report_distribution {
+        distribution_delta(&distribution_before, scrape_distribution(&opts.addr))
+    } else {
+        Vec::new()
+    };
     let ok_total: u64 = mixes.iter().map(|m| m.ok).sum();
     Ok(LoadgenReport {
         mode: if open_loop { "open-loop" } else { "closed-loop" },
@@ -363,6 +506,7 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport, PaldError> {
         rps: ok_total as f64 / elapsed_s.max(1e-9),
         mixes,
         protocol_errors,
+        backends,
     })
 }
 
@@ -425,7 +569,7 @@ mod tests {
 
     #[test]
     fn report_json_has_the_quantile_fields() {
-        let report = LoadgenReport {
+        let mut report = LoadgenReport {
             mode: "closed-loop",
             elapsed_s: 1.5,
             rps: 100.0,
@@ -435,17 +579,66 @@ mod tests {
                 k: 0,
                 sent: 150,
                 ok: 148,
+                retried_ok: 3,
                 shed: 2,
                 timeouts: 0,
                 errors: 0,
                 latency: Quantiles { p50: 0.01, p95: 0.02, p99: 0.03, max: 0.05 },
             }],
             protocol_errors: 0,
+            backends: Vec::new(),
         };
         let text = report.to_json().render();
-        for key in ["\"p50_s\"", "\"p95_s\"", "\"p99_s\"", "\"rps\"", "\"protocol_errors\""] {
+        let keys = ["\"p50_s\"", "\"p95_s\"", "\"p99_s\"", "\"rps\"", "\"protocol_errors\""];
+        for key in keys.iter().chain(&["\"retried_ok\""]) {
             assert!(text.contains(key), "{key} missing from {text}");
         }
         assert_eq!(report.totals().0, 150);
+        assert_eq!(report.retried_ok_total(), 3);
+        // Without a distribution the payload is the serve experiment;
+        // with one it becomes the router experiment.
+        assert!(text.contains("\"experiment\":\"serve\""), "{text}");
+        report.backends = vec![("127.0.0.1:7465".into(), 120), ("127.0.0.1:7466".into(), 30)];
+        let text = report.to_json().render();
+        assert!(text.contains("\"experiment\":\"router\""), "{text}");
+        assert!(text.contains("127.0.0.1:7466"), "{text}");
+    }
+
+    #[test]
+    fn distribution_parses_router_series_and_diffs() {
+        let scrape = "\
+# fleet\n\
+paldx_backend_up 2\n\
+paldx_router_backend_forwarded_total{backend=\"127.0.0.1:7465\"} 40\n\
+paldx_router_backend_forwarded_total{backend=\"127.0.0.1:7466\"} 10\n\
+paldx_up{backend=\"127.0.0.1:7465\"} 1\n";
+        let parse = |text: &str| -> Vec<(String, u64)> {
+            const SERIES: &str = "paldx_router_backend_forwarded_total{backend=\"";
+            text.lines()
+                .filter_map(|l| l.strip_prefix(SERIES))
+                .filter_map(|rest| rest.split_once("\"}"))
+                .filter_map(|(name, v)| {
+                    v.trim().parse::<u64>().ok().map(|v| (name.to_string(), v))
+                })
+                .collect()
+        };
+        let before = parse(scrape);
+        assert_eq!(before.len(), 2);
+        assert_eq!(before[0], ("127.0.0.1:7465".to_string(), 40));
+        let after = vec![
+            ("127.0.0.1:7465".to_string(), 100),
+            ("127.0.0.1:7466".to_string(), 25),
+            ("127.0.0.1:7467".to_string(), 5),
+        ];
+        let delta = distribution_delta(&before, after);
+        assert_eq!(
+            delta,
+            vec![
+                ("127.0.0.1:7465".to_string(), 60),
+                ("127.0.0.1:7466".to_string(), 15),
+                // A backend that appeared mid-run counts from zero.
+                ("127.0.0.1:7467".to_string(), 5),
+            ]
+        );
     }
 }

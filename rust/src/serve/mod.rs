@@ -23,8 +23,11 @@
 //!   reader/writer threads, the coalescing dispatcher, a worker pool,
 //!   signal-driven graceful drain, and a plaintext metrics scrape
 //!   (in-band `STATS` frame or `GET /metrics` on the same port).
-//! * [`client`] — a blocking client used by `paldx loadgen` and the
-//!   end-to-end tests.
+//! * [`client`] — blocking clients: [`ServeClient`] (one connection,
+//!   used by `paldx loadgen` and the end-to-end tests) and
+//!   [`ReconnectClient`] (re-dials with capped, seeded-jitter
+//!   exponential backoff driven by the retriable error codes; the
+//!   router's backend pool is built from these).
 //! * [`loadgen`] — closed-loop and open-loop load generation with
 //!   per-mix latency quantiles, publishing `BENCH_serve.json`.
 //!
@@ -39,7 +42,7 @@ pub mod server;
 pub mod stream;
 
 pub use admission::{Admission, Deadline, Ticket};
-pub use client::ServeClient;
+pub use client::{ReconnectClient, RetryPolicy, ServeClient};
 pub use loadgen::{LoadgenOpts, LoadgenReport, MixSpec};
 pub use pool::{ShapeKey, WarmPool};
 pub use proto::{ErrorCode, Request, Response, WireConfig};

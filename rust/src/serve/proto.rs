@@ -218,6 +218,15 @@ pub enum ErrorCode {
     NoSuchSession = 6,
     /// Unexpected server-side failure.
     Internal = 7,
+    /// The backend shard holding this streaming session died (router
+    /// front-tier only; DESIGN.md §14).  **Non-retriable**: the
+    /// session's incremental state is gone — replaying updates on
+    /// another shard would silently diverge, so the loss is surfaced.
+    BackendLost = 8,
+    /// A relay/retry budget was exhausted without a success (router
+    /// front-tier only): every attempt ended in a retriable shed or a
+    /// dead backend.  Non-retriable — the budget was the retry policy.
+    RetriesExhausted = 9,
 }
 
 impl ErrorCode {
@@ -231,6 +240,8 @@ impl ErrorCode {
             5 => ErrorCode::BadRequest,
             6 => ErrorCode::NoSuchSession,
             7 => ErrorCode::Internal,
+            8 => ErrorCode::BackendLost,
+            9 => ErrorCode::RetriesExhausted,
             _ => return None,
         })
     }
@@ -251,6 +262,10 @@ pub fn pald_error_to_wire(e: &PaldError) -> (ErrorCode, u64, String) {
         }
         PaldError::Overloaded { cap, .. } => (ErrorCode::Overloaded, *cap as u64, e.to_string()),
         PaldError::Draining => (ErrorCode::Draining, 0, e.to_string()),
+        PaldError::BackendLost { backend } => (ErrorCode::BackendLost, 0, backend.clone()),
+        PaldError::RetriesExhausted { attempts, last } => {
+            (ErrorCode::RetriesExhausted, *attempts as u64, last.clone())
+        }
         other => (ErrorCode::BadRequest, 0, other.to_string()),
     }
 }
@@ -267,6 +282,10 @@ pub fn wire_error_to_pald(code: ErrorCode, info: u64, detail: String) -> PaldErr
             PaldError::Overloaded { queued: info as usize, cap: info as usize }
         }
         ErrorCode::Draining => PaldError::Draining,
+        ErrorCode::BackendLost => PaldError::BackendLost { backend: detail },
+        ErrorCode::RetriesExhausted => {
+            PaldError::RetriesExhausted { attempts: info as u32, last: detail }
+        }
         ErrorCode::BadRequest | ErrorCode::NoSuchSession | ErrorCode::Internal => {
             PaldError::Remote { detail }
         }
@@ -779,6 +798,8 @@ mod tests {
             PaldError::Overloaded { queued: 8, cap: 8 },
             PaldError::Draining,
             PaldError::TooSmall { n: 1 },
+            PaldError::BackendLost { backend: "127.0.0.1:7465".into() },
+            PaldError::RetriesExhausted { attempts: 4, last: "draining".into() },
         ] {
             let (code, info, detail) = pald_error_to_wire(&e);
             let back = wire_error_to_pald(code, info, detail);
@@ -788,6 +809,25 @@ mod tests {
         // Structured payloads survive.
         let (c, info, d) = pald_error_to_wire(&PaldError::Timeout { deadline_ms: 250 });
         assert!(matches!(wire_error_to_pald(c, info, d), PaldError::Timeout { deadline_ms: 250 }));
+        // The router-tier codes carry their structure across the wire.
+        let (c, info, d) =
+            pald_error_to_wire(&PaldError::BackendLost { backend: "10.1.2.3:7465".into() });
+        assert_eq!(c, ErrorCode::BackendLost);
+        match wire_error_to_pald(c, info, d) {
+            PaldError::BackendLost { backend } => assert_eq!(backend, "10.1.2.3:7465"),
+            other => panic!("expected BackendLost, got {other:?}"),
+        }
+        let (c, info, d) = pald_error_to_wire(&PaldError::RetriesExhausted {
+            attempts: 5,
+            last: "overloaded".into(),
+        });
+        assert_eq!((c, info), (ErrorCode::RetriesExhausted, 5));
+        match wire_error_to_pald(c, info, d) {
+            PaldError::RetriesExhausted { attempts: 5, last } => {
+                assert_eq!(last, "overloaded")
+            }
+            other => panic!("expected RetriesExhausted, got {other:?}"),
+        }
     }
 
     #[test]

@@ -180,6 +180,13 @@ struct Shared {
     inflight: AtomicUsize,
     /// Connections accepted over the server's lifetime.
     conns: AtomicU64,
+    /// Wall-clock start time (Unix ms) — the scrape's identity gauge, so
+    /// an aggregating front-tier can tell a restart from a stale scrape.
+    start_ms: u64,
+    /// Resolved compute-worker count (after the `workers == 0` →
+    /// thread-budget derivation), exposed on the scrape so fleet
+    /// aggregation needs no per-shard config duplication.
+    workers: usize,
 }
 
 impl Shared {
@@ -218,6 +225,16 @@ impl Shared {
         out.push_str(&format!(
             "paldx_simd_available {}\n",
             u8::from(crate::pald::simd::simd_available())
+        ));
+        // Liveness/identity gauges (DESIGN.md §14): a front-tier's
+        // aggregated scrape labels shards with these instead of
+        // duplicating per-shard config.
+        out.push_str("paldx_up 1\n");
+        out.push_str(&format!("paldx_server_start_ms {}\n", self.start_ms));
+        out.push_str(&format!("paldx_server_workers {}\n", self.workers));
+        out.push_str(&format!(
+            "paldx_server_threads_per_job {}\n",
+            self.cfg.threads_per_job.max(1)
         ));
         out
     }
@@ -325,6 +342,11 @@ impl Server {
             stop: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
             conns: AtomicU64::new(0),
+            start_ms: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_millis() as u64)
+                .unwrap_or(0),
+            workers,
             cfg,
         });
 
@@ -1014,6 +1036,11 @@ mod tests {
         assert!(scrape.contains("paldx_serve_draining 1"), "{scrape}");
         assert!(scrape.contains("paldx_jobs_total"), "{scrape}");
         assert!(scrape.contains("paldx_simd_available"), "{scrape}");
+        // Identity gauges for fleet aggregation (DESIGN.md §14).
+        assert!(scrape.contains("paldx_up 1"), "{scrape}");
+        assert!(scrape.contains("paldx_server_start_ms "), "{scrape}");
+        assert!(scrape.contains("paldx_server_workers "), "{scrape}");
+        assert!(scrape.contains("paldx_server_threads_per_job 1"), "{scrape}");
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Fault-injection acceptance for the `pald-router` scale-out front-tier
+//! (ISSUE 9, DESIGN.md §14), over real loopback TCP with real `paldx
+//! serve` child processes as the fleet:
+//!
+//! * a burst of one-shots survives a SIGKILLed backend mid-burst — every
+//!   response arrives, **bit-identical** to a direct [`Session::compute`]
+//!   oracle, with zero protocol errors, and the fleet gauge drops to the
+//!   survivors;
+//! * a dead backend opens its circuit breaker, the fleet keeps serving,
+//!   and a restart on the same address walks the breaker through
+//!   half-open back to closed;
+//! * streaming sessions pin to exactly one shard (oracle-checked) and a
+//!   SIGKILLed shard surfaces as the typed, non-retriable
+//!   [`PaldError::BackendLost`] exactly once — then `NoSuchSession` — while
+//!   sessions pinned to the survivor keep matching their oracle;
+//! * `loadgen` with `--report-distribution` semantics measures the
+//!   per-backend forwarded split through the router scrape.
+
+use std::io::{BufRead, BufReader};
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use paldx::data::distmat;
+use paldx::pald::{PaldError, Session};
+use paldx::router::{Router, RouterConfig, RouterHandle};
+use paldx::serve::pool::config_for;
+use paldx::serve::{ServeClient, ShapeKey, WireConfig};
+
+/// A real `paldx serve` child process — the only honest way to SIGKILL a
+/// backend mid-request.  Killed (and reaped) on drop so a panicking test
+/// never leaks servers.
+struct ServeChild {
+    child: Child,
+    addr: String,
+}
+
+impl ServeChild {
+    /// Spawn `paldx serve --addr <addr>` and parse the bound address
+    /// from its "listening on" line (pass `127.0.0.1:0` for ephemeral).
+    fn spawn(addr: &str) -> Self {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_paldx"))
+            .args(["serve", "--addr", addr, "--window-ms", "0", "--reanchor", "0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn paldx serve");
+        let mut reader = BufReader::new(child.stdout.take().expect("child stdout"));
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read listening line");
+        // "pald-serve listening on 127.0.0.1:PORT (frames + ...)"
+        let addr = line
+            .split_whitespace()
+            .nth(3)
+            .unwrap_or_else(|| panic!("unexpected startup line: {line:?}"))
+            .to_string();
+        // Keep draining stdout so the child never blocks on a full pipe.
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+                sink.clear();
+            }
+        });
+        ServeChild { child, addr }
+    }
+
+    /// SIGKILL the backend — no drain, no goodbye frame.
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ServeChild {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Reserve a loopback port by binding ephemeral and letting it go.
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+/// Start a router over `backends` on an ephemeral port with snappy
+/// probe/breaker settings suitable for a test.
+fn start_router(backends: Vec<String>, breaker_cooldown_ms: u64) -> RouterHandle {
+    Router::start(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends,
+        probe_interval_ms: 25,
+        probe_timeout_ms: 1_000,
+        breaker_failures: 2,
+        breaker_cooldown_ms,
+        max_retries: 3,
+        default_deadline_ms: 30_000,
+        ..RouterConfig::default()
+    })
+    .expect("router start")
+}
+
+/// Poll the router scrape until `pred` holds (or panic with the last
+/// scrape after 15s).
+fn wait_scrape(handle: &RouterHandle, what: &str, pred: impl Fn(&str) -> bool) -> String {
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let s = handle.scrape();
+        if pred(&s) {
+            return s;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}; last scrape:\n{s}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Pull an unlabeled counter value out of a plaintext scrape.
+fn scrape_counter(scrape: &str, name: &str) -> u64 {
+    scrape
+        .lines()
+        .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+        .and_then(|l| l[name.len() + 1..].trim().parse().ok())
+        .unwrap_or_else(|| panic!("{name} missing from scrape:\n{scrape}"))
+}
+
+/// Pull a `series{backend="addr"} value` sample out of a scrape.
+fn scrape_labeled(scrape: &str, series: &str, backend: &str) -> Option<u64> {
+    let prefix = format!("{series}{{backend=\"{backend}\"}} ");
+    scrape
+        .lines()
+        .find_map(|l| l.strip_prefix(prefix.as_str()))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+/// A burst of one-shots through the router survives one backend being
+/// SIGKILLed mid-burst: every response arrives bit-identical to a direct
+/// `Session::compute` oracle, and the fleet gauge settles at the two
+/// survivors.
+#[test]
+fn burst_survives_a_sigkilled_backend_bit_identically() {
+    let mut fleet: Vec<_> = (0..3).map(|_| ServeChild::spawn("127.0.0.1:0")).collect();
+    let handle = start_router(fleet.iter().map(|b| b.addr.clone()).collect(), 250);
+    wait_scrape(&handle, "all 3 backends up", |s| s.contains("paldx_backend_up 3\n"));
+    let addr = handle.addr().to_string();
+
+    const THREADS: usize = 4;
+    const PER_THREAD: u64 = 10;
+    let served: Vec<(u64, paldx::core::Mat)> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..THREADS as u64)
+            .map(|t| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut c = ServeClient::connect(&addr).unwrap();
+                    (0..PER_THREAD)
+                        .map(|i| {
+                            let seed = 1_000 + t * PER_THREAD + i;
+                            let d = distmat::random_tie_free(48, seed);
+                            std::thread::sleep(Duration::from_millis(5));
+                            let got = c.compute(&WireConfig::default(), &d).unwrap_or_else(|e| {
+                                panic!("compute seed {seed} failed through the router: {e}")
+                            });
+                            (seed, got)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        // Let the burst get going, then murder a backend mid-flight.
+        std::thread::sleep(Duration::from_millis(40));
+        fleet[0].kill();
+        workers.into_iter().flat_map(|w| w.join().unwrap()).collect()
+    });
+
+    // Oracle: every served cohesion is bit-identical to a direct compute.
+    let key = ShapeKey::for_request(&WireConfig::default(), 48).unwrap();
+    let mut session = Session::new(config_for(&key, 1).unwrap()).unwrap();
+    assert_eq!(served.len(), THREADS * PER_THREAD as usize);
+    for (seed, got) in &served {
+        let want = session.compute(&distmat::random_tie_free(48, *seed)).unwrap();
+        assert_eq!(
+            want.as_slice(),
+            got.as_slice(),
+            "seed {seed}: routed cohesion must be bit-identical to a direct compute"
+        );
+    }
+
+    let scrape =
+        wait_scrape(&handle, "fleet gauge to drop to 2", |s| s.contains("paldx_backend_up 2\n"));
+    assert_eq!(scrape_counter(&scrape, "paldx_router_failed_total"), 0, "{scrape}");
+    assert!(
+        scrape_counter(&scrape, "paldx_router_forwarded_total") >= (THREADS as u64) * PER_THREAD,
+        "{scrape}"
+    );
+    assert_eq!(scrape_labeled(&scrape, "paldx_router_backend_up", &fleet[0].addr), Some(0));
+
+    handle.shutdown();
+    let last = handle.join();
+    assert!(last.contains("paldx_router_draining 1"), "{last}");
+}
+
+/// A dead backend trips its breaker open; the fleet keeps serving; a
+/// restart on the same address walks the breaker through half-open back
+/// to closed and the fleet gauge recovers.
+#[test]
+fn breaker_opens_on_dead_backend_and_closes_after_restart() {
+    let port = free_port();
+    let fixed = format!("127.0.0.1:{port}");
+    let a = ServeChild::spawn("127.0.0.1:0");
+    let mut b = ServeChild::spawn(&fixed);
+    assert_eq!(b.addr, fixed);
+    let handle = start_router(vec![a.addr.clone(), b.addr.clone()], 150);
+    wait_scrape(&handle, "both backends up", |s| s.contains("paldx_backend_up 2\n"));
+
+    b.kill();
+    // Failed probes trip the breaker out of Closed (gauge 0) — it then
+    // oscillates Open (1) / HalfOpen (2) as cooled-down trial probes fail.
+    let scrape = wait_scrape(&handle, "breaker to leave Closed", |s| {
+        scrape_labeled(s, "paldx_router_backend_breaker", &fixed).is_some_and(|g| g != 0)
+    });
+    assert!(scrape.contains("paldx_backend_up 1\n"), "{scrape}");
+
+    // The surviving backend keeps serving through the outage.
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+    let d = distmat::random_tie_free(32, 7);
+    assert_eq!(client.compute(&WireConfig::default(), &d).unwrap().rows(), 32);
+
+    // Restart on the same address: the next half-open trial probe
+    // succeeds and the breaker closes.
+    let b2 = ServeChild::spawn(&fixed);
+    assert_eq!(b2.addr, fixed);
+    wait_scrape(&handle, "breaker to close after restart", |s| {
+        s.contains("paldx_backend_up 2\n")
+            && scrape_labeled(s, "paldx_router_backend_breaker", &fixed) == Some(0)
+    });
+    let scrape = handle.scrape();
+    assert!(
+        scrape_counter(&scrape, "paldx_router_breaker_transitions_total") >= 2,
+        "open + close must both be recorded transitions: {scrape}"
+    );
+    assert_eq!(client.compute(&WireConfig::default(), &d).unwrap().rows(), 32);
+
+    handle.shutdown();
+    handle.join();
+}
+
+/// Streaming sessions pin to exactly one shard: a session's ops match a
+/// local incremental oracle bit for bit (they could not if ops scattered
+/// across shards), a SIGKILLed shard surfaces as the typed non-retriable
+/// `BackendLost` exactly once (then `NoSuchSession`), and a session
+/// pinned to the survivor is untouched.
+#[test]
+fn stream_affinity_pins_and_backend_death_is_typed_backend_lost() {
+    let mut fleet: Vec<_> = (0..2).map(|_| ServeChild::spawn("127.0.0.1:0")).collect();
+    // Long cooldown: the dead shard must stay broken for the whole test.
+    let handle = start_router(fleet.iter().map(|b| b.addr.clone()).collect(), 60_000);
+    wait_scrape(&handle, "both backends up", |s| s.contains("paldx_backend_up 2\n"));
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+
+    let master = distmat::random_tie_free(16, 5);
+    let seed = master.slice_to(12, 12);
+    let mk_oracle = || {
+        paldx::pald::Pald::builder().build().unwrap().into_incremental(&seed).unwrap()
+    };
+
+    // Two sessions: least-session balancing puts one on each shard.
+    let (s1, n1) = client.session_open(&WireConfig::default(), &seed).unwrap();
+    let (s2, n2) = client.session_open(&WireConfig::default(), &seed).unwrap();
+    assert_eq!((n1, n2), (12, 12));
+    assert_ne!(s1, s2, "router session ids are its own namespace");
+    let scrape = handle.scrape();
+    assert_eq!(scrape_counter(&scrape, "paldx_router_sessions_live"), 2, "{scrape}");
+    for b in &fleet {
+        assert_eq!(
+            scrape_labeled(&scrape, "paldx_router_backend_sessions", &b.addr),
+            Some(1),
+            "least-session balancing must pin one session per shard: {scrape}"
+        );
+    }
+
+    // Oracle equality proves affinity: inserts and queries that scattered
+    // across shards could not reproduce one engine's state bit for bit.
+    let mut oracle1 = mk_oracle();
+    let row: Vec<f32> = master.row(12)[..12].to_vec();
+    let (after, idx) = client.session_insert(s1, &row).unwrap();
+    let oidx = oracle1.insert_row(&row).unwrap();
+    assert_eq!((after, idx as usize), (13, oidx));
+    assert_eq!(client.session_query(s1).unwrap().as_slice(), oracle1.cohesion().as_slice());
+
+    // Identify s1's shard by elimination: close s2, and the one shard
+    // still reporting a pinned session is holding s1.  Kill it.
+    client.session_close(s2).unwrap();
+    let scrape = handle.scrape();
+    let pinned = fleet
+        .iter()
+        .position(|b| {
+            scrape_labeled(&scrape, "paldx_router_backend_sessions", &b.addr) == Some(1)
+        })
+        .unwrap_or_else(|| panic!("no shard reports s1 after closing s2:\n{scrape}"));
+    let pinned_addr = fleet[pinned].addr.clone();
+    fleet[pinned].kill();
+
+    // The next op on s1 is the typed, non-retriable loss — exactly once.
+    let err = loop {
+        match client.session_query(s1) {
+            // The kill may land while the shard still answers; keep
+            // poking until the loss surfaces.
+            Ok(_) => std::thread::sleep(Duration::from_millis(10)),
+            Err(e) => break e,
+        }
+    };
+    match &err {
+        PaldError::BackendLost { backend } => assert_eq!(backend, &pinned_addr),
+        other => panic!("expected BackendLost, got {other:?}"),
+    }
+    assert!(!err.is_retriable(), "a lost stream must never be silently replayed");
+
+    // Second op after the loss: the pin is gone, so it is a plain
+    // no-such-session remote error, not a second BackendLost.
+    let err2 = client.session_query(s1).unwrap_err();
+    assert!(matches!(err2, PaldError::Remote { .. }), "{err2:?}");
+    let scrape = handle.scrape();
+    assert_eq!(scrape_counter(&scrape, "paldx_router_sessions_live"), 0, "{scrape}");
+
+    // A fresh session now lands on the survivor and matches its oracle.
+    let (s3, _) = client.session_open(&WireConfig::default(), &seed).unwrap();
+    let mut oracle3 = mk_oracle();
+    client.session_insert(s3, &row).unwrap();
+    oracle3.insert_row(&row).unwrap();
+    assert_eq!(client.session_query(s3).unwrap().as_slice(), oracle3.cohesion().as_slice());
+    client.session_close(s3).unwrap();
+
+    handle.shutdown();
+    handle.join();
+}
+
+/// The loadgen distribution report measures the per-backend forwarded
+/// split through the router scrape (the library side of
+/// `paldx loadgen --report-distribution`).
+#[test]
+fn loadgen_reports_per_backend_distribution_against_the_router() {
+    use paldx::serve::loadgen::{self, LoadgenOpts};
+    use paldx::serve::{ServeConfig, Server};
+
+    // In-process backends are fine here — nothing gets killed.
+    let backends: Vec<_> = (0..2)
+        .map(|_| {
+            Server::start(ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                batch_window_ms: 0,
+                ..ServeConfig::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    let handle =
+        start_router(backends.iter().map(|b| b.addr().to_string()).collect(), 250);
+    wait_scrape(&handle, "both backends up", |s| s.contains("paldx_backend_up 2\n"));
+
+    let opts = LoadgenOpts {
+        addr: handle.addr().to_string(),
+        duration: Duration::from_millis(400),
+        concurrency: 2,
+        mixes: loadgen::parse_mixes("tiny:24:0:1").unwrap(),
+        retries: 2,
+        report_distribution: true,
+        ..LoadgenOpts::default()
+    };
+    let report = loadgen::run(&opts).unwrap();
+    let (sent, ok, _, _, errors) = report.totals();
+    assert!(sent > 0 && ok > 0, "no traffic flowed: {}", report.to_json().render());
+    assert_eq!(errors, 0);
+    assert_eq!(report.protocol_errors, 0);
+
+    // The distribution is the scrape delta of per-backend forwarded
+    // counters: non-empty, and it accounts for at least every ok reply.
+    assert!(!report.backends.is_empty(), "distribution missing against a router target");
+    let forwarded: u64 = report.backends.iter().map(|(_, f)| f).sum();
+    assert!(forwarded >= ok, "forwarded {forwarded} cannot be below ok {ok}");
+    let json = report.to_json().render();
+    assert!(json.contains("\"experiment\":\"router\""), "{json}");
+    assert!(json.contains("\"retried_ok\""), "{json}");
+
+    handle.shutdown();
+    handle.join();
+    for b in backends {
+        b.shutdown();
+        b.join();
+    }
+}
