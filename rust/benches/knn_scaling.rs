@@ -248,7 +248,7 @@ fn main() -> anyhow::Result<()> {
     }
     builders.print();
 
-    match write_json_report(std::path::Path::new("."), "knn", &[&table, &sweep, &builders]) {
+    match write_json_report(&paldx::bench::default_bench_dir(), "knn", &[&table, &sweep, &builders]) {
         Ok(Some(path)) => println!("wrote {}", path.display()),
         Ok(None) => {}
         Err(e) => eprintln!("could not write BENCH_knn.json: {e}"),

@@ -1,0 +1,107 @@
+//! Bench target for the cohesion-semantics axis (DESIGN.md §15):
+//! classic vs rank-based vs distance-weighted on a representative rung
+//! set — dense scalar, dense SIMD, dense parallel, and the truncated
+//! sparse path — with the per-rung overhead recorded, not gated (the
+//! planner models non-classic with a flat cost factor; this sweep is
+//! the measurement that keeps that factor honest).  Exactness anchors
+//! run first: every semantics against the all-semantics naive oracle,
+//! and rank-based bit-identical to classic under split membership.
+//! Emits `BENCH_semantics.json` next to the other reports.
+//! Run: cargo bench --bench semantics   (PALDX_FULL=1 for larger sizes)
+
+use paldx::bench::{bench, fmt_secs, fmt_speedup, write_json_report, BenchOpts, Table};
+use paldx::data::distmat;
+use paldx::pald::{naive, Algorithm, CohesionSemantics, Neighborhood, Pald, Threads, TieMode};
+
+fn pald(alg: Algorithm, sem: CohesionSemantics, threads: usize, k: usize) -> Pald {
+    let mut b = Pald::builder()
+        .algorithm(alg)
+        .tie_mode(TieMode::Split)
+        .semantics(sem)
+        .threads(Threads::Fixed(threads));
+    if k > 0 {
+        b = b.neighborhood(Neighborhood::Knn(k));
+    }
+    b.build().expect("valid bench configuration")
+}
+
+fn main() -> anyhow::Result<()> {
+    let full = paldx::bench::full_scale();
+    let opts = BenchOpts::from_env();
+
+    // Exactness anchors first: nothing is timed until every semantics
+    // agrees with the naive oracle and the classic bit-identity pin
+    // holds on this host.
+    {
+        let n = 64;
+        let d = distmat::random_duplicated(n, 2028, 3);
+        for sem in CohesionSemantics::ALL {
+            let want = naive::pairwise_sem(&d, TieMode::Split, sem);
+            for alg in [Algorithm::OptimizedPairwise, Algorithm::KnnOptPairwise] {
+                let k = if alg == Algorithm::KnnOptPairwise { 16 } else { 0 };
+                let got = pald(alg, sem, 1, k).compute(&d)?;
+                if k == 0 {
+                    anyhow::ensure!(
+                        got.cohesion().allclose(&want, 1e-4, 1e-5),
+                        "{} {}: diverged from the semantics oracle",
+                        alg.name(),
+                        sem.name()
+                    );
+                }
+            }
+        }
+        let classic = pald(Algorithm::OptimizedPairwise, CohesionSemantics::Classic, 1, 0)
+            .compute(&d)?;
+        let rank = pald(Algorithm::OptimizedPairwise, CohesionSemantics::RankBased, 1, 0)
+            .compute(&d)?;
+        anyhow::ensure!(
+            classic.cohesion().as_slice() == rank.cohesion().as_slice(),
+            "rank-based must reproduce classic bit for bit under split"
+        );
+        println!("exactness anchors ok: all semantics agree with the naive oracle");
+    }
+
+    let mut table = Table::new(
+        "semantics — per-rung overhead vs classic (split membership)",
+        &["kernel", "n", "k", "p", "classic", "rank", "weighted", "weighted/classic"],
+    );
+    let mut sweep = |alg: Algorithm, n: usize, k: usize, threads: usize| -> anyhow::Result<()> {
+        let d = distmat::random_tie_free(n, n as u64 + 29);
+        let mut times = [0.0f64; 3];
+        for (i, sem) in CohesionSemantics::ALL.into_iter().enumerate() {
+            let mut engine = pald(alg, sem, threads, k);
+            let stats = bench(&opts, || {
+                engine.compute(&d).expect("bench compute");
+            });
+            times[i] = stats.mean;
+            table.stat(format!("{}/{}/n={n}/k={k}/p={threads}", sem.name(), alg.name()), stats);
+        }
+        let [classic, rank, weighted] = times;
+        table.row(vec![
+            alg.name().to_string(),
+            n.to_string(),
+            if k == 0 { "-".into() } else { k.to_string() },
+            threads.to_string(),
+            fmt_secs(classic),
+            fmt_secs(rank),
+            fmt_secs(weighted),
+            fmt_speedup(weighted / classic.max(1e-12)),
+        ]);
+        Ok(())
+    };
+
+    let dense_n = if full { 1024 } else { 384 };
+    sweep(Algorithm::OptimizedPairwise, dense_n, 0, 1)?;
+    sweep(Algorithm::OptimizedTriplet, dense_n / 2, 0, 1)?;
+    sweep(Algorithm::SimdPairwise, dense_n, 0, 1)?;
+    sweep(Algorithm::ParallelPairwise, dense_n, 0, 4)?;
+    sweep(Algorithm::KnnOptPairwise, if full { 4096 } else { 1024 }, 16, 1)?;
+    table.print();
+
+    match write_json_report(&paldx::bench::default_bench_dir(), "semantics", &[&table]) {
+        Ok(Some(path)) => println!("wrote {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("could not write BENCH_semantics.json: {e}"),
+    }
+    Ok(())
+}

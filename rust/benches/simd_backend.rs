@@ -100,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
-    match write_json_report(std::path::Path::new("."), "simd", &[&table]) {
+    match write_json_report(&paldx::bench::default_bench_dir(), "simd", &[&table]) {
         Ok(Some(path)) => println!("wrote {}", path.display()),
         Ok(None) => {}
         Err(e) => eprintln!("could not write BENCH_simd.json: {e}"),

@@ -1,4 +1,8 @@
 //! Bench target: native vs AOT-XLA backend cross-check + throughput.
+//!
+//! Hosts without compiled PJRT artifacts (`artifacts/manifest.json`
+//! from `make artifacts`) record an explicit skip into
+//! `BENCH_xla.json` and exit zero — the gate lives in `paldx repro`.
 fn main() -> anyhow::Result<()> {
     paldx::cli::run(vec!["repro".into(), "--exp".into(), "xla".into()])
 }

@@ -239,6 +239,53 @@ pub fn json_report(exp: &str, tables: &[&Table]) -> String {
     out
 }
 
+/// Where `BENCH_<exp>.json` reports land when no `--bench-dir` is
+/// given: the enclosing repository root (the first ancestor holding a
+/// `.git` entry), found by walking up from the working directory.
+/// Bench binaries run with `rust/` as their working directory, which
+/// used to scatter CWD-relative reports there instead of the repo root
+/// the perf-trajectory tooling scrapes.  A `PALD_BENCH_DIR`
+/// environment variable overrides the walk; with no repository marker
+/// in sight the current directory is kept.
+pub fn default_bench_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("PALD_BENCH_DIR") {
+        if !dir.is_empty() {
+            return std::path::PathBuf::from(dir);
+        }
+    }
+    let start = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let mut cur = start.as_path();
+    loop {
+        if cur.join(".git").exists() {
+            return cur.to_path_buf();
+        }
+        match cur.parent() {
+            Some(parent) => cur = parent,
+            None => return std::path::PathBuf::from("."),
+        }
+    }
+}
+
+/// Write an explicit skip record for an experiment that cannot run on
+/// this host (e.g. `xla` without compiled PJRT artifacts):
+/// `BENCH_<exp>.json` with `"skipped": true` and the reason, so the
+/// perf-trajectory scrape sees a deliberate skip instead of a missing
+/// or failing report.
+pub fn write_skip_report(
+    dir: &std::path::Path,
+    exp: &str,
+    reason: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    let path = dir.join(format!("BENCH_{exp}.json"));
+    let body = format!(
+        "{{\n  \"experiment\": \"{}\",\n  \"skipped\": true,\n  \"reason\": \"{}\",\n  \"tables\": []\n}}\n",
+        json_escape(exp),
+        json_escape(reason)
+    );
+    std::fs::write(&path, body)?;
+    Ok(path)
+}
+
 /// Write `BENCH_<exp>.json` for an experiment's tables if any of them
 /// carry raw stats; returns the path written.
 pub fn write_json_report(
@@ -339,6 +386,33 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"experiment\": \"paldx_test_exp\""));
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn skip_report_records_the_reason() {
+        let dir = std::env::temp_dir();
+        let skip = write_skip_report(&dir, "paldx_test_skip", "no artifacts on this host").unwrap();
+        assert_eq!(
+            skip.file_name().unwrap().to_str().unwrap(),
+            "BENCH_paldx_test_skip.json"
+        );
+        let body = std::fs::read_to_string(&skip).unwrap();
+        assert!(body.contains("\"skipped\": true"), "{body}");
+        assert!(body.contains("no artifacts on this host"), "{body}");
+        std::fs::remove_file(&skip).unwrap();
+    }
+
+    #[test]
+    fn default_bench_dir_resolves_to_the_repo_root() {
+        // The test binary runs inside the repository, so the walk must
+        // land on the directory that holds `.git` (never fall through
+        // to a CWD-relative dot on a checked-out tree).
+        let dir = default_bench_dir();
+        assert!(
+            dir.join(".git").exists() || dir == std::path::Path::new("."),
+            "unexpected bench dir {}",
+            dir.display()
+        );
     }
 
     #[test]

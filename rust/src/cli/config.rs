@@ -6,7 +6,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use crate::pald::{Algorithm, PaldConfig, TieMode};
+use crate::pald::{Algorithm, CohesionSemantics, PaldConfig, TieMode};
 
 /// Flat parsed config: `section.key -> raw string value`.
 #[derive(Debug, Default, Clone)]
@@ -86,6 +86,9 @@ impl Config {
         if let Some(tie) = self.get("pald.tie_mode") {
             cfg.tie_mode = TieMode::parse(tie)?;
         }
+        if let Some(sem) = self.get("pald.semantics") {
+            cfg.semantics = CohesionSemantics::parse(sem)?;
+        }
         cfg.block = self.get_usize("pald.block", cfg.block)?;
         cfg.block2 = self.get_usize("pald.block2", cfg.block2)?;
         cfg.threads = self.get_usize("pald.threads", cfg.threads)?;
@@ -100,7 +103,7 @@ mod tests {
     #[test]
     fn parses_sections_and_types() {
         let c = Config::parse(
-            "# comment\ntop = 1\n[pald]\nalgorithm = \"opt-triplet\"\nblock = 256\nthreads = 8\n[bench]\nfull = true\n",
+            "# comment\ntop = 1\n[pald]\nalgorithm = \"opt-triplet\"\nblock = 256\nthreads = 8\nsemantics = \"weighted\"\n[bench]\nfull = true\n",
         )
         .unwrap();
         assert_eq!(c.get("top"), Some("1"));
@@ -110,6 +113,7 @@ mod tests {
         let cfg = c.pald_config().unwrap();
         assert_eq!(cfg.algorithm.name(), "opt-triplet");
         assert_eq!(cfg.threads, 8);
+        assert_eq!(cfg.semantics, crate::pald::CohesionSemantics::DistanceWeighted);
     }
 
     #[test]

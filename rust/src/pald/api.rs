@@ -17,7 +17,7 @@ use crate::pald::error::PaldError;
 use crate::pald::kernel::{kernel_by_name, kernel_for, CohesionKernel};
 use crate::pald::planner::{Plan, Planner};
 use crate::pald::workspace::Workspace;
-use crate::pald::{normalize, TieMode};
+use crate::pald::{normalize, CohesionSemantics, TieMode};
 
 pub use crate::pald::workspace::PhaseTimes;
 
@@ -303,6 +303,11 @@ pub struct PaldConfig {
     pub algorithm: Algorithm,
     /// Distance-tie handling (paper Section 5).
     pub tie_mode: TieMode,
+    /// Cohesion contribution semantics: the paper's classic 0.5-split
+    /// rule, the comparison-only rank-based rule, or the smooth
+    /// distance-weighted rule (DESIGN.md §15).  Non-classic semantics
+    /// imply exact `<=` focus membership regardless of `tie_mode`.
+    pub semantics: CohesionSemantics,
     /// Pairwise block size / triplet focus-pass block size b̂ (0 = default).
     pub block: usize,
     /// Triplet cohesion-pass block size b̃ (0 = same as `block`).
@@ -335,6 +340,7 @@ impl Default for PaldConfig {
         PaldConfig {
             algorithm: Algorithm::OptimizedTriplet,
             tie_mode: TieMode::Strict,
+            semantics: CohesionSemantics::Classic,
             block: 0,
             block2: 0,
             threads: available_threads(),

@@ -13,7 +13,7 @@ use std::time::Instant;
 
 use crate::core::Mat;
 use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
-use crate::pald::{in_focus, normalize, TieMode};
+use crate::pald::{in_focus, normalize, CohesionSemantics, TieMode};
 
 /// Default block size used when the caller passes `b = 0`.
 pub const DEFAULT_BLOCK: usize = 128;
@@ -29,7 +29,7 @@ pub fn pairwise_blocked(d: &Mat, tie: TieMode, b: usize) -> Mat {
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    pairwise_blocked_into(d, tie, b, &mut ws, &mut c);
+    pairwise_blocked_into(d, tie, CohesionSemantics::Classic, b, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
@@ -39,11 +39,13 @@ pub fn pairwise_blocked(d: &Mat, tie: TieMode, b: usize) -> Mat {
 pub(crate) fn pairwise_blocked_into(
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     b: usize,
     ws: &mut Workspace,
     c: &mut Mat,
 ) {
     let n = d.rows();
+    let tie = sem.effective_tie(tie);
     let b = resolve_block(b, n);
     c.as_mut_slice().fill(0.0);
     ws.ensure_tiles(b);
@@ -98,14 +100,9 @@ pub(crate) fn pairwise_blocked_into(
                                     }
                                 }
                                 TieMode::Split => {
-                                    if dxz < dyz {
-                                        cx[z] += w;
-                                    } else if dyz < dxz {
-                                        cy[z] += w;
-                                    } else {
-                                        cx[z] += 0.5 * w;
-                                        cy[z] += 0.5 * w;
-                                    }
+                                    let s = sem.share_x(dxz, dyz);
+                                    cx[z] += w * s;
+                                    cy[z] += w * (1.0 - s);
                                 }
                             }
                         }
@@ -125,7 +122,7 @@ pub fn triplet_blocked(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat {
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    triplet_blocked_into(d, tie, bhat, btil, &mut ws, &mut c);
+    triplet_blocked_into(d, tie, CohesionSemantics::Classic, bhat, btil, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
@@ -135,12 +132,14 @@ pub fn triplet_blocked(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat {
 pub(crate) fn triplet_blocked_into(
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     bhat: usize,
     btil: usize,
     ws: &mut Workspace,
     c: &mut Mat,
 ) {
     let n = d.rows();
+    let tie = sem.effective_tie(tie);
     let bh = resolve_block(bhat, n);
     let bt = resolve_block(btil, n);
     c.as_mut_slice().fill(0.0);
@@ -172,11 +171,11 @@ pub(crate) fn triplet_blocked_into(
     for xb in 0..nbt {
         for yb in xb..nbt {
             for zb in yb..nbt {
-                triplet_cohesion_tile(d, w, c, tie, xb * bt, yb * bt, zb * bt, bt, n);
+                triplet_cohesion_tile(d, w, c, tie, sem, xb * bt, yb * bt, zb * bt, bt, n);
             }
         }
     }
-    super::add_diagonal_contributions(c, w, d, tie);
+    super::add_diagonal_contributions(c, w, d, tie, sem);
     phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
@@ -234,11 +233,13 @@ pub(crate) fn triplet_focus_tile(
 }
 
 /// Cohesion updates for one block triplet.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn triplet_cohesion_tile(
     d: &Mat,
     w: &Mat,
     c: &mut Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     xs: usize,
     ys: usize,
     zs: usize,
@@ -270,9 +271,9 @@ pub(crate) fn triplet_cohesion_tile(
                         }
                     }
                     TieMode::Split => {
-                        split3(c, x, y, z, dxz, dyz, dxy, w[(x, y)]);
-                        split3(c, x, z, y, dxy, dyz, dxz, w[(x, z)]);
-                        split3(c, y, z, x, dxy, dxz, dyz, w[(y, z)]);
+                        split3(c, x, y, z, dxz, dyz, dxy, w[(x, y)], sem);
+                        split3(c, x, z, y, dxy, dyz, dxz, w[(x, z)], sem);
+                        split3(c, y, z, x, dxy, dxz, dyz, w[(y, z)], sem);
                     }
                 }
             }
@@ -280,17 +281,23 @@ pub(crate) fn triplet_cohesion_tile(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn split3(c: &mut Mat, a: usize, b: usize, t: usize, dat: f32, dbt: f32, dab: f32, w: f32) {
+fn split3(
+    c: &mut Mat,
+    a: usize,
+    b: usize,
+    t: usize,
+    dat: f32,
+    dbt: f32,
+    dab: f32,
+    w: f32,
+    sem: CohesionSemantics,
+) {
     if dat <= dab || dbt <= dab {
-        if dat < dbt {
-            c[(a, t)] += w;
-        } else if dbt < dat {
-            c[(b, t)] += w;
-        } else {
-            c[(a, t)] += 0.5 * w;
-            c[(b, t)] += 0.5 * w;
-        }
+        let s = sem.share_x(dat, dbt);
+        c[(a, t)] += w * s;
+        c[(b, t)] += w * (1.0 - s);
     }
 }
 

@@ -28,7 +28,7 @@ use std::time::Instant;
 
 use crate::core::Mat;
 use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
-use crate::pald::{normalize, TieMode};
+use crate::pald::{normalize, CohesionSemantics, TieMode};
 
 /// Comparison result as a {0,1} float mask.  The `if`/`else` select form
 /// vectorizes (vcmpps + vblendps / mask moves); the seemingly equivalent
@@ -71,6 +71,7 @@ pub(crate) fn count_focus_branchfree(dx: &[f32], dy: &[f32], dxy: f32, tie: TieM
 /// Branch-free cohesion update for one pair: two masked FMAs per z into the
 /// contiguous rows `cx` and `cy`.
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn update_cohesion_branchfree(
     dx: &[f32],
     dy: &[f32],
@@ -79,9 +80,10 @@ pub(crate) fn update_cohesion_branchfree(
     cx: &mut [f32],
     cy: &mut [f32],
     tie: TieMode,
+    sem: CohesionSemantics,
 ) {
     let n = dx.len();
-    match tie {
+    match sem.effective_tie(tie) {
         TieMode::Strict => {
             for z in 0..n {
                 let dxz = dx[z];
@@ -98,8 +100,8 @@ pub(crate) fn update_cohesion_branchfree(
                 let dxz = dx[z];
                 let dyz = dy[z];
                 let r = m((dxz <= dxy) | (dyz <= dxy));
-                // Support share for x: 1 if closer, 0.5 on a tie.
-                let s = m(dxz < dyz) + 0.5 * (m(dxz == dyz));
+                // Support share for x (classic: 1 if closer, half on a tie).
+                let s = sem.share_x(dxz, dyz);
                 let rw = r * w;
                 cx[z] += rw * s;
                 cy[z] += rw * (1.0 - s);
@@ -113,14 +115,20 @@ pub(crate) fn update_cohesion_branchfree(
 pub fn pairwise_branchfree(d: &Mat, tie: TieMode) -> Mat {
     let n = d.rows();
     let mut c = Mat::zeros(n, n);
-    pairwise_branchfree_into(d, tie, &mut c);
+    pairwise_branchfree_into(d, tie, CohesionSemantics::Classic, &mut c);
     normalize(&mut c);
     c
 }
 
 /// Unnormalized branch-free pairwise accumulation into `out` (zeroed here).
-pub(crate) fn pairwise_branchfree_into(d: &Mat, tie: TieMode, c: &mut Mat) {
+pub(crate) fn pairwise_branchfree_into(
+    d: &Mat,
+    tie: TieMode,
+    sem: CohesionSemantics,
+    c: &mut Mat,
+) {
     let n = d.rows();
+    let tie = sem.effective_tie(tie);
     c.as_mut_slice().fill(0.0);
     for x in 0..(n - 1) {
         for y in (x + 1)..n {
@@ -133,7 +141,7 @@ pub(crate) fn pairwise_branchfree_into(d: &Mat, tie: TieMode, c: &mut Mat) {
             // Re-borrow rows (two_rows_mut holds the unique borrow of c).
             let dx = d.row(x);
             let dy = d.row(y);
-            update_cohesion_branchfree(dx, dy, dxy, w, cx, cy, tie);
+            update_cohesion_branchfree(dx, dy, dxy, w, cx, cy, tie, sem);
         }
     }
 }
@@ -231,10 +239,11 @@ pub(crate) fn triplet_cohesion_branchfree_row(
     z_lo: usize,
     z_hi: usize,
     tie: TieMode,
+    sem: CohesionSemantics,
 ) -> (f32, f32) {
     let mut cxy = 0.0f32;
     let mut cyx = 0.0f32;
-    match tie {
+    match sem.effective_tie(tie) {
         TieMode::Strict => {
             // The fused form touches 10 distinct arrays, which defeats
             // LLVM's runtime alias checks and leaves the loop scalar.
@@ -277,21 +286,18 @@ pub(crate) fn triplet_cohesion_branchfree_row(
                 let dyz = dy[z];
                 // pair (x, y), third z:
                 let f_xy = m((dxz <= dxy) | (dyz <= dxy));
-                let s_xy =
-                    m(dxz < dyz) + 0.5 * (m(dxz == dyz));
+                let s_xy = sem.share_x(dxz, dyz);
                 cx[z] += f_xy * s_xy * wxy;
                 cy[z] += f_xy * (1.0 - s_xy) * wxy;
                 // pair (x, z), third y:
                 let f_xz = m((dxy <= dxz) | (dyz <= dxz));
-                let s_xz =
-                    m(dxy < dyz) + 0.5 * (m(dxy == dyz));
+                let s_xz = sem.share_x(dxy, dyz);
                 // y supports x -> c[x][y]; y supports z -> c[z][y].
                 cxy += f_xz * s_xz * wx[z];
                 cty[z] += f_xz * (1.0 - s_xz) * wx[z];
                 // pair (y, z), third x:
                 let f_yz = m((dxy <= dyz) | (dxz <= dyz));
-                let s_yz =
-                    m(dxy < dxz) + 0.5 * (m(dxy == dxz));
+                let s_yz = sem.share_x(dxy, dxz);
                 // x supports y -> c[y][x]; x supports z -> c[z][x].
                 cyx += f_yz * s_yz * wy[z];
                 ctx[z] += f_yz * (1.0 - s_yz) * wy[z];
@@ -308,15 +314,22 @@ pub fn triplet_branchfree(d: &Mat, tie: TieMode) -> Mat {
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    triplet_branchfree_into(d, tie, &mut ws, &mut c);
+    triplet_branchfree_into(d, tie, CohesionSemantics::Classic, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
 
 /// Unnormalized branch-free triplet accumulation into `out` (zeroed here);
 /// U, W, CT, and the mask scratch rows live in the workspace.
-pub(crate) fn triplet_branchfree_into(d: &Mat, tie: TieMode, ws: &mut Workspace, c: &mut Mat) {
+pub(crate) fn triplet_branchfree_into(
+    d: &Mat,
+    tie: TieMode,
+    sem: CohesionSemantics,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
     let n = d.rows();
+    let tie = sem.effective_tie(tie);
     c.as_mut_slice().fill(0.0);
     ws.ensure_uw(n);
     ws.ensure_ct(n);
@@ -380,6 +393,7 @@ pub(crate) fn triplet_branchfree_into(d: &Mat, tie: TieMode, ws: &mut Workspace,
                     y + 1,
                     n,
                     tie,
+                    sem,
                 );
             }
             c[(x, y)] += cxy_inc;
@@ -388,7 +402,7 @@ pub(crate) fn triplet_branchfree_into(d: &Mat, tie: TieMode, ws: &mut Workspace,
     }
     // Fold the transposed accumulator back: c[z][x] += ct[x][z].
     add_transposed(c, ct);
-    super::add_diagonal_contributions(c, w, d, tie);
+    super::add_diagonal_contributions(c, w, d, tie, sem);
     phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 

@@ -39,6 +39,10 @@ pub enum PaldError {
     UnknownAlgorithm { name: String },
     /// Tie-mode name other than `strict` / `split`.
     UnknownTieMode { name: String },
+    /// Cohesion-semantics name other than `classic` / `rank` /
+    /// `weighted` (see
+    /// [`CohesionSemantics`](crate::pald::CohesionSemantics)).
+    UnknownSemantics { name: String },
     /// Metric name not supported by [`ComputedDistances`].
     ///
     /// [`ComputedDistances`]: crate::pald::ComputedDistances
@@ -208,6 +212,13 @@ impl fmt::Display for PaldError {
             }
             PaldError::UnknownTieMode { name } => {
                 write!(f, "unknown tie mode '{name}' (expected 'strict' or 'split')")
+            }
+            PaldError::UnknownSemantics { name } => {
+                write!(
+                    f,
+                    "unknown cohesion semantics '{name}' \
+                     (expected 'classic', 'rank', or 'weighted')"
+                )
             }
             PaldError::UnknownMetric { name } => {
                 write!(f, "unknown metric '{name}' (expected euclidean, manhattan, or cosine)")

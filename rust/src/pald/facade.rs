@@ -20,7 +20,7 @@ use crate::pald::knn::GraphBuild;
 use crate::pald::result::CohesionResult;
 use crate::pald::session::Session;
 use crate::pald::stream::PointStore;
-use crate::pald::TieMode;
+use crate::pald::{CohesionSemantics, TieMode};
 
 /// Cache-block size: planner/theorem-tuned, or pinned.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -86,6 +86,7 @@ pub struct PaldBuilder {
     algorithm: Algorithm,
     algorithm_name: Option<String>,
     tie_mode: TieMode,
+    semantics: CohesionSemantics,
     block: BlockSize,
     block2: BlockSize,
     threads: Threads,
@@ -102,6 +103,7 @@ impl Default for PaldBuilder {
             algorithm: Algorithm::Auto,
             algorithm_name: None,
             tie_mode: TieMode::Strict,
+            semantics: CohesionSemantics::Classic,
             block: BlockSize::Auto,
             block2: BlockSize::Auto,
             threads: Threads::Auto,
@@ -131,6 +133,7 @@ impl PaldBuilder {
             algorithm: cfg.algorithm,
             algorithm_name: None,
             tie_mode: cfg.tie_mode,
+            semantics: cfg.semantics,
             block: if cfg.block == 0 { BlockSize::Auto } else { BlockSize::Fixed(cfg.block) },
             block2: if cfg.block2 == 0 { BlockSize::Auto } else { BlockSize::Fixed(cfg.block2) },
             threads: if cfg.threads == 0 {
@@ -164,6 +167,17 @@ impl PaldBuilder {
     /// Distance-tie handling (paper Section 5).
     pub fn tie_mode(mut self, tie_mode: TieMode) -> PaldBuilder {
         self.tie_mode = tie_mode;
+        self
+    }
+
+    /// Cohesion contribution semantics (DESIGN.md §15): the paper's
+    /// classic 0.5-split rule (default, bit-identical to the
+    /// pre-semantics kernels on every rung), the comparison-only
+    /// rank-based rule, or the smooth distance-weighted rule.
+    /// Non-classic semantics always run under exact `<=` focus
+    /// membership, regardless of [`tie_mode`](PaldBuilder::tie_mode).
+    pub fn semantics(mut self, semantics: CohesionSemantics) -> PaldBuilder {
+        self.semantics = semantics;
         self
     }
 
@@ -275,6 +289,7 @@ impl PaldBuilder {
         let cfg = PaldConfig {
             algorithm,
             tie_mode: self.tie_mode,
+            semantics: self.semantics,
             block,
             block2,
             threads,
@@ -710,6 +725,40 @@ mod tests {
         let rk = knn.compute(&d).unwrap();
         assert_eq!(rk.plan().algorithm, Algorithm::KnnSimdPairwise);
         assert_eq!(rk.effective_k(), Some(6));
+    }
+
+    #[test]
+    fn semantics_rides_the_builder_into_the_result() {
+        let d = distmat::random_tie_free(28, 9);
+        let mut classic = Pald::builder().threads(Threads::Fixed(1)).build().unwrap();
+        let want = classic.compute(&d).unwrap();
+        assert_eq!(want.semantics(), CohesionSemantics::Classic);
+        for sem in [CohesionSemantics::RankBased, CohesionSemantics::DistanceWeighted] {
+            let mut p =
+                Pald::builder().semantics(sem).threads(Threads::Fixed(1)).build().unwrap();
+            assert_eq!(p.config().semantics, sem);
+            let r = p.compute(&d).unwrap();
+            assert_eq!(r.semantics(), sem);
+            assert_eq!(r.plan().params.semantics, sem);
+            if sem == CohesionSemantics::RankBased {
+                // Rank-based is numerically the classic step function.
+                assert!(
+                    r.cohesion().allclose(want.cohesion(), 1e-5, 1e-6),
+                    "maxdiff={}",
+                    r.cohesion().max_abs_diff(want.cohesion())
+                );
+            } else {
+                // Weighted genuinely changes the answer on generic input.
+                assert!(r.cohesion().max_abs_diff(want.cohesion()) > 1e-4);
+            }
+        }
+        // from_config round-trips the field.
+        let cfg = PaldConfig {
+            semantics: CohesionSemantics::DistanceWeighted,
+            ..Default::default()
+        };
+        let b = PaldBuilder::from_config(&cfg);
+        assert_eq!(b.build().unwrap().config().semantics, CohesionSemantics::DistanceWeighted);
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::pald::blocked::resolve_block;
 use crate::pald::branchfree::{mask as m, update_cohesion_branchfree};
 use crate::pald::optimized::focus_sizes_optimized_into;
 use crate::pald::workspace::{reciprocal_weights_into, Workspace};
-use crate::pald::{normalize, TieMode};
+use crate::pald::{normalize, CohesionSemantics, TieMode};
 use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
 
 /// Sequential hybrid: triplet focus + pairwise cohesion.
@@ -30,7 +30,7 @@ pub fn hybrid_sequential(d: &Mat, tie: TieMode, bhat: usize, b: usize) -> Mat {
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    hybrid_sequential_into(d, tie, bhat, b, &mut ws, &mut c);
+    hybrid_sequential_into(d, tie, CohesionSemantics::Classic, bhat, b, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
@@ -41,12 +41,14 @@ pub fn hybrid_sequential(d: &Mat, tie: TieMode, bhat: usize, b: usize) -> Mat {
 pub(crate) fn hybrid_sequential_into(
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     bhat: usize,
     b: usize,
     ws: &mut Workspace,
     c: &mut Mat,
 ) {
     let n = d.rows();
+    let tie = sem.effective_tie(tie);
     let bh = resolve_block(bhat, n);
     c.as_mut_slice().fill(0.0);
     ws.ensure_uw(n);
@@ -73,7 +75,7 @@ pub(crate) fn hybrid_sequential_into(
                     let dxy = d[(x, y)];
                     let wxy = w[(x, y)];
                     let (cx, cy) = c.two_rows_mut(x, y);
-                    update_cohesion_branchfree(d.row(x), d.row(y), dxy, wxy, cx, cy, tie);
+                    update_cohesion_branchfree(d.row(x), d.row(y), dxy, wxy, cx, cy, tie, sem);
                 }
             }
         }
@@ -87,15 +89,17 @@ pub fn hybrid_parallel(d: &Mat, tie: TieMode, bhat: usize, b: usize, threads: us
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    hybrid_parallel_into(d, tie, bhat, b, threads, &mut ws, &mut c);
+    hybrid_parallel_into(d, tie, CohesionSemantics::Classic, bhat, b, threads, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
 
 /// Unnormalized parallel hybrid accumulation into `out` (zeroed here).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn hybrid_parallel_into(
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     bhat: usize,
     b: usize,
     threads: usize,
@@ -103,9 +107,10 @@ pub(crate) fn hybrid_parallel_into(
     c: &mut Mat,
 ) {
     let n = d.rows();
+    let tie = sem.effective_tie(tie);
     let threads = threads.max(1);
     if threads == 1 {
-        hybrid_sequential_into(d, tie, bhat, b, ws, c);
+        hybrid_sequential_into(d, tie, sem, bhat, b, ws, c);
         return;
     }
     // Focus pass: reuse the parallel triplet machinery's U computation by
@@ -153,7 +158,7 @@ pub(crate) fn hybrid_parallel_into(
                                 }
                                 TieMode::Split => (
                                     m((dxz <= dxy) | (dyz <= dxy)),
-                                    m(dxz < dyz) + 0.5 * m(dxz == dyz),
+                                    sem.share_x(dxz, dyz),
                                 ),
                             };
                             let rw = r * wxy;
@@ -218,7 +223,15 @@ mod tests {
         let d = distmat::random_tie_free(n, 11);
         let mut ws = Workspace::new();
         let mut c = Mat::zeros(n, n);
-        hybrid_sequential_into(&d, TieMode::Strict, 8, 8, &mut ws, &mut c);
+        hybrid_sequential_into(
+            &d,
+            TieMode::Strict,
+            CohesionSemantics::Classic,
+            8,
+            8,
+            &mut ws,
+            &mut c,
+        );
         assert!(ws.phases.focus_s > 0.0);
         assert!(ws.phases.cohesion_s > 0.0);
     }

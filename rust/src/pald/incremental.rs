@@ -81,7 +81,7 @@ use crate::pald::knn::{merge_sorted, NeighborGraph};
 use crate::pald::planner::Plan;
 use crate::pald::session::Session;
 use crate::pald::stream::{InsertRow, PaddedSquare, PointStore, UpdateStats};
-use crate::pald::{in_focus, TieMode};
+use crate::pald::{in_focus, CohesionSemantics, TieMode};
 
 /// Comparison result as a {0, 1} f64 mask (the f64 twin of the batch
 /// kernels' f32 `mask`).
@@ -115,7 +115,11 @@ pub trait UpdateKernel: Sync {
     /// Add `w` into `sx[z]` / `sy[z]` for every `z` in `z_lo..z_hi`
     /// that the pair `(x, y)` awards support to, following the batch
     /// pairwise semantics exactly (strict: the closer endpoint wins,
-    /// ties to `y`; split: distance ties split 0.5/0.5).
+    /// ties to `y`; split: the award divides per
+    /// [`CohesionSemantics::share_x_f64`] — classic splits ties in
+    /// half).  Implementations resolve
+    /// [`CohesionSemantics::effective_tie`] themselves, so non-classic
+    /// semantics can never reach the strict fast path.
     #[allow(clippy::too_many_arguments)]
     fn award(
         &self,
@@ -129,6 +133,7 @@ pub trait UpdateKernel: Sync {
         z_hi: usize,
         block: usize,
         tie: TieMode,
+        sem: CohesionSemantics,
     );
 }
 
@@ -156,7 +161,9 @@ impl UpdateKernel for ReferenceUpdate {
         z_hi: usize,
         _block: usize,
         tie: TieMode,
+        sem: CohesionSemantics,
     ) {
+        let tie = sem.effective_tie(tie);
         for z in z_lo..z_hi {
             let dxz = dx[z];
             let dyz = dy[z];
@@ -172,14 +179,9 @@ impl UpdateKernel for ReferenceUpdate {
                     }
                 }
                 TieMode::Split => {
-                    if dxz < dyz {
-                        sx[z] += w;
-                    } else if dyz < dxz {
-                        sy[z] += w;
-                    } else {
-                        sx[z] += 0.5 * w;
-                        sy[z] += 0.5 * w;
-                    }
+                    let sh = sem.share_x_f64(dxz, dyz);
+                    sx[z] += w * sh;
+                    sy[z] += w * (1.0 - sh);
                 }
             }
         }
@@ -209,7 +211,9 @@ impl UpdateKernel for BlockedBranchFreeUpdate {
         z_hi: usize,
         block: usize,
         tie: TieMode,
+        sem: CohesionSemantics,
     ) {
+        let tie = sem.effective_tie(tie);
         let b = block.max(1);
         let mut lo = z_lo;
         while lo < z_hi {
@@ -231,7 +235,7 @@ impl UpdateKernel for BlockedBranchFreeUpdate {
                         let dxz = dx[z];
                         let dyz = dy[z];
                         let r = fm((dxz <= dxy) | (dyz <= dxy));
-                        let s = fm(dxz < dyz) + 0.5 * fm(dxz == dyz);
+                        let s = sem.share_x_f64(dxz, dyz);
                         let rw = r * w;
                         sx[z] += rw * s;
                         sy[z] += rw * (1.0 - s);
@@ -357,7 +361,9 @@ fn award_cands(
     cand: &[u32],
     skip: u32,
     tie: TieMode,
+    sem: CohesionSemantics,
 ) {
+    let tie = sem.effective_tie(tie);
     for &zu in cand {
         if zu == skip {
             continue;
@@ -368,7 +374,7 @@ fn award_cands(
         if !in_focus(dxz, dyz, dxy, tie) {
             continue;
         }
-        award_one(dxz, dyz, w, &mut sx[z], &mut sy[z], tie);
+        award_one(dxz, dyz, w, &mut sx[z], &mut sy[z], tie, sem);
     }
 }
 
@@ -376,8 +382,16 @@ fn award_cands(
 /// inserted point, which joins at the pair's *new* weight while the old
 /// members are rescaled).  Must agree exactly with [`UpdateKernel::award`].
 #[inline(always)]
-fn award_one(dxz: f32, dyz: f32, w: f64, sx_z: &mut f64, sy_z: &mut f64, tie: TieMode) {
-    match tie {
+fn award_one(
+    dxz: f32,
+    dyz: f32,
+    w: f64,
+    sx_z: &mut f64,
+    sy_z: &mut f64,
+    tie: TieMode,
+    sem: CohesionSemantics,
+) {
+    match sem.effective_tie(tie) {
         TieMode::Strict => {
             if dxz < dyz {
                 *sx_z += w;
@@ -386,14 +400,9 @@ fn award_one(dxz: f32, dyz: f32, w: f64, sx_z: &mut f64, sy_z: &mut f64, tie: Ti
             }
         }
         TieMode::Split => {
-            if dxz < dyz {
-                *sx_z += w;
-            } else if dyz < dxz {
-                *sy_z += w;
-            } else {
-                *sx_z += 0.5 * w;
-                *sy_z += 0.5 * w;
-            }
+            let sh = sem.share_x_f64(dxz, dyz);
+            *sx_z += w * sh;
+            *sy_z += w * (1.0 - sh);
         }
     }
 }
@@ -446,6 +455,7 @@ pub struct IncrementalPald {
     session: Session,
     validation: Validation,
     tie: TieMode,
+    sem: CohesionSemantics,
     n: usize,
     d: PaddedSquare<f32>,
     u: PaddedSquare<u32>,
@@ -501,7 +511,10 @@ impl IncrementalPald {
             name: plan.algorithm.name().to_string(),
         })?;
         let kern = update_kernel_for(kernel.meta().rung);
-        let tie = session.config().tie_mode;
+        // Non-classic semantics always maintain exact `<=` membership;
+        // resolving once here keeps every update loop on one tie mode.
+        let sem = session.config().semantics;
+        let tie = sem.effective_tie(session.config().tie_mode);
         let block_cfg = plan.params.block;
         // The engine truncates exactly when its resolved plan is a
         // sparse kernel, so `batch_recompute` (which dispatches that
@@ -521,6 +534,7 @@ impl IncrementalPald {
             session,
             validation,
             tie,
+            sem,
             n,
             d,
             u,
@@ -553,6 +567,7 @@ impl IncrementalPald {
     fn seed_dense(&mut self) {
         let n = self.n;
         let tie = self.tie;
+        let sem = self.sem;
         let kern = self.kern;
         let block = resolve_block(self.block_cfg, n);
         let IncrementalPald { d, u, s, .. } = self;
@@ -567,7 +582,7 @@ impl IncrementalPald {
                 u.set_sym(x, y, uf);
                 let w = 1.0 / f64::from(uf);
                 let (sx, sy) = s.two_rows_mut(x, y);
-                kern.award(d.row(x), d.row(y), dxy, w, sx, sy, 0, n, block, tie);
+                kern.award(d.row(x), d.row(y), dxy, w, sx, sy, 0, n, block, tie, sem);
             }
         }
     }
@@ -579,6 +594,7 @@ impl IncrementalPald {
     fn seed_knn(&mut self) {
         let n = self.n;
         let tie = self.tie;
+        let sem = self.sem;
         let dm = self.distances();
         {
             let ks = self.knn.as_mut().expect("knn seed on a graph-capped engine");
@@ -607,7 +623,7 @@ impl IncrementalPald {
                 u.set_sym(x, y, uf);
                 let w = 1.0 / f64::from(uf);
                 let (sx, sy) = s.two_rows_mut(x, y);
-                award_cands(d.row(x), d.row(y), dxy, w, sx, sy, cand, u32::MAX, tie);
+                award_cands(d.row(x), d.row(y), dxy, w, sx, sy, cand, u32::MAX, tie, sem);
             }
         }
     }
@@ -627,9 +643,16 @@ impl IncrementalPald {
         self.session.config()
     }
 
-    /// Distance-tie handling the engine maintains.
+    /// Distance-tie handling the engine maintains (the *effective* tie:
+    /// non-classic semantics always run under [`TieMode::Split`]).
     pub fn tie_mode(&self) -> TieMode {
         self.tie
+    }
+
+    /// Cohesion contribution semantics the engine maintains
+    /// (DESIGN.md §15).
+    pub fn semantics(&self) -> CohesionSemantics {
+        self.sem
     }
 
     /// Name of the update-loop flavor the plan selected.
@@ -681,7 +704,11 @@ impl IncrementalPald {
 
     /// Conservative accumulated-rounding proxy driving
     /// [`ReanchorPolicy::DriftThreshold`]: `f64::EPSILON` times the
-    /// support-rescale operations performed since the last anchor.
+    /// support-rescale operations performed since the last anchor —
+    /// one charge per *surviving focus member* of each reweighted pair
+    /// (the entries a `Δw` sweep actually touches).  A batch insert
+    /// rescales each touched pair exactly once, so it charges exactly
+    /// what the shared sweep performs — not once per batch item.
     /// Linear in update volume — an upper-bound-shaped model, not a
     /// measured error (the oracle tests bound the real deviation).
     pub fn drift_estimate(&self) -> f64 {
@@ -883,7 +910,9 @@ impl IncrementalPald {
         self.stats.inserts += 1;
         self.stats.reweighted_pairs += reweighted;
         self.updates_since_anchor += 1;
-        self.drift_ops += reweighted * nn as u64;
+        // One Δw sweep per touched pair, spanning the m pre-update
+        // members (the fresh award of the new point is not a rescale).
+        self.drift_ops += reweighted * m as u64;
         let dt = t0.elapsed().as_secs_f64();
         self.stats.last_update_s = dt;
         self.stats.total_update_s += dt;
@@ -896,6 +925,7 @@ impl IncrementalPald {
     /// pair count.
     fn insert_dense(&mut self, m: usize) -> u64 {
         let tie = self.tie;
+        let sem = self.sem;
         let kern = self.kern;
         let nn = m + 1;
         let block = resolve_block(self.block_cfg, nn);
@@ -915,8 +945,8 @@ impl IncrementalPald {
                 u.set_sym(x, y, u_new);
                 let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
                 let (sx, sy) = s.two_rows_mut(x, y);
-                kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, m, block, tie);
-                award_one(dxq, dyq, 1.0 / f64::from(u_new), &mut sx[m], &mut sy[m], tie);
+                kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, m, block, tie, sem);
+                award_one(dxq, dyq, 1.0 / f64::from(u_new), &mut sx[m], &mut sy[m], tie, sem);
                 reweighted += 1;
             }
         }
@@ -928,7 +958,7 @@ impl IncrementalPald {
             u.set_sym(x, m, uf);
             let w = 1.0 / f64::from(uf);
             let (sx, sq) = s.two_rows_mut(x, m);
-            kern.award(d.row(x), d.row(m), dxy, w, sx, sq, 0, nn, block, tie);
+            kern.award(d.row(x), d.row(m), dxy, w, sx, sq, 0, nn, block, tie, sem);
         }
         reweighted
     }
@@ -942,6 +972,7 @@ impl IncrementalPald {
     /// truncated batch semantics over the engine's own graph.
     fn insert_knn(&mut self, m: usize) -> u64 {
         let tie = self.tie;
+        let sem = self.sem;
         let mut reweighted = 0u64;
         let IncrementalPald { d, u, s, knn, .. } = self;
         let ks = knn.as_mut().expect("insert_knn on a graph-capped engine");
@@ -990,8 +1021,8 @@ impl IncrementalPald {
                 let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
                 merge_sorted(&adj[a], &adj[b], cand); // pre-q candidates
                 let (sa, sb) = s.two_rows_mut(a, b);
-                award_cands(d.row(a), d.row(b), dab, dw, sa, sb, cand, u32::MAX, tie);
-                award_one(daq, dbq, 1.0 / f64::from(u_new), &mut sa[m], &mut sb[m], tie);
+                award_cands(d.row(a), d.row(b), dab, dw, sa, sb, cand, u32::MAX, tie, sem);
+                award_one(daq, dbq, 1.0 / f64::from(u_new), &mut sa[m], &mut sb[m], tie, sem);
                 reweighted += 1;
             }
         }
@@ -1016,7 +1047,7 @@ impl IncrementalPald {
             u.set_sym(x, m, uf);
             let w = 1.0 / f64::from(uf);
             let (sx, sq) = s.two_rows_mut(x, m);
-            award_cands(d.row(x), d.row(m), dxq, w, sx, sq, cand, u32::MAX, tie);
+            award_cands(d.row(x), d.row(m), dxq, w, sx, sq, cand, u32::MAX, tie, sem);
         }
         reweighted
     }
@@ -1126,6 +1157,7 @@ impl IncrementalPald {
         }
 
         let tie = self.tie;
+        let sem = self.sem;
         let kern = self.kern;
         let block = resolve_block(self.block_cfg, nn);
         let mut reweighted = 0u64;
@@ -1152,11 +1184,11 @@ impl IncrementalPald {
                     let wf = 1.0 / f64::from(u_new);
                     let dw = wf - 1.0 / f64::from(u_old);
                     let (sx, sy) = s.two_rows_mut(x, y);
-                    kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, m, block, tie);
+                    kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, m, block, tie, sem);
                     for q in m..nn {
                         let (dxq, dyq) = (d.at(x, q), d.at(y, q));
                         if in_focus(dxq, dyq, dxy, tie) {
-                            award_one(dxq, dyq, wf, &mut sx[q], &mut sy[q], tie);
+                            award_one(dxq, dyq, wf, &mut sx[q], &mut sy[q], tie, sem);
                         }
                     }
                     reweighted += 1;
@@ -1172,7 +1204,7 @@ impl IncrementalPald {
                     u.set_sym(x, q, uf);
                     let w = 1.0 / f64::from(uf);
                     let (sx, sq) = s.two_rows_mut(x, q);
-                    kern.award(d.row(x), d.row(q), dxq, w, sx, sq, 0, nn, block, tie);
+                    kern.award(d.row(x), d.row(q), dxq, w, sx, sq, 0, nn, block, tie, sem);
                 }
             }
         }
@@ -1180,7 +1212,9 @@ impl IncrementalPald {
         self.stats.inserts += bsz as u64;
         self.stats.reweighted_pairs += reweighted;
         self.updates_since_anchor += bsz as u64;
-        self.drift_ops += reweighted * nn as u64;
+        // One Δw sweep per touched pair, spanning the m pre-update
+        // members (the fresh award of the new point is not a rescale).
+        self.drift_ops += reweighted * m as u64;
         let dt = t0.elapsed().as_secs_f64();
         self.stats.last_update_s = dt;
         self.stats.total_update_s += dt;
@@ -1226,7 +1260,8 @@ impl IncrementalPald {
         self.stats.removes += 1;
         self.stats.reweighted_pairs += reweighted;
         self.updates_since_anchor += 1;
-        self.drift_ops += reweighted * n as u64;
+        // Each Δw sweep spans the n - 1 surviving members.
+        self.drift_ops += reweighted * (n as u64 - 1);
         let dt = t0.elapsed().as_secs_f64();
         self.stats.last_update_s = dt;
         self.stats.total_update_s += dt;
@@ -1240,6 +1275,7 @@ impl IncrementalPald {
     fn remove_dense(&mut self, i: usize) -> u64 {
         let n = self.n;
         let tie = self.tie;
+        let sem = self.sem;
         let kern = self.kern;
         let block = resolve_block(self.block_cfg, n);
         let mut reweighted = 0u64;
@@ -1253,7 +1289,7 @@ impl IncrementalPald {
             let dxy = d.at(x, i);
             let w = -(1.0 / f64::from(u.at(x, i)));
             let (sx, si) = s.two_rows_mut(x, i);
-            kern.award(d.row(x), d.row(i), dxy, w, sx, si, 0, n, block, tie);
+            kern.award(d.row(x), d.row(i), dxy, w, sx, si, 0, n, block, tie, sem);
         }
         // Pairs whose focus loses i: bump u down and rescale the
         // surviving members (i's own column is about to vanish, so
@@ -1275,8 +1311,8 @@ impl IncrementalPald {
                 u.set_sym(x, y, u_new);
                 let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
                 let (sx, sy) = s.two_rows_mut(x, y);
-                kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, i, block, tie);
-                kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, i + 1, n, block, tie);
+                kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, 0, i, block, tie, sem);
+                kern.award(d.row(x), d.row(y), dxy, dw, sx, sy, i + 1, n, block, tie, sem);
                 reweighted += 1;
             }
         }
@@ -1292,6 +1328,7 @@ impl IncrementalPald {
     /// the next re-anchor rebuilds the exact batch graph).
     fn remove_knn(&mut self, i: usize) -> u64 {
         let tie = self.tie;
+        let sem = self.sem;
         let mut reweighted = 0u64;
         let IncrementalPald { d, u, s, knn, .. } = self;
         let ks = knn.as_mut().expect("remove_knn on a graph-capped engine");
@@ -1311,7 +1348,7 @@ impl IncrementalPald {
             let w = -(1.0 / f64::from(u.at(x, i)));
             merge_sorted(&adj[x], &adj[i], cand);
             let (sx, si) = s.two_rows_mut(x, i);
-            award_cands(d.row(x), d.row(i), dxi, w, sx, si, cand, u32::MAX, tie);
+            award_cands(d.row(x), d.row(i), dxi, w, sx, si, cand, u32::MAX, tie, sem);
         }
 
         // Edges losing candidate i — exactly those with an endpoint
@@ -1339,7 +1376,7 @@ impl IncrementalPald {
                 let dw = 1.0 / f64::from(u_new) - 1.0 / f64::from(u_old);
                 merge_sorted(&adj[a], &adj[b], cand);
                 let (sa, sb) = s.two_rows_mut(a, b);
-                award_cands(d.row(a), d.row(b), dab, dw, sa, sb, cand, i as u32, tie);
+                award_cands(d.row(a), d.row(b), dab, dw, sa, sb, cand, i as u32, tie, sem);
                 reweighted += 1;
             }
         }
@@ -1457,26 +1494,29 @@ mod tests {
         let d = distmat::random_tie_free(n, 77);
         let dtied = distmat::random_tied(n, 78, 4);
         for (dist, tie) in [(&d, TieMode::Strict), (&dtied, TieMode::Split)] {
-            for x in 0..4 {
-                for y in (x + 1)..6 {
-                    let dxy = dist[(x, y)];
-                    let mut ra = vec![0.0f64; n];
-                    let mut rb = vec![0.0f64; n];
-                    let mut ba = vec![0.0f64; n];
-                    let mut bb = vec![0.0f64; n];
-                    let w = 1.0 / 7.0;
-                    ReferenceUpdate.award(
-                        dist.row(x), dist.row(y), dxy, w, &mut ra, &mut rb, 0, n, 8, tie,
-                    );
-                    BlockedBranchFreeUpdate.award(
-                        dist.row(x), dist.row(y), dxy, w, &mut ba, &mut bb, 0, n, 8, tie,
-                    );
-                    assert_eq!(ra, ba, "({x},{y}) {tie:?}");
-                    assert_eq!(rb, bb, "({x},{y}) {tie:?}");
-                    assert_eq!(
-                        ReferenceUpdate.count_focus(dist.row(x), dist.row(y), dxy, tie),
-                        BlockedBranchFreeUpdate.count_focus(dist.row(x), dist.row(y), dxy, tie),
-                    );
+            for sem in CohesionSemantics::ALL {
+                for x in 0..4 {
+                    for y in (x + 1)..6 {
+                        let dxy = dist[(x, y)];
+                        let mut ra = vec![0.0f64; n];
+                        let mut rb = vec![0.0f64; n];
+                        let mut ba = vec![0.0f64; n];
+                        let mut bb = vec![0.0f64; n];
+                        let w = 1.0 / 7.0;
+                        ReferenceUpdate.award(
+                            dist.row(x), dist.row(y), dxy, w, &mut ra, &mut rb, 0, n, 8, tie, sem,
+                        );
+                        BlockedBranchFreeUpdate.award(
+                            dist.row(x), dist.row(y), dxy, w, &mut ba, &mut bb, 0, n, 8, tie, sem,
+                        );
+                        assert_eq!(ra, ba, "({x},{y}) {tie:?} {sem:?}");
+                        assert_eq!(rb, bb, "({x},{y}) {tie:?} {sem:?}");
+                        let eff = sem.effective_tie(tie);
+                        assert_eq!(
+                            ReferenceUpdate.count_focus(dist.row(x), dist.row(y), dxy, eff),
+                            BlockedBranchFreeUpdate.count_focus(dist.row(x), dist.row(y), dxy, eff),
+                        );
+                    }
                 }
             }
         }
@@ -1674,6 +1714,85 @@ mod tests {
         // The empty batch is a no-op.
         assert_eq!(eng.insert_batch(&[]).unwrap(), 8);
         assert_eq!(eng.n(), 8);
+    }
+
+    #[test]
+    fn batch_drift_accounting_matches_sequential_inserts() {
+        // Regression (satellite bugfix): insert_batch used to multiply
+        // each touched pair's drift charge by n + batch_size, charging
+        // one rescale per batch item even though the shared scan
+        // rescales each pair's old members exactly once.
+        let m = 5usize;
+        let seed = Mat::from_fn(m, m, |a, b| {
+            if a == b {
+                0.0
+            } else {
+                1.0 + 0.07 * (a + b) as f32 + 0.013 * a.abs_diff(b) as f32
+            }
+        });
+        // q1 sits inside every seed pair's focus (its distances are far
+        // below every pairwise distance); q2 is far from everything and
+        // joins no focus at all — so the batch and the sequential
+        // stream perform the exact same set of rescale sweeps.
+        let q1: Vec<f32> = (0..m).map(|x| 0.01 + 0.001 * x as f32).collect();
+        let q2: Vec<f32> = (0..=m).map(|x| 1000.0 + x as f32).collect();
+        let rows: Vec<&[f32]> = vec![&q1, &q2];
+        let mut batch = seeded(Algorithm::OptimizedPairwise, &seed, 8);
+        batch.insert_batch(&rows).unwrap();
+        let mut seq = seeded(Algorithm::OptimizedPairwise, &seed, 8);
+        for row in &rows {
+            seq.insert_row(row).unwrap();
+        }
+        assert!(batch.drift_estimate() > 0.0);
+        assert_eq!(
+            batch.drift_estimate(),
+            seq.drift_estimate(),
+            "one reweight per touched pair, not per batch item"
+        );
+        assert_eq!(batch.cohesion().as_slice(), seq.cohesion().as_slice());
+    }
+
+    #[test]
+    fn incremental_semantics_match_the_batch_oracle() {
+        // Every semantics: seed + insert + remove must track the naive
+        // batch oracle under the same hook.
+        let master = distmat::random_duplicated(14, 21, 3);
+        for sem in CohesionSemantics::ALL {
+            let cfg = PaldConfig {
+                algorithm: Algorithm::OptimizedPairwise,
+                tie_mode: TieMode::Split,
+                semantics: sem,
+                threads: 1,
+                ..Default::default()
+            };
+            let mut eng = IncrementalPald::from_session(
+                Session::new(cfg).unwrap(),
+                Validation::Strict,
+                &master.slice_to(13, 13),
+                16,
+                None,
+            )
+            .unwrap();
+            assert_eq!(eng.semantics(), sem);
+            eng.insert_row(&master.row(13)[..13]).unwrap();
+            let want = naive::pairwise_sem(&master, TieMode::Split, sem);
+            let got = eng.cohesion();
+            assert!(
+                got.allclose(&want, 1e-4, 1e-5),
+                "{sem:?} insert maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+            eng.remove(4).unwrap();
+            let keep: Vec<usize> = (0..14).filter(|&k| k != 4).collect();
+            let reduced = Mat::from_fn(13, 13, |a, b| master[(keep[a], keep[b])]);
+            let want = naive::pairwise_sem(&reduced, TieMode::Split, sem);
+            let got = eng.cohesion();
+            assert!(
+                got.allclose(&want, 1e-4, 1e-5),
+                "{sem:?} remove maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::pald::knn::SparseRung;
 use crate::pald::workspace::Workspace;
 use crate::pald::{
     blocked, branchfree, hybrid, naive, optimized, parallel_pairwise, parallel_triplet, simd,
-    TieMode,
+    CohesionSemantics, TieMode,
 };
 use crate::sim::machine::{pairwise_time, triplet_time, MachineParams, NumaMode};
 use crate::sim::traffic;
@@ -85,6 +85,12 @@ pub struct KernelMeta {
 pub struct ExecParams {
     /// Distance-tie handling.
     pub tie: TieMode,
+    /// Cohesion contribution semantics (DESIGN.md §15).  Non-classic
+    /// semantics force split-style `<=` focus membership, so every
+    /// kernel resolves `semantics.effective_tie(tie)` before comparing;
+    /// the planner multiplies [`CohesionSemantics::cost_factor`] into
+    /// its predictions.
+    pub semantics: CohesionSemantics,
     /// Pairwise block size / triplet focus-pass block size b̂ (0 = default).
     pub block: usize,
     /// Triplet cohesion-pass block size b̃ (0 = same as `block`).
@@ -227,7 +233,7 @@ impl CohesionKernel for NaivePairwiseK {
         (0, 0)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, _ws: &mut Workspace, out: &mut Mat) {
-        naive::pairwise_into(d, p.tie, out);
+        naive::pairwise_into(d, p.tie, p.semantics, out);
     }
 }
 
@@ -247,7 +253,7 @@ impl CohesionKernel for NaiveTripletK {
         (0, 0)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        naive::triplet_into(d, p.tie, ws, out);
+        naive::triplet_into(d, p.tie, p.semantics, ws, out);
     }
 }
 
@@ -267,7 +273,7 @@ impl CohesionKernel for BlockedPairwiseK {
         pairwise_blocks(m, n)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        blocked::pairwise_blocked_into(d, p.tie, p.block, ws, out);
+        blocked::pairwise_blocked_into(d, p.tie, p.semantics, p.block, ws, out);
     }
 }
 
@@ -287,7 +293,7 @@ impl CohesionKernel for BlockedTripletK {
         triplet_blocks(m, n)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        blocked::triplet_blocked_into(d, p.tie, p.block, p.block2_or_block(), ws, out);
+        blocked::triplet_blocked_into(d, p.tie, p.semantics, p.block, p.block2_or_block(), ws, out);
     }
 }
 
@@ -307,7 +313,7 @@ impl CohesionKernel for BranchFreePairwiseK {
         (0, 0)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, _ws: &mut Workspace, out: &mut Mat) {
-        branchfree::pairwise_branchfree_into(d, p.tie, out);
+        branchfree::pairwise_branchfree_into(d, p.tie, p.semantics, out);
     }
 }
 
@@ -327,7 +333,7 @@ impl CohesionKernel for BranchFreeTripletK {
         (0, 0)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        branchfree::triplet_branchfree_into(d, p.tie, ws, out);
+        branchfree::triplet_branchfree_into(d, p.tie, p.semantics, ws, out);
     }
 }
 
@@ -347,7 +353,7 @@ impl CohesionKernel for OptimizedPairwiseK {
         pairwise_blocks(m, n)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        optimized::pairwise_optimized_into(d, p.tie, p.block, ws, out);
+        optimized::pairwise_optimized_into(d, p.tie, p.semantics, p.block, ws, out);
     }
 }
 
@@ -367,7 +373,7 @@ impl CohesionKernel for OptimizedTripletK {
         triplet_blocks(m, n)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        optimized::triplet_optimized_into(d, p.tie, p.block, p.block2_or_block(), ws, out);
+        optimized::triplet_optimized_into(d, p.tie, p.semantics, p.block, p.block2_or_block(), ws, out);
     }
 }
 
@@ -390,7 +396,7 @@ impl CohesionKernel for SimdPairwiseK {
         pairwise_blocks(m, n)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        simd::pairwise_simd_into(d, p.tie, p.block, ws, out);
+        simd::pairwise_simd_into(d, p.tie, p.semantics, p.block, ws, out);
     }
 }
 
@@ -411,7 +417,7 @@ impl CohesionKernel for SimdTripletK {
         triplet_blocks(m, n)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        simd::triplet_simd_into(d, p.tie, p.block, p.block2_or_block(), ws, out);
+        simd::triplet_simd_into(d, p.tie, p.semantics, p.block, p.block2_or_block(), ws, out);
     }
 }
 
@@ -431,7 +437,7 @@ impl CohesionKernel for ParallelPairwiseK {
         pairwise_blocks(m, n)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        parallel_pairwise::pairwise_parallel_into(d, p.tie, p.block, p.threads, ws, out);
+        parallel_pairwise::pairwise_parallel_into(d, p.tie, p.semantics, p.block, p.threads, ws, out);
     }
 }
 
@@ -462,6 +468,7 @@ impl CohesionKernel for ParallelTripletK {
         parallel_triplet::triplet_parallel_into(
             d,
             p.tie,
+            p.semantics,
             p.block,
             p.block2_or_block(),
             p.threads,
@@ -495,7 +502,7 @@ impl CohesionKernel for HybridK {
         (bh, b)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        hybrid::hybrid_sequential_into(d, p.tie, p.block, p.block2_or_block(), ws, out);
+        hybrid::hybrid_sequential_into(d, p.tie, p.semantics, p.block, p.block2_or_block(), ws, out);
     }
 }
 
@@ -528,7 +535,7 @@ impl CohesionKernel for ParallelHybridK {
         (bh, b)
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
-        hybrid::hybrid_parallel_into(d, p.tie, p.block, p.block2_or_block(), p.threads, ws, out);
+        hybrid::hybrid_parallel_into(d, p.tie, p.semantics, p.block, p.block2_or_block(), p.threads, ws, out);
     }
 }
 
@@ -580,6 +587,7 @@ impl CohesionKernel for KnnPairwiseK {
             scratch,
             d,
             p.tie,
+            p.semantics,
             p.k,
             SparseRung::Reference,
             false,
@@ -612,6 +620,7 @@ impl CohesionKernel for KnnTripletK {
             scratch,
             d,
             p.tie,
+            p.semantics,
             p.k,
             SparseRung::Reference,
             true,
@@ -644,6 +653,7 @@ impl CohesionKernel for KnnOptPairwiseK {
             scratch,
             d,
             p.tie,
+            p.semantics,
             p.k,
             SparseRung::Masked,
             false,
@@ -675,6 +685,7 @@ impl CohesionKernel for KnnOptTripletK {
             scratch,
             d,
             p.tie,
+            p.semantics,
             p.k,
             SparseRung::Masked,
             true,
@@ -712,6 +723,7 @@ impl CohesionKernel for KnnSimdPairwiseK {
             scratch,
             d,
             p.tie,
+            p.semantics,
             p.k,
             SparseRung::Simd,
             false,
@@ -773,7 +785,9 @@ impl CohesionKernel for KnnParPairwiseK {
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
         let Workspace { knn: scratch, phases, .. } = ws;
-        knn::sparse_support_parallel_into(scratch, d, p.tie, p.k, false, p.threads, out, phases);
+        knn::sparse_support_parallel_into(
+            scratch, d, p.tie, p.semantics, p.k, false, p.threads, out, phases,
+        );
     }
 }
 
@@ -796,7 +810,9 @@ impl CohesionKernel for KnnParTripletK {
     }
     fn compute_into(&self, d: &Mat, p: &ExecParams, ws: &mut Workspace, out: &mut Mat) {
         let Workspace { knn: scratch, phases, .. } = ws;
-        knn::sparse_support_parallel_into(scratch, d, p.tie, p.k, true, p.threads, out, phases);
+        knn::sparse_support_parallel_into(
+            scratch, d, p.tie, p.semantics, p.k, true, p.threads, out, phases,
+        );
     }
 }
 
@@ -866,6 +882,7 @@ mod tests {
         let want = naive::pairwise(&d, TieMode::Strict);
         let p = ExecParams {
             tie: TieMode::Strict,
+            semantics: CohesionSemantics::Classic,
             block: 8,
             block2: 4,
             threads: 3,
@@ -887,10 +904,44 @@ mod tests {
     }
 
     #[test]
+    fn every_kernel_agrees_with_the_semantics_oracle_via_trait_path() {
+        // Smoke-level: each registry rung under each semantics matches
+        // the naive-pairwise oracle run under the same hook (the
+        // conformance battery pins the bit-level contract).
+        let n = 20;
+        let d = distmat::random_duplicated(n, 310, 3);
+        let mut ws = Workspace::new();
+        for sem in CohesionSemantics::ALL {
+            let want = naive::pairwise_sem(&d, TieMode::Split, sem);
+            let p = ExecParams {
+                tie: TieMode::Split,
+                semantics: sem,
+                block: 8,
+                block2: 4,
+                threads: 2,
+                k: 0,
+                backend: Backend::Auto,
+            };
+            for k in REGISTRY {
+                let mut c = Mat::zeros(n, n);
+                k.compute_into(&d, &p, &mut ws, &mut c);
+                crate::pald::normalize(&mut c);
+                assert!(
+                    c.allclose(&want, 1e-4, 1e-5),
+                    "{} {sem:?} maxdiff={}",
+                    k.name(),
+                    c.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
     fn costs_are_positive_and_ordered() {
         let mp = MachineParams::xeon_6226r();
         let p = ExecParams {
             tie: TieMode::Strict,
+            semantics: CohesionSemantics::Classic,
             block: 128,
             block2: 64,
             threads: 1,
@@ -957,6 +1008,7 @@ mod tests {
         for threads in [1usize, 4] {
             let p = ExecParams {
                 tie: TieMode::Strict,
+                semantics: CohesionSemantics::Classic,
                 block: 8,
                 block2: 0,
                 threads,
@@ -1005,6 +1057,7 @@ mod tests {
         let mp = MachineParams::xeon_6226r();
         let p = ExecParams {
             tie: TieMode::Strict,
+            semantics: CohesionSemantics::Classic,
             block: 128,
             block2: 64,
             threads: 1,

@@ -39,7 +39,7 @@ use crate::pald::input::{metric_pair, Metric};
 use crate::pald::knn::graph::NeighborGraph;
 use crate::pald::knn::merge_sorted;
 use crate::pald::workspace::PhaseTimes;
-use crate::pald::{in_focus, TieMode};
+use crate::pald::{in_focus, CohesionSemantics, TieMode};
 use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
 
 /// Compressed-sparse-row f32 matrix with a symmetric pattern: row `x`
@@ -176,9 +176,11 @@ pub(crate) fn sparse_cohesion_csr(
     oracle: &DistOracle<'_>,
     g: &NeighborGraph,
     tie: TieMode,
+    sem: CohesionSemantics,
     threads: usize,
     phases: &mut PhaseTimes,
 ) -> CsrMatrix {
+    let tie = sem.effective_tie(tie);
     let n = g.n();
     debug_assert_eq!(oracle.n(), n);
     debug_assert!(n >= 2);
@@ -328,7 +330,7 @@ pub(crate) fn sparse_cohesion_csr(
                                 let (dl, dh) =
                                     if x < p { (dxz, dpz) } else { (dpz, dxz) };
                                 let r = m(dl <= dxy || dh <= dxy);
-                                let s = m(dl < dh) + 0.5 * m(dl == dh);
+                                let s = sem.share_x(dl, dh);
                                 let rw = r * w;
                                 scatter[z] += if x < p { rw * s } else { rw * (1.0 - s) };
                             }
@@ -452,7 +454,10 @@ mod tests {
         let mut scratch = KnnScratch::new();
         let mut out = Mat::zeros(n, n);
         let mut phases = PhaseTimes::default();
-        sparse_support_parallel_into(&mut scratch, d, tie, k, false, threads, &mut out, &mut phases);
+        sparse_support_parallel_into(
+            &mut scratch, d, tie, CohesionSemantics::Classic, k, false, threads, &mut out,
+            &mut phases,
+        );
         normalize(&mut out);
         out
     }
@@ -468,6 +473,7 @@ mod tests {
                 &DistOracle::Dense(&d),
                 &g,
                 tie,
+                CohesionSemantics::Classic,
                 threads,
                 &mut phases,
             );
@@ -488,10 +494,49 @@ mod tests {
                 &DistOracle::Points(&pts, Metric::Euclidean),
                 &g,
                 tie,
+                CohesionSemantics::Classic,
                 threads,
                 &mut PhaseTimes::default(),
             );
             assert_eq!(csr, csr_pts, "points oracle diverged (n={n} k={k} p={threads})");
+        }
+    }
+
+    #[test]
+    fn csr_matches_sequential_sparse_kernels_under_every_semantics() {
+        let n = 24;
+        let k = 5;
+        let pts = distmat::gaussian_clusters(4, &[n / 2, n - n / 2], &[0.5, 0.5], 3.0, 17);
+        let d = distmat::euclidean(&pts);
+        let g = NeighborGraph::build(&d, k).unwrap();
+        for sem in CohesionSemantics::ALL {
+            let mut scratch = KnnScratch::new();
+            let mut dense = Mat::zeros(n, n);
+            let mut phases = PhaseTimes::default();
+            sparse_support_parallel_into(
+                &mut scratch, &d, TieMode::Split, sem, k, false, 1, &mut dense, &mut phases,
+            );
+            normalize(&mut dense);
+            for threads in [1usize, 3] {
+                let csr = sparse_cohesion_csr(
+                    &DistOracle::Dense(&d),
+                    &g,
+                    TieMode::Split,
+                    sem,
+                    threads,
+                    &mut PhaseTimes::default(),
+                );
+                let got = csr.to_dense();
+                for x in 0..n {
+                    for z in 0..n {
+                        assert_eq!(
+                            got[(x, z)].to_bits(),
+                            dense[(x, z)].to_bits(),
+                            "{sem:?} p={threads} cell ({x},{z})"
+                        );
+                    }
+                }
+            }
         }
     }
 
@@ -519,6 +564,7 @@ mod tests {
             &DistOracle::Dense(&d),
             &g,
             TieMode::Strict,
+            CohesionSemantics::Classic,
             3,
             &mut PhaseTimes::default(),
         );
@@ -538,6 +584,7 @@ mod tests {
             &DistOracle::Dense(&d),
             &g,
             TieMode::Split,
+            CohesionSemantics::Classic,
             2,
             &mut PhaseTimes::default(),
         );

@@ -44,7 +44,7 @@ use crate::pald::blocked::resolve_block;
 use crate::pald::knn::graph::{merge_sorted, unpack_edge, GraphScratch, NeighborGraph};
 use crate::pald::simd;
 use crate::pald::workspace::PhaseTimes;
-use crate::pald::{in_focus, normalize, TieMode};
+use crate::pald::{in_focus, normalize, CohesionSemantics, TieMode};
 use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
 
 /// What one truncated computation actually did: the clamped `k`, the
@@ -227,7 +227,9 @@ fn count_cands_masked(dx: &[f32], dy: &[f32], dxy: f32, cand: &[u32], tie: TieMo
 
 /// Branchy support award over the candidate list — the exact expression
 /// sequence of [`naive::pairwise`](crate::pald::naive::pairwise)'s
-/// inner z-loop, restricted to candidates.
+/// inner z-loop, restricted to candidates.  The split arm routes the
+/// award through [`CohesionSemantics::share_x`] (classic semantics
+/// reproduce the historic 1 / 0.5-split arithmetic bit-for-bit).
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
 fn award_cands_reference(
@@ -239,7 +241,9 @@ fn award_cands_reference(
     cy: &mut [f32],
     cand: &[u32],
     tie: TieMode,
+    sem: CohesionSemantics,
 ) {
+    let tie = sem.effective_tie(tie);
     for &zu in cand {
         let z = zu as usize;
         let dxz = dx[z];
@@ -256,14 +260,9 @@ fn award_cands_reference(
                 }
             }
             TieMode::Split => {
-                if dxz < dyz {
-                    cx[z] += w;
-                } else if dyz < dxz {
-                    cy[z] += w;
-                } else {
-                    cx[z] += 0.5 * w;
-                    cy[z] += 0.5 * w;
-                }
+                let s = sem.share_x(dxz, dyz);
+                cx[z] += w * s;
+                cy[z] += w * (1.0 - s);
             }
         }
     }
@@ -296,7 +295,9 @@ fn award_cands_masked(
     cand: &[u32],
     block: usize,
     tie: TieMode,
+    sem: CohesionSemantics,
 ) {
+    let tie = sem.effective_tie(tie);
     for chunk in cand.chunks(block.max(1)) {
         match tie {
             TieMode::Strict => {
@@ -317,7 +318,7 @@ fn award_cands_masked(
                     let dxz = dx[z];
                     let dyz = dy[z];
                     let r = m((dxz <= dxy) | (dyz <= dxy));
-                    let s = m(dxz < dyz) + 0.5 * m(dxz == dyz);
+                    let s = sem.share_x(dxz, dyz);
                     let rw = r * w;
                     cx[z] += rw * s;
                     cy[z] += rw * (1.0 - s);
@@ -338,6 +339,7 @@ pub(crate) fn sparse_support_into(
     scratch: &mut KnnScratch,
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     k: usize,
     rung: SparseRung,
     two_pass: bool,
@@ -345,6 +347,7 @@ pub(crate) fn sparse_support_into(
     out: &mut Mat,
     phases: &mut PhaseTimes,
 ) {
+    let tie = sem.effective_tie(tie);
     let n = d.rows();
     assert_eq!(n, d.cols());
     out.as_mut_slice().fill(0.0);
@@ -388,9 +391,9 @@ pub(crate) fn sparse_support_into(
                 e += 1;
                 let (cx, cy) = out.two_rows_mut(x, y);
                 if rung == SparseRung::Reference {
-                    award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, cand, tie);
+                    award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, cand, tie, sem);
                 } else {
-                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie);
+                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie, sem);
                 }
             }
         }
@@ -412,9 +415,9 @@ pub(crate) fn sparse_support_into(
                 let w = 1.0 / u as f32;
                 let (cx, cy) = out.two_rows_mut(x, y);
                 if rung == SparseRung::Reference {
-                    award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, cand, tie);
+                    award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, cand, tie, sem);
                 } else {
-                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie);
+                    award_cands_masked(d.row(x), d.row(y), dxy, w, cx, cy, cand, b, tie, sem);
                 }
             }
         }
@@ -485,17 +488,19 @@ pub(crate) fn sparse_support_parallel_into(
     scratch: &mut KnnScratch,
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     k: usize,
     two_pass: bool,
     threads: usize,
     out: &mut Mat,
     phases: &mut PhaseTimes,
 ) {
+    let tie = sem.effective_tie(tie);
     let threads = threads.max(1);
     if threads == 1 {
         // Every sparse rung is bit-identical, so the sequential
         // fallback changes nothing but the schedule.
-        sparse_support_into(scratch, d, tie, k, SparseRung::Masked, two_pass, 0, out, phases);
+        sparse_support_into(scratch, d, tie, sem, k, SparseRung::Masked, two_pass, 0, out, phases);
         return;
     }
     let n = d.rows();
@@ -599,10 +604,9 @@ pub(crate) fn sparse_support_parallel_into(
                 let dyz = dy[z];
                 let (r, s) = match tie {
                     TieMode::Strict => (m((dxz < dxy) | (dyz < dxy)), m(dxz < dyz)),
-                    TieMode::Split => (
-                        m((dxz <= dxy) | (dyz <= dxy)),
-                        m(dxz < dyz) + 0.5 * m(dxz == dyz),
-                    ),
+                    TieMode::Split => {
+                        (m((dxz <= dxy) | (dyz <= dxy)), sem.share_x(dxz, dyz))
+                    }
                 };
                 let rw = r * w;
                 // SAFETY: columns [zlo, zhi) of every row of C belong
@@ -628,8 +632,21 @@ pub(crate) fn sparse_support_parallel_into(
 /// Unnormalized truncated support over an *explicit* graph — the batch
 /// oracle the incremental engine's truncated updates are verified
 /// against (same pair order and candidate semantics as the registered
-/// sparse kernels, reference rung).
+/// sparse kernels, reference rung).  [`support_over_graph`] runs classic
+/// semantics; [`support_over_graph_sem`] takes the semantics explicitly.
 pub fn support_over_graph(d: &Mat, g: &NeighborGraph, tie: TieMode) -> Mat {
+    support_over_graph_sem(d, g, tie, CohesionSemantics::Classic)
+}
+
+/// [`support_over_graph`] under an explicit [`CohesionSemantics`] — the
+/// truncated oracle for non-classic conformance runs.
+pub fn support_over_graph_sem(
+    d: &Mat,
+    g: &NeighborGraph,
+    tie: TieMode,
+    sem: CohesionSemantics,
+) -> Mat {
+    let tie = sem.effective_tie(tie);
     let n = d.rows();
     assert_eq!(n, g.n(), "graph/matrix size mismatch");
     let mut out = Mat::zeros(n, n);
@@ -645,7 +662,7 @@ pub fn support_over_graph(d: &Mat, g: &NeighborGraph, tie: TieMode) -> Mat {
             let u = count_cands_reference(d.row(x), d.row(y), dxy, &cand, tie);
             let w = 1.0 / u as f32;
             let (cx, cy) = out.two_rows_mut(x, y);
-            award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, &cand, tie);
+            award_cands_reference(d.row(x), d.row(y), dxy, w, cx, cy, &cand, tie, sem);
         }
     }
     out
@@ -691,14 +708,25 @@ mod tests {
 
     const RUNGS: [SparseRung; 3] = [SparseRung::Reference, SparseRung::Masked, SparseRung::Simd];
 
-    fn run(d: &Mat, tie: TieMode, k: usize, rung: SparseRung, two_pass: bool) -> Mat {
+    fn run_sem(
+        d: &Mat,
+        tie: TieMode,
+        sem: CohesionSemantics,
+        k: usize,
+        rung: SparseRung,
+        two_pass: bool,
+    ) -> Mat {
         let n = d.rows();
         let mut scratch = KnnScratch::new();
         let mut out = Mat::zeros(n, n);
         let mut phases = PhaseTimes::default();
-        sparse_support_into(&mut scratch, d, tie, k, rung, two_pass, 8, &mut out, &mut phases);
+        sparse_support_into(&mut scratch, d, tie, sem, k, rung, two_pass, 8, &mut out, &mut phases);
         normalize(&mut out);
         out
+    }
+
+    fn run(d: &Mat, tie: TieMode, k: usize, rung: SparseRung, two_pass: bool) -> Mat {
+        run_sem(d, tie, CohesionSemantics::Classic, k, rung, two_pass)
     }
 
     #[test]
@@ -725,6 +753,25 @@ mod tests {
     }
 
     #[test]
+    fn full_k_matches_the_dense_oracle_under_every_semantics() {
+        let n = 22;
+        let d = distmat::random_duplicated(n, 41, 3);
+        for sem in CohesionSemantics::ALL {
+            let want = naive::pairwise_sem(&d, TieMode::Split, sem);
+            for rung in RUNGS {
+                for two_pass in [false, true] {
+                    let got = run_sem(&d, TieMode::Split, sem, 0, rung, two_pass);
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "rung={rung:?} tp={two_pass} {sem:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn all_variants_are_bit_identical_at_small_k() {
         let n = 30;
         let d = distmat::random_tie_free(n, 5);
@@ -738,11 +785,24 @@ mod tests {
     }
 
     fn run_par(d: &Mat, tie: TieMode, k: usize, two_pass: bool, threads: usize) -> Mat {
+        run_par_sem(d, tie, CohesionSemantics::Classic, k, two_pass, threads)
+    }
+
+    fn run_par_sem(
+        d: &Mat,
+        tie: TieMode,
+        sem: CohesionSemantics,
+        k: usize,
+        two_pass: bool,
+        threads: usize,
+    ) -> Mat {
         let n = d.rows();
         let mut scratch = KnnScratch::new();
         let mut out = Mat::zeros(n, n);
         let mut phases = PhaseTimes::default();
-        sparse_support_parallel_into(&mut scratch, d, tie, k, two_pass, threads, &mut out, &mut phases);
+        sparse_support_parallel_into(
+            &mut scratch, d, tie, sem, k, two_pass, threads, &mut out, &mut phases,
+        );
         normalize(&mut out);
         out
     }
@@ -773,6 +833,21 @@ mod tests {
     }
 
     #[test]
+    fn parallel_is_bit_identical_to_sequential_under_every_semantics() {
+        let n = 27;
+        let d = distmat::random_duplicated(n, 29, 3);
+        for sem in CohesionSemantics::ALL {
+            for k in [4usize, n - 1] {
+                let want = run_sem(&d, TieMode::Split, sem, k, SparseRung::Reference, false);
+                for threads in [1usize, 2, 4, 8] {
+                    let got = run_par_sem(&d, TieMode::Split, sem, k, false, threads);
+                    assert_eq!(got.as_slice(), want.as_slice(), "p={threads} k={k} {sem:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn parallel_workspace_reuse_is_stable_and_allocation_free() {
         let n = 40;
         let d = distmat::random_tie_free(n, 9);
@@ -780,13 +855,15 @@ mod tests {
         let mut out = Mat::zeros(n, n);
         let mut phases = PhaseTimes::default();
         sparse_support_parallel_into(
-            &mut scratch, &d, TieMode::Strict, 6, true, 4, &mut out, &mut phases,
+            &mut scratch, &d, TieMode::Strict, CohesionSemantics::Classic, 6, true, 4, &mut out,
+            &mut phases,
         );
         let first = out.clone();
         let bytes = scratch.allocated_bytes();
         for _ in 0..3 {
             sparse_support_parallel_into(
-                &mut scratch, &d, TieMode::Strict, 6, true, 4, &mut out, &mut phases,
+                &mut scratch, &d, TieMode::Strict, CohesionSemantics::Classic, 6, true, 4,
+                &mut out, &mut phases,
             );
             assert_eq!(out.as_slice(), first.as_slice(), "repeat run must be bitwise stable");
             assert_eq!(
@@ -829,6 +906,7 @@ mod tests {
             &mut scratch,
             &d,
             TieMode::Strict,
+            CohesionSemantics::Classic,
             3,
             SparseRung::Masked,
             false,
@@ -846,6 +924,7 @@ mod tests {
             &mut scratch,
             &d,
             TieMode::Strict,
+            CohesionSemantics::Classic,
             n - 1,
             SparseRung::Masked,
             false,

@@ -60,4 +60,7 @@ pub use graph::NeighborGraph;
 pub(crate) use kernels::{
     effective_k, sparse_support_into, sparse_support_parallel_into, KnnScratch, SparseRung,
 };
-pub use kernels::{cohesion_over_graph, focus_sizes_over_graph, support_over_graph, KnnReport};
+pub use kernels::{
+    cohesion_over_graph, focus_sizes_over_graph, support_over_graph, support_over_graph_sem,
+    KnnReport,
+};

@@ -81,6 +81,7 @@ pub mod parallel_pairwise;
 pub mod parallel_triplet;
 pub mod planner;
 pub mod result;
+pub mod semantics;
 pub mod session;
 pub mod simd;
 pub mod stream;
@@ -101,6 +102,7 @@ pub use knn::{
 };
 pub use planner::{Plan, Planner};
 pub use result::CohesionResult;
+pub use semantics::{CohesionSemantics, TIE_SPLIT};
 pub use session::Session;
 pub use stream::{InsertRow, LatencyTrace, UpdateStats};
 pub use workspace::Workspace;
@@ -167,12 +169,22 @@ pub(crate) fn normalize(c: &mut Mat) {
 ///
 /// Split-mode subtlety: when two points coincide (`d_xy = 0`), the z = x
 /// visit ties — `d_xz = d_yz = 0` — and the pairwise reference splits the
-/// award 0.5/0.5 between `c_xx` and `c_yx`.  The split branch reproduces
-/// that exactly, so the triplet family agrees with pairwise even on
+/// award half/half between `c_xx` and `c_yx`.  The split branch routes
+/// that through [`CohesionSemantics::share_x`] with `d_xz = 0`,
+/// `d_yz = d_xy`, so the triplet family agrees with pairwise even on
 /// duplicated-point inputs (strict mode is undefined on ties by design).
-pub(crate) fn add_diagonal_contributions(c: &mut Mat, w: &Mat, d: &Mat, tie: TieMode) {
+/// Classic semantics reproduce the old arithmetic bit-for-bit
+/// (`share ∈ {0.5, 1}`); distance-weighted lands on the same values
+/// (`d/(0 + d) = 1` exactly for finite nonzero `d`).
+pub(crate) fn add_diagonal_contributions(
+    c: &mut Mat,
+    w: &Mat,
+    d: &Mat,
+    tie: TieMode,
+    sem: CohesionSemantics,
+) {
     let n = c.rows();
-    match tie {
+    match sem.effective_tie(tie) {
         TieMode::Strict => {
             for x in 0..n {
                 let wrow = w.row(x);
@@ -192,13 +204,10 @@ pub(crate) fn add_diagonal_contributions(c: &mut Mat, w: &Mat, d: &Mat, tie: Tie
                     if y == x {
                         continue;
                     }
-                    if drow[y] == 0.0 {
-                        // Duplicated pair: z = x ties between x and y.
-                        acc += 0.5 * wrow[y];
-                        c[(y, x)] += 0.5 * wrow[y];
-                    } else {
-                        acc += wrow[y];
-                    }
+                    // The z = x visit of pair (x, y): d_xz = 0, d_yz = d_xy.
+                    let s = sem.share_x(0.0, drow[y]);
+                    acc += s * wrow[y];
+                    c[(y, x)] += (1.0 - s) * wrow[y];
                 }
                 c[(x, x)] += acc;
             }

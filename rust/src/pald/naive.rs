@@ -8,23 +8,31 @@ use std::time::Instant;
 
 use crate::core::Mat;
 use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
-use crate::pald::{in_focus, normalize, TieMode};
+use crate::pald::{in_focus, normalize, CohesionSemantics, TieMode};
 
 /// Algorithm 1 (Pairwise Sequential): for every pair (x, y), one pass over
 /// all z to size the local focus, a second pass to award support.
 pub fn pairwise(d: &Mat, tie: TieMode) -> Mat {
+    pairwise_sem(d, tie, CohesionSemantics::Classic)
+}
+
+/// [`pairwise`] under an explicit [`CohesionSemantics`]: the reference
+/// oracle for *every* semantics — non-classic rungs are conformance-tested
+/// against this function under the same share hook.
+pub fn pairwise_sem(d: &Mat, tie: TieMode, sem: CohesionSemantics) -> Mat {
     let n = d.rows();
     let mut c = Mat::zeros(n, n);
-    pairwise_into(d, tie, &mut c);
+    pairwise_into(d, tie, sem, &mut c);
     normalize(&mut c);
     c
 }
 
 /// Unnormalized Algorithm 1 support accumulation into `out` (zeroed here),
 /// the workspace-reuse entry point behind [`pairwise`].
-pub(crate) fn pairwise_into(d: &Mat, tie: TieMode, c: &mut Mat) {
+pub(crate) fn pairwise_into(d: &Mat, tie: TieMode, sem: CohesionSemantics, c: &mut Mat) {
     let n = d.rows();
     assert_eq!(n, d.cols());
+    let tie = sem.effective_tie(tie);
     c.as_mut_slice().fill(0.0);
     for x in 0..(n - 1) {
         for y in (x + 1)..n {
@@ -51,14 +59,9 @@ pub(crate) fn pairwise_into(d: &Mat, tie: TieMode, c: &mut Mat) {
                             }
                         }
                         TieMode::Split => {
-                            if dxz < dyz {
-                                c[(x, z)] += w;
-                            } else if dyz < dxz {
-                                c[(y, z)] += w;
-                            } else {
-                                c[(x, z)] += 0.5 * w;
-                                c[(y, z)] += 0.5 * w;
-                            }
+                            let s = sem.share_x(dxz, dyz);
+                            c[(x, z)] += w * s;
+                            c[(y, z)] += w * (1.0 - s);
                         }
                     }
                 }
@@ -105,16 +108,23 @@ pub fn triplet(d: &Mat, tie: TieMode) -> Mat {
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    triplet_into(d, tie, &mut ws, &mut c);
+    triplet_into(d, tie, CohesionSemantics::Classic, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
 
 /// Unnormalized Algorithm 2 support accumulation into `out` (zeroed here);
 /// U and W live in the workspace.  Records focus/cohesion phase times.
-pub(crate) fn triplet_into(d: &Mat, tie: TieMode, ws: &mut Workspace, c: &mut Mat) {
+pub(crate) fn triplet_into(
+    d: &Mat,
+    tie: TieMode,
+    sem: CohesionSemantics,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
     let n = d.rows();
     assert_eq!(n, d.cols());
+    let tie = sem.effective_tie(tie);
     c.as_mut_slice().fill(0.0);
     ws.ensure_uw(n);
     let Workspace { u, w, phases, .. } = ws;
@@ -197,11 +207,11 @@ pub(crate) fn triplet_into(d: &Mat, tie: TieMode, ws: &mut Workspace, c: &mut Ma
                     }
                     TieMode::Split => {
                         // Pair (x, y), third point z.
-                        split_update(c, x, y, z, dxz, dyz, dxy, w[(x, y)]);
+                        split_update(c, x, y, z, dxz, dyz, dxy, w[(x, y)], sem);
                         // Pair (x, z), third point y.
-                        split_update(c, x, z, y, dxy, dyz, dxz, w[(x, z)]);
+                        split_update(c, x, z, y, dxy, dyz, dxz, w[(x, z)], sem);
                         // Pair (y, z), third point x.
-                        split_update(c, y, z, x, dxy, dxz, dyz, w[(y, z)]);
+                        split_update(c, y, z, x, dxy, dxz, dyz, w[(y, z)], sem);
                     }
                 }
             }
@@ -209,23 +219,29 @@ pub(crate) fn triplet_into(d: &Mat, tie: TieMode, ws: &mut Workspace, c: &mut Ma
     }
     // z ∈ {x, y} contributions (diagonal), which distinct-triplet
     // iteration misses — see `add_diagonal_contributions`.
-    super::add_diagonal_contributions(c, w, d, tie);
+    super::add_diagonal_contributions(c, w, d, tie, sem);
     phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
 /// Split-mode support award for pair (a, b) and third point t, where
 /// `dat`/`dbt` are the distances from t to a/b and `dab` the pair distance.
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn split_update(c: &mut Mat, a: usize, b: usize, t: usize, dat: f32, dbt: f32, dab: f32, w: f32) {
+fn split_update(
+    c: &mut Mat,
+    a: usize,
+    b: usize,
+    t: usize,
+    dat: f32,
+    dbt: f32,
+    dab: f32,
+    w: f32,
+    sem: CohesionSemantics,
+) {
     if dat <= dab || dbt <= dab {
-        if dat < dbt {
-            c[(a, t)] += w;
-        } else if dbt < dat {
-            c[(b, t)] += w;
-        } else {
-            c[(a, t)] += 0.5 * w;
-            c[(b, t)] += 0.5 * w;
-        }
+        let s = sem.share_x(dat, dbt);
+        c[(a, t)] += w * s;
+        c[(b, t)] += w * (1.0 - s);
     }
 }
 

@@ -14,7 +14,7 @@ use crate::pald::branchfree::{
     update_cohesion_branchfree,
 };
 use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
-use crate::pald::{normalize, TieMode};
+use crate::pald::{normalize, CohesionSemantics, TieMode};
 
 /// Optimized pairwise: block-ordered pair iteration (D rows of both blocks
 /// stay cache resident), branch-free inner kernels, integer U tile,
@@ -23,7 +23,7 @@ pub fn pairwise_optimized(d: &Mat, tie: TieMode, b: usize) -> Mat {
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    pairwise_optimized_into(d, tie, b, &mut ws, &mut c);
+    pairwise_optimized_into(d, tie, CohesionSemantics::Classic, b, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
@@ -33,11 +33,13 @@ pub fn pairwise_optimized(d: &Mat, tie: TieMode, b: usize) -> Mat {
 pub(crate) fn pairwise_optimized_into(
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     b: usize,
     ws: &mut Workspace,
     c: &mut Mat,
 ) {
     let n = d.rows();
+    let tie = sem.effective_tie(tie);
     let b = resolve_block(b, n);
     c.as_mut_slice().fill(0.0);
     ws.ensure_tiles(b);
@@ -70,7 +72,7 @@ pub(crate) fn pairwise_optimized_into(
                     let dxy = d[(x, y)];
                     let w = w_tile[(x - xs) * b + (y - ys)];
                     let (cx, cy) = c.two_rows_mut(x, y);
-                    update_cohesion_branchfree(d.row(x), d.row(y), dxy, w, cx, cy, tie);
+                    update_cohesion_branchfree(d.row(x), d.row(y), dxy, w, cx, cy, tie, sem);
                 }
             }
             phases.cohesion_s += t0.elapsed().as_secs_f64();
@@ -153,7 +155,7 @@ pub fn triplet_optimized(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    triplet_optimized_into(d, tie, bhat, btil, &mut ws, &mut c);
+    triplet_optimized_into(d, tie, CohesionSemantics::Classic, bhat, btil, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
@@ -163,12 +165,14 @@ pub fn triplet_optimized(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat
 pub(crate) fn triplet_optimized_into(
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     bhat: usize,
     btil: usize,
     ws: &mut Workspace,
     c: &mut Mat,
 ) {
     let n = d.rows();
+    let tie = sem.effective_tie(tie);
     let bh = resolve_block(bhat, n);
     let bt = resolve_block(btil, n);
     c.as_mut_slice().fill(0.0);
@@ -189,13 +193,13 @@ pub(crate) fn triplet_optimized_into(
         for yb in xb..nbt {
             for zb in yb..nbt {
                 triplet_cohesion_tile_optimized(
-                    d, w, c, ct, tie, xb * bt, yb * bt, zb * bt, bt, n, sa, ta,
+                    d, w, c, ct, tie, sem, xb * bt, yb * bt, zb * bt, bt, n, sa, ta,
                 );
             }
         }
     }
     crate::pald::branchfree::add_transposed(c, ct);
-    super::add_diagonal_contributions(c, w, d, tie);
+    super::add_diagonal_contributions(c, w, d, tie, sem);
     phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
@@ -210,6 +214,7 @@ pub(crate) fn triplet_cohesion_tile_optimized(
     c: &mut Mat,
     ct: &mut Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     xs: usize,
     ys: usize,
     zs: usize,
@@ -227,6 +232,7 @@ pub(crate) fn triplet_cohesion_tile_optimized(
             c.as_mut_ptr(),
             ct.as_mut_ptr(),
             tie,
+            sem,
             xs,
             ys,
             zs,
@@ -254,6 +260,7 @@ pub(crate) unsafe fn triplet_cohesion_tile_raw(
     c_ptr: *mut f32,
     ct_ptr: *mut f32,
     tie: TieMode,
+    sem: CohesionSemantics,
     xs: usize,
     ys: usize,
     zs: usize,
@@ -296,6 +303,7 @@ pub(crate) unsafe fn triplet_cohesion_tile_raw(
                 z_lo,
                 ze,
                 tie,
+                sem,
             );
             unsafe {
                 *c_ptr.add(x * n + y) += cxy_inc;

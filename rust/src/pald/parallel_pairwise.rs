@@ -23,7 +23,7 @@ use crate::core::Mat;
 use crate::pald::blocked::resolve_block;
 use crate::pald::branchfree::mask as m;
 use crate::pald::workspace::Workspace;
-use crate::pald::{normalize, TieMode};
+use crate::pald::{normalize, CohesionSemantics, TieMode};
 use crate::parallel::pool::{parallel_for_ranges, DisjointWriter, Schedule};
 use crate::parallel::reduce::parallel_for_reduce_u32_into;
 
@@ -32,7 +32,7 @@ pub fn pairwise_parallel(d: &Mat, tie: TieMode, b: usize, threads: usize) -> Mat
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    pairwise_parallel_into(d, tie, b, threads, &mut ws, &mut c);
+    pairwise_parallel_into(d, tie, CohesionSemantics::Classic, b, threads, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
@@ -42,12 +42,14 @@ pub fn pairwise_parallel(d: &Mat, tie: TieMode, b: usize, threads: usize) -> Mat
 pub(crate) fn pairwise_parallel_into(
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     b: usize,
     threads: usize,
     ws: &mut Workspace,
     c: &mut Mat,
 ) {
     let n = d.rows();
+    let tie = sem.effective_tie(tie);
     let b = resolve_block(b, n);
     let threads = threads.max(1);
     if threads == 1 {
@@ -55,7 +57,7 @@ pub(crate) fn pairwise_parallel_into(
         // OMP_NUM_THREADS=1 effectively runs): the parallel inner loops
         // trade vectorizability for conflict-freedom, which only pays off
         // with real concurrency.
-        crate::pald::optimized::pairwise_optimized_into(d, tie, b, ws, c);
+        crate::pald::optimized::pairwise_optimized_into(d, tie, sem, b, ws, c);
         return;
     }
     c.as_mut_slice().fill(0.0);
@@ -127,8 +129,7 @@ pub(crate) fn pairwise_parallel_into(
                                 ),
                                 TieMode::Split => (
                                     m((dxz <= dxy) | (dyz <= dxy)),
-                                    m(dxz < dyz)
-                                        + 0.5 * (m(dxz == dyz)),
+                                    sem.share_x(dxz, dyz),
                                 ),
                             };
                             let rw = r * w;
@@ -204,8 +205,9 @@ mod tests {
         let mut ws = Workspace::new();
         let mut c1 = Mat::zeros(n, n);
         let mut c2 = Mat::zeros(n, n);
-        pairwise_parallel_into(&d, TieMode::Strict, 8, 4, &mut ws, &mut c1);
-        pairwise_parallel_into(&d, TieMode::Strict, 8, 4, &mut ws, &mut c2);
+        let sem = CohesionSemantics::Classic;
+        pairwise_parallel_into(&d, TieMode::Strict, sem, 8, 4, &mut ws, &mut c1);
+        pairwise_parallel_into(&d, TieMode::Strict, sem, 8, 4, &mut ws, &mut c2);
         assert_eq!(c1.as_slice(), c2.as_slice());
     }
 }

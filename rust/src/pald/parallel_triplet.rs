@@ -13,7 +13,7 @@ use crate::core::Mat;
 use crate::pald::blocked::resolve_block;
 use crate::pald::optimized::triplet_cohesion_tile_raw;
 use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
-use crate::pald::{normalize, TieMode};
+use crate::pald::{normalize, CohesionSemantics, TieMode};
 use crate::parallel::pool::DisjointWriter;
 use crate::parallel::taskgraph::{execute, tile_id, Task};
 
@@ -29,7 +29,16 @@ pub fn triplet_parallel(
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    triplet_parallel_into(d, tie, bhat, btil, threads, &mut ws, &mut c);
+    triplet_parallel_into(
+        d,
+        tie,
+        CohesionSemantics::Classic,
+        bhat,
+        btil,
+        threads,
+        &mut ws,
+        &mut c,
+    );
     normalize(&mut c);
     c
 }
@@ -38,15 +47,18 @@ pub fn triplet_parallel(
 /// U, W, and CT live in the workspace.  Task-local mask scratch is
 /// allocated per task (tasks run concurrently, so they cannot share the
 /// workspace rows).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn triplet_parallel_into(
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     bhat: usize,
     btil: usize,
     threads: usize,
     ws: &mut Workspace,
     c: &mut Mat,
 ) {
+    let tie = sem.effective_tie(tie);
     let n = d.rows();
     let bh = resolve_block(bhat, n);
     let bt = resolve_block(btil, n);
@@ -54,7 +66,7 @@ pub(crate) fn triplet_parallel_into(
     if threads == 1 {
         // Degenerate to the optimized sequential kernel (see
         // pairwise_parallel); the task-graph machinery has no value at p=1.
-        crate::pald::optimized::triplet_optimized_into(d, tie, bhat, btil, ws, c);
+        crate::pald::optimized::triplet_optimized_into(d, tie, sem, bhat, btil, ws, c);
         return;
     }
     c.as_mut_slice().fill(0.0);
@@ -133,8 +145,8 @@ pub(crate) fn triplet_parallel_into(
                         // are guarded by the same tile ids).
                         unsafe {
                             triplet_cohesion_tile_raw(
-                                d_ref, w_ref, cw.0, ctw.0, tie, xb * bt, yb * bt, zb * bt, bt,
-                                n, &mut sa, &mut ta,
+                                d_ref, w_ref, cw.0, ctw.0, tie, sem, xb * bt, yb * bt, zb * bt,
+                                bt, n, &mut sa, &mut ta,
                             );
                         }
                     }));
@@ -144,7 +156,7 @@ pub(crate) fn triplet_parallel_into(
         execute(tasks, nbt * nbt, threads);
     }
     crate::pald::branchfree::add_transposed(c, ct);
-    super::add_diagonal_contributions(c, w, d, tie);
+    super::add_diagonal_contributions(c, w, d, tie, sem);
     phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 

@@ -11,7 +11,7 @@
 use crate::pald::api::{Algorithm, Backend, PaldConfig, Storage};
 use crate::pald::kernel::{kernel_for, ExecParams};
 use crate::pald::knn::GraphBuild;
-use crate::pald::{simd, TieMode};
+use crate::pald::{simd, CohesionSemantics, TieMode};
 use crate::sim::machine::{MachineParams, NumaMode};
 
 /// A resolved execution plan: concrete kernel + tuned parameters.
@@ -83,6 +83,7 @@ impl Plan {
             backend: resolved_backend(algorithm),
             params: ExecParams {
                 tie: cfg.tie_mode,
+                semantics: cfg.semantics,
                 block: cfg.block,
                 block2: cfg.block2,
                 threads,
@@ -115,6 +116,11 @@ impl Plan {
             None => String::new(),
         };
         let k = if self.params.k > 0 { format!(" k={}", self.params.k) } else { String::new() };
+        let sem = if self.params.semantics != CohesionSemantics::Classic {
+            format!(" semantics={}", self.params.semantics.name())
+        } else {
+            String::new()
+        };
         let sparse_state =
             if self.graph_build != GraphBuild::Exact || self.storage != Storage::Dense {
                 format!(" build={} storage={}", self.graph_build.name(), self.storage.name())
@@ -127,7 +133,7 @@ impl Plan {
             String::new()
         };
         format!(
-            "algorithm={} backend={} block={} block2={} threads={}{k}{sparse_state}{numa}{}",
+            "algorithm={} backend={} block={} block2={} threads={}{k}{sem}{sparse_state}{numa}{}",
             self.algorithm.name(),
             self.backend.name(),
             self.params.block,
@@ -239,10 +245,12 @@ impl Planner {
     /// O(n·k²/p)); `k >= n - 1` is the complete graph — where the dense
     /// kernels are bit-identical and strictly cheaper — so those
     /// requests run dense with `k = 0` in their params.
+    #[allow(clippy::too_many_arguments)]
     pub fn scored_candidates(
         &self,
         n: usize,
         tie: TieMode,
+        sem: CohesionSemantics,
         threads: usize,
         k: usize,
         backend: Backend,
@@ -259,8 +267,13 @@ impl Planner {
                 }
                 let (block, block2) = kernel.default_blocks(n, self.machine.fast_mem_words);
                 let kk = if meta.sparse { k } else { 0 };
-                let params = ExecParams { tie, block, block2, threads, k: kk, backend };
-                let cost = kernel.cost(n, &params, &self.machine);
+                let params =
+                    ExecParams { tie, semantics: sem, block, block2, threads, k: kk, backend };
+                // The semantics axis scales every candidate's cohesion
+                // pass uniformly (see `CohesionSemantics::cost_factor`),
+                // so the ranking is preserved but the prediction is
+                // honest about the per-award divide.
+                let cost = kernel.cost(n, &params, &self.machine) * sem.cost_factor();
                 Some((alg, params, cost))
             })
             .collect()
@@ -270,10 +283,19 @@ impl Planner {
     /// problem on `threads` threads, with truncation (`k > 0`) costed
     /// in as a candidate and the candidate set filtered by the backend
     /// request (DESIGN.md §13).
-    pub fn plan(&self, n: usize, tie: TieMode, threads: usize, k: usize, backend: Backend) -> Plan {
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan(
+        &self,
+        n: usize,
+        tie: TieMode,
+        sem: CohesionSemantics,
+        threads: usize,
+        k: usize,
+        backend: Backend,
+    ) -> Plan {
         let mut best: Option<Plan> = None;
         let mut best_cost = f64::INFINITY;
-        for (alg, params, cost) in self.scored_candidates(n, tie, threads, k, backend) {
+        for (alg, params, cost) in self.scored_candidates(n, tie, sem, threads, k, backend) {
             if cost < best_cost || best.is_none() {
                 best_cost = cost;
                 best = Some(Plan {
@@ -297,11 +319,13 @@ impl Planner {
     pub fn resolve(&self, cfg: &PaldConfig, n: usize) -> Plan {
         if cfg.algorithm == Algorithm::Auto {
             let mut plan = self
-                .plan(n, cfg.tie_mode, cfg.threads.max(1), cfg.k, cfg.backend)
+                .plan(n, cfg.tie_mode, cfg.semantics, cfg.threads.max(1), cfg.k, cfg.backend)
                 .with_overrides(cfg.block, cfg.block2);
             if cfg.block != 0 || cfg.block2 != 0 {
                 let kernel = kernel_for(plan.algorithm).expect("planned kernel registered");
-                plan.predicted_s = Some(kernel.cost(n, &plan.params, &self.machine));
+                plan.predicted_s = Some(
+                    kernel.cost(n, &plan.params, &self.machine) * cfg.semantics.cost_factor(),
+                );
             }
             plan.graph_build = cfg.graph_build;
             plan.storage = cfg.storage;
@@ -328,7 +352,7 @@ mod tests {
 
     #[test]
     fn sequential_plan_is_a_sequential_kernel_with_blocks() {
-        let plan = planner().plan(1024, TieMode::Strict, 1, 0, Backend::CpuScalar);
+        let plan = planner().plan(1024, TieMode::Strict, CohesionSemantics::Classic, 1, 0, Backend::CpuScalar);
         assert!(
             matches!(
                 plan.algorithm,
@@ -343,7 +367,7 @@ mod tests {
 
     #[test]
     fn parallel_plan_uses_threads() {
-        let plan = planner().plan(4096, TieMode::Strict, 16, 0, Backend::CpuScalar);
+        let plan = planner().plan(4096, TieMode::Strict, CohesionSemantics::Classic, 16, 0, Backend::CpuScalar);
         let k = kernel_for(plan.algorithm).unwrap();
         assert!(k.meta().parallel, "expected a parallel kernel, got {}", k.name());
         assert_eq!(plan.params.threads, 16);
@@ -352,7 +376,7 @@ mod tests {
     #[test]
     fn overrides_win_over_tuning() {
         let plan =
-            planner().plan(512, TieMode::Strict, 1, 0, Backend::CpuScalar).with_overrides(33, 17);
+            planner().plan(512, TieMode::Strict, CohesionSemantics::Classic, 1, 0, Backend::CpuScalar).with_overrides(33, 17);
         assert_eq!(plan.params.block, 33);
         assert_eq!(plan.params.block2, 17);
     }
@@ -363,7 +387,7 @@ mod tests {
         // k << n: the O(n·k²) prediction must beat every dense Θ(n³)
         // candidate, sequentially and in parallel.
         for threads in [1usize, 8] {
-            let plan = p.plan(4096, TieMode::Strict, threads, 16, Backend::CpuScalar);
+            let plan = p.plan(4096, TieMode::Strict, CohesionSemantics::Classic, threads, 16, Backend::CpuScalar);
             let kernel = kernel_for(plan.algorithm).unwrap();
             assert!(kernel.meta().sparse, "threads={threads}: got {}", kernel.name());
             assert_eq!(plan.params.k, 16);
@@ -372,11 +396,11 @@ mod tests {
         // candidates, and the plan carries k = 0 (no truncation —
         // semantically exact, since the complete graph is bit-identical
         // to dense).
-        let plan = p.plan(256, TieMode::Strict, 1, 255, Backend::CpuScalar);
+        let plan = p.plan(256, TieMode::Strict, CohesionSemantics::Classic, 1, 255, Backend::CpuScalar);
         assert!(!kernel_for(plan.algorithm).unwrap().meta().sparse);
         assert_eq!(plan.params.k, 0);
         // Split ties stay supported on the sparse path.
-        let plan = p.plan(4096, TieMode::Split, 1, 8, Backend::CpuScalar);
+        let plan = p.plan(4096, TieMode::Split, CohesionSemantics::Classic, 1, 8, Backend::CpuScalar);
         assert!(kernel_for(plan.algorithm).unwrap().meta().sparse);
     }
 
@@ -391,7 +415,7 @@ mod tests {
     fn auto_with_threads_resolves_the_truncated_request() {
         let p = planner();
         for threads in [2usize, 8, 32] {
-            let plan = p.plan(2048, TieMode::Strict, threads, 12, Backend::CpuScalar);
+            let plan = p.plan(2048, TieMode::Strict, CohesionSemantics::Classic, threads, 12, Backend::CpuScalar);
             let kernel = kernel_for(plan.algorithm).unwrap();
             assert!(
                 kernel.meta().sparse,
@@ -402,14 +426,14 @@ mod tests {
             assert_eq!(plan.params.threads, threads);
             // Every scored candidate honors the request.
             for (alg, params, _) in
-                p.scored_candidates(2048, TieMode::Strict, threads, 12, Backend::CpuScalar)
+                p.scored_candidates(2048, TieMode::Strict, CohesionSemantics::Classic, threads, 12, Backend::CpuScalar)
             {
                 assert!(kernel_for(alg).unwrap().meta().sparse, "{}", alg.name());
                 assert_eq!(params.k, 12, "{}", alg.name());
             }
         }
         // Large n, generous thread budget: the knn-par rung wins.
-        let plan = p.plan(8192, TieMode::Strict, 16, 16, Backend::CpuScalar);
+        let plan = p.plan(8192, TieMode::Strict, CohesionSemantics::Classic, 16, 16, Backend::CpuScalar);
         let kernel = kernel_for(plan.algorithm).unwrap();
         assert!(
             kernel.meta().sparse && kernel.meta().parallel,
@@ -507,12 +531,12 @@ mod tests {
         let p = planner();
         // Threaded sparse plan: the knn-par count pass first-touches its
         // edge range partition, so the plan records ThreadMemBind.
-        let plan = p.plan(8192, TieMode::Strict, 16, 16, Backend::CpuScalar);
+        let plan = p.plan(8192, TieMode::Strict, CohesionSemantics::Classic, 16, 16, Backend::CpuScalar);
         assert!(kernel_for(plan.algorithm).unwrap().meta().parallel);
         assert_eq!(plan.numa, NumaMode::ThreadMemBind);
         assert!(plan.describe().contains("numa=threadmembind"), "{}", plan.describe());
         // Sequential plans have nothing to partition.
-        let seq = p.plan(1024, TieMode::Strict, 1, 0, Backend::CpuScalar);
+        let seq = p.plan(1024, TieMode::Strict, CohesionSemantics::Classic, 1, 0, Backend::CpuScalar);
         assert_eq!(seq.numa, NumaMode::ThreadBind);
         assert!(!seq.describe().contains("numa="), "{}", seq.describe());
         // Build/storage requests ride through resolve() and describe().
@@ -537,11 +561,40 @@ mod tests {
     }
 
     #[test]
+    fn semantics_rides_the_plan_and_scales_the_prediction() {
+        let p = planner();
+        let classic =
+            p.plan(1024, TieMode::Strict, CohesionSemantics::Classic, 1, 0, Backend::CpuScalar);
+        let weighted = p.plan(
+            1024,
+            TieMode::Strict,
+            CohesionSemantics::DistanceWeighted,
+            1,
+            0,
+            Backend::CpuScalar,
+        );
+        assert_eq!(weighted.params.semantics, CohesionSemantics::DistanceWeighted);
+        assert!(
+            weighted.predicted_s.unwrap() > classic.predicted_s.unwrap(),
+            "weighted must charge its per-award divide"
+        );
+        assert!(weighted.describe().contains("semantics=weighted"), "{}", weighted.describe());
+        assert!(!classic.describe().contains("semantics="), "{}", classic.describe());
+        // from_config carries the config's semantics verbatim.
+        let cfg = PaldConfig {
+            algorithm: Algorithm::OptimizedTriplet,
+            semantics: CohesionSemantics::RankBased,
+            ..Default::default()
+        };
+        assert_eq!(Plan::from_config(&cfg).params.semantics, CohesionSemantics::RankBased);
+    }
+
+    #[test]
     fn scored_candidates_match_plan_selection() {
         let p = planner();
-        let scored = p.scored_candidates(1024, TieMode::Strict, 4, 0, Backend::Auto);
+        let scored = p.scored_candidates(1024, TieMode::Strict, CohesionSemantics::Classic, 4, 0, Backend::Auto);
         assert!(!scored.is_empty());
-        let plan = p.plan(1024, TieMode::Strict, 4, 0, Backend::Auto);
+        let plan = p.plan(1024, TieMode::Strict, CohesionSemantics::Classic, 4, 0, Backend::Auto);
         let best = scored
             .iter()
             .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
@@ -555,7 +608,7 @@ mod tests {
         // Explicit simd pin: only SIMD-backend kernels compete — dense
         // (an explicit pin is honored even on non-AVX2 hosts, where the
         // kernels dispatch to the portable lane model) ...
-        let plan = p.plan(1024, TieMode::Strict, 1, 0, Backend::CpuSimd);
+        let plan = p.plan(1024, TieMode::Strict, CohesionSemantics::Classic, 1, 0, Backend::CpuSimd);
         assert!(
             matches!(plan.algorithm, Algorithm::SimdPairwise | Algorithm::SimdTriplet),
             "{:?}",
@@ -565,7 +618,7 @@ mod tests {
         assert_eq!(plan.params.backend, Backend::CpuSimd);
         assert!(plan.describe().contains("backend=simd"), "{}", plan.describe());
         // ... and truncating.
-        let plan = p.plan(4096, TieMode::Strict, 1, 16, Backend::CpuSimd);
+        let plan = p.plan(4096, TieMode::Strict, CohesionSemantics::Classic, 1, 16, Backend::CpuSimd);
         assert_eq!(plan.algorithm, Algorithm::KnnSimdPairwise);
         assert_eq!(plan.params.k, 16);
         assert_eq!(plan.backend, Backend::CpuSimd);
@@ -573,7 +626,7 @@ mod tests {
         for threads in [1usize, 8] {
             for k in [0usize, 16] {
                 for (alg, ..) in
-                    p.scored_candidates(2048, TieMode::Strict, threads, k, Backend::CpuScalar)
+                    p.scored_candidates(2048, TieMode::Strict, CohesionSemantics::Classic, threads, k, Backend::CpuScalar)
                 {
                     assert_eq!(
                         kernel_for(alg).unwrap().meta().backend,
@@ -589,7 +642,7 @@ mod tests {
     #[test]
     fn auto_backend_gates_simd_on_feature_detection() {
         let p = planner();
-        let scored = p.scored_candidates(1024, TieMode::Strict, 1, 0, Backend::Auto);
+        let scored = p.scored_candidates(1024, TieMode::Strict, CohesionSemantics::Classic, 1, 0, Backend::Auto);
         let simd_candidates: Vec<_> = scored
             .iter()
             .filter(|(alg, ..)| kernel_for(*alg).unwrap().meta().backend == Backend::CpuSimd)
@@ -610,7 +663,7 @@ mod tests {
         }
         // Either way the plan carries a resolved backend and records
         // the requested one.
-        let plan = p.plan(1024, TieMode::Strict, 1, 0, Backend::Auto);
+        let plan = p.plan(1024, TieMode::Strict, CohesionSemantics::Classic, 1, 0, Backend::Auto);
         assert!(plan.backend == Backend::CpuScalar || plan.backend == Backend::CpuSimd);
         assert_eq!(plan.params.backend, Backend::Auto);
         if !simd::simd_available() {

@@ -26,6 +26,7 @@ use crate::analysis;
 use crate::analysis::StrongTie;
 use crate::core::Mat;
 use crate::pald::api::Backend;
+use crate::pald::semantics::CohesionSemantics;
 use crate::pald::knn::{
     communities_csr, local_depths_csr, strong_ties_csr, universal_threshold_csr, CsrMatrix,
     KnnReport,
@@ -175,6 +176,13 @@ impl CohesionResult {
         self.plan.backend
     }
 
+    /// The cohesion contribution semantics this result was computed
+    /// under (DESIGN.md §15) — classic unless the request said
+    /// otherwise.
+    pub fn semantics(&self) -> CohesionSemantics {
+        self.plan.params.semantics
+    }
+
     /// The neighborhood size a truncated (PKNN) computation actually
     /// ran at — `min(k, n-1)` — or `None` when a dense kernel produced
     /// this result (DESIGN.md §9).
@@ -278,6 +286,7 @@ mod tests {
         assert!(r.times().total_s > 0.0);
         assert_ne!(r.plan().algorithm, Algorithm::Auto);
         assert_eq!(r.backend(), Backend::CpuScalar);
+        assert_eq!(r.semantics(), CohesionSemantics::Classic);
     }
 
     #[test]
@@ -303,7 +312,14 @@ mod tests {
         g.rebuild(&d, 6, &mut gs);
         let mut phases = PhaseTimes::default();
         let csr =
-            sparse_cohesion_csr(&DistOracle::Dense(&d), &g, crate::pald::TieMode::Strict, 1, &mut phases);
+            sparse_cohesion_csr(
+                &DistOracle::Dense(&d),
+                &g,
+                crate::pald::TieMode::Strict,
+                CohesionSemantics::Classic,
+                1,
+                &mut phases,
+            );
         let cfg = PaldConfig { algorithm: Algorithm::KnnOptPairwise, threads: 1, k: 6, ..Default::default() };
         let r = CohesionResult::with_sparse(csr.clone(), phases, Plan::from_config(&cfg), None);
         assert!(r.is_sparse());

@@ -1,0 +1,281 @@
+//! Pluggable cohesion-contribution semantics: generalized PaLD.
+//!
+//! The paper's cohesion computation awards, for each pair `(x, y)` and
+//! each witness `z` in the pair's local focus, a support contribution of
+//! `w = 1/|U_xy|` to whichever endpoint `z` is closer to — split half
+//! and half on a distance tie.  Generalized partitioned local depth
+//! (PAPERS.md, arXiv 2303.10167) observes that this is one member of a
+//! family parameterized by the *contribution function*: any rule mapping
+//! the witness's two distances `(d_xz, d_yz)` to a share of the award.
+//!
+//! [`CohesionSemantics`] is that axis, lifted into a single typed hook.
+//! Every kernel — dense, SIMD, sparse, parallel, incremental — routes
+//! its award through [`CohesionSemantics::share_x`], so no kernel ever
+//! encodes the split constant again (the PR-1 tie bug class).
+//!
+//! # The share function
+//!
+//! `share_x(d_xz, d_yz)` returns the fraction `s ∈ [0, 1]` of the award
+//! that goes to `x`; `y` receives `1 − s`:
+//!
+//! | semantics | share of x | notes |
+//! |-----------|-----------|-------|
+//! | [`Classic`](CohesionSemantics::Classic) | `1` if closer, [`TIE_SPLIT`] on a tie, else `0` | the paper's rule |
+//! | [`RankBased`](CohesionSemantics::RankBased) | same step function | comparison-only: never reads distance magnitudes |
+//! | [`DistanceWeighted`](CohesionSemantics::DistanceWeighted) | `d_yz / (d_xz + d_yz)` (`TIE_SPLIT` when both are 0) | smooth interpolation of the step |
+//!
+//! # Classic is bit-identical to the pre-hook kernels
+//!
+//! Every kernel awards `c_x += w·s` and `c_y += w·(1−s)`.  Under classic
+//! semantics `s ∈ {0, 0.5, 1}`, and each case reproduces the old code's
+//! bits exactly:
+//!
+//! - `w·1.0 == w` and `w·0.0 == +0.0` bitwise for every finite `w ≥ 0`;
+//! - `w·0.5` only decrements the exponent (exact in IEEE-754), matching
+//!   the old `0.5 * w` tie arm;
+//! - adding `+0.0` to an accumulator preserves its bits, because every
+//!   accumulator starts at `+0.0` and only ever receives non-negative
+//!   addends (so it is never `−0.0`).
+//!
+//! The branch-free and SIMD kernels already computed
+//! `s = [d_xz < d_yz] + 0.5·[d_xz == d_yz]` — literally classic
+//! `share_x` — so for them the hook is a pure expression swap.  The
+//! conformance battery pins all of this per rung (`PALD_TEST_SEMANTICS`).
+//!
+//! # Determinism contract
+//!
+//! - **Classic / rank-based:** shares are drawn from `{0, 0.5, 1}`;
+//!   every kernel rung is bit-identical to the naive oracle *in support
+//!   units* under [`TieMode::Split`], and bit-identical run-to-run at
+//!   every thread count (the award passes are column-owned).
+//! - **Distance-weighted:** the share is a single IEEE division, which
+//!   is exactly rounded — so scalar, portable-SIMD, and AVX2 paths agree
+//!   bitwise, and runs are bit-identical run-to-run at every thread
+//!   count.  Across *rungs* the summation order differs (blocked vs
+//!   naive), so cross-rung agreement is to tolerance, exactly as for
+//!   classic semantics on tie-free float inputs.
+//! - **Tie handling is explicit, not inherited:** non-classic semantics
+//!   force [`TieMode::Split`] membership via [`effective_tie`]
+//!   (rank-based *defines* a tie as an exact half split; the weighted
+//!   share is continuous through it), so the strict-mode fast paths stay
+//!   classic-only and the constant can never leak in by accident.
+//!
+//! [`effective_tie`]: CohesionSemantics::effective_tie
+
+use crate::pald::error::PaldError;
+use crate::pald::TieMode;
+
+/// The tie share of the classic rule: half the award to each endpoint.
+///
+/// This is the **only** place the constant lives; kernels must obtain it
+/// through [`CohesionSemantics::share_x`] (the conformance battery greps
+/// the kernels clean).
+pub const TIE_SPLIT: f32 = 0.5;
+
+/// Which contribution rule the cohesion computation awards under.
+///
+/// Selected on [`PaldBuilder::semantics`](crate::pald::PaldBuilder::semantics)
+/// / [`PaldConfig`](crate::pald::PaldConfig) (CLI: `--semantics`), carried
+/// on [`ExecParams`](crate::pald::ExecParams) into every kernel, and
+/// reported back on [`Plan`](crate::pald::Plan) /
+/// [`CohesionResult`](crate::pald::CohesionResult).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CohesionSemantics {
+    /// The paper's rule: the closer endpoint takes the whole award,
+    /// a distance tie splits it [`TIE_SPLIT`]/[`TIE_SPLIT`].  The default,
+    /// and bit-identical to the pre-semantics kernels on every rung.
+    #[default]
+    Classic,
+    /// Comparison-only semantics: identical step function to classic,
+    /// but **defined** to consult only the ordering of `d_xz` vs `d_yz`
+    /// — never their magnitudes — so it is meaningful for triplet-oracle
+    /// inputs with no metric at all.  Ties split exactly in half by
+    /// definition (not by inheriting the classic constant), and focus
+    /// membership always uses the exact `<=` rule (see
+    /// [`effective_tie`](CohesionSemantics::effective_tie)).
+    RankBased,
+    /// Smooth semantics: the award is split in proportion to closeness,
+    /// `x` receiving `d_yz / (d_xz + d_yz)`.  Coincident witnesses
+    /// (`d_xz = d_yz = 0`) take [`TIE_SPLIT`]; a witness equidistant from
+    /// both endpoints likewise lands on exactly `0.5` (`d/(d+d)`), so the
+    /// rule is continuous through ties and needs no tie branch at all.
+    DistanceWeighted,
+}
+
+impl CohesionSemantics {
+    /// Every semantics, in registry/reporting order.
+    pub const ALL: [CohesionSemantics; 3] = [
+        CohesionSemantics::Classic,
+        CohesionSemantics::RankBased,
+        CohesionSemantics::DistanceWeighted,
+    ];
+
+    /// CLI/config name of the semantics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CohesionSemantics::Classic => "classic",
+            CohesionSemantics::RankBased => "rank",
+            CohesionSemantics::DistanceWeighted => "weighted",
+        }
+    }
+
+    /// Parse a CLI/config semantics name with a typed error.  Accepts
+    /// the long aliases `rank-based` and `distance-weighted`.
+    pub fn parse(s: &str) -> Result<CohesionSemantics, PaldError> {
+        match s {
+            "classic" => Ok(CohesionSemantics::Classic),
+            "rank" | "rank-based" => Ok(CohesionSemantics::RankBased),
+            "weighted" | "distance-weighted" => Ok(CohesionSemantics::DistanceWeighted),
+            other => Err(PaldError::UnknownSemantics { name: other.to_string() }),
+        }
+    }
+
+    /// The fraction of one focus award that goes to `x`; `y` receives
+    /// the complement `1 − share`.
+    ///
+    /// This is *the* contribution hook: every kernel's award site is
+    /// `c_x += w * s; c_y += w * (1 - s)` with `s` from here.  Inlined,
+    /// so the classic arm compiles to the same masked FMAs as before.
+    #[inline(always)]
+    pub fn share_x(self, dxz: f32, dyz: f32) -> f32 {
+        match self {
+            CohesionSemantics::Classic | CohesionSemantics::RankBased => {
+                let lt = if dxz < dyz { 1.0f32 } else { 0.0 };
+                let eq = if dxz == dyz { 1.0f32 } else { 0.0 };
+                lt + TIE_SPLIT * eq
+            }
+            CohesionSemantics::DistanceWeighted => {
+                let sum = dxz + dyz;
+                if sum <= 0.0 {
+                    TIE_SPLIT
+                } else {
+                    dyz / sum
+                }
+            }
+        }
+    }
+
+    /// [`share_x`](CohesionSemantics::share_x) widened for the
+    /// incremental engine's f64 support accumulators.
+    ///
+    /// The share is computed in f32 and then widened (exactly), so an
+    /// incremental update awards *the same share* as the batch kernels —
+    /// the batch-vs-incremental oracle stays exact for classic/rank and
+    /// consistent to f32 rounding for distance-weighted.
+    #[inline(always)]
+    pub fn share_x_f64(self, dxz: f32, dyz: f32) -> f64 {
+        self.share_x(dxz, dyz) as f64
+    }
+
+    /// The focus-membership tie mode this semantics actually runs under.
+    ///
+    /// Classic passes the configured [`TieMode`] through (both the
+    /// strict fast path and the exact split path exist for it).
+    /// Non-classic semantics always use the exact `<=` membership rule:
+    /// their tie handling is part of the semantics definition, so the
+    /// strict-mode tie-eliding fast paths stay classic-only.
+    #[inline(always)]
+    pub fn effective_tie(self, tie: TieMode) -> TieMode {
+        match self {
+            CohesionSemantics::Classic => tie,
+            _ => TieMode::Split,
+        }
+    }
+
+    /// Planner cost multiplier relative to classic: the weighted share
+    /// adds a divide per award, which the cost model charges as a flat
+    /// factor on the cohesion pass (measured, not derived; see
+    /// `BENCH_semantics.json`).
+    pub fn cost_factor(&self) -> f64 {
+        match self {
+            CohesionSemantics::Classic | CohesionSemantics::RankBased => 1.0,
+            CohesionSemantics::DistanceWeighted => 1.15,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for sem in CohesionSemantics::ALL {
+            assert_eq!(CohesionSemantics::parse(sem.name()).unwrap(), sem);
+        }
+        assert_eq!(
+            CohesionSemantics::parse("rank-based").unwrap(),
+            CohesionSemantics::RankBased
+        );
+        assert_eq!(
+            CohesionSemantics::parse("distance-weighted").unwrap(),
+            CohesionSemantics::DistanceWeighted
+        );
+        let err = CohesionSemantics::parse("nope").unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn classic_share_is_the_step_function() {
+        let s = CohesionSemantics::Classic;
+        assert_eq!(s.share_x(1.0, 2.0), 1.0);
+        assert_eq!(s.share_x(2.0, 1.0), 0.0);
+        assert_eq!(s.share_x(1.5, 1.5), TIE_SPLIT);
+        assert_eq!(s.share_x(0.0, 0.0), TIE_SPLIT);
+    }
+
+    #[test]
+    fn rank_share_equals_classic_share() {
+        // RankBased is *defined* as the comparison-only step function; it
+        // must agree with classic on every input pair.
+        for &(a, b) in &[(1.0f32, 2.0), (2.0, 1.0), (1.5, 1.5), (0.0, 0.0), (0.0, 3.0)] {
+            assert_eq!(
+                CohesionSemantics::RankBased.share_x(a, b).to_bits(),
+                CohesionSemantics::Classic.share_x(a, b).to_bits(),
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_share_interpolates_and_handles_zero() {
+        let s = CohesionSemantics::DistanceWeighted;
+        assert_eq!(s.share_x(0.0, 0.0), TIE_SPLIT);
+        assert_eq!(s.share_x(1.0, 1.0), 0.5); // d/(d+d) is exactly half
+        assert_eq!(s.share_x(1.0, 3.0), 0.75);
+        assert_eq!(s.share_x(3.0, 1.0), 0.25);
+        // x at distance 0 from a (distinct) witness takes everything —
+        // this is what keeps the diagonal pass identical to classic.
+        assert_eq!(s.share_x(0.0, 2.0), 1.0);
+        assert_eq!(s.share_x(2.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn shares_are_complementary() {
+        for sem in CohesionSemantics::ALL {
+            for &(a, b) in &[(1.0f32, 2.0), (0.25, 0.25), (0.0, 0.0), (5.0, 0.125)] {
+                let s = sem.share_x(a, b);
+                let t = sem.share_x(b, a);
+                assert!((s + t - 1.0).abs() < 1e-6, "{sem:?} {a} {b}: {s} + {t}");
+                assert!((0.0..=1.0).contains(&s));
+            }
+        }
+    }
+
+    #[test]
+    fn effective_tie_is_split_for_non_classic() {
+        use TieMode::*;
+        assert_eq!(CohesionSemantics::Classic.effective_tie(Strict), Strict);
+        assert_eq!(CohesionSemantics::Classic.effective_tie(Split), Split);
+        assert_eq!(CohesionSemantics::RankBased.effective_tie(Strict), Split);
+        assert_eq!(CohesionSemantics::DistanceWeighted.effective_tie(Strict), Split);
+    }
+
+    #[test]
+    fn f64_share_is_the_widened_f32_share() {
+        for sem in CohesionSemantics::ALL {
+            for &(a, b) in &[(1.0f32, 3.0), (0.7, 0.2), (0.0, 0.0)] {
+                assert_eq!(sem.share_x_f64(a, b).to_bits(), (sem.share_x(a, b) as f64).to_bits());
+            }
+        }
+    }
+}

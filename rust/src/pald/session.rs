@@ -147,6 +147,7 @@ impl Session {
         let plan = self.plan_for(n);
         let threads = plan.params.threads.max(1);
         let tie = plan.params.tie;
+        let sem = plan.params.semantics;
         let t_start = Instant::now();
         self.ws.reset_phases();
 
@@ -199,7 +200,7 @@ impl Session {
             Some((pts, metric)) => DistOracle::Points(pts, metric),
             None => DistOracle::Dense(dense_input.unwrap_or(&self.dense)),
         };
-        let csr = sparse_cohesion_csr(&oracle, &ks.graph, tie, threads, phases);
+        let csr = sparse_cohesion_csr(&oracle, &ks.graph, tie, sem, threads, phases);
 
         let report = KnnReport {
             effective_k: ks.graph.k(),

@@ -48,7 +48,7 @@ use std::time::Instant;
 use crate::core::Mat;
 use crate::pald::blocked::resolve_block;
 use crate::pald::workspace::{init_focus, reciprocal_weights_into, Workspace};
-use crate::pald::{normalize, TieMode};
+use crate::pald::{normalize, CohesionSemantics, TieMode};
 
 /// Vector width of the SIMD rung: 8 × f32 (one AVX2 register). The
 /// portable fallback models the same eight lanes in scalar code.
@@ -89,10 +89,12 @@ pub fn count_focus_simd(dx: &[f32], dy: &[f32], dxy: f32, tie: TieMode) -> u32 {
 
 /// Pairwise masked support award for one pair `(x, y)`, SIMD rung.
 ///
-/// Adds `w` to `cx[z]` when `z` is in the pair's focus and supports `x`,
-/// to `cy[z]` when it supports `y` (half each on a [`TieMode::Split`]
-/// tie). Purely elementwise — no reduction — so the result is
-/// bit-identical to the scalar rung for every finite `w`.
+/// Adds `w · s` to `cx[z]` and `w · (1 - s)` to `cy[z]` when `z` is in
+/// the pair's focus, where `s` is [`CohesionSemantics::share_x`] (the
+/// classic step function, or the distance-weighted interpolation).
+/// Purely elementwise — no reduction — so the result is bit-identical to
+/// the scalar rung for every finite `w` and every semantics.
+#[allow(clippy::too_many_arguments)]
 pub fn update_cohesion_simd(
     dx: &[f32],
     dy: &[f32],
@@ -101,14 +103,16 @@ pub fn update_cohesion_simd(
     cx: &mut [f32],
     cy: &mut [f32],
     tie: TieMode,
+    sem: CohesionSemantics,
 ) {
+    let tie = sem.effective_tie(tie);
     #[cfg(target_arch = "x86_64")]
     if std::arch::is_x86_feature_detected!("avx2") {
         // SAFETY: AVX2 support was just verified at runtime.
-        unsafe { avx2::update_cohesion(dx, dy, dxy, w, cx, cy, tie) };
+        unsafe { avx2::update_cohesion(dx, dy, dxy, w, cx, cy, tie, sem) };
         return;
     }
-    portable::update_cohesion(dx, dy, dxy, w, cx, cy, tie)
+    portable::update_cohesion(dx, dy, dxy, w, cx, cy, tie, sem)
 }
 
 /// Sparse (PKNN) candidate-restricted focus count, SIMD rung: the number
@@ -187,7 +191,9 @@ pub(crate) fn triplet_cohesion_simd_row(
     z_lo: usize,
     z_hi: usize,
     tie: TieMode,
+    sem: CohesionSemantics,
 ) -> (f32, f32) {
+    let tie = sem.effective_tie(tie);
     let (dx, dy) = (&dx[z_lo..z_hi], &dy[z_lo..z_hi]);
     let (wx, wy) = (&wx[z_lo..z_hi], &wy[z_lo..z_hi]);
     let (cx, cy) = (&mut cx[z_lo..z_hi], &mut cy[z_lo..z_hi]);
@@ -195,9 +201,11 @@ pub(crate) fn triplet_cohesion_simd_row(
     #[cfg(target_arch = "x86_64")]
     if std::arch::is_x86_feature_detected!("avx2") {
         // SAFETY: AVX2 support was just verified at runtime.
-        return unsafe { avx2::triplet_cohesion_row(dx, dy, dxy, wx, wy, wxy, cx, cy, ctx, cty, tie) };
+        return unsafe {
+            avx2::triplet_cohesion_row(dx, dy, dxy, wx, wy, wxy, cx, cy, ctx, cty, tie, sem)
+        };
     }
-    portable::triplet_cohesion_row(dx, dy, dxy, wx, wy, wxy, cx, cy, ctx, cty, tie)
+    portable::triplet_cohesion_row(dx, dy, dxy, wx, wy, wxy, cx, cy, ctx, cty, tie, sem)
 }
 
 /// SIMD pairwise PaLD (normalized). `simd-pairwise` registry entry point.
@@ -205,7 +213,7 @@ pub fn pairwise_simd(d: &Mat, tie: TieMode, b: usize) -> Mat {
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    pairwise_simd_into(d, tie, b, &mut ws, &mut c);
+    pairwise_simd_into(d, tie, CohesionSemantics::Classic, b, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
@@ -214,7 +222,15 @@ pub fn pairwise_simd(d: &Mat, tie: TieMode, b: usize) -> Mat {
 /// reciprocal weight tile lives in the workspace's aligned SIMD scratch.
 /// Mirrors `pairwise_optimized_into`'s tiling exactly — only the inner
 /// kernels change.
-pub(crate) fn pairwise_simd_into(d: &Mat, tie: TieMode, b: usize, ws: &mut Workspace, c: &mut Mat) {
+pub(crate) fn pairwise_simd_into(
+    d: &Mat,
+    tie: TieMode,
+    sem: CohesionSemantics,
+    b: usize,
+    ws: &mut Workspace,
+    c: &mut Mat,
+) {
+    let tie = sem.effective_tie(tie);
     let n = d.rows();
     let b = resolve_block(b, n);
     c.as_mut_slice().fill(0.0);
@@ -246,7 +262,7 @@ pub(crate) fn pairwise_simd_into(d: &Mat, tie: TieMode, b: usize, ws: &mut Works
                     let dxy = d[(x, y)];
                     let w = w_tile[(x - xs) * b + (y - ys)];
                     let (cx, cy) = c.two_rows_mut(x, y);
-                    update_cohesion_simd(d.row(x), d.row(y), dxy, w, cx, cy, tie);
+                    update_cohesion_simd(d.row(x), d.row(y), dxy, w, cx, cy, tie, sem);
                 }
             }
             phases.cohesion_s += t0.elapsed().as_secs_f64();
@@ -259,7 +275,7 @@ pub fn triplet_simd(d: &Mat, tie: TieMode, bhat: usize, btil: usize) -> Mat {
     let n = d.rows();
     let mut ws = Workspace::new();
     let mut c = Mat::zeros(n, n);
-    triplet_simd_into(d, tie, bhat, btil, &mut ws, &mut c);
+    triplet_simd_into(d, tie, CohesionSemantics::Classic, bhat, btil, &mut ws, &mut c);
     normalize(&mut c);
     c
 }
@@ -315,11 +331,13 @@ pub(crate) fn focus_sizes_simd_into(d: &Mat, tie: TieMode, bhat: usize, u: &mut 
 pub(crate) fn triplet_simd_into(
     d: &Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     bhat: usize,
     btil: usize,
     ws: &mut Workspace,
     c: &mut Mat,
 ) {
+    let tie = sem.effective_tie(tie);
     let n = d.rows();
     let bt = resolve_block(btil, n);
     c.as_mut_slice().fill(0.0);
@@ -337,12 +355,12 @@ pub(crate) fn triplet_simd_into(
     for xb in 0..nbt {
         for yb in xb..nbt {
             for zb in yb..nbt {
-                triplet_cohesion_tile_simd(d, w, c, ct, tie, xb * bt, yb * bt, zb * bt, bt, n);
+                triplet_cohesion_tile_simd(d, w, c, ct, tie, sem, xb * bt, yb * bt, zb * bt, bt, n);
             }
         }
     }
     crate::pald::branchfree::add_transposed(c, ct);
-    super::add_diagonal_contributions(c, w, d, tie);
+    super::add_diagonal_contributions(c, w, d, tie, sem);
     phases.cohesion_s += t0.elapsed().as_secs_f64();
 }
 
@@ -354,6 +372,7 @@ fn triplet_cohesion_tile_simd(
     c: &mut Mat,
     ct: &mut Mat,
     tie: TieMode,
+    sem: CohesionSemantics,
     xs: usize,
     ys: usize,
     zs: usize,
@@ -387,6 +406,7 @@ fn triplet_cohesion_tile_simd(
                 z_lo,
                 ze,
                 tie,
+                sem,
             );
             c[(x, y)] += cxy_inc;
             c[(y, x)] += cyx_inc;
@@ -398,7 +418,7 @@ fn triplet_cohesion_tile_simd(
 /// written against the same lane structure and the same select-form mask
 /// arithmetic as the AVX2 path, so both produce identical bits.
 mod portable {
-    use crate::pald::TieMode;
+    use crate::pald::{CohesionSemantics, TieMode};
 
     /// The documented 8→4→2→1 lane fold (module docs, step 2).
     #[inline(always)]
@@ -439,6 +459,7 @@ mod portable {
         acc
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub(super) fn update_cohesion(
         dx: &[f32],
         dy: &[f32],
@@ -447,6 +468,7 @@ mod portable {
         cx: &mut [f32],
         cy: &mut [f32],
         tie: TieMode,
+        sem: CohesionSemantics,
     ) {
         match tie {
             TieMode::Strict => {
@@ -464,23 +486,11 @@ mod portable {
             TieMode::Split => {
                 for z in 0..dx.len() {
                     let rw = if (dx[z] <= dxy) | (dy[z] <= dxy) { w } else { 0.0 };
-                    let s = share(dx[z], dy[z]);
+                    let s = sem.share_x(dx[z], dy[z]);
                     cx[z] += rw * s;
                     cy[z] += rw * (1.0 - s);
                 }
             }
-        }
-    }
-
-    /// Split-mode support share of x: 1, 0.5 on a tie, or 0.
-    #[inline(always)]
-    fn share(a: f32, b: f32) -> f32 {
-        if a < b {
-            1.0
-        } else if a == b {
-            0.5
-        } else {
-            0.0
         }
     }
 
@@ -552,6 +562,7 @@ mod portable {
         ctx: &mut [f32],
         cty: &mut [f32],
         tie: TieMode,
+        sem: CohesionSemantics,
     ) -> (f32, f32) {
         let m = dx.len();
         let chunks = (m / 8) * 8;
@@ -588,15 +599,15 @@ mod portable {
             TieMode::Split => {
                 let mut body = |z: usize, accx: &mut f32, accy: &mut f32| {
                     let f_xy = if (dx[z] <= dxy) | (dy[z] <= dxy) { 1.0 } else { 0.0 };
-                    let s_xy = share(dx[z], dy[z]);
+                    let s_xy = sem.share_x(dx[z], dy[z]);
                     cx[z] += (f_xy * s_xy) * wxy;
                     cy[z] += (f_xy * (1.0 - s_xy)) * wxy;
                     let f_xz = if (dxy <= dx[z]) | (dy[z] <= dx[z]) { 1.0 } else { 0.0 };
-                    let s_xz = share(dxy, dy[z]);
+                    let s_xz = sem.share_x(dxy, dy[z]);
                     *accx += (f_xz * s_xz) * wx[z];
                     cty[z] += (f_xz * (1.0 - s_xz)) * wx[z];
                     let f_yz = if (dxy <= dy[z]) | (dx[z] <= dy[z]) { 1.0 } else { 0.0 };
-                    let s_yz = share(dxy, dx[z]);
+                    let s_yz = sem.share_x(dxy, dx[z]);
                     *accy += (f_yz * s_yz) * wy[z];
                     ctx[z] += (f_yz * (1.0 - s_yz)) * wy[z];
                 };
@@ -625,7 +636,7 @@ mod portable {
 mod avx2 {
     use std::arch::x86_64::*;
 
-    use crate::pald::TieMode;
+    use crate::pald::{CohesionSemantics, TieMode, TIE_SPLIT};
 
     /// Tail comparison matching the vector predicate (`CMP` is one of the
     /// `_CMP_{LT,LE}_OQ` immediates used in the chunked loop).
@@ -660,6 +671,29 @@ mod avx2 {
         let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
         let s1 = _mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2));
         _mm_cvtss_f32(s1)
+    }
+
+    /// Lane-wise [`CohesionSemantics::share_x`]: the support share of the
+    /// first argument's endpoint, per lane.  Classic/rank lanes are the
+    /// historic `and(lt, 1) + and(eq, 0.5)` select form; distance-weighted
+    /// lanes divide (IEEE division is exactly rounded, so the vector and
+    /// scalar forms agree bitwise), with a blend to the tie split when the
+    /// lane's distance sum is not positive.
+    #[target_feature(enable = "avx2")]
+    unsafe fn share_ps(sem: CohesionSemantics, a: __m256, b: __m256) -> __m256 {
+        let ones = _mm256_set1_ps(1.0);
+        let halves = _mm256_set1_ps(TIE_SPLIT);
+        match sem {
+            CohesionSemantics::Classic | CohesionSemantics::RankBased => _mm256_add_ps(
+                _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(a, b), ones),
+                _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_EQ_OQ }>(a, b), halves),
+            ),
+            CohesionSemantics::DistanceWeighted => {
+                let sum = _mm256_add_ps(a, b);
+                let tied = _mm256_cmp_ps::<{ _CMP_LE_OQ }>(sum, _mm256_setzero_ps());
+                _mm256_blendv_ps(_mm256_div_ps(b, sum), halves, tied)
+            }
+        }
     }
 
     #[target_feature(enable = "avx2")]
@@ -742,6 +776,7 @@ mod avx2 {
         u
     }
 
+    #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn update_cohesion(
         dx: &[f32],
@@ -751,6 +786,7 @@ mod avx2 {
         cx: &mut [f32],
         cy: &mut [f32],
         tie: TieMode,
+        sem: CohesionSemantics,
     ) {
         let n = dx.len();
         let chunks = (n / 8) * 8;
@@ -789,7 +825,6 @@ mod avx2 {
             }
             TieMode::Split => {
                 let ones = _mm256_set1_ps(1.0);
-                let halves = _mm256_set1_ps(0.5);
                 let mut z = 0;
                 while z < chunks {
                     let a = _mm256_loadu_ps(px.add(z));
@@ -799,10 +834,7 @@ mod avx2 {
                         _mm256_cmp_ps::<{ _CMP_LE_OQ }>(b, t),
                     );
                     let rw = _mm256_and_ps(r, wv);
-                    let s = _mm256_add_ps(
-                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(a, b), ones),
-                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_EQ_OQ }>(a, b), halves),
-                    );
+                    let s = share_ps(sem, a, b);
                     let cxv = _mm256_loadu_ps(pcx.add(z));
                     _mm256_storeu_ps(pcx.add(z), _mm256_add_ps(cxv, _mm256_mul_ps(rw, s)));
                     let cyv = _mm256_loadu_ps(pcy.add(z));
@@ -814,13 +846,7 @@ mod avx2 {
                 }
                 for z in chunks..n {
                     let rw = if (dx[z] <= dxy) | (dy[z] <= dxy) { w } else { 0.0 };
-                    let s = if dx[z] < dy[z] {
-                        1.0
-                    } else if dx[z] == dy[z] {
-                        0.5
-                    } else {
-                        0.0
-                    };
+                    let s = sem.share_x(dx[z], dy[z]);
                     cx[z] += rw * s;
                     cy[z] += rw * (1.0 - s);
                 }
@@ -938,6 +964,7 @@ mod avx2 {
         ctx: &mut [f32],
         cty: &mut [f32],
         tie: TieMode,
+        sem: CohesionSemantics,
     ) -> (f32, f32) {
         let m = dx.len();
         let chunks = (m / 8) * 8;
@@ -999,7 +1026,6 @@ mod avx2 {
                 (cxy, cyx)
             }
             TieMode::Split => {
-                let halves = _mm256_set1_ps(0.5);
                 let mut z = 0;
                 while z < chunks {
                     let a = _mm256_loadu_ps(px.add(z));
@@ -1013,10 +1039,7 @@ mod avx2 {
                         ),
                         ones,
                     );
-                    let s_xy = _mm256_add_ps(
-                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(a, b), ones),
-                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_EQ_OQ }>(a, b), halves),
-                    );
+                    let s_xy = share_ps(sem, a, b);
                     let cxv = _mm256_loadu_ps(pcx.add(z));
                     _mm256_storeu_ps(
                         pcx.add(z),
@@ -1037,10 +1060,7 @@ mod avx2 {
                         ),
                         ones,
                     );
-                    let s_xz = _mm256_add_ps(
-                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(t, b), ones),
-                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_EQ_OQ }>(t, b), halves),
-                    );
+                    let s_xz = share_ps(sem, t, b);
                     lx = _mm256_add_ps(lx, _mm256_mul_ps(_mm256_mul_ps(f_xz, s_xz), wxv));
                     let ctyv = _mm256_loadu_ps(pcty.add(z));
                     _mm256_storeu_ps(
@@ -1057,10 +1077,7 @@ mod avx2 {
                         ),
                         ones,
                     );
-                    let s_yz = _mm256_add_ps(
-                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(t, a), ones),
-                        _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_EQ_OQ }>(t, a), halves),
-                    );
+                    let s_yz = share_ps(sem, t, a);
                     ly = _mm256_add_ps(ly, _mm256_mul_ps(_mm256_mul_ps(f_yz, s_yz), wyv));
                     let ctxv = _mm256_loadu_ps(pctx.add(z));
                     _mm256_storeu_ps(
@@ -1076,31 +1093,20 @@ mod avx2 {
                 let mut cyx = fold_lanes_ps(ly);
                 for z in chunks..m {
                     let f_xy = if (dx[z] <= dxy) | (dy[z] <= dxy) { 1.0 } else { 0.0 };
-                    let s_xy = split_share(dx[z], dy[z]);
+                    let s_xy = sem.share_x(dx[z], dy[z]);
                     cx[z] += (f_xy * s_xy) * wxy;
                     cy[z] += (f_xy * (1.0 - s_xy)) * wxy;
                     let f_xz = if (dxy <= dx[z]) | (dy[z] <= dx[z]) { 1.0 } else { 0.0 };
-                    let s_xz = split_share(dxy, dy[z]);
+                    let s_xz = sem.share_x(dxy, dy[z]);
                     cxy += (f_xz * s_xz) * wx[z];
                     cty[z] += (f_xz * (1.0 - s_xz)) * wx[z];
                     let f_yz = if (dxy <= dy[z]) | (dx[z] <= dy[z]) { 1.0 } else { 0.0 };
-                    let s_yz = split_share(dxy, dx[z]);
+                    let s_yz = sem.share_x(dxy, dx[z]);
                     cyx += (f_yz * s_yz) * wy[z];
                     ctx[z] += (f_yz * (1.0 - s_yz)) * wy[z];
                 }
                 (cxy, cyx)
             }
-        }
-    }
-
-    #[inline(always)]
-    fn split_share(a: f32, b: f32) -> f32 {
-        if a < b {
-            1.0
-        } else if a == b {
-            0.5
-        } else {
-            0.0
         }
     }
 }
@@ -1180,18 +1186,20 @@ mod tests {
         let mut st = 0xABCDu64;
         for n in [1usize, 6, 8, 13, 16, 33, 80] {
             for tie in [TieMode::Strict, TieMode::Split] {
-                let dx = rand_row(&mut st, n, 8);
-                let dy = rand_row(&mut st, n, 8);
-                let dxy = 1.0;
-                let w = 0.125;
-                let mut cx_s = rand_row(&mut st, n, 4);
-                let mut cy_s = rand_row(&mut st, n, 4);
-                let mut cx_v = cx_s.clone();
-                let mut cy_v = cy_s.clone();
-                update_cohesion_branchfree(&dx, &dy, dxy, w, &mut cx_s, &mut cy_s, tie);
-                update_cohesion_simd(&dx, &dy, dxy, w, &mut cx_v, &mut cy_v, tie);
-                assert_eq!(cx_s, cx_v, "cx n={n} {tie:?}");
-                assert_eq!(cy_s, cy_v, "cy n={n} {tie:?}");
+                for sem in CohesionSemantics::ALL {
+                    let dx = rand_row(&mut st, n, 8);
+                    let dy = rand_row(&mut st, n, 8);
+                    let dxy = 1.0;
+                    let w = 0.125;
+                    let mut cx_s = rand_row(&mut st, n, 4);
+                    let mut cy_s = rand_row(&mut st, n, 4);
+                    let mut cx_v = cx_s.clone();
+                    let mut cy_v = cy_s.clone();
+                    update_cohesion_branchfree(&dx, &dy, dxy, w, &mut cx_s, &mut cy_s, tie, sem);
+                    update_cohesion_simd(&dx, &dy, dxy, w, &mut cx_v, &mut cy_v, tie, sem);
+                    assert_eq!(cx_s, cx_v, "cx n={n} {tie:?} {sem:?}");
+                    assert_eq!(cy_s, cy_v, "cy n={n} {tie:?} {sem:?}");
+                }
             }
         }
     }
@@ -1220,26 +1228,29 @@ mod tests {
                 assert_eq!(ux_a, ux_b);
                 assert_eq!(uy_a, uy_b);
 
-                let mut cx_a = vec![0.0f32; m];
-                let mut cy_a = vec![0.0f32; m];
-                let mut ctx_a = vec![0.0f32; m];
-                let mut cty_a = vec![0.0f32; m];
-                let (mut cx_b, mut cy_b) = (cx_a.clone(), cy_a.clone());
-                let (mut ctx_b, mut cty_b) = (ctx_a.clone(), cty_a.clone());
-                let got = triplet_cohesion_simd_row(
-                    &dx, &dy, dxy, &wx, &wy, wxy, &mut cx_a, &mut cy_a, &mut ctx_a, &mut cty_a,
-                    0, m, tie,
-                );
-                let want = portable::triplet_cohesion_row(
-                    &dx, &dy, dxy, &wx, &wy, wxy, &mut cx_b, &mut cy_b, &mut ctx_b, &mut cty_b,
-                    tie,
-                );
-                assert_eq!(got.0.to_bits(), want.0.to_bits(), "cxy m={m} {tie:?}");
-                assert_eq!(got.1.to_bits(), want.1.to_bits(), "cyx m={m} {tie:?}");
-                assert_eq!(cx_a, cx_b);
-                assert_eq!(cy_a, cy_b);
-                assert_eq!(ctx_a, ctx_b);
-                assert_eq!(cty_a, cty_b);
+                for sem in CohesionSemantics::ALL {
+                    let eff = sem.effective_tie(tie);
+                    let mut cx_a = vec![0.0f32; m];
+                    let mut cy_a = vec![0.0f32; m];
+                    let mut ctx_a = vec![0.0f32; m];
+                    let mut cty_a = vec![0.0f32; m];
+                    let (mut cx_b, mut cy_b) = (cx_a.clone(), cy_a.clone());
+                    let (mut ctx_b, mut cty_b) = (ctx_a.clone(), cty_a.clone());
+                    let got = triplet_cohesion_simd_row(
+                        &dx, &dy, dxy, &wx, &wy, wxy, &mut cx_a, &mut cy_a, &mut ctx_a,
+                        &mut cty_a, 0, m, tie, sem,
+                    );
+                    let want = portable::triplet_cohesion_row(
+                        &dx, &dy, dxy, &wx, &wy, wxy, &mut cx_b, &mut cy_b, &mut ctx_b,
+                        &mut cty_b, eff, sem,
+                    );
+                    assert_eq!(got.0.to_bits(), want.0.to_bits(), "cxy m={m} {tie:?} {sem:?}");
+                    assert_eq!(got.1.to_bits(), want.1.to_bits(), "cyx m={m} {tie:?} {sem:?}");
+                    assert_eq!(cx_a, cx_b);
+                    assert_eq!(cy_a, cy_b);
+                    assert_eq!(ctx_a, ctx_b);
+                    assert_eq!(cty_a, cty_b);
+                }
             }
         }
     }
@@ -1308,11 +1319,12 @@ mod tests {
         let mut ws = Workspace::new();
         let mut c1 = Mat::zeros(n, n);
         let mut c2 = Mat::zeros(n, n);
-        triplet_simd_into(&d, TieMode::Strict, 8, 8, &mut ws, &mut c1);
-        triplet_simd_into(&d, TieMode::Strict, 8, 8, &mut ws, &mut c2);
+        let sem = CohesionSemantics::Classic;
+        triplet_simd_into(&d, TieMode::Strict, sem, 8, 8, &mut ws, &mut c1);
+        triplet_simd_into(&d, TieMode::Strict, sem, 8, 8, &mut ws, &mut c2);
         assert_eq!(c1.as_slice(), c2.as_slice(), "triplet run-to-run");
-        pairwise_simd_into(&d, TieMode::Strict, 8, &mut ws, &mut c1);
-        pairwise_simd_into(&d, TieMode::Strict, 8, &mut ws, &mut c2);
+        pairwise_simd_into(&d, TieMode::Strict, sem, 8, &mut ws, &mut c1);
+        pairwise_simd_into(&d, TieMode::Strict, sem, 8, &mut ws, &mut c2);
         assert_eq!(c1.as_slice(), c2.as_slice(), "pairwise run-to-run");
     }
 }

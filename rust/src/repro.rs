@@ -407,6 +407,14 @@ pub fn ablation(n: usize, opts: &BenchOpts) -> Table {
     table
 }
 
+/// Does `artifacts` hold a compiled PJRT artifact set ([`xla_check`]
+/// needs `manifest.json` from `python -m compile.aot`)?  The repro and
+/// bench entry points gate on this so artifact-less hosts record an
+/// explicit skip instead of failing.
+pub fn xla_artifacts_present(artifacts: &std::path::Path) -> bool {
+    artifacts.join("manifest.json").is_file()
+}
+
 /// Cross-backend validation: native vs XLA artifact, with throughput.
 pub fn xla_check(n: usize, artifacts: &std::path::Path) -> anyhow::Result<Table> {
     use crate::coordinator::{Coordinator, Job};

@@ -390,6 +390,7 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport, PaldError> {
             let cfg = WireConfig {
                 algorithm: opts.algorithm.clone(),
                 tie: crate::pald::TieMode::Strict,
+                semantics: crate::pald::CohesionSemantics::Classic,
                 k: mix.k,
                 deadline_ms: opts.deadline_ms,
             };

@@ -21,7 +21,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::pald::error::PaldError;
-use crate::pald::{Algorithm, PaldConfig, Session, TieMode};
+use crate::pald::{Algorithm, CohesionSemantics, PaldConfig, Session, TieMode};
 
 use super::proto::WireConfig;
 
@@ -41,6 +41,9 @@ pub struct ShapeKey {
     pub algorithm: &'static str,
     /// Tie-mode name.
     pub tie: &'static str,
+    /// Cohesion-semantics name (DESIGN.md §15): semantics change the
+    /// numbers, so they shape the session identity like the tie mode.
+    pub semantics: &'static str,
 }
 
 impl ShapeKey {
@@ -49,7 +52,13 @@ impl ShapeKey {
     /// request is rejected before any session is built).
     pub fn for_request(cfg: &WireConfig, n: usize) -> Result<ShapeKey, PaldError> {
         let algorithm = Algorithm::from_name(&cfg.algorithm)?;
-        Ok(ShapeKey { n, k: cfg.k as usize, algorithm: algorithm.name(), tie: cfg.tie.name() })
+        Ok(ShapeKey {
+            n,
+            k: cfg.k as usize,
+            algorithm: algorithm.name(),
+            tie: cfg.tie.name(),
+            semantics: cfg.semantics.name(),
+        })
     }
 }
 
@@ -59,6 +68,7 @@ pub fn config_for(key: &ShapeKey, threads: usize) -> Result<PaldConfig, PaldErro
     Ok(PaldConfig {
         algorithm: Algorithm::from_name(key.algorithm)?,
         tie_mode: TieMode::parse(key.tie)?,
+        semantics: CohesionSemantics::parse(key.semantics)?,
         k: key.k,
         threads,
         ..PaldConfig::default()
@@ -206,14 +216,29 @@ mod tests {
     use crate::data::distmat;
 
     fn key(n: usize) -> ShapeKey {
-        ShapeKey { n, k: 0, algorithm: "auto", tie: "strict" }
+        ShapeKey { n, k: 0, algorithm: "auto", tie: "strict", semantics: "classic" }
     }
 
     #[test]
     fn shape_key_resolves_wire_options() {
-        let cfg = WireConfig { algorithm: "opt-pairwise".into(), tie: TieMode::Split, k: 8, deadline_ms: 0 };
+        let cfg = WireConfig {
+            algorithm: "opt-pairwise".into(),
+            tie: TieMode::Split,
+            semantics: CohesionSemantics::RankBased,
+            k: 8,
+            deadline_ms: 0,
+        };
         let k = ShapeKey::for_request(&cfg, 64).unwrap();
-        assert_eq!(k, ShapeKey { n: 64, k: 8, algorithm: "opt-pairwise", tie: "split" });
+        assert_eq!(
+            k,
+            ShapeKey {
+                n: 64,
+                k: 8,
+                algorithm: "opt-pairwise",
+                tie: "split",
+                semantics: "rank",
+            }
+        );
         let bad = WireConfig { algorithm: "no-such-kernel".into(), ..WireConfig::default() };
         assert!(ShapeKey::for_request(&bad, 64).is_err());
     }

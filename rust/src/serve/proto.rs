@@ -21,10 +21,13 @@ use std::io::Read;
 
 use crate::core::Mat;
 use crate::pald::error::PaldError;
-use crate::pald::TieMode;
+use crate::pald::{CohesionSemantics, TieMode};
 
-/// Wire protocol version carried in every frame header.
-pub const PROTO_VERSION: u8 = 1;
+/// Wire protocol version carried in every frame header.  Version 2
+/// added the cohesion-semantics byte to [`WireConfig`]; version-1 peers
+/// are rejected with a typed [`PaldError::Protocol`] rather than
+/// misparsed.
+pub const PROTO_VERSION: u8 = 2;
 
 /// Default cap on one frame's payload (256 MiB — a dense `n = 8192`
 /// matrix); larger frames are rejected as [`PaldError::Protocol`]
@@ -74,6 +77,10 @@ pub struct WireConfig {
     pub algorithm: String,
     /// Distance-tie handling.
     pub tie: TieMode,
+    /// Cohesion contribution semantics (DESIGN.md §15).  Rides the
+    /// wire as one byte after the tie mode; unknown bytes are a
+    /// protocol error, not a silent classic fallback.
+    pub semantics: CohesionSemantics,
     /// Truncated-neighborhood size (`0` = dense semantics).
     pub k: u32,
     /// Per-request deadline in milliseconds (`0` = server default).  A
@@ -84,7 +91,13 @@ pub struct WireConfig {
 
 impl Default for WireConfig {
     fn default() -> Self {
-        WireConfig { algorithm: "auto".into(), tie: TieMode::Strict, k: 0, deadline_ms: 0 }
+        WireConfig {
+            algorithm: "auto".into(),
+            tie: TieMode::Strict,
+            semantics: CohesionSemantics::Classic,
+            k: 0,
+            deadline_ms: 0,
+        }
     }
 }
 
@@ -344,6 +357,11 @@ impl Writer {
             TieMode::Strict => 0,
             TieMode::Split => 1,
         });
+        self.u8(match c.semantics {
+            CohesionSemantics::Classic => 0,
+            CohesionSemantics::RankBased => 1,
+            CohesionSemantics::DistanceWeighted => 2,
+        });
         self.u32(c.k);
         self.u32(c.deadline_ms);
     }
@@ -438,7 +456,15 @@ impl<'a> Reader<'a> {
                 return Err(PaldError::protocol(format!("unknown tie-mode byte {other}")))
             }
         };
-        Ok(WireConfig { algorithm, tie, k: self.u32()?, deadline_ms: self.u32()? })
+        let semantics = match self.u8()? {
+            0 => CohesionSemantics::Classic,
+            1 => CohesionSemantics::RankBased,
+            2 => CohesionSemantics::DistanceWeighted,
+            other => {
+                return Err(PaldError::protocol(format!("unknown semantics byte {other}")))
+            }
+        };
+        Ok(WireConfig { algorithm, tie, semantics, k: self.u32()?, deadline_ms: self.u32()? })
     }
 
     fn done(&self) -> Result<(), PaldError> {
@@ -745,7 +771,13 @@ mod tests {
     #[test]
     fn request_round_trip() {
         let m = Mat::from_fn(3, 3, |i, j| (i + j) as f32);
-        let cfg = WireConfig { algorithm: "opt-pairwise".into(), tie: TieMode::Split, k: 4, deadline_ms: 250 };
+        let cfg = WireConfig {
+            algorithm: "opt-pairwise".into(),
+            tie: TieMode::Split,
+            semantics: CohesionSemantics::DistanceWeighted,
+            k: 4,
+            deadline_ms: 250,
+        };
         let reqs = vec![
             Request::Compute { cfg: cfg.clone(), matrix: m.clone() },
             Request::ComputeBatch { cfg: cfg.clone(), matrices: vec![m.clone(), m.clone()] },
@@ -866,9 +898,9 @@ mod tests {
             }
         }
         // Garbage bodies decode to typed errors too.
-        let garbage = RawFrame { version: 1, opcode: 0x01, request_id: 0, payload: vec![0xff; 7] };
+        let garbage = RawFrame { version: PROTO_VERSION, opcode: 0x01, request_id: 0, payload: vec![0xff; 7] };
         assert!(matches!(decode_request(&garbage), Err(PaldError::Protocol { .. })));
-        let unknown = RawFrame { version: 1, opcode: 0x7f, request_id: 0, payload: vec![] };
+        let unknown = RawFrame { version: PROTO_VERSION, opcode: 0x7f, request_id: 0, payload: vec![] };
         assert!(matches!(decode_request(&unknown), Err(PaldError::Protocol { .. })));
         let trailing = {
             let mut bytes = encode_request(1, &Request::SessionQuery { session: 3 });

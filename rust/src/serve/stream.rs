@@ -110,6 +110,7 @@ impl StreamSessions {
         let mut b = PaldBuilder::new()
             .algorithm_name(&cfg.algorithm)
             .tie_mode(cfg.tie)
+            .semantics(cfg.semantics)
             .threads(Threads::Fixed(threads.max(1)))
             .validation(if validate { Validation::Strict } else { Validation::Skip });
         if cfg.k > 0 {

@@ -43,13 +43,27 @@
 //! backend-matrix job; default `auto,scalar,simd`, and an explicit
 //! `simd` entry is valid on every host via the portable fallback, so
 //! there are no skips anywhere).
+//!
+//! The third matrix axis is cohesion semantics (DESIGN.md §15):
+//! [`check_semantics_conformance`] runs every registry kernel under
+//! every entry of the `PALD_TEST_SEMANTICS` environment variable
+//! (default `classic,weighted,rank`, mirroring the thread/backend
+//! axes) against the all-semantics naive oracle
+//! ([`naive::pairwise_sem`]) for dense kernels and the truncated
+//! semantics oracle ([`support_over_graph_sem`]) bit-exactly for
+//! sparse kernels, and pins the hook itself: rank-based is classic
+//! arithmetic under forced split membership, so the two must agree
+//! **bit for bit** on every rung — the proof that threading the
+//! semantics hook did not perturb a single classic bit.
 
 use crate::core::Mat;
 use crate::data::distmat;
-use crate::pald::knn::{cohesion_over_graph, focus_sizes_over_graph, NeighborGraph};
+use crate::pald::knn::{
+    cohesion_over_graph, focus_sizes_over_graph, support_over_graph_sem, NeighborGraph,
+};
 use crate::pald::{
-    in_focus, naive, normalize, simd, Algorithm, Backend, CohesionKernel, ExecParams, PaldConfig,
-    Planner, TieMode, UpdateKernel, Workspace, REGISTRY, UPDATE_KERNELS,
+    in_focus, naive, normalize, simd, Algorithm, Backend, CohesionKernel, CohesionSemantics,
+    ExecParams, PaldConfig, Planner, TieMode, UpdateKernel, Workspace, REGISTRY, UPDATE_KERNELS,
 };
 
 /// Documented cross-kernel relative cohesion tolerance (f32 summation
@@ -188,8 +202,33 @@ pub fn test_backends() -> Vec<Backend> {
         .collect()
 }
 
+/// Cohesion-semantics axes the battery runs under: the comma-separated
+/// `PALD_TEST_SEMANTICS` environment variable (the CI semantics-matrix
+/// job sets it, mirroring `PALD_TEST_THREADS` / `PALD_TEST_BACKEND`),
+/// defaulting to `classic,weighted,rank` — every semantics, on every
+/// host, no skips.  Like the other axes, a set-but-invalid variable
+/// **panics** instead of silently falling back.
+pub fn test_semantics() -> Vec<CohesionSemantics> {
+    let Ok(spec) = std::env::var("PALD_TEST_SEMANTICS") else {
+        return vec![
+            CohesionSemantics::Classic,
+            CohesionSemantics::DistanceWeighted,
+            CohesionSemantics::RankBased,
+        ];
+    };
+    spec.split(',')
+        .map(|entry| match CohesionSemantics::parse(entry.trim()) {
+            Ok(sem) => sem,
+            Err(_) => panic!(
+                "PALD_TEST_SEMANTICS: bad entry {entry:?} in {spec:?} \
+                 (want comma-separated names from classic|rank|weighted)"
+            ),
+        })
+        .collect()
+}
+
 /// Run one registered kernel through the trait path (compute_into +
-/// normalization) with the battery's block sizes.
+/// normalization) with the battery's block sizes, classic semantics.
 fn run_kernel(
     kernel: &dyn CohesionKernel,
     d: &Mat,
@@ -198,8 +237,30 @@ fn run_kernel(
     k: usize,
     ws: &mut Workspace,
 ) -> Mat {
+    run_kernel_sem(kernel, d, tie, CohesionSemantics::Classic, threads, k, ws)
+}
+
+/// [`run_kernel`] under an explicit [`CohesionSemantics`].
+#[allow(clippy::too_many_arguments)]
+fn run_kernel_sem(
+    kernel: &dyn CohesionKernel,
+    d: &Mat,
+    tie: TieMode,
+    sem: CohesionSemantics,
+    threads: usize,
+    k: usize,
+    ws: &mut Workspace,
+) -> Mat {
     let n = d.rows();
-    let p = ExecParams { tie, block: 8, block2: 4, threads, k, backend: Backend::Auto };
+    let p = ExecParams {
+        tie,
+        semantics: sem,
+        block: 8,
+        block2: 4,
+        threads,
+        k,
+        backend: Backend::Auto,
+    };
     let mut c = Mat::zeros(n, n);
     kernel.compute_into(d, &p, ws, &mut c);
     normalize(&mut c);
@@ -557,15 +618,16 @@ fn run_update_kernel(
     block: usize,
     split: Option<usize>,
     tie: TieMode,
+    sem: CohesionSemantics,
 ) -> (Vec<f64>, Vec<f64>) {
     let n = dx.len();
     let mut sx = vec![0.0f64; n];
     let mut sy = vec![0.0f64; n];
     match split {
-        None => kernel.award(dx, dy, dxy, w, &mut sx, &mut sy, 0, n, block, tie),
+        None => kernel.award(dx, dy, dxy, w, &mut sx, &mut sy, 0, n, block, tie, sem),
         Some(mid) => {
-            kernel.award(dx, dy, dxy, w, &mut sx, &mut sy, 0, mid, block, tie);
-            kernel.award(dx, dy, dxy, w, &mut sx, &mut sy, mid, n, block, tie);
+            kernel.award(dx, dy, dxy, w, &mut sx, &mut sy, 0, mid, block, tie, sem);
+            kernel.award(dx, dy, dxy, w, &mut sx, &mut sy, mid, n, block, tie, sem);
         }
     }
     (sx, sy)
@@ -612,34 +674,153 @@ pub fn check_update_kernel_conformance() {
                     // Strict-mode duplicate pair: w = ∞, undefined for
                     // the masked flavor (0 · ∞ = NaN).  Reference must
                     // award nothing; masked must be bit-stable.
-                    let (sx, sy) =
-                        run_update_kernel(UPDATE_KERNELS[0], dx, dy, dxy, w, 8, None, case.tie);
+                    let (sx, sy) = run_update_kernel(
+                        UPDATE_KERNELS[0],
+                        dx,
+                        dy,
+                        dxy,
+                        w,
+                        8,
+                        None,
+                        case.tie,
+                        CohesionSemantics::Classic,
+                    );
                     assert!(
                         sx.iter().chain(&sy).all(|&v| v == 0.0),
                         "{ctx}: reference awarded support outside an empty focus"
                     );
                     let masked = UPDATE_KERNELS[1];
-                    let a = run_update_kernel(masked, dx, dy, dxy, w, 8, None, case.tie);
-                    let b = run_update_kernel(masked, dx, dy, dxy, w, 8, None, case.tie);
+                    let sem = CohesionSemantics::Classic;
+                    let a = run_update_kernel(masked, dx, dy, dxy, w, 8, None, case.tie, sem);
+                    let b = run_update_kernel(masked, dx, dy, dxy, w, 8, None, case.tie, sem);
                     assert_f64_bits_eq(&a.0, &b.0, &format!("{ctx} masked repeat sx"));
                     assert_f64_bits_eq(&a.1, &b.1, &format!("{ctx} masked repeat sy"));
                     continue;
                 }
-                let want = run_update_kernel(UPDATE_KERNELS[0], dx, dy, dxy, w, 8, None, case.tie);
-                for kernel in UPDATE_KERNELS {
-                    for block in [1usize, 3, 8, n] {
-                        for split in [None, Some(n / 2)] {
-                            let got =
-                                run_update_kernel(kernel, dx, dy, dxy, w, block, split, case.tie);
-                            let kctx = format!(
-                                "{ctx} {} block={block} split={split:?}",
-                                kernel.name()
-                            );
-                            assert_f64_bits_eq(&got.0, &want.0, &format!("{kctx} sx"));
-                            assert_f64_bits_eq(&got.1, &want.1, &format!("{kctx} sy"));
+                for sem in CohesionSemantics::ALL {
+                    let want = run_update_kernel(
+                        UPDATE_KERNELS[0],
+                        dx,
+                        dy,
+                        dxy,
+                        w,
+                        8,
+                        None,
+                        case.tie,
+                        sem,
+                    );
+                    for kernel in UPDATE_KERNELS {
+                        for block in [1usize, 3, 8, n] {
+                            for split in [None, Some(n / 2)] {
+                                let got = run_update_kernel(
+                                    kernel, dx, dy, dxy, w, block, split, case.tie, sem,
+                                );
+                                let kctx = format!(
+                                    "{ctx} {} {} block={block} split={split:?}",
+                                    kernel.name(),
+                                    sem.name()
+                                );
+                                assert_f64_bits_eq(&got.0, &want.0, &format!("{kctx} sx"));
+                                assert_f64_bits_eq(&got.1, &want.1, &format!("{kctx} sy"));
+                            }
                         }
                     }
                 }
+            }
+        }
+    }
+}
+
+/// The cohesion-semantics axis of the battery (DESIGN.md §15): every
+/// registry kernel under every semantics in [`test_semantics`], at one
+/// thread budget, asserting
+///
+/// * **dense kernels within [`RTOL`]/[`ATOL`]** of the all-semantics
+///   naive oracle ([`naive::pairwise_sem`]) on every well-defined
+///   battery case (non-classic semantics force split membership, so
+///   even the strict-tie duplicate cases are well-defined for them —
+///   only classic/strict duplicates stay with the classic battery's
+///   bit-stability pin);
+/// * **sparse kernels bit-identical** to the truncated semantics
+///   oracle ([`support_over_graph_sem`]) at every battery k;
+/// * **the classic bit-identity pin**: rank-based semantics is classic
+///   arithmetic under forced `<=` membership, so on every rung (modulo
+///   the run-order-dependent dense parallel triplet) a rank-based run
+///   must reproduce the classic split-mode run **bit for bit** — if
+///   threading the hook had perturbed even one classic multiply, this
+///   cross-check would see the bit flip.
+pub fn check_semantics_conformance(threads: usize) {
+    let mut ws = Workspace::new();
+    let sems = test_semantics();
+    for case in battery() {
+        let d = &case.d;
+        let n = d.rows();
+        for &sem in &sems {
+            if case.mode == CaseMode::TieUndefined && sem == CohesionSemantics::Classic {
+                continue;
+            }
+            let ctx = format!("{} p={threads} sem={}", case.name, sem.name());
+            let cref = naive::pairwise_sem(d, case.tie, sem);
+            for kernel in REGISTRY.iter().filter(|k| !k.meta().sparse) {
+                let c = run_kernel_sem(*kernel, d, case.tie, sem, threads, 0, &mut ws);
+                assert!(
+                    c.allclose(&cref, RTOL, ATOL),
+                    "{ctx} {}: maxdiff={}",
+                    kernel.name(),
+                    c.max_abs_diff(&cref)
+                );
+            }
+            for k in sparse_ks(n) {
+                let g = NeighborGraph::build(d, k).expect("battery k is valid");
+                let mut oracle = support_over_graph_sem(d, &g, case.tie, sem);
+                normalize(&mut oracle);
+                for kernel in REGISTRY.iter().filter(|k| k.meta().sparse) {
+                    let c = run_kernel_sem(*kernel, d, case.tie, sem, threads, k, &mut ws);
+                    assert_eq!(
+                        c.as_slice(),
+                        oracle.as_slice(),
+                        "{ctx} {} k={k}: sparse kernel diverged from the semantics oracle",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+        if case.mode == CaseMode::Full
+            && sems.contains(&CohesionSemantics::Classic)
+            && sems.contains(&CohesionSemantics::RankBased)
+        {
+            for kernel in REGISTRY {
+                if kernel.algorithm() == Algorithm::ParallelTriplet {
+                    continue; // documented run-dependent task order
+                }
+                let k = if kernel.meta().sparse { n - 1 } else { 0 };
+                let a = run_kernel_sem(
+                    kernel,
+                    d,
+                    TieMode::Split,
+                    CohesionSemantics::Classic,
+                    threads,
+                    k,
+                    &mut ws,
+                );
+                let b = run_kernel_sem(
+                    kernel,
+                    d,
+                    TieMode::Split,
+                    CohesionSemantics::RankBased,
+                    threads,
+                    k,
+                    &mut ws,
+                );
+                assert_bits_eq(
+                    &a,
+                    &b,
+                    &format!(
+                        "{} p={threads} {}: rank-based vs classic under split",
+                        case.name,
+                        kernel.name()
+                    ),
+                );
             }
         }
     }
@@ -759,6 +940,15 @@ mod tests {
         let v = test_threads();
         assert!(!v.is_empty());
         assert!(v.iter().all(|&t| t >= 1));
+    }
+
+    #[test]
+    fn env_semantics_list_parses() {
+        // Unset (the usual unit-test case): every semantics, no skips.
+        let v = test_semantics();
+        assert!(v.contains(&CohesionSemantics::Classic));
+        assert!(v.contains(&CohesionSemantics::RankBased));
+        assert!(v.contains(&CohesionSemantics::DistanceWeighted));
     }
 
     #[test]

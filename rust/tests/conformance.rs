@@ -9,10 +9,13 @@
 //! CI thread-matrix job runs this suite at 1, 2, 4, and 8 threads).
 //! Backends come from `PALD_TEST_BACKEND` (comma-separated; the CI
 //! backend-matrix job forces `scalar` and `auto` legs — DESIGN.md §13).
+//! Cohesion semantics come from `PALD_TEST_SEMANTICS` (comma-separated;
+//! the CI semantics-matrix job pins each leg — DESIGN.md §15).
 
 use paldx::testutil::conformance::{
     battery, check_backend_conformance, check_kernel_conformance, check_parallel_determinism,
-    check_update_kernel_conformance, sparse_ks, test_backends, test_threads,
+    check_semantics_conformance, check_update_kernel_conformance, sparse_ks, test_backends,
+    test_semantics, test_threads,
 };
 
 /// Acceptance (ISSUE 5): all 21 registry kernels conform, from a single
@@ -42,6 +45,22 @@ fn backend_conformance_across_the_backend_matrix() {
     assert!(!test_backends().is_empty());
     for t in test_threads() {
         check_backend_conformance(t);
+    }
+}
+
+/// The cohesion-semantics axis (DESIGN.md §15): every registry kernel
+/// under every semantics in `PALD_TEST_SEMANTICS` (default
+/// `classic,weighted,rank`) — dense kernels within the documented
+/// tolerance of the all-semantics naive oracle, sparse kernels
+/// bit-identical to the truncated semantics oracle, and the classic
+/// bit-identity pin: a rank-based run reproduces the classic
+/// split-mode run bit for bit on every rung, proving the semantics
+/// hook did not perturb classic arithmetic.
+#[test]
+fn semantics_conformance_across_the_semantics_matrix() {
+    assert!(!test_semantics().is_empty());
+    for t in test_threads() {
+        check_semantics_conformance(t);
     }
 }
 

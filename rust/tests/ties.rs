@@ -6,8 +6,9 @@
 //! * On tie-free inputs, `Strict` and `Split` are semantically identical,
 //!   so each kernel must agree with itself across the two modes.
 
+use paldx::core::Mat;
 use paldx::data::distmat;
-use paldx::pald::{self, naive, Algorithm, PaldConfig, TieMode};
+use paldx::pald::{self, naive, Algorithm, CohesionSemantics, PaldConfig, TieMode, TIE_SPLIT};
 use paldx::testutil::conformance::assert_registry_matches_reference;
 use paldx::testutil::{check_cases, matrices_close, random_size};
 
@@ -93,6 +94,100 @@ fn auto_split_on_duplicated_points() {
             c.allclose(&reference, 1e-4, 1e-5),
             "auto(p={threads}) maxdiff={}",
             c.max_abs_diff(&reference)
+        );
+    }
+}
+
+/// PR-1 duplicate-point regression, restated under the semantics hook:
+/// coincident points (`d = 0`) in split mode still split the tied
+/// `z ∈ {x, y}` visits half/half on every kernel — and a zero-distance
+/// tie is the one place all three semantics *must* agree on the half
+/// split: classic and rank-based by the tie rule, distance-weighted
+/// because the degenerate `0/(0+0)` share is pinned to [`TIE_SPLIT`].
+#[test]
+fn duplicate_point_half_split_survives_the_semantics_hook() {
+    // The hook's tie handling, stated explicitly.
+    for sem in CohesionSemantics::ALL {
+        assert_eq!(sem.share_x(0.0, 0.0), TIE_SPLIT, "{}: zero-distance tie", sem.name());
+        assert_eq!(sem.share_x(2.5, 2.5), TIE_SPLIT, "{}: equidistant tie", sem.name());
+    }
+
+    // Hand-checked 3-point pin: points 0 and 1 coincide, point 2 sits at
+    // distance 1.  Pair (0,1) has u = 2 and ties on both diagonal
+    // visits (0.25 each after w = 1/2), pairs (0,2)/(1,2) have u = 3;
+    // normalized by 1/(n-1): C[0][0] = (1/4 + 1/3)/2 = 7/24,
+    // C[2][2] = 1/3.  Identical under every semantics (the only shares
+    // this input exercises are 0, 1, and the tied half).
+    let d = Mat::from_vec(3, 3, vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.0]);
+    let mut classic_ref: Option<Mat> = None;
+    for sem in CohesionSemantics::ALL {
+        let c = naive::pairwise_sem(&d, TieMode::Split, sem);
+        assert!((c[(0, 0)] - 7.0 / 24.0).abs() < 1e-6, "{}: C00={}", sem.name(), c[(0, 0)]);
+        assert!((c[(1, 1)] - 7.0 / 24.0).abs() < 1e-6, "{}: C11={}", sem.name(), c[(1, 1)]);
+        assert!((c[(2, 2)] - 1.0 / 3.0).abs() < 1e-6, "{}: C22={}", sem.name(), c[(2, 2)]);
+        match &classic_ref {
+            None => classic_ref = Some(c),
+            Some(base) => assert_eq!(
+                c.as_slice(),
+                base.as_slice(),
+                "{}: must match classic bit for bit on the degenerate input",
+                sem.name()
+            ),
+        }
+    }
+
+    // Every kernel, every semantics: agreement with the all-semantics
+    // oracle on a duplicated-point matrix.
+    let d = distmat::random_duplicated(20, 4242, 2);
+    for sem in CohesionSemantics::ALL {
+        let want = naive::pairwise_sem(&d, TieMode::Split, sem);
+        for alg in Algorithm::ALL {
+            let cfg = PaldConfig {
+                algorithm: alg,
+                tie_mode: TieMode::Split,
+                semantics: sem,
+                block: 8,
+                block2: 4,
+                threads: 3,
+                ..Default::default()
+            };
+            let c = pald::compute_cohesion(&d, &cfg).unwrap();
+            assert!(
+                c.allclose(&want, 1e-4, 1e-5),
+                "{} {}: maxdiff={}",
+                alg.name(),
+                sem.name(),
+                c.max_abs_diff(&want)
+            );
+        }
+    }
+
+    // Classic stayed bit-identical through the hook: rank-based is
+    // classic arithmetic under forced split membership, so the two runs
+    // must match bit for bit on every deterministic kernel.
+    for alg in Algorithm::ALL {
+        if alg == Algorithm::ParallelTriplet {
+            continue; // documented run-dependent task order
+        }
+        let run = |sem| {
+            let cfg = PaldConfig {
+                algorithm: alg,
+                tie_mode: TieMode::Split,
+                semantics: sem,
+                block: 8,
+                block2: 4,
+                threads: 3,
+                ..Default::default()
+            };
+            pald::compute_cohesion(&d, &cfg).unwrap()
+        };
+        let classic = run(CohesionSemantics::Classic);
+        let rank = run(CohesionSemantics::RankBased);
+        assert_eq!(
+            classic.as_slice(),
+            rank.as_slice(),
+            "{}: rank-based must reproduce classic bit for bit",
+            alg.name()
         );
     }
 }
